@@ -1,0 +1,99 @@
+//! The paper's §6 future work, live: non-overlapping structures
+//! processed in parallel by a network of message-passing block agents.
+//!
+//! Spawns one tokio agent per block (owning that block's factors),
+//! builds conflict-free rounds with the greedy scheduler, dispatches
+//! each round concurrently, and compares wall-clock + quality against
+//! the sequential Algorithm 1 on the same seed.
+//!
+//! Run: `cargo run --release --example parallel_gossip [workers...]`
+
+use gridmc::data::SyntheticConfig;
+use gridmc::engine::NativeEngine;
+use gridmc::gossip::{ParallelDriver, ScheduleBuilder};
+use gridmc::grid::GridSpec;
+use gridmc::metrics::TablePrinter;
+use gridmc::solver::{SequentialDriver, SolverConfig, StepSchedule};
+
+fn main() -> gridmc::Result<()> {
+    gridmc::util::logging::init("warn");
+    let workers: Vec<usize> = {
+        let cli: Vec<usize> =
+            std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+        if cli.is_empty() {
+            vec![1, 2, 4, 8]
+        } else {
+            cli
+        }
+    };
+
+    // A 6×6 grid admits rounds of up to 12 non-overlapping structures.
+    let spec = GridSpec::new(360, 360, 6, 6, 5);
+    let data = SyntheticConfig {
+        m: 360,
+        n: 360,
+        rank: 5,
+        train_fraction: 0.3,
+        test_fraction: 0.1,
+        noise_std: 0.0,
+        seed: 5,
+    }
+    .generate();
+
+    // Show the schedule shape first.
+    let mut sched = ScheduleBuilder::new(spec, 9);
+    let epoch = sched.epoch();
+    let sizes: Vec<usize> = epoch.iter().map(|r| r.len()).collect();
+    println!(
+        "grid 6x6: {} structures/epoch packed into {} conflict-free rounds {:?}",
+        sizes.iter().sum::<usize>(),
+        sizes.len(),
+        sizes
+    );
+
+    let cfg = SolverConfig {
+        rho: 10.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 5e-3, b: 1e-6 },
+        max_iters: 30_000,
+        eval_every: 30_000,
+        abs_tol: 0.0,
+        rel_tol: 0.0,
+        patience: u32::MAX,
+        seed: 9,
+        normalize: true,
+    };
+
+    let mut t = TablePrinter::new(&["driver", "workers", "wall", "updates/s", "speedup", "test RMSE"]);
+
+    // Sequential reference.
+    let mut engine = NativeEngine::new();
+    let (seq, state) = SequentialDriver::new(spec, cfg.clone()).run(&mut engine, &data.data.train)?;
+    let base = seq.updates_per_sec();
+    t.row(&[
+        "sequential (Alg.1)".into(),
+        "-".into(),
+        format!("{:.2?}", seq.wall),
+        format!("{base:.0}"),
+        "1.00x".into(),
+        format!("{:.4}", state.rmse(&data.data.test)),
+    ]);
+
+    for &w in &workers {
+        let driver = ParallelDriver::new(spec, cfg.clone(), w);
+        let (rep, st) = driver.run(Box::new(NativeEngine::new()), &data.data.train)?;
+        t.row(&[
+            "parallel gossip".into(),
+            w.to_string(),
+            format!("{:.2?}", rep.wall),
+            format!("{:.0}", rep.updates_per_sec()),
+            format!("{:.2}x", rep.updates_per_sec() / base),
+            format!("{:.4}", st.rmse(&data.data.test)),
+        ]);
+    }
+
+    println!("\n{}", t.render());
+    println!("(same final quality — updates within a round touch disjoint blocks,");
+    println!(" so parallel dispatch changes wall-clock, not math)");
+    Ok(())
+}

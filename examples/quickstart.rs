@@ -1,0 +1,78 @@
+//! Quickstart: complete a small synthetic matrix on a 2×2 gossip grid.
+//!
+//! Exercises the full three-layer path when artifacts are built (the
+//! 32×32 `quickstart` manifest variant): the Rust coordinator samples
+//! structures, and each SGD step runs the AOT-compiled JAX/Pallas
+//! kernel via PJRT. Falls back to the pure-Rust engine otherwise.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gridmc::prelude::*;
+
+fn main() -> gridmc::Result<()> {
+    gridmc::util::logging::init("info");
+
+    // 1. A 64×64 rank-4 matrix with 60% of entries observed.
+    let data = SyntheticConfig {
+        m: 64,
+        n: 64,
+        rank: 4,
+        train_fraction: 0.6,
+        test_fraction: 0.2,
+        noise_std: 0.0,
+        seed: 7,
+    }
+    .generate();
+    println!(
+        "dataset: {} ({} train / {} test entries)",
+        data.data.name,
+        data.data.train.nnz(),
+        data.data.test.nnz()
+    );
+
+    // 2. Decompose into a 2×2 grid → 32×32 blocks, rank-4 factors.
+    let spec = GridSpec::new(64, 64, 2, 2, 4);
+    let (mb, nb) = spec.block_shape();
+    println!("grid: 2x2 blocks of {mb}x{nb}");
+
+    // 3. Engine: AOT XLA artifacts if available, else native.
+    let mut engine: Box<dyn Engine> = match XlaEngine::from_default_artifacts(&spec) {
+        Ok(e) => {
+            println!("engine: xla (AOT JAX/Pallas artifacts via PJRT)");
+            Box::new(e)
+        }
+        Err(e) => {
+            println!("engine: native fallback ({e})");
+            Box::new(NativeEngine::new())
+        }
+    };
+
+    // 4. Algorithm 1 with paper-style hyper-parameters (scaled-down run).
+    let cfg = SolverConfig {
+        rho: 10.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 2e-2, b: 1e-5 },
+        max_iters: 8_000,
+        eval_every: 1_000,
+        ..Default::default()
+    };
+    let driver = SequentialDriver::new(spec, cfg);
+    let (report, state) = driver.run(engine.as_mut(), &data.data.train)?;
+
+    // 5. Report.
+    println!("\ncost curve (Table-2 style):");
+    for (it, cost) in &report.curve.points {
+        println!("  iter {it:>6}  cost {cost:.3e}");
+    }
+    println!(
+        "\n{} structure updates in {:.2?} ({:.0} updates/s, engine {})",
+        report.iters,
+        report.wall,
+        report.updates_per_sec(),
+        report.engine
+    );
+    println!("consensus gap: {:.3e}", state.consensus_gap());
+    println!("train RMSE:    {:.4}", state.rmse(&data.data.train));
+    println!("test RMSE:     {:.4}", state.rmse(&data.data.test));
+    Ok(())
+}

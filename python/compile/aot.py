@@ -1,0 +1,150 @@
+"""AOT pipeline: lower the L2 graphs to HLO-text artifacts for Rust.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+For every manifest variant (mb, nb, r) this emits three artifacts —
+
+    structure_{mb}x{nb}_r{r}.hlo.txt   one SGD step on a 3-block structure
+    cost_{mb}x{nb}_r{r}.hlo.txt        block cost f + λ‖U‖² + λ‖W‖²
+    predict_{mb}x{nb}_r{r}.hlo.txt     dense block reconstruction U Wᵀ
+
+— plus ``manifest.json`` describing each artifact's parameters so the
+Rust ``ArtifactManifest`` can pick executables by shape.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+All graphs are lowered with ``return_tuple=True`` — the Rust runtime
+unwraps the result tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import manifest as mf
+from compile import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*dims) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+def lower_structure(mb: int, nb: int, r: int) -> str:
+    """Lower one structure SGD step. Parameter order (20 params):
+
+    xa, ma, ua, wa, xh, mh, uh, wh, xv, mv, uv, wv,
+    rho, lam, gamma, cf_a, cf_h, cf_v, cu, cw
+    """
+    block = [_spec(mb, nb), _spec(mb, nb), _spec(mb, r), _spec(nb, r)]
+    scalars = [_spec()] * 8
+    fn = functools.partial(model.structure_update, use_pallas=True)
+    lowered = jax.jit(fn).lower(*(block * 3), *scalars)
+    return to_hlo_text(lowered)
+
+
+def lower_cost(mb: int, nb: int, r: int) -> str:
+    """Lower the block cost graph. Params: x, m, u, w, lam → (1,1)."""
+    fn = functools.partial(model.block_cost, use_pallas=True)
+    lowered = jax.jit(fn).lower(
+        _spec(mb, nb), _spec(mb, nb), _spec(mb, r), _spec(nb, r), _spec()
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_predict(mb: int, nb: int, r: int) -> str:
+    """Lower the predict graph. Params: u, w → (mb, nb)."""
+    fn = functools.partial(model.predict, use_pallas=True)
+    lowered = jax.jit(fn).lower(_spec(mb, r), _spec(nb, r))
+    return to_hlo_text(lowered)
+
+
+PROGRAMS = {
+    "structure": lower_structure,
+    "cost": lower_cost,
+    "predict": lower_predict,
+}
+
+
+def build(out_dir: pathlib.Path, only_tags: set[str] | None = None) -> dict:
+    """Lower every manifest variant into ``out_dir``; return the manifest."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    entries = []
+    variants = mf.variants()
+    if only_tags:
+        variants = [v for v in variants if v.tag in only_tags]
+    for i, v in enumerate(variants):
+        for program, lower in PROGRAMS.items():
+            name = f"{program}_{v.key}.hlo.txt"
+            path = out_dir / name
+            text = lower(v.mb, v.nb, v.r)
+            path.write_text(text)
+            entries.append(
+                {
+                    "program": program,
+                    "tag": v.tag,
+                    "mb": v.mb,
+                    "nb": v.nb,
+                    "r": v.r,
+                    "file": name,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                }
+            )
+        print(
+            f"[aot] ({i + 1}/{len(variants)}) {v.tag}: "
+            f"{v.mb}x{v.nb} r={v.r} -> 3 artifacts",
+            file=sys.stderr,
+        )
+    manifest = {"version": 1, "artifacts": entries}
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # TSV twin for the std-only Rust side (no JSON parser there):
+    # program\ttag\tmb\tnb\tr\tfile\tsha256, one artifact per line.
+    lines = ["#version\t1"]
+    for e in entries:
+        lines.append(
+            f"{e['program']}\t{e['tag']}\t{e['mb']}\t{e['nb']}\t{e['r']}"
+            f"\t{e['file']}\t{e['sha256']}"
+        )
+    (out_dir / "manifest.tsv").write_text("\n".join(lines) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--tags",
+        default="",
+        help="comma-separated variant tags to build (default: all)",
+    )
+    args = ap.parse_args()
+    tags = {t for t in args.tags.split(",") if t} or None
+    manifest = build(pathlib.Path(args.out_dir), tags)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+``masked_grad`` holds the fused masked-factorization-gradient kernel and
+the tiled predict kernel; ``ref`` is the pure-jnp oracle they are tested
+against.
+"""
+
+from compile.kernels import ref
+from compile.kernels.masked_grad import masked_grads, pick_row_tile, predict
+
+__all__ = ["masked_grads", "predict", "pick_row_tile", "ref"]

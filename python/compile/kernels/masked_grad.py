@@ -1,0 +1,198 @@
+"""L1 Pallas kernel: fused masked factorization gradients for one block.
+
+This is the SGD hot-spot of the paper (§4, ``updateThroughSGD``): for a
+grid block ``X_ij`` with observation mask ``M_ij`` and factors
+``U_ij (mb×r)``, ``W_ij (nb×r)`` it computes, in one fused pass,
+
+    R   = M ⊙ (X − U Wᵀ)        masked residual       (never materialized
+                                                        in HBM — tile-local)
+    G_U = −2 R W                data-fit gradient wrt U   (mb, r)
+    G_W = −2 Rᵀ U               data-fit gradient wrt W   (nb, r)
+    f   = ‖R‖_F²                data-fit cost             scalar, as (1,1)
+
+TPU mapping (DESIGN.md §8): the kernel walks a 1-D grid of row tiles of
+height ``tm``. Per program instance the VMEM working set is
+
+    x, m tiles : 2 · tm · nb · 4 B
+    u tile     : tm · r · 4 B
+    w (full)   : nb · r · 4 B
+    r tile     : tm · nb · 4 B   (tile-local residual)
+
+``pick_row_tile`` chooses the largest ``tm`` that keeps this under a
+~6 MiB VMEM budget (16 MiB/core on current TPUs, leaving headroom for
+double buffering), preferring MXU-friendly multiples of 8. ``G_W`` and
+``f`` are accumulated across the grid via the Pallas output-revisiting
+idiom: their BlockSpec index maps are constant, so the same output tile
+stays resident in VMEM while every program instance adds its
+contribution; instance 0 initializes.
+
+The kernel is lowered with ``interpret=True`` everywhere in this repo:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, so interpret
+mode is the correctness path and real-TPU performance is estimated
+analytically in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget (bytes) for one program instance's working set. Real TPU
+# cores have 16 MiB; we budget ~6 MiB so double buffering of the
+# streamed x/m tiles fits comfortably.
+VMEM_BUDGET_BYTES = 6 * 1024 * 1024
+
+
+def pick_row_tile(mb: int, nb: int, r: int) -> int:
+    """Largest row-tile height ``tm`` dividing ``mb`` within the VMEM budget.
+
+    Working set per instance ≈ (3·tm·nb + tm·r + nb·r) f32 values (x, m,
+    tile-local residual, u tile, full w). Prefers multiples of 8 (TPU
+    sublane) among the divisors of ``mb``; falls back to the largest
+    divisor under budget, and to 1 in the degenerate case.
+    """
+    def fits(tm: int) -> bool:
+        working = (3 * tm * nb + tm * r + nb * r) * 4
+        return working <= VMEM_BUDGET_BYTES
+
+    divisors = [d for d in range(1, mb + 1) if mb % d == 0]
+    candidates = [d for d in divisors if fits(d)]
+    if not candidates:
+        return 1
+    aligned = [d for d in candidates if d % 8 == 0]
+    pool = aligned if aligned else candidates
+    return max(pool)
+
+
+def _masked_grads_kernel(x_ref, m_ref, u_ref, w_ref, gu_ref, gw_ref, f_ref):
+    """One row-tile program instance. Grid: (mb // tm,)."""
+    i = pl.program_id(0)
+
+    x = x_ref[...]
+    m = m_ref[...]
+    u = u_ref[...]
+    w = w_ref[...]
+
+    # Tile-local masked residual; never written back to HBM.
+    r = m * (x - jnp.dot(u, w.T, preferred_element_type=jnp.float32))
+
+    # G_U rows for this tile are exclusively ours: plain store.
+    gu_ref[...] = -2.0 * jnp.dot(r, w, preferred_element_type=jnp.float32)
+
+    # G_W and f are shared accumulators (constant index map): initialize
+    # on the first instance, accumulate afterwards.
+    gw_part = -2.0 * jnp.dot(r.T, u, preferred_element_type=jnp.float32)
+    f_part = jnp.sum(r * r)[None, None]
+
+    @pl.when(i == 0)
+    def _init():
+        gw_ref[...] = gw_part
+        f_ref[...] = f_part
+
+    @pl.when(i != 0)
+    def _accum():
+        gw_ref[...] += gw_part
+        f_ref[...] += f_part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_grads(x, m, u, w, *, interpret: bool = True):
+    """Fused (G_U, G_W, f) for one block. See module docstring.
+
+    Args:
+      x: (mb, nb) block of the input matrix.
+      m: (mb, nb) observation mask (1.0 observed / 0.0 missing).
+      u: (mb, r) row factor.
+      w: (nb, r) column factor.
+      interpret: lower in Pallas interpret mode (required on CPU PJRT).
+
+    Returns:
+      (gu, gw, f): (mb, r), (nb, r), and a (1, 1) cost array.
+    """
+    mb, nb = x.shape
+    r = u.shape[1]
+    tm = pick_row_tile(mb, nb, r)
+    grid = (mb // tm,)
+
+    gu, gw, f = pl.pallas_call(
+        _masked_grads_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, nb), lambda i: (i, 0)),   # x: streamed row tiles
+            pl.BlockSpec((tm, nb), lambda i: (i, 0)),   # m
+            pl.BlockSpec((tm, r), lambda i: (i, 0)),    # u
+            pl.BlockSpec((nb, r), lambda i: (0, 0)),    # w: resident
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, r), lambda i: (i, 0)),    # gu: tile-owned
+            pl.BlockSpec((nb, r), lambda i: (0, 0)),    # gw: accumulator
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),     # f: accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mb, r), jnp.float32),
+            jax.ShapeDtypeStruct((nb, r), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, m, u, w)
+    return gu, gw, f
+
+
+def _predict_kernel(u_ref, w_ref, o_ref):
+    """One (tm, tn) output tile of U Wᵀ. Grid: (mb//tm, nb//tn)."""
+    o_ref[...] = jnp.dot(
+        u_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def pick_predict_tiles(mb: int, nb: int, r: int) -> tuple[int, int]:
+    """(tm, tn) output tile for the predict kernel within the VMEM budget.
+
+    Working set ≈ (tm·r + tn·r + tm·tn) f32. Square-ish tiles maximize
+    MXU utilization per byte streamed; we take the largest divisor pair
+    under budget, preferring multiples of 8.
+    """
+    def fits(tm: int, tn: int) -> bool:
+        return (tm * r + tn * r + tm * tn) * 4 <= VMEM_BUDGET_BYTES
+
+    def best(dim: int, other: int) -> int:
+        divisors = [d for d in range(1, dim + 1) if dim % d == 0]
+        cand = [d for d in divisors if fits(d, other)]
+        if not cand:
+            return 1
+        aligned = [d for d in cand if d % 8 == 0]
+        return max(aligned if aligned else cand)
+
+    tn = best(nb, 1)
+    tm = best(mb, tn)
+    tn = best(nb, tm)  # re-tighten now that tm is known
+    return tm, tn
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def predict(u, w, *, interpret: bool = True):
+    """Dense block reconstruction U Wᵀ as a tiled Pallas kernel.
+
+    Args:
+      u: (mb, r) row factor. w: (nb, r) column factor.
+
+    Returns:
+      (mb, nb) reconstruction.
+    """
+    mb, r = u.shape
+    nb = w.shape[0]
+    tm, tn = pick_predict_tiles(mb, nb, r)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=(mb // tm, nb // tn),
+        in_specs=[
+            pl.BlockSpec((tm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mb, nb), jnp.float32),
+        interpret=interpret,
+    )(u, w)

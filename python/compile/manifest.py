@@ -1,0 +1,85 @@
+"""Shape manifest for the AOT pipeline.
+
+HLO artifacts are shape-specialized, so ``aot.py`` lowers one
+``structure`` / ``cost`` / ``predict`` triple per (mb, nb, r) block
+variant. The variants here cover the configs the presets and benches
+actually request (DESIGN.md §4); any other shape falls back to the Rust
+``NativeEngine`` at runtime.
+
+``mb × nb`` is the *canonical padded* block shape of a (m, n, p, q)
+decomposition: ``mb = ceil(m/p)``, ``nb = ceil(n/q)`` — ragged edge
+blocks are zero-mask padded to it (DESIGN.md §6), which is correct
+because every kernel is masked.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One shape-specialized artifact triple."""
+
+    tag: str   # human-readable provenance, e.g. "exp3" or "ml1m-5x5"
+    mb: int    # padded block rows
+    nb: int    # padded block cols
+    r: int     # factorization rank
+
+    @property
+    def key(self) -> str:
+        return f"{self.mb}x{self.nb}_r{self.r}"
+
+
+def block_shape(m: int, n: int, p: int, q: int) -> tuple[int, int]:
+    """Canonical padded block shape of a p×q decomposition of m×n."""
+    return math.ceil(m / p), math.ceil(n / q)
+
+
+def _synthetic_variants() -> list[Variant]:
+    """Table 1/2 experiments Exp#1–6 (paper ranks are unstated; we use 5)."""
+    exps = [
+        ("exp1", 500, 500, 4, 4),
+        ("exp2", 500, 500, 4, 5),
+        ("exp3", 500, 500, 5, 5),
+        ("exp4", 500, 500, 6, 6),
+        ("exp5", 5000, 5000, 5, 5),
+        ("exp6", 10000, 10000, 5, 5),
+    ]
+    out = []
+    for tag, m, n, p, q in exps:
+        mb, nb = block_shape(m, n, p, q)
+        out.append(Variant(tag, mb, nb, 5))
+    return out
+
+
+def _ratings_variants() -> list[Variant]:
+    """Table 3, MovieLens-1M-scale grid sweep (6040 users × 3952 items).
+
+    The dense XLA path is exercised on the 1M-scale dataset; the larger
+    Table-3 datasets run on the sparse NativeEngine (DESIGN.md §6).
+    """
+    m, n = 6040, 3952
+    out = []
+    for p, q in [(2, 2), (3, 3), (4, 4), (5, 5), (10, 10)]:
+        mb, nb = block_shape(m, n, p, q)
+        for r in (5, 10, 15):
+            out.append(Variant(f"ml1m-{p}x{q}", mb, nb, r))
+    return out
+
+
+def _micro_variants() -> list[Variant]:
+    """Small shapes for integration tests and the quickstart example."""
+    return [
+        Variant("quickstart", 32, 32, 4),
+        Variant("parity", 50, 40, 3),
+    ]
+
+
+def variants() -> list[Variant]:
+    """All manifest variants, deduplicated by (mb, nb, r)."""
+    seen: dict[tuple[int, int, int], Variant] = {}
+    for v in _micro_variants() + _synthetic_variants() + _ratings_variants():
+        seen.setdefault((v.mb, v.nb, v.r), v)
+    return list(seen.values())

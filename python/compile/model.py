@@ -1,0 +1,119 @@
+"""L2: the paper's compute graph — one gossip-structure SGD update.
+
+This module assembles the analytic SGD step of Algorithm 1
+(``updateThroughSGD``) for one sampled structure out of the L1 Pallas
+kernels, plus the cost-evaluation and prediction graphs. Everything here
+is build-time Python: ``aot.py`` lowers each function once per
+(block-shape, rank) variant to HLO text, and the Rust coordinator
+executes the compiled artifacts on its PJRT runtime. Python never runs
+on the request path.
+
+Anchor/horizontal/vertical form
+-------------------------------
+Both of the paper's structures are an "L" of three blocks containing one
+horizontal grid edge and one vertical grid edge that share a block. We
+call the shared block the *anchor* ``a``, the horizontally adjacent
+block ``h`` and the vertically adjacent block ``v``:
+
+  S^upper, pivot (i,j):  a = (i,j),  h = (i,j+1),  v = (i+1,j)
+  S^lower, pivot (i,j):  a = (i,j),  h = (i,j-1),  v = (i-1,j)
+
+The structure cost (Eq. 2 generalized with the Figure-2 normalization
+coefficients and Eq. 3's λ terms) is
+
+  g = Σ_b cf_b · (f_b + λ‖U_b‖² + λ‖W_b‖²)
+      + cu · ρ‖U_a − U_h‖²  +  cw · ρ‖W_a − W_v‖²
+
+for b ∈ {a, h, v}. Because ‖U_a − U_h‖² is symmetric, a single graph
+serves both S^upper and S^lower — the Rust side only permutes which
+block plays which role. The analytic gradients are
+
+  ∂g/∂U_a = cf_a·(G_U^a + 2λU_a) + 2ρ·cu·(U_a − U_h)
+  ∂g/∂U_h = cf_h·(G_U^h + 2λU_h) − 2ρ·cu·(U_a − U_h)
+  ∂g/∂U_v = cf_v·(G_U^v + 2λU_v)
+  ∂g/∂W_a = cf_a·(G_W^a + 2λW_a) + 2ρ·cw·(W_a − W_v)
+  ∂g/∂W_v = cf_v·(G_W^v + 2λW_v) − 2ρ·cw·(W_a − W_v)
+  ∂g/∂W_h = cf_h·(G_W^h + 2λW_h)
+
+with G_U, G_W the masked data-fit gradients from the L1 kernel. The SGD
+step is ``P ← P − γ_t ∂g/∂P`` with γ_t = a/(1+bt) supplied by the Rust
+scheduler as the ``gamma`` scalar. ``test_model.py`` checks these
+analytic gradients against ``jax.grad`` of ``ref.structure_cost``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import masked_grad
+from compile.kernels import ref
+
+
+def _block_grads(x, m, u, w, lam, *, use_pallas: bool = True):
+    """(∂/∂U, ∂/∂W, f) of f + λ‖U‖² + λ‖W‖² for one block."""
+    if use_pallas:
+        gu, gw, f = masked_grad.masked_grads(x, m, u, w)
+        f = f[0, 0]
+    else:
+        gu, gw, f = ref.masked_grads(x, m, u, w)
+    return gu + 2.0 * lam * u, gw + 2.0 * lam * w, f
+
+
+def structure_update(
+    xa, ma, ua, wa,
+    xh, mh, uh, wh,
+    xv, mv, uv, wv,
+    rho, lam, gamma,
+    cf_a, cf_h, cf_v, cu, cw,
+    *, use_pallas: bool = True,
+):
+    """One SGD step on the three blocks of a structure.
+
+    Array args are f32: x*/m* are (mb, nb)-shaped for their block, u*
+    (rows, r), w* (cols, r). The eight trailing scalars are f32 rank-0:
+    ρ, λ, the step size γ_t, the three per-block f-normalization
+    coefficients and the two consensus-edge coefficients (all from the
+    grid geometry, computed by the Rust coordinator).
+
+    Returns (ua', wa', uh', wh', uv', wv').
+    """
+    gua, gwa, _ = _block_grads(xa, ma, ua, wa, lam, use_pallas=use_pallas)
+    guh, gwh, _ = _block_grads(xh, mh, uh, wh, lam, use_pallas=use_pallas)
+    guv, gwv, _ = _block_grads(xv, mv, uv, wv, lam, use_pallas=use_pallas)
+
+    du = ua - uh          # U-consensus edge (d^U)
+    dw = wa - wv          # W-consensus edge (d^W)
+    two_rho = 2.0 * rho
+
+    g_ua = cf_a * gua + two_rho * cu * du
+    g_uh = cf_h * guh - two_rho * cu * du
+    g_uv = cf_v * guv
+    g_wa = cf_a * gwa + two_rho * cw * dw
+    g_wv = cf_v * gwv - two_rho * cw * dw
+    g_wh = cf_h * gwh
+
+    return (
+        ua - gamma * g_ua,
+        wa - gamma * g_wa,
+        uh - gamma * g_uh,
+        wh - gamma * g_wh,
+        uv - gamma * g_uv,
+        wv - gamma * g_wv,
+    )
+
+
+def block_cost(x, m, u, w, lam, *, use_pallas: bool = True):
+    """Table-2 reported cost of one block: f + λ‖U‖² + λ‖W‖² as (1,1)."""
+    if use_pallas:
+        _, _, f = masked_grad.masked_grads(x, m, u, w)
+    else:
+        f = ref.block_cost(x, m, u, w)[None, None]
+    reg = lam * jnp.sum(u * u) + lam * jnp.sum(w * w)
+    return f + reg
+
+
+def predict(u, w, *, use_pallas: bool = True):
+    """Dense block reconstruction U Wᵀ (for RMSE evaluation)."""
+    if use_pallas:
+        return masked_grad.predict(u, w)
+    return ref.predict(u, w)

@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: hypothesis
+sweeps shapes, ranks, densities and magnitudes, and every kernel output
+must match ``ref.py`` to tight tolerance under interpret mode.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_grad, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_block(seed, mb, nb, r, density=0.3, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=scale, size=(mb, nb)), jnp.float32)
+    m = jnp.asarray(rng.random((mb, nb)) < density, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(mb, r)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(nb, r)), jnp.float32)
+    return x, m, u, w
+
+
+def assert_grads_match(x, m, u, w, rtol=1e-4, atol=1e-4):
+    gu, gw, f = masked_grad.masked_grads(x, m, u, w)
+    rgu, rgw, rf = ref.masked_grads(x, m, u, w)
+    np.testing.assert_allclose(gu, rgu, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(gw, rgw, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(f[0, 0], rf, rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- basic
+
+
+class TestMaskedGradsBasic:
+    def test_small_block(self):
+        assert_grads_match(*make_block(0, 24, 16, 3))
+
+    def test_rectangular_wide(self):
+        assert_grads_match(*make_block(1, 16, 96, 5))
+
+    def test_rectangular_tall(self):
+        assert_grads_match(*make_block(2, 96, 16, 5))
+
+    def test_rank_one(self):
+        assert_grads_match(*make_block(3, 32, 32, 1))
+
+    def test_prime_dims(self):
+        # mb=47, nb=31: only trivial divisors → single-row tiling path.
+        assert_grads_match(*make_block(4, 47, 31, 4))
+
+    def test_all_observed(self):
+        x, _, u, w = make_block(5, 20, 20, 4)
+        m = jnp.ones_like(x)
+        assert_grads_match(x, m, u, w)
+
+    def test_none_observed_gives_zero(self):
+        x, _, u, w = make_block(6, 20, 20, 4)
+        m = jnp.zeros_like(x)
+        gu, gw, f = masked_grad.masked_grads(x, m, u, w)
+        assert float(jnp.abs(gu).max()) == 0.0
+        assert float(jnp.abs(gw).max()) == 0.0
+        assert float(f[0, 0]) == 0.0
+
+    def test_perfect_factors_zero_residual(self):
+        # X = U Wᵀ exactly → gradients vanish and cost is ~0.
+        _, m, u, w = make_block(7, 30, 25, 4)
+        x = u @ w.T
+        gu, gw, f = masked_grad.masked_grads(x, m, u, w)
+        np.testing.assert_allclose(gu, np.zeros_like(gu), atol=1e-5)
+        np.testing.assert_allclose(gw, np.zeros_like(gw), atol=1e-5)
+        assert float(f[0, 0]) < 1e-8
+
+    def test_cost_is_masked_frobenius(self):
+        x, m, u, w = make_block(8, 40, 30, 6)
+        _, _, f = masked_grad.masked_grads(x, m, u, w)
+        r = np.asarray(m) * (np.asarray(x) - np.asarray(u) @ np.asarray(w).T)
+        np.testing.assert_allclose(f[0, 0], (r * r).sum(), rtol=1e-4)
+
+    def test_large_block_multi_tile(self):
+        # Forces a non-trivial grid (mb=512 → several row tiles).
+        assert_grads_match(*make_block(9, 512, 64, 8), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------ tiling
+
+
+class TestRowTilePicker:
+    def test_divides(self):
+        for mb in [1, 7, 32, 100, 125, 1000, 2000]:
+            tm = masked_grad.pick_row_tile(mb, 100, 10)
+            assert mb % tm == 0
+
+    def test_respects_budget(self):
+        tm = masked_grad.pick_row_tile(4096, 4096, 16)
+        working = (3 * tm * 4096 + tm * 16 + 4096 * 16) * 4
+        assert working <= masked_grad.VMEM_BUDGET_BYTES
+
+    def test_prefers_aligned(self):
+        # 2000 has 8-aligned divisors (8, 40, 200, 1000); the pick under
+        # budget must be one of them.
+        tm = masked_grad.pick_row_tile(2000, 2000, 5)
+        assert tm % 8 == 0
+
+    def test_small_block_single_tile(self):
+        assert masked_grad.pick_row_tile(32, 32, 4) == 32
+
+    def test_predict_tiles_divide(self):
+        for mb, nb in [(100, 100), (125, 99), (604, 396), (2000, 2000)]:
+            tm, tn = masked_grad.pick_predict_tiles(mb, nb, 10)
+            assert mb % tm == 0 and nb % tn == 0
+
+
+# ------------------------------------------------------------ predict
+
+
+class TestPredict:
+    def test_matches_ref(self):
+        _, _, u, w = make_block(10, 48, 36, 5)
+        np.testing.assert_allclose(
+            masked_grad.predict(u, w), ref.predict(u, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_prime_dims(self):
+        _, _, u, w = make_block(11, 53, 29, 7)
+        np.testing.assert_allclose(
+            masked_grad.predict(u, w), ref.predict(u, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rank_consistency(self):
+        # predict(u, w)[i, j] == dot(u[i], w[j])
+        _, _, u, w = make_block(12, 16, 12, 3)
+        p = np.asarray(masked_grad.predict(u, w))
+        np.testing.assert_allclose(
+            p[5, 7], float(np.dot(np.asarray(u)[5], np.asarray(w)[7])), rtol=1e-5
+        )
+
+
+# --------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    mb=st.integers(min_value=1, max_value=96),
+    nb=st.integers(min_value=1, max_value=96),
+    r=st.integers(min_value=1, max_value=12),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_masked_grads_hypothesis(mb, nb, r, density, seed):
+    x, m, u, w = make_block(seed, mb, nb, r, density=density)
+    assert_grads_match(x, m, u, w, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.integers(min_value=1, max_value=80),
+    nb=st.integers(min_value=1, max_value=80),
+    r=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_predict_hypothesis(mb, nb, r, seed):
+    _, _, u, w = make_block(seed, mb, nb, r)
+    np.testing.assert_allclose(
+        masked_grad.predict(u, w), ref.predict(u, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_masked_grads_magnitude_sweep(scale, seed):
+    """Numerics hold across input magnitudes (relative tolerance)."""
+    x, m, u, w = make_block(seed, 32, 24, 4, scale=scale)
+    gu, gw, f = masked_grad.masked_grads(x, m, u, w)
+    rgu, rgw, rf = ref.masked_grads(x, m, u, w)
+    np.testing.assert_allclose(gu, rgu, rtol=1e-3, atol=1e-3 * scale)
+    np.testing.assert_allclose(gw, rgw, rtol=1e-3, atol=1e-3 * scale)

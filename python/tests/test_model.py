@@ -1,0 +1,188 @@
+"""L2 correctness: the analytic structure update vs jax autodiff.
+
+The single most load-bearing test in the Python layer: the hand-derived
+gradients inside ``model.structure_update`` must equal ``jax.grad`` of
+the normalized structure cost ``ref.structure_cost`` — for every one of
+the six factor matrices, across random shapes, coefficients and ρ/λ.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_structure(seed, mb=20, nb=16, r=3, density=0.4):
+    """Three random blocks in anchor/horizontal/vertical form."""
+    rng = np.random.default_rng(seed)
+
+    def block():
+        x = jnp.asarray(rng.normal(size=(mb, nb)), jnp.float32)
+        m = jnp.asarray(rng.random((mb, nb)) < density, jnp.float32)
+        u = jnp.asarray(rng.normal(size=(mb, r)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(nb, r)), jnp.float32)
+        return x, m, u, w
+
+    return block(), block(), block()
+
+
+def autodiff_step(blocks, scalars, gamma):
+    """Reference update: P ← P − γ · jax.grad(structure_cost)."""
+    (xa, ma, ua, wa), (xh, mh, uh, wh), (xv, mv, uv, wv) = blocks
+    rho, lam, cf_a, cf_h, cf_v, cu, cw = scalars
+
+    def cost(params):
+        ua_, wa_, uh_, wh_, uv_, wv_ = params
+        return ref.structure_cost(
+            xa, ma, ua_, wa_, xh, mh, uh_, wh_, xv, mv, uv_, wv_,
+            rho, lam, cf_a, cf_h, cf_v, cu, cw,
+        )
+
+    params = (ua, wa, uh, wh, uv, wv)
+    grads = jax.grad(cost)(params)
+    return tuple(p - gamma * g for p, g in zip(params, grads))
+
+
+def analytic_step(blocks, scalars, gamma, use_pallas):
+    (xa, ma, ua, wa), (xh, mh, uh, wh), (xv, mv, uv, wv) = blocks
+    rho, lam, cf_a, cf_h, cf_v, cu, cw = scalars
+    return model.structure_update(
+        xa, ma, ua, wa, xh, mh, uh, wh, xv, mv, uv, wv,
+        jnp.float32(rho), jnp.float32(lam), jnp.float32(gamma),
+        jnp.float32(cf_a), jnp.float32(cf_h), jnp.float32(cf_v),
+        jnp.float32(cu), jnp.float32(cw),
+        use_pallas=use_pallas,
+    )
+
+
+NAMES = ["ua", "wa", "uh", "wh", "uv", "wv"]
+
+
+def assert_step_matches(seed, scalars, gamma, mb=20, nb=16, r=3,
+                        rtol=2e-3, atol=2e-3, use_pallas=True):
+    blocks = make_structure(seed, mb, nb, r)
+    want = autodiff_step(blocks, scalars, gamma)
+    got = analytic_step(blocks, scalars, gamma, use_pallas)
+    for name, w_, g_ in zip(NAMES, want, got):
+        np.testing.assert_allclose(g_, w_, rtol=rtol, atol=atol, err_msg=name)
+
+
+DEFAULT = (1e3, 1e-9, 1.0, 1.0, 1.0, 1.0, 1.0)  # rho, lam, cf_a, cf_h, cf_v, cu, cw
+
+
+class TestStructureUpdateVsAutodiff:
+    def test_paper_hyperparams(self):
+        # ρ=1e3, λ=1e-9, γ like the paper's a=5e-4 schedule start.
+        assert_step_matches(0, DEFAULT, 5e-4)
+
+    def test_pallas_and_jnp_paths_agree(self):
+        blocks = make_structure(1)
+        a = analytic_step(blocks, DEFAULT, 5e-4, use_pallas=True)
+        b = analytic_step(blocks, DEFAULT, 5e-4, use_pallas=False)
+        for name, x, y in zip(NAMES, a, b):
+            np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5, err_msg=name)
+
+    def test_nontrivial_coefficients(self):
+        # Interior-block Fig-2 coefficients: cf=1/6, cu=1/2, cw=1/2.
+        scalars = (1e3, 1e-9, 1 / 6, 1 / 4, 1 / 2, 1 / 2, 1 / 2)
+        assert_step_matches(2, scalars, 1e-3)
+
+    def test_zero_rho_decouples_blocks(self):
+        """With ρ=0 each block takes an independent masked-MF step."""
+        blocks = make_structure(3)
+        scalars = (0.0, 1e-9, 1.0, 1.0, 1.0, 1.0, 1.0)
+        got = analytic_step(blocks, scalars, 1e-3, use_pallas=False)
+        # Anchor's update must equal a single-block gradient step.
+        xa, ma, ua, wa = blocks[0]
+        gu, gw, _ = ref.masked_grads(xa, ma, ua, wa)
+        lam = 1e-9
+        np.testing.assert_allclose(
+            got[0], ua - 1e-3 * (gu + 2 * lam * ua), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            got[1], wa - 1e-3 * (gw + 2 * lam * wa), rtol=1e-5, atol=1e-5
+        )
+
+    def test_consensus_antisymmetry(self):
+        """The ρ force on U_a and U_h is equal and opposite."""
+        blocks = make_structure(4)
+        lo = analytic_step(blocks, (0.0,) + DEFAULT[1:], 1e-3, use_pallas=False)
+        hi = analytic_step(blocks, (10.0,) + DEFAULT[1:], 1e-3, use_pallas=False)
+        d_ua = np.asarray(hi[0]) - np.asarray(lo[0])
+        d_uh = np.asarray(hi[2]) - np.asarray(lo[2])
+        np.testing.assert_allclose(d_ua, -d_uh, rtol=1e-4, atol=1e-5)
+        # v's U is untouched by the consensus edge.
+        np.testing.assert_allclose(hi[4], lo[4], rtol=1e-6, atol=1e-7)
+
+    def test_step_decreases_structure_cost(self):
+        """A small enough SGD step must reduce g (sanity of signs)."""
+        blocks = make_structure(5)
+        (xa, ma, *_), (xh, mh, *_), (xv, mv, *_) = blocks
+        scalars = (1.0, 1e-6, 1.0, 1.0, 1.0, 1.0, 1.0)
+
+        def g(params):
+            ua, wa, uh, wh, uv, wv = params
+            return float(ref.structure_cost(
+                xa, ma, ua, wa, xh, mh, uh, wh, xv, mv, uv, wv, *scalars))
+
+        before = (blocks[0][2], blocks[0][3], blocks[1][2],
+                  blocks[1][3], blocks[2][2], blocks[2][3])
+        after = analytic_step(blocks, scalars, 1e-4, use_pallas=False)
+        assert g(after) < g(before)
+
+    def test_gamma_zero_is_identity(self):
+        blocks = make_structure(6)
+        got = analytic_step(blocks, DEFAULT, 0.0, use_pallas=False)
+        before = (blocks[0][2], blocks[0][3], blocks[1][2],
+                  blocks[1][3], blocks[2][2], blocks[2][3])
+        for name, x, y in zip(NAMES, got, before):
+            np.testing.assert_allclose(x, y, rtol=0, atol=0, err_msg=name)
+
+
+class TestBlockCost:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(30, 20)), jnp.float32)
+        m = jnp.asarray(rng.random((30, 20)) < 0.5, jnp.float32)
+        u = jnp.asarray(rng.normal(size=(30, 4)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(20, 4)), jnp.float32)
+        lam = jnp.float32(1e-3)
+        got = model.block_cost(x, m, u, w, lam)
+        want = ref.block_cost_reg(x, m, u, w, lam)
+        np.testing.assert_allclose(got[0, 0], want, rtol=1e-5)
+
+    def test_lambda_term(self):
+        """cost(λ) − cost(0) == λ(‖U‖² + ‖W‖²)."""
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+        m = jnp.ones_like(x)
+        u = jnp.asarray(rng.normal(size=(16, 2)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(16, 2)), jnp.float32)
+        c0 = float(model.block_cost(x, m, u, w, jnp.float32(0.0))[0, 0])
+        c1 = float(model.block_cost(x, m, u, w, jnp.float32(0.5))[0, 0])
+        want = 0.5 * (float(jnp.sum(u * u)) + float(jnp.sum(w * w)))
+        np.testing.assert_allclose(c1 - c0, want, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    mb=st.integers(min_value=2, max_value=40),
+    nb=st.integers(min_value=2, max_value=40),
+    r=st.integers(min_value=1, max_value=8),
+    rho=st.floats(min_value=0.0, max_value=1e3),
+    lam=st.floats(min_value=0.0, max_value=1e-2),
+    cf=st.floats(min_value=0.1, max_value=1.0),
+    cuv=st.floats(min_value=0.1, max_value=1.0),
+)
+def test_structure_update_hypothesis(seed, mb, nb, r, rho, lam, cf, cuv):
+    scalars = (rho, lam, cf, cf / 2, cf / 3, cuv, cuv / 2)
+    assert_step_matches(
+        seed, scalars, 1e-4, mb=mb, nb=nb, r=r, rtol=5e-3, atol=5e-3,
+        use_pallas=False,
+    )

@@ -1,0 +1,15 @@
+//! Ablations: Figure-2 normalization on/off, ρ sweep, and the 2-D grid
+//! vs 1-D row-gossip vs centralized SGD/ALS comparison.
+//!
+//! Run: `cargo bench --bench ablations`
+
+fn main() {
+    gridmc::util::logging::init("warn");
+    match gridmc::experiments::ablations::run() {
+        Ok(s) => print!("{s}"),
+        Err(e) => {
+            eprintln!("ablations failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Micro-benchmarks for the engine hot path (std-only timing harness;
+//! the offline build has no criterion).
+//!
+//! Times one structure update (the inner loop of Algorithm 1) per
+//! engine/mode at the paper's Exp#3 block shape (100×100, rank 5), plus
+//! the cost evaluation and the XLA end-to-end dispatch. Reports median /
+//! p10 / p90 over many iterations after a warmup. These are the numbers
+//! the perf pass in EXPERIMENTS.md §Perf iterates on.
+//!
+//! Run: `cargo bench --bench engine_microbench`
+
+use std::time::Instant;
+
+use gridmc::data::SyntheticConfig;
+use gridmc::engine::{Engine, NativeEngine, NativeMode, StructureParams, XlaEngine};
+use gridmc::grid::{BlockPartition, GridSpec, NormalizationCoeffs, Structure, StructureRoles};
+use gridmc::model::FactorState;
+
+/// Time `f` `iters` times (after `warmup` runs); report percentiles.
+fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    println!(
+        "{name:<44} median {:>9.1} us   p10 {:>9.1}   p90 {:>9.1}   ({} iters)",
+        pick(0.5),
+        pick(0.1),
+        pick(0.9),
+        iters
+    );
+}
+
+struct Fixture {
+    state: FactorState,
+    roles: StructureRoles,
+    params: StructureParams,
+}
+
+fn fixture(spec: GridSpec) -> (BlockPartition, Fixture) {
+    let data = SyntheticConfig {
+        m: spec.m,
+        n: spec.n,
+        rank: spec.rank,
+        train_fraction: 0.2,
+        test_fraction: 0.0,
+        noise_std: 0.0,
+        seed: 42,
+    }
+    .generate();
+    let part = BlockPartition::new(spec, &data.data.train).unwrap();
+    let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+    let roles = Structure::upper(1, 1).roles();
+    let params = StructureParams::build(1e3, 1e-9, 5e-4, &coeffs, &roles);
+    let state = FactorState::init_random(spec, 7);
+    (part, Fixture { state, roles, params })
+}
+
+fn run_update(engine: &dyn Engine, fx: &Fixture) {
+    let f = [
+        (fx.state.u(fx.roles.anchor), fx.state.w(fx.roles.anchor)),
+        (fx.state.u(fx.roles.horizontal), fx.state.w(fx.roles.horizontal)),
+        (fx.state.u(fx.roles.vertical), fx.state.w(fx.roles.vertical)),
+    ];
+    let out = engine.structure_update(&fx.roles, f, &fx.params).unwrap();
+    std::hint::black_box(&out);
+}
+
+fn main() {
+    // Exp#3 geometry: 500×500 over 5×5 → 100×100 blocks, rank 5.
+    let spec = GridSpec::new(500, 500, 5, 5, 5);
+    let (part, fx) = fixture(spec);
+    println!("== engine_microbench: structure update @ 100x100 r5 (Exp#3 geometry) ==");
+
+    let mut sparse = NativeEngine::with_mode(NativeMode::Sparse);
+    sparse.prepare(&part).unwrap();
+    bench("structure_update/native-sparse", 20, 300, || run_update(&sparse, &fx));
+
+    let mut dense = NativeEngine::with_mode(NativeMode::Dense);
+    dense.prepare(&part).unwrap();
+    bench("structure_update/native-dense", 20, 300, || run_update(&dense, &fx));
+
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        match XlaEngine::from_default_artifacts(&spec) {
+            Ok(mut xla) => {
+                xla.prepare(&part).unwrap();
+                bench("structure_update/xla-pjrt (AOT pallas)", 10, 150, || {
+                    run_update(&xla, &fx)
+                });
+
+                let id = gridmc::grid::BlockId::new(0, 0);
+                bench("block_cost/xla-pjrt", 10, 150, || {
+                    let c = xla
+                        .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
+                        .unwrap();
+                    std::hint::black_box(c);
+                });
+            }
+            Err(e) => eprintln!("skipping xla benches: {e}"),
+        }
+    } else {
+        eprintln!("skipping xla benches: run `make artifacts` first");
+    }
+
+    let id = gridmc::grid::BlockId::new(0, 0);
+    bench("block_cost/native-sparse", 20, 300, || {
+        let c = sparse
+            .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
+            .unwrap();
+        std::hint::black_box(c);
+    });
+    bench("block_cost/native-dense", 20, 300, || {
+        let c = dense
+            .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
+            .unwrap();
+        std::hint::black_box(c);
+    });
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Figure 2 (block selection frequencies, 6×5 grid),
+//! checking the analytic normalization coefficients against an
+//! empirical tally of uniform structure draws.
+//!
+//! Run: `cargo bench --bench fig2_frequencies`
+
+fn main() {
+    match gridmc::experiments::fig2::run() {
+        Ok(s) => print!("{s}"),
+        Err(e) => {
+            eprintln!("fig2 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

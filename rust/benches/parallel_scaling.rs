@@ -1,0 +1,15 @@
+//! §6 future work: throughput scaling of the conflict-free parallel
+//! gossip driver vs the sequential Algorithm 1.
+//!
+//! Run: `cargo bench --bench parallel_scaling`
+
+fn main() {
+    gridmc::util::logging::init("warn");
+    match gridmc::experiments::parallel::run() {
+        Ok(s) => print!("{s}"),
+        Err(e) => {
+            eprintln!("parallel_scaling failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Table 2 (cost vs iterations, Exp#1–6).
+//!
+//! Default: Exp#1–4 at GRIDMC_ITER_SCALE (1.0 = full paper budgets).
+//! GRIDMC_TABLE2_FULL=1 adds Exp#5/6 (5000², 10000² — long).
+//!
+//! Run: `cargo bench --bench table2_convergence`
+
+fn main() {
+    gridmc::util::logging::init("info");
+    match gridmc::experiments::table2::run() {
+        Ok(table) => print!("{table}"),
+        Err(e) => {
+            eprintln!("table2 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

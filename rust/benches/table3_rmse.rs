@@ -1,0 +1,18 @@
+//! Regenerates paper Table 3 (test RMSE by dataset × grid × rank).
+//!
+//! Default: ml1m-like × grids {2,3,5,10} × ranks {5,10}.
+//! GRIDMC_TABLE3_FULL=1 unlocks all 4 datasets × 5 grids × 3 ranks.
+//! GRIDMC_DATA_DIR=<dir> switches to real MovieLens files when present.
+//!
+//! Run: `cargo bench --bench table3_rmse`
+
+fn main() {
+    gridmc::util::logging::init("info");
+    match gridmc::experiments::table3::run() {
+        Ok(table) => print!("{table}"),
+        Err(e) => {
+            eprintln!("table3 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! Configuration system: TOML-subset experiment configs + paper presets.
+//!
+//! An [`ExperimentConfig`] fully describes a run — dataset, grid,
+//! solver hyper-parameters, engine and driver choice — and round-trips
+//! through the in-tree TOML-subset parser ([`parse`]) so experiments
+//! are launchable as `gridmc train --config configs/exp3.toml` or by
+//! preset name (`--preset exp3`). [`presets`] pins the paper's Table 1
+//! rows and the Table-3 sweep so EXPERIMENTS.md is regenerable from
+//! code alone.
+
+pub mod parse;
+pub mod presets;
+
+use crate::data::{RatingsConfig, SplitDataset, SyntheticConfig};
+use crate::grid::GridSpec;
+use crate::solver::{SolverConfig, StepSchedule};
+use crate::{Error, Result};
+
+use parse::{quote, Document};
+
+/// Which backend executes structure updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineChoice {
+    /// AOT XLA artifacts via PJRT (falls back to native on shape miss
+    /// unless `GRIDMC_STRICT_ENGINE=1`).
+    Xla,
+    /// Pure-Rust sparse engine.
+    #[default]
+    NativeSparse,
+    /// Pure-Rust dense engine.
+    NativeDense,
+}
+
+impl EngineChoice {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineChoice::Xla => "xla",
+            EngineChoice::NativeSparse => "native-sparse",
+            EngineChoice::NativeDense => "native-dense",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "xla" => Ok(EngineChoice::Xla),
+            "native-sparse" => Ok(EngineChoice::NativeSparse),
+            "native-dense" => Ok(EngineChoice::NativeDense),
+            other => Err(Error::Config(format!("unknown engine {other:?}"))),
+        }
+    }
+}
+
+/// Which driver runs Algorithm 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DriverChoice {
+    /// The paper's sequential Algorithm 1.
+    #[default]
+    Sequential,
+    /// Conflict-free parallel rounds over the agent network (§6).
+    Parallel,
+}
+
+impl DriverChoice {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DriverChoice::Sequential => "sequential",
+            DriverChoice::Parallel => "parallel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sequential" => Ok(DriverChoice::Sequential),
+            "parallel" => Ok(DriverChoice::Parallel),
+            other => Err(Error::Config(format!("unknown driver {other:?}"))),
+        }
+    }
+}
+
+/// Dataset source.
+#[derive(Debug, Clone)]
+pub enum DatasetConfig {
+    /// Planted low-rank synthetic matrix (Tables 1–2 protocol).
+    Synthetic(SyntheticConfig),
+    /// MovieLens/Netflix-like generated ratings (Table 3 substitute).
+    Ratings(RatingsConfig),
+    /// Real ratings file (MovieLens .dat/.csv), split by fraction.
+    File { path: String, train_fraction: f64, seed: u64 },
+}
+
+impl DatasetConfig {
+    /// Materialize the dataset.
+    ///
+    /// Ratings-scale datasets (generated or file-loaded) are
+    /// mean-centered by the train mean: the factors then model
+    /// deviations from μ, which keeps SGD gradients at unit scale.
+    /// RMSE on the centered test split equals RMSE of `U Wᵀ + μ`
+    /// against the raw ratings, so reported numbers are unchanged.
+    /// Synthetic data is already zero-mean and stays raw.
+    pub fn load(&self) -> Result<SplitDataset> {
+        match self {
+            DatasetConfig::Synthetic(cfg) => Ok(cfg.generate().data),
+            DatasetConfig::Ratings(cfg) => {
+                let (centered, mu) = cfg.generate().centered();
+                log::debug!("{}: centered by train mean {mu:.3}", centered.name);
+                Ok(centered)
+            }
+            DatasetConfig::File { path, train_fraction, seed } => {
+                let raw = crate::data::load_movielens(path, *train_fraction, *seed)?;
+                let (centered, mu) = raw.centered();
+                log::debug!("{}: centered by train mean {mu:.3}", centered.name);
+                Ok(centered)
+            }
+        }
+    }
+
+    /// Matrix dimensions without materializing (synthetic/ratings only).
+    pub fn dims(&self) -> Option<(usize, usize)> {
+        match self {
+            DatasetConfig::Synthetic(c) => Some((c.m, c.n)),
+            DatasetConfig::Ratings(c) => Some((c.users, c.items)),
+            DatasetConfig::File { .. } => None,
+        }
+    }
+}
+
+/// Grid section of a config.
+#[derive(Debug, Clone, Copy)]
+pub struct GridConfig {
+    pub p: usize,
+    pub q: usize,
+    pub rank: usize,
+}
+
+/// A complete, launchable experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: DatasetConfig,
+    pub grid: GridConfig,
+    pub solver: SolverConfig,
+    pub engine: EngineChoice,
+    pub driver: DriverChoice,
+    /// Worker threads for the parallel driver.
+    pub workers: usize,
+}
+
+impl ExperimentConfig {
+    /// The grid spec once the dataset dimensions are known.
+    pub fn grid_spec(&self, m: usize, n: usize) -> GridSpec {
+        GridSpec::new(m, n, self.grid.p, self.grid.q, self.grid.rank)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = Document::parse(text)?;
+        let dataset = match doc.str("dataset.kind")?.as_str() {
+            "synthetic" => DatasetConfig::Synthetic(SyntheticConfig {
+                m: doc.usize("dataset.m")?,
+                n: doc.usize("dataset.n")?,
+                rank: doc.usize("dataset.rank")?,
+                train_fraction: doc.f64_or("dataset.train_fraction", 0.2),
+                test_fraction: doc.f64_or("dataset.test_fraction", 0.05),
+                noise_std: doc.f64_or("dataset.noise_std", 0.0),
+                seed: doc.u64_or("dataset.seed", 42),
+            }),
+            "ratings" => DatasetConfig::Ratings(RatingsConfig {
+                users: doc.usize("dataset.users")?,
+                items: doc.usize("dataset.items")?,
+                num_ratings: doc.usize("dataset.num_ratings")?,
+                latent_rank: doc.usize_or("dataset.latent_rank", 8),
+                zipf_exponent: doc.f64_or("dataset.zipf_exponent", 0.9),
+                noise_std: doc.f64_or("dataset.noise_std", 0.5),
+                train_fraction: doc.f64_or("dataset.train_fraction", 0.8),
+                seed: doc.u64_or("dataset.seed", 7),
+                name: doc.str_or("dataset.name", "ratings"),
+            }),
+            "file" => DatasetConfig::File {
+                path: doc.str("dataset.path")?,
+                train_fraction: doc.f64_or("dataset.train_fraction", 0.8),
+                seed: doc.u64_or("dataset.seed", 7),
+            },
+            other => {
+                return Err(Error::Config(format!("unknown dataset.kind {other:?}")))
+            }
+        };
+        Ok(Self {
+            name: doc.str("name")?,
+            dataset,
+            grid: GridConfig {
+                p: doc.usize("grid.p")?,
+                q: doc.usize("grid.q")?,
+                rank: doc.usize("grid.rank")?,
+            },
+            solver: SolverConfig {
+                rho: doc.f64("solver.rho")? as f32,
+                lambda: doc.f64("solver.lambda")? as f32,
+                schedule: StepSchedule {
+                    a: doc.f64("solver.schedule.a")?,
+                    b: doc.f64("solver.schedule.b")?,
+                },
+                max_iters: doc.u64("solver.max_iters")?,
+                eval_every: doc.u64("solver.eval_every")?,
+                abs_tol: doc.f64_or("solver.abs_tol", 1e-5),
+                rel_tol: doc.f64_or("solver.rel_tol", 1e-3),
+                patience: doc.u64_or("solver.patience", 2) as u32,
+                seed: doc.u64_or("solver.seed", 42),
+                normalize: doc.bool_or("solver.normalize", true),
+            },
+            engine: EngineChoice::parse(&doc.str_or("engine", "native-sparse"))?,
+            driver: DriverChoice::parse(&doc.str_or("driver", "sequential"))?,
+            workers: doc.usize_or("workers", 4),
+        })
+    }
+
+    /// Serialize to TOML-subset text (round-trips through
+    /// [`Self::from_toml`]).
+    pub fn to_toml(&self) -> Result<String> {
+        let mut s = String::new();
+        s.push_str(&format!("name = {}\n", quote(&self.name)));
+        s.push_str(&format!("engine = {}\n", quote(self.engine.as_str())));
+        s.push_str(&format!("driver = {}\n", quote(self.driver.as_str())));
+        s.push_str(&format!("workers = {}\n\n[dataset]\n", self.workers));
+        match &self.dataset {
+            DatasetConfig::Synthetic(c) => {
+                s.push_str("kind = \"synthetic\"\n");
+                s.push_str(&format!("m = {}\nn = {}\nrank = {}\n", c.m, c.n, c.rank));
+                s.push_str(&format!(
+                    "train_fraction = {}\ntest_fraction = {}\nnoise_std = {}\nseed = {}\n",
+                    c.train_fraction, c.test_fraction, c.noise_std, c.seed
+                ));
+            }
+            DatasetConfig::Ratings(c) => {
+                s.push_str("kind = \"ratings\"\n");
+                s.push_str(&format!("name = {}\n", quote(&c.name)));
+                s.push_str(&format!(
+                    "users = {}\nitems = {}\nnum_ratings = {}\nlatent_rank = {}\n",
+                    c.users, c.items, c.num_ratings, c.latent_rank
+                ));
+                s.push_str(&format!(
+                    "zipf_exponent = {}\nnoise_std = {}\ntrain_fraction = {}\nseed = {}\n",
+                    c.zipf_exponent, c.noise_std, c.train_fraction, c.seed
+                ));
+            }
+            DatasetConfig::File { path, train_fraction, seed } => {
+                s.push_str("kind = \"file\"\n");
+                s.push_str(&format!("path = {}\n", quote(path)));
+                s.push_str(&format!("train_fraction = {train_fraction}\nseed = {seed}\n"));
+            }
+        }
+        s.push_str(&format!(
+            "\n[grid]\np = {}\nq = {}\nrank = {}\n",
+            self.grid.p, self.grid.q, self.grid.rank
+        ));
+        let sv = &self.solver;
+        s.push_str(&format!(
+            "\n[solver]\nrho = {}\nlambda = {}\nmax_iters = {}\neval_every = {}\n\
+             abs_tol = {}\nrel_tol = {}\npatience = {}\nseed = {}\nnormalize = {}\n",
+            sv.rho, sv.lambda, sv.max_iters, sv.eval_every, sv.abs_tol, sv.rel_tol,
+            sv.patience, sv.seed, sv.normalize
+        ));
+        s.push_str(&format!(
+            "\n[solver.schedule]\na = {}\nb = {}\n",
+            sv.schedule.a, sv.schedule.b
+        ));
+        Ok(s)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_roundtrip_synthetic() {
+        let cfg = presets::exp(3).unwrap();
+        let text = cfg.to_toml().unwrap();
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.grid.p, cfg.grid.p);
+        assert_eq!(back.solver.rho, cfg.solver.rho);
+        assert_eq!(back.solver.schedule.b, cfg.solver.schedule.b);
+        match (&back.dataset, &cfg.dataset) {
+            (DatasetConfig::Synthetic(a), DatasetConfig::Synthetic(b)) => {
+                assert_eq!(a.m, b.m);
+                assert_eq!(a.seed, b.seed);
+                assert_eq!(a.train_fraction, b.train_fraction);
+            }
+            _ => panic!("dataset kind changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn toml_roundtrip_ratings() {
+        let cfg = presets::table3(crate::data::RatingsPreset::Ml1m, 3, 10);
+        let text = cfg.to_toml().unwrap();
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        match (&back.dataset, &cfg.dataset) {
+            (DatasetConfig::Ratings(a), DatasetConfig::Ratings(b)) => {
+                assert_eq!(a.users, b.users);
+                assert_eq!(a.num_ratings, b.num_ratings);
+                assert_eq!(a.name, b.name);
+            }
+            _ => panic!("dataset kind changed"),
+        }
+    }
+
+    #[test]
+    fn dataset_load_synthetic() {
+        let d = DatasetConfig::Synthetic(SyntheticConfig {
+            m: 40,
+            n: 40,
+            ..Default::default()
+        })
+        .load()
+        .unwrap();
+        assert_eq!(d.m, 40);
+        assert!(d.train.nnz() > 0);
+    }
+
+    #[test]
+    fn bad_toml_is_config_error() {
+        let err = ExperimentConfig::from_toml("not valid [ toml").unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        // engine/driver/workers and tolerances may be omitted.
+        let text = r#"
+            name = "minimal"
+            [dataset]
+            kind = "synthetic"
+            m = 10
+            n = 10
+            rank = 2
+            [grid]
+            p = 2
+            q = 2
+            rank = 2
+            [solver]
+            rho = 1.0
+            lambda = 1e-9
+            max_iters = 10
+            eval_every = 5
+            [solver.schedule]
+            a = 1e-3
+            b = 1e-7
+        "#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.engine, EngineChoice::NativeSparse);
+        assert_eq!(cfg.driver, DriverChoice::Sequential);
+        assert_eq!(cfg.workers, 4);
+        assert!(cfg.solver.normalize);
+    }
+
+    #[test]
+    fn engine_driver_parse() {
+        assert_eq!(EngineChoice::parse("xla").unwrap(), EngineChoice::Xla);
+        assert!(EngineChoice::parse("gpu").is_err());
+        assert_eq!(DriverChoice::parse("parallel").unwrap(), DriverChoice::Parallel);
+        assert!(DriverChoice::parse("warp").is_err());
+    }
+}

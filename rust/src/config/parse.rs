@@ -1,0 +1,274 @@
+//! Minimal TOML-subset parser for experiment configs.
+//!
+//! The offline build environment has no `toml`/`serde` crates, so
+//! GridMC parses the subset of TOML its own configs use (and that
+//! [`super::ExperimentConfig::to_toml`] emits):
+//!
+//! * `[section]` / `[section.sub]` table headers;
+//! * `key = value` pairs with string (`"…"`), boolean, integer and
+//!   float (incl. scientific notation) values;
+//! * `#` comments and blank lines.
+//!
+//! Arrays, inline tables, multi-line strings and datetimes are *not*
+//! supported — configs that need them don't exist in this repo.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(v) if *v >= 0 => Some(*v as u64),
+            Value::Float(v) if *v >= 0.0 && v.fract() == 0.0 => Some(*v as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: dotted path (`"solver.schedule.a"`) → value.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    map: BTreeMap<String, Value>,
+}
+
+impl Document {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated table header", lineno + 1))
+                })?;
+                prefix = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            map.insert(full, parse_value(value.trim(), lineno + 1)?);
+        }
+        Ok(Self { map })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.map.get(path)
+    }
+
+    /// Required string.
+    pub fn str(&self, path: &str) -> Result<String> {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| Error::Config(format!("missing string key {path:?}")))
+    }
+
+    /// Required float (ints coerce).
+    pub fn f64(&self, path: &str) -> Result<f64> {
+        self.get(path)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| Error::Config(format!("missing numeric key {path:?}")))
+    }
+
+    /// Required unsigned integer.
+    pub fn u64(&self, path: &str) -> Result<u64> {
+        self.get(path)
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| Error::Config(format!("missing integer key {path:?}")))
+    }
+
+    /// Required usize.
+    pub fn usize(&self, path: &str) -> Result<usize> {
+        Ok(self.u64(path)? as usize)
+    }
+
+    /// Optional value helpers with defaults.
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, path: &str, default: u64) -> u64 {
+        self.get(path).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.u64_or(path, default as u64) as usize
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (k, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..k],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| {
+            Error::Config(format!("line {lineno}: unterminated string"))
+        })?;
+        // Minimal escapes.
+        let unescaped = inner.replace("\\\"", "\"").replace("\\\\", "\\");
+        return Ok(Value::Str(unescaped));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if !cleaned.contains(['.', 'e', 'E']) {
+        if let Ok(v) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(v));
+        }
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(Error::Config(format!("line {lineno}: cannot parse value {s:?}")))
+}
+
+/// Quote a string for emission.
+pub fn quote(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Document::parse(
+            r#"
+            name = "exp1"         # trailing comment
+            workers = 4
+            [solver]
+            rho = 1e3
+            lambda = 1e-9
+            normalize = true
+            [solver.schedule]
+            a = 5.0e-4
+            b = 5_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("name").unwrap(), "exp1");
+        assert_eq!(doc.u64("workers").unwrap(), 4);
+        assert_eq!(doc.f64("solver.rho").unwrap(), 1e3);
+        assert_eq!(doc.f64("solver.lambda").unwrap(), 1e-9);
+        assert!(doc.bool_or("solver.normalize", false));
+        assert_eq!(doc.f64("solver.schedule.a").unwrap(), 5.0e-4);
+        assert_eq!(doc.u64("solver.schedule.b").unwrap(), 5000);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Document::parse(r##"name = "exp#1""##).unwrap();
+        assert_eq!(doc.str("name").unwrap(), "exp#1");
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = Document::parse("x = 3\ny = 3.5").unwrap();
+        assert_eq!(doc.f64("x").unwrap(), 3.0);
+        assert_eq!(doc.u64("x").unwrap(), 3);
+        assert!(doc.u64("y").is_none_err());
+    }
+
+    trait NoneErr {
+        fn is_none_err(&self) -> bool;
+    }
+    impl<T> NoneErr for crate::Result<T> {
+        fn is_none_err(&self) -> bool {
+            self.is_err()
+        }
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(Document::parse("[unclosed").is_err());
+        assert!(Document::parse("novalue").is_err());
+        assert!(Document::parse("x = @@").is_err());
+        assert!(Document::parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_config_errors() {
+        let doc = Document::parse("x = 1").unwrap();
+        assert!(matches!(doc.str("y"), Err(Error::Config(_))));
+        assert_eq!(doc.str_or("y", "d"), "d");
+        assert_eq!(doc.usize_or("y", 9), 9);
+    }
+
+    #[test]
+    fn quote_roundtrip() {
+        let s = r#"we "quote" \ slashes"#;
+        let doc = Document::parse(&format!("x = {}", quote(s))).unwrap();
+        assert_eq!(doc.str("x").unwrap(), s);
+    }
+}

@@ -1,0 +1,180 @@
+//! Paper experiment presets.
+//!
+//! [`exp`] pins Table 1's six synthetic experiments exactly (ρ = 1e3,
+//! λ = 1e-9, the grid and matrix sizes, and the a/b step scalars —
+//! including Exp#5's `b = 5e-6`). [`table3`] builds the Table-3 sweep
+//! cell for a dataset preset × grid × rank. Iteration budgets follow
+//! Table 2's convergence rows (240k–400k); benches scale them down via
+//! `GRIDMC_ITER_SCALE` to fit CI budgets without changing the
+//! experiment definitions.
+
+use crate::data::{RatingsPreset, SyntheticConfig};
+use crate::solver::{SolverConfig, StepSchedule};
+use crate::{Error, Result};
+
+use super::{DatasetConfig, DriverChoice, EngineChoice, ExperimentConfig, GridConfig};
+
+/// Table 1, experiments 1–6.
+pub fn exp(n: usize) -> Result<ExperimentConfig> {
+    // (m, n, p, q, b, max_iters) per Table 1 + Table 2 convergence rows.
+    let (m, nn, p, q, b, max_iters) = match n {
+        1 => (500, 500, 4, 4, 5.0e-7, 240_000),
+        2 => (500, 500, 4, 5, 5.0e-7, 260_000),
+        3 => (500, 500, 5, 5, 5.0e-7, 280_000),
+        4 => (500, 500, 6, 6, 5.0e-7, 400_000),
+        5 => (5000, 5000, 5, 5, 5.0e-6, 400_000),
+        6 => (10_000, 10_000, 5, 5, 5.0e-7, 280_000),
+        other => {
+            return Err(Error::Config(format!(
+                "exp#{other} does not exist (paper defines 1–6)"
+            )))
+        }
+    };
+    // The paper does not state the synthetic rank; we use 5 (same as the
+    // smallest Table-3 rank) and mask 80% of entries ("majority").
+    let rank = 5;
+    Ok(ExperimentConfig {
+        name: format!("exp{n}"),
+        dataset: DatasetConfig::Synthetic(SyntheticConfig {
+            m,
+            n: nn,
+            rank,
+            train_fraction: 0.2,
+            test_fraction: 0.05,
+            noise_std: 0.0,
+            seed: 100 + n as u64,
+        }),
+        grid: GridConfig { p, q, rank },
+        solver: SolverConfig {
+            rho: 1e3,
+            lambda: 1e-9,
+            schedule: StepSchedule { a: 5.0e-4, b },
+            max_iters,
+            eval_every: 20_000,
+            abs_tol: 1e-5,
+            rel_tol: 1e-3,
+            patience: 2,
+            seed: 100 + n as u64,
+            normalize: true,
+        },
+        engine: EngineChoice::NativeSparse,
+        driver: DriverChoice::Sequential,
+        workers: 4,
+    })
+}
+
+/// One Table-3 cell: dataset preset × `g×g` grid × rank.
+pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig {
+    let data_cfg = dataset.config(7);
+    let (users, items) = (data_cfg.users, data_cfg.items);
+    ExperimentConfig {
+        name: format!("table3-{}-{g}x{g}-r{rank}", data_cfg.name),
+        dataset: DatasetConfig::Ratings(data_cfg),
+        grid: GridConfig { p: g, q: g, rank },
+        solver: SolverConfig {
+            // Ratings scale: mean-centered data (the table3 harness
+            // centers by the train mean), moderate consensus weight and
+            // a step size sized against the per-row observation count —
+            // γ·2ρ and γ·2·(ratings/row) must both stay ≪ 1. "All
+            // experiments performed with tuned parameters" (§5); these
+            // are our tuned values, recorded in EXPERIMENTS.md.
+            rho: 50.0,
+            lambda: 2e-2,
+            schedule: StepSchedule { a: 1.0e-3, b: 5.0e-7 },
+            max_iters: 400_000,
+            eval_every: 40_000,
+            abs_tol: 1e-6,
+            rel_tol: 1e-3,
+            patience: 2,
+            seed: 7,
+            normalize: true,
+        },
+        engine: EngineChoice::NativeSparse,
+        driver: DriverChoice::Sequential,
+        workers: 4,
+    }
+    .scaled_for(users, items, g)
+}
+
+impl ExperimentConfig {
+    /// Iteration budget heuristics per grid size (finer grids need more
+    /// updates per block — Table 2's trend).
+    fn scaled_for(mut self, _users: usize, _items: usize, g: usize) -> Self {
+        self.solver.max_iters = (self.solver.max_iters as f64 * (g as f64 / 5.0).max(0.4)) as u64;
+        self.solver.eval_every = (self.solver.max_iters / 10).max(1);
+        self
+    }
+}
+
+/// Environment-driven iteration scaling for benches: multiply all
+/// budgets by `GRIDMC_ITER_SCALE` (default 1.0). Lets `cargo bench`
+/// regenerate table *shapes* quickly while full-fidelity runs remain a
+/// single env var away.
+pub fn iter_scale() -> f64 {
+    std::env::var("GRIDMC_ITER_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|v: &f64| *v > 0.0)
+        .unwrap_or(1.0)
+}
+
+/// Apply [`iter_scale`] to a config (rounding eval cadence along).
+pub fn apply_iter_scale(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    let s = iter_scale();
+    if (s - 1.0).abs() > f64::EPSILON {
+        cfg.solver.max_iters = ((cfg.solver.max_iters as f64 * s) as u64).max(10);
+        cfg.solver.eval_every = ((cfg.solver.eval_every as f64 * s) as u64).max(5);
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values_pinned() {
+        for n in 1..=6 {
+            let cfg = exp(n).unwrap();
+            assert_eq!(cfg.solver.rho, 1e3, "exp{n} rho");
+            assert_eq!(cfg.solver.lambda, 1e-9, "exp{n} lambda");
+            assert_eq!(cfg.solver.schedule.a, 5.0e-4, "exp{n} a");
+        }
+        let e3 = exp(3).unwrap();
+        assert_eq!((e3.grid.p, e3.grid.q), (5, 5));
+        assert_eq!(e3.dataset.dims(), Some((500, 500)));
+        let e5 = exp(5).unwrap();
+        assert_eq!(e5.solver.schedule.b, 5.0e-6, "exp5 uses b=5e-6");
+        assert_eq!(e5.dataset.dims(), Some((5000, 5000)));
+        let e6 = exp(6).unwrap();
+        assert_eq!(e6.dataset.dims(), Some((10_000, 10_000)));
+        assert_eq!(e6.solver.schedule.b, 5.0e-7);
+    }
+
+    #[test]
+    fn exp_out_of_range() {
+        assert!(exp(0).is_err());
+        assert!(exp(7).is_err());
+    }
+
+    #[test]
+    fn table3_names_and_grids() {
+        let cfg = table3(crate::data::RatingsPreset::Ml1m, 4, 10);
+        assert_eq!(cfg.grid.p, 4);
+        assert_eq!(cfg.grid.rank, 10);
+        assert!(cfg.name.contains("ml1m"));
+        // Finer grids get bigger budgets.
+        let c2 = table3(crate::data::RatingsPreset::Ml1m, 2, 10);
+        let c10 = table3(crate::data::RatingsPreset::Ml1m, 10, 10);
+        assert!(c10.solver.max_iters > c2.solver.max_iters);
+    }
+
+    #[test]
+    fn iter_scale_default_is_one() {
+        // Note: don't set the env var here (tests run in parallel);
+        // just verify the default path.
+        if std::env::var("GRIDMC_ITER_SCALE").is_err() {
+            assert_eq!(iter_scale(), 1.0);
+        }
+    }
+}

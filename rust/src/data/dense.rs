@@ -1,0 +1,317 @@
+//! Row-major dense `f32` matrix with the BLAS-like kernels the native
+//! engine needs.
+//!
+//! Deliberately minimal: GridMC's heavy math lives in the AOT-compiled
+//! XLA artifacts; [`DenseMatrix`] exists for block storage, the
+//! [`NativeEngine`](crate::engine::NativeEngine) fallback/oracle, and
+//! test fixtures. The three matmul variants are written as `k`-innermost
+//! loops over row slices so LLVM auto-vectorizes them (see
+//! EXPERIMENTS.md §Perf).
+
+use crate::{Error, Result};
+
+/// Row-major dense matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major vector. Errors if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_vec: {}x{} needs {} values, got {}",
+                rows, cols, rows * cols, data.len()
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Build by evaluating `f(i, j)` at every position.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw row-major storage.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// One row as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Squared Frobenius norm `‖A‖_F²`.
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// `self ← self + alpha · other` (axpy). Shapes must match.
+    pub fn axpy(&mut self, alpha: f32, other: &DenseMatrix) -> Result<()> {
+        self.check_same_shape(other, "axpy")?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Element-wise difference `self − other`.
+    pub fn sub(&self, other: &DenseMatrix) -> Result<DenseMatrix> {
+        self.check_same_shape(other, "sub")?;
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Ok(Self { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// `A · Bᵀ` where `A: (m×k)`, `B: (n×k)` → `(m×n)`.
+    ///
+    /// This is the factor-product orientation (`U Wᵀ`); both operands are
+    /// walked along contiguous rows.
+    pub fn matmul_nt(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        if self.cols != b.cols {
+            return Err(Error::Shape(format!(
+                "matmul_nt: inner dims {} vs {}",
+                self.cols, b.cols
+            )));
+        }
+        let (m, n, k) = (self.rows, b.rows, self.cols);
+        let mut out = DenseMatrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    acc += arow[l] * brow[l];
+                }
+                orow[j] = acc;
+            }
+        }
+        Ok(out)
+    }
+
+    /// `A · B` where `A: (m×k)`, `B: (k×n)` → `(m×n)`.
+    ///
+    /// Written as rank-1 accumulation over `A`'s rows so the inner loop
+    /// streams `B`'s rows contiguously.
+    pub fn matmul_nn(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        if self.cols != b.rows {
+            return Err(Error::Shape(format!(
+                "matmul_nn: inner dims {} vs {}",
+                self.cols, b.rows
+            )));
+        }
+        let (m, n, k) = (self.rows, b.cols, self.cols);
+        let mut out = DenseMatrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (l, &a_il) in arow.iter().enumerate().take(k) {
+                if a_il == 0.0 {
+                    continue; // masked residuals are mostly zero
+                }
+                let brow = b.row(l);
+                for j in 0..n {
+                    orow[j] += a_il * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `Aᵀ · B` where `A: (k×m)`, `B: (k×n)` → `(m×n)`.
+    ///
+    /// Accumulates outer products row-by-row of `A`/`B`, so no transpose
+    /// is materialized.
+    pub fn matmul_tn(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        if self.rows != b.rows {
+            return Err(Error::Shape(format!(
+                "matmul_tn: inner dims {} vs {}",
+                self.rows, b.rows
+            )));
+        }
+        let (m, n, k) = (self.cols, b.cols, self.rows);
+        let mut out = DenseMatrix::zeros(m, n);
+        for l in 0..k {
+            let arow = self.row(l);
+            let brow = b.row(l);
+            for (i, &a_li) in arow.iter().enumerate().take(m) {
+                if a_li == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for j in 0..n {
+                    orow[j] += a_li * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Scale every element in place.
+    pub fn scale(&mut self, alpha: f32) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Copy a sub-rectangle `[r0, r0+h) × [c0, c0+w)` into a new matrix,
+    /// zero-padding anything outside `self`'s bounds (used for ragged
+    /// edge blocks — DESIGN.md §6).
+    pub fn padded_submatrix(&self, r0: usize, c0: usize, h: usize, w: usize) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(h, w);
+        let h_in = h.min(self.rows.saturating_sub(r0));
+        let w_in = w.min(self.cols.saturating_sub(c0));
+        for i in 0..h_in {
+            let src = &self.row(r0 + i)[c0..c0 + w_in];
+            out.row_mut(i)[..w_in].copy_from_slice(src);
+        }
+        out
+    }
+
+    fn check_same_shape(&self, other: &DenseMatrix, op: &str) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "{op}: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Max absolute element-wise difference (test helper).
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> DenseMatrix {
+        DenseMatrix::from_vec(rows, cols, v.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(DenseMatrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn matmul_nt_known() {
+        // [[1,2],[3,4]] · [[1,0],[0,1]]ᵀ = [[1,2],[3,4]]
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let eye = m(2, 2, &[1., 0., 0., 1.]);
+        assert_eq!(a.matmul_nt(&eye).unwrap(), a);
+        // [[1,2],[3,4]] · [[5,6],[7,8]]ᵀ = [[17,23],[39,53]]
+        let b = m(2, 2, &[5., 6., 7., 8.]);
+        assert_eq!(a.matmul_nt(&b).unwrap(), m(2, 2, &[17., 23., 39., 53.]));
+    }
+
+    #[test]
+    fn matmul_nn_known() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        assert_eq!(a.matmul_nn(&b).unwrap(), m(2, 2, &[58., 64., 139., 154.]));
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let a = m(3, 2, &[1., 2., 3., 4., 5., 6.]); // aᵀ is 2×3
+        let b = m(3, 2, &[1., 0., 0., 1., 1., 1.]);
+        // aᵀ·b = [[1+0+5, 0+3+5],[2+0+6, 0+4+6]] = [[6,8],[8,10]]
+        assert_eq!(a.matmul_tn(&b).unwrap(), m(2, 2, &[6., 8., 8., 10.]));
+    }
+
+    #[test]
+    fn matmul_shape_errors() {
+        let a = m(2, 3, &[0.; 6]);
+        let b = m(2, 3, &[0.; 6]);
+        assert!(a.matmul_nn(&b).is_err());
+        let c = m(4, 2, &[0.; 8]);
+        assert!(a.matmul_nt(&c).is_err());
+        assert!(a.matmul_tn(&c).is_err());
+    }
+
+    #[test]
+    fn frob_and_axpy() {
+        let mut a = m(1, 3, &[3., 0., 4.]);
+        assert_eq!(a.frob_sq(), 25.0);
+        let b = m(1, 3, &[1., 1., 1.]);
+        a.axpy(-1.0, &b).unwrap();
+        assert_eq!(a, m(1, 3, &[2., -1., 3.]));
+    }
+
+    #[test]
+    fn padded_submatrix_interior_and_edge() {
+        let a = DenseMatrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let interior = a.padded_submatrix(1, 1, 2, 2);
+        assert_eq!(interior, m(2, 2, &[5., 6., 9., 10.]));
+        // Edge block runs past the boundary → zero padded.
+        let edge = a.padded_submatrix(3, 3, 2, 2);
+        assert_eq!(edge, m(2, 2, &[15., 0., 0., 0.]));
+        // Fully out of range → all zeros.
+        let out = a.padded_submatrix(10, 10, 2, 2);
+        assert_eq!(out, DenseMatrix::zeros(2, 2));
+    }
+
+    #[test]
+    fn sub_and_scale() {
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = m(2, 2, &[4., 3., 2., 1.]);
+        let mut d = a.sub(&b).unwrap();
+        assert_eq!(d, m(2, 2, &[-3., -1., 1., 3.]));
+        d.scale(2.0);
+        assert_eq!(d, m(2, 2, &[-6., -2., 2., 6.]));
+    }
+}

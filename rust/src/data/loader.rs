@@ -1,0 +1,189 @@
+//! Loader for real MovieLens ratings files.
+//!
+//! When the environment provides the actual datasets (e.g. the user has
+//! `ml-1m/ratings.dat` on disk and points `GRIDMC_DATA_DIR` at it), the
+//! Table-3 benches use the real data instead of the generator. Two
+//! formats are supported:
+//!
+//! * `Dat` — the classic `UserID::MovieID::Rating::Timestamp` format
+//!   (ml-1m, ml-10m);
+//! * `Csv` — `userId,movieId,rating,timestamp` with a header row
+//!   (ml-20m, ml-25m).
+//!
+//! Raw user/movie ids are sparse; we reindex both to dense 0-based
+//! ranges, then split 80/20 with a seeded shuffle.
+
+use std::collections::HashMap;
+use std::io::BufRead;
+use std::path::Path;
+
+use crate::util::Rng;
+use crate::{Error, Result};
+
+use super::{CooMatrix, SplitDataset};
+
+/// Supported on-disk formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MovieLensFormat {
+    /// `UserID::MovieID::Rating::Timestamp`
+    Dat,
+    /// `userId,movieId,rating,timestamp` with header
+    Csv,
+}
+
+impl MovieLensFormat {
+    /// Guess from the file extension.
+    pub fn from_path(path: &Path) -> MovieLensFormat {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("csv") => MovieLensFormat::Csv,
+            _ => MovieLensFormat::Dat,
+        }
+    }
+
+    fn parse_line(self, line: &str) -> Option<(u64, u64, f32)> {
+        let mut parts = match self {
+            MovieLensFormat::Dat => line.split("::"),
+            MovieLensFormat::Csv => line.split(","),
+        };
+        let user: u64 = parts.next()?.trim().parse().ok()?;
+        let item: u64 = parts.next()?.trim().parse().ok()?;
+        let rating: f32 = parts.next()?.trim().parse().ok()?;
+        Some((user, item, rating))
+    }
+}
+
+/// Load a MovieLens ratings file and split it 80/20 (seeded).
+///
+/// Returns a [`SplitDataset`] with densely reindexed users/items. Lines
+/// that fail to parse (e.g. the CSV header) are skipped; an empty result
+/// is an error.
+pub fn load_movielens(
+    path: impl AsRef<Path>,
+    train_fraction: f64,
+    seed: u64,
+) -> Result<SplitDataset> {
+    let path = path.as_ref();
+    let format = MovieLensFormat::from_path(path);
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+
+    let mut user_ids: HashMap<u64, u32> = HashMap::new();
+    let mut item_ids: HashMap<u64, u32> = HashMap::new();
+    let mut triples: Vec<(u32, u32, f32)> = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        let Some((user, item, rating)) = format.parse_line(&line) else {
+            continue; // header or malformed line
+        };
+        let next_u = user_ids.len() as u32;
+        let iu = *user_ids.entry(user).or_insert(next_u);
+        let next_i = item_ids.len() as u32;
+        let ij = *item_ids.entry(item).or_insert(next_i);
+        triples.push((iu, ij, rating));
+    }
+    if triples.is_empty() {
+        return Err(Error::Data(format!("no ratings parsed from {}", path.display())));
+    }
+
+    let m = user_ids.len();
+    let n = item_ids.len();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut train = CooMatrix::new(m, n);
+    let mut test = CooMatrix::new(m, n);
+    for (i, j, v) in triples {
+        if rng.bool(train_fraction) {
+            train.push(i, j, v)?;
+        } else {
+            test.push(i, j, v)?;
+        }
+    }
+    Ok(SplitDataset {
+        m,
+        n,
+        train,
+        test,
+        name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("movielens").to_string(),
+    })
+}
+
+/// Look for a real dataset file under `GRIDMC_DATA_DIR`, trying the
+/// conventional names for the given dataset label ("ml1m", "ml10m",
+/// "ml20m"). Returns `None` when unavailable — callers then use the
+/// [`RatingsConfig`](super::RatingsConfig) generator.
+pub fn find_real_dataset(label: &str) -> Option<std::path::PathBuf> {
+    let dir = std::env::var_os("GRIDMC_DATA_DIR")?;
+    let dir = Path::new(&dir);
+    let candidates: &[&str] = match label {
+        "ml1m" => &["ml-1m/ratings.dat", "ml1m.dat"],
+        "ml10m" => &["ml-10m/ratings.dat", "ml-10M100K/ratings.dat", "ml10m.dat"],
+        "ml20m" => &["ml-20m/ratings.csv", "ml20m.csv"],
+        _ => return None,
+    };
+    candidates.iter().map(|c| dir.join(c)).find(|p| p.exists())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, contents: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("gridmc-loader-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn parses_dat_format() {
+        let path = write_tmp(
+            "mini.dat",
+            "1::10::5::978300760\n1::20::3::978302109\n2::10::4::978301968\n",
+        );
+        let d = load_movielens(&path, 1.0, 0).unwrap();
+        assert_eq!(d.m, 2);
+        assert_eq!(d.n, 2);
+        assert_eq!(d.train.nnz(), 3);
+        // Reindexed: user 1→0, item 10→0.
+        let triples: Vec<_> = d.train.iter().collect();
+        assert_eq!(triples[0], (0, 0, 5.0));
+    }
+
+    #[test]
+    fn parses_csv_with_header() {
+        let path = write_tmp(
+            "mini.csv",
+            "userId,movieId,rating,timestamp\n3,7,4.5,1112486027\n4,7,2.0,1112484676\n",
+        );
+        let d = load_movielens(&path, 1.0, 0).unwrap();
+        assert_eq!(d.m, 2);
+        assert_eq!(d.n, 1);
+        let vals: Vec<f32> = d.train.iter().map(|(_, _, v)| v).collect();
+        assert_eq!(vals, vec![4.5, 2.0]);
+    }
+
+    #[test]
+    fn split_is_seeded_and_partitions() {
+        let mut body = String::new();
+        for u in 1..=50 {
+            for i in 1..=10 {
+                body.push_str(&format!("{u}::{i}::3::0\n"));
+            }
+        }
+        let path = write_tmp("split.dat", &body);
+        let a = load_movielens(&path, 0.8, 123).unwrap();
+        let b = load_movielens(&path, 0.8, 123).unwrap();
+        assert_eq!(a.train.nnz(), b.train.nnz());
+        assert_eq!(a.train.nnz() + a.test.nnz(), 500);
+        let frac = a.train.nnz() as f64 / 500.0;
+        assert!((frac - 0.8).abs() < 0.06, "{frac}");
+    }
+
+    #[test]
+    fn empty_file_is_error() {
+        let path = write_tmp("empty.dat", "just a header\n");
+        assert!(load_movielens(&path, 0.8, 0).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Data substrates: dense/sparse matrices, dataset generation, loading.
+//!
+//! The paper evaluates on (a) dense synthetic low-rank matrices with the
+//! majority of entries masked (Tables 1–2) and (b) large sparse ratings
+//! matrices — MovieLens 1M/10M/20M and Netflix (Table 3). This module
+//! provides both substrates plus the generators and loaders that feed
+//! them:
+//!
+//! * [`DenseMatrix`] — row-major `f32` matrix with the small set of BLAS-
+//!   like kernels the native engine needs.
+//! * [`CooMatrix`] / [`CsrMatrix`] — sparse observed-entry storage for
+//!   ratings-scale data.
+//! * [`synthetic`] — planted low-rank matrices with Bernoulli masking
+//!   (the paper's synthetic protocol, §5).
+//! * [`ratings`] — the MovieLens/Netflix *substitute*: a seeded planted-
+//!   factor ratings generator with power-law user/item marginals
+//!   (DESIGN.md §7 records why this preserves the Table-3 trends).
+//! * [`loader`] — parser for real MovieLens files, used automatically
+//!   when `GRIDMC_DATA_DIR` points at them.
+
+mod dense;
+pub mod loader;
+mod ratings;
+mod sparse;
+mod synthetic;
+
+pub use dense::DenseMatrix;
+pub use loader::{load_movielens, MovieLensFormat};
+pub use ratings::{RatingsConfig, RatingsPreset};
+pub use sparse::{CooMatrix, CsrMatrix};
+pub use synthetic::{SyntheticConfig, SyntheticDataset};
+
+/// A dataset already split into train / test observed-entry sets.
+///
+/// Both splits index into the same `m × n` coordinate space; train and
+/// test entry sets are disjoint.
+#[derive(Debug, Clone)]
+pub struct SplitDataset {
+    /// Number of rows (users) of the full matrix.
+    pub m: usize,
+    /// Number of columns (items) of the full matrix.
+    pub n: usize,
+    /// Observed entries used for learning.
+    pub train: CooMatrix,
+    /// Held-out entries used for RMSE evaluation.
+    pub test: CooMatrix,
+    /// Human-readable provenance ("ml1m-like", "synthetic-500", file path…).
+    pub name: String,
+}
+
+impl SplitDataset {
+    /// Fraction of all `m·n` cells observed in the train split.
+    pub fn train_density(&self) -> f64 {
+        self.train.nnz() as f64 / (self.m as f64 * self.n as f64)
+    }
+
+    /// Mean-center both splits by the *train* mean (standard for
+    /// ratings factorization: the factors then model deviations from μ,
+    /// which keeps initial residuals — and therefore SGD gradients — at
+    /// unit scale). RMSE on the centered test split equals RMSE of
+    /// `U Wᵀ + μ` against the raw ratings.
+    pub fn centered(&self) -> (SplitDataset, f32) {
+        let mu = self.train.mean() as f32;
+        let shift = |coo: &CooMatrix| {
+            let mut out = CooMatrix::new(self.m, self.n);
+            for (i, j, v) in coo.iter() {
+                out.push(i, j, v - mu).expect("same coords");
+            }
+            out
+        };
+        (
+            SplitDataset {
+                m: self.m,
+                n: self.n,
+                train: shift(&self.train),
+                test: shift(&self.test),
+                name: self.name.clone(),
+            },
+            mu,
+        )
+    }
+}

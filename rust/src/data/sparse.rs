@@ -1,0 +1,240 @@
+//! Sparse matrix storage for observed-entry (ratings) data.
+//!
+//! [`CooMatrix`] is the interchange form (generators, loaders, splits);
+//! [`CsrMatrix`] is the compute form the sparse native engine iterates.
+
+use crate::{Error, Result};
+
+use super::DenseMatrix;
+
+/// Coordinate-format sparse matrix: parallel `(row, col, value)` arrays.
+#[derive(Debug, Clone, Default)]
+pub struct CooMatrix {
+    rows: usize,
+    cols: usize,
+    row_idx: Vec<u32>,
+    col_idx: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CooMatrix {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, row_idx: vec![], col_idx: vec![], values: vec![] }
+    }
+
+    /// Build from entry triples. Errors on out-of-range indices.
+    pub fn from_triples(
+        rows: usize,
+        cols: usize,
+        triples: impl IntoIterator<Item = (u32, u32, f32)>,
+    ) -> Result<Self> {
+        let mut out = Self::new(rows, cols);
+        for (i, j, v) in triples {
+            out.push(i, j, v)?;
+        }
+        Ok(out)
+    }
+
+    /// Append one entry.
+    pub fn push(&mut self, i: u32, j: u32, v: f32) -> Result<()> {
+        if i as usize >= self.rows || j as usize >= self.cols {
+            return Err(Error::Shape(format!(
+                "coo push ({i},{j}) out of {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        self.row_idx.push(i);
+        self.col_idx.push(j);
+        self.values.push(v);
+        Ok(())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Iterate `(row, col, value)` triples in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        self.row_idx
+            .iter()
+            .zip(&self.col_idx)
+            .zip(&self.values)
+            .map(|((&i, &j), &v)| (i, j, v))
+    }
+
+    /// Mean of stored values (0.0 when empty) — used for rating centering.
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().map(|&v| v as f64).sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Materialize as `(X, M)` dense value/mask pair of the given padded
+    /// shape with the block origin at `(r0, c0)`.
+    ///
+    /// This is how the dense engines see a block: entries inside the
+    /// rectangle land in `X` with `M = 1`; everything else is `0/0`.
+    pub fn to_dense_block(
+        &self,
+        r0: usize,
+        c0: usize,
+        h: usize,
+        w: usize,
+    ) -> (DenseMatrix, DenseMatrix) {
+        let mut x = DenseMatrix::zeros(h, w);
+        let mut m = DenseMatrix::zeros(h, w);
+        for (i, j, v) in self.iter() {
+            let (i, j) = (i as usize, j as usize);
+            if i >= r0 && i < r0 + h && j >= c0 && j < c0 + w {
+                x.set(i - r0, j - c0, v);
+                m.set(i - r0, j - c0, 1.0);
+            }
+        }
+        (x, m)
+    }
+
+    /// Convert to CSR (sorts entries by row, then column).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut order: Vec<usize> = (0..self.nnz()).collect();
+        order.sort_unstable_by_key(|&k| (self.row_idx[k], self.col_idx[k]));
+        let mut indptr = vec![0u32; self.rows + 1];
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        for &k in &order {
+            indptr[self.row_idx[k] as usize + 1] += 1;
+            indices.push(self.col_idx[k]);
+            values.push(self.values[k]);
+        }
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// Restrict to the rectangle `[r0, r0+h) × [c0, c0+w)`, rebasing
+    /// indices to the rectangle origin.
+    pub fn submatrix(&self, r0: usize, c0: usize, h: usize, w: usize) -> CooMatrix {
+        let mut out = CooMatrix::new(h, w);
+        for (i, j, v) in self.iter() {
+            let (iu, ju) = (i as usize, j as usize);
+            if iu >= r0 && iu < r0 + h && ju >= c0 && ju < c0 + w {
+                out.row_idx.push((iu - r0) as u32);
+                out.col_idx.push((ju - c0) as u32);
+                out.values.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Compressed-sparse-row matrix.
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<u32>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `(col_indices, values)` of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[i] as usize;
+        let hi = self.indptr[i + 1] as usize;
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Iterate all `(row, col, value)` triples in CSR order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.rows).flat_map(move |i| {
+            let (cols, vals) = self.row(i);
+            cols.iter().zip(vals).map(move |(&j, &v)| (i as u32, j, v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CooMatrix {
+        CooMatrix::from_triples(
+            3,
+            4,
+            [(2u32, 1u32, 5.0f32), (0, 0, 1.0), (0, 3, 2.0), (1, 2, 3.0)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn push_bounds_checked() {
+        let mut c = CooMatrix::new(2, 2);
+        assert!(c.push(2, 0, 1.0).is_err());
+        assert!(c.push(0, 2, 1.0).is_err());
+        assert!(c.push(1, 1, 1.0).is_ok());
+    }
+
+    #[test]
+    fn coo_to_csr_sorted() {
+        let csr = sample().to_csr();
+        assert_eq!(csr.nnz(), 4);
+        assert_eq!(csr.row(0), (&[0u32, 3u32][..], &[1.0f32, 2.0f32][..]));
+        assert_eq!(csr.row(1), (&[2u32][..], &[3.0f32][..]));
+        assert_eq!(csr.row(2), (&[1u32][..], &[5.0f32][..]));
+        let triples: Vec<_> = csr.iter().collect();
+        assert_eq!(triples, vec![(0, 0, 1.0), (0, 3, 2.0), (1, 2, 3.0), (2, 1, 5.0)]);
+    }
+
+    #[test]
+    fn to_dense_block_window() {
+        let coo = sample();
+        let (x, m) = coo.to_dense_block(0, 0, 3, 4);
+        assert_eq!(x.get(2, 1), 5.0);
+        assert_eq!(m.get(2, 1), 1.0);
+        assert_eq!(m.get(2, 2), 0.0);
+        // Window starting at (1,1), padded beyond bounds.
+        let (x2, m2) = coo.to_dense_block(1, 1, 4, 4);
+        assert_eq!(x2.get(0, 1), 3.0); // entry (1,2) rebased
+        assert_eq!(x2.get(1, 0), 5.0); // entry (2,1) rebased
+        assert_eq!(m2.get(3, 3), 0.0); // padding
+    }
+
+    #[test]
+    fn submatrix_rebases() {
+        let sub = sample().submatrix(1, 1, 2, 3);
+        let triples: Vec<_> = sub.iter().collect();
+        assert_eq!(sub.rows(), 2);
+        assert_eq!(sub.cols(), 3);
+        assert_eq!(triples, vec![(1, 0, 5.0), (0, 1, 3.0)]);
+    }
+
+    #[test]
+    fn mean_handles_empty() {
+        assert_eq!(CooMatrix::new(2, 2).mean(), 0.0);
+        assert!((sample().mean() - 2.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Compute engines: who executes `updateThroughSGD`.
+//!
+//! An [`Engine`] owns an immutable copy of each block's observed data
+//! (uploaded once by [`Engine::prepare`]) and executes the paper's
+//! three-block structure update, block cost, and prediction against
+//! caller-provided factors. Two implementations:
+//!
+//! * [`XlaEngine`] — the production three-layer path: loads the
+//!   AOT-compiled HLO artifacts (JAX model over Pallas kernels) and runs
+//!   them on the PJRT CPU client. Block `X`/`M` tensors live as
+//!   device-resident buffers; only the small `U`/`W` factors move per
+//!   update.
+//! * [`NativeEngine`] — pure Rust implementation of the same math, in
+//!   dense or sparse (CSR) mode. Serves as the arbitrary-shape fallback,
+//!   the apples-to-apples baseline, and the parity oracle the
+//!   integration tests compare `XlaEngine` against.
+//!
+//! Engines are `Send + Sync`: the parallel gossip driver shares one
+//! engine across worker tasks, and updates touching disjoint blocks are
+//! data-race-free by construction (the scheduler guarantees
+//! non-overlapping structures per round).
+
+mod native;
+mod xla;
+
+pub use native::{NativeEngine, NativeMode};
+pub use xla::XlaEngine;
+
+use crate::data::DenseMatrix;
+use crate::grid::{BlockId, BlockPartition, NormalizationCoeffs, StructureRoles};
+use crate::Result;
+
+/// Scalar parameters of one structure update (paper Eq. 2/3 plus the
+/// step size and Figure-2 normalization coefficients).
+#[derive(Debug, Clone, Copy)]
+pub struct StructureParams {
+    /// Consensus weight ρ.
+    pub rho: f32,
+    /// Tikhonov regularizer λ.
+    pub lam: f32,
+    /// SGD step size γ_t = a / (1 + b·t).
+    pub gamma: f32,
+    /// f/λ normalization coefficients for anchor, horizontal, vertical.
+    pub cf: [f32; 3],
+    /// U-consensus edge coefficient.
+    pub cu: f32,
+    /// W-consensus edge coefficient.
+    pub cw: f32,
+}
+
+impl StructureParams {
+    /// Assemble from hyper-parameters and grid-geometry coefficients.
+    pub fn build(
+        rho: f32,
+        lam: f32,
+        gamma: f32,
+        coeffs: &NormalizationCoeffs,
+        roles: &StructureRoles,
+    ) -> Self {
+        Self {
+            rho,
+            lam,
+            gamma,
+            cf: [
+                coeffs.f_coeff(roles.anchor),
+                coeffs.f_coeff(roles.horizontal),
+                coeffs.f_coeff(roles.vertical),
+            ],
+            cu: coeffs.u_coeff(roles),
+            cw: coeffs.w_coeff(roles),
+        }
+    }
+
+    /// Unnormalized parameters (every coefficient 1) — the paper's
+    /// formulation *without* §4's equal-representation fix; used by the
+    /// normalization ablation bench.
+    pub fn unnormalized(rho: f32, lam: f32, gamma: f32) -> Self {
+        Self { rho, lam, gamma, cf: [1.0; 3], cu: 1.0, cw: 1.0 }
+    }
+}
+
+/// Factors of the three blocks of a structure, in anchor / horizontal /
+/// vertical role order.
+pub type StructureFactors<'a> = [(&'a DenseMatrix, &'a DenseMatrix); 3];
+
+/// Updated factors in the same role order.
+pub type UpdatedFactors = [(DenseMatrix, DenseMatrix); 3];
+
+/// A compute backend for the paper's block operations.
+pub trait Engine: Send + Sync {
+    /// Backend label for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Ingest the observed data of every block. Must be called before
+    /// any compute method; engines may upload to device memory here.
+    fn prepare(&mut self, partition: &BlockPartition) -> Result<()>;
+
+    /// One SGD step on a structure: given the three blocks' current
+    /// factors (role order anchor/h/v), return their updated factors.
+    fn structure_update(
+        &self,
+        roles: &StructureRoles,
+        factors: StructureFactors<'_>,
+        params: &StructureParams,
+    ) -> Result<UpdatedFactors>;
+
+    /// Block cost `f_ij + λ‖U_ij‖² + λ‖W_ij‖²` (the Table-2 summand).
+    fn block_cost(
+        &self,
+        id: BlockId,
+        u: &DenseMatrix,
+        w: &DenseMatrix,
+        lam: f32,
+    ) -> Result<f64>;
+
+    /// Dense reconstruction `U_ij W_ijᵀ` of one block (used by RMSE
+    /// evaluation paths that want the engine's own numerics).
+    fn predict_block(&self, u: &DenseMatrix, w: &DenseMatrix) -> Result<DenseMatrix>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::Structure;
+
+    #[test]
+    fn params_build_uses_grid_coefficients() {
+        let coeffs = NormalizationCoeffs::new(4, 4);
+        let s = Structure::upper(1, 1); // interior: f-count 6, edges count 2
+        let roles = s.roles();
+        let p = StructureParams::build(1e3, 1e-9, 1e-3, &coeffs, &roles);
+        assert!((p.cf[0] - 1.0 / 6.0).abs() < 1e-6);
+        assert!((p.cu - 0.5).abs() < 1e-6);
+        assert!((p.cw - 0.5).abs() < 1e-6);
+        assert_eq!(p.rho, 1e3);
+    }
+
+    #[test]
+    fn unnormalized_is_all_ones() {
+        let p = StructureParams::unnormalized(1.0, 0.0, 0.1);
+        assert_eq!(p.cf, [1.0; 3]);
+        assert_eq!(p.cu, 1.0);
+        assert_eq!(p.cw, 1.0);
+    }
+}

@@ -1,0 +1,442 @@
+//! Pure-Rust engine: same math as the XLA artifacts, no FFI.
+//!
+//! Two data modes:
+//!
+//! * [`NativeMode::Dense`] — blocks materialized as padded `(X, M)`
+//!   dense pairs; the residual `R = M ⊙ (X − U Wᵀ)` and both gradient
+//!   GEMMs run dense, mirroring the L1 Pallas kernel exactly. Used for
+//!   parity tests against [`XlaEngine`](super::XlaEngine).
+//! * [`NativeMode::Sparse`] — blocks kept as CSR of observed entries;
+//!   residuals and gradients touch observed entries only. The right
+//!   tool for ratings-scale data (1% dense), and the engine the Table-3
+//!   benches use at large scale.
+//!
+//! Both modes produce identical results up to f32 summation order
+//! (asserted by the `modes_agree` test).
+
+use crate::data::{CsrMatrix, DenseMatrix};
+use crate::grid::{BlockId, BlockPartition, StructureRoles};
+use crate::{Error, Result};
+
+use super::{Engine, StructureFactors, StructureParams, UpdatedFactors};
+
+/// Block storage strategy for the native engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NativeMode {
+    /// Materialize padded dense `(X, M)` per block.
+    Dense,
+    /// Keep observed entries as CSR (default — scales to ratings data).
+    #[default]
+    Sparse,
+}
+
+enum BlockData {
+    Dense { x: DenseMatrix, mask: DenseMatrix },
+    Sparse(CsrMatrix),
+}
+
+/// Pure-Rust [`Engine`].
+pub struct NativeEngine {
+    mode: NativeMode,
+    q: usize,
+    blocks: Vec<BlockData>,
+}
+
+impl NativeEngine {
+    /// Sparse-mode engine (default).
+    pub fn new() -> Self {
+        Self::with_mode(NativeMode::Sparse)
+    }
+
+    pub fn with_mode(mode: NativeMode) -> Self {
+        Self { mode, q: 0, blocks: Vec::new() }
+    }
+
+    fn block(&self, id: BlockId) -> Result<&BlockData> {
+        self.blocks
+            .get(id.index(self.q))
+            .ok_or_else(|| Error::Shape(format!("block {id} not prepared")))
+    }
+
+    /// `(G_U, G_W, f)` of the masked data-fit term for one block.
+    fn masked_grads(
+        &self,
+        id: BlockId,
+        u: &DenseMatrix,
+        w: &DenseMatrix,
+    ) -> Result<(DenseMatrix, DenseMatrix, f64)> {
+        match self.block(id)? {
+            BlockData::Dense { x, mask } => {
+                // R = M ⊙ (X − U Wᵀ)
+                let mut r = u.matmul_nt(w)?; // U Wᵀ
+                {
+                    let rs = r.as_mut_slice();
+                    let xs = x.as_slice();
+                    let ms = mask.as_slice();
+                    for k in 0..rs.len() {
+                        rs[k] = ms[k] * (xs[k] - rs[k]);
+                    }
+                }
+                let f = r.frob_sq();
+                let mut gu = r.matmul_nn(w)?; // R W
+                gu.scale(-2.0);
+                let mut gw = r.matmul_tn(u)?; // Rᵀ U
+                gw.scale(-2.0);
+                Ok((gu, gw, f))
+            }
+            BlockData::Sparse(csr) => {
+                let rank = u.cols();
+                let mut gu = DenseMatrix::zeros(u.rows(), rank);
+                let mut gw = DenseMatrix::zeros(w.rows(), rank);
+                let mut f = 0.0f64;
+                for i in 0..csr.rows() {
+                    let (cols, vals) = csr.row(i);
+                    if cols.is_empty() {
+                        continue;
+                    }
+                    let urow = &u.row(i)[..rank];
+                    let gurow = &mut gu.row_mut(i)[..rank];
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        let wrow = &w.row(j as usize)[..rank];
+                        // Iterator zips elide bounds checks in the
+                        // rank-length inner loops (hot path; §Perf).
+                        let pred: f32 =
+                            urow.iter().zip(wrow).map(|(a, b)| a * b).sum();
+                        let e = v - pred; // residual at (i, j)
+                        f += (e as f64) * (e as f64);
+                        let ge = -2.0 * e;
+                        let gwrow = &mut gw.row_mut(j as usize)[..rank];
+                        for ((gu_k, gw_k), (&u_k, &w_k)) in gurow
+                            .iter_mut()
+                            .zip(gwrow.iter_mut())
+                            .zip(urow.iter().zip(wrow.iter()))
+                        {
+                            *gu_k += ge * w_k;
+                            *gw_k += ge * u_k;
+                        }
+                    }
+                }
+                Ok((gu, gw, f))
+            }
+        }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            NativeMode::Dense => "native-dense",
+            NativeMode::Sparse => "native-sparse",
+        }
+    }
+
+    fn prepare(&mut self, partition: &BlockPartition) -> Result<()> {
+        let spec = partition.spec();
+        self.q = spec.q;
+        self.blocks = spec
+            .blocks()
+            .map(|id| match self.mode {
+                NativeMode::Dense => {
+                    let (x, mask) = partition.dense_block(id);
+                    BlockData::Dense { x, mask }
+                }
+                NativeMode::Sparse => BlockData::Sparse(partition.csr_block(id)),
+            })
+            .collect();
+        Ok(())
+    }
+
+    fn structure_update(
+        &self,
+        roles: &StructureRoles,
+        factors: StructureFactors<'_>,
+        params: &StructureParams,
+    ) -> Result<UpdatedFactors> {
+        let ids = roles.blocks();
+        let gamma = params.gamma;
+        let lam = params.lam;
+
+        // Per-block data-fit + λ gradients, then one fused pass per
+        // factor: P' = P − γ·cf·(G + 2λP) ∓ 2γρc·(consensus diff).
+        // Single traversal per output matrix — no clone/axpy chains in
+        // the hot loop (EXPERIMENTS.md §Perf).
+        let mut grads: Vec<(DenseMatrix, DenseMatrix)> = Vec::with_capacity(3);
+        for (id, (u, w)) in ids.iter().zip(factors.iter()) {
+            let (gu, gw, _) = self.masked_grads(*id, u, w)?;
+            grads.push((gu, gw));
+        }
+
+        let step_u = 2.0 * params.rho * params.cu * gamma; // U consensus
+        let step_w = 2.0 * params.rho * params.cw * gamma; // W consensus
+        let (ua, uh) = (factors[0].0, factors[1].0);
+        let (wa, wv) = (factors[0].1, factors[2].1);
+
+        // fused = p − γ·cf·(g + 2λp) − step·(a − b) elementwise; `sign`
+        // selects which side of the consensus edge this factor is on.
+        let fused = |p: &DenseMatrix,
+                     g: &DenseMatrix,
+                     cf: f32,
+                     step: f32,
+                     da: Option<(&DenseMatrix, &DenseMatrix)>|
+         -> DenseMatrix {
+            let ps = p.as_slice();
+            let gs = g.as_slice();
+            let coef_p = 1.0 - gamma * cf * 2.0 * lam;
+            let coef_g = -gamma * cf;
+            let mut out = Vec::with_capacity(ps.len());
+            match da {
+                None => {
+                    for i in 0..ps.len() {
+                        out.push(coef_p * ps[i] + coef_g * gs[i]);
+                    }
+                }
+                Some((a, b)) => {
+                    let az = a.as_slice();
+                    let bz = b.as_slice();
+                    for i in 0..ps.len() {
+                        out.push(
+                            coef_p * ps[i] + coef_g * gs[i] - step * (az[i] - bz[i]),
+                        );
+                    }
+                }
+            }
+            DenseMatrix::from_vec(p.rows(), p.cols(), out).expect("same shape")
+        };
+
+        let nu_a = fused(factors[0].0, &grads[0].0, params.cf[0], step_u, Some((ua, uh)));
+        let nw_a = fused(factors[0].1, &grads[0].1, params.cf[0], step_w, Some((wa, wv)));
+        let nu_h = fused(factors[1].0, &grads[1].0, params.cf[1], -step_u, Some((ua, uh)));
+        let nw_h = fused(factors[1].1, &grads[1].1, params.cf[1], 0.0, None);
+        let nu_v = fused(factors[2].0, &grads[2].0, params.cf[2], 0.0, None);
+        let nw_v = fused(factors[2].1, &grads[2].1, params.cf[2], -step_w, Some((wa, wv)));
+
+        Ok([(nu_a, nw_a), (nu_h, nw_h), (nu_v, nw_v)])
+    }
+
+    fn block_cost(
+        &self,
+        id: BlockId,
+        u: &DenseMatrix,
+        w: &DenseMatrix,
+        lam: f32,
+    ) -> Result<f64> {
+        let f = match self.block(id)? {
+            BlockData::Dense { x, mask } => {
+                let pred = u.matmul_nt(w)?;
+                let mut acc = 0.0f64;
+                let (xs, ms, ps) = (x.as_slice(), mask.as_slice(), pred.as_slice());
+                for k in 0..xs.len() {
+                    let e = ms[k] * (xs[k] - ps[k]);
+                    acc += (e as f64) * (e as f64);
+                }
+                acc
+            }
+            BlockData::Sparse(csr) => {
+                let rank = u.cols();
+                let mut acc = 0.0f64;
+                for i in 0..csr.rows() {
+                    let (cols, vals) = csr.row(i);
+                    let urow = u.row(i);
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        let wrow = w.row(j as usize);
+                        let mut pred = 0.0f32;
+                        for k in 0..rank {
+                            pred += urow[k] * wrow[k];
+                        }
+                        let e = v - pred;
+                        acc += (e as f64) * (e as f64);
+                    }
+                }
+                acc
+            }
+        };
+        Ok(f + lam as f64 * (u.frob_sq() + w.frob_sq()))
+    }
+
+    fn predict_block(&self, u: &DenseMatrix, w: &DenseMatrix) -> Result<DenseMatrix> {
+        u.matmul_nt(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CooMatrix, SyntheticConfig};
+    use crate::grid::{GridSpec, NormalizationCoeffs, Structure};
+    use crate::model::FactorState;
+
+    fn setup(mode: NativeMode) -> (GridSpec, BlockPartition, NativeEngine, FactorState) {
+        let spec = GridSpec::new(24, 20, 2, 2, 3);
+        let data = SyntheticConfig {
+            m: 24,
+            n: 20,
+            rank: 3,
+            train_fraction: 0.5,
+            ..Default::default()
+        }
+        .generate();
+        let part = BlockPartition::new(spec, &data.data.train).unwrap();
+        let mut eng = NativeEngine::with_mode(mode);
+        eng.prepare(&part).unwrap();
+        let state = FactorState::init_random(spec, 11);
+        (spec, part, eng, state)
+    }
+
+    fn params() -> StructureParams {
+        StructureParams {
+            rho: 10.0,
+            lam: 1e-6,
+            gamma: 1e-3,
+            cf: [1.0, 0.5, 0.25],
+            cu: 0.5,
+            cw: 1.0,
+        }
+    }
+
+    #[test]
+    fn modes_agree() {
+        let (_, _, dense, state) = setup(NativeMode::Dense);
+        let (_, _, sparse, _) = setup(NativeMode::Sparse);
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let f = [
+            (state.u(roles.anchor), state.w(roles.anchor)),
+            (state.u(roles.horizontal), state.w(roles.horizontal)),
+            (state.u(roles.vertical), state.w(roles.vertical)),
+        ];
+        let a = dense.structure_update(&roles, f, &params()).unwrap();
+        let b = sparse.structure_update(&roles, f, &params()).unwrap();
+        for k in 0..3 {
+            assert!(a[k].0.max_abs_diff(&b[k].0) < 1e-4, "u block {k}");
+            assert!(a[k].1.max_abs_diff(&b[k].1) < 1e-4, "w block {k}");
+        }
+        // Cost agrees too.
+        let cu = dense
+            .block_cost(roles.anchor, f[0].0, f[0].1, 1e-6)
+            .unwrap();
+        let cs = sparse
+            .block_cost(roles.anchor, f[0].0, f[0].1, 1e-6)
+            .unwrap();
+        assert!((cu - cs).abs() / cu.max(1.0) < 1e-5);
+    }
+
+    #[test]
+    fn update_reduces_structure_cost() {
+        let (spec, _, eng, state) = setup(NativeMode::Sparse);
+        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+        let s = Structure::lower(1, 1);
+        let roles = s.roles();
+        let p = StructureParams::build(1.0, 1e-9, 1e-3, &coeffs, &roles);
+        let f = [
+            (state.u(roles.anchor), state.w(roles.anchor)),
+            (state.u(roles.horizontal), state.w(roles.horizontal)),
+            (state.u(roles.vertical), state.w(roles.vertical)),
+        ];
+        let cost = |fs: [(&DenseMatrix, &DenseMatrix); 3]| -> f64 {
+            roles
+                .blocks()
+                .iter()
+                .zip(fs.iter())
+                .map(|(id, (u, w))| eng.block_cost(*id, u, w, 1e-9).unwrap())
+                .sum()
+        };
+        let before = cost(f);
+        let updated = eng.structure_update(&roles, f, &p).unwrap();
+        let after = cost([
+            (&updated[0].0, &updated[0].1),
+            (&updated[1].0, &updated[1].1),
+            (&updated[2].0, &updated[2].1),
+        ]);
+        assert!(after < before, "cost {before} -> {after}");
+    }
+
+    #[test]
+    fn zero_gamma_is_identity() {
+        let (_, _, eng, state) = setup(NativeMode::Sparse);
+        let roles = Structure::upper(0, 0).roles();
+        let f = [
+            (state.u(roles.anchor), state.w(roles.anchor)),
+            (state.u(roles.horizontal), state.w(roles.horizontal)),
+            (state.u(roles.vertical), state.w(roles.vertical)),
+        ];
+        let mut p = params();
+        p.gamma = 0.0;
+        let out = eng.structure_update(&roles, f, &p).unwrap();
+        for k in 0..3 {
+            assert_eq!(out[k].0.max_abs_diff(f[k].0), 0.0);
+            assert_eq!(out[k].1.max_abs_diff(f[k].1), 0.0);
+        }
+    }
+
+    #[test]
+    fn consensus_forces_equal_opposite() {
+        // With no data term (empty block partition), the U update on the
+        // anchor and horizontal blocks must be exactly antisymmetric.
+        let spec = GridSpec::new(8, 8, 2, 2, 2);
+        let empty = CooMatrix::new(8, 8);
+        let part = BlockPartition::new(spec, &empty).unwrap();
+        let mut eng = NativeEngine::new();
+        eng.prepare(&part).unwrap();
+        let state = FactorState::init_random(spec, 3);
+        let roles = Structure::upper(0, 0).roles();
+        let f = [
+            (state.u(roles.anchor), state.w(roles.anchor)),
+            (state.u(roles.horizontal), state.w(roles.horizontal)),
+            (state.u(roles.vertical), state.w(roles.vertical)),
+        ];
+        let mut p = params();
+        p.lam = 0.0;
+        let out = eng.structure_update(&roles, f, &p).unwrap();
+        let mut da = out[0].0.sub(f[0].0).unwrap();
+        let dh = out[1].0.sub(f[1].0).unwrap();
+        da.axpy(1.0, &dh).unwrap(); // da + dh should be ~0
+        assert!(da.frob_sq() < 1e-12);
+        // Vertical block's U unchanged (only W feels the consensus).
+        assert_eq!(out[2].0.max_abs_diff(f[2].0), 0.0);
+    }
+
+    #[test]
+    fn cost_of_exact_factors_is_lambda_term() {
+        let spec = GridSpec::new(12, 12, 2, 2, 2);
+        // Plant rank-2 data and use the exact factors.
+        let u_star = DenseMatrix::from_fn(12, 2, |i, k| ((i + k) % 3) as f32);
+        let w_star = DenseMatrix::from_fn(12, 2, |j, k| ((j * (k + 1)) % 4) as f32 * 0.5);
+        let mut coo = CooMatrix::new(12, 12);
+        for i in 0..12u32 {
+            for j in 0..12u32 {
+                if (i + j) % 3 == 0 {
+                    let mut v = 0.0;
+                    for k in 0..2 {
+                        v += u_star.get(i as usize, k) * w_star.get(j as usize, k);
+                    }
+                    coo.push(i, j, v).unwrap();
+                }
+            }
+        }
+        let part = BlockPartition::new(spec, &coo).unwrap();
+        let mut eng = NativeEngine::new();
+        eng.prepare(&part).unwrap();
+        let id = BlockId::new(0, 1);
+        let (r0, c0) = spec.block_origin(id);
+        let (mb, nb) = spec.block_shape();
+        let u = u_star.padded_submatrix(r0, 0, mb, 2);
+        let w = w_star.padded_submatrix(c0, 0, nb, 2);
+        let lam = 0.25f32;
+        let c = eng.block_cost(id, &u, &w, lam).unwrap();
+        let want = lam as f64 * (u.frob_sq() + w.frob_sq());
+        assert!((c - want).abs() < 1e-6, "cost {c} want {want}");
+    }
+
+    #[test]
+    fn unprepared_engine_errors() {
+        let eng = NativeEngine::new();
+        let u = DenseMatrix::zeros(2, 2);
+        assert!(eng.block_cost(BlockId::new(0, 0), &u, &u, 0.0).is_err());
+    }
+}

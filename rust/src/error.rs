@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+/// All fallible GridMC operations return this error.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Underlying XLA / PJRT failure (compile, transfer, execute).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact store problems: missing manifest, unknown shape, bad hash.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Shape or index mismatch in matrix / grid operations.
+    #[error("shape: {0}")]
+    Shape(String),
+
+    /// Configuration errors (invalid preset, bad TOML, bad CLI args).
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Dataset parsing / generation problems.
+    #[error("data: {0}")]
+    Data(String),
+
+    /// Gossip runtime failures (agent died, channel closed, schedule bug).
+    #[error("gossip: {0}")]
+    Gossip(String),
+
+    /// Training diverged (NaN/inf cost) — surfaced instead of silently
+    /// looping to max_iters.
+    #[error("diverged at iteration {iter}: cost={cost}")]
+    Diverged { iter: u64, cost: f64 },
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,194 @@
+//! Ablations on the design choices DESIGN.md calls out.
+//!
+//! 1. **Normalization** (§4 / Figure 2): run with the inverse-frequency
+//!    coefficients on vs off — the paper's stated reason for them is
+//!    equal block representation, which shows up as consensus error on
+//!    the boundary blocks.
+//! 2. **ρ sweep**: consensus weight governs the convergence/agreement
+//!    trade-off (Eq. 2).
+//! 3. **1-D vs 2-D decomposition**: the row-gossip baseline ([9]) vs
+//!    the paper's grid at matched agent counts.
+//! 4. **Baseline comparisons**: centralized SGD / ALS RMSE on the same
+//!    split.
+
+use crate::data::{SplitDataset, SyntheticConfig};
+use crate::engine::NativeEngine;
+use crate::grid::GridSpec;
+use crate::metrics::TablePrinter;
+use crate::solver::baselines::{
+    AlsConfig, CentralizedAls, CentralizedSgd, RowGossip, RowGossipConfig, SgdBaselineConfig,
+};
+use crate::solver::{SequentialDriver, SolverConfig, StepSchedule};
+use crate::Result;
+
+fn dataset() -> (GridSpec, SplitDataset) {
+    let d = SyntheticConfig {
+        m: 120,
+        n: 120,
+        rank: 4,
+        train_fraction: 0.3,
+        test_fraction: 0.1,
+        noise_std: 0.0,
+        seed: 77,
+    }
+    .generate();
+    (GridSpec::new(120, 120, 4, 4, 4), d.data)
+}
+
+fn cfg(iters: u64) -> SolverConfig {
+    SolverConfig {
+        rho: 50.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 4e-3, b: 1e-6 },
+        max_iters: iters,
+        eval_every: iters / 10,
+        abs_tol: 1e-10,
+        rel_tol: 1e-6,
+        patience: 3,
+        seed: 21,
+        normalize: true,
+    }
+}
+
+fn iters() -> u64 {
+    ((60_000.0 * crate::config::presets::iter_scale()) as u64).max(2_000)
+}
+
+/// Ablation 1: normalization on/off.
+///
+/// Divergence is a *result* here, not a failure: without the Figure-2
+/// inverse-frequency coefficients, boundary terms receive up to 6x the
+/// intended weight and the same step size can blow up.
+pub fn normalization() -> Result<String> {
+    let (spec, data) = dataset();
+    let mut t = TablePrinter::new(&["variant", "final cost", "consensus gap", "test rmse"]);
+    for normalize in [true, false] {
+        let mut c = cfg(iters());
+        c.normalize = normalize;
+        let name = if normalize { "normalized (paper §4)" } else { "unnormalized" };
+        let mut engine = NativeEngine::new();
+        match SequentialDriver::new(spec, c).run(&mut engine, &data.train) {
+            Ok((report, state)) => t.row(&[
+                name.to_string(),
+                format!("{:.3e}", report.final_cost),
+                format!("{:.3e}", state.consensus_gap()),
+                format!("{:.4}", state.rmse(&data.test)),
+            ]),
+            Err(crate::Error::Diverged { iter, .. }) => t.row(&[
+                name.to_string(),
+                format!("DIVERGED @ {iter}"),
+                "-".into(),
+                "-".into(),
+            ]),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(format!("== Ablation: Figure-2 normalization ==\n{}", t.render()))
+}
+
+/// Ablation 2: consensus weight ρ.
+pub fn rho_sweep() -> Result<String> {
+    let (spec, data) = dataset();
+    let mut t = TablePrinter::new(&["rho", "final cost", "consensus gap", "test rmse"]);
+    for rho in [0.0, 1.0, 10.0, 100.0, 1000.0] {
+        let mut c = cfg(iters());
+        c.rho = rho;
+        let mut engine = NativeEngine::new();
+        match SequentialDriver::new(spec, c).run(&mut engine, &data.train) {
+            Ok((report, state)) => t.row(&[
+                format!("{rho:.0e}"),
+                format!("{:.3e}", report.final_cost),
+                format!("{:.3e}", state.consensus_gap()),
+                format!("{:.4}", state.rmse(&data.test)),
+            ]),
+            // rho beyond the gamma*2*rho < 1 stability bound: report it.
+            Err(crate::Error::Diverged { iter, .. }) => t.row(&[
+                format!("{rho:.0e}"),
+                format!("DIVERGED @ {iter}"),
+                "-".into(),
+                "-".into(),
+            ]),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(format!("== Ablation: consensus weight rho ==\n{}", t.render()))
+}
+
+/// Ablation 3+4: the paper's 2-D grid vs 1-D row gossip vs centralized
+/// baselines, on one split.
+pub fn versus_baselines() -> Result<String> {
+    let (spec, data) = dataset();
+    let it = iters();
+    let mut t = TablePrinter::new(&["method", "agents", "test rmse", "wall"]);
+
+    {
+        let mut engine = NativeEngine::new();
+        let (report, state) =
+            SequentialDriver::new(spec, cfg(it)).run(&mut engine, &data.train)?;
+        t.row(&[
+            "2-D grid gossip (paper)".into(),
+            format!("{}", spec.num_blocks()),
+            format!("{:.4}", state.rmse(&data.test)),
+            format!("{:.2?}", report.wall),
+        ]);
+    }
+    {
+        let r = RowGossip::new(RowGossipConfig {
+            p: spec.num_blocks(), // matched agent count
+            rank: 4,
+            rho: 50.0,
+            lambda: 1e-9,
+            schedule: StepSchedule { a: 8e-3, b: 1e-6 },
+            max_iters: it,
+            eval_every: it / 10,
+            seed: 21,
+        })
+        .run(&data)?;
+        t.row(&[
+            "1-D row gossip ([9]-style)".into(),
+            format!("{}", spec.num_blocks()),
+            format!("{:.4}", r.test_rmse),
+            format!("{:.2?}", r.wall),
+        ]);
+    }
+    {
+        let r = CentralizedSgd::new(SgdBaselineConfig {
+            rank: 4,
+            schedule: StepSchedule { a: 1e-2, b: 1e-6 },
+            lambda: 1e-4,
+            max_iters: 3 * it, // one structure update touches 3 blocks
+            eval_every: it,
+            seed: 21,
+            use_biases: false,
+        })
+        .run(&data)?;
+        t.row(&[
+            "centralized SGD".into(),
+            "1".into(),
+            format!("{:.4}", r.test_rmse),
+            format!("{:.2?}", r.wall),
+        ]);
+    }
+    {
+        let r = CentralizedAls::new(AlsConfig { rank: 4, lambda: 1e-4, sweeps: 12, seed: 21 })
+            .run(&data)?;
+        t.row(&[
+            "centralized ALS".into(),
+            "1".into(),
+            format!("{:.4}", r.test_rmse),
+            format!("{:.2?}", r.wall),
+        ]);
+    }
+    Ok(format!("== Comparison: decomposition strategies & baselines ==\n{}", t.render()))
+}
+
+/// Full harness.
+pub fn run() -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&normalization()?);
+    out.push('\n');
+    out.push_str(&rho_sweep()?);
+    out.push('\n');
+    out.push_str(&versus_baselines()?);
+    Ok(out)
+}

@@ -1,0 +1,200 @@
+//! Experiment harnesses: regenerate every paper table and figure.
+//!
+//! Both the CLI (`gridmc bench-table …`) and the criterion-less bench
+//! binaries (`cargo bench`) call into this module, so the printed rows
+//! in EXPERIMENTS.md always come from library code:
+//!
+//! * [`table2`] — cost vs iterations for Exp#1–6 (paper Table 2);
+//! * [`table3`] — test RMSE across dataset × grid × rank (Table 3);
+//! * [`fig2`] — analytic vs empirical selection frequencies (Figure 2);
+//! * [`parallel`] — conflict-free round throughput scaling (§6);
+//! * [`ablations`] — normalization / ρ / baseline comparisons.
+//!
+//! Iteration budgets honor `GRIDMC_ITER_SCALE` (see
+//! [`crate::config::presets::apply_iter_scale`]); the full-fidelity
+//! settings are the presets themselves.
+
+pub mod ablations;
+pub mod fig2;
+pub mod parallel;
+pub mod table2;
+pub mod table3;
+
+use crate::config::{DriverChoice, EngineChoice, ExperimentConfig};
+use crate::data::SplitDataset;
+use crate::engine::{Engine, NativeEngine, NativeMode, XlaEngine};
+use crate::gossip::ParallelDriver;
+use crate::grid::GridSpec;
+use crate::model::FactorState;
+use crate::solver::{SequentialDriver, SolverReport};
+use crate::{Error, Result};
+
+/// Result of one experiment run.
+#[derive(Debug)]
+pub struct Outcome {
+    pub report: SolverReport,
+    pub state: FactorState,
+    pub train_rmse: f64,
+    pub test_rmse: f64,
+    pub dataset: String,
+}
+
+/// Build the configured engine; [`EngineChoice::Xla`] falls back to the
+/// native sparse engine (with a warning) when the manifest lacks the
+/// block shape — unless `GRIDMC_STRICT_ENGINE=1`.
+pub fn build_engine(choice: EngineChoice, spec: &GridSpec) -> Result<Box<dyn Engine>> {
+    match choice {
+        EngineChoice::NativeSparse => Ok(Box::new(NativeEngine::with_mode(NativeMode::Sparse))),
+        EngineChoice::NativeDense => Ok(Box::new(NativeEngine::with_mode(NativeMode::Dense))),
+        EngineChoice::Xla => match XlaEngine::from_default_artifacts(spec) {
+            Ok(e) => Ok(Box::new(e)),
+            Err(err) if std::env::var("GRIDMC_STRICT_ENGINE").as_deref() == Ok("1") => Err(err),
+            Err(err) => {
+                log::warn!("xla engine unavailable ({err}); falling back to native-sparse");
+                Ok(Box::new(NativeEngine::new()))
+            }
+        },
+    }
+}
+
+/// Load data, build the engine and the configured driver, train, and
+/// evaluate train/test RMSE through the assembled universal factors.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Outcome> {
+    let data: SplitDataset = cfg.dataset.load()?;
+    run_experiment_on(cfg, &data)
+}
+
+/// Same as [`run_experiment`] but with a pre-loaded dataset (the table
+/// sweeps reuse one generated dataset across many grid/rank cells).
+pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<Outcome> {
+    let spec = cfg.grid_spec(data.m, data.n);
+    spec.validate()?;
+    let mut engine = build_engine(cfg.engine, &spec)?;
+    let (report, state) = match cfg.driver {
+        DriverChoice::Sequential => {
+            let driver = SequentialDriver::new(spec, cfg.solver.clone());
+            driver.run(engine.as_mut(), &data.train)?
+        }
+        DriverChoice::Parallel => {
+            let driver = ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers);
+            driver.run(engine, &data.train)?
+        }
+    };
+    let train_rmse = state.rmse(&data.train);
+    let test_rmse = state.rmse(&data.test);
+    Ok(Outcome { report, state, train_rmse, test_rmse, dataset: data.name.clone() })
+}
+
+/// Human-readable run summary for the CLI.
+pub fn format_outcome(cfg: &ExperimentConfig, o: &Outcome) -> String {
+    let r = &o.report;
+    format!(
+        "experiment   {name}\n\
+         dataset      {ds}\n\
+         grid         {p}x{q} rank {rank}\n\
+         engine       {engine}\n\
+         iterations   {iters} ({conv})\n\
+         wall         {wall:.2?} ({ups:.0} updates/s)\n\
+         cost         {c0:.3e} -> {cf:.3e} ({orders:.1} orders)\n\
+         train rmse   {tr:.4}\n\
+         test rmse    {te:.4}",
+        name = cfg.name,
+        ds = o.dataset,
+        p = cfg.grid.p,
+        q = cfg.grid.q,
+        rank = cfg.grid.rank,
+        engine = r.engine,
+        iters = r.iters,
+        conv = if r.converged { "converged" } else { "max-iters" },
+        wall = r.wall,
+        ups = r.updates_per_sec(),
+        c0 = r.curve.initial().unwrap_or(f64::NAN),
+        cf = r.final_cost,
+        orders = r.curve.orders_of_reduction(),
+        tr = o.train_rmse,
+        te = o.test_rmse,
+    )
+}
+
+/// Shorthand used by several harnesses.
+pub(crate) fn env_flag(name: &str) -> bool {
+    std::env::var(name).as_deref() == Ok("1")
+}
+
+#[allow(unused_imports)]
+pub(crate) use crate::metrics::TablePrinter;
+
+impl Outcome {
+    /// For tests: the error type when experiments are misconfigured.
+    pub fn ensure_finite(&self) -> Result<()> {
+        if !self.report.final_cost.is_finite() {
+            return Err(Error::Diverged {
+                iter: self.report.iters,
+                cost: self.report.final_cost,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn quick_experiment_end_to_end() {
+        let mut cfg = presets::exp(1).unwrap();
+        // Shrink drastically for the unit test.
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 40;
+            s.n = 40;
+            s.rank = 3; // match the grid rank: no underfit floor
+            s.train_fraction = 0.5;
+        }
+        cfg.grid.p = 2;
+        cfg.grid.q = 2;
+        cfg.grid.rank = 3;
+        cfg.solver.max_iters = 2000;
+        cfg.solver.eval_every = 500;
+        cfg.solver.rho = 10.0;
+        cfg.solver.schedule = crate::solver::StepSchedule { a: 2e-2, b: 1e-5 };
+        let o = run_experiment(&cfg).unwrap();
+        o.ensure_finite().unwrap();
+        assert!(o.report.curve.orders_of_reduction() > 1.0);
+        let s = format_outcome(&cfg, &o);
+        assert!(s.contains("test rmse"));
+    }
+
+    #[test]
+    fn parallel_driver_choice_works() {
+        let mut cfg = presets::exp(1).unwrap();
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 40;
+            s.n = 40;
+            s.rank = 3;
+            s.train_fraction = 0.5;
+        }
+        cfg.grid.p = 3;
+        cfg.grid.q = 3;
+        cfg.grid.rank = 3;
+        cfg.driver = DriverChoice::Parallel;
+        cfg.workers = 2;
+        cfg.solver.max_iters = 1000;
+        cfg.solver.eval_every = 250;
+        cfg.solver.rho = 10.0;
+        cfg.solver.schedule = crate::solver::StepSchedule { a: 2e-2, b: 1e-5 };
+        let o = run_experiment(&cfg).unwrap();
+        assert!(o.report.final_cost < o.report.curve.initial().unwrap());
+    }
+
+    #[test]
+    fn xla_choice_falls_back_when_shape_missing() {
+        let spec = GridSpec::new(17, 17, 2, 2, 2); // not in manifest
+        if std::env::var("GRIDMC_STRICT_ENGINE").is_ok() {
+            return;
+        }
+        let e = build_engine(EngineChoice::Xla, &spec).unwrap();
+        assert!(e.name().starts_with("native"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Table 3: test RMSE across dataset × grid × rank.
+//!
+//! The paper reports RMSE on MovieLens 1M/10M/20M and Netflix for grids
+//! 2×2 … 10×10 and ranks 5/10/15 after an 80/20 split. We run the same
+//! sweep over the DESIGN.md §7 substitute datasets (or the real files
+//! when `GRIDMC_DATA_DIR` provides them). Success criterion (shape):
+//! RMSE sits in a plausible ratings band and *degrades as the grid gets
+//! finer* — the paper's 10×10 column is its worst.
+//!
+//! Default sweep (bench budget): ml1m-like × grids {2,3,5,10} × ranks
+//! {5,10}. `GRIDMC_TABLE3_FULL=1` unlocks all four datasets × five
+//! grids × three ranks (the EXPERIMENTS.md run).
+
+use crate::config::presets;
+use crate::data::{loader, RatingsPreset, SplitDataset};
+use crate::metrics::{RmseReport, TablePrinter};
+use crate::Result;
+
+use super::{env_flag, run_experiment_on};
+
+/// Sweep definition.
+pub struct Sweep {
+    pub datasets: Vec<RatingsPreset>,
+    pub grids: Vec<usize>,
+    pub ranks: Vec<usize>,
+}
+
+impl Sweep {
+    pub fn default_sweep() -> Self {
+        if env_flag("GRIDMC_TABLE3_FULL") {
+            Self {
+                datasets: RatingsPreset::all().to_vec(),
+                grids: vec![2, 3, 4, 5, 10],
+                ranks: vec![5, 10, 15],
+            }
+        } else {
+            Self {
+                datasets: vec![RatingsPreset::Ml1m],
+                grids: vec![2, 3, 5, 10],
+                ranks: vec![5, 10],
+            }
+        }
+    }
+}
+
+/// Load the dataset for a preset: real file when available, generator
+/// otherwise.
+fn load_dataset(preset: RatingsPreset) -> Result<SplitDataset> {
+    let label = match preset {
+        RatingsPreset::Ml1m => "ml1m",
+        RatingsPreset::Ml10m => "ml10m",
+        RatingsPreset::Ml20m => "ml20m",
+        RatingsPreset::Netflix => "netflix",
+    };
+    let raw = if let Some(path) = loader::find_real_dataset(label) {
+        log::info!("using real dataset {}", path.display());
+        crate::data::load_movielens(path, 0.8, 7)?
+    } else {
+        preset.config(7).generate()
+    };
+    // Mean-center by the train mean (same as DatasetConfig::load's
+    // ratings path; factors model deviations from μ, RMSE unchanged).
+    let (centered, mu) = raw.centered();
+    log::info!("{}: centered by train mean {mu:.3}", centered.name);
+    Ok(centered)
+}
+
+/// Run the sweep, returning one report per cell.
+pub fn collect(sweep: &Sweep) -> Result<Vec<RmseReport>> {
+    let mut out = Vec::new();
+    for &ds in &sweep.datasets {
+        let data = load_dataset(ds)?;
+        for &g in &sweep.grids {
+            for &rank in &sweep.ranks {
+                let cfg = presets::apply_iter_scale(presets::table3(ds, g, rank));
+                let o = run_experiment_on(&cfg, &data)?;
+                log::info!(
+                    "table3 {} {g}x{g} r{rank}: rmse {:.4}",
+                    data.name,
+                    o.test_rmse
+                );
+                out.push(RmseReport {
+                    dataset: data.name.clone(),
+                    p: g,
+                    q: g,
+                    rank,
+                    rmse: o.test_rmse,
+                    train_rmse: o.train_rmse,
+                    iters: o.report.iters,
+                    wall: o.report.wall,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Paper-style rendering: one sub-table per dataset, rank rows × grid
+/// columns.
+pub fn render(reports: &[RmseReport], grids: &[usize], ranks: &[usize]) -> String {
+    let mut out = String::from(
+        "== Table 3: test RMSE by dataset / grid / rank (paper: 0.86-1.41, worse at 10x10) ==\n",
+    );
+    let mut datasets: Vec<&str> = reports.iter().map(|r| r.dataset.as_str()).collect();
+    datasets.dedup();
+    for ds in datasets {
+        out.push_str(&format!("\n--- {ds} ---\n"));
+        let mut header = vec!["Rank".to_string()];
+        header.extend(grids.iter().map(|g| format!("{g}x{g}")));
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = TablePrinter::new(&header_refs);
+        for &rank in ranks {
+            let mut row = vec![rank.to_string()];
+            for &g in grids {
+                let cell = reports
+                    .iter()
+                    .find(|r| r.dataset == ds && r.p == g && r.rank == rank)
+                    .map(|r| format!("{:.2}", r.rmse))
+                    .unwrap_or_else(|| "·".into());
+                row.push(cell);
+            }
+            t.row(&row);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Full harness.
+pub fn run() -> Result<String> {
+    let sweep = Sweep::default_sweep();
+    let reports = collect(&sweep)?;
+    Ok(render(&reports, &sweep.grids, &sweep.ranks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn render_shapes_table() {
+        let reports = vec![
+            RmseReport {
+                dataset: "ml1m-like".into(),
+                p: 2,
+                q: 2,
+                rank: 5,
+                rmse: 0.87,
+                train_rmse: 0.8,
+                iters: 100,
+                wall: Duration::from_secs(1),
+            },
+            RmseReport {
+                dataset: "ml1m-like".into(),
+                p: 10,
+                q: 10,
+                rank: 5,
+                rmse: 1.13,
+                train_rmse: 1.0,
+                iters: 100,
+                wall: Duration::from_secs(1),
+            },
+        ];
+        let s = render(&reports, &[2, 10], &[5]);
+        assert!(s.contains("ml1m-like"));
+        assert!(s.contains("0.87"));
+        assert!(s.contains("1.13"));
+        assert!(s.contains("2x2"));
+        assert!(s.contains("10x10"));
+    }
+}

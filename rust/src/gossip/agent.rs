@@ -1,0 +1,163 @@
+//! Block agents: the decentralized unit of the gossip runtime.
+//!
+//! One OS thread per block. Each agent owns its block's factors
+//! `(U_ij, W_ij)` and a handle to the shared [`Engine`] (which holds the
+//! immutable block data). Agents only ever exchange messages with grid
+//! neighbours — the leader orchestrates *which* structure fires when
+//! (exactly as the paper's random sampling implicitly does) but never
+//! sees factor matrices during learning.
+//!
+//! A structure update is a three-party gossip round driven by the
+//! anchor agent:
+//!
+//! 1. anchor receives `Execute{structure, params}` from the driver;
+//! 2. anchor pulls `(U, W)` from its horizontal and vertical neighbours
+//!    (`GetFactors`);
+//! 3. anchor runs the engine's structure update;
+//! 4. anchor keeps its own new factors and pushes the neighbours'
+//!    updated factors back (`PutFactors`), then acks the driver.
+//!
+//! Deadlock freedom: a neighbour serves `GetFactors`/`PutFactors` from
+//! its mailbox whenever it is not itself anchoring a structure, and the
+//! scheduler ([`super::ScheduleBuilder`]) guarantees concurrently
+//! dispatched structures share no blocks — so an anchor's neighbours
+//! are never anchors (nor members) of another in-flight structure.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use crate::data::DenseMatrix;
+use crate::engine::{Engine, StructureParams};
+use crate::grid::{BlockId, Structure};
+use crate::{Error, Result};
+
+/// Single-use reply channel (oneshot).
+pub type Reply<T> = mpsc::SyncSender<T>;
+
+/// Create a oneshot pair.
+pub fn oneshot<T>() -> (Reply<T>, mpsc::Receiver<T>) {
+    mpsc::sync_channel(1)
+}
+
+/// Messages an agent accepts.
+pub enum AgentMsg {
+    /// Neighbour (or assembler) asks for the current factors.
+    GetFactors { reply: Reply<(DenseMatrix, DenseMatrix)> },
+    /// Anchor pushes updated factors after a structure update.
+    PutFactors { u: DenseMatrix, w: DenseMatrix, ack: Reply<()> },
+    /// Driver asks this agent to anchor one structure update.
+    Execute {
+        structure: Structure,
+        params: StructureParams,
+        done: Reply<Result<()>>,
+    },
+    /// Driver asks for this block's current cost term.
+    GetCost { lambda: f32, reply: Reply<Result<f64>> },
+    /// Stop and hand the final factors back.
+    Shutdown { reply: Reply<(BlockId, DenseMatrix, DenseMatrix)> },
+}
+
+/// Mailbox handle to one agent.
+#[derive(Clone)]
+pub struct AgentHandle {
+    pub id: BlockId,
+    pub tx: mpsc::Sender<AgentMsg>,
+}
+
+/// Agent state + event loop (runs on its own thread).
+pub struct Agent {
+    id: BlockId,
+    u: DenseMatrix,
+    w: DenseMatrix,
+    engine: std::sync::Arc<dyn Engine>,
+    /// Handles to the (up to 4) grid neighbours, keyed by block id.
+    neighbours: HashMap<BlockId, AgentHandle>,
+    rx: mpsc::Receiver<AgentMsg>,
+}
+
+impl Agent {
+    pub fn new(
+        id: BlockId,
+        u: DenseMatrix,
+        w: DenseMatrix,
+        engine: std::sync::Arc<dyn Engine>,
+        neighbours: HashMap<BlockId, AgentHandle>,
+        rx: mpsc::Receiver<AgentMsg>,
+    ) -> Self {
+        Self { id, u, w, engine, neighbours, rx }
+    }
+
+    fn pull_neighbour(&self, id: BlockId) -> Result<(DenseMatrix, DenseMatrix)> {
+        let handle = self
+            .neighbours
+            .get(&id)
+            .ok_or_else(|| Error::Gossip(format!("{} has no neighbour {}", self.id, id)))?;
+        let (tx, rx) = oneshot();
+        handle
+            .tx
+            .send(AgentMsg::GetFactors { reply: tx })
+            .map_err(|_| Error::Gossip(format!("neighbour {id} mailbox closed")))?;
+        rx.recv()
+            .map_err(|_| Error::Gossip(format!("neighbour {id} dropped reply")))
+    }
+
+    fn push_neighbour(&self, id: BlockId, u: DenseMatrix, w: DenseMatrix) -> Result<()> {
+        let handle = self
+            .neighbours
+            .get(&id)
+            .ok_or_else(|| Error::Gossip(format!("{} has no neighbour {}", self.id, id)))?;
+        let (tx, rx) = oneshot();
+        handle
+            .tx
+            .send(AgentMsg::PutFactors { u, w, ack: tx })
+            .map_err(|_| Error::Gossip(format!("neighbour {id} mailbox closed")))?;
+        rx.recv()
+            .map_err(|_| Error::Gossip(format!("neighbour {id} dropped ack")))
+    }
+
+    /// Anchor one structure update (steps 2–4 of the module docs).
+    fn execute(&mut self, structure: Structure, params: StructureParams) -> Result<()> {
+        let roles = structure.roles();
+        debug_assert_eq!(roles.anchor, self.id, "driver must dispatch to the anchor");
+        let (uh, wh) = self.pull_neighbour(roles.horizontal)?;
+        let (uv, wv) = self.pull_neighbour(roles.vertical)?;
+
+        let factors = [(&self.u, &self.w), (&uh, &wh), (&uv, &wv)];
+        let [(ua2, wa2), (uh2, wh2), (uv2, wv2)] =
+            self.engine.structure_update(&roles, factors, &params)?;
+
+        self.u = ua2;
+        self.w = wa2;
+        self.push_neighbour(roles.horizontal, uh2, wh2)?;
+        self.push_neighbour(roles.vertical, uv2, wv2)?;
+        Ok(())
+    }
+
+    /// Run the mailbox loop until `Shutdown` (or all senders dropped).
+    pub fn run(mut self) {
+        while let Ok(msg) = self.rx.recv() {
+            match msg {
+                AgentMsg::GetFactors { reply } => {
+                    let _ = reply.send((self.u.clone(), self.w.clone()));
+                }
+                AgentMsg::PutFactors { u, w, ack } => {
+                    self.u = u;
+                    self.w = w;
+                    let _ = ack.send(());
+                }
+                AgentMsg::Execute { structure, params, done } => {
+                    let result = self.execute(structure, params);
+                    let _ = done.send(result);
+                }
+                AgentMsg::GetCost { lambda, reply } => {
+                    let cost = self.engine.block_cost(self.id, &self.u, &self.w, lambda);
+                    let _ = reply.send(cost);
+                }
+                AgentMsg::Shutdown { reply } => {
+                    let _ = reply.send((self.id, self.u, self.w));
+                    return;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! The decentralized gossip runtime (L3's system contribution).
+//!
+//! [`GossipNetwork`] spawns one [`agent`](agent::Agent) thread per
+//! block, wired so each agent can only message its grid neighbours.
+//! [`ParallelDriver`] drives training through the network: it asks
+//! [`ScheduleBuilder`] for conflict-free rounds (the paper's §6 future
+//! work) and dispatches each round's structures to their anchor agents
+//! concurrently, at most `workers` in flight. With `workers = 1` the
+//! network degenerates to exactly the paper's sequential Algorithm 1
+//! dispatch order — the `single_worker_matches_multi_worker` test pins
+//! that worker count changes wall-clock, not math.
+
+mod agent;
+mod scheduler;
+
+pub use agent::{oneshot, AgentHandle, AgentMsg};
+pub use scheduler::{conflicts, ScheduleBuilder};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::data::CooMatrix;
+use crate::engine::{Engine, StructureParams};
+use crate::grid::{BlockId, BlockPartition, GridSpec, NormalizationCoeffs, Structure};
+use crate::metrics::{CostCurve, Timer};
+use crate::model::FactorState;
+use crate::solver::{ConvergenceCriterion, ConvergenceVerdict, SolverConfig, SolverReport};
+use crate::{Error, Result};
+
+/// A spawned set of block agents.
+pub struct GossipNetwork {
+    spec: GridSpec,
+    handles: Vec<AgentHandle>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl GossipNetwork {
+    /// Spawn one agent per block, distributing `state`'s factors.
+    /// `engine` must already be prepared.
+    pub fn spawn(spec: GridSpec, engine: Arc<dyn Engine>, mut state: FactorState) -> Self {
+        // First create every mailbox so neighbour handles can be wired.
+        let mut senders = Vec::with_capacity(spec.num_blocks());
+        let mut receivers = Vec::with_capacity(spec.num_blocks());
+        for id in spec.blocks() {
+            let (tx, rx) = std::sync::mpsc::channel();
+            senders.push(AgentHandle { id, tx });
+            receivers.push(rx);
+        }
+        let handle_of = |id: BlockId| senders[id.index(spec.q)].clone();
+
+        let mut threads = Vec::with_capacity(spec.num_blocks());
+        for (id, rx) in spec.blocks().zip(receivers) {
+            let mut neighbours = HashMap::new();
+            let BlockId { i, j } = id;
+            if i > 0 {
+                neighbours.insert(BlockId::new(i - 1, j), handle_of(BlockId::new(i - 1, j)));
+            }
+            if i + 1 < spec.p {
+                neighbours.insert(BlockId::new(i + 1, j), handle_of(BlockId::new(i + 1, j)));
+            }
+            if j > 0 {
+                neighbours.insert(BlockId::new(i, j - 1), handle_of(BlockId::new(i, j - 1)));
+            }
+            if j + 1 < spec.q {
+                neighbours.insert(BlockId::new(i, j + 1), handle_of(BlockId::new(i, j + 1)));
+            }
+            let (u, w) = state.take_block(id);
+            let agent = agent::Agent::new(id, u, w, engine.clone(), neighbours, rx);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("gridmc-agent-{}-{}", id.i, id.j))
+                    .spawn(move || agent.run())
+                    .expect("spawn agent thread"),
+            );
+        }
+        Self { spec, handles: senders, threads }
+    }
+
+    fn handle(&self, id: BlockId) -> &AgentHandle {
+        &self.handles[id.index(self.spec.q)]
+    }
+
+    /// Dispatch one structure to its anchor and await completion.
+    pub fn execute_structure(
+        &self,
+        structure: Structure,
+        params: StructureParams,
+    ) -> Result<()> {
+        self.execute_batch(&[structure], &[params])
+    }
+
+    /// Dispatch up to `batch.len()` *non-conflicting* structures
+    /// concurrently; await all acks. Callers must guarantee the batch
+    /// is conflict-free (the scheduler does).
+    pub fn execute_batch(
+        &self,
+        batch: &[Structure],
+        params: &[StructureParams],
+    ) -> Result<()> {
+        debug_assert_eq!(batch.len(), params.len());
+        let mut pending = Vec::with_capacity(batch.len());
+        for (s, p) in batch.iter().zip(params) {
+            let anchor = s.roles().anchor;
+            let (tx, rx) = oneshot();
+            self.handle(anchor)
+                .tx
+                .send(AgentMsg::Execute { structure: *s, params: *p, done: tx })
+                .map_err(|_| Error::Gossip(format!("anchor {anchor} mailbox closed")))?;
+            pending.push((anchor, rx));
+        }
+        for (anchor, rx) in pending {
+            rx.recv()
+                .map_err(|_| Error::Gossip(format!("anchor {anchor} died")))??;
+        }
+        Ok(())
+    }
+
+    /// Total cost Σ blocks (leader-side convergence check — factor
+    /// matrices stay with the agents, only scalars travel).
+    pub fn total_cost(&self, lambda: f32) -> Result<f64> {
+        let mut pending = Vec::with_capacity(self.handles.len());
+        for h in &self.handles {
+            let (tx, rx) = oneshot();
+            h.tx.send(AgentMsg::GetCost { lambda, reply: tx })
+                .map_err(|_| Error::Gossip(format!("agent {} mailbox closed", h.id)))?;
+            pending.push(rx);
+        }
+        let mut acc = 0.0;
+        for rx in pending {
+            acc += rx.recv().map_err(|_| Error::Gossip("agent died".into()))??;
+        }
+        Ok(acc)
+    }
+
+    /// Stop all agents and collect the final factor state (the paper's
+    /// "final culmination" hand-off).
+    pub fn shutdown(self) -> Result<FactorState> {
+        let mut state = FactorState::init_random(self.spec, 0);
+        for h in &self.handles {
+            let (tx, rx) = oneshot();
+            h.tx.send(AgentMsg::Shutdown { reply: tx })
+                .map_err(|_| Error::Gossip(format!("agent {} mailbox closed", h.id)))?;
+            let (id, u, w) = rx.recv().map_err(|_| Error::Gossip("agent died".into()))?;
+            state.set_u(id, u);
+            state.set_w(id, w);
+        }
+        for t in self.threads {
+            let _ = t.join();
+        }
+        Ok(state)
+    }
+}
+
+/// Parallel gossip driver: Algorithm 1 with conflict-free rounds
+/// dispatched concurrently over the agent network.
+#[derive(Debug, Clone)]
+pub struct ParallelDriver {
+    spec: GridSpec,
+    cfg: SolverConfig,
+    /// Maximum structures in flight at once (compute parallelism).
+    pub workers: usize,
+}
+
+impl ParallelDriver {
+    pub fn new(spec: GridSpec, cfg: SolverConfig, workers: usize) -> Self {
+        Self { spec, cfg, workers: workers.max(1) }
+    }
+
+    /// Train; returns the report and the final (culminated) state.
+    ///
+    /// `engine` is prepared here, then shared immutably with all agents.
+    pub fn run(
+        &self,
+        mut engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        self.spec.validate()?;
+        let partition = BlockPartition::new(self.spec, train)?;
+        engine.prepare(&partition)?;
+        let engine: Arc<dyn Engine> = Arc::from(engine);
+        let engine_name = engine.name().to_string();
+
+        let cfg = &self.cfg;
+        let spec = self.spec;
+        let state = FactorState::init_random(spec, cfg.seed);
+        let network = GossipNetwork::spawn(spec, engine, state);
+        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+        let mut schedule = ScheduleBuilder::new(spec, cfg.seed ^ 0x90551b);
+        let mut criterion =
+            ConvergenceCriterion::new(cfg.abs_tol, cfg.rel_tol, cfg.patience);
+        let mut curve = CostCurve::default();
+        let timer = Timer::start();
+
+        curve.push(0, network.total_cost(cfg.lambda)?);
+
+        let mut iters = 0u64;
+        let mut converged = false;
+        let mut next_eval = cfg.eval_every;
+        'training: while iters < cfg.max_iters {
+            for round in schedule.epoch() {
+                if iters >= cfg.max_iters {
+                    break;
+                }
+                // Batch semantics: every update in a round shares γ_t.
+                let gamma = cfg.schedule.gamma(iters);
+                let take = round.len().min((cfg.max_iters - iters) as usize);
+                let round = &round[..take];
+                let params: Vec<StructureParams> = round
+                    .iter()
+                    .map(|s| {
+                        let roles = s.roles();
+                        if cfg.normalize {
+                            StructureParams::build(cfg.rho, cfg.lambda, gamma, &coeffs, &roles)
+                        } else {
+                            StructureParams::unnormalized(cfg.rho, cfg.lambda, gamma)
+                        }
+                    })
+                    .collect();
+                // Dispatch at most `workers` structures at a time.
+                for (chunk_s, chunk_p) in
+                    round.chunks(self.workers).zip(params.chunks(self.workers))
+                {
+                    network.execute_batch(chunk_s, chunk_p)?;
+                }
+                iters += round.len() as u64;
+
+                if iters >= next_eval {
+                    next_eval += cfg.eval_every;
+                    let cost = network.total_cost(cfg.lambda)?;
+                    curve.push(iters, cost);
+                    match criterion.update(cost) {
+                        ConvergenceVerdict::Continue => {}
+                        ConvergenceVerdict::Converged => {
+                            converged = true;
+                            break 'training;
+                        }
+                        ConvergenceVerdict::Diverged => {
+                            // Tear the network down before surfacing.
+                            let _ = network.shutdown();
+                            return Err(Error::Diverged { iter: iters, cost });
+                        }
+                    }
+                }
+            }
+        }
+
+        let final_cost = network.total_cost(cfg.lambda)?;
+        if curve.last().map(|(it, _)| it) != Some(iters) {
+            curve.push(iters, final_cost);
+        }
+        let state = network.shutdown()?;
+        Ok((
+            SolverReport {
+                curve,
+                final_cost,
+                iters,
+                converged,
+                wall: timer.elapsed(),
+                engine: engine_name,
+            },
+            state,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+    use crate::engine::NativeEngine;
+    use crate::solver::StepSchedule;
+
+    fn problem() -> (GridSpec, CooMatrix, CooMatrix) {
+        let spec = GridSpec::new(40, 40, 4, 4, 3);
+        let d = SyntheticConfig {
+            m: 40,
+            n: 40,
+            rank: 3,
+            train_fraction: 0.5,
+            test_fraction: 0.2,
+            ..Default::default()
+        }
+        .generate();
+        (spec, d.data.train, d.data.test)
+    }
+
+    fn cfg() -> SolverConfig {
+        SolverConfig {
+            max_iters: 4000,
+            eval_every: 800,
+            rho: 10.0,
+            schedule: StepSchedule { a: 2e-2, b: 1e-5 },
+            abs_tol: 1e-9,
+            rel_tol: 1e-6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn parallel_driver_reduces_cost() {
+        let (spec, train, _) = problem();
+        let driver = ParallelDriver::new(spec, cfg(), 4);
+        let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+        assert!(
+            report.curve.orders_of_reduction() > 2.0,
+            "orders {}",
+            report.curve.orders_of_reduction()
+        );
+    }
+
+    #[test]
+    fn parallel_learns_test_set() {
+        let (spec, train, test) = problem();
+        let driver = ParallelDriver::new(spec, cfg(), 4);
+        let (_, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+        let rmse = state.rmse(&test);
+        assert!(rmse < 0.5, "rmse {rmse}");
+    }
+
+    #[test]
+    fn single_worker_matches_multi_worker() {
+        // Same seed → identical schedule; updates within a round are
+        // disjoint, so worker count must not change the math at all.
+        let (spec, train, _) = problem();
+        let (r1, s1) = ParallelDriver::new(spec, cfg(), 1)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap();
+        let (r4, s4) = ParallelDriver::new(spec, cfg(), 4)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap();
+        assert_eq!(r1.iters, r4.iters);
+        assert_eq!(r1.final_cost, r4.final_cost);
+        let id = crate::grid::BlockId::new(1, 2);
+        assert_eq!(s1.u(id), s4.u(id));
+    }
+
+    #[test]
+    fn respects_max_iters_mid_round() {
+        let (spec, train, _) = problem();
+        let mut c = cfg();
+        c.max_iters = 7; // smaller than one epoch
+        let driver = ParallelDriver::new(spec, c, 2);
+        let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+        assert_eq!(report.iters, 7);
+    }
+
+    #[test]
+    fn network_cost_matches_direct_sum() {
+        // Leader-side cost via messages equals the engine-side sum.
+        let (spec, train, _) = problem();
+        let partition = BlockPartition::new(spec, &train).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&partition).unwrap();
+        let engine: Arc<dyn Engine> = Arc::new(engine);
+        let state = FactorState::init_random(spec, 1);
+        let direct = crate::solver::total_cost(engine.as_ref(), &state, 1e-9).unwrap();
+        let network = GossipNetwork::spawn(spec, engine, state);
+        let via_network = network.total_cost(1e-9).unwrap();
+        network.shutdown().unwrap();
+        assert!((direct - via_network).abs() < 1e-9 * direct.abs().max(1.0));
+    }
+}

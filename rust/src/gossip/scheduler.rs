@@ -1,0 +1,154 @@
+//! Conflict-free parallel scheduling of gossip structures.
+//!
+//! The paper's §6 closes with: "Exploiting the fact that many of the
+//! S^struct do not contain any overlapping blocks, and hence can be
+//! processed in parallel, will be a topic of future research." This
+//! module is that future work, built as a first-class feature.
+//!
+//! Two structures *conflict* when they share a block (their updates
+//! would race on that block's factors). [`ScheduleBuilder`] greedily
+//! colours the conflict graph into *rounds* — sets of pairwise
+//! non-overlapping structures — with a seeded shuffle so that, over
+//! epochs, the schedule remains stochastic like Algorithm 1's uniform
+//! sampling while each round is safe to dispatch concurrently.
+
+use crate::grid::{GridSpec, Structure};
+use crate::util::Rng;
+
+/// Builds conflict-free rounds of structures for a grid.
+#[derive(Debug, Clone)]
+pub struct ScheduleBuilder {
+    spec: GridSpec,
+    rng: Rng,
+}
+
+impl ScheduleBuilder {
+    pub fn new(spec: GridSpec, seed: u64) -> Self {
+        Self { spec, rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// One epoch: every valid structure exactly once, packed into
+    /// conflict-free rounds. Structure order is reshuffled per call, so
+    /// consecutive epochs differ (stochasticity across epochs).
+    pub fn epoch(&mut self) -> Vec<Vec<Structure>> {
+        let mut structures = Structure::enumerate(self.spec.p, self.spec.q);
+        self.rng.shuffle(&mut structures);
+        pack_rounds(&structures, self.spec.q)
+    }
+
+    /// A single maximal conflict-free round (for benches that want a
+    /// fixed-size parallel batch rather than a full epoch).
+    pub fn one_round(&mut self) -> Vec<Structure> {
+        self.epoch().into_iter().next().unwrap_or_default()
+    }
+
+    /// Upper bound on parallelism: ⌊p·q / 3⌋ blocks-per-structure bound.
+    pub fn max_parallelism(&self) -> usize {
+        (self.spec.p * self.spec.q) / 3
+    }
+}
+
+/// Greedy first-fit packing of `structures` into conflict-free rounds.
+fn pack_rounds(structures: &[Structure], q: usize) -> Vec<Vec<Structure>> {
+    let mut rounds: Vec<(Vec<Structure>, std::collections::HashSet<usize>)> = Vec::new();
+    for &s in structures {
+        let blocks: Vec<usize> = s.blocks().iter().map(|b| b.index(q)).collect();
+        let slot = rounds
+            .iter_mut()
+            .find(|(_, used)| blocks.iter().all(|b| !used.contains(b)));
+        match slot {
+            Some((round, used)) => {
+                round.push(s);
+                used.extend(blocks);
+            }
+            None => {
+                rounds.push((vec![s], blocks.into_iter().collect()));
+            }
+        }
+    }
+    rounds.into_iter().map(|(r, _)| r).collect()
+}
+
+/// Do two structures share a block? (Exposed for tests/benches.)
+pub fn conflicts(a: &Structure, b: &Structure) -> bool {
+    let bb = b.blocks();
+    a.blocks().iter().any(|x| bb.contains(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(p: usize, q: usize) -> GridSpec {
+        GridSpec::new(p * 10, q * 10, p, q, 3)
+    }
+
+    #[test]
+    fn rounds_are_conflict_free() {
+        let mut b = ScheduleBuilder::new(spec(6, 5), 1);
+        for round in b.epoch() {
+            for i in 0..round.len() {
+                for j in i + 1..round.len() {
+                    assert!(
+                        !conflicts(&round[i], &round[j]),
+                        "{} conflicts {}",
+                        round[i],
+                        round[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_covers_every_structure_once() {
+        let mut b = ScheduleBuilder::new(spec(5, 5), 2);
+        let rounds = b.epoch();
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0;
+        for round in &rounds {
+            for s in round {
+                assert!(seen.insert(*s), "duplicate {s}");
+                total += 1;
+            }
+        }
+        assert_eq!(total, 2 * 4 * 4);
+    }
+
+    #[test]
+    fn epochs_differ_but_seeds_reproduce() {
+        let mut a = ScheduleBuilder::new(spec(4, 4), 3);
+        let e1 = a.epoch();
+        let e2 = a.epoch();
+        assert_ne!(e1, e2, "consecutive epochs should reshuffle");
+        let mut b = ScheduleBuilder::new(spec(4, 4), 3);
+        assert_eq!(b.epoch(), e1, "same seed must reproduce");
+    }
+
+    #[test]
+    fn parallelism_grows_with_grid() {
+        // A 6×6 grid must admit rounds with several concurrent
+        // structures (≥ 3 in the first round of any shuffle).
+        let mut b = ScheduleBuilder::new(spec(6, 6), 4);
+        let round = b.one_round();
+        assert!(round.len() >= 3, "round size {}", round.len());
+        assert!(b.max_parallelism() >= round.len());
+    }
+
+    #[test]
+    fn two_by_two_grid_is_fully_sequential() {
+        // 2×2: every structure uses 3 of the 4 blocks → all rounds are
+        // singletons.
+        let mut b = ScheduleBuilder::new(spec(2, 2), 5);
+        for round in b.epoch() {
+            assert_eq!(round.len(), 1);
+        }
+    }
+
+    #[test]
+    fn conflict_predicate() {
+        assert!(conflicts(&Structure::upper(0, 0), &Structure::upper(0, 1)));
+        // upper(0,0) = {(0,0),(0,1),(1,0)}; upper(2,2) = {(2,2),(2,3),(3,2)}.
+        assert!(!conflicts(&Structure::upper(0, 0), &Structure::upper(2, 2)));
+    }
+}

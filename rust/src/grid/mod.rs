@@ -1,0 +1,183 @@
+//! Grid topology: the paper's two-dimensional decomposition (§2).
+//!
+//! The `m × n` input matrix is decomposed into a `p × q` rectangular
+//! grid of blocks. [`GridSpec`] owns the geometry (block row/column
+//! ranges, canonical padded block shape), [`Structure`] enumerates the
+//! paper's `S^upper` / `S^lower` gossip structures with their Figure-2
+//! normalization coefficients, [`StructureSampler`] implements line 3
+//! of Algorithm 1, and [`partition`] splits observed entries into
+//! per-block storage.
+
+mod partition;
+mod sampler;
+mod structure;
+
+pub use partition::BlockPartition;
+pub use sampler::StructureSampler;
+pub use structure::{NormalizationCoeffs, Structure, StructureKind, StructureRoles};
+
+use crate::{Error, Result};
+
+/// Identifies one block by its grid row `i ∈ [0, p)` and column `j ∈ [0, q)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId {
+    pub i: usize,
+    pub j: usize,
+}
+
+impl BlockId {
+    pub fn new(i: usize, j: usize) -> Self {
+        Self { i, j }
+    }
+
+    /// Row-major linear index within a `p × q` grid.
+    #[inline]
+    pub fn index(self, q: usize) -> usize {
+        self.i * q + self.j
+    }
+}
+
+impl std::fmt::Display for BlockId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{})", self.i, self.j)
+    }
+}
+
+/// Geometry of a `p × q` decomposition of an `m × n` matrix with rank `r`
+/// factors per block.
+///
+/// Blocks are laid out with the *canonical padded shape*
+/// `mb = ceil(m/p)`, `nb = ceil(n/q)`: block `(i, j)` covers the true
+/// rows `[i·mb, min((i+1)·mb, m))` and is zero-mask padded up to
+/// `(mb, nb)` so that every block (and therefore every HLO artifact)
+/// has the same shape (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridSpec {
+    pub m: usize,
+    pub n: usize,
+    pub p: usize,
+    pub q: usize,
+    pub rank: usize,
+}
+
+impl GridSpec {
+    pub fn new(m: usize, n: usize, p: usize, q: usize, rank: usize) -> Self {
+        Self { m, n, p, q, rank }
+    }
+
+    /// Validate that the decomposition is well-formed and supports at
+    /// least one gossip structure (requires `p ≥ 2` and `q ≥ 2`).
+    pub fn validate(&self) -> Result<()> {
+        if self.m == 0 || self.n == 0 || self.rank == 0 {
+            return Err(Error::Config("m, n, rank must be positive".into()));
+        }
+        if self.p < 2 || self.q < 2 {
+            return Err(Error::Config(format!(
+                "grid {}x{} has no gossip structures (need p,q >= 2)",
+                self.p, self.q
+            )));
+        }
+        if self.p > self.m || self.q > self.n {
+            return Err(Error::Config(format!(
+                "grid {}x{} finer than matrix {}x{}",
+                self.p, self.q, self.m, self.n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Canonical padded block shape `(mb, nb)`.
+    pub fn block_shape(&self) -> (usize, usize) {
+        (self.m.div_ceil(self.p), self.n.div_ceil(self.q))
+    }
+
+    /// True (unpadded) shape of block `(i, j)` — smaller for ragged
+    /// last-row/last-column blocks.
+    pub fn true_block_shape(&self, id: BlockId) -> (usize, usize) {
+        let (mb, nb) = self.block_shape();
+        let h = (self.m - id.i * mb).min(mb);
+        let w = (self.n - id.j * nb).min(nb);
+        (h, w)
+    }
+
+    /// Origin `(row, col)` of block `(i, j)` in the full matrix.
+    pub fn block_origin(&self, id: BlockId) -> (usize, usize) {
+        let (mb, nb) = self.block_shape();
+        (id.i * mb, id.j * nb)
+    }
+
+    /// Which block the full-matrix cell `(row, col)` falls in.
+    pub fn block_of(&self, row: usize, col: usize) -> BlockId {
+        let (mb, nb) = self.block_shape();
+        BlockId::new((row / mb).min(self.p - 1), (col / nb).min(self.q - 1))
+    }
+
+    /// Total number of blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.p * self.q
+    }
+
+    /// Iterate over all block ids, row-major.
+    pub fn blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        let q = self.q;
+        (0..self.p * self.q).map(move |k| BlockId::new(k / q, k % q))
+    }
+
+    /// All valid gossip structures: `(p−1)(q−1)` uppers + `(p−1)(q−1)`
+    /// lowers.
+    pub fn structures(&self) -> Vec<Structure> {
+        Structure::enumerate(self.p, self.q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_shape_divides_exactly() {
+        let g = GridSpec::new(500, 600, 5, 6, 5);
+        assert_eq!(g.block_shape(), (100, 100)); // paper Figure 1
+        assert_eq!(g.true_block_shape(BlockId::new(4, 5)), (100, 100));
+    }
+
+    #[test]
+    fn block_shape_ragged() {
+        let g = GridSpec::new(500, 500, 6, 6, 5);
+        assert_eq!(g.block_shape(), (84, 84));
+        // Last block covers rows 420..500 → 80 true rows.
+        assert_eq!(g.true_block_shape(BlockId::new(5, 5)), (80, 80));
+        assert_eq!(g.block_origin(BlockId::new(5, 0)), (420, 0));
+    }
+
+    #[test]
+    fn block_of_roundtrip() {
+        let g = GridSpec::new(100, 90, 4, 3, 5);
+        for id in g.blocks() {
+            let (r0, c0) = g.block_origin(id);
+            assert_eq!(g.block_of(r0, c0), id);
+            let (h, w) = g.true_block_shape(id);
+            assert_eq!(g.block_of(r0 + h - 1, c0 + w - 1), id);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate() {
+        assert!(GridSpec::new(10, 10, 1, 2, 2).validate().is_err());
+        assert!(GridSpec::new(10, 10, 2, 2, 0).validate().is_err());
+        assert!(GridSpec::new(10, 10, 11, 2, 2).validate().is_err());
+        assert!(GridSpec::new(10, 10, 2, 2, 2).validate().is_ok());
+    }
+
+    #[test]
+    fn structure_count_matches_formula() {
+        let g = GridSpec::new(60, 50, 6, 5, 4);
+        assert_eq!(g.structures().len(), 2 * 5 * 4);
+    }
+
+    #[test]
+    fn block_index_row_major() {
+        let id = BlockId::new(2, 3);
+        assert_eq!(id.index(5), 13);
+    }
+}

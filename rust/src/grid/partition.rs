@@ -1,0 +1,146 @@
+//! Partitioning observed entries into per-block storage.
+//!
+//! [`BlockPartition`] routes a [`CooMatrix`](crate::data::CooMatrix) of
+//! observed entries into one COO per grid block (rebased to block-local
+//! coordinates) in a single pass, and materializes dense `(X, M)` pairs
+//! or CSR views on demand — the dense engines want padded dense blocks,
+//! the sparse native engine wants CSR.
+
+use crate::data::{CooMatrix, CsrMatrix, DenseMatrix};
+use crate::{Error, Result};
+
+use super::{BlockId, GridSpec};
+
+/// Observed entries split per block.
+#[derive(Debug, Clone)]
+pub struct BlockPartition {
+    spec: GridSpec,
+    /// Row-major `p × q` vector of block-local COOs (padded-shape local
+    /// coordinates, i.e. indices relative to the block origin).
+    blocks: Vec<CooMatrix>,
+}
+
+impl BlockPartition {
+    /// Route `entries` (full-matrix coordinates) into blocks.
+    pub fn new(spec: GridSpec, entries: &CooMatrix) -> Result<Self> {
+        spec.validate()?;
+        if entries.rows() != spec.m || entries.cols() != spec.n {
+            return Err(Error::Shape(format!(
+                "partition: entries {}x{} vs grid matrix {}x{}",
+                entries.rows(),
+                entries.cols(),
+                spec.m,
+                spec.n
+            )));
+        }
+        let (mb, nb) = spec.block_shape();
+        let mut blocks: Vec<CooMatrix> =
+            (0..spec.num_blocks()).map(|_| CooMatrix::new(mb, nb)).collect();
+        for (i, j, v) in entries.iter() {
+            let id = spec.block_of(i as usize, j as usize);
+            let (r0, c0) = spec.block_origin(id);
+            blocks[id.index(spec.q)].push(i - r0 as u32, j - c0 as u32, v)?;
+        }
+        Ok(Self { spec, blocks })
+    }
+
+    pub fn spec(&self) -> &GridSpec {
+        &self.spec
+    }
+
+    /// Block-local observed entries of one block.
+    pub fn coo(&self, id: BlockId) -> &CooMatrix {
+        &self.blocks[id.index(self.spec.q)]
+    }
+
+    /// Materialize the padded dense `(X, M)` pair of one block.
+    pub fn dense_block(&self, id: BlockId) -> (DenseMatrix, DenseMatrix) {
+        let (mb, nb) = self.spec.block_shape();
+        self.coo(id).to_dense_block(0, 0, mb, nb)
+    }
+
+    /// CSR view of one block's observed entries.
+    pub fn csr_block(&self, id: BlockId) -> CsrMatrix {
+        self.coo(id).to_csr()
+    }
+
+    /// Total observed entries across all blocks.
+    pub fn total_nnz(&self) -> usize {
+        self.blocks.iter().map(|b| b.nnz()).sum()
+    }
+
+    /// Observed-entry count per block (row-major) — used by the
+    /// scheduler for load estimates and by tests.
+    pub fn nnz_per_block(&self) -> Vec<usize> {
+        self.blocks.iter().map(|b| b.nnz()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+
+    fn sample_spec() -> GridSpec {
+        GridSpec::new(10, 8, 2, 2, 2)
+    }
+
+    #[test]
+    fn routes_every_entry_once() {
+        let entries = CooMatrix::from_triples(
+            10,
+            8,
+            [(0u32, 0u32, 1.0f32), (4, 3, 2.0), (5, 0, 3.0), (9, 7, 4.0), (5, 4, 5.0)],
+        )
+        .unwrap();
+        let part = BlockPartition::new(sample_spec(), &entries).unwrap();
+        assert_eq!(part.total_nnz(), 5);
+        // (0,0) and (4,3) in block (0,0); (5,0) in (1,0); (9,7), (5,4) in (1,1).
+        assert_eq!(part.nnz_per_block(), vec![2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn local_coordinates_rebased() {
+        let entries =
+            CooMatrix::from_triples(10, 8, [(9u32, 7u32, 4.0f32)]).unwrap();
+        let part = BlockPartition::new(sample_spec(), &entries).unwrap();
+        let coo = part.coo(BlockId::new(1, 1));
+        let t: Vec<_> = coo.iter().collect();
+        assert_eq!(t, vec![(4, 3, 4.0)]); // (9-5, 7-4)
+    }
+
+    #[test]
+    fn dense_block_shape_is_padded() {
+        // 10×8 over 3×3 → padded block 4×3; ragged bottom row (2 true rows).
+        let spec = GridSpec::new(10, 8, 3, 3, 2);
+        let entries = CooMatrix::from_triples(10, 8, [(9u32, 0u32, 1.0f32)]).unwrap();
+        let part = BlockPartition::new(spec, &entries).unwrap();
+        let (x, m) = part.dense_block(BlockId::new(2, 0));
+        assert_eq!((x.rows(), x.cols()), (4, 3));
+        // Row 9 is local row 1 in block (2,·) since origin is row 8.
+        assert_eq!(x.get(1, 0), 1.0);
+        assert_eq!(m.get(1, 0), 1.0);
+        assert_eq!(m.get(3, 2), 0.0); // padding stays unobserved
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let entries = CooMatrix::new(9, 8);
+        assert!(BlockPartition::new(sample_spec(), &entries).is_err());
+    }
+
+    #[test]
+    fn partition_conserves_synthetic_mass() {
+        let d = SyntheticConfig { m: 60, n: 50, ..Default::default() }.generate();
+        let spec = GridSpec::new(60, 50, 4, 5, 5);
+        let part = BlockPartition::new(spec, &d.data.train).unwrap();
+        assert_eq!(part.total_nnz(), d.data.train.nnz());
+        // Sum of dense masks equals nnz.
+        let mut mask_sum = 0.0;
+        for id in spec.blocks() {
+            let (_, m) = part.dense_block(id);
+            mask_sum += m.as_slice().iter().sum::<f32>();
+        }
+        assert_eq!(mask_sum as usize, d.data.train.nnz());
+    }
+}

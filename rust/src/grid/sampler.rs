@@ -1,0 +1,137 @@
+//! Structure sampling — line 3 of the paper's Algorithm 1.
+//!
+//! `S^struct = randomly pick a valid structure`: uniform over the
+//! `2(p−1)(q−1)` valid structures, seeded for reproducibility. The
+//! sampler also exposes empirical selection-frequency counting, which
+//! the `fig2_frequencies` bench uses to confirm the analytic
+//! [`NormalizationCoeffs`](super::NormalizationCoeffs) match what
+//! uniform sampling actually produces.
+
+use crate::util::Rng;
+
+use super::{Structure, StructureKind};
+
+/// Seeded uniform sampler over the valid structures of a `p × q` grid.
+#[derive(Debug, Clone)]
+pub struct StructureSampler {
+    structures: Vec<Structure>,
+    rng: Rng,
+}
+
+impl StructureSampler {
+    pub fn new(p: usize, q: usize, seed: u64) -> Self {
+        Self {
+            structures: Structure::enumerate(p, q),
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// Number of valid structures.
+    pub fn len(&self) -> usize {
+        self.structures.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.structures.is_empty()
+    }
+
+    /// All valid structures (enumeration order: uppers then lowers).
+    pub fn structures(&self) -> &[Structure] {
+        &self.structures
+    }
+
+    /// Draw the next structure uniformly.
+    pub fn sample(&mut self) -> Structure {
+        let k = self.rng.gen_range(self.structures.len());
+        self.structures[k]
+    }
+
+    /// Draw `count` structures and tally how often each block was
+    /// touched through its f term (empirical Figure-2c).
+    pub fn empirical_f_counts(&mut self, p: usize, q: usize, count: usize) -> Vec<u64> {
+        let mut tally = vec![0u64; p * q];
+        for _ in 0..count {
+            let s = self.sample();
+            for b in s.blocks() {
+                tally[b.index(q)] += 1;
+            }
+        }
+        tally
+    }
+}
+
+impl std::fmt::Display for StructureKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StructureKind::Upper => write!(f, "upper"),
+            StructureKind::Lower => write!(f, "lower"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::NormalizationCoeffs;
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = StructureSampler::new(5, 5, 9);
+        let mut b = StructureSampler::new(5, 5, 9);
+        for _ in 0..100 {
+            assert_eq!(a.sample(), b.sample());
+        }
+    }
+
+    #[test]
+    fn samples_are_valid_and_cover_all() {
+        let mut s = StructureSampler::new(4, 4, 1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..5000 {
+            let st = s.sample();
+            assert!(st.is_valid(4, 4));
+            seen.insert(st);
+        }
+        // 2·3·3 = 18 structures; 5000 draws must hit all of them.
+        assert_eq!(seen.len(), 18);
+    }
+
+    #[test]
+    fn uniformity_chi_square() {
+        // Each of the 18 structures of a 4×4 grid should get ≈ n/18
+        // draws; loose 3-sigma band per cell.
+        let mut s = StructureSampler::new(4, 4, 2);
+        let n = 18_000;
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..n {
+            *counts.entry(s.sample()).or_insert(0u64) += 1;
+        }
+        let expect = n as f64 / 18.0;
+        let sigma = (expect * (1.0 - 1.0 / 18.0)).sqrt();
+        for (st, c) in counts {
+            assert!(
+                (c as f64 - expect).abs() < 4.0 * sigma,
+                "{st}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_matches_analytic_f_counts() {
+        // Empirical per-block selection frequency ∝ analytic count_f.
+        let (p, q) = (6, 5);
+        let mut s = StructureSampler::new(p, q, 3);
+        let n = 40_000;
+        let tally = s.empirical_f_counts(p, q, n);
+        let analytic = NormalizationCoeffs::new(p, q).f_block_counts();
+        let n_struct = (2 * (p - 1) * (q - 1)) as f64;
+        for idx in 0..p * q {
+            let want = n as f64 * analytic[idx] as f64 / n_struct;
+            let got = tally[idx] as f64;
+            assert!(
+                (got - want).abs() < 5.0 * want.sqrt().max(5.0),
+                "block {idx}: got {got}, want {want}"
+            );
+        }
+    }
+}

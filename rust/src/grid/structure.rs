@@ -1,0 +1,417 @@
+//! Gossip structures `S^upper` / `S^lower` and the Figure-2
+//! normalization coefficients.
+//!
+//! A structure is an "L" of three blocks: a *pivot* `(i,j)` plus a
+//! horizontal and a vertical neighbour (paper §2, Figure 1):
+//!
+//! ```text
+//!   S^upper pivot (i,j):        S^lower pivot (i,j):
+//!     (i,j)──(i,j+1)               (i-1,j)
+//!       │                             │
+//!     (i+1,j)                (i,j-1)──(i,j)
+//! ```
+//!
+//! Both contain exactly one horizontal grid edge (its endpoints' `U`
+//! factors are pulled together — the `d^U` term) and one vertical edge
+//! (`W` consensus — `d^W`), sharing the *anchor* block. The L2 HLO graph
+//! takes the three blocks in anchor/horizontal/vertical order, so one
+//! artifact serves both kinds ([`Structure::roles`]).
+//!
+//! **Normalization (paper §4, Figure 2).** Different blocks appear in
+//! different numbers of structures, so uniform structure sampling would
+//! over-represent interior blocks. The paper multiplies each term by
+//! the inverse of its selection frequency. [`NormalizationCoeffs`]
+//! computes the exact combinatorial counts by enumeration:
+//! `count_f[b]` = number of structures containing block `b`;
+//! `count_u[e]` / `count_w[e]` = number of structures whose U/W
+//! consensus edge is `e`. The per-term coefficients fed to the update
+//! are the inverses. Unit tests pin these against the paper's printed
+//! 6×5 matrices.
+
+use super::BlockId;
+
+/// Which of the paper's two structure shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StructureKind {
+    Upper,
+    Lower,
+}
+
+/// One gossip structure: a kind plus its pivot block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Structure {
+    pub kind: StructureKind,
+    pub pivot: BlockId,
+}
+
+/// The three blocks of a structure in the role order the L2 graph
+/// expects: anchor (shared by both consensus edges), horizontal
+/// neighbour (U-consensus partner), vertical neighbour (W-consensus
+/// partner).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StructureRoles {
+    pub anchor: BlockId,
+    pub horizontal: BlockId,
+    pub vertical: BlockId,
+}
+
+impl StructureRoles {
+    pub fn blocks(&self) -> [BlockId; 3] {
+        [self.anchor, self.horizontal, self.vertical]
+    }
+
+    /// The U-consensus (horizontal) edge, endpoints in canonical
+    /// (left, right) order.
+    pub fn u_edge(&self) -> (BlockId, BlockId) {
+        let (a, h) = (self.anchor, self.horizontal);
+        if a.j < h.j {
+            (a, h)
+        } else {
+            (h, a)
+        }
+    }
+
+    /// The W-consensus (vertical) edge, endpoints in canonical
+    /// (top, bottom) order.
+    pub fn w_edge(&self) -> (BlockId, BlockId) {
+        let (a, v) = (self.anchor, self.vertical);
+        if a.i < v.i {
+            (a, v)
+        } else {
+            (v, a)
+        }
+    }
+}
+
+impl Structure {
+    pub fn upper(i: usize, j: usize) -> Self {
+        Self { kind: StructureKind::Upper, pivot: BlockId::new(i, j) }
+    }
+
+    pub fn lower(i: usize, j: usize) -> Self {
+        Self { kind: StructureKind::Lower, pivot: BlockId::new(i, j) }
+    }
+
+    /// Is this structure inside a `p × q` grid?
+    pub fn is_valid(&self, p: usize, q: usize) -> bool {
+        let BlockId { i, j } = self.pivot;
+        match self.kind {
+            StructureKind::Upper => i + 1 < p && j + 1 < q,
+            StructureKind::Lower => i >= 1 && j >= 1 && i < p && j < q,
+        }
+    }
+
+    /// The three member blocks in anchor/horizontal/vertical role order.
+    pub fn roles(&self) -> StructureRoles {
+        let BlockId { i, j } = self.pivot;
+        match self.kind {
+            StructureKind::Upper => StructureRoles {
+                anchor: BlockId::new(i, j),
+                horizontal: BlockId::new(i, j + 1),
+                vertical: BlockId::new(i + 1, j),
+            },
+            StructureKind::Lower => StructureRoles {
+                anchor: BlockId::new(i, j),
+                horizontal: BlockId::new(i, j - 1),
+                vertical: BlockId::new(i - 1, j),
+            },
+        }
+    }
+
+    /// Member blocks (unordered convenience accessor).
+    pub fn blocks(&self) -> [BlockId; 3] {
+        self.roles().blocks()
+    }
+
+    /// All valid structures of a `p × q` grid: `2(p−1)(q−1)` of them.
+    pub fn enumerate(p: usize, q: usize) -> Vec<Structure> {
+        let mut out = Vec::with_capacity(2 * (p - 1) * (q - 1));
+        for i in 0..p.saturating_sub(1) {
+            for j in 0..q.saturating_sub(1) {
+                out.push(Structure::upper(i, j));
+            }
+        }
+        for i in 1..p {
+            for j in 1..q {
+                out.push(Structure::lower(i, j));
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Structure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            StructureKind::Upper => "upper",
+            StructureKind::Lower => "lower",
+        };
+        write!(f, "S^{kind}_{}{}", self.pivot.i, self.pivot.j)
+    }
+}
+
+/// Exact selection-frequency counts and their inverse coefficients
+/// (paper Figure 2), computed by enumerating all structures of a grid.
+#[derive(Debug, Clone)]
+pub struct NormalizationCoeffs {
+    p: usize,
+    q: usize,
+    /// `count_f[i·q + j]`: structures containing block `(i,j)` (Fig 2c).
+    count_f: Vec<u32>,
+    /// `count_u[i·(q−1) + j]`: structures whose U-edge is
+    /// `(i,j)-(i,j+1)` (horizontal edges, Fig 2a's per-edge form).
+    count_u: Vec<u32>,
+    /// `count_w[i·q + j]`: structures whose W-edge is `(i,j)-(i+1,j)`
+    /// (vertical edges, Fig 2b's per-edge form).
+    count_w: Vec<u32>,
+}
+
+impl NormalizationCoeffs {
+    pub fn new(p: usize, q: usize) -> Self {
+        let mut count_f = vec![0u32; p * q];
+        let mut count_u = vec![0u32; p * (q - 1)];
+        let mut count_w = vec![0u32; (p - 1) * q];
+        for s in Structure::enumerate(p, q) {
+            let roles = s.roles();
+            for b in roles.blocks() {
+                count_f[b.index(q)] += 1;
+            }
+            let (ul, _) = roles.u_edge();
+            count_u[ul.i * (q - 1) + ul.j] += 1;
+            let (wt, _) = roles.w_edge();
+            count_w[wt.i * q + wt.j] += 1;
+        }
+        Self { p, q, count_f, count_u, count_w }
+    }
+
+    /// Number of structures containing block `b`.
+    pub fn f_count(&self, b: BlockId) -> u32 {
+        self.count_f[b.index(self.q)]
+    }
+
+    /// Number of structures whose U-consensus edge is the horizontal
+    /// edge with left endpoint `left`.
+    pub fn u_edge_count(&self, left: BlockId) -> u32 {
+        self.count_u[left.i * (self.q - 1) + left.j]
+    }
+
+    /// Number of structures whose W-consensus edge is the vertical edge
+    /// with top endpoint `top`.
+    pub fn w_edge_count(&self, top: BlockId) -> u32 {
+        self.count_w[top.i * self.q + top.j]
+    }
+
+    /// Inverse-frequency coefficient for block `b`'s f/λ terms.
+    pub fn f_coeff(&self, b: BlockId) -> f32 {
+        let c = self.f_count(b);
+        if c == 0 {
+            0.0
+        } else {
+            1.0 / c as f32
+        }
+    }
+
+    /// Inverse-frequency coefficient for a structure's U edge.
+    pub fn u_coeff(&self, roles: &StructureRoles) -> f32 {
+        let (left, _) = roles.u_edge();
+        1.0 / self.u_edge_count(left).max(1) as f32
+    }
+
+    /// Inverse-frequency coefficient for a structure's W edge.
+    pub fn w_coeff(&self, roles: &StructureRoles) -> f32 {
+        let (top, _) = roles.w_edge();
+        1.0 / self.w_edge_count(top).max(1) as f32
+    }
+
+    /// Per-block d^U participation counts (what Figure 2a plots): the
+    /// number of structure selections in which block `(i,j)`'s U factor
+    /// receives a consensus gradient.
+    pub fn u_block_counts(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.p * self.q];
+        for i in 0..self.p {
+            for j in 0..self.q - 1 {
+                let c = self.count_u[i * (self.q - 1) + j];
+                out[i * self.q + j] += c; // left endpoint
+                out[i * self.q + j + 1] += c; // right endpoint
+            }
+        }
+        out
+    }
+
+    /// Per-block d^W participation counts (Figure 2b).
+    pub fn w_block_counts(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.p * self.q];
+        for i in 0..self.p - 1 {
+            for j in 0..self.q {
+                let c = self.count_w[i * self.q + j];
+                out[i * self.q + j] += c; // top endpoint
+                out[(i + 1) * self.q + j] += c; // bottom endpoint
+            }
+        }
+        out
+    }
+
+    /// Per-block f participation counts (Figure 2c).
+    pub fn f_block_counts(&self) -> Vec<u32> {
+        self.count_f.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_upper_45_membership() {
+        // Paper Figure 1 highlights S^upper_45 on a 5×6 grid: pivot at
+        // row 4, col 5 in 1-indexed → (3, 4) 0-indexed; members are the
+        // pivot, its right neighbour and its down neighbour.
+        let s = Structure::upper(3, 4);
+        assert!(s.is_valid(5, 6));
+        let blocks = s.blocks();
+        assert_eq!(
+            blocks,
+            [BlockId::new(3, 4), BlockId::new(3, 5), BlockId::new(4, 4)]
+        );
+    }
+
+    #[test]
+    fn figure1_lower_33_membership() {
+        // S^lower_33 → pivot (2,2) 0-indexed; members are the pivot,
+        // its left neighbour and its up neighbour.
+        let s = Structure::lower(2, 2);
+        assert!(s.is_valid(5, 6));
+        assert_eq!(
+            s.blocks(),
+            [BlockId::new(2, 2), BlockId::new(2, 1), BlockId::new(1, 2)]
+        );
+    }
+
+    #[test]
+    fn validity_boundaries() {
+        // Upper needs room right+down; lower needs room left+up.
+        assert!(!Structure::upper(4, 0).is_valid(5, 6));
+        assert!(!Structure::upper(0, 5).is_valid(5, 6));
+        assert!(Structure::upper(0, 0).is_valid(5, 6));
+        assert!(!Structure::lower(0, 1).is_valid(5, 6));
+        assert!(!Structure::lower(1, 0).is_valid(5, 6));
+        assert!(Structure::lower(4, 5).is_valid(5, 6));
+    }
+
+    #[test]
+    fn enumerate_count_and_validity() {
+        for (p, q) in [(2, 2), (4, 5), (6, 5), (10, 10)] {
+            let all = Structure::enumerate(p, q);
+            assert_eq!(all.len(), 2 * (p - 1) * (q - 1));
+            assert!(all.iter().all(|s| s.is_valid(p, q)));
+            // No duplicates.
+            let set: std::collections::HashSet<_> = all.iter().collect();
+            assert_eq!(set.len(), all.len());
+        }
+    }
+
+    #[test]
+    fn roles_edges_are_grid_edges() {
+        for s in Structure::enumerate(6, 5) {
+            let r = s.roles();
+            let (ul, ur) = r.u_edge();
+            assert_eq!(ul.i, ur.i);
+            assert_eq!(ul.j + 1, ur.j);
+            let (wt, wb) = r.w_edge();
+            assert_eq!(wt.j, wb.j);
+            assert_eq!(wt.i + 1, wb.i);
+        }
+    }
+
+    /// Figure 2a: on a 6×5 grid the per-row d^U pattern is
+    /// 1:2:2:2:1 — edge columns participate half as often as interior
+    /// columns (within each row).
+    #[test]
+    fn figure2a_du_pattern() {
+        let c = NormalizationCoeffs::new(6, 5);
+        let u = c.u_block_counts();
+        for i in 0..6 {
+            let row: Vec<u32> = (0..5).map(|j| u[i * 5 + j]).collect();
+            assert_eq!(row[0], row[4], "row {i} symmetric");
+            assert_eq!(row[1], row[2]);
+            assert_eq!(row[2], row[3]);
+            assert_eq!(row[1], 2 * row[0], "row {i}: interior = 2× edge: {row:?}");
+        }
+    }
+
+    /// Figure 2b: transposed pattern for d^W — edge *rows* participate
+    /// half as often as interior rows (within each column).
+    #[test]
+    fn figure2b_dw_pattern() {
+        let c = NormalizationCoeffs::new(6, 5);
+        let w = c.w_block_counts();
+        for j in 0..5 {
+            let col: Vec<u32> = (0..6).map(|i| w[i * 5 + j]).collect();
+            assert_eq!(col[0], col[5], "col {j} symmetric");
+            for i in 1..5 {
+                assert_eq!(col[i], 2 * col[0], "col {j}: interior = 2× edge");
+            }
+        }
+    }
+
+    /// Figure 2c: f-counts range from 1 (corners reachable by a single
+    /// structure) to 6 (interior blocks), symmetric under grid
+    /// reflection.
+    #[test]
+    fn figure2c_f_counts() {
+        let c = NormalizationCoeffs::new(6, 5);
+        let f = c.f_block_counts();
+        let get = |i: usize, j: usize| f[i * 5 + j];
+        assert_eq!(get(0, 0), 1);
+        assert_eq!(get(5, 4), 1); // opposite corner (lower-only)
+        assert_eq!(get(0, 4), 2); // top-right corner
+        assert_eq!(get(5, 0), 2);
+        assert_eq!(get(2, 2), 6); // interior
+        // Reflection symmetry: flipping both axes swaps upper/lower
+        // structures, leaving counts invariant.
+        for i in 0..6 {
+            for j in 0..5 {
+                assert_eq!(get(i, j), get(5 - i, 4 - j), "({i},{j})");
+            }
+        }
+    }
+
+    /// Total f-count mass equals 3 × number of structures, and U/W edge
+    /// masses equal 1 × number of structures each.
+    #[test]
+    fn count_conservation() {
+        for (p, q) in [(2, 2), (4, 4), (6, 5), (5, 6)] {
+            let c = NormalizationCoeffs::new(p, q);
+            let n_struct = 2 * (p - 1) * (q - 1);
+            assert_eq!(
+                c.f_block_counts().iter().sum::<u32>() as usize,
+                3 * n_struct
+            );
+            assert_eq!(c.count_u.iter().sum::<u32>() as usize, n_struct);
+            assert_eq!(c.count_w.iter().sum::<u32>() as usize, n_struct);
+        }
+    }
+
+    /// Every interior horizontal edge is the U-edge of exactly two
+    /// structures (one upper, one lower); boundary-row edges of one.
+    #[test]
+    fn u_edge_counts() {
+        let c = NormalizationCoeffs::new(6, 5);
+        for i in 0..6 {
+            for j in 0..4 {
+                let want = if i == 0 || i == 5 { 1 } else { 2 };
+                assert_eq!(c.u_edge_count(BlockId::new(i, j)), want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn coefficients_are_inverse_counts() {
+        let c = NormalizationCoeffs::new(4, 4);
+        let s = Structure::upper(1, 1);
+        let roles = s.roles();
+        assert!((c.f_coeff(roles.anchor) - 1.0 / c.f_count(roles.anchor) as f32).abs() < 1e-9);
+        let (left, _) = roles.u_edge();
+        assert!((c.u_coeff(&roles) - 1.0 / c.u_edge_count(left) as f32).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,82 @@
+//! # GridMC — decentralized matrix completion through gossip
+//!
+//! A production-shaped reproduction of *"A two-dimensional decomposition
+//! approach for matrix completion through gossip"* (Bhutani & Mishra,
+//! 2017). The input matrix `X (m×n)` is decomposed into a `p×q` grid of
+//! blocks; each block `X_ij` is factorized as `U_ij · W_ij^T` with rank
+//! `r ≪ m, n`, and blocks reach consensus on the shared factors purely
+//! by gossiping with their grid neighbours — no central server on the
+//! learning path (paper §1–§2).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the gossip coordinator: grid topology and
+//!   structure enumeration ([`grid`]), decentralized agents and the
+//!   conflict-free parallel scheduler ([`gossip`]), the SGD driver of
+//!   the paper's Algorithm 1 ([`solver`]), data substrates ([`data`]),
+//!   factor state ([`model`]), metrics, and config/CLI.
+//! * **L2/L1 (build-time Python, `python/compile/`)** — the JAX
+//!   structure-update graph built on Pallas kernels, AOT-lowered to HLO
+//!   text once by `make artifacts`. Never on the request path.
+//! * **Runtime bridge** — [`runtime`] loads `artifacts/*.hlo.txt` into
+//!   PJRT executables; [`engine::XlaEngine`] runs them, and
+//!   [`engine::NativeEngine`] is a pure-Rust implementation of the same
+//!   math (arbitrary-shape fallback, baseline, and parity oracle).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gridmc::prelude::*;
+//!
+//! // 64×64 rank-4 synthetic completion problem on a 2×2 grid.
+//! let data = SyntheticConfig {
+//!     m: 64, n: 64, rank: 4, train_fraction: 0.6, test_fraction: 0.2,
+//!     noise_std: 0.0, seed: 7,
+//! }
+//! .generate();
+//! let spec = GridSpec::new(64, 64, 2, 2, 4);
+//! let mut cfg = SolverConfig::default();
+//! cfg.max_iters = 20_000;
+//! let mut engine = NativeEngine::new();
+//! let (report, state) = SequentialDriver::new(spec, cfg)
+//!     .run(&mut engine, &data.data.train)
+//!     .unwrap();
+//! println!("final cost {:.3e}", report.final_cost);
+//! println!("test rmse {:.4}", state.rmse(&data.data.test));
+//! ```
+
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod gossip;
+pub mod grid;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+mod error;
+
+pub use error::{Error, Result};
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::config::{ExperimentConfig, presets};
+    pub use crate::data::{
+        CooMatrix, CsrMatrix, DenseMatrix, RatingsConfig, SyntheticConfig,
+        SplitDataset,
+    };
+    pub use crate::engine::{Engine, NativeEngine, XlaEngine};
+    pub use crate::gossip::{GossipNetwork, ParallelDriver, ScheduleBuilder};
+    pub use crate::grid::{BlockId, GridSpec, Structure, StructureKind, StructureSampler};
+    pub use crate::metrics::{CostCurve, RmseReport};
+    pub use crate::model::FactorState;
+    pub use crate::runtime::{ArtifactManifest, Runtime};
+    pub use crate::solver::{
+        baselines, ConvergenceCriterion, SequentialDriver, SolverConfig,
+        SolverReport, StepSchedule,
+    };
+    pub use crate::{Error, Result};
+}

@@ -1,0 +1,243 @@
+//! `gridmc` — the GridMC launcher.
+//!
+//! ```text
+//! gridmc train --preset exp3 [--engine xla] [--driver parallel]
+//!              [--workers N] [--scale 0.1] [--out-csv curve.csv]
+//! gridmc train --config configs/my.toml
+//! gridmc bench-table <table2|table3|fig2|parallel|ablations> [--scale S]
+//! gridmc gen-data --preset ml1m --out /tmp/ml1m.csv [--seed 7]
+//! gridmc inspect --preset exp4
+//! ```
+//!
+//! The CLI is a thin shell over the library: presets come from
+//! [`gridmc::config::presets`], runs go through
+//! [`gridmc::experiments`], and everything printed here is computed by
+//! the same code paths the benches use. (Arg parsing is hand-rolled —
+//! the offline build has no clap.)
+
+use gridmc::config::{presets, DriverChoice, EngineChoice, ExperimentConfig};
+use gridmc::data::RatingsPreset;
+use gridmc::experiments;
+use gridmc::{Error, Result};
+
+const USAGE: &str = "\
+gridmc — two-dimensional gossip matrix completion (Bhutani & Mishra 2017)
+
+USAGE:
+  gridmc train --preset <exp1..exp6|table3-<ds>-<g>-<r>> [options]
+  gridmc train --config <file.toml> [options]
+  gridmc bench-table <table2|table3|fig2|parallel|ablations> [--scale S]
+  gridmc gen-data --preset <ml1m|ml10m|ml20m|netflix> --out <path> [--seed N]
+  gridmc inspect --preset <name>
+
+TRAIN OPTIONS:
+  --engine <xla|native-sparse|native-dense>   override engine
+  --driver <sequential|parallel>              override driver
+  --workers <N>                               parallel in-flight structures
+  --scale <S>                                 scale max_iters/eval_every
+  --out-csv <path>                            write the cost curve as CSV
+
+ENV:
+  GRIDMC_LOG=info|debug       log level
+  GRIDMC_ITER_SCALE=<S>       global iteration scaling for bench tables
+  GRIDMC_ARTIFACT_DIR=<dir>   HLO artifacts (default ./artifacts)
+  GRIDMC_DATA_DIR=<dir>       real MovieLens files for table3
+";
+
+/// Tiny flag parser: `--key value` pairs plus positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let value = it
+                    .next()
+                    .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+                flags.insert(key.to_string(), value.clone());
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::Config(format!("missing required --{key}")))
+    }
+}
+
+fn resolve_preset(name: &str) -> Result<ExperimentConfig> {
+    if let Some(n) = name.strip_prefix("exp") {
+        if let Ok(n) = n.parse::<usize>() {
+            return presets::exp(n);
+        }
+    }
+    if let Some(rest) = name.strip_prefix("table3-") {
+        let parts: Vec<&str> = rest.split('-').collect();
+        if parts.len() == 3 {
+            let ds = parse_ratings_preset(parts[0])?;
+            let g: usize = parts[1]
+                .parse()
+                .map_err(|_| Error::Config(format!("bad grid size {:?}", parts[1])))?;
+            let r: usize = parts[2]
+                .parse()
+                .map_err(|_| Error::Config(format!("bad rank {:?}", parts[2])))?;
+            return Ok(presets::table3(ds, g, r));
+        }
+    }
+    Err(Error::Config(format!(
+        "unknown preset {name:?} (try exp1..exp6 or table3-ml1m-4-10)"
+    )))
+}
+
+fn parse_ratings_preset(s: &str) -> Result<RatingsPreset> {
+    Ok(match s {
+        "ml1m" => RatingsPreset::Ml1m,
+        "ml10m" => RatingsPreset::Ml10m,
+        "ml20m" => RatingsPreset::Ml20m,
+        "netflix" => RatingsPreset::Netflix,
+        other => return Err(Error::Config(format!("unknown dataset preset {other:?}"))),
+    })
+}
+
+fn apply_scale(cfg: &mut ExperimentConfig, scale: Option<&str>) -> Result<()> {
+    if let Some(s) = scale {
+        let s: f64 = s
+            .parse()
+            .map_err(|_| Error::Config(format!("bad --scale {s:?}")))?;
+        cfg.solver.max_iters = ((cfg.solver.max_iters as f64 * s) as u64).max(10);
+        cfg.solver.eval_every = ((cfg.solver.eval_every as f64 * s) as u64).max(5);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match (args.get("preset"), args.get("config")) {
+        (Some(p), None) => resolve_preset(p)?,
+        (None, Some(path)) => ExperimentConfig::from_file(path)?,
+        _ => return Err(Error::Config("pass exactly one of --preset / --config".into())),
+    };
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineChoice::parse(e)?;
+    }
+    if let Some(d) = args.get("driver") {
+        cfg.driver = DriverChoice::parse(d)?;
+    }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w
+            .parse()
+            .map_err(|_| Error::Config(format!("bad --workers {w:?}")))?;
+    }
+    apply_scale(&mut cfg, args.get("scale"))?;
+
+    let outcome = experiments::run_experiment(&cfg)?;
+    println!("{}", experiments::format_outcome(&cfg, &outcome));
+    if let Some(path) = args.get("out-csv") {
+        let mut f = std::fs::File::create(path)?;
+        outcome.report.curve.write_csv(&mut f)?;
+        println!("cost curve -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench_table(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Config("bench-table needs a table name".into()))?;
+    if let Some(s) = args.get("scale") {
+        std::env::set_var("GRIDMC_ITER_SCALE", s);
+    }
+    let out = match which.as_str() {
+        "table2" => experiments::table2::run()?,
+        "table3" => experiments::table3::run()?,
+        "fig2" => experiments::fig2::run()?,
+        "parallel" => experiments::parallel::run()?,
+        "ablations" => experiments::ablations::run()?,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown table {other:?} (table2|table3|fig2|parallel|ablations)"
+            )))
+        }
+    };
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let preset = parse_ratings_preset(args.require("preset")?)?;
+    let out = args.require("out")?;
+    let seed: u64 = args
+        .get("seed")
+        .unwrap_or("7")
+        .parse()
+        .map_err(|_| Error::Config("bad --seed".into()))?;
+    let data = preset.config(seed).generate();
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out)?);
+    writeln!(f, "userId,movieId,rating,split")?;
+    for (i, j, v) in data.train.iter() {
+        writeln!(f, "{i},{j},{v},train")?;
+    }
+    for (i, j, v) in data.test.iter() {
+        writeln!(f, "{i},{j},{v},test")?;
+    }
+    println!(
+        "wrote {} train + {} test ratings ({}x{}) -> {out}",
+        data.train.nnz(),
+        data.test.nnz(),
+        data.m,
+        data.n
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let cfg = resolve_preset(args.require("preset")?)?;
+    println!("{}", cfg.to_toml()?);
+    Ok(())
+}
+
+fn main() {
+    gridmc::util::logging::init("info");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = match Args::parse(rest) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "bench-table" => cmd_bench_table(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command {other:?}"))),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,215 @@
+//! Metrics: cost curves, RMSE reports, throughput accounting, sinks.
+//!
+//! The benches regenerate the paper's tables from these types:
+//! [`CostCurve`] is Table 2 (cost vs iterations), [`RmseReport`] rows
+//! build Table 3, and [`Throughput`] backs the parallel-scaling bench.
+//! Everything serializes to CSV/JSON so EXPERIMENTS.md numbers are
+//! reproducible from artifacts on disk.
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+/// Cost sampled along training — the paper's Table-2 series
+/// `Σ f_ij + λ‖U_ij‖² + λ‖W_ij‖²` at increasing iteration counts.
+#[derive(Debug, Clone, Default)]
+pub struct CostCurve {
+    pub points: Vec<(u64, f64)>,
+}
+
+impl CostCurve {
+    pub fn push(&mut self, iter: u64, cost: f64) {
+        self.points.push((iter, cost));
+    }
+
+    pub fn initial(&self) -> Option<f64> {
+        self.points.first().map(|&(_, c)| c)
+    }
+
+    pub fn last(&self) -> Option<(u64, f64)> {
+        self.points.last().copied()
+    }
+
+    /// Orders of magnitude of cost reduction, `log10(first / last)` —
+    /// the paper reports 7–10 on the synthetic experiments.
+    pub fn orders_of_reduction(&self) -> f64 {
+        match (self.initial(), self.last()) {
+            (Some(first), Some((_, last))) if first > 0.0 && last > 0.0 => {
+                (first / last).log10()
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Cost at the sample point closest to `iter`.
+    pub fn cost_near(&self, iter: u64) -> Option<f64> {
+        self.points
+            .iter()
+            .min_by_key(|&&(it, _)| it.abs_diff(iter))
+            .map(|&(_, c)| c)
+    }
+
+    /// Is the curve non-increasing within `slack` (multiplicative)?
+    pub fn is_decreasing(&self, slack: f64) -> bool {
+        self.points
+            .windows(2)
+            .all(|w| w[1].1 <= w[0].1 * (1.0 + slack))
+    }
+
+    /// Write `iteration,cost` CSV.
+    pub fn write_csv(&self, mut out: impl Write) -> std::io::Result<()> {
+        writeln!(out, "iteration,cost")?;
+        for (it, c) in &self.points {
+            writeln!(out, "{it},{c:.6e}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One Table-3 cell: dataset × grid × rank → test RMSE.
+#[derive(Debug, Clone)]
+pub struct RmseReport {
+    pub dataset: String,
+    pub p: usize,
+    pub q: usize,
+    pub rank: usize,
+    pub rmse: f64,
+    pub train_rmse: f64,
+    pub iters: u64,
+    pub wall: Duration,
+}
+
+/// Structure-update throughput of a driver run.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub updates: u64,
+    pub wall: Duration,
+}
+
+impl Throughput {
+    pub fn per_sec(&self) -> f64 {
+        self.updates as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Simple scoped wall-clock timer.
+#[derive(Debug)]
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+/// Fixed-width table printer for the bench harnesses (paper-style rows).
+#[derive(Debug, Default)]
+pub struct TablePrinter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (k, cell) in row.iter().enumerate().take(ncol) {
+                widths[k] = widths[k].max(cell.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(k, c)| format!("{:>width$}", c, width = widths.get(k).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_of_reduction() {
+        let mut c = CostCurve::default();
+        c.push(0, 1.45e5);
+        c.push(80_000, 6.92e-3);
+        c.push(160_000, 9.62e-6);
+        // Paper Exp#1: ~10 orders.
+        assert!((c.orders_of_reduction() - 10.18).abs() < 0.1);
+        assert!(c.is_decreasing(0.0));
+    }
+
+    #[test]
+    fn cost_near_picks_closest() {
+        let mut c = CostCurve::default();
+        c.push(0, 10.0);
+        c.push(100, 5.0);
+        c.push(200, 1.0);
+        assert_eq!(c.cost_near(90), Some(5.0));
+        assert_eq!(c.cost_near(1000), Some(1.0));
+    }
+
+    #[test]
+    fn decreasing_with_slack() {
+        let mut c = CostCurve::default();
+        c.push(0, 10.0);
+        c.push(1, 10.05); // small SGD bounce
+        c.push(2, 3.0);
+        assert!(!c.is_decreasing(0.0));
+        assert!(c.is_decreasing(0.01));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut c = CostCurve::default();
+        c.push(0, 1.0);
+        c.push(10, 0.5);
+        let mut buf = Vec::new();
+        c.write_csv(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.starts_with("iteration,cost"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput { updates: 500, wall: Duration::from_millis(250) };
+        assert!((t.per_sec() - 2000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn table_printer_aligns() {
+        let mut t = TablePrinter::new(&["NumIterations", "Exp#1"]);
+        t.row(&["0".into(), "1.45e+05".into()]);
+        t.row(&["80000".into(), "6.92e-03".into()]);
+        let s = t.render();
+        assert!(s.contains("NumIterations"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,280 @@
+//! Per-block factor state and the final factor culmination.
+//!
+//! Every block `(i,j)` owns local factors `U_ij (mb×r)` and
+//! `W_ij (nb×r)` (paper §2). During learning these are updated through
+//! gossip structures only; "once the learning is done, a final
+//! culmination of Us and Ws is performed" (§1) — [`FactorState::assemble`]
+//! builds the universal `U (m×r)` / `W (n×r)` by averaging each grid
+//! row's (column's) converged replicas, which coincide at consensus and
+//! average out residual disagreement otherwise.
+
+use crate::data::{CooMatrix, DenseMatrix};
+use crate::util::Rng;
+use crate::grid::{BlockId, GridSpec};
+
+/// The learnable state: one `(U_ij, W_ij)` pair per block.
+#[derive(Debug, Clone)]
+pub struct FactorState {
+    spec: GridSpec,
+    /// Row-major `p × q` of `mb × r` row factors.
+    us: Vec<DenseMatrix>,
+    /// Row-major `p × q` of `nb × r` column factors.
+    ws: Vec<DenseMatrix>,
+}
+
+impl FactorState {
+    /// Random init: factor entries `U(−s, s)` (paper §4 initializes
+    /// randomly; the scale follows the synthetic generator's
+    /// unit-entry-variance convention).
+    pub fn init_random(spec: GridSpec, seed: u64) -> Self {
+        let (mb, nb) = spec.block_shape();
+        let r = spec.rank;
+        let s = (1.0 / r as f64).powf(0.25) as f32;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut rand_mat = |rows: usize| {
+            DenseMatrix::from_fn(rows, r, |_, _| rng.uniform_sym(s))
+        };
+        let mut us = Vec::with_capacity(spec.num_blocks());
+        let mut ws = Vec::with_capacity(spec.num_blocks());
+        for _ in 0..spec.num_blocks() {
+            us.push(rand_mat(mb));
+            ws.push(rand_mat(nb));
+        }
+        Self { spec, us, ws }
+    }
+
+    pub fn spec(&self) -> &GridSpec {
+        &self.spec
+    }
+
+    pub fn u(&self, id: BlockId) -> &DenseMatrix {
+        &self.us[id.index(self.spec.q)]
+    }
+
+    pub fn w(&self, id: BlockId) -> &DenseMatrix {
+        &self.ws[id.index(self.spec.q)]
+    }
+
+    pub fn set_u(&mut self, id: BlockId, u: DenseMatrix) {
+        debug_assert_eq!(u.rows(), self.spec.block_shape().0);
+        self.us[id.index(self.spec.q)] = u;
+    }
+
+    pub fn set_w(&mut self, id: BlockId, w: DenseMatrix) {
+        debug_assert_eq!(w.rows(), self.spec.block_shape().1);
+        self.ws[id.index(self.spec.q)] = w;
+    }
+
+    /// Take both factors of a block out (for transfer to an agent),
+    /// leaving zero-size placeholders. Used by the gossip runtime.
+    pub fn take_block(&mut self, id: BlockId) -> (DenseMatrix, DenseMatrix) {
+        let k = id.index(self.spec.q);
+        let u = std::mem::replace(&mut self.us[k], DenseMatrix::zeros(0, 0));
+        let w = std::mem::replace(&mut self.ws[k], DenseMatrix::zeros(0, 0));
+        (u, w)
+    }
+
+    /// Maximum consensus disagreement: `max_i max_{j,j'} ‖U_ij − U_ij'‖_F`
+    /// over grid rows plus the analogous W quantity over grid columns.
+    /// Zero at perfect consensus.
+    pub fn consensus_gap(&self) -> f64 {
+        let mut gap = 0.0f64;
+        for i in 0..self.spec.p {
+            for j in 1..self.spec.q {
+                let d = self
+                    .u(BlockId::new(i, j))
+                    .sub(self.u(BlockId::new(i, j - 1)))
+                    .expect("same shape");
+                gap = gap.max(d.frob_sq().sqrt());
+            }
+        }
+        for j in 0..self.spec.q {
+            for i in 1..self.spec.p {
+                let d = self
+                    .w(BlockId::new(i, j))
+                    .sub(self.w(BlockId::new(i - 1, j)))
+                    .expect("same shape");
+                gap = gap.max(d.frob_sq().sqrt());
+            }
+        }
+        gap
+    }
+
+    /// Final culmination: universal `U (m×r)` and `W (n×r)`.
+    ///
+    /// Row block `i`'s universal rows are the mean over the grid row's
+    /// `q` replicas `U_i1 … U_iq` (all equal at consensus); padding rows
+    /// beyond `m` are dropped. Analogous for `W` down grid columns.
+    pub fn assemble(&self) -> (DenseMatrix, DenseMatrix) {
+        let (mb, nb) = self.spec.block_shape();
+        let r = self.spec.rank;
+        let mut u = DenseMatrix::zeros(self.spec.m, r);
+        for i in 0..self.spec.p {
+            let r0 = i * mb;
+            let rows = (self.spec.m - r0).min(mb);
+            for j in 0..self.spec.q {
+                let uij = self.u(BlockId::new(i, j));
+                for li in 0..rows {
+                    let dst = u.row_mut(r0 + li);
+                    let src = uij.row(li);
+                    for k in 0..r {
+                        dst[k] += src[k];
+                    }
+                }
+            }
+            let inv = 1.0 / self.spec.q as f32;
+            for li in 0..rows {
+                for v in u.row_mut(r0 + li) {
+                    *v *= inv;
+                }
+            }
+        }
+        let mut w = DenseMatrix::zeros(self.spec.n, r);
+        for j in 0..self.spec.q {
+            let c0 = j * nb;
+            let rows = (self.spec.n - c0).min(nb);
+            for i in 0..self.spec.p {
+                let wij = self.w(BlockId::new(i, j));
+                for li in 0..rows {
+                    let dst = w.row_mut(c0 + li);
+                    let src = wij.row(li);
+                    for k in 0..r {
+                        dst[k] += src[k];
+                    }
+                }
+            }
+            let inv = 1.0 / self.spec.p as f32;
+            for li in 0..rows {
+                for v in w.row_mut(c0 + li) {
+                    *v *= inv;
+                }
+            }
+        }
+        (u, w)
+    }
+
+    /// RMSE of the universal factors against a held-out entry set.
+    pub fn rmse(&self, test: &CooMatrix) -> f64 {
+        let (u, w) = self.assemble();
+        rmse_from_factors(&u, &w, test)
+    }
+}
+
+/// RMSE of `U Wᵀ` against observed entries (shared by baselines).
+pub fn rmse_from_factors(u: &DenseMatrix, w: &DenseMatrix, test: &CooMatrix) -> f64 {
+    if test.nnz() == 0 {
+        return 0.0;
+    }
+    let r = u.cols();
+    let mut se = 0.0f64;
+    for (i, j, v) in test.iter() {
+        let ur = u.row(i as usize);
+        let wr = w.row(j as usize);
+        let mut pred = 0.0f32;
+        for k in 0..r {
+            pred += ur[k] * wr[k];
+        }
+        se += ((v - pred) as f64).powi(2);
+    }
+    (se / test.nnz() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(10, 8, 2, 2, 3)
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = FactorState::init_random(spec(), 5);
+        let b = FactorState::init_random(spec(), 5);
+        assert_eq!(a.u(BlockId::new(0, 1)), b.u(BlockId::new(0, 1)));
+        let c = FactorState::init_random(spec(), 6);
+        assert_ne!(a.u(BlockId::new(0, 1)), c.u(BlockId::new(0, 1)));
+    }
+
+    #[test]
+    fn shapes_follow_spec() {
+        let s = FactorState::init_random(spec(), 0);
+        let (mb, nb) = spec().block_shape();
+        assert_eq!(s.u(BlockId::new(1, 1)).rows(), mb);
+        assert_eq!(s.w(BlockId::new(1, 1)).rows(), nb);
+        assert_eq!(s.u(BlockId::new(0, 0)).cols(), 3);
+    }
+
+    #[test]
+    fn assemble_at_consensus_recovers_replicas() {
+        // Force all replicas in a grid row to the same matrix: the
+        // assembled U must equal it exactly (mean of identical copies).
+        let mut s = FactorState::init_random(spec(), 1);
+        let u_row0 = s.u(BlockId::new(0, 0)).clone();
+        s.set_u(BlockId::new(0, 1), u_row0.clone());
+        let (u, _) = s.assemble();
+        let (mb, _) = spec().block_shape();
+        for i in 0..mb.min(10) {
+            for k in 0..3 {
+                assert!((u.get(i, k) - u_row0.get(i, k)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn assemble_averages_disagreement() {
+        let mut s = FactorState::init_random(spec(), 2);
+        let a = DenseMatrix::from_fn(5, 3, |_, _| 1.0);
+        let b = DenseMatrix::from_fn(5, 3, |_, _| 3.0);
+        s.set_u(BlockId::new(0, 0), a);
+        s.set_u(BlockId::new(0, 1), b);
+        let (u, _) = s.assemble();
+        assert!((u.get(0, 0) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn consensus_gap_zero_when_equal() {
+        let mut s = FactorState::init_random(spec(), 3);
+        let (mb, nb) = spec().block_shape();
+        let u = DenseMatrix::from_fn(mb, 3, |i, k| (i + k) as f32);
+        let w = DenseMatrix::from_fn(nb, 3, |i, k| (i * k) as f32);
+        for id in spec().blocks() {
+            s.set_u(id, u.clone());
+            s.set_w(id, w.clone());
+        }
+        assert!(s.consensus_gap() < 1e-9);
+        // Perturb one replica → gap becomes positive.
+        let mut u2 = u.clone();
+        u2.set(0, 0, 100.0);
+        s.set_u(BlockId::new(0, 1), u2);
+        assert!(s.consensus_gap() > 1.0);
+    }
+
+    #[test]
+    fn rmse_zero_for_exact_factors() {
+        // Build a rank-1 ground truth, set every block to the exact
+        // factor slices, check RMSE ≈ 0 on random test entries.
+        let sp = GridSpec::new(6, 6, 2, 2, 1);
+        let u_star = DenseMatrix::from_fn(6, 1, |i, _| (i + 1) as f32);
+        let w_star = DenseMatrix::from_fn(6, 1, |j, _| (j + 1) as f32 * 0.5);
+        let mut s = FactorState::init_random(sp, 4);
+        let (mb, nb) = sp.block_shape();
+        for id in sp.blocks() {
+            let (r0, c0) = sp.block_origin(id);
+            s.set_u(id, u_star.padded_submatrix(r0, 0, mb, 1));
+            s.set_w(id, w_star.padded_submatrix(c0, 0, nb, 1));
+        }
+        let mut test = CooMatrix::new(6, 6);
+        for i in 0..6u32 {
+            test.push(i, (i * 7 % 6) as u32, ((i + 1) as f32) * ((i * 7 % 6 + 1) as f32) * 0.5)
+                .unwrap();
+        }
+        assert!(s.rmse(&test) < 1e-6, "rmse {}", s.rmse(&test));
+    }
+
+    #[test]
+    fn rmse_empty_test_is_zero() {
+        let s = FactorState::init_random(spec(), 0);
+        assert_eq!(s.rmse(&CooMatrix::new(10, 8)), 0.0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Artifact manifest: maps (program, block shape, rank) → HLO file.
+//!
+//! `python/compile/aot.py` writes `manifest.tsv` (and a `manifest.json`
+//! twin for humans) alongside the HLO text files; this module parses
+//! the TSV and answers shape lookups for the
+//! [`XlaEngine`](crate::engine::XlaEngine). A miss is not fatal —
+//! callers fall back to the native engine (DESIGN.md §6).
+//!
+//! TSV format, one artifact per line after a `#version` header:
+//!
+//! ```text
+//! #version\t1
+//! structure\texp3\t100\t100\t5\tstructure_100x100_r5.hlo.txt\t<sha256>
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// One artifact entry from `manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub program: String,
+    pub tag: String,
+    pub mb: usize,
+    pub nb: usize,
+    pub r: usize,
+    pub file: String,
+    pub sha256: String,
+}
+
+/// The three AOT program kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Program {
+    /// 20-input / 6-output structure SGD step.
+    Structure,
+    /// 5-input / 1-output block cost.
+    Cost,
+    /// 2-input / 1-output dense reconstruction.
+    Predict,
+}
+
+impl Program {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Program::Structure => "structure",
+            Program::Cost => "cost",
+            Program::Predict => "predict",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "structure" => Ok(Program::Structure),
+            "cost" => Ok(Program::Cost),
+            "predict" => Ok(Program::Predict),
+            other => Err(Error::Artifact(format!("unknown program {other:?}"))),
+        }
+    }
+}
+
+/// Parsed manifest with an index by (program, mb, nb, r).
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    dir: PathBuf,
+    index: HashMap<(Program, usize, usize, usize), ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    fn parse(dir: PathBuf, text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(header) if header.trim() == "#version\t1" => {}
+            other => {
+                return Err(Error::Artifact(format!(
+                    "unsupported manifest header {other:?} (expected #version\\t1)"
+                )))
+            }
+        }
+        let mut index = HashMap::new();
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 7 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 7 fields, got {}",
+                    lineno + 2,
+                    fields.len()
+                )));
+            }
+            let parse_num = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|_| {
+                    Error::Artifact(format!("manifest line {}: bad {what} {s:?}", lineno + 2))
+                })
+            };
+            let entry = ArtifactEntry {
+                program: fields[0].to_string(),
+                tag: fields[1].to_string(),
+                mb: parse_num(fields[2], "mb")?,
+                nb: parse_num(fields[3], "nb")?,
+                r: parse_num(fields[4], "r")?,
+                file: fields[5].to_string(),
+                sha256: fields[6].to_string(),
+            };
+            let program = Program::parse(&entry.program)?;
+            index.insert((program, entry.mb, entry.nb, entry.r), entry);
+        }
+        Ok(Self { dir, index })
+    }
+
+    /// Default location: `$GRIDMC_ARTIFACT_DIR` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var_os("GRIDMC_ARTIFACT_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"));
+        Self::load(dir)
+    }
+
+    /// Path of the artifact for a (program, shape) — `None` on miss.
+    pub fn lookup(&self, program: Program, mb: usize, nb: usize, r: usize) -> Option<PathBuf> {
+        self.index
+            .get(&(program, mb, nb, r))
+            .map(|e| self.dir.join(&e.file))
+    }
+
+    /// Does the manifest cover all three programs for a shape?
+    pub fn covers(&self, mb: usize, nb: usize, r: usize) -> bool {
+        [Program::Structure, Program::Cost, Program::Predict]
+            .iter()
+            .all(|&p| self.index.contains_key(&(p, mb, nb, r)))
+    }
+
+    /// Number of entries (for diagnostics).
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dirname: &str, body: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(dirname);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.tsv")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let dir = write_manifest(
+            "gridmc-manifest-test1",
+            "#version\t1\n\
+             structure\tt\t32\t32\t4\ts.hlo.txt\tabc\n\
+             cost\tt\t32\t32\t4\tc.hlo.txt\tdef\n\
+             predict\tt\t32\t32\t4\tp.hlo.txt\tghi\n",
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 3);
+        assert!(m.covers(32, 32, 4));
+        assert!(!m.covers(32, 32, 5));
+        let p = m.lookup(Program::Structure, 32, 32, 4).unwrap();
+        assert!(p.ends_with("s.hlo.txt"));
+        assert!(m.lookup(Program::Cost, 1, 1, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let dir = write_manifest("gridmc-manifest-test2", "#version\t9\n");
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let dir = write_manifest(
+            "gridmc-manifest-test3",
+            "#version\t1\nstructure\tonly-two\n",
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+        let dir = write_manifest(
+            "gridmc-manifest-test4",
+            "#version\t1\nstructure\tt\tNaN\t32\t4\tf\tsha\n",
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_error_with_hint() {
+        let err = ArtifactManifest::load("/nonexistent-gridmc").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // When `make artifacts` has run in this checkout, validate the
+        // real manifest covers the quickstart + exp3 shapes.
+        if let Ok(m) = ArtifactManifest::load("artifacts") {
+            assert!(m.covers(32, 32, 4), "quickstart variant missing");
+            assert!(m.covers(100, 100, 5), "exp3 variant missing");
+        }
+    }
+}

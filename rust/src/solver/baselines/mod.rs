@@ -1,0 +1,39 @@
+//! Comparison baselines.
+//!
+//! The paper positions its 2-D gossip decomposition against (a) the
+//! classical *centralized* matrix-completion solvers it builds on
+//! (gradient search, [3][4][10]) and (b) the 1-D decompositions of its
+//! related work: row-wise gossip ([9], Mishra et al.) and column-group
+//! decomposition ([7], Ling et al.). We implement one representative of
+//! each family so every comparison in EXPERIMENTS.md is against code in
+//! this repo, not a citation:
+//!
+//! * [`CentralizedSgd`] — per-entry biased SGD on the whole matrix (the
+//!   strongest practical single-node baseline for RMSE).
+//! * [`CentralizedAls`] — alternating least squares with exact per-row
+//!   solves (the classic batch solver; no step-size tuning).
+//! * [`RowGossip`] — 1-D row-wise decomposition: `p` row blocks each
+//!   with a full-width local `W` replica, consensus on `W` between
+//!   path-graph neighbours. This is the "[9]-style" ablation showing
+//!   what the second decomposition dimension buys.
+
+mod als;
+mod centralized;
+mod rowgossip;
+
+pub use als::{AlsConfig, CentralizedAls};
+pub use centralized::{CentralizedSgd, SgdBaselineConfig};
+pub use rowgossip::{RowGossip, RowGossipConfig};
+
+use crate::metrics::CostCurve;
+
+/// Common result shape for all baselines.
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub name: String,
+    pub train_rmse: f64,
+    pub test_rmse: f64,
+    pub iters: u64,
+    pub wall: std::time::Duration,
+    pub curve: CostCurve,
+}

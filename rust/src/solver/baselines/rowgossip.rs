@@ -1,0 +1,261 @@
+//! 1-D row-wise gossip baseline (the paper's reference [9] family).
+//!
+//! The matrix is split into `p` *row* blocks only. Every block `i` owns
+//! the row factor slice `U_i (mb × r)` and a full-width local replica
+//! `W_i (n × r)`; adjacent blocks on the path graph gossip to agree on
+//! `W`. One update samples an adjacent pair `(i, i+1)` and takes an SGD
+//! step on
+//!
+//!   f_i + f_{i+1} + ρ‖W_i − W_{i+1}‖² + λ(‖U‖² + ‖W‖²)
+//!
+//! This is exactly the paper's 2-D scheme collapsed to one dimension,
+//! so benchmarking it against [`SequentialDriver`]
+//! (crate::solver::SequentialDriver) isolates what the second
+//! decomposition dimension buys: `q×` smaller per-agent state and
+//! 2-D instead of 1-D gossip connectivity, at the price of `U`
+//! consensus error.
+
+use crate::data::{CsrMatrix, DenseMatrix, SplitDataset};
+use crate::util::Rng;
+use crate::metrics::{CostCurve, Timer};
+use crate::model::rmse_from_factors;
+use crate::solver::StepSchedule;
+use crate::{Error, Result};
+
+use super::BaselineReport;
+
+/// Hyper-parameters for [`RowGossip`].
+#[derive(Debug, Clone)]
+pub struct RowGossipConfig {
+    /// Number of row blocks (agents).
+    pub p: usize,
+    pub rank: usize,
+    pub rho: f32,
+    pub lambda: f32,
+    pub schedule: StepSchedule,
+    /// Pair updates (each touches two row blocks).
+    pub max_iters: u64,
+    pub eval_every: u64,
+    pub seed: u64,
+}
+
+impl Default for RowGossipConfig {
+    fn default() -> Self {
+        Self {
+            p: 4,
+            rank: 5,
+            rho: 1e3,
+            lambda: 1e-9,
+            schedule: StepSchedule { a: 5e-4, b: 5e-7 },
+            max_iters: 100_000,
+            eval_every: 10_000,
+            seed: 23,
+        }
+    }
+}
+
+/// Row-wise 1-D gossip matrix completion.
+#[derive(Debug, Clone)]
+pub struct RowGossip {
+    cfg: RowGossipConfig,
+}
+
+impl RowGossip {
+    pub fn new(cfg: RowGossipConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// `(G_U, G_W, f)` of one row block's masked data-fit term.
+    fn block_grads(
+        csr: &CsrMatrix,
+        u: &DenseMatrix,
+        w: &DenseMatrix,
+    ) -> (DenseMatrix, DenseMatrix, f64) {
+        let r = u.cols();
+        let mut gu = DenseMatrix::zeros(u.rows(), r);
+        let mut gw = DenseMatrix::zeros(w.rows(), r);
+        let mut f = 0.0f64;
+        for i in 0..csr.rows() {
+            let (cols, vals) = csr.row(i);
+            if cols.is_empty() {
+                continue;
+            }
+            let urow = u.row(i);
+            let gurow = gu.row_mut(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                let wrow = w.row(j as usize);
+                let mut pred = 0.0f32;
+                for k in 0..r {
+                    pred += urow[k] * wrow[k];
+                }
+                let e = v - pred;
+                f += (e as f64) * (e as f64);
+                let ge = -2.0 * e;
+                let gwrow = gw.row_mut(j as usize);
+                for k in 0..r {
+                    gurow[k] += ge * wrow[k];
+                    gwrow[k] += ge * urow[k];
+                }
+            }
+        }
+        (gu, gw, f)
+    }
+
+    pub fn run(&self, data: &SplitDataset) -> Result<BaselineReport> {
+        let cfg = &self.cfg;
+        if cfg.p < 2 {
+            return Err(Error::Config("row gossip needs p >= 2".into()));
+        }
+        if data.train.nnz() == 0 {
+            return Err(Error::Data("row gossip: empty train set".into()));
+        }
+        let mb = data.m.div_ceil(cfg.p);
+        let r = cfg.rank;
+
+        // Partition train entries into row blocks (block-local rows).
+        let blocks: Vec<CsrMatrix> = (0..cfg.p)
+            .map(|b| {
+                data.train
+                    .submatrix(b * mb, 0, mb.min(data.m - b * mb), data.n)
+                    .to_csr()
+            })
+            .collect();
+
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let s = (1.0 / r as f64).powf(0.25) as f32;
+        let mut us: Vec<DenseMatrix> = blocks
+            .iter()
+            .map(|b| DenseMatrix::from_fn(b.rows(), r, |_, _| rng.uniform_sym(s)))
+            .collect();
+        let mut ws: Vec<DenseMatrix> = (0..cfg.p)
+            .map(|_| DenseMatrix::from_fn(data.n, r, |_, _| rng.uniform_sym(s)))
+            .collect();
+
+        let timer = Timer::start();
+        let mut curve = CostCurve::default();
+        let eval = |us: &[DenseMatrix], ws: &[DenseMatrix]| -> f64 {
+            let mut acc = 0.0;
+            for b in 0..cfg.p {
+                let (_, _, f) = Self::block_grads(&blocks[b], &us[b], &ws[b]);
+                acc += f
+                    + cfg.lambda as f64 * (us[b].frob_sq() + ws[b].frob_sq());
+            }
+            acc
+        };
+        curve.push(0, eval(&us, &ws));
+
+        for t in 0..cfg.max_iters {
+            let i = rng.gen_range(cfg.p - 1); // adjacent pair (i, i+1)
+            let gamma = cfg.schedule.gamma(t);
+
+            let (gu_a, mut gw_a, _) = Self::block_grads(&blocks[i], &us[i], &ws[i]);
+            let (gu_b, mut gw_b, _) = Self::block_grads(&blocks[i + 1], &us[i + 1], &ws[i + 1]);
+
+            // λ terms + ρ consensus on W.
+            let dw = ws[i].sub(&ws[i + 1])?;
+            gw_a.axpy(2.0 * cfg.lambda, &ws[i])?;
+            gw_a.axpy(2.0 * cfg.rho, &dw)?;
+            gw_b.axpy(2.0 * cfg.lambda, &ws[i + 1])?;
+            gw_b.axpy(-2.0 * cfg.rho, &dw)?;
+
+            let mut gu_a = gu_a;
+            gu_a.axpy(2.0 * cfg.lambda, &us[i])?;
+            let mut gu_b = gu_b;
+            gu_b.axpy(2.0 * cfg.lambda, &us[i + 1])?;
+
+            us[i].axpy(-gamma, &gu_a)?;
+            ws[i].axpy(-gamma, &gw_a)?;
+            us[i + 1].axpy(-gamma, &gu_b)?;
+            ws[i + 1].axpy(-gamma, &gw_b)?;
+
+            if (t + 1) % cfg.eval_every == 0 {
+                let c = eval(&us, &ws);
+                curve.push(t + 1, c);
+                if !c.is_finite() {
+                    return Err(Error::Diverged { iter: t + 1, cost: c });
+                }
+            }
+        }
+
+        // Culmination: stack U blocks; average W replicas.
+        let mut u = DenseMatrix::zeros(data.m, r);
+        for (b, ub) in us.iter().enumerate() {
+            for i in 0..ub.rows() {
+                u.row_mut(b * mb + i).copy_from_slice(ub.row(i));
+            }
+        }
+        let mut w = DenseMatrix::zeros(data.n, r);
+        for wb in &ws {
+            w.axpy(1.0, wb)?;
+        }
+        w.scale(1.0 / cfg.p as f32);
+
+        Ok(BaselineReport {
+            name: format!("row-gossip-p{}", cfg.p),
+            train_rmse: rmse_from_factors(&u, &w, &data.train),
+            test_rmse: rmse_from_factors(&u, &w, &data.test),
+            iters: cfg.max_iters,
+            wall: timer.elapsed(),
+            curve,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+
+    fn dataset() -> crate::data::SplitDataset {
+        SyntheticConfig {
+            m: 48,
+            n: 40,
+            rank: 3,
+            train_fraction: 0.5,
+            test_fraction: 0.2,
+            ..Default::default()
+        }
+        .generate()
+        .data
+    }
+
+    fn fast_cfg() -> RowGossipConfig {
+        RowGossipConfig {
+            p: 3,
+            rank: 3,
+            rho: 10.0,
+            lambda: 1e-9,
+            schedule: StepSchedule { a: 1e-2, b: 1e-6 },
+            max_iters: 20_000,
+            eval_every: 4_000,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn cost_decreases() {
+        let report = RowGossip::new(fast_cfg()).run(&dataset()).unwrap();
+        let first = report.curve.initial().unwrap();
+        let (_, last) = report.curve.last().unwrap();
+        assert!(last < first / 100.0, "{first} -> {last}");
+    }
+
+    #[test]
+    fn learns_test_set() {
+        let report = RowGossip::new(fast_cfg()).run(&dataset()).unwrap();
+        assert!(report.test_rmse < 0.5, "rmse {}", report.test_rmse);
+    }
+
+    #[test]
+    fn needs_two_blocks() {
+        let cfg = RowGossipConfig { p: 1, ..fast_cfg() };
+        assert!(RowGossip::new(cfg).run(&dataset()).is_err());
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = RowGossip::new(fast_cfg()).run(&dataset()).unwrap();
+        let b = RowGossip::new(fast_cfg()).run(&dataset()).unwrap();
+        assert_eq!(a.test_rmse, b.test_rmse);
+    }
+}

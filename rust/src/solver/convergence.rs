@@ -1,0 +1,102 @@
+//! Convergence detection for the SGD drivers.
+//!
+//! The paper's Algorithm 1 loops "while convergence is not reached" and
+//! Table 2 marks runs converged when the reported cost has stopped
+//! improving. We make that operational: converged when the evaluated
+//! cost drops below `abs_tol`, or when the relative improvement between
+//! consecutive evaluations stays below `rel_tol` for `patience`
+//! evaluations in a row. NaN/∞ costs are reported as divergence.
+
+/// Stateful convergence test fed once per cost evaluation.
+#[derive(Debug, Clone)]
+pub struct ConvergenceCriterion {
+    abs_tol: f64,
+    rel_tol: f64,
+    patience: u32,
+    stall: u32,
+    last: Option<f64>,
+}
+
+/// What one evaluation told us.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Continue,
+    Converged,
+    Diverged,
+}
+
+impl ConvergenceCriterion {
+    pub fn new(abs_tol: f64, rel_tol: f64, patience: u32) -> Self {
+        Self { abs_tol, rel_tol, patience, stall: 0, last: None }
+    }
+
+    /// Feed the latest total cost.
+    pub fn update(&mut self, cost: f64) -> Verdict {
+        if !cost.is_finite() {
+            return Verdict::Diverged;
+        }
+        if cost <= self.abs_tol {
+            return Verdict::Converged;
+        }
+        if let Some(prev) = self.last {
+            let rel = (prev - cost) / prev.abs().max(f64::MIN_POSITIVE);
+            if rel < self.rel_tol {
+                self.stall += 1;
+                if self.stall >= self.patience {
+                    return Verdict::Converged;
+                }
+            } else {
+                self.stall = 0;
+            }
+        }
+        self.last = Some(cost);
+        Verdict::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absolute_tolerance_trips() {
+        let mut c = ConvergenceCriterion::new(1e-5, 1e-3, 2);
+        assert_eq!(c.update(1.0), Verdict::Continue);
+        assert_eq!(c.update(1e-6), Verdict::Converged);
+    }
+
+    #[test]
+    fn stall_needs_patience() {
+        let mut c = ConvergenceCriterion::new(0.0, 1e-2, 2);
+        assert_eq!(c.update(100.0), Verdict::Continue);
+        assert_eq!(c.update(100.0), Verdict::Continue); // stall 1
+        assert_eq!(c.update(100.0), Verdict::Converged); // stall 2
+    }
+
+    #[test]
+    fn improvement_resets_stall() {
+        let mut c = ConvergenceCriterion::new(0.0, 1e-2, 2);
+        c.update(100.0);
+        assert_eq!(c.update(99.9), Verdict::Continue); // stall 1
+        assert_eq!(c.update(50.0), Verdict::Continue); // big improvement resets
+        assert_eq!(c.update(49.99), Verdict::Continue); // stall 1 again
+        assert_eq!(c.update(49.99), Verdict::Converged);
+    }
+
+    #[test]
+    fn nan_is_divergence() {
+        let mut c = ConvergenceCriterion::new(1e-5, 1e-3, 2);
+        assert_eq!(c.update(f64::NAN), Verdict::Diverged);
+        assert_eq!(c.update(f64::INFINITY), Verdict::Diverged);
+    }
+
+    #[test]
+    fn steady_decrease_never_converges_early() {
+        let mut c = ConvergenceCriterion::new(1e-12, 1e-3, 2);
+        let mut cost = 1000.0;
+        for _ in 0..50 {
+            assert_eq!(c.update(cost), Verdict::Continue);
+            cost *= 0.5;
+        }
+    }
+}

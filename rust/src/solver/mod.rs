@@ -1,0 +1,157 @@
+//! Solvers: the paper's Algorithm 1 plus comparison baselines.
+//!
+//! [`SequentialDriver`] is the paper's basic online sequential algorithm
+//! verbatim: sample a valid structure uniformly, run one SGD step on its
+//! three blocks, repeat until convergence. The step size follows §4's
+//! schedule `γ_t = a / (1 + b·t)`. The parallel gossip variant (the
+//! paper's §6 future work) lives in [`crate::gossip::ParallelDriver`]
+//! and shares [`SolverConfig`] / [`SolverReport`].
+//!
+//! [`baselines`] holds the comparison systems: centralized per-entry
+//! SGD, centralized ALS, and a 1-D row-wise gossip decomposition in the
+//! style of the paper's reference [9].
+
+mod convergence;
+mod sgd;
+
+pub mod baselines;
+
+pub use convergence::{ConvergenceCriterion, Verdict as ConvergenceVerdict};
+pub use sgd::SequentialDriver;
+
+use crate::engine::Engine;
+use crate::grid::BlockId;
+use crate::metrics::CostCurve;
+use crate::model::FactorState;
+use crate::Result;
+
+/// Step-size schedule `γ_t = a / (1 + b·t)` (paper §4, after [10]).
+#[derive(Debug, Clone, Copy)]
+pub struct StepSchedule {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl StepSchedule {
+    #[inline]
+    pub fn gamma(&self, t: u64) -> f32 {
+        (self.a / (1.0 + self.b * t as f64)) as f32
+    }
+}
+
+/// Hyper-parameters of a gossip training run (paper Table 1 naming).
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Consensus weight ρ.
+    pub rho: f32,
+    /// Regularization λ.
+    pub lambda: f32,
+    /// Step-size schedule scalars a, b.
+    pub schedule: StepSchedule,
+    /// Hard iteration cap (one iteration = one structure update).
+    pub max_iters: u64,
+    /// Evaluate the total cost every this many iterations.
+    pub eval_every: u64,
+    /// Stop when the total cost falls below this.
+    pub abs_tol: f64,
+    /// Stop when the relative cost improvement between consecutive
+    /// evaluations stays below this for `patience` evaluations.
+    pub rel_tol: f64,
+    /// Consecutive low-improvement evaluations before declaring
+    /// convergence.
+    pub patience: u32,
+    /// RNG seed (structure sampling and factor init).
+    pub seed: u64,
+    /// Apply the paper §4 Figure-2 normalization coefficients
+    /// (disabled only by the ablation bench).
+    pub normalize: bool,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        // Paper Table 1 (Exp#1–4 column).
+        Self {
+            rho: 1e3,
+            lambda: 1e-9,
+            schedule: StepSchedule { a: 5.0e-4, b: 5.0e-7 },
+            max_iters: 240_000,
+            eval_every: 20_000,
+            abs_tol: 1e-5,
+            rel_tol: 1e-3,
+            patience: 2,
+            seed: 42,
+            normalize: true,
+        }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct SolverReport {
+    /// Table-2 style cost series.
+    pub curve: CostCurve,
+    pub final_cost: f64,
+    /// Structure updates executed.
+    pub iters: u64,
+    pub converged: bool,
+    pub wall: std::time::Duration,
+    /// Backend that ran the updates.
+    pub engine: String,
+}
+
+impl SolverReport {
+    pub fn updates_per_sec(&self) -> f64 {
+        self.iters as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Total cost `Σ_ij f_ij + λ‖U_ij‖² + λ‖W_ij‖²` — the quantity the
+/// paper's Table 2 reports. Shared by both drivers.
+pub fn total_cost(
+    engine: &dyn Engine,
+    state: &FactorState,
+    lambda: f32,
+) -> Result<f64> {
+    let spec = state.spec();
+    let mut acc = 0.0;
+    for id in spec.blocks() {
+        acc += engine.block_cost(id, state.u(id), state.w(id), lambda)?;
+    }
+    Ok(acc)
+}
+
+/// Convenience for tests/benches: cost of a single block by id pair.
+pub fn block_cost(
+    engine: &dyn Engine,
+    state: &FactorState,
+    i: usize,
+    j: usize,
+    lambda: f32,
+) -> Result<f64> {
+    let id = BlockId::new(i, j);
+    engine.block_cost(id, state.u(id), state.w(id), lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_matches_paper_formula() {
+        let s = StepSchedule { a: 5.0e-4, b: 5.0e-7 };
+        assert!((s.gamma(0) - 5.0e-4).abs() < 1e-12);
+        // γ at t=1e6: a / (1 + 0.5) = 3.333e-4
+        assert!((s.gamma(1_000_000) as f64 - 5.0e-4 / 1.5).abs() < 1e-9);
+        // Monotone decreasing.
+        assert!(s.gamma(10) < s.gamma(0));
+    }
+
+    #[test]
+    fn default_config_is_table1() {
+        let c = SolverConfig::default();
+        assert_eq!(c.rho, 1e3);
+        assert_eq!(c.lambda, 1e-9);
+        assert_eq!(c.schedule.a, 5.0e-4);
+        assert_eq!(c.schedule.b, 5.0e-7);
+    }
+}

@@ -1,0 +1,255 @@
+//! The paper's Algorithm 1: basic online sequential SGD over structures.
+//!
+//! ```text
+//! input : decomposed blocks for X and rank r
+//! output: Us, Ws
+//! 1 initialize all Us and Ws
+//! 2 while convergence is not reached do
+//! 3   S_struct = randomly pick a valid structure
+//! 4   [Us, Ws] = updateThroughSGD(Xs, S_struct)
+//! 5   check for convergence
+//! ```
+//!
+//! One *iteration* is one structure update (three blocks touched). The
+//! driver is engine-agnostic: the same loop runs over the
+//! [`NativeEngine`](crate::engine::NativeEngine) or the AOT
+//! [`XlaEngine`](crate::engine::XlaEngine).
+
+use crate::data::CooMatrix;
+use crate::engine::{Engine, StructureParams};
+use crate::grid::{BlockPartition, GridSpec, NormalizationCoeffs, StructureSampler};
+use crate::metrics::{CostCurve, Timer};
+use crate::model::FactorState;
+use crate::solver::convergence::{ConvergenceCriterion, Verdict};
+use crate::solver::{total_cost, SolverConfig, SolverReport};
+use crate::{Error, Result};
+
+/// Sequential gossip SGD (paper Algorithm 1).
+#[derive(Debug, Clone)]
+pub struct SequentialDriver {
+    spec: GridSpec,
+    cfg: SolverConfig,
+}
+
+impl SequentialDriver {
+    pub fn new(spec: GridSpec, cfg: SolverConfig) -> Self {
+        Self { spec, cfg }
+    }
+
+    pub fn spec(&self) -> &GridSpec {
+        &self.spec
+    }
+
+    /// Run from a fresh random init; returns the report and final state.
+    pub fn run(
+        &self,
+        engine: &mut dyn Engine,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        let mut state = FactorState::init_random(self.spec, self.cfg.seed);
+        let report = self.run_with_state(engine, train, &mut state)?;
+        Ok((report, state))
+    }
+
+    /// Run continuing from existing factor state (warm start / tests).
+    pub fn run_with_state(
+        &self,
+        engine: &mut dyn Engine,
+        train: &CooMatrix,
+        state: &mut FactorState,
+    ) -> Result<SolverReport> {
+        self.spec.validate()?;
+        let partition = BlockPartition::new(self.spec, train)?;
+        engine.prepare(&partition)?;
+
+        let coeffs = NormalizationCoeffs::new(self.spec.p, self.spec.q);
+        let mut sampler = StructureSampler::new(self.spec.p, self.spec.q, self.cfg.seed ^ 0x5eed);
+        let mut criterion =
+            ConvergenceCriterion::new(self.cfg.abs_tol, self.cfg.rel_tol, self.cfg.patience);
+        let mut curve = CostCurve::default();
+        let timer = Timer::start();
+
+        let c0 = total_cost(engine, state, self.cfg.lambda)?;
+        curve.push(0, c0);
+        log::info!("initial cost {c0:.3e}");
+
+        let mut converged = false;
+        let mut iters = 0u64;
+        'outer: for t in 0..self.cfg.max_iters {
+            let structure = sampler.sample();
+            let roles = structure.roles();
+            let gamma = self.cfg.schedule.gamma(t);
+            let params = if self.cfg.normalize {
+                StructureParams::build(self.cfg.rho, self.cfg.lambda, gamma, &coeffs, &roles)
+            } else {
+                StructureParams::unnormalized(self.cfg.rho, self.cfg.lambda, gamma)
+            };
+
+            let factors = [
+                (state.u(roles.anchor), state.w(roles.anchor)),
+                (state.u(roles.horizontal), state.w(roles.horizontal)),
+                (state.u(roles.vertical), state.w(roles.vertical)),
+            ];
+            let [(ua, wa), (uh, wh), (uv, wv)] =
+                engine.structure_update(&roles, factors, &params)?;
+            state.set_u(roles.anchor, ua);
+            state.set_w(roles.anchor, wa);
+            state.set_u(roles.horizontal, uh);
+            state.set_w(roles.horizontal, wh);
+            state.set_u(roles.vertical, uv);
+            state.set_w(roles.vertical, wv);
+            iters = t + 1;
+
+            if iters % self.cfg.eval_every == 0 {
+                let cost = total_cost(engine, state, self.cfg.lambda)?;
+                curve.push(iters, cost);
+                log::debug!("iter {iters}: cost {cost:.3e}");
+                match criterion.update(cost) {
+                    Verdict::Continue => {}
+                    Verdict::Converged => {
+                        converged = true;
+                        break 'outer;
+                    }
+                    Verdict::Diverged => {
+                        return Err(Error::Diverged { iter: iters, cost });
+                    }
+                }
+            }
+        }
+
+        let final_cost = total_cost(engine, state, self.cfg.lambda)?;
+        if curve.last().map(|(it, _)| it) != Some(iters) {
+            curve.push(iters, final_cost);
+        }
+        Ok(SolverReport {
+            curve,
+            final_cost,
+            iters,
+            converged,
+            wall: timer.elapsed(),
+            engine: engine.name().to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+    use crate::engine::NativeEngine;
+
+    fn tiny_problem() -> (GridSpec, crate::data::SyntheticDataset) {
+        let spec = GridSpec::new(32, 32, 2, 2, 3);
+        let data = SyntheticConfig {
+            m: 32,
+            n: 32,
+            rank: 3,
+            train_fraction: 0.5,
+            test_fraction: 0.2,
+            noise_std: 0.0,
+            seed: 3,
+        }
+        .generate();
+        (spec, data)
+    }
+
+    fn fast_cfg() -> SolverConfig {
+        SolverConfig {
+            max_iters: 6000,
+            eval_every: 1000,
+            schedule: crate::solver::StepSchedule { a: 2e-2, b: 1e-5 },
+            rho: 10.0,
+            abs_tol: 1e-8,
+            rel_tol: 1e-5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cost_decreases_by_orders() {
+        let (spec, data) = tiny_problem();
+        let mut engine = NativeEngine::new();
+        let driver = SequentialDriver::new(spec, fast_cfg());
+        let (report, _) = driver.run(&mut engine, &data.data.train).unwrap();
+        assert!(
+            report.curve.orders_of_reduction() > 2.0,
+            "only {} orders ({} -> {})",
+            report.curve.orders_of_reduction(),
+            report.curve.initial().unwrap(),
+            report.final_cost,
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (spec, data) = tiny_problem();
+        let cfg = SolverConfig { max_iters: 500, eval_every: 250, ..fast_cfg() };
+        let run = || {
+            let mut engine = NativeEngine::new();
+            let driver = SequentialDriver::new(spec, cfg.clone());
+            driver.run(&mut engine, &data.data.train).unwrap()
+        };
+        let (a, sa) = run();
+        let (b, sb) = run();
+        assert_eq!(a.final_cost, b.final_cost);
+        assert_eq!(
+            sa.u(crate::grid::BlockId::new(0, 1)),
+            sb.u(crate::grid::BlockId::new(0, 1))
+        );
+    }
+
+    #[test]
+    fn rmse_improves_on_test_set() {
+        let (spec, data) = tiny_problem();
+        let mut engine = NativeEngine::new();
+        let driver = SequentialDriver::new(spec, fast_cfg());
+        let before = FactorState::init_random(spec, fast_cfg().seed).rmse(&data.data.test);
+        let (_, state) = driver.run(&mut engine, &data.data.train).unwrap();
+        let after = state.rmse(&data.data.test);
+        assert!(after < before * 0.5, "rmse {before} -> {after}");
+    }
+
+    #[test]
+    fn consensus_gap_shrinks() {
+        let (spec, data) = tiny_problem();
+        let mut engine = NativeEngine::new();
+        let driver = SequentialDriver::new(spec, fast_cfg());
+        let init_gap = FactorState::init_random(spec, fast_cfg().seed).consensus_gap();
+        let (_, state) = driver.run(&mut engine, &data.data.train).unwrap();
+        assert!(
+            state.consensus_gap() < init_gap,
+            "gap {} -> {}",
+            init_gap,
+            state.consensus_gap()
+        );
+    }
+
+    #[test]
+    fn huge_step_size_diverges_with_error() {
+        let (spec, data) = tiny_problem();
+        let mut engine = NativeEngine::new();
+        let cfg = SolverConfig {
+            schedule: crate::solver::StepSchedule { a: 10.0, b: 0.0 },
+            max_iters: 5000,
+            eval_every: 100,
+            ..Default::default()
+        };
+        let driver = SequentialDriver::new(spec, cfg);
+        let err = driver.run(&mut engine, &data.data.train);
+        assert!(
+            matches!(err, Err(Error::Diverged { .. })),
+            "expected divergence, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let (spec, data) = tiny_problem();
+        let mut engine = NativeEngine::new();
+        let cfg = SolverConfig { max_iters: 123, eval_every: 1000, ..fast_cfg() };
+        let driver = SequentialDriver::new(spec, cfg);
+        let (report, _) = driver.run(&mut engine, &data.data.train).unwrap();
+        assert_eq!(report.iters, 123);
+        assert!(!report.converged);
+    }
+}

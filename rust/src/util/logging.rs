@@ -1,0 +1,61 @@
+//! Minimal `log` backend for the CLI, examples, and benches.
+//!
+//! Prints `LEVEL target: message` lines to stderr with a relative
+//! timestamp. Level comes from `GRIDMC_LOG` (error|warn|info|debug|
+//! trace) or the explicit argument.
+
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    max_level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.max_level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        eprintln!(
+            "{:>8.3}s {:>5} {}",
+            t.as_secs_f64(),
+            record.level(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops. `default` is used
+/// unless `GRIDMC_LOG` overrides it.
+pub fn init(default: &str) {
+    let level = std::env::var("GRIDMC_LOG").unwrap_or_else(|_| default.to_string());
+    let filter = match level.to_ascii_lowercase().as_str() {
+        "off" => log::LevelFilter::Off,
+        "error" => log::LevelFilter::Error,
+        "warn" => log::LevelFilter::Warn,
+        "debug" => log::LevelFilter::Debug,
+        "trace" => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = Box::new(StderrLogger { start: Instant::now(), max_level: filter });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(filter);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init("info");
+        super::init("debug"); // second call must not panic
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,7 @@
+//! Small std-only utilities (the build environment is offline, so
+//! substrates that would normally be crates.io dependencies live here).
+
+pub mod logging;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,196 @@
+//! Integration: full-system flows through the public API.
+//!
+//! These tests exercise the composition the examples rely on: dataset →
+//! partition → driver (sequential and parallel gossip) → convergence →
+//! culmination → RMSE, plus cross-driver parity and config round trips.
+
+use gridmc::config::{presets, DatasetConfig, DriverChoice, ExperimentConfig};
+use gridmc::data::SyntheticConfig;
+use gridmc::engine::NativeEngine;
+use gridmc::experiments;
+use gridmc::gossip::ParallelDriver;
+use gridmc::grid::GridSpec;
+use gridmc::solver::{SequentialDriver, SolverConfig, StepSchedule};
+
+fn fast_cfg(iters: u64) -> SolverConfig {
+    SolverConfig {
+        rho: 10.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 8e-3, b: 1e-4 },
+        max_iters: iters,
+        eval_every: (iters / 8).max(1),
+        abs_tol: 1e-9,
+        rel_tol: 1e-6,
+        patience: 3,
+        seed: 42,
+        normalize: true,
+    }
+}
+
+#[test]
+fn sequential_full_pipeline_learns() {
+    let data = SyntheticConfig {
+        m: 60,
+        n: 48,
+        rank: 3,
+        train_fraction: 0.5,
+        test_fraction: 0.15,
+        noise_std: 0.0,
+        seed: 8,
+    }
+    .generate();
+    let spec = GridSpec::new(60, 48, 3, 2, 3);
+    let mut engine = NativeEngine::new();
+    let mut cfg = fast_cfg(25_000);
+    cfg.rho = 30.0; // tighter consensus → better universal factors
+    let driver = SequentialDriver::new(spec, cfg);
+    let (report, state) = driver.run(&mut engine, &data.data.train).unwrap();
+
+    assert!(report.curve.orders_of_reduction() > 2.0, "{:?}", report.curve.points);
+    // SGD bounces between evals; the overall trend is what matters and
+    // is already pinned by orders_of_reduction above. Additionally the
+    // floor must be far below the early curve.
+    let (_, last) = report.curve.last().unwrap();
+    assert!(last < report.curve.initial().unwrap() / 50.0, "{:?}", report.curve.points);
+    let rmse = state.rmse(&data.data.test);
+    assert!(rmse < 0.3, "test rmse {rmse}");
+    // Consensus must be well on its way.
+    assert!(state.consensus_gap() < 2.0, "gap {}", state.consensus_gap());
+}
+
+#[test]
+fn sequential_and_parallel_both_converge_same_problem() {
+    let data = SyntheticConfig {
+        m: 48,
+        n: 48,
+        rank: 3,
+        train_fraction: 0.5,
+        test_fraction: 0.2,
+        noise_std: 0.0,
+        seed: 9,
+    }
+    .generate();
+    let spec = GridSpec::new(48, 48, 4, 4, 3);
+    let cfg = fast_cfg(6000);
+
+    let mut engine = NativeEngine::new();
+    let (seq, seq_state) =
+        SequentialDriver::new(spec, cfg.clone()).run(&mut engine, &data.data.train).unwrap();
+
+    let (par, par_state) = ParallelDriver::new(spec, cfg, 4)
+        .run(Box::new(NativeEngine::new()), &data.data.train)
+        .unwrap();
+
+    // Different sampling order ⇒ different trajectories, but both must
+    // reach low cost and comparable RMSE.
+    let seq_rmse = seq_state.rmse(&data.data.test);
+    let par_rmse = par_state.rmse(&data.data.test);
+    assert!(seq.final_cost < seq.curve.initial().unwrap() / 100.0);
+    assert!(par.final_cost < par.curve.initial().unwrap() / 100.0);
+    assert!(
+        (seq_rmse - par_rmse).abs() < 0.2,
+        "seq {seq_rmse} vs par {par_rmse}"
+    );
+}
+
+#[test]
+fn experiment_config_file_round_trip_runs() {
+    // Write a TOML config to disk, load it back through the public
+    // entry point, and run it end to end.
+    let mut cfg = presets::exp(1).unwrap();
+    if let DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+        s.m = 40;
+        s.n = 40;
+        s.train_fraction = 0.5;
+    }
+    cfg.grid.p = 2;
+    cfg.grid.q = 2;
+    cfg.grid.rank = 3;
+    cfg.solver = fast_cfg(1500);
+
+    let dir = std::env::temp_dir().join("gridmc-e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(&path, cfg.to_toml().unwrap()).unwrap();
+
+    let loaded = ExperimentConfig::from_file(&path).unwrap();
+    let outcome = experiments::run_experiment(&loaded).unwrap();
+    assert!(outcome.report.final_cost < outcome.report.curve.initial().unwrap());
+    assert!(outcome.test_rmse.is_finite());
+}
+
+#[test]
+fn parallel_driver_with_uneven_grid() {
+    // Non-square grid + ragged blocks (50 % 3 != 0) through the agent
+    // network: exercises padding + role mapping under concurrency.
+    let data = SyntheticConfig {
+        m: 50,
+        n: 34,
+        rank: 2,
+        train_fraction: 0.6,
+        test_fraction: 0.1,
+        noise_std: 0.0,
+        seed: 10,
+    }
+    .generate();
+    let spec = GridSpec::new(50, 34, 3, 4, 2);
+    let (report, state) = ParallelDriver::new(spec, fast_cfg(4000), 3)
+        .run(Box::new(NativeEngine::new()), &data.data.train)
+        .unwrap();
+    assert!(report.final_cost < report.curve.initial().unwrap() / 50.0);
+    assert!(state.rmse(&data.data.test) < 0.5);
+}
+
+#[test]
+fn gen_data_and_reload_via_config() {
+    // DatasetConfig::File path: generate ratings, write a CSV the loader
+    // can parse, reload through a config.
+    let data = gridmc::data::RatingsConfig {
+        users: 120,
+        items: 90,
+        num_ratings: 4000,
+        name: "t".into(),
+        ..Default::default()
+    }
+    .generate();
+    let dir = std::env::temp_dir().join("gridmc-e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ratings.csv");
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&path).unwrap();
+        writeln!(f, "userId,movieId,rating,timestamp").unwrap();
+        for (i, j, v) in data.train.iter().chain(data.test.iter()) {
+            writeln!(f, "{i},{j},{v},0").unwrap();
+        }
+    }
+    let ds = DatasetConfig::File {
+        path: path.to_string_lossy().into_owned(),
+        train_fraction: 0.8,
+        seed: 3,
+    }
+    .load()
+    .unwrap();
+    assert_eq!(ds.train.nnz() + ds.test.nnz(), data.train.nnz() + data.test.nnz());
+    assert!(ds.m <= 120 && ds.n <= 90);
+}
+
+#[test]
+fn preset_smoke_all_six_experiments_validate() {
+    for n in 1..=6 {
+        let cfg = presets::exp(n).unwrap();
+        let (m, nn) = cfg.dataset.dims().unwrap();
+        let spec = cfg.grid_spec(m, nn);
+        spec.validate().unwrap();
+        // The manifest must cover every synthetic experiment's shape
+        // when artifacts are built.
+        if let Ok(manifest) = gridmc::runtime::ArtifactManifest::load("artifacts") {
+            let (mb, nb) = spec.block_shape();
+            assert!(
+                manifest.covers(mb, nb, spec.rank),
+                "exp{n}: no artifact for {mb}x{nb} r{}",
+                spec.rank
+            );
+        }
+    }
+}

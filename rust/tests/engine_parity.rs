@@ -1,0 +1,191 @@
+//! Integration: the AOT XLA engine must agree with the native oracle.
+//!
+//! This is the load-bearing cross-layer test of the whole architecture:
+//! the HLO text emitted by `python/compile/aot.py` (JAX structure
+//! update over the Pallas masked-gradient kernel, interpret mode),
+//! compiled and executed by the Rust PJRT runtime, must produce the
+//! same numbers as the pure-Rust `NativeEngine` implementation of the
+//! same math — across structure kinds, coefficients and ρ/λ settings.
+//!
+//! Requires `make artifacts` (tests skip with a note otherwise). The
+//! `parity` manifest variant is a 50×40 rank-3 block grid.
+
+use gridmc::data::{CooMatrix, SyntheticConfig};
+use gridmc::engine::{Engine, NativeEngine, NativeMode, StructureParams, XlaEngine};
+use gridmc::grid::{BlockPartition, GridSpec, NormalizationCoeffs, Structure};
+use gridmc::model::FactorState;
+use gridmc::solver::{SequentialDriver, SolverConfig, StepSchedule};
+
+const TOL: f32 = 2e-4;
+
+fn artifacts_built() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.tsv").exists();
+    if !ok {
+        eprintln!("skipping xla parity test: run `make artifacts` first");
+    }
+    ok
+}
+
+/// 100×80 matrix on a 2×2 grid → 50×40 blocks (the `parity` variant).
+fn parity_setup() -> (GridSpec, CooMatrix) {
+    let spec = GridSpec::new(100, 80, 2, 2, 3);
+    let data = SyntheticConfig {
+        m: 100,
+        n: 80,
+        rank: 3,
+        train_fraction: 0.3,
+        test_fraction: 0.1,
+        noise_std: 0.1,
+        seed: 99,
+    }
+    .generate();
+    (spec, data.data.train)
+}
+
+fn engines(spec: &GridSpec, train: &CooMatrix) -> (NativeEngine, XlaEngine) {
+    let part = BlockPartition::new(*spec, train).unwrap();
+    let mut native = NativeEngine::with_mode(NativeMode::Dense);
+    native.prepare(&part).unwrap();
+    let mut xla = XlaEngine::from_default_artifacts(spec).unwrap();
+    xla.prepare(&part).unwrap();
+    (native, xla)
+}
+
+#[test]
+fn structure_update_parity_all_structures() {
+    if !artifacts_built() {
+        return;
+    }
+    let (spec, train) = parity_setup();
+    let (native, xla) = engines(&spec, &train);
+    let state = FactorState::init_random(spec, 5);
+    let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+
+    for structure in Structure::enumerate(spec.p, spec.q) {
+        let roles = structure.roles();
+        let params = StructureParams::build(1e3, 1e-9, 5e-4, &coeffs, &roles);
+        let factors = [
+            (state.u(roles.anchor), state.w(roles.anchor)),
+            (state.u(roles.horizontal), state.w(roles.horizontal)),
+            (state.u(roles.vertical), state.w(roles.vertical)),
+        ];
+        let a = native.structure_update(&roles, factors, &params).unwrap();
+        let b = xla.structure_update(&roles, factors, &params).unwrap();
+        for k in 0..3 {
+            let du = a[k].0.max_abs_diff(&b[k].0);
+            let dw = a[k].1.max_abs_diff(&b[k].1);
+            assert!(du < TOL, "{structure} block {k}: U diff {du}");
+            assert!(dw < TOL, "{structure} block {k}: W diff {dw}");
+        }
+    }
+}
+
+#[test]
+fn structure_update_parity_extreme_params() {
+    if !artifacts_built() {
+        return;
+    }
+    let (spec, train) = parity_setup();
+    let (native, xla) = engines(&spec, &train);
+    let state = FactorState::init_random(spec, 11);
+    let roles = Structure::lower(1, 1).roles();
+
+    for (rho, lam, gamma) in [
+        (0.0f32, 0.0f32, 1e-3f32),
+        (1e4, 1e-2, 1e-5),
+        (1.0, 1e-9, 0.0),
+    ] {
+        let params = StructureParams {
+            rho,
+            lam,
+            gamma,
+            cf: [1.0, 0.5, 0.25],
+            cu: 0.5,
+            cw: 1.0,
+        };
+        let factors = [
+            (state.u(roles.anchor), state.w(roles.anchor)),
+            (state.u(roles.horizontal), state.w(roles.horizontal)),
+            (state.u(roles.vertical), state.w(roles.vertical)),
+        ];
+        let a = native.structure_update(&roles, factors, &params).unwrap();
+        let b = xla.structure_update(&roles, factors, &params).unwrap();
+        for k in 0..3 {
+            assert!(
+                a[k].0.max_abs_diff(&b[k].0) < TOL,
+                "rho={rho} lam={lam} gamma={gamma} block {k} U"
+            );
+            assert!(
+                a[k].1.max_abs_diff(&b[k].1) < TOL,
+                "rho={rho} lam={lam} gamma={gamma} block {k} W"
+            );
+        }
+    }
+}
+
+#[test]
+fn block_cost_parity() {
+    if !artifacts_built() {
+        return;
+    }
+    let (spec, train) = parity_setup();
+    let (native, xla) = engines(&spec, &train);
+    let state = FactorState::init_random(spec, 21);
+    for id in spec.blocks() {
+        let a = native.block_cost(id, state.u(id), state.w(id), 1e-4).unwrap();
+        let b = xla.block_cost(id, state.u(id), state.w(id), 1e-4).unwrap();
+        let rel = (a - b).abs() / a.abs().max(1.0);
+        assert!(rel < 1e-4, "block {id}: native {a} vs xla {b}");
+    }
+}
+
+#[test]
+fn predict_parity() {
+    if !artifacts_built() {
+        return;
+    }
+    let (spec, train) = parity_setup();
+    let (native, xla) = engines(&spec, &train);
+    let state = FactorState::init_random(spec, 31);
+    let id = gridmc::grid::BlockId::new(0, 1);
+    let a = native.predict_block(state.u(id), state.w(id)).unwrap();
+    let b = xla.predict_block(state.u(id), state.w(id)).unwrap();
+    assert!(a.max_abs_diff(&b) < TOL);
+}
+
+#[test]
+fn short_training_run_parity() {
+    // 200 SGD iterations through each engine from the same seed must
+    // produce near-identical cost trajectories (f32 round-off only).
+    if !artifacts_built() {
+        return;
+    }
+    let (spec, train) = parity_setup();
+    let cfg = SolverConfig {
+        rho: 10.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 5e-3, b: 1e-6 },
+        max_iters: 200,
+        eval_every: 50,
+        abs_tol: 0.0,
+        rel_tol: 0.0,
+        patience: u32::MAX,
+        seed: 77,
+        normalize: true,
+    };
+    let driver = SequentialDriver::new(spec, cfg);
+
+    let mut native = NativeEngine::with_mode(NativeMode::Dense);
+    let (rep_n, state_n) = driver.run(&mut native, &train).unwrap();
+    let mut xla = XlaEngine::from_default_artifacts(&spec).unwrap();
+    let (rep_x, state_x) = driver.run(&mut xla, &train).unwrap();
+
+    assert_eq!(rep_n.iters, rep_x.iters);
+    for ((it_n, c_n), (it_x, c_x)) in rep_n.curve.points.iter().zip(&rep_x.curve.points) {
+        assert_eq!(it_n, it_x);
+        let rel = (c_n - c_x).abs() / c_n.abs().max(1.0);
+        assert!(rel < 1e-3, "iter {it_n}: native {c_n} vs xla {c_x}");
+    }
+    let id = gridmc::grid::BlockId::new(1, 0);
+    assert!(state_n.u(id).max_abs_diff(state_x.u(id)) < 1e-2);
+}

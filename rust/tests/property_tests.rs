@@ -1,0 +1,409 @@
+//! Property-style tests over randomized instances (hand-rolled sweeps —
+//! the offline build has no proptest; `util::Rng` provides the seeded
+//! case generator, and every failure message includes the case seed).
+//!
+//! Invariants covered:
+//! * partition routing is a bijection onto block-local coordinates;
+//! * structure enumeration/validity/role geometry for arbitrary grids;
+//! * normalization counts conserve mass and match the sampler;
+//! * a small-γ structure update never increases the structure cost;
+//! * native sparse and dense modes agree on random instances;
+//! * schedule rounds are conflict-free and cover each epoch exactly.
+
+use gridmc::data::{CooMatrix, SyntheticConfig};
+use gridmc::engine::{Engine, NativeEngine, NativeMode, StructureParams};
+use gridmc::gossip::{conflicts, ScheduleBuilder};
+use gridmc::grid::{
+    BlockPartition, GridSpec, NormalizationCoeffs, Structure, StructureSampler,
+};
+use gridmc::model::FactorState;
+use gridmc::util::Rng;
+
+/// Deterministic per-case RNG stream.
+fn case_rng(case: u64) -> Rng {
+    Rng::seed_from_u64(0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+fn random_grid(rng: &mut Rng) -> GridSpec {
+    let p = 2 + rng.gen_range(5); // 2..=6
+    let q = 2 + rng.gen_range(5);
+    let mb = 3 + rng.gen_range(10);
+    let nb = 3 + rng.gen_range(10);
+    // Deliberately often-ragged: m need not divide evenly.
+    let m = p * mb - rng.gen_range(mb.min(3));
+    let n = q * nb - rng.gen_range(nb.min(3));
+    GridSpec::new(m, n, p, q, 1 + rng.gen_range(4))
+}
+
+fn random_coo(rng: &mut Rng, m: usize, n: usize, density: f64) -> CooMatrix {
+    let mut coo = CooMatrix::new(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            if rng.bool(density) {
+                coo.push(i as u32, j as u32, rng.normal_f32(1.0)).unwrap();
+            }
+        }
+    }
+    coo
+}
+
+#[test]
+fn prop_partition_routes_every_entry_exactly_once() {
+    for case in 0..30u64 {
+        let mut rng = case_rng(case);
+        let spec = random_grid(&mut rng);
+        let coo = random_coo(&mut rng, spec.m, spec.n, 0.15);
+        let part = BlockPartition::new(spec, &coo).unwrap();
+        assert_eq!(part.total_nnz(), coo.nnz(), "case {case}: nnz conserved");
+        // Every entry lands in the right block at the right local coords.
+        for (i, j, v) in coo.iter() {
+            let id = spec.block_of(i as usize, j as usize);
+            let (r0, c0) = spec.block_origin(id);
+            let found = part.coo(id).iter().any(|(li, lj, lv)| {
+                li as usize == i as usize - r0 && lj as usize == j as usize - c0 && lv == v
+            });
+            assert!(found, "case {case}: entry ({i},{j}) missing from {id}");
+        }
+    }
+}
+
+#[test]
+fn prop_structures_valid_and_roles_consistent() {
+    for case in 0..50u64 {
+        let mut rng = case_rng(case);
+        let spec = random_grid(&mut rng);
+        let all = Structure::enumerate(spec.p, spec.q);
+        assert_eq!(all.len(), 2 * (spec.p - 1) * (spec.q - 1), "case {case}");
+        for s in &all {
+            assert!(s.is_valid(spec.p, spec.q), "case {case}: {s}");
+            let roles = s.roles();
+            // All three blocks in range and distinct.
+            let blocks = roles.blocks();
+            for b in blocks {
+                assert!(b.i < spec.p && b.j < spec.q, "case {case}: {s} block {b}");
+            }
+            assert_ne!(blocks[0], blocks[1]);
+            assert_ne!(blocks[0], blocks[2]);
+            assert_ne!(blocks[1], blocks[2]);
+            // Edges are unit grid edges incident to the anchor.
+            let (ul, ur) = roles.u_edge();
+            assert_eq!(ul.i, ur.i);
+            assert_eq!(ul.j + 1, ur.j);
+            let (wt, wb) = roles.w_edge();
+            assert_eq!(wt.j, wb.j);
+            assert_eq!(wt.i + 1, wb.i);
+        }
+    }
+}
+
+#[test]
+fn prop_normalization_mass_conservation() {
+    for case in 0..40u64 {
+        let mut rng = case_rng(case);
+        let spec = random_grid(&mut rng);
+        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+        let n_struct = 2 * (spec.p - 1) * (spec.q - 1);
+        assert_eq!(
+            coeffs.f_block_counts().iter().sum::<u32>() as usize,
+            3 * n_struct,
+            "case {case}"
+        );
+        assert_eq!(
+            coeffs.u_block_counts().iter().sum::<u32>() as usize,
+            2 * n_struct,
+            "case {case}"
+        );
+        assert_eq!(
+            coeffs.w_block_counts().iter().sum::<u32>() as usize,
+            2 * n_struct,
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_sampler_distribution_matches_counts() {
+    for case in 0..5u64 {
+        let mut rng = case_rng(case);
+        let spec = random_grid(&mut rng);
+        let mut sampler = StructureSampler::new(spec.p, spec.q, case);
+        let draws = 30_000;
+        let tally = sampler.empirical_f_counts(spec.p, spec.q, draws);
+        let analytic = NormalizationCoeffs::new(spec.p, spec.q).f_block_counts();
+        let n_struct = (2 * (spec.p - 1) * (spec.q - 1)) as f64;
+        for k in 0..spec.num_blocks() {
+            let expect = draws as f64 * analytic[k] as f64 / n_struct;
+            assert!(
+                (tally[k] as f64 - expect).abs() < 6.0 * expect.sqrt().max(6.0),
+                "case {case} block {k}: {} vs {expect}",
+                tally[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_small_step_never_increases_structure_cost() {
+    for case in 0..15u64 {
+        let mut rng = case_rng(case);
+        let spec = random_grid(&mut rng);
+        let coo = random_coo(&mut rng, spec.m, spec.n, 0.3);
+        let part = BlockPartition::new(spec, &coo).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&part).unwrap();
+        let state = FactorState::init_random(spec, case);
+        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+
+        let all = Structure::enumerate(spec.p, spec.q);
+        let s = all[rng.gen_range(all.len())];
+        let roles = s.roles();
+        // γ small relative to the data scale keeps this a descent step.
+        let params = StructureParams::build(1.0, 1e-9, 1e-5, &coeffs, &roles);
+        let cost = |f: [(&gridmc::data::DenseMatrix, &gridmc::data::DenseMatrix); 3]| -> f64 {
+            roles
+                .blocks()
+                .iter()
+                .zip(f.iter())
+                .map(|(id, (u, w))| engine.block_cost(*id, u, w, 1e-9).unwrap())
+                .sum::<f64>()
+                + params.rho as f64
+                    * (f[0].0.sub(f[1].0).unwrap().frob_sq()
+                        + f[0].1.sub(f[2].1).unwrap().frob_sq())
+        };
+        let before = [
+            (state.u(roles.anchor), state.w(roles.anchor)),
+            (state.u(roles.horizontal), state.w(roles.horizontal)),
+            (state.u(roles.vertical), state.w(roles.vertical)),
+        ];
+        let c0 = cost(before);
+        let out = engine.structure_update(&roles, before, &params).unwrap();
+        let c1 = cost([
+            (&out[0].0, &out[0].1),
+            (&out[1].0, &out[1].1),
+            (&out[2].0, &out[2].1),
+        ]);
+        assert!(
+            c1 <= c0 * (1.0 + 1e-6),
+            "case {case} {s}: cost rose {c0} -> {c1}"
+        );
+    }
+}
+
+#[test]
+fn prop_native_modes_agree() {
+    for case in 0..15u64 {
+        let mut rng = case_rng(case);
+        let spec = random_grid(&mut rng);
+        let coo = random_coo(&mut rng, spec.m, spec.n, 0.25);
+        let part = BlockPartition::new(spec, &coo).unwrap();
+        let mut dense = NativeEngine::with_mode(NativeMode::Dense);
+        dense.prepare(&part).unwrap();
+        let mut sparse = NativeEngine::with_mode(NativeMode::Sparse);
+        sparse.prepare(&part).unwrap();
+        let state = FactorState::init_random(spec, case ^ 7);
+
+        let all = Structure::enumerate(spec.p, spec.q);
+        let s = all[rng.gen_range(all.len())];
+        let roles = s.roles();
+        let params = StructureParams {
+            rho: rng.f32() * 100.0,
+            lam: rng.f32() * 1e-3,
+            gamma: 1e-4,
+            cf: [rng.f32(), rng.f32(), rng.f32()],
+            cu: rng.f32(),
+            cw: rng.f32(),
+        };
+        let f = [
+            (state.u(roles.anchor), state.w(roles.anchor)),
+            (state.u(roles.horizontal), state.w(roles.horizontal)),
+            (state.u(roles.vertical), state.w(roles.vertical)),
+        ];
+        let a = dense.structure_update(&roles, f, &params).unwrap();
+        let b = sparse.structure_update(&roles, f, &params).unwrap();
+        for k in 0..3 {
+            assert!(a[k].0.max_abs_diff(&b[k].0) < 1e-4, "case {case} block {k} U");
+            assert!(a[k].1.max_abs_diff(&b[k].1) < 1e-4, "case {case} block {k} W");
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_rounds_conflict_free_and_complete() {
+    for case in 0..25u64 {
+        let mut rng = case_rng(case);
+        let spec = random_grid(&mut rng);
+        let mut builder = ScheduleBuilder::new(spec, case);
+        let rounds = builder.epoch();
+        let mut seen = std::collections::HashSet::new();
+        for round in &rounds {
+            for (a, s) in round.iter().enumerate() {
+                assert!(seen.insert(*s), "case {case}: duplicate {s}");
+                for other in &round[a + 1..] {
+                    assert!(!conflicts(s, other), "case {case}: {s} vs {other}");
+                }
+            }
+        }
+        assert_eq!(seen.len(), 2 * (spec.p - 1) * (spec.q - 1), "case {case}");
+    }
+}
+
+#[test]
+fn prop_training_monotone_orders_on_easy_problems() {
+    // Fully-observed tiny problems must drop cost by orders quickly.
+    for case in 0..4u64 {
+        let d = SyntheticConfig {
+            m: 30,
+            n: 30,
+            rank: 2,
+            train_fraction: 0.9,
+            test_fraction: 0.05,
+            noise_std: 0.0,
+            seed: case,
+        }
+        .generate();
+        let spec = GridSpec::new(30, 30, 2, 2, 2);
+        let mut engine = NativeEngine::new();
+        let cfg = gridmc::solver::SolverConfig {
+            rho: 10.0,
+            schedule: gridmc::solver::StepSchedule { a: 2e-2, b: 1e-5 },
+            max_iters: 4000,
+            eval_every: 1000,
+            abs_tol: 1e-10,
+            rel_tol: 1e-8,
+            ..Default::default()
+        };
+        let (report, _) = gridmc::solver::SequentialDriver::new(spec, cfg)
+            .run(&mut engine, &d.data.train)
+            .unwrap();
+        assert!(
+            report.curve.orders_of_reduction() > 2.0,
+            "case {case}: {:?}",
+            report.curve.points
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense kernel properties: the three matmul orientations against a
+// naive triple-loop reference, across random shapes.
+
+fn naive_matmul(a: &gridmc::data::DenseMatrix, b: &gridmc::data::DenseMatrix,
+                ta: bool, tb: bool) -> gridmc::data::DenseMatrix {
+    let (am, ak) = if ta { (a.cols(), a.rows()) } else { (a.rows(), a.cols()) };
+    let (bk, bn) = if tb { (b.cols(), b.rows()) } else { (b.rows(), b.cols()) };
+    assert_eq!(ak, bk);
+    gridmc::data::DenseMatrix::from_fn(am, bn, |i, j| {
+        (0..ak)
+            .map(|k| {
+                let av = if ta { a.get(k, i) } else { a.get(i, k) };
+                let bv = if tb { b.get(j, k) } else { b.get(k, j) };
+                av * bv
+            })
+            .sum()
+    })
+}
+
+fn random_dense(rng: &mut Rng, r: usize, c: usize) -> gridmc::data::DenseMatrix {
+    gridmc::data::DenseMatrix::from_fn(r, c, |_, _| rng.normal_f32(1.0))
+}
+
+#[test]
+fn prop_matmul_orientations_match_naive() {
+    for case in 0..25u64 {
+        let mut rng = case_rng(case ^ 0xD15E);
+        let (m, n, k) = (1 + rng.gen_range(20), 1 + rng.gen_range(20), 1 + rng.gen_range(12));
+        let a = random_dense(&mut rng, m, k);
+        let b_nt = random_dense(&mut rng, n, k); // for A·Bᵀ
+        let b_nn = random_dense(&mut rng, k, n); // for A·B
+        let a_tn = random_dense(&mut rng, k, m); // for Aᵀ·B
+        let b_tn = random_dense(&mut rng, k, n);
+
+        let got = a.matmul_nt(&b_nt).unwrap();
+        assert!(got.max_abs_diff(&naive_matmul(&a, &b_nt, false, true)) < 1e-4,
+                "case {case} nt");
+        let got = a.matmul_nn(&b_nn).unwrap();
+        assert!(got.max_abs_diff(&naive_matmul(&a, &b_nn, false, false)) < 1e-4,
+                "case {case} nn");
+        let got = a_tn.matmul_tn(&b_tn).unwrap();
+        assert!(got.max_abs_diff(&naive_matmul(&a_tn, &b_tn, true, false)) < 1e-4,
+                "case {case} tn");
+    }
+}
+
+#[test]
+fn prop_csr_roundtrip_preserves_entries() {
+    for case in 0..25u64 {
+        let mut rng = case_rng(case ^ 0xC54);
+        let (m, n) = (1 + rng.gen_range(30), 1 + rng.gen_range(30));
+        let coo = random_coo(&mut rng, m, n, 0.2);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), coo.nnz(), "case {case}");
+        let mut from_coo: Vec<_> = coo.iter().collect();
+        from_coo.sort_by_key(|&(i, j, _)| (i, j));
+        let from_csr: Vec<_> = csr.iter().collect();
+        assert_eq!(from_coo, from_csr, "case {case}");
+    }
+}
+
+#[test]
+fn prop_culmination_consensus_fixture() {
+    // If every replica of a grid row/column holds the exact slice of a
+    // planted factor, assemble() must reproduce the planted factors and
+    // RMSE on planted entries must be ~0 — for arbitrary grids.
+    for case in 0..15u64 {
+        let mut rng = case_rng(case ^ 0xA55);
+        let spec = random_grid(&mut rng);
+        let r = spec.rank;
+        let u_star = random_dense(&mut rng, spec.m, r);
+        let w_star = random_dense(&mut rng, spec.n, r);
+        let mut state = FactorState::init_random(spec, case);
+        let (mb, nb) = spec.block_shape();
+        for id in spec.blocks() {
+            let (r0, c0) = spec.block_origin(id);
+            state.set_u(id, u_star.padded_submatrix(r0, 0, mb, r));
+            state.set_w(id, w_star.padded_submatrix(c0, 0, nb, r));
+        }
+        assert!(state.consensus_gap() < 1e-6, "case {case}");
+        let mut test = CooMatrix::new(spec.m, spec.n);
+        for _ in 0..50 {
+            let i = rng.gen_range(spec.m);
+            let j = rng.gen_range(spec.n);
+            let mut v = 0.0f32;
+            for k in 0..r {
+                v += u_star.get(i, k) * w_star.get(j, k);
+            }
+            let _ = test.push(i as u32, j as u32, v);
+        }
+        assert!(state.rmse(&test) < 1e-4, "case {case}: rmse {}", state.rmse(&test));
+    }
+}
+
+#[test]
+fn prop_centering_preserves_rmse_semantics() {
+    // RMSE of factors against centered data == RMSE of (pred + μ)
+    // against raw data, by construction.
+    for case in 0..10u64 {
+        let mut rng = case_rng(case ^ 0xCE17E);
+        let users = 30 + rng.gen_range(30);
+        let items = 30 + rng.gen_range(30);
+        let d = gridmc::data::RatingsConfig {
+            users,
+            items,
+            num_ratings: 600,
+            name: "t".into(),
+            seed: case,
+            ..Default::default()
+        }
+        .generate();
+        let (centered, mu) = d.centered();
+        assert!((1.0..5.0).contains(&(mu as f64)), "case {case}: mu {mu}");
+        assert_eq!(centered.train.nnz(), d.train.nnz());
+        // Spot check: centered value + mu == raw value.
+        let raw: Vec<_> = d.test.iter().collect();
+        let cen: Vec<_> = centered.test.iter().collect();
+        for (&(i, j, v), &(ci, cj, cv)) in raw.iter().zip(&cen) {
+            assert_eq!((i, j), (ci, cj));
+            assert!((cv + mu - v).abs() < 1e-5, "case {case}");
+        }
+    }
+}

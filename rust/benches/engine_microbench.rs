@@ -4,20 +4,37 @@
 //! Times one structure update (the inner loop of Algorithm 1) per
 //! engine/mode at the paper's Exp#3 block shape (100×100, rank 5), plus
 //! the cost evaluation and the XLA end-to-end dispatch. Reports median /
-//! p10 / p90 over many iterations after a warmup. These are the numbers
-//! the perf pass in EXPERIMENTS.md §Perf iterates on.
+//! p10 / p90 over many iterations after a warmup, and writes the same
+//! stats machine-readably to `BENCH_engine_microbench.json` (git rev +
+//! timestamp included) so perf PRs are comparable over time. These are
+//! the numbers the perf pass in PERF.md iterates on.
+//!
+//! The `structure_update/*` rows measure the workspace hot path the
+//! drivers actually run (`structure_update_into`); the
+//! `structure_update_alloc/*` rows keep the allocating convenience path
+//! visible so the zero-allocation win stays measured.
 //!
 //! Run: `cargo bench --bench engine_microbench`
 
 use std::time::Instant;
 
 use gridmc::data::SyntheticConfig;
-use gridmc::engine::{Engine, NativeEngine, NativeMode, StructureParams, XlaEngine};
+use gridmc::engine::{
+    Engine, EngineWorkspace, NativeEngine, NativeMode, StructureParams, XlaEngine,
+};
 use gridmc::grid::{BlockPartition, GridSpec, NormalizationCoeffs, Structure, StructureRoles};
 use gridmc::model::FactorState;
 
-/// Time `f` `iters` times (after `warmup` runs); report percentiles.
-fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) {
+/// Percentile summary of one benchmark, microseconds.
+struct Stats {
+    median: f64,
+    p10: f64,
+    p90: f64,
+    iters: usize,
+}
+
+/// Time `f` `iters` times (after `warmup` runs); print + return stats.
+fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
     for _ in 0..warmup {
         f();
     }
@@ -29,13 +46,12 @@ fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) {
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let stats = Stats { median: pick(0.5), p10: pick(0.1), p90: pick(0.9), iters };
     println!(
         "{name:<44} median {:>9.1} us   p10 {:>9.1}   p90 {:>9.1}   ({} iters)",
-        pick(0.5),
-        pick(0.1),
-        pick(0.9),
-        iters
+        stats.median, stats.p10, stats.p90, iters
     );
+    stats
 }
 
 struct Fixture {
@@ -63,14 +79,88 @@ fn fixture(spec: GridSpec) -> (BlockPartition, Fixture) {
     (part, Fixture { state, roles, params })
 }
 
-fn run_update(engine: &dyn Engine, fx: &Fixture) {
-    let f = [
-        (fx.state.u(fx.roles.anchor), fx.state.w(fx.roles.anchor)),
-        (fx.state.u(fx.roles.horizontal), fx.state.w(fx.roles.horizontal)),
-        (fx.state.u(fx.roles.vertical), fx.state.w(fx.roles.vertical)),
-    ];
+fn factors_of(fx: &Fixture) -> [(&gridmc::data::DenseMatrix, &gridmc::data::DenseMatrix); 3] {
+    fx.state.structure_factors(&fx.roles)
+}
+
+/// The hot path: workspace-reusing update (what drivers run).
+fn run_update_into(engine: &dyn Engine, fx: &Fixture, ws: &mut EngineWorkspace) {
+    let f = factors_of(fx);
+    engine.structure_update_into(&fx.roles, f, &fx.params, ws).unwrap();
+    std::hint::black_box(ws.output(0).0.as_slice());
+}
+
+/// The allocating convenience path (fresh matrices per call).
+fn run_update_alloc(engine: &dyn Engine, fx: &Fixture) {
+    let f = factors_of(fx);
     let out = engine.structure_update(&fx.roles, f, &fx.params).unwrap();
     std::hint::black_box(&out);
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// `secs`-since-epoch → ISO-8601 UTC (civil-from-days algorithm; the
+/// offline build has no chrono).
+fn iso8601_utc(secs: u64) -> String {
+    let days = (secs / 86_400) as i64;
+    let rem = secs % 86_400;
+    let (h, mi, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}T{h:02}:{mi:02}:{s:02}Z")
+}
+
+fn write_json(
+    path: &str,
+    spec: &GridSpec,
+    results: &[(String, Stats)],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (mb, nb) = spec.block_shape();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"engine_microbench\",")?;
+    writeln!(f, "  \"git_rev\": \"{}\",", git_rev())?;
+    writeln!(f, "  \"timestamp_unix\": {unix},")?;
+    writeln!(f, "  \"timestamp_utc\": \"{}\",", iso8601_utc(unix))?;
+    writeln!(
+        f,
+        "  \"geometry\": {{ \"mb\": {mb}, \"nb\": {nb}, \"rank\": {} }},",
+        spec.rank
+    )?;
+    writeln!(f, "  \"unit\": \"microseconds\",")?;
+    writeln!(f, "  \"kernels\": {{")?;
+    for (k, (name, s)) in results.iter().enumerate() {
+        let comma = if k + 1 == results.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    \"{name}\": {{ \"median_us\": {:.3}, \"p10_us\": {:.3}, \"p90_us\": {:.3}, \"iters\": {} }}{comma}",
+            s.median, s.p10, s.p90, s.iters
+        )?;
+    }
+    writeln!(f, "  }}")?;
+    writeln!(f, "}}")?;
+    Ok(())
 }
 
 fn main() {
@@ -79,29 +169,54 @@ fn main() {
     let (part, fx) = fixture(spec);
     println!("== engine_microbench: structure update @ 100x100 r5 (Exp#3 geometry) ==");
 
+    let mut results: Vec<(String, Stats)> = Vec::new();
+    let record = |results: &mut Vec<(String, Stats)>, name: &str, s: Stats| {
+        results.push((name.to_string(), s));
+    };
+
     let mut sparse = NativeEngine::with_mode(NativeMode::Sparse);
     sparse.prepare(&part).unwrap();
-    bench("structure_update/native-sparse", 20, 300, || run_update(&sparse, &fx));
+    let mut ws = EngineWorkspace::new();
+    let s = bench("structure_update/native-sparse", 20, 300, || {
+        run_update_into(&sparse, &fx, &mut ws)
+    });
+    record(&mut results, "structure_update/native-sparse", s);
+    let s = bench("structure_update_alloc/native-sparse", 20, 300, || {
+        run_update_alloc(&sparse, &fx)
+    });
+    record(&mut results, "structure_update_alloc/native-sparse", s);
 
     let mut dense = NativeEngine::with_mode(NativeMode::Dense);
     dense.prepare(&part).unwrap();
-    bench("structure_update/native-dense", 20, 300, || run_update(&dense, &fx));
+    let mut ws_d = EngineWorkspace::new();
+    let s = bench("structure_update/native-dense", 20, 300, || {
+        run_update_into(&dense, &fx, &mut ws_d)
+    });
+    record(&mut results, "structure_update/native-dense", s);
+    let s = bench("structure_update_alloc/native-dense", 20, 300, || {
+        run_update_alloc(&dense, &fx)
+    });
+    record(&mut results, "structure_update_alloc/native-dense", s);
 
     if std::path::Path::new("artifacts/manifest.tsv").exists() {
         match XlaEngine::from_default_artifacts(&spec) {
             Ok(mut xla) => {
                 xla.prepare(&part).unwrap();
-                bench("structure_update/xla-pjrt (AOT pallas)", 10, 150, || {
-                    run_update(&xla, &fx)
+                // One identifier for stdout AND the JSON trajectory —
+                // PERF.md treats kernel names as stable keys.
+                let s = bench("structure_update/xla-pjrt", 10, 150, || {
+                    run_update_alloc(&xla, &fx)
                 });
+                record(&mut results, "structure_update/xla-pjrt", s);
 
                 let id = gridmc::grid::BlockId::new(0, 0);
-                bench("block_cost/xla-pjrt", 10, 150, || {
+                let s = bench("block_cost/xla-pjrt", 10, 150, || {
                     let c = xla
                         .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
                         .unwrap();
                     std::hint::black_box(c);
                 });
+                record(&mut results, "block_cost/xla-pjrt", s);
             }
             Err(e) => eprintln!("skipping xla benches: {e}"),
         }
@@ -110,16 +225,24 @@ fn main() {
     }
 
     let id = gridmc::grid::BlockId::new(0, 0);
-    bench("block_cost/native-sparse", 20, 300, || {
+    let s = bench("block_cost/native-sparse", 20, 300, || {
         let c = sparse
             .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
             .unwrap();
         std::hint::black_box(c);
     });
-    bench("block_cost/native-dense", 20, 300, || {
+    record(&mut results, "block_cost/native-sparse", s);
+    let s = bench("block_cost/native-dense", 20, 300, || {
         let c = dense
             .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
             .unwrap();
         std::hint::black_box(c);
     });
+    record(&mut results, "block_cost/native-dense", s);
+
+    let out = "BENCH_engine_microbench.json";
+    match write_json(out, &spec, &results) {
+        Ok(()) => println!("\nwrote {out} ({} kernels)", results.len()),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

@@ -4,14 +4,51 @@
 //! Deliberately minimal: GridMC's heavy math lives in the AOT-compiled
 //! XLA artifacts; [`DenseMatrix`] exists for block storage, the
 //! [`NativeEngine`](crate::engine::NativeEngine) fallback/oracle, and
-//! test fixtures. The three matmul variants are written as `k`-innermost
-//! loops over row slices so LLVM auto-vectorizes them (see
-//! EXPERIMENTS.md §Perf).
+//! test fixtures. The three matmul orientations are register-tiled
+//! `k`-innermost kernels with fixed-rank monomorphizations for
+//! `k ≤ 16` (the paper's rank regime) and `_into` variants that write
+//! caller-owned buffers, so the engine hot path allocates nothing in
+//! steady state (PERF.md).
 
 use crate::{Error, Result};
 
+/// Largest inner dimension for which the matmul kernels use a
+/// compile-time-unrolled fixed-rank micro-kernel. Paper experiments use
+/// rank ≤ 15; anything larger falls back to the dynamic kernels.
+pub(crate) const MAX_FIXED_RANK: usize = 16;
+
+/// Monomorphize a rank-generic kernel over `1..=MAX_FIXED_RANK`.
+/// Callers must guard `$r` to that range (the `_ =>` arm is a bug trap,
+/// not a fallback — dynamic-rank kernels are separate functions).
+macro_rules! dispatch_rank {
+    ($r:expr, $kernel:ident ( $($arg:expr),* $(,)? )) => {
+        match $r {
+            1 => $kernel::<1>($($arg),*),
+            2 => $kernel::<2>($($arg),*),
+            3 => $kernel::<3>($($arg),*),
+            4 => $kernel::<4>($($arg),*),
+            5 => $kernel::<5>($($arg),*),
+            6 => $kernel::<6>($($arg),*),
+            7 => $kernel::<7>($($arg),*),
+            8 => $kernel::<8>($($arg),*),
+            9 => $kernel::<9>($($arg),*),
+            10 => $kernel::<10>($($arg),*),
+            11 => $kernel::<11>($($arg),*),
+            12 => $kernel::<12>($($arg),*),
+            13 => $kernel::<13>($($arg),*),
+            14 => $kernel::<14>($($arg),*),
+            15 => $kernel::<15>($($arg),*),
+            16 => $kernel::<16>($($arg),*),
+            other => unreachable!(
+                "dispatch_rank: rank {other} outside 1..=MAX_FIXED_RANK (caller must guard)"
+            ),
+        }
+    };
+}
+pub(crate) use dispatch_rank;
+
 /// Row-major dense matrix of `f32`.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct DenseMatrix {
     rows: usize,
     cols: usize,
@@ -86,6 +123,42 @@ impl DenseMatrix {
         self.data[i * self.cols + j] = v;
     }
 
+    /// Reshape in place to `rows × cols` and zero every element,
+    /// reusing the existing allocation when capacity allows. This is
+    /// the workspace-buffer reset: after the first growth to a
+    /// geometry's high-water mark it never allocates again.
+    pub fn reset_shape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape in place *without* clearing: when the shape already
+    /// matches this is a no-op (contents preserved — callers that use
+    /// this promise to overwrite every element). Allocation behaviour
+    /// as [`DenseMatrix::reset_shape`].
+    pub(crate) fn ensure_shape(&mut self, rows: usize, cols: usize) {
+        if self.rows == rows && self.cols == cols {
+            return;
+        }
+        self.reset_shape(rows, cols);
+    }
+
+    /// Set every element to `v`.
+    pub fn fill(&mut self, v: f32) {
+        for x in &mut self.data {
+            *x = v;
+        }
+    }
+
+    /// Copy `other`'s contents into `self`. Shapes must match.
+    pub fn copy_from(&mut self, other: &DenseMatrix) -> Result<()> {
+        self.check_same_shape(other, "copy_from")?;
+        self.data.copy_from_slice(&other.data);
+        Ok(())
+    }
+
     /// Squared Frobenius norm `‖A‖_F²`.
     pub fn frob_sq(&self) -> f64 {
         self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
@@ -100,6 +173,17 @@ impl DenseMatrix {
         Ok(())
     }
 
+    /// `self ← self + alpha · (a − b)` without materializing the
+    /// difference (consensus-edge epilogue; PERF.md).
+    pub fn axpy_diff(&mut self, alpha: f32, a: &DenseMatrix, b: &DenseMatrix) -> Result<()> {
+        self.check_same_shape(a, "axpy_diff")?;
+        self.check_same_shape(b, "axpy_diff")?;
+        for ((o, x), y) in self.data.iter_mut().zip(&a.data).zip(&b.data) {
+            *o += alpha * (x - y);
+        }
+        Ok(())
+    }
+
     /// Element-wise difference `self − other`.
     pub fn sub(&self, other: &DenseMatrix) -> Result<DenseMatrix> {
         self.check_same_shape(other, "sub")?;
@@ -109,37 +193,51 @@ impl DenseMatrix {
 
     /// `A · Bᵀ` where `A: (m×k)`, `B: (n×k)` → `(m×n)`.
     ///
-    /// This is the factor-product orientation (`U Wᵀ`); both operands are
-    /// walked along contiguous rows.
+    /// This is the factor-product orientation (`U Wᵀ`); both operands
+    /// are walked along contiguous rows.
     pub fn matmul_nt(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        let mut out = DenseMatrix::default();
+        self.matmul_nt_into(b, &mut out)?;
+        Ok(out)
+    }
+
+    /// `A · Bᵀ` into a caller-owned buffer (resized as needed, no
+    /// allocation once warm). Every output element is overwritten.
+    pub fn matmul_nt_into(&self, b: &DenseMatrix, out: &mut DenseMatrix) -> Result<()> {
         if self.cols != b.cols {
             return Err(Error::Shape(format!(
                 "matmul_nt: inner dims {} vs {}",
                 self.cols, b.cols
             )));
         }
-        let (m, n, k) = (self.rows, b.rows, self.cols);
-        let mut out = DenseMatrix::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = out.row_mut(i);
-            for j in 0..n {
-                let brow = b.row(j);
-                let mut acc = 0.0f32;
-                for l in 0..k {
-                    acc += arow[l] * brow[l];
-                }
-                orow[j] = acc;
-            }
+        let (n, k) = (b.rows, self.cols);
+        if k == 0 || n == 0 {
+            // Degenerate product: all zeros / empty. Also keeps the
+            // kernels' chunks_exact(n) calls away from chunk size 0.
+            out.reset_shape(self.rows, n);
+            return Ok(());
         }
-        Ok(out)
+        out.ensure_shape(self.rows, n);
+        if k <= MAX_FIXED_RANK {
+            dispatch_rank!(k, gemm_nt_fixed(&self.data, &b.data, &mut out.data, n));
+        } else {
+            gemm_nt_dyn(&self.data, &b.data, &mut out.data, n, k);
+        }
+        Ok(())
     }
 
     /// `A · B` where `A: (m×k)`, `B: (k×n)` → `(m×n)`.
     ///
-    /// Written as rank-1 accumulation over `A`'s rows so the inner loop
-    /// streams `B`'s rows contiguously.
+    /// Rank-1 accumulation over `A`'s rows, jammed four `k`-panels at a
+    /// time so each output row is streamed once per panel.
     pub fn matmul_nn(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        let mut out = DenseMatrix::default();
+        self.matmul_nn_into(b, &mut out)?;
+        Ok(out)
+    }
+
+    /// `A · B` into a caller-owned buffer (zeroed, then accumulated).
+    pub fn matmul_nn_into(&self, b: &DenseMatrix, out: &mut DenseMatrix) -> Result<()> {
         if self.cols != b.rows {
             return Err(Error::Shape(format!(
                 "matmul_nn: inner dims {} vs {}",
@@ -147,28 +245,24 @@ impl DenseMatrix {
             )));
         }
         let (m, n, k) = (self.rows, b.cols, self.cols);
-        let mut out = DenseMatrix::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = out.row_mut(i);
-            for (l, &a_il) in arow.iter().enumerate().take(k) {
-                if a_il == 0.0 {
-                    continue; // masked residuals are mostly zero
-                }
-                let brow = b.row(l);
-                for j in 0..n {
-                    orow[j] += a_il * brow[j];
-                }
-            }
-        }
-        Ok(out)
+        out.reset_shape(m, n);
+        gemm_nn_jammed(&self.data, &b.data, &mut out.data, m, n, k);
+        Ok(())
     }
 
     /// `Aᵀ · B` where `A: (k×m)`, `B: (k×n)` → `(m×n)`.
     ///
-    /// Accumulates outer products row-by-row of `A`/`B`, so no transpose
-    /// is materialized.
+    /// Accumulates outer products four rows of `A`/`B` at a time, so no
+    /// transpose is materialized and each output row is touched once
+    /// per panel.
     pub fn matmul_tn(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        let mut out = DenseMatrix::default();
+        self.matmul_tn_into(b, &mut out)?;
+        Ok(out)
+    }
+
+    /// `Aᵀ · B` into a caller-owned buffer (zeroed, then accumulated).
+    pub fn matmul_tn_into(&self, b: &DenseMatrix, out: &mut DenseMatrix) -> Result<()> {
         if self.rows != b.rows {
             return Err(Error::Shape(format!(
                 "matmul_tn: inner dims {} vs {}",
@@ -176,21 +270,9 @@ impl DenseMatrix {
             )));
         }
         let (m, n, k) = (self.cols, b.cols, self.rows);
-        let mut out = DenseMatrix::zeros(m, n);
-        for l in 0..k {
-            let arow = self.row(l);
-            let brow = b.row(l);
-            for (i, &a_li) in arow.iter().enumerate().take(m) {
-                if a_li == 0.0 {
-                    continue;
-                }
-                let orow = out.row_mut(i);
-                for j in 0..n {
-                    orow[j] += a_li * brow[j];
-                }
-            }
-        }
-        Ok(out)
+        out.reset_shape(m, n);
+        gemm_tn_jammed(&self.data, &b.data, &mut out.data, m, n, k);
+        Ok(())
     }
 
     /// Scale every element in place.
@@ -231,6 +313,137 @@ impl DenseMatrix {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+}
+
+// ---------------------------------------------------------------------
+// GEMM kernels. All take raw row-major slices; shape validation happens
+// in the `DenseMatrix` wrappers. The fixed-rank variants pin the inner
+// dimension at compile time: `&[f32; R]` row views keep the whole
+// reduction in registers and let LLVM fully unroll + vectorize.
+
+/// `out = A·Bᵀ`, inner dim fixed at `R`. `a: m×R`, `b: n×R`,
+/// `out: m×n`; every output element is stored (no pre-zero needed).
+/// Output columns are processed in 4-wide micro-tiles: four independent
+/// dot products share the `A`-row registers.
+fn gemm_nt_fixed<const R: usize>(a: &[f32], b: &[f32], out: &mut [f32], n: usize) {
+    for (orow, arow) in out.chunks_exact_mut(n).zip(a.chunks_exact(R)) {
+        let ar: &[f32; R] = arow.try_into().expect("A row of length R");
+        let mut oc = orow.chunks_exact_mut(4);
+        let mut bc = b.chunks_exact(4 * R);
+        for (og, bg) in (&mut oc).zip(&mut bc) {
+            let mut acc = [0.0f32; 4];
+            for (t, slot) in acc.iter_mut().enumerate() {
+                let br: &[f32; R] =
+                    bg[t * R..(t + 1) * R].try_into().expect("B row of length R");
+                let mut s = 0.0f32;
+                for l in 0..R {
+                    s += ar[l] * br[l];
+                }
+                *slot = s;
+            }
+            og.copy_from_slice(&acc);
+        }
+        for (o, br) in oc
+            .into_remainder()
+            .iter_mut()
+            .zip(bc.remainder().chunks_exact(R))
+        {
+            let br: &[f32; R] = br.try_into().expect("B row of length R");
+            let mut s = 0.0f32;
+            for l in 0..R {
+                s += ar[l] * br[l];
+            }
+            *o = s;
+        }
+    }
+}
+
+/// `out = A·Bᵀ` with a runtime inner dimension (rank > MAX_FIXED_RANK).
+fn gemm_nt_dyn(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize) {
+    debug_assert!(k > 0, "k = 0 handled by the wrapper");
+    for (orow, arow) in out.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+        for (o, brow) in orow.iter_mut().zip(b.chunks_exact(k)) {
+            let mut s = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// `out += A·B` over pre-zeroed `out`. Four `k`-panels are jammed so
+/// each output row is read/written once per panel instead of once per
+/// rank-1 update.
+fn gemm_nn_jammed(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut l = 0;
+        while l + 4 <= k {
+            let (a0, a1, a2, a3) = (arow[l], arow[l + 1], arow[l + 2], arow[l + 3]);
+            if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                let b0 = &b[l * n..(l + 1) * n];
+                let b1 = &b[(l + 1) * n..(l + 2) * n];
+                let b2 = &b[(l + 2) * n..(l + 3) * n];
+                let b3 = &b[(l + 3) * n..(l + 4) * n];
+                for j in 0..n {
+                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+            }
+            l += 4;
+        }
+        while l < k {
+            let al = arow[l];
+            if al != 0.0 {
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    orow[j] += al * brow[j];
+                }
+            }
+            l += 1;
+        }
+    }
+}
+
+/// `out += Aᵀ·B` over pre-zeroed `out` (`a: k×m`, `b: k×n`). Jams four
+/// outer-product rows per pass; zero coefficients (masked residuals)
+/// skip whole panels.
+fn gemm_tn_jammed(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    let mut l = 0;
+    while l + 4 <= k {
+        let a0 = &a[l * m..(l + 1) * m];
+        let a1 = &a[(l + 1) * m..(l + 2) * m];
+        let a2 = &a[(l + 2) * m..(l + 3) * m];
+        let a3 = &a[(l + 3) * m..(l + 4) * m];
+        let b0 = &b[l * n..(l + 1) * n];
+        let b1 = &b[(l + 1) * n..(l + 2) * n];
+        let b2 = &b[(l + 2) * n..(l + 3) * n];
+        let b3 = &b[(l + 3) * n..(l + 4) * n];
+        for i in 0..m {
+            let (c0, c1, c2, c3) = (a0[i], a1[i], a2[i], a3[i]);
+            if c0 != 0.0 || c1 != 0.0 || c2 != 0.0 || c3 != 0.0 {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += c0 * b0[j] + c1 * b1[j] + c2 * b2[j] + c3 * b3[j];
+                }
+            }
+        }
+        l += 4;
+    }
+    while l < k {
+        let arow = &a[l * m..(l + 1) * m];
+        let brow = &b[l * n..(l + 1) * n];
+        for (i, &a_li) in arow.iter().enumerate() {
+            if a_li != 0.0 {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a_li * brow[j];
+                }
+            }
+        }
+        l += 1;
     }
 }
 
@@ -284,12 +497,95 @@ mod tests {
     }
 
     #[test]
+    fn matmul_degenerate_dims_yield_empty_or_zero() {
+        // Zero-row / zero-col operands must produce empty or all-zero
+        // results, never panic (chunk size 0 regression guard).
+        let a = m(2, 3, &[1.; 6]);
+        let empty_b = DenseMatrix::zeros(0, 3);
+        let got = a.matmul_nt(&empty_b).unwrap();
+        assert_eq!((got.rows(), got.cols()), (2, 0));
+        let no_k = DenseMatrix::zeros(2, 0);
+        let got = no_k.matmul_nt(&DenseMatrix::zeros(5, 0)).unwrap();
+        assert_eq!(got, DenseMatrix::zeros(2, 5));
+        let got = a.matmul_nn(&DenseMatrix::zeros(3, 0)).unwrap();
+        assert_eq!((got.rows(), got.cols()), (2, 0));
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer_across_shapes() {
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = m(3, 2, &[1., 0., 0., 1., 1., 1.]);
+        let mut out = DenseMatrix::default();
+        a.matmul_nt_into(&b, &mut out).unwrap();
+        assert_eq!(out, m(2, 3, &[1., 2., 3., 3., 4., 7.]));
+        // Reuse the same buffer for a differently shaped product — the
+        // result must not see stale values.
+        let c = m(2, 2, &[5., 6., 7., 8.]);
+        a.matmul_nt_into(&c, &mut out).unwrap();
+        assert_eq!(out, m(2, 2, &[17., 23., 39., 53.]));
+        a.matmul_nn_into(&c, &mut out).unwrap();
+        assert_eq!(out, m(2, 2, &[19., 22., 43., 50.]));
+        a.matmul_tn_into(&c, &mut out).unwrap();
+        assert_eq!(out, m(2, 2, &[26., 30., 38., 44.]));
+    }
+
+    #[test]
+    fn fixed_rank_boundary_matches_dyn() {
+        // k = 16 takes the fixed micro-kernel, k = 17 the dynamic one;
+        // both must agree with an explicit reference at radius 1e-4.
+        for k in [15usize, 16, 17, 19] {
+            let a = DenseMatrix::from_fn(5, k, |i, l| ((i * 31 + l * 7) % 13) as f32 - 6.0);
+            let b = DenseMatrix::from_fn(6, k, |j, l| ((j * 17 + l * 3) % 11) as f32 - 5.0);
+            let got = a.matmul_nt(&b).unwrap();
+            let want = DenseMatrix::from_fn(5, 6, |i, j| {
+                (0..k).map(|l| a.get(i, l) * b.get(j, l)).sum()
+            });
+            assert!(got.max_abs_diff(&want) < 1e-4, "k={k}");
+        }
+    }
+
+    #[test]
     fn frob_and_axpy() {
         let mut a = m(1, 3, &[3., 0., 4.]);
         assert_eq!(a.frob_sq(), 25.0);
         let b = m(1, 3, &[1., 1., 1.]);
         a.axpy(-1.0, &b).unwrap();
         assert_eq!(a, m(1, 3, &[2., -1., 3.]));
+    }
+
+    #[test]
+    fn axpy_diff_matches_sub_then_axpy() {
+        let mut x = m(2, 2, &[1., 2., 3., 4.]);
+        let a = m(2, 2, &[5., 5., 5., 5.]);
+        let b = m(2, 2, &[1., 2., 3., 4.]);
+        x.axpy_diff(2.0, &a, &b).unwrap();
+        assert_eq!(x, m(2, 2, &[9., 8., 7., 6.]));
+        let bad = m(1, 2, &[0., 0.]);
+        assert!(x.axpy_diff(1.0, &bad, &b).is_err());
+    }
+
+    #[test]
+    fn reset_shape_reuses_capacity() {
+        let mut a = m(4, 4, &[1.0; 16]);
+        let cap = a.data.capacity();
+        a.reset_shape(2, 3);
+        assert_eq!((a.rows(), a.cols()), (2, 3));
+        assert!(a.as_slice().iter().all(|&v| v == 0.0));
+        a.reset_shape(4, 4);
+        assert_eq!(a.data.capacity(), cap, "no realloc when shrinking then growing back");
+        assert!(a.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn copy_from_and_fill() {
+        let src = m(2, 2, &[1., 2., 3., 4.]);
+        let mut dst = DenseMatrix::zeros(2, 2);
+        dst.copy_from(&src).unwrap();
+        assert_eq!(dst, src);
+        dst.fill(7.0);
+        assert_eq!(dst, m(2, 2, &[7.; 4]));
+        let mut bad = DenseMatrix::zeros(3, 2);
+        assert!(bad.copy_from(&src).is_err());
     }
 
     #[test]

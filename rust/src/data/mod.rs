@@ -27,8 +27,10 @@ mod synthetic;
 pub use dense::DenseMatrix;
 pub use loader::{load_movielens, MovieLensFormat};
 pub use ratings::{RatingsConfig, RatingsPreset};
-pub use sparse::{CooMatrix, CsrMatrix};
+pub use sparse::{CooMatrix, CscView, CsrMatrix};
 pub use synthetic::{SyntheticConfig, SyntheticDataset};
+
+pub(crate) use dense::{dispatch_rank, MAX_FIXED_RANK};
 
 /// A dataset already split into train / test observed-entry sets.
 ///

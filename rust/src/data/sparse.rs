@@ -1,7 +1,11 @@
 //! Sparse matrix storage for observed-entry (ratings) data.
 //!
 //! [`CooMatrix`] is the interchange form (generators, loaders, splits);
-//! [`CsrMatrix`] is the compute form the sparse native engine iterates.
+//! [`CsrMatrix`] is the compute form the sparse native engine iterates;
+//! [`CscView`] is its column-major companion, built once per block at
+//! engine-prepare time so the `G_W` gradient pass can run column-major
+//! with a rank-length register accumulator instead of scattering into
+//! `G_W` rows (PERF.md).
 
 use crate::{Error, Result};
 
@@ -175,6 +179,84 @@ impl CsrMatrix {
             cols.iter().zip(vals).map(move |(&j, &v)| (i as u32, j, v))
         })
     }
+
+    /// Build the column-major companion view.
+    ///
+    /// Within each column, entries keep CSR traversal order (ascending
+    /// row), so a column-major accumulation visits exactly the same
+    /// float-addition sequence per output row as the legacy row-major
+    /// scatter — results are bit-identical.
+    pub fn to_csc(&self) -> CscView {
+        let nnz = self.nnz();
+        let mut colptr = vec![0u32; self.cols + 1];
+        for &j in &self.indices {
+            colptr[j as usize + 1] += 1;
+        }
+        for j in 0..self.cols {
+            colptr[j + 1] += colptr[j];
+        }
+        let mut next: Vec<u32> = colptr[..self.cols].to_vec();
+        let mut rowidx = vec![0u32; nnz];
+        let mut csr_to_csc = vec![0u32; nnz];
+        let mut t = 0usize;
+        for i in 0..self.rows {
+            let (cols, _) = self.row(i);
+            for &j in cols {
+                let pos = next[j as usize];
+                next[j as usize] += 1;
+                rowidx[pos as usize] = i as u32;
+                csr_to_csc[t] = pos;
+                t += 1;
+            }
+        }
+        CscView { cols: self.cols, colptr, rowidx, csr_to_csc }
+    }
+}
+
+/// Column-major index view of a [`CsrMatrix`] (structure only — values
+/// stay in the CSR). Two uses in the sparse gradient kernel:
+///
+/// * [`CscView::scatter_map`] places per-observation residuals computed
+///   during the row-major pass into CSC order;
+/// * [`CscView::col_range`] + [`CscView::row_indices`] then drive a
+///   fully sequential column-major `G_W` pass over them.
+#[derive(Debug, Clone)]
+pub struct CscView {
+    cols: usize,
+    /// Column start offsets, length `cols + 1`.
+    colptr: Vec<u32>,
+    /// Row index of each entry, in CSC order.
+    rowidx: Vec<u32>,
+    /// `csr_to_csc[t]` = CSC position of the `t`-th entry in CSR order.
+    csr_to_csc: Vec<u32>,
+}
+
+impl CscView {
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rowidx.len()
+    }
+
+    /// CSC position range of column `j`.
+    #[inline]
+    pub fn col_range(&self, j: usize) -> std::ops::Range<usize> {
+        self.colptr[j] as usize..self.colptr[j + 1] as usize
+    }
+
+    /// Row index of every entry, CSC order (slice with [`Self::col_range`]).
+    #[inline]
+    pub fn row_indices(&self) -> &[u32] {
+        &self.rowidx
+    }
+
+    /// CSR-position → CSC-position permutation.
+    #[inline]
+    pub fn scatter_map(&self) -> &[u32] {
+        &self.csr_to_csc
+    }
 }
 
 #[cfg(test)]
@@ -236,5 +318,58 @@ mod tests {
     fn mean_handles_empty() {
         assert_eq!(CooMatrix::new(2, 2).mean(), 0.0);
         assert!((sample().mean() - 2.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csc_view_transposes_csr() {
+        let csr = sample().to_csr();
+        let csc = csr.to_csc();
+        assert_eq!(csc.cols(), 4);
+        assert_eq!(csc.nnz(), csr.nnz());
+        // Rebuild (row, col) pairs column-major and compare against the
+        // transpose of the CSR triples.
+        let mut from_csc = Vec::new();
+        for j in 0..csc.cols() {
+            for &i in &csc.row_indices()[csc.col_range(j)] {
+                from_csc.push((i, j as u32));
+            }
+        }
+        let mut want: Vec<(u32, u32)> = csr.iter().map(|(i, j, _)| (i, j)).collect();
+        want.sort_by_key(|&(i, j)| (j, i));
+        assert_eq!(from_csc, want);
+    }
+
+    #[test]
+    fn csc_scatter_map_is_permutation() {
+        let csr = sample().to_csr();
+        let csc = csr.to_csc();
+        let mut seen = vec![false; csc.nnz()];
+        for &p in csc.scatter_map() {
+            assert!(!seen[p as usize], "duplicate CSC position {p}");
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Entry t in CSR order lands at a CSC position whose row index
+        // matches the CSR entry's row.
+        for (t, (i, j, _)) in csr.iter().enumerate() {
+            let pos = csc.scatter_map()[t] as usize;
+            assert_eq!(csc.row_indices()[pos], i);
+            assert!(csc.col_range(j as usize).contains(&pos));
+        }
+    }
+
+    #[test]
+    fn csc_columns_keep_ascending_row_order() {
+        // Multiple entries in one column must keep ascending row order
+        // (this pins the bit-identical accumulation order guarantee).
+        let coo = CooMatrix::from_triples(
+            4,
+            2,
+            [(3u32, 0u32, 1.0f32), (0, 0, 2.0), (2, 0, 3.0), (1, 1, 4.0)],
+        )
+        .unwrap();
+        let csc = coo.to_csr().to_csc();
+        let rows0: Vec<u32> = csc.row_indices()[csc.col_range(0)].to_vec();
+        assert_eq!(rows0, vec![0, 2, 3]);
     }
 }

@@ -28,7 +28,7 @@ pub use xla::XlaEngine;
 
 use crate::data::DenseMatrix;
 use crate::grid::{BlockId, BlockPartition, NormalizationCoeffs, StructureRoles};
-use crate::Result;
+use crate::{Error, Result};
 
 /// Scalar parameters of one structure update (paper Eq. 2/3 plus the
 /// step size and Figure-2 normalization coefficients).
@@ -86,6 +86,70 @@ pub type StructureFactors<'a> = [(&'a DenseMatrix, &'a DenseMatrix); 3];
 /// Updated factors in the same role order.
 pub type UpdatedFactors = [(DenseMatrix, DenseMatrix); 3];
 
+/// Reusable scratch for the engine hot path.
+///
+/// One workspace per caller (per gossip agent, per sequential driver),
+/// reused across every iteration: it owns the gradient buffers
+/// (`G_U`/`G_W` per role), the updated-factor output buffers, and the
+/// per-observation residual scratch of the sparse two-pass kernel.
+/// Buffers grow to the geometry's high-water mark on first use and are
+/// never reallocated afterwards, which is what makes
+/// [`Engine::structure_update_into`] zero-allocation in steady state
+/// (asserted by `tests/alloc_counting.rs`; design in PERF.md).
+///
+/// After a successful `structure_update_into`, the role-ordered updated
+/// factors are readable via [`EngineWorkspace::output`] or reclaimable
+/// in O(1) via [`EngineWorkspace::swap_output`] (swapping hands the
+/// caller's old factor buffers back to the workspace for reuse).
+#[derive(Debug, Default)]
+pub struct EngineWorkspace {
+    /// `(G_U, G_W)` gradient buffers, role order.
+    pub(crate) grads: [(DenseMatrix, DenseMatrix); 3],
+    /// Updated factors, role order (outputs of `structure_update_into`).
+    pub(crate) out: [(DenseMatrix, DenseMatrix); 3],
+    /// Per-observation residual-gradient scratch, one per role (used by
+    /// the sparse CSR→CSC two-pass kernel; empty in dense mode).
+    pub(crate) edata: [Vec<f32>; 3],
+}
+
+impl EngineWorkspace {
+    /// Empty workspace; buffers size themselves lazily on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Role-`k` updated factors `(U, W)`. Valid after the last
+    /// successful `structure_update_into` against this workspace.
+    pub fn output(&self, k: usize) -> (&DenseMatrix, &DenseMatrix) {
+        (&self.out[k].0, &self.out[k].1)
+    }
+
+    /// Role-`k` gradient buffers `(G_U, G_W)` — what the last
+    /// `masked_grads_into` wrote (diagnostics and tests).
+    pub fn grads(&self, k: usize) -> (&DenseMatrix, &DenseMatrix) {
+        (&self.grads[k].0, &self.grads[k].1)
+    }
+
+    /// O(1) exchange of the role-`k` output factors with caller-owned
+    /// matrices: the caller receives the updated factors, the workspace
+    /// receives the caller's old (same-shape) buffers for reuse.
+    pub fn swap_output(&mut self, k: usize, u: &mut DenseMatrix, w: &mut DenseMatrix) {
+        std::mem::swap(&mut self.out[k].0, u);
+        std::mem::swap(&mut self.out[k].1, w);
+    }
+
+    /// Move the outputs out, leaving empty buffers behind (the
+    /// allocating convenience path; hot callers use `swap_output`).
+    pub(crate) fn take_outputs(&mut self) -> UpdatedFactors {
+        std::mem::take(&mut self.out)
+    }
+
+    /// Store externally produced outputs (default trait impl path).
+    pub(crate) fn set_outputs(&mut self, out: UpdatedFactors) {
+        self.out = out;
+    }
+}
+
 /// A compute backend for the paper's block operations.
 pub trait Engine: Send + Sync {
     /// Backend label for logs and reports.
@@ -103,6 +167,50 @@ pub trait Engine: Send + Sync {
         factors: StructureFactors<'_>,
         params: &StructureParams,
     ) -> Result<UpdatedFactors>;
+
+    /// Workspace-reusing variant of [`Engine::structure_update`]: the
+    /// updated factors land in `ws` (read them with
+    /// [`EngineWorkspace::output`] / [`EngineWorkspace::swap_output`]).
+    ///
+    /// This is the hot-path entry point — the gossip agents and the
+    /// sequential driver call it every iteration with a long-lived
+    /// workspace. The default implementation delegates to the
+    /// allocating path (correct for device engines, which allocate on
+    /// the host boundary anyway); [`NativeEngine`] overrides it with a
+    /// zero-allocation fused-kernel implementation (PERF.md).
+    fn structure_update_into(
+        &self,
+        roles: &StructureRoles,
+        factors: StructureFactors<'_>,
+        params: &StructureParams,
+        ws: &mut EngineWorkspace,
+    ) -> Result<()> {
+        let out = self.structure_update(roles, factors, params)?;
+        ws.set_outputs(out);
+        Ok(())
+    }
+
+    /// Masked data-fit gradients of one block written into workspace
+    /// gradient slot `slot ∈ {0, 1, 2}` (read back via
+    /// [`EngineWorkspace::grads`]); returns the data-fit cost `f`.
+    ///
+    /// Only engines with a host-side gradient path implement this
+    /// (the [`NativeEngine`]); device engines return
+    /// [`Error::Unsupported`] since their gradients never materialize
+    /// host-side.
+    fn masked_grads_into(
+        &self,
+        _id: BlockId,
+        _u: &DenseMatrix,
+        _w: &DenseMatrix,
+        _slot: usize,
+        _ws: &mut EngineWorkspace,
+    ) -> Result<f64> {
+        Err(Error::Unsupported(format!(
+            "{}: masked_grads_into is not available on this engine",
+            self.name()
+        )))
+    }
 
     /// Block cost `f_ij + λ‖U_ij‖² + λ‖W_ij‖²` (the Table-2 summand).
     fn block_cost(
@@ -141,5 +249,79 @@ mod tests {
         assert_eq!(p.cf, [1.0; 3]);
         assert_eq!(p.cu, 1.0);
         assert_eq!(p.cw, 1.0);
+    }
+
+    /// Minimal engine relying on every default trait method: structure
+    /// updates return the inputs unchanged.
+    struct IdentityEngine;
+
+    impl Engine for IdentityEngine {
+        fn name(&self) -> &'static str {
+            "identity"
+        }
+        fn prepare(&mut self, _partition: &BlockPartition) -> Result<()> {
+            Ok(())
+        }
+        fn structure_update(
+            &self,
+            _roles: &StructureRoles,
+            factors: StructureFactors<'_>,
+            _params: &StructureParams,
+        ) -> Result<UpdatedFactors> {
+            Ok([
+                (factors[0].0.clone(), factors[0].1.clone()),
+                (factors[1].0.clone(), factors[1].1.clone()),
+                (factors[2].0.clone(), factors[2].1.clone()),
+            ])
+        }
+        fn block_cost(
+            &self,
+            _id: BlockId,
+            _u: &DenseMatrix,
+            _w: &DenseMatrix,
+            _lam: f32,
+        ) -> Result<f64> {
+            Ok(0.0)
+        }
+        fn predict_block(&self, u: &DenseMatrix, _w: &DenseMatrix) -> Result<DenseMatrix> {
+            Ok(u.clone())
+        }
+    }
+
+    #[test]
+    fn default_structure_update_into_fills_workspace() {
+        let eng = IdentityEngine;
+        let roles = Structure::upper(0, 0).roles();
+        let mats: Vec<DenseMatrix> = (0..6usize)
+            .map(|k| DenseMatrix::from_fn(3, 2, |i, j| (k * 10 + i * 2 + j) as f32))
+            .collect();
+        let factors: StructureFactors<'_> =
+            [(&mats[0], &mats[1]), (&mats[2], &mats[3]), (&mats[4], &mats[5])];
+        let mut ws = EngineWorkspace::new();
+        eng.structure_update_into(&roles, factors, &StructureParams::unnormalized(1.0, 0.0, 0.1), &mut ws)
+            .unwrap();
+        for k in 0..3 {
+            let (u, w) = ws.output(k);
+            assert_eq!(u, &mats[2 * k]);
+            assert_eq!(w, &mats[2 * k + 1]);
+        }
+        // swap_output hands back the update and takes the old buffers.
+        let mut my_u = DenseMatrix::zeros(3, 2);
+        let mut my_w = DenseMatrix::zeros(3, 2);
+        ws.swap_output(0, &mut my_u, &mut my_w);
+        assert_eq!(my_u, mats[0]);
+        assert_eq!(my_w, mats[1]);
+        assert_eq!(ws.output(0).0, &DenseMatrix::zeros(3, 2));
+    }
+
+    #[test]
+    fn default_masked_grads_into_is_unsupported() {
+        let eng = IdentityEngine;
+        let u = DenseMatrix::zeros(2, 2);
+        let mut ws = EngineWorkspace::new();
+        let err = eng
+            .masked_grads_into(BlockId::new(0, 0), &u, &u, 0, &mut ws)
+            .unwrap_err();
+        assert!(matches!(err, Error::Unsupported(_)), "{err}");
     }
 }

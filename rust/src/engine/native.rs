@@ -3,36 +3,52 @@
 //! Two data modes:
 //!
 //! * [`NativeMode::Dense`] — blocks materialized as padded `(X, M)`
-//!   dense pairs; the residual `R = M ⊙ (X − U Wᵀ)` and both gradient
-//!   GEMMs run dense, mirroring the L1 Pallas kernel exactly. Used for
-//!   parity tests against [`XlaEngine`](super::XlaEngine).
-//! * [`NativeMode::Sparse`] — blocks kept as CSR of observed entries;
-//!   residuals and gradients touch observed entries only. The right
+//!   dense pairs; residual, cost and both gradients come out of one
+//!   fused row-major pass (no residual matrix is materialized).
+//! * [`NativeMode::Sparse`] — blocks kept as CSR of observed entries
+//!   plus a CSC companion view; gradients run as a two-pass kernel
+//!   (row-major `G_U` + residual cache, then column-major `G_W`), each
+//!   pass accumulating into a rank-length register tile. The right
 //!   tool for ratings-scale data (1% dense), and the engine the Table-3
 //!   benches use at large scale.
 //!
 //! Both modes produce identical results up to f32 summation order
-//! (asserted by the `modes_agree` test).
+//! (asserted by the `modes_agree` test), and the workspace path
+//! ([`Engine::structure_update_into`]) is bit-identical to the
+//! allocating path (asserted by `prop_workspace_matches_allocating`).
+//!
+//! The hot path is zero-allocation in steady state: all scratch lives
+//! in the caller's [`EngineWorkspace`], the inner loops are
+//! monomorphized per rank (`rank ≤ 16`), and the update epilogue writes
+//! output buffers in place. Kernel design rationale and measured
+//! numbers live in PERF.md.
 
-use crate::data::{CsrMatrix, DenseMatrix};
+use crate::data::{dispatch_rank, CscView, CsrMatrix, DenseMatrix, MAX_FIXED_RANK};
 use crate::grid::{BlockId, BlockPartition, StructureRoles};
 use crate::{Error, Result};
 
-use super::{Engine, StructureFactors, StructureParams, UpdatedFactors};
+use super::{Engine, EngineWorkspace, StructureFactors, StructureParams, UpdatedFactors};
+
+/// Combined three-block work size (dense cells or sparse nnz) above
+/// which a structure's gradient passes fan out over scoped threads.
+/// Below it, thread spawn latency beats the win — the paper's Exp#3
+/// blocks (100×100) stay sequential.
+const DEFAULT_PAR_GRADS_THRESHOLD: usize = 1 << 17;
 
 /// Block storage strategy for the native engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum NativeMode {
     /// Materialize padded dense `(X, M)` per block.
     Dense,
-    /// Keep observed entries as CSR (default — scales to ratings data).
+    /// Keep observed entries as CSR + CSC view (default — scales to
+    /// ratings data).
     #[default]
     Sparse,
 }
 
 enum BlockData {
     Dense { x: DenseMatrix, mask: DenseMatrix },
-    Sparse(CsrMatrix),
+    Sparse { csr: CsrMatrix, csc: CscView },
 }
 
 /// Pure-Rust [`Engine`].
@@ -40,6 +56,7 @@ pub struct NativeEngine {
     mode: NativeMode,
     q: usize,
     blocks: Vec<BlockData>,
+    par_threshold: usize,
 }
 
 impl NativeEngine {
@@ -49,7 +66,22 @@ impl NativeEngine {
     }
 
     pub fn with_mode(mode: NativeMode) -> Self {
-        Self { mode, q: 0, blocks: Vec::new() }
+        Self {
+            mode,
+            q: 0,
+            blocks: Vec::new(),
+            par_threshold: DEFAULT_PAR_GRADS_THRESHOLD,
+        }
+    }
+
+    /// Override the work size at which a structure's three gradient
+    /// passes run on scoped threads: `0` forces the parallel path,
+    /// `usize::MAX` disables it. Note the parallel path spawns threads
+    /// (and therefore allocates); the zero-allocation guarantee of
+    /// `structure_update_into` holds on the sequential path.
+    pub fn with_parallel_threshold(mut self, threshold: usize) -> Self {
+        self.par_threshold = threshold;
+        self
     }
 
     fn block(&self, id: BlockId) -> Result<&BlockData> {
@@ -58,67 +90,137 @@ impl NativeEngine {
             .ok_or_else(|| Error::Shape(format!("block {id} not prepared")))
     }
 
-    /// `(G_U, G_W, f)` of the masked data-fit term for one block.
-    fn masked_grads(
+    /// Work estimate for the parallelism heuristic (0 if unprepared —
+    /// the real lookup error surfaces in the gradient pass).
+    fn block_work(&self, id: BlockId) -> usize {
+        match self.blocks.get(id.index(self.q)) {
+            Some(BlockData::Dense { x, .. }) => x.rows() * x.cols(),
+            Some(BlockData::Sparse { csr, .. }) => csr.nnz(),
+            None => 0,
+        }
+    }
+
+    /// `(G_U, G_W)` of the masked data-fit term for one block, written
+    /// into caller buffers; returns the data-fit cost `f`. The single
+    /// dispatch point for all four gradient kernels.
+    fn grads_into_slot(
         &self,
         id: BlockId,
         u: &DenseMatrix,
         w: &DenseMatrix,
-    ) -> Result<(DenseMatrix, DenseMatrix, f64)> {
-        match self.block(id)? {
-            BlockData::Dense { x, mask } => {
-                // R = M ⊙ (X − U Wᵀ)
-                let mut r = u.matmul_nt(w)?; // U Wᵀ
-                {
-                    let rs = r.as_mut_slice();
-                    let xs = x.as_slice();
-                    let ms = mask.as_slice();
-                    for k in 0..rs.len() {
-                        rs[k] = ms[k] * (xs[k] - rs[k]);
-                    }
-                }
-                let f = r.frob_sq();
-                let mut gu = r.matmul_nn(w)?; // R W
-                gu.scale(-2.0);
-                let mut gw = r.matmul_tn(u)?; // Rᵀ U
-                gw.scale(-2.0);
-                Ok((gu, gw, f))
-            }
-            BlockData::Sparse(csr) => {
-                let rank = u.cols();
-                let mut gu = DenseMatrix::zeros(u.rows(), rank);
-                let mut gw = DenseMatrix::zeros(w.rows(), rank);
-                let mut f = 0.0f64;
-                for i in 0..csr.rows() {
-                    let (cols, vals) = csr.row(i);
-                    if cols.is_empty() {
-                        continue;
-                    }
-                    let urow = &u.row(i)[..rank];
-                    let gurow = &mut gu.row_mut(i)[..rank];
-                    for (&j, &v) in cols.iter().zip(vals) {
-                        let wrow = &w.row(j as usize)[..rank];
-                        // Iterator zips elide bounds checks in the
-                        // rank-length inner loops (hot path; §Perf).
-                        let pred: f32 =
-                            urow.iter().zip(wrow).map(|(a, b)| a * b).sum();
-                        let e = v - pred; // residual at (i, j)
-                        f += (e as f64) * (e as f64);
-                        let ge = -2.0 * e;
-                        let gwrow = &mut gw.row_mut(j as usize)[..rank];
-                        for ((gu_k, gw_k), (&u_k, &w_k)) in gurow
-                            .iter_mut()
-                            .zip(gwrow.iter_mut())
-                            .zip(urow.iter().zip(wrow.iter()))
-                        {
-                            *gu_k += ge * w_k;
-                            *gw_k += ge * u_k;
-                        }
-                    }
-                }
-                Ok((gu, gw, f))
-            }
+        slot: &mut (DenseMatrix, DenseMatrix),
+        ge: &mut Vec<f32>,
+    ) -> Result<f64> {
+        let rank = u.cols();
+        if w.cols() != rank {
+            return Err(Error::Shape(format!(
+                "masked_grads: factor ranks differ ({rank} vs {})",
+                w.cols()
+            )));
         }
+        let (gu, gw) = slot;
+        gu.ensure_shape(u.rows(), rank);
+        gw.ensure_shape(w.rows(), rank);
+        let f = match self.block(id)? {
+            BlockData::Dense { x, mask } => {
+                if x.rows() != u.rows() || x.cols() != w.rows() {
+                    return Err(Error::Shape(format!(
+                        "masked_grads: block {id} is {}x{} but factors give {}x{}",
+                        x.rows(),
+                        x.cols(),
+                        u.rows(),
+                        w.rows()
+                    )));
+                }
+                if rank == 0 || x.cols() == 0 {
+                    // Degenerate shapes: gradients vanish, but the
+                    // data-fit cost (prediction ≡ 0) does not — keep
+                    // the f == block_cost(λ=0) invariant.
+                    gu.fill(0.0);
+                    gw.fill(0.0);
+                    x.as_slice()
+                        .iter()
+                        .zip(mask.as_slice())
+                        .map(|(&xv, &mv)| {
+                            let e = mv * xv;
+                            (e as f64) * (e as f64)
+                        })
+                        .sum()
+                } else if rank <= MAX_FIXED_RANK {
+                    dispatch_rank!(
+                        rank,
+                        dense_grads_fixed(
+                            x.as_slice(),
+                            mask.as_slice(),
+                            u.as_slice(),
+                            w.as_slice(),
+                            gu.as_mut_slice(),
+                            gw.as_mut_slice(),
+                            x.cols(),
+                        )
+                    )
+                } else {
+                    dense_grads_dyn(
+                        x.as_slice(),
+                        mask.as_slice(),
+                        u.as_slice(),
+                        w.as_slice(),
+                        gu.as_mut_slice(),
+                        gw.as_mut_slice(),
+                        x.cols(),
+                        rank,
+                    )
+                }
+            }
+            BlockData::Sparse { csr, csc } => {
+                if csr.rows() > u.rows() || csr.cols() > w.rows() {
+                    return Err(Error::Shape(format!(
+                        "masked_grads: block {id} csr {}x{} exceeds factors {}x{}",
+                        csr.rows(),
+                        csr.cols(),
+                        u.rows(),
+                        w.rows()
+                    )));
+                }
+                if rank == 0 {
+                    // See the dense arm: zero gradients, true cost.
+                    gu.fill(0.0);
+                    gw.fill(0.0);
+                    csr.iter()
+                        .map(|(_, _, v)| (v as f64) * (v as f64))
+                        .sum()
+                } else if rank <= MAX_FIXED_RANK {
+                    // Residual cache sized to this block's nnz; Vec
+                    // capacity only ever grows, so after one pass over
+                    // the blocks this never allocates again.
+                    if ge.len() != csr.nnz() {
+                        ge.resize(csr.nnz(), 0.0);
+                    }
+                    dispatch_rank!(
+                        rank,
+                        sparse_grads_fixed(
+                            csr,
+                            csc,
+                            u.as_slice(),
+                            w.as_slice(),
+                            gu.as_mut_slice(),
+                            gw.as_mut_slice(),
+                            ge.as_mut_slice(),
+                        )
+                    )
+                } else {
+                    sparse_grads_dyn(
+                        csr,
+                        u.as_slice(),
+                        w.as_slice(),
+                        gu.as_mut_slice(),
+                        gw.as_mut_slice(),
+                        rank,
+                    )
+                }
+            }
+        };
+        Ok(f)
     }
 }
 
@@ -146,7 +248,11 @@ impl Engine for NativeEngine {
                     let (x, mask) = partition.dense_block(id);
                     BlockData::Dense { x, mask }
                 }
-                NativeMode::Sparse => BlockData::Sparse(partition.csr_block(id)),
+                NativeMode::Sparse => {
+                    let csr = partition.csr_block(id);
+                    let csc = csr.to_csc();
+                    BlockData::Sparse { csr, csc }
+                }
             })
             .collect();
         Ok(())
@@ -158,65 +264,92 @@ impl Engine for NativeEngine {
         factors: StructureFactors<'_>,
         params: &StructureParams,
     ) -> Result<UpdatedFactors> {
+        // Allocating convenience path: one throwaway workspace. The
+        // drivers hold a long-lived workspace and call the `_into`
+        // variant directly.
+        let mut ws = EngineWorkspace::new();
+        self.structure_update_into(roles, factors, params, &mut ws)?;
+        Ok(ws.take_outputs())
+    }
+
+    fn structure_update_into(
+        &self,
+        roles: &StructureRoles,
+        factors: StructureFactors<'_>,
+        params: &StructureParams,
+        ws: &mut EngineWorkspace,
+    ) -> Result<()> {
         let ids = roles.blocks();
+        let EngineWorkspace { grads, out, edata } = ws;
+        let [g0, g1, g2] = grads;
+        let [e0, e1, e2] = edata;
+
+        // Per-block data-fit gradients — independent, so big structures
+        // fan out over scoped threads (one stays on this thread).
+        let work: usize = ids.iter().map(|id| self.block_work(*id)).sum();
+        let (r0, r1, r2) = if work >= self.par_threshold {
+            let (g1r, e1r) = (&mut *g1, &mut *e1);
+            let (g2r, e2r) = (&mut *g2, &mut *e2);
+            std::thread::scope(|s| {
+                let h1 = s.spawn(move || {
+                    self.grads_into_slot(ids[1], factors[1].0, factors[1].1, g1r, e1r)
+                });
+                let h2 = s.spawn(move || {
+                    self.grads_into_slot(ids[2], factors[2].0, factors[2].1, g2r, e2r)
+                });
+                let r0 = self.grads_into_slot(ids[0], factors[0].0, factors[0].1, g0, e0);
+                (
+                    r0,
+                    h1.join().expect("gradient thread panicked"),
+                    h2.join().expect("gradient thread panicked"),
+                )
+            })
+        } else {
+            (
+                self.grads_into_slot(ids[0], factors[0].0, factors[0].1, g0, e0),
+                self.grads_into_slot(ids[1], factors[1].0, factors[1].1, g1, e1),
+                self.grads_into_slot(ids[2], factors[2].0, factors[2].1, g2, e2),
+            )
+        };
+        r0?;
+        r1?;
+        r2?;
+
+        // Fused epilogue, one in-place pass per output matrix:
+        // P' = coef_p·P + coef_g·G ∓ step·(consensus diff), where
+        // coef_p folds the λ term (no clone/axpy chains — PERF.md).
         let gamma = params.gamma;
         let lam = params.lam;
-
-        // Per-block data-fit + λ gradients, then one fused pass per
-        // factor: P' = P − γ·cf·(G + 2λP) ∓ 2γρc·(consensus diff).
-        // Single traversal per output matrix — no clone/axpy chains in
-        // the hot loop (EXPERIMENTS.md §Perf).
-        let mut grads: Vec<(DenseMatrix, DenseMatrix)> = Vec::with_capacity(3);
-        for (id, (u, w)) in ids.iter().zip(factors.iter()) {
-            let (gu, gw, _) = self.masked_grads(*id, u, w)?;
-            grads.push((gu, gw));
-        }
-
         let step_u = 2.0 * params.rho * params.cu * gamma; // U consensus
         let step_w = 2.0 * params.rho * params.cw * gamma; // W consensus
         let (ua, uh) = (factors[0].0, factors[1].0);
         let (wa, wv) = (factors[0].1, factors[2].1);
 
-        // fused = p − γ·cf·(g + 2λp) − step·(a − b) elementwise; `sign`
-        // selects which side of the consensus edge this factor is on.
-        let fused = |p: &DenseMatrix,
-                     g: &DenseMatrix,
-                     cf: f32,
-                     step: f32,
-                     da: Option<(&DenseMatrix, &DenseMatrix)>|
-         -> DenseMatrix {
-            let ps = p.as_slice();
-            let gs = g.as_slice();
-            let coef_p = 1.0 - gamma * cf * 2.0 * lam;
-            let coef_g = -gamma * cf;
-            let mut out = Vec::with_capacity(ps.len());
-            match da {
-                None => {
-                    for i in 0..ps.len() {
-                        out.push(coef_p * ps[i] + coef_g * gs[i]);
-                    }
-                }
-                Some((a, b)) => {
-                    let az = a.as_slice();
-                    let bz = b.as_slice();
-                    for i in 0..ps.len() {
-                        out.push(
-                            coef_p * ps[i] + coef_g * gs[i] - step * (az[i] - bz[i]),
-                        );
-                    }
-                }
-            }
-            DenseMatrix::from_vec(p.rows(), p.cols(), out).expect("same shape")
-        };
+        fused_into(&mut out[0].0, factors[0].0, &g0.0, params.cf[0], gamma, lam, step_u, Some((ua, uh)));
+        fused_into(&mut out[0].1, factors[0].1, &g0.1, params.cf[0], gamma, lam, step_w, Some((wa, wv)));
+        fused_into(&mut out[1].0, factors[1].0, &g1.0, params.cf[1], gamma, lam, -step_u, Some((ua, uh)));
+        fused_into(&mut out[1].1, factors[1].1, &g1.1, params.cf[1], gamma, lam, 0.0, None);
+        fused_into(&mut out[2].0, factors[2].0, &g2.0, params.cf[2], gamma, lam, 0.0, None);
+        fused_into(&mut out[2].1, factors[2].1, &g2.1, params.cf[2], gamma, lam, -step_w, Some((wa, wv)));
+        Ok(())
+    }
 
-        let nu_a = fused(factors[0].0, &grads[0].0, params.cf[0], step_u, Some((ua, uh)));
-        let nw_a = fused(factors[0].1, &grads[0].1, params.cf[0], step_w, Some((wa, wv)));
-        let nu_h = fused(factors[1].0, &grads[1].0, params.cf[1], -step_u, Some((ua, uh)));
-        let nw_h = fused(factors[1].1, &grads[1].1, params.cf[1], 0.0, None);
-        let nu_v = fused(factors[2].0, &grads[2].0, params.cf[2], 0.0, None);
-        let nw_v = fused(factors[2].1, &grads[2].1, params.cf[2], -step_w, Some((wa, wv)));
-
-        Ok([(nu_a, nw_a), (nu_h, nw_h), (nu_v, nw_v)])
+    fn masked_grads_into(
+        &self,
+        id: BlockId,
+        u: &DenseMatrix,
+        w: &DenseMatrix,
+        slot: usize,
+        ws: &mut EngineWorkspace,
+    ) -> Result<f64> {
+        if slot >= 3 {
+            return Err(Error::Shape(format!(
+                "masked_grads_into: slot {slot} out of range 0..3"
+            )));
+        }
+        let pair = &mut ws.grads[slot];
+        let ge = &mut ws.edata[slot];
+        self.grads_into_slot(id, u, w, pair, ge)
     }
 
     fn block_cost(
@@ -226,30 +359,41 @@ impl Engine for NativeEngine {
         w: &DenseMatrix,
         lam: f32,
     ) -> Result<f64> {
+        if u.cols() != w.cols() {
+            return Err(Error::Shape(format!(
+                "block_cost: factor ranks differ ({} vs {})",
+                u.cols(),
+                w.cols()
+            )));
+        }
+        let rank = u.cols();
         let f = match self.block(id)? {
             BlockData::Dense { x, mask } => {
-                let pred = u.matmul_nt(w)?;
+                // Fused: no U Wᵀ reconstruction is materialized.
                 let mut acc = 0.0f64;
-                let (xs, ms, ps) = (x.as_slice(), mask.as_slice(), pred.as_slice());
-                for k in 0..xs.len() {
-                    let e = ms[k] * (xs[k] - ps[k]);
-                    acc += (e as f64) * (e as f64);
+                for i in 0..x.rows() {
+                    let urow = &u.row(i)[..rank];
+                    let xr = x.row(i);
+                    let mr = mask.row(i);
+                    for j in 0..x.cols() {
+                        let e = mr[j] * (xr[j] - dot(urow, &w.row(j)[..rank]));
+                        acc += (e as f64) * (e as f64);
+                    }
                 }
                 acc
             }
-            BlockData::Sparse(csr) => {
-                let rank = u.cols();
+            BlockData::Sparse { csr, .. } => {
                 let mut acc = 0.0f64;
                 for i in 0..csr.rows() {
                     let (cols, vals) = csr.row(i);
-                    let urow = u.row(i);
+                    if cols.is_empty() {
+                        continue;
+                    }
+                    let urow = &u.row(i)[..rank];
                     for (&j, &v) in cols.iter().zip(vals) {
-                        let wrow = w.row(j as usize);
-                        let mut pred = 0.0f32;
-                        for k in 0..rank {
-                            pred += urow[k] * wrow[k];
-                        }
-                        let e = v - pred;
+                        // Same elided-bounds-check zip dot as the
+                        // gradient kernels (PERF.md).
+                        let e = v - dot(urow, &w.row(j as usize)[..rank]);
                         acc += (e as f64) * (e as f64);
                     }
                 }
@@ -262,6 +406,278 @@ impl Engine for NativeEngine {
     fn predict_block(&self, u: &DenseMatrix, w: &DenseMatrix) -> Result<DenseMatrix> {
         u.matmul_nt(w)
     }
+}
+
+/// Rank-length dot with iterator zips (bounds checks elide; summation
+/// order matches the indexed loops it replaced).
+#[inline(always)]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `out ← coef_p·p + coef_g·g − step·(a − b)` in one pass over
+/// caller-owned storage; `diff = None` drops the consensus term. Same
+/// float expression and order as the legacy allocating closure, so
+/// results are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn fused_into(
+    out: &mut DenseMatrix,
+    p: &DenseMatrix,
+    g: &DenseMatrix,
+    cf: f32,
+    gamma: f32,
+    lam: f32,
+    step: f32,
+    diff: Option<(&DenseMatrix, &DenseMatrix)>,
+) {
+    out.ensure_shape(p.rows(), p.cols());
+    let coef_p = 1.0 - gamma * cf * 2.0 * lam;
+    let coef_g = -gamma * cf;
+    let os = out.as_mut_slice();
+    let ps = p.as_slice();
+    let gs = g.as_slice();
+    debug_assert_eq!(ps.len(), gs.len());
+    match diff {
+        None => {
+            for ((o, &pv), &gv) in os.iter_mut().zip(ps).zip(gs) {
+                *o = coef_p * pv + coef_g * gv;
+            }
+        }
+        Some((a, b)) => {
+            let az = a.as_slice();
+            let bz = b.as_slice();
+            debug_assert_eq!(ps.len(), az.len());
+            debug_assert_eq!(ps.len(), bz.len());
+            for (((o, &pv), &gv), (&av, &bv)) in
+                os.iter_mut().zip(ps).zip(gs).zip(az.iter().zip(bz))
+            {
+                *o = coef_p * pv + coef_g * gv - step * (av - bv);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gradient kernels. Fixed-rank variants pin the factor rank at compile
+// time (R ≤ MAX_FIXED_RANK): `&[f32; R]` row views keep `U`/`W` rows
+// and the `G_U`/`G_W` accumulators in registers, and the reductions
+// fully unroll. Dynamic variants cover rank > MAX_FIXED_RANK with the
+// legacy memory-accumulating loops. All kernels write every output
+// element (or zero-fill first), so buffers may arrive dirty.
+
+/// Fused dense kernel: one row-major pass computes the masked residual
+/// `e = M ⊙ (X − U Wᵀ)` element-wise (never materialized), the cost
+/// `f = Σ e²`, `G_U = −2 e W` (register tile per row) and
+/// `G_W = −2 eᵀ U` (rows stay L1-resident across the sweep).
+fn dense_grads_fixed<const R: usize>(
+    x: &[f32],
+    mask: &[f32],
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    nb: usize,
+) -> f64 {
+    for v in gw.iter_mut() {
+        *v = 0.0;
+    }
+    let mut f = 0.0f64;
+    for (((xr, mr), ur), gur) in x
+        .chunks_exact(nb)
+        .zip(mask.chunks_exact(nb))
+        .zip(u.chunks_exact(R))
+        .zip(gu.chunks_exact_mut(R))
+    {
+        let ur: &[f32; R] = ur.try_into().expect("U row of length R");
+        let mut acc = [0.0f32; R];
+        for ((&xv, &mv), (wr, gwr)) in xr
+            .iter()
+            .zip(mr)
+            .zip(w.chunks_exact(R).zip(gw.chunks_exact_mut(R)))
+        {
+            let wr: &[f32; R] = wr.try_into().expect("W row of length R");
+            let mut pred = 0.0f32;
+            for l in 0..R {
+                pred += ur[l] * wr[l];
+            }
+            let e = mv * (xv - pred);
+            f += (e as f64) * (e as f64);
+            let ge = -2.0 * e;
+            for l in 0..R {
+                acc[l] += ge * wr[l];
+                gwr[l] += ge * ur[l];
+            }
+        }
+        for (o, a) in gur.iter_mut().zip(acc.iter()) {
+            *o = *a;
+        }
+    }
+    f
+}
+
+/// Dynamic-rank dense fallback (rank > MAX_FIXED_RANK).
+#[allow(clippy::too_many_arguments)]
+fn dense_grads_dyn(
+    x: &[f32],
+    mask: &[f32],
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    nb: usize,
+    rank: usize,
+) -> f64 {
+    for v in gu.iter_mut() {
+        *v = 0.0;
+    }
+    for v in gw.iter_mut() {
+        *v = 0.0;
+    }
+    let mut f = 0.0f64;
+    let mb = if nb == 0 { 0 } else { x.len() / nb };
+    for i in 0..mb {
+        let xr = &x[i * nb..(i + 1) * nb];
+        let mr = &mask[i * nb..(i + 1) * nb];
+        let ur = &u[i * rank..(i + 1) * rank];
+        for j in 0..nb {
+            let wr = &w[j * rank..(j + 1) * rank];
+            let e = mr[j] * (xr[j] - dot(ur, wr));
+            f += (e as f64) * (e as f64);
+            let ge = -2.0 * e;
+            let gur = &mut gu[i * rank..(i + 1) * rank];
+            let gwr = &mut gw[j * rank..(j + 1) * rank];
+            for ((gu_l, gw_l), (&u_l, &w_l)) in
+                gur.iter_mut().zip(gwr.iter_mut()).zip(ur.iter().zip(wr))
+            {
+                *gu_l += ge * w_l;
+                *gw_l += ge * u_l;
+            }
+        }
+    }
+    f
+}
+
+/// Two-pass sparse kernel.
+///
+/// Pass 1 walks the CSR row-major: per-row `G_U` register tile, cost
+/// accumulation, and the per-observation residual gradients scattered
+/// into CSC order through [`CscView::scatter_map`]. Pass 2 walks the
+/// CSC column-major: per-column `G_W` register tile over sequential
+/// residuals — replacing the legacy per-entry `G_W` row scatter, whose
+/// random read-modify-write traffic dominated the old profile. Within
+/// each column the CSC preserves CSR (ascending-row) order, so the
+/// accumulation sequence — and therefore every f32 — is unchanged.
+fn sparse_grads_fixed<const R: usize>(
+    csr: &CsrMatrix,
+    csc: &CscView,
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    ge: &mut [f32],
+) -> f64 {
+    debug_assert_eq!(ge.len(), csr.nnz());
+    for v in gu.iter_mut() {
+        *v = 0.0;
+    }
+    for v in gw.iter_mut() {
+        *v = 0.0;
+    }
+    let scatter = csc.scatter_map();
+    let mut f = 0.0f64;
+    let mut t = 0usize;
+    for i in 0..csr.rows() {
+        let (cols, vals) = csr.row(i);
+        if cols.is_empty() {
+            continue;
+        }
+        let ur: &[f32; R] = u[i * R..(i + 1) * R].try_into().expect("U row of length R");
+        let mut acc = [0.0f32; R];
+        for (&j, &v) in cols.iter().zip(vals) {
+            let j = j as usize;
+            let wr: &[f32; R] =
+                w[j * R..(j + 1) * R].try_into().expect("W row of length R");
+            let mut pred = 0.0f32;
+            for l in 0..R {
+                pred += ur[l] * wr[l];
+            }
+            let e = v - pred;
+            f += (e as f64) * (e as f64);
+            let g = -2.0 * e;
+            ge[scatter[t] as usize] = g;
+            t += 1;
+            for l in 0..R {
+                acc[l] += g * wr[l];
+            }
+        }
+        let gur = &mut gu[i * R..(i + 1) * R];
+        for (o, a) in gur.iter_mut().zip(acc.iter()) {
+            *o = *a;
+        }
+    }
+    let rows_of = csc.row_indices();
+    for j in 0..csc.cols() {
+        let range = csc.col_range(j);
+        if range.is_empty() {
+            continue;
+        }
+        let mut acc = [0.0f32; R];
+        for (&i, &g) in rows_of[range.clone()].iter().zip(&ge[range.clone()]) {
+            let i = i as usize;
+            let ur: &[f32; R] =
+                u[i * R..(i + 1) * R].try_into().expect("U row of length R");
+            for l in 0..R {
+                acc[l] += g * ur[l];
+            }
+        }
+        let gwr = &mut gw[j * R..(j + 1) * R];
+        for (o, a) in gwr.iter_mut().zip(acc.iter()) {
+            *o = *a;
+        }
+    }
+    f
+}
+
+/// Dynamic-rank sparse fallback (rank > MAX_FIXED_RANK): legacy
+/// single-pass with the `G_W` row scatter.
+fn sparse_grads_dyn(
+    csr: &CsrMatrix,
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    rank: usize,
+) -> f64 {
+    for v in gu.iter_mut() {
+        *v = 0.0;
+    }
+    for v in gw.iter_mut() {
+        *v = 0.0;
+    }
+    let mut f = 0.0f64;
+    for i in 0..csr.rows() {
+        let (cols, vals) = csr.row(i);
+        if cols.is_empty() {
+            continue;
+        }
+        let ur = &u[i * rank..(i + 1) * rank];
+        for (&j, &v) in cols.iter().zip(vals) {
+            let j = j as usize;
+            let wr = &w[j * rank..(j + 1) * rank];
+            let e = v - dot(ur, wr);
+            f += (e as f64) * (e as f64);
+            let ge = -2.0 * e;
+            let gur = &mut gu[i * rank..(i + 1) * rank];
+            let gwr = &mut gw[j * rank..(j + 1) * rank];
+            for ((gu_l, gw_l), (&u_l, &w_l)) in
+                gur.iter_mut().zip(gwr.iter_mut()).zip(ur.iter().zip(wr))
+            {
+                *gu_l += ge * w_l;
+                *gw_l += ge * u_l;
+            }
+        }
+    }
+    f
 }
 
 #[cfg(test)]
@@ -299,17 +715,17 @@ mod tests {
         }
     }
 
+    fn factors_of<'a>(state: &'a FactorState, roles: &StructureRoles) -> StructureFactors<'a> {
+        state.structure_factors(roles)
+    }
+
     #[test]
     fn modes_agree() {
         let (_, _, dense, state) = setup(NativeMode::Dense);
         let (_, _, sparse, _) = setup(NativeMode::Sparse);
         let s = Structure::upper(0, 0);
         let roles = s.roles();
-        let f = [
-            (state.u(roles.anchor), state.w(roles.anchor)),
-            (state.u(roles.horizontal), state.w(roles.horizontal)),
-            (state.u(roles.vertical), state.w(roles.vertical)),
-        ];
+        let f = factors_of(&state, &roles);
         let a = dense.structure_update(&roles, f, &params()).unwrap();
         let b = sparse.structure_update(&roles, f, &params()).unwrap();
         for k in 0..3 {
@@ -327,17 +743,73 @@ mod tests {
     }
 
     #[test]
+    fn workspace_path_matches_allocating_path() {
+        for mode in [NativeMode::Sparse, NativeMode::Dense] {
+            let (_, _, eng, state) = setup(mode);
+            let mut ws = EngineWorkspace::new();
+            for s in [Structure::upper(0, 0), Structure::lower(1, 1)] {
+                let roles = s.roles();
+                let f = factors_of(&state, &roles);
+                let alloc = eng.structure_update(&roles, f, &params()).unwrap();
+                eng.structure_update_into(&roles, f, &params(), &mut ws).unwrap();
+                for k in 0..3 {
+                    let (u, w) = ws.output(k);
+                    assert_eq!(u, &alloc[k].0, "{mode:?} {s} block {k} U");
+                    assert_eq!(w, &alloc[k].1, "{mode:?} {s} block {k} W");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_grads_match_sequential() {
+        for mode in [NativeMode::Sparse, NativeMode::Dense] {
+            let (_spec, part, seq, state) = setup(mode);
+            let mut par = NativeEngine::with_mode(mode).with_parallel_threshold(0);
+            par.prepare(&part).unwrap();
+            let roles = Structure::lower(1, 1).roles();
+            let f = factors_of(&state, &roles);
+            let a = seq.structure_update(&roles, f, &params()).unwrap();
+            let b = par.structure_update(&roles, f, &params()).unwrap();
+            for k in 0..3 {
+                assert_eq!(a[k].0, b[k].0, "{mode:?} block {k} U");
+                assert_eq!(a[k].1, b[k].1, "{mode:?} block {k} W");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_grads_into_f_matches_block_cost() {
+        // The data-fit term returned by masked_grads_into equals
+        // block_cost at λ = 0, in both modes.
+        for mode in [NativeMode::Sparse, NativeMode::Dense] {
+            let (_, _, eng, state) = setup(mode);
+            let id = BlockId::new(1, 0);
+            let mut ws = EngineWorkspace::new();
+            let f = eng
+                .masked_grads_into(id, state.u(id), state.w(id), 0, &mut ws)
+                .unwrap();
+            let c = eng.block_cost(id, state.u(id), state.w(id), 0.0).unwrap();
+            assert!((f - c).abs() < 1e-9 * c.abs().max(1.0), "{mode:?}: {f} vs {c}");
+            // And the gradient buffers took the factor shapes.
+            let (gu, gw) = ws.grads(0);
+            assert_eq!((gu.rows(), gu.cols()), (state.u(id).rows(), 3));
+            assert_eq!((gw.rows(), gw.cols()), (state.w(id).rows(), 3));
+            // Slot out of range errors.
+            assert!(eng
+                .masked_grads_into(id, state.u(id), state.w(id), 3, &mut ws)
+                .is_err());
+        }
+    }
+
+    #[test]
     fn update_reduces_structure_cost() {
         let (spec, _, eng, state) = setup(NativeMode::Sparse);
         let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
         let s = Structure::lower(1, 1);
         let roles = s.roles();
         let p = StructureParams::build(1.0, 1e-9, 1e-3, &coeffs, &roles);
-        let f = [
-            (state.u(roles.anchor), state.w(roles.anchor)),
-            (state.u(roles.horizontal), state.w(roles.horizontal)),
-            (state.u(roles.vertical), state.w(roles.vertical)),
-        ];
+        let f = factors_of(&state, &roles);
         let cost = |fs: [(&DenseMatrix, &DenseMatrix); 3]| -> f64 {
             roles
                 .blocks()
@@ -360,11 +832,7 @@ mod tests {
     fn zero_gamma_is_identity() {
         let (_, _, eng, state) = setup(NativeMode::Sparse);
         let roles = Structure::upper(0, 0).roles();
-        let f = [
-            (state.u(roles.anchor), state.w(roles.anchor)),
-            (state.u(roles.horizontal), state.w(roles.horizontal)),
-            (state.u(roles.vertical), state.w(roles.vertical)),
-        ];
+        let f = factors_of(&state, &roles);
         let mut p = params();
         p.gamma = 0.0;
         let out = eng.structure_update(&roles, f, &p).unwrap();
@@ -385,11 +853,7 @@ mod tests {
         eng.prepare(&part).unwrap();
         let state = FactorState::init_random(spec, 3);
         let roles = Structure::upper(0, 0).roles();
-        let f = [
-            (state.u(roles.anchor), state.w(roles.anchor)),
-            (state.u(roles.horizontal), state.w(roles.horizontal)),
-            (state.u(roles.vertical), state.w(roles.vertical)),
-        ];
+        let f = factors_of(&state, &roles);
         let mut p = params();
         p.lam = 0.0;
         let out = eng.structure_update(&roles, f, &p).unwrap();

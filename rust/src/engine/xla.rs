@@ -7,8 +7,8 @@
 //! them once. [`Engine::prepare`] uploads every block's `(X, M)` pair to
 //! device-resident buffers, so the per-update traffic is only the six
 //! small factor matrices plus eight scalars — the dominant `X`/`M`
-//! tensors never cross the host boundary again (EXPERIMENTS.md §Perf
-//! measures the win).
+//! tensors never cross the host boundary again (PERF.md measures the
+//! win).
 //!
 //! Artifact input order (fixed by `python/compile/aot.py`):
 //!
@@ -40,7 +40,7 @@ pub struct XlaEngine {
     /// ρ/λ and the Figure-2 coefficients take a handful of distinct
     /// values per run, so caching removes 7 of the 8 per-update scalar
     /// transfers (γ_t changes every iteration and is uploaded fresh;
-    /// see EXPERIMENTS.md §Perf).
+    /// see PERF.md).
     scalar_cache: Mutex<HashMap<u32, Arc<DeviceBuffer>>>,
     q: usize,
 }

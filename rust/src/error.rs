@@ -1,41 +1,78 @@
 //! Crate-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (the offline build has no
+//! `thiserror`); the variant messages match the former derive output so
+//! log lines and test expectations are unchanged.
+
+use std::fmt;
 
 /// All fallible GridMC operations return this error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Underlying XLA / PJRT failure (compile, transfer, execute).
-    #[error("xla: {0}")]
     Xla(String),
 
     /// Artifact store problems: missing manifest, unknown shape, bad hash.
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Shape or index mismatch in matrix / grid operations.
-    #[error("shape: {0}")]
     Shape(String),
 
     /// Configuration errors (invalid preset, bad TOML, bad CLI args).
-    #[error("config: {0}")]
     Config(String),
 
     /// Dataset parsing / generation problems.
-    #[error("data: {0}")]
     Data(String),
 
     /// Gossip runtime failures (agent died, channel closed, schedule bug).
-    #[error("gossip: {0}")]
     Gossip(String),
+
+    /// Operation not available on this engine/build (e.g. asking a
+    /// device engine for host-side gradient buffers, or the XLA runtime
+    /// without the `xla` feature).
+    Unsupported(String),
 
     /// Training diverged (NaN/inf cost) — surfaced instead of silently
     /// looping to max_iters.
-    #[error("diverged at iteration {iter}: cost={cost}")]
     Diverged { iter: u64, cost: f64 },
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(msg) => write!(f, "xla: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact: {msg}"),
+            Error::Shape(msg) => write!(f, "shape: {msg}"),
+            Error::Config(msg) => write!(f, "config: {msg}"),
+            Error::Data(msg) => write!(f, "data: {msg}"),
+            Error::Gossip(msg) => write!(f, "gossip: {msg}"),
+            Error::Unsupported(msg) => write!(f, "unsupported: {msg}"),
+            Error::Diverged { iter, cost } => {
+                write!(f, "diverged at iteration {iter}: cost={cost}")
+            }
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -44,3 +81,25 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_legacy_derive_format() {
+        assert_eq!(format!("{}", Error::Shape("2x2 vs 3x3".into())), "shape: 2x2 vs 3x3");
+        assert_eq!(
+            format!("{}", Error::Diverged { iter: 7, cost: 1.5 }),
+            "diverged at iteration 7: cost=1.5"
+        );
+        assert_eq!(format!("{}", Error::Unsupported("nope".into())), "unsupported: nope");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(format!("{e}").starts_with("io: "));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -27,7 +27,7 @@ use std::collections::HashMap;
 use std::sync::mpsc;
 
 use crate::data::DenseMatrix;
-use crate::engine::{Engine, StructureParams};
+use crate::engine::{Engine, EngineWorkspace, StructureParams};
 use crate::grid::{BlockId, Structure};
 use crate::{Error, Result};
 
@@ -73,6 +73,10 @@ pub struct Agent {
     /// Handles to the (up to 4) grid neighbours, keyed by block id.
     neighbours: HashMap<BlockId, AgentHandle>,
     rx: mpsc::Receiver<AgentMsg>,
+    /// Engine scratch reused across every structure update this agent
+    /// anchors — the compute call itself allocates nothing in steady
+    /// state (PERF.md).
+    ws: EngineWorkspace,
 }
 
 impl Agent {
@@ -84,7 +88,7 @@ impl Agent {
         neighbours: HashMap<BlockId, AgentHandle>,
         rx: mpsc::Receiver<AgentMsg>,
     ) -> Self {
-        Self { id, u, w, engine, neighbours, rx }
+        Self { id, u, w, engine, neighbours, rx, ws: EngineWorkspace::new() }
     }
 
     fn pull_neighbour(&self, id: BlockId) -> Result<(DenseMatrix, DenseMatrix)> {
@@ -119,17 +123,26 @@ impl Agent {
     fn execute(&mut self, structure: Structure, params: StructureParams) -> Result<()> {
         let roles = structure.roles();
         debug_assert_eq!(roles.anchor, self.id, "driver must dispatch to the anchor");
-        let (uh, wh) = self.pull_neighbour(roles.horizontal)?;
-        let (uv, wv) = self.pull_neighbour(roles.vertical)?;
+        let (mut uh, mut wh) = self.pull_neighbour(roles.horizontal)?;
+        let (mut uv, mut wv) = self.pull_neighbour(roles.vertical)?;
 
-        let factors = [(&self.u, &self.w), (&uh, &wh), (&uv, &wv)];
-        let [(ua2, wa2), (uh2, wh2), (uv2, wv2)] =
-            self.engine.structure_update(&roles, factors, &params)?;
+        // Hot call: updates land in the reused workspace, no per-update
+        // matrix allocations on the native engine.
+        self.engine.structure_update_into(
+            &roles,
+            [(&self.u, &self.w), (&uh, &wh), (&uv, &wv)],
+            &params,
+            &mut self.ws,
+        )?;
 
-        self.u = ua2;
-        self.w = wa2;
-        self.push_neighbour(roles.horizontal, uh2, wh2)?;
-        self.push_neighbour(roles.vertical, uv2, wv2)?;
+        // O(1) reclaim: swap our factors — and the pulled neighbour
+        // copies we own anyway — with the workspace outputs, handing
+        // the old buffers back to the workspace for the next round.
+        self.ws.swap_output(0, &mut self.u, &mut self.w);
+        self.ws.swap_output(1, &mut uh, &mut wh);
+        self.ws.swap_output(2, &mut uv, &mut wv);
+        self.push_neighbour(roles.horizontal, uh, wh)?;
+        self.push_neighbour(roles.vertical, uv, wv)?;
         Ok(())
     }
 

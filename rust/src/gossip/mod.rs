@@ -135,7 +135,9 @@ impl GossipNetwork {
     /// Stop all agents and collect the final factor state (the paper's
     /// "final culmination" hand-off).
     pub fn shutdown(self) -> Result<FactorState> {
-        let mut state = FactorState::init_random(self.spec, 0);
+        // Zero receptacle: every block is overwritten by an agent reply
+        // below, so a full RNG init here would be wasted work.
+        let mut state = FactorState::zeros(self.spec);
         for h in &self.handles {
             let (tx, rx) = oneshot();
             h.tx.send(AgentMsg::Shutdown { reply: tx })

@@ -68,7 +68,7 @@ pub mod prelude {
         CooMatrix, CsrMatrix, DenseMatrix, RatingsConfig, SyntheticConfig,
         SplitDataset,
     };
-    pub use crate::engine::{Engine, NativeEngine, XlaEngine};
+    pub use crate::engine::{Engine, EngineWorkspace, NativeEngine, XlaEngine};
     pub use crate::gossip::{GossipNetwork, ParallelDriver, ScheduleBuilder};
     pub use crate::grid::{BlockId, GridSpec, Structure, StructureKind, StructureSampler};
     pub use crate::metrics::{CostCurve, RmseReport};

@@ -9,8 +9,9 @@
 //! average out residual disagreement otherwise.
 
 use crate::data::{CooMatrix, DenseMatrix};
+use crate::engine::StructureFactors;
 use crate::util::Rng;
-use crate::grid::{BlockId, GridSpec};
+use crate::grid::{BlockId, GridSpec, StructureRoles};
 
 /// The learnable state: one `(U_ij, W_ij)` pair per block.
 #[derive(Debug, Clone)]
@@ -43,6 +44,19 @@ impl FactorState {
         Self { spec, us, ws }
     }
 
+    /// All-zero factors of the right shapes — the cheap receptacle for
+    /// states assembled block-by-block (e.g. the gossip shutdown
+    /// hand-off), where random initialization would be pure waste.
+    pub fn zeros(spec: GridSpec) -> Self {
+        let (mb, nb) = spec.block_shape();
+        let r = spec.rank;
+        Self {
+            spec,
+            us: (0..spec.num_blocks()).map(|_| DenseMatrix::zeros(mb, r)).collect(),
+            ws: (0..spec.num_blocks()).map(|_| DenseMatrix::zeros(nb, r)).collect(),
+        }
+    }
+
     pub fn spec(&self) -> &GridSpec {
         &self.spec
     }
@@ -53,6 +67,24 @@ impl FactorState {
 
     pub fn w(&self, id: BlockId) -> &DenseMatrix {
         &self.ws[id.index(self.spec.q)]
+    }
+
+    /// Mutable access to both factors of one block at once (the
+    /// sequential driver swaps workspace outputs in through this).
+    pub fn block_mut(&mut self, id: BlockId) -> (&mut DenseMatrix, &mut DenseMatrix) {
+        let k = id.index(self.spec.q);
+        (&mut self.us[k], &mut self.ws[k])
+    }
+
+    /// The three member blocks' factors of a structure, in role order —
+    /// exactly the shape [`crate::engine::Engine::structure_update`]
+    /// and its workspace variant consume.
+    pub fn structure_factors<'a>(&'a self, roles: &StructureRoles) -> StructureFactors<'a> {
+        [
+            (self.u(roles.anchor), self.w(roles.anchor)),
+            (self.u(roles.horizontal), self.w(roles.horizontal)),
+            (self.u(roles.vertical), self.w(roles.vertical)),
+        ]
     }
 
     pub fn set_u(&mut self, id: BlockId, u: DenseMatrix) {
@@ -185,6 +217,31 @@ mod tests {
 
     fn spec() -> GridSpec {
         GridSpec::new(10, 8, 2, 2, 3)
+    }
+
+    #[test]
+    fn zeros_has_right_shapes_and_is_zero() {
+        let s = FactorState::zeros(spec());
+        let (mb, nb) = spec().block_shape();
+        for id in spec().blocks() {
+            assert_eq!((s.u(id).rows(), s.u(id).cols()), (mb, 3));
+            assert_eq!((s.w(id).rows(), s.w(id).cols()), (nb, 3));
+            assert_eq!(s.u(id).frob_sq(), 0.0);
+            assert_eq!(s.w(id).frob_sq(), 0.0);
+        }
+    }
+
+    #[test]
+    fn block_mut_aliases_getters() {
+        let mut s = FactorState::zeros(spec());
+        let id = BlockId::new(1, 0);
+        {
+            let (u, w) = s.block_mut(id);
+            u.set(0, 0, 5.0);
+            w.set(0, 1, 7.0);
+        }
+        assert_eq!(s.u(id).get(0, 0), 5.0);
+        assert_eq!(s.w(id).get(0, 1), 7.0);
     }
 
     #[test]

@@ -1,213 +1,31 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Runtime bridge: AOT HLO artifacts → executable programs.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`). One
-//! [`Executable`] per compiled artifact, cached in the [`Runtime`] by
-//! path so repeated engine constructions reuse compilations.
+//! [`manifest`] maps `(program, block shape, rank)` to HLO files;
+//! the runtime proper has two builds:
 //!
-//! ## Threading
+//! * **`--features xla`** ([`pjrt`]) — the real PJRT CPU client via the
+//!   external `xla` crate: compile HLO text once, keep block tensors
+//!   device-resident, execute per update.
+//! * **default** ([`stub`]) — an API-compatible stub for the offline
+//!   image (which cannot ship the `xla` crate). Every entry point fails
+//!   with [`crate::Error::Unsupported`]; engine selection falls back to
+//!   [`crate::engine::NativeEngine`], whose hot path is the subject of
+//!   PERF.md.
 //!
-//! The PJRT CPU client is internally thread-safe (it is the same TFRT
-//! client JAX drives from many Python threads), but the `xla` crate's
-//! wrapper types hold raw pointers and are not marked `Send`/`Sync`.
-//! [`Runtime`] and [`Executable`] assert those bounds with documented
-//! `unsafe impl`s; the only mutable Rust-side state (the compilation
-//! cache) is behind a `Mutex`.
+//! Both expose the same `Runtime` / `DeviceBuffer` / `Executable`
+//! surface, so [`crate::engine::XlaEngine`] compiles identically
+//! against either.
 
 mod manifest;
 
 pub use manifest::{ArtifactManifest, Program};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::{DeviceBuffer, Executable, Runtime};
 
-use crate::data::DenseMatrix;
-use crate::{Error, Result};
-
-/// Shared PJRT CPU client plus a compilation cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
-}
-
-// SAFETY: PJRT CPU client operations (compile, buffer transfer, execute)
-// are thread-safe in the underlying C++ runtime; the Rust-side struct
-// only holds an owning pointer. The compile cache is Mutex-protected.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Arc<Self>> {
-        let client = xla::PjRtClient::cpu()?;
-        log::info!(
-            "pjrt client up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Arc::new(Self { client, cache: Mutex::new(HashMap::new()) }))
-    }
-
-    /// Platform string ("cpu"/"Host") for diagnostics.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load_hlo(self: &Arc<Self>, path: impl AsRef<Path>) -> Result<Arc<Executable>> {
-        let path = path.as_ref().to_path_buf();
-        if let Some(exe) = self.cache.lock().unwrap().get(&path) {
-            return Ok(exe.clone());
-        }
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
-            Error::Artifact(format!("parse {}: {e}", path.display()))
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        log::debug!("compiled {} in {}ms", path.display(), t0.elapsed().as_millis());
-        let exe = Arc::new(Executable { exe, runtime: self.clone() });
-        self.cache.lock().unwrap().insert(path, exe.clone());
-        Ok(exe)
-    }
-
-    /// Upload a dense matrix as a device-resident buffer.
-    pub fn upload_matrix(&self, m: &DenseMatrix) -> Result<DeviceBuffer> {
-        let buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(m.as_slice(), &[m.rows(), m.cols()], None)?;
-        Ok(DeviceBuffer(buf))
-    }
-
-    /// Upload an `f32` scalar.
-    pub fn upload_scalar(&self, v: f32) -> Result<DeviceBuffer> {
-        let buf = self.client.buffer_from_host_buffer::<f32>(&[v], &[], None)?;
-        Ok(DeviceBuffer(buf))
-    }
-
-    /// Number of cached executables (diagnostics / tests).
-    pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-}
-
-/// Device-resident tensor (PJRT buffer).
-pub struct DeviceBuffer(xla::PjRtBuffer);
-
-// SAFETY: see Runtime — buffers are immutable once created and the PJRT
-// CPU runtime allows concurrent reads from executions on any thread.
-unsafe impl Send for DeviceBuffer {}
-unsafe impl Sync for DeviceBuffer {}
-
-impl DeviceBuffer {
-    pub(crate) fn raw(&self) -> &xla::PjRtBuffer {
-        &self.0
-    }
-}
-
-/// A compiled artifact ready to run.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    #[allow(dead_code)] // keeps the client alive as long as the executable
-    runtime: Arc<Runtime>,
-}
-
-// SAFETY: see Runtime.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-impl Executable {
-    /// Execute over device buffers; returns the flattened result tuple
-    /// as dense row-major matrices (scalars come back as 1×1 — callers
-    /// know their artifact's shapes).
-    pub fn execute(&self, args: &[&DeviceBuffer]) -> Result<Vec<DenseMatrix>> {
-        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|b| b.raw()).collect();
-        let out = self.exe.execute_b(&bufs)?;
-        let first = out
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| Error::Xla("execution returned no outputs".into()))?;
-        let literal = first.to_literal_sync()?;
-        // Artifacts are lowered with return_tuple=True: one tuple output.
-        let elements = literal.to_tuple()?;
-        let mut results = Vec::with_capacity(elements.len());
-        for el in elements {
-            let shape = el.shape()?;
-            let dims: Vec<usize> = match shape {
-                xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
-                other => {
-                    return Err(Error::Xla(format!("unexpected output shape {other:?}")))
-                }
-            };
-            let (rows, cols) = match dims.len() {
-                0 => (1, 1),
-                1 => (dims[0], 1),
-                2 => (dims[0], dims[1]),
-                n => return Err(Error::Xla(format!("rank-{n} output unsupported"))),
-            };
-            let values = el.to_vec::<f32>()?;
-            results.push(DenseMatrix::from_vec(rows, cols, values)?);
-        }
-        Ok(results)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn artifacts_available() -> bool {
-        std::path::Path::new("artifacts/manifest.json").exists()
-    }
-
-    #[test]
-    fn load_and_execute_predict_artifact() {
-        if !artifacts_available() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let manifest = ArtifactManifest::load("artifacts").unwrap();
-        let rt = Runtime::cpu().unwrap();
-        let path = manifest.lookup(Program::Predict, 32, 32, 4).unwrap();
-        let exe = rt.load_hlo(&path).unwrap();
-        // u = e_k basis stripes, w = ones → (U Wᵀ)_ij = Σ_k u_ik = 1.
-        let u = DenseMatrix::from_fn(32, 4, |i, k| if i % 4 == k { 1.0 } else { 0.0 });
-        let w = DenseMatrix::from_fn(32, 4, |_, _| 1.0);
-        let ub = rt.upload_matrix(&u).unwrap();
-        let wb = rt.upload_matrix(&w).unwrap();
-        let out = exe.execute(&[&ub, &wb]).unwrap();
-        assert_eq!(out.len(), 1);
-        let pred = &out[0];
-        assert_eq!((pred.rows(), pred.cols()), (32, 32));
-        for i in 0..32 {
-            for j in 0..32 {
-                assert!((pred.get(i, j) - 1.0).abs() < 1e-6);
-            }
-        }
-    }
-
-    #[test]
-    fn compile_cache_hits() {
-        if !artifacts_available() {
-            return;
-        }
-        let manifest = ArtifactManifest::load("artifacts").unwrap();
-        let rt = Runtime::cpu().unwrap();
-        let path = manifest.lookup(Program::Cost, 32, 32, 4).unwrap();
-        let a = rt.load_hlo(&path).unwrap();
-        let b = rt.load_hlo(&path).unwrap();
-        assert!(Arc::ptr_eq(&a, &b));
-        assert_eq!(rt.cached(), 1);
-    }
-
-    #[test]
-    fn missing_artifact_is_artifact_error() {
-        let rt = Runtime::cpu().unwrap();
-        let err = match rt.load_hlo("/does/not/exist.hlo.txt") {
-            Err(e) => e,
-            Ok(_) => panic!("expected missing artifact"),
-        };
-        assert!(matches!(err, Error::Artifact(_)));
-    }
-}
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{DeviceBuffer, Executable, Runtime};

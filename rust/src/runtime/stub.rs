@@ -1,0 +1,90 @@
+//! Stub PJRT runtime, built when the `xla` feature is disabled.
+//!
+//! The offline image does not ship the external `xla` crate, so the
+//! default build replaces the PJRT bridge with this API-compatible
+//! stub: every entry point fails with [`Error::Unsupported`], which the
+//! engine-selection path ([`crate::experiments::build_engine`]) treats
+//! like a missing artifact and falls back to the native engine. The
+//! type surface mirrors `pjrt.rs` exactly so `XlaEngine` compiles
+//! unchanged either way.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::data::DenseMatrix;
+use crate::{Error, Result};
+
+fn unavailable() -> Error {
+    Error::Unsupported(
+        "PJRT runtime disabled: this build has no `xla` feature — \
+         use the native engine"
+            .into(),
+    )
+}
+
+/// Stub of the shared PJRT CPU client.
+pub struct Runtime {
+    _priv: (),
+}
+
+impl Runtime {
+    /// Always fails in stub builds.
+    pub fn cpu() -> Result<Arc<Self>> {
+        Err(unavailable())
+    }
+
+    /// Platform string for diagnostics.
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Always fails in stub builds.
+    pub fn load_hlo(self: &Arc<Self>, _path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        Err(unavailable())
+    }
+
+    /// Always fails in stub builds.
+    pub fn upload_matrix(&self, _m: &DenseMatrix) -> Result<DeviceBuffer> {
+        Err(unavailable())
+    }
+
+    /// Always fails in stub builds.
+    pub fn upload_scalar(&self, _v: f32) -> Result<DeviceBuffer> {
+        Err(unavailable())
+    }
+
+    /// Number of cached executables (always 0 here).
+    pub fn cached(&self) -> usize {
+        0
+    }
+}
+
+/// Stub device buffer (never constructed).
+pub struct DeviceBuffer(());
+
+/// Stub executable (never constructed).
+pub struct Executable {
+    _priv: (),
+}
+
+impl Executable {
+    /// Always fails in stub builds.
+    pub fn execute(&self, _args: &[&DeviceBuffer]) -> Result<Vec<DenseMatrix>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_unsupported() {
+        let err = match Runtime::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub runtime must not construct"),
+        };
+        assert!(matches!(err, Error::Unsupported(_)));
+        assert!(format!("{err}").contains("xla"));
+    }
+}

@@ -65,40 +65,66 @@ impl RowGossip {
         Self { cfg }
     }
 
-    /// `(G_U, G_W, f)` of one row block's masked data-fit term.
-    fn block_grads(
+    /// `(G_U, G_W)` of one row block's masked data-fit term, written
+    /// into caller-owned buffers (reshaped in place, so the update loop
+    /// reuses four buffers for the whole run); returns `f`.
+    fn block_grads_into(
         csr: &CsrMatrix,
         u: &DenseMatrix,
         w: &DenseMatrix,
-    ) -> (DenseMatrix, DenseMatrix, f64) {
+        gu: &mut DenseMatrix,
+        gw: &mut DenseMatrix,
+    ) -> f64 {
         let r = u.cols();
-        let mut gu = DenseMatrix::zeros(u.rows(), r);
-        let mut gw = DenseMatrix::zeros(w.rows(), r);
+        gu.reset_shape(u.rows(), r);
+        gw.reset_shape(w.rows(), r);
         let mut f = 0.0f64;
         for i in 0..csr.rows() {
             let (cols, vals) = csr.row(i);
             if cols.is_empty() {
                 continue;
             }
-            let urow = u.row(i);
+            let urow = &u.row(i)[..r];
             let gurow = gu.row_mut(i);
             for (&j, &v) in cols.iter().zip(vals) {
-                let wrow = w.row(j as usize);
-                let mut pred = 0.0f32;
-                for k in 0..r {
-                    pred += urow[k] * wrow[k];
-                }
+                let wrow = &w.row(j as usize)[..r];
+                let pred: f32 = urow.iter().zip(wrow).map(|(a, b)| a * b).sum();
                 let e = v - pred;
                 f += (e as f64) * (e as f64);
                 let ge = -2.0 * e;
                 let gwrow = gw.row_mut(j as usize);
-                for k in 0..r {
-                    gurow[k] += ge * wrow[k];
-                    gwrow[k] += ge * urow[k];
+                for ((gu_k, gw_k), (&u_k, &w_k)) in gurow
+                    .iter_mut()
+                    .zip(gwrow.iter_mut())
+                    .zip(urow.iter().zip(wrow))
+                {
+                    *gu_k += ge * w_k;
+                    *gw_k += ge * u_k;
                 }
             }
         }
-        (gu, gw, f)
+        f
+    }
+
+    /// Data-fit cost of one row block (no gradient buffers touched —
+    /// the eval path needs only the scalar).
+    fn block_f(csr: &CsrMatrix, u: &DenseMatrix, w: &DenseMatrix) -> f64 {
+        let r = u.cols();
+        let mut f = 0.0f64;
+        for i in 0..csr.rows() {
+            let (cols, vals) = csr.row(i);
+            if cols.is_empty() {
+                continue;
+            }
+            let urow = &u.row(i)[..r];
+            for (&j, &v) in cols.iter().zip(vals) {
+                let wrow = &w.row(j as usize)[..r];
+                let pred: f32 = urow.iter().zip(wrow).map(|(a, b)| a * b).sum();
+                let e = v - pred;
+                f += (e as f64) * (e as f64);
+            }
+        }
+        f
     }
 
     pub fn run(&self, data: &SplitDataset) -> Result<BaselineReport> {
@@ -136,31 +162,33 @@ impl RowGossip {
         let eval = |us: &[DenseMatrix], ws: &[DenseMatrix]| -> f64 {
             let mut acc = 0.0;
             for b in 0..cfg.p {
-                let (_, _, f) = Self::block_grads(&blocks[b], &us[b], &ws[b]);
-                acc += f
+                acc += Self::block_f(&blocks[b], &us[b], &ws[b])
                     + cfg.lambda as f64 * (us[b].frob_sq() + ws[b].frob_sq());
             }
             acc
         };
         curve.push(0, eval(&us, &ws));
 
+        // Gradient buffers reused for every pair update — the steady-
+        // state loop allocates nothing (PERF.md).
+        let mut gu_a = DenseMatrix::default();
+        let mut gw_a = DenseMatrix::default();
+        let mut gu_b = DenseMatrix::default();
+        let mut gw_b = DenseMatrix::default();
         for t in 0..cfg.max_iters {
             let i = rng.gen_range(cfg.p - 1); // adjacent pair (i, i+1)
             let gamma = cfg.schedule.gamma(t);
 
-            let (gu_a, mut gw_a, _) = Self::block_grads(&blocks[i], &us[i], &ws[i]);
-            let (gu_b, mut gw_b, _) = Self::block_grads(&blocks[i + 1], &us[i + 1], &ws[i + 1]);
+            Self::block_grads_into(&blocks[i], &us[i], &ws[i], &mut gu_a, &mut gw_a);
+            Self::block_grads_into(&blocks[i + 1], &us[i + 1], &ws[i + 1], &mut gu_b, &mut gw_b);
 
-            // λ terms + ρ consensus on W.
-            let dw = ws[i].sub(&ws[i + 1])?;
+            // λ terms + ρ consensus on W (consensus difference folded
+            // in-place — no temporary).
             gw_a.axpy(2.0 * cfg.lambda, &ws[i])?;
-            gw_a.axpy(2.0 * cfg.rho, &dw)?;
+            gw_a.axpy_diff(2.0 * cfg.rho, &ws[i], &ws[i + 1])?;
             gw_b.axpy(2.0 * cfg.lambda, &ws[i + 1])?;
-            gw_b.axpy(-2.0 * cfg.rho, &dw)?;
-
-            let mut gu_a = gu_a;
+            gw_b.axpy_diff(-2.0 * cfg.rho, &ws[i], &ws[i + 1])?;
             gu_a.axpy(2.0 * cfg.lambda, &us[i])?;
-            let mut gu_b = gu_b;
             gu_b.axpy(2.0 * cfg.lambda, &us[i + 1])?;
 
             us[i].axpy(-gamma, &gu_a)?;

@@ -105,17 +105,68 @@ impl SolverReport {
     }
 }
 
+/// Number of scoped threads the leader-side cost fan-in uses. Fixed
+/// (not machine-derived) so the partial-sum grouping — and therefore
+/// every f64 — is identical on every host.
+const COST_FANOUT: usize = 4;
+
+/// Minimum total matrix cells before the cost fan-in spawns threads.
+/// `m·n` upper-bounds the evaluation work in both engine modes (dense
+/// cost is exactly cell-proportional, sparse is nnz ≤ cells), so small
+/// problems — however finely gridded — keep the seed's plain loop
+/// instead of paying thread spawn/join latency.
+const COST_PAR_MIN_CELLS: usize = 1 << 18;
+
 /// Total cost `Σ_ij f_ij + λ‖U_ij‖² + λ‖W_ij‖²` — the quantity the
 /// paper's Table 2 reports. Shared by both drivers.
+///
+/// Grids with enough blocks fan the per-block sums out over a small
+/// scoped-thread pool ([`COST_FANOUT`] contiguous chunks, partials
+/// combined in chunk order), which keeps the result deterministic
+/// while cutting evaluation latency on big grids.
 pub fn total_cost(
     engine: &dyn Engine,
     state: &FactorState,
     lambda: f32,
 ) -> Result<f64> {
     let spec = state.spec();
-    let mut acc = 0.0;
-    for id in spec.blocks() {
-        acc += engine.block_cost(id, state.u(id), state.w(id), lambda)?;
+    let ids: Vec<BlockId> = spec.blocks().collect();
+    if ids.len() < 2 * COST_FANOUT || spec.m * spec.n < COST_PAR_MIN_CELLS {
+        // Small grids / small problems: sequential, same summation
+        // order as ever.
+        let mut acc = 0.0;
+        for id in ids {
+            acc += engine.block_cost(id, state.u(id), state.w(id), lambda)?;
+        }
+        return Ok(acc);
+    }
+    let chunk = ids.len().div_ceil(COST_FANOUT);
+    let sum_chunk = |chunk_ids: &[BlockId]| -> Result<f64> {
+        let mut acc = 0.0;
+        for &id in chunk_ids {
+            acc += engine.block_cost(id, state.u(id), state.w(id), lambda)?;
+        }
+        Ok(acc)
+    };
+    // First chunk runs on this thread (same pattern as the gradient
+    // fan-out); the rest go to scoped threads. Partials are still
+    // combined in chunk order, so the sum stays deterministic.
+    let mut chunks = ids.chunks(chunk);
+    let first = chunks.next().unwrap_or(&[]);
+    let sum_chunk = &sum_chunk; // shared so every spawned thread can call it
+    let (head, rest): (Result<f64>, Vec<Result<f64>>) = std::thread::scope(|s| {
+        let handles: Vec<_> = chunks.map(|c| s.spawn(move || sum_chunk(c))).collect();
+        (
+            sum_chunk(first),
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("cost thread panicked"))
+                .collect(),
+        )
+    });
+    let mut acc = head?;
+    for p in rest {
+        acc += p?;
     }
     Ok(acc)
 }

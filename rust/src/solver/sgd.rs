@@ -16,7 +16,7 @@
 //! [`XlaEngine`](crate::engine::XlaEngine).
 
 use crate::data::CooMatrix;
-use crate::engine::{Engine, StructureParams};
+use crate::engine::{Engine, EngineWorkspace, StructureParams};
 use crate::grid::{BlockPartition, GridSpec, NormalizationCoeffs, StructureSampler};
 use crate::metrics::{CostCurve, Timer};
 use crate::model::FactorState;
@@ -75,6 +75,9 @@ impl SequentialDriver {
 
         let mut converged = false;
         let mut iters = 0u64;
+        // One workspace for the whole run: the per-iteration engine
+        // call allocates nothing in steady state (PERF.md).
+        let mut ws = EngineWorkspace::new();
         'outer: for t in 0..self.cfg.max_iters {
             let structure = sampler.sample();
             let roles = structure.roles();
@@ -85,19 +88,21 @@ impl SequentialDriver {
                 StructureParams::unnormalized(self.cfg.rho, self.cfg.lambda, gamma)
             };
 
-            let factors = [
-                (state.u(roles.anchor), state.w(roles.anchor)),
-                (state.u(roles.horizontal), state.w(roles.horizontal)),
-                (state.u(roles.vertical), state.w(roles.vertical)),
-            ];
-            let [(ua, wa), (uh, wh), (uv, wv)] =
-                engine.structure_update(&roles, factors, &params)?;
-            state.set_u(roles.anchor, ua);
-            state.set_w(roles.anchor, wa);
-            state.set_u(roles.horizontal, uh);
-            state.set_w(roles.horizontal, wh);
-            state.set_u(roles.vertical, uv);
-            state.set_w(roles.vertical, wv);
+            engine.structure_update_into(
+                &roles,
+                state.structure_factors(&roles),
+                &params,
+                &mut ws,
+            )?;
+            // O(1) adoption of the updates: swap each block's factors
+            // with the workspace outputs; the displaced buffers become
+            // next iteration's outputs.
+            let (u, w) = state.block_mut(roles.anchor);
+            ws.swap_output(0, u, w);
+            let (u, w) = state.block_mut(roles.horizontal);
+            ws.swap_output(1, u, w);
+            let (u, w) = state.block_mut(roles.vertical);
+            ws.swap_output(2, u, w);
             iters = t + 1;
 
             if iters % self.cfg.eval_every == 0 {

@@ -1,0 +1,118 @@
+//! Zero-allocation guarantee of the engine hot path.
+//!
+//! A counting global allocator (per-thread counters, so the libtest
+//! harness and sibling tests can't pollute the measurement) asserts
+//! that once an [`EngineWorkspace`] has seen each block of the working
+//! set, `NativeEngine::structure_update_into` performs **zero** heap
+//! allocations — the acceptance criterion of the zero-alloc hot-path
+//! rework (PERF.md).
+//!
+//! The geometry stays below the engine's parallel-gradient threshold:
+//! the scoped-thread fan-out path spawns threads and is exempt from the
+//! guarantee by design.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use gridmc::data::SyntheticConfig;
+use gridmc::engine::{Engine, EngineWorkspace, NativeEngine, NativeMode, StructureParams};
+use gridmc::grid::{BlockPartition, GridSpec, NormalizationCoeffs};
+use gridmc::model::FactorState;
+
+thread_local! {
+    /// Allocations (alloc / alloc_zeroed / realloc) on this thread.
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the only addition is a
+// per-thread counter bump. The const-initialized `Cell<u64>` TLS has no
+// destructor and never allocates, so there is no reentrancy.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOC_COUNT.with(|c| c.get())
+}
+
+
+#[test]
+fn counting_allocator_detects_allocations() {
+    // Sanity: the instrument actually measures.
+    let before = allocs_on_this_thread();
+    let v: Vec<u64> = std::hint::black_box((0u64..100).collect());
+    assert!(allocs_on_this_thread() > before, "counter did not move");
+    drop(v);
+}
+
+#[test]
+fn structure_update_into_steady_state_is_zero_alloc() {
+    for mode in [NativeMode::Sparse, NativeMode::Dense] {
+        let spec = GridSpec::new(40, 40, 2, 2, 4);
+        let data = SyntheticConfig {
+            m: 40,
+            n: 40,
+            rank: 4,
+            train_fraction: 0.3,
+            test_fraction: 0.0,
+            noise_std: 0.0,
+            seed: 5,
+        }
+        .generate();
+        let part = BlockPartition::new(spec, &data.data.train).unwrap();
+        let mut eng = NativeEngine::with_mode(mode);
+        eng.prepare(&part).unwrap();
+        let state = FactorState::init_random(spec, 2);
+        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+        let structures = spec.structures();
+        let mut ws = EngineWorkspace::new();
+
+        // Warmup epoch: touch every structure once so each workspace
+        // buffer reaches its high-water mark across all block shapes
+        // and nnz counts.
+        for s in &structures {
+            let roles = s.roles();
+            let params = StructureParams::build(1e2, 1e-9, 1e-4, &coeffs, &roles);
+            let f = state.structure_factors(&roles);
+            eng.structure_update_into(&roles, f, &params, &mut ws).unwrap();
+        }
+
+        // Steady state: five more epochs, not one allocation allowed.
+        let before = allocs_on_this_thread();
+        for _ in 0..5 {
+            for s in &structures {
+                let roles = s.roles();
+                let params = StructureParams::build(1e2, 1e-9, 1e-4, &coeffs, &roles);
+                let f = state.structure_factors(&roles);
+                eng.structure_update_into(&roles, f, &params, &mut ws).unwrap();
+            }
+        }
+        let delta = allocs_on_this_thread() - before;
+        assert_eq!(
+            delta, 0,
+            "{mode:?}: {delta} heap allocations on the steady-state hot path"
+        );
+    }
+}

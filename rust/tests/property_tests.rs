@@ -170,11 +170,7 @@ fn prop_small_step_never_increases_structure_cost() {
                     * (f[0].0.sub(f[1].0).unwrap().frob_sq()
                         + f[0].1.sub(f[2].1).unwrap().frob_sq())
         };
-        let before = [
-            (state.u(roles.anchor), state.w(roles.anchor)),
-            (state.u(roles.horizontal), state.w(roles.horizontal)),
-            (state.u(roles.vertical), state.w(roles.vertical)),
-        ];
+        let before = state.structure_factors(&roles);
         let c0 = cost(before);
         let out = engine.structure_update(&roles, before, &params).unwrap();
         let c1 = cost([
@@ -213,16 +209,83 @@ fn prop_native_modes_agree() {
             cu: rng.f32(),
             cw: rng.f32(),
         };
-        let f = [
-            (state.u(roles.anchor), state.w(roles.anchor)),
-            (state.u(roles.horizontal), state.w(roles.horizontal)),
-            (state.u(roles.vertical), state.w(roles.vertical)),
-        ];
+        let f = state.structure_factors(&roles);
         let a = dense.structure_update(&roles, f, &params).unwrap();
         let b = sparse.structure_update(&roles, f, &params).unwrap();
         for k in 0..3 {
             assert!(a[k].0.max_abs_diff(&b[k].0) < 1e-4, "case {case} block {k} U");
             assert!(a[k].1.max_abs_diff(&b[k].1) < 1e-4, "case {case} block {k} W");
+        }
+    }
+}
+
+#[test]
+fn prop_workspace_matches_allocating() {
+    use gridmc::engine::EngineWorkspace;
+    // ONE workspace reused across random shapes, seeds and modes: the
+    // buffer resizing/reuse must be bit-for-bit identical to the
+    // allocating path and never leak state between cases.
+    let mut ws = EngineWorkspace::new();
+    for case in 0..12u64 {
+        let mut rng = case_rng(case ^ 0x5CA1E);
+        let spec = random_grid(&mut rng);
+        let coo = random_coo(&mut rng, spec.m, spec.n, 0.25);
+        let part = BlockPartition::new(spec, &coo).unwrap();
+        for mode in [NativeMode::Sparse, NativeMode::Dense] {
+            let mut eng = NativeEngine::with_mode(mode);
+            eng.prepare(&part).unwrap();
+            let state = FactorState::init_random(spec, case ^ 3);
+            let all = Structure::enumerate(spec.p, spec.q);
+            let s = all[rng.gen_range(all.len())];
+            let roles = s.roles();
+            let params = StructureParams {
+                rho: rng.f32() * 50.0,
+                lam: rng.f32() * 1e-4,
+                gamma: 1e-4,
+                cf: [rng.f32(), rng.f32(), rng.f32()],
+                cu: rng.f32(),
+                cw: rng.f32(),
+            };
+            let f = state.structure_factors(&roles);
+            let alloc = eng.structure_update(&roles, f, &params).unwrap();
+            eng.structure_update_into(&roles, f, &params, &mut ws).unwrap();
+            for k in 0..3 {
+                let (u, w) = ws.output(k);
+                assert_eq!(u, &alloc[k].0, "case {case} {mode:?} block {k} U");
+                assert_eq!(w, &alloc[k].1, "case {case} {mode:?} block {k} W");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_grads_bit_identical() {
+    // Forcing the scoped-thread gradient fan-out must not change a
+    // single bit (the three per-block passes are independent and are
+    // combined in fixed role order).
+    for case in 0..8u64 {
+        let mut rng = case_rng(case ^ 0xBEEF);
+        let spec = random_grid(&mut rng);
+        let coo = random_coo(&mut rng, spec.m, spec.n, 0.2);
+        let part = BlockPartition::new(spec, &coo).unwrap();
+        for mode in [NativeMode::Sparse, NativeMode::Dense] {
+            let mut seq = NativeEngine::with_mode(mode).with_parallel_threshold(usize::MAX);
+            seq.prepare(&part).unwrap();
+            let mut par = NativeEngine::with_mode(mode).with_parallel_threshold(0);
+            par.prepare(&part).unwrap();
+            let state = FactorState::init_random(spec, case);
+            let all = Structure::enumerate(spec.p, spec.q);
+            let s = all[rng.gen_range(all.len())];
+            let roles = s.roles();
+            let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+            let params = StructureParams::build(1e2, 1e-6, 1e-4, &coeffs, &roles);
+            let f = state.structure_factors(&roles);
+            let a = seq.structure_update(&roles, f, &params).unwrap();
+            let b = par.structure_update(&roles, f, &params).unwrap();
+            for k in 0..3 {
+                assert_eq!(a[k].0, b[k].0, "case {case} {mode:?} block {k} U");
+                assert_eq!(a[k].1, b[k].1, "case {case} {mode:?} block {k} W");
+            }
         }
     }
 }

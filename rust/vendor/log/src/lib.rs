@@ -1,0 +1,256 @@
+//! Vendored minimal subset of the `log` crate facade.
+//!
+//! The GridMC build environment is offline, so the usual crates.io
+//! `log` dependency is replaced by this drop-in path crate. It
+//! implements exactly the surface the repo uses: the five leveled
+//! macros, [`Log`]/[`Metadata`]/[`Record`], [`set_boxed_logger`] and
+//! [`set_max_level`]. Semantics follow the real facade (max-level
+//! fast path, idempotent logger installation); anything GridMC does
+//! not call is intentionally omitted.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a single log record.
+#[repr(usize)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    /// Uppercase name, matching the real facade's `Display`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// Maximum-verbosity filter installed with [`set_max_level`].
+#[repr(usize)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl LevelFilter {
+    fn from_usize(u: usize) -> LevelFilter {
+        match u {
+            0 => LevelFilter::Off,
+            1 => LevelFilter::Error,
+            2 => LevelFilter::Warn,
+            3 => LevelFilter::Info,
+            4 => LevelFilter::Debug,
+            _ => LevelFilter::Trace,
+        }
+    }
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a record: level plus target (module path by default).
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record, passed by reference to [`Log::log`].
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Returned by [`set_boxed_logger`] when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("attempted to set a logger after one was already set")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first call wins).
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level; records above it are skipped before
+/// the logger is consulted.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Current global maximum level.
+pub fn max_level() -> LevelFilter {
+    LevelFilter::from_usize(MAX_LEVEL.load(Ordering::Relaxed))
+}
+
+/// Macro plumbing — not public API.
+#[doc(hidden)]
+pub fn __private_api_log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if (level as usize) > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level, target }, args };
+        if logger.enabled(record.metadata()) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__private_api_log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    static HITS: AtomicU32 = AtomicU32::new(0);
+
+    struct Counter;
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= LevelFilter::Info
+        }
+        fn log(&self, record: &Record) {
+            let _ = format!("{} {}", record.level(), record.args());
+            HITS.fetch_add(1, Ordering::Relaxed);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn facade_filters_and_dispatches() {
+        assert!(set_boxed_logger(Box::new(Counter)).is_ok());
+        set_max_level(LevelFilter::Info);
+        assert_eq!(max_level(), LevelFilter::Info);
+        info!("hello {}", 1);
+        debug!("filtered out {}", 2); // above max level
+        assert_eq!(HITS.load(Ordering::Relaxed), 1);
+        // Second install attempt fails but does not panic.
+        assert!(set_boxed_logger(Box::new(Counter)).is_err());
+    }
+
+    #[test]
+    fn level_orderings() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Warn <= LevelFilter::Info);
+        assert!(LevelFilter::Off < Level::Error);
+        assert_eq!(Level::Warn.as_str(), "WARN");
+    }
+}

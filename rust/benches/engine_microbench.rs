@@ -23,17 +23,11 @@ use gridmc::engine::{
     Engine, EngineWorkspace, NativeEngine, NativeMode, StructureParams, XlaEngine,
 };
 use gridmc::grid::{BlockPartition, GridSpec, NormalizationCoeffs, Structure, StructureRoles};
+use gridmc::metrics::{bench_json_header, percentiles, Percentiles as Stats};
 use gridmc::model::FactorState;
 
-/// Percentile summary of one benchmark, microseconds.
-struct Stats {
-    median: f64,
-    p10: f64,
-    p90: f64,
-    iters: usize,
-}
-
-/// Time `f` `iters` times (after `warmup` runs); print + return stats.
+/// Time `f` `iters` times (after `warmup` runs); print + return stats
+/// (microseconds).
 fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
     for _ in 0..warmup {
         f();
@@ -44,9 +38,7 @@ fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats 
         f();
         samples.push(t0.elapsed().as_secs_f64() * 1e6);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
-    let stats = Stats { median: pick(0.5), p10: pick(0.1), p90: pick(0.9), iters };
+    let stats = percentiles(&samples);
     println!(
         "{name:<44} median {:>9.1} us   p10 {:>9.1}   p90 {:>9.1}   ({} iters)",
         stats.median, stats.p10, stats.p90, iters
@@ -97,52 +89,15 @@ fn run_update_alloc(engine: &dyn Engine, fx: &Fixture) {
     std::hint::black_box(&out);
 }
 
-fn git_rev() -> String {
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short=12", "HEAD"])
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|s| s.trim().to_string())
-        .unwrap_or_else(|| "unknown".into())
-}
-
-/// `secs`-since-epoch → ISO-8601 UTC (civil-from-days algorithm; the
-/// offline build has no chrono).
-fn iso8601_utc(secs: u64) -> String {
-    let days = (secs / 86_400) as i64;
-    let rem = secs % 86_400;
-    let (h, mi, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
-    let z = days + 719_468;
-    let era = z.div_euclid(146_097);
-    let doe = z.rem_euclid(146_097);
-    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
-    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
-    let mp = (5 * doy + 2) / 153;
-    let d = doy - (153 * mp + 2) / 5 + 1;
-    let m = if mp < 10 { mp + 3 } else { mp - 9 };
-    let y = yoe + era * 400 + i64::from(m <= 2);
-    format!("{y:04}-{m:02}-{d:02}T{h:02}:{mi:02}:{s:02}Z")
-}
-
 fn write_json(
     path: &str,
     spec: &GridSpec,
     results: &[(String, Stats)],
 ) -> std::io::Result<()> {
     use std::io::Write;
-    let unix = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
     let (mb, nb) = spec.block_shape();
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "{{")?;
-    writeln!(f, "  \"bench\": \"engine_microbench\",")?;
-    writeln!(f, "  \"git_rev\": \"{}\",", git_rev())?;
-    writeln!(f, "  \"timestamp_unix\": {unix},")?;
-    writeln!(f, "  \"timestamp_utc\": \"{}\",", iso8601_utc(unix))?;
+    f.write_all(bench_json_header("engine_microbench").as_bytes())?;
     writeln!(
         f,
         "  \"geometry\": {{ \"mb\": {mb}, \"nb\": {nb}, \"rank\": {} }},",
@@ -155,7 +110,7 @@ fn write_json(
         writeln!(
             f,
             "    \"{name}\": {{ \"median_us\": {:.3}, \"p10_us\": {:.3}, \"p90_us\": {:.3}, \"iters\": {} }}{comma}",
-            s.median, s.p10, s.p90, s.iters
+            s.median, s.p10, s.p90, s.n
         )?;
     }
     writeln!(f, "  }}")?;

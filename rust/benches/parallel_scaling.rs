@@ -1,7 +1,11 @@
-//! §6 future work: throughput scaling of the conflict-free parallel
-//! gossip driver vs the sequential Algorithm 1.
+//! Transport scaling of the gossip runtime: thread-per-block channels
+//! vs multiplexed workers vs barrier-free async dispatch at 64 / 256 /
+//! 1024 blocks. Prints the table and writes
+//! `BENCH_parallel_scaling.json` (median/p10/p90 updates/s + git rev;
+//! format in PERF.md §Reading `BENCH_*.json`).
 //!
 //! Run: `cargo bench --bench parallel_scaling`
+//! (scale iteration budgets with `GRIDMC_ITER_SCALE`)
 
 fn main() {
     gridmc::util::logging::init("warn");

@@ -13,6 +13,7 @@ pub mod presets;
 
 use crate::data::{RatingsConfig, SplitDataset, SyntheticConfig};
 use crate::grid::GridSpec;
+use crate::net::{NetConfig, SimConfig, TransportKind};
 use crate::solver::{SolverConfig, StepSchedule};
 use crate::{Error, Result};
 
@@ -58,6 +59,8 @@ pub enum DriverChoice {
     Sequential,
     /// Conflict-free parallel rounds over the agent network (§6).
     Parallel,
+    /// Barrier-free NOMAD-style dispatch over the agent network.
+    Async,
 }
 
 impl DriverChoice {
@@ -65,6 +68,7 @@ impl DriverChoice {
         match self {
             DriverChoice::Sequential => "sequential",
             DriverChoice::Parallel => "parallel",
+            DriverChoice::Async => "async",
         }
     }
 
@@ -72,6 +76,7 @@ impl DriverChoice {
         match s {
             "sequential" => Ok(DriverChoice::Sequential),
             "parallel" => Ok(DriverChoice::Parallel),
+            "async" => Ok(DriverChoice::Async),
             other => Err(Error::Config(format!("unknown driver {other:?}"))),
         }
     }
@@ -141,14 +146,26 @@ pub struct ExperimentConfig {
     pub solver: SolverConfig,
     pub engine: EngineChoice,
     pub driver: DriverChoice,
-    /// Worker threads for the parallel driver.
+    /// Structures in flight at once (parallel driver chunk size / async
+    /// driver `max_inflight`).
     pub workers: usize,
+    /// Which transport stack carries the gossip (`net/`).
+    pub transport: TransportKind,
+    /// Worker threads for the multiplexed transports (0 = auto).
+    pub net_workers: usize,
+    /// Link conditions for the sim transports.
+    pub sim: SimConfig,
 }
 
 impl ExperimentConfig {
     /// The grid spec once the dataset dimensions are known.
     pub fn grid_spec(&self, m: usize, n: usize) -> GridSpec {
         GridSpec::new(m, n, self.grid.p, self.grid.q, self.grid.rank)
+    }
+
+    /// The transport configuration the drivers consume.
+    pub fn net_config(&self) -> NetConfig {
+        NetConfig { kind: self.transport, workers: self.net_workers, sim: self.sim }
     }
 
     /// Parse from TOML-subset text.
@@ -210,6 +227,19 @@ impl ExperimentConfig {
             engine: EngineChoice::parse(&doc.str_or("engine", "native-sparse"))?,
             driver: DriverChoice::parse(&doc.str_or("driver", "sequential"))?,
             workers: doc.usize_or("workers", 4),
+            transport: TransportKind::parse(&doc.str_or("transport", "channel"))?,
+            net_workers: doc.usize_or("net_workers", 0),
+            sim: {
+                let d = SimConfig::default();
+                SimConfig {
+                    latency_us: doc.u64_or("sim.latency_us", d.latency_us),
+                    jitter_us: doc.u64_or("sim.jitter_us", d.jitter_us),
+                    drop_prob: doc.f64_or("sim.drop_prob", d.drop_prob),
+                    retry_after_us: doc.u64_or("sim.retry_after_us", d.retry_after_us),
+                    max_retries: doc.u64_or("sim.max_retries", d.max_retries as u64) as u32,
+                    seed: doc.u64_or("sim.seed", d.seed),
+                }
+            },
         })
     }
 
@@ -220,7 +250,9 @@ impl ExperimentConfig {
         s.push_str(&format!("name = {}\n", quote(&self.name)));
         s.push_str(&format!("engine = {}\n", quote(self.engine.as_str())));
         s.push_str(&format!("driver = {}\n", quote(self.driver.as_str())));
-        s.push_str(&format!("workers = {}\n\n[dataset]\n", self.workers));
+        s.push_str(&format!("workers = {}\n", self.workers));
+        s.push_str(&format!("transport = {}\n", quote(self.transport.as_str())));
+        s.push_str(&format!("net_workers = {}\n\n[dataset]\n", self.net_workers));
         match &self.dataset {
             DatasetConfig::Synthetic(c) => {
                 s.push_str("kind = \"synthetic\"\n");
@@ -262,6 +294,16 @@ impl ExperimentConfig {
         s.push_str(&format!(
             "\n[solver.schedule]\na = {}\nb = {}\n",
             sv.schedule.a, sv.schedule.b
+        ));
+        s.push_str(&format!(
+            "\n[sim]\nlatency_us = {}\njitter_us = {}\ndrop_prob = {}\n\
+             retry_after_us = {}\nmax_retries = {}\nseed = {}\n",
+            self.sim.latency_us,
+            self.sim.jitter_us,
+            self.sim.drop_prob,
+            self.sim.retry_after_us,
+            self.sim.max_retries,
+            self.sim.seed
         ));
         Ok(s)
     }
@@ -357,6 +399,9 @@ mod tests {
         assert_eq!(cfg.driver, DriverChoice::Sequential);
         assert_eq!(cfg.workers, 4);
         assert!(cfg.solver.normalize);
+        assert_eq!(cfg.transport, TransportKind::Channel);
+        assert_eq!(cfg.net_workers, 0);
+        assert_eq!(cfg.sim, SimConfig::default());
     }
 
     #[test]
@@ -364,6 +409,33 @@ mod tests {
         assert_eq!(EngineChoice::parse("xla").unwrap(), EngineChoice::Xla);
         assert!(EngineChoice::parse("gpu").is_err());
         assert_eq!(DriverChoice::parse("parallel").unwrap(), DriverChoice::Parallel);
+        assert_eq!(DriverChoice::parse("async").unwrap(), DriverChoice::Async);
         assert!(DriverChoice::parse("warp").is_err());
+    }
+
+    #[test]
+    fn transport_and_sim_roundtrip() {
+        let mut cfg = presets::exp(2).unwrap();
+        cfg.driver = DriverChoice::Async;
+        cfg.transport = TransportKind::SimMultiplex;
+        cfg.net_workers = 6;
+        cfg.sim = SimConfig {
+            latency_us: 120,
+            jitter_us: 35,
+            drop_prob: 0.125,
+            retry_after_us: 500,
+            max_retries: 9,
+            seed: 77,
+        };
+        let text = cfg.to_toml().unwrap();
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.driver, DriverChoice::Async);
+        assert_eq!(back.transport, TransportKind::SimMultiplex);
+        assert_eq!(back.net_workers, 6);
+        assert_eq!(back.sim, cfg.sim);
+        let net = back.net_config();
+        assert_eq!(net.kind, TransportKind::SimMultiplex);
+        assert_eq!(net.workers, 6);
+        assert_eq!(net.sim.drop_prob, 0.125);
     }
 }

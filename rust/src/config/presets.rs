@@ -9,6 +9,7 @@
 //! experiment definitions.
 
 use crate::data::{RatingsPreset, SyntheticConfig};
+use crate::net::{SimConfig, TransportKind};
 use crate::solver::{SolverConfig, StepSchedule};
 use crate::{Error, Result};
 
@@ -60,6 +61,9 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
         engine: EngineChoice::NativeSparse,
         driver: DriverChoice::Sequential,
         workers: 4,
+        transport: TransportKind::Channel,
+        net_workers: 0,
+        sim: SimConfig::default(),
     })
 }
 
@@ -92,6 +96,9 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
         engine: EngineChoice::NativeSparse,
         driver: DriverChoice::Sequential,
         workers: 4,
+        transport: TransportKind::Channel,
+        net_workers: 0,
+        sim: SimConfig::default(),
     }
     .scaled_for(users, items, g)
 }

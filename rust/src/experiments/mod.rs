@@ -7,7 +7,8 @@
 //! * [`table2`] — cost vs iterations for Exp#1–6 (paper Table 2);
 //! * [`table3`] — test RMSE across dataset × grid × rank (Table 3);
 //! * [`fig2`] — analytic vs empirical selection frequencies (Figure 2);
-//! * [`parallel`] — conflict-free round throughput scaling (§6);
+//! * [`parallel`] — transport scaling of the gossip runtime (§6 +
+//!   `net/`): channel vs multiplex vs async at 64–1024 blocks;
 //! * [`ablations`] — normalization / ρ / baseline comparisons.
 //!
 //! Iteration budgets honor `GRIDMC_ITER_SCALE` (see
@@ -23,7 +24,7 @@ pub mod table3;
 use crate::config::{DriverChoice, EngineChoice, ExperimentConfig};
 use crate::data::SplitDataset;
 use crate::engine::{Engine, NativeEngine, NativeMode, XlaEngine};
-use crate::gossip::ParallelDriver;
+use crate::gossip::{AsyncDriver, ParallelDriver};
 use crate::grid::GridSpec;
 use crate::model::FactorState;
 use crate::solver::{SequentialDriver, SolverReport};
@@ -76,7 +77,13 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
             driver.run(engine.as_mut(), &data.train)?
         }
         DriverChoice::Parallel => {
-            let driver = ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers);
+            let driver = ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers)
+                .with_net(cfg.net_config());
+            driver.run(engine, &data.train)?
+        }
+        DriverChoice::Async => {
+            let driver = AsyncDriver::new(spec, cfg.solver.clone(), cfg.workers)
+                .with_net(cfg.net_config());
             driver.run(engine, &data.train)?
         }
     };
@@ -186,6 +193,31 @@ mod tests {
         cfg.solver.schedule = crate::solver::StepSchedule { a: 2e-2, b: 1e-5 };
         let o = run_experiment(&cfg).unwrap();
         assert!(o.report.final_cost < o.report.curve.initial().unwrap());
+    }
+
+    #[test]
+    fn async_driver_choice_works() {
+        let mut cfg = presets::exp(1).unwrap();
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 40;
+            s.n = 40;
+            s.rank = 3;
+            s.train_fraction = 0.5;
+        }
+        cfg.grid.p = 3;
+        cfg.grid.q = 3;
+        cfg.grid.rank = 3;
+        cfg.driver = DriverChoice::Async;
+        cfg.transport = crate::net::TransportKind::Multiplex;
+        cfg.net_workers = 2;
+        cfg.workers = 2;
+        cfg.solver.max_iters = 1000;
+        cfg.solver.eval_every = 250;
+        cfg.solver.rho = 10.0;
+        cfg.solver.schedule = crate::solver::StepSchedule { a: 2e-2, b: 1e-5 };
+        let o = run_experiment(&cfg).unwrap();
+        assert!(o.report.final_cost < o.report.curve.initial().unwrap());
+        assert_eq!(o.report.engine, "native-sparse");
     }
 
     #[test]

@@ -1,28 +1,51 @@
-//! §6 future work: parallel structure-throughput scaling.
+//! Transport scaling of the gossip runtime (§6 future work + the
+//! `net/` subsystem).
 //!
-//! Measures structure updates/second of the gossip network as worker
-//! threads grow, on a grid large enough to admit wide conflict-free
-//! rounds (6×6 → up to 12 concurrent structures). The sequential driver
-//! is the 1-worker reference; the success criterion from DESIGN.md §9
-//! is ≥3× throughput at 8 workers.
+//! Measures structure updates/second with per-block work held constant
+//! ([`BLOCK_SIDE`]² cells per block) while the grid — and therefore the
+//! agent count — grows: thread-per-block `ChannelTransport` vs
+//! `MultiplexTransport` under the round-barrier [`ParallelDriver`],
+//! plus the barrier-free [`AsyncDriver`], at 64 / 256 / 1024 blocks.
+//! Each configuration runs [`REPEATS`] times; median/p10/p90 land in
+//! `BENCH_parallel_scaling.json` next to the stdout table (format in
+//! PERF.md §Reading `BENCH_*.json`).
+
+use std::io::Write;
 
 use crate::config::presets;
-use crate::data::SyntheticConfig;
+use crate::data::{CooMatrix, SyntheticConfig};
 use crate::engine::NativeEngine;
-use crate::gossip::ParallelDriver;
+use crate::gossip::{AsyncDriver, ParallelDriver, ScheduleBuilder};
 use crate::grid::GridSpec;
-use crate::metrics::{TablePrinter, Throughput};
-use crate::solver::{SequentialDriver, SolverConfig, StepSchedule};
+use crate::metrics::{bench_json_header, percentiles, Percentiles, TablePrinter};
+use crate::net::NetConfig;
+use crate::solver::{SolverConfig, StepSchedule};
 use crate::Result;
 
-/// One scaling measurement.
+/// Blocks per grid side: 8×8 = 64, 16×16 = 256, 32×32 = 1024 agents.
+pub const GRID_SIDES: [usize; 3] = [8, 16, 32];
+/// Cells per block side — fixed across grid sizes so the scan isolates
+/// runtime (threads, queues, barriers), not kernel math.
+const BLOCK_SIDE: usize = 32;
+const RANK: usize = 4;
+/// Timed runs per configuration (median/p10/p90 over these).
+const REPEATS: usize = 3;
+
+/// One (mode × grid) measurement.
 pub struct ScalingPoint {
-    pub workers: usize,
-    pub throughput: Throughput,
+    /// `driver/transport`, e.g. `"parallel/channel"`.
+    pub mode: &'static str,
+    /// Total agents (blocks) in the grid.
+    pub blocks: usize,
+    /// Updates/second across the repeats.
+    pub stats: Percentiles,
+    /// Structure updates per timed run.
+    pub iters: u64,
+    /// Final cost of the last repeat (cross-mode sanity anchor).
     pub final_cost: f64,
 }
 
-fn bench_cfg(iters: u64) -> SolverConfig {
+fn bench_cfg(iters: u64, seed: u64) -> SolverConfig {
     SolverConfig {
         rho: 10.0,
         lambda: 1e-9,
@@ -32,115 +55,209 @@ fn bench_cfg(iters: u64) -> SolverConfig {
         abs_tol: 0.0,
         rel_tol: 0.0,
         patience: u32::MAX,
-        seed: 9,
+        seed,
         normalize: true,
     }
 }
 
-/// Measure sequential + parallel throughput at several worker counts.
-pub fn collect(workers: &[usize]) -> Result<Vec<ScalingPoint>> {
-    // Blocks must be large enough that engine compute dominates the
-    // 4-hop gossip message latency (160x160 blocks, ~7.7k entries each).
-    let m = 960;
-    let spec = GridSpec::new(m, m, 6, 6, 5);
+fn problem(g: usize) -> (GridSpec, CooMatrix) {
+    let m = g * BLOCK_SIDE;
+    let spec = GridSpec::new(m, m, g, g, RANK);
     let data = SyntheticConfig {
         m,
         n: m,
-        rank: 5,
-        train_fraction: 0.3,
+        rank: RANK,
+        train_fraction: 0.2,
         test_fraction: 0.0,
         noise_std: 0.0,
-        seed: 5,
+        seed: 11,
     }
     .generate();
-    let iters = (20_000.0 * presets::iter_scale()) as u64;
-    let cfg = bench_cfg(iters.max(500));
+    (spec, data.data.train)
+}
 
+/// Measure every mode at every grid side in `grids`.
+pub fn collect(grids: &[usize]) -> Result<Vec<ScalingPoint>> {
     let mut out = Vec::new();
-
-    // Sequential reference (workers = 0 denotes Algorithm 1 verbatim).
-    {
-        let mut engine = NativeEngine::new();
-        let driver = SequentialDriver::new(spec, cfg.clone());
-        let (report, _) = driver.run(&mut engine, &data.data.train)?;
-        out.push(ScalingPoint {
-            workers: 0,
-            throughput: Throughput { updates: report.iters, wall: report.wall },
-            final_cost: report.final_cost,
-        });
-    }
-
-    for &w in workers {
-        let driver = ParallelDriver::new(spec, cfg.clone(), w);
-        let (report, _) = driver.run(Box::new(NativeEngine::new()), &data.data.train)?;
-        out.push(ScalingPoint {
-            workers: w,
-            throughput: Throughput { updates: report.iters, wall: report.wall },
-            final_cost: report.final_cost,
-        });
+    for &g in grids {
+        let (spec, train) = problem(g);
+        let epoch = 2 * (g - 1) * (g - 1);
+        let iters =
+            (((2 * epoch) as f64 * presets::iter_scale()) as u64).max(epoch as u64).max(64);
+        // In-flight cap: the exact structure-parallelism ceiling of the
+        // grid, so neither driver is starved by the dispatch width.
+        let width = ScheduleBuilder::new(spec, 0).max_parallelism().max(1);
+        let modes: [(&'static str, NetConfig, bool); 3] = [
+            ("parallel/channel", NetConfig::channel(), false),
+            ("parallel/multiplex", NetConfig::multiplex(0), false),
+            ("async/multiplex", NetConfig::multiplex(0), true),
+        ];
+        for (mode, net, is_async) in modes {
+            let mut samples = Vec::with_capacity(REPEATS);
+            let mut final_cost = f64::NAN;
+            for rep in 0..REPEATS {
+                let cfg = bench_cfg(iters, 9 + rep as u64);
+                let (report, _) = if is_async {
+                    AsyncDriver::new(spec, cfg, width)
+                        .with_net(net)
+                        .run(Box::new(NativeEngine::new()), &train)?
+                } else {
+                    ParallelDriver::new(spec, cfg, width)
+                        .with_net(net)
+                        .run(Box::new(NativeEngine::new()), &train)?
+                };
+                samples.push(report.updates_per_sec());
+                final_cost = report.final_cost;
+            }
+            log::info!("{mode} @ {} blocks done", g * g);
+            out.push(ScalingPoint {
+                mode,
+                blocks: g * g,
+                stats: percentiles(&samples),
+                iters,
+                final_cost,
+            });
+        }
     }
     Ok(out)
 }
 
-/// Render the scaling table.
+/// Render the scaling table (speedups relative to `parallel/channel`
+/// at the same grid size).
 pub fn render(points: &[ScalingPoint]) -> String {
-    let base = points
-        .first()
-        .map(|p| p.throughput.per_sec())
-        .unwrap_or(1.0);
-    let mut t = TablePrinter::new(&["driver", "workers", "updates/s", "speedup", "final cost"]);
+    let mut t = TablePrinter::new(&[
+        "blocks",
+        "mode",
+        "median up/s",
+        "p10",
+        "p90",
+        "vs channel",
+        "final cost",
+    ]);
     for p in points {
-        let label = if p.workers == 0 { "sequential" } else { "parallel" };
+        let base = points
+            .iter()
+            .find(|b| b.blocks == p.blocks && b.mode == "parallel/channel")
+            .map(|b| b.stats.median)
+            .unwrap_or(p.stats.median);
         t.row(&[
-            label.to_string(),
-            if p.workers == 0 { "-".into() } else { p.workers.to_string() },
-            format!("{:.0}", p.throughput.per_sec()),
-            format!("{:.2}x", p.throughput.per_sec() / base),
+            p.blocks.to_string(),
+            p.mode.to_string(),
+            format!("{:.0}", p.stats.median),
+            format!("{:.0}", p.stats.p10),
+            format!("{:.0}", p.stats.p90),
+            format!("{:.2}x", p.stats.median / base.max(1e-12)),
             format!("{:.3e}", p.final_cost),
         ]);
     }
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     format!(
-        "== §6 future work: conflict-free parallel scaling (6x6 grid) ==\n\
-         (testbed has {cores} core(s); wall-clock speedup requires >1 — on a\n\
-         single-core box this table measures dispatch overhead only, while\n\
-         the `single_worker_matches_multi_worker` test pins that concurrency\n\
-         never changes the math)\n{}",
+        "== net/ transport scaling (fixed {BLOCK_SIDE}x{BLOCK_SIDE}-cell blocks; \
+         {REPEATS} repeats; testbed has {cores} core(s)) ==\n{}",
         t.render()
     )
 }
 
-/// Full harness.
-pub fn run() -> Result<String> {
-    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
-    let mut workers = vec![1, 2, 4];
-    if cores >= 8 {
-        workers.push(8);
+/// Write the machine-readable trajectory point (PERF.md format).
+pub fn write_json(path: &str, points: &[ScalingPoint]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(bench_json_header("parallel_scaling").as_bytes())?;
+    writeln!(
+        f,
+        "  \"geometry\": {{ \"block_side\": {BLOCK_SIDE}, \"rank\": {RANK} }},"
+    )?;
+    writeln!(f, "  \"unit\": \"updates_per_second\",")?;
+    writeln!(f, "  \"configs\": {{")?;
+    for (k, p) in points.iter().enumerate() {
+        let comma = if k + 1 == points.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    \"{}/{}\": {{ \"median\": {:.3}, \"p10\": {:.3}, \"p90\": {:.3}, \
+             \"repeats\": {}, \"iters\": {}, \"final_cost\": {:.6e} }}{comma}",
+            p.mode, p.blocks, p.stats.median, p.stats.p10, p.stats.p90, p.stats.n, p.iters,
+            p.final_cost
+        )?;
     }
-    Ok(render(&collect(&workers)?))
+    writeln!(f, "  }}")?;
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
+/// Full harness: measure, write `BENCH_parallel_scaling.json`, render.
+pub fn run() -> Result<String> {
+    let points = collect(&GRID_SIDES)?;
+    let out = "BENCH_parallel_scaling.json";
+    let note = match write_json(out, &points) {
+        Ok(()) => format!("wrote {out} ({} configs)\n", points.len()),
+        Err(e) => format!("could not write {out}: {e}\n"),
+    };
+    Ok(format!("{}{note}", render(&points)))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn fake_points() -> Vec<ScalingPoint> {
+        let stats = |m: f64| percentiles(&[m * 0.9, m, m * 1.1]);
+        vec![
+            ScalingPoint {
+                mode: "parallel/channel",
+                blocks: 64,
+                stats: stats(1000.0),
+                iters: 500,
+                final_cost: 1.0,
+            },
+            ScalingPoint {
+                mode: "parallel/multiplex",
+                blocks: 64,
+                stats: stats(2000.0),
+                iters: 500,
+                final_cost: 1.0,
+            },
+            ScalingPoint {
+                mode: "async/multiplex",
+                blocks: 64,
+                stats: stats(3000.0),
+                iters: 500,
+                final_cost: 1.0,
+            },
+        ]
+    }
+
     #[test]
-    fn render_has_speedups() {
-        use std::time::Duration;
-        let pts = vec![
-            ScalingPoint {
-                workers: 0,
-                throughput: Throughput { updates: 100, wall: Duration::from_secs(1) },
-                final_cost: 1.0,
-            },
-            ScalingPoint {
-                workers: 4,
-                throughput: Throughput { updates: 400, wall: Duration::from_secs(1) },
-                final_cost: 1.0,
-            },
-        ];
-        let s = render(&pts);
-        assert!(s.contains("4.00x"));
-        assert!(s.contains("sequential"));
+    fn render_reports_speedup_vs_channel() {
+        let s = render(&fake_points());
+        assert!(s.contains("parallel/channel"), "{s}");
+        assert!(s.contains("1.00x"), "{s}");
+        assert!(s.contains("2.00x"), "{s}");
+        assert!(s.contains("3.00x"), "{s}");
+    }
+
+    #[test]
+    fn json_has_all_configs_and_rev() {
+        let dir = std::env::temp_dir().join("gridmc-parallel-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_parallel_scaling.json");
+        let path = path.to_str().unwrap();
+        write_json(path, &fake_points()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"bench\": \"parallel_scaling\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"parallel/channel/64\""));
+        assert!(text.contains("\"async/multiplex/64\""));
+        assert!(text.contains("\"unit\": \"updates_per_second\""));
+        // Valid-ish JSON shape: braces balance.
+        let opens = text.matches('{').count();
+        let closes = text.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn bench_cfg_keeps_evals_out_of_timing() {
+        let c = bench_cfg(1000, 1);
+        assert_eq!(c.eval_every, 1000);
+        assert_eq!(c.patience, u32::MAX);
+        assert_eq!(c.abs_tol, 0.0);
     }
 }

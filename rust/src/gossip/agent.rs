@@ -1,176 +1,434 @@
 //! Block agents: the decentralized unit of the gossip runtime.
 //!
-//! One OS thread per block. Each agent owns its block's factors
-//! `(U_ij, W_ij)` and a handle to the shared [`Engine`] (which holds the
-//! immutable block data). Agents only ever exchange messages with grid
-//! neighbours — the leader orchestrates *which* structure fires when
-//! (exactly as the paper's random sampling implicitly does) but never
-//! sees factor matrices during learning.
+//! Each agent owns its block's factors `(U_ij, W_ij)` and a handle to
+//! the shared [`Engine`] (which holds the immutable block data).
+//! Agents only ever exchange messages with grid neighbours — the
+//! driver orchestrates *which* structure fires when (exactly as the
+//! paper's random sampling implicitly does) but never sees factor
+//! matrices during learning.
 //!
-//! A structure update is a three-party gossip round driven by the
-//! anchor agent:
+//! An agent is a **non-blocking state machine**: [`BlockAgent::on_msg`]
+//! consumes one message, pushes any addressed replies into the caller's
+//! outbox, and returns. No message handler ever waits — which is what
+//! lets [`crate::net::MultiplexTransport`] co-locate many agents on one
+//! worker thread without deadlock, and lets any transport deliver
+//! messages in any (per-link FIFO) order.
 //!
-//! 1. anchor receives `Execute{structure, params}` from the driver;
-//! 2. anchor pulls `(U, W)` from its horizontal and vertical neighbours
-//!    (`GetFactors`);
-//! 3. anchor runs the engine's structure update;
-//! 4. anchor keeps its own new factors and pushes the neighbours'
-//!    updated factors back (`PutFactors`), then acks the driver.
+//! A structure update is a three-party protocol driven by the anchor:
 //!
-//! Deadlock freedom: a neighbour serves `GetFactors`/`PutFactors` from
-//! its mailbox whenever it is not itself anchoring a structure, and the
-//! scheduler ([`super::ScheduleBuilder`]) guarantees concurrently
-//! dispatched structures share no blocks — so an anchor's neighbours
-//! are never anchors (nor members) of another in-flight structure.
-
-use std::collections::HashMap;
-use std::sync::mpsc;
+//! 1. `Execute{structure}` arrives from the driver → the anchor sends
+//!    `GetFactors` to the structure's horizontal and vertical members
+//!    and enters [`Phase::Gather`];
+//! 2. the two `Factors` replies arrive (in either order) → the anchor
+//!    runs the engine's structure update, keeps its own new factors,
+//!    pushes the members' updates back with `PutFactors`, and enters
+//!    [`Phase::Scatter`];
+//! 3. the two `PutAck`s arrive → the anchor reports `Done` to the
+//!    driver and returns to [`Phase::Idle`].
+//!
+//! Safety of interleaving: the drivers only dispatch structures whose
+//! three blocks are all free (conflict-free rounds, or the async
+//! driver's per-block in-flight flags), so while an agent is gathering
+//! or scattering, no *other* structure's traffic can address it. The
+//! `debug_assert!`s below pin that invariant.
 
 use crate::data::DenseMatrix;
 use crate::engine::{Engine, EngineWorkspace, StructureParams};
 use crate::grid::{BlockId, Structure};
-use crate::{Error, Result};
+use crate::net::{AgentMsg, DriverMsg, Outbox, Outgoing};
 
-/// Single-use reply channel (oneshot).
-pub type Reply<T> = mpsc::SyncSender<T>;
-
-/// Create a oneshot pair.
-pub fn oneshot<T>() -> (Reply<T>, mpsc::Receiver<T>) {
-    mpsc::sync_channel(1)
+/// What the transport should do with the agent after a message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentStatus {
+    /// Keep routing messages to this agent.
+    Running,
+    /// The agent answered `Shutdown`; remove it from the network.
+    Retired,
 }
 
-/// Messages an agent accepts.
-pub enum AgentMsg {
-    /// Neighbour (or assembler) asks for the current factors.
-    GetFactors { reply: Reply<(DenseMatrix, DenseMatrix)> },
-    /// Anchor pushes updated factors after a structure update.
-    PutFactors { u: DenseMatrix, w: DenseMatrix, ack: Reply<()> },
-    /// Driver asks this agent to anchor one structure update.
-    Execute {
+/// Protocol state of one agent.
+enum Phase {
+    Idle,
+    /// Anchoring: waiting for the members' `Factors` replies.
+    Gather {
         structure: Structure,
         params: StructureParams,
-        done: Reply<Result<()>>,
+        token: u64,
+        h: Option<(DenseMatrix, DenseMatrix)>,
+        v: Option<(DenseMatrix, DenseMatrix)>,
     },
-    /// Driver asks for this block's current cost term.
-    GetCost { lambda: f32, reply: Reply<Result<f64>> },
-    /// Stop and hand the final factors back.
-    Shutdown { reply: Reply<(BlockId, DenseMatrix, DenseMatrix)> },
+    /// Anchoring: waiting for the members' `PutAck`s.
+    Scatter { token: u64, pending: u8 },
 }
 
-/// Mailbox handle to one agent.
-#[derive(Clone)]
-pub struct AgentHandle {
-    pub id: BlockId,
-    pub tx: mpsc::Sender<AgentMsg>,
-}
-
-/// Agent state + event loop (runs on its own thread).
-pub struct Agent {
+/// One block's state machine (factors + engine scratch + phase).
+pub struct BlockAgent {
     id: BlockId,
     u: DenseMatrix,
     w: DenseMatrix,
     engine: std::sync::Arc<dyn Engine>,
-    /// Handles to the (up to 4) grid neighbours, keyed by block id.
-    neighbours: HashMap<BlockId, AgentHandle>,
-    rx: mpsc::Receiver<AgentMsg>,
     /// Engine scratch reused across every structure update this agent
     /// anchors — the compute call itself allocates nothing in steady
     /// state (PERF.md).
     ws: EngineWorkspace,
+    phase: Phase,
 }
 
-impl Agent {
+impl BlockAgent {
     pub fn new(
         id: BlockId,
         u: DenseMatrix,
         w: DenseMatrix,
         engine: std::sync::Arc<dyn Engine>,
-        neighbours: HashMap<BlockId, AgentHandle>,
-        rx: mpsc::Receiver<AgentMsg>,
     ) -> Self {
-        Self { id, u, w, engine, neighbours, rx, ws: EngineWorkspace::new() }
+        Self { id, u, w, engine, ws: EngineWorkspace::new(), phase: Phase::Idle }
     }
 
-    fn pull_neighbour(&self, id: BlockId) -> Result<(DenseMatrix, DenseMatrix)> {
-        let handle = self
-            .neighbours
-            .get(&id)
-            .ok_or_else(|| Error::Gossip(format!("{} has no neighbour {}", self.id, id)))?;
-        let (tx, rx) = oneshot();
-        handle
-            .tx
-            .send(AgentMsg::GetFactors { reply: tx })
-            .map_err(|_| Error::Gossip(format!("neighbour {id} mailbox closed")))?;
-        rx.recv()
-            .map_err(|_| Error::Gossip(format!("neighbour {id} dropped reply")))
+    pub fn id(&self) -> BlockId {
+        self.id
     }
 
-    fn push_neighbour(&self, id: BlockId, u: DenseMatrix, w: DenseMatrix) -> Result<()> {
-        let handle = self
-            .neighbours
-            .get(&id)
-            .ok_or_else(|| Error::Gossip(format!("{} has no neighbour {}", self.id, id)))?;
-        let (tx, rx) = oneshot();
-        handle
-            .tx
-            .send(AgentMsg::PutFactors { u, w, ack: tx })
-            .map_err(|_| Error::Gossip(format!("neighbour {id} mailbox closed")))?;
-        rx.recv()
-            .map_err(|_| Error::Gossip(format!("neighbour {id} dropped ack")))
+    /// Step the state machine on one incoming message. Replies are
+    /// pushed into `out` (addressed; the transport routes them).
+    pub fn on_msg(&mut self, msg: AgentMsg, out: &mut Outbox) -> AgentStatus {
+        match msg {
+            AgentMsg::Execute { structure, params, token } => {
+                debug_assert!(
+                    matches!(self.phase, Phase::Idle),
+                    "{}: Execute while busy (driver dispatched a conflict)",
+                    self.id
+                );
+                let roles = structure.roles();
+                debug_assert_eq!(roles.anchor, self.id, "driver must dispatch to the anchor");
+                out.push(Outgoing::Peer(
+                    roles.horizontal,
+                    AgentMsg::GetFactors { from: self.id },
+                ));
+                out.push(Outgoing::Peer(
+                    roles.vertical,
+                    AgentMsg::GetFactors { from: self.id },
+                ));
+                self.phase = Phase::Gather { structure, params, token, h: None, v: None };
+            }
+            AgentMsg::GetFactors { from } => {
+                out.push(Outgoing::Peer(
+                    from,
+                    AgentMsg::Factors { from: self.id, u: self.u.clone(), w: self.w.clone() },
+                ));
+            }
+            AgentMsg::Factors { from, u, w } => {
+                match std::mem::replace(&mut self.phase, Phase::Idle) {
+                    Phase::Gather { structure, params, token, mut h, mut v } => {
+                        let roles = structure.roles();
+                        if from == roles.horizontal {
+                            h = Some((u, w));
+                        } else if from == roles.vertical {
+                            v = Some((u, w));
+                        } else {
+                            debug_assert!(false, "{}: Factors from non-member {from}", self.id);
+                        }
+                        match (h, v) {
+                            (Some(hf), Some(vf)) => {
+                                self.finish_gather(structure, params, token, hf, vf, out);
+                            }
+                            (h, v) => {
+                                self.phase =
+                                    Phase::Gather { structure, params, token, h, v };
+                            }
+                        }
+                    }
+                    other => {
+                        debug_assert!(false, "{}: Factors outside Gather", self.id);
+                        self.phase = other;
+                    }
+                }
+            }
+            AgentMsg::PutFactors { from, u, w } => {
+                self.u = u;
+                self.w = w;
+                out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
+            }
+            AgentMsg::PutAck { from: _ } => {
+                match std::mem::replace(&mut self.phase, Phase::Idle) {
+                    Phase::Scatter { token, pending } => {
+                        if pending <= 1 {
+                            out.push(Outgoing::Driver(DriverMsg::Done {
+                                anchor: self.id,
+                                token,
+                                result: Ok(()),
+                            }));
+                        } else {
+                            self.phase = Phase::Scatter { token, pending: pending - 1 };
+                        }
+                    }
+                    other => {
+                        debug_assert!(false, "{}: PutAck outside Scatter", self.id);
+                        self.phase = other;
+                    }
+                }
+            }
+            AgentMsg::GetCost { lambda } => {
+                let cost = self.engine.block_cost(self.id, &self.u, &self.w, lambda);
+                out.push(Outgoing::Driver(DriverMsg::Cost { from: self.id, cost }));
+            }
+            AgentMsg::Shutdown => {
+                let u = std::mem::take(&mut self.u);
+                let w = std::mem::take(&mut self.w);
+                out.push(Outgoing::Driver(DriverMsg::Retired { from: self.id, u, w }));
+                return AgentStatus::Retired;
+            }
+        }
+        AgentStatus::Running
     }
 
-    /// Anchor one structure update (steps 2–4 of the module docs).
-    fn execute(&mut self, structure: Structure, params: StructureParams) -> Result<()> {
+    /// Both members answered: run the engine update, adopt our own new
+    /// factors, and scatter the members' updates.
+    fn finish_gather(
+        &mut self,
+        structure: Structure,
+        params: StructureParams,
+        token: u64,
+        (hu, hw): (DenseMatrix, DenseMatrix),
+        (vu, vw): (DenseMatrix, DenseMatrix),
+        out: &mut Outbox,
+    ) {
         let roles = structure.roles();
-        debug_assert_eq!(roles.anchor, self.id, "driver must dispatch to the anchor");
-        let (mut uh, mut wh) = self.pull_neighbour(roles.horizontal)?;
-        let (mut uv, mut wv) = self.pull_neighbour(roles.vertical)?;
-
         // Hot call: updates land in the reused workspace, no per-update
         // matrix allocations on the native engine.
-        self.engine.structure_update_into(
+        let res = self.engine.structure_update_into(
             &roles,
-            [(&self.u, &self.w), (&uh, &wh), (&uv, &wv)],
+            [(&self.u, &self.w), (&hu, &hw), (&vu, &vw)],
             &params,
             &mut self.ws,
-        )?;
-
-        // O(1) reclaim: swap our factors — and the pulled neighbour
-        // copies we own anyway — with the workspace outputs, handing
-        // the old buffers back to the workspace for the next round.
-        self.ws.swap_output(0, &mut self.u, &mut self.w);
-        self.ws.swap_output(1, &mut uh, &mut wh);
-        self.ws.swap_output(2, &mut uv, &mut wv);
-        self.push_neighbour(roles.horizontal, uh, wh)?;
-        self.push_neighbour(roles.vertical, uv, wv)?;
-        Ok(())
+        );
+        match res {
+            Ok(()) => {
+                // O(1) reclaim: swap our factors — and the pulled member
+                // copies we own anyway — with the workspace outputs,
+                // handing the old buffers back for the next round.
+                self.ws.swap_output(0, &mut self.u, &mut self.w);
+                let (mut hu, mut hw) = (hu, hw);
+                let (mut vu, mut vw) = (vu, vw);
+                self.ws.swap_output(1, &mut hu, &mut hw);
+                self.ws.swap_output(2, &mut vu, &mut vw);
+                out.push(Outgoing::Peer(
+                    roles.horizontal,
+                    AgentMsg::PutFactors { from: self.id, u: hu, w: hw },
+                ));
+                out.push(Outgoing::Peer(
+                    roles.vertical,
+                    AgentMsg::PutFactors { from: self.id, u: vu, w: vw },
+                ));
+                self.phase = Phase::Scatter { token, pending: 2 };
+            }
+            Err(e) => {
+                out.push(Outgoing::Driver(DriverMsg::Done {
+                    anchor: self.id,
+                    token,
+                    result: Err(e),
+                }));
+                self.phase = Phase::Idle;
+            }
+        }
     }
+}
 
-    /// Run the mailbox loop until `Shutdown` (or all senders dropped).
-    pub fn run(mut self) {
-        while let Ok(msg) = self.rx.recv() {
-            match msg {
-                AgentMsg::GetFactors { reply } => {
-                    let _ = reply.send((self.u.clone(), self.w.clone()));
-                }
-                AgentMsg::PutFactors { u, w, ack } => {
-                    self.u = u;
-                    self.w = w;
-                    let _ = ack.send(());
-                }
-                AgentMsg::Execute { structure, params, done } => {
-                    let result = self.execute(structure, params);
-                    let _ = done.send(result);
-                }
-                AgentMsg::GetCost { lambda, reply } => {
-                    let cost = self.engine.block_cost(self.id, &self.u, &self.w, lambda);
-                    let _ = reply.send(cost);
-                }
-                AgentMsg::Shutdown { reply } => {
-                    let _ = reply.send((self.id, self.u, self.w));
-                    return;
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CooMatrix;
+    use crate::engine::{Engine, NativeEngine};
+    use crate::grid::{BlockPartition, GridSpec, NormalizationCoeffs};
+    use crate::model::FactorState;
+    use std::sync::Arc;
+
+    /// Drive the three-party protocol by hand through a message pump:
+    /// a sorted map of agents plus a loop delivering outboxes.
+    fn pump(
+        agents: &mut std::collections::HashMap<usize, BlockAgent>,
+        q: usize,
+        mut inbox: Vec<(BlockId, AgentMsg)>,
+    ) -> Vec<DriverMsg> {
+        let mut driver = Vec::new();
+        while let Some((to, msg)) = inbox.pop() {
+            let agent = agents.get_mut(&to.index(q)).expect("addressed agent exists");
+            let mut out = Vec::new();
+            agent.on_msg(msg, &mut out);
+            for o in out {
+                match o {
+                    Outgoing::Peer(to, m) => inbox.push((to, m)),
+                    Outgoing::Driver(d) => driver.push(d),
                 }
             }
         }
+        driver
+    }
+
+    fn network(
+        spec: GridSpec,
+        train: &CooMatrix,
+        seed: u64,
+    ) -> (Arc<dyn Engine>, std::collections::HashMap<usize, BlockAgent>) {
+        let partition = BlockPartition::new(spec, train).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&partition).unwrap();
+        let engine: Arc<dyn Engine> = Arc::new(engine);
+        let mut state = FactorState::init_random(spec, seed);
+        let mut agents = std::collections::HashMap::new();
+        for id in spec.blocks() {
+            let (u, w) = state.take_block(id);
+            agents.insert(
+                id.index(spec.q),
+                BlockAgent::new(id, u, w, engine.clone()),
+            );
+        }
+        (engine, agents)
+    }
+
+    fn problem() -> (GridSpec, CooMatrix) {
+        let spec = GridSpec::new(20, 20, 2, 2, 2);
+        let d = crate::data::SyntheticConfig {
+            m: 20,
+            n: 20,
+            rank: 2,
+            train_fraction: 0.6,
+            test_fraction: 0.0,
+            noise_std: 0.0,
+            seed: 5,
+        }
+        .generate();
+        (spec, d.data.train)
+    }
+
+    #[test]
+    fn execute_runs_full_three_party_protocol() {
+        let (_, mut agents) = {
+            let (spec, train) = problem();
+            let (e, a) = network(spec, &train, 1);
+            (e, a)
+        };
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 42 })],
+        );
+        assert_eq!(driver.len(), 1);
+        match &driver[0] {
+            DriverMsg::Done { anchor, token, result } => {
+                assert_eq!(*anchor, roles.anchor);
+                assert_eq!(*token, 42);
+                assert!(result.is_ok());
+            }
+            other => panic!("expected Done, got {}", other.kind()),
+        }
+        // Every agent returned to Idle (a second Execute must work).
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 43 })],
+        );
+        assert_eq!(driver.len(), 1);
+    }
+
+    #[test]
+    fn protocol_matches_direct_engine_update() {
+        // The message-passing update must produce exactly the factors
+        // the engine computes on the same inputs.
+        let (spec, train) = problem();
+        let (engine, mut agents) = network(spec, &train, 2);
+        let state = FactorState::init_random(spec, 2); // same seed ⇒ same init
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        let expected = engine
+            .structure_update(&roles, state.structure_factors(&roles), &params)
+            .unwrap();
+        pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 0 })],
+        );
+        for (k, id) in [roles.anchor, roles.horizontal, roles.vertical]
+            .into_iter()
+            .enumerate()
+        {
+            let agent = agents.get(&id.index(2)).unwrap();
+            assert_eq!(agent.u, expected[k].0, "block {id} U");
+            assert_eq!(agent.w, expected[k].1, "block {id} W");
+        }
+    }
+
+    #[test]
+    fn get_cost_and_shutdown_reply_to_driver() {
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 3);
+        let id = BlockId::new(1, 1);
+        let driver = pump(&mut agents, 2, vec![(id, AgentMsg::GetCost { lambda: 1e-9 })]);
+        assert!(matches!(
+            driver.as_slice(),
+            [DriverMsg::Cost { from, cost: Ok(c) }] if *from == id && *c >= 0.0
+        ));
+        let agent = agents.get_mut(&id.index(2)).unwrap();
+        let mut out = Vec::new();
+        let status = agent.on_msg(AgentMsg::Shutdown, &mut out);
+        assert_eq!(status, AgentStatus::Retired);
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Driver(DriverMsg::Retired { from, .. })] if *from == id
+        ));
+    }
+
+    #[test]
+    fn factors_replies_accepted_in_either_order() {
+        // Deliver the vertical member's Factors before the horizontal
+        // one: result must match the canonical order (transports under
+        // jitter reorder exactly like this).
+        let (spec, train) = problem();
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+
+        let run = |reversed: bool| {
+            let (_, mut agents) = network(spec, &train, 4);
+            // Step 1: Execute → two GetFactors requests.
+            let anchor_k = roles.anchor.index(2);
+            let mut out = Vec::new();
+            agents
+                .get_mut(&anchor_k)
+                .unwrap()
+                .on_msg(AgentMsg::Execute { structure: s, params, token: 0 }, &mut out);
+            // Collect the Factors replies from both members.
+            let mut replies = Vec::new();
+            for o in out {
+                let Outgoing::Peer(to, m) = o else { panic!("driver msg in gather") };
+                let mut member_out = Vec::new();
+                agents.get_mut(&to.index(2)).unwrap().on_msg(m, &mut member_out);
+                for r in member_out {
+                    let Outgoing::Peer(back, f) = r else { panic!() };
+                    assert_eq!(back, roles.anchor);
+                    replies.push(f);
+                }
+            }
+            assert_eq!(replies.len(), 2);
+            if reversed {
+                replies.reverse();
+            }
+            // Step 2: deliver the replies; finish the protocol.
+            let inbox: Vec<_> =
+                replies.into_iter().map(|f| (roles.anchor, f)).collect();
+            pump(&mut agents, 2, inbox);
+            let a = agents.remove(&anchor_k).unwrap();
+            (a.u, a.w)
+        };
+        let (u1, w1) = run(false);
+        let (u2, w2) = run(true);
+        assert_eq!(u1, u2);
+        assert_eq!(w1, w2);
     }
 }

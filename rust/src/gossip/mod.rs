@@ -1,19 +1,27 @@
 //! The decentralized gossip runtime (L3's system contribution).
 //!
-//! [`GossipNetwork`] spawns one [`agent`](agent::Agent) thread per
-//! block, wired so each agent can only message its grid neighbours.
-//! [`ParallelDriver`] drives training through the network: it asks
-//! [`ScheduleBuilder`] for conflict-free rounds (the paper's §6 future
-//! work) and dispatches each round's structures to their anchor agents
-//! concurrently, at most `workers` in flight. With `workers = 1` the
-//! network degenerates to exactly the paper's sequential Algorithm 1
-//! dispatch order — the `single_worker_matches_multi_worker` test pins
-//! that worker count changes wall-clock, not math.
+//! [`GossipNetwork`] runs one [`BlockAgent`] state machine per block
+//! over a pluggable [`crate::net`] transport — thread-per-block
+//! channels, multiplexed workers for `p·q ≫ cores` grids, or simulated
+//! lossy links — wired so each agent only ever messages its grid
+//! neighbours. Two drivers train through the network:
+//!
+//! * [`ParallelDriver`] — conflict-free rounds from [`ScheduleBuilder`]
+//!   (the paper's §6 future work), dispatched with a barrier per round.
+//!   Deterministic: for a fixed seed the trained state is bit-identical
+//!   across transports and worker counts (`single_worker_matches_multi_worker`,
+//!   `tests/transport_equivalence.rs`).
+//! * [`AsyncDriver`] — NOMAD-style barrier-free dispatch: structures
+//!   stream out as their blocks free up (per-block in-flight flags),
+//!   keeping the pipeline full instead of waiting for each round's
+//!   slowest update. Higher throughput at scale, at the cost of
+//!   run-to-run bit determinism (completion order steers the schedule;
+//!   `max_inflight = 1` restores full determinism).
 
 mod agent;
 mod scheduler;
 
-pub use agent::{oneshot, AgentHandle, AgentMsg};
+pub use agent::{AgentStatus, BlockAgent};
 pub use scheduler::{conflicts, ScheduleBuilder};
 
 use std::collections::HashMap;
@@ -24,65 +32,74 @@ use crate::engine::{Engine, StructureParams};
 use crate::grid::{BlockId, BlockPartition, GridSpec, NormalizationCoeffs, Structure};
 use crate::metrics::{CostCurve, Timer};
 use crate::model::FactorState;
+use crate::net::{self, AgentMsg, DriverMsg, NetConfig, Transport, WireSnapshot};
 use crate::solver::{ConvergenceCriterion, ConvergenceVerdict, SolverConfig, SolverReport};
 use crate::{Error, Result};
 
-/// A spawned set of block agents.
+/// A spawned set of block agents behind a transport, seen from the
+/// driver: dispatch structures, await completions, query costs, and
+/// finally collect the factors back (the paper's "final culmination"
+/// hand-off).
 pub struct GossipNetwork {
     spec: GridSpec,
-    handles: Vec<AgentHandle>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    transport: Box<dyn Transport>,
+    next_token: u64,
 }
 
 impl GossipNetwork {
-    /// Spawn one agent per block, distributing `state`'s factors.
-    /// `engine` must already be prepared.
-    pub fn spawn(spec: GridSpec, engine: Arc<dyn Engine>, mut state: FactorState) -> Self {
-        // First create every mailbox so neighbour handles can be wired.
-        let mut senders = Vec::with_capacity(spec.num_blocks());
-        let mut receivers = Vec::with_capacity(spec.num_blocks());
-        for id in spec.blocks() {
-            let (tx, rx) = std::sync::mpsc::channel();
-            senders.push(AgentHandle { id, tx });
-            receivers.push(rx);
-        }
-        let handle_of = |id: BlockId| senders[id.index(spec.q)].clone();
-
-        let mut threads = Vec::with_capacity(spec.num_blocks());
-        for (id, rx) in spec.blocks().zip(receivers) {
-            let mut neighbours = HashMap::new();
-            let BlockId { i, j } = id;
-            if i > 0 {
-                neighbours.insert(BlockId::new(i - 1, j), handle_of(BlockId::new(i - 1, j)));
-            }
-            if i + 1 < spec.p {
-                neighbours.insert(BlockId::new(i + 1, j), handle_of(BlockId::new(i + 1, j)));
-            }
-            if j > 0 {
-                neighbours.insert(BlockId::new(i, j - 1), handle_of(BlockId::new(i, j - 1)));
-            }
-            if j + 1 < spec.q {
-                neighbours.insert(BlockId::new(i, j + 1), handle_of(BlockId::new(i, j + 1)));
-            }
-            let (u, w) = state.take_block(id);
-            let agent = agent::Agent::new(id, u, w, engine.clone(), neighbours, rx);
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("gridmc-agent-{}-{}", id.i, id.j))
-                    .spawn(move || agent.run())
-                    .expect("spawn agent thread"),
-            );
-        }
-        Self { spec, handles: senders, threads }
+    /// Spawn one agent per block on the default thread-per-block
+    /// transport. `engine` must already be prepared.
+    pub fn spawn(spec: GridSpec, engine: Arc<dyn Engine>, state: FactorState) -> Self {
+        Self::spawn_with(&NetConfig::default(), spec, engine, state)
     }
 
-    fn handle(&self, id: BlockId) -> &AgentHandle {
-        &self.handles[id.index(self.spec.q)]
+    /// Spawn on the configured transport stack.
+    pub fn spawn_with(
+        net: &NetConfig,
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+    ) -> Self {
+        Self { spec, transport: net::spawn(net, spec, engine, state), next_token: 0 }
     }
 
-    /// Dispatch one structure to its anchor and await completion.
+    /// Transport label (for reports).
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Wire accounting when the transport simulates links.
+    pub fn wire_stats(&self) -> Option<WireSnapshot> {
+        self.transport.wire()
+    }
+
+    /// Fire one structure at its anchor without waiting; returns the
+    /// token its [`DriverMsg::Done`] completion will echo.
+    pub fn dispatch(&mut self, structure: Structure, params: StructureParams) -> Result<u64> {
+        let token = self.next_token;
+        self.next_token += 1;
+        self.transport.send(
+            structure.roles().anchor,
+            AgentMsg::Execute { structure, params, token },
+        )?;
+        Ok(token)
+    }
+
+    /// Block until one in-flight structure completes; returns its
+    /// anchor and token. Errors if the update itself failed.
+    pub fn await_done(&mut self) -> Result<(BlockId, u64)> {
+        match self.transport.recv()? {
+            DriverMsg::Done { anchor, token, result } => result.map(|()| (anchor, token)),
+            other => Err(Error::Gossip(format!(
+                "protocol violation: {} while awaiting a completion",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Dispatch one structure and await its completion.
     pub fn execute_structure(
-        &self,
+        &mut self,
         structure: Structure,
         params: StructureParams,
     ) -> Result<()> {
@@ -90,66 +107,143 @@ impl GossipNetwork {
     }
 
     /// Dispatch up to `batch.len()` *non-conflicting* structures
-    /// concurrently; await all acks. Callers must guarantee the batch
-    /// is conflict-free (the scheduler does).
+    /// concurrently; await all completions. Callers must guarantee the
+    /// batch is conflict-free (the scheduler does).
     pub fn execute_batch(
-        &self,
+        &mut self,
         batch: &[Structure],
         params: &[StructureParams],
     ) -> Result<()> {
         debug_assert_eq!(batch.len(), params.len());
-        let mut pending = Vec::with_capacity(batch.len());
         for (s, p) in batch.iter().zip(params) {
-            let anchor = s.roles().anchor;
-            let (tx, rx) = oneshot();
-            self.handle(anchor)
-                .tx
-                .send(AgentMsg::Execute { structure: *s, params: *p, done: tx })
-                .map_err(|_| Error::Gossip(format!("anchor {anchor} mailbox closed")))?;
-            pending.push((anchor, rx));
+            self.dispatch(*s, *p)?;
         }
-        for (anchor, rx) in pending {
-            rx.recv()
-                .map_err(|_| Error::Gossip(format!("anchor {anchor} died")))??;
+        for _ in 0..batch.len() {
+            self.await_done()?;
         }
         Ok(())
     }
 
     /// Total cost Σ blocks (leader-side convergence check — factor
-    /// matrices stay with the agents, only scalars travel).
-    pub fn total_cost(&self, lambda: f32) -> Result<f64> {
-        let mut pending = Vec::with_capacity(self.handles.len());
-        for h in &self.handles {
-            let (tx, rx) = oneshot();
-            h.tx.send(AgentMsg::GetCost { lambda, reply: tx })
-                .map_err(|_| Error::Gossip(format!("agent {} mailbox closed", h.id)))?;
-            pending.push(rx);
+    /// matrices stay with the agents, only scalars travel). Replies
+    /// arrive in arbitrary order but are summed in block order, so the
+    /// f64 result is deterministic. Callers must be quiescent (no
+    /// structure in flight).
+    pub fn total_cost(&mut self, lambda: f32) -> Result<f64> {
+        for id in self.spec.blocks() {
+            self.transport.send(id, AgentMsg::GetCost { lambda })?;
+        }
+        let mut per_block: Vec<Option<f64>> = vec![None; self.spec.num_blocks()];
+        for _ in 0..per_block.len() {
+            match self.transport.recv()? {
+                DriverMsg::Cost { from, cost } => {
+                    per_block[from.index(self.spec.q)] = Some(cost?);
+                }
+                other => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} while collecting costs",
+                        other.kind()
+                    )))
+                }
+            }
         }
         let mut acc = 0.0;
-        for rx in pending {
-            acc += rx.recv().map_err(|_| Error::Gossip("agent died".into()))??;
+        for c in per_block {
+            acc += c.ok_or_else(|| Error::Gossip("missing cost reply".into()))?;
         }
         Ok(acc)
     }
 
     /// Stop all agents and collect the final factor state (the paper's
     /// "final culmination" hand-off).
+    ///
+    /// Teardown is best-effort so it also works on the error path of a
+    /// failed run: dead agents (whose mailboxes reject the send) are
+    /// skipped, stale in-flight completions are drained and ignored,
+    /// and worker threads are reaped either way. Only a full, clean
+    /// collection returns `Ok`.
     pub fn shutdown(self) -> Result<FactorState> {
+        let mut expected = 0usize;
+        for id in self.spec.blocks() {
+            match self.transport.send(id, AgentMsg::Shutdown) {
+                Ok(()) => expected += 1,
+                Err(e) => log::warn!("shutdown: {e}"),
+            }
+        }
         // Zero receptacle: every block is overwritten by an agent reply
         // below, so a full RNG init here would be wasted work.
         let mut state = FactorState::zeros(self.spec);
-        for h in &self.handles {
-            let (tx, rx) = oneshot();
-            h.tx.send(AgentMsg::Shutdown { reply: tx })
-                .map_err(|_| Error::Gossip(format!("agent {} mailbox closed", h.id)))?;
-            let (id, u, w) = rx.recv().map_err(|_| Error::Gossip("agent died".into()))?;
-            state.set_u(id, u);
-            state.set_w(id, w);
+        let mut collected = 0usize;
+        while collected < expected {
+            match self.transport.recv() {
+                Ok(DriverMsg::Retired { from, u, w }) => {
+                    state.set_u(from, u);
+                    state.set_w(from, w);
+                    collected += 1;
+                }
+                // A failed run can leave completions or cost replies in
+                // flight; drain them so every Retired still arrives.
+                Ok(other) => log::debug!("shutdown: draining stale {}", other.kind()),
+                Err(e) => {
+                    log::warn!("shutdown: {e}");
+                    break;
+                }
+            }
         }
-        for t in self.threads {
-            let _ = t.join();
+        self.transport.join();
+        if collected < self.spec.num_blocks() {
+            return Err(Error::Gossip(format!(
+                "shutdown reaped {collected}/{} agents",
+                self.spec.num_blocks()
+            )));
         }
         Ok(state)
+    }
+}
+
+/// Shared driver lifecycle: prepare the engine, spawn the network,
+/// time the training closure, tear the network down (best-effort on
+/// the error path so failed runs don't leak p·q agent threads), and
+/// assemble the report.
+fn run_gossip_driver(
+    spec: GridSpec,
+    net: &NetConfig,
+    seed: u64,
+    mut engine: Box<dyn Engine>,
+    train_data: &CooMatrix,
+    train: impl FnOnce(&mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)>,
+) -> Result<(SolverReport, FactorState)> {
+    spec.validate()?;
+    let partition = BlockPartition::new(spec, train_data)?;
+    engine.prepare(&partition)?;
+    let engine: Arc<dyn Engine> = Arc::from(engine);
+    let engine_name = engine.name().to_string();
+
+    let state = FactorState::init_random(spec, seed);
+    let mut network = GossipNetwork::spawn_with(net, spec, engine, state);
+    let timer = Timer::start();
+    match train(&mut network) {
+        Ok((curve, final_cost, iters, converged)) => {
+            let state = network.shutdown()?;
+            Ok((
+                SolverReport {
+                    curve,
+                    final_cost,
+                    iters,
+                    converged,
+                    wall: timer.elapsed(),
+                    engine: engine_name,
+                },
+                state,
+            ))
+        }
+        Err(e) => {
+            // Best-effort teardown (in-flight structures included:
+            // agents are non-blocking, so Shutdown reaches them even
+            // mid-protocol and stale traffic is drained).
+            let _ = network.shutdown();
+            Err(e)
+        }
     }
 }
 
@@ -161,11 +255,19 @@ pub struct ParallelDriver {
     cfg: SolverConfig,
     /// Maximum structures in flight at once (compute parallelism).
     pub workers: usize,
+    /// Which transport stack carries the gossip.
+    pub net: NetConfig,
 }
 
 impl ParallelDriver {
     pub fn new(spec: GridSpec, cfg: SolverConfig, workers: usize) -> Self {
-        Self { spec, cfg, workers: workers.max(1) }
+        Self { spec, cfg, workers: workers.max(1), net: NetConfig::default() }
+    }
+
+    /// Select the transport stack (default: thread-per-block channels).
+    pub fn with_net(mut self, net: NetConfig) -> Self {
+        self.net = net;
+        self
     }
 
     /// Train; returns the report and the final (culminated) state.
@@ -173,26 +275,23 @@ impl ParallelDriver {
     /// `engine` is prepared here, then shared immutably with all agents.
     pub fn run(
         &self,
-        mut engine: Box<dyn Engine>,
+        engine: Box<dyn Engine>,
         train: &CooMatrix,
     ) -> Result<(SolverReport, FactorState)> {
-        self.spec.validate()?;
-        let partition = BlockPartition::new(self.spec, train)?;
-        engine.prepare(&partition)?;
-        let engine: Arc<dyn Engine> = Arc::from(engine);
-        let engine_name = engine.name().to_string();
+        run_gossip_driver(self.spec, &self.net, self.cfg.seed, engine, train, |network| {
+            self.train(network)
+        })
+    }
 
+    /// The training loop proper. Any error — including divergence —
+    /// leaves the network running; [`Self::run`] tears it down.
+    fn train(&self, network: &mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)> {
         let cfg = &self.cfg;
-        let spec = self.spec;
-        let state = FactorState::init_random(spec, cfg.seed);
-        let network = GossipNetwork::spawn(spec, engine, state);
-        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
-        let mut schedule = ScheduleBuilder::new(spec, cfg.seed ^ 0x90551b);
+        let coeffs = NormalizationCoeffs::new(self.spec.p, self.spec.q);
+        let mut schedule = ScheduleBuilder::new(self.spec, cfg.seed ^ 0x90551b);
         let mut criterion =
             ConvergenceCriterion::new(cfg.abs_tol, cfg.rel_tol, cfg.patience);
         let mut curve = CostCurve::default();
-        let timer = Timer::start();
-
         curve.push(0, network.total_cost(cfg.lambda)?);
 
         let mut iters = 0u64;
@@ -227,7 +326,10 @@ impl ParallelDriver {
                 iters += round.len() as u64;
 
                 if iters >= next_eval {
-                    next_eval += cfg.eval_every;
+                    // A wide round can cross several eval boundaries.
+                    while next_eval <= iters {
+                        next_eval += cfg.eval_every;
+                    }
                     let cost = network.total_cost(cfg.lambda)?;
                     curve.push(iters, cost);
                     match criterion.update(cost) {
@@ -237,8 +339,6 @@ impl ParallelDriver {
                             break 'training;
                         }
                         ConvergenceVerdict::Diverged => {
-                            // Tear the network down before surfacing.
-                            let _ = network.shutdown();
                             return Err(Error::Diverged { iter: iters, cost });
                         }
                     }
@@ -250,18 +350,161 @@ impl ParallelDriver {
         if curve.last().map(|(it, _)| it) != Some(iters) {
             curve.push(iters, final_cost);
         }
-        let state = network.shutdown()?;
-        Ok((
-            SolverReport {
-                curve,
-                final_cost,
-                iters,
-                converged,
-                wall: timer.elapsed(),
-                engine: engine_name,
-            },
-            state,
-        ))
+        Ok((curve, final_cost, iters, converged))
+    }
+}
+
+/// Barrier-free gossip driver (NOMAD-style asynchronous dispatch).
+///
+/// Instead of packing conflict-free rounds and waiting for each
+/// round's slowest structure, the async driver keeps up to
+/// `max_inflight` structures in flight at all times: whenever a
+/// completion frees its three blocks, the next conflict-free structure
+/// from the shuffled epoch feed is dispatched immediately. Conflicts
+/// are tracked with per-block in-flight flags, so concurrently
+/// executing structures never share a block — the same safety invariant
+/// the round barrier enforced, without the barrier.
+///
+/// Cost evaluation quiesces the pipeline first (drains all in-flight
+/// structures), so convergence checks observe a consistent state.
+///
+/// **Determinism.** Dispatch order depends on completion order, which
+/// is scheduling-dependent — async runs are statistically, not
+/// bitwise, reproducible (exactly the NOMAD trade). `max_inflight = 1`
+/// serializes the feed and restores bit determinism (pinned by
+/// `async_single_inflight_is_deterministic`).
+#[derive(Debug, Clone)]
+pub struct AsyncDriver {
+    spec: GridSpec,
+    cfg: SolverConfig,
+    /// Maximum structures in flight at once.
+    pub max_inflight: usize,
+    /// Which transport stack carries the gossip (default: multiplexed
+    /// workers — the pairing built for large grids).
+    pub net: NetConfig,
+}
+
+impl AsyncDriver {
+    pub fn new(spec: GridSpec, cfg: SolverConfig, max_inflight: usize) -> Self {
+        Self { spec, cfg, max_inflight: max_inflight.max(1), net: NetConfig::multiplex(0) }
+    }
+
+    /// Select the transport stack.
+    pub fn with_net(mut self, net: NetConfig) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Train; returns the report and the final (culminated) state.
+    pub fn run(
+        &self,
+        engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        run_gossip_driver(self.spec, &self.net, self.cfg.seed, engine, train, |network| {
+            self.train(network)
+        })
+    }
+
+    /// The barrier-free training loop. Any error — including
+    /// divergence — leaves the network running; [`Self::run`] tears it
+    /// down.
+    fn train(&self, network: &mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)> {
+        let cfg = &self.cfg;
+        let spec = self.spec;
+        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+        let mut schedule = ScheduleBuilder::new(spec, cfg.seed ^ 0xa57c);
+        let mut criterion =
+            ConvergenceCriterion::new(cfg.abs_tol, cfg.rel_tol, cfg.patience);
+        let mut curve = CostCurve::default();
+        curve.push(0, network.total_cost(cfg.lambda)?);
+
+        let mut busy = vec![false; spec.num_blocks()];
+        let mut inflight: HashMap<u64, [BlockId; 3]> = HashMap::new();
+        let mut queue: Vec<Structure> = schedule.shuffled();
+        let mut dispatched = 0u64;
+        let mut completed = 0u64;
+        let mut next_eval = cfg.eval_every;
+        let mut converged = false;
+
+        'training: while completed < cfg.max_iters {
+            // Drain (instead of refill) when an evaluation is due or the
+            // iteration budget is fully dispatched.
+            let draining = completed >= next_eval || dispatched >= cfg.max_iters;
+            if !draining {
+                let mut k = 0;
+                while inflight.len() < self.max_inflight && dispatched < cfg.max_iters {
+                    if k >= queue.len() {
+                        if queue.is_empty() {
+                            queue = schedule.shuffled();
+                            k = 0;
+                            continue;
+                        }
+                        // Everything left in this epoch conflicts with an
+                        // in-flight block; wait for a completion.
+                        break;
+                    }
+                    let s = queue[k];
+                    let blocks = s.blocks();
+                    if blocks.iter().any(|b| busy[b.index(spec.q)]) {
+                        k += 1;
+                        continue;
+                    }
+                    queue.remove(k);
+                    for b in blocks {
+                        busy[b.index(spec.q)] = true;
+                    }
+                    let roles = s.roles();
+                    let gamma = cfg.schedule.gamma(dispatched);
+                    let params = if cfg.normalize {
+                        StructureParams::build(cfg.rho, cfg.lambda, gamma, &coeffs, &roles)
+                    } else {
+                        StructureParams::unnormalized(cfg.rho, cfg.lambda, gamma)
+                    };
+                    let token = network.dispatch(s, params)?;
+                    inflight.insert(token, blocks);
+                    dispatched += 1;
+                }
+            }
+            if inflight.is_empty() {
+                // Quiesced: safe to evaluate. Advance past `completed`
+                // in one go — draining can overshoot several eval
+                // boundaries, and re-evaluating an unchanged state
+                // would feed the criterion zero-delta updates.
+                if completed >= next_eval {
+                    while next_eval <= completed {
+                        next_eval += cfg.eval_every;
+                    }
+                    let cost = network.total_cost(cfg.lambda)?;
+                    curve.push(completed, cost);
+                    match criterion.update(cost) {
+                        ConvergenceVerdict::Continue => {}
+                        ConvergenceVerdict::Converged => {
+                            converged = true;
+                            break 'training;
+                        }
+                        ConvergenceVerdict::Diverged => {
+                            return Err(Error::Diverged { iter: completed, cost });
+                        }
+                    }
+                }
+                continue;
+            }
+            let (_, token) = network.await_done()?;
+            let blocks = inflight
+                .remove(&token)
+                .ok_or_else(|| Error::Gossip(format!("unknown completion token {token}")))?;
+            for b in blocks {
+                busy[b.index(spec.q)] = false;
+            }
+            completed += 1;
+        }
+
+        let final_cost = network.total_cost(cfg.lambda)?;
+        if curve.last().map(|(it, _)| it) != Some(completed) {
+            curve.push(completed, final_cost);
+        }
+        Ok((curve, final_cost, completed, converged))
     }
 }
 
@@ -356,9 +599,64 @@ mod tests {
         let engine: Arc<dyn Engine> = Arc::new(engine);
         let state = FactorState::init_random(spec, 1);
         let direct = crate::solver::total_cost(engine.as_ref(), &state, 1e-9).unwrap();
-        let network = GossipNetwork::spawn(spec, engine, state);
+        let mut network = GossipNetwork::spawn(spec, engine, state);
         let via_network = network.total_cost(1e-9).unwrap();
         network.shutdown().unwrap();
         assert!((direct - via_network).abs() < 1e-9 * direct.abs().max(1.0));
+    }
+
+    #[test]
+    fn async_driver_reduces_cost() {
+        let (spec, train, _) = problem();
+        let driver = AsyncDriver::new(spec, cfg(), 6);
+        let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+        assert!(report.iters <= 4000);
+        assert!(
+            report.curve.orders_of_reduction() > 2.0,
+            "orders {}",
+            report.curve.orders_of_reduction()
+        );
+    }
+
+    #[test]
+    fn async_learns_test_set() {
+        let (spec, train, test) = problem();
+        let driver = AsyncDriver::new(spec, cfg(), 4)
+            .with_net(NetConfig::multiplex(3));
+        let (_, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+        let rmse = state.rmse(&test);
+        assert!(rmse < 0.5, "rmse {rmse}");
+    }
+
+    #[test]
+    fn async_respects_max_iters() {
+        let (spec, train, _) = problem();
+        let mut c = cfg();
+        c.max_iters = 13;
+        let driver = AsyncDriver::new(spec, c, 5);
+        let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+        assert_eq!(report.iters, 13);
+    }
+
+    #[test]
+    fn async_single_inflight_is_deterministic() {
+        // With one structure in flight the dispatch feed serializes, so
+        // two runs must agree bit-for-bit (general async runs are only
+        // statistically reproducible — the NOMAD trade).
+        let (spec, train, _) = problem();
+        let mut c = cfg();
+        c.max_iters = 600;
+        c.eval_every = 200;
+        let run = || {
+            AsyncDriver::new(spec, c.clone(), 1)
+                .run(Box::new(NativeEngine::new()), &train)
+                .unwrap()
+        };
+        let (ra, sa) = run();
+        let (rb, sb) = run();
+        assert_eq!(ra.final_cost, rb.final_cost);
+        let id = crate::grid::BlockId::new(2, 1);
+        assert_eq!(sa.u(id), sb.u(id));
+        assert_eq!(sa.w(id), sb.w(id));
     }
 }

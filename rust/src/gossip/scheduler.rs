@@ -10,7 +10,10 @@
 //! colours the conflict graph into *rounds* — sets of pairwise
 //! non-overlapping structures — with a seeded shuffle so that, over
 //! epochs, the schedule remains stochastic like Algorithm 1's uniform
-//! sampling while each round is safe to dispatch concurrently.
+//! sampling while each round is safe to dispatch concurrently. The
+//! async driver skips the round packing and consumes
+//! [`ScheduleBuilder::shuffled`] directly, tracking conflicts with
+//! per-block in-flight flags instead.
 
 use crate::grid::{GridSpec, Structure};
 use crate::util::Rng;
@@ -27,12 +30,20 @@ impl ScheduleBuilder {
         Self { spec, rng: Rng::seed_from_u64(seed) }
     }
 
+    /// One epoch's structures — every valid structure exactly once — in
+    /// freshly shuffled order, without round packing. This is the async
+    /// driver's dispatch feed (it resolves conflicts dynamically).
+    pub fn shuffled(&mut self) -> Vec<Structure> {
+        let mut structures = Structure::enumerate(self.spec.p, self.spec.q);
+        self.rng.shuffle(&mut structures);
+        structures
+    }
+
     /// One epoch: every valid structure exactly once, packed into
     /// conflict-free rounds. Structure order is reshuffled per call, so
     /// consecutive epochs differ (stochasticity across epochs).
     pub fn epoch(&mut self) -> Vec<Vec<Structure>> {
-        let mut structures = Structure::enumerate(self.spec.p, self.spec.q);
-        self.rng.shuffle(&mut structures);
+        let structures = self.shuffled();
         pack_rounds(&structures, self.spec.q)
     }
 
@@ -42,9 +53,32 @@ impl ScheduleBuilder {
         self.epoch().into_iter().next().unwrap_or_default()
     }
 
-    /// Upper bound on parallelism: ⌊p·q / 3⌋ blocks-per-structure bound.
+    /// The exact maximum number of pairwise non-conflicting structures
+    /// a `p × q` grid admits — the true ceiling on any packed round,
+    /// and therefore on useful structure-level parallelism.
+    ///
+    /// Each structure is an L-tromino (in the two orientations the
+    /// paper defines), so this is the maximum disjoint packing count:
+    /// `⌊p·q/3⌋` minus a defect of 1 exactly when the grid cannot reach
+    /// the area bound. The defect cases — `{p,q}` containing an odd
+    /// multiple of 3 paired with an odd side, or a side of exactly 4
+    /// paired with a side ≡ 1 (mod 3) — are pinned against the in-tree
+    /// DP oracle by `max_parallelism_matches_exact_packing_oracle`
+    /// below for every shape with a side ≤ 7 up to 14×7, plus larger
+    /// spot checks (9×11, 9×14, 14×14); the same DP was run offline
+    /// over all grids up to 14×14 and 15×17-class shapes with zero
+    /// mismatches. The seed's `⌊p·q/3⌋` was only an upper bound (e.g. a
+    /// 3×3 grid packs 2 structures, not 3).
     pub fn max_parallelism(&self) -> usize {
-        (self.spec.p * self.spec.q) / 3
+        let (p, q) = (self.spec.p, self.spec.q);
+        if p < 2 || q < 2 {
+            return 0; // no valid structures at all
+        }
+        let defect = (p % 6 == 3 && q % 2 == 1)
+            || (q % 6 == 3 && p % 2 == 1)
+            || (p == 4 && q % 3 == 1)
+            || (q == 4 && p % 3 == 1);
+        p * q / 3 - usize::from(defect)
     }
 }
 
@@ -81,6 +115,122 @@ mod tests {
 
     fn spec(p: usize, q: usize) -> GridSpec {
         GridSpec::new(p * 10, q * 10, p, q, 3)
+    }
+
+    /// Exact maximum disjoint-structure packing via a broken-profile
+    /// DP over the grid (window of `min(p,q)+1` cells). Exponential in
+    /// the smaller side — a test oracle, not production code.
+    fn exact_max_packing(p: usize, q: usize) -> usize {
+        // Scan rows of the *larger* dimension; the structure set is
+        // transpose-symmetric (upper(i,j) transposes to upper(j,i)).
+        let (p, q) = if p < q { (q, p) } else { (p, q) };
+        let n = p * q;
+        let size = 1usize << (q + 1);
+        let mut dp = vec![-1i32; size];
+        dp[0] = 0;
+        for c in 0..n {
+            let (i, j) = (c / q, c % q);
+            let mut ndp = vec![-1i32; size];
+            let can_upper = i + 1 < p && j + 1 < q; // cells c, c+1, c+q
+            let can_lower = i + 1 < p && j >= 1; // cells c, c+q-1, c+q
+            for (mask, &v) in dp.iter().enumerate() {
+                if v < 0 {
+                    continue;
+                }
+                if mask & 1 != 0 {
+                    let m = mask >> 1;
+                    ndp[m] = ndp[m].max(v);
+                    continue;
+                }
+                let m = (mask | 1) >> 1;
+                ndp[m] = ndp[m].max(v); // leave cell c uncovered
+                if can_upper && mask & (1 << 1) == 0 && mask & (1 << q) == 0 {
+                    let m = (mask | 1 | (1 << 1) | (1 << q)) >> 1;
+                    ndp[m] = ndp[m].max(v + 1);
+                }
+                if can_lower && mask & (1 << (q - 1)) == 0 && mask & (1 << q) == 0 {
+                    let m = (mask | 1 | (1 << (q - 1)) | (1 << q)) >> 1;
+                    ndp[m] = ndp[m].max(v + 1);
+                }
+            }
+            dp = ndp;
+        }
+        dp.into_iter().max().unwrap().max(0) as usize
+    }
+
+    #[test]
+    fn max_parallelism_matches_exact_packing_oracle() {
+        // Exhaustive where the oracle is cheap: every shape with a side
+        // ≤ 7 (the DP is exponential only in the smaller side).
+        for p in 2..=14 {
+            for q in 2..=7 {
+                let b = ScheduleBuilder::new(spec(p, q), 0);
+                assert_eq!(
+                    b.max_parallelism(),
+                    exact_max_packing(p, q),
+                    "{p}x{q}"
+                );
+            }
+        }
+        // Bigger-window spot checks covering every defect-rule branch
+        // (odd-multiple-of-3 × odd, ×4 rules, and defect-free shapes).
+        for (p, q, want) in [
+            (3, 9, 8),
+            (9, 4, 12),
+            (5, 9, 14),
+            (9, 9, 26),
+            (9, 11, 32),
+            (9, 14, 42),
+            (4, 13, 16),
+            (14, 14, 65),
+        ] {
+            let b = ScheduleBuilder::new(spec(p, q), 0);
+            assert_eq!(b.max_parallelism(), want, "{p}x{q}");
+            assert_eq!(exact_max_packing(p, q), want, "oracle {p}x{q}");
+        }
+    }
+
+    #[test]
+    fn max_parallelism_pinned_values() {
+        // 3×3 is the canonical case the seed's ⌊p·q/3⌋ bound got wrong.
+        assert_eq!(ScheduleBuilder::new(spec(3, 3), 0).max_parallelism(), 2);
+        assert_eq!(ScheduleBuilder::new(spec(2, 2), 0).max_parallelism(), 1);
+        assert_eq!(ScheduleBuilder::new(spec(4, 4), 0).max_parallelism(), 4);
+        assert_eq!(ScheduleBuilder::new(spec(6, 6), 0).max_parallelism(), 12);
+        assert_eq!(ScheduleBuilder::new(spec(9, 9), 0).max_parallelism(), 26);
+        // The bench's 1024-agent grid: no defect, perfect ⌊1024/3⌋.
+        assert_eq!(ScheduleBuilder::new(spec(32, 32), 0).max_parallelism(), 341);
+    }
+
+    #[test]
+    fn packed_rounds_never_exceed_max_parallelism() {
+        for (p, q) in [(2, 2), (3, 3), (4, 4), (3, 5), (6, 6), (5, 7)] {
+            let mut b = ScheduleBuilder::new(spec(p, q), 11);
+            let cap = b.max_parallelism();
+            for _ in 0..3 {
+                for round in b.epoch() {
+                    assert!(
+                        round.len() <= cap,
+                        "{p}x{q}: round of {} exceeds exact bound {cap}",
+                        round.len()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shuffled_covers_epoch_and_reshuffles() {
+        let mut b = ScheduleBuilder::new(spec(5, 4), 3);
+        let e1 = b.shuffled();
+        let e2 = b.shuffled();
+        assert_eq!(e1.len(), 2 * 4 * 3);
+        let s1: std::collections::HashSet<_> = e1.iter().collect();
+        let s2: std::collections::HashSet<_> = e2.iter().collect();
+        assert_eq!(s1, s2, "same structure set");
+        assert_ne!(e1, e2, "different order across epochs");
+        let mut c = ScheduleBuilder::new(spec(5, 4), 3);
+        assert_eq!(c.shuffled(), e1, "same seed reproduces");
     }
 
     #[test]

@@ -11,10 +11,13 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the gossip coordinator: grid topology and
-//!   structure enumeration ([`grid`]), decentralized agents and the
-//!   conflict-free parallel scheduler ([`gossip`]), the SGD driver of
-//!   the paper's Algorithm 1 ([`solver`]), data substrates ([`data`]),
-//!   factor state ([`model`]), metrics, and config/CLI.
+//!   structure enumeration ([`grid`]), decentralized agents, the
+//!   conflict-free parallel scheduler and the barrier-free async driver
+//!   ([`gossip`]), the transport-abstracted message plane ([`net`]:
+//!   thread-per-block, multiplexed workers, simulated lossy links), the
+//!   SGD driver of the paper's Algorithm 1 ([`solver`]), data
+//!   substrates ([`data`]), factor state ([`model`]), metrics, and
+//!   config/CLI.
 //! * **L2/L1 (build-time Python, `python/compile/`)** — the JAX
 //!   structure-update graph built on Pallas kernels, AOT-lowered to HLO
 //!   text once by `make artifacts`. Never on the request path.
@@ -53,6 +56,7 @@ pub mod gossip;
 pub mod grid;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod runtime;
 pub mod solver;
 pub mod util;
@@ -69,10 +73,11 @@ pub mod prelude {
         SplitDataset,
     };
     pub use crate::engine::{Engine, EngineWorkspace, NativeEngine, XlaEngine};
-    pub use crate::gossip::{GossipNetwork, ParallelDriver, ScheduleBuilder};
+    pub use crate::gossip::{AsyncDriver, GossipNetwork, ParallelDriver, ScheduleBuilder};
     pub use crate::grid::{BlockId, GridSpec, Structure, StructureKind, StructureSampler};
     pub use crate::metrics::{CostCurve, RmseReport};
     pub use crate::model::FactorState;
+    pub use crate::net::{NetConfig, SimConfig, Transport, TransportKind};
     pub use crate::runtime::{ArtifactManifest, Runtime};
     pub use crate::solver::{
         baselines, ConvergenceCriterion, SequentialDriver, SolverConfig,

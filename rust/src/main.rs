@@ -18,6 +18,7 @@
 use gridmc::config::{presets, DriverChoice, EngineChoice, ExperimentConfig};
 use gridmc::data::RatingsPreset;
 use gridmc::experiments;
+use gridmc::net::TransportKind;
 use gridmc::{Error, Result};
 
 const USAGE: &str = "\
@@ -32,8 +33,11 @@ USAGE:
 
 TRAIN OPTIONS:
   --engine <xla|native-sparse|native-dense>   override engine
-  --driver <sequential|parallel>              override driver
-  --workers <N>                               parallel in-flight structures
+  --driver <sequential|parallel|async>        override driver
+  --workers <N>                               in-flight structures
+  --transport <channel|multiplex|sim|sim-multiplex>
+                                              gossip transport (net/)
+  --net-workers <N>                           multiplex worker threads (0 = auto)
   --scale <S>                                 scale max_iters/eval_every
   --out-csv <path>                            write the cost curve as CSV
 
@@ -139,6 +143,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.workers = w
             .parse()
             .map_err(|_| Error::Config(format!("bad --workers {w:?}")))?;
+    }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = TransportKind::parse(t)?;
+    }
+    if let Some(nw) = args.get("net-workers") {
+        cfg.net_workers = nw
+            .parse()
+            .map_err(|_| Error::Config(format!("bad --net-workers {nw:?}")))?;
     }
     apply_scale(&mut cfg, args.get("scale"))?;
 

@@ -2,9 +2,10 @@
 //!
 //! The benches regenerate the paper's tables from these types:
 //! [`CostCurve`] is Table 2 (cost vs iterations), [`RmseReport`] rows
-//! build Table 3, and [`Throughput`] backs the parallel-scaling bench.
-//! Everything serializes to CSV/JSON so EXPERIMENTS.md numbers are
-//! reproducible from artifacts on disk.
+//! build Table 3, and [`Percentiles`] + [`bench_json_header`] back the
+//! `BENCH_*.json` trajectory files (engine microbench, parallel
+//! scaling). Everything serializes to CSV/JSON so EXPERIMENTS.md
+//! numbers are reproducible from artifacts on disk.
 
 use std::io::Write;
 use std::time::{Duration, Instant};
@@ -78,19 +79,6 @@ pub struct RmseReport {
     pub wall: Duration,
 }
 
-/// Structure-update throughput of a driver run.
-#[derive(Debug, Clone, Copy)]
-pub struct Throughput {
-    pub updates: u64,
-    pub wall: Duration,
-}
-
-impl Throughput {
-    pub fn per_sec(&self) -> f64 {
-        self.updates as f64 / self.wall.as_secs_f64().max(1e-12)
-    }
-}
-
 /// Simple scoped wall-clock timer.
 #[derive(Debug)]
 pub struct Timer(Instant);
@@ -103,6 +91,78 @@ impl Timer {
     pub fn elapsed(&self) -> Duration {
         self.0.elapsed()
     }
+}
+
+/// Median / p10 / p90 summary of a sample set (the shape every
+/// `BENCH_*.json` kernel entry carries).
+#[derive(Debug, Clone, Copy)]
+pub struct Percentiles {
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    /// Number of samples summarized.
+    pub n: usize,
+}
+
+/// Summarize `samples` (need not be sorted; must be non-empty and
+/// NaN-free). Uses the nearest-rank picks the benches have always
+/// reported.
+pub fn percentiles(samples: &[f64]) -> Percentiles {
+    assert!(!samples.is_empty(), "percentiles of an empty sample set");
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+    let pick = |q: f64| s[((s.len() - 1) as f64 * q) as usize];
+    Percentiles { median: pick(0.5), p10: pick(0.1), p90: pick(0.9), n: s.len() }
+}
+
+/// Short git revision of the working tree, `"unknown"` outside a
+/// checkout — stamped into every `BENCH_*.json` so each file is a
+/// point on the repo's perf trajectory (PERF.md).
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// The shared `BENCH_*.json` opening: brace, bench name, git rev and
+/// both timestamps — the fields that make every bench file a
+/// comparable point on the repo's perf trajectory (PERF.md §Reading
+/// `BENCH_*.json`). Writers append their own geometry, unit and entry
+/// map after this.
+pub fn bench_json_header(bench: &str) -> String {
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    format!(
+        "{{\n  \"bench\": \"{bench}\",\n  \"git_rev\": \"{}\",\n  \
+         \"timestamp_unix\": {unix},\n  \"timestamp_utc\": \"{}\",\n",
+        git_rev(),
+        iso8601_utc(unix)
+    )
+}
+
+/// `secs`-since-epoch → ISO-8601 UTC (civil-from-days algorithm; the
+/// offline build has no chrono).
+pub fn iso8601_utc(secs: u64) -> String {
+    let days = (secs / 86_400) as i64;
+    let rem = secs % 86_400;
+    let (h, mi, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}T{h:02}:{mi:02}:{s:02}Z")
 }
 
 /// Fixed-width table printer for the bench harnesses (paper-style rows).
@@ -198,9 +258,28 @@ mod tests {
     }
 
     #[test]
-    fn throughput_math() {
-        let t = Throughput { updates: 500, wall: Duration::from_millis(250) };
-        assert!((t.per_sec() - 2000.0).abs() < 1.0);
+    fn percentiles_pick_nearest_rank() {
+        let s: Vec<f64> = (1..=10).map(|k| k as f64).collect();
+        let p = percentiles(&s);
+        assert_eq!(p.n, 10);
+        assert_eq!(p.p10, 1.0); // floor(9 * 0.1) = 0
+        assert_eq!(p.median, 5.0); // floor(9 * 0.5) = 4
+        assert_eq!(p.p90, 9.0); // floor(9 * 0.9) = 8
+        // Order-independent.
+        let mut rev = s.clone();
+        rev.reverse();
+        assert_eq!(percentiles(&rev).median, 5.0);
+        let single = percentiles(&[7.5]);
+        assert_eq!(single.median, 7.5);
+        assert_eq!(single.p90, 7.5);
+    }
+
+    #[test]
+    fn iso8601_known_instants() {
+        assert_eq!(iso8601_utc(0), "1970-01-01T00:00:00Z");
+        assert_eq!(iso8601_utc(86_400), "1970-01-02T00:00:00Z");
+        // The gigasecond: a classic pinned instant.
+        assert_eq!(iso8601_utc(1_000_000_000), "2001-09-09T01:46:40Z");
     }
 
     #[test]

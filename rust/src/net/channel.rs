@@ -1,0 +1,122 @@
+//! Thread-per-block transport: the original gossip runtime shape.
+//!
+//! Every block agent gets its own OS thread and mpsc mailbox —
+//! maximum isolation and true hardware parallelism per agent, at the
+//! cost of one thread per block (fine to a few hundred blocks; see
+//! [`super::MultiplexTransport`] for grids beyond that).
+
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use crate::engine::Engine;
+use crate::gossip::{AgentStatus, BlockAgent};
+use crate::grid::{BlockId, GridSpec};
+use crate::model::FactorState;
+use crate::{Error, Result};
+
+use super::{AgentMsg, DeathWatch, DriverMsg, LinkFrame, PeerSender, Router, Transport};
+
+/// Per-agent mailboxes, addressable by block id.
+struct ChannelPeers {
+    q: usize,
+    txs: Vec<mpsc::Sender<AgentMsg>>,
+}
+
+impl PeerSender for ChannelPeers {
+    fn send_to(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+        self.txs
+            .get(to.index(self.q))
+            .ok_or_else(|| Error::Gossip(format!("no agent {to}")))?
+            .send(msg)
+            .map_err(|_| Error::Gossip(format!("agent {to} mailbox closed")))
+    }
+}
+
+/// One OS thread + one mailbox per block agent.
+pub struct ChannelTransport {
+    peers: Arc<ChannelPeers>,
+    driver_rx: mpsc::Receiver<DriverMsg>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl ChannelTransport {
+    /// Spawn one agent thread per block of `spec`, each owning its
+    /// slice of `state`. `engine` must already be prepared.
+    pub fn spawn(spec: GridSpec, engine: Arc<dyn Engine>, state: FactorState) -> Self {
+        Self::spawn_tapped(spec, engine, state, None)
+    }
+
+    /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
+    /// `tap` (the sim link) instead of delivered directly.
+    pub(crate) fn spawn_tapped(
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        mut state: FactorState,
+        tap: Option<mpsc::Sender<LinkFrame>>,
+    ) -> Self {
+        let n = spec.num_blocks();
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let peers = Arc::new(ChannelPeers { q: spec.q, txs });
+        let (driver_tx, driver_rx) = mpsc::channel();
+        let mut threads = Vec::with_capacity(n);
+        for (id, rx) in spec.blocks().zip(rxs) {
+            let (u, w) = state.take_block(id);
+            let mut agent = BlockAgent::new(id, u, w, engine.clone());
+            let router = Router {
+                peers: peers.clone(),
+                driver: driver_tx.clone(),
+                tap: tap.clone(),
+            };
+            threads.push(
+                thread::Builder::new()
+                    .name(format!("gridmc-agent-{}-{}", id.i, id.j))
+                    .spawn(move || {
+                        let _death = DeathWatch { label: id, driver: router.driver.clone() };
+                        let mut out = Vec::with_capacity(6);
+                        while let Ok(msg) = rx.recv() {
+                            let status = agent.on_msg(msg, &mut out);
+                            router.flush(id, &mut out);
+                            if status == AgentStatus::Retired {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn agent thread"),
+            );
+        }
+        Self { peers, driver_rx, threads }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn name(&self) -> &'static str {
+        "channel"
+    }
+
+    fn send(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+        self.peers.send_to(to, msg)
+    }
+
+    fn recv(&self) -> Result<DriverMsg> {
+        self.driver_rx
+            .recv()
+            .map_err(|_| Error::Gossip("all agents disconnected".into()))
+    }
+
+    fn injector(&self) -> Arc<dyn PeerSender> {
+        self.peers.clone()
+    }
+
+    fn join(self: Box<Self>) {
+        let Self { threads, .. } = *self;
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Compact wire codec for the peer-to-peer gossip frames.
+//!
+//! Only the four messages that travel between block agents are
+//! encodable — `GetFactors`, `Factors`, `PutFactors`, `PutAck`. The
+//! control plane (`Execute`, `GetCost`, `Shutdown`) never crosses a
+//! link: the driver talks to agents in-process, exactly as the paper's
+//! leader never touches factor matrices during learning.
+//!
+//! Framing (all integers little-endian):
+//!
+//! ```text
+//! [tag u8] [from.i u32] [from.j u32]                  — every frame
+//! [rows u32] [cols u32] [rows·cols × f32]  × 2 (U, W) — Factors / PutFactors
+//! ```
+//!
+//! A rank-5 100×100-block `Factors` frame is therefore
+//! `9 + 2·(8 + 4·100·5)` = 4 KiB — the number [`SimTransport`]'s
+//! byte accounting reports per factor exchange
+//! ([`super::WireSnapshot`]). Round trips are bit-exact: `f32`s are
+//! moved as raw IEEE-754 bytes, never reformatted.
+
+use crate::data::DenseMatrix;
+use crate::grid::BlockId;
+use crate::{Error, Result};
+
+use super::AgentMsg;
+
+const TAG_GET_FACTORS: u8 = 1;
+const TAG_FACTORS: u8 = 2;
+const TAG_PUT_FACTORS: u8 = 3;
+const TAG_PUT_ACK: u8 = 4;
+
+/// Matrices larger than this per side are rejected on decode (corrupt
+/// frame guard; real factor blocks are orders of magnitude smaller).
+const MAX_SIDE: u32 = 1 << 24;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_block_id(buf: &mut Vec<u8>, id: BlockId) {
+    put_u32(buf, id.i as u32);
+    put_u32(buf, id.j as u32);
+}
+
+fn put_matrix(buf: &mut Vec<u8>, m: &DenseMatrix) {
+    put_u32(buf, m.rows() as u32);
+    put_u32(buf, m.cols() as u32);
+    for v in m.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encoded size of a factor-pair frame (header + two matrices).
+fn factors_len(u: &DenseMatrix, w: &DenseMatrix) -> usize {
+    9 + 2 * 8 + 4 * (u.as_slice().len() + w.as_slice().len())
+}
+
+/// Encode a peer-to-peer message. Control-plane messages are a
+/// [`Error::Gossip`] — they are never framed for the wire.
+pub fn encode(msg: &AgentMsg) -> Result<Vec<u8>> {
+    match msg {
+        AgentMsg::GetFactors { from } => {
+            let mut buf = Vec::with_capacity(9);
+            buf.push(TAG_GET_FACTORS);
+            put_block_id(&mut buf, *from);
+            Ok(buf)
+        }
+        AgentMsg::Factors { from, u, w } => {
+            let mut buf = Vec::with_capacity(factors_len(u, w));
+            buf.push(TAG_FACTORS);
+            put_block_id(&mut buf, *from);
+            put_matrix(&mut buf, u);
+            put_matrix(&mut buf, w);
+            Ok(buf)
+        }
+        AgentMsg::PutFactors { from, u, w } => {
+            let mut buf = Vec::with_capacity(factors_len(u, w));
+            buf.push(TAG_PUT_FACTORS);
+            put_block_id(&mut buf, *from);
+            put_matrix(&mut buf, u);
+            put_matrix(&mut buf, w);
+            Ok(buf)
+        }
+        AgentMsg::PutAck { from } => {
+            let mut buf = Vec::with_capacity(9);
+            buf.push(TAG_PUT_ACK);
+            put_block_id(&mut buf, *from);
+            Ok(buf)
+        }
+        other => Err(Error::Gossip(format!(
+            "codec: {} is control-plane, not a wire frame",
+            other.kind()
+        ))),
+    }
+}
+
+/// Byte cursor with bounds-checked reads.
+struct Cur<'a> {
+    b: &'a [u8],
+    k: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn u8(&mut self) -> Result<u8> {
+        let v = *self
+            .b
+            .get(self.k)
+            .ok_or_else(|| Error::Gossip("codec: truncated frame".into()))?;
+        self.k += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let end = self.k + 4;
+        let s = self
+            .b
+            .get(self.k..end)
+            .ok_or_else(|| Error::Gossip("codec: truncated frame".into()))?;
+        self.k = end;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn block_id(&mut self) -> Result<BlockId> {
+        let i = self.u32()? as usize;
+        let j = self.u32()? as usize;
+        Ok(BlockId::new(i, j))
+    }
+
+    fn matrix(&mut self) -> Result<DenseMatrix> {
+        let rows = self.u32()?;
+        let cols = self.u32()?;
+        if rows > MAX_SIDE || cols > MAX_SIDE {
+            return Err(Error::Gossip(format!(
+                "codec: implausible matrix shape {rows}x{cols}"
+            )));
+        }
+        let n = rows as usize * cols as usize;
+        let end = self.k + 4 * n;
+        let s = self
+            .b
+            .get(self.k..end)
+            .ok_or_else(|| Error::Gossip("codec: truncated frame".into()))?;
+        self.k = end;
+        let mut data = Vec::with_capacity(n);
+        for c in s.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        DenseMatrix::from_vec(rows as usize, cols as usize, data)
+    }
+}
+
+/// Decode a frame produced by [`encode`].
+pub fn decode(bytes: &[u8]) -> Result<AgentMsg> {
+    let mut cur = Cur { b: bytes, k: 0 };
+    let tag = cur.u8()?;
+    let from = cur.block_id()?;
+    match tag {
+        TAG_GET_FACTORS => Ok(AgentMsg::GetFactors { from }),
+        TAG_FACTORS => {
+            let u = cur.matrix()?;
+            let w = cur.matrix()?;
+            Ok(AgentMsg::Factors { from, u, w })
+        }
+        TAG_PUT_FACTORS => {
+            let u = cur.matrix()?;
+            let w = cur.matrix()?;
+            Ok(AgentMsg::PutFactors { from, u, w })
+        }
+        TAG_PUT_ACK => Ok(AgentMsg::PutAck { from }),
+        other => Err(Error::Gossip(format!("codec: unknown frame tag {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, salt: f32) -> DenseMatrix {
+        DenseMatrix::from_fn(rows, cols, |i, j| {
+            (i as f32 - 0.5 * j as f32) * 1.25e-3 + salt
+        })
+    }
+
+    #[test]
+    fn factors_roundtrip_bit_exact() {
+        let u = mat(7, 3, 1.0);
+        let w = mat(5, 3, -2.0);
+        let msg = AgentMsg::Factors { from: BlockId::new(2, 4), u: u.clone(), w: w.clone() };
+        let bytes = encode(&msg).unwrap();
+        assert_eq!(bytes.len(), 9 + 16 + 4 * (21 + 15));
+        match decode(&bytes).unwrap() {
+            AgentMsg::Factors { from, u: du, w: dw } => {
+                assert_eq!(from, BlockId::new(2, 4));
+                assert_eq!(du, u);
+                assert_eq!(dw, w);
+            }
+            other => panic!("wrong variant {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn put_factors_and_small_frames_roundtrip() {
+        let u = mat(3, 2, 0.25);
+        let w = mat(4, 2, f32::MIN_POSITIVE);
+        let cases = [
+            AgentMsg::PutFactors { from: BlockId::new(0, 1), u, w },
+            AgentMsg::GetFactors { from: BlockId::new(9, 9) },
+            AgentMsg::PutAck { from: BlockId::new(1, 0) },
+        ];
+        for msg in cases {
+            let kind = msg.kind();
+            let back = decode(&encode(&msg).unwrap()).unwrap();
+            assert_eq!(back.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn special_floats_survive() {
+        // NaN/inf payloads must round-trip bytewise (divergence debugging).
+        let u = DenseMatrix::from_vec(
+            2,
+            2,
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0],
+        )
+        .unwrap();
+        let msg = AgentMsg::Factors { from: BlockId::new(0, 0), u: u.clone(), w: u.clone() };
+        match decode(&encode(&msg).unwrap()).unwrap() {
+            AgentMsg::Factors { u: du, .. } => {
+                for (a, b) in du.as_slice().iter().zip(u.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn control_plane_is_not_encodable() {
+        let err = encode(&AgentMsg::Shutdown).unwrap_err();
+        assert!(matches!(err, Error::Gossip(_)), "{err}");
+        let err = encode(&AgentMsg::GetCost { lambda: 1.0 }).unwrap_err();
+        assert!(format!("{err}").contains("GetCost"));
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_error() {
+        let msg = AgentMsg::Factors {
+            from: BlockId::new(1, 1),
+            u: mat(4, 2, 0.0),
+            w: mat(3, 2, 0.0),
+        };
+        let bytes = encode(&msg).unwrap();
+        for cut in [0, 1, 8, 12, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut bad = bytes.clone();
+        bad[0] = 99; // unknown tag
+        assert!(decode(&bad).is_err());
+        let mut huge = bytes;
+        // Overwrite the U row count with an implausible value.
+        huge[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&huge).is_err());
+    }
+}

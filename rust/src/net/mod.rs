@@ -1,0 +1,375 @@
+//! Transport-abstracted message plane for the gossip runtime.
+//!
+//! The paper's learning path is pure message passing: blocks learn
+//! "just by communicating (gossiping) with neighboring blocks". This
+//! module owns *how* those messages move, decoupled from *what* the
+//! agents compute ([`crate::gossip::BlockAgent`]) and from *when*
+//! structures fire (the drivers in [`crate::gossip`]). The layering
+//! follows the channel/multiplex/net split that scalable gossip
+//! libraries converge on:
+//!
+//! * [`ChannelTransport`] — one OS thread + one mailbox per block
+//!   agent. Maximum isolation, the original runtime shape; breaks down
+//!   past a few hundred blocks (thread explosion).
+//! * [`MultiplexTransport`] — many block agents share a worker thread
+//!   and a queue, so a 32×32 grid (1024 agents) runs on ≤ 8 workers.
+//!   Agents are non-blocking state machines, so co-residency can never
+//!   deadlock.
+//! * [`SimTransport`] — wraps either of the above with seeded,
+//!   deterministic link conditions (per-hop latency, jitter,
+//!   drop-with-retry) and accounts real bytes-on-the-wire through the
+//!   [`codec`] framing. Experiments can study gossip under realistic
+//!   networks without leaving the process.
+//!
+//! The driver side of the contract is [`Transport`]: address agents by
+//! [`BlockId`], receive [`DriverMsg`] completions. The agent side is
+//! [`Outgoing`]: agents return addressed messages from
+//! `BlockAgent::on_msg` and transports route them — peer-to-peer
+//! traffic stays between grid neighbours (the decentralization story),
+//! only scalars and final factors travel to the driver.
+
+pub mod codec;
+
+mod channel;
+mod multiplex;
+mod sim;
+
+pub use channel::ChannelTransport;
+pub use multiplex::MultiplexTransport;
+pub use sim::{SimConfig, SimTransport, WireSnapshot, WireStats};
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::data::DenseMatrix;
+use crate::engine::{Engine, StructureParams};
+use crate::grid::{BlockId, GridSpec, Structure};
+use crate::model::FactorState;
+use crate::{Error, Result};
+
+/// Messages addressed to a block agent. `Execute`/`GetCost`/`Shutdown`
+/// are driver→agent control plane; the rest are the peer-to-peer gossip
+/// protocol (the only messages that cross simulated links).
+#[derive(Debug)]
+pub enum AgentMsg {
+    /// Driver → anchor: run one structure update.
+    Execute {
+        structure: Structure,
+        params: StructureParams,
+        /// Echoed in the [`DriverMsg::Done`] completion.
+        token: u64,
+    },
+    /// Peer → peer: ask for the current factors.
+    GetFactors { from: BlockId },
+    /// Peer → peer: factors reply to a `GetFactors`.
+    Factors { from: BlockId, u: DenseMatrix, w: DenseMatrix },
+    /// Anchor → member: adopt the updated factors of a structure update.
+    PutFactors { from: BlockId, u: DenseMatrix, w: DenseMatrix },
+    /// Member → anchor: adoption acknowledged.
+    PutAck { from: BlockId },
+    /// Driver → agent: report this block's cost term.
+    GetCost { lambda: f32 },
+    /// Driver → agent: stop and hand the factors back.
+    Shutdown,
+}
+
+impl AgentMsg {
+    /// Short variant label for logs and codec errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AgentMsg::Execute { .. } => "Execute",
+            AgentMsg::GetFactors { .. } => "GetFactors",
+            AgentMsg::Factors { .. } => "Factors",
+            AgentMsg::PutFactors { .. } => "PutFactors",
+            AgentMsg::PutAck { .. } => "PutAck",
+            AgentMsg::GetCost { .. } => "GetCost",
+            AgentMsg::Shutdown => "Shutdown",
+        }
+    }
+}
+
+/// Messages addressed to the driver.
+#[derive(Debug)]
+pub enum DriverMsg {
+    /// A structure update finished (or failed) at its anchor.
+    Done { anchor: BlockId, token: u64, result: Result<()> },
+    /// One block's cost term (reply to [`AgentMsg::GetCost`]).
+    Cost { from: BlockId, cost: Result<f64> },
+    /// One block's final factors (reply to [`AgentMsg::Shutdown`]).
+    Retired { from: BlockId, u: DenseMatrix, w: DenseMatrix },
+}
+
+impl DriverMsg {
+    /// Short variant label for protocol-violation errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DriverMsg::Done { .. } => "Done",
+            DriverMsg::Cost { .. } => "Cost",
+            DriverMsg::Retired { .. } => "Retired",
+        }
+    }
+}
+
+/// One addressed message produced by an agent in response to an input
+/// message (see `BlockAgent::on_msg`).
+#[derive(Debug)]
+pub enum Outgoing {
+    /// To another block agent (a grid neighbour).
+    Peer(BlockId, AgentMsg),
+    /// To the driver.
+    Driver(DriverMsg),
+}
+
+/// Reusable buffer of outgoing messages (cleared by the router on
+/// every flush, so agents allocate nothing per message in steady state).
+pub type Outbox = Vec<Outgoing>;
+
+/// Internal fan-in point: anything that can enqueue a message to any
+/// block agent. Each transport implements this over its own queues;
+/// [`SimTransport`]'s link thread injects delayed frames through it.
+pub trait PeerSender: Send + Sync {
+    fn send_to(&self, to: BlockId, msg: AgentMsg) -> Result<()>;
+}
+
+/// An encoded peer-to-peer frame in flight on a simulated link.
+#[derive(Debug)]
+pub struct LinkFrame {
+    pub from: BlockId,
+    pub to: BlockId,
+    pub bytes: Vec<u8>,
+}
+
+/// How agent worker threads deliver an agent's outbox: peer messages go
+/// to the destination agent's queue (or to the simulated link tap when
+/// one is installed), driver messages to the driver channel.
+#[derive(Clone)]
+pub(crate) struct Router {
+    pub(crate) peers: Arc<dyn PeerSender>,
+    pub(crate) driver: mpsc::Sender<DriverMsg>,
+    pub(crate) tap: Option<mpsc::Sender<LinkFrame>>,
+}
+
+impl Router {
+    /// Deliver and clear `out`. Send failures are logged, not
+    /// propagated: they only occur while the network tears down.
+    pub(crate) fn flush(&self, from: BlockId, out: &mut Outbox) {
+        for o in out.drain(..) {
+            match o {
+                Outgoing::Peer(to, msg) => {
+                    if let Some(tap) = &self.tap {
+                        match codec::encode(&msg) {
+                            Ok(bytes) => {
+                                if tap.send(LinkFrame { from, to, bytes }).is_err() {
+                                    log::warn!("sim link down; frame {from}->{to} dropped");
+                                }
+                            }
+                            Err(e) => log::warn!("codec: {e}"),
+                        }
+                    } else if let Err(e) = self.peers.send_to(to, msg) {
+                        log::warn!("gossip link {from}->{to}: {e}");
+                    }
+                }
+                Outgoing::Driver(msg) => {
+                    if self.driver.send(msg).is_err() {
+                        log::warn!("driver mailbox closed; reply from {from} dropped");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Converts an agent-worker panic into a driver-visible error. Without
+/// this, a panicking agent thread would hang the driver forever: the
+/// surviving agents keep the driver channel open, so `recv` never
+/// disconnects. Each worker thread holds one of these; if it unwinds,
+/// the drop handler posts a poisoned completion that surfaces as an
+/// [`Error::Gossip`] at the driver's next receive.
+pub(crate) struct DeathWatch {
+    /// A block hosted by the worker (identifies the casualty in logs).
+    pub(crate) label: BlockId,
+    pub(crate) driver: mpsc::Sender<DriverMsg>,
+}
+
+impl Drop for DeathWatch {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let _ = self.driver.send(DriverMsg::Done {
+                anchor: self.label,
+                token: u64::MAX,
+                result: Err(Error::Gossip(format!(
+                    "agent worker hosting {} died (panicked)",
+                    self.label
+                ))),
+            });
+        }
+    }
+}
+
+/// A running agent network, seen from the driver.
+///
+/// Implementations spawn the agents at construction and route messages
+/// until every agent has retired (replied to [`AgentMsg::Shutdown`]);
+/// [`Transport::join`] then reaps the worker threads.
+pub trait Transport: Send {
+    /// Transport label for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Enqueue a control-plane message to one agent.
+    fn send(&self, to: BlockId, msg: AgentMsg) -> Result<()>;
+
+    /// Blocking receive of the next driver-bound message.
+    fn recv(&self) -> Result<DriverMsg>;
+
+    /// The transport's internal fan-in point — lets wrappers (the sim
+    /// link) deliver frames into the network as if from the wire.
+    fn injector(&self) -> Arc<dyn PeerSender>;
+
+    /// Wire accounting, when the transport simulates links.
+    fn wire(&self) -> Option<WireSnapshot> {
+        None
+    }
+
+    /// Reap worker threads. Call only after every agent retired.
+    fn join(self: Box<Self>);
+}
+
+/// Which transport a driver should spawn, plus its knobs. The
+/// [`Default`] is [`TransportKind::Channel`] — the original
+/// thread-per-block runtime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetConfig {
+    pub kind: TransportKind,
+    /// Worker threads for the multiplex transports (0 = auto:
+    /// `available_parallelism` capped at 8).
+    pub workers: usize,
+    /// Link conditions for the sim transports.
+    pub sim: SimConfig,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self { kind: TransportKind::Channel, workers: 0, sim: SimConfig::default() }
+    }
+}
+
+impl NetConfig {
+    /// Thread-per-block agents (the original runtime shape).
+    pub fn channel() -> Self {
+        Self::default()
+    }
+
+    /// Multiplexed agents over `workers` threads (0 = auto).
+    pub fn multiplex(workers: usize) -> Self {
+        Self { kind: TransportKind::Multiplex, workers, ..Self::default() }
+    }
+
+    /// Simulated links over thread-per-block agents.
+    pub fn sim(sim: SimConfig) -> Self {
+        Self { kind: TransportKind::Sim, sim, ..Self::default() }
+    }
+
+    /// Simulated links over multiplexed agents.
+    pub fn sim_multiplex(workers: usize, sim: SimConfig) -> Self {
+        Self { kind: TransportKind::SimMultiplex, workers, sim }
+    }
+}
+
+/// The four spawnable transport stacks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// One OS thread + mailbox per block agent.
+    #[default]
+    Channel,
+    /// Many agents per worker thread over shared queues.
+    Multiplex,
+    /// [`SimTransport`] over [`ChannelTransport`].
+    Sim,
+    /// [`SimTransport`] over [`MultiplexTransport`].
+    SimMultiplex,
+}
+
+impl TransportKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Multiplex => "multiplex",
+            TransportKind::Sim => "sim",
+            TransportKind::SimMultiplex => "sim-multiplex",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "channel" => Ok(TransportKind::Channel),
+            "multiplex" => Ok(TransportKind::Multiplex),
+            "sim" => Ok(TransportKind::Sim),
+            "sim-multiplex" => Ok(TransportKind::SimMultiplex),
+            other => Err(Error::Config(format!("unknown transport {other:?}"))),
+        }
+    }
+}
+
+/// Spawn the configured transport stack with one agent per block of
+/// `spec`, each owning its slice of `state`. `engine` must already be
+/// prepared.
+pub fn spawn(
+    net: &NetConfig,
+    spec: GridSpec,
+    engine: Arc<dyn Engine>,
+    state: FactorState,
+) -> Box<dyn Transport> {
+    match net.kind {
+        TransportKind::Channel => Box::new(ChannelTransport::spawn(spec, engine, state)),
+        TransportKind::Multiplex => {
+            Box::new(MultiplexTransport::spawn(spec, engine, state, net.workers))
+        }
+        TransportKind::Sim => {
+            Box::new(SimTransport::spawn_over_channel(spec, engine, state, net.sim))
+        }
+        TransportKind::SimMultiplex => Box::new(SimTransport::spawn_over_multiplex(
+            spec,
+            engine,
+            state,
+            net.workers,
+            net.sim,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_roundtrip() {
+        for k in [
+            TransportKind::Channel,
+            TransportKind::Multiplex,
+            TransportKind::Sim,
+            TransportKind::SimMultiplex,
+        ] {
+            assert_eq!(TransportKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(TransportKind::parse("udp").is_err());
+    }
+
+    #[test]
+    fn net_config_defaults_to_channel() {
+        let net = NetConfig::default();
+        assert_eq!(net.kind, TransportKind::Channel);
+        assert_eq!(net.workers, 0);
+        assert_eq!(NetConfig::multiplex(4).workers, 4);
+        assert_eq!(NetConfig::multiplex(4).kind, TransportKind::Multiplex);
+    }
+
+    #[test]
+    fn msg_kinds_are_stable_labels() {
+        assert_eq!(AgentMsg::Shutdown.kind(), "Shutdown");
+        assert_eq!(AgentMsg::GetCost { lambda: 0.0 }.kind(), "GetCost");
+        assert_eq!(
+            DriverMsg::Cost { from: BlockId::new(0, 0), cost: Ok(0.0) }.kind(),
+            "Cost"
+        );
+    }
+}

@@ -1,0 +1,186 @@
+//! Multiplexed transport: many block agents per worker thread.
+//!
+//! Grids of `p·q ≫ cores` blocks cannot afford a thread per block.
+//! Here every worker thread owns a *shard* of agents (block linear
+//! index mod worker count) and one shared queue of `(BlockId, msg)`
+//! envelopes; the worker routes each envelope to the addressed agent's
+//! state machine and flushes its outbox. A 32×32 grid — 1024 agents —
+//! runs on 8 workers.
+//!
+//! Deadlock freedom does not depend on the shard layout:
+//! [`BlockAgent::on_msg`] never blocks, so two agents co-resident on
+//! one worker can gossip through their own queue without ever waiting
+//! on each other mid-message. (The blocking pull of the old
+//! thread-per-block agent loop would self-deadlock here — that is why
+//! the agents became event-driven state machines.)
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use crate::engine::Engine;
+use crate::gossip::{AgentStatus, BlockAgent};
+use crate::grid::{BlockId, GridSpec};
+use crate::model::FactorState;
+use crate::{Error, Result};
+
+use super::{AgentMsg, DeathWatch, DriverMsg, LinkFrame, PeerSender, Router, Transport};
+
+/// Auto worker count is capped here: message routing saturates well
+/// before the core count on big boxes, and the acceptance target is
+/// 1024 agents on ≤ 8 workers.
+const MAX_AUTO_WORKERS: usize = 8;
+
+/// Shared queues, addressable by block id via the shard map.
+struct MuxPeers {
+    q: usize,
+    /// Block linear index → worker index.
+    assign: Vec<usize>,
+    txs: Vec<mpsc::Sender<(BlockId, AgentMsg)>>,
+}
+
+impl PeerSender for MuxPeers {
+    fn send_to(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+        let w = *self
+            .assign
+            .get(to.index(self.q))
+            .ok_or_else(|| Error::Gossip(format!("no agent {to}")))?;
+        self.txs[w]
+            .send((to, msg))
+            .map_err(|_| Error::Gossip(format!("worker {w} (agent {to}) queue closed")))
+    }
+}
+
+/// Many agents per worker thread over shared queues.
+pub struct MultiplexTransport {
+    peers: Arc<MuxPeers>,
+    driver_rx: mpsc::Receiver<DriverMsg>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl MultiplexTransport {
+    /// Default worker count: `available_parallelism` capped at
+    /// [`MAX_AUTO_WORKERS`].
+    pub fn auto_workers() -> usize {
+        thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(4)
+            .clamp(1, MAX_AUTO_WORKERS)
+    }
+
+    /// Spawn the agents of `spec` over `workers` threads (0 = auto,
+    /// clamped to the block count). `engine` must already be prepared.
+    pub fn spawn(
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+        workers: usize,
+    ) -> Self {
+        Self::spawn_tapped(spec, engine, state, workers, None)
+    }
+
+    /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
+    /// `tap` (the sim link) instead of delivered directly.
+    pub(crate) fn spawn_tapped(
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        mut state: FactorState,
+        workers: usize,
+        tap: Option<mpsc::Sender<LinkFrame>>,
+    ) -> Self {
+        let n = spec.num_blocks();
+        let w = if workers == 0 { Self::auto_workers() } else { workers };
+        let w = w.clamp(1, n);
+        let assign: Vec<usize> = (0..n).map(|k| k % w).collect();
+
+        let mut txs = Vec::with_capacity(w);
+        let mut rxs = Vec::with_capacity(w);
+        for _ in 0..w {
+            let (tx, rx) = mpsc::channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let peers = Arc::new(MuxPeers { q: spec.q, assign, txs });
+        let (driver_tx, driver_rx) = mpsc::channel();
+
+        // Shard the agents: block k lives on worker k mod w.
+        let mut shards: Vec<HashMap<usize, BlockAgent>> =
+            (0..w).map(|_| HashMap::new()).collect();
+        for id in spec.blocks() {
+            let k = id.index(spec.q);
+            let (u, wm) = state.take_block(id);
+            shards[k % w].insert(k, BlockAgent::new(id, u, wm, engine.clone()));
+        }
+
+        let q = spec.q;
+        let mut threads = Vec::with_capacity(w);
+        for (wi, (rx, mut agents)) in rxs.into_iter().zip(shards).enumerate() {
+            let router = Router {
+                peers: peers.clone(),
+                driver: driver_tx.clone(),
+                tap: tap.clone(),
+            };
+            threads.push(
+                thread::Builder::new()
+                    .name(format!("gridmc-mux-{wi}"))
+                    .spawn(move || {
+                        // Worker wi always hosts block index wi (wi < w ≤ n).
+                        let _death = DeathWatch {
+                            label: BlockId::new(wi / q, wi % q),
+                            driver: router.driver.clone(),
+                        };
+                        let mut out = Vec::with_capacity(6);
+                        let mut live = agents.len();
+                        while live > 0 {
+                            let Ok((to, msg)) = rx.recv() else { break };
+                            let k = to.index(q);
+                            let Some(agent) = agents.get_mut(&k) else {
+                                log::warn!("mux worker {wi}: message for unknown agent {to}");
+                                continue;
+                            };
+                            let status = agent.on_msg(msg, &mut out);
+                            router.flush(to, &mut out);
+                            if status == AgentStatus::Retired {
+                                agents.remove(&k);
+                                live -= 1;
+                            }
+                        }
+                    })
+                    .expect("spawn mux worker"),
+            );
+        }
+        Self { peers, driver_rx, threads }
+    }
+
+    /// How many worker threads this transport runs.
+    pub fn worker_count(&self) -> usize {
+        self.threads.len()
+    }
+}
+
+impl Transport for MultiplexTransport {
+    fn name(&self) -> &'static str {
+        "multiplex"
+    }
+
+    fn send(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+        self.peers.send_to(to, msg)
+    }
+
+    fn recv(&self) -> Result<DriverMsg> {
+        self.driver_rx
+            .recv()
+            .map_err(|_| Error::Gossip("all mux workers disconnected".into()))
+    }
+
+    fn injector(&self) -> Arc<dyn PeerSender> {
+        self.peers.clone()
+    }
+
+    fn join(self: Box<Self>) {
+        let Self { threads, .. } = *self;
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,0 +1,404 @@
+//! Simulated links: seeded latency, jitter and drop-with-retry over
+//! any inner transport.
+//!
+//! [`SimTransport`] interposes a *link thread* between agents: the
+//! inner transport's workers divert every peer-to-peer message to the
+//! link (already [`codec`]-encoded, so bytes-on-the-wire are measured
+//! where they are produced), the link holds each frame for the
+//! configured per-hop latency ± jitter, may "drop" it (rescheduling a
+//! retransmission after `retry_after_us`, like a reliable transport
+//! over a lossy wire), and finally decodes and injects it into the
+//! destination agent's queue. Control-plane traffic (dispatch, cost,
+//! shutdown) bypasses the link — the simulated network is the *block*
+//! network, matching the paper's no-central-server learning path.
+//!
+//! **Determinism.** Every link decision draws from a per-directed-edge
+//! RNG stream seeded by `seed ⊕ mix(edge)`. Under the round-barrier
+//! driver the per-edge message sequence is protocol-determined, so
+//! latency/drop patterns replay exactly for a fixed seed — and with
+//! zero latency and zero drop probability the trained `FactorState` is
+//! bit-identical to the unwrapped transport (pinned by
+//! `tests/transport_equivalence.rs`).
+//!
+//! Liveness under drops: a frame is retransmitted at most
+//! `max_retries` times, after which it is delivered regardless — the
+//! model is a lossy wire under a reliable link layer, not message
+//! erasure (which would wedge the three-party update protocol).
+
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::engine::Engine;
+use crate::grid::{BlockId, GridSpec};
+use crate::model::FactorState;
+use crate::util::Rng;
+use crate::Result;
+
+use super::{
+    codec, AgentMsg, ChannelTransport, DriverMsg, LinkFrame, MultiplexTransport, PeerSender,
+    Transport,
+};
+
+/// Link conditions of a simulated hop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimConfig {
+    /// Base one-way latency per hop, microseconds.
+    pub latency_us: u64,
+    /// Uniform extra delay in `[0, jitter_us)`, microseconds.
+    pub jitter_us: u64,
+    /// Probability that a delivery attempt is dropped (and retried).
+    pub drop_prob: f64,
+    /// Retransmission timeout after a drop, microseconds.
+    pub retry_after_us: u64,
+    /// Attempts after which a frame is delivered unconditionally.
+    pub max_retries: u32,
+    /// Seed of the per-edge randomness streams.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            latency_us: 50,
+            jitter_us: 20,
+            drop_prob: 0.0,
+            retry_after_us: 200,
+            max_retries: 16,
+            seed: 0x1147,
+        }
+    }
+}
+
+impl SimConfig {
+    /// A pass-through link: no delay, no jitter, no drops. The wrapped
+    /// transport behaves bit-identically to the bare one while the
+    /// codec still frames (and counts) every byte.
+    pub fn zero_latency(seed: u64) -> Self {
+        Self { latency_us: 0, jitter_us: 0, drop_prob: 0.0, seed, ..Self::default() }
+    }
+}
+
+/// Cumulative wire accounting (updated by the link thread).
+#[derive(Debug, Default)]
+pub struct WireStats {
+    messages: AtomicU64,
+    payload_bytes: AtomicU64,
+    wire_bytes: AtomicU64,
+    drops: AtomicU64,
+}
+
+/// A point-in-time copy of [`WireStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireSnapshot {
+    /// Frames offered to the link.
+    pub messages: u64,
+    /// Bytes offered (each frame counted once).
+    pub payload_bytes: u64,
+    /// Bytes transmitted, including retransmissions.
+    pub wire_bytes: u64,
+    /// Delivery attempts dropped (each one retried).
+    pub drops: u64,
+}
+
+impl WireStats {
+    pub fn snapshot(&self) -> WireSnapshot {
+        WireSnapshot {
+            messages: self.messages.load(Ordering::Relaxed),
+            payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            drops: self.drops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A frame scheduled on the link, ordered by due time then admission
+/// sequence (so simultaneous frames keep FIFO order — required for the
+/// zero-latency bit-identity guarantee).
+struct Pending {
+    due: Instant,
+    seq: u64,
+    frame: LinkFrame,
+    attempt: u32,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-due first.
+        other.due.cmp(&self.due).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Seeded link conditions wrapped around an inner transport.
+pub struct SimTransport {
+    inner: Box<dyn Transport>,
+    link: Option<thread::JoinHandle<()>>,
+    stats: Arc<WireStats>,
+}
+
+impl SimTransport {
+    /// Sim link over thread-per-block agents.
+    pub fn spawn_over_channel(
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+        cfg: SimConfig,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel();
+        let inner = Box::new(ChannelTransport::spawn_tapped(spec, engine, state, Some(tx)));
+        Self::with_link(inner, rx, cfg, spec.q)
+    }
+
+    /// Sim link over multiplexed agents (`workers` as in
+    /// [`MultiplexTransport::spawn`]).
+    pub fn spawn_over_multiplex(
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+        workers: usize,
+        cfg: SimConfig,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel();
+        let inner = Box::new(MultiplexTransport::spawn_tapped(
+            spec,
+            engine,
+            state,
+            workers,
+            Some(tx),
+        ));
+        Self::with_link(inner, rx, cfg, spec.q)
+    }
+
+    fn with_link(
+        inner: Box<dyn Transport>,
+        rx: mpsc::Receiver<LinkFrame>,
+        cfg: SimConfig,
+        q: usize,
+    ) -> Self {
+        let stats = Arc::new(WireStats::default());
+        let inject = inner.injector();
+        let st = stats.clone();
+        let link = thread::Builder::new()
+            .name("gridmc-simlink".into())
+            .spawn(move || link_loop(rx, inject, cfg, q, st))
+            .expect("spawn sim link thread");
+        Self { inner, link: Some(link), stats }
+    }
+
+    /// Wire accounting so far.
+    pub fn stats(&self) -> WireSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+impl Transport for SimTransport {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn send(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+        // Control plane bypasses the simulated links.
+        self.inner.send(to, msg)
+    }
+
+    fn recv(&self) -> Result<DriverMsg> {
+        self.inner.recv()
+    }
+
+    fn injector(&self) -> Arc<dyn PeerSender> {
+        self.inner.injector()
+    }
+
+    fn wire(&self) -> Option<WireSnapshot> {
+        Some(self.stats.snapshot())
+    }
+
+    fn join(self: Box<Self>) {
+        let Self { inner, link, .. } = *self;
+        // Agent workers first: joining them drops the tap senders, which
+        // lets the link thread drain its heap and exit.
+        inner.join();
+        if let Some(l) = link {
+            let _ = l.join();
+        }
+    }
+}
+
+fn edge_key(q: usize, from: BlockId, to: BlockId) -> u64 {
+    ((from.index(q) as u64) << 32) | to.index(q) as u64
+}
+
+fn edge_rng<'a>(
+    rngs: &'a mut HashMap<u64, Rng>,
+    cfg: &SimConfig,
+    key: u64,
+) -> &'a mut Rng {
+    rngs.entry(key)
+        .or_insert_with(|| Rng::seed_from_u64(cfg.seed ^ key.wrapping_mul(0x9e3779b97f4a7c15)))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    frame: LinkFrame,
+    heap: &mut BinaryHeap<Pending>,
+    rngs: &mut HashMap<u64, Rng>,
+    seq: &mut u64,
+    cfg: &SimConfig,
+    q: usize,
+    stats: &WireStats,
+) {
+    stats.messages.fetch_add(1, Ordering::Relaxed);
+    stats
+        .payload_bytes
+        .fetch_add(frame.bytes.len() as u64, Ordering::Relaxed);
+    let key = edge_key(q, frame.from, frame.to);
+    let rng = edge_rng(rngs, cfg, key);
+    let jitter = if cfg.jitter_us > 0 {
+        (rng.f64() * cfg.jitter_us as f64) as u64
+    } else {
+        0
+    };
+    let due = Instant::now() + Duration::from_micros(cfg.latency_us + jitter);
+    heap.push(Pending { due, seq: *seq, frame, attempt: 0 });
+    *seq += 1;
+}
+
+fn link_loop(
+    rx: mpsc::Receiver<LinkFrame>,
+    inject: Arc<dyn PeerSender>,
+    cfg: SimConfig,
+    q: usize,
+    stats: Arc<WireStats>,
+) {
+    let mut heap: BinaryHeap<Pending> = BinaryHeap::new();
+    let mut rngs: HashMap<u64, Rng> = HashMap::new();
+    let mut seq = 0u64;
+    let mut open = true;
+    while open || !heap.is_empty() {
+        // Deliver (or drop-and-reschedule) everything due.
+        let now = Instant::now();
+        while heap.peek().is_some_and(|p| p.due <= now) {
+            let p = heap.pop().expect("peeked");
+            stats
+                .wire_bytes
+                .fetch_add(p.frame.bytes.len() as u64, Ordering::Relaxed);
+            let key = edge_key(q, p.frame.from, p.frame.to);
+            if cfg.drop_prob > 0.0
+                && p.attempt < cfg.max_retries
+                && edge_rng(&mut rngs, &cfg, key).f64() < cfg.drop_prob
+            {
+                stats.drops.fetch_add(1, Ordering::Relaxed);
+                heap.push(Pending {
+                    due: p.due + Duration::from_micros(cfg.retry_after_us.max(1)),
+                    seq: p.seq,
+                    frame: p.frame,
+                    attempt: p.attempt + 1,
+                });
+                continue;
+            }
+            match codec::decode(&p.frame.bytes) {
+                Ok(msg) => {
+                    if let Err(e) = inject.send_to(p.frame.to, msg) {
+                        log::warn!("sim link delivery to {}: {e}", p.frame.to);
+                    }
+                }
+                Err(e) => log::warn!("sim link: {e}"),
+            }
+        }
+        // Wait for the next frame or the next due time.
+        if let Some(p) = heap.peek() {
+            let wait = p.due.saturating_duration_since(Instant::now());
+            if open {
+                match rx.recv_timeout(wait) {
+                    Ok(f) => admit(f, &mut heap, &mut rngs, &mut seq, &cfg, q, &stats),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            } else if !wait.is_zero() {
+                thread::sleep(wait);
+            }
+        } else {
+            match rx.recv() {
+                Ok(f) => admit(f, &mut heap, &mut rngs, &mut seq, &cfg, q, &stats),
+                Err(_) => open = false,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pending_orders_by_due_then_seq() {
+        let t0 = Instant::now();
+        let mk = |due: Instant, seq: u64| Pending {
+            due,
+            seq,
+            frame: LinkFrame { from: BlockId::new(0, 0), to: BlockId::new(0, 1), bytes: vec![] },
+            attempt: 0,
+        };
+        let mut heap = BinaryHeap::new();
+        heap.push(mk(t0 + Duration::from_micros(5), 2));
+        heap.push(mk(t0, 1));
+        heap.push(mk(t0, 0));
+        assert_eq!(heap.pop().unwrap().seq, 0, "FIFO at equal due");
+        assert_eq!(heap.pop().unwrap().seq, 1);
+        assert_eq!(heap.pop().unwrap().seq, 2);
+    }
+
+    #[test]
+    fn edge_streams_are_deterministic_and_distinct() {
+        let cfg = SimConfig { seed: 7, ..SimConfig::default() };
+        let mut a = HashMap::new();
+        let mut b = HashMap::new();
+        let k1 = edge_key(4, BlockId::new(0, 0), BlockId::new(0, 1));
+        let k2 = edge_key(4, BlockId::new(0, 1), BlockId::new(0, 0));
+        assert_ne!(k1, k2, "directed edges get distinct streams");
+        let x1 = edge_rng(&mut a, &cfg, k1).f64();
+        let y1 = edge_rng(&mut b, &cfg, k1).f64();
+        assert_eq!(x1.to_bits(), y1.to_bits(), "same seed, same stream");
+        let x2 = edge_rng(&mut a, &cfg, k2).f64();
+        assert_ne!(x1.to_bits(), x2.to_bits());
+    }
+
+    #[test]
+    fn zero_latency_config_is_passthrough_shape() {
+        let c = SimConfig::zero_latency(3);
+        assert_eq!(c.latency_us, 0);
+        assert_eq!(c.jitter_us, 0);
+        assert_eq!(c.drop_prob, 0.0);
+        assert_eq!(c.seed, 3);
+    }
+
+    #[test]
+    fn wire_stats_snapshot_reads_back() {
+        let s = WireStats::default();
+        s.messages.fetch_add(3, Ordering::Relaxed);
+        s.payload_bytes.fetch_add(100, Ordering::Relaxed);
+        s.wire_bytes.fetch_add(140, Ordering::Relaxed);
+        s.drops.fetch_add(2, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.messages, 3);
+        assert_eq!(snap.payload_bytes, 100);
+        assert_eq!(snap.wire_bytes, 140);
+        assert_eq!(snap.drops, 2);
+    }
+}

@@ -1,0 +1,111 @@
+//! Fault-tolerant gossip, live: agents crash mid-training, restore
+//! from their checkpoints, and the network re-converges with no
+//! coordinator — the serverless claim of the paper surviving real
+//! churn (NOMAD-style machine failures + severed links).
+//!
+//! Three runs of the same 6×6 problem:
+//!
+//! * **fault-free** — the reference trajectory;
+//! * **churned / parallel** — the round-barrier driver supervises a
+//!   seeded `FaultPlan` (4 crash-restores ≈ 11% of agents, plus one
+//!   partition) over a sim link; fully deterministic, so the printed
+//!   event trace replays byte-for-byte;
+//! * **churned / async** — the barrier-free driver defers each kill
+//!   until the victim's in-flight structure completes.
+//!
+//! Run: `cargo run --release --example churn_recovery`
+
+use std::time::Duration;
+
+use gridmc::data::SyntheticConfig;
+use gridmc::engine::NativeEngine;
+use gridmc::gossip::{AsyncDriver, ParallelDriver};
+use gridmc::grid::{BlockId, GridSpec};
+use gridmc::metrics::TablePrinter;
+use gridmc::net::{fault::render_trace, FaultPlan, NetConfig, SimConfig};
+use gridmc::solver::{SolverConfig, StepSchedule};
+
+fn main() -> gridmc::Result<()> {
+    gridmc::util::logging::init("warn");
+
+    let spec = GridSpec::new(240, 240, 6, 6, 4);
+    let data = SyntheticConfig {
+        m: 240,
+        n: 240,
+        rank: 4,
+        train_fraction: 0.3,
+        test_fraction: 0.1,
+        noise_std: 0.0,
+        seed: 61,
+    }
+    .generate();
+
+    let cfg = SolverConfig {
+        rho: 10.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 5e-3, b: 1e-6 },
+        max_iters: 6000,
+        eval_every: 1500,
+        abs_tol: 0.0,
+        rel_tol: 0.0,
+        patience: u32::MAX,
+        seed: 61,
+        normalize: true,
+    };
+
+    // 4 of 36 agents crash (11%), one link goes down for 1.5 ms.
+    let plan = FaultPlan::new()
+        .kill(700, BlockId::new(1, 1))
+        .kill(1400, BlockId::new(4, 2))
+        .kill(2100, BlockId::new(0, 5))
+        .kill(2800, BlockId::new(3, 3))
+        .partition(1000, BlockId::new(2, 2), BlockId::new(2, 3), Duration::from_micros(1500));
+
+    let mut t = TablePrinter::new(&["run", "test RMSE", "final cost", "kills", "rolled back"]);
+    let mut row = |label: &str, rep: &gridmc::solver::SolverReport, rmse: f64| {
+        t.row(&[
+            label.to_string(),
+            format!("{rmse:.4}"),
+            format!("{:.3e}", rep.final_cost),
+            rep.kill_count().to_string(),
+            rep.lost_updates().to_string(),
+        ]);
+    };
+
+    // Reference: same seeds, no faults.
+    let clean = ParallelDriver::new(spec, cfg.clone(), 8)
+        .with_net(NetConfig::sim(SimConfig::zero_latency(61)));
+    let (rep, st) = clean.run(Box::new(NativeEngine::new()), &data.data.train)?;
+    let clean_rmse = st.rmse(&data.data.test);
+    row("fault-free", &rep, clean_rmse);
+
+    // Churned, round-barrier: deterministic supervision at barriers.
+    let churned = ParallelDriver::new(spec, cfg.clone(), 8)
+        .with_net(NetConfig::sim(SimConfig::zero_latency(61)))
+        .with_faults(plan.clone())
+        .with_checkpoints(8);
+    let (rep, st) = churned.run(Box::new(NativeEngine::new()), &data.data.train)?;
+    let churned_rmse = st.rmse(&data.data.test);
+    let trace = render_trace(&rep.faults);
+    row("churned/parallel", &rep, churned_rmse);
+
+    // Churned, barrier-free: kills defer until their block frees up.
+    let async_churned = AsyncDriver::new(spec, cfg.clone(), 8)
+        .with_net(NetConfig::sim_multiplex(4, SimConfig::zero_latency(61)))
+        .with_faults(plan)
+        .with_checkpoints(8);
+    let (rep, st) = async_churned.run(Box::new(NativeEngine::new()), &data.data.train)?;
+    row("churned/async", &rep, st.rmse(&data.data.test));
+
+    println!("{}", t.render());
+    println!(
+        "recovery: churned/clean RMSE ratio {:.4} (1.0 = perfect)\n",
+        churned_rmse / clean_rmse.max(1e-12)
+    );
+    println!("executed events (parallel run — replays byte-for-byte under these seeds):");
+    print!("{trace}");
+    println!("\n(each kill rolls a block back to its last checkpoint; the neighbours'");
+    println!(" gossip pulls the restored replica back into consensus — no coordinator,");
+    println!(" no replay log, exactly the paper's serverless learning path)");
+    Ok(())
+}

@@ -13,7 +13,7 @@ pub mod presets;
 
 use crate::data::{RatingsConfig, SplitDataset, SyntheticConfig};
 use crate::grid::GridSpec;
-use crate::net::{NetConfig, SimConfig, TransportKind};
+use crate::net::{FaultConfig, NetConfig, SimConfig, TransportKind};
 use crate::solver::{SolverConfig, StepSchedule};
 use crate::{Error, Result};
 
@@ -155,6 +155,10 @@ pub struct ExperimentConfig {
     pub net_workers: usize,
     /// Link conditions for the sim transports.
     pub sim: SimConfig,
+    /// Seeded fault plan for churn runs (`[faults]` table; `None` =
+    /// fault-free, no checkpointing). Requires a gossip driver, and a
+    /// sim transport when `partitions > 0`.
+    pub faults: Option<FaultConfig>,
 }
 
 impl ExperimentConfig {
@@ -240,6 +244,20 @@ impl ExperimentConfig {
                     seed: doc.u64_or("sim.seed", d.seed),
                 }
             },
+            faults: doc.has_prefix("faults.").then(|| {
+                let d = FaultConfig::default();
+                FaultConfig {
+                    kills: doc.usize_or("faults.kills", d.kills),
+                    partitions: doc.usize_or("faults.partitions", d.partitions),
+                    from_step: doc.u64_or("faults.from_step", d.from_step),
+                    until_step: doc.u64_or("faults.until_step", d.until_step),
+                    partition_duration_us: doc
+                        .u64_or("faults.partition_duration_us", d.partition_duration_us),
+                    checkpoint_every: doc
+                        .u64_or("faults.checkpoint_every", d.checkpoint_every),
+                    seed: doc.u64_or("faults.seed", d.seed),
+                }
+            }),
         })
     }
 
@@ -305,6 +323,20 @@ impl ExperimentConfig {
             self.sim.max_retries,
             self.sim.seed
         ));
+        if let Some(f) = &self.faults {
+            s.push_str(&format!(
+                "\n[faults]\nkills = {}\npartitions = {}\nfrom_step = {}\n\
+                 until_step = {}\npartition_duration_us = {}\ncheckpoint_every = {}\n\
+                 seed = {}\n",
+                f.kills,
+                f.partitions,
+                f.from_step,
+                f.until_step,
+                f.partition_duration_us,
+                f.checkpoint_every,
+                f.seed
+            ));
+        }
         Ok(s)
     }
 
@@ -411,6 +443,37 @@ mod tests {
         assert_eq!(DriverChoice::parse("parallel").unwrap(), DriverChoice::Parallel);
         assert_eq!(DriverChoice::parse("async").unwrap(), DriverChoice::Async);
         assert!(DriverChoice::parse("warp").is_err());
+    }
+
+    #[test]
+    fn faults_table_roundtrip_and_absence() {
+        let mut cfg = presets::exp(1).unwrap();
+        assert!(cfg.faults.is_none(), "presets are fault-free by default");
+        assert!(!cfg.to_toml().unwrap().contains("[faults]"));
+        cfg.driver = DriverChoice::Parallel;
+        cfg.transport = TransportKind::Sim;
+        cfg.faults = Some(FaultConfig {
+            kills: 4,
+            partitions: 1,
+            from_step: 100,
+            until_step: 900,
+            partition_duration_us: 750,
+            checkpoint_every: 16,
+            seed: 0xBEEF,
+        });
+        let text = cfg.to_toml().unwrap();
+        assert!(text.contains("[faults]"), "{text}");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.faults, cfg.faults);
+        // A partially specified table fills in defaults.
+        let partial = ExperimentConfig::from_toml(&format!(
+            "{}\n",
+            text.split("[faults]").next().unwrap().to_owned() + "[faults]\nkills = 7\n"
+        ))
+        .unwrap();
+        let f = partial.faults.expect("present table parses to Some");
+        assert_eq!(f.kills, 7);
+        assert_eq!(f.checkpoint_every, FaultConfig::default().checkpoint_every);
     }
 
     #[test]

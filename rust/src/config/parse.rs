@@ -151,6 +151,16 @@ impl Document {
     pub fn bool_or(&self, path: &str, default: bool) -> bool {
         self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
     }
+
+    /// Does any key live under `prefix` (e.g. `"faults."`)? Used to
+    /// detect the *presence* of an optional table whose every key has a
+    /// default — `[faults]` with no keys under it does not count.
+    pub fn has_prefix(&self, prefix: &str) -> bool {
+        self.map
+            .range(prefix.to_string()..)
+            .next()
+            .is_some_and(|(k, _)| k.starts_with(prefix))
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -263,6 +273,20 @@ mod tests {
         assert!(matches!(doc.str("y"), Err(Error::Config(_))));
         assert_eq!(doc.str_or("y", "d"), "d");
         assert_eq!(doc.usize_or("y", 9), 9);
+    }
+
+    #[test]
+    fn has_prefix_detects_table_keys() {
+        let doc = Document::parse("a = 1\n[faults]\nkills = 3\n[faultsish]\nx = 1").unwrap();
+        assert!(doc.has_prefix("faults."));
+        assert!(doc.has_prefix("faultsish."));
+        assert!(!doc.has_prefix("solver."));
+        // The dot matters: "faults." must not match "faultsish.x".
+        let doc = Document::parse("[faultsish]\nx = 1").unwrap();
+        assert!(!doc.has_prefix("faults."));
+        // A bare empty table contributes no keys.
+        let doc = Document::parse("[faults]").unwrap();
+        assert!(!doc.has_prefix("faults."));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! experiment definitions.
 
 use crate::data::{RatingsPreset, SyntheticConfig};
-use crate::net::{SimConfig, TransportKind};
+use crate::net::{FaultConfig, SimConfig, TransportKind};
 use crate::solver::{SolverConfig, StepSchedule};
 use crate::{Error, Result};
 
@@ -64,6 +64,7 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
         transport: TransportKind::Channel,
         net_workers: 0,
         sim: SimConfig::default(),
+        faults: None,
     })
 }
 
@@ -99,8 +100,59 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
         transport: TransportKind::Channel,
         net_workers: 0,
         sim: SimConfig::default(),
+        faults: None,
     }
     .scaled_for(users, items, g)
+}
+
+/// The churn recovery scenario (`gridmc bench-table churn`,
+/// `BENCH_churn.json`): a 6×6 grid — 36 agents — trained by the
+/// round-barrier driver over a zero-latency sim link, with a seeded
+/// fault plan that crashes 4 agents (≈ 11% of the grid) and severs two
+/// links mid-training. Fully deterministic: the solver seed fixes the
+/// schedule, the sim seed fixes the link, the fault seed fixes the
+/// plan, so reruns reproduce the event trace byte-for-byte.
+pub fn churn() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "churn".into(),
+        dataset: DatasetConfig::Synthetic(SyntheticConfig {
+            m: 240,
+            n: 240,
+            rank: 4,
+            train_fraction: 0.3,
+            test_fraction: 0.1,
+            noise_std: 0.0,
+            seed: 61,
+        }),
+        grid: GridConfig { p: 6, q: 6, rank: 4 },
+        solver: SolverConfig {
+            rho: 10.0,
+            lambda: 1e-9,
+            schedule: StepSchedule { a: 5.0e-3, b: 1.0e-6 },
+            max_iters: 6000,
+            eval_every: 1500,
+            abs_tol: 0.0,
+            rel_tol: 0.0,
+            patience: u32::MAX,
+            seed: 61,
+            normalize: true,
+        },
+        engine: EngineChoice::NativeSparse,
+        driver: DriverChoice::Parallel,
+        workers: 8,
+        transport: TransportKind::Sim,
+        net_workers: 0,
+        sim: SimConfig::zero_latency(61),
+        faults: Some(FaultConfig {
+            kills: 4,
+            partitions: 2,
+            from_step: 500,
+            until_step: 3500,
+            partition_duration_us: 1500,
+            checkpoint_every: 8,
+            seed: 0xC0A7,
+        }),
+    }
 }
 
 impl ExperimentConfig {
@@ -174,6 +226,22 @@ mod tests {
         let c2 = table3(crate::data::RatingsPreset::Ml1m, 2, 10);
         let c10 = table3(crate::data::RatingsPreset::Ml1m, 10, 10);
         assert!(c10.solver.max_iters > c2.solver.max_iters);
+    }
+
+    #[test]
+    fn churn_preset_is_deterministic_and_well_formed() {
+        let cfg = churn();
+        assert_eq!(cfg.driver, DriverChoice::Parallel, "byte-identical traces need the barrier");
+        assert_eq!(cfg.transport, TransportKind::Sim, "partitions need simulated links");
+        let f = cfg.faults.expect("churn has a fault plan");
+        let agents = cfg.grid.p * cfg.grid.q;
+        assert!(f.kills * 10 >= agents, "kills >= 10% of agents: {} of {agents}", f.kills);
+        assert!(f.checkpoint_every > 0);
+        assert!(f.until_step < cfg.solver.max_iters, "all events fire within the budget");
+        // Round-trips through TOML like every other preset.
+        let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.faults, cfg.faults);
+        assert_eq!(back.sim, cfg.sim);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::engine::{Engine, NativeEngine, NativeMode, XlaEngine};
 use crate::gossip::{AsyncDriver, ParallelDriver};
 use crate::grid::GridSpec;
 use crate::model::FactorState;
+use crate::net::FaultPlan;
 use crate::solver::{SequentialDriver, SolverReport};
 use crate::{Error, Result};
 
@@ -70,6 +71,13 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Outcome> {
 pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<Outcome> {
     let spec = cfg.grid_spec(data.m, data.n);
     spec.validate()?;
+    if cfg.faults.is_some() && cfg.driver == DriverChoice::Sequential {
+        return Err(Error::Config(
+            "a [faults] plan needs a supervising gossip driver \
+             (driver = \"parallel\" or \"async\")"
+                .into(),
+        ));
+    }
     let mut engine = build_engine(cfg.engine, &spec)?;
     let (report, state) = match cfg.driver {
         DriverChoice::Sequential => {
@@ -77,13 +85,23 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
             driver.run(engine.as_mut(), &data.train)?
         }
         DriverChoice::Parallel => {
-            let driver = ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers)
+            let mut driver = ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers)
                 .with_net(cfg.net_config());
+            if let Some(f) = &cfg.faults {
+                driver = driver
+                    .with_faults(FaultPlan::generate(spec, f))
+                    .with_checkpoints(f.checkpoint_every);
+            }
             driver.run(engine, &data.train)?
         }
         DriverChoice::Async => {
-            let driver = AsyncDriver::new(spec, cfg.solver.clone(), cfg.workers)
+            let mut driver = AsyncDriver::new(spec, cfg.solver.clone(), cfg.workers)
                 .with_net(cfg.net_config());
+            if let Some(f) = &cfg.faults {
+                driver = driver
+                    .with_faults(FaultPlan::generate(spec, f))
+                    .with_checkpoints(f.checkpoint_every);
+            }
             driver.run(engine, &data.train)?
         }
     };
@@ -95,6 +113,17 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
 /// Human-readable run summary for the CLI.
 pub fn format_outcome(cfg: &ExperimentConfig, o: &Outcome) -> String {
     let r = &o.report;
+    let fault_line = if r.faults.is_empty() {
+        String::new()
+    } else {
+        format!(
+            "\nfaults       {} crash-restore(s), {} partition(s), \
+             {} update(s) rolled back",
+            r.kill_count(),
+            r.partition_count(),
+            r.lost_updates()
+        )
+    };
     format!(
         "experiment   {name}\n\
          dataset      {ds}\n\
@@ -104,7 +133,7 @@ pub fn format_outcome(cfg: &ExperimentConfig, o: &Outcome) -> String {
          wall         {wall:.2?} ({ups:.0} updates/s)\n\
          cost         {c0:.3e} -> {cf:.3e} ({orders:.1} orders)\n\
          train rmse   {tr:.4}\n\
-         test rmse    {te:.4}",
+         test rmse    {te:.4}{fault_line}",
         name = cfg.name,
         ds = o.dataset,
         p = cfg.grid.p,
@@ -218,6 +247,39 @@ mod tests {
         let o = run_experiment(&cfg).unwrap();
         assert!(o.report.final_cost < o.report.curve.initial().unwrap());
         assert_eq!(o.report.engine, "native-sparse");
+    }
+
+    #[test]
+    fn faults_require_a_gossip_driver() {
+        let mut cfg = presets::churn();
+        cfg.driver = DriverChoice::Sequential;
+        let err = run_experiment(&cfg).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn churn_preset_end_to_end_records_faults() {
+        // A shrunk churn preset: same wiring, test-sized budget.
+        let mut cfg = presets::churn();
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 120;
+            s.n = 120;
+        }
+        cfg.solver.max_iters = 1200;
+        cfg.solver.eval_every = 400;
+        if let Some(f) = cfg.faults.as_mut() {
+            f.kills = 3;
+            f.partitions = 1;
+            f.from_step = 100;
+            f.until_step = 700;
+            f.partition_duration_us = 500;
+        }
+        let o = run_experiment(&cfg).unwrap();
+        assert_eq!(o.report.kill_count(), 3, "{:?}", o.report.faults);
+        assert_eq!(o.report.partition_count(), 1);
+        assert!(o.report.final_cost < o.report.curve.initial().unwrap());
+        let s = format_outcome(&cfg, &o);
+        assert!(s.contains("crash-restore"), "{s}");
     }
 
     #[test]

@@ -31,9 +31,21 @@
 //! driver's per-block in-flight flags), so while an agent is gathering
 //! or scattering, no *other* structure's traffic can address it. The
 //! `debug_assert!`s below pin that invariant.
+//!
+//! **Crash recovery** ([`crate::gossip::CheckpointStore`]): an agent
+//! counts its factor mutations in a version counter and periodically
+//! snapshots `(U, W, version)` into the shared store. On
+//! [`AgentMsg::Crash`] — the supervisor's simulated process crash —
+//! every piece of live state (factors, protocol phase, engine scratch)
+//! is discarded and the agent restarts from its last snapshot,
+//! reporting the rolled-back mutation count via
+//! [`DriverMsg::Restarted`]. Supervisors only crash blocks with no
+//! structure in flight, so a restart can never orphan a peer
+//! mid-protocol.
 
 use crate::data::DenseMatrix;
 use crate::engine::{Engine, EngineWorkspace, StructureParams};
+use crate::gossip::CheckpointStore;
 use crate::grid::{BlockId, Structure};
 use crate::net::{AgentMsg, DriverMsg, Outbox, Outgoing};
 
@@ -72,6 +84,12 @@ pub struct BlockAgent {
     /// state (PERF.md).
     ws: EngineWorkspace,
     phase: Phase,
+    /// Factor mutations applied so far (own updates + adoptions).
+    version: u64,
+    /// Crash-recovery snapshots, when the network runs checkpointed.
+    checkpoints: Option<std::sync::Arc<CheckpointStore>>,
+    /// Version of the last snapshot taken.
+    last_saved: u64,
 }
 
 impl BlockAgent {
@@ -81,11 +99,48 @@ impl BlockAgent {
         w: DenseMatrix,
         engine: std::sync::Arc<dyn Engine>,
     ) -> Self {
-        Self { id, u, w, engine, ws: EngineWorkspace::new(), phase: Phase::Idle }
+        Self {
+            id,
+            u,
+            w,
+            engine,
+            ws: EngineWorkspace::new(),
+            phase: Phase::Idle,
+            version: 0,
+            checkpoints: None,
+            last_saved: 0,
+        }
+    }
+
+    /// Attach a checkpoint store and take the spawn-time snapshot
+    /// (version 0), so the block is restorable no matter how early it
+    /// crashes.
+    pub fn with_checkpoints(mut self, store: std::sync::Arc<CheckpointStore>) -> Self {
+        store.save(self.id, 0, &self.u, &self.w);
+        self.last_saved = 0;
+        self.checkpoints = Some(store);
+        self
     }
 
     pub fn id(&self) -> BlockId {
         self.id
+    }
+
+    /// Factor mutations applied so far.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// One factor mutation happened: advance the version and snapshot
+    /// at the store's cadence.
+    fn bump_version(&mut self) {
+        self.version += 1;
+        if let Some(store) = &self.checkpoints {
+            if self.version - self.last_saved >= store.cadence() {
+                store.save(self.id, self.version, &self.u, &self.w);
+                self.last_saved = self.version;
+            }
+        }
     }
 
     /// Step the state machine on one incoming message. Replies are
@@ -146,6 +201,7 @@ impl BlockAgent {
             AgentMsg::PutFactors { from, u, w } => {
                 self.u = u;
                 self.w = w;
+                self.bump_version();
                 out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
             }
             AgentMsg::PutAck { from: _ } => {
@@ -170,6 +226,41 @@ impl BlockAgent {
             AgentMsg::GetCost { lambda } => {
                 let cost = self.engine.block_cost(self.id, &self.u, &self.w, lambda);
                 out.push(Outgoing::Driver(DriverMsg::Cost { from: self.id, cost }));
+            }
+            AgentMsg::Crash => {
+                // Simulated process crash: factors, phase and scratch all
+                // die; the replacement boots from the last snapshot — or
+                // cold (zeroed factors) when checkpointing is off, in
+                // which case the neighbours' gossip re-seeds the block.
+                debug_assert!(
+                    matches!(self.phase, Phase::Idle),
+                    "{}: Crash while a structure is in flight (supervisor bug)",
+                    self.id
+                );
+                let lost;
+                match self.checkpoints.as_ref().and_then(|s| s.restore(self.id)) {
+                    Some(cp) => {
+                        lost = self.version.saturating_sub(cp.version);
+                        self.u = cp.u;
+                        self.w = cp.w;
+                        self.version = cp.version;
+                        self.last_saved = cp.version;
+                    }
+                    None => {
+                        lost = self.version;
+                        self.u = DenseMatrix::zeros(self.u.rows(), self.u.cols());
+                        self.w = DenseMatrix::zeros(self.w.rows(), self.w.cols());
+                        self.version = 0;
+                        self.last_saved = 0;
+                    }
+                }
+                self.phase = Phase::Idle;
+                self.ws = EngineWorkspace::new();
+                out.push(Outgoing::Driver(DriverMsg::Restarted {
+                    from: self.id,
+                    version: self.version,
+                    lost,
+                }));
             }
             AgentMsg::Shutdown => {
                 let u = std::mem::take(&mut self.u);
@@ -207,6 +298,7 @@ impl BlockAgent {
                 // copies we own anyway — with the workspace outputs,
                 // handing the old buffers back for the next round.
                 self.ws.swap_output(0, &mut self.u, &mut self.w);
+                self.bump_version();
                 let (mut hu, mut hw) = (hu, hw);
                 let (mut vu, mut vw) = (vu, vw);
                 self.ws.swap_output(1, &mut hu, &mut hw);
@@ -381,6 +473,116 @@ mod tests {
             out.as_slice(),
             [Outgoing::Driver(DriverMsg::Retired { from, .. })] if *from == id
         ));
+    }
+
+    #[test]
+    fn crash_with_cadence_one_checkpoint_is_a_noop_restore() {
+        let (spec, train) = problem();
+        let partition = BlockPartition::new(spec, &train).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&partition).unwrap();
+        let engine: Arc<dyn Engine> = Arc::new(engine);
+        let mut state = FactorState::init_random(spec, 9);
+        let store = crate::gossip::CheckpointStore::in_memory(spec, 1);
+        let mut agents = std::collections::HashMap::new();
+        for id in spec.blocks() {
+            let (u, w) = state.take_block(id);
+            agents.insert(
+                id.index(spec.q),
+                BlockAgent::new(id, u, w, engine.clone()).with_checkpoints(store.clone()),
+            );
+        }
+        // One full structure update so the anchor mutates once.
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 7 })],
+        );
+        let anchor = agents.get_mut(&roles.anchor.index(2)).unwrap();
+        assert_eq!(anchor.version(), 1);
+        let (u_before, w_before) = (anchor.u.clone(), anchor.w.clone());
+        // Cadence 1 ⇒ the latest state is always snapshotted ⇒ a crash
+        // rolls back exactly zero updates.
+        let mut out = Vec::new();
+        let status = anchor.on_msg(AgentMsg::Crash, &mut out);
+        assert_eq!(status, AgentStatus::Running, "a crashed agent restarts, not retires");
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Driver(DriverMsg::Restarted { from, version: 1, lost: 0 })]
+                if *from == roles.anchor
+        ));
+        assert_eq!(anchor.u, u_before);
+        assert_eq!(anchor.w, w_before);
+        // The restored agent anchors another update fine.
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 8 })],
+        );
+        assert_eq!(driver.len(), 1);
+    }
+
+    #[test]
+    fn crash_without_store_rejoins_cold() {
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 3);
+        let id = BlockId::new(0, 0);
+        let agent = agents.get_mut(&id.index(2)).unwrap();
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::Crash, &mut out);
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Driver(DriverMsg::Restarted { version: 0, .. })]
+        ));
+        assert_eq!(agent.u.frob_sq(), 0.0, "cold rejoin zeroes the factors");
+        // The agent is alive, just reset: the control plane still answers.
+        let driver = pump(&mut agents, 2, vec![(id, AgentMsg::GetCost { lambda: 1e-9 })]);
+        assert!(matches!(driver.as_slice(), [DriverMsg::Cost { cost: Ok(_), .. }]));
+    }
+
+    #[test]
+    fn checkpoints_follow_cadence() {
+        let (spec, train) = problem();
+        let partition = BlockPartition::new(spec, &train).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&partition).unwrap();
+        let engine: Arc<dyn Engine> = Arc::new(engine);
+        let mut state = FactorState::init_random(spec, 4);
+        let store = crate::gossip::CheckpointStore::in_memory(spec, 2);
+        let mut agents = std::collections::HashMap::new();
+        for id in spec.blocks() {
+            let (u, w) = state.take_block(id);
+            agents.insert(
+                id.index(spec.q),
+                BlockAgent::new(id, u, w, engine.clone()).with_checkpoints(store.clone()),
+            );
+        }
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        // Spawn snapshot only, until the cadence fills.
+        assert_eq!(store.latest_version(roles.anchor), Some(0));
+        pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 0 })],
+        );
+        assert_eq!(
+            store.latest_version(roles.anchor),
+            Some(0),
+            "one mutation < cadence 2: no new snapshot yet"
+        );
+        pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 1 })],
+        );
+        assert_eq!(store.latest_version(roles.anchor), Some(2), "cadence reached");
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Per-block factor checkpointing: the durable state behind crash
+//! recovery.
+//!
+//! Every [`crate::gossip::BlockAgent`] can be handed a shared
+//! [`CheckpointStore`]. The agent counts its *factor mutations* (its
+//! own engine updates plus `PutFactors` adoptions) in a version
+//! counter and snapshots `(U_ij, W_ij, version)` into the store every
+//! `cadence` mutations — plus once at spawn, so a block can always be
+//! restored no matter how early it crashes. On
+//! [`crate::net::AgentMsg::Crash`] the agent reloads its latest
+//! snapshot and reports how many mutations were rolled back; the
+//! neighbours' subsequent gossip pulls the restored replica back into
+//! consensus (the paper's learning path is self-healing — that is the
+//! point of this subsystem).
+//!
+//! The store itself is a thin cadence + accounting wrapper over a
+//! pluggable [`CheckpointSink`]. The in-tree [`MemorySink`] keeps one
+//! mutex-striped slot per block (agents on different worker threads
+//! never contend); a durable sink (disk, object store) only has to
+//! implement the three-method trait.
+//!
+//! **Cadence trade-off** (PERF.md §Fault tolerance): snapshots cost a
+//! clone of both factor matrices, so `cadence = 1` makes every crash a
+//! perfect no-op restore (pinned by
+//! `tests/transport_equivalence.rs::checkpoint_then_immediate_restore_is_noop`)
+//! at the highest snapshot rate, while large cadences amortize the
+//! copies but roll back up to `cadence − 1` updates per crash.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::DenseMatrix;
+use crate::grid::{BlockId, GridSpec};
+
+/// One block's durable snapshot.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub block: BlockId,
+    /// Factor mutations the block had applied when the snapshot was
+    /// taken.
+    pub version: u64,
+    pub u: DenseMatrix,
+    pub w: DenseMatrix,
+}
+
+/// Where snapshots are persisted. Implementations must be safe to call
+/// from many agent worker threads at once.
+pub trait CheckpointSink: Send + Sync {
+    /// Persist `cp`, replacing any older snapshot of the same block.
+    fn store(&self, cp: Checkpoint);
+    /// The latest snapshot of `block`, if any.
+    fn load(&self, block: BlockId) -> Option<Checkpoint>;
+    /// The latest snapshot *version* of `block`, if any (cheaper than
+    /// [`Self::load`] — no factor clone).
+    fn version(&self, block: BlockId) -> Option<u64>;
+}
+
+/// In-memory sink: one mutex-striped slot per block, so concurrent
+/// agents never contend with each other (each block is written only by
+/// its own agent).
+pub struct MemorySink {
+    q: usize,
+    slots: Vec<Mutex<Option<Checkpoint>>>,
+}
+
+impl MemorySink {
+    pub fn new(spec: GridSpec) -> Self {
+        Self {
+            q: spec.q,
+            slots: (0..spec.num_blocks()).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    fn slot(&self, block: BlockId) -> Option<&Mutex<Option<Checkpoint>>> {
+        // Guard the column too: an out-of-grid j with a small i would
+        // otherwise alias into another block's slot via i·q + j.
+        if block.j >= self.q {
+            return None;
+        }
+        self.slots.get(block.index(self.q))
+    }
+}
+
+impl CheckpointSink for MemorySink {
+    fn store(&self, cp: Checkpoint) {
+        match self.slot(cp.block) {
+            Some(slot) => *slot.lock().expect("checkpoint slot poisoned") = Some(cp),
+            None => log::warn!("checkpoint: no slot for block {}", cp.block),
+        }
+    }
+
+    fn load(&self, block: BlockId) -> Option<Checkpoint> {
+        self.slot(block)?.lock().expect("checkpoint slot poisoned").clone()
+    }
+
+    fn version(&self, block: BlockId) -> Option<u64> {
+        self.slot(block)?
+            .lock()
+            .expect("checkpoint slot poisoned")
+            .as_ref()
+            .map(|cp| cp.version)
+    }
+}
+
+/// Shared checkpoint service handed to every agent: snapshot cadence,
+/// a pluggable sink, and snapshot accounting.
+pub struct CheckpointStore {
+    cadence: u64,
+    sink: Box<dyn CheckpointSink>,
+    snapshots: AtomicU64,
+}
+
+impl CheckpointStore {
+    /// Store over the in-tree [`MemorySink`]. `cadence` is clamped to
+    /// ≥ 1 (a zero cadence means "no checkpointing" — express that by
+    /// not attaching a store at all).
+    pub fn in_memory(spec: GridSpec, cadence: u64) -> Arc<Self> {
+        Arc::new(Self::with_sink(cadence, Box::new(MemorySink::new(spec))))
+    }
+
+    /// Store over a custom sink.
+    pub fn with_sink(cadence: u64, sink: Box<dyn CheckpointSink>) -> Self {
+        Self { cadence: cadence.max(1), sink, snapshots: AtomicU64::new(0) }
+    }
+
+    /// Snapshot every this many factor mutations.
+    pub fn cadence(&self) -> u64 {
+        self.cadence
+    }
+
+    /// Persist a snapshot of `block` at `version` (clones the factors).
+    pub fn save(&self, block: BlockId, version: u64, u: &DenseMatrix, w: &DenseMatrix) {
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+        self.sink.store(Checkpoint { block, version, u: u.clone(), w: w.clone() });
+    }
+
+    /// The latest snapshot of `block`, if any.
+    pub fn restore(&self, block: BlockId) -> Option<Checkpoint> {
+        self.sink.load(block)
+    }
+
+    /// The latest snapshot version of `block`, if any.
+    pub fn latest_version(&self, block: BlockId) -> Option<u64> {
+        self.sink.version(block)
+    }
+
+    /// Total snapshots persisted so far (recovery-overhead accounting).
+    pub fn snapshots_taken(&self) -> u64 {
+        self.snapshots.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(12, 12, 2, 2, 2)
+    }
+
+    fn mat(v: f32) -> DenseMatrix {
+        DenseMatrix::from_fn(3, 2, |i, j| v + i as f32 + 10.0 * j as f32)
+    }
+
+    #[test]
+    fn save_restore_roundtrip() {
+        let store = CheckpointStore::in_memory(spec(), 4);
+        let b = BlockId::new(1, 0);
+        assert!(store.restore(b).is_none());
+        assert!(store.latest_version(b).is_none());
+        store.save(b, 8, &mat(1.0), &mat(2.0));
+        let cp = store.restore(b).expect("saved");
+        assert_eq!(cp.block, b);
+        assert_eq!(cp.version, 8);
+        assert_eq!(cp.u, mat(1.0));
+        assert_eq!(cp.w, mat(2.0));
+        assert_eq!(store.latest_version(b), Some(8));
+        assert_eq!(store.snapshots_taken(), 1);
+    }
+
+    #[test]
+    fn newer_snapshot_replaces_older() {
+        let store = CheckpointStore::in_memory(spec(), 1);
+        let b = BlockId::new(0, 1);
+        store.save(b, 1, &mat(0.0), &mat(0.0));
+        store.save(b, 5, &mat(9.0), &mat(9.0));
+        let cp = store.restore(b).unwrap();
+        assert_eq!(cp.version, 5);
+        assert_eq!(cp.u, mat(9.0));
+        assert_eq!(store.snapshots_taken(), 2);
+    }
+
+    #[test]
+    fn blocks_are_independent_slots() {
+        let store = CheckpointStore::in_memory(spec(), 2);
+        store.save(BlockId::new(0, 0), 3, &mat(1.0), &mat(1.0));
+        assert!(store.restore(BlockId::new(1, 1)).is_none());
+        assert_eq!(store.restore(BlockId::new(0, 0)).unwrap().version, 3);
+    }
+
+    #[test]
+    fn zero_cadence_clamps_to_one() {
+        let store = CheckpointStore::in_memory(spec(), 0);
+        assert_eq!(store.cadence(), 1);
+        assert_eq!(CheckpointStore::in_memory(spec(), 7).cadence(), 7);
+    }
+
+    #[test]
+    fn out_of_grid_block_is_ignored_not_panicking() {
+        let store = CheckpointStore::in_memory(spec(), 1);
+        store.save(BlockId::new(9, 9), 1, &mat(0.0), &mat(0.0));
+        assert!(store.restore(BlockId::new(9, 9)).is_none());
+        // An out-of-grid column with a small row would alias into block
+        // (1,1)'s slot via i·q + j if the guard only checked the index.
+        store.save(BlockId::new(0, 3), 1, &mat(5.0), &mat(5.0));
+        assert!(store.restore(BlockId::new(0, 3)).is_none());
+        assert!(store.restore(BlockId::new(1, 1)).is_none(), "no slot aliasing");
+    }
+}

@@ -17,22 +17,38 @@
 //!   slowest update. Higher throughput at scale, at the cost of
 //!   run-to-run bit determinism (completion order steers the schedule;
 //!   `max_inflight = 1` restores full determinism).
+//!
+//! Both drivers double as **fault supervisors**: given a seeded
+//! [`FaultPlan`] they crash agents at scheduled completed-update
+//! boundaries (restoring each from its [`CheckpointStore`] snapshot —
+//! no coordinator holds factor state, matching the paper's serverless
+//! claim) and sever/heal simulated links. The round barrier makes every
+//! crash point conflict-free for the parallel driver; the async driver
+//! defers a kill, via its per-block in-flight flags, until the target
+//! block's structure completes. Executed actions land in a replayable
+//! [`FaultRecord`] trace on the [`crate::solver::SolverReport`].
 
 mod agent;
+mod checkpoint;
 mod scheduler;
 
 pub use agent::{AgentStatus, BlockAgent};
+pub use checkpoint::{Checkpoint, CheckpointSink, CheckpointStore, MemorySink};
 pub use scheduler::{conflicts, ScheduleBuilder};
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::data::CooMatrix;
 use crate::engine::{Engine, StructureParams};
 use crate::grid::{BlockId, BlockPartition, GridSpec, NormalizationCoeffs, Structure};
 use crate::metrics::{CostCurve, Timer};
 use crate::model::FactorState;
-use crate::net::{self, AgentMsg, DriverMsg, NetConfig, Transport, WireSnapshot};
+use crate::net::{
+    self, AgentMsg, DriverMsg, FaultEvent, FaultPlan, FaultRecord, LinkFault, NetConfig,
+    Transport, WireSnapshot,
+};
 use crate::solver::{ConvergenceCriterion, ConvergenceVerdict, SolverConfig, SolverReport};
 use crate::{Error, Result};
 
@@ -44,6 +60,12 @@ pub struct GossipNetwork {
     spec: GridSpec,
     transport: Box<dyn Transport>,
     next_token: u64,
+    /// Completions parked while a synchronous crash-restore drained the
+    /// driver channel (async driver: unrelated `Done`s can race a
+    /// `Restarted` reply).
+    backlog: VecDeque<DriverMsg>,
+    /// Executed fault actions, in firing order (the replayable trace).
+    trace: Vec<FaultRecord>,
 }
 
 impl GossipNetwork {
@@ -60,7 +82,34 @@ impl GossipNetwork {
         engine: Arc<dyn Engine>,
         state: FactorState,
     ) -> Self {
-        Self { spec, transport: net::spawn(net, spec, engine, state), next_token: 0 }
+        Self::spawn_full(net, spec, engine, state, None)
+    }
+
+    /// Spawn on the configured transport stack with optional per-block
+    /// checkpointing (required for [`Self::crash`] to restore warm).
+    pub fn spawn_full(
+        net: &NetConfig,
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+        checkpoints: Option<Arc<CheckpointStore>>,
+    ) -> Self {
+        Self {
+            spec,
+            transport: net::spawn(net, spec, engine, state, checkpoints),
+            next_token: 0,
+            backlog: VecDeque::new(),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Backlog-aware receive: parked completions drain before the
+    /// transport is polled again.
+    fn recv_msg(&mut self) -> Result<DriverMsg> {
+        if let Some(m) = self.backlog.pop_front() {
+            return Ok(m);
+        }
+        self.transport.recv()
     }
 
     /// Transport label (for reports).
@@ -88,13 +137,70 @@ impl GossipNetwork {
     /// Block until one in-flight structure completes; returns its
     /// anchor and token. Errors if the update itself failed.
     pub fn await_done(&mut self) -> Result<(BlockId, u64)> {
-        match self.transport.recv()? {
+        match self.recv_msg()? {
             DriverMsg::Done { anchor, token, result } => result.map(|()| (anchor, token)),
             other => Err(Error::Gossip(format!(
                 "protocol violation: {} while awaiting a completion",
                 other.kind()
             ))),
         }
+    }
+
+    /// Crash-and-restore `block` from its last checkpoint (cold, with
+    /// zeroed factors, when the network runs uncheckpointed).
+    /// Synchronous: returns once the replacement agent is live again.
+    /// Completions racing the restart are parked for [`Self::await_done`].
+    ///
+    /// Callers must guarantee `block` has no structure in flight — the
+    /// parallel driver fires at round barriers, the async driver defers
+    /// via its per-block in-flight flags. `step` (completed updates so
+    /// far) is recorded in the fault trace.
+    pub fn crash(&mut self, step: u64, block: BlockId) -> Result<()> {
+        self.transport.send(block, AgentMsg::Crash)?;
+        loop {
+            match self.transport.recv()? {
+                DriverMsg::Restarted { from, version, lost } if from == block => {
+                    self.trace.push(FaultRecord::Kill {
+                        step,
+                        block,
+                        restored_version: version,
+                        lost_updates: lost,
+                    });
+                    return Ok(());
+                }
+                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
+                other => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} while awaiting the restart of {block}",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Sever both directions of the grid link `a — b` for `duration` of
+    /// wall time (sim transports only; frames are held, never erased).
+    pub fn partition(
+        &mut self,
+        step: u64,
+        a: BlockId,
+        b: BlockId,
+        duration: Duration,
+    ) -> Result<()> {
+        self.transport.inject_fault(LinkFault::Partition { a, b, duration })?;
+        self.trace.push(FaultRecord::Partition {
+            step,
+            a,
+            b,
+            duration_us: duration.as_micros() as u64,
+        });
+        Ok(())
+    }
+
+    /// Executed fault actions so far, in firing order.
+    pub fn fault_trace(&self) -> &[FaultRecord] {
+        &self.trace
     }
 
     /// Dispatch one structure and await its completion.
@@ -135,7 +241,7 @@ impl GossipNetwork {
         }
         let mut per_block: Vec<Option<f64>> = vec![None; self.spec.num_blocks()];
         for _ in 0..per_block.len() {
-            match self.transport.recv()? {
+            match self.recv_msg()? {
                 DriverMsg::Cost { from, cost } => {
                     per_block[from.index(self.spec.q)] = Some(cost?);
                 }
@@ -162,7 +268,11 @@ impl GossipNetwork {
     /// skipped, stale in-flight completions are drained and ignored,
     /// and worker threads are reaped either way. Only a full, clean
     /// collection returns `Ok`.
-    pub fn shutdown(self) -> Result<FactorState> {
+    pub fn shutdown(mut self) -> Result<FactorState> {
+        // A failed run can leave parked completions; they are stale now.
+        for stale in self.backlog.drain(..) {
+            log::debug!("shutdown: dropping parked {}", stale.kind());
+        }
         let mut expected = 0usize;
         for id in self.spec.blocks() {
             match self.transport.send(id, AgentMsg::Shutdown) {
@@ -201,14 +311,16 @@ impl GossipNetwork {
     }
 }
 
-/// Shared driver lifecycle: prepare the engine, spawn the network,
-/// time the training closure, tear the network down (best-effort on
-/// the error path so failed runs don't leak p·q agent threads), and
-/// assemble the report.
+/// Shared driver lifecycle: prepare the engine, spawn the network
+/// (checkpointed when `checkpoint_every > 0`), time the training
+/// closure, tear the network down (best-effort on the error path so
+/// failed runs don't leak p·q agent threads), and assemble the report
+/// — fault trace included.
 fn run_gossip_driver(
     spec: GridSpec,
     net: &NetConfig,
     seed: u64,
+    checkpoint_every: u64,
     mut engine: Box<dyn Engine>,
     train_data: &CooMatrix,
     train: impl FnOnce(&mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)>,
@@ -220,10 +332,13 @@ fn run_gossip_driver(
     let engine_name = engine.name().to_string();
 
     let state = FactorState::init_random(spec, seed);
-    let mut network = GossipNetwork::spawn_with(net, spec, engine, state);
+    let checkpoints =
+        (checkpoint_every > 0).then(|| CheckpointStore::in_memory(spec, checkpoint_every));
+    let mut network = GossipNetwork::spawn_full(net, spec, engine, state, checkpoints);
     let timer = Timer::start();
     match train(&mut network) {
         Ok((curve, final_cost, iters, converged)) => {
+            let faults = std::mem::take(&mut network.trace);
             let state = network.shutdown()?;
             Ok((
                 SolverReport {
@@ -233,6 +348,7 @@ fn run_gossip_driver(
                     converged,
                     wall: timer.elapsed(),
                     engine: engine_name,
+                    faults,
                 },
                 state,
             ))
@@ -247,6 +363,77 @@ fn run_gossip_driver(
     }
 }
 
+/// Execute one due fault event through the network supervisor API.
+fn fire_fault(network: &mut GossipNetwork, event: FaultEvent, step: u64) -> Result<()> {
+    match event {
+        FaultEvent::Kill { block, .. } => network.crash(step, block),
+        FaultEvent::Partition { a, b, duration_us, .. } => {
+            network.partition(step, a, b, Duration::from_micros(duration_us))
+        }
+    }
+}
+
+/// Fire every event due at `step`. Callers must be at a point where
+/// every block is free (a round barrier, or the drained end of
+/// training).
+fn fire_due_faults(
+    network: &mut GossipNetwork,
+    queue: &mut VecDeque<FaultEvent>,
+    step: u64,
+) -> Result<()> {
+    while queue.front().is_some_and(|e| e.step() <= step) {
+        let event = queue.pop_front().expect("peeked");
+        fire_fault(network, event, step)?;
+    }
+    Ok(())
+}
+
+/// End-of-training sweep: fire events that came due during the final
+/// updates (trace completeness — a crash right at the end of training
+/// is still a crash), then log anything scheduled past the budget.
+///
+/// A kill fired here goes **un-regossiped** into the final state: the
+/// victim keeps its checkpoint (or zeros, uncheckpointed), mirroring a
+/// machine dying at the finish line. `final_cost` is evaluated after
+/// this sweep, so the report is honest about it; plans that want a
+/// clean final model should end their window well before `max_iters`
+/// (the presets and the chaos harness do).
+fn finish_faults(
+    network: &mut GossipNetwork,
+    queue: &mut VecDeque<FaultEvent>,
+    step: u64,
+) -> Result<()> {
+    if queue.front().is_some_and(|e| e.step() <= step) {
+        log::warn!(
+            "firing fault event(s) after the last training update; the rollback \
+             is not re-gossiped into the final state"
+        );
+    }
+    fire_due_faults(network, queue, step)?;
+    if let Some(e) = queue.front() {
+        log::debug!(
+            "{} fault event(s) scheduled past the end of training (first due at \
+             step {}); skipped",
+            queue.len(),
+            e.step()
+        );
+    }
+    Ok(())
+}
+
+/// Upfront supervision check shared by both drivers: partitions need a
+/// transport with simulated links.
+fn check_fault_support(network: &GossipNetwork, plan: &FaultPlan) -> Result<()> {
+    if plan.has_partitions() && network.wire_stats().is_none() {
+        return Err(Error::Config(
+            "fault plans with link partitions require a sim transport \
+             (transport = \"sim\" or \"sim-multiplex\")"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
 /// Parallel gossip driver: Algorithm 1 with conflict-free rounds
 /// dispatched concurrently over the agent network.
 #[derive(Debug, Clone)]
@@ -257,16 +444,42 @@ pub struct ParallelDriver {
     pub workers: usize,
     /// Which transport stack carries the gossip.
     pub net: NetConfig,
+    /// Scheduled crashes/partitions to supervise (default: none).
+    pub faults: FaultPlan,
+    /// Per-block snapshot cadence in factor mutations (0 = off).
+    pub checkpoint_every: u64,
 }
 
 impl ParallelDriver {
     pub fn new(spec: GridSpec, cfg: SolverConfig, workers: usize) -> Self {
-        Self { spec, cfg, workers: workers.max(1), net: NetConfig::default() }
+        Self {
+            spec,
+            cfg,
+            workers: workers.max(1),
+            net: NetConfig::default(),
+            faults: FaultPlan::default(),
+            checkpoint_every: 0,
+        }
     }
 
     /// Select the transport stack (default: thread-per-block channels).
     pub fn with_net(mut self, net: NetConfig) -> Self {
         self.net = net;
+        self
+    }
+
+    /// Supervise a fault plan during training. Events fire at round
+    /// barriers — the first barrier at or past each event's step —
+    /// where every block is guaranteed free.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Checkpoint every block's factors at this mutation cadence (0
+    /// disables; crashes then restore cold).
+    pub fn with_checkpoints(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
         self
     }
 
@@ -278,15 +491,23 @@ impl ParallelDriver {
         engine: Box<dyn Engine>,
         train: &CooMatrix,
     ) -> Result<(SolverReport, FactorState)> {
-        run_gossip_driver(self.spec, &self.net, self.cfg.seed, engine, train, |network| {
-            self.train(network)
-        })
+        run_gossip_driver(
+            self.spec,
+            &self.net,
+            self.cfg.seed,
+            self.checkpoint_every,
+            engine,
+            train,
+            |network| self.train(network),
+        )
     }
 
     /// The training loop proper. Any error — including divergence —
     /// leaves the network running; [`Self::run`] tears it down.
     fn train(&self, network: &mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)> {
         let cfg = &self.cfg;
+        check_fault_support(network, &self.faults)?;
+        let mut fault_queue = self.faults.queue();
         let coeffs = NormalizationCoeffs::new(self.spec.p, self.spec.q);
         let mut schedule = ScheduleBuilder::new(self.spec, cfg.seed ^ 0x90551b);
         let mut criterion =
@@ -302,6 +523,10 @@ impl ParallelDriver {
                 if iters >= cfg.max_iters {
                     break;
                 }
+                // Fault supervision at the round barrier: every block is
+                // free here, so a crash can never race an in-flight
+                // structure.
+                fire_due_faults(network, &mut fault_queue, iters)?;
                 // Batch semantics: every update in a round shares γ_t.
                 let gamma = cfg.schedule.gamma(iters);
                 let take = round.len().min((cfg.max_iters - iters) as usize);
@@ -346,6 +571,8 @@ impl ParallelDriver {
             }
         }
 
+        finish_faults(network, &mut fault_queue, iters)?;
+
         let final_cost = network.total_cost(cfg.lambda)?;
         if curve.last().map(|(it, _)| it) != Some(iters) {
             curve.push(iters, final_cost);
@@ -382,16 +609,43 @@ pub struct AsyncDriver {
     /// Which transport stack carries the gossip (default: multiplexed
     /// workers — the pairing built for large grids).
     pub net: NetConfig,
+    /// Scheduled crashes/partitions to supervise (default: none).
+    pub faults: FaultPlan,
+    /// Per-block snapshot cadence in factor mutations (0 = off).
+    pub checkpoint_every: u64,
 }
 
 impl AsyncDriver {
     pub fn new(spec: GridSpec, cfg: SolverConfig, max_inflight: usize) -> Self {
-        Self { spec, cfg, max_inflight: max_inflight.max(1), net: NetConfig::multiplex(0) }
+        Self {
+            spec,
+            cfg,
+            max_inflight: max_inflight.max(1),
+            net: NetConfig::multiplex(0),
+            faults: FaultPlan::default(),
+            checkpoint_every: 0,
+        }
     }
 
     /// Select the transport stack.
     pub fn with_net(mut self, net: NetConfig) -> Self {
         self.net = net;
+        self
+    }
+
+    /// Supervise a fault plan during training. Partitions fire as soon
+    /// as due; a kill whose block has a structure in flight is deferred
+    /// — via the per-block in-flight flags — until the completion that
+    /// frees the block, then fires before anything can re-busy it.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Checkpoint every block's factors at this mutation cadence (0
+    /// disables; crashes then restore cold).
+    pub fn with_checkpoints(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
         self
     }
 
@@ -401,9 +655,15 @@ impl AsyncDriver {
         engine: Box<dyn Engine>,
         train: &CooMatrix,
     ) -> Result<(SolverReport, FactorState)> {
-        run_gossip_driver(self.spec, &self.net, self.cfg.seed, engine, train, |network| {
-            self.train(network)
-        })
+        run_gossip_driver(
+            self.spec,
+            &self.net,
+            self.cfg.seed,
+            self.checkpoint_every,
+            engine,
+            train,
+            |network| self.train(network),
+        )
     }
 
     /// The barrier-free training loop. Any error — including
@@ -412,6 +672,9 @@ impl AsyncDriver {
     fn train(&self, network: &mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)> {
         let cfg = &self.cfg;
         let spec = self.spec;
+        check_fault_support(network, &self.faults)?;
+        let mut fault_queue = self.faults.queue();
+        let mut pending_kills: Vec<BlockId> = Vec::new();
         let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
         let mut schedule = ScheduleBuilder::new(spec, cfg.seed ^ 0xa57c);
         let mut criterion =
@@ -428,6 +691,42 @@ impl AsyncDriver {
         let mut converged = false;
 
         'training: while completed < cfg.max_iters {
+            // Fault supervision: partitions fire immediately, kills
+            // queue until their block has no structure in flight (the
+            // in-flight flags below), then fire before the next refill
+            // can re-busy the block.
+            while fault_queue.front().is_some_and(|e| e.step() <= completed) {
+                match fault_queue.pop_front().expect("peeked") {
+                    FaultEvent::Kill { block, .. } => pending_kills.push(block),
+                    event @ FaultEvent::Partition { .. } => {
+                        fire_fault(network, event, completed)?;
+                    }
+                }
+            }
+            if !pending_kills.is_empty() {
+                let mut still_busy = Vec::new();
+                for block in pending_kills.drain(..) {
+                    if busy[block.index(spec.q)] {
+                        still_busy.push(block);
+                        continue;
+                    }
+                    network.crash(completed, block)?;
+                    // Neighbours re-gossip first: the restored block's
+                    // structures jump to the front of the feed so its
+                    // replica re-converges quickly. Late in an epoch the
+                    // residual feed may not touch the block at all —
+                    // inject its full re-gossip set then.
+                    let touching = schedule.touching(block);
+                    let (mut front, back): (Vec<_>, Vec<_>) =
+                        queue.drain(..).partition(|s| touching.contains(s));
+                    if front.is_empty() {
+                        front = touching;
+                    }
+                    front.extend(back);
+                    queue = front;
+                }
+                pending_kills = still_busy;
+            }
             // Drain (instead of refill) when an evaluation is due or the
             // iteration budget is fully dispatched.
             let draining = completed >= next_eval || dispatched >= cfg.max_iters;
@@ -499,6 +798,18 @@ impl AsyncDriver {
             }
             completed += 1;
         }
+
+        // The budget can run out while a due kill waits for its block;
+        // everything has drained here (all blocks free), so fire those
+        // deferred kills, then run the shared end-of-training sweep.
+        for block in pending_kills.drain(..) {
+            log::warn!(
+                "firing deferred kill of {block} after the last training update; \
+                 the rollback is not re-gossiped into the final state"
+            );
+            network.crash(completed, block)?;
+        }
+        finish_faults(network, &mut fault_queue, completed)?;
 
         let final_cost = network.total_cost(cfg.lambda)?;
         if curve.last().map(|(it, _)| it) != Some(completed) {
@@ -636,6 +947,91 @@ mod tests {
         let driver = AsyncDriver::new(spec, c, 5);
         let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
         assert_eq!(report.iters, 13);
+    }
+
+    #[test]
+    fn parallel_driver_supervises_kills_and_recovers() {
+        let (spec, train, test) = problem();
+        let plan = FaultPlan::new()
+            .kill(300, BlockId::new(1, 1))
+            .kill(900, BlockId::new(2, 3))
+            .kill(1500, BlockId::new(0, 0));
+        let driver = ParallelDriver::new(spec, cfg(), 4)
+            .with_faults(plan)
+            .with_checkpoints(4);
+        let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+        assert_eq!(report.kill_count(), 3, "{:?}", report.faults);
+        assert_eq!(report.partition_count(), 0);
+        assert!(
+            report.curve.orders_of_reduction() > 2.0,
+            "churned run still converges: orders {}",
+            report.curve.orders_of_reduction()
+        );
+        assert!(state.rmse(&test) < 0.5);
+        // Crash points are barrier-aligned at or past the planned step.
+        for (f, want) in report.faults.iter().zip([300u64, 900, 1500]) {
+            assert!(f.step() >= want, "{f:?} fired before its step");
+        }
+    }
+
+    #[test]
+    fn async_driver_defers_kills_and_recovers() {
+        let (spec, train, test) = problem();
+        let plan = FaultPlan::new()
+            .kill(200, BlockId::new(3, 3))
+            .kill(700, BlockId::new(1, 2));
+        let driver = AsyncDriver::new(spec, cfg(), 5)
+            .with_faults(plan)
+            .with_checkpoints(2);
+        let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+        assert_eq!(report.kill_count(), 2, "{:?}", report.faults);
+        assert!(report.curve.orders_of_reduction() > 1.5);
+        assert!(state.rmse(&test) < 0.5);
+    }
+
+    #[test]
+    fn partitions_require_a_sim_transport() {
+        let (spec, train, _) = problem();
+        let plan = FaultPlan::new().partition(
+            10,
+            BlockId::new(0, 0),
+            BlockId::new(0, 1),
+            std::time::Duration::from_micros(200),
+        );
+        let err = ParallelDriver::new(spec, cfg(), 2)
+            .with_faults(plan.clone())
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // Over a sim transport the same plan executes fine.
+        let (report, _) = ParallelDriver::new(spec, cfg(), 2)
+            .with_faults(plan)
+            .with_net(NetConfig::sim(crate::net::SimConfig::zero_latency(3)))
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap();
+        assert_eq!(report.partition_count(), 1);
+    }
+
+    #[test]
+    fn fault_free_plan_changes_nothing() {
+        // An empty plan plus checkpointing is observation-only: the
+        // trained state must be bit-identical to the plain run.
+        let (spec, train, _) = problem();
+        let mut c = cfg();
+        c.max_iters = 600;
+        let (r_plain, s_plain) = ParallelDriver::new(spec, c.clone(), 4)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap();
+        let (r_ckpt, s_ckpt) = ParallelDriver::new(spec, c, 4)
+            .with_faults(FaultPlan::new())
+            .with_checkpoints(2)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap();
+        assert!(r_ckpt.faults.is_empty());
+        assert_eq!(r_plain.final_cost.to_bits(), r_ckpt.final_cost.to_bits());
+        let id = BlockId::new(1, 2);
+        assert_eq!(s_plain.u(id), s_ckpt.u(id));
+        assert_eq!(s_plain.w(id), s_ckpt.w(id));
     }
 
     #[test]

@@ -53,6 +53,17 @@ impl ScheduleBuilder {
         self.epoch().into_iter().next().unwrap_or_default()
     }
 
+    /// All structures of the grid that touch `block` — the re-gossip
+    /// set a crash-restored block needs to pull its replica back into
+    /// consensus. Non-empty for every block of a valid (`p, q ≥ 2`)
+    /// grid, which is what makes recovery always reachable.
+    pub fn touching(&self, block: crate::grid::BlockId) -> Vec<Structure> {
+        Structure::enumerate(self.spec.p, self.spec.q)
+            .into_iter()
+            .filter(|s| s.blocks().contains(&block))
+            .collect()
+    }
+
     /// The exact maximum number of pairwise non-conflicting structures
     /// a `p × q` grid admits — the true ceiling on any packed round,
     /// and therefore on useful structure-level parallelism.
@@ -293,6 +304,28 @@ mod tests {
         for round in b.epoch() {
             assert_eq!(round.len(), 1);
         }
+    }
+
+    #[test]
+    fn every_block_is_touched_by_some_structure() {
+        // Recovery precondition: a crash-restored block must have
+        // neighbours to re-gossip with, on every grid shape.
+        for (p, q) in [(2, 2), (3, 3), (4, 5), (6, 5), (9, 9)] {
+            let b = ScheduleBuilder::new(spec(p, q), 0);
+            for i in 0..p {
+                for j in 0..q {
+                    let block = crate::grid::BlockId::new(i, j);
+                    let touching = b.touching(block);
+                    assert!(!touching.is_empty(), "{p}x{q}: block {block} untouched");
+                    assert!(touching.iter().all(|s| s.blocks().contains(&block)));
+                }
+            }
+        }
+        // Counts match the Figure-2c f-counts: an interior block of a
+        // 6×5 grid sits in 6 structures.
+        let b = ScheduleBuilder::new(spec(6, 5), 0);
+        assert_eq!(b.touching(crate::grid::BlockId::new(2, 2)).len(), 6);
+        assert_eq!(b.touching(crate::grid::BlockId::new(0, 0)).len(), 1);
     }
 
     #[test]

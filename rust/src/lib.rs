@@ -48,6 +48,19 @@
 //! println!("test rmse {:.4}", state.rmse(&data.data.test));
 //! ```
 
+// CI gates `cargo clippy --all-targets -- -D warnings`; these style
+// lints fire all over the hand-rolled numeric substrates (multi-slice
+// index loops, constructor-without-Default types, protocol enums whose
+// factor-bearing variants dwarf the control frames) and are allowed
+// crate-wide so the gate stays about correctness.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::new_without_default,
+    clippy::large_enum_variant,
+    clippy::result_large_err
+)]
+
 pub mod config;
 pub mod data;
 pub mod engine;
@@ -73,11 +86,15 @@ pub mod prelude {
         SplitDataset,
     };
     pub use crate::engine::{Engine, EngineWorkspace, NativeEngine, XlaEngine};
-    pub use crate::gossip::{AsyncDriver, GossipNetwork, ParallelDriver, ScheduleBuilder};
+    pub use crate::gossip::{
+        AsyncDriver, CheckpointStore, GossipNetwork, ParallelDriver, ScheduleBuilder,
+    };
     pub use crate::grid::{BlockId, GridSpec, Structure, StructureKind, StructureSampler};
-    pub use crate::metrics::{CostCurve, RmseReport};
+    pub use crate::metrics::{CostCurve, RecoveryOverhead, RmseReport};
     pub use crate::model::FactorState;
-    pub use crate::net::{NetConfig, SimConfig, Transport, TransportKind};
+    pub use crate::net::{
+        FaultConfig, FaultPlan, FaultRecord, NetConfig, SimConfig, Transport, TransportKind,
+    };
     pub use crate::runtime::{ArtifactManifest, Runtime};
     pub use crate::solver::{
         baselines, ConvergenceCriterion, SequentialDriver, SolverConfig,

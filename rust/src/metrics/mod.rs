@@ -66,6 +66,54 @@ impl CostCurve {
     }
 }
 
+/// Recovery-overhead summary of a churn run against its fault-free
+/// twin — the headline numbers of `BENCH_churn.json` (PERF.md §Fault
+/// tolerance). "Recovery" here is the gossip fabric's own re-convergence
+/// after crash-restores: no coordinator replays anything, neighbours
+/// just keep gossiping.
+#[derive(Debug, Clone)]
+pub struct RecoveryOverhead {
+    /// Executed crash-restores.
+    pub kills: usize,
+    /// Executed link partitions.
+    pub partitions: usize,
+    /// Factor mutations rolled back across all crashes.
+    pub lost_updates: u64,
+    /// Test RMSE of the fault-free reference run.
+    pub clean_rmse: f64,
+    /// Test RMSE of the churned run.
+    pub churned_rmse: f64,
+    pub clean_wall: Duration,
+    pub churned_wall: Duration,
+}
+
+impl RecoveryOverhead {
+    /// Churned ÷ clean RMSE — 1.0 is perfect recovery; the chaos
+    /// harness gates the acceptance scenario at ≤ 1.05.
+    pub fn rmse_ratio(&self) -> f64 {
+        if self.clean_rmse <= 0.0 {
+            if self.churned_rmse <= 0.0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.churned_rmse / self.clean_rmse
+        }
+    }
+
+    /// Relative extra wall-clock the churned run paid for checkpoints,
+    /// crash-restores and healed partitions (0.0 = free recovery).
+    pub fn wall_overhead(&self) -> f64 {
+        let clean = self.clean_wall.as_secs_f64();
+        if clean <= 0.0 {
+            0.0
+        } else {
+            self.churned_wall.as_secs_f64() / clean - 1.0
+        }
+    }
+}
+
 /// One Table-3 cell: dataset × grid × rank → test RMSE.
 #[derive(Debug, Clone)]
 pub struct RmseReport {
@@ -272,6 +320,30 @@ mod tests {
         let single = percentiles(&[7.5]);
         assert_eq!(single.median, 7.5);
         assert_eq!(single.p90, 7.5);
+    }
+
+    #[test]
+    fn recovery_overhead_ratios() {
+        let r = RecoveryOverhead {
+            kills: 4,
+            partitions: 2,
+            lost_updates: 21,
+            clean_rmse: 0.10,
+            churned_rmse: 0.104,
+            clean_wall: Duration::from_millis(1000),
+            churned_wall: Duration::from_millis(1150),
+        };
+        assert!((r.rmse_ratio() - 1.04).abs() < 1e-12);
+        assert!((r.wall_overhead() - 0.15).abs() < 1e-12);
+        // Degenerate clean runs don't divide by zero.
+        let z = RecoveryOverhead {
+            clean_rmse: 0.0,
+            churned_rmse: 0.0,
+            clean_wall: Duration::ZERO,
+            ..r
+        };
+        assert_eq!(z.rmse_ratio(), 1.0);
+        assert_eq!(z.wall_overhead(), 0.0);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 
 use crate::engine::Engine;
-use crate::gossip::{AgentStatus, BlockAgent};
+use crate::gossip::{AgentStatus, BlockAgent, CheckpointStore};
 use crate::grid::{BlockId, GridSpec};
 use crate::model::FactorState;
 use crate::{Error, Result};
@@ -41,9 +41,15 @@ pub struct ChannelTransport {
 
 impl ChannelTransport {
     /// Spawn one agent thread per block of `spec`, each owning its
-    /// slice of `state`. `engine` must already be prepared.
-    pub fn spawn(spec: GridSpec, engine: Arc<dyn Engine>, state: FactorState) -> Self {
-        Self::spawn_tapped(spec, engine, state, None)
+    /// slice of `state`. `engine` must already be prepared;
+    /// `checkpoints`, when set, makes every agent crash-recoverable.
+    pub fn spawn(
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+        checkpoints: Option<Arc<CheckpointStore>>,
+    ) -> Self {
+        Self::spawn_tapped(spec, engine, state, checkpoints, None)
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -52,6 +58,7 @@ impl ChannelTransport {
         spec: GridSpec,
         engine: Arc<dyn Engine>,
         mut state: FactorState,
+        checkpoints: Option<Arc<CheckpointStore>>,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
         let n = spec.num_blocks();
@@ -68,6 +75,9 @@ impl ChannelTransport {
         for (id, rx) in spec.blocks().zip(rxs) {
             let (u, w) = state.take_block(id);
             let mut agent = BlockAgent::new(id, u, w, engine.clone());
+            if let Some(store) = &checkpoints {
+                agent = agent.with_checkpoints(store.clone());
+            }
             let router = Router {
                 peers: peers.clone(),
                 driver: driver_tx.clone(),

@@ -1,0 +1,357 @@
+//! Deterministic fault plans: scheduled agent crashes and link
+//! partitions, replayable from a seed.
+//!
+//! The paper's "no central server" claim is only credible if blocks can
+//! crash and rejoin without a coordinator (NOMAD, arXiv:1312.0193,
+//! tolerates exactly this kind of machine churn; the Riemannian gossip
+//! companion paper, arXiv:1605.06968, motivates unreliable links). A
+//! [`FaultPlan`] is the *schedule* of such failures: which block
+//! crashes after how many completed structure updates, which grid link
+//! is severed and for how long. Plans are either built explicitly
+//! (tests, examples) or drawn deterministically from a seeded
+//! [`FaultConfig`] — the config-file `[faults]` table — so a churn run
+//! replays event-for-event under a fixed seed.
+//!
+//! Execution is split across the stack: the *supervisor* (the gossip
+//! drivers through `GossipNetwork`) fires events at completed-update
+//! boundaries — crashes via the [`super::AgentMsg::Crash`] control
+//! message (any transport), partitions via
+//! [`super::Transport::inject_fault`] (sim transports only). Executed
+//! actions are recorded as [`FaultRecord`]s; [`render_trace`] turns a
+//! record list into the byte-stable JSON-lines trace that
+//! `BENCH_churn.json` embeds and `tests/chaos.rs` pins across reruns.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::grid::{BlockId, GridSpec};
+use crate::util::Rng;
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Crash the agent of `block` once `step` structure updates have
+    /// completed; the supervisor restores it from its last checkpoint
+    /// (or cold, with zeroed factors, when checkpointing is off).
+    Kill { step: u64, block: BlockId },
+    /// Sever both directions of the grid link `a — b` once `step`
+    /// updates have completed; the link heals after `duration_us` of
+    /// wall time (frames are held, never erased, so the three-party
+    /// protocol stalls but cannot wedge).
+    Partition { step: u64, a: BlockId, b: BlockId, duration_us: u64 },
+}
+
+impl FaultEvent {
+    /// Completed-update count at which the event becomes due.
+    pub fn step(&self) -> u64 {
+        match self {
+            FaultEvent::Kill { step, .. } | FaultEvent::Partition { step, .. } => *step,
+        }
+    }
+}
+
+/// Generation knobs for a random fault plan — the `[faults]` table of
+/// an experiment config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Scheduled agent crashes.
+    pub kills: usize,
+    /// Scheduled link partitions (sim transports only).
+    pub partitions: usize,
+    /// Event steps are drawn uniformly from `[from_step, until_step)`.
+    pub from_step: u64,
+    pub until_step: u64,
+    /// How long a severed link stays down, wall-clock microseconds.
+    pub partition_duration_us: u64,
+    /// Snapshot a block's factors every this many factor mutations
+    /// (0 disables checkpointing — crashed agents rejoin cold).
+    pub checkpoint_every: u64,
+    /// Seed of the fault-plan draw.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            kills: 2,
+            partitions: 0,
+            from_step: 1,
+            until_step: 512,
+            partition_duration_us: 2_000,
+            checkpoint_every: 8,
+            seed: 0x0FA17,
+        }
+    }
+}
+
+/// A deterministic, replayable schedule of fault events, kept sorted by
+/// due step (ties keep insertion order).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty (fault-free) plan.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a scheduled crash (builder style).
+    pub fn kill(mut self, step: u64, block: BlockId) -> Self {
+        self.events.push(FaultEvent::Kill { step, block });
+        self.events.sort_by_key(FaultEvent::step);
+        self
+    }
+
+    /// Add a scheduled link partition (builder style).
+    pub fn partition(mut self, step: u64, a: BlockId, b: BlockId, duration: Duration) -> Self {
+        self.events.push(FaultEvent::Partition {
+            step,
+            a,
+            b,
+            duration_us: duration.as_micros() as u64,
+        });
+        self.events.sort_by_key(FaultEvent::step);
+        self
+    }
+
+    /// Draw a plan from a seeded config: `kills` crash events over
+    /// uniformly random blocks, `partitions` severed grid links, all at
+    /// steps uniform in `[from_step, until_step)`.
+    pub fn generate(spec: GridSpec, cfg: &FaultConfig) -> Self {
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        if cfg.until_step <= cfg.from_step && cfg.kills + cfg.partitions > 0 {
+            log::warn!(
+                "fault window [{}, {}) is empty or inverted; every event lands at \
+                 step {}",
+                cfg.from_step,
+                cfg.until_step,
+                cfg.from_step
+            );
+        }
+        let span = cfg.until_step.saturating_sub(cfg.from_step).max(1);
+        let step = |rng: &mut Rng| cfg.from_step + rng.gen_range(span as usize) as u64;
+        let mut events = Vec::with_capacity(cfg.kills + cfg.partitions);
+        for _ in 0..cfg.kills {
+            let s = step(&mut rng);
+            let block = BlockId::new(rng.gen_range(spec.p), rng.gen_range(spec.q));
+            events.push(FaultEvent::Kill { step: s, block });
+        }
+        for _ in 0..cfg.partitions {
+            let s = step(&mut rng);
+            // A uniformly random grid link: horizontal or vertical edge.
+            let horizontal = if spec.q < 2 {
+                false
+            } else if spec.p < 2 {
+                true
+            } else {
+                rng.bool(0.5)
+            };
+            let (a, b) = if horizontal {
+                let i = rng.gen_range(spec.p);
+                let j = rng.gen_range(spec.q - 1);
+                (BlockId::new(i, j), BlockId::new(i, j + 1))
+            } else {
+                let i = rng.gen_range(spec.p - 1);
+                let j = rng.gen_range(spec.q);
+                (BlockId::new(i, j), BlockId::new(i + 1, j))
+            };
+            events.push(FaultEvent::Partition {
+                step: s,
+                a,
+                b,
+                duration_us: cfg.partition_duration_us,
+            });
+        }
+        events.sort_by_key(FaultEvent::step);
+        Self { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The scheduled events, sorted by due step.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Does the plan contain link partitions (which require a sim
+    /// transport to execute)?
+    pub fn has_partitions(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e, FaultEvent::Partition { .. }))
+    }
+
+    /// Consume-from-the-front view for the driver supervision loop.
+    pub fn queue(&self) -> VecDeque<FaultEvent> {
+        self.events.iter().copied().collect()
+    }
+}
+
+/// A link-layer fault injected into a running sim transport. Severed
+/// links heal by expiry only — that keeps the executed fault trace a
+/// complete record of the run's link history.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkFault {
+    /// Sever both directions of `a — b`; the link heals (by expiry)
+    /// after `duration`. Frames attempting the link are held until the
+    /// heal instant, never erased.
+    Partition { a: BlockId, b: BlockId, duration: Duration },
+}
+
+/// One *executed* fault action — the replayable churn trace. Under the
+/// round-barrier driver every field is schedule-determined, so traces
+/// (and [`render_trace`] output) are byte-identical for a fixed seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultRecord {
+    /// An agent crashed and was restored from its checkpoint.
+    Kill {
+        /// Completed structure updates when the crash fired.
+        step: u64,
+        block: BlockId,
+        /// Checkpoint version the agent restarted from.
+        restored_version: u64,
+        /// Factor mutations rolled back by the crash.
+        lost_updates: u64,
+    },
+    /// A grid link was severed for `duration_us` of wall time.
+    Partition { step: u64, a: BlockId, b: BlockId, duration_us: u64 },
+}
+
+impl FaultRecord {
+    pub fn step(&self) -> u64 {
+        match self {
+            FaultRecord::Kill { step, .. } | FaultRecord::Partition { step, .. } => *step,
+        }
+    }
+
+    /// Canonical one-line JSON rendering (stable field order, no
+    /// whitespace variation — the unit of the byte-identical trace).
+    pub fn json(&self) -> String {
+        match self {
+            FaultRecord::Kill { step, block, restored_version, lost_updates } => format!(
+                "{{\"step\":{step},\"event\":\"kill\",\"block\":\"{},{}\",\
+                 \"restored_version\":{restored_version},\"lost_updates\":{lost_updates}}}",
+                block.i, block.j
+            ),
+            FaultRecord::Partition { step, a, b, duration_us } => format!(
+                "{{\"step\":{step},\"event\":\"partition\",\"a\":\"{},{}\",\"b\":\"{},{}\",\
+                 \"duration_us\":{duration_us}}}",
+                a.i, a.j, b.i, b.j
+            ),
+        }
+    }
+}
+
+/// Render an executed trace as JSON lines — byte-stable for a fixed
+/// fault-plan seed under the round-barrier driver (pinned by
+/// `tests/chaos.rs`).
+pub fn render_trace(trace: &[FaultRecord]) -> String {
+    let mut s = String::new();
+    for r in trace {
+        s.push_str(&r.json());
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(40, 40, 4, 4, 3)
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_sorted() {
+        let cfg = FaultConfig { kills: 5, partitions: 3, seed: 9, ..Default::default() };
+        let a = FaultPlan::generate(spec(), &cfg);
+        let b = FaultPlan::generate(spec(), &cfg);
+        assert_eq!(a, b, "same seed, same plan");
+        assert_eq!(a.len(), 8);
+        assert!(a.has_partitions());
+        assert!(a.events().windows(2).all(|w| w[0].step() <= w[1].step()));
+        let c = FaultPlan::generate(spec(), &FaultConfig { seed: 10, ..cfg });
+        assert_ne!(a, c, "different seed, different plan");
+    }
+
+    #[test]
+    fn generated_events_stay_in_bounds() {
+        let cfg = FaultConfig {
+            kills: 20,
+            partitions: 20,
+            from_step: 10,
+            until_step: 50,
+            ..Default::default()
+        };
+        let plan = FaultPlan::generate(spec(), &cfg);
+        for e in plan.events() {
+            assert!((10..50).contains(&e.step()), "{e:?}");
+            match *e {
+                FaultEvent::Kill { block, .. } => {
+                    assert!(block.i < 4 && block.j < 4);
+                }
+                FaultEvent::Partition { a, b, .. } => {
+                    // A real grid link: distance-1 neighbours.
+                    let di = a.i.abs_diff(b.i);
+                    let dj = a.j.abs_diff(b.j);
+                    assert_eq!(di + dj, 1, "{a} - {b} is not a grid edge");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn builder_sorts_by_step() {
+        let plan = FaultPlan::new()
+            .kill(30, BlockId::new(0, 0))
+            .partition(10, BlockId::new(0, 0), BlockId::new(0, 1), Duration::from_micros(500))
+            .kill(20, BlockId::new(1, 1));
+        let steps: Vec<u64> = plan.events().iter().map(FaultEvent::step).collect();
+        assert_eq!(steps, vec![10, 20, 30]);
+        assert_eq!(plan.queue().len(), 3);
+        assert!(!FaultPlan::new().has_partitions());
+    }
+
+    #[test]
+    fn trace_renders_stable_json_lines() {
+        let trace = [
+            FaultRecord::Kill {
+                step: 12,
+                block: BlockId::new(2, 3),
+                restored_version: 8,
+                lost_updates: 3,
+            },
+            FaultRecord::Partition {
+                step: 40,
+                a: BlockId::new(0, 1),
+                b: BlockId::new(1, 1),
+                duration_us: 1500,
+            },
+        ];
+        let s = render_trace(&trace);
+        assert_eq!(
+            s,
+            "{\"step\":12,\"event\":\"kill\",\"block\":\"2,3\",\
+             \"restored_version\":8,\"lost_updates\":3}\n\
+             {\"step\":40,\"event\":\"partition\",\"a\":\"0,1\",\"b\":\"1,1\",\
+             \"duration_us\":1500}\n"
+        );
+        assert_eq!(s, render_trace(&trace), "rendering is pure");
+    }
+
+    #[test]
+    fn config_default_checkpoints_on() {
+        let d = FaultConfig::default();
+        assert!(d.checkpoint_every > 0);
+        assert_eq!(d.partitions, 0);
+    }
+}

@@ -29,12 +29,14 @@
 //! only scalars and final factors travel to the driver.
 
 pub mod codec;
+pub mod fault;
 
 mod channel;
 mod multiplex;
 mod sim;
 
 pub use channel::ChannelTransport;
+pub use fault::{FaultConfig, FaultEvent, FaultPlan, FaultRecord, LinkFault};
 pub use multiplex::MultiplexTransport;
 pub use sim::{SimConfig, SimTransport, WireSnapshot, WireStats};
 
@@ -43,6 +45,7 @@ use std::sync::Arc;
 
 use crate::data::DenseMatrix;
 use crate::engine::{Engine, StructureParams};
+use crate::gossip::CheckpointStore;
 use crate::grid::{BlockId, GridSpec, Structure};
 use crate::model::FactorState;
 use crate::{Error, Result};
@@ -69,6 +72,12 @@ pub enum AgentMsg {
     PutAck { from: BlockId },
     /// Driver → agent: report this block's cost term.
     GetCost { lambda: f32 },
+    /// Driver → agent: simulate a process crash. All live state (factors,
+    /// protocol phase, engine scratch) is lost; the agent restarts from
+    /// its last checkpoint (or cold, with zeroed factors) and replies
+    /// [`DriverMsg::Restarted`]. Supervisors must only crash a block
+    /// with no structure in flight.
+    Crash,
     /// Driver → agent: stop and hand the factors back.
     Shutdown,
 }
@@ -83,6 +92,7 @@ impl AgentMsg {
             AgentMsg::PutFactors { .. } => "PutFactors",
             AgentMsg::PutAck { .. } => "PutAck",
             AgentMsg::GetCost { .. } => "GetCost",
+            AgentMsg::Crash => "Crash",
             AgentMsg::Shutdown => "Shutdown",
         }
     }
@@ -95,6 +105,9 @@ pub enum DriverMsg {
     Done { anchor: BlockId, token: u64, result: Result<()> },
     /// One block's cost term (reply to [`AgentMsg::GetCost`]).
     Cost { from: BlockId, cost: Result<f64> },
+    /// A crashed block restarted from checkpoint `version`, rolling
+    /// back `lost` factor mutations (reply to [`AgentMsg::Crash`]).
+    Restarted { from: BlockId, version: u64, lost: u64 },
     /// One block's final factors (reply to [`AgentMsg::Shutdown`]).
     Retired { from: BlockId, u: DenseMatrix, w: DenseMatrix },
 }
@@ -105,6 +118,7 @@ impl DriverMsg {
         match self {
             DriverMsg::Done { .. } => "Done",
             DriverMsg::Cost { .. } => "Cost",
+            DriverMsg::Restarted { .. } => "Restarted",
             DriverMsg::Retired { .. } => "Retired",
         }
     }
@@ -230,6 +244,16 @@ pub trait Transport: Send {
         None
     }
 
+    /// Inject a link-layer fault (a timed partition). Only transports
+    /// that simulate links can honor this; the rest refuse.
+    fn inject_fault(&self, fault: LinkFault) -> Result<()> {
+        Err(Error::Unsupported(format!(
+            "{} transport has no simulated links to fault (got {fault:?}); \
+             use a sim transport",
+            self.name()
+        )))
+    }
+
     /// Reap worker threads. Call only after every agent retired.
     fn join(self: Box<Self>);
 }
@@ -312,26 +336,40 @@ impl TransportKind {
 
 /// Spawn the configured transport stack with one agent per block of
 /// `spec`, each owning its slice of `state`. `engine` must already be
-/// prepared.
+/// prepared. When `checkpoints` is set, every agent snapshots its
+/// factors into the store (once at spawn, then at the store's cadence)
+/// so the supervisor can crash-and-restore it.
 pub fn spawn(
     net: &NetConfig,
     spec: GridSpec,
     engine: Arc<dyn Engine>,
     state: FactorState,
+    checkpoints: Option<Arc<CheckpointStore>>,
 ) -> Box<dyn Transport> {
     match net.kind {
-        TransportKind::Channel => Box::new(ChannelTransport::spawn(spec, engine, state)),
-        TransportKind::Multiplex => {
-            Box::new(MultiplexTransport::spawn(spec, engine, state, net.workers))
+        TransportKind::Channel => {
+            Box::new(ChannelTransport::spawn(spec, engine, state, checkpoints))
         }
-        TransportKind::Sim => {
-            Box::new(SimTransport::spawn_over_channel(spec, engine, state, net.sim))
-        }
+        TransportKind::Multiplex => Box::new(MultiplexTransport::spawn(
+            spec,
+            engine,
+            state,
+            net.workers,
+            checkpoints,
+        )),
+        TransportKind::Sim => Box::new(SimTransport::spawn_over_channel(
+            spec,
+            engine,
+            state,
+            checkpoints,
+            net.sim,
+        )),
         TransportKind::SimMultiplex => Box::new(SimTransport::spawn_over_multiplex(
             spec,
             engine,
             state,
             net.workers,
+            checkpoints,
             net.sim,
         )),
     }

@@ -19,7 +19,7 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 
 use crate::engine::Engine;
-use crate::gossip::{AgentStatus, BlockAgent};
+use crate::gossip::{AgentStatus, BlockAgent, CheckpointStore};
 use crate::grid::{BlockId, GridSpec};
 use crate::model::FactorState;
 use crate::{Error, Result};
@@ -69,14 +69,16 @@ impl MultiplexTransport {
     }
 
     /// Spawn the agents of `spec` over `workers` threads (0 = auto,
-    /// clamped to the block count). `engine` must already be prepared.
+    /// clamped to the block count). `engine` must already be prepared;
+    /// `checkpoints`, when set, makes every agent crash-recoverable.
     pub fn spawn(
         spec: GridSpec,
         engine: Arc<dyn Engine>,
         state: FactorState,
         workers: usize,
+        checkpoints: Option<Arc<CheckpointStore>>,
     ) -> Self {
-        Self::spawn_tapped(spec, engine, state, workers, None)
+        Self::spawn_tapped(spec, engine, state, workers, checkpoints, None)
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -86,6 +88,7 @@ impl MultiplexTransport {
         engine: Arc<dyn Engine>,
         mut state: FactorState,
         workers: usize,
+        checkpoints: Option<Arc<CheckpointStore>>,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
         let n = spec.num_blocks();
@@ -109,7 +112,11 @@ impl MultiplexTransport {
         for id in spec.blocks() {
             let k = id.index(spec.q);
             let (u, wm) = state.take_block(id);
-            shards[k % w].insert(k, BlockAgent::new(id, u, wm, engine.clone()));
+            let mut agent = BlockAgent::new(id, u, wm, engine.clone());
+            if let Some(store) = &checkpoints {
+                agent = agent.with_checkpoints(store.clone());
+            }
+            shards[k % w].insert(k, agent);
         }
 
         let q = spec.q;

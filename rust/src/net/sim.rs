@@ -24,6 +24,16 @@
 //! `max_retries` times, after which it is delivered regardless — the
 //! model is a lossy wire under a reliable link layer, not message
 //! erasure (which would wedge the three-party update protocol).
+//!
+//! **Link faults.** [`Transport::inject_fault`] feeds
+//! [`LinkFault::Partition`] into the link thread: a partitioned grid
+//! edge holds every delivery attempt (in both directions) until the
+//! partition's wall-clock heal instant, counted in
+//! [`WireSnapshot::partitioned`]. Held frames are delayed, never
+//! erased, and retry attempts while severed do not count against
+//! `max_retries` nor appear in `wire_bytes` — a severed wire transmits
+//! nothing. Partitions heal by expiry only, so the executed fault
+//! trace is a complete record of the run's link history.
 
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,9 +47,11 @@ use crate::model::FactorState;
 use crate::util::Rng;
 use crate::Result;
 
+use crate::gossip::CheckpointStore;
+
 use super::{
-    codec, AgentMsg, ChannelTransport, DriverMsg, LinkFrame, MultiplexTransport, PeerSender,
-    Transport,
+    codec, AgentMsg, ChannelTransport, DriverMsg, LinkFault, LinkFrame, MultiplexTransport,
+    PeerSender, Transport,
 };
 
 /// Link conditions of a simulated hop.
@@ -88,6 +100,7 @@ pub struct WireStats {
     payload_bytes: AtomicU64,
     wire_bytes: AtomicU64,
     drops: AtomicU64,
+    partitioned: AtomicU64,
 }
 
 /// A point-in-time copy of [`WireStats`].
@@ -101,6 +114,9 @@ pub struct WireSnapshot {
     pub wire_bytes: u64,
     /// Delivery attempts dropped (each one retried).
     pub drops: u64,
+    /// Delivery attempts held by a link partition (each one retried at
+    /// the heal instant).
+    pub partitioned: u64,
 }
 
 impl WireStats {
@@ -110,6 +126,7 @@ impl WireStats {
             payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
             wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
             drops: self.drops.load(Ordering::Relaxed),
+            partitioned: self.partitioned.load(Ordering::Relaxed),
         }
     }
 }
@@ -150,6 +167,7 @@ pub struct SimTransport {
     inner: Box<dyn Transport>,
     link: Option<thread::JoinHandle<()>>,
     stats: Arc<WireStats>,
+    faults: mpsc::Sender<LinkFault>,
 }
 
 impl SimTransport {
@@ -158,10 +176,17 @@ impl SimTransport {
         spec: GridSpec,
         engine: Arc<dyn Engine>,
         state: FactorState,
+        checkpoints: Option<Arc<CheckpointStore>>,
         cfg: SimConfig,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
-        let inner = Box::new(ChannelTransport::spawn_tapped(spec, engine, state, Some(tx)));
+        let inner = Box::new(ChannelTransport::spawn_tapped(
+            spec,
+            engine,
+            state,
+            checkpoints,
+            Some(tx),
+        ));
         Self::with_link(inner, rx, cfg, spec.q)
     }
 
@@ -172,6 +197,7 @@ impl SimTransport {
         engine: Arc<dyn Engine>,
         state: FactorState,
         workers: usize,
+        checkpoints: Option<Arc<CheckpointStore>>,
         cfg: SimConfig,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
@@ -180,6 +206,7 @@ impl SimTransport {
             engine,
             state,
             workers,
+            checkpoints,
             Some(tx),
         ));
         Self::with_link(inner, rx, cfg, spec.q)
@@ -194,11 +221,12 @@ impl SimTransport {
         let stats = Arc::new(WireStats::default());
         let inject = inner.injector();
         let st = stats.clone();
+        let (fault_tx, fault_rx) = mpsc::channel();
         let link = thread::Builder::new()
             .name("gridmc-simlink".into())
-            .spawn(move || link_loop(rx, inject, cfg, q, st))
+            .spawn(move || link_loop(rx, fault_rx, inject, cfg, q, st))
             .expect("spawn sim link thread");
-        Self { inner, link: Some(link), stats }
+        Self { inner, link: Some(link), stats, faults: fault_tx }
     }
 
     /// Wire accounting so far.
@@ -229,6 +257,12 @@ impl Transport for SimTransport {
         Some(self.stats.snapshot())
     }
 
+    fn inject_fault(&self, fault: LinkFault) -> Result<()> {
+        self.faults
+            .send(fault)
+            .map_err(|_| crate::Error::Gossip("sim link thread gone; fault dropped".into()))
+    }
+
     fn join(self: Box<Self>) {
         let Self { inner, link, .. } = *self;
         // Agent workers first: joining them drops the tap senders, which
@@ -242,6 +276,16 @@ impl Transport for SimTransport {
 
 fn edge_key(q: usize, from: BlockId, to: BlockId) -> u64 {
     ((from.index(q) as u64) << 32) | to.index(q) as u64
+}
+
+/// Orientation-free edge key: partitions sever both directions of a
+/// grid link at once.
+fn undirected_key(q: usize, a: BlockId, b: BlockId) -> u64 {
+    if a.index(q) <= b.index(q) {
+        edge_key(q, a, b)
+    } else {
+        edge_key(q, b, a)
+    }
 }
 
 fn edge_rng<'a>(
@@ -281,6 +325,7 @@ fn admit(
 
 fn link_loop(
     rx: mpsc::Receiver<LinkFrame>,
+    faults: mpsc::Receiver<LinkFault>,
     inject: Arc<dyn PeerSender>,
     cfg: SimConfig,
     q: usize,
@@ -288,13 +333,43 @@ fn link_loop(
 ) {
     let mut heap: BinaryHeap<Pending> = BinaryHeap::new();
     let mut rngs: HashMap<u64, Rng> = HashMap::new();
+    // Severed links: undirected edge key → heal instant. Entries expire
+    // lazily at delivery attempts.
+    let mut partitions: HashMap<u64, Instant> = HashMap::new();
     let mut seq = 0u64;
     let mut open = true;
     while open || !heap.is_empty() {
-        // Deliver (or drop-and-reschedule) everything due.
+        // Apply injected faults first: a partition sent before a frame
+        // (supervisor ordering) is always registered before that frame
+        // can become deliverable.
+        while let Ok(f) = faults.try_recv() {
+            match f {
+                LinkFault::Partition { a, b, duration } => {
+                    partitions.insert(undirected_key(q, a, b), Instant::now() + duration);
+                }
+            }
+        }
+        // Deliver (or drop/hold-and-reschedule) everything due.
         let now = Instant::now();
         while heap.peek().is_some_and(|p| p.due <= now) {
             let p = heap.pop().expect("peeked");
+            let ukey = undirected_key(q, p.frame.from, p.frame.to);
+            if let Some(&until) = partitions.get(&ukey) {
+                if Instant::now() < until {
+                    // Severed wire: nothing transmits. Hold the frame
+                    // until the heal instant; the attempt counter is
+                    // untouched so partitions can never force-deliver.
+                    stats.partitioned.fetch_add(1, Ordering::Relaxed);
+                    heap.push(Pending {
+                        due: until,
+                        seq: p.seq,
+                        frame: p.frame,
+                        attempt: p.attempt,
+                    });
+                    continue;
+                }
+                partitions.remove(&ukey);
+            }
             stats
                 .wire_bytes
                 .fetch_add(p.frame.bytes.len() as u64, Ordering::Relaxed);
@@ -395,10 +470,23 @@ mod tests {
         s.payload_bytes.fetch_add(100, Ordering::Relaxed);
         s.wire_bytes.fetch_add(140, Ordering::Relaxed);
         s.drops.fetch_add(2, Ordering::Relaxed);
+        s.partitioned.fetch_add(5, Ordering::Relaxed);
         let snap = s.snapshot();
         assert_eq!(snap.messages, 3);
         assert_eq!(snap.payload_bytes, 100);
         assert_eq!(snap.wire_bytes, 140);
         assert_eq!(snap.drops, 2);
+        assert_eq!(snap.partitioned, 5);
+    }
+
+    #[test]
+    fn undirected_key_ignores_direction() {
+        let (a, b) = (BlockId::new(0, 1), BlockId::new(1, 1));
+        assert_eq!(undirected_key(4, a, b), undirected_key(4, b, a));
+        assert_ne!(
+            undirected_key(4, a, b),
+            undirected_key(4, a, BlockId::new(0, 2)),
+            "distinct links get distinct keys"
+        );
     }
 }

@@ -97,11 +97,42 @@ pub struct SolverReport {
     pub wall: std::time::Duration,
     /// Backend that ran the updates.
     pub engine: String,
+    /// Executed fault actions (crash-restores, link partitions), in
+    /// firing order — empty for fault-free runs and non-gossip drivers.
+    pub faults: Vec<crate::net::FaultRecord>,
 }
 
 impl SolverReport {
     pub fn updates_per_sec(&self) -> f64 {
         self.iters as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Factor mutations rolled back by crashes over the whole run (the
+    /// recovery-overhead numerator in `BENCH_churn.json`).
+    pub fn lost_updates(&self) -> u64 {
+        self.faults
+            .iter()
+            .map(|f| match f {
+                crate::net::FaultRecord::Kill { lost_updates, .. } => *lost_updates,
+                crate::net::FaultRecord::Partition { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Executed crash count.
+    pub fn kill_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::Kill { .. }))
+            .count()
+    }
+
+    /// Executed partition count.
+    pub fn partition_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::Partition { .. }))
+            .count()
     }
 }
 

@@ -133,6 +133,7 @@ impl SequentialDriver {
             converged,
             wall: timer.elapsed(),
             engine: engine.name().to_string(),
+            faults: Vec::new(),
         })
     }
 }

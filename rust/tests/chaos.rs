@@ -1,0 +1,314 @@
+//! Chaos/property harness for the fault-tolerance subsystem.
+//!
+//! The paper's "no central server" claim is only credible if blocks
+//! can crash, restore from their checkpoints, and rejoin mid-training
+//! without a coordinator — and if severed links merely delay gossip.
+//! These tests drive seeded [`FaultPlan`]s through both gossip drivers
+//! over `SimTransport` and pin:
+//!
+//! * the acceptance scenario — a seeded plan killing ≥ 10% of agents
+//!   mid-training completes without driver abort and lands within 5%
+//!   of the fault-free run's test RMSE;
+//! * byte-identical executed-event traces (the `events` array of
+//!   `BENCH_churn.json`) and bit-identical factors across reruns of
+//!   the same seeds under the round-barrier driver;
+//! * a property sweep over ≥ 32 distinct fault plans (seed base
+//!   `GRIDMC_CHAOS_SEED`, default 1147 — CI pins it) on both drivers;
+//! * no leaked agent threads across churned runs (every worker is
+//!   reaped by `shutdown`, crashes included);
+//! * cold rejoin (checkpointing off) still converges.
+//!
+//! Tests serialize on a shared mutex: thread-count accounting and the
+//! 32-plan sweep would otherwise interfere with each other.
+
+use std::sync::Mutex;
+
+use gridmc::data::{CooMatrix, SyntheticConfig};
+use gridmc::engine::NativeEngine;
+use gridmc::gossip::{AsyncDriver, ParallelDriver};
+use gridmc::grid::GridSpec;
+use gridmc::model::FactorState;
+use gridmc::net::{fault::render_trace, FaultConfig, FaultEvent, FaultPlan, NetConfig, SimConfig};
+use gridmc::solver::{SolverConfig, SolverReport, StepSchedule};
+
+static SEQ: Mutex<()> = Mutex::new(());
+
+fn serialize() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the file.
+    SEQ.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Base seed of the property sweep; CI pins it for reproducible runs.
+fn chaos_seed() -> u64 {
+    std::env::var("GRIDMC_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1147)
+}
+
+fn problem() -> (GridSpec, CooMatrix, CooMatrix) {
+    let spec = GridSpec::new(40, 40, 4, 4, 3);
+    let d = SyntheticConfig {
+        m: 40,
+        n: 40,
+        rank: 3,
+        train_fraction: 0.5,
+        test_fraction: 0.2,
+        noise_std: 0.0,
+        seed: 21,
+    }
+    .generate();
+    (spec, d.data.train, d.data.test)
+}
+
+fn cfg(iters: u64) -> SolverConfig {
+    SolverConfig {
+        max_iters: iters,
+        eval_every: (iters / 2).max(1),
+        rho: 10.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 2e-2, b: 1e-5 },
+        abs_tol: 0.0,
+        rel_tol: 0.0,
+        patience: u32::MAX,
+        seed: 42,
+        normalize: true,
+    }
+}
+
+fn run_parallel(
+    spec: GridSpec,
+    train: &CooMatrix,
+    iters: u64,
+    plan: FaultPlan,
+    checkpoint_every: u64,
+) -> (SolverReport, FactorState) {
+    ParallelDriver::new(spec, cfg(iters), 4)
+        .with_net(NetConfig::sim(SimConfig::zero_latency(5)))
+        .with_faults(plan)
+        .with_checkpoints(checkpoint_every)
+        .run(Box::new(NativeEngine::new()), train)
+        .expect("churned run must not abort the driver")
+}
+
+fn run_async(
+    spec: GridSpec,
+    train: &CooMatrix,
+    iters: u64,
+    plan: FaultPlan,
+    checkpoint_every: u64,
+) -> (SolverReport, FactorState) {
+    AsyncDriver::new(spec, cfg(iters), 5)
+        .with_net(NetConfig::sim_multiplex(3, SimConfig::zero_latency(5)))
+        .with_faults(plan)
+        .with_checkpoints(checkpoint_every)
+        .run(Box::new(NativeEngine::new()), train)
+        .expect("churned async run must not abort the driver")
+}
+
+/// The acceptance scenario: a seeded `SimTransport` plan crashing
+/// ≥ 10% of the agents mid-training recovers from checkpoints without
+/// a driver abort and lands within 5% of the fault-free RMSE.
+#[test]
+fn killing_ten_percent_mid_training_recovers_within_5pct() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 4000;
+    // 3 kill draws on the 4x4 grid from a fixed seed, all in the first
+    // half of the budget so recovery has room to re-converge. The gate
+    // below counts *distinct* victims (draws are with replacement), so
+    // the >= 10%-of-agents criterion cannot go vacuous on a collision.
+    let fcfg = FaultConfig {
+        kills: 3,
+        partitions: 0,
+        from_step: 400,
+        until_step: 2000,
+        checkpoint_every: 4,
+        ..Default::default()
+    };
+    let plan = FaultPlan::generate(spec, &fcfg);
+    let distinct: std::collections::HashSet<_> = plan
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            FaultEvent::Kill { block, .. } => Some(*block),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        distinct.len() * 10 >= spec.num_blocks(),
+        "plan must crash >= 10% of distinct agents (got {} of {})",
+        distinct.len(),
+        spec.num_blocks()
+    );
+
+    let (clean_rep, clean_state) =
+        run_parallel(spec, &train, iters, FaultPlan::new(), 0);
+    let (churn_rep, churn_state) =
+        run_parallel(spec, &train, iters, plan, fcfg.checkpoint_every);
+
+    assert_eq!(churn_rep.kill_count(), 3, "{:?}", churn_rep.faults);
+    assert_eq!(churn_rep.iters, clean_rep.iters, "churn must not eat iterations");
+    let clean_rmse = clean_state.rmse(&test);
+    let churn_rmse = churn_state.rmse(&test);
+    assert!(clean_rmse.is_finite() && churn_rmse.is_finite());
+    assert!(
+        churn_rmse <= clean_rmse * 1.05,
+        "churned RMSE {churn_rmse} vs fault-free {clean_rmse} (> 5% off)"
+    );
+    assert!(
+        churn_rep.curve.orders_of_reduction() > 2.0,
+        "churned run still converges: {}",
+        churn_rep.curve.orders_of_reduction()
+    );
+}
+
+/// Identical fault-plan seeds replay the executed-event trace — the
+/// `events` array of `BENCH_churn.json` — byte-for-byte, and the
+/// trained factors bit-for-bit (round-barrier driver).
+#[test]
+fn same_seeds_reproduce_byte_identical_traces() {
+    let _g = serialize();
+    let (spec, train, _) = problem();
+    let fcfg = FaultConfig {
+        kills: 3,
+        partitions: 1,
+        from_step: 100,
+        until_step: 900,
+        partition_duration_us: 600,
+        checkpoint_every: 4,
+        seed: 0xC0A7,
+    };
+    let run = || {
+        run_parallel(spec, &train, 1200, FaultPlan::generate(spec, &fcfg), 4)
+    };
+    let (ra, sa) = run();
+    let (rb, sb) = run();
+    let trace_a = render_trace(&ra.faults);
+    let trace_b = render_trace(&rb.faults);
+    assert!(!trace_a.is_empty());
+    assert_eq!(trace_a, trace_b, "event traces must replay byte-for-byte");
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    for id in sa.spec().blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
+        assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
+    }
+}
+
+/// Property sweep: ≥ 32 seeded fault plans — varying kill counts,
+/// cadences, partition mix, and driver — all complete without abort,
+/// execute every scheduled kill, and stay within a generous tolerance
+/// of their fault-free twin.
+#[test]
+fn thirty_two_fault_plans_all_recover() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 1000;
+    let (_, clean_par) = run_parallel(spec, &train, iters, FaultPlan::new(), 0);
+    let (_, clean_async) = run_async(spec, &train, iters, FaultPlan::new(), 0);
+    let clean_par_rmse = clean_par.rmse(&test);
+    let clean_async_rmse = clean_async.rmse(&test);
+
+    let base = chaos_seed();
+    for i in 0..32u64 {
+        let fcfg = FaultConfig {
+            kills: 1 + (i as usize % 3),
+            partitions: usize::from(i % 4 == 1),
+            from_step: 50,
+            until_step: 600,
+            partition_duration_us: 300,
+            checkpoint_every: 1 + (i % 8),
+            seed: base.wrapping_add(i * 7919),
+        };
+        let plan = FaultPlan::generate(spec, &fcfg);
+        let kills = fcfg.kills;
+        let (report, state, clean_rmse) = if i % 2 == 0 {
+            let (r, s) = run_parallel(spec, &train, iters, plan, fcfg.checkpoint_every);
+            (r, s, clean_par_rmse)
+        } else {
+            let (r, s) = run_async(spec, &train, iters, plan, fcfg.checkpoint_every);
+            (r, s, clean_async_rmse)
+        };
+        assert_eq!(report.kill_count(), kills, "plan {i}: {:?}", report.faults);
+        assert!(report.final_cost.is_finite(), "plan {i}");
+        assert!(
+            report.final_cost < report.curve.initial().unwrap(),
+            "plan {i}: cost must still decrease under churn"
+        );
+        let rmse = state.rmse(&test);
+        assert!(
+            rmse <= clean_rmse * 1.25,
+            "plan {i}: churned RMSE {rmse} vs clean {clean_rmse}"
+        );
+    }
+}
+
+/// Linux-only: churned runs leak no agent/worker/link threads — every
+/// thread is reaped by shutdown, crash-restores included.
+#[test]
+fn no_leaked_agent_threads_across_churned_runs() {
+    let _g = serialize();
+    fn thread_count() -> Option<u64> {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        status
+            .lines()
+            .find(|l| l.starts_with("Threads:"))?
+            .split_whitespace()
+            .nth(1)?
+            .parse()
+            .ok()
+    }
+    let Some(before) = thread_count() else {
+        eprintln!("no /proc/self/status; skipping thread-leak check");
+        return;
+    };
+    let (spec, train, _) = problem();
+    let fcfg = FaultConfig {
+        kills: 2,
+        from_step: 50,
+        until_step: 300,
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+    for k in 0..6u64 {
+        let plan =
+            FaultPlan::generate(spec, &FaultConfig { seed: 900 + k, ..fcfg });
+        if k % 2 == 0 {
+            run_parallel(spec, &train, 400, plan, 2);
+        } else {
+            run_async(spec, &train, 400, plan, 2);
+        }
+    }
+    let after = thread_count().expect("still on linux");
+    assert!(
+        after <= before + 2,
+        "thread count grew {before} -> {after}: agent threads leaked"
+    );
+}
+
+/// Checkpointing off: a crash rejoins cold (zeroed factors) and the
+/// gossip fabric still re-seeds the block and converges — slower, but
+/// alive. Documents the `checkpoint_every = 0` contract.
+#[test]
+fn cold_rejoin_without_checkpoints_still_converges() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let plan = FaultPlan::generate(
+        spec,
+        &FaultConfig {
+            kills: 2,
+            from_step: 200,
+            until_step: 800,
+            ..Default::default()
+        },
+    );
+    let (report, state) = run_parallel(spec, &train, 3000, plan, 0);
+    assert_eq!(report.kill_count(), 2);
+    assert!(
+        report.lost_updates() > 0,
+        "cold rejoin rolls back everything: {:?}",
+        report.faults
+    );
+    assert!(report.final_cost < report.curve.initial().unwrap());
+    assert!(state.rmse(&test).is_finite());
+}

@@ -13,10 +13,10 @@ use std::sync::Arc;
 
 use gridmc::data::{CooMatrix, SyntheticConfig};
 use gridmc::engine::{Engine, NativeEngine, StructureParams};
-use gridmc::gossip::{GossipNetwork, ParallelDriver, ScheduleBuilder};
-use gridmc::grid::{BlockPartition, GridSpec, NormalizationCoeffs};
+use gridmc::gossip::{CheckpointStore, GossipNetwork, ParallelDriver, ScheduleBuilder};
+use gridmc::grid::{BlockId, BlockPartition, GridSpec, NormalizationCoeffs};
 use gridmc::model::FactorState;
-use gridmc::net::{NetConfig, SimConfig};
+use gridmc::net::{FaultPlan, NetConfig, SimConfig};
 use gridmc::solver::{SolverConfig, SolverReport, StepSchedule};
 
 fn problem() -> (GridSpec, CooMatrix, CooMatrix) {
@@ -209,4 +209,84 @@ fn sim_zero_latency_accounts_without_drops() {
     assert!(state.rmse(&test).is_finite());
     // Accounting is asserted through the driver-free path above; here we
     // only need the run to hold together end to end.
+}
+
+/// A zero-fault `FaultPlan` plus active checkpointing is pure
+/// observation: the trained state over `SimTransport` stays
+/// bit-identical to the bare channel and multiplex transports.
+#[test]
+fn zero_fault_plan_over_sim_stays_bit_identical() {
+    let (spec, train, _) = problem();
+    let iters = 800;
+    let (r_chan, s_chan) = run_parallel(spec, &train, iters, NetConfig::channel());
+    let (r_mux, s_mux) = run_parallel(spec, &train, iters, NetConfig::multiplex(3));
+    let (r_sim, s_sim) = ParallelDriver::new(spec, cfg(iters), 4)
+        .with_net(NetConfig::sim(SimConfig::zero_latency(9)))
+        .with_faults(FaultPlan::new())
+        .with_checkpoints(2)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    assert!(r_sim.faults.is_empty(), "a zero-fault plan executes nothing");
+    assert_eq!(r_chan.final_cost.to_bits(), r_sim.final_cost.to_bits());
+    assert_eq!(r_mux.final_cost.to_bits(), r_sim.final_cost.to_bits());
+    assert_states_bit_identical(&s_chan, &s_sim, "channel vs zero-fault sim");
+    assert_states_bit_identical(&s_mux, &s_sim, "multiplex vs zero-fault sim");
+}
+
+/// Checkpoint-then-immediate-restore is a no-op on trained factors:
+/// with cadence 1 every mutation is snapshotted, so a crash loses
+/// nothing and the run finishes bit-identical to an uncrashed twin.
+#[test]
+fn checkpoint_then_immediate_restore_is_noop() {
+    let (spec, train, _) = problem();
+    let partition = BlockPartition::new(spec, &train).unwrap();
+    let mut engine = NativeEngine::new();
+    engine.prepare(&partition).unwrap();
+    let engine: Arc<dyn Engine> = Arc::new(engine);
+    let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+    let victim = BlockId::new(1, 2);
+
+    let run = |crash: bool| {
+        let state = FactorState::init_random(spec, 77);
+        let store = CheckpointStore::in_memory(spec, 1);
+        let mut network = GossipNetwork::spawn_full(
+            &NetConfig::sim(SimConfig::zero_latency(4)),
+            spec,
+            engine.clone(),
+            state,
+            Some(store),
+        );
+        let mut schedule = ScheduleBuilder::new(spec, 13);
+        let mut step = 0u64;
+        for epoch in 0..4 {
+            for round in schedule.epoch() {
+                let params: Vec<StructureParams> = round
+                    .iter()
+                    .map(|s| {
+                        StructureParams::build(10.0, 1e-9, 1e-2, &coeffs, &s.roles())
+                    })
+                    .collect();
+                network.execute_batch(&round, &params).unwrap();
+                step += round.len() as u64;
+            }
+            if crash && epoch == 1 {
+                network.crash(step, victim).unwrap();
+            }
+        }
+        let trace: Vec<_> = network.fault_trace().to_vec();
+        (network.shutdown().unwrap(), trace)
+    };
+
+    let (clean, clean_trace) = run(false);
+    let (crashed, crash_trace) = run(true);
+    assert!(clean_trace.is_empty());
+    assert_eq!(crash_trace.len(), 1);
+    match crash_trace[0] {
+        gridmc::net::FaultRecord::Kill { block, lost_updates, .. } => {
+            assert_eq!(block, victim);
+            assert_eq!(lost_updates, 0, "cadence 1: nothing to lose");
+        }
+        other => panic!("unexpected record {other:?}"),
+    }
+    assert_states_bit_identical(&clean, &crashed, "crash with cadence-1 checkpointing");
 }

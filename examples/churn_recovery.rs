@@ -10,8 +10,9 @@
 //!   seeded `FaultPlan` (4 crash-restores ≈ 11% of agents, plus one
 //!   partition) over a sim link; fully deterministic, so the printed
 //!   event trace replays byte-for-byte;
-//! * **churned / async** — the barrier-free driver defers each kill
-//!   until the victim's in-flight structure completes.
+//! * **churned / async** — the barrier-free driver: a kill landing on
+//!   a busy block aborts its in-flight structure (all three blocks
+//!   roll back to their pre-structure factors) and redispatches it.
 //!
 //! Run: `cargo run --release --example churn_recovery`
 
@@ -89,7 +90,7 @@ fn main() -> gridmc::Result<()> {
     let trace = render_trace(&rep.faults);
     row("churned/parallel", &rep, churned_rmse);
 
-    // Churned, barrier-free: kills defer until their block frees up.
+    // Churned, barrier-free: kills abort in-flight structures.
     let async_churned = AsyncDriver::new(spec, cfg.clone(), 8)
         .with_net(NetConfig::sim_multiplex(4, SimConfig::zero_latency(61)))
         .with_faults(plan)

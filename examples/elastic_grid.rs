@@ -1,0 +1,122 @@
+//! The elastic grid, live: durable checkpoints on disk, kills that
+//! land *mid-structure* (the victim's in-flight structure is aborted
+//! and redispatched), and a whole grid column joining a running
+//! system — warm-started from snapshots a previous run left behind.
+//!
+//! Three acts on the same 6×6 problem:
+//!
+//! 1. **Seed the sink** — a full-grid run persists per-block snapshots
+//!    into a `DiskSink` directory (checksummed, atomically renamed,
+//!    newest-intact-version recovery).
+//! 2. **Cold growth** — the trailing column starts dormant and joins
+//!    at step 2000 with nothing on disk: fresh random factors, taught
+//!    from scratch by its neighbours' gossip.
+//! 3. **Warm growth + mid-structure churn** — the same join restores
+//!    the column from act 1's snapshots, while a seeded fault plan
+//!    crashes agents mid-structure; the run recovers from the same
+//!    disk sink and stays within a few percent of the reference.
+//!
+//! Run: `cargo run --release --example elastic_grid`
+
+use gridmc::data::SyntheticConfig;
+use gridmc::engine::NativeEngine;
+use gridmc::gossip::{GrowthPlan, ParallelDriver};
+use gridmc::grid::{BlockId, GridSpec};
+use gridmc::metrics::TablePrinter;
+use gridmc::net::{fault::render_trace, FaultPlan};
+use gridmc::solver::{SolverConfig, StepSchedule};
+
+fn main() -> gridmc::Result<()> {
+    gridmc::util::logging::init("warn");
+
+    let spec = GridSpec::new(240, 240, 6, 6, 4);
+    let data = SyntheticConfig {
+        m: 240,
+        n: 240,
+        rank: 4,
+        train_fraction: 0.3,
+        test_fraction: 0.1,
+        noise_std: 0.0,
+        seed: 61,
+    }
+    .generate();
+
+    let cfg = SolverConfig {
+        rho: 10.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 5e-3, b: 1e-6 },
+        max_iters: 6000,
+        eval_every: 1500,
+        abs_tol: 0.0,
+        rel_tol: 0.0,
+        patience: u32::MAX,
+        seed: 61,
+        normalize: true,
+    };
+
+    let sink = std::env::temp_dir().join(format!("gridmc-elastic-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&sink);
+
+    let mut t = TablePrinter::new(&[
+        "run",
+        "test RMSE",
+        "kills",
+        "mid-structure",
+        "joins (warm)",
+    ]);
+    let mut row = |label: &str, rep: &gridmc::solver::SolverReport, rmse: f64| {
+        t.row(&[
+            label.to_string(),
+            format!("{rmse:.4}"),
+            rep.kill_count().to_string(),
+            rep.abort_count().to_string(),
+            format!("{} ({})", rep.join_count(), rep.warm_join_count()),
+        ]);
+    };
+
+    // Act 1 — full grid, durable checkpoints every 8 mutations.
+    let (rep, st) = ParallelDriver::new(spec, cfg.clone(), 8)
+        .with_checkpoints(8)
+        .with_checkpoint_dir(&sink)
+        .run(Box::new(NativeEngine::new()), &data.data.train)?;
+    let full_rmse = st.rmse(&data.data.test);
+    row("full grid (seeds sink)", &rep, full_rmse);
+
+    // Act 2 — the trailing column joins cold at step 2000.
+    let grow = GrowthPlan::trailing_columns(spec, 1, 2000)?;
+    let (rep, st) = ParallelDriver::new(spec, cfg.clone(), 8)
+        .with_checkpoints(8)
+        .with_growth(grow.clone())
+        .run(Box::new(NativeEngine::new()), &data.data.train)?;
+    row("cold join", &rep, st.rmse(&data.data.test));
+
+    // Act 3 — warm join from act 1's snapshots, under mid-structure
+    // kills recovering from the same disk sink.
+    let plan = FaultPlan::new()
+        .kill(901, BlockId::new(1, 1))
+        .kill(1501, BlockId::new(4, 2))
+        .kill(3203, BlockId::new(0, 5));
+    let (rep, st) = ParallelDriver::new(spec, cfg, 8)
+        .with_checkpoints(8)
+        .with_checkpoint_dir(&sink)
+        .with_growth(grow)
+        .with_faults(plan)
+        .run(Box::new(NativeEngine::new()), &data.data.train)?;
+    let warm_rmse = st.rmse(&data.data.test);
+    let trace = render_trace(&rep.faults);
+    row("warm join + churn", &rep, warm_rmse);
+
+    println!("{}", t.render());
+    println!(
+        "warm-join/full RMSE ratio {:.4} (1.0 = perfect elastic recovery)\n",
+        warm_rmse / full_rmse.max(1e-12)
+    );
+    println!("executed events (warm run — replays byte-for-byte under these seeds):");
+    print!("{trace}");
+    println!("\n(a kill landing mid-structure aborts the structure — all three blocks");
+    println!(" roll back to their pre-structure factors — crashes the victim, and");
+    println!(" redispatches; joins restore whatever the durable sink still holds)");
+
+    let _ = std::fs::remove_dir_all(&sink);
+    Ok(())
+}

@@ -137,6 +137,25 @@ pub struct GridConfig {
     pub rank: usize,
 }
 
+/// Membership-growth section (`[grow]` table): the trailing `columns`
+/// grid columns start dormant and join the live run at `join_step`
+/// completed updates — warm from the durable checkpoint directory when
+/// it holds snapshots, cold otherwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GrowConfig {
+    /// Completed-update count at which the dormant blocks join.
+    pub join_step: u64,
+    /// Trailing grid columns that start dormant (the live sub-grid
+    /// keeps `q − columns ≥ 2` columns).
+    pub columns: usize,
+}
+
+impl Default for GrowConfig {
+    fn default() -> Self {
+        Self { join_step: 1000, columns: 1 }
+    }
+}
+
 /// A complete, launchable experiment.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -159,6 +178,15 @@ pub struct ExperimentConfig {
     /// fault-free, no checkpointing). Requires a gossip driver, and a
     /// sim transport when `partitions > 0`.
     pub faults: Option<FaultConfig>,
+    /// Membership growth (`[grow]` table; `None` = every block live
+    /// from the start). Requires a gossip driver.
+    pub grow: Option<GrowConfig>,
+    /// Per-block snapshot cadence independent of any fault plan (the
+    /// effective cadence is the max of this and the `[faults]` value).
+    pub checkpoint_every: u64,
+    /// Persist snapshots durably under this directory (enables warm
+    /// joins across runs); in-memory when unset.
+    pub checkpoint_dir: Option<String>,
 }
 
 impl ExperimentConfig {
@@ -258,6 +286,18 @@ impl ExperimentConfig {
                     seed: doc.u64_or("faults.seed", d.seed),
                 }
             }),
+            grow: doc.has_prefix("grow.").then(|| {
+                let d = GrowConfig::default();
+                GrowConfig {
+                    join_step: doc.u64_or("grow.join_step", d.join_step),
+                    columns: doc.usize_or("grow.columns", d.columns),
+                }
+            }),
+            checkpoint_every: doc.u64_or("checkpoint_every", 0),
+            checkpoint_dir: doc
+                .get("checkpoint_dir")
+                .and_then(|v| v.as_str())
+                .map(String::from),
         })
     }
 
@@ -270,7 +310,14 @@ impl ExperimentConfig {
         s.push_str(&format!("driver = {}\n", quote(self.driver.as_str())));
         s.push_str(&format!("workers = {}\n", self.workers));
         s.push_str(&format!("transport = {}\n", quote(self.transport.as_str())));
-        s.push_str(&format!("net_workers = {}\n\n[dataset]\n", self.net_workers));
+        s.push_str(&format!("net_workers = {}\n", self.net_workers));
+        if self.checkpoint_every > 0 {
+            s.push_str(&format!("checkpoint_every = {}\n", self.checkpoint_every));
+        }
+        if let Some(dir) = &self.checkpoint_dir {
+            s.push_str(&format!("checkpoint_dir = {}\n", quote(dir)));
+        }
+        s.push_str("\n[dataset]\n");
         match &self.dataset {
             DatasetConfig::Synthetic(c) => {
                 s.push_str("kind = \"synthetic\"\n");
@@ -335,6 +382,12 @@ impl ExperimentConfig {
                 f.partition_duration_us,
                 f.checkpoint_every,
                 f.seed
+            ));
+        }
+        if let Some(g) = &self.grow {
+            s.push_str(&format!(
+                "\n[grow]\njoin_step = {}\ncolumns = {}\n",
+                g.join_step, g.columns
             ));
         }
         Ok(s)

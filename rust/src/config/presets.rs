@@ -13,7 +13,9 @@ use crate::net::{FaultConfig, SimConfig, TransportKind};
 use crate::solver::{SolverConfig, StepSchedule};
 use crate::{Error, Result};
 
-use super::{DatasetConfig, DriverChoice, EngineChoice, ExperimentConfig, GridConfig};
+use super::{
+    DatasetConfig, DriverChoice, EngineChoice, ExperimentConfig, GridConfig, GrowConfig,
+};
 
 /// Table 1, experiments 1–6.
 pub fn exp(n: usize) -> Result<ExperimentConfig> {
@@ -65,6 +67,9 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
         net_workers: 0,
         sim: SimConfig::default(),
         faults: None,
+        grow: None,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
     })
 }
 
@@ -101,6 +106,9 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
         net_workers: 0,
         sim: SimConfig::default(),
         faults: None,
+        grow: None,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
     }
     .scaled_for(users, items, g)
 }
@@ -152,7 +160,34 @@ pub fn churn() -> ExperimentConfig {
             checkpoint_every: 8,
             seed: 0xC0A7,
         }),
+        grow: None,
+        checkpoint_every: 0,
+        checkpoint_dir: None,
     }
+}
+
+/// The membership-growth scenario (`gridmc bench-table grow`,
+/// `BENCH_grow.json`): the same 6×6 problem as [`churn`], but the
+/// trailing grid column — 6 of 36 blocks — starts *dormant* and joins
+/// the live run at step 2000 ([`crate::net::AgentMsg::Join`]). With a
+/// durable `checkpoint_dir` whose snapshots cover that column (e.g.
+/// from a previous full-grid run), the joiners warm-start from disk;
+/// otherwise they cold-join on fresh random factors and the gossip
+/// fabric teaches them from scratch. Fully deterministic under the
+/// round-barrier driver for fixed seeds.
+pub fn grow() -> ExperimentConfig {
+    // Same 6×6 problem and solver as the churn scenario — the two
+    // elasticity benches stay comparable by construction — but
+    // fault-free, on the plain channel transport, with the trailing
+    // column dormant until step 2000 and durable-checkpoint-ready.
+    let mut cfg = churn();
+    cfg.name = "grow".into();
+    cfg.transport = TransportKind::Channel;
+    cfg.sim = SimConfig::default();
+    cfg.faults = None;
+    cfg.grow = Some(GrowConfig { join_step: 2000, columns: 1 });
+    cfg.checkpoint_every = 8;
+    cfg
 }
 
 impl ExperimentConfig {
@@ -242,6 +277,20 @@ mod tests {
         let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
         assert_eq!(back.faults, cfg.faults);
         assert_eq!(back.sim, cfg.sim);
+    }
+
+    #[test]
+    fn grow_preset_is_well_formed() {
+        let cfg = grow();
+        assert_eq!(cfg.driver, DriverChoice::Parallel, "deterministic joins need the barrier");
+        let g = cfg.grow.expect("grow preset has a [grow] table");
+        assert!(g.columns >= 1 && cfg.grid.q >= g.columns + 2, "live sub-grid stays valid");
+        assert!(g.join_step < cfg.solver.max_iters, "the join fires within the budget");
+        assert!(cfg.checkpoint_every > 0, "joins can warm-start only with checkpoints");
+        let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.grow, cfg.grow);
+        assert_eq!(back.checkpoint_every, cfg.checkpoint_every);
+        assert_eq!(back.checkpoint_dir, cfg.checkpoint_dir);
     }
 
     #[test]

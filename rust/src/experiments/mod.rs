@@ -24,7 +24,7 @@ pub mod table3;
 use crate::config::{DriverChoice, EngineChoice, ExperimentConfig};
 use crate::data::SplitDataset;
 use crate::engine::{Engine, NativeEngine, NativeMode, XlaEngine};
-use crate::gossip::{AsyncDriver, ParallelDriver};
+use crate::gossip::{AsyncDriver, GrowthPlan, ParallelDriver};
 use crate::grid::GridSpec;
 use crate::model::FactorState;
 use crate::net::FaultPlan;
@@ -78,6 +78,27 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
                 .into(),
         ));
     }
+    if cfg.grow.is_some() && cfg.driver == DriverChoice::Sequential {
+        return Err(Error::Config(
+            "a [grow] plan needs a supervising gossip driver \
+             (driver = \"parallel\" or \"async\")"
+                .into(),
+        ));
+    }
+    // Snapshot cadence: the [faults] table's value, the top-level
+    // `checkpoint_every`, or both — the stricter (larger) wins.
+    let cadence = cfg
+        .faults
+        .as_ref()
+        .map(|f| f.checkpoint_every)
+        .unwrap_or(0)
+        .max(cfg.checkpoint_every);
+    let growth = cfg
+        .grow
+        .as_ref()
+        .map(|g| GrowthPlan::trailing_columns(spec, g.columns, g.join_step))
+        .transpose()?
+        .unwrap_or_default();
     let mut engine = build_engine(cfg.engine, &spec)?;
     let (report, state) = match cfg.driver {
         DriverChoice::Sequential => {
@@ -86,21 +107,27 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
         }
         DriverChoice::Parallel => {
             let mut driver = ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers)
-                .with_net(cfg.net_config());
+                .with_net(cfg.net_config())
+                .with_checkpoints(cadence)
+                .with_growth(growth);
             if let Some(f) = &cfg.faults {
-                driver = driver
-                    .with_faults(FaultPlan::generate(spec, f))
-                    .with_checkpoints(f.checkpoint_every);
+                driver = driver.with_faults(FaultPlan::generate(spec, f));
+            }
+            if let Some(dir) = &cfg.checkpoint_dir {
+                driver = driver.with_checkpoint_dir(dir);
             }
             driver.run(engine, &data.train)?
         }
         DriverChoice::Async => {
             let mut driver = AsyncDriver::new(spec, cfg.solver.clone(), cfg.workers)
-                .with_net(cfg.net_config());
+                .with_net(cfg.net_config())
+                .with_checkpoints(cadence)
+                .with_growth(growth);
             if let Some(f) = &cfg.faults {
-                driver = driver
-                    .with_faults(FaultPlan::generate(spec, f))
-                    .with_checkpoints(f.checkpoint_every);
+                driver = driver.with_faults(FaultPlan::generate(spec, f));
+            }
+            if let Some(dir) = &cfg.checkpoint_dir {
+                driver = driver.with_checkpoint_dir(dir);
             }
             driver.run(engine, &data.train)?
         }
@@ -113,17 +140,24 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
 /// Human-readable run summary for the CLI.
 pub fn format_outcome(cfg: &ExperimentConfig, o: &Outcome) -> String {
     let r = &o.report;
-    let fault_line = if r.faults.is_empty() {
-        String::new()
-    } else {
-        format!(
-            "\nfaults       {} crash-restore(s), {} partition(s), \
+    let mut fault_line = String::new();
+    if r.kill_count() + r.partition_count() > 0 {
+        fault_line.push_str(&format!(
+            "\nfaults       {} crash-restore(s) ({} mid-structure), {} partition(s), \
              {} update(s) rolled back",
             r.kill_count(),
+            r.abort_count(),
             r.partition_count(),
             r.lost_updates()
-        )
-    };
+        ));
+    }
+    if r.join_count() > 0 {
+        fault_line.push_str(&format!(
+            "\nmembership   {} block(s) joined mid-run ({} warm from checkpoints)",
+            r.join_count(),
+            r.warm_join_count()
+        ));
+    }
     format!(
         "experiment   {name}\n\
          dataset      {ds}\n\

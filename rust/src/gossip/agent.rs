@@ -42,6 +42,32 @@
 //! [`DriverMsg::Restarted`]. Supervisors only crash blocks with no
 //! structure in flight, so a restart can never orphan a peer
 //! mid-protocol.
+//!
+//! **Structure abort** ([`AgentMsg::Abort`]): when a kill lands while
+//! a structure is in flight, the supervisor aborts the structure
+//! through its anchor instead of waiting for the block to go free. The
+//! abort is *complete-then-undo*: the anchor lets the in-flight
+//! protocol drain to completion (this keeps every link at one frame in
+//! flight, so no transport can reorder the rollback against the
+//! original traffic), then restores its own pre-structure factors from
+//! the workspace — [`crate::engine::EngineWorkspace::swap_output`]
+//! parked exactly those buffers there when the update was adopted —
+//! and sends each member a [`AgentMsg::RevertFactors`] with its old
+//! factors. Reverting rolls the version counter *back* (an undone
+//! mutation never happened) and, if a cadence snapshot fired inside
+//! the doomed window, re-saves the restored factors at the restored
+//! version so the sink never serves doomed state. The net effect is
+//! deterministic on every transport: whether the `Abort` raced the
+//! completion or not, all three blocks end bit-identical at their
+//! pre-structure state.
+//!
+//! **Dormancy and membership growth** ([`AgentMsg::Join`]): a block
+//! can spawn *dormant* — provisioned but logically absent, never
+//! addressed by the schedule and excluded from the spawn-time
+//! snapshot. `Join` activates it: the agent warm-starts from the
+//! checkpoint sink when a snapshot of its block exists (a durable
+//! [`crate::gossip::DiskSink`] can carry one across runs), otherwise
+//! it cold-joins on its spawn factors, snapshotting them as version 0.
 
 use crate::data::DenseMatrix;
 use crate::engine::{Engine, EngineWorkspace, StructureParams};
@@ -70,7 +96,9 @@ enum Phase {
         v: Option<(DenseMatrix, DenseMatrix)>,
     },
     /// Anchoring: waiting for the members' `PutAck`s.
-    Scatter { token: u64, pending: u8 },
+    Scatter { structure: Structure, token: u64, pending: u8 },
+    /// Anchoring an abort: waiting for the members' revert `PutAck`s.
+    Revert { token: u64, pending: u8 },
 }
 
 /// One block's state machine (factors + engine scratch + phase).
@@ -85,11 +113,24 @@ pub struct BlockAgent {
     ws: EngineWorkspace,
     phase: Phase,
     /// Factor mutations applied so far (own updates + adoptions).
+    /// Reverted mutations are rolled back off this counter — it counts
+    /// *surviving* mutations, which is what checkpoint versions mean.
     version: u64,
     /// Crash-recovery snapshots, when the network runs checkpointed.
     checkpoints: Option<std::sync::Arc<CheckpointStore>>,
     /// Version of the last snapshot taken.
     last_saved: u64,
+    /// Part of the live membership? Dormant agents wait for
+    /// [`AgentMsg::Join`] and take no spawn-time snapshot.
+    active: bool,
+    /// Structure token the supervisor asked to abort; consulted when
+    /// the in-flight structure completes.
+    doomed: Option<u64>,
+    /// The last structure this agent anchored to completion. While the
+    /// driver has not consumed its `Done`, the workspace still holds
+    /// the three pre-structure factor pairs, so an `Abort` racing the
+    /// completion can still revert it.
+    last_done: Option<(u64, Structure)>,
 }
 
 impl BlockAgent {
@@ -109,14 +150,28 @@ impl BlockAgent {
             version: 0,
             checkpoints: None,
             last_saved: 0,
+            active: true,
+            doomed: None,
+            last_done: None,
         }
     }
 
-    /// Attach a checkpoint store and take the spawn-time snapshot
-    /// (version 0), so the block is restorable no matter how early it
-    /// crashes.
+    /// Spawn this agent dormant: provisioned but logically outside the
+    /// membership until [`AgentMsg::Join`] activates it. Dormant agents
+    /// take no spawn-time snapshot, so a durable sink's prior-run
+    /// snapshot of this block survives for a warm join.
+    pub fn dormant(mut self) -> Self {
+        self.active = false;
+        self
+    }
+
+    /// Attach a checkpoint store and — for active agents — take the
+    /// spawn-time snapshot (version 0), so the block is restorable no
+    /// matter how early it crashes.
     pub fn with_checkpoints(mut self, store: std::sync::Arc<CheckpointStore>) -> Self {
-        store.save(self.id, 0, &self.u, &self.w);
+        if self.active {
+            store.save(self.id, 0, &self.u, &self.w);
+        }
         self.last_saved = 0;
         self.checkpoints = Some(store);
         self
@@ -126,9 +181,14 @@ impl BlockAgent {
         self.id
     }
 
-    /// Factor mutations applied so far.
+    /// Factor mutations applied (and not reverted) so far.
     pub fn version(&self) -> u64 {
         self.version
+    }
+
+    /// Part of the live membership?
+    pub fn is_active(&self) -> bool {
+        self.active
     }
 
     /// One factor mutation happened: advance the version and snapshot
@@ -137,6 +197,21 @@ impl BlockAgent {
         self.version += 1;
         if let Some(store) = &self.checkpoints {
             if self.version - self.last_saved >= store.cadence() {
+                store.save(self.id, self.version, &self.u, &self.w);
+                self.last_saved = self.version;
+            }
+        }
+    }
+
+    /// One factor mutation was undone (structure abort): roll the
+    /// version counter back and, if a cadence snapshot fired inside the
+    /// undone window, re-save the already-restored factors at the
+    /// restored version so the sink never serves doomed state. Call
+    /// *after* the factors have been restored.
+    fn unbump_version(&mut self) {
+        self.version = self.version.saturating_sub(1);
+        if let Some(store) = &self.checkpoints {
+            if self.last_saved > self.version {
                 store.save(self.id, self.version, &self.u, &self.w);
                 self.last_saved = self.version;
             }
@@ -155,6 +230,10 @@ impl BlockAgent {
                 );
                 let roles = structure.roles();
                 debug_assert_eq!(roles.anchor, self.id, "driver must dispatch to the anchor");
+                // The previous completion is now unabortable (the driver
+                // consumed its Done before dispatching us again) and the
+                // workspace is about to be overwritten.
+                self.last_done = None;
                 out.push(Outgoing::Peer(
                     roles.horizontal,
                     AgentMsg::GetFactors { from: self.id },
@@ -204,21 +283,46 @@ impl BlockAgent {
                 self.bump_version();
                 out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
             }
+            AgentMsg::RevertFactors { from, u, w } => {
+                // The anchor is undoing an aborted structure: restore
+                // the pre-structure factors it sent us and take the
+                // adoption back off the version counter.
+                self.u = u;
+                self.w = w;
+                self.unbump_version();
+                out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
+            }
             AgentMsg::PutAck { from: _ } => {
                 match std::mem::replace(&mut self.phase, Phase::Idle) {
-                    Phase::Scatter { token, pending } => {
+                    Phase::Scatter { structure, token, pending } => {
                         if pending <= 1 {
-                            out.push(Outgoing::Driver(DriverMsg::Done {
+                            if self.doomed.take() == Some(token) {
+                                self.begin_revert(structure, token, out);
+                            } else {
+                                self.last_done = Some((token, structure));
+                                out.push(Outgoing::Driver(DriverMsg::Done {
+                                    anchor: self.id,
+                                    token,
+                                    result: Ok(()),
+                                }));
+                            }
+                        } else {
+                            self.phase =
+                                Phase::Scatter { structure, token, pending: pending - 1 };
+                        }
+                    }
+                    Phase::Revert { token, pending } => {
+                        if pending <= 1 {
+                            out.push(Outgoing::Driver(DriverMsg::Aborted {
                                 anchor: self.id,
                                 token,
-                                result: Ok(()),
                             }));
                         } else {
-                            self.phase = Phase::Scatter { token, pending: pending - 1 };
+                            self.phase = Phase::Revert { token, pending: pending - 1 };
                         }
                     }
                     other => {
-                        debug_assert!(false, "{}: PutAck outside Scatter", self.id);
+                        debug_assert!(false, "{}: PutAck outside Scatter/Revert", self.id);
                         self.phase = other;
                     }
                 }
@@ -226,6 +330,97 @@ impl BlockAgent {
             AgentMsg::GetCost { lambda } => {
                 let cost = self.engine.block_cost(self.id, &self.u, &self.w, lambda);
                 out.push(Outgoing::Driver(DriverMsg::Cost { from: self.id, cost }));
+            }
+            AgentMsg::Abort { token } => match &self.phase {
+                Phase::Gather { token: t, .. } | Phase::Scatter { token: t, .. }
+                    if *t == token =>
+                {
+                    // In flight: let the protocol drain to completion,
+                    // then undo (see the module docs — this keeps every
+                    // link at one frame in flight).
+                    self.doomed = Some(token);
+                }
+                Phase::Idle if self.last_done.map(|(t, _)| t) == Some(token) => {
+                    // The completion raced the abort; the driver will
+                    // discard the Done. The workspace still holds the
+                    // pre-structure factors, so undo right away.
+                    let (_, structure) = self.last_done.take().expect("matched above");
+                    self.begin_revert(structure, token, out);
+                }
+                _ => {
+                    // Nothing to revert. Legitimate when the structure
+                    // already failed its update (the driver's Abort
+                    // raced our Done{Err}; the error path never sets
+                    // last_done because nothing was applied). Always
+                    // ack so the driver can't hang awaiting the abort.
+                    log::debug!("{}: abort of token {token} found nothing applied", self.id);
+                    out.push(Outgoing::Driver(DriverMsg::Aborted { anchor: self.id, token }));
+                }
+            },
+            AgentMsg::Join => {
+                debug_assert!(
+                    matches!(self.phase, Phase::Idle),
+                    "{}: Join while a structure is in flight (supervisor bug)",
+                    self.id
+                );
+                if self.active {
+                    log::warn!("{}: Join on an already-active block; no-op", self.id);
+                    out.push(Outgoing::Driver(DriverMsg::Joined {
+                        from: self.id,
+                        version: self.version,
+                        warm: false,
+                    }));
+                    return AgentStatus::Running;
+                }
+                let mut warm = false;
+                if let Some(store) = &self.checkpoints {
+                    let snapshot = store.restore(self.id).filter(|cp| {
+                        // A durable dir can outlive the config that wrote
+                        // it; a snapshot whose shapes don't match this
+                        // grid/rank must cold-join, not poison the engine.
+                        let fits = (cp.u.rows(), cp.u.cols()) == (self.u.rows(), self.u.cols())
+                            && (cp.w.rows(), cp.w.cols()) == (self.w.rows(), self.w.cols());
+                        if !fits {
+                            log::warn!(
+                                "{}: sink snapshot shape {}x{}/{}x{} does not fit this \
+                                 grid ({}x{}/{}x{}); joining cold",
+                                self.id,
+                                cp.u.rows(),
+                                cp.u.cols(),
+                                cp.w.rows(),
+                                cp.w.cols(),
+                                self.u.rows(),
+                                self.u.cols(),
+                                self.w.rows(),
+                                self.w.cols()
+                            );
+                        }
+                        fits
+                    });
+                    match snapshot {
+                        Some(cp) => {
+                            // Warm join: resume from the sink's snapshot
+                            // (a durable sink can carry one across runs).
+                            self.u = cp.u;
+                            self.w = cp.w;
+                            self.version = cp.version;
+                            self.last_saved = cp.version;
+                            warm = true;
+                        }
+                        None => {
+                            // Cold join on the spawn factors; snapshot
+                            // them now so the block is restorable.
+                            store.save(self.id, self.version, &self.u, &self.w);
+                            self.last_saved = self.version;
+                        }
+                    }
+                }
+                self.active = true;
+                out.push(Outgoing::Driver(DriverMsg::Joined {
+                    from: self.id,
+                    version: self.version,
+                    warm,
+                }));
             }
             AgentMsg::Crash => {
                 // Simulated process crash: factors, phase and scratch all
@@ -256,6 +451,8 @@ impl BlockAgent {
                 }
                 self.phase = Phase::Idle;
                 self.ws = EngineWorkspace::new();
+                self.doomed = None;
+                self.last_done = None;
                 out.push(Outgoing::Driver(DriverMsg::Restarted {
                     from: self.id,
                     version: self.version,
@@ -296,7 +493,10 @@ impl BlockAgent {
             Ok(()) => {
                 // O(1) reclaim: swap our factors — and the pulled member
                 // copies we own anyway — with the workspace outputs,
-                // handing the old buffers back for the next round.
+                // handing the old buffers back for the next round. The
+                // swapped-in buffers are exactly the three pre-structure
+                // factor pairs, which is what lets an abort undo the
+                // structure without ever having cloned anything.
                 self.ws.swap_output(0, &mut self.u, &mut self.w);
                 self.bump_version();
                 let (mut hu, mut hw) = (hu, hw);
@@ -311,17 +511,59 @@ impl BlockAgent {
                     roles.vertical,
                     AgentMsg::PutFactors { from: self.id, u: vu, w: vw },
                 ));
-                self.phase = Phase::Scatter { token, pending: 2 };
+                self.phase = Phase::Scatter { structure, token, pending: 2 };
             }
             Err(e) => {
-                out.push(Outgoing::Driver(DriverMsg::Done {
-                    anchor: self.id,
-                    token,
-                    result: Err(e),
-                }));
+                if self.doomed.take() == Some(token) {
+                    // Doomed structure died on its own: nothing was
+                    // applied anywhere, so there is nothing to revert —
+                    // report the abort done. (A redispatch will surface
+                    // the engine error if it is persistent.)
+                    log::warn!("{}: aborted structure failed its update: {e}", self.id);
+                    out.push(Outgoing::Driver(DriverMsg::Aborted {
+                        anchor: self.id,
+                        token,
+                    }));
+                } else {
+                    out.push(Outgoing::Driver(DriverMsg::Done {
+                        anchor: self.id,
+                        token,
+                        result: Err(e),
+                    }));
+                }
                 self.phase = Phase::Idle;
             }
         }
+    }
+
+    /// Undo a completed structure update: restore this anchor's own
+    /// pre-structure factors from the workspace and send each member a
+    /// [`AgentMsg::RevertFactors`] with its old pair. The workspace
+    /// outputs hold exactly those three pairs — `finish_gather` swapped
+    /// them in when the update was adopted — and stay valid until the
+    /// next `Execute`, which the driver cannot send before it has seen
+    /// our [`DriverMsg::Aborted`].
+    fn begin_revert(&mut self, structure: Structure, token: u64, out: &mut Outbox) {
+        let roles = structure.roles();
+        self.ws.swap_output(0, &mut self.u, &mut self.w);
+        self.unbump_version();
+        let (hu, hw) = {
+            let (u, w) = self.ws.output(1);
+            (u.clone(), w.clone())
+        };
+        let (vu, vw) = {
+            let (u, w) = self.ws.output(2);
+            (u.clone(), w.clone())
+        };
+        out.push(Outgoing::Peer(
+            roles.horizontal,
+            AgentMsg::RevertFactors { from: self.id, u: hu, w: hw },
+        ));
+        out.push(Outgoing::Peer(
+            roles.vertical,
+            AgentMsg::RevertFactors { from: self.id, u: vu, w: vw },
+        ));
+        self.phase = Phase::Revert { token, pending: 2 };
     }
 }
 
@@ -583,6 +825,184 @@ mod tests {
             vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 1 })],
         );
         assert_eq!(store.latest_version(roles.anchor), Some(2), "cadence reached");
+    }
+
+    #[test]
+    fn abort_mid_flight_reverts_all_three_blocks_bitwise() {
+        // Abort lands while the anchor is still gathering: the structure
+        // completes, then undoes itself — every factor and version must
+        // be bit-identical to never having dispatched at all.
+        let (spec, train) = problem();
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+
+        let (_, mut agents) = network(spec, &train, 6);
+        let before: Vec<(DenseMatrix, DenseMatrix)> = roles
+            .blocks()
+            .iter()
+            .map(|id| {
+                let a = agents.get(&id.index(2)).unwrap();
+                (a.u.clone(), a.w.clone())
+            })
+            .collect();
+
+        // Execute, then Abort before any member reply is delivered.
+        let anchor_k = roles.anchor.index(2);
+        let mut out = Vec::new();
+        agents
+            .get_mut(&anchor_k)
+            .unwrap()
+            .on_msg(AgentMsg::Execute { structure: s, params, token: 9 }, &mut out);
+        let mut inbox: Vec<(BlockId, AgentMsg)> = Vec::new();
+        for o in out {
+            let Outgoing::Peer(to, m) = o else { panic!("driver msg in gather") };
+            inbox.push((to, m));
+        }
+        let mut abort_out = Vec::new();
+        agents
+            .get_mut(&anchor_k)
+            .unwrap()
+            .on_msg(AgentMsg::Abort { token: 9 }, &mut abort_out);
+        assert!(abort_out.is_empty(), "doomed abort defers until completion");
+
+        let driver = pump(&mut agents, 2, inbox);
+        assert!(
+            matches!(
+                driver.as_slice(),
+                [DriverMsg::Aborted { anchor, token: 9 }] if *anchor == roles.anchor
+            ),
+            "expected a single Aborted, got {:?}",
+            driver.iter().map(DriverMsg::kind).collect::<Vec<_>>()
+        );
+        for (id, (u0, w0)) in roles.blocks().iter().zip(&before) {
+            let a = agents.get(&id.index(2)).unwrap();
+            assert_eq!(&a.u, u0, "block {id} U must revert bitwise");
+            assert_eq!(&a.w, w0, "block {id} W must revert bitwise");
+            assert_eq!(a.version(), 0, "block {id} keeps no undone mutation");
+        }
+        // The fabric is intact: the same structure executes fine again.
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 10 })],
+        );
+        assert!(matches!(driver.as_slice(), [DriverMsg::Done { token: 10, .. }]));
+    }
+
+    #[test]
+    fn abort_after_completion_still_reverts_and_resyncs_checkpoints() {
+        // The LIFO pump delivers the Abort after the whole protocol
+        // completed (the driver's racing-Done case): the anchor must
+        // revert from its workspace, and cadence-1 checkpoints taken
+        // inside the doomed window must be re-saved at the restored
+        // version with the restored factors.
+        let (spec, train) = problem();
+        let partition = BlockPartition::new(spec, &train).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&partition).unwrap();
+        let engine: Arc<dyn Engine> = Arc::new(engine);
+        let mut state = FactorState::init_random(spec, 8);
+        let store = crate::gossip::CheckpointStore::in_memory(spec, 1);
+        let mut agents = std::collections::HashMap::new();
+        for id in spec.blocks() {
+            let (u, w) = state.take_block(id);
+            agents.insert(
+                id.index(spec.q),
+                BlockAgent::new(id, u, w, engine.clone()).with_checkpoints(store.clone()),
+            );
+        }
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        let before: Vec<(DenseMatrix, DenseMatrix)> = roles
+            .blocks()
+            .iter()
+            .map(|id| {
+                let a = agents.get(&id.index(2)).unwrap();
+                (a.u.clone(), a.w.clone())
+            })
+            .collect();
+        // LIFO: Execute pops first, the Abort stays at the stack bottom
+        // until everything (including the Done) has happened.
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![
+                (roles.anchor, AgentMsg::Abort { token: 4 }),
+                (roles.anchor, AgentMsg::Execute { structure: s, params, token: 4 }),
+            ],
+        );
+        let kinds: Vec<_> = driver.iter().map(DriverMsg::kind).collect();
+        assert_eq!(kinds, ["Done", "Aborted"], "completion raced, then reverted");
+        for (id, (u0, w0)) in roles.blocks().iter().zip(&before) {
+            let a = agents.get(&id.index(2)).unwrap();
+            assert_eq!(&a.u, u0, "block {id} U must revert bitwise");
+            assert_eq!(a.version(), 0);
+            // Cadence 1 snapshotted the doomed factors at version 1; the
+            // revert must have re-saved the restored pair at version 0.
+            let cp = store.restore(*id).expect("snapshot exists");
+            assert_eq!(cp.version, 0, "block {id} sink version resynced");
+            assert_eq!(&cp.u, u0, "block {id} sink holds restored factors");
+            assert_eq!(&cp.w, w0);
+        }
+    }
+
+    #[test]
+    fn dormant_agent_joins_warm_from_sink_or_cold() {
+        let (spec, train) = problem();
+        let partition = BlockPartition::new(spec, &train).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&partition).unwrap();
+        let engine: Arc<dyn Engine> = Arc::new(engine);
+        let store = crate::gossip::CheckpointStore::in_memory(spec, 2);
+        let id = BlockId::new(1, 1);
+        let mut state = FactorState::init_random(spec, 12);
+        let (u, w) = state.take_block(id);
+        let spawn_u = u.clone();
+
+        // Warm: the sink already holds a (prior-run) snapshot.
+        let prior_u = DenseMatrix::from_fn(u.rows(), u.cols(), |i, k| (i + k) as f32);
+        let prior_w = DenseMatrix::from_fn(w.rows(), w.cols(), |i, k| (i * k) as f32);
+        store.save(id, 17, &prior_u, &prior_w);
+        let mut agent = BlockAgent::new(id, u, w, engine.clone())
+            .dormant()
+            .with_checkpoints(store.clone());
+        assert!(!agent.is_active());
+        assert_eq!(
+            store.latest_version(id),
+            Some(17),
+            "dormant spawn must not clobber the sink"
+        );
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::Join, &mut out);
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Driver(DriverMsg::Joined { from, version: 17, warm: true })]
+                if *from == id
+        ));
+        assert!(agent.is_active());
+        assert_eq!(agent.u, prior_u);
+        assert_eq!(agent.w, prior_w);
+
+        // Cold: an empty sink keeps the spawn factors and snapshots them.
+        let cold_store = crate::gossip::CheckpointStore::in_memory(spec, 2);
+        let mut state2 = FactorState::init_random(spec, 12);
+        let (u2, w2) = state2.take_block(id);
+        let mut cold = BlockAgent::new(id, u2, w2, engine)
+            .dormant()
+            .with_checkpoints(cold_store.clone());
+        assert!(cold_store.latest_version(id).is_none());
+        let mut out = Vec::new();
+        cold.on_msg(AgentMsg::Join, &mut out);
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Driver(DriverMsg::Joined { version: 0, warm: false, .. })]
+        ));
+        assert_eq!(cold.u, spawn_u, "cold join keeps the spawn factors");
+        assert_eq!(cold_store.latest_version(id), Some(0), "cold join snapshots v0");
     }
 
     #[test]

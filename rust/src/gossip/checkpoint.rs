@@ -16,8 +16,32 @@
 //! The store itself is a thin cadence + accounting wrapper over a
 //! pluggable [`CheckpointSink`]. The in-tree [`MemorySink`] keeps one
 //! mutex-striped slot per block (agents on different worker threads
-//! never contend); a durable sink (disk, object store) only has to
-//! implement the three-method trait.
+//! never contend); [`DiskSink`] persists snapshots as checksummed,
+//! length-prefixed files (atomic temp-file + rename, newest-intact
+//! -version recovery) so factors survive the process — and can warm-
+//! start a block *joining* a later run ([`crate::net::AgentMsg::Join`]).
+//!
+//! **On-disk snapshot format** (PERF.md §Fault tolerance): one file
+//! per retained version, named `{i}_{j}/v{version:020}.ckpt` — a
+//! subdirectory per block, so store/load scan O(retained) dirents:
+//!
+//! ```text
+//! [magic  b"GMCSNAP1"      8 B]
+//! [block  i u32, j u32     8 B]  little-endian, must match the name
+//! [version u64             8 B]
+//! [payload_len u64         8 B]
+//! [payload = net/codec Factors frame (tag, from, U, W)  payload_len B]
+//! [checksum u64            8 B]  FNV-1a 64 over everything above
+//! ```
+//!
+//! Writes go to a `.tmp` sibling, are fsynced, then renamed into place
+//! — a crash mid-write can never leave a half-written named snapshot.
+//! Loads walk the block's files newest-version-first and take the
+//! first that passes every check (length, magic, id, checksum, codec
+//! decode); corrupt or truncated files are skipped with a warning,
+//! never panicked on, never trusted. A block whose every snapshot is
+//! damaged simply restores `None` — the agent then rejoins cold, which
+//! the gossip fabric is built to absorb.
 //!
 //! **Cadence trade-off** (PERF.md §Fault tolerance): snapshots cost a
 //! clone of both factor matrices, so `cadence = 1` makes every crash a
@@ -26,11 +50,14 @@
 //! at the highest snapshot rate, while large cadences amortize the
 //! copies but roll back up to `cadence − 1` updates per crash.
 
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::DenseMatrix;
 use crate::grid::{BlockId, GridSpec};
+use crate::net::{codec, AgentMsg};
 
 /// One block's durable snapshot.
 #[derive(Debug, Clone)]
@@ -44,14 +71,17 @@ pub struct Checkpoint {
 }
 
 /// Where snapshots are persisted. Implementations must be safe to call
-/// from many agent worker threads at once.
+/// from many agent worker threads at once (each block is only ever
+/// written by its own agent).
 pub trait CheckpointSink: Send + Sync {
-    /// Persist `cp`, replacing any older snapshot of the same block.
+    /// Persist `cp` as the *authoritative latest* snapshot of its
+    /// block: any retained snapshot with a higher version must stop
+    /// being served (a structure abort resyncs the sink to an older,
+    /// restored version — see `BlockAgent`'s revert path).
     fn store(&self, cp: Checkpoint);
-    /// The latest snapshot of `block`, if any.
+    /// The latest (intact) snapshot of `block`, if any.
     fn load(&self, block: BlockId) -> Option<Checkpoint>;
-    /// The latest snapshot *version* of `block`, if any (cheaper than
-    /// [`Self::load`] — no factor clone).
+    /// The latest (intact) snapshot *version* of `block`, if any.
     fn version(&self, block: BlockId) -> Option<u64>;
 }
 
@@ -102,6 +132,189 @@ impl CheckpointSink for MemorySink {
     }
 }
 
+/// Magic prefix of every on-disk snapshot file.
+const SNAP_MAGIC: &[u8; 8] = b"GMCSNAP1";
+
+/// Intact versions retained per block, newest first: the authoritative
+/// latest plus one fallback in case the latest file is damaged
+/// externally (bit rot, torn copy) after it was written.
+const KEEP_VERSIONS: usize = 2;
+
+/// FNV-1a 64 — the snapshot file checksum. Not cryptographic; it
+/// guards against truncation and accidental corruption, which is the
+/// failure model of a local checkpoint directory.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Durable [`CheckpointSink`]: one checksummed file per retained
+/// snapshot version under a directory (format in the module docs).
+///
+/// Writes are atomic (temp file + fsync + rename); loads fall back to
+/// the newest file that validates end to end, so a damaged latest
+/// snapshot degrades to the previous one — and a block with no intact
+/// snapshot restores `None` (cold rejoin) instead of ever loading
+/// garbage. Because the directory outlives the process, a later run
+/// can warm-start joining blocks from it
+/// ([`crate::net::AgentMsg::Join`]).
+pub struct DiskSink {
+    dir: PathBuf,
+}
+
+impl DiskSink {
+    /// Open (creating if needed) a snapshot directory.
+    pub fn new(dir: impl Into<PathBuf>) -> crate::Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self { dir })
+    }
+
+    /// The snapshot directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Each block keeps its snapshots in its own subdirectory, so
+    /// store/load touch O(retained) dirents — never the whole grid's.
+    fn block_dir(&self, block: BlockId) -> PathBuf {
+        self.dir.join(format!("{}_{}", block.i, block.j))
+    }
+
+    fn file_name(version: u64) -> String {
+        // Zero-padded so lexicographic and numeric order agree.
+        format!("v{version:020}.ckpt")
+    }
+
+    /// Retained snapshot files of `block`, newest version first.
+    /// Unparseable names (stray temp files, foreign files) are ignored.
+    fn versions(&self, block: BlockId) -> Vec<(u64, PathBuf)> {
+        let mut out = Vec::new();
+        let Ok(entries) = std::fs::read_dir(self.block_dir(block)) else { return out };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(rest) = name.strip_prefix('v') else { continue };
+            let Some(ver) = rest.strip_suffix(".ckpt") else { continue };
+            let Ok(v) = ver.parse::<u64>() else { continue };
+            out.push((v, e.path()));
+        }
+        out.sort_by(|a, b| b.0.cmp(&a.0));
+        out
+    }
+
+    /// Frame a snapshot: header + codec `Factors` payload + checksum.
+    fn serialize(cp: Checkpoint) -> crate::Result<(BlockId, u64, Vec<u8>)> {
+        let Checkpoint { block, version, u, w } = cp;
+        let payload = codec::encode(&AgentMsg::Factors { from: block, u, w })?;
+        let mut buf = Vec::with_capacity(40 + payload.len());
+        buf.extend_from_slice(SNAP_MAGIC);
+        buf.extend_from_slice(&(block.i as u32).to_le_bytes());
+        buf.extend_from_slice(&(block.j as u32).to_le_bytes());
+        buf.extend_from_slice(&version.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        let sum = fnv1a64(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        Ok((block, version, buf))
+    }
+
+    /// Validate one snapshot file's bytes end to end. Any failure —
+    /// short file, bad magic, wrong block, checksum mismatch, trailing
+    /// bytes, undecodable payload — yields `None`, never a panic.
+    fn deserialize(block: BlockId, bytes: &[u8]) -> Option<Checkpoint> {
+        if bytes.len() < 40 || &bytes[0..8] != SNAP_MAGIC {
+            return None;
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let sum = u64::from_le_bytes(sum_bytes.try_into().ok()?);
+        if fnv1a64(body) != sum {
+            return None;
+        }
+        let i = u32::from_le_bytes(bytes[8..12].try_into().ok()?) as usize;
+        let j = u32::from_le_bytes(bytes[12..16].try_into().ok()?) as usize;
+        if BlockId::new(i, j) != block {
+            return None;
+        }
+        let version = u64::from_le_bytes(bytes[16..24].try_into().ok()?);
+        let len = u64::from_le_bytes(bytes[24..32].try_into().ok()?) as usize;
+        if body.len() != 32 + len {
+            return None;
+        }
+        match codec::decode(&bytes[32..32 + len]) {
+            Ok(AgentMsg::Factors { from, u, w }) if from == block => {
+                Some(Checkpoint { block, version, u, w })
+            }
+            _ => None,
+        }
+    }
+}
+
+impl CheckpointSink for DiskSink {
+    fn store(&self, cp: Checkpoint) {
+        let (block, version, bytes) = match Self::serialize(cp) {
+            Ok(x) => x,
+            Err(e) => {
+                log::warn!("checkpoint: cannot frame snapshot: {e}");
+                return;
+            }
+        };
+        let bdir = self.block_dir(block);
+        let path = bdir.join(Self::file_name(version));
+        let tmp = bdir.join(format!("{}.tmp", Self::file_name(version)));
+        let write = (|| -> std::io::Result<()> {
+            std::fs::create_dir_all(&bdir)?;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, &path)
+        })();
+        if let Err(e) = write {
+            log::warn!("checkpoint: persisting {block} v{version}: {e}");
+            let _ = std::fs::remove_file(&tmp);
+            return;
+        }
+        // This snapshot is now authoritative: drop any retained file
+        // with a newer version (an abort's resync supersedes it), then
+        // keep the newest KEEP_VERSIONS of what remains.
+        let mut kept = 0usize;
+        for (v, p) in self.versions(block) {
+            if v > version || kept >= KEEP_VERSIONS {
+                let _ = std::fs::remove_file(p);
+            } else {
+                kept += 1;
+            }
+        }
+    }
+
+    fn load(&self, block: BlockId) -> Option<Checkpoint> {
+        for (_, path) in self.versions(block) {
+            match std::fs::read(&path) {
+                Ok(bytes) => match Self::deserialize(block, &bytes) {
+                    Some(cp) => return Some(cp),
+                    None => log::warn!(
+                        "checkpoint: {} is damaged; falling back to an older snapshot",
+                        path.display()
+                    ),
+                },
+                Err(e) => log::warn!("checkpoint: reading {}: {e}", path.display()),
+            }
+        }
+        None
+    }
+
+    fn version(&self, block: BlockId) -> Option<u64> {
+        // Full validation on purpose: a version we report must be one
+        // we could actually restore.
+        self.load(block).map(|cp| cp.version)
+    }
+}
+
 /// Shared checkpoint service handed to every agent: snapshot cadence,
 /// a pluggable sink, and snapshot accounting.
 pub struct CheckpointStore {
@@ -116,6 +329,13 @@ impl CheckpointStore {
     /// not attaching a store at all).
     pub fn in_memory(spec: GridSpec, cadence: u64) -> Arc<Self> {
         Arc::new(Self::with_sink(cadence, Box::new(MemorySink::new(spec))))
+    }
+
+    /// Store over a [`DiskSink`] rooted at `dir` (created if missing).
+    /// Snapshots survive the process, so a later run can crash-restore
+    /// or warm-join from them.
+    pub fn durable(cadence: u64, dir: impl Into<PathBuf>) -> crate::Result<Arc<Self>> {
+        Ok(Arc::new(Self::with_sink(cadence, Box::new(DiskSink::new(dir)?))))
     }
 
     /// Store over a custom sink.
@@ -203,6 +423,72 @@ mod tests {
         let store = CheckpointStore::in_memory(spec(), 0);
         assert_eq!(store.cadence(), 1);
         assert_eq!(CheckpointStore::in_memory(spec(), 7).cadence(), 7);
+    }
+
+    fn temp_sink(tag: &str) -> (DiskSink, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "gridmc-ckpt-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        (DiskSink::new(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn disk_sink_roundtrips_and_keeps_fallback_version() {
+        let (sink, dir) = temp_sink("roundtrip");
+        let b = BlockId::new(1, 0);
+        assert!(sink.load(b).is_none());
+        sink.store(Checkpoint { block: b, version: 3, u: mat(1.0), w: mat(2.0) });
+        sink.store(Checkpoint { block: b, version: 9, u: mat(4.0), w: mat(5.0) });
+        let cp = sink.load(b).expect("latest intact");
+        assert_eq!(cp.version, 9);
+        assert_eq!(cp.u, mat(4.0));
+        assert_eq!(cp.w, mat(5.0));
+        assert_eq!(sink.version(b), Some(9));
+        // Both versions retained on disk; a third prunes the oldest.
+        assert_eq!(sink.versions(b).len(), 2);
+        sink.store(Checkpoint { block: b, version: 12, u: mat(7.0), w: mat(8.0) });
+        let vs: Vec<u64> = sink.versions(b).iter().map(|(v, _)| *v).collect();
+        assert_eq!(vs, vec![12, 9], "newest two retained");
+        // Blocks are independent.
+        assert!(sink.load(BlockId::new(0, 1)).is_none());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn disk_sink_store_supersedes_newer_versions() {
+        // An abort's checkpoint resync writes an *older* version; the
+        // sink must stop serving the doomed newer one.
+        let (sink, dir) = temp_sink("supersede");
+        let b = BlockId::new(0, 0);
+        sink.store(Checkpoint { block: b, version: 7, u: mat(1.0), w: mat(1.0) });
+        sink.store(Checkpoint { block: b, version: 8, u: mat(9.0), w: mat(9.0) });
+        sink.store(Checkpoint { block: b, version: 7, u: mat(2.0), w: mat(2.0) });
+        let cp = sink.load(b).unwrap();
+        assert_eq!(cp.version, 7);
+        assert_eq!(cp.u, mat(2.0), "resynced factors, not the doomed v8");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn durable_store_wires_disk_sink() {
+        let dir = std::env::temp_dir().join(format!(
+            "gridmc-ckpt-durable-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CheckpointStore::durable(4, &dir).unwrap();
+        let b = BlockId::new(1, 1);
+        store.save(b, 5, &mat(3.0), &mat(4.0));
+        // A second store over the same dir sees the first one's state.
+        let reopened = CheckpointStore::durable(4, &dir).unwrap();
+        let cp = reopened.restore(b).expect("persisted across stores");
+        assert_eq!(cp.version, 5);
+        assert_eq!(cp.u, mat(3.0));
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

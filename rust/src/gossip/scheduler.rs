@@ -15,26 +15,80 @@
 //! [`ScheduleBuilder::shuffled`] directly, tracking conflicts with
 //! per-block in-flight flags instead.
 
-use crate::grid::{GridSpec, Structure};
+use crate::grid::{BlockId, GridSpec, Structure};
 use crate::util::Rng;
 
 /// Builds conflict-free rounds of structures for a grid.
+///
+/// The builder also owns the *membership view* of the schedule: blocks
+/// can be excluded (dormant — provisioned but not yet joined into the
+/// live grid) and later re-included, at which point the next epoch is
+/// regenerated for the grown geometry. Excluded epochs are exactly the
+/// full enumeration minus every structure touching an excluded block,
+/// so they stay conflict-free by the same packing.
 #[derive(Debug, Clone)]
 pub struct ScheduleBuilder {
     spec: GridSpec,
     rng: Rng,
+    /// Per-block exclusion flags (row-major), all-false when the whole
+    /// grid is live.
+    excluded: Vec<bool>,
 }
 
 impl ScheduleBuilder {
     pub fn new(spec: GridSpec, seed: u64) -> Self {
-        Self { spec, rng: Rng::seed_from_u64(seed) }
+        Self {
+            spec,
+            rng: Rng::seed_from_u64(seed),
+            excluded: vec![false; spec.num_blocks()],
+        }
     }
 
-    /// One epoch's structures — every valid structure exactly once — in
-    /// freshly shuffled order, without round packing. This is the async
-    /// driver's dispatch feed (it resolves conflicts dynamically).
+    /// Exclude `blocks` from the schedule: no structure touching any of
+    /// them is emitted until [`Self::include_all`]. Out-of-grid ids are
+    /// ignored.
+    pub fn exclude(&mut self, blocks: &[BlockId]) {
+        for b in blocks {
+            if b.i < self.spec.p && b.j < self.spec.q {
+                self.excluded[b.index(self.spec.q)] = true;
+            }
+        }
+    }
+
+    /// Re-include every excluded block: subsequent epochs cover the
+    /// full grown geometry.
+    pub fn include_all(&mut self) {
+        self.excluded.fill(false);
+    }
+
+    /// Is any block currently excluded?
+    pub fn has_exclusions(&self) -> bool {
+        self.excluded.iter().any(|&e| e)
+    }
+
+    /// Structures the live (non-excluded) grid admits. Consumes no
+    /// randomness, so callers can probe without perturbing the
+    /// schedule stream.
+    pub fn live_structure_count(&self) -> usize {
+        Structure::enumerate(self.spec.p, self.spec.q)
+            .iter()
+            .filter(|s| self.admits(s))
+            .count()
+    }
+
+    fn admits(&self, s: &Structure) -> bool {
+        s.blocks().iter().all(|b| !self.excluded[b.index(self.spec.q)])
+    }
+
+    /// One epoch's structures — every valid structure of the *live*
+    /// (non-excluded) grid exactly once — in freshly shuffled order,
+    /// without round packing. This is the async driver's dispatch feed
+    /// (it resolves conflicts dynamically).
     pub fn shuffled(&mut self) -> Vec<Structure> {
         let mut structures = Structure::enumerate(self.spec.p, self.spec.q);
+        if self.has_exclusions() {
+            structures.retain(|s| self.admits(s));
+        }
         self.rng.shuffle(&mut structures);
         structures
     }
@@ -54,14 +108,41 @@ impl ScheduleBuilder {
     }
 
     /// All structures of the grid that touch `block` — the re-gossip
-    /// set a crash-restored block needs to pull its replica back into
-    /// consensus. Non-empty for every block of a valid (`p, q ≥ 2`)
-    /// grid, which is what makes recovery always reachable.
-    pub fn touching(&self, block: crate::grid::BlockId) -> Vec<Structure> {
-        Structure::enumerate(self.spec.p, self.spec.q)
-            .into_iter()
-            .filter(|s| s.blocks().contains(&block))
-            .collect()
+    /// set a crash-restored (or freshly joined) block needs to pull its
+    /// replica back into consensus. Non-empty for every block of a
+    /// valid (`p, q ≥ 2`) grid, which is what makes recovery always
+    /// reachable. Excluded blocks' structures are filtered like
+    /// everywhere else.
+    ///
+    /// Built analytically in O(1): block `(i,j)` sits in `upper(a,b)`
+    /// iff the pivot `(a,b) ∈ {(i−1,j), (i,j−1), (i,j)}` and in
+    /// `lower(a,b)` iff `(a,b) ∈ {(i,j), (i,j+1), (i+1,j)}` — at most
+    /// six candidates, emitted in the same order the brute-force scan
+    /// over [`Structure::enumerate`] yields (uppers row-major, then
+    /// lowers row-major; pinned by
+    /// `tests/property_tests.rs::prop_touching_matches_bruteforce`).
+    pub fn touching(&self, block: BlockId) -> Vec<Structure> {
+        let (p, q) = (self.spec.p, self.spec.q);
+        let BlockId { i, j } = block;
+        let mut out = Vec::with_capacity(6);
+        let mut push = |s: Structure| {
+            if s.is_valid(p, q) && self.admits(&s) {
+                out.push(s);
+            }
+        };
+        // Uppers, pivots in row-major order: (i−1,j) < (i,j−1) < (i,j).
+        if i >= 1 {
+            push(Structure::upper(i - 1, j));
+        }
+        if j >= 1 {
+            push(Structure::upper(i, j - 1));
+        }
+        push(Structure::upper(i, j));
+        // Lowers, pivots in row-major order: (i,j) < (i,j+1) < (i+1,j).
+        push(Structure::lower(i, j));
+        push(Structure::lower(i, j + 1));
+        push(Structure::lower(i + 1, j));
+        out
     }
 
     /// The exact maximum number of pairwise non-conflicting structures
@@ -326,6 +407,42 @@ mod tests {
         let b = ScheduleBuilder::new(spec(6, 5), 0);
         assert_eq!(b.touching(crate::grid::BlockId::new(2, 2)).len(), 6);
         assert_eq!(b.touching(crate::grid::BlockId::new(0, 0)).len(), 1);
+    }
+
+    #[test]
+    fn excluding_a_column_matches_the_shrunken_grid() {
+        // A 5×5 grid with its last column excluded must schedule exactly
+        // the structure set of a 5×4 grid — and re-including regrows it.
+        let mut b = ScheduleBuilder::new(spec(5, 5), 7);
+        let full: std::collections::HashSet<_> = b.shuffled().into_iter().collect();
+        assert_eq!(full.len(), 2 * 4 * 4);
+        let col: Vec<_> = (0..5).map(|i| crate::grid::BlockId::new(i, 4)).collect();
+        b.exclude(&col);
+        assert!(b.has_exclusions());
+        let small: std::collections::HashSet<_> = b.shuffled().into_iter().collect();
+        assert_eq!(small.len(), 2 * 4 * 3, "5×4 sub-grid structure count");
+        for s in &small {
+            assert!(s.blocks().iter().all(|blk| blk.j < 4), "{s} touches the excluded column");
+        }
+        // Packed rounds of the restricted schedule stay conflict-free.
+        for round in b.epoch() {
+            for i in 0..round.len() {
+                for j in i + 1..round.len() {
+                    assert!(!conflicts(&round[i], &round[j]));
+                }
+            }
+        }
+        b.include_all();
+        assert!(!b.has_exclusions());
+        let regrown: std::collections::HashSet<_> = b.shuffled().into_iter().collect();
+        assert_eq!(regrown, full, "post-join epochs cover the full geometry");
+        // touching() honors exclusions too.
+        let mut c = ScheduleBuilder::new(spec(5, 5), 7);
+        c.exclude(&col);
+        let t = c.touching(crate::grid::BlockId::new(2, 3));
+        assert!(!t.is_empty());
+        assert!(t.iter().all(|s| s.blocks().iter().all(|blk| blk.j < 4)));
+        assert!(c.touching(crate::grid::BlockId::new(2, 4)).is_empty());
     }
 
     #[test]

@@ -87,7 +87,8 @@ pub mod prelude {
     };
     pub use crate::engine::{Engine, EngineWorkspace, NativeEngine, XlaEngine};
     pub use crate::gossip::{
-        AsyncDriver, CheckpointStore, GossipNetwork, ParallelDriver, ScheduleBuilder,
+        AsyncDriver, CheckpointStore, DiskSink, GossipNetwork, GrowthPlan, ParallelDriver,
+        ScheduleBuilder,
     };
     pub use crate::grid::{BlockId, GridSpec, Structure, StructureKind, StructureSampler};
     pub use crate::metrics::{CostCurve, RecoveryOverhead, RmseReport};

@@ -43,13 +43,15 @@ impl ChannelTransport {
     /// Spawn one agent thread per block of `spec`, each owning its
     /// slice of `state`. `engine` must already be prepared;
     /// `checkpoints`, when set, makes every agent crash-recoverable.
+    /// Blocks in `dormant` spawn inactive (see [`super::DormantSet`]).
     pub fn spawn(
         spec: GridSpec,
         engine: Arc<dyn Engine>,
         state: FactorState,
         checkpoints: Option<Arc<CheckpointStore>>,
+        dormant: &super::DormantSet,
     ) -> Self {
-        Self::spawn_tapped(spec, engine, state, checkpoints, None)
+        Self::spawn_tapped(spec, engine, state, checkpoints, dormant, None)
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -59,6 +61,7 @@ impl ChannelTransport {
         engine: Arc<dyn Engine>,
         mut state: FactorState,
         checkpoints: Option<Arc<CheckpointStore>>,
+        dormant: &super::DormantSet,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
         let n = spec.num_blocks();
@@ -75,6 +78,9 @@ impl ChannelTransport {
         for (id, rx) in spec.blocks().zip(rxs) {
             let (u, w) = state.take_block(id);
             let mut agent = BlockAgent::new(id, u, w, engine.clone());
+            if dormant.contains(&id.index(spec.q)) {
+                agent = agent.dormant();
+            }
             if let Some(store) = &checkpoints {
                 agent = agent.with_checkpoints(store.clone());
             }

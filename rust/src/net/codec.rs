@@ -1,10 +1,11 @@
 //! Compact wire codec for the peer-to-peer gossip frames.
 //!
-//! Only the four messages that travel between block agents are
-//! encodable — `GetFactors`, `Factors`, `PutFactors`, `PutAck`. The
-//! control plane (`Execute`, `GetCost`, `Shutdown`) never crosses a
-//! link: the driver talks to agents in-process, exactly as the paper's
-//! leader never touches factor matrices during learning.
+//! Only the five messages that travel between block agents are
+//! encodable — `GetFactors`, `Factors`, `PutFactors`, `RevertFactors`,
+//! `PutAck`. The control plane (`Execute`, `GetCost`, `Abort`, `Join`,
+//! `Shutdown`) never crosses a link: the driver talks to agents
+//! in-process, exactly as the paper's leader never touches factor
+//! matrices during learning.
 //!
 //! Framing (all integers little-endian):
 //!
@@ -29,6 +30,7 @@ const TAG_GET_FACTORS: u8 = 1;
 const TAG_FACTORS: u8 = 2;
 const TAG_PUT_FACTORS: u8 = 3;
 const TAG_PUT_ACK: u8 = 4;
+const TAG_REVERT_FACTORS: u8 = 5;
 
 /// Matrices larger than this per side are rejected on decode (corrupt
 /// frame guard; real factor blocks are orders of magnitude smaller).
@@ -77,6 +79,14 @@ pub fn encode(msg: &AgentMsg) -> Result<Vec<u8>> {
         AgentMsg::PutFactors { from, u, w } => {
             let mut buf = Vec::with_capacity(factors_len(u, w));
             buf.push(TAG_PUT_FACTORS);
+            put_block_id(&mut buf, *from);
+            put_matrix(&mut buf, u);
+            put_matrix(&mut buf, w);
+            Ok(buf)
+        }
+        AgentMsg::RevertFactors { from, u, w } => {
+            let mut buf = Vec::with_capacity(factors_len(u, w));
+            buf.push(TAG_REVERT_FACTORS);
             put_block_id(&mut buf, *from);
             put_matrix(&mut buf, u);
             put_matrix(&mut buf, w);
@@ -167,6 +177,11 @@ pub fn decode(bytes: &[u8]) -> Result<AgentMsg> {
             let w = cur.matrix()?;
             Ok(AgentMsg::PutFactors { from, u, w })
         }
+        TAG_REVERT_FACTORS => {
+            let u = cur.matrix()?;
+            let w = cur.matrix()?;
+            Ok(AgentMsg::RevertFactors { from, u, w })
+        }
         TAG_PUT_ACK => Ok(AgentMsg::PutAck { from }),
         other => Err(Error::Gossip(format!("codec: unknown frame tag {other}"))),
     }
@@ -204,7 +219,8 @@ mod tests {
         let u = mat(3, 2, 0.25);
         let w = mat(4, 2, f32::MIN_POSITIVE);
         let cases = [
-            AgentMsg::PutFactors { from: BlockId::new(0, 1), u, w },
+            AgentMsg::PutFactors { from: BlockId::new(0, 1), u: u.clone(), w: w.clone() },
+            AgentMsg::RevertFactors { from: BlockId::new(2, 2), u, w },
             AgentMsg::GetFactors { from: BlockId::new(9, 9) },
             AgentMsg::PutAck { from: BlockId::new(1, 0) },
         ];

@@ -206,9 +206,10 @@ pub enum LinkFault {
     Partition { a: BlockId, b: BlockId, duration: Duration },
 }
 
-/// One *executed* fault action — the replayable churn trace. Under the
-/// round-barrier driver every field is schedule-determined, so traces
-/// (and [`render_trace`] output) are byte-identical for a fixed seed.
+/// One *executed* membership/fault action — the replayable churn
+/// trace. Under the round-barrier driver every field is
+/// schedule-determined, so traces (and [`render_trace`] output) are
+/// byte-identical for a fixed seed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultRecord {
     /// An agent crashed and was restored from its checkpoint.
@@ -221,14 +222,25 @@ pub enum FaultRecord {
         /// Factor mutations rolled back by the crash.
         lost_updates: u64,
     },
+    /// A kill landed mid-structure: the in-flight structure anchored at
+    /// `anchor` and touching `victim` was aborted (all three blocks
+    /// rolled back to their pre-structure factors) before the crash,
+    /// and the structure was redispatched afterwards.
+    Abort { step: u64, anchor: BlockId, victim: BlockId },
     /// A grid link was severed for `duration_us` of wall time.
     Partition { step: u64, a: BlockId, b: BlockId, duration_us: u64 },
+    /// A dormant block joined the live grid at checkpoint `version` —
+    /// warm from the (durable) sink, or cold on its spawn factors.
+    Join { step: u64, block: BlockId, version: u64, warm: bool },
 }
 
 impl FaultRecord {
     pub fn step(&self) -> u64 {
         match self {
-            FaultRecord::Kill { step, .. } | FaultRecord::Partition { step, .. } => *step,
+            FaultRecord::Kill { step, .. }
+            | FaultRecord::Abort { step, .. }
+            | FaultRecord::Partition { step, .. }
+            | FaultRecord::Join { step, .. } => *step,
         }
     }
 
@@ -241,10 +253,20 @@ impl FaultRecord {
                  \"restored_version\":{restored_version},\"lost_updates\":{lost_updates}}}",
                 block.i, block.j
             ),
+            FaultRecord::Abort { step, anchor, victim } => format!(
+                "{{\"step\":{step},\"event\":\"abort\",\"anchor\":\"{},{}\",\
+                 \"victim\":\"{},{}\"}}",
+                anchor.i, anchor.j, victim.i, victim.j
+            ),
             FaultRecord::Partition { step, a, b, duration_us } => format!(
                 "{{\"step\":{step},\"event\":\"partition\",\"a\":\"{},{}\",\"b\":\"{},{}\",\
                  \"duration_us\":{duration_us}}}",
                 a.i, a.j, b.i, b.j
+            ),
+            FaultRecord::Join { step, block, version, warm } => format!(
+                "{{\"step\":{step},\"event\":\"join\",\"block\":\"{},{}\",\
+                 \"version\":{version},\"warm\":{warm}}}",
+                block.i, block.j
             ),
         }
     }
@@ -330,20 +352,29 @@ mod tests {
                 restored_version: 8,
                 lost_updates: 3,
             },
+            FaultRecord::Abort {
+                step: 12,
+                anchor: BlockId::new(2, 2),
+                victim: BlockId::new(2, 3),
+            },
             FaultRecord::Partition {
                 step: 40,
                 a: BlockId::new(0, 1),
                 b: BlockId::new(1, 1),
                 duration_us: 1500,
             },
+            FaultRecord::Join { step: 90, block: BlockId::new(0, 5), version: 32, warm: true },
         ];
         let s = render_trace(&trace);
         assert_eq!(
             s,
             "{\"step\":12,\"event\":\"kill\",\"block\":\"2,3\",\
              \"restored_version\":8,\"lost_updates\":3}\n\
+             {\"step\":12,\"event\":\"abort\",\"anchor\":\"2,2\",\"victim\":\"2,3\"}\n\
              {\"step\":40,\"event\":\"partition\",\"a\":\"0,1\",\"b\":\"1,1\",\
-             \"duration_us\":1500}\n"
+             \"duration_us\":1500}\n\
+             {\"step\":90,\"event\":\"join\",\"block\":\"0,5\",\"version\":32,\
+             \"warm\":true}\n"
         );
         assert_eq!(s, render_trace(&trace), "rendering is pure");
     }

@@ -50,8 +50,9 @@ use crate::grid::{BlockId, GridSpec, Structure};
 use crate::model::FactorState;
 use crate::{Error, Result};
 
-/// Messages addressed to a block agent. `Execute`/`GetCost`/`Shutdown`
-/// are driver→agent control plane; the rest are the peer-to-peer gossip
+/// Messages addressed to a block agent.
+/// `Execute`/`GetCost`/`Abort`/`Join`/`Crash`/`Shutdown` are
+/// driver→agent control plane; the rest are the peer-to-peer gossip
 /// protocol (the only messages that cross simulated links).
 #[derive(Debug)]
 pub enum AgentMsg {
@@ -68,10 +69,28 @@ pub enum AgentMsg {
     Factors { from: BlockId, u: DenseMatrix, w: DenseMatrix },
     /// Anchor → member: adopt the updated factors of a structure update.
     PutFactors { from: BlockId, u: DenseMatrix, w: DenseMatrix },
-    /// Member → anchor: adoption acknowledged.
+    /// Anchor → member: undo the adoption of an aborted structure —
+    /// restore these pre-structure factors and roll the version counter
+    /// back one mutation (no new mutation is counted).
+    RevertFactors { from: BlockId, u: DenseMatrix, w: DenseMatrix },
+    /// Member → anchor: adoption (or revert) acknowledged.
     PutAck { from: BlockId },
     /// Driver → agent: report this block's cost term.
     GetCost { lambda: f32 },
+    /// Driver → anchor: abort the structure identified by `token`. The
+    /// anchor lets any in-flight traffic of that structure drain (the
+    /// update may even complete), then rolls all three member blocks
+    /// back to their exact pre-structure factors and versions and
+    /// replies [`DriverMsg::Aborted`]. Every link keeps its
+    /// one-frame-in-flight discipline, so the abort is safe — and
+    /// value-deterministic — on every transport.
+    Abort { token: u64 },
+    /// Driver → agent: activate a dormant block into the live grid. The
+    /// agent warm-starts from its checkpoint sink when a snapshot of
+    /// this block exists (a durable sink can carry one across runs),
+    /// otherwise it cold-joins on its spawn factors, and replies
+    /// [`DriverMsg::Joined`].
+    Join,
     /// Driver → agent: simulate a process crash. All live state (factors,
     /// protocol phase, engine scratch) is lost; the agent restarts from
     /// its last checkpoint (or cold, with zeroed factors) and replies
@@ -90,8 +109,11 @@ impl AgentMsg {
             AgentMsg::GetFactors { .. } => "GetFactors",
             AgentMsg::Factors { .. } => "Factors",
             AgentMsg::PutFactors { .. } => "PutFactors",
+            AgentMsg::RevertFactors { .. } => "RevertFactors",
             AgentMsg::PutAck { .. } => "PutAck",
             AgentMsg::GetCost { .. } => "GetCost",
+            AgentMsg::Abort { .. } => "Abort",
+            AgentMsg::Join => "Join",
             AgentMsg::Crash => "Crash",
             AgentMsg::Shutdown => "Shutdown",
         }
@@ -108,6 +130,14 @@ pub enum DriverMsg {
     /// A crashed block restarted from checkpoint `version`, rolling
     /// back `lost` factor mutations (reply to [`AgentMsg::Crash`]).
     Restarted { from: BlockId, version: u64, lost: u64 },
+    /// The structure identified by `token` was aborted: its three
+    /// blocks are back at their pre-structure factors and versions
+    /// (reply to [`AgentMsg::Abort`]).
+    Aborted { anchor: BlockId, token: u64 },
+    /// A dormant block activated into the live grid at checkpoint
+    /// `version` — `warm` when restored from the sink, cold on its
+    /// spawn factors otherwise (reply to [`AgentMsg::Join`]).
+    Joined { from: BlockId, version: u64, warm: bool },
     /// One block's final factors (reply to [`AgentMsg::Shutdown`]).
     Retired { from: BlockId, u: DenseMatrix, w: DenseMatrix },
 }
@@ -119,6 +149,8 @@ impl DriverMsg {
             DriverMsg::Done { .. } => "Done",
             DriverMsg::Cost { .. } => "Cost",
             DriverMsg::Restarted { .. } => "Restarted",
+            DriverMsg::Aborted { .. } => "Aborted",
+            DriverMsg::Joined { .. } => "Joined",
             DriverMsg::Retired { .. } => "Retired",
         }
     }
@@ -334,34 +366,50 @@ impl TransportKind {
     }
 }
 
+/// Which blocks of the grid start *dormant* — provisioned (mailbox,
+/// thread slot, data) but logically absent from the membership until
+/// the driver sends [`AgentMsg::Join`]. Dormant agents skip the
+/// spawn-time checkpoint snapshot, so a durable sink's prior-run
+/// snapshot of the block survives for a warm join.
+pub type DormantSet = std::collections::HashSet<usize>;
+
 /// Spawn the configured transport stack with one agent per block of
 /// `spec`, each owning its slice of `state`. `engine` must already be
-/// prepared. When `checkpoints` is set, every agent snapshots its
-/// factors into the store (once at spawn, then at the store's cadence)
-/// so the supervisor can crash-and-restore it.
+/// prepared. When `checkpoints` is set, every *active* agent snapshots
+/// its factors into the store (once at spawn, then at the store's
+/// cadence) so the supervisor can crash-and-restore it. Blocks listed
+/// in `dormant` (by linear index) spawn inactive and wait for
+/// [`AgentMsg::Join`].
 pub fn spawn(
     net: &NetConfig,
     spec: GridSpec,
     engine: Arc<dyn Engine>,
     state: FactorState,
     checkpoints: Option<Arc<CheckpointStore>>,
+    dormant: &DormantSet,
 ) -> Box<dyn Transport> {
     match net.kind {
-        TransportKind::Channel => {
-            Box::new(ChannelTransport::spawn(spec, engine, state, checkpoints))
-        }
+        TransportKind::Channel => Box::new(ChannelTransport::spawn(
+            spec,
+            engine,
+            state,
+            checkpoints,
+            dormant,
+        )),
         TransportKind::Multiplex => Box::new(MultiplexTransport::spawn(
             spec,
             engine,
             state,
             net.workers,
             checkpoints,
+            dormant,
         )),
         TransportKind::Sim => Box::new(SimTransport::spawn_over_channel(
             spec,
             engine,
             state,
             checkpoints,
+            dormant,
             net.sim,
         )),
         TransportKind::SimMultiplex => Box::new(SimTransport::spawn_over_multiplex(
@@ -370,6 +418,7 @@ pub fn spawn(
             state,
             net.workers,
             checkpoints,
+            dormant,
             net.sim,
         )),
     }

@@ -71,14 +71,16 @@ impl MultiplexTransport {
     /// Spawn the agents of `spec` over `workers` threads (0 = auto,
     /// clamped to the block count). `engine` must already be prepared;
     /// `checkpoints`, when set, makes every agent crash-recoverable.
+    /// Blocks in `dormant` spawn inactive (see [`super::DormantSet`]).
     pub fn spawn(
         spec: GridSpec,
         engine: Arc<dyn Engine>,
         state: FactorState,
         workers: usize,
         checkpoints: Option<Arc<CheckpointStore>>,
+        dormant: &super::DormantSet,
     ) -> Self {
-        Self::spawn_tapped(spec, engine, state, workers, checkpoints, None)
+        Self::spawn_tapped(spec, engine, state, workers, checkpoints, dormant, None)
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -89,6 +91,7 @@ impl MultiplexTransport {
         mut state: FactorState,
         workers: usize,
         checkpoints: Option<Arc<CheckpointStore>>,
+        dormant: &super::DormantSet,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
         let n = spec.num_blocks();
@@ -113,6 +116,9 @@ impl MultiplexTransport {
             let k = id.index(spec.q);
             let (u, wm) = state.take_block(id);
             let mut agent = BlockAgent::new(id, u, wm, engine.clone());
+            if dormant.contains(&k) {
+                agent = agent.dormant();
+            }
             if let Some(store) = &checkpoints {
                 agent = agent.with_checkpoints(store.clone());
             }

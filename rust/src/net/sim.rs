@@ -177,6 +177,7 @@ impl SimTransport {
         engine: Arc<dyn Engine>,
         state: FactorState,
         checkpoints: Option<Arc<CheckpointStore>>,
+        dormant: &super::DormantSet,
         cfg: SimConfig,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
@@ -185,6 +186,7 @@ impl SimTransport {
             engine,
             state,
             checkpoints,
+            dormant,
             Some(tx),
         ));
         Self::with_link(inner, rx, cfg, spec.q)
@@ -198,6 +200,7 @@ impl SimTransport {
         state: FactorState,
         workers: usize,
         checkpoints: Option<Arc<CheckpointStore>>,
+        dormant: &super::DormantSet,
         cfg: SimConfig,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
@@ -207,6 +210,7 @@ impl SimTransport {
             state,
             workers,
             checkpoints,
+            dormant,
             Some(tx),
         ));
         Self::with_link(inner, rx, cfg, spec.q)

@@ -108,13 +108,17 @@ impl SolverReport {
     }
 
     /// Factor mutations rolled back by crashes over the whole run (the
-    /// recovery-overhead numerator in `BENCH_churn.json`).
+    /// recovery-overhead numerator in `BENCH_churn.json`). Structure
+    /// aborts contribute nothing: an aborted structure is undone *and
+    /// redispatched*, so no surviving work is lost to it.
     pub fn lost_updates(&self) -> u64 {
         self.faults
             .iter()
             .map(|f| match f {
                 crate::net::FaultRecord::Kill { lost_updates, .. } => *lost_updates,
-                crate::net::FaultRecord::Partition { .. } => 0,
+                crate::net::FaultRecord::Abort { .. }
+                | crate::net::FaultRecord::Partition { .. }
+                | crate::net::FaultRecord::Join { .. } => 0,
             })
             .sum()
     }
@@ -132,6 +136,31 @@ impl SolverReport {
         self.faults
             .iter()
             .filter(|f| matches!(f, crate::net::FaultRecord::Partition { .. }))
+            .count()
+    }
+
+    /// Kills that landed mid-structure (each aborted + redispatched an
+    /// in-flight structure).
+    pub fn abort_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::Abort { .. }))
+            .count()
+    }
+
+    /// Blocks that joined the live grid mid-run.
+    pub fn join_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::Join { .. }))
+            .count()
+    }
+
+    /// Joins that warm-started from a checkpoint sink snapshot.
+    pub fn warm_join_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::Join { warm: true, .. }))
             .count()
     }
 }

@@ -1,0 +1,440 @@
+//! Golden-schema tests for the machine-readable bench artifacts:
+//! `BENCH_churn.json`, `BENCH_grow.json`, `BENCH_parallel_scaling.json`.
+//!
+//! These files are the repo's perf trajectory — downstream tooling
+//! diffs them across commits — so format drift must fail CI instead of
+//! silently corrupting the series. Each writer is exercised on a fake
+//! outcome and the output is parsed with a small in-tree JSON reader
+//! (the offline build has no serde), then checked for *exact* key sets
+//! and value types at every level.
+
+use gridmc::experiments::parallel::{
+    write_churn_json, write_grow_json, write_json, ChurnOutcome, ChurnRun, GrowOutcome,
+    GrowRun, ScalingPoint,
+};
+use gridmc::grid::BlockId;
+use gridmc::metrics::{percentiles, RecoveryOverhead};
+use gridmc::net::FaultRecord;
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Minimal JSON reader: just enough for the BENCH_* files.
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Obj(BTreeMap<String, Json>),
+    Arr(Vec<Json>),
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    fn as_obj(&self) -> &BTreeMap<String, Json> {
+        match self {
+            Json::Obj(m) => m,
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+
+    fn as_arr(&self) -> &[Json] {
+        match self {
+            Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    fn is_num(&self) -> bool {
+        matches!(self, Json::Num(_))
+    }
+
+    fn is_str(&self) -> bool {
+        matches!(self, Json::Str(_))
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    k: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.k < self.b.len() && self.b[self.k].is_ascii_whitespace() {
+            self.k += 1;
+        }
+    }
+
+    fn peek(&mut self) -> u8 {
+        self.ws();
+        *self.b.get(self.k).expect("unexpected end of JSON")
+    }
+
+    fn eat(&mut self, c: u8) {
+        assert_eq!(self.peek(), c, "at byte {} of the JSON", self.k);
+        self.k += 1;
+    }
+
+    fn string(&mut self) -> String {
+        self.eat(b'"');
+        let mut s = String::new();
+        loop {
+            let c = *self.b.get(self.k).expect("unterminated string");
+            self.k += 1;
+            match c {
+                b'"' => return s,
+                b'\\' => {
+                    let e = *self.b.get(self.k).expect("bad escape");
+                    self.k += 1;
+                    s.push(match e {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        other => panic!("unsupported escape \\{}", other as char),
+                    });
+                }
+                other => s.push(other as char),
+            }
+        }
+    }
+
+    fn value(&mut self) -> Json {
+        match self.peek() {
+            b'{' => {
+                self.eat(b'{');
+                let mut m = BTreeMap::new();
+                if self.peek() == b'}' {
+                    self.eat(b'}');
+                    return Json::Obj(m);
+                }
+                loop {
+                    let key = self.string();
+                    self.eat(b':');
+                    let v = self.value();
+                    assert!(m.insert(key.clone(), v).is_none(), "duplicate key {key}");
+                    if self.peek() == b',' {
+                        self.eat(b',');
+                    } else {
+                        self.eat(b'}');
+                        return Json::Obj(m);
+                    }
+                }
+            }
+            b'[' => {
+                self.eat(b'[');
+                let mut a = Vec::new();
+                if self.peek() == b']' {
+                    self.eat(b']');
+                    return Json::Arr(a);
+                }
+                loop {
+                    a.push(self.value());
+                    if self.peek() == b',' {
+                        self.eat(b',');
+                    } else {
+                        self.eat(b']');
+                        return Json::Arr(a);
+                    }
+                }
+            }
+            b'"' => Json::Str(self.string()),
+            b't' => {
+                assert_eq!(&self.b[self.k..self.k + 4], b"true");
+                self.k += 4;
+                Json::Bool(true)
+            }
+            b'f' => {
+                assert_eq!(&self.b[self.k..self.k + 5], b"false");
+                self.k += 5;
+                Json::Bool(false)
+            }
+            b'n' => {
+                assert_eq!(&self.b[self.k..self.k + 4], b"null");
+                self.k += 4;
+                Json::Null
+            }
+            _ => {
+                let start = self.k;
+                while self.k < self.b.len()
+                    && matches!(self.b[self.k], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    self.k += 1;
+                }
+                let text = std::str::from_utf8(&self.b[start..self.k]).unwrap();
+                Json::Num(text.parse().unwrap_or_else(|_| panic!("bad number {text:?}")))
+            }
+        }
+    }
+}
+
+fn parse(text: &str) -> Json {
+    let mut p = Parser { b: text.as_bytes(), k: 0 };
+    let v = p.value();
+    p.ws();
+    assert_eq!(p.k, p.b.len(), "trailing bytes after the JSON document");
+    v
+}
+
+/// Exact key-set check: unexpected AND missing keys both fail.
+fn assert_keys(obj: &Json, want: &[&str], ctx: &str) {
+    let got: Vec<&str> = obj.as_obj().keys().map(String::as_str).collect();
+    let mut want: Vec<&str> = want.to_vec();
+    want.sort_unstable();
+    assert_eq!(got, want, "{ctx}: key set drifted");
+}
+
+fn assert_run_keys(obj: &Json, extra: &[&str], ctx: &str) {
+    let mut keys = vec!["rmse", "final_cost", "iters", "wall_s"];
+    keys.extend_from_slice(extra);
+    assert_keys(obj, &keys, ctx);
+    for (k, v) in obj.as_obj() {
+        assert!(v.is_num(), "{ctx}.{k} must be numeric");
+    }
+}
+
+fn assert_header(top: &BTreeMap<String, Json>, bench: &str) {
+    assert_eq!(top["bench"], Json::Str(bench.into()));
+    assert!(top["git_rev"].is_str());
+    assert!(top["timestamp_unix"].is_num());
+    assert!(top["timestamp_utc"].is_str());
+}
+
+/// Each executed-event object must carry exactly the fields its
+/// `event` kind defines.
+fn assert_event_schema(e: &Json, ctx: &str) {
+    let obj = e.as_obj();
+    let kind = match &obj["event"] {
+        Json::Str(s) => s.as_str(),
+        other => panic!("{ctx}: event kind must be a string, got {other:?}"),
+    };
+    match kind {
+        "kill" => {
+            assert_keys(e, &["step", "event", "block", "restored_version", "lost_updates"], ctx);
+            assert!(obj["step"].is_num() && obj["restored_version"].is_num());
+            assert!(obj["lost_updates"].is_num() && obj["block"].is_str());
+        }
+        "abort" => {
+            assert_keys(e, &["step", "event", "anchor", "victim"], ctx);
+            assert!(obj["step"].is_num() && obj["anchor"].is_str() && obj["victim"].is_str());
+        }
+        "partition" => {
+            assert_keys(e, &["step", "event", "a", "b", "duration_us"], ctx);
+            assert!(obj["step"].is_num() && obj["duration_us"].is_num());
+            assert!(obj["a"].is_str() && obj["b"].is_str());
+        }
+        "join" => {
+            assert_keys(e, &["step", "event", "block", "version", "warm"], ctx);
+            assert!(obj["step"].is_num() && obj["version"].is_num());
+            assert!(obj["block"].is_str());
+            assert!(matches!(obj["warm"], Json::Bool(_)));
+        }
+        other => panic!("{ctx}: unknown event kind {other:?}"),
+    }
+}
+
+fn temp_path(name: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("gridmc-schema-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_str().unwrap().to_owned()
+}
+
+// ---------------------------------------------------------------------
+// The goldens.
+
+#[test]
+fn churn_json_schema_is_pinned() {
+    let outcome = ChurnOutcome {
+        grid: (6, 6),
+        clean: ChurnRun {
+            rmse: 0.1,
+            final_cost: 1e-3,
+            iters: 6000,
+            wall: Duration::from_millis(1000),
+        },
+        churned: ChurnRun {
+            rmse: 0.104,
+            final_cost: 1.1e-3,
+            iters: 6000,
+            wall: Duration::from_millis(1080),
+        },
+        overhead: RecoveryOverhead {
+            kills: 4,
+            partitions: 2,
+            lost_updates: 17,
+            clean_rmse: 0.1,
+            churned_rmse: 0.104,
+            clean_wall: Duration::from_millis(1000),
+            churned_wall: Duration::from_millis(1080),
+        },
+        trace: vec![
+            FaultRecord::Kill {
+                step: 510,
+                block: BlockId::new(1, 2),
+                restored_version: 48,
+                lost_updates: 5,
+            },
+            FaultRecord::Abort {
+                step: 702,
+                anchor: BlockId::new(2, 2),
+                victim: BlockId::new(2, 3),
+            },
+            FaultRecord::Partition {
+                step: 900,
+                a: BlockId::new(0, 0),
+                b: BlockId::new(0, 1),
+                duration_us: 1500,
+            },
+        ],
+    };
+    let path = temp_path("BENCH_churn.json");
+    write_churn_json(&path, &outcome).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap());
+    assert_keys(
+        &doc,
+        &[
+            "bench",
+            "git_rev",
+            "timestamp_unix",
+            "timestamp_utc",
+            "grid",
+            "unit",
+            "clean",
+            "churned",
+            "recovery",
+            "events",
+        ],
+        "churn",
+    );
+    let top = doc.as_obj();
+    assert_header(top, "churn");
+    assert_eq!(top["unit"], Json::Str("rmse".into()));
+    assert_keys(&top["grid"], &["p", "q", "agents"], "churn.grid");
+    assert_run_keys(&top["clean"], &[], "churn.clean");
+    assert_run_keys(&top["churned"], &[], "churn.churned");
+    assert_keys(
+        &top["recovery"],
+        &["kills", "partitions", "lost_updates", "rmse_ratio", "wall_overhead"],
+        "churn.recovery",
+    );
+    let events = top["events"].as_arr();
+    assert_eq!(events.len(), 3);
+    for (k, e) in events.iter().enumerate() {
+        assert_event_schema(e, &format!("churn.events[{k}]"));
+    }
+}
+
+#[test]
+fn grow_json_schema_is_pinned() {
+    let run = |rmse: f64, warm: usize| GrowRun {
+        rmse,
+        final_cost: 2e-3,
+        iters: 6000,
+        wall: Duration::from_millis(800),
+        warm_joins: warm,
+    };
+    let outcome = GrowOutcome {
+        grid: (6, 6),
+        join_step: 2000,
+        joined_blocks: 6,
+        full: run(0.10, 0),
+        cold: run(0.12, 0),
+        warm: run(0.103, 6),
+        trace: vec![FaultRecord::Join {
+            step: 2000,
+            block: BlockId::new(2, 5),
+            version: 231,
+            warm: true,
+        }],
+    };
+    let path = temp_path("BENCH_grow.json");
+    write_grow_json(&path, &outcome).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap());
+    assert_keys(
+        &doc,
+        &[
+            "bench",
+            "git_rev",
+            "timestamp_unix",
+            "timestamp_utc",
+            "grid",
+            "unit",
+            "join",
+            "full",
+            "cold",
+            "warm",
+            "events",
+        ],
+        "grow",
+    );
+    let top = doc.as_obj();
+    assert_header(top, "grow");
+    assert_eq!(top["unit"], Json::Str("rmse".into()));
+    assert_keys(&top["grid"], &["p", "q", "agents"], "grow.grid");
+    assert_keys(&top["join"], &["step", "blocks"], "grow.join");
+    for leg in ["full", "cold", "warm"] {
+        assert_run_keys(&top[leg], &["warm_joins"], &format!("grow.{leg}"));
+    }
+    let events = top["events"].as_arr();
+    assert_eq!(events.len(), 1);
+    assert_event_schema(&events[0], "grow.events[0]");
+}
+
+#[test]
+fn parallel_scaling_json_schema_is_pinned() {
+    let stats = |m: f64| percentiles(&[0.9 * m, m, 1.1 * m]);
+    let points = vec![
+        ScalingPoint {
+            mode: "parallel/channel",
+            blocks: 64,
+            stats: stats(1000.0),
+            iters: 500,
+            final_cost: 1.0,
+        },
+        ScalingPoint {
+            mode: "async/multiplex",
+            blocks: 1024,
+            stats: stats(4000.0),
+            iters: 900,
+            final_cost: 0.5,
+        },
+    ];
+    let path = temp_path("BENCH_parallel_scaling.json");
+    write_json(&path, &points).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap());
+    assert_keys(
+        &doc,
+        &[
+            "bench",
+            "git_rev",
+            "timestamp_unix",
+            "timestamp_utc",
+            "geometry",
+            "unit",
+            "configs",
+        ],
+        "scaling",
+    );
+    let top = doc.as_obj();
+    assert_header(top, "parallel_scaling");
+    assert_eq!(top["unit"], Json::Str("updates_per_second".into()));
+    assert_keys(&top["geometry"], &["block_side", "rank"], "scaling.geometry");
+    let configs = top["configs"].as_obj();
+    assert_eq!(configs.len(), 2);
+    assert!(configs.contains_key("parallel/channel/64"));
+    assert!(configs.contains_key("async/multiplex/1024"));
+    for (name, c) in configs {
+        assert_keys(
+            c,
+            &["median", "p10", "p90", "repeats", "iters", "final_cost"],
+            &format!("scaling.configs[{name}]"),
+        );
+        for (k, v) in c.as_obj() {
+            assert!(v.is_num(), "scaling.configs[{name}].{k} must be numeric");
+        }
+    }
+}

@@ -16,19 +16,30 @@
 //!   `GRIDMC_CHAOS_SEED`, default 1147 — CI pins it) on both drivers;
 //! * no leaked agent threads across churned runs (every worker is
 //!   reaped by `shutdown`, crashes included);
-//! * cold rejoin (checkpointing off) still converges.
+//! * cold rejoin (checkpointing off) still converges;
+//! * kills landing *mid-structure* (schedule replay pins the step and
+//!   victim) abort + revert + redispatch deterministically on both
+//!   drivers — bit-identical reruns, no lost iterations;
+//! * the elastic acceptance scenario: mid-structure kills + a block
+//!   joining at a scheduled step, both recovering from the durable
+//!   `DiskSink`, within 5% of the fault-free RMSE and byte-identical
+//!   across reruns and transports.
 //!
 //! Tests serialize on a shared mutex: thread-count accounting and the
 //! 32-plan sweep would otherwise interfere with each other.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use gridmc::data::{CooMatrix, SyntheticConfig};
-use gridmc::engine::NativeEngine;
-use gridmc::gossip::{AsyncDriver, ParallelDriver};
-use gridmc::grid::GridSpec;
+use gridmc::engine::{Engine, NativeEngine, StructureParams};
+use gridmc::gossip::{
+    AsyncDriver, CheckpointStore, GossipNetwork, GrowthPlan, ParallelDriver, ScheduleBuilder,
+};
+use gridmc::grid::{BlockId, BlockPartition, GridSpec, NormalizationCoeffs};
 use gridmc::model::FactorState;
-use gridmc::net::{fault::render_trace, FaultConfig, FaultEvent, FaultPlan, NetConfig, SimConfig};
+use gridmc::net::{
+    fault::render_trace, FaultConfig, FaultEvent, FaultPlan, FaultRecord, NetConfig, SimConfig,
+};
 use gridmc::solver::{SolverConfig, SolverReport, StepSchedule};
 
 static SEQ: Mutex<()> = Mutex::new(());
@@ -284,6 +295,236 @@ fn no_leaked_agent_threads_across_churned_runs() {
         after <= before + 2,
         "thread count grew {before} -> {after}: agent threads leaked"
     );
+}
+
+/// Drive the network directly: dispatch a structure and crash one of
+/// its members while it is in flight. The kill must abort the
+/// structure (complete-then-undo), restore the victim from its
+/// cadence-1 checkpoint, and leave the whole network bit-identical to
+/// a twin that never dispatched anything.
+#[test]
+fn direct_mid_flight_crash_aborts_and_restores_bitwise() {
+    let _g = serialize();
+    let (spec, train, _) = problem();
+    let partition = BlockPartition::new(spec, &train).unwrap();
+    let mut engine = NativeEngine::new();
+    engine.prepare(&partition).unwrap();
+    let engine: Arc<dyn Engine> = Arc::new(engine);
+    let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+
+    let spawn = || {
+        GossipNetwork::spawn_full(
+            &NetConfig::channel(),
+            spec,
+            engine.clone(),
+            FactorState::init_random(spec, 33),
+            Some(CheckpointStore::in_memory(spec, 1)),
+        )
+    };
+
+    let mut network = spawn();
+    let s = gridmc::grid::Structure::upper(1, 1);
+    let roles = s.roles();
+    let params = StructureParams::build(10.0, 1e-9, 1e-2, &coeffs, &roles);
+    let token = network.dispatch(s, params).unwrap();
+    // The structure is in flight from the driver's perspective; kill
+    // the vertical member mid-structure.
+    let aborted = network.crash(1, roles.vertical).unwrap();
+    assert_eq!(aborted, Some((token, s)), "the kill must abort the in-flight structure");
+    match network.fault_trace() {
+        [FaultRecord::Abort { anchor, victim, .. }, FaultRecord::Kill { block, lost_updates, .. }] =>
+        {
+            assert_eq!(*anchor, roles.anchor);
+            assert_eq!(*victim, roles.vertical);
+            assert_eq!(*block, roles.vertical);
+            assert_eq!(*lost_updates, 0, "cadence 1 + revert: nothing survives to lose");
+        }
+        other => panic!("unexpected trace {other:?}"),
+    }
+    let crashed = network.shutdown().unwrap();
+
+    let twin = spawn().shutdown().unwrap();
+    for id in spec.blocks() {
+        assert_eq!(crashed.u(id), twin.u(id), "U of {id} must match the untouched twin");
+        assert_eq!(crashed.w(id), twin.w(id), "W of {id} must match the untouched twin");
+    }
+}
+
+/// Replay the parallel driver's schedule stream to find a kill step
+/// guaranteed to land strictly inside a dispatch chunk, targeting a
+/// block of that chunk. Returns `(step, victim)`. The replication is
+/// exact because kills perturb neither the schedule RNG nor the
+/// completed-update accounting.
+fn first_mid_chunk_target(
+    spec: GridSpec,
+    solver_seed: u64,
+    workers: usize,
+    limit: u64,
+    dormant: &[BlockId],
+) -> (u64, BlockId) {
+    let mut schedule = ScheduleBuilder::new(spec, solver_seed ^ 0x90551b);
+    schedule.exclude(dormant);
+    let mut iters = 0u64;
+    while iters < limit {
+        for round in schedule.epoch() {
+            for chunk in round.chunks(workers) {
+                let len = chunk.len() as u64;
+                if chunk.len() >= 2 && iters + len <= limit {
+                    return (iters + 1, chunk[0].blocks()[0]);
+                }
+                iters += len;
+                if iters >= limit {
+                    break;
+                }
+            }
+        }
+    }
+    panic!("no multi-structure chunk before step {limit}");
+}
+
+/// With a single async in-flight slot the dispatch feed serializes, so
+/// a kill scheduled against the structure known (by schedule replay)
+/// to be in flight exercises the abort path deterministically: reruns
+/// must agree byte-for-byte on the trace and bit-for-bit on factors.
+#[test]
+fn async_mid_structure_kill_is_deterministic() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 600;
+    // With max_inflight = 1 the structure in flight right after
+    // completion s is the s-th of the shuffled feed (0-indexed).
+    let kill_step = 37u64;
+    let mut feed = ScheduleBuilder::new(spec, cfg(iters).seed ^ 0xa57c);
+    // The driver refills its feed one epoch at a time from the same
+    // seeded builder; replay enough epochs to cover the kill step.
+    let mut stream = Vec::new();
+    while stream.len() <= kill_step as usize {
+        stream.extend(feed.shuffled());
+    }
+    let victim = stream[kill_step as usize].blocks()[0];
+    let plan = FaultPlan::new().kill(kill_step, victim);
+    let run = || {
+        AsyncDriver::new(spec, cfg(iters), 1)
+            .with_net(NetConfig::multiplex(3))
+            .with_faults(plan.clone())
+            .with_checkpoints(2)
+            .run(Box::new(NativeEngine::new()), &train)
+            .expect("mid-structure kill must not abort the driver")
+    };
+    let (ra, sa) = run();
+    let (rb, sb) = run();
+    assert_eq!(ra.kill_count(), 1, "{:?}", ra.faults);
+    assert_eq!(
+        ra.abort_count(),
+        1,
+        "the kill must land on the in-flight structure: {:?}",
+        ra.faults
+    );
+    assert_eq!(ra.iters, iters, "the aborted structure is redispatched, not lost");
+    assert_eq!(render_trace(&ra.faults), render_trace(&rb.faults));
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    for id in spec.blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
+        assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
+    }
+    assert!(sa.rmse(&test).is_finite());
+}
+
+/// The ISSUE acceptance scenario, end to end: a seeded run with
+/// mid-structure kills *and* a block joining at a scheduled step
+/// recovers from the durable `DiskSink` — crash-restores read their
+/// snapshots back off disk, the joiner warm-starts from a previous
+/// run's snapshot of its block — lands within 5% of the fault-free
+/// RMSE, and reproduces byte-identically across reruns and transports.
+#[test]
+fn elastic_acceptance_mid_structure_kills_plus_durable_join() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 4000;
+    let join_step = 1200;
+    let joiner = BlockId::new(3, 3);
+    let grow = GrowthPlan { join_step, blocks: vec![joiner] };
+
+    let base = std::env::temp_dir().join(format!("gridmc-elastic-acc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let seed_dir = base.join("seed");
+
+    // Fault-free full-grid reference; its durable snapshots are what
+    // the elastic runs' joiner later warm-starts from.
+    let (clean_rep, clean_state) = ParallelDriver::new(spec, cfg(iters), 4)
+        .with_checkpoints(4)
+        .with_checkpoint_dir(&seed_dir)
+        .run(Box::new(NativeEngine::new()), &train)
+        .expect("reference run");
+    assert!(clean_rep.faults.is_empty());
+    let clean_rmse = clean_state.rmse(&test);
+
+    // One kill guaranteed to land mid-structure (schedule replay), one
+    // more after the join.
+    let (kill_step, victim) =
+        first_mid_chunk_target(spec, cfg(iters).seed, 4, join_step, &grow.blocks);
+    assert_ne!(victim, joiner, "pre-join chunks never touch the dormant block");
+    let plan = FaultPlan::new().kill(kill_step, victim).kill(2000, BlockId::new(0, 0));
+
+    // The sink keeps one subdirectory per block; copy one level deep.
+    let copy_dir = |to: &std::path::Path| {
+        for block in std::fs::read_dir(&seed_dir).unwrap().flatten() {
+            let dst = to.join(block.file_name());
+            std::fs::create_dir_all(&dst).unwrap();
+            for f in std::fs::read_dir(block.path()).unwrap().flatten() {
+                std::fs::copy(f.path(), dst.join(f.file_name())).unwrap();
+            }
+        }
+    };
+    let run = |net: NetConfig, dir: &std::path::Path| {
+        copy_dir(dir);
+        ParallelDriver::new(spec, cfg(iters), 4)
+            .with_net(net)
+            .with_faults(plan.clone())
+            .with_growth(grow.clone())
+            .with_checkpoints(4)
+            .with_checkpoint_dir(dir)
+            .run(Box::new(NativeEngine::new()), &train)
+            .expect("elastic run must not abort the driver")
+    };
+    let (ra, sa) = run(NetConfig::channel(), &base.join("a"));
+    let (rb, sb) = run(NetConfig::channel(), &base.join("b"));
+    let (rc, sc) = run(NetConfig::sim(SimConfig::zero_latency(5)), &base.join("c"));
+
+    assert_eq!(ra.kill_count(), 2, "{:?}", ra.faults);
+    assert!(ra.abort_count() >= 1, "a kill landed mid-structure: {:?}", ra.faults);
+    assert_eq!(ra.join_count(), 1, "{:?}", ra.faults);
+    assert_eq!(
+        ra.warm_join_count(),
+        1,
+        "the joiner recovers from the durable sink: {:?}",
+        ra.faults
+    );
+    assert_eq!(ra.iters, clean_rep.iters, "aborts must not eat iterations");
+
+    // Byte-identical traces and bit-identical factors across reruns
+    // and across transports.
+    let trace = render_trace(&ra.faults);
+    assert!(!trace.is_empty());
+    assert_eq!(trace, render_trace(&rb.faults), "rerun trace differs");
+    assert_eq!(trace, render_trace(&rc.faults), "cross-transport trace differs");
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    assert_eq!(ra.final_cost.to_bits(), rc.final_cost.to_bits());
+    for id in spec.blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
+        assert_eq!(sa.u(id), sc.u(id), "U of {id} differs across transports");
+        assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
+        assert_eq!(sa.w(id), sc.w(id), "W of {id} differs across transports");
+    }
+
+    // Recovery quality: within 5% of the fault-free reference.
+    let rmse = sa.rmse(&test);
+    assert!(rmse.is_finite() && clean_rmse.is_finite());
+    assert!(
+        rmse <= clean_rmse * 1.05,
+        "elastic RMSE {rmse} vs fault-free {clean_rmse} (> 5% off)"
+    );
+    let _ = std::fs::remove_dir_all(&base);
 }
 
 /// Checkpointing off: a crash rejoins cold (zeroed factors) and the

@@ -40,6 +40,7 @@ fn all_frame_kinds_roundtrip_over_shape_sweep() {
                 AgentMsg::PutAck { from },
                 AgentMsg::Factors { from, u: u.clone(), w: w.clone() },
                 AgentMsg::PutFactors { from, u: u.clone(), w: w.clone() },
+                AgentMsg::RevertFactors { from, u: u.clone(), w: w.clone() },
             ];
             for msg in cases {
                 let kind = msg.kind();
@@ -54,6 +55,10 @@ fn all_frame_kinds_roundtrip_over_shape_sweep() {
                     | (
                         AgentMsg::PutFactors { from: f1, u: u1, w: w1 },
                         AgentMsg::PutFactors { from: f2, u: u2, w: w2 },
+                    )
+                    | (
+                        AgentMsg::RevertFactors { from: f1, u: u1, w: w1 },
+                        AgentMsg::RevertFactors { from: f2, u: u2, w: w2 },
                     ) => {
                         assert_eq!(f1, f2);
                         assert_same_matrix(u1, u2);
@@ -109,7 +114,8 @@ fn every_truncation_is_rejected() {
         AgentMsg::GetFactors { from },
         AgentMsg::PutAck { from },
         AgentMsg::Factors { from, u: u.clone(), w: w.clone() },
-        AgentMsg::PutFactors { from, u, w },
+        AgentMsg::PutFactors { from, u: u.clone(), w: w.clone() },
+        AgentMsg::RevertFactors { from, u, w },
     ];
     for msg in cases {
         let bytes = encode(&msg).unwrap();
@@ -145,7 +151,7 @@ fn random_corruptions_never_panic() {
                 // Corruption in payload or a still-consistent header:
                 // must at least be one of the four wire kinds.
                 assert!(
-                    ["GetFactors", "Factors", "PutFactors", "PutAck"]
+                    ["GetFactors", "Factors", "PutFactors", "RevertFactors", "PutAck"]
                         .contains(&msg.kind()),
                     "decoded a non-wire kind {}",
                     msg.kind()
@@ -157,7 +163,8 @@ fn random_corruptions_never_panic() {
 }
 
 /// Exhaustive tag sweep: all 256 first bytes on a minimal frame body.
-/// Only the four wire tags may decode; everything else errors.
+/// Only the five wire tags may decode (the factor-bearing ones need a
+/// payload, so they error on a 9-byte frame); everything else errors.
 #[test]
 fn exhaustive_tag_sweep() {
     for tag in 0u8..=255 {

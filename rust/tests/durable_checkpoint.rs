@@ -1,0 +1,271 @@
+//! Crash-torture suite for the durable checkpoint sink
+//! (`gossip/checkpoint.rs::DiskSink`).
+//!
+//! The recovery contract under test: a `DiskSink` directory may be
+//! damaged arbitrarily — snapshot files truncated at *every* byte
+//! prefix, corrupted at every byte offset, replaced with garbage,
+//! half-written temp files left behind — and `load` must always either
+//! fall back to the newest *intact* retained version or report `None`
+//! (the agent then cold-joins). It must never panic and never serve
+//! bytes that don't checksum + decode end to end.
+
+use gridmc::data::DenseMatrix;
+use gridmc::gossip::{Checkpoint, CheckpointSink, CheckpointStore, DiskSink};
+use gridmc::grid::{BlockId, GridSpec};
+use gridmc::util::Rng;
+
+use std::path::PathBuf;
+
+fn mat(rows: usize, cols: usize, salt: f32) -> DenseMatrix {
+    DenseMatrix::from_fn(rows, cols, |i, j| salt + i as f32 * 0.25 - j as f32 * 0.5)
+}
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!(
+            "gridmc-torture-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        Self(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// The snapshot files of `block` — one `v{version}.ckpt` per retained
+/// version in the block's own subdirectory — newest version first (by
+/// name: the zero-padded version makes lexicographic and numeric
+/// order agree).
+fn block_dir(dir: &std::path::Path, block: BlockId) -> PathBuf {
+    dir.join(format!("{}_{}", block.i, block.j))
+}
+
+fn snapshot_files(dir: &std::path::Path, block: BlockId) -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(block_dir(dir, block)) else { return Vec::new() };
+    let mut files: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with('v') && n.ends_with(".ckpt"))
+        })
+        .collect();
+    files.sort();
+    files.reverse();
+    files
+}
+
+fn assert_is_exactly(cp: &Checkpoint, version: u64, u: &DenseMatrix, w: &DenseMatrix) {
+    assert_eq!(cp.version, version);
+    assert_eq!(&cp.u, u, "restored U must be bit-exact");
+    assert_eq!(&cp.w, w, "restored W must be bit-exact");
+}
+
+/// Truncate the newest snapshot file at EVERY byte prefix: each
+/// truncation must fall back to the older intact version — never
+/// panic, never load garbage.
+#[test]
+fn truncation_at_every_prefix_falls_back_to_previous_version() {
+    let tmp = TempDir::new("truncate");
+    let sink = DiskSink::new(&tmp.0).unwrap();
+    let b = BlockId::new(2, 1);
+    let (u_old, w_old) = (mat(6, 3, 1.0), mat(5, 3, 2.0));
+    let (u_new, w_new) = (mat(6, 3, 9.0), mat(5, 3, 8.0));
+    sink.store(Checkpoint { block: b, version: 10, u: u_old.clone(), w: w_old.clone() });
+    sink.store(Checkpoint { block: b, version: 20, u: u_new.clone(), w: w_new.clone() });
+
+    let files = snapshot_files(&tmp.0, b);
+    assert_eq!(files.len(), 2, "two retained versions");
+    let newest = &files[0];
+    let pristine = std::fs::read(newest).unwrap();
+    assert_is_exactly(&sink.load(b).unwrap(), 20, &u_new, &w_new);
+
+    for cut in 0..pristine.len() {
+        std::fs::write(newest, &pristine[..cut]).unwrap();
+        let cp = sink
+            .load(b)
+            .unwrap_or_else(|| panic!("cut {cut}: older intact version must survive"));
+        assert_is_exactly(&cp, 10, &u_old, &w_old);
+    }
+    // Restore the full file: the newest version is served again.
+    std::fs::write(newest, &pristine).unwrap();
+    assert_is_exactly(&sink.load(b).unwrap(), 20, &u_new, &w_new);
+}
+
+/// Corrupt the newest snapshot at EVERY byte offset (bit flips): every
+/// load must yield either the intact older version or — if the flip
+/// somehow leaves the file consistent — the newest one, bit-exact.
+/// Nothing in between, and never a panic.
+#[test]
+fn corruption_at_every_offset_never_serves_garbage() {
+    let tmp = TempDir::new("corrupt");
+    let sink = DiskSink::new(&tmp.0).unwrap();
+    let b = BlockId::new(0, 3);
+    let (u_old, w_old) = (mat(4, 2, -1.0), mat(7, 2, -2.0));
+    let (u_new, w_new) = (mat(4, 2, 5.0), mat(7, 2, 6.0));
+    sink.store(Checkpoint { block: b, version: 3, u: u_old.clone(), w: w_old.clone() });
+    sink.store(Checkpoint { block: b, version: 7, u: u_new.clone(), w: w_new.clone() });
+
+    let newest = snapshot_files(&tmp.0, b).remove(0);
+    let pristine = std::fs::read(&newest).unwrap();
+    let mut rng = Rng::seed_from_u64(0x70AD);
+    for k in 0..pristine.len() {
+        let mut bad = pristine.clone();
+        bad[k] ^= 1 + rng.gen_range(255) as u8;
+        std::fs::write(&newest, &bad).unwrap();
+        match sink.load(b) {
+            Some(cp) if cp.version == 3 => assert_is_exactly(&cp, 3, &u_old, &w_old),
+            Some(cp) => {
+                // A flip that survives the checksum AND the codec can
+                // only be one that decodes back to the stored bytes —
+                // an FNV collision is ~2^-64; treat anything else as a
+                // failure.
+                assert_is_exactly(&cp, 7, &u_new, &w_new);
+            }
+            None => panic!("offset {k}: the older intact version must survive"),
+        }
+    }
+}
+
+/// Every retained snapshot damaged: load reports `None` (the agent
+/// cold-joins) — never a panic, never garbage.
+#[test]
+fn all_versions_damaged_means_cold_join() {
+    let tmp = TempDir::new("allbad");
+    let sink = DiskSink::new(&tmp.0).unwrap();
+    let b = BlockId::new(1, 1);
+    sink.store(Checkpoint { block: b, version: 1, u: mat(3, 2, 0.0), w: mat(3, 2, 1.0) });
+    sink.store(Checkpoint { block: b, version: 2, u: mat(3, 2, 2.0), w: mat(3, 2, 3.0) });
+    for f in snapshot_files(&tmp.0, b) {
+        let bytes = std::fs::read(&f).unwrap();
+        std::fs::write(&f, &bytes[..bytes.len() / 2]).unwrap();
+    }
+    assert!(sink.load(b).is_none(), "no intact version -> cold join");
+    assert!(sink.version(b).is_none());
+    // The sink still works for fresh snapshots afterwards.
+    sink.store(Checkpoint { block: b, version: 5, u: mat(3, 2, 7.0), w: mat(3, 2, 8.0) });
+    assert_eq!(sink.load(b).unwrap().version, 5);
+}
+
+/// Garbage files in the directory — empty files, random bytes with a
+/// valid-looking name, stray temp files, foreign names — are all
+/// skipped cleanly.
+#[test]
+fn garbage_and_stray_temp_files_are_ignored() {
+    let tmp = TempDir::new("garbage");
+    let sink = DiskSink::new(&tmp.0).unwrap();
+    let b = BlockId::new(3, 2);
+    let (u, w) = (mat(5, 2, 4.0), mat(4, 2, 3.0));
+    sink.store(Checkpoint { block: b, version: 6, u: u.clone(), w: w.clone() });
+
+    let bdir = block_dir(&tmp.0, b);
+    std::fs::write(bdir.join("v00000000000000000099.ckpt"), []).unwrap();
+    let mut rng = Rng::seed_from_u64(3);
+    let junk: Vec<u8> = (0..256).map(|_| rng.gen_range(256) as u8).collect();
+    std::fs::write(bdir.join("v00000000000000000050.ckpt"), &junk).unwrap();
+    std::fs::write(bdir.join("v00000000000000000007.ckpt.tmp"), &junk).unwrap();
+    std::fs::write(bdir.join("not-a-snapshot.txt"), b"hello").unwrap();
+    std::fs::write(bdir.join("vNaN.ckpt"), &junk).unwrap();
+
+    let cp = sink.load(b).expect("real snapshot survives the noise");
+    assert_is_exactly(&cp, 6, &u, &w);
+}
+
+/// A snapshot written for block A renamed over block B's name must be
+/// rejected (the block id is inside the checksummed header).
+#[test]
+fn cross_block_swap_is_rejected() {
+    let tmp = TempDir::new("swap");
+    let sink = DiskSink::new(&tmp.0).unwrap();
+    let a = BlockId::new(0, 0);
+    let b = BlockId::new(0, 1);
+    sink.store(Checkpoint { block: a, version: 4, u: mat(3, 2, 1.0), w: mat(3, 2, 2.0) });
+    let src = snapshot_files(&tmp.0, a).remove(0);
+    let b_dir = block_dir(&tmp.0, b);
+    std::fs::create_dir_all(&b_dir).unwrap();
+    std::fs::copy(&src, b_dir.join("v00000000000000000004.ckpt")).unwrap();
+    assert!(sink.load(b).is_none(), "foreign block's bytes must not restore");
+    assert!(sink.load(a).is_some());
+}
+
+/// Torture sweep through the full store: random save/damage/load
+/// cycles across blocks; every successful load must be one of the
+/// versions actually saved for that block, bit-exact.
+#[test]
+fn randomized_damage_sweep_only_serves_saved_states() {
+    let tmp = TempDir::new("sweep");
+    let spec = GridSpec::new(24, 24, 3, 3, 2);
+    let store = CheckpointStore::durable(2, &tmp.0).unwrap();
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    // Per-block history of saved (version, u, w).
+    let mut history: Vec<Vec<(u64, DenseMatrix, DenseMatrix)>> =
+        vec![Vec::new(); spec.num_blocks()];
+    for round in 0..60u64 {
+        let i = rng.gen_range(spec.p);
+        let j = rng.gen_range(spec.q);
+        let b = BlockId::new(i, j);
+        let k = b.index(spec.q);
+        match rng.gen_range(3) {
+            0 => {
+                let v = round + 1;
+                let u = mat(4, 2, v as f32);
+                let w = mat(3, 2, -(v as f32));
+                store.save(b, v, &u, &w);
+                // Saving version v supersedes any retained newer one.
+                history[k].retain(|(hv, _, _)| *hv <= v);
+                history[k].push((v, u, w));
+            }
+            1 => {
+                // Damage a random snapshot file of this block.
+                let files = snapshot_files(&tmp.0, b);
+                if !files.is_empty() {
+                    let f = &files[rng.gen_range(files.len())];
+                    let bytes = std::fs::read(f).unwrap();
+                    if !bytes.is_empty() {
+                        let cut = rng.gen_range(bytes.len());
+                        std::fs::write(f, &bytes[..cut]).unwrap();
+                    }
+                }
+            }
+            _ => {
+                if let Some(cp) = store.restore(b) {
+                    let hit = history[k].iter().find(|(v, _, _)| *v == cp.version);
+                    let (_, u, w) = hit.unwrap_or_else(|| {
+                        panic!("block {b}: restored unknown version {}", cp.version)
+                    });
+                    assert_eq!(&cp.u, u, "block {b} v{} U", cp.version);
+                    assert_eq!(&cp.w, w, "block {b} v{} W", cp.version);
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end warm restart: a checkpointed store's snapshots survive
+/// process "death" (a fresh store over the same directory) and restore
+/// the exact factors — the durable path a joining block takes.
+#[test]
+fn reopened_store_restores_the_previous_runs_factors() {
+    let tmp = TempDir::new("reopen");
+    let b = BlockId::new(1, 0);
+    let (u, w) = (mat(8, 3, 2.5), mat(6, 3, -1.5));
+    {
+        let store = CheckpointStore::durable(4, &tmp.0).unwrap();
+        store.save(b, 40, &u, &w);
+        assert_eq!(store.snapshots_taken(), 1);
+    } // "process" exits
+    let reopened = CheckpointStore::durable(4, &tmp.0).unwrap();
+    let cp = reopened.restore(b).expect("snapshots outlive the process");
+    assert_is_exactly(&cp, 40, &u, &w);
+    assert_eq!(reopened.latest_version(b), Some(40));
+}

@@ -311,6 +311,89 @@ fn prop_schedule_rounds_conflict_free_and_complete() {
 }
 
 #[test]
+fn prop_touching_matches_bruteforce() {
+    // The analytic O(1) `touching` construction must agree — contents
+    // AND order — with the brute-force scan over the full enumeration,
+    // for every block of random grids with p, q ≤ 8.
+    for case in 0..40u64 {
+        let mut rng = case_rng(case ^ 0x70C4);
+        let p = 2 + rng.gen_range(7); // 2..=8
+        let q = 2 + rng.gen_range(7);
+        let spec = GridSpec::new(p * 8, q * 8, p, q, 2);
+        let builder = ScheduleBuilder::new(spec, case);
+        for i in 0..p {
+            for j in 0..q {
+                let block = gridmc::grid::BlockId::new(i, j);
+                let brute: Vec<Structure> = Structure::enumerate(p, q)
+                    .into_iter()
+                    .filter(|s| s.blocks().contains(&block))
+                    .collect();
+                assert_eq!(
+                    builder.touching(block),
+                    brute,
+                    "case {case}: {p}x{q} block {block}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_post_join_schedules_stay_conflict_free() {
+    // Random grids with a random set of excluded (dormant) blocks:
+    // restricted epochs must stay conflict-free and never touch a
+    // dormant block; after include_all (the join), epochs must cover
+    // the full structure set conflict-free again.
+    for case in 0..25u64 {
+        let mut rng = case_rng(case ^ 0x901);
+        let p = 2 + rng.gen_range(7);
+        let q = 2 + rng.gen_range(7);
+        let spec = GridSpec::new(p * 6, q * 6, p, q, 2);
+        let mut builder = ScheduleBuilder::new(spec, case);
+        // Exclude a random trailing column when the geometry allows it,
+        // plus a few random blocks otherwise.
+        let mut dormant = Vec::new();
+        if q > 2 && rng.bool(0.5) {
+            dormant.extend((0..p).map(|i| gridmc::grid::BlockId::new(i, q - 1)));
+        } else {
+            for _ in 0..1 + rng.gen_range(2) {
+                dormant.push(gridmc::grid::BlockId::new(rng.gen_range(p), rng.gen_range(q)));
+            }
+        }
+        builder.exclude(&dormant);
+        let is_dormant =
+            |b: &gridmc::grid::BlockId| dormant.iter().any(|d| d == b);
+        for round in builder.epoch() {
+            for (a, s) in round.iter().enumerate() {
+                assert!(
+                    !s.blocks().iter().any(|b| is_dormant(b)),
+                    "case {case}: {s} touches a dormant block"
+                );
+                for other in &round[a + 1..] {
+                    assert!(!conflicts(s, other), "case {case}: {s} vs {other}");
+                }
+            }
+        }
+        // Post-join: the full geometry comes back, conflict-free.
+        builder.include_all();
+        let mut seen = std::collections::HashSet::new();
+        for round in builder.epoch() {
+            for (a, s) in round.iter().enumerate() {
+                assert!(seen.insert(*s), "case {case}: duplicate {s} post-join");
+                for other in &round[a + 1..] {
+                    assert!(!conflicts(s, other), "case {case}: {s} vs {other}");
+                }
+            }
+        }
+        assert_eq!(
+            seen.len(),
+            2 * (p - 1) * (q - 1),
+            "case {case}: post-join epoch covers the grown geometry"
+        );
+    }
+}
+
+#[test]
 fn prop_training_monotone_orders_on_easy_problems() {
     // Fully-observed tiny problems must drop cost by orders quickly.
     for case in 0..4u64 {

@@ -156,6 +156,26 @@ impl Default for GrowConfig {
     }
 }
 
+/// Membership-shrink section (`[shrink]` table, the mirror of
+/// `[grow]`): the trailing `columns` grid columns retire gracefully at
+/// `retire_step` completed updates — drain, final snapshot to the
+/// checkpoint sink, row factors handed to the surviving columns over
+/// the wire — and the schedule regenerates for the shrunk geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShrinkConfig {
+    /// Completed-update count at which the planned blocks retire.
+    pub retire_step: u64,
+    /// Trailing grid columns that retire (the surviving sub-grid
+    /// keeps `q − columns ≥ 2` columns).
+    pub columns: usize,
+}
+
+impl Default for ShrinkConfig {
+    fn default() -> Self {
+        Self { retire_step: 2000, columns: 1 }
+    }
+}
+
 /// A complete, launchable experiment.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -181,6 +201,9 @@ pub struct ExperimentConfig {
     /// Membership growth (`[grow]` table; `None` = every block live
     /// from the start). Requires a gossip driver.
     pub grow: Option<GrowConfig>,
+    /// Membership shrink (`[shrink]` table; `None` = nobody retires).
+    /// Requires a gossip driver.
+    pub shrink: Option<ShrinkConfig>,
     /// Per-block snapshot cadence independent of any fault plan (the
     /// effective cadence is the max of this and the `[faults]` value).
     pub checkpoint_every: u64,
@@ -293,6 +316,13 @@ impl ExperimentConfig {
                     columns: doc.usize_or("grow.columns", d.columns),
                 }
             }),
+            shrink: doc.has_prefix("shrink.").then(|| {
+                let d = ShrinkConfig::default();
+                ShrinkConfig {
+                    retire_step: doc.u64_or("shrink.retire_step", d.retire_step),
+                    columns: doc.usize_or("shrink.columns", d.columns),
+                }
+            }),
             checkpoint_every: doc.u64_or("checkpoint_every", 0),
             checkpoint_dir: doc
                 .get("checkpoint_dir")
@@ -388,6 +418,12 @@ impl ExperimentConfig {
             s.push_str(&format!(
                 "\n[grow]\njoin_step = {}\ncolumns = {}\n",
                 g.join_step, g.columns
+            ));
+        }
+        if let Some(sh) = &self.shrink {
+            s.push_str(&format!(
+                "\n[shrink]\nretire_step = {}\ncolumns = {}\n",
+                sh.retire_step, sh.columns
             ));
         }
         Ok(s)
@@ -527,6 +563,28 @@ mod tests {
         let f = partial.faults.expect("present table parses to Some");
         assert_eq!(f.kills, 7);
         assert_eq!(f.checkpoint_every, FaultConfig::default().checkpoint_every);
+    }
+
+    #[test]
+    fn shrink_table_roundtrip_and_absence() {
+        let mut cfg = presets::exp(1).unwrap();
+        assert!(cfg.shrink.is_none(), "presets keep their membership by default");
+        assert!(!cfg.to_toml().unwrap().contains("[shrink]"));
+        cfg.driver = DriverChoice::Parallel;
+        cfg.shrink = Some(ShrinkConfig { retire_step: 4321, columns: 2 });
+        let text = cfg.to_toml().unwrap();
+        assert!(text.contains("[shrink]"), "{text}");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.shrink, cfg.shrink);
+        // A partially specified table fills in defaults.
+        let partial = ExperimentConfig::from_toml(&format!(
+            "{}[shrink]\ncolumns = 2\n",
+            text.split("[shrink]").next().unwrap()
+        ))
+        .unwrap();
+        let sh = partial.shrink.expect("present table parses to Some");
+        assert_eq!(sh.columns, 2);
+        assert_eq!(sh.retire_step, ShrinkConfig::default().retire_step);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::{Error, Result};
 
 use super::{
     DatasetConfig, DriverChoice, EngineChoice, ExperimentConfig, GridConfig, GrowConfig,
+    ShrinkConfig,
 };
 
 /// Table 1, experiments 1–6.
@@ -68,6 +69,7 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
         sim: SimConfig::default(),
         faults: None,
         grow: None,
+        shrink: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
     })
@@ -107,6 +109,7 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
         sim: SimConfig::default(),
         faults: None,
         grow: None,
+        shrink: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
     }
@@ -161,6 +164,7 @@ pub fn churn() -> ExperimentConfig {
             seed: 0xC0A7,
         }),
         grow: None,
+        shrink: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
     }
@@ -186,6 +190,27 @@ pub fn grow() -> ExperimentConfig {
     cfg.sim = SimConfig::default();
     cfg.faults = None;
     cfg.grow = Some(GrowConfig { join_step: 2000, columns: 1 });
+    cfg.checkpoint_every = 8;
+    cfg
+}
+
+/// The membership-shrink scenario (`gridmc bench-table shrink`,
+/// `BENCH_shrink.json`): the same 6×6 problem as [`churn`]/[`grow`],
+/// but the trailing grid column — 6 of 36 blocks — retires gracefully
+/// at step 4000 of 6000 ([`crate::net::AgentMsg::Retire`]): each retiree
+/// drains, final-snapshots to the checkpoint sink, hands its row
+/// factors to the nearest surviving column of its row over the wire,
+/// and leaves the schedule, which regenerates for the 6×5 geometry.
+/// Fully deterministic under the round-barrier driver for fixed seeds;
+/// the bench harness also runs it under the async driver at
+/// `max_inflight > 1`, where acceptance is statistical.
+pub fn shrink() -> ExperimentConfig {
+    let mut cfg = churn();
+    cfg.name = "shrink".into();
+    cfg.transport = TransportKind::Channel;
+    cfg.sim = SimConfig::default();
+    cfg.faults = None;
+    cfg.shrink = Some(ShrinkConfig { retire_step: 4000, columns: 1 });
     cfg.checkpoint_every = 8;
     cfg
 }
@@ -291,6 +316,20 @@ mod tests {
         assert_eq!(back.grow, cfg.grow);
         assert_eq!(back.checkpoint_every, cfg.checkpoint_every);
         assert_eq!(back.checkpoint_dir, cfg.checkpoint_dir);
+    }
+
+    #[test]
+    fn shrink_preset_is_well_formed() {
+        let cfg = shrink();
+        assert_eq!(cfg.driver, DriverChoice::Parallel, "deterministic leaves need the barrier");
+        let sh = cfg.shrink.expect("shrink preset has a [shrink] table");
+        assert!(sh.columns >= 1 && cfg.grid.q >= sh.columns + 2, "surviving sub-grid stays valid");
+        assert!(sh.retire_step < cfg.solver.max_iters, "the leave fires within the budget");
+        assert!(cfg.checkpoint_every > 0, "retirements final-snapshot into the sink");
+        assert!(cfg.faults.is_none(), "the scenario isolates the leave from churn");
+        let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.shrink, cfg.shrink);
+        assert_eq!(back.checkpoint_every, cfg.checkpoint_every);
     }
 
     #[test]

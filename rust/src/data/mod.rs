@@ -10,9 +10,9 @@
 //!   like kernels the native engine needs.
 //! * [`CooMatrix`] / [`CsrMatrix`] — sparse observed-entry storage for
 //!   ratings-scale data.
-//! * [`synthetic`] — planted low-rank matrices with Bernoulli masking
+//! * `synthetic` — planted low-rank matrices with Bernoulli masking
 //!   (the paper's synthetic protocol, §5).
-//! * [`ratings`] — the MovieLens/Netflix *substitute*: a seeded planted-
+//! * `ratings` — the MovieLens/Netflix *substitute*: a seeded planted-
 //!   factor ratings generator with power-law user/item marginals
 //!   (DESIGN.md §7 records why this preserves the Table-3 trends).
 //! * [`loader`] — parser for real MovieLens files, used automatically

@@ -9,6 +9,8 @@
 //! * [`fig2`] — analytic vs empirical selection frequencies (Figure 2);
 //! * [`parallel`] — transport scaling of the gossip runtime (§6 +
 //!   `net/`): channel vs multiplex vs async at 64–1024 blocks;
+//! * [`scenarios`] — the elasticity scenarios, one file each: churn
+//!   recovery, membership growth, membership shrink;
 //! * [`ablations`] — normalization / ρ / baseline comparisons.
 //!
 //! Iteration budgets honor `GRIDMC_ITER_SCALE` (see
@@ -18,13 +20,14 @@
 pub mod ablations;
 pub mod fig2;
 pub mod parallel;
+pub mod scenarios;
 pub mod table2;
 pub mod table3;
 
 use crate::config::{DriverChoice, EngineChoice, ExperimentConfig};
 use crate::data::SplitDataset;
 use crate::engine::{Engine, NativeEngine, NativeMode, XlaEngine};
-use crate::gossip::{AsyncDriver, GrowthPlan, ParallelDriver};
+use crate::gossip::{AsyncDriver, Driver, GrowthPlan, ParallelDriver, ShrinkPlan};
 use crate::grid::GridSpec;
 use crate::model::FactorState;
 use crate::net::FaultPlan;
@@ -85,6 +88,13 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
                 .into(),
         ));
     }
+    if cfg.shrink.is_some() && cfg.driver == DriverChoice::Sequential {
+        return Err(Error::Config(
+            "a [shrink] plan needs a supervising gossip driver \
+             (driver = \"parallel\" or \"async\")"
+                .into(),
+        ));
+    }
     // Snapshot cadence: the [faults] table's value, the top-level
     // `checkpoint_every`, or both — the stricter (larger) wins.
     let cadence = cfg
@@ -99,36 +109,45 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
         .map(|g| GrowthPlan::trailing_columns(spec, g.columns, g.join_step))
         .transpose()?
         .unwrap_or_default();
+    let shrink = cfg
+        .shrink
+        .as_ref()
+        .map(|s| ShrinkPlan::trailing_columns(spec, s.columns, s.retire_step))
+        .transpose()?
+        .unwrap_or_default();
     let mut engine = build_engine(cfg.engine, &spec)?;
     let (report, state) = match cfg.driver {
         DriverChoice::Sequential => {
             let driver = SequentialDriver::new(spec, cfg.solver.clone());
             driver.run(engine.as_mut(), &data.train)?
         }
-        DriverChoice::Parallel => {
-            let mut driver = ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers)
-                .with_net(cfg.net_config())
-                .with_checkpoints(cadence)
-                .with_growth(growth);
-            if let Some(f) = &cfg.faults {
-                driver = driver.with_faults(FaultPlan::generate(spec, f));
+        // The two gossip disciplines share every configuration knob and
+        // train behind the shared `Driver` trait; the macro keeps the
+        // builder chain in exactly one place so a new knob cannot be
+        // wired into one driver but not the other.
+        DriverChoice::Parallel | DriverChoice::Async => {
+            macro_rules! configured {
+                ($new:expr) => {{
+                    let mut d = $new
+                        .with_net(cfg.net_config())
+                        .with_checkpoints(cadence)
+                        .with_growth(growth)
+                        .with_shrink(shrink);
+                    if let Some(f) = &cfg.faults {
+                        d = d.with_faults(FaultPlan::generate(spec, f));
+                    }
+                    if let Some(dir) = &cfg.checkpoint_dir {
+                        d = d.with_checkpoint_dir(dir);
+                    }
+                    Box::new(d) as Box<dyn Driver>
+                }};
             }
-            if let Some(dir) = &cfg.checkpoint_dir {
-                driver = driver.with_checkpoint_dir(dir);
-            }
-            driver.run(engine, &data.train)?
-        }
-        DriverChoice::Async => {
-            let mut driver = AsyncDriver::new(spec, cfg.solver.clone(), cfg.workers)
-                .with_net(cfg.net_config())
-                .with_checkpoints(cadence)
-                .with_growth(growth);
-            if let Some(f) = &cfg.faults {
-                driver = driver.with_faults(FaultPlan::generate(spec, f));
-            }
-            if let Some(dir) = &cfg.checkpoint_dir {
-                driver = driver.with_checkpoint_dir(dir);
-            }
+            let driver: Box<dyn Driver> = match cfg.driver {
+                DriverChoice::Parallel => {
+                    configured!(ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers))
+                }
+                _ => configured!(AsyncDriver::new(spec, cfg.solver.clone(), cfg.workers)),
+            };
             driver.run(engine, &data.train)?
         }
     };
@@ -156,6 +175,13 @@ pub fn format_outcome(cfg: &ExperimentConfig, o: &Outcome) -> String {
             "\nmembership   {} block(s) joined mid-run ({} warm from checkpoints)",
             r.join_count(),
             r.warm_join_count()
+        ));
+    }
+    if r.retire_count() > 0 {
+        fault_line.push_str(&format!(
+            "\nmembership   {} block(s) retired mid-run ({} factor hand-off(s) to heirs)",
+            r.retire_count(),
+            r.handoff_count()
         ));
     }
     format!(
@@ -289,6 +315,39 @@ mod tests {
         cfg.driver = DriverChoice::Sequential;
         let err = run_experiment(&cfg).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn shrink_requires_a_gossip_driver() {
+        let mut cfg = presets::shrink();
+        cfg.driver = DriverChoice::Sequential;
+        let err = run_experiment(&cfg).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn shrink_preset_end_to_end_records_retirements() {
+        // A shrunk shrink preset: same wiring, test-sized budget.
+        let mut cfg = presets::shrink();
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 120;
+            s.n = 120;
+        }
+        cfg.solver.max_iters = 1200;
+        cfg.solver.eval_every = 400;
+        if let Some(sh) = cfg.shrink.as_mut() {
+            sh.retire_step = 800;
+        }
+        let o = run_experiment(&cfg).unwrap();
+        assert_eq!(o.report.retire_count(), cfg.grid.p, "{:?}", o.report.faults);
+        assert_eq!(
+            o.report.handoff_count(),
+            cfg.grid.p as u64,
+            "whole-column leave: one row hand-off per retiree"
+        );
+        assert!(o.report.final_cost < o.report.curve.initial().unwrap());
+        let s = format_outcome(&cfg, &o);
+        assert!(s.contains("retired mid-run"), "{s}");
     }
 
     #[test]

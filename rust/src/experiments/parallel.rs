@@ -1,28 +1,19 @@
 //! Transport scaling of the gossip runtime (§6 future work + the
-//! `net/` subsystem), plus the churn recovery scenario.
+//! `net/` subsystem).
 //!
 //! **Scaling scan** ([`run`]): measures structure updates/second with
-//! per-block work held constant ([`BLOCK_SIDE`]² cells per block) while
+//! per-block work held constant (`BLOCK_SIDE`² cells per block) while
 //! the grid — and therefore the agent count — grows: thread-per-block
 //! `ChannelTransport` vs `MultiplexTransport` under the round-barrier
 //! [`ParallelDriver`], plus the barrier-free [`AsyncDriver`], at
-//! 64 / 256 / 1024 blocks. Each configuration runs [`REPEATS`] times;
+//! 64 / 256 / 1024 blocks. Each configuration runs `REPEATS` times;
 //! median/p10/p90 land in `BENCH_parallel_scaling.json` next to the
 //! stdout table (format in PERF.md §Reading `BENCH_*.json`).
 //!
-//! **Churn scenario** ([`run_churn`]): trains the
-//! [`presets::churn`] problem twice — fault-free, then under its
-//! seeded fault plan (≈ 11% of agents crashed and restored from
-//! checkpoints, two links severed and healed) — and writes
-//! `BENCH_churn.json` with the recovery-overhead numbers and the
-//! byte-stable executed-event trace (PERF.md §Fault tolerance).
-//!
-//! **Growth scenario** ([`run_grow`]): trains the [`presets::grow`]
-//! problem three ways — full grid (the reference, which also seeds a
-//! durable [`crate::gossip::DiskSink`]), trailing column joining
-//! *cold*, and the same column joining *warm* from the reference
-//! run's snapshots — and writes `BENCH_grow.json` (PERF.md §Fault
-//! tolerance).
+//! The elasticity scenarios (churn, grow, shrink) moved to
+//! [`super::scenarios`] — one file per scenario, so adding one no
+//! longer grows this file; their harnesses stay re-exported here for
+//! backwards compatibility.
 
 use std::io::Write;
 
@@ -31,10 +22,20 @@ use crate::data::{CooMatrix, SyntheticConfig};
 use crate::engine::NativeEngine;
 use crate::gossip::{AsyncDriver, ParallelDriver, ScheduleBuilder};
 use crate::grid::GridSpec;
-use crate::metrics::{bench_json_header, percentiles, Percentiles, RecoveryOverhead, TablePrinter};
-use crate::net::{fault::render_trace, FaultRecord, NetConfig};
+use crate::metrics::{bench_json_header, percentiles, Percentiles, TablePrinter};
+use crate::net::NetConfig;
 use crate::solver::{SolverConfig, StepSchedule};
 use crate::Result;
+
+pub use super::scenarios::churn::{
+    collect_churn, render_churn, run_churn, write_churn_json, ChurnOutcome, ChurnRun,
+};
+pub use super::scenarios::grow::{
+    collect_grow, render_grow, run_grow, write_grow_json, GrowOutcome, GrowRun,
+};
+pub use super::scenarios::shrink::{
+    collect_shrink, render_shrink, run_shrink, write_shrink_json, ShrinkOutcome, ShrinkRun,
+};
 
 /// Blocks per grid side: 8×8 = 64, 16×16 = 256, 32×32 = 1024 agents.
 pub const GRID_SIDES: [usize; 3] = [8, 16, 32];
@@ -208,335 +209,6 @@ pub fn run() -> Result<String> {
     Ok(format!("{}{note}", render(&points)))
 }
 
-/// One side of the churn comparison (fault-free or churned).
-#[derive(Debug, Clone)]
-pub struct ChurnRun {
-    pub rmse: f64,
-    pub final_cost: f64,
-    pub iters: u64,
-    pub wall: std::time::Duration,
-}
-
-/// The churn scenario's full result (`BENCH_churn.json`).
-#[derive(Debug, Clone)]
-pub struct ChurnOutcome {
-    pub grid: (usize, usize),
-    pub clean: ChurnRun,
-    pub churned: ChurnRun,
-    pub overhead: RecoveryOverhead,
-    /// Executed fault actions — deterministic for the preset's seeds,
-    /// so [`render_trace`] of this field is byte-identical across runs.
-    pub trace: Vec<FaultRecord>,
-}
-
-/// Train the churn preset fault-free and churned on the same dataset.
-pub fn collect_churn() -> Result<ChurnOutcome> {
-    let mut cfg = presets::apply_iter_scale(presets::churn());
-    if let Some(f) = cfg.faults.as_mut() {
-        // Only when GRIDMC_ITER_SCALE shrank the budget below the
-        // preset's fault window: pull the window back inside it so
-        // every scheduled event still fires. At full scale the plan is
-        // untouched and matches `train --preset churn` exactly.
-        if f.until_step >= cfg.solver.max_iters {
-            f.from_step = f.from_step.min(cfg.solver.max_iters / 8);
-            f.until_step = (cfg.solver.max_iters / 2).max(f.from_step + 1);
-        }
-    }
-    let mut clean_cfg = cfg.clone();
-    clean_cfg.name = "churn-clean".into();
-    clean_cfg.faults = None;
-    let data = cfg.dataset.load()?;
-    let clean = crate::experiments::run_experiment_on(&clean_cfg, &data)?;
-    let churned = crate::experiments::run_experiment_on(&cfg, &data)?;
-    let as_run = |o: &crate::experiments::Outcome| ChurnRun {
-        rmse: o.test_rmse,
-        final_cost: o.report.final_cost,
-        iters: o.report.iters,
-        wall: o.report.wall,
-    };
-    let clean_run = as_run(&clean);
-    let churned_run = as_run(&churned);
-    // Derived from the two runs above (not re-read from the outcomes),
-    // so the JSON's "recovery" ratios always match its "clean"/
-    // "churned" rows.
-    let overhead = RecoveryOverhead {
-        kills: churned.report.kill_count(),
-        partitions: churned.report.partition_count(),
-        lost_updates: churned.report.lost_updates(),
-        clean_rmse: clean_run.rmse,
-        churned_rmse: churned_run.rmse,
-        clean_wall: clean_run.wall,
-        churned_wall: churned_run.wall,
-    };
-    Ok(ChurnOutcome {
-        grid: (cfg.grid.p, cfg.grid.q),
-        clean: clean_run,
-        churned: churned_run,
-        overhead,
-        trace: churned.report.faults.clone(),
-    })
-}
-
-/// Render the churn comparison table plus the executed-event trace.
-pub fn render_churn(o: &ChurnOutcome) -> String {
-    let mut t = TablePrinter::new(&["run", "test RMSE", "final cost", "iters", "wall"]);
-    for (label, r) in [("fault-free", &o.clean), ("churned", &o.churned)] {
-        t.row(&[
-            label.to_string(),
-            format!("{:.4}", r.rmse),
-            format!("{:.3e}", r.final_cost),
-            r.iters.to_string(),
-            format!("{:.2?}", r.wall),
-        ]);
-    }
-    format!(
-        "== churn recovery ({p}x{q} grid, {kills} crash-restore(s), {parts} partition(s), \
-         {lost} update(s) rolled back) ==\n{table}\
-         rmse ratio (churned/clean): {ratio:.4}   wall overhead: {wall:+.1}%\n\
-         executed events:\n{trace}",
-        p = o.grid.0,
-        q = o.grid.1,
-        kills = o.overhead.kills,
-        parts = o.overhead.partitions,
-        lost = o.overhead.lost_updates,
-        table = t.render(),
-        ratio = o.overhead.rmse_ratio(),
-        wall = o.overhead.wall_overhead() * 100.0,
-        trace = render_trace(&o.trace),
-    )
-}
-
-/// Write `BENCH_churn.json`: header, both runs, recovery overhead and
-/// the event trace. Everything below the header is deterministic for
-/// the preset's seeds; the `events` array in particular replays
-/// byte-for-byte (asserted by `tests/chaos.rs`).
-pub fn write_churn_json(path: &str, o: &ChurnOutcome) -> std::io::Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(bench_json_header("churn").as_bytes())?;
-    writeln!(
-        f,
-        "  \"grid\": {{ \"p\": {}, \"q\": {}, \"agents\": {} }},",
-        o.grid.0,
-        o.grid.1,
-        o.grid.0 * o.grid.1
-    )?;
-    writeln!(f, "  \"unit\": \"rmse\",")?;
-    for (label, r) in [("clean", &o.clean), ("churned", &o.churned)] {
-        writeln!(
-            f,
-            "  \"{label}\": {{ \"rmse\": {:.6e}, \"final_cost\": {:.6e}, \
-             \"iters\": {}, \"wall_s\": {:.3} }},",
-            r.rmse,
-            r.final_cost,
-            r.iters,
-            r.wall.as_secs_f64()
-        )?;
-    }
-    writeln!(
-        f,
-        "  \"recovery\": {{ \"kills\": {}, \"partitions\": {}, \"lost_updates\": {}, \
-         \"rmse_ratio\": {:.6}, \"wall_overhead\": {:.4} }},",
-        o.overhead.kills,
-        o.overhead.partitions,
-        o.overhead.lost_updates,
-        o.overhead.rmse_ratio(),
-        o.overhead.wall_overhead()
-    )?;
-    writeln!(f, "  \"events\": [")?;
-    for (k, r) in o.trace.iter().enumerate() {
-        let comma = if k + 1 == o.trace.len() { "" } else { "," };
-        writeln!(f, "    {}{comma}", r.json())?;
-    }
-    writeln!(f, "  ]")?;
-    writeln!(f, "}}")?;
-    Ok(())
-}
-
-/// Full churn harness: run both sides, write `BENCH_churn.json`, render.
-pub fn run_churn() -> Result<String> {
-    let outcome = collect_churn()?;
-    let out = "BENCH_churn.json";
-    let note = match write_churn_json(out, &outcome) {
-        Ok(()) => format!("wrote {out} ({} events)\n", outcome.trace.len()),
-        Err(e) => format!("could not write {out}: {e}\n"),
-    };
-    Ok(format!("{}{note}", render_churn(&outcome)))
-}
-
-/// One leg of the membership-growth comparison (`BENCH_grow.json`).
-#[derive(Debug, Clone)]
-pub struct GrowRun {
-    pub rmse: f64,
-    pub final_cost: f64,
-    pub iters: u64,
-    pub wall: std::time::Duration,
-    /// Joins that warm-started from a durable snapshot.
-    pub warm_joins: usize,
-}
-
-/// The growth scenario's full result (`BENCH_grow.json`).
-#[derive(Debug, Clone)]
-pub struct GrowOutcome {
-    pub grid: (usize, usize),
-    /// Completed updates at which the dormant column joined.
-    pub join_step: u64,
-    /// Blocks that joined mid-run.
-    pub joined_blocks: usize,
-    /// Full grid live from step 0 — the reference; its run also seeds
-    /// the durable sink the warm leg restores from.
-    pub full: GrowRun,
-    /// Trailing column joins *cold* (no prior snapshots).
-    pub cold: GrowRun,
-    /// Trailing column joins *warm* from the reference run's
-    /// [`crate::gossip::DiskSink`].
-    pub warm: GrowRun,
-    /// The warm leg's executed membership trace (join events).
-    pub trace: Vec<FaultRecord>,
-}
-
-/// Train the grow preset three ways on one dataset: full grid
-/// (reference, persisting durable checkpoints), cold join, warm join
-/// from the reference run's snapshot directory.
-pub fn collect_grow() -> Result<GrowOutcome> {
-    let mut cfg = presets::apply_iter_scale(presets::grow());
-    if let Some(g) = cfg.grow.as_mut() {
-        // Only when GRIDMC_ITER_SCALE shrank the budget below the
-        // preset's join step: pull the join back inside it so the
-        // grown column still trains. At full scale the plan is
-        // untouched and matches `train --preset grow` exactly.
-        if g.join_step >= cfg.solver.max_iters {
-            g.join_step = (cfg.solver.max_iters / 3).max(1);
-        }
-    }
-    let grow = cfg.grow.expect("grow preset has a [grow] table");
-    let data = cfg.dataset.load()?;
-
-    let sink_dir =
-        std::env::temp_dir().join(format!("gridmc-grow-sink-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&sink_dir);
-    let sink_path = sink_dir.to_string_lossy().into_owned();
-
-    let mut full_cfg = cfg.clone();
-    full_cfg.name = "grow-full".into();
-    full_cfg.grow = None;
-    full_cfg.checkpoint_dir = Some(sink_path.clone());
-    let full = crate::experiments::run_experiment_on(&full_cfg, &data)?;
-
-    let mut cold_cfg = cfg.clone();
-    cold_cfg.name = "grow-cold".into();
-    let cold = crate::experiments::run_experiment_on(&cold_cfg, &data)?;
-
-    let mut warm_cfg = cfg.clone();
-    warm_cfg.name = "grow-warm".into();
-    warm_cfg.checkpoint_dir = Some(sink_path);
-    let warm = crate::experiments::run_experiment_on(&warm_cfg, &data)?;
-    let _ = std::fs::remove_dir_all(&sink_dir);
-
-    let as_run = |o: &crate::experiments::Outcome| GrowRun {
-        rmse: o.test_rmse,
-        final_cost: o.report.final_cost,
-        iters: o.report.iters,
-        wall: o.report.wall,
-        warm_joins: o.report.warm_join_count(),
-    };
-    Ok(GrowOutcome {
-        grid: (cfg.grid.p, cfg.grid.q),
-        join_step: grow.join_step,
-        joined_blocks: cfg.grid.p * grow.columns,
-        full: as_run(&full),
-        cold: as_run(&cold),
-        warm: as_run(&warm),
-        trace: warm.report.faults.clone(),
-    })
-}
-
-/// Render the growth comparison table plus the membership trace.
-pub fn render_grow(o: &GrowOutcome) -> String {
-    let mut t =
-        TablePrinter::new(&["run", "test RMSE", "final cost", "iters", "wall", "warm joins"]);
-    for (label, r) in
-        [("full-grid", &o.full), ("cold-join", &o.cold), ("warm-join", &o.warm)]
-    {
-        t.row(&[
-            label.to_string(),
-            format!("{:.4}", r.rmse),
-            format!("{:.3e}", r.final_cost),
-            r.iters.to_string(),
-            format!("{:.2?}", r.wall),
-            r.warm_joins.to_string(),
-        ]);
-    }
-    let ratio = |a: f64, b: f64| if b <= 0.0 { f64::INFINITY } else { a / b };
-    format!(
-        "== membership growth ({p}x{q} grid, {n} block(s) joining at step {s}) ==\n{table}\
-         rmse ratio vs full grid: cold {cold:.4}, warm {warm:.4}\n\
-         executed events (warm leg):\n{trace}",
-        p = o.grid.0,
-        q = o.grid.1,
-        n = o.joined_blocks,
-        s = o.join_step,
-        table = t.render(),
-        cold = ratio(o.cold.rmse, o.full.rmse),
-        warm = ratio(o.warm.rmse, o.full.rmse),
-        trace = render_trace(&o.trace),
-    )
-}
-
-/// Write `BENCH_grow.json`: header, the join geometry, all three runs
-/// and the warm leg's membership trace. Everything below the header is
-/// deterministic for the preset's seeds.
-pub fn write_grow_json(path: &str, o: &GrowOutcome) -> std::io::Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(bench_json_header("grow").as_bytes())?;
-    writeln!(
-        f,
-        "  \"grid\": {{ \"p\": {}, \"q\": {}, \"agents\": {} }},",
-        o.grid.0,
-        o.grid.1,
-        o.grid.0 * o.grid.1
-    )?;
-    writeln!(f, "  \"unit\": \"rmse\",")?;
-    writeln!(
-        f,
-        "  \"join\": {{ \"step\": {}, \"blocks\": {} }},",
-        o.join_step, o.joined_blocks
-    )?;
-    for (label, r) in
-        [("full", &o.full), ("cold", &o.cold), ("warm", &o.warm)]
-    {
-        writeln!(
-            f,
-            "  \"{label}\": {{ \"rmse\": {:.6e}, \"final_cost\": {:.6e}, \
-             \"iters\": {}, \"wall_s\": {:.3}, \"warm_joins\": {} }},",
-            r.rmse,
-            r.final_cost,
-            r.iters,
-            r.wall.as_secs_f64(),
-            r.warm_joins
-        )?;
-    }
-    writeln!(f, "  \"events\": [")?;
-    for (k, r) in o.trace.iter().enumerate() {
-        let comma = if k + 1 == o.trace.len() { "" } else { "," };
-        writeln!(f, "    {}{comma}", r.json())?;
-    }
-    writeln!(f, "  ]")?;
-    writeln!(f, "}}")?;
-    Ok(())
-}
-
-/// Full growth harness: run all three legs, write `BENCH_grow.json`,
-/// render.
-pub fn run_grow() -> Result<String> {
-    let outcome = collect_grow()?;
-    let out = "BENCH_grow.json";
-    let note = match write_grow_json(out, &outcome) {
-        Ok(()) => format!("wrote {out} ({} events)\n", outcome.trace.len()),
-        Err(e) => format!("could not write {out}: {e}\n"),
-    };
-    Ok(format!("{}{note}", render_grow(&outcome)))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -594,140 +266,6 @@ mod tests {
         let opens = text.matches('{').count();
         let closes = text.matches('}').count();
         assert_eq!(opens, closes);
-    }
-
-    fn fake_churn() -> ChurnOutcome {
-        use crate::grid::BlockId;
-        let run = |rmse: f64, wall_ms: u64| ChurnRun {
-            rmse,
-            final_cost: 1.0e-3,
-            iters: 6000,
-            wall: std::time::Duration::from_millis(wall_ms),
-        };
-        ChurnOutcome {
-            grid: (6, 6),
-            clean: run(0.10, 1000),
-            churned: run(0.102, 1100),
-            overhead: RecoveryOverhead {
-                kills: 4,
-                partitions: 2,
-                lost_updates: 17,
-                clean_rmse: 0.10,
-                churned_rmse: 0.102,
-                clean_wall: std::time::Duration::from_millis(1000),
-                churned_wall: std::time::Duration::from_millis(1100),
-            },
-            trace: vec![
-                FaultRecord::Kill {
-                    step: 510,
-                    block: BlockId::new(1, 2),
-                    restored_version: 48,
-                    lost_updates: 5,
-                },
-                FaultRecord::Partition {
-                    step: 900,
-                    a: BlockId::new(0, 0),
-                    b: BlockId::new(0, 1),
-                    duration_us: 1500,
-                },
-            ],
-        }
-    }
-
-    #[test]
-    fn churn_render_reports_recovery() {
-        let s = render_churn(&fake_churn());
-        assert!(s.contains("fault-free"), "{s}");
-        assert!(s.contains("churned"), "{s}");
-        assert!(s.contains("rmse ratio"), "{s}");
-        assert!(s.contains("\"event\":\"kill\""), "{s}");
-        assert!(s.contains("\"event\":\"partition\""), "{s}");
-    }
-
-    #[test]
-    fn churn_json_is_balanced_and_complete() {
-        let dir = std::env::temp_dir().join("gridmc-churn-bench");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("BENCH_churn.json");
-        let path = path.to_str().unwrap();
-        write_churn_json(path, &fake_churn()).unwrap();
-        let text = std::fs::read_to_string(path).unwrap();
-        assert!(text.contains("\"bench\": \"churn\""));
-        assert!(text.contains("\"git_rev\""));
-        assert!(text.contains("\"clean\""));
-        assert!(text.contains("\"churned\""));
-        assert!(text.contains("\"recovery\""));
-        assert!(text.contains("\"lost_updates\": 17"));
-        assert!(text.contains("\"event\":\"kill\""));
-        let opens = text.matches('{').count();
-        let closes = text.matches('}').count();
-        assert_eq!(opens, closes);
-        let obrackets = text.matches('[').count();
-        let cbrackets = text.matches(']').count();
-        assert_eq!(obrackets, cbrackets);
-    }
-
-    fn fake_grow() -> GrowOutcome {
-        use crate::grid::BlockId;
-        let run = |rmse: f64, warm_joins: usize| GrowRun {
-            rmse,
-            final_cost: 2.0e-3,
-            iters: 6000,
-            wall: std::time::Duration::from_millis(900),
-            warm_joins,
-        };
-        GrowOutcome {
-            grid: (6, 6),
-            join_step: 2000,
-            joined_blocks: 6,
-            full: run(0.10, 0),
-            cold: run(0.12, 0),
-            warm: run(0.104, 6),
-            trace: vec![
-                FaultRecord::Join {
-                    step: 2000,
-                    block: BlockId::new(0, 5),
-                    version: 248,
-                    warm: true,
-                },
-                FaultRecord::Join {
-                    step: 2000,
-                    block: BlockId::new(1, 5),
-                    version: 251,
-                    warm: true,
-                },
-            ],
-        }
-    }
-
-    #[test]
-    fn grow_render_reports_all_three_legs() {
-        let s = render_grow(&fake_grow());
-        assert!(s.contains("full-grid"), "{s}");
-        assert!(s.contains("cold-join"), "{s}");
-        assert!(s.contains("warm-join"), "{s}");
-        assert!(s.contains("\"event\":\"join\""), "{s}");
-        assert!(s.contains("rmse ratio vs full grid"), "{s}");
-    }
-
-    #[test]
-    fn grow_json_is_balanced_and_complete() {
-        let dir = std::env::temp_dir().join("gridmc-grow-bench");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("BENCH_grow.json");
-        let path = path.to_str().unwrap();
-        write_grow_json(path, &fake_grow()).unwrap();
-        let text = std::fs::read_to_string(path).unwrap();
-        assert!(text.contains("\"bench\": \"grow\""));
-        assert!(text.contains("\"git_rev\""));
-        assert!(text.contains("\"join\""));
-        assert!(text.contains("\"full\""));
-        assert!(text.contains("\"cold\""));
-        assert!(text.contains("\"warm\""));
-        assert!(text.contains("\"warm_joins\": 6"));
-        assert!(text.contains("\"event\":\"join\""));
-        assert_eq!(text.matches('{').count(), text.matches('}').count());
-        assert_eq!(text.matches('[').count(), text.matches(']').count());
     }
 
     #[test]

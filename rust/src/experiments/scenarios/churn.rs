@@ -1,0 +1,232 @@
+//! The churn recovery scenario (`gridmc bench-table churn`,
+//! `BENCH_churn.json`).
+//!
+//! Trains the [`presets::churn`] problem twice — fault-free, then
+//! under its seeded fault plan (≈ 11% of agents crashed and restored
+//! from checkpoints, two links severed and healed) — and writes
+//! `BENCH_churn.json` with the recovery-overhead numbers and the
+//! byte-stable executed-event trace (PERF.md §Fault tolerance).
+
+use std::io::Write;
+
+use crate::config::presets;
+use crate::metrics::{bench_json_header, RecoveryOverhead, TablePrinter};
+use crate::net::{fault::render_trace, FaultRecord};
+use crate::Result;
+
+/// One side of the churn comparison (fault-free or churned).
+#[derive(Debug, Clone)]
+pub struct ChurnRun {
+    pub rmse: f64,
+    pub final_cost: f64,
+    pub iters: u64,
+    pub wall: std::time::Duration,
+}
+
+/// The churn scenario's full result (`BENCH_churn.json`).
+#[derive(Debug, Clone)]
+pub struct ChurnOutcome {
+    pub grid: (usize, usize),
+    pub clean: ChurnRun,
+    pub churned: ChurnRun,
+    pub overhead: RecoveryOverhead,
+    /// Executed fault actions — deterministic for the preset's seeds,
+    /// so [`render_trace`] of this field is byte-identical across runs.
+    pub trace: Vec<FaultRecord>,
+}
+
+/// Train the churn preset fault-free and churned on the same dataset.
+pub fn collect_churn() -> Result<ChurnOutcome> {
+    let mut cfg = presets::apply_iter_scale(presets::churn());
+    if let Some(f) = cfg.faults.as_mut() {
+        // Only when GRIDMC_ITER_SCALE shrank the budget below the
+        // preset's fault window: pull the window back inside it so
+        // every scheduled event still fires. At full scale the plan is
+        // untouched and matches `train --preset churn` exactly.
+        if f.until_step >= cfg.solver.max_iters {
+            f.from_step = f.from_step.min(cfg.solver.max_iters / 8);
+            f.until_step = (cfg.solver.max_iters / 2).max(f.from_step + 1);
+        }
+    }
+    let mut clean_cfg = cfg.clone();
+    clean_cfg.name = "churn-clean".into();
+    clean_cfg.faults = None;
+    let data = cfg.dataset.load()?;
+    let clean = crate::experiments::run_experiment_on(&clean_cfg, &data)?;
+    let churned = crate::experiments::run_experiment_on(&cfg, &data)?;
+    let as_run = |o: &crate::experiments::Outcome| ChurnRun {
+        rmse: o.test_rmse,
+        final_cost: o.report.final_cost,
+        iters: o.report.iters,
+        wall: o.report.wall,
+    };
+    let clean_run = as_run(&clean);
+    let churned_run = as_run(&churned);
+    // Derived from the two runs above (not re-read from the outcomes),
+    // so the JSON's "recovery" ratios always match its "clean"/
+    // "churned" rows.
+    let overhead = RecoveryOverhead {
+        kills: churned.report.kill_count(),
+        partitions: churned.report.partition_count(),
+        lost_updates: churned.report.lost_updates(),
+        clean_rmse: clean_run.rmse,
+        churned_rmse: churned_run.rmse,
+        clean_wall: clean_run.wall,
+        churned_wall: churned_run.wall,
+    };
+    Ok(ChurnOutcome {
+        grid: (cfg.grid.p, cfg.grid.q),
+        clean: clean_run,
+        churned: churned_run,
+        overhead,
+        trace: churned.report.faults.clone(),
+    })
+}
+
+/// Render the churn comparison table plus the executed-event trace.
+pub fn render_churn(o: &ChurnOutcome) -> String {
+    let mut t = TablePrinter::new(&["run", "test RMSE", "final cost", "iters", "wall"]);
+    for (label, r) in [("fault-free", &o.clean), ("churned", &o.churned)] {
+        t.row(&[
+            label.to_string(),
+            format!("{:.4}", r.rmse),
+            format!("{:.3e}", r.final_cost),
+            r.iters.to_string(),
+            format!("{:.2?}", r.wall),
+        ]);
+    }
+    format!(
+        "== churn recovery ({p}x{q} grid, {kills} crash-restore(s), {parts} partition(s), \
+         {lost} update(s) rolled back) ==\n{table}\
+         rmse ratio (churned/clean): {ratio:.4}   wall overhead: {wall:+.1}%\n\
+         executed events:\n{trace}",
+        p = o.grid.0,
+        q = o.grid.1,
+        kills = o.overhead.kills,
+        parts = o.overhead.partitions,
+        lost = o.overhead.lost_updates,
+        table = t.render(),
+        ratio = o.overhead.rmse_ratio(),
+        wall = o.overhead.wall_overhead() * 100.0,
+        trace = render_trace(&o.trace),
+    )
+}
+
+/// Write `BENCH_churn.json`: header, both runs, recovery overhead and
+/// the event trace. Everything below the header is deterministic for
+/// the preset's seeds; the `events` array in particular replays
+/// byte-for-byte (asserted by `tests/chaos.rs`).
+pub fn write_churn_json(path: &str, o: &ChurnOutcome) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(bench_json_header("churn").as_bytes())?;
+    super::write_grid_and_unit(&mut f, o.grid)?;
+    for (label, r) in [("clean", &o.clean), ("churned", &o.churned)] {
+        writeln!(
+            f,
+            "  \"{label}\": {{ \"rmse\": {:.6e}, \"final_cost\": {:.6e}, \
+             \"iters\": {}, \"wall_s\": {:.3} }},",
+            r.rmse,
+            r.final_cost,
+            r.iters,
+            r.wall.as_secs_f64()
+        )?;
+    }
+    writeln!(
+        f,
+        "  \"recovery\": {{ \"kills\": {}, \"partitions\": {}, \"lost_updates\": {}, \
+         \"rmse_ratio\": {:.6}, \"wall_overhead\": {:.4} }},",
+        o.overhead.kills,
+        o.overhead.partitions,
+        o.overhead.lost_updates,
+        o.overhead.rmse_ratio(),
+        o.overhead.wall_overhead()
+    )?;
+    super::write_events_and_close(&mut f, &o.trace)
+}
+
+/// Full churn harness: run both sides, write `BENCH_churn.json`, render.
+pub fn run_churn() -> Result<String> {
+    let outcome = collect_churn()?;
+    let out = "BENCH_churn.json";
+    let note = match write_churn_json(out, &outcome) {
+        Ok(()) => format!("wrote {out} ({} events)\n", outcome.trace.len()),
+        Err(e) => format!("could not write {out}: {e}\n"),
+    };
+    Ok(format!("{}{note}", render_churn(&outcome)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::BlockId;
+
+    fn fake_churn() -> ChurnOutcome {
+        let run = |rmse: f64, wall_ms: u64| ChurnRun {
+            rmse,
+            final_cost: 1.0e-3,
+            iters: 6000,
+            wall: std::time::Duration::from_millis(wall_ms),
+        };
+        ChurnOutcome {
+            grid: (6, 6),
+            clean: run(0.10, 1000),
+            churned: run(0.102, 1100),
+            overhead: RecoveryOverhead {
+                kills: 4,
+                partitions: 2,
+                lost_updates: 17,
+                clean_rmse: 0.10,
+                churned_rmse: 0.102,
+                clean_wall: std::time::Duration::from_millis(1000),
+                churned_wall: std::time::Duration::from_millis(1100),
+            },
+            trace: vec![
+                FaultRecord::Kill {
+                    step: 510,
+                    block: BlockId::new(1, 2),
+                    restored_version: 48,
+                    lost_updates: 5,
+                },
+                FaultRecord::Partition {
+                    step: 900,
+                    a: BlockId::new(0, 0),
+                    b: BlockId::new(0, 1),
+                    duration_us: 1500,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn churn_render_reports_recovery() {
+        let s = render_churn(&fake_churn());
+        assert!(s.contains("fault-free"), "{s}");
+        assert!(s.contains("churned"), "{s}");
+        assert!(s.contains("rmse ratio"), "{s}");
+        assert!(s.contains("\"event\":\"kill\""), "{s}");
+        assert!(s.contains("\"event\":\"partition\""), "{s}");
+    }
+
+    #[test]
+    fn churn_json_is_balanced_and_complete() {
+        let dir = std::env::temp_dir().join("gridmc-churn-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_churn.json");
+        let path = path.to_str().unwrap();
+        write_churn_json(path, &fake_churn()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"bench\": \"churn\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"clean\""));
+        assert!(text.contains("\"churned\""));
+        assert!(text.contains("\"recovery\""));
+        assert!(text.contains("\"lost_updates\": 17"));
+        assert!(text.contains("\"event\":\"kill\""));
+        let opens = text.matches('{').count();
+        let closes = text.matches('}').count();
+        assert_eq!(opens, closes);
+        let obrackets = text.matches('[').count();
+        let cbrackets = text.matches(']').count();
+        assert_eq!(obrackets, cbrackets);
+    }
+}

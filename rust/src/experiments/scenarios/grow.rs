@@ -1,0 +1,243 @@
+//! The membership-growth scenario (`gridmc bench-table grow`,
+//! `BENCH_grow.json`).
+//!
+//! Trains the [`presets::grow`] problem three ways — full grid (the
+//! reference, which also seeds a durable [`crate::gossip::DiskSink`]),
+//! trailing column joining *cold*, and the same column joining *warm*
+//! from the reference run's snapshots — and writes `BENCH_grow.json`
+//! (PERF.md §Fault tolerance).
+
+use std::io::Write;
+
+use crate::config::presets;
+use crate::metrics::{bench_json_header, TablePrinter};
+use crate::net::{fault::render_trace, FaultRecord};
+use crate::Result;
+
+/// One leg of the membership-growth comparison (`BENCH_grow.json`).
+#[derive(Debug, Clone)]
+pub struct GrowRun {
+    pub rmse: f64,
+    pub final_cost: f64,
+    pub iters: u64,
+    pub wall: std::time::Duration,
+    /// Joins that warm-started from a durable snapshot.
+    pub warm_joins: usize,
+}
+
+/// The growth scenario's full result (`BENCH_grow.json`).
+#[derive(Debug, Clone)]
+pub struct GrowOutcome {
+    pub grid: (usize, usize),
+    /// Completed updates at which the dormant column joined.
+    pub join_step: u64,
+    /// Blocks that joined mid-run.
+    pub joined_blocks: usize,
+    /// Full grid live from step 0 — the reference; its run also seeds
+    /// the durable sink the warm leg restores from.
+    pub full: GrowRun,
+    /// Trailing column joins *cold* (no prior snapshots).
+    pub cold: GrowRun,
+    /// Trailing column joins *warm* from the reference run's
+    /// [`crate::gossip::DiskSink`].
+    pub warm: GrowRun,
+    /// The warm leg's executed membership trace (join events).
+    pub trace: Vec<FaultRecord>,
+}
+
+/// Train the grow preset three ways on one dataset: full grid
+/// (reference, persisting durable checkpoints), cold join, warm join
+/// from the reference run's snapshot directory.
+pub fn collect_grow() -> Result<GrowOutcome> {
+    let mut cfg = presets::apply_iter_scale(presets::grow());
+    if let Some(g) = cfg.grow.as_mut() {
+        // Only when GRIDMC_ITER_SCALE shrank the budget below the
+        // preset's join step: pull the join back inside it so the
+        // grown column still trains. At full scale the plan is
+        // untouched and matches `train --preset grow` exactly.
+        if g.join_step >= cfg.solver.max_iters {
+            g.join_step = (cfg.solver.max_iters / 3).max(1);
+        }
+    }
+    let grow = cfg.grow.expect("grow preset has a [grow] table");
+    let data = cfg.dataset.load()?;
+
+    let sink_dir =
+        std::env::temp_dir().join(format!("gridmc-grow-sink-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&sink_dir);
+    let sink_path = sink_dir.to_string_lossy().into_owned();
+
+    let mut full_cfg = cfg.clone();
+    full_cfg.name = "grow-full".into();
+    full_cfg.grow = None;
+    full_cfg.checkpoint_dir = Some(sink_path.clone());
+    let full = crate::experiments::run_experiment_on(&full_cfg, &data)?;
+
+    let mut cold_cfg = cfg.clone();
+    cold_cfg.name = "grow-cold".into();
+    let cold = crate::experiments::run_experiment_on(&cold_cfg, &data)?;
+
+    let mut warm_cfg = cfg.clone();
+    warm_cfg.name = "grow-warm".into();
+    warm_cfg.checkpoint_dir = Some(sink_path);
+    let warm = crate::experiments::run_experiment_on(&warm_cfg, &data)?;
+    let _ = std::fs::remove_dir_all(&sink_dir);
+
+    let as_run = |o: &crate::experiments::Outcome| GrowRun {
+        rmse: o.test_rmse,
+        final_cost: o.report.final_cost,
+        iters: o.report.iters,
+        wall: o.report.wall,
+        warm_joins: o.report.warm_join_count(),
+    };
+    Ok(GrowOutcome {
+        grid: (cfg.grid.p, cfg.grid.q),
+        join_step: grow.join_step,
+        joined_blocks: cfg.grid.p * grow.columns,
+        full: as_run(&full),
+        cold: as_run(&cold),
+        warm: as_run(&warm),
+        trace: warm.report.faults.clone(),
+    })
+}
+
+/// Render the growth comparison table plus the membership trace.
+pub fn render_grow(o: &GrowOutcome) -> String {
+    let mut t =
+        TablePrinter::new(&["run", "test RMSE", "final cost", "iters", "wall", "warm joins"]);
+    for (label, r) in
+        [("full-grid", &o.full), ("cold-join", &o.cold), ("warm-join", &o.warm)]
+    {
+        t.row(&[
+            label.to_string(),
+            format!("{:.4}", r.rmse),
+            format!("{:.3e}", r.final_cost),
+            r.iters.to_string(),
+            format!("{:.2?}", r.wall),
+            r.warm_joins.to_string(),
+        ]);
+    }
+    let ratio = |a: f64, b: f64| if b <= 0.0 { f64::INFINITY } else { a / b };
+    format!(
+        "== membership growth ({p}x{q} grid, {n} block(s) joining at step {s}) ==\n{table}\
+         rmse ratio vs full grid: cold {cold:.4}, warm {warm:.4}\n\
+         executed events (warm leg):\n{trace}",
+        p = o.grid.0,
+        q = o.grid.1,
+        n = o.joined_blocks,
+        s = o.join_step,
+        table = t.render(),
+        cold = ratio(o.cold.rmse, o.full.rmse),
+        warm = ratio(o.warm.rmse, o.full.rmse),
+        trace = render_trace(&o.trace),
+    )
+}
+
+/// Write `BENCH_grow.json`: header, the join geometry, all three runs
+/// and the warm leg's membership trace. Everything below the header is
+/// deterministic for the preset's seeds.
+pub fn write_grow_json(path: &str, o: &GrowOutcome) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(bench_json_header("grow").as_bytes())?;
+    super::write_grid_and_unit(&mut f, o.grid)?;
+    writeln!(
+        f,
+        "  \"join\": {{ \"step\": {}, \"blocks\": {} }},",
+        o.join_step, o.joined_blocks
+    )?;
+    for (label, r) in
+        [("full", &o.full), ("cold", &o.cold), ("warm", &o.warm)]
+    {
+        writeln!(
+            f,
+            "  \"{label}\": {{ \"rmse\": {:.6e}, \"final_cost\": {:.6e}, \
+             \"iters\": {}, \"wall_s\": {:.3}, \"warm_joins\": {} }},",
+            r.rmse,
+            r.final_cost,
+            r.iters,
+            r.wall.as_secs_f64(),
+            r.warm_joins
+        )?;
+    }
+    super::write_events_and_close(&mut f, &o.trace)
+}
+
+/// Full growth harness: run all three legs, write `BENCH_grow.json`,
+/// render.
+pub fn run_grow() -> Result<String> {
+    let outcome = collect_grow()?;
+    let out = "BENCH_grow.json";
+    let note = match write_grow_json(out, &outcome) {
+        Ok(()) => format!("wrote {out} ({} events)\n", outcome.trace.len()),
+        Err(e) => format!("could not write {out}: {e}\n"),
+    };
+    Ok(format!("{}{note}", render_grow(&outcome)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::BlockId;
+
+    fn fake_grow() -> GrowOutcome {
+        let run = |rmse: f64, warm_joins: usize| GrowRun {
+            rmse,
+            final_cost: 2.0e-3,
+            iters: 6000,
+            wall: std::time::Duration::from_millis(900),
+            warm_joins,
+        };
+        GrowOutcome {
+            grid: (6, 6),
+            join_step: 2000,
+            joined_blocks: 6,
+            full: run(0.10, 0),
+            cold: run(0.12, 0),
+            warm: run(0.104, 6),
+            trace: vec![
+                FaultRecord::Join {
+                    step: 2000,
+                    block: BlockId::new(0, 5),
+                    version: 248,
+                    warm: true,
+                },
+                FaultRecord::Join {
+                    step: 2000,
+                    block: BlockId::new(1, 5),
+                    version: 251,
+                    warm: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn grow_render_reports_all_three_legs() {
+        let s = render_grow(&fake_grow());
+        assert!(s.contains("full-grid"), "{s}");
+        assert!(s.contains("cold-join"), "{s}");
+        assert!(s.contains("warm-join"), "{s}");
+        assert!(s.contains("\"event\":\"join\""), "{s}");
+        assert!(s.contains("rmse ratio vs full grid"), "{s}");
+    }
+
+    #[test]
+    fn grow_json_is_balanced_and_complete() {
+        let dir = std::env::temp_dir().join("gridmc-grow-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_grow.json");
+        let path = path.to_str().unwrap();
+        write_grow_json(path, &fake_grow()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"bench\": \"grow\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"join\""));
+        assert!(text.contains("\"full\""));
+        assert!(text.contains("\"cold\""));
+        assert!(text.contains("\"warm\""));
+        assert!(text.contains("\"warm_joins\": 6"));
+        assert!(text.contains("\"event\":\"join\""));
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
+    }
+}

@@ -1,0 +1,49 @@
+//! Per-scenario bench harnesses (`gridmc bench-table <scenario>`).
+//!
+//! Each elasticity scenario — churn recovery, membership growth,
+//! membership shrink — lives in its own file with the same shape:
+//! `collect_*` trains the preset's legs and returns a typed outcome,
+//! `render_*` prints the human table, `write_*_json` emits the
+//! machine-readable `BENCH_<scenario>.json` artifact (key sets and
+//! types pinned by `tests/bench_schema.rs`), and `run_*` glues the
+//! three together for the CLI. Adding a scenario is one new file plus
+//! a CLI arm — the transport-scaling scan stays in
+//! [`super::parallel`], which re-exports these for backwards
+//! compatibility.
+
+pub mod churn;
+pub mod grow;
+pub mod shrink;
+
+use std::io::Write;
+
+use crate::net::FaultRecord;
+
+/// Shared `"grid"` + `"unit"` lines of every scenario artifact (they
+/// all report RMSE over a `p × q` agent grid).
+pub(crate) fn write_grid_and_unit(f: &mut impl Write, grid: (usize, usize)) -> std::io::Result<()> {
+    writeln!(
+        f,
+        "  \"grid\": {{ \"p\": {}, \"q\": {}, \"agents\": {} }},",
+        grid.0,
+        grid.1,
+        grid.0 * grid.1
+    )?;
+    writeln!(f, "  \"unit\": \"rmse\",")
+}
+
+/// Shared trailing `"events"` array plus the document's closing brace:
+/// the scenario's executed fault/membership trace, one canonical JSON
+/// object per line (byte-stable — see [`crate::net::fault::render_trace`]).
+pub(crate) fn write_events_and_close(
+    f: &mut impl Write,
+    trace: &[FaultRecord],
+) -> std::io::Result<()> {
+    writeln!(f, "  \"events\": [")?;
+    for (k, r) in trace.iter().enumerate() {
+        let comma = if k + 1 == trace.len() { "" } else { "," };
+        writeln!(f, "    {}{comma}", r.json())?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")
+}

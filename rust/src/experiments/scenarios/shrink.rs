@@ -1,0 +1,269 @@
+//! The membership-shrink scenario (`gridmc bench-table shrink`,
+//! `BENCH_shrink.json`).
+//!
+//! Trains the [`presets::shrink`] problem three ways on one dataset —
+//! fixed membership (the reference), the trailing column retiring
+//! gracefully under the round-barrier driver (deterministic; its
+//! retire trace is the `events` array), and the same leave under the
+//! barrier-free async driver at `max_inflight > 1` (statistically,
+//! not bitwise, reproducible — the NOMAD trade) — and writes
+//! `BENCH_shrink.json` (PERF.md §Fault tolerance). The trend to
+//! watch: both shrunk legs close to the fixed-membership RMSE (the
+//! retirees' hand-offs preserve their row bands' progress; their
+//! frozen replicas only stop *improving*).
+
+use std::io::Write;
+
+use crate::config::{presets, DriverChoice};
+use crate::metrics::{bench_json_header, TablePrinter};
+use crate::net::{fault::render_trace, FaultRecord, TransportKind};
+use crate::Result;
+
+/// One leg of the membership-shrink comparison (`BENCH_shrink.json`).
+#[derive(Debug, Clone)]
+pub struct ShrinkRun {
+    pub rmse: f64,
+    pub final_cost: f64,
+    pub iters: u64,
+    pub wall: std::time::Duration,
+    /// Blocks that gracefully retired mid-run.
+    pub retires: usize,
+    /// Factor halves handed off to surviving heirs.
+    pub handoffs: u64,
+}
+
+/// The shrink scenario's full result (`BENCH_shrink.json`).
+#[derive(Debug, Clone)]
+pub struct ShrinkOutcome {
+    pub grid: (usize, usize),
+    /// Completed updates at which the trailing column retired.
+    pub retire_step: u64,
+    /// Blocks that retired mid-run.
+    pub retired_blocks: usize,
+    /// Fixed membership — the reference.
+    pub full: ShrinkRun,
+    /// Graceful leave under the round-barrier driver (deterministic).
+    pub shrunk: ShrinkRun,
+    /// Graceful leave under the async driver at `max_inflight > 1`
+    /// (statistical acceptance).
+    pub async_shrunk: ShrinkRun,
+    /// The deterministic leg's executed membership trace (retire
+    /// events) — byte-stable for the preset's seeds.
+    pub trace: Vec<FaultRecord>,
+}
+
+/// Train the shrink preset three ways on one dataset: fixed
+/// membership, graceful leave (parallel driver, durable sink),
+/// graceful leave (async driver, `max_inflight > 1`).
+pub fn collect_shrink() -> Result<ShrinkOutcome> {
+    let mut cfg = presets::apply_iter_scale(presets::shrink());
+    if let Some(s) = cfg.shrink.as_mut() {
+        // Only when GRIDMC_ITER_SCALE shrank the budget below the
+        // preset's retire step: pull the leave back inside it so the
+        // shrunk geometry still trains. At full scale the plan is
+        // untouched and matches `train --preset shrink` exactly.
+        if s.retire_step >= cfg.solver.max_iters {
+            s.retire_step = (2 * cfg.solver.max_iters / 3).max(1);
+        }
+    }
+    let shrink = cfg.shrink.expect("shrink preset has a [shrink] table");
+    let data = cfg.dataset.load()?;
+
+    let sink_dir =
+        std::env::temp_dir().join(format!("gridmc-shrink-sink-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&sink_dir);
+    let sink_path = sink_dir.to_string_lossy().into_owned();
+
+    let mut full_cfg = cfg.clone();
+    full_cfg.name = "shrink-full".into();
+    full_cfg.shrink = None;
+    let full = crate::experiments::run_experiment_on(&full_cfg, &data)?;
+
+    let mut graceful_cfg = cfg.clone();
+    graceful_cfg.name = "shrink-graceful".into();
+    graceful_cfg.checkpoint_dir = Some(sink_path);
+    let graceful = crate::experiments::run_experiment_on(&graceful_cfg, &data)?;
+    let _ = std::fs::remove_dir_all(&sink_dir);
+
+    let mut async_cfg = cfg.clone();
+    async_cfg.name = "shrink-async".into();
+    async_cfg.driver = DriverChoice::Async;
+    async_cfg.transport = TransportKind::Multiplex;
+    debug_assert!(async_cfg.workers > 1, "the async leg must run at max_inflight > 1");
+    let async_shrunk = crate::experiments::run_experiment_on(&async_cfg, &data)?;
+
+    let as_run = |o: &crate::experiments::Outcome| ShrinkRun {
+        rmse: o.test_rmse,
+        final_cost: o.report.final_cost,
+        iters: o.report.iters,
+        wall: o.report.wall,
+        retires: o.report.retire_count(),
+        handoffs: o.report.handoff_count(),
+    };
+    Ok(ShrinkOutcome {
+        grid: (cfg.grid.p, cfg.grid.q),
+        retire_step: shrink.retire_step,
+        retired_blocks: cfg.grid.p * shrink.columns,
+        full: as_run(&full),
+        shrunk: as_run(&graceful),
+        async_shrunk: as_run(&async_shrunk),
+        trace: graceful.report.faults.clone(),
+    })
+}
+
+/// Render the shrink comparison table plus the membership trace.
+pub fn render_shrink(o: &ShrinkOutcome) -> String {
+    let mut t = TablePrinter::new(&[
+        "run",
+        "test RMSE",
+        "final cost",
+        "iters",
+        "wall",
+        "retires",
+        "handoffs",
+    ]);
+    for (label, r) in [
+        ("fixed-membership", &o.full),
+        ("graceful-leave", &o.shrunk),
+        ("async-leave", &o.async_shrunk),
+    ] {
+        t.row(&[
+            label.to_string(),
+            format!("{:.4}", r.rmse),
+            format!("{:.3e}", r.final_cost),
+            r.iters.to_string(),
+            format!("{:.2?}", r.wall),
+            r.retires.to_string(),
+            r.handoffs.to_string(),
+        ]);
+    }
+    let ratio = |a: f64, b: f64| if b <= 0.0 { f64::INFINITY } else { a / b };
+    format!(
+        "== membership shrink ({p}x{q} grid, {n} block(s) retiring at step {s}) ==\n{table}\
+         rmse ratio vs fixed membership: graceful {g:.4}, async {a:.4}\n\
+         executed events (graceful leg):\n{trace}",
+        p = o.grid.0,
+        q = o.grid.1,
+        n = o.retired_blocks,
+        s = o.retire_step,
+        table = t.render(),
+        g = ratio(o.shrunk.rmse, o.full.rmse),
+        a = ratio(o.async_shrunk.rmse, o.full.rmse),
+        trace = render_trace(&o.trace),
+    )
+}
+
+/// Write `BENCH_shrink.json`: header, the retire geometry, all three
+/// runs and the graceful leg's membership trace. The `full` and
+/// `shrunk` rows (and the `events` array) are deterministic for the
+/// preset's seeds; `async` is statistical.
+pub fn write_shrink_json(path: &str, o: &ShrinkOutcome) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(bench_json_header("shrink").as_bytes())?;
+    super::write_grid_and_unit(&mut f, o.grid)?;
+    writeln!(
+        f,
+        "  \"retire\": {{ \"step\": {}, \"blocks\": {} }},",
+        o.retire_step, o.retired_blocks
+    )?;
+    for (label, r) in [
+        ("full", &o.full),
+        ("shrunk", &o.shrunk),
+        ("async", &o.async_shrunk),
+    ] {
+        writeln!(
+            f,
+            "  \"{label}\": {{ \"rmse\": {:.6e}, \"final_cost\": {:.6e}, \
+             \"iters\": {}, \"wall_s\": {:.3}, \"retires\": {}, \"handoffs\": {} }},",
+            r.rmse,
+            r.final_cost,
+            r.iters,
+            r.wall.as_secs_f64(),
+            r.retires,
+            r.handoffs
+        )?;
+    }
+    super::write_events_and_close(&mut f, &o.trace)
+}
+
+/// Full shrink harness: run all three legs, write `BENCH_shrink.json`,
+/// render.
+pub fn run_shrink() -> Result<String> {
+    let outcome = collect_shrink()?;
+    let out = "BENCH_shrink.json";
+    let note = match write_shrink_json(out, &outcome) {
+        Ok(()) => format!("wrote {out} ({} events)\n", outcome.trace.len()),
+        Err(e) => format!("could not write {out}: {e}\n"),
+    };
+    Ok(format!("{}{note}", render_shrink(&outcome)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::BlockId;
+
+    fn fake_shrink() -> ShrinkOutcome {
+        let run = |rmse: f64, retires: usize| ShrinkRun {
+            rmse,
+            final_cost: 2.0e-3,
+            iters: 6000,
+            wall: std::time::Duration::from_millis(900),
+            retires,
+            handoffs: retires as u64,
+        };
+        ShrinkOutcome {
+            grid: (6, 6),
+            retire_step: 2000,
+            retired_blocks: 6,
+            full: run(0.10, 0),
+            shrunk: run(0.103, 6),
+            async_shrunk: run(0.105, 6),
+            trace: vec![
+                FaultRecord::Retire {
+                    step: 2000,
+                    block: BlockId::new(0, 5),
+                    version: 233,
+                    handoffs: 1,
+                },
+                FaultRecord::Retire {
+                    step: 2000,
+                    block: BlockId::new(1, 5),
+                    version: 229,
+                    handoffs: 1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn shrink_render_reports_all_three_legs() {
+        let s = render_shrink(&fake_shrink());
+        assert!(s.contains("fixed-membership"), "{s}");
+        assert!(s.contains("graceful-leave"), "{s}");
+        assert!(s.contains("async-leave"), "{s}");
+        assert!(s.contains("\"event\":\"retire\""), "{s}");
+        assert!(s.contains("rmse ratio vs fixed membership"), "{s}");
+    }
+
+    #[test]
+    fn shrink_json_is_balanced_and_complete() {
+        let dir = std::env::temp_dir().join("gridmc-shrink-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_shrink.json");
+        let path = path.to_str().unwrap();
+        write_shrink_json(path, &fake_shrink()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"bench\": \"shrink\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"retire\""));
+        assert!(text.contains("\"full\""));
+        assert!(text.contains("\"shrunk\""));
+        assert!(text.contains("\"async\""));
+        assert!(text.contains("\"handoffs\": 6"), "leg rows carry hand-off counts");
+        assert!(text.contains("\"handoffs\":1"), "event lines carry per-block hand-offs");
+        assert!(text.contains("\"event\":\"retire\""));
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
+    }
+}

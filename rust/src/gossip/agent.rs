@@ -68,6 +68,20 @@
 //! checkpoint sink when a snapshot of its block exists (a durable
 //! [`crate::gossip::DiskSink`] can carry one across runs), otherwise
 //! it cold-joins on its spawn factors, snapshotting them as version 0.
+//!
+//! **Graceful retirement** ([`AgentMsg::Retire`]): the mirror of a
+//! join. From a quiescent network the agent final-snapshots into its
+//! checkpoint sink, then hands each factor off exactly once over the
+//! wire: its row factors to the designated surviving block of its grid
+//! row, its column factors to one of its grid column
+//! ([`AgentMsg::HandOff`], the other half framed 0×0). Each heir
+//! absorbs the half it replicates by consensus midpoint (one counted
+//! factor mutation) and acks; after both acks the retiree goes
+//! inactive — frozen factors, still addressable for cost-free control
+//! traffic and the final collection — and reports
+//! [`DriverMsg::Retired`]. A retired block looks exactly like a
+//! dormant one, so a later [`AgentMsg::Join`] can regrow it, warm from
+//! its own final snapshot.
 
 use crate::data::DenseMatrix;
 use crate::engine::{Engine, EngineWorkspace, StructureParams};
@@ -99,6 +113,8 @@ enum Phase {
     Scatter { structure: Structure, token: u64, pending: u8 },
     /// Anchoring an abort: waiting for the members' revert `PutAck`s.
     Revert { token: u64, pending: u8 },
+    /// Retiring: waiting for the heirs' hand-off `PutAck`s.
+    Handoff { pending: u8 },
 }
 
 /// One block's state machine (factors + engine scratch + phase).
@@ -292,6 +308,20 @@ impl BlockAgent {
                 self.unbump_version();
                 out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
             }
+            AgentMsg::HandOff { from, u, w } => {
+                // A retiring neighbour's parting factors: absorb the
+                // non-empty half we replicate by consensus midpoint
+                // (one counted mutation), then ack. The other half
+                // arrives as a 0×0 placeholder and is ignored.
+                let mut absorbed = absorb_midpoint(&mut self.u, &u);
+                absorbed |= absorb_midpoint(&mut self.w, &w);
+                if absorbed {
+                    self.bump_version();
+                } else {
+                    log::warn!("{}: hand-off from {from} had no absorbable factor", self.id);
+                }
+                out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
+            }
             AgentMsg::PutAck { from: _ } => {
                 match std::mem::replace(&mut self.phase, Phase::Idle) {
                     Phase::Scatter { structure, token, pending } => {
@@ -321,8 +351,28 @@ impl BlockAgent {
                             self.phase = Phase::Revert { token, pending: pending - 1 };
                         }
                     }
+                    Phase::Handoff { pending } => {
+                        if pending <= 1 {
+                            // Every heir absorbed its half: leave the
+                            // membership with a frozen factor copy for
+                            // the final collection.
+                            self.active = false;
+                            out.push(Outgoing::Driver(DriverMsg::Retired {
+                                from: self.id,
+                                version: self.version,
+                                u: self.u.clone(),
+                                w: self.w.clone(),
+                            }));
+                        } else {
+                            self.phase = Phase::Handoff { pending: pending - 1 };
+                        }
+                    }
                     other => {
-                        debug_assert!(false, "{}: PutAck outside Scatter/Revert", self.id);
+                        debug_assert!(
+                            false,
+                            "{}: PutAck outside Scatter/Revert/Handoff",
+                            self.id
+                        );
                         self.phase = other;
                     }
                 }
@@ -422,6 +472,72 @@ impl BlockAgent {
                     warm,
                 }));
             }
+            AgentMsg::Retire { row_heir, col_heir } => {
+                debug_assert!(
+                    matches!(self.phase, Phase::Idle),
+                    "{}: Retire while a structure is in flight (supervisor bug)",
+                    self.id
+                );
+                if !self.active {
+                    log::warn!("{}: Retire on an inactive block; no-op", self.id);
+                    out.push(Outgoing::Driver(DriverMsg::Retired {
+                        from: self.id,
+                        version: self.version,
+                        u: self.u.clone(),
+                        w: self.w.clone(),
+                    }));
+                    return AgentStatus::Running;
+                }
+                // Final snapshot first: whatever happens to the heirs,
+                // the sink can regrow this block (or warm a later run).
+                if let Some(store) = &self.checkpoints {
+                    store.save(self.id, self.version, &self.u, &self.w);
+                    self.last_saved = self.version;
+                }
+                // The previous completion is no longer abortable once a
+                // retirement is in progress.
+                self.last_done = None;
+                // Hand each factor off exactly once: row factors to the
+                // row heir, column factors to the column heir; the half
+                // a frame does not carry travels as a 0×0 placeholder.
+                let mut pending = 0u8;
+                if let Some(heir) = row_heir {
+                    out.push(Outgoing::Peer(
+                        heir,
+                        AgentMsg::HandOff {
+                            from: self.id,
+                            u: self.u.clone(),
+                            w: DenseMatrix::zeros(0, 0),
+                        },
+                    ));
+                    pending += 1;
+                }
+                if let Some(heir) = col_heir {
+                    out.push(Outgoing::Peer(
+                        heir,
+                        AgentMsg::HandOff {
+                            from: self.id,
+                            u: DenseMatrix::zeros(0, 0),
+                            w: self.w.clone(),
+                        },
+                    ));
+                    pending += 1;
+                }
+                if pending == 0 {
+                    // No surviving replica holder anywhere (e.g. the
+                    // whole band retires): the sink snapshot is the
+                    // band's only continuation.
+                    self.active = false;
+                    out.push(Outgoing::Driver(DriverMsg::Retired {
+                        from: self.id,
+                        version: self.version,
+                        u: self.u.clone(),
+                        w: self.w.clone(),
+                    }));
+                } else {
+                    self.phase = Phase::Handoff { pending };
+                }
+            }
             AgentMsg::Crash => {
                 // Simulated process crash: factors, phase and scratch all
                 // die; the replacement boots from the last snapshot — or
@@ -462,7 +578,12 @@ impl BlockAgent {
             AgentMsg::Shutdown => {
                 let u = std::mem::take(&mut self.u);
                 let w = std::mem::take(&mut self.w);
-                out.push(Outgoing::Driver(DriverMsg::Retired { from: self.id, u, w }));
+                out.push(Outgoing::Driver(DriverMsg::Retired {
+                    from: self.id,
+                    version: self.version,
+                    u,
+                    w,
+                }));
                 return AgentStatus::Retired;
             }
         }
@@ -565,6 +686,20 @@ impl BlockAgent {
         ));
         self.phase = Phase::Revert { token, pending: 2 };
     }
+}
+
+/// Consensus-midpoint merge of a hand-off half into `dst`. The half a
+/// frame does not carry arrives as a 0×0 placeholder and any other
+/// shape mismatch is a stale frame from an incompatible geometry —
+/// both are ignored (returns `false`).
+fn absorb_midpoint(dst: &mut DenseMatrix, src: &DenseMatrix) -> bool {
+    if (src.rows(), src.cols()) != (dst.rows(), dst.cols()) || src.rows() * src.cols() == 0 {
+        return false;
+    }
+    for (d, s) in dst.as_mut_slice().iter_mut().zip(src.as_slice()) {
+        *d = 0.5 * (*d + *s);
+    }
+    true
 }
 
 #[cfg(test)]
@@ -1003,6 +1138,115 @@ mod tests {
         ));
         assert_eq!(cold.u, spawn_u, "cold join keeps the spawn factors");
         assert_eq!(cold_store.latest_version(id), Some(0), "cold join snapshots v0");
+    }
+
+    #[test]
+    fn retire_hands_each_factor_off_exactly_once() {
+        // 2×2 grid: (1,1) retires with row heir (1,0) and column heir
+        // (0,1). Each heir must absorb exactly the half it replicates
+        // (consensus midpoint, bitwise-checkable), the bystander (0,0)
+        // must not change at all, and the retiree must freeze inactive
+        // with a final snapshot in the sink.
+        let (spec, train) = problem();
+        let partition = BlockPartition::new(spec, &train).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&partition).unwrap();
+        let engine: Arc<dyn Engine> = Arc::new(engine);
+        let store = crate::gossip::CheckpointStore::in_memory(spec, 8);
+        let mut state = FactorState::init_random(spec, 77);
+        let mut agents = std::collections::HashMap::new();
+        let mut init = std::collections::HashMap::new();
+        for id in spec.blocks() {
+            let (u, w) = state.take_block(id);
+            init.insert(id.index(2), (u.clone(), w.clone()));
+            agents.insert(
+                id.index(2),
+                BlockAgent::new(id, u, w, engine.clone()).with_checkpoints(store.clone()),
+            );
+        }
+        let retiree = BlockId::new(1, 1);
+        let row_heir = BlockId::new(1, 0);
+        let col_heir = BlockId::new(0, 1);
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(
+                retiree,
+                AgentMsg::Retire { row_heir: Some(row_heir), col_heir: Some(col_heir) },
+            )],
+        );
+        assert!(
+            matches!(
+                driver.as_slice(),
+                [DriverMsg::Retired { from, version: 0, .. }] if *from == retiree
+            ),
+            "expected one Retired, got {:?}",
+            driver.iter().map(DriverMsg::kind).collect::<Vec<_>>()
+        );
+
+        let midpoint = |a: &DenseMatrix, b: &DenseMatrix| {
+            DenseMatrix::from_fn(a.rows(), a.cols(), |i, k| 0.5 * (a.get(i, k) + b.get(i, k)))
+        };
+        let (ret_u0, ret_w0) = &init[&retiree.index(2)];
+        // Row heir: U absorbed, W untouched; exactly one counted mutation.
+        let rh = agents.get(&row_heir.index(2)).unwrap();
+        let (rh_u0, rh_w0) = &init[&row_heir.index(2)];
+        assert_eq!(rh.u, midpoint(rh_u0, ret_u0), "row heir absorbs U by midpoint");
+        assert_eq!(&rh.w, rh_w0, "row heir's W must not change");
+        assert_eq!(rh.version(), 1);
+        // Column heir: W absorbed, U untouched.
+        let ch = agents.get(&col_heir.index(2)).unwrap();
+        let (ch_u0, ch_w0) = &init[&col_heir.index(2)];
+        assert_eq!(ch.w, midpoint(ch_w0, ret_w0), "column heir absorbs W by midpoint");
+        assert_eq!(&ch.u, ch_u0, "column heir's U must not change");
+        assert_eq!(ch.version(), 1);
+        // Bystander: bit-identical.
+        let by = agents.get(&BlockId::new(0, 0).index(2)).unwrap();
+        let (by_u0, by_w0) = &init[&0];
+        assert_eq!(&by.u, by_u0);
+        assert_eq!(&by.w, by_w0);
+        assert_eq!(by.version(), 0);
+        // Retiree: frozen, inactive, final snapshot in the sink, still
+        // answering control traffic.
+        let r = agents.get(&retiree.index(2)).unwrap();
+        assert!(!r.is_active());
+        assert_eq!(&r.u, ret_u0, "the retiree's own factors freeze unchanged");
+        assert_eq!(&r.w, ret_w0);
+        assert_eq!(store.latest_version(retiree), Some(0));
+        let driver = pump(&mut agents, 2, vec![(retiree, AgentMsg::GetCost { lambda: 1e-9 })]);
+        assert!(matches!(driver.as_slice(), [DriverMsg::Cost { cost: Ok(_), .. }]));
+    }
+
+    #[test]
+    fn retire_without_heirs_freezes_immediately_and_can_rejoin_warm() {
+        let (spec, train) = problem();
+        let partition = BlockPartition::new(spec, &train).unwrap();
+        let mut engine = NativeEngine::new();
+        engine.prepare(&partition).unwrap();
+        let engine: Arc<dyn Engine> = Arc::new(engine);
+        let store = crate::gossip::CheckpointStore::in_memory(spec, 4);
+        let id = BlockId::new(0, 1);
+        let mut state = FactorState::init_random(spec, 31);
+        let (u, w) = state.take_block(id);
+        let spawn_u = u.clone();
+        let mut agent = BlockAgent::new(id, u, w, engine).with_checkpoints(store.clone());
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::Retire { row_heir: None, col_heir: None }, &mut out);
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Driver(DriverMsg::Retired { from, version: 0, .. })] if *from == id
+        ));
+        assert!(!agent.is_active(), "a heirless retirement still leaves the membership");
+        // The mirror of growth: Join regrows the block, warm from the
+        // final snapshot the retirement left in the sink.
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::Join, &mut out);
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Driver(DriverMsg::Joined { warm: true, .. })]
+        ));
+        assert!(agent.is_active());
+        assert_eq!(agent.u, spawn_u);
     }
 
     #[test]

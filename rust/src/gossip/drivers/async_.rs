@@ -1,0 +1,313 @@
+//! The barrier-free dispatch policy (NOMAD-style asynchronous
+//! dispatch).
+//!
+//! **Layer contract.** This file owns only the in-flight-flag
+//! concurrency bookkeeping — the per-block busy bits, the shuffled
+//! dispatch feed and its front-loading surgery after crashes and
+//! joins; supervision, membership changes and evaluation go through
+//! the shared [`Session`] helpers. Membership is fully elastic here
+//! too: joins splice into the live feed, retirements quiesce the
+//! pipeline first (a hand-off must merge into heir factors no
+//! structure is touching) — both at any `max_inflight`, where
+//! acceptance is statistical rather than bitwise (the NOMAD trade;
+//! `max_inflight = 1` serializes the feed and restores bit
+//! determinism).
+
+use std::collections::HashMap;
+
+use crate::data::CooMatrix;
+use crate::engine::Engine;
+use crate::grid::{BlockId, GridSpec, Structure};
+use crate::model::FactorState;
+use crate::net::{FaultEvent, FaultPlan, NetConfig};
+use crate::solver::{SolverConfig, SolverReport};
+use crate::{Error, Result};
+
+use super::super::elastic::{GrowthPlan, ShrinkPlan};
+use super::super::network::GossipNetwork;
+use super::super::supervisor::fire_fault;
+use super::{run_gossip_driver, DispatchPolicy, Driver, RunPlan, Session};
+
+/// Barrier-free gossip driver (NOMAD-style asynchronous dispatch).
+///
+/// Instead of packing conflict-free rounds and waiting for each
+/// round's slowest structure, the async driver keeps up to
+/// `max_inflight` structures in flight at all times: whenever a
+/// completion frees its three blocks, the next conflict-free structure
+/// from the shuffled epoch feed is dispatched immediately. Conflicts
+/// are tracked with per-block in-flight flags, so concurrently
+/// executing structures never share a block — the same safety invariant
+/// the round barrier enforced, without the barrier.
+///
+/// Cost evaluation quiesces the pipeline first (drains all in-flight
+/// structures), so convergence checks observe a consistent state —
+/// graceful retirements ([`ShrinkPlan`]) quiesce the same way before
+/// the factor hand-off.
+///
+/// **Determinism.** Dispatch order depends on completion order, which
+/// is scheduling-dependent — async runs are statistically, not
+/// bitwise, reproducible (exactly the NOMAD trade). `max_inflight = 1`
+/// serializes the feed and restores bit determinism (pinned by
+/// `async_single_inflight_is_deterministic`).
+#[derive(Debug, Clone)]
+pub struct AsyncDriver {
+    spec: GridSpec,
+    cfg: SolverConfig,
+    /// Maximum structures in flight at once.
+    pub max_inflight: usize,
+    /// Which transport stack carries the gossip (default: multiplexed
+    /// workers — the pairing built for large grids).
+    pub net: NetConfig,
+    /// Scheduled crashes/partitions to supervise (default: none).
+    pub faults: FaultPlan,
+    /// Scheduled membership growth (default: every block live).
+    pub grow: GrowthPlan,
+    /// Scheduled membership shrink (default: nobody retires).
+    pub shrink: ShrinkPlan,
+    /// Per-block snapshot cadence in factor mutations (0 = off).
+    pub checkpoint_every: u64,
+    /// Persist snapshots here instead of in memory (survives the
+    /// process; enables warm joins across runs).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+}
+
+impl AsyncDriver {
+    pub fn new(spec: GridSpec, cfg: SolverConfig, max_inflight: usize) -> Self {
+        Self {
+            spec,
+            cfg,
+            max_inflight: max_inflight.max(1),
+            net: NetConfig::multiplex(0),
+            faults: FaultPlan::default(),
+            grow: GrowthPlan::default(),
+            shrink: ShrinkPlan::default(),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+        }
+    }
+
+    /// Select the transport stack.
+    pub fn with_net(mut self, net: NetConfig) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Supervise a fault plan during training. Partitions fire as soon
+    /// as due; a kill whose victim has a structure in flight no longer
+    /// waits for the block to free up — the structure is aborted (all
+    /// three blocks roll back to their pre-structure factors), the
+    /// victim crash-restores, and the undone structure jumps to the
+    /// front of the dispatch feed together with the victim's re-gossip
+    /// set ([`crate::gossip::ScheduleBuilder::touching`]).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Grow the membership mid-run: dormant blocks join at `join_step`
+    /// completed updates (warm from the checkpoint sink when it holds
+    /// a snapshot) and the dispatch feed regenerates for the grown
+    /// geometry with the joined blocks' structures front-loaded —
+    /// at any `max_inflight`.
+    pub fn with_growth(mut self, grow: GrowthPlan) -> Self {
+        self.grow = grow;
+        self
+    }
+
+    /// Shrink the membership mid-run: at `retire_step` completed
+    /// updates the pipeline drains, the plan's blocks retire
+    /// gracefully (final snapshot, factor hand-off to the surviving
+    /// heirs), and the dispatch feed regenerates for the shrunk
+    /// geometry — at any `max_inflight`.
+    pub fn with_shrink(mut self, shrink: ShrinkPlan) -> Self {
+        self.shrink = shrink;
+        self
+    }
+
+    /// Checkpoint every block's factors at this mutation cadence (0
+    /// disables; crashes then restore cold).
+    pub fn with_checkpoints(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Persist checkpoints durably under `dir` (see
+    /// [`crate::gossip::DiskSink`]).
+    pub fn with_checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Train; returns the report and the final (culminated) state.
+    pub fn run(
+        &self,
+        engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        run_gossip_driver(
+            self,
+            RunPlan {
+                spec: self.spec,
+                cfg: &self.cfg,
+                net: &self.net,
+                faults: &self.faults,
+                grow: &self.grow,
+                shrink: &self.shrink,
+                checkpoint_every: self.checkpoint_every,
+                checkpoint_dir: self.checkpoint_dir.as_deref(),
+            },
+            engine,
+            train,
+        )
+    }
+}
+
+impl Driver for AsyncDriver {
+    fn label(&self) -> &'static str {
+        "async"
+    }
+
+    fn run(
+        &self,
+        engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        AsyncDriver::run(self, engine, train)
+    }
+}
+
+impl DispatchPolicy for AsyncDriver {
+    fn schedule_salt(&self) -> u64 {
+        0xa57c
+    }
+
+    /// The barrier-free training loop: keep the pipeline full, quiesce
+    /// only for evaluations and retirements.
+    fn dispatch(&self, session: &mut Session<'_>, network: &mut GossipNetwork) -> Result<u64> {
+        let max_iters = session.cfg.max_iters;
+        let spec = session.spec;
+        let mut busy = vec![false; spec.num_blocks()];
+        let mut inflight: HashMap<u64, [BlockId; 3]> = HashMap::new();
+        let mut queue: Vec<Structure> = session.schedule.shuffled();
+        let mut dispatched = 0u64;
+        let mut completed = 0u64;
+
+        'training: while completed < max_iters {
+            // Membership growth first: join the dormant blocks, then
+            // regenerate the feed for the grown geometry with their
+            // re-gossip sets front-loaded so the new replicas catch up.
+            // Safe with structures in flight — a joiner was
+            // schedule-excluded until now, so nothing touches it.
+            if session.members.join_due(completed) {
+                session.join_now(network, completed)?;
+                queue = session.schedule.shuffled();
+                let touching: Vec<Structure> = session
+                    .members
+                    .grown_blocks()
+                    .iter()
+                    .flat_map(|b| session.schedule.touching(*b))
+                    .collect();
+                let (mut front, back): (Vec<_>, Vec<_>) =
+                    queue.drain(..).partition(|s| touching.contains(s));
+                front.extend(back);
+                queue = front;
+            }
+            // Drain (instead of refill) when an evaluation is due, a
+            // retirement is due (the hand-off needs a quiescent
+            // pipeline), or the iteration budget is fully dispatched.
+            let retire_due = session.members.retire_due(completed);
+            let draining =
+                session.eval_due(completed) || retire_due || dispatched >= max_iters;
+            if !draining {
+                let mut k = 0;
+                while inflight.len() < self.max_inflight && dispatched < max_iters {
+                    if k >= queue.len() {
+                        if queue.is_empty() {
+                            queue = session.schedule.shuffled();
+                            k = 0;
+                            continue;
+                        }
+                        // Everything left in this epoch conflicts with an
+                        // in-flight block; wait for a completion.
+                        break;
+                    }
+                    let s = queue[k];
+                    let blocks = s.blocks();
+                    if blocks.iter().any(|b| busy[b.index(spec.q)]) {
+                        k += 1;
+                        continue;
+                    }
+                    queue.remove(k);
+                    for b in blocks {
+                        busy[b.index(spec.q)] = true;
+                    }
+                    let params = session.params(&s, dispatched);
+                    let token = network.dispatch(s, params)?;
+                    inflight.insert(token, blocks);
+                    dispatched += 1;
+                }
+            }
+            // Fault supervision *after* the refill: a kill due now lands
+            // on whatever is in flight. A busy victim's structure is
+            // aborted (not waited out), handed back to the front of the
+            // feed, and its dispatch-budget slot returned.
+            while session.faults.front().is_some_and(|e| e.step() <= completed) {
+                match session.faults.pop_front().expect("peeked") {
+                    FaultEvent::Kill { block, .. } => {
+                        if !session.members.kill_admissible(block) {
+                            continue;
+                        }
+                        if let Some((token, s)) = network.crash(completed, block)? {
+                            let removed = inflight.remove(&token);
+                            debug_assert!(removed.is_some(), "aborted token was in flight");
+                            for b in s.blocks() {
+                                busy[b.index(spec.q)] = false;
+                            }
+                            dispatched -= 1;
+                            queue.insert(0, s);
+                        }
+                        // Neighbours re-gossip first: the restored
+                        // block's structures jump to the front of the
+                        // feed so its replica re-converges quickly. Late
+                        // in an epoch the residual feed may not touch
+                        // the block at all — inject its full re-gossip
+                        // set then.
+                        let touching = session.schedule.touching(block);
+                        let (mut front, back): (Vec<_>, Vec<_>) =
+                            queue.drain(..).partition(|s| touching.contains(s));
+                        if front.is_empty() {
+                            front = touching;
+                        }
+                        front.extend(back);
+                        queue = front;
+                    }
+                    event @ FaultEvent::Partition { .. } => {
+                        fire_fault(network, event, completed)?;
+                    }
+                }
+            }
+            if inflight.is_empty() {
+                // Quiesced: membership shrink and evaluation are both
+                // safe here.
+                if retire_due {
+                    session.retire_now(network, completed)?;
+                    queue = session.schedule.shuffled();
+                    continue;
+                }
+                if session.eval_due(completed) && session.evaluate(network, completed)? {
+                    break 'training;
+                }
+                continue;
+            }
+            let (_, token) = network.await_done()?;
+            let blocks = inflight
+                .remove(&token)
+                .ok_or_else(|| Error::Gossip(format!("unknown completion token {token}")))?;
+            for b in blocks {
+                busy[b.index(spec.q)] = false;
+            }
+            completed += 1;
+        }
+        Ok(completed)
+    }
+}

@@ -1,0 +1,363 @@
+//! L3 of the gossip runtime: the training drivers.
+//!
+//! **Layer contract.** This module owns *when structures fire*: the
+//! shared [`run_gossip_driver`] lifecycle (validate plans, prepare the
+//! engine, spawn the network, train, tear down best-effort, assemble
+//! the report), the [`Session`] state every training loop threads
+//! through (schedule, membership, fault queue, convergence criterion,
+//! cost curve), and the [`DispatchPolicy`] seam behind which the two
+//! dispatch disciplines live:
+//!
+//! * [`ParallelDriver`] ([`parallel`]) — conflict-free rounds with a
+//!   barrier per chunk (deterministic, bit-identical across transports
+//!   and worker counts);
+//! * [`AsyncDriver`] ([`async_`]) — NOMAD-style barrier-free dispatch
+//!   over per-block in-flight flags (statistically reproducible;
+//!   `max_inflight = 1` restores bit determinism).
+//!
+//! Drivers may call the network mechanisms ([`super::network`]), the
+//! supervision verbs and fault-queue helpers ([`super::supervisor`])
+//! and the membership state machine ([`super::elastic`]); they may
+//! **not** touch transports, agents, or checkpoints directly. Both
+//! policies support the full elasticity surface — fault plans,
+//! membership growth *and* graceful shrink — through the same session
+//! helpers, which is what keeps a new dispatch discipline a one-file
+//! change.
+
+pub(crate) mod async_;
+pub(crate) mod parallel;
+
+pub use async_::AsyncDriver;
+pub use parallel::ParallelDriver;
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::data::CooMatrix;
+use crate::engine::{Engine, StructureParams};
+use crate::grid::{BlockId, BlockPartition, GridSpec, NormalizationCoeffs, Structure};
+use crate::metrics::{CostCurve, Timer};
+use crate::model::FactorState;
+use crate::net::{self, FaultEvent, FaultPlan, NetConfig};
+use crate::solver::{ConvergenceCriterion, ConvergenceVerdict, SolverConfig, SolverReport};
+use crate::{Error, Result};
+
+use super::elastic::{GrowthPlan, Membership, ShrinkPlan};
+use super::network::GossipNetwork;
+use super::supervisor::{check_fault_support, finish_faults, fire_due_faults};
+use super::{CheckpointStore, ScheduleBuilder};
+
+/// A gossip training driver: prepares an engine, trains over the agent
+/// network, and returns the report plus the culminated factors. Both
+/// dispatch disciplines implement this, so harnesses can pick one at
+/// run time (`Box<dyn Driver>`) without caring which.
+pub trait Driver {
+    /// Dispatch-discipline label (for logs and reports).
+    fn label(&self) -> &'static str;
+
+    /// Train; returns the report and the final (culminated) state.
+    fn run(
+        &self,
+        engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)>;
+}
+
+/// The pluggable dispatch discipline: how structures stream to the
+/// network between two quiescent endpoints. Implementations drive
+/// [`Session`] helpers for everything that is not dispatch order —
+/// supervision, membership changes, evaluation — so the two loops
+/// differ only in their concurrency bookkeeping.
+pub(crate) trait DispatchPolicy {
+    /// Salt XOR-ed into the schedule seed (kept per-policy so each
+    /// driver's schedule stream stays what it always was).
+    fn schedule_salt(&self) -> u64;
+
+    /// Run the training loop proper; returns completed updates. Any
+    /// error — including divergence — leaves the network running;
+    /// [`run_gossip_driver`] tears it down.
+    fn dispatch(&self, session: &mut Session<'_>, network: &mut GossipNetwork) -> Result<u64>;
+}
+
+/// Everything a [`run_gossip_driver`] call needs besides the policy:
+/// borrowed views of the driver's configuration fields.
+pub(crate) struct RunPlan<'a> {
+    pub spec: GridSpec,
+    pub cfg: &'a SolverConfig,
+    pub net: &'a NetConfig,
+    pub faults: &'a FaultPlan,
+    pub grow: &'a GrowthPlan,
+    pub shrink: &'a ShrinkPlan,
+    pub checkpoint_every: u64,
+    pub checkpoint_dir: Option<&'a std::path::Path>,
+}
+
+/// Per-run training state shared by every dispatch policy: the
+/// schedule (with its membership view), the membership state machine,
+/// the fault queue, the convergence criterion and the cost curve —
+/// plus the helpers that keep supervision and evaluation identical
+/// across policies.
+pub(crate) struct Session<'a> {
+    pub(crate) cfg: &'a SolverConfig,
+    pub(crate) spec: GridSpec,
+    coeffs: NormalizationCoeffs,
+    pub(crate) schedule: ScheduleBuilder,
+    pub(crate) members: Membership,
+    pub(crate) faults: VecDeque<FaultEvent>,
+    criterion: ConvergenceCriterion,
+    pub(crate) curve: CostCurve,
+    next_eval: u64,
+    pub(crate) converged: bool,
+}
+
+impl<'a> Session<'a> {
+    /// Validate the plans against this network, build the schedule and
+    /// membership, and record the initial cost point.
+    fn open(plan: &RunPlan<'a>, salt: u64, network: &mut GossipNetwork) -> Result<Self> {
+        check_fault_support(network, plan.faults)?;
+        let mut schedule = ScheduleBuilder::new(plan.spec, plan.cfg.seed ^ salt);
+        let members = Membership::new(plan.spec, plan.grow, plan.shrink);
+        schedule.exclude(&plan.grow.blocks);
+        if members.join_pending() && schedule.live_structure_count() == 0 {
+            return Err(Error::Config(
+                "growth plan leaves no live structures before the join \
+                 (the live sub-grid needs p, q >= 2)"
+                    .into(),
+            ));
+        }
+        let mut session = Self {
+            cfg: plan.cfg,
+            spec: plan.spec,
+            coeffs: NormalizationCoeffs::new(plan.spec.p, plan.spec.q),
+            schedule,
+            members,
+            faults: plan.faults.queue(),
+            criterion: ConvergenceCriterion::new(
+                plan.cfg.abs_tol,
+                plan.cfg.rel_tol,
+                plan.cfg.patience,
+            ),
+            curve: CostCurve::default(),
+            next_eval: plan.cfg.eval_every,
+            converged: false,
+        };
+        let c0 = session.members.total_cost(network, plan.cfg.lambda)?;
+        session.curve.push(0, c0);
+        Ok(session)
+    }
+
+    /// Step parameters for `s` at step-size index `step` (batch
+    /// semantics: callers pass one index per γ_t sharing group).
+    pub(crate) fn params(&self, s: &Structure, step: u64) -> StructureParams {
+        let gamma = self.cfg.schedule.gamma(step);
+        if self.cfg.normalize {
+            StructureParams::build(self.cfg.rho, self.cfg.lambda, gamma, &self.coeffs, &s.roles())
+        } else {
+            StructureParams::unnormalized(self.cfg.rho, self.cfg.lambda, gamma)
+        }
+    }
+
+    /// Is a cost evaluation due at `step` completed updates?
+    pub(crate) fn eval_due(&self, step: u64) -> bool {
+        step >= self.next_eval
+    }
+
+    /// Evaluate at a quiescent point: advance the eval boundary past
+    /// `step` in one go (a wide round or a drain can overshoot several
+    /// boundaries, and re-evaluating an unchanged state would feed the
+    /// criterion zero-delta updates), record the cost, and update the
+    /// criterion. Returns `true` when converged; divergence is an
+    /// error.
+    pub(crate) fn evaluate(&mut self, network: &mut GossipNetwork, step: u64) -> Result<bool> {
+        while self.next_eval <= step {
+            self.next_eval += self.cfg.eval_every;
+        }
+        let cost = self.members.total_cost(network, self.cfg.lambda)?;
+        self.curve.push(step, cost);
+        match self.criterion.update(cost) {
+            ConvergenceVerdict::Continue => Ok(false),
+            ConvergenceVerdict::Converged => {
+                self.converged = true;
+                Ok(true)
+            }
+            ConvergenceVerdict::Diverged => Err(Error::Diverged { iter: step, cost }),
+        }
+    }
+
+    /// Fire every fault event due at `step` from a quiescent point.
+    pub(crate) fn fire_due(&mut self, network: &mut GossipNetwork, step: u64) -> Result<()> {
+        fire_due_faults(network, &mut self.faults, step, &mut self.members)
+    }
+
+    /// Join every dormant block and fire any kill that was deferred
+    /// until its victim became a member. Safe on both policies even
+    /// with structures in flight: a fresh joiner was schedule-excluded
+    /// until now, so nothing in flight can touch it and the deferred
+    /// crash is abort-free.
+    pub(crate) fn join_now(&mut self, network: &mut GossipNetwork, step: u64) -> Result<()> {
+        for victim in self.members.join_all(network, &mut self.schedule, step)? {
+            network.crash(step, victim)?;
+        }
+        Ok(())
+    }
+
+    /// Retire every planned block at a quiescent point (graceful
+    /// leave: drain, final snapshot, factor hand-off to heirs, shrink
+    /// the schedule).
+    pub(crate) fn retire_now(&mut self, network: &mut GossipNetwork, step: u64) -> Result<()> {
+        self.members.retire_all(network, &mut self.schedule, step)
+    }
+
+    /// Shared end-of-training sequence: force any still-pending
+    /// membership change (trace completeness — a planned join or leave
+    /// past the budget still happens, just barely trained), sweep the
+    /// remaining due fault events, and record the final cost.
+    fn close(&mut self, network: &mut GossipNetwork, step: u64) -> Result<f64> {
+        if self.members.join_pending() {
+            log::warn!(
+                "growth plan joins after the last training update; the joined \
+                 blocks enter the final state barely trained"
+            );
+            self.join_now(network, step)?;
+        }
+        if self.members.retire_pending() {
+            log::warn!(
+                "shrink plan retires after the last training update; the \
+                 hand-off still lands in the final state"
+            );
+            self.retire_now(network, step)?;
+        }
+        finish_faults(network, &mut self.faults, step, &mut self.members)?;
+        let final_cost = self.members.total_cost(network, self.cfg.lambda)?;
+        if self.curve.last().map(|(it, _)| it) != Some(step) {
+            self.curve.push(step, final_cost);
+        }
+        Ok(final_cost)
+    }
+}
+
+/// Shared driver lifecycle: validate the elasticity plans, prepare the
+/// engine, spawn the network (checkpointed when `checkpoint_every > 0`
+/// — durably under `checkpoint_dir`, in memory otherwise; growth-plan
+/// blocks spawn dormant), open a [`Session`], run the policy's
+/// dispatch loop, close the session, tear the network down
+/// (best-effort on the error path so failed runs don't leak p·q agent
+/// threads), and assemble the report — fault trace included.
+pub(crate) fn run_gossip_driver(
+    policy: &dyn DispatchPolicy,
+    plan: RunPlan<'_>,
+    mut engine: Box<dyn Engine>,
+    train: &CooMatrix,
+) -> Result<(SolverReport, FactorState)> {
+    plan.spec.validate()?;
+    validate_membership_plans(&plan)?;
+    let partition = BlockPartition::new(plan.spec, train)?;
+    engine.prepare(&partition)?;
+    let engine: Arc<dyn Engine> = Arc::from(engine);
+    let engine_name = engine.name().to_string();
+
+    let state = FactorState::init_random(plan.spec, plan.cfg.seed);
+    let checkpoints = if plan.checkpoint_every > 0 {
+        Some(match plan.checkpoint_dir {
+            Some(dir) => CheckpointStore::durable(plan.checkpoint_every, dir)?,
+            None => CheckpointStore::in_memory(plan.spec, plan.checkpoint_every),
+        })
+    } else {
+        if plan.checkpoint_dir.is_some() {
+            log::warn!("checkpoint dir set but checkpointing is off (cadence 0); ignored");
+        }
+        None
+    };
+    let dormant: net::DormantSet =
+        plan.grow.blocks.iter().map(|b| b.index(plan.spec.q)).collect();
+    let mut network =
+        GossipNetwork::spawn_elastic(plan.net, plan.spec, engine, state, checkpoints, &dormant);
+    let timer = Timer::start();
+    let outcome = Session::open(&plan, policy.schedule_salt(), &mut network)
+        .and_then(|mut session| {
+            let iters = policy.dispatch(&mut session, &mut network)?;
+            let final_cost = session.close(&mut network, iters)?;
+            Ok((session.curve, final_cost, iters, session.converged))
+        });
+    match outcome {
+        Ok((curve, final_cost, iters, converged)) => {
+            let faults = network.take_trace();
+            let state = network.shutdown()?;
+            Ok((
+                SolverReport {
+                    curve,
+                    final_cost,
+                    iters,
+                    converged,
+                    wall: timer.elapsed(),
+                    engine: engine_name,
+                    faults,
+                },
+                state,
+            ))
+        }
+        Err(e) => {
+            // Best-effort teardown (in-flight structures included:
+            // agents are non-blocking, so Shutdown reaches them even
+            // mid-protocol and stale traffic is drained).
+            let _ = network.shutdown();
+            Err(e)
+        }
+    }
+}
+
+/// Geometry and ordering checks for the grow/shrink plan pair, before
+/// any thread spawns.
+fn validate_membership_plans(plan: &RunPlan<'_>) -> Result<()> {
+    let in_grid = |b: &BlockId| b.i < plan.spec.p && b.j < plan.spec.q;
+    for b in &plan.grow.blocks {
+        if !in_grid(b) {
+            return Err(Error::Config(format!(
+                "growth plan block {b} is outside the {}x{} grid",
+                plan.spec.p, plan.spec.q
+            )));
+        }
+    }
+    for b in &plan.shrink.blocks {
+        if !in_grid(b) {
+            return Err(Error::Config(format!(
+                "shrink plan block {b} is outside the {}x{} grid",
+                plan.spec.p, plan.spec.q
+            )));
+        }
+    }
+    if plan.shrink.is_empty() {
+        return Ok(());
+    }
+    let shared: Vec<&BlockId> = plan
+        .shrink
+        .blocks
+        .iter()
+        .filter(|b| plan.grow.blocks.contains(*b))
+        .collect();
+    if !shared.is_empty() && plan.shrink.retire_step < plan.grow.join_step {
+        return Err(Error::Config(format!(
+            "block {} cannot retire (step {}) before it joins (step {})",
+            shared[0], plan.shrink.retire_step, plan.grow.join_step
+        )));
+    }
+    // The surviving geometry must still admit structures — in the worst
+    // reachable state: if the shrink can fire while the growth is still
+    // dormant, both exclusions overlap.
+    let mut probe = ScheduleBuilder::new(plan.spec, 0);
+    probe.exclude(&plan.shrink.blocks);
+    if !plan.grow.is_empty() && plan.shrink.retire_step < plan.grow.join_step {
+        probe.exclude(&plan.grow.blocks);
+    }
+    if probe.live_structure_count() == 0 {
+        return Err(Error::Config(
+            "shrink plan leaves no live structures after the leave \
+             (the surviving sub-grid needs p, q >= 2)"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,237 @@
+//! The round-barrier dispatch policy: conflict-free rounds from
+//! [`ScheduleBuilder`](crate::gossip::ScheduleBuilder) (the paper's §6
+//! future work), dispatched with a barrier per chunk.
+//!
+//! **Layer contract.** This file owns only the round/chunk concurrency
+//! bookkeeping; everything else — supervision, membership changes,
+//! evaluation — goes through the shared [`Session`] helpers. It is
+//! deterministic: for a fixed seed the trained state is bit-identical
+//! across transports and worker counts
+//! (`single_worker_matches_multi_worker`,
+//! `tests/transport_equivalence.rs`), which also makes executed fault
+//! and membership traces byte-stable across reruns.
+
+use std::time::Duration;
+
+use crate::data::CooMatrix;
+use crate::engine::{Engine, StructureParams};
+use crate::grid::GridSpec;
+use crate::model::FactorState;
+use crate::net::{FaultEvent, FaultPlan, NetConfig};
+use crate::solver::{SolverConfig, SolverReport};
+use crate::Result;
+
+use super::super::elastic::{GrowthPlan, ShrinkPlan};
+use super::super::network::GossipNetwork;
+use super::{run_gossip_driver, DispatchPolicy, Driver, RunPlan, Session};
+
+/// Parallel gossip driver: Algorithm 1 with conflict-free rounds
+/// dispatched concurrently over the agent network.
+#[derive(Debug, Clone)]
+pub struct ParallelDriver {
+    spec: GridSpec,
+    cfg: SolverConfig,
+    /// Maximum structures in flight at once (compute parallelism).
+    pub workers: usize,
+    /// Which transport stack carries the gossip.
+    pub net: NetConfig,
+    /// Scheduled crashes/partitions to supervise (default: none).
+    pub faults: FaultPlan,
+    /// Scheduled membership growth (default: every block live).
+    pub grow: GrowthPlan,
+    /// Scheduled membership shrink (default: nobody retires).
+    pub shrink: ShrinkPlan,
+    /// Per-block snapshot cadence in factor mutations (0 = off).
+    pub checkpoint_every: u64,
+    /// Persist snapshots here instead of in memory (survives the
+    /// process; enables warm joins across runs).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+}
+
+impl ParallelDriver {
+    pub fn new(spec: GridSpec, cfg: SolverConfig, workers: usize) -> Self {
+        Self {
+            spec,
+            cfg,
+            workers: workers.max(1),
+            net: NetConfig::default(),
+            faults: FaultPlan::default(),
+            grow: GrowthPlan::default(),
+            shrink: ShrinkPlan::default(),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+        }
+    }
+
+    /// Select the transport stack (default: thread-per-block channels).
+    pub fn with_net(mut self, net: NetConfig) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Supervise a fault plan during training. Events whose step lands
+    /// on a chunk barrier fire with every block free; events landing
+    /// *inside* a chunk fire mid-structure — the victim's in-flight
+    /// structure is aborted (all three blocks roll back), the victim
+    /// crash-restores, and the structure is redispatched.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Grow the membership mid-run: the plan's blocks spawn dormant and
+    /// join — warm from the checkpoint sink when it holds a snapshot —
+    /// at the first round barrier at or past `join_step`, after which
+    /// the schedule regenerates for the full geometry.
+    pub fn with_growth(mut self, grow: GrowthPlan) -> Self {
+        self.grow = grow;
+        self
+    }
+
+    /// Shrink the membership mid-run: at the first round barrier at or
+    /// past `retire_step` the plan's blocks retire gracefully — final
+    /// snapshot to the checkpoint sink, row/column factors handed to
+    /// the surviving heir blocks over the wire — and the schedule
+    /// regenerates for the shrunk geometry.
+    pub fn with_shrink(mut self, shrink: ShrinkPlan) -> Self {
+        self.shrink = shrink;
+        self
+    }
+
+    /// Checkpoint every block's factors at this mutation cadence (0
+    /// disables; crashes then restore cold).
+    pub fn with_checkpoints(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Persist checkpoints durably under `dir` (see
+    /// [`crate::gossip::DiskSink`]).
+    pub fn with_checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Train; returns the report and the final (culminated) state.
+    ///
+    /// `engine` is prepared here, then shared immutably with all agents.
+    pub fn run(
+        &self,
+        engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        run_gossip_driver(
+            self,
+            RunPlan {
+                spec: self.spec,
+                cfg: &self.cfg,
+                net: &self.net,
+                faults: &self.faults,
+                grow: &self.grow,
+                shrink: &self.shrink,
+                checkpoint_every: self.checkpoint_every,
+                checkpoint_dir: self.checkpoint_dir.as_deref(),
+            },
+            engine,
+            train,
+        )
+    }
+}
+
+impl Driver for ParallelDriver {
+    fn label(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn run(
+        &self,
+        engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        ParallelDriver::run(self, engine, train)
+    }
+}
+
+impl DispatchPolicy for ParallelDriver {
+    fn schedule_salt(&self) -> u64 {
+        0x90551b
+    }
+
+    /// The training loop proper: conflict-free rounds, a barrier per
+    /// `workers`-sized chunk, membership changes at round boundaries.
+    fn dispatch(&self, session: &mut Session<'_>, network: &mut GossipNetwork) -> Result<u64> {
+        let max_iters = session.cfg.max_iters;
+        let mut iters = 0u64;
+        'training: while iters < max_iters {
+            'epoch: for round in session.schedule.epoch() {
+                if iters >= max_iters {
+                    break;
+                }
+                // Membership changes at the round barrier, then break
+                // out so the next epoch regenerates for the new
+                // geometry (grown and shrunk alike).
+                if session.members.join_due(iters) {
+                    session.join_now(network, iters)?;
+                    break 'epoch;
+                }
+                if session.members.retire_due(iters) {
+                    session.retire_now(network, iters)?;
+                    break 'epoch;
+                }
+                // Batch semantics: every update in a round shares γ_t.
+                let take = round.len().min((max_iters - iters) as usize);
+                let round = &round[..take];
+                let params: Vec<StructureParams> =
+                    round.iter().map(|s| session.params(s, iters)).collect();
+                // Dispatch at most `workers` structures at a time.
+                for (chunk_s, chunk_p) in
+                    round.chunks(self.workers).zip(params.chunks(self.workers))
+                {
+                    // Chunk barrier: every block is free here, so events
+                    // due by now fire as plain free-block crashes.
+                    session.fire_due(network, iters)?;
+                    for (s, p) in chunk_s.iter().zip(chunk_p) {
+                        network.dispatch(*s, *p)?;
+                    }
+                    // Events whose step lands *inside* this chunk fire
+                    // mid-structure: the victim's in-flight structure is
+                    // aborted and redispatched with its own params.
+                    let span_end = iters + chunk_s.len() as u64;
+                    while session.faults.front().is_some_and(|e| e.step() < span_end) {
+                        match session.faults.pop_front().expect("peeked") {
+                            FaultEvent::Kill { step, block } => {
+                                if !session.members.kill_admissible(block) {
+                                    continue;
+                                }
+                                if let Some((_, s)) = network.crash(step, block)? {
+                                    let k = chunk_s
+                                        .iter()
+                                        .position(|x| *x == s)
+                                        .expect("aborted structure is from this chunk");
+                                    network.dispatch(s, chunk_p[k])?;
+                                }
+                            }
+                            FaultEvent::Partition { step, a, b, duration_us } => {
+                                network.partition(
+                                    step,
+                                    a,
+                                    b,
+                                    Duration::from_micros(duration_us),
+                                )?;
+                            }
+                        }
+                    }
+                    for _ in 0..chunk_s.len() {
+                        network.await_done()?;
+                    }
+                    iters += chunk_s.len() as u64;
+                }
+
+                if session.eval_due(iters) && session.evaluate(network, iters)? {
+                    break 'training;
+                }
+            }
+        }
+        Ok(iters)
+    }
+}

@@ -1,0 +1,498 @@
+//! Driver-level tests, shared by both dispatch policies. Moved intact
+//! from the pre-split `gossip/mod.rs` (the re-layering must keep every
+//! one green), plus the membership-shrink coverage.
+
+use std::sync::Arc;
+
+use crate::data::{CooMatrix, SyntheticConfig};
+use crate::engine::{Engine, NativeEngine};
+use crate::gossip::{AsyncDriver, Driver, GossipNetwork, GrowthPlan, ParallelDriver, ShrinkPlan};
+use crate::grid::{BlockId, BlockPartition, GridSpec};
+use crate::model::FactorState;
+use crate::net::{FaultPlan, FaultRecord, NetConfig, SimConfig};
+use crate::solver::{SolverConfig, StepSchedule};
+use crate::Error;
+
+fn problem() -> (GridSpec, CooMatrix, CooMatrix) {
+    let spec = GridSpec::new(40, 40, 4, 4, 3);
+    let d = SyntheticConfig {
+        m: 40,
+        n: 40,
+        rank: 3,
+        train_fraction: 0.5,
+        test_fraction: 0.2,
+        ..Default::default()
+    }
+    .generate();
+    (spec, d.data.train, d.data.test)
+}
+
+fn cfg() -> SolverConfig {
+    SolverConfig {
+        max_iters: 4000,
+        eval_every: 800,
+        rho: 10.0,
+        schedule: StepSchedule { a: 2e-2, b: 1e-5 },
+        abs_tol: 1e-9,
+        rel_tol: 1e-6,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn drivers_are_pluggable_behind_the_trait() {
+    // Harnesses pick a dispatch discipline at run time; the trait
+    // object must train exactly like the concrete type.
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 40;
+    let boxed: Box<dyn Driver> = Box::new(ParallelDriver::new(spec, c.clone(), 2));
+    assert_eq!(boxed.label(), "parallel");
+    let (rb, _) = boxed.run(Box::new(NativeEngine::new()), &train).unwrap();
+    let (rc, _) = ParallelDriver::new(spec, c.clone(), 2)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    assert_eq!(rb.final_cost.to_bits(), rc.final_cost.to_bits());
+    let a: Box<dyn Driver> = Box::new(AsyncDriver::new(spec, c, 2));
+    assert_eq!(a.label(), "async");
+}
+
+#[test]
+fn parallel_driver_reduces_cost() {
+    let (spec, train, _) = problem();
+    let driver = ParallelDriver::new(spec, cfg(), 4);
+    let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert!(
+        report.curve.orders_of_reduction() > 2.0,
+        "orders {}",
+        report.curve.orders_of_reduction()
+    );
+}
+
+#[test]
+fn parallel_learns_test_set() {
+    let (spec, train, test) = problem();
+    let driver = ParallelDriver::new(spec, cfg(), 4);
+    let (_, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    let rmse = state.rmse(&test);
+    assert!(rmse < 0.5, "rmse {rmse}");
+}
+
+#[test]
+fn single_worker_matches_multi_worker() {
+    // Same seed → identical schedule; updates within a round are
+    // disjoint, so worker count must not change the math at all.
+    let (spec, train, _) = problem();
+    let (r1, s1) = ParallelDriver::new(spec, cfg(), 1)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    let (r4, s4) = ParallelDriver::new(spec, cfg(), 4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    assert_eq!(r1.iters, r4.iters);
+    assert_eq!(r1.final_cost, r4.final_cost);
+    let id = BlockId::new(1, 2);
+    assert_eq!(s1.u(id), s4.u(id));
+}
+
+#[test]
+fn respects_max_iters_mid_round() {
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 7; // smaller than one epoch
+    let driver = ParallelDriver::new(spec, c, 2);
+    let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert_eq!(report.iters, 7);
+}
+
+#[test]
+fn network_cost_matches_direct_sum() {
+    // Leader-side cost via messages equals the engine-side sum.
+    let (spec, train, _) = problem();
+    let partition = BlockPartition::new(spec, &train).unwrap();
+    let mut engine = NativeEngine::new();
+    engine.prepare(&partition).unwrap();
+    let engine: Arc<dyn Engine> = Arc::new(engine);
+    let state = FactorState::init_random(spec, 1);
+    let direct = crate::solver::total_cost(engine.as_ref(), &state, 1e-9).unwrap();
+    let mut network = GossipNetwork::spawn(spec, engine, state);
+    let via_network = network.total_cost(1e-9).unwrap();
+    network.shutdown().unwrap();
+    assert!((direct - via_network).abs() < 1e-9 * direct.abs().max(1.0));
+}
+
+#[test]
+fn async_driver_reduces_cost() {
+    let (spec, train, _) = problem();
+    let driver = AsyncDriver::new(spec, cfg(), 6);
+    let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert!(report.iters <= 4000);
+    assert!(
+        report.curve.orders_of_reduction() > 2.0,
+        "orders {}",
+        report.curve.orders_of_reduction()
+    );
+}
+
+#[test]
+fn async_learns_test_set() {
+    let (spec, train, test) = problem();
+    let driver = AsyncDriver::new(spec, cfg(), 4)
+        .with_net(NetConfig::multiplex(3));
+    let (_, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    let rmse = state.rmse(&test);
+    assert!(rmse < 0.5, "rmse {rmse}");
+}
+
+#[test]
+fn async_respects_max_iters() {
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 13;
+    let driver = AsyncDriver::new(spec, c, 5);
+    let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert_eq!(report.iters, 13);
+}
+
+#[test]
+fn parallel_driver_supervises_kills_and_recovers() {
+    let (spec, train, test) = problem();
+    let plan = FaultPlan::new()
+        .kill(300, BlockId::new(1, 1))
+        .kill(900, BlockId::new(2, 3))
+        .kill(1500, BlockId::new(0, 0));
+    let driver = ParallelDriver::new(spec, cfg(), 4)
+        .with_faults(plan)
+        .with_checkpoints(4);
+    let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert_eq!(report.kill_count(), 3, "{:?}", report.faults);
+    assert_eq!(report.partition_count(), 0);
+    assert!(
+        report.curve.orders_of_reduction() > 2.0,
+        "churned run still converges: orders {}",
+        report.curve.orders_of_reduction()
+    );
+    assert!(state.rmse(&test) < 0.5);
+    // Crash points land at or past the planned step (barrier kills
+    // record the barrier, mid-structure kills their scheduled step;
+    // abort records may interleave, so filter to the kills).
+    let kills = report
+        .faults
+        .iter()
+        .filter(|f| matches!(f, FaultRecord::Kill { .. }));
+    for (f, want) in kills.zip([300u64, 900, 1500]) {
+        assert!(f.step() >= want, "{f:?} fired before its step");
+    }
+}
+
+#[test]
+fn async_driver_aborts_busy_kills_and_recovers() {
+    // Kills land whenever due: a busy victim's in-flight structure
+    // is aborted and redispatched rather than waited out.
+    let (spec, train, test) = problem();
+    let plan = FaultPlan::new()
+        .kill(200, BlockId::new(3, 3))
+        .kill(700, BlockId::new(1, 2));
+    let driver = AsyncDriver::new(spec, cfg(), 5)
+        .with_faults(plan)
+        .with_checkpoints(2);
+    let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert_eq!(report.kill_count(), 2, "{:?}", report.faults);
+    assert!(report.curve.orders_of_reduction() > 1.5);
+    assert!(state.rmse(&test) < 0.5);
+}
+
+#[test]
+fn partitions_require_a_sim_transport() {
+    let (spec, train, _) = problem();
+    let plan = FaultPlan::new().partition(
+        10,
+        BlockId::new(0, 0),
+        BlockId::new(0, 1),
+        std::time::Duration::from_micros(200),
+    );
+    let err = ParallelDriver::new(spec, cfg(), 2)
+        .with_faults(plan.clone())
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    // Over a sim transport the same plan executes fine.
+    let (report, _) = ParallelDriver::new(spec, cfg(), 2)
+        .with_faults(plan)
+        .with_net(NetConfig::sim(SimConfig::zero_latency(3)))
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    assert_eq!(report.partition_count(), 1);
+}
+
+#[test]
+fn fault_free_plan_changes_nothing() {
+    // An empty plan plus checkpointing is observation-only: the
+    // trained state must be bit-identical to the plain run.
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 600;
+    let (r_plain, s_plain) = ParallelDriver::new(spec, c.clone(), 4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    let (r_ckpt, s_ckpt) = ParallelDriver::new(spec, c, 4)
+        .with_faults(FaultPlan::new())
+        .with_checkpoints(2)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    assert!(r_ckpt.faults.is_empty());
+    assert_eq!(r_plain.final_cost.to_bits(), r_ckpt.final_cost.to_bits());
+    let id = BlockId::new(1, 2);
+    assert_eq!(s_plain.u(id), s_ckpt.u(id));
+    assert_eq!(s_plain.w(id), s_ckpt.w(id));
+}
+
+#[test]
+fn parallel_driver_grows_a_trailing_column() {
+    // The last column starts dormant and joins mid-run: the run must
+    // record one cold join per column block, keep converging, and
+    // the final model must cover the whole grid.
+    let (spec, train, test) = problem();
+    let grow = GrowthPlan::trailing_columns(spec, 1, 1200).unwrap();
+    assert_eq!(grow.len(), 4);
+    let driver = ParallelDriver::new(spec, cfg(), 4)
+        .with_growth(grow.clone())
+        .with_checkpoints(4);
+    let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert_eq!(report.join_count(), 4, "{:?}", report.faults);
+    assert_eq!(report.warm_join_count(), 0, "in-memory sink: joins are cold");
+    for f in &report.faults {
+        match f {
+            FaultRecord::Join { step, block, .. } => {
+                assert!(*step >= 1200, "{f:?} joined before its step");
+                assert_eq!(block.j, 3, "only the trailing column joins");
+            }
+            other => panic!("unexpected record {other:?}"),
+        }
+    }
+    assert!(report.iters > 1200, "training continued past the join");
+    assert!(report.final_cost.is_finite());
+    let rmse = state.rmse(&test);
+    assert!(rmse < 0.7, "grown grid still learns: rmse {rmse}");
+}
+
+#[test]
+fn async_driver_grows_and_stays_deterministic_single_inflight() {
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 900;
+    c.eval_every = 300;
+    let grow = GrowthPlan::trailing_columns(spec, 1, 300).unwrap();
+    let run = || {
+        AsyncDriver::new(spec, c.clone(), 1)
+            .with_growth(grow.clone())
+            .with_checkpoints(2)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap()
+    };
+    let (ra, sa) = run();
+    let (rb, sb) = run();
+    assert_eq!(ra.join_count(), 4, "{:?}", ra.faults);
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    for id in spec.blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
+        assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
+    }
+}
+
+#[test]
+fn growth_plan_validates_geometry() {
+    let spec = GridSpec::new(40, 40, 4, 4, 3);
+    assert!(GrowthPlan::trailing_columns(spec, 3, 10).is_err(), "q-3 < 2");
+    assert!(GrowthPlan::trailing_columns(spec, 2, 10).is_ok());
+    assert!(GrowthPlan::trailing_columns(spec, 0, 10).unwrap().is_empty());
+    // Out-of-grid blocks are rejected at run time.
+    let (spec, train, _) = problem();
+    let bad = GrowthPlan { join_step: 5, blocks: vec![BlockId::new(9, 0)] };
+    let err = ParallelDriver::new(spec, cfg(), 2)
+        .with_growth(bad)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+}
+
+#[test]
+fn async_single_inflight_is_deterministic() {
+    // With one structure in flight the dispatch feed serializes, so
+    // two runs must agree bit-for-bit (general async runs are only
+    // statistically reproducible — the NOMAD trade).
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 600;
+    c.eval_every = 200;
+    let run = || {
+        AsyncDriver::new(spec, c.clone(), 1)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap()
+    };
+    let (ra, sa) = run();
+    let (rb, sb) = run();
+    assert_eq!(ra.final_cost, rb.final_cost);
+    let id = BlockId::new(2, 1);
+    assert_eq!(sa.u(id), sb.u(id));
+    assert_eq!(sa.w(id), sb.w(id));
+}
+
+// ---------------------------------------------------------------------
+// Membership shrink (graceful leave).
+
+#[test]
+fn parallel_driver_retires_a_trailing_column() {
+    // The mirror of the growth test: the last column leaves mid-run.
+    // Each retiree must hand its row factors to a survivor of its row
+    // (one hand-off each — the column band has no surviving holder),
+    // training must continue on the shrunk geometry, and the final
+    // model must stay usable.
+    let (spec, train, test) = problem();
+    let shrink = ShrinkPlan::trailing_columns(spec, 1, 3200).unwrap();
+    assert_eq!(shrink.len(), 4);
+    let driver = ParallelDriver::new(spec, cfg(), 4)
+        .with_shrink(shrink.clone())
+        .with_checkpoints(4);
+    let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert_eq!(report.retire_count(), 4, "{:?}", report.faults);
+    assert_eq!(report.handoff_count(), 4, "one row hand-off per retiree");
+    for f in &report.faults {
+        match f {
+            FaultRecord::Retire { step, block, handoffs, .. } => {
+                assert!(*step >= 3200, "{f:?} retired before its step");
+                assert_eq!(block.j, 3, "only the trailing column retires");
+                assert_eq!(*handoffs, 1, "row heir only: the whole column band left");
+            }
+            other => panic!("unexpected record {other:?}"),
+        }
+    }
+    assert!(report.iters > 3200, "training continued past the leave");
+    assert!(report.final_cost.is_finite());
+    let rmse = state.rmse(&test);
+    assert!(rmse < 0.7, "shrunk grid still predicts: rmse {rmse}");
+}
+
+#[test]
+fn parallel_shrink_replays_bit_identically() {
+    // Graceful leaves are schedule-determined under the round-barrier
+    // driver: reruns must agree on the trace byte-for-byte and on the
+    // factors bit-for-bit.
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 1200;
+    c.eval_every = 400;
+    let shrink = ShrinkPlan { retire_step: 600, blocks: vec![BlockId::new(1, 1)] };
+    let run = || {
+        ParallelDriver::new(spec, c.clone(), 4)
+            .with_shrink(shrink.clone())
+            .with_checkpoints(4)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap()
+    };
+    let (ra, sa) = run();
+    let (rb, sb) = run();
+    assert_eq!(ra.retire_count(), 1);
+    assert_eq!(ra.handoff_count(), 2, "an interior block hands off both halves");
+    assert_eq!(
+        crate::net::fault::render_trace(&ra.faults),
+        crate::net::fault::render_trace(&rb.faults)
+    );
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    for id in spec.blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
+        assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
+    }
+}
+
+#[test]
+fn async_driver_retires_and_stays_deterministic_single_inflight() {
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 900;
+    c.eval_every = 300;
+    let shrink = ShrinkPlan::trailing_columns(spec, 1, 450).unwrap();
+    let run = || {
+        AsyncDriver::new(spec, c.clone(), 1)
+            .with_shrink(shrink.clone())
+            .with_checkpoints(2)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap()
+    };
+    let (ra, sa) = run();
+    let (rb, sb) = run();
+    assert_eq!(ra.retire_count(), 4, "{:?}", ra.faults);
+    assert_eq!(ra.iters, 900, "retirements must not eat iterations");
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    for id in spec.blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
+        assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
+    }
+}
+
+#[test]
+fn grow_then_shrink_returns_to_the_original_geometry() {
+    // A column joins at 600 and the same column retires at 1600: the
+    // run ends on the geometry it started with, with four joins, four
+    // retirements, and a warm path back (the retirees' final
+    // snapshots stay in the sink).
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 2000;
+    c.eval_every = 500;
+    let grow = GrowthPlan::trailing_columns(spec, 1, 600).unwrap();
+    let shrink = ShrinkPlan::trailing_columns(spec, 1, 1600).unwrap();
+    let (report, state) = ParallelDriver::new(spec, c, 4)
+        .with_growth(grow)
+        .with_shrink(shrink)
+        .with_checkpoints(4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    assert_eq!(report.join_count(), 4, "{:?}", report.faults);
+    assert_eq!(report.retire_count(), 4, "{:?}", report.faults);
+    // Every join precedes every retirement of the shared column.
+    let first_retire = report
+        .faults
+        .iter()
+        .position(|f| matches!(f, FaultRecord::Retire { .. }))
+        .unwrap();
+    let last_join = report
+        .faults
+        .iter()
+        .rposition(|f| matches!(f, FaultRecord::Join { .. }))
+        .unwrap();
+    assert!(last_join < first_retire, "{:?}", report.faults);
+    assert!(report.final_cost.is_finite());
+    assert!(state.rmse(&train).is_finite());
+}
+
+#[test]
+fn shrink_plan_validates_at_run_time() {
+    let (spec, train, _) = problem();
+    // Out-of-grid retiree.
+    let bad = ShrinkPlan { retire_step: 5, blocks: vec![BlockId::new(9, 0)] };
+    let err = ParallelDriver::new(spec, cfg(), 2)
+        .with_shrink(bad)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    // A block cannot retire before it joins.
+    let col = GrowthPlan::trailing_columns(spec, 1, 1000).unwrap();
+    let early = ShrinkPlan { retire_step: 500, blocks: col.blocks.clone() };
+    let err = ParallelDriver::new(spec, cfg(), 2)
+        .with_growth(col)
+        .with_shrink(early)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    // Retiring almost everything leaves no live structures.
+    let too_many = ShrinkPlan {
+        retire_step: 10,
+        blocks: spec.blocks().filter(|b| b.i > 0 || b.j > 0).collect(),
+    };
+    let err = ParallelDriver::new(spec, cfg(), 2)
+        .with_shrink(too_many)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+}

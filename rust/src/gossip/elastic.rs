@@ -1,0 +1,383 @@
+//! L2½ of the gossip runtime: elastic membership — the grow/shrink
+//! plans and the per-run membership state machine.
+//!
+//! **Layer contract.** This module owns *which blocks are members when*:
+//! the [`GrowthPlan`] (dormant blocks joining mid-run) and the
+//! [`ShrinkPlan`] (live blocks gracefully retiring mid-run), plus the
+//! [`Membership`] state machine the drivers consult. It may call the
+//! supervision verbs on [`super::GossipNetwork`] (`join`, `retire`)
+//! and flip [`super::ScheduleBuilder`] exclusions; it may **not**
+//! dispatch structures, touch transports directly, or fire fault
+//! events (it only *classifies* kill targets — firing is
+//! [`super::supervisor`]'s job, redispatch bookkeeping the drivers').
+//!
+//! A block's lifecycle is `Dormant → (join) → Live → (retire) →
+//! Retired`; retired blocks look exactly like dormant ones on the
+//! agent side, so a durable sink can regrow them in a later run.
+
+use crate::grid::{BlockId, GridSpec};
+use crate::{Error, Result};
+
+use super::network::GossipNetwork;
+use super::scheduler::ScheduleBuilder;
+
+/// Membership growth: which blocks start dormant and when they join
+/// the live grid. The empty plan (the default) is a fully-live grid.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GrowthPlan {
+    /// Completed-update count at which every dormant block joins.
+    pub join_step: u64,
+    /// The dormant blocks. The remaining live sub-grid must still
+    /// admit at least one structure (checked at train time).
+    pub blocks: Vec<BlockId>,
+}
+
+impl GrowthPlan {
+    /// The empty plan: every block live from the start.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Regrow the trailing `columns` grid columns at `join_step` — the
+    /// canonical "a new machine rack joins the grid" scenario. The
+    /// live sub-grid keeps `q − columns ≥ 2` columns so gossip can run
+    /// before the join.
+    pub fn trailing_columns(spec: GridSpec, columns: usize, join_step: u64) -> Result<Self> {
+        Ok(Self { join_step, blocks: trailing_column_blocks(spec, columns, "dormant")? })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// Membership shrink: which live blocks gracefully retire mid-run and
+/// when (the mirror of [`GrowthPlan`]). Each retiring block drains,
+/// final-snapshots to the checkpoint sink, hands its row/column
+/// factors to surviving heir blocks over the wire, and leaves the
+/// schedule; the empty plan (the default) retires nobody.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShrinkPlan {
+    /// Completed-update count at which every planned block retires.
+    pub retire_step: u64,
+    /// The retiring blocks. The surviving sub-grid must still admit at
+    /// least one structure (checked at train time).
+    pub blocks: Vec<BlockId>,
+}
+
+impl ShrinkPlan {
+    /// The empty plan: nobody retires.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Retire the trailing `columns` grid columns at `retire_step` —
+    /// the canonical "a machine rack leaves the grid" scenario. The
+    /// surviving sub-grid keeps `q − columns ≥ 2` columns so gossip
+    /// can continue after the leave.
+    pub fn trailing_columns(spec: GridSpec, columns: usize, retire_step: u64) -> Result<Self> {
+        Ok(Self { retire_step, blocks: trailing_column_blocks(spec, columns, "retiring")? })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// Shared trailing-column enumeration for the two plans.
+fn trailing_column_blocks(spec: GridSpec, columns: usize, role: &str) -> Result<Vec<BlockId>> {
+    if columns == 0 {
+        return Ok(Vec::new());
+    }
+    if spec.q < columns + 2 {
+        return Err(Error::Config(format!(
+            "cannot keep {columns} {role} column(s) of a {}x{} grid: the live \
+             sub-grid needs at least 2 columns",
+            spec.p, spec.q
+        )));
+    }
+    Ok((spec.q - columns..spec.q)
+        .flat_map(|j| (0..spec.p).map(move |i| BlockId::new(i, j)))
+        .collect())
+}
+
+/// Driver-side membership state for a growth + shrink plan pair: who
+/// is dormant or retired right now, whether the join/retire have
+/// fired, heir selection for retirements, and the membership-filtered
+/// cost evaluation.
+pub(crate) struct Membership {
+    grow: GrowthPlan,
+    shrink: ShrinkPlan,
+    dormant: Vec<bool>,
+    retired: Vec<bool>,
+    joined: bool,
+    shrunk: bool,
+    p: usize,
+    q: usize,
+    /// Kills whose victim was still dormant when they came due; they
+    /// fire right after the join so the plan's configured fault
+    /// intensity is preserved instead of silently shrinking.
+    deferred_kills: Vec<BlockId>,
+}
+
+impl Membership {
+    pub(crate) fn new(spec: GridSpec, grow: &GrowthPlan, shrink: &ShrinkPlan) -> Self {
+        let mut dormant = vec![false; spec.num_blocks()];
+        for b in &grow.blocks {
+            dormant[b.index(spec.q)] = true;
+        }
+        Self {
+            grow: grow.clone(),
+            shrink: shrink.clone(),
+            dormant,
+            retired: vec![false; spec.num_blocks()],
+            joined: grow.blocks.is_empty(),
+            shrunk: shrink.blocks.is_empty(),
+            p: spec.p,
+            q: spec.q,
+            deferred_kills: Vec::new(),
+        }
+    }
+
+    fn is_dormant(&self, b: BlockId) -> bool {
+        self.dormant[b.index(self.q)]
+    }
+
+    fn is_retired(&self, b: BlockId) -> bool {
+        self.retired[b.index(self.q)]
+    }
+
+    /// The blocks of the growth plan (the async driver front-loads
+    /// their re-gossip sets after the join).
+    pub(crate) fn grown_blocks(&self) -> &[BlockId] {
+        &self.grow.blocks
+    }
+
+    /// A kill can only land on a live member — an absent machine
+    /// cannot crash. A dormant victim's kill is deferred to the join
+    /// (the machine joins, then crashes); a retired victim's kill is
+    /// dropped — the machine has already left for good. Returns `false`
+    /// when the event must not fire now.
+    pub(crate) fn kill_admissible(&mut self, block: BlockId) -> bool {
+        if self.is_dormant(block) {
+            log::warn!("deferring kill of {block} until it joins the membership");
+            self.deferred_kills.push(block);
+            false
+        } else if self.is_retired(block) {
+            log::warn!("dropping kill of {block}: it has retired from the membership");
+            false
+        } else {
+            true
+        }
+    }
+
+    /// Does the growth plan still have a pending join?
+    pub(crate) fn join_pending(&self) -> bool {
+        !self.joined
+    }
+
+    /// Is the pending join due at `step`?
+    pub(crate) fn join_due(&self, step: u64) -> bool {
+        !self.joined && step >= self.grow.join_step
+    }
+
+    /// Does the shrink plan still have a pending retirement?
+    pub(crate) fn retire_pending(&self) -> bool {
+        !self.shrunk
+    }
+
+    /// Is the pending retirement due at `step`?
+    pub(crate) fn retire_due(&self, step: u64) -> bool {
+        !self.shrunk && step >= self.shrink.retire_step
+    }
+
+    /// Join every dormant block (in plan order; duplicates join once)
+    /// and regrow the schedule — per block, so a concurrent shrink's
+    /// exclusions survive. Returns the kills that had been waiting for
+    /// their victim to become a member; the caller fires them (a fresh
+    /// joiner can have nothing in flight, so the crash is abort-free on
+    /// every driver).
+    pub(crate) fn join_all(
+        &mut self,
+        network: &mut GossipNetwork,
+        schedule: &mut ScheduleBuilder,
+        step: u64,
+    ) -> Result<Vec<BlockId>> {
+        for b in self.grow.blocks.clone() {
+            let k = b.index(self.q);
+            if self.dormant[k] {
+                network.join(step, b)?;
+                self.dormant[k] = false;
+            }
+        }
+        schedule.include(&self.grow.blocks);
+        self.joined = true;
+        Ok(std::mem::take(&mut self.deferred_kills))
+    }
+
+    /// Retire every planned block (in plan order; duplicates retire
+    /// once) and shrink the schedule. Callers must be quiescent — the
+    /// hand-off merges into heir factors, which no structure may be
+    /// touching. Heirs are chosen per block by [`Self::heir`]; a block
+    /// that is somehow still dormant is skipped with a warning (the
+    /// run-plan validation rejects retire-before-join upfront).
+    pub(crate) fn retire_all(
+        &mut self,
+        network: &mut GossipNetwork,
+        schedule: &mut ScheduleBuilder,
+        step: u64,
+    ) -> Result<()> {
+        for b in self.shrink.blocks.clone() {
+            let k = b.index(self.q);
+            if self.retired[k] {
+                continue;
+            }
+            if self.dormant[k] {
+                log::warn!("{b} is scheduled to retire but never joined; skipping");
+                continue;
+            }
+            let row_heir = self.heir(b, true);
+            let col_heir = self.heir(b, false);
+            network.retire(step, b, row_heir, col_heir)?;
+            self.retired[k] = true;
+        }
+        schedule.exclude(&self.shrink.blocks);
+        self.shrunk = true;
+        Ok(())
+    }
+
+    /// The nearest surviving replica holder in `b`'s grid row
+    /// (`along_row`) or grid column: live, not dormant, and not itself
+    /// scheduled to retire. Distance ties break toward the lower
+    /// index, so heir choice — and therefore the hand-off traffic — is
+    /// deterministic. `None` when the whole band leaves (the sink
+    /// snapshot is then the band's only continuation).
+    fn heir(&self, b: BlockId, along_row: bool) -> Option<BlockId> {
+        let n = if along_row { self.q } else { self.p };
+        let mut best: Option<(usize, usize)> = None;
+        for x in 0..n {
+            let c = if along_row { BlockId::new(b.i, x) } else { BlockId::new(x, b.j) };
+            if c == b {
+                continue;
+            }
+            let k = c.index(self.q);
+            if self.dormant[k] || self.retired[k] || self.shrink.blocks.contains(&c) {
+                continue;
+            }
+            let d = if along_row { c.j.abs_diff(b.j) } else { c.i.abs_diff(b.i) };
+            let better = match best {
+                None => true,
+                Some((bd, bx)) => d < bd || (d == bd && x < bx),
+            };
+            if better {
+                best = Some((d, x));
+            }
+        }
+        best.map(|(_, x)| if along_row { BlockId::new(b.i, x) } else { BlockId::new(x, b.j) })
+    }
+
+    /// Cost over the live membership only: dormant blocks have not
+    /// joined the model yet, retired blocks have left it.
+    pub(crate) fn total_cost(&self, network: &mut GossipNetwork, lambda: f32) -> Result<f64> {
+        let (dormant, retired, q) = (&self.dormant, &self.retired, self.q);
+        network.total_cost_over(lambda, |b| {
+            let k = b.index(q);
+            !dormant[k] && !retired[k]
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GridSpec {
+        GridSpec::new(40, 40, 4, 4, 3)
+    }
+
+    #[test]
+    fn shrink_plan_validates_geometry_like_growth() {
+        assert!(ShrinkPlan::trailing_columns(spec(), 3, 10).is_err(), "q-3 < 2");
+        let p = ShrinkPlan::trailing_columns(spec(), 2, 10).unwrap();
+        assert_eq!(p.len(), 8);
+        assert!(p.blocks.iter().all(|b| b.j >= 2));
+        assert!(ShrinkPlan::trailing_columns(spec(), 0, 10).unwrap().is_empty());
+        assert!(ShrinkPlan::new().is_empty());
+    }
+
+    #[test]
+    fn heirs_are_nearest_survivors_with_deterministic_ties() {
+        // Single retiring block (1,1) of a 4×4 grid: both heirs exist
+        // and sit at distance 1; ties break toward the lower index.
+        let shrink = ShrinkPlan { retire_step: 0, blocks: vec![BlockId::new(1, 1)] };
+        let m = Membership::new(spec(), &GrowthPlan::default(), &shrink);
+        assert_eq!(m.heir(BlockId::new(1, 1), true), Some(BlockId::new(1, 0)));
+        assert_eq!(m.heir(BlockId::new(1, 1), false), Some(BlockId::new(0, 1)));
+        // A corner block's heirs are one-sided.
+        let shrink = ShrinkPlan { retire_step: 0, blocks: vec![BlockId::new(0, 0)] };
+        let m = Membership::new(spec(), &GrowthPlan::default(), &shrink);
+        assert_eq!(m.heir(BlockId::new(0, 0), true), Some(BlockId::new(0, 1)));
+        assert_eq!(m.heir(BlockId::new(0, 0), false), Some(BlockId::new(1, 0)));
+    }
+
+    #[test]
+    fn whole_column_retirement_has_no_column_heir() {
+        // The trailing column leaves: each retiree keeps a row heir
+        // (the nearest surviving column of its row) but no column heir
+        // — its column band has no surviving replica holder.
+        let shrink = ShrinkPlan::trailing_columns(spec(), 1, 100).unwrap();
+        let m = Membership::new(spec(), &GrowthPlan::default(), &shrink);
+        for b in &shrink.blocks {
+            assert_eq!(m.heir(*b, true), Some(BlockId::new(b.i, 2)));
+            assert_eq!(m.heir(*b, false), None, "{b} has no surviving column peer");
+        }
+    }
+
+    #[test]
+    fn heirs_skip_dormant_blocks() {
+        // Column 2 dormant, column 3 retiring: the row heir skips the
+        // dormant column and lands on column 1.
+        let grow = GrowthPlan {
+            join_step: u64::MAX,
+            blocks: (0..4).map(|i| BlockId::new(i, 2)).collect(),
+        };
+        let shrink = ShrinkPlan::trailing_columns(spec(), 1, 0).unwrap();
+        let m = Membership::new(spec(), &grow, &shrink);
+        assert_eq!(m.heir(BlockId::new(0, 3), true), Some(BlockId::new(0, 1)));
+    }
+
+    #[test]
+    fn kill_admissibility_tracks_membership() {
+        let grow = GrowthPlan { join_step: 10, blocks: vec![BlockId::new(0, 3)] };
+        let shrink = ShrinkPlan { retire_step: 20, blocks: vec![BlockId::new(1, 1)] };
+        let mut m = Membership::new(spec(), &grow, &shrink);
+        assert!(m.kill_admissible(BlockId::new(2, 2)), "live blocks can crash");
+        assert!(!m.kill_admissible(BlockId::new(0, 3)), "dormant kills defer");
+        assert_eq!(m.deferred_kills, vec![BlockId::new(0, 3)]);
+        // A planned-but-not-yet-retired block is still a member.
+        assert!(m.kill_admissible(BlockId::new(1, 1)));
+        m.retired[BlockId::new(1, 1).index(4)] = true;
+        assert!(!m.kill_admissible(BlockId::new(1, 1)), "retired kills drop");
+        assert_eq!(m.deferred_kills.len(), 1, "dropped kills are not deferred");
+    }
+
+    #[test]
+    fn pending_and_due_track_both_plans() {
+        let grow = GrowthPlan { join_step: 10, blocks: vec![BlockId::new(0, 3)] };
+        let shrink = ShrinkPlan { retire_step: 20, blocks: vec![BlockId::new(1, 1)] };
+        let m = Membership::new(spec(), &grow, &shrink);
+        assert!(m.join_pending() && m.retire_pending());
+        assert!(!m.join_due(9) && m.join_due(10));
+        assert!(!m.retire_due(19) && m.retire_due(20));
+        let empty = Membership::new(spec(), &GrowthPlan::default(), &ShrinkPlan::default());
+        assert!(!empty.join_pending() && !empty.retire_pending());
+    }
+}

@@ -1,1557 +1,53 @@
-//! The decentralized gossip runtime (L3's system contribution).
+//! The decentralized gossip runtime (L3's system contribution), as a
+//! stack of narrow layers.
 //!
 //! [`GossipNetwork`] runs one [`BlockAgent`] state machine per block
 //! over a pluggable [`crate::net`] transport — thread-per-block
 //! channels, multiplexed workers for `p·q ≫ cores` grids, or simulated
 //! lossy links — wired so each agent only ever messages its grid
-//! neighbours. Two drivers train through the network:
-//!
-//! * [`ParallelDriver`] — conflict-free rounds from [`ScheduleBuilder`]
-//!   (the paper's §6 future work), dispatched with a barrier per round.
-//!   Deterministic: for a fixed seed the trained state is bit-identical
-//!   across transports and worker counts (`single_worker_matches_multi_worker`,
-//!   `tests/transport_equivalence.rs`).
-//! * [`AsyncDriver`] — NOMAD-style barrier-free dispatch: structures
-//!   stream out as their blocks free up (per-block in-flight flags),
-//!   keeping the pipeline full instead of waiting for each round's
-//!   slowest update. Higher throughput at scale, at the cost of
-//!   run-to-run bit determinism (completion order steers the schedule;
-//!   `max_inflight = 1` restores full determinism).
-//!
-//! Both drivers double as **fault and membership supervisors**: given
-//! a seeded [`FaultPlan`] they crash agents (restoring each from its
-//! [`CheckpointStore`] snapshot — no coordinator holds factor state,
-//! matching the paper's serverless claim) and sever/heal simulated
-//! links. A kill no longer waits for its victim to go free: if a
-//! structure touching the victim is in flight, the supervisor *aborts*
-//! it through the anchor ([`crate::net::AgentMsg::Abort`]) — all three
-//! blocks roll back to their pre-structure factors — crashes the
-//! victim, and redispatches the undone structure (front-loaded via
-//! [`ScheduleBuilder::touching`] on the async driver). Given a
-//! [`GrowthPlan`] the drivers also grow the membership mid-run: blocks
-//! spawn *dormant*, join at a scheduled step
-//! ([`crate::net::AgentMsg::Join`], warm from a durable [`DiskSink`]
-//! when it holds a snapshot), and the schedule regenerates
-//! conflict-free for the grown geometry. Executed actions land in a
-//! replayable [`FaultRecord`] trace on the
+//! neighbours. Two drivers train through the network behind one
+//! [`Driver`] trait: the round-barrier [`ParallelDriver`]
+//! (deterministic, bit-identical across transports and worker counts)
+//! and the NOMAD-style [`AsyncDriver`] (barrier-free, statistically
+//! reproducible, bit-deterministic at `max_inflight = 1`). Both
+//! supervise scheduled faults ([`crate::net::FaultPlan`]: crashes with
+//! checkpoint restore, mid-structure aborts, link partitions) and
+//! *elastic membership*: dormant blocks join mid-run ([`GrowthPlan`])
+//! and live blocks retire gracefully mid-run ([`ShrinkPlan`] — drain,
+//! final snapshot to the durable sink, row/column factors handed to
+//! surviving heir blocks over the wire, schedule regenerated for the
+//! shrunk geometry). Executed actions land in a replayable
+//! [`crate::net::FaultRecord`] trace on the
 //! [`crate::solver::SolverReport`].
+//!
+//! ## Module map (each file's header states its full layer contract)
+//!
+//! | module | layer | may call | may not touch |
+//! |---|---|---|---|
+//! | `agent` | L0: block state machines | engine, checkpoints | transports, policy |
+//! | `checkpoint` | L0: snapshot durability | codec framing, fs | agents, drivers |
+//! | `scheduler` | L0: conflict-free schedules | grid enumeration | network, membership |
+//! | `network` | L1: transport-facing mechanisms | `crate::net`, agents | plans, membership |
+//! | `supervisor` | L2: crash/abort/partition/join/retire | network, membership | dispatch, schedules |
+//! | `elastic` | L2½: grow/shrink membership | supervision verbs, scheduler | transports, fault firing |
+//! | `drivers` | L3: dispatch policies + lifecycle | all lower layers | transports, agents directly |
+//!
+//! The split keeps every dependency arrow pointing downward: a new
+//! dispatch discipline is one file under `drivers/`, a new membership
+//! move (grow and shrink exist today) is a plan plus a membership
+//! transition, and nothing above L1 touches a transport.
 
 mod agent;
 mod checkpoint;
+mod drivers;
+mod elastic;
+mod network;
 mod scheduler;
+mod supervisor;
 
 pub use agent::{AgentStatus, BlockAgent};
 pub use checkpoint::{Checkpoint, CheckpointSink, CheckpointStore, DiskSink, MemorySink};
+pub use drivers::{AsyncDriver, Driver, ParallelDriver};
+pub use elastic::{GrowthPlan, ShrinkPlan};
+pub use network::GossipNetwork;
 pub use scheduler::{conflicts, ScheduleBuilder};
-
-use std::collections::{HashMap, VecDeque};
-use std::sync::Arc;
-use std::time::Duration;
-
-use crate::data::CooMatrix;
-use crate::engine::{Engine, StructureParams};
-use crate::grid::{BlockId, BlockPartition, GridSpec, NormalizationCoeffs, Structure};
-use crate::metrics::{CostCurve, Timer};
-use crate::model::FactorState;
-use crate::net::{
-    self, AgentMsg, DriverMsg, FaultEvent, FaultPlan, FaultRecord, LinkFault, NetConfig,
-    Transport, WireSnapshot,
-};
-use crate::solver::{ConvergenceCriterion, ConvergenceVerdict, SolverConfig, SolverReport};
-use crate::{Error, Result};
-
-/// A spawned set of block agents behind a transport, seen from the
-/// driver: dispatch structures, await completions, query costs, and
-/// finally collect the factors back (the paper's "final culmination"
-/// hand-off).
-pub struct GossipNetwork {
-    spec: GridSpec,
-    transport: Box<dyn Transport>,
-    next_token: u64,
-    /// Completions parked while a synchronous crash/abort/join drained
-    /// the driver channel (unrelated `Done`s can race the reply).
-    backlog: VecDeque<DriverMsg>,
-    /// Structures dispatched but not yet completed, by token — what a
-    /// mid-structure [`Self::crash`] consults to find the victim's
-    /// in-flight structure.
-    inflight: HashMap<u64, Structure>,
-    /// Executed fault/membership actions, in firing order (the
-    /// replayable trace).
-    trace: Vec<FaultRecord>,
-}
-
-impl GossipNetwork {
-    /// Spawn one agent per block on the default thread-per-block
-    /// transport. `engine` must already be prepared.
-    pub fn spawn(spec: GridSpec, engine: Arc<dyn Engine>, state: FactorState) -> Self {
-        Self::spawn_with(&NetConfig::default(), spec, engine, state)
-    }
-
-    /// Spawn on the configured transport stack.
-    pub fn spawn_with(
-        net: &NetConfig,
-        spec: GridSpec,
-        engine: Arc<dyn Engine>,
-        state: FactorState,
-    ) -> Self {
-        Self::spawn_full(net, spec, engine, state, None)
-    }
-
-    /// Spawn on the configured transport stack with optional per-block
-    /// checkpointing (required for [`Self::crash`] to restore warm).
-    pub fn spawn_full(
-        net: &NetConfig,
-        spec: GridSpec,
-        engine: Arc<dyn Engine>,
-        state: FactorState,
-        checkpoints: Option<Arc<CheckpointStore>>,
-    ) -> Self {
-        Self::spawn_elastic(net, spec, engine, state, checkpoints, &net::DormantSet::new())
-    }
-
-    /// Spawn with some blocks dormant (provisioned but outside the
-    /// membership until [`Self::join`] activates them — see
-    /// [`GrowthPlan`]).
-    pub fn spawn_elastic(
-        net: &NetConfig,
-        spec: GridSpec,
-        engine: Arc<dyn Engine>,
-        state: FactorState,
-        checkpoints: Option<Arc<CheckpointStore>>,
-        dormant: &net::DormantSet,
-    ) -> Self {
-        Self {
-            spec,
-            transport: net::spawn(net, spec, engine, state, checkpoints, dormant),
-            next_token: 0,
-            backlog: VecDeque::new(),
-            inflight: HashMap::new(),
-            trace: Vec::new(),
-        }
-    }
-
-    /// Backlog-aware receive: parked completions drain before the
-    /// transport is polled again.
-    fn recv_msg(&mut self) -> Result<DriverMsg> {
-        if let Some(m) = self.backlog.pop_front() {
-            return Ok(m);
-        }
-        self.transport.recv()
-    }
-
-    /// Transport label (for reports).
-    pub fn transport_name(&self) -> &'static str {
-        self.transport.name()
-    }
-
-    /// Wire accounting when the transport simulates links.
-    pub fn wire_stats(&self) -> Option<WireSnapshot> {
-        self.transport.wire()
-    }
-
-    /// Fire one structure at its anchor without waiting; returns the
-    /// token its [`DriverMsg::Done`] completion will echo.
-    pub fn dispatch(&mut self, structure: Structure, params: StructureParams) -> Result<u64> {
-        let token = self.next_token;
-        self.next_token += 1;
-        self.transport.send(
-            structure.roles().anchor,
-            AgentMsg::Execute { structure, params, token },
-        )?;
-        self.inflight.insert(token, structure);
-        Ok(token)
-    }
-
-    /// Block until one in-flight structure completes; returns its
-    /// anchor and token. Errors if the update itself failed.
-    pub fn await_done(&mut self) -> Result<(BlockId, u64)> {
-        match self.recv_msg()? {
-            DriverMsg::Done { anchor, token, result } => {
-                self.inflight.remove(&token);
-                result.map(|()| (anchor, token))
-            }
-            other => Err(Error::Gossip(format!(
-                "protocol violation: {} while awaiting a completion",
-                other.kind()
-            ))),
-        }
-    }
-
-    /// Abort the in-flight structure `s` (token `token`): ask its
-    /// anchor to drain the protocol and undo the update, discard any
-    /// completion that raced the abort, and record the abort against
-    /// `victim`. Returns once all three blocks are back — bitwise — at
-    /// their pre-structure factors and versions.
-    fn abort(&mut self, step: u64, token: u64, s: Structure, victim: BlockId) -> Result<()> {
-        let anchor = s.roles().anchor;
-        self.transport.send(anchor, AgentMsg::Abort { token })?;
-        self.inflight.remove(&token);
-        // The completion may already be parked from an earlier drain;
-        // it is no longer a completion.
-        self.backlog
-            .retain(|m| !matches!(m, DriverMsg::Done { token: t, .. } if *t == token));
-        loop {
-            match self.transport.recv()? {
-                DriverMsg::Aborted { token: t, .. } if t == token => {
-                    self.trace.push(FaultRecord::Abort { step, anchor, victim });
-                    return Ok(());
-                }
-                DriverMsg::Done { token: t, result, .. } if t == token => {
-                    // Raced the abort; the anchor reverts it and the
-                    // Aborted follows. This is not an update anymore.
-                    if let Err(e) = result {
-                        log::warn!("aborted structure had already failed: {e}");
-                    }
-                }
-                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
-                other => {
-                    return Err(Error::Gossip(format!(
-                        "protocol violation: {} while aborting token {token}",
-                        other.kind()
-                    )))
-                }
-            }
-        }
-    }
-
-    /// Crash-and-restore `block` from its last checkpoint (cold, with
-    /// zeroed factors, when the network runs uncheckpointed).
-    /// Synchronous: returns once the replacement agent is live again.
-    /// Completions racing the restart are parked for [`Self::await_done`].
-    ///
-    /// The kill may land mid-structure: if a dispatched-but-incomplete
-    /// structure touches `block` (at most one can — in-flight
-    /// structures are pairwise disjoint), it is aborted first — all
-    /// three participants roll back to their pre-structure factors —
-    /// and returned so the caller can redispatch it. `step` is
-    /// recorded in the fault trace.
-    pub fn crash(&mut self, step: u64, block: BlockId) -> Result<Option<(u64, Structure)>> {
-        let hit = self
-            .inflight
-            .iter()
-            .find(|(_, s)| s.blocks().contains(&block))
-            .map(|(&t, &s)| (t, s));
-        if let Some((token, s)) = hit {
-            self.abort(step, token, s, block)?;
-        }
-        self.transport.send(block, AgentMsg::Crash)?;
-        loop {
-            match self.transport.recv()? {
-                DriverMsg::Restarted { from, version, lost } if from == block => {
-                    self.trace.push(FaultRecord::Kill {
-                        step,
-                        block,
-                        restored_version: version,
-                        lost_updates: lost,
-                    });
-                    return Ok(hit);
-                }
-                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
-                other => {
-                    return Err(Error::Gossip(format!(
-                        "protocol violation: {} while awaiting the restart of {block}",
-                        other.kind()
-                    )))
-                }
-            }
-        }
-    }
-
-    /// Activate the dormant `block` into the live membership
-    /// ([`crate::net::AgentMsg::Join`]): it warm-starts from the
-    /// checkpoint sink when a snapshot exists (a durable sink carries
-    /// them across runs), cold-joins on its spawn factors otherwise.
-    /// Synchronous; completions racing the join are parked.
-    pub fn join(&mut self, step: u64, block: BlockId) -> Result<()> {
-        self.transport.send(block, AgentMsg::Join)?;
-        loop {
-            match self.transport.recv()? {
-                DriverMsg::Joined { from, version, warm } if from == block => {
-                    self.trace.push(FaultRecord::Join { step, block, version, warm });
-                    return Ok(());
-                }
-                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
-                other => {
-                    return Err(Error::Gossip(format!(
-                        "protocol violation: {} while awaiting the join of {block}",
-                        other.kind()
-                    )))
-                }
-            }
-        }
-    }
-
-    /// Sever both directions of the grid link `a — b` for `duration` of
-    /// wall time (sim transports only; frames are held, never erased).
-    pub fn partition(
-        &mut self,
-        step: u64,
-        a: BlockId,
-        b: BlockId,
-        duration: Duration,
-    ) -> Result<()> {
-        self.transport.inject_fault(LinkFault::Partition { a, b, duration })?;
-        self.trace.push(FaultRecord::Partition {
-            step,
-            a,
-            b,
-            duration_us: duration.as_micros() as u64,
-        });
-        Ok(())
-    }
-
-    /// Executed fault actions so far, in firing order.
-    pub fn fault_trace(&self) -> &[FaultRecord] {
-        &self.trace
-    }
-
-    /// Dispatch one structure and await its completion.
-    pub fn execute_structure(
-        &mut self,
-        structure: Structure,
-        params: StructureParams,
-    ) -> Result<()> {
-        self.execute_batch(&[structure], &[params])
-    }
-
-    /// Dispatch up to `batch.len()` *non-conflicting* structures
-    /// concurrently; await all completions. Callers must guarantee the
-    /// batch is conflict-free (the scheduler does).
-    pub fn execute_batch(
-        &mut self,
-        batch: &[Structure],
-        params: &[StructureParams],
-    ) -> Result<()> {
-        debug_assert_eq!(batch.len(), params.len());
-        for (s, p) in batch.iter().zip(params) {
-            self.dispatch(*s, *p)?;
-        }
-        for _ in 0..batch.len() {
-            self.await_done()?;
-        }
-        Ok(())
-    }
-
-    /// Total cost Σ blocks (leader-side convergence check — factor
-    /// matrices stay with the agents, only scalars travel). Replies
-    /// arrive in arbitrary order but are summed in block order, so the
-    /// f64 result is deterministic. Callers must be quiescent (no
-    /// structure in flight).
-    pub fn total_cost(&mut self, lambda: f32) -> Result<f64> {
-        self.total_cost_over(lambda, |_| true)
-    }
-
-    /// Total cost over the blocks `active` admits — the live
-    /// membership; dormant blocks are not part of the model yet, so
-    /// their terms stay out of the sum until they join. Same block-
-    /// order determinism and quiescence contract as
-    /// [`Self::total_cost`].
-    pub fn total_cost_over(
-        &mut self,
-        lambda: f32,
-        active: impl Fn(BlockId) -> bool,
-    ) -> Result<f64> {
-        let ids: Vec<BlockId> = self.spec.blocks().filter(|b| active(*b)).collect();
-        for id in &ids {
-            self.transport.send(*id, AgentMsg::GetCost { lambda })?;
-        }
-        let mut per_block: Vec<Option<f64>> = vec![None; self.spec.num_blocks()];
-        for _ in 0..ids.len() {
-            match self.recv_msg()? {
-                DriverMsg::Cost { from, cost } => {
-                    per_block[from.index(self.spec.q)] = Some(cost?);
-                }
-                other => {
-                    return Err(Error::Gossip(format!(
-                        "protocol violation: {} while collecting costs",
-                        other.kind()
-                    )))
-                }
-            }
-        }
-        let mut acc = 0.0;
-        for id in &ids {
-            acc += per_block[id.index(self.spec.q)]
-                .ok_or_else(|| Error::Gossip("missing cost reply".into()))?;
-        }
-        Ok(acc)
-    }
-
-    /// Stop all agents and collect the final factor state (the paper's
-    /// "final culmination" hand-off).
-    ///
-    /// Teardown is best-effort so it also works on the error path of a
-    /// failed run: dead agents (whose mailboxes reject the send) are
-    /// skipped, stale in-flight completions are drained and ignored,
-    /// and worker threads are reaped either way. Only a full, clean
-    /// collection returns `Ok`.
-    pub fn shutdown(mut self) -> Result<FactorState> {
-        // A failed run can leave parked completions; they are stale now.
-        for stale in self.backlog.drain(..) {
-            log::debug!("shutdown: dropping parked {}", stale.kind());
-        }
-        let mut expected = 0usize;
-        for id in self.spec.blocks() {
-            match self.transport.send(id, AgentMsg::Shutdown) {
-                Ok(()) => expected += 1,
-                Err(e) => log::warn!("shutdown: {e}"),
-            }
-        }
-        // Zero receptacle: every block is overwritten by an agent reply
-        // below, so a full RNG init here would be wasted work.
-        let mut state = FactorState::zeros(self.spec);
-        let mut collected = 0usize;
-        while collected < expected {
-            match self.transport.recv() {
-                Ok(DriverMsg::Retired { from, u, w }) => {
-                    state.set_u(from, u);
-                    state.set_w(from, w);
-                    collected += 1;
-                }
-                // A failed run can leave completions or cost replies in
-                // flight; drain them so every Retired still arrives.
-                Ok(other) => log::debug!("shutdown: draining stale {}", other.kind()),
-                Err(e) => {
-                    log::warn!("shutdown: {e}");
-                    break;
-                }
-            }
-        }
-        self.transport.join();
-        if collected < self.spec.num_blocks() {
-            return Err(Error::Gossip(format!(
-                "shutdown reaped {collected}/{} agents",
-                self.spec.num_blocks()
-            )));
-        }
-        Ok(state)
-    }
-}
-
-/// Membership growth: which blocks start dormant and when they join
-/// the live grid. The empty plan (the default) is a fully-live grid.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct GrowthPlan {
-    /// Completed-update count at which every dormant block joins.
-    pub join_step: u64,
-    /// The dormant blocks. The remaining live sub-grid must still
-    /// admit at least one structure (checked at train time).
-    pub blocks: Vec<BlockId>,
-}
-
-impl GrowthPlan {
-    /// The empty plan: every block live from the start.
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Regrow the trailing `columns` grid columns at `join_step` — the
-    /// canonical "a new machine rack joins the grid" scenario. The
-    /// live sub-grid keeps `q − columns ≥ 2` columns so gossip can run
-    /// before the join.
-    pub fn trailing_columns(spec: GridSpec, columns: usize, join_step: u64) -> Result<Self> {
-        if columns == 0 {
-            return Ok(Self::default());
-        }
-        if spec.q < columns + 2 {
-            return Err(Error::Config(format!(
-                "cannot keep {columns} dormant column(s) of a {}x{} grid: the live \
-                 sub-grid needs at least 2 columns",
-                spec.p, spec.q
-            )));
-        }
-        let blocks = (spec.q - columns..spec.q)
-            .flat_map(|j| (0..spec.p).map(move |i| BlockId::new(i, j)))
-            .collect();
-        Ok(Self { join_step, blocks })
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.blocks.is_empty()
-    }
-
-    pub fn len(&self) -> usize {
-        self.blocks.len()
-    }
-}
-
-/// Driver-side membership state for a [`GrowthPlan`]: who is dormant
-/// right now, whether the join has fired, and the membership-filtered
-/// cost evaluation.
-struct Membership {
-    plan: GrowthPlan,
-    dormant: Vec<bool>,
-    joined: bool,
-    q: usize,
-    /// Kills whose victim was still dormant when they came due; they
-    /// fire right after the join so the plan's configured fault
-    /// intensity is preserved instead of silently shrinking.
-    deferred_kills: Vec<BlockId>,
-}
-
-impl Membership {
-    fn new(spec: GridSpec, plan: &GrowthPlan) -> Self {
-        let mut dormant = vec![false; spec.num_blocks()];
-        for b in &plan.blocks {
-            dormant[b.index(spec.q)] = true;
-        }
-        Self {
-            plan: plan.clone(),
-            dormant,
-            joined: plan.blocks.is_empty(),
-            q: spec.q,
-            deferred_kills: Vec::new(),
-        }
-    }
-
-    fn is_dormant(&self, b: BlockId) -> bool {
-        self.dormant[b.index(self.q)]
-    }
-
-    /// A kill can only land on a live member — an absent machine
-    /// cannot crash. A dormant victim's kill is deferred to the join
-    /// (the machine joins, then crashes) so every supervision loop
-    /// treats it the same way; returns `false` when deferred.
-    fn kill_target_live(&mut self, block: BlockId) -> bool {
-        if self.is_dormant(block) {
-            log::warn!("deferring kill of {block} until it joins the membership");
-            self.deferred_kills.push(block);
-            false
-        } else {
-            true
-        }
-    }
-
-    /// Does the plan still have a pending join?
-    fn pending(&self) -> bool {
-        !self.joined
-    }
-
-    /// Is the pending join due at `step`?
-    fn due(&self, step: u64) -> bool {
-        !self.joined && step >= self.plan.join_step
-    }
-
-    /// Join every dormant block (in plan order; duplicates join once),
-    /// regrow the schedule to the full geometry, and fire any kill that
-    /// had been waiting for its victim to become a member.
-    fn join_all(
-        &mut self,
-        network: &mut GossipNetwork,
-        schedule: &mut ScheduleBuilder,
-        step: u64,
-    ) -> Result<()> {
-        for b in self.plan.blocks.clone() {
-            let k = b.index(self.q);
-            if self.dormant[k] {
-                network.join(step, b)?;
-                self.dormant[k] = false;
-            }
-        }
-        schedule.include_all();
-        self.joined = true;
-        for b in std::mem::take(&mut self.deferred_kills) {
-            network.crash(step, b)?;
-        }
-        Ok(())
-    }
-
-    /// Cost over the live membership only (everything, once joined).
-    fn total_cost(&self, network: &mut GossipNetwork, lambda: f32) -> Result<f64> {
-        let dormant = &self.dormant;
-        let q = self.q;
-        network.total_cost_over(lambda, |b| !dormant[b.index(q)])
-    }
-}
-
-/// Shared driver lifecycle: prepare the engine, spawn the network
-/// (checkpointed when `checkpoint_every > 0` — durably under
-/// `checkpoint_dir`, in memory otherwise; growth-plan blocks spawn
-/// dormant), time the training closure, tear the network down
-/// (best-effort on the error path so failed runs don't leak p·q agent
-/// threads), and assemble the report — fault trace included.
-#[allow(clippy::too_many_arguments)]
-fn run_gossip_driver(
-    spec: GridSpec,
-    net: &NetConfig,
-    seed: u64,
-    checkpoint_every: u64,
-    checkpoint_dir: Option<&std::path::Path>,
-    grow: &GrowthPlan,
-    mut engine: Box<dyn Engine>,
-    train_data: &CooMatrix,
-    train: impl FnOnce(&mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)>,
-) -> Result<(SolverReport, FactorState)> {
-    spec.validate()?;
-    for b in &grow.blocks {
-        if b.i >= spec.p || b.j >= spec.q {
-            return Err(Error::Config(format!(
-                "growth plan block {b} is outside the {}x{} grid",
-                spec.p, spec.q
-            )));
-        }
-    }
-    let partition = BlockPartition::new(spec, train_data)?;
-    engine.prepare(&partition)?;
-    let engine: Arc<dyn Engine> = Arc::from(engine);
-    let engine_name = engine.name().to_string();
-
-    let state = FactorState::init_random(spec, seed);
-    let checkpoints = if checkpoint_every > 0 {
-        Some(match checkpoint_dir {
-            Some(dir) => CheckpointStore::durable(checkpoint_every, dir)?,
-            None => CheckpointStore::in_memory(spec, checkpoint_every),
-        })
-    } else {
-        if checkpoint_dir.is_some() {
-            log::warn!("checkpoint dir set but checkpointing is off (cadence 0); ignored");
-        }
-        None
-    };
-    let dormant: net::DormantSet = grow.blocks.iter().map(|b| b.index(spec.q)).collect();
-    let mut network =
-        GossipNetwork::spawn_elastic(net, spec, engine, state, checkpoints, &dormant);
-    let timer = Timer::start();
-    match train(&mut network) {
-        Ok((curve, final_cost, iters, converged)) => {
-            let faults = std::mem::take(&mut network.trace);
-            let state = network.shutdown()?;
-            Ok((
-                SolverReport {
-                    curve,
-                    final_cost,
-                    iters,
-                    converged,
-                    wall: timer.elapsed(),
-                    engine: engine_name,
-                    faults,
-                },
-                state,
-            ))
-        }
-        Err(e) => {
-            // Best-effort teardown (in-flight structures included:
-            // agents are non-blocking, so Shutdown reaches them even
-            // mid-protocol and stale traffic is drained).
-            let _ = network.shutdown();
-            Err(e)
-        }
-    }
-}
-
-/// Execute one due fault event through the network supervisor API. A
-/// kill may abort an in-flight structure touching the victim; the
-/// caller is responsible for redispatching it (the barrier callers
-/// below never have one in flight).
-fn fire_fault(network: &mut GossipNetwork, event: FaultEvent, step: u64) -> Result<()> {
-    match event {
-        FaultEvent::Kill { block, .. } => network.crash(step, block).map(|_| ()),
-        FaultEvent::Partition { a, b, duration_us, .. } => {
-            network.partition(step, a, b, Duration::from_micros(duration_us))
-        }
-    }
-}
-
-/// Fire every event due at `step` from a quiescent point (a chunk
-/// barrier, or the drained end of training). Kills aimed at a block
-/// that has not joined the membership yet are deferred to the join —
-/// an absent machine cannot crash.
-fn fire_due_faults(
-    network: &mut GossipNetwork,
-    queue: &mut VecDeque<FaultEvent>,
-    step: u64,
-    members: &mut Membership,
-) -> Result<()> {
-    while queue.front().is_some_and(|e| e.step() <= step) {
-        let event = queue.pop_front().expect("peeked");
-        if let FaultEvent::Kill { block, .. } = event {
-            if !members.kill_target_live(block) {
-                continue;
-            }
-        }
-        fire_fault(network, event, step)?;
-    }
-    Ok(())
-}
-
-/// End-of-training sweep: fire events that came due during the final
-/// updates (trace completeness — a crash right at the end of training
-/// is still a crash), then log anything scheduled past the budget.
-///
-/// A kill fired here goes **un-regossiped** into the final state: the
-/// victim keeps its checkpoint (or zeros, uncheckpointed), mirroring a
-/// machine dying at the finish line. `final_cost` is evaluated after
-/// this sweep, so the report is honest about it; plans that want a
-/// clean final model should end their window well before `max_iters`
-/// (the presets and the chaos harness do).
-fn finish_faults(
-    network: &mut GossipNetwork,
-    queue: &mut VecDeque<FaultEvent>,
-    step: u64,
-    members: &mut Membership,
-) -> Result<()> {
-    if queue.front().is_some_and(|e| e.step() <= step) {
-        log::warn!(
-            "firing fault event(s) after the last training update; the rollback \
-             is not re-gossiped into the final state"
-        );
-    }
-    fire_due_faults(network, queue, step, members)?;
-    if let Some(e) = queue.front() {
-        log::debug!(
-            "{} fault event(s) scheduled past the end of training (first due at \
-             step {}); skipped",
-            queue.len(),
-            e.step()
-        );
-    }
-    Ok(())
-}
-
-/// Upfront supervision check shared by both drivers: partitions need a
-/// transport with simulated links.
-fn check_fault_support(network: &GossipNetwork, plan: &FaultPlan) -> Result<()> {
-    if plan.has_partitions() && network.wire_stats().is_none() {
-        return Err(Error::Config(
-            "fault plans with link partitions require a sim transport \
-             (transport = \"sim\" or \"sim-multiplex\")"
-                .into(),
-        ));
-    }
-    Ok(())
-}
-
-/// Parallel gossip driver: Algorithm 1 with conflict-free rounds
-/// dispatched concurrently over the agent network.
-#[derive(Debug, Clone)]
-pub struct ParallelDriver {
-    spec: GridSpec,
-    cfg: SolverConfig,
-    /// Maximum structures in flight at once (compute parallelism).
-    pub workers: usize,
-    /// Which transport stack carries the gossip.
-    pub net: NetConfig,
-    /// Scheduled crashes/partitions to supervise (default: none).
-    pub faults: FaultPlan,
-    /// Scheduled membership growth (default: every block live).
-    pub grow: GrowthPlan,
-    /// Per-block snapshot cadence in factor mutations (0 = off).
-    pub checkpoint_every: u64,
-    /// Persist snapshots here instead of in memory (survives the
-    /// process; enables warm joins across runs).
-    pub checkpoint_dir: Option<std::path::PathBuf>,
-}
-
-impl ParallelDriver {
-    pub fn new(spec: GridSpec, cfg: SolverConfig, workers: usize) -> Self {
-        Self {
-            spec,
-            cfg,
-            workers: workers.max(1),
-            net: NetConfig::default(),
-            faults: FaultPlan::default(),
-            grow: GrowthPlan::default(),
-            checkpoint_every: 0,
-            checkpoint_dir: None,
-        }
-    }
-
-    /// Select the transport stack (default: thread-per-block channels).
-    pub fn with_net(mut self, net: NetConfig) -> Self {
-        self.net = net;
-        self
-    }
-
-    /// Supervise a fault plan during training. Events whose step lands
-    /// on a chunk barrier fire with every block free; events landing
-    /// *inside* a chunk fire mid-structure — the victim's in-flight
-    /// structure is aborted (all three blocks roll back), the victim
-    /// crash-restores, and the structure is redispatched.
-    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
-        self.faults = faults;
-        self
-    }
-
-    /// Grow the membership mid-run: the plan's blocks spawn dormant and
-    /// join — warm from the checkpoint sink when it holds a snapshot —
-    /// at the first round barrier at or past `join_step`, after which
-    /// the schedule regenerates for the full geometry.
-    pub fn with_growth(mut self, grow: GrowthPlan) -> Self {
-        self.grow = grow;
-        self
-    }
-
-    /// Checkpoint every block's factors at this mutation cadence (0
-    /// disables; crashes then restore cold).
-    pub fn with_checkpoints(mut self, every: u64) -> Self {
-        self.checkpoint_every = every;
-        self
-    }
-
-    /// Persist checkpoints durably under `dir` (see [`DiskSink`]).
-    pub fn with_checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
-        self.checkpoint_dir = Some(dir.into());
-        self
-    }
-
-    /// Train; returns the report and the final (culminated) state.
-    ///
-    /// `engine` is prepared here, then shared immutably with all agents.
-    pub fn run(
-        &self,
-        engine: Box<dyn Engine>,
-        train: &CooMatrix,
-    ) -> Result<(SolverReport, FactorState)> {
-        run_gossip_driver(
-            self.spec,
-            &self.net,
-            self.cfg.seed,
-            self.checkpoint_every,
-            self.checkpoint_dir.as_deref(),
-            &self.grow,
-            engine,
-            train,
-            |network| self.train(network),
-        )
-    }
-
-    /// The training loop proper. Any error — including divergence —
-    /// leaves the network running; [`Self::run`] tears it down.
-    fn train(&self, network: &mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)> {
-        let cfg = &self.cfg;
-        check_fault_support(network, &self.faults)?;
-        let mut fault_queue = self.faults.queue();
-        let coeffs = NormalizationCoeffs::new(self.spec.p, self.spec.q);
-        let mut schedule = ScheduleBuilder::new(self.spec, cfg.seed ^ 0x90551b);
-        let mut members = Membership::new(self.spec, &self.grow);
-        schedule.exclude(&self.grow.blocks);
-        if members.pending() && schedule.live_structure_count() == 0 {
-            return Err(Error::Config(
-                "growth plan leaves no live structures before the join \
-                 (the live sub-grid needs p, q >= 2)"
-                    .into(),
-            ));
-        }
-        let mut criterion =
-            ConvergenceCriterion::new(cfg.abs_tol, cfg.rel_tol, cfg.patience);
-        let mut curve = CostCurve::default();
-        curve.push(0, members.total_cost(network, cfg.lambda)?);
-
-        let mut iters = 0u64;
-        let mut converged = false;
-        let mut next_eval = cfg.eval_every;
-        'training: while iters < cfg.max_iters {
-            'epoch: for round in schedule.epoch() {
-                if iters >= cfg.max_iters {
-                    break;
-                }
-                // Membership growth at the round barrier, then break out
-                // so the next epoch regenerates for the full geometry.
-                if members.due(iters) {
-                    members.join_all(network, &mut schedule, iters)?;
-                    break 'epoch;
-                }
-                // Batch semantics: every update in a round shares γ_t.
-                let gamma = cfg.schedule.gamma(iters);
-                let take = round.len().min((cfg.max_iters - iters) as usize);
-                let round = &round[..take];
-                let params: Vec<StructureParams> = round
-                    .iter()
-                    .map(|s| {
-                        let roles = s.roles();
-                        if cfg.normalize {
-                            StructureParams::build(cfg.rho, cfg.lambda, gamma, &coeffs, &roles)
-                        } else {
-                            StructureParams::unnormalized(cfg.rho, cfg.lambda, gamma)
-                        }
-                    })
-                    .collect();
-                // Dispatch at most `workers` structures at a time.
-                for (chunk_s, chunk_p) in
-                    round.chunks(self.workers).zip(params.chunks(self.workers))
-                {
-                    // Chunk barrier: every block is free here, so events
-                    // due by now fire as plain free-block crashes.
-                    fire_due_faults(network, &mut fault_queue, iters, &mut members)?;
-                    for (s, p) in chunk_s.iter().zip(chunk_p) {
-                        network.dispatch(*s, *p)?;
-                    }
-                    // Events whose step lands *inside* this chunk fire
-                    // mid-structure: the victim's in-flight structure is
-                    // aborted and redispatched with its own params.
-                    let span_end = iters + chunk_s.len() as u64;
-                    while fault_queue.front().is_some_and(|e| e.step() < span_end) {
-                        match fault_queue.pop_front().expect("peeked") {
-                            FaultEvent::Kill { step, block } => {
-                                if !members.kill_target_live(block) {
-                                    continue;
-                                }
-                                if let Some((_, s)) = network.crash(step, block)? {
-                                    let k = chunk_s
-                                        .iter()
-                                        .position(|x| *x == s)
-                                        .expect("aborted structure is from this chunk");
-                                    network.dispatch(s, chunk_p[k])?;
-                                }
-                            }
-                            FaultEvent::Partition { step, a, b, duration_us } => {
-                                network.partition(
-                                    step,
-                                    a,
-                                    b,
-                                    Duration::from_micros(duration_us),
-                                )?;
-                            }
-                        }
-                    }
-                    for _ in 0..chunk_s.len() {
-                        network.await_done()?;
-                    }
-                    iters += chunk_s.len() as u64;
-                }
-
-                if iters >= next_eval {
-                    // A wide round can cross several eval boundaries.
-                    while next_eval <= iters {
-                        next_eval += cfg.eval_every;
-                    }
-                    let cost = members.total_cost(network, cfg.lambda)?;
-                    curve.push(iters, cost);
-                    match criterion.update(cost) {
-                        ConvergenceVerdict::Continue => {}
-                        ConvergenceVerdict::Converged => {
-                            converged = true;
-                            break 'training;
-                        }
-                        ConvergenceVerdict::Diverged => {
-                            return Err(Error::Diverged { iter: iters, cost });
-                        }
-                    }
-                }
-            }
-        }
-
-        if members.pending() {
-            log::warn!(
-                "growth plan joins after the last training update; the joined \
-                 blocks enter the final state barely trained"
-            );
-            members.join_all(network, &mut schedule, iters)?;
-        }
-        finish_faults(network, &mut fault_queue, iters, &mut members)?;
-
-        let final_cost = members.total_cost(network, cfg.lambda)?;
-        if curve.last().map(|(it, _)| it) != Some(iters) {
-            curve.push(iters, final_cost);
-        }
-        Ok((curve, final_cost, iters, converged))
-    }
-}
-
-/// Barrier-free gossip driver (NOMAD-style asynchronous dispatch).
-///
-/// Instead of packing conflict-free rounds and waiting for each
-/// round's slowest structure, the async driver keeps up to
-/// `max_inflight` structures in flight at all times: whenever a
-/// completion frees its three blocks, the next conflict-free structure
-/// from the shuffled epoch feed is dispatched immediately. Conflicts
-/// are tracked with per-block in-flight flags, so concurrently
-/// executing structures never share a block — the same safety invariant
-/// the round barrier enforced, without the barrier.
-///
-/// Cost evaluation quiesces the pipeline first (drains all in-flight
-/// structures), so convergence checks observe a consistent state.
-///
-/// **Determinism.** Dispatch order depends on completion order, which
-/// is scheduling-dependent — async runs are statistically, not
-/// bitwise, reproducible (exactly the NOMAD trade). `max_inflight = 1`
-/// serializes the feed and restores bit determinism (pinned by
-/// `async_single_inflight_is_deterministic`).
-#[derive(Debug, Clone)]
-pub struct AsyncDriver {
-    spec: GridSpec,
-    cfg: SolverConfig,
-    /// Maximum structures in flight at once.
-    pub max_inflight: usize,
-    /// Which transport stack carries the gossip (default: multiplexed
-    /// workers — the pairing built for large grids).
-    pub net: NetConfig,
-    /// Scheduled crashes/partitions to supervise (default: none).
-    pub faults: FaultPlan,
-    /// Scheduled membership growth (default: every block live).
-    pub grow: GrowthPlan,
-    /// Per-block snapshot cadence in factor mutations (0 = off).
-    pub checkpoint_every: u64,
-    /// Persist snapshots here instead of in memory (survives the
-    /// process; enables warm joins across runs).
-    pub checkpoint_dir: Option<std::path::PathBuf>,
-}
-
-impl AsyncDriver {
-    pub fn new(spec: GridSpec, cfg: SolverConfig, max_inflight: usize) -> Self {
-        Self {
-            spec,
-            cfg,
-            max_inflight: max_inflight.max(1),
-            net: NetConfig::multiplex(0),
-            faults: FaultPlan::default(),
-            grow: GrowthPlan::default(),
-            checkpoint_every: 0,
-            checkpoint_dir: None,
-        }
-    }
-
-    /// Select the transport stack.
-    pub fn with_net(mut self, net: NetConfig) -> Self {
-        self.net = net;
-        self
-    }
-
-    /// Supervise a fault plan during training. Partitions fire as soon
-    /// as due; a kill whose victim has a structure in flight no longer
-    /// waits for the block to free up — the structure is aborted (all
-    /// three blocks roll back to their pre-structure factors), the
-    /// victim crash-restores, and the undone structure jumps to the
-    /// front of the dispatch feed together with the victim's re-gossip
-    /// set ([`ScheduleBuilder::touching`]).
-    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
-        self.faults = faults;
-        self
-    }
-
-    /// Grow the membership mid-run: dormant blocks join at `join_step`
-    /// completed updates (warm from the checkpoint sink when it holds
-    /// a snapshot) and the dispatch feed regenerates for the grown
-    /// geometry with the joined blocks' structures front-loaded.
-    pub fn with_growth(mut self, grow: GrowthPlan) -> Self {
-        self.grow = grow;
-        self
-    }
-
-    /// Checkpoint every block's factors at this mutation cadence (0
-    /// disables; crashes then restore cold).
-    pub fn with_checkpoints(mut self, every: u64) -> Self {
-        self.checkpoint_every = every;
-        self
-    }
-
-    /// Persist checkpoints durably under `dir` (see [`DiskSink`]).
-    pub fn with_checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
-        self.checkpoint_dir = Some(dir.into());
-        self
-    }
-
-    /// Train; returns the report and the final (culminated) state.
-    pub fn run(
-        &self,
-        engine: Box<dyn Engine>,
-        train: &CooMatrix,
-    ) -> Result<(SolverReport, FactorState)> {
-        run_gossip_driver(
-            self.spec,
-            &self.net,
-            self.cfg.seed,
-            self.checkpoint_every,
-            self.checkpoint_dir.as_deref(),
-            &self.grow,
-            engine,
-            train,
-            |network| self.train(network),
-        )
-    }
-
-    /// The barrier-free training loop. Any error — including
-    /// divergence — leaves the network running; [`Self::run`] tears it
-    /// down.
-    fn train(&self, network: &mut GossipNetwork) -> Result<(CostCurve, f64, u64, bool)> {
-        let cfg = &self.cfg;
-        let spec = self.spec;
-        check_fault_support(network, &self.faults)?;
-        let mut fault_queue = self.faults.queue();
-        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
-        let mut schedule = ScheduleBuilder::new(spec, cfg.seed ^ 0xa57c);
-        let mut members = Membership::new(spec, &self.grow);
-        schedule.exclude(&self.grow.blocks);
-        if members.pending() && schedule.live_structure_count() == 0 {
-            return Err(Error::Config(
-                "growth plan leaves no live structures before the join \
-                 (the live sub-grid needs p, q >= 2)"
-                    .into(),
-            ));
-        }
-        let mut criterion =
-            ConvergenceCriterion::new(cfg.abs_tol, cfg.rel_tol, cfg.patience);
-        let mut curve = CostCurve::default();
-        curve.push(0, members.total_cost(network, cfg.lambda)?);
-
-        let mut busy = vec![false; spec.num_blocks()];
-        let mut inflight: HashMap<u64, [BlockId; 3]> = HashMap::new();
-        let mut queue: Vec<Structure> = schedule.shuffled();
-        let mut dispatched = 0u64;
-        let mut completed = 0u64;
-        let mut next_eval = cfg.eval_every;
-        let mut converged = false;
-
-        'training: while completed < cfg.max_iters {
-            // Membership growth first: join the dormant blocks, then
-            // regenerate the feed for the grown geometry with their
-            // re-gossip sets front-loaded so the new replicas catch up.
-            if members.due(completed) {
-                members.join_all(network, &mut schedule, completed)?;
-                queue = schedule.shuffled();
-                let touching: Vec<Structure> = self
-                    .grow
-                    .blocks
-                    .iter()
-                    .flat_map(|b| schedule.touching(*b))
-                    .collect();
-                let (mut front, back): (Vec<_>, Vec<_>) =
-                    queue.drain(..).partition(|s| touching.contains(s));
-                front.extend(back);
-                queue = front;
-            }
-            // Drain (instead of refill) when an evaluation is due or the
-            // iteration budget is fully dispatched.
-            let draining = completed >= next_eval || dispatched >= cfg.max_iters;
-            if !draining {
-                let mut k = 0;
-                while inflight.len() < self.max_inflight && dispatched < cfg.max_iters {
-                    if k >= queue.len() {
-                        if queue.is_empty() {
-                            queue = schedule.shuffled();
-                            k = 0;
-                            continue;
-                        }
-                        // Everything left in this epoch conflicts with an
-                        // in-flight block; wait for a completion.
-                        break;
-                    }
-                    let s = queue[k];
-                    let blocks = s.blocks();
-                    if blocks.iter().any(|b| busy[b.index(spec.q)]) {
-                        k += 1;
-                        continue;
-                    }
-                    queue.remove(k);
-                    for b in blocks {
-                        busy[b.index(spec.q)] = true;
-                    }
-                    let roles = s.roles();
-                    let gamma = cfg.schedule.gamma(dispatched);
-                    let params = if cfg.normalize {
-                        StructureParams::build(cfg.rho, cfg.lambda, gamma, &coeffs, &roles)
-                    } else {
-                        StructureParams::unnormalized(cfg.rho, cfg.lambda, gamma)
-                    };
-                    let token = network.dispatch(s, params)?;
-                    inflight.insert(token, blocks);
-                    dispatched += 1;
-                }
-            }
-            // Fault supervision *after* the refill: a kill due now lands
-            // on whatever is in flight. A busy victim's structure is
-            // aborted (not waited out), handed back to the front of the
-            // feed, and its dispatch-budget slot returned.
-            while fault_queue.front().is_some_and(|e| e.step() <= completed) {
-                match fault_queue.pop_front().expect("peeked") {
-                    FaultEvent::Kill { block, .. } => {
-                        if !members.kill_target_live(block) {
-                            continue;
-                        }
-                        if let Some((token, s)) = network.crash(completed, block)? {
-                            let removed = inflight.remove(&token);
-                            debug_assert!(removed.is_some(), "aborted token was in flight");
-                            for b in s.blocks() {
-                                busy[b.index(spec.q)] = false;
-                            }
-                            dispatched -= 1;
-                            queue.insert(0, s);
-                        }
-                        // Neighbours re-gossip first: the restored
-                        // block's structures jump to the front of the
-                        // feed so its replica re-converges quickly. Late
-                        // in an epoch the residual feed may not touch
-                        // the block at all — inject its full re-gossip
-                        // set then.
-                        let touching = schedule.touching(block);
-                        let (mut front, back): (Vec<_>, Vec<_>) =
-                            queue.drain(..).partition(|s| touching.contains(s));
-                        if front.is_empty() {
-                            front = touching;
-                        }
-                        front.extend(back);
-                        queue = front;
-                    }
-                    event @ FaultEvent::Partition { .. } => {
-                        fire_fault(network, event, completed)?;
-                    }
-                }
-            }
-            if inflight.is_empty() {
-                // Quiesced: safe to evaluate. Advance past `completed`
-                // in one go — draining can overshoot several eval
-                // boundaries, and re-evaluating an unchanged state
-                // would feed the criterion zero-delta updates.
-                if completed >= next_eval {
-                    while next_eval <= completed {
-                        next_eval += cfg.eval_every;
-                    }
-                    let cost = members.total_cost(network, cfg.lambda)?;
-                    curve.push(completed, cost);
-                    match criterion.update(cost) {
-                        ConvergenceVerdict::Continue => {}
-                        ConvergenceVerdict::Converged => {
-                            converged = true;
-                            break 'training;
-                        }
-                        ConvergenceVerdict::Diverged => {
-                            return Err(Error::Diverged { iter: completed, cost });
-                        }
-                    }
-                }
-                continue;
-            }
-            let (_, token) = network.await_done()?;
-            let blocks = inflight
-                .remove(&token)
-                .ok_or_else(|| Error::Gossip(format!("unknown completion token {token}")))?;
-            for b in blocks {
-                busy[b.index(spec.q)] = false;
-            }
-            completed += 1;
-        }
-
-        // Everything has drained here (all blocks free): join any
-        // still-pending growth, then run the shared end-of-training
-        // fault sweep.
-        if members.pending() {
-            log::warn!(
-                "growth plan joins after the last training update; the joined \
-                 blocks enter the final state barely trained"
-            );
-            members.join_all(network, &mut schedule, completed)?;
-        }
-        finish_faults(network, &mut fault_queue, completed, &mut members)?;
-
-        let final_cost = members.total_cost(network, cfg.lambda)?;
-        if curve.last().map(|(it, _)| it) != Some(completed) {
-            curve.push(completed, final_cost);
-        }
-        Ok((curve, final_cost, completed, converged))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::data::SyntheticConfig;
-    use crate::engine::NativeEngine;
-    use crate::solver::StepSchedule;
-
-    fn problem() -> (GridSpec, CooMatrix, CooMatrix) {
-        let spec = GridSpec::new(40, 40, 4, 4, 3);
-        let d = SyntheticConfig {
-            m: 40,
-            n: 40,
-            rank: 3,
-            train_fraction: 0.5,
-            test_fraction: 0.2,
-            ..Default::default()
-        }
-        .generate();
-        (spec, d.data.train, d.data.test)
-    }
-
-    fn cfg() -> SolverConfig {
-        SolverConfig {
-            max_iters: 4000,
-            eval_every: 800,
-            rho: 10.0,
-            schedule: StepSchedule { a: 2e-2, b: 1e-5 },
-            abs_tol: 1e-9,
-            rel_tol: 1e-6,
-            ..Default::default()
-        }
-    }
-
-    #[test]
-    fn parallel_driver_reduces_cost() {
-        let (spec, train, _) = problem();
-        let driver = ParallelDriver::new(spec, cfg(), 4);
-        let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        assert!(
-            report.curve.orders_of_reduction() > 2.0,
-            "orders {}",
-            report.curve.orders_of_reduction()
-        );
-    }
-
-    #[test]
-    fn parallel_learns_test_set() {
-        let (spec, train, test) = problem();
-        let driver = ParallelDriver::new(spec, cfg(), 4);
-        let (_, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        let rmse = state.rmse(&test);
-        assert!(rmse < 0.5, "rmse {rmse}");
-    }
-
-    #[test]
-    fn single_worker_matches_multi_worker() {
-        // Same seed → identical schedule; updates within a round are
-        // disjoint, so worker count must not change the math at all.
-        let (spec, train, _) = problem();
-        let (r1, s1) = ParallelDriver::new(spec, cfg(), 1)
-            .run(Box::new(NativeEngine::new()), &train)
-            .unwrap();
-        let (r4, s4) = ParallelDriver::new(spec, cfg(), 4)
-            .run(Box::new(NativeEngine::new()), &train)
-            .unwrap();
-        assert_eq!(r1.iters, r4.iters);
-        assert_eq!(r1.final_cost, r4.final_cost);
-        let id = crate::grid::BlockId::new(1, 2);
-        assert_eq!(s1.u(id), s4.u(id));
-    }
-
-    #[test]
-    fn respects_max_iters_mid_round() {
-        let (spec, train, _) = problem();
-        let mut c = cfg();
-        c.max_iters = 7; // smaller than one epoch
-        let driver = ParallelDriver::new(spec, c, 2);
-        let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        assert_eq!(report.iters, 7);
-    }
-
-    #[test]
-    fn network_cost_matches_direct_sum() {
-        // Leader-side cost via messages equals the engine-side sum.
-        let (spec, train, _) = problem();
-        let partition = BlockPartition::new(spec, &train).unwrap();
-        let mut engine = NativeEngine::new();
-        engine.prepare(&partition).unwrap();
-        let engine: Arc<dyn Engine> = Arc::new(engine);
-        let state = FactorState::init_random(spec, 1);
-        let direct = crate::solver::total_cost(engine.as_ref(), &state, 1e-9).unwrap();
-        let mut network = GossipNetwork::spawn(spec, engine, state);
-        let via_network = network.total_cost(1e-9).unwrap();
-        network.shutdown().unwrap();
-        assert!((direct - via_network).abs() < 1e-9 * direct.abs().max(1.0));
-    }
-
-    #[test]
-    fn async_driver_reduces_cost() {
-        let (spec, train, _) = problem();
-        let driver = AsyncDriver::new(spec, cfg(), 6);
-        let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        assert!(report.iters <= 4000);
-        assert!(
-            report.curve.orders_of_reduction() > 2.0,
-            "orders {}",
-            report.curve.orders_of_reduction()
-        );
-    }
-
-    #[test]
-    fn async_learns_test_set() {
-        let (spec, train, test) = problem();
-        let driver = AsyncDriver::new(spec, cfg(), 4)
-            .with_net(NetConfig::multiplex(3));
-        let (_, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        let rmse = state.rmse(&test);
-        assert!(rmse < 0.5, "rmse {rmse}");
-    }
-
-    #[test]
-    fn async_respects_max_iters() {
-        let (spec, train, _) = problem();
-        let mut c = cfg();
-        c.max_iters = 13;
-        let driver = AsyncDriver::new(spec, c, 5);
-        let (report, _) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        assert_eq!(report.iters, 13);
-    }
-
-    #[test]
-    fn parallel_driver_supervises_kills_and_recovers() {
-        let (spec, train, test) = problem();
-        let plan = FaultPlan::new()
-            .kill(300, BlockId::new(1, 1))
-            .kill(900, BlockId::new(2, 3))
-            .kill(1500, BlockId::new(0, 0));
-        let driver = ParallelDriver::new(spec, cfg(), 4)
-            .with_faults(plan)
-            .with_checkpoints(4);
-        let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        assert_eq!(report.kill_count(), 3, "{:?}", report.faults);
-        assert_eq!(report.partition_count(), 0);
-        assert!(
-            report.curve.orders_of_reduction() > 2.0,
-            "churned run still converges: orders {}",
-            report.curve.orders_of_reduction()
-        );
-        assert!(state.rmse(&test) < 0.5);
-        // Crash points land at or past the planned step (barrier kills
-        // record the barrier, mid-structure kills their scheduled step;
-        // abort records may interleave, so filter to the kills).
-        let kills = report
-            .faults
-            .iter()
-            .filter(|f| matches!(f, FaultRecord::Kill { .. }));
-        for (f, want) in kills.zip([300u64, 900, 1500]) {
-            assert!(f.step() >= want, "{f:?} fired before its step");
-        }
-    }
-
-    #[test]
-    fn async_driver_aborts_busy_kills_and_recovers() {
-        // Kills land whenever due: a busy victim's in-flight structure
-        // is aborted and redispatched rather than waited out.
-        let (spec, train, test) = problem();
-        let plan = FaultPlan::new()
-            .kill(200, BlockId::new(3, 3))
-            .kill(700, BlockId::new(1, 2));
-        let driver = AsyncDriver::new(spec, cfg(), 5)
-            .with_faults(plan)
-            .with_checkpoints(2);
-        let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        assert_eq!(report.kill_count(), 2, "{:?}", report.faults);
-        assert!(report.curve.orders_of_reduction() > 1.5);
-        assert!(state.rmse(&test) < 0.5);
-    }
-
-    #[test]
-    fn partitions_require_a_sim_transport() {
-        let (spec, train, _) = problem();
-        let plan = FaultPlan::new().partition(
-            10,
-            BlockId::new(0, 0),
-            BlockId::new(0, 1),
-            std::time::Duration::from_micros(200),
-        );
-        let err = ParallelDriver::new(spec, cfg(), 2)
-            .with_faults(plan.clone())
-            .run(Box::new(NativeEngine::new()), &train)
-            .unwrap_err();
-        assert!(matches!(err, Error::Config(_)), "{err}");
-        // Over a sim transport the same plan executes fine.
-        let (report, _) = ParallelDriver::new(spec, cfg(), 2)
-            .with_faults(plan)
-            .with_net(NetConfig::sim(crate::net::SimConfig::zero_latency(3)))
-            .run(Box::new(NativeEngine::new()), &train)
-            .unwrap();
-        assert_eq!(report.partition_count(), 1);
-    }
-
-    #[test]
-    fn fault_free_plan_changes_nothing() {
-        // An empty plan plus checkpointing is observation-only: the
-        // trained state must be bit-identical to the plain run.
-        let (spec, train, _) = problem();
-        let mut c = cfg();
-        c.max_iters = 600;
-        let (r_plain, s_plain) = ParallelDriver::new(spec, c.clone(), 4)
-            .run(Box::new(NativeEngine::new()), &train)
-            .unwrap();
-        let (r_ckpt, s_ckpt) = ParallelDriver::new(spec, c, 4)
-            .with_faults(FaultPlan::new())
-            .with_checkpoints(2)
-            .run(Box::new(NativeEngine::new()), &train)
-            .unwrap();
-        assert!(r_ckpt.faults.is_empty());
-        assert_eq!(r_plain.final_cost.to_bits(), r_ckpt.final_cost.to_bits());
-        let id = BlockId::new(1, 2);
-        assert_eq!(s_plain.u(id), s_ckpt.u(id));
-        assert_eq!(s_plain.w(id), s_ckpt.w(id));
-    }
-
-    #[test]
-    fn parallel_driver_grows_a_trailing_column() {
-        // The last column starts dormant and joins mid-run: the run must
-        // record one cold join per column block, keep converging, and
-        // the final model must cover the whole grid.
-        let (spec, train, test) = problem();
-        let grow = GrowthPlan::trailing_columns(spec, 1, 1200).unwrap();
-        assert_eq!(grow.len(), 4);
-        let driver = ParallelDriver::new(spec, cfg(), 4)
-            .with_growth(grow.clone())
-            .with_checkpoints(4);
-        let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
-        assert_eq!(report.join_count(), 4, "{:?}", report.faults);
-        assert_eq!(report.warm_join_count(), 0, "in-memory sink: joins are cold");
-        for f in &report.faults {
-            match f {
-                FaultRecord::Join { step, block, .. } => {
-                    assert!(*step >= 1200, "{f:?} joined before its step");
-                    assert_eq!(block.j, 3, "only the trailing column joins");
-                }
-                other => panic!("unexpected record {other:?}"),
-            }
-        }
-        assert!(report.iters > 1200, "training continued past the join");
-        assert!(report.final_cost.is_finite());
-        let rmse = state.rmse(&test);
-        assert!(rmse < 0.7, "grown grid still learns: rmse {rmse}");
-    }
-
-    #[test]
-    fn async_driver_grows_and_stays_deterministic_single_inflight() {
-        let (spec, train, _) = problem();
-        let mut c = cfg();
-        c.max_iters = 900;
-        c.eval_every = 300;
-        let grow = GrowthPlan::trailing_columns(spec, 1, 300).unwrap();
-        let run = || {
-            AsyncDriver::new(spec, c.clone(), 1)
-                .with_growth(grow.clone())
-                .with_checkpoints(2)
-                .run(Box::new(NativeEngine::new()), &train)
-                .unwrap()
-        };
-        let (ra, sa) = run();
-        let (rb, sb) = run();
-        assert_eq!(ra.join_count(), 4, "{:?}", ra.faults);
-        assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
-        for id in spec.blocks() {
-            assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
-            assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
-        }
-    }
-
-    #[test]
-    fn growth_plan_validates_geometry() {
-        let spec = GridSpec::new(40, 40, 4, 4, 3);
-        assert!(GrowthPlan::trailing_columns(spec, 3, 10).is_err(), "q-3 < 2");
-        assert!(GrowthPlan::trailing_columns(spec, 2, 10).is_ok());
-        assert!(GrowthPlan::trailing_columns(spec, 0, 10).unwrap().is_empty());
-        // Out-of-grid blocks are rejected at run time.
-        let (spec, train, _) = problem();
-        let bad = GrowthPlan { join_step: 5, blocks: vec![BlockId::new(9, 0)] };
-        let err = ParallelDriver::new(spec, cfg(), 2)
-            .with_growth(bad)
-            .run(Box::new(NativeEngine::new()), &train)
-            .unwrap_err();
-        assert!(matches!(err, Error::Config(_)), "{err}");
-    }
-
-    #[test]
-    fn async_single_inflight_is_deterministic() {
-        // With one structure in flight the dispatch feed serializes, so
-        // two runs must agree bit-for-bit (general async runs are only
-        // statistically reproducible — the NOMAD trade).
-        let (spec, train, _) = problem();
-        let mut c = cfg();
-        c.max_iters = 600;
-        c.eval_every = 200;
-        let run = || {
-            AsyncDriver::new(spec, c.clone(), 1)
-                .run(Box::new(NativeEngine::new()), &train)
-                .unwrap()
-        };
-        let (ra, sa) = run();
-        let (rb, sb) = run();
-        assert_eq!(ra.final_cost, rb.final_cost);
-        let id = crate::grid::BlockId::new(2, 1);
-        assert_eq!(sa.u(id), sb.u(id));
-        assert_eq!(sa.w(id), sb.w(id));
-    }
-}

@@ -1,0 +1,268 @@
+//! L1 of the gossip runtime: [`GossipNetwork`], the transport-facing
+//! mechanism layer.
+//!
+//! **Layer contract.** This module owns the *mechanisms* of a running
+//! agent network — spawn a transport stack, dispatch structures, await
+//! completions, collect costs and final factors, park completions that
+//! race a synchronous control exchange — and nothing else. It may call
+//! [`crate::net`] (the message plane) and the agent/checkpoint
+//! substrate it spawns; it may **not** consume a
+//! [`crate::net::FaultPlan`], a [`super::GrowthPlan`] or a
+//! [`super::ShrinkPlan`], decide *when* anything fires, or hold
+//! membership state — that is [`super::supervisor`] and
+//! [`super::elastic`] policy layered on top (the supervision verbs
+//! `crash`/`join`/`retire`/`partition` are implemented there, in a
+//! second `impl GossipNetwork` block, over the mechanisms here).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::engine::{Engine, StructureParams};
+use crate::grid::{BlockId, GridSpec, Structure};
+use crate::model::FactorState;
+use crate::net::{self, AgentMsg, DriverMsg, FaultRecord, NetConfig, Transport, WireSnapshot};
+use crate::{Error, Result};
+
+use super::CheckpointStore;
+
+/// A spawned set of block agents behind a transport, seen from the
+/// driver: dispatch structures, await completions, query costs, and
+/// finally collect the factors back (the paper's "final culmination"
+/// hand-off). The supervision verbs ([`Self::crash`], [`Self::join`],
+/// [`Self::retire`], [`Self::partition`]) are implemented in the
+/// supervisor layer (`gossip/supervisor.rs`).
+pub struct GossipNetwork {
+    pub(super) spec: GridSpec,
+    pub(super) transport: Box<dyn Transport>,
+    pub(super) next_token: u64,
+    /// Completions parked while a synchronous crash/abort/join/retire
+    /// drained the driver channel (unrelated `Done`s can race the
+    /// reply).
+    pub(super) backlog: VecDeque<DriverMsg>,
+    /// Structures dispatched but not yet completed, by token — what a
+    /// mid-structure crash consults to find the victim's in-flight
+    /// structure.
+    pub(super) inflight: HashMap<u64, Structure>,
+    /// Executed fault/membership actions, in firing order (the
+    /// replayable trace). Pushed by the supervisor layer.
+    pub(super) trace: Vec<FaultRecord>,
+}
+
+impl GossipNetwork {
+    /// Spawn one agent per block on the default thread-per-block
+    /// transport. `engine` must already be prepared.
+    pub fn spawn(spec: GridSpec, engine: Arc<dyn Engine>, state: FactorState) -> Self {
+        Self::spawn_with(&NetConfig::default(), spec, engine, state)
+    }
+
+    /// Spawn on the configured transport stack.
+    pub fn spawn_with(
+        net: &NetConfig,
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+    ) -> Self {
+        Self::spawn_full(net, spec, engine, state, None)
+    }
+
+    /// Spawn on the configured transport stack with optional per-block
+    /// checkpointing (required for crash-restores to come back warm).
+    pub fn spawn_full(
+        net: &NetConfig,
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+        checkpoints: Option<Arc<CheckpointStore>>,
+    ) -> Self {
+        Self::spawn_elastic(net, spec, engine, state, checkpoints, &net::DormantSet::new())
+    }
+
+    /// Spawn with some blocks dormant (provisioned but outside the
+    /// membership until the supervisor joins them — see
+    /// [`super::GrowthPlan`]).
+    pub fn spawn_elastic(
+        net: &NetConfig,
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        state: FactorState,
+        checkpoints: Option<Arc<CheckpointStore>>,
+        dormant: &net::DormantSet,
+    ) -> Self {
+        Self {
+            spec,
+            transport: net::spawn(net, spec, engine, state, checkpoints, dormant),
+            next_token: 0,
+            backlog: VecDeque::new(),
+            inflight: HashMap::new(),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Backlog-aware receive: parked completions drain before the
+    /// transport is polled again.
+    pub(super) fn recv_msg(&mut self) -> Result<DriverMsg> {
+        if let Some(m) = self.backlog.pop_front() {
+            return Ok(m);
+        }
+        self.transport.recv()
+    }
+
+    /// Transport label (for reports).
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Wire accounting when the transport simulates links.
+    pub fn wire_stats(&self) -> Option<WireSnapshot> {
+        self.transport.wire()
+    }
+
+    /// Fire one structure at its anchor without waiting; returns the
+    /// token its [`DriverMsg::Done`] completion will echo.
+    pub fn dispatch(&mut self, structure: Structure, params: StructureParams) -> Result<u64> {
+        let token = self.next_token;
+        self.next_token += 1;
+        self.transport.send(
+            structure.roles().anchor,
+            AgentMsg::Execute { structure, params, token },
+        )?;
+        self.inflight.insert(token, structure);
+        Ok(token)
+    }
+
+    /// Block until one in-flight structure completes; returns its
+    /// anchor and token. Errors if the update itself failed.
+    pub fn await_done(&mut self) -> Result<(BlockId, u64)> {
+        match self.recv_msg()? {
+            DriverMsg::Done { anchor, token, result } => {
+                self.inflight.remove(&token);
+                result.map(|()| (anchor, token))
+            }
+            other => Err(Error::Gossip(format!(
+                "protocol violation: {} while awaiting a completion",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Dispatch one structure and await its completion.
+    pub fn execute_structure(
+        &mut self,
+        structure: Structure,
+        params: StructureParams,
+    ) -> Result<()> {
+        self.execute_batch(&[structure], &[params])
+    }
+
+    /// Dispatch up to `batch.len()` *non-conflicting* structures
+    /// concurrently; await all completions. Callers must guarantee the
+    /// batch is conflict-free (the scheduler does).
+    pub fn execute_batch(
+        &mut self,
+        batch: &[Structure],
+        params: &[StructureParams],
+    ) -> Result<()> {
+        debug_assert_eq!(batch.len(), params.len());
+        for (s, p) in batch.iter().zip(params) {
+            self.dispatch(*s, *p)?;
+        }
+        for _ in 0..batch.len() {
+            self.await_done()?;
+        }
+        Ok(())
+    }
+
+    /// Total cost Σ blocks (leader-side convergence check — factor
+    /// matrices stay with the agents, only scalars travel). Replies
+    /// arrive in arbitrary order but are summed in block order, so the
+    /// f64 result is deterministic. Callers must be quiescent (no
+    /// structure in flight).
+    pub fn total_cost(&mut self, lambda: f32) -> Result<f64> {
+        self.total_cost_over(lambda, |_| true)
+    }
+
+    /// Total cost over the blocks `active` admits — the live
+    /// membership; dormant and retired blocks are not part of the
+    /// model, so their terms stay out of the sum. Same block-order
+    /// determinism and quiescence contract as [`Self::total_cost`].
+    pub fn total_cost_over(
+        &mut self,
+        lambda: f32,
+        active: impl Fn(BlockId) -> bool,
+    ) -> Result<f64> {
+        let ids: Vec<BlockId> = self.spec.blocks().filter(|b| active(*b)).collect();
+        for id in &ids {
+            self.transport.send(*id, AgentMsg::GetCost { lambda })?;
+        }
+        let mut per_block: Vec<Option<f64>> = vec![None; self.spec.num_blocks()];
+        for _ in 0..ids.len() {
+            match self.recv_msg()? {
+                DriverMsg::Cost { from, cost } => {
+                    per_block[from.index(self.spec.q)] = Some(cost?);
+                }
+                other => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} while collecting costs",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+        let mut acc = 0.0;
+        for id in &ids {
+            acc += per_block[id.index(self.spec.q)]
+                .ok_or_else(|| Error::Gossip("missing cost reply".into()))?;
+        }
+        Ok(acc)
+    }
+
+    /// Stop all agents and collect the final factor state (the paper's
+    /// "final culmination" hand-off).
+    ///
+    /// Teardown is best-effort so it also works on the error path of a
+    /// failed run: dead agents (whose mailboxes reject the send) are
+    /// skipped, stale in-flight completions are drained and ignored,
+    /// and worker threads are reaped either way. Only a full, clean
+    /// collection returns `Ok`.
+    pub fn shutdown(mut self) -> Result<FactorState> {
+        // A failed run can leave parked completions; they are stale now.
+        for stale in self.backlog.drain(..) {
+            log::debug!("shutdown: dropping parked {}", stale.kind());
+        }
+        let mut expected = 0usize;
+        for id in self.spec.blocks() {
+            match self.transport.send(id, AgentMsg::Shutdown) {
+                Ok(()) => expected += 1,
+                Err(e) => log::warn!("shutdown: {e}"),
+            }
+        }
+        // Zero receptacle: every block is overwritten by an agent reply
+        // below, so a full RNG init here would be wasted work.
+        let mut state = FactorState::zeros(self.spec);
+        let mut collected = 0usize;
+        while collected < expected {
+            match self.transport.recv() {
+                Ok(DriverMsg::Retired { from, u, w, .. }) => {
+                    state.set_u(from, u);
+                    state.set_w(from, w);
+                    collected += 1;
+                }
+                // A failed run can leave completions or cost replies in
+                // flight; drain them so every Retired still arrives.
+                Ok(other) => log::debug!("shutdown: draining stale {}", other.kind()),
+                Err(e) => {
+                    log::warn!("shutdown: {e}");
+                    break;
+                }
+            }
+        }
+        self.transport.join();
+        if collected < self.spec.num_blocks() {
+            return Err(Error::Gossip(format!(
+                "shutdown reaped {collected}/{} agents",
+                self.spec.num_blocks()
+            )));
+        }
+        Ok(state)
+    }
+}

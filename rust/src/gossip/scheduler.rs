@@ -21,11 +21,12 @@ use crate::util::Rng;
 /// Builds conflict-free rounds of structures for a grid.
 ///
 /// The builder also owns the *membership view* of the schedule: blocks
-/// can be excluded (dormant — provisioned but not yet joined into the
-/// live grid) and later re-included, at which point the next epoch is
-/// regenerated for the grown geometry. Excluded epochs are exactly the
-/// full enumeration minus every structure touching an excluded block,
-/// so they stay conflict-free by the same packing.
+/// can be excluded (dormant — provisioned but not yet joined — or
+/// gracefully retired) and re-included per block, at which point the
+/// next epoch is regenerated for the new geometry. Excluded epochs are
+/// exactly the full enumeration minus every structure touching an
+/// excluded block, so they stay conflict-free by the same packing —
+/// for a grown *and* a shrunk grid alike.
 #[derive(Debug, Clone)]
 pub struct ScheduleBuilder {
     spec: GridSpec,
@@ -51,6 +52,19 @@ impl ScheduleBuilder {
         for b in blocks {
             if b.i < self.spec.p && b.j < self.spec.q {
                 self.excluded[b.index(self.spec.q)] = true;
+            }
+        }
+    }
+
+    /// Re-include `blocks` (a membership join): structures touching
+    /// them come back into subsequent epochs. Out-of-grid ids are
+    /// ignored. Blocks excluded for another reason (e.g. a concurrent
+    /// shrink) stay excluded — which is why joins use this instead of
+    /// [`Self::include_all`].
+    pub fn include(&mut self, blocks: &[BlockId]) {
+        for b in blocks {
+            if b.i < self.spec.p && b.j < self.spec.q {
+                self.excluded[b.index(self.spec.q)] = false;
             }
         }
     }
@@ -443,6 +457,27 @@ mod tests {
         assert!(!t.is_empty());
         assert!(t.iter().all(|s| s.blocks().iter().all(|blk| blk.j < 4)));
         assert!(c.touching(crate::grid::BlockId::new(2, 4)).is_empty());
+    }
+
+    #[test]
+    fn include_is_per_block_and_preserves_other_exclusions() {
+        // A shrink (retire column 0) concurrent with a growth (join
+        // column 4): re-including the joiners must not resurrect the
+        // retired column.
+        let mut b = ScheduleBuilder::new(spec(5, 5), 9);
+        let grow_col: Vec<_> = (0..5).map(|i| crate::grid::BlockId::new(i, 4)).collect();
+        let shrink_col: Vec<_> = (0..5).map(|i| crate::grid::BlockId::new(i, 0)).collect();
+        b.exclude(&grow_col);
+        b.exclude(&shrink_col);
+        assert_eq!(b.live_structure_count(), 2 * 4 * 2, "5×3 interior sub-grid");
+        b.include(&grow_col);
+        assert!(b.has_exclusions(), "the retired column stays out");
+        let s: std::collections::HashSet<_> = b.shuffled().into_iter().collect();
+        assert_eq!(s.len(), 2 * 4 * 3, "5×4 sub-grid structure count");
+        assert!(s.iter().all(|st| st.blocks().iter().all(|blk| blk.j >= 1)));
+        // Out-of-grid ids are ignored by both directions.
+        b.include(&[crate::grid::BlockId::new(99, 99)]);
+        b.exclude(&[crate::grid::BlockId::new(99, 99)]);
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! L2 of the gossip runtime: supervision — crash, abort, partition,
+//! join and retire, plus consumption of scheduled [`FaultPlan`]s.
+//!
+//! **Layer contract.** This module turns *decisions* into synchronous
+//! control exchanges over the [`super::network`] mechanisms and records
+//! every executed action as a [`FaultRecord`] on the network's trace.
+//! It may call [`super::network`] (sends, receives, the completion
+//! backlog) and [`super::elastic`]'s membership state; it may **not**
+//! dispatch structures, own a schedule, or evaluate convergence — that
+//! is driver policy ([`super::drivers`]). The supervision verbs are a
+//! second `impl GossipNetwork` block so the public API stays on the
+//! network handle while the policy-bearing code lives here.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::grid::{BlockId, Structure};
+use crate::net::{AgentMsg, DriverMsg, FaultEvent, FaultPlan, FaultRecord, LinkFault};
+use crate::{Error, Result};
+
+use super::elastic::Membership;
+use super::network::GossipNetwork;
+
+impl GossipNetwork {
+    /// Abort the in-flight structure `s` (token `token`): ask its
+    /// anchor to drain the protocol and undo the update, discard any
+    /// completion that raced the abort, and record the abort against
+    /// `victim`. Returns once all three blocks are back — bitwise — at
+    /// their pre-structure factors and versions.
+    fn abort(&mut self, step: u64, token: u64, s: Structure, victim: BlockId) -> Result<()> {
+        let anchor = s.roles().anchor;
+        self.transport.send(anchor, AgentMsg::Abort { token })?;
+        self.inflight.remove(&token);
+        // The completion may already be parked from an earlier drain;
+        // it is no longer a completion.
+        self.backlog
+            .retain(|m| !matches!(m, DriverMsg::Done { token: t, .. } if *t == token));
+        loop {
+            match self.transport.recv()? {
+                DriverMsg::Aborted { token: t, .. } if t == token => {
+                    self.trace.push(FaultRecord::Abort { step, anchor, victim });
+                    return Ok(());
+                }
+                DriverMsg::Done { token: t, result, .. } if t == token => {
+                    // Raced the abort; the anchor reverts it and the
+                    // Aborted follows. This is not an update anymore.
+                    if let Err(e) = result {
+                        log::warn!("aborted structure had already failed: {e}");
+                    }
+                }
+                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
+                other => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} while aborting token {token}",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Crash-and-restore `block` from its last checkpoint (cold, with
+    /// zeroed factors, when the network runs uncheckpointed).
+    /// Synchronous: returns once the replacement agent is live again.
+    /// Completions racing the restart are parked for
+    /// [`GossipNetwork::await_done`].
+    ///
+    /// The kill may land mid-structure: if a dispatched-but-incomplete
+    /// structure touches `block` (at most one can — in-flight
+    /// structures are pairwise disjoint), it is aborted first — all
+    /// three participants roll back to their pre-structure factors —
+    /// and returned so the caller can redispatch it. `step` is
+    /// recorded in the fault trace.
+    pub fn crash(&mut self, step: u64, block: BlockId) -> Result<Option<(u64, Structure)>> {
+        let hit = self
+            .inflight
+            .iter()
+            .find(|(_, s)| s.blocks().contains(&block))
+            .map(|(&t, &s)| (t, s));
+        if let Some((token, s)) = hit {
+            self.abort(step, token, s, block)?;
+        }
+        self.transport.send(block, AgentMsg::Crash)?;
+        loop {
+            match self.transport.recv()? {
+                DriverMsg::Restarted { from, version, lost } if from == block => {
+                    self.trace.push(FaultRecord::Kill {
+                        step,
+                        block,
+                        restored_version: version,
+                        lost_updates: lost,
+                    });
+                    return Ok(hit);
+                }
+                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
+                other => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} while awaiting the restart of {block}",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Activate the dormant `block` into the live membership
+    /// ([`AgentMsg::Join`]): it warm-starts from the checkpoint sink
+    /// when a snapshot exists (a durable sink carries them across
+    /// runs), cold-joins on its spawn factors otherwise. Synchronous;
+    /// completions racing the join are parked.
+    pub fn join(&mut self, step: u64, block: BlockId) -> Result<()> {
+        self.transport.send(block, AgentMsg::Join)?;
+        loop {
+            match self.transport.recv()? {
+                DriverMsg::Joined { from, version, warm } if from == block => {
+                    self.trace.push(FaultRecord::Join { step, block, version, warm });
+                    return Ok(());
+                }
+                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
+                other => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} while awaiting the join of {block}",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Gracefully retire the live `block` ([`AgentMsg::Retire`], the
+    /// mirror of [`GossipNetwork::join`]): the agent final-snapshots
+    /// into its checkpoint sink, hands its row factors to `row_heir`
+    /// and its column factors to `col_heir` over the wire (each factor
+    /// leaves exactly once; `None` heirs skip that half), then freezes
+    /// outside the membership. Synchronous — callers must be quiescent
+    /// (no structure in flight), so the heirs absorb at a consistent
+    /// state; completions cannot race, but any parked one survives in
+    /// the backlog.
+    pub fn retire(
+        &mut self,
+        step: u64,
+        block: BlockId,
+        row_heir: Option<BlockId>,
+        col_heir: Option<BlockId>,
+    ) -> Result<()> {
+        debug_assert!(
+            self.inflight.is_empty(),
+            "retire requires a quiescent network (supervisor bug)"
+        );
+        let handoffs = u8::from(row_heir.is_some()) + u8::from(col_heir.is_some());
+        self.transport.send(block, AgentMsg::Retire { row_heir, col_heir })?;
+        loop {
+            match self.transport.recv()? {
+                DriverMsg::Retired { from, version, .. } if from == block => {
+                    self.trace.push(FaultRecord::Retire { step, block, version, handoffs });
+                    return Ok(());
+                }
+                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
+                other => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} while awaiting the retirement of {block}",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Sever both directions of the grid link `a — b` for `duration` of
+    /// wall time (sim transports only; frames are held, never erased).
+    pub fn partition(
+        &mut self,
+        step: u64,
+        a: BlockId,
+        b: BlockId,
+        duration: Duration,
+    ) -> Result<()> {
+        self.transport.inject_fault(LinkFault::Partition { a, b, duration })?;
+        self.trace.push(FaultRecord::Partition {
+            step,
+            a,
+            b,
+            duration_us: duration.as_micros() as u64,
+        });
+        Ok(())
+    }
+
+    /// Executed fault actions so far, in firing order.
+    pub fn fault_trace(&self) -> &[FaultRecord] {
+        &self.trace
+    }
+
+    /// Take the executed-action trace (for the report, at teardown).
+    pub(crate) fn take_trace(&mut self) -> Vec<FaultRecord> {
+        std::mem::take(&mut self.trace)
+    }
+}
+
+/// Upfront supervision check shared by both drivers: partitions need a
+/// transport with simulated links.
+pub(crate) fn check_fault_support(network: &GossipNetwork, plan: &FaultPlan) -> Result<()> {
+    if plan.has_partitions() && network.wire_stats().is_none() {
+        return Err(Error::Config(
+            "fault plans with link partitions require a sim transport \
+             (transport = \"sim\" or \"sim-multiplex\")"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+/// Execute one due fault event through the network supervisor API. A
+/// kill may abort an in-flight structure touching the victim; the
+/// caller is responsible for redispatching it (the quiescent callers
+/// below never have one in flight).
+pub(crate) fn fire_fault(network: &mut GossipNetwork, event: FaultEvent, step: u64) -> Result<()> {
+    match event {
+        FaultEvent::Kill { block, .. } => network.crash(step, block).map(|_| ()),
+        FaultEvent::Partition { a, b, duration_us, .. } => {
+            network.partition(step, a, b, Duration::from_micros(duration_us))
+        }
+    }
+}
+
+/// Fire every event due at `step` from a quiescent point (a chunk
+/// barrier, or the drained end of training). Kills aimed at a block
+/// that has not joined the membership yet are deferred to the join —
+/// an absent machine cannot crash — and kills aimed at a retired block
+/// are dropped, for the same reason.
+pub(crate) fn fire_due_faults(
+    network: &mut GossipNetwork,
+    queue: &mut VecDeque<FaultEvent>,
+    step: u64,
+    members: &mut Membership,
+) -> Result<()> {
+    while queue.front().is_some_and(|e| e.step() <= step) {
+        let event = queue.pop_front().expect("peeked");
+        if let FaultEvent::Kill { block, .. } = event {
+            if !members.kill_admissible(block) {
+                continue;
+            }
+        }
+        fire_fault(network, event, step)?;
+    }
+    Ok(())
+}
+
+/// End-of-training sweep: fire events that came due during the final
+/// updates (trace completeness — a crash right at the end of training
+/// is still a crash), then log anything scheduled past the budget.
+///
+/// A kill fired here goes **un-regossiped** into the final state: the
+/// victim keeps its checkpoint (or zeros, uncheckpointed), mirroring a
+/// machine dying at the finish line. `final_cost` is evaluated after
+/// this sweep, so the report is honest about it; plans that want a
+/// clean final model should end their window well before `max_iters`
+/// (the presets and the chaos harness do).
+pub(crate) fn finish_faults(
+    network: &mut GossipNetwork,
+    queue: &mut VecDeque<FaultEvent>,
+    step: u64,
+    members: &mut Membership,
+) -> Result<()> {
+    if queue.front().is_some_and(|e| e.step() <= step) {
+        log::warn!(
+            "firing fault event(s) after the last training update; the rollback \
+             is not re-gossiped into the final state"
+        );
+    }
+    fire_due_faults(network, queue, step, members)?;
+    if let Some(e) = queue.front() {
+        log::debug!(
+            "{} fault event(s) scheduled past the end of training (first due at \
+             step {}); skipped",
+            queue.len(),
+            e.step()
+        );
+    }
+    Ok(())
+}

@@ -5,7 +5,7 @@
 //! ranges, canonical padded block shape), [`Structure`] enumerates the
 //! paper's `S^upper` / `S^lower` gossip structures with their Figure-2
 //! normalization coefficients, [`StructureSampler`] implements line 3
-//! of Algorithm 1, and [`partition`] splits observed entries into
+//! of Algorithm 1, and [`BlockPartition`] splits observed entries into
 //! per-block storage.
 
 mod partition;

@@ -11,13 +11,13 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the gossip coordinator: grid topology and
-//!   structure enumeration ([`grid`]), decentralized agents, the
-//!   conflict-free parallel scheduler and the barrier-free async driver
-//!   ([`gossip`]), the transport-abstracted message plane ([`net`]:
-//!   thread-per-block, multiplexed workers, simulated lossy links), the
-//!   SGD driver of the paper's Algorithm 1 ([`solver`]), data
-//!   substrates ([`data`]), factor state ([`model`]), metrics, and
-//!   config/CLI.
+//!   structure enumeration ([`grid`]), the layered gossip runtime
+//!   ([`gossip`]: agents → network mechanisms → supervision → elastic
+//!   membership → drivers; see its module map), the
+//!   transport-abstracted message plane ([`net`]: thread-per-block,
+//!   multiplexed workers, simulated lossy links), the SGD driver of
+//!   the paper's Algorithm 1 ([`solver`]), data substrates ([`data`]),
+//!   factor state ([`model`]), metrics, and config/CLI.
 //! * **L2/L1 (build-time Python, `python/compile/`)** — the JAX
 //!   structure-update graph built on Pallas kernels, AOT-lowered to HLO
 //!   text once by `make artifacts`. Never on the request path.
@@ -87,8 +87,8 @@ pub mod prelude {
     };
     pub use crate::engine::{Engine, EngineWorkspace, NativeEngine, XlaEngine};
     pub use crate::gossip::{
-        AsyncDriver, CheckpointStore, DiskSink, GossipNetwork, GrowthPlan, ParallelDriver,
-        ScheduleBuilder,
+        AsyncDriver, CheckpointStore, DiskSink, Driver, GossipNetwork, GrowthPlan, ParallelDriver,
+        ScheduleBuilder, ShrinkPlan,
     };
     pub use crate::grid::{BlockId, GridSpec, Structure, StructureKind, StructureSampler};
     pub use crate::metrics::{CostCurve, RecoveryOverhead, RmseReport};

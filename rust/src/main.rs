@@ -4,7 +4,7 @@
 //! gridmc train --preset exp3 [--engine xla] [--driver parallel]
 //!              [--workers N] [--scale 0.1] [--out-csv curve.csv]
 //! gridmc train --config configs/my.toml
-//! gridmc bench-table <table2|table3|fig2|parallel|churn|grow|ablations> [--scale S]
+//! gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|ablations> [--scale S]
 //! gridmc gen-data --preset ml1m --out /tmp/ml1m.csv [--seed 7]
 //! gridmc inspect --preset exp4
 //! ```
@@ -25,9 +25,9 @@ const USAGE: &str = "\
 gridmc — two-dimensional gossip matrix completion (Bhutani & Mishra 2017)
 
 USAGE:
-  gridmc train --preset <exp1..exp6|churn|grow|table3-<ds>-<g>-<r>> [options]
+  gridmc train --preset <exp1..exp6|churn|grow|shrink|table3-<ds>-<g>-<r>> [options]
   gridmc train --config <file.toml> [options]
-  gridmc bench-table <table2|table3|fig2|parallel|churn|grow|ablations> [--scale S]
+  gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|ablations> [--scale S]
   gridmc gen-data --preset <ml1m|ml10m|ml20m|netflix> --out <path> [--seed N]
   gridmc inspect --preset <name>
 
@@ -89,6 +89,9 @@ fn resolve_preset(name: &str) -> Result<ExperimentConfig> {
     if name == "grow" {
         return Ok(presets::grow());
     }
+    if name == "shrink" {
+        return Ok(presets::shrink());
+    }
     if let Some(n) = name.strip_prefix("exp") {
         if let Ok(n) = n.parse::<usize>() {
             return presets::exp(n);
@@ -108,7 +111,7 @@ fn resolve_preset(name: &str) -> Result<ExperimentConfig> {
         }
     }
     Err(Error::Config(format!(
-        "unknown preset {name:?} (try exp1..exp6, churn, grow, or table3-ml1m-4-10)"
+        "unknown preset {name:?} (try exp1..exp6, churn, grow, shrink, or table3-ml1m-4-10)"
     )))
 }
 
@@ -183,12 +186,14 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "table3" => experiments::table3::run()?,
         "fig2" => experiments::fig2::run()?,
         "parallel" => experiments::parallel::run()?,
-        "churn" => experiments::parallel::run_churn()?,
-        "grow" => experiments::parallel::run_grow()?,
+        "churn" => experiments::scenarios::churn::run_churn()?,
+        "grow" => experiments::scenarios::grow::run_grow()?,
+        "shrink" => experiments::scenarios::shrink::run_shrink()?,
         "ablations" => experiments::ablations::run()?,
         other => {
             return Err(Error::Config(format!(
-                "unknown table {other:?} (table2|table3|fig2|parallel|churn|grow|ablations)"
+                "unknown table {other:?} \
+                 (table2|table3|fig2|parallel|churn|grow|shrink|ablations)"
             )))
         }
     };

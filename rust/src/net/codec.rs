@@ -1,21 +1,25 @@
 //! Compact wire codec for the peer-to-peer gossip frames.
 //!
-//! Only the five messages that travel between block agents are
+//! Only the six messages that travel between block agents are
 //! encodable — `GetFactors`, `Factors`, `PutFactors`, `RevertFactors`,
-//! `PutAck`. The control plane (`Execute`, `GetCost`, `Abort`, `Join`,
-//! `Shutdown`) never crosses a link: the driver talks to agents
-//! in-process, exactly as the paper's leader never touches factor
-//! matrices during learning.
+//! `HandOff`, `PutAck`. The control plane (`Execute`, `GetCost`,
+//! `Abort`, `Join`, `Retire`, `Shutdown`) never crosses a link: the
+//! driver talks to agents in-process, exactly as the paper's leader
+//! never touches factor matrices during learning.
 //!
 //! Framing (all integers little-endian):
 //!
 //! ```text
 //! [tag u8] [from.i u32] [from.j u32]                  — every frame
-//! [rows u32] [cols u32] [rows·cols × f32]  × 2 (U, W) — Factors / PutFactors
+//! [rows u32] [cols u32] [rows·cols × f32]  × 2 (U, W) — factor-bearing frames
 //! ```
 //!
+//! `HandOff` (a retiring block's parting factors) reuses the same
+//! two-matrix layout with one half framed as a 0×0 placeholder, so a
+//! retirement transmits each factor exactly once.
+//!
 //! A rank-5 100×100-block `Factors` frame is therefore
-//! `9 + 2·(8 + 4·100·5)` = 4 KiB — the number [`SimTransport`]'s
+//! `9 + 2·(8 + 4·100·5)` = 4 KiB — the number [`super::SimTransport`]'s
 //! byte accounting reports per factor exchange
 //! ([`super::WireSnapshot`]). Round trips are bit-exact: `f32`s are
 //! moved as raw IEEE-754 bytes, never reformatted.
@@ -31,6 +35,7 @@ const TAG_FACTORS: u8 = 2;
 const TAG_PUT_FACTORS: u8 = 3;
 const TAG_PUT_ACK: u8 = 4;
 const TAG_REVERT_FACTORS: u8 = 5;
+const TAG_HAND_OFF: u8 = 6;
 
 /// Matrices larger than this per side are rejected on decode (corrupt
 /// frame guard; real factor blocks are orders of magnitude smaller).
@@ -87,6 +92,16 @@ pub fn encode(msg: &AgentMsg) -> Result<Vec<u8>> {
         AgentMsg::RevertFactors { from, u, w } => {
             let mut buf = Vec::with_capacity(factors_len(u, w));
             buf.push(TAG_REVERT_FACTORS);
+            put_block_id(&mut buf, *from);
+            put_matrix(&mut buf, u);
+            put_matrix(&mut buf, w);
+            Ok(buf)
+        }
+        AgentMsg::HandOff { from, u, w } => {
+            // A retiring block's parting frame: one half is a 0×0
+            // placeholder, so the wire carries each factor exactly once.
+            let mut buf = Vec::with_capacity(factors_len(u, w));
+            buf.push(TAG_HAND_OFF);
             put_block_id(&mut buf, *from);
             put_matrix(&mut buf, u);
             put_matrix(&mut buf, w);
@@ -182,6 +197,11 @@ pub fn decode(bytes: &[u8]) -> Result<AgentMsg> {
             let w = cur.matrix()?;
             Ok(AgentMsg::RevertFactors { from, u, w })
         }
+        TAG_HAND_OFF => {
+            let u = cur.matrix()?;
+            let w = cur.matrix()?;
+            Ok(AgentMsg::HandOff { from, u, w })
+        }
         TAG_PUT_ACK => Ok(AgentMsg::PutAck { from }),
         other => Err(Error::Gossip(format!("codec: unknown frame tag {other}"))),
     }
@@ -257,6 +277,40 @@ mod tests {
         assert!(matches!(err, Error::Gossip(_)), "{err}");
         let err = encode(&AgentMsg::GetCost { lambda: 1.0 }).unwrap_err();
         assert!(format!("{err}").contains("GetCost"));
+        let err = encode(&AgentMsg::Retire { row_heir: None, col_heir: None }).unwrap_err();
+        assert!(format!("{err}").contains("Retire"));
+    }
+
+    #[test]
+    fn hand_off_half_frames_roundtrip_bit_exact() {
+        // A retiring block frames the factor it is NOT handing off as a
+        // 0×0 placeholder; both halves must survive bitwise.
+        let u = mat(6, 3, 0.5);
+        let empty = DenseMatrix::zeros(0, 0);
+        let row_frame = AgentMsg::HandOff {
+            from: BlockId::new(1, 3),
+            u: u.clone(),
+            w: empty.clone(),
+        };
+        let bytes = encode(&row_frame).unwrap();
+        assert_eq!(bytes.len(), 9 + (8 + 4 * 18) + 8, "U payload + empty W header");
+        match decode(&bytes).unwrap() {
+            AgentMsg::HandOff { from, u: du, w: dw } => {
+                assert_eq!(from, BlockId::new(1, 3));
+                assert_eq!(du, u);
+                assert_eq!((dw.rows(), dw.cols()), (0, 0));
+            }
+            other => panic!("wrong variant {}", other.kind()),
+        }
+        let w = mat(4, 3, -1.0);
+        let col_frame = AgentMsg::HandOff { from: BlockId::new(2, 0), u: empty, w: w.clone() };
+        match decode(&encode(&col_frame).unwrap()).unwrap() {
+            AgentMsg::HandOff { u: du, w: dw, .. } => {
+                assert_eq!((du.rows(), du.cols()), (0, 0));
+                assert_eq!(dw, w);
+            }
+            other => panic!("wrong variant {}", other.kind()),
+        }
     }
 
     #[test]

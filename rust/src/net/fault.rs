@@ -232,6 +232,11 @@ pub enum FaultRecord {
     /// A dormant block joined the live grid at checkpoint `version` —
     /// warm from the (durable) sink, or cold on its spawn factors.
     Join { step: u64, block: BlockId, version: u64, warm: bool },
+    /// A live block gracefully retired from the grid at checkpoint
+    /// `version` (the mirror of `Join`): final snapshot to the sink,
+    /// then `handoffs` factor halves (row factors, column factors, or
+    /// both) handed to surviving heir blocks over the wire.
+    Retire { step: u64, block: BlockId, version: u64, handoffs: u8 },
 }
 
 impl FaultRecord {
@@ -240,7 +245,8 @@ impl FaultRecord {
             FaultRecord::Kill { step, .. }
             | FaultRecord::Abort { step, .. }
             | FaultRecord::Partition { step, .. }
-            | FaultRecord::Join { step, .. } => *step,
+            | FaultRecord::Join { step, .. }
+            | FaultRecord::Retire { step, .. } => *step,
         }
     }
 
@@ -266,6 +272,11 @@ impl FaultRecord {
             FaultRecord::Join { step, block, version, warm } => format!(
                 "{{\"step\":{step},\"event\":\"join\",\"block\":\"{},{}\",\
                  \"version\":{version},\"warm\":{warm}}}",
+                block.i, block.j
+            ),
+            FaultRecord::Retire { step, block, version, handoffs } => format!(
+                "{{\"step\":{step},\"event\":\"retire\",\"block\":\"{},{}\",\
+                 \"version\":{version},\"handoffs\":{handoffs}}}",
                 block.i, block.j
             ),
         }
@@ -377,6 +388,22 @@ mod tests {
              \"warm\":true}\n"
         );
         assert_eq!(s, render_trace(&trace), "rendering is pure");
+    }
+
+    #[test]
+    fn retire_record_renders_stable_json() {
+        let r = FaultRecord::Retire {
+            step: 2000,
+            block: BlockId::new(1, 5),
+            version: 212,
+            handoffs: 2,
+        };
+        assert_eq!(
+            r.json(),
+            "{\"step\":2000,\"event\":\"retire\",\"block\":\"1,5\",\
+             \"version\":212,\"handoffs\":2}"
+        );
+        assert_eq!(r.step(), 2000);
     }
 
     #[test]

@@ -51,7 +51,7 @@ use crate::model::FactorState;
 use crate::{Error, Result};
 
 /// Messages addressed to a block agent.
-/// `Execute`/`GetCost`/`Abort`/`Join`/`Crash`/`Shutdown` are
+/// `Execute`/`GetCost`/`Abort`/`Join`/`Retire`/`Crash`/`Shutdown` are
 /// driver→agent control plane; the rest are the peer-to-peer gossip
 /// protocol (the only messages that cross simulated links).
 #[derive(Debug)]
@@ -73,7 +73,15 @@ pub enum AgentMsg {
     /// restore these pre-structure factors and roll the version counter
     /// back one mutation (no new mutation is counted).
     RevertFactors { from: BlockId, u: DenseMatrix, w: DenseMatrix },
-    /// Member → anchor: adoption (or revert) acknowledged.
+    /// Peer → peer: a retiring block's parting factor hand-off. Exactly
+    /// one of `u`/`w` is non-empty per frame: the retiring block sends
+    /// its row factors to a surviving replica holder of its grid row
+    /// and its column factors to one of its grid column, so each factor
+    /// leaves the retiree exactly once. The receiver absorbs the
+    /// non-empty half by consensus midpoint — one counted factor
+    /// mutation — and acks with [`AgentMsg::PutAck`].
+    HandOff { from: BlockId, u: DenseMatrix, w: DenseMatrix },
+    /// Member → anchor: adoption (or revert, or hand-off) acknowledged.
     PutAck { from: BlockId },
     /// Driver → agent: report this block's cost term.
     GetCost { lambda: f32 },
@@ -91,6 +99,18 @@ pub enum AgentMsg {
     /// otherwise it cold-joins on its spawn factors, and replies
     /// [`DriverMsg::Joined`].
     Join,
+    /// Driver → agent: gracefully retire a live block from the
+    /// membership (the mirror of [`AgentMsg::Join`]). The agent takes a
+    /// final snapshot into its checkpoint sink (so a later run — or a
+    /// re-grown grid — can warm-start from it), hands its row factors
+    /// off to `row_heir` and its column factors to `col_heir` over the
+    /// wire ([`AgentMsg::HandOff`]), waits for their acks, leaves the
+    /// membership, and replies [`DriverMsg::Retired`]. `None` heirs
+    /// (no surviving replica holder of that band) skip the hand-off —
+    /// the sink snapshot is then the band's only continuation.
+    /// Supervisors must only retire from a quiescent network (no
+    /// structure in flight), so heirs absorb at a consistent state.
+    Retire { row_heir: Option<BlockId>, col_heir: Option<BlockId> },
     /// Driver → agent: simulate a process crash. All live state (factors,
     /// protocol phase, engine scratch) is lost; the agent restarts from
     /// its last checkpoint (or cold, with zeroed factors) and replies
@@ -110,10 +130,12 @@ impl AgentMsg {
             AgentMsg::Factors { .. } => "Factors",
             AgentMsg::PutFactors { .. } => "PutFactors",
             AgentMsg::RevertFactors { .. } => "RevertFactors",
+            AgentMsg::HandOff { .. } => "HandOff",
             AgentMsg::PutAck { .. } => "PutAck",
             AgentMsg::GetCost { .. } => "GetCost",
             AgentMsg::Abort { .. } => "Abort",
             AgentMsg::Join => "Join",
+            AgentMsg::Retire { .. } => "Retire",
             AgentMsg::Crash => "Crash",
             AgentMsg::Shutdown => "Shutdown",
         }
@@ -138,8 +160,12 @@ pub enum DriverMsg {
     /// `version` — `warm` when restored from the sink, cold on its
     /// spawn factors otherwise (reply to [`AgentMsg::Join`]).
     Joined { from: BlockId, version: u64, warm: bool },
-    /// One block's final factors (reply to [`AgentMsg::Shutdown`]).
-    Retired { from: BlockId, u: DenseMatrix, w: DenseMatrix },
+    /// One block's factors coming home, at checkpoint `version`: the
+    /// reply to [`AgentMsg::Shutdown`] (the final culmination hand-off)
+    /// and to [`AgentMsg::Retire`] (a graceful mid-run leave — the
+    /// factors are a frozen copy; the agent stays addressable for the
+    /// final collection).
+    Retired { from: BlockId, version: u64, u: DenseMatrix, w: DenseMatrix },
 }
 
 impl DriverMsg {

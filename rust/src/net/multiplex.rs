@@ -60,7 +60,7 @@ pub struct MultiplexTransport {
 
 impl MultiplexTransport {
     /// Default worker count: `available_parallelism` capped at
-    /// [`MAX_AUTO_WORKERS`].
+    /// `MAX_AUTO_WORKERS` (8).
     pub fn auto_workers() -> usize {
         thread::available_parallelism()
             .map(|c| c.get())

@@ -1,12 +1,12 @@
 //! Runtime bridge: AOT HLO artifacts → executable programs.
 //!
-//! [`manifest`] maps `(program, block shape, rank)` to HLO files;
+//! `manifest` maps `(program, block shape, rank)` to HLO files;
 //! the runtime proper has two builds:
 //!
-//! * **`--features xla`** ([`pjrt`]) — the real PJRT CPU client via the
+//! * **`--features xla`** (`pjrt`) — the real PJRT CPU client via the
 //!   external `xla` crate: compile HLO text once, keep block tensors
 //!   device-resident, execute per update.
-//! * **default** ([`stub`]) — an API-compatible stub for the offline
+//! * **default** (`stub`) — an API-compatible stub for the offline
 //!   image (which cannot ship the `xla` crate). Every entry point fails
 //!   with [`crate::Error::Unsupported`]; engine selection falls back to
 //!   [`crate::engine::NativeEngine`], whose hot path is the subject of

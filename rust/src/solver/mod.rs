@@ -118,7 +118,8 @@ impl SolverReport {
                 crate::net::FaultRecord::Kill { lost_updates, .. } => *lost_updates,
                 crate::net::FaultRecord::Abort { .. }
                 | crate::net::FaultRecord::Partition { .. }
-                | crate::net::FaultRecord::Join { .. } => 0,
+                | crate::net::FaultRecord::Join { .. }
+                | crate::net::FaultRecord::Retire { .. } => 0,
             })
             .sum()
     }
@@ -163,6 +164,26 @@ impl SolverReport {
             .filter(|f| matches!(f, crate::net::FaultRecord::Join { warm: true, .. }))
             .count()
     }
+
+    /// Blocks that gracefully retired from the live grid mid-run.
+    pub fn retire_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::Retire { .. }))
+            .count()
+    }
+
+    /// Factor halves handed off to surviving heirs by retiring blocks
+    /// (0–2 per retirement: row factors, column factors, or both).
+    pub fn handoff_count(&self) -> u64 {
+        self.faults
+            .iter()
+            .map(|f| match f {
+                crate::net::FaultRecord::Retire { handoffs, .. } => *handoffs as u64,
+                _ => 0,
+            })
+            .sum()
+    }
 }
 
 /// Number of scoped threads the leader-side cost fan-in uses. Fixed
@@ -181,7 +202,7 @@ const COST_PAR_MIN_CELLS: usize = 1 << 18;
 /// paper's Table 2 reports. Shared by both drivers.
 ///
 /// Grids with enough blocks fan the per-block sums out over a small
-/// scoped-thread pool ([`COST_FANOUT`] contiguous chunks, partials
+/// scoped-thread pool (`COST_FANOUT` contiguous chunks, partials
 /// combined in chunk order), which keeps the result deterministic
 /// while cutting evaluation latency on big grids.
 pub fn total_cost(

@@ -1,5 +1,6 @@
 //! Golden-schema tests for the machine-readable bench artifacts:
-//! `BENCH_churn.json`, `BENCH_grow.json`, `BENCH_parallel_scaling.json`.
+//! `BENCH_churn.json`, `BENCH_grow.json`, `BENCH_shrink.json`,
+//! `BENCH_parallel_scaling.json`.
 //!
 //! These files are the repo's perf trajectory — downstream tooling
 //! diffs them across commits — so format drift must fail CI instead of
@@ -9,8 +10,8 @@
 //! and value types at every level.
 
 use gridmc::experiments::parallel::{
-    write_churn_json, write_grow_json, write_json, ChurnOutcome, ChurnRun, GrowOutcome,
-    GrowRun, ScalingPoint,
+    write_churn_json, write_grow_json, write_json, write_shrink_json, ChurnOutcome, ChurnRun,
+    GrowOutcome, GrowRun, ScalingPoint, ShrinkOutcome, ShrinkRun,
 };
 use gridmc::grid::BlockId;
 use gridmc::metrics::{percentiles, RecoveryOverhead};
@@ -233,6 +234,11 @@ fn assert_event_schema(e: &Json, ctx: &str) {
             assert!(obj["block"].is_str());
             assert!(matches!(obj["warm"], Json::Bool(_)));
         }
+        "retire" => {
+            assert_keys(e, &["step", "event", "block", "version", "handoffs"], ctx);
+            assert!(obj["step"].is_num() && obj["version"].is_num());
+            assert!(obj["handoffs"].is_num() && obj["block"].is_str());
+        }
         other => panic!("{ctx}: unknown event kind {other:?}"),
     }
 }
@@ -382,6 +388,73 @@ fn grow_json_schema_is_pinned() {
     let events = top["events"].as_arr();
     assert_eq!(events.len(), 1);
     assert_event_schema(&events[0], "grow.events[0]");
+}
+
+#[test]
+fn shrink_json_schema_is_pinned() {
+    let run = |rmse: f64, retires: usize, handoffs: u64| ShrinkRun {
+        rmse,
+        final_cost: 2e-3,
+        iters: 6000,
+        wall: Duration::from_millis(850),
+        retires,
+        handoffs,
+    };
+    let outcome = ShrinkOutcome {
+        grid: (6, 6),
+        retire_step: 2000,
+        retired_blocks: 6,
+        full: run(0.10, 0, 0),
+        shrunk: run(0.103, 6, 6),
+        async_shrunk: run(0.106, 6, 6),
+        trace: vec![
+            FaultRecord::Retire {
+                step: 2000,
+                block: BlockId::new(0, 5),
+                version: 233,
+                handoffs: 1,
+            },
+            FaultRecord::Retire {
+                step: 2000,
+                block: BlockId::new(5, 5),
+                version: 240,
+                handoffs: 1,
+            },
+        ],
+    };
+    let path = temp_path("BENCH_shrink.json");
+    write_shrink_json(&path, &outcome).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap());
+    assert_keys(
+        &doc,
+        &[
+            "bench",
+            "git_rev",
+            "timestamp_unix",
+            "timestamp_utc",
+            "grid",
+            "unit",
+            "retire",
+            "full",
+            "shrunk",
+            "async",
+            "events",
+        ],
+        "shrink",
+    );
+    let top = doc.as_obj();
+    assert_header(top, "shrink");
+    assert_eq!(top["unit"], Json::Str("rmse".into()));
+    assert_keys(&top["grid"], &["p", "q", "agents"], "shrink.grid");
+    assert_keys(&top["retire"], &["step", "blocks"], "shrink.retire");
+    for leg in ["full", "shrunk", "async"] {
+        assert_run_keys(&top[leg], &["retires", "handoffs"], &format!("shrink.{leg}"));
+    }
+    let events = top["events"].as_arr();
+    assert_eq!(events.len(), 2);
+    for (k, e) in events.iter().enumerate() {
+        assert_event_schema(e, &format!("shrink.events[{k}]"));
+    }
 }
 
 #[test]

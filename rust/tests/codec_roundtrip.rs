@@ -149,9 +149,12 @@ fn random_corruptions_never_panic() {
         match decode(&bad) {
             Ok(msg) => {
                 // Corruption in payload or a still-consistent header:
-                // must at least be one of the four wire kinds.
+                // must at least be one of the wire kinds (a tag-byte
+                // flip of a Factors frame can land on any of the
+                // factor-bearing tags, HandOff included — the payload
+                // layout is shared).
                 assert!(
-                    ["GetFactors", "Factors", "PutFactors", "RevertFactors", "PutAck"]
+                    ["GetFactors", "Factors", "PutFactors", "RevertFactors", "HandOff", "PutAck"]
                         .contains(&msg.kind()),
                     "decoded a non-wire kind {}",
                     msg.kind()
@@ -163,7 +166,7 @@ fn random_corruptions_never_panic() {
 }
 
 /// Exhaustive tag sweep: all 256 first bytes on a minimal frame body.
-/// Only the five wire tags may decode (the factor-bearing ones need a
+/// Only the six wire tags may decode (the factor-bearing ones need a
 /// payload, so they error on a 9-byte frame); everything else errors.
 #[test]
 fn exhaustive_tag_sweep() {

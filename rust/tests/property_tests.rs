@@ -394,6 +394,62 @@ fn prop_post_join_schedules_stay_conflict_free() {
 }
 
 #[test]
+fn prop_post_retire_schedules_stay_conflict_free() {
+    // The mirror of the post-join test: random grids run full, then a
+    // random set of blocks retires (a trailing column when the
+    // geometry allows it, scattered blocks otherwise). Shrunk epochs
+    // must stay conflict-free, never touch a retired block, and cover
+    // exactly the surviving structure set; re-including the retirees
+    // (a later regrowth) must restore full coverage.
+    for case in 0..25u64 {
+        let mut rng = case_rng(case ^ 0x5417);
+        let p = 2 + rng.gen_range(7);
+        let q = 2 + rng.gen_range(7);
+        let spec = GridSpec::new(p * 6, q * 6, p, q, 2);
+        let mut builder = ScheduleBuilder::new(spec, case);
+        let full: std::collections::HashSet<Structure> =
+            builder.shuffled().into_iter().collect();
+        let mut retired = Vec::new();
+        if q > 2 && rng.bool(0.5) {
+            retired.extend((0..p).map(|i| gridmc::grid::BlockId::new(i, q - 1)));
+        } else {
+            for _ in 0..1 + rng.gen_range(2) {
+                retired.push(gridmc::grid::BlockId::new(rng.gen_range(p), rng.gen_range(q)));
+            }
+        }
+        builder.exclude(&retired);
+        let is_retired = |b: &gridmc::grid::BlockId| retired.iter().any(|d| d == b);
+        let survivors: std::collections::HashSet<Structure> = full
+            .iter()
+            .filter(|s| !s.blocks().iter().any(|b| is_retired(b)))
+            .copied()
+            .collect();
+        let mut seen = std::collections::HashSet::new();
+        for round in builder.epoch() {
+            for (a, s) in round.iter().enumerate() {
+                assert!(
+                    !s.blocks().iter().any(|b| is_retired(b)),
+                    "case {case}: {s} touches a retired block"
+                );
+                assert!(seen.insert(*s), "case {case}: duplicate {s}");
+                for other in &round[a + 1..] {
+                    assert!(!conflicts(s, other), "case {case}: {s} vs {other}");
+                }
+            }
+        }
+        assert_eq!(
+            seen, survivors,
+            "case {case}: shrunk epoch covers exactly the surviving structures"
+        );
+        // Regrowth after the leave restores the full geometry.
+        builder.include(&retired);
+        let regrown: std::collections::HashSet<Structure> =
+            builder.shuffled().into_iter().collect();
+        assert_eq!(regrown, full, "case {case}: re-included epochs cover the full grid");
+    }
+}
+
+#[test]
 fn prop_training_monotone_orders_on_easy_problems() {
     // Fully-observed tiny problems must drop cost by orders quickly.
     for case in 0..4u64 {

@@ -1,0 +1,328 @@
+//! Membership-shrink integration suite: hand-off conservation at the
+//! network level, and the ISSUE acceptance scenario — a graceful leave
+//! on both drivers (the async one at `max_inflight > 1`) landing
+//! within 5% of the fixed-membership RMSE.
+//!
+//! Tests serialize on a shared mutex like `tests/chaos.rs`: the
+//! acceptance runs spawn full agent networks and would otherwise
+//! contend for cores.
+
+use std::sync::{Arc, Mutex};
+
+use gridmc::data::{CooMatrix, DenseMatrix, SyntheticConfig};
+use gridmc::engine::{Engine, NativeEngine};
+use gridmc::gossip::{
+    AsyncDriver, CheckpointStore, GossipNetwork, GrowthPlan, ParallelDriver, ShrinkPlan,
+};
+use gridmc::grid::{BlockId, BlockPartition, GridSpec};
+use gridmc::model::FactorState;
+use gridmc::net::{fault::render_trace, FaultRecord, NetConfig, SimConfig};
+use gridmc::solver::{SolverConfig, StepSchedule};
+
+static SEQ: Mutex<()> = Mutex::new(());
+
+fn serialize() -> std::sync::MutexGuard<'static, ()> {
+    SEQ.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn problem() -> (GridSpec, CooMatrix, CooMatrix) {
+    let spec = GridSpec::new(40, 40, 4, 4, 3);
+    let d = SyntheticConfig {
+        m: 40,
+        n: 40,
+        rank: 3,
+        train_fraction: 0.5,
+        test_fraction: 0.2,
+        noise_std: 0.0,
+        seed: 21,
+    }
+    .generate();
+    (spec, d.data.train, d.data.test)
+}
+
+fn cfg(iters: u64) -> SolverConfig {
+    SolverConfig {
+        max_iters: iters,
+        eval_every: (iters / 2).max(1),
+        rho: 10.0,
+        lambda: 1e-9,
+        schedule: StepSchedule { a: 2e-2, b: 1e-5 },
+        abs_tol: 0.0,
+        rel_tol: 0.0,
+        patience: u32::MAX,
+        seed: 42,
+        normalize: true,
+    }
+}
+
+fn midpoint(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    DenseMatrix::from_fn(a.rows(), a.cols(), |i, k| 0.5 * (a.get(i, k) + b.get(i, k)))
+}
+
+/// Drive the network directly: retire one block with both heirs
+/// designated. The retiree's row factors must land on the row heir
+/// exactly once (consensus midpoint, bitwise), its column factors on
+/// the column heir exactly once, every other block must stay
+/// bit-identical to an untouched twin, and the retiree's final
+/// snapshot must sit in the checkpoint store at its version.
+#[test]
+fn direct_retirement_conserves_factors_bitwise() {
+    let _g = serialize();
+    let (spec, train, _) = problem();
+    let partition = BlockPartition::new(spec, &train).unwrap();
+    let mut engine = NativeEngine::new();
+    engine.prepare(&partition).unwrap();
+    let engine: Arc<dyn Engine> = Arc::new(engine);
+
+    let spawn = |store: Option<Arc<CheckpointStore>>| {
+        GossipNetwork::spawn_full(
+            &NetConfig::channel(),
+            spec,
+            engine.clone(),
+            FactorState::init_random(spec, 33),
+            store,
+        )
+    };
+    let store = CheckpointStore::in_memory(spec, 8);
+    let mut network = spawn(Some(store.clone()));
+    let retiree = BlockId::new(2, 1);
+    let (row_heir, col_heir) = (BlockId::new(2, 0), BlockId::new(1, 1));
+    network
+        .retire(7, retiree, Some(row_heir), Some(col_heir))
+        .unwrap();
+    match network.fault_trace() {
+        [FaultRecord::Retire { step: 7, block, version: 0, handoffs: 2 }] => {
+            assert_eq!(*block, retiree);
+        }
+        other => panic!("unexpected trace {other:?}"),
+    }
+    let shrunk = network.shutdown().unwrap();
+
+    let twin = spawn(None).shutdown().unwrap();
+    for id in spec.blocks() {
+        if id == row_heir {
+            assert_eq!(
+                shrunk.u(id),
+                &midpoint(twin.u(id), twin.u(retiree)),
+                "row heir absorbs the retiree's U by midpoint"
+            );
+            assert_eq!(shrunk.w(id), twin.w(id), "row heir's W must not change");
+        } else if id == col_heir {
+            assert_eq!(
+                shrunk.w(id),
+                &midpoint(twin.w(id), twin.w(retiree)),
+                "column heir absorbs the retiree's W by midpoint"
+            );
+            assert_eq!(shrunk.u(id), twin.u(id), "column heir's U must not change");
+        } else {
+            // The retiree itself freezes; bystanders never hear about
+            // the leave at all.
+            assert_eq!(shrunk.u(id), twin.u(id), "U of {id} must match the twin");
+            assert_eq!(shrunk.w(id), twin.w(id), "W of {id} must match the twin");
+        }
+    }
+    // The final snapshot is in the sink, restorable for a regrowth.
+    let cp = store.restore(retiree).expect("final snapshot exists");
+    assert_eq!(cp.version, 0);
+    assert_eq!(&cp.u, twin.u(retiree));
+    assert_eq!(&cp.w, twin.w(retiree));
+}
+
+/// The ISSUE acceptance scenario on the round-barrier driver: a block
+/// retires gracefully late in training — handing off both factor
+/// halves to its heirs; the run must not abort, must keep every
+/// iteration, must land within 5% of the fixed-membership RMSE, and
+/// must replay byte-identically across reruns and transports.
+#[test]
+fn graceful_leave_acceptance_parallel_driver() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 4000;
+    let shrink = ShrinkPlan { retire_step: 3200, blocks: vec![BlockId::new(1, 2)] };
+
+    let (clean_rep, clean_state) = ParallelDriver::new(spec, cfg(iters), 4)
+        .with_checkpoints(4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .expect("reference run");
+    let run = |net: NetConfig| {
+        ParallelDriver::new(spec, cfg(iters), 4)
+            .with_net(net)
+            .with_shrink(shrink.clone())
+            .with_checkpoints(4)
+            .run(Box::new(NativeEngine::new()), &train)
+            .expect("graceful leave must not abort the driver")
+    };
+    let (ra, sa) = run(NetConfig::channel());
+    let (rb, sb) = run(NetConfig::channel());
+    let (rc, sc) = run(NetConfig::sim(SimConfig::zero_latency(5)));
+
+    assert_eq!(ra.retire_count(), 1, "{:?}", ra.faults);
+    assert_eq!(ra.handoff_count(), 2, "an interior block hands off both halves");
+    assert_eq!(ra.iters, clean_rep.iters, "the leave must not eat iterations");
+
+    // Deterministic: byte-identical traces and bit-identical factors
+    // across reruns and transports (the hand-off is wire-framed on the
+    // sim transport and in-process on channels — same bits).
+    let trace = render_trace(&ra.faults);
+    assert!(!trace.is_empty());
+    assert_eq!(trace, render_trace(&rb.faults), "rerun trace differs");
+    assert_eq!(trace, render_trace(&rc.faults), "cross-transport trace differs");
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    assert_eq!(ra.final_cost.to_bits(), rc.final_cost.to_bits());
+    for id in spec.blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
+        assert_eq!(sa.u(id), sc.u(id), "U of {id} differs across transports");
+        assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
+        assert_eq!(sa.w(id), sc.w(id), "W of {id} differs across transports");
+    }
+
+    // Acceptance: within 5% of the fixed-membership RMSE.
+    let clean_rmse = clean_state.rmse(&test);
+    let rmse = sa.rmse(&test);
+    assert!(rmse.is_finite() && clean_rmse.is_finite());
+    assert!(
+        rmse <= clean_rmse * 1.05,
+        "shrunk RMSE {rmse} vs fixed-membership {clean_rmse} (> 5% off)"
+    );
+}
+
+/// The same acceptance gate on the barrier-free driver at
+/// `max_inflight > 1`: statistical, not bitwise — the leave must not
+/// abort, must keep every iteration, and must land within 5% of the
+/// fixed-membership async run.
+#[test]
+fn graceful_leave_acceptance_async_driver_multi_inflight() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 4000;
+    let shrink = ShrinkPlan { retire_step: 3200, blocks: vec![BlockId::new(1, 2)] };
+
+    let (clean_rep, clean_state) = AsyncDriver::new(spec, cfg(iters), 5)
+        .with_net(NetConfig::multiplex(3))
+        .with_checkpoints(4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .expect("reference async run");
+    assert!(clean_rep.faults.is_empty());
+
+    let (rep, state) = AsyncDriver::new(spec, cfg(iters), 5)
+        .with_net(NetConfig::multiplex(3))
+        .with_shrink(shrink)
+        .with_checkpoints(4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .expect("async graceful leave must not abort the driver");
+
+    assert_eq!(rep.retire_count(), 1, "{:?}", rep.faults);
+    assert_eq!(rep.handoff_count(), 2, "an interior block hands off both halves");
+    assert_eq!(rep.iters, iters, "the quiesce-and-leave must not eat iterations");
+    for f in &rep.faults {
+        match f {
+            FaultRecord::Retire { step, block, .. } => {
+                assert!(*step >= 3200, "{f:?} fired before its step");
+                assert_eq!(*block, BlockId::new(1, 2));
+            }
+            other => panic!("unexpected record {other:?}"),
+        }
+    }
+    let clean_rmse = clean_state.rmse(&test);
+    let rmse = state.rmse(&test);
+    assert!(rmse.is_finite() && clean_rmse.is_finite());
+    assert!(
+        rmse <= clean_rmse * 1.05,
+        "async shrunk RMSE {rmse} vs fixed-membership {clean_rmse} (> 5% off)"
+    );
+}
+
+/// Async elasticity at `max_inflight > 1`, both directions in one run:
+/// a column joins mid-run (cold) and the same column retires later —
+/// the statistical acceptance gate of the ROADMAP's "growth under the
+/// async driver at `max_inflight > 1`" item, extended to shrink. The
+/// tolerance matches the chaos property sweep's (a cold-joined column
+/// trains for only part of the budget, then freezes).
+#[test]
+fn async_grow_then_shrink_multi_inflight_statistical() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 4000;
+    let grow = GrowthPlan::trailing_columns(spec, 1, 400).unwrap();
+    let shrink = ShrinkPlan::trailing_columns(spec, 1, 3200).unwrap();
+
+    let (clean_rep, clean_state) = AsyncDriver::new(spec, cfg(iters), 5)
+        .with_net(NetConfig::multiplex(3))
+        .with_checkpoints(4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .expect("reference async run");
+
+    let (rep, state) = AsyncDriver::new(spec, cfg(iters), 5)
+        .with_net(NetConfig::multiplex(3))
+        .with_growth(grow)
+        .with_shrink(shrink)
+        .with_checkpoints(4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .expect("elastic async run must not abort the driver");
+
+    assert_eq!(rep.join_count(), 4, "{:?}", rep.faults);
+    assert_eq!(rep.retire_count(), 4, "{:?}", rep.faults);
+    assert_eq!(rep.iters, clean_rep.iters);
+    // Joins land at or past their step and strictly before the
+    // retirements of the same column.
+    let first_retire = rep
+        .faults
+        .iter()
+        .position(|f| matches!(f, FaultRecord::Retire { .. }))
+        .unwrap();
+    let last_join = rep
+        .faults
+        .iter()
+        .rposition(|f| matches!(f, FaultRecord::Join { .. }))
+        .unwrap();
+    assert!(last_join < first_retire, "{:?}", rep.faults);
+
+    let clean_rmse = clean_state.rmse(&test);
+    let rmse = state.rmse(&test);
+    assert!(rmse.is_finite() && clean_rmse.is_finite());
+    assert!(
+        rmse <= clean_rmse * 1.25,
+        "grow-then-shrink RMSE {rmse} vs fixed-membership {clean_rmse} (> 25% off)"
+    );
+}
+
+/// Retired blocks look dormant on the agent side, so a later run can
+/// regrow them warm from the durable sink the leave final-snapshotted
+/// into — the round trip the ROADMAP's shrink item asked for.
+#[test]
+fn retirement_snapshots_enable_warm_regrowth_across_runs() {
+    let _g = serialize();
+    let (spec, train, _) = problem();
+    let base =
+        std::env::temp_dir().join(format!("gridmc-shrink-regrow-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+
+    // Run 1: the trailing column retires; its final snapshots persist.
+    let shrink = ShrinkPlan::trailing_columns(spec, 1, 600).unwrap();
+    let (r1, _) = ParallelDriver::new(spec, cfg(1200), 4)
+        .with_shrink(shrink)
+        .with_checkpoints(4)
+        .with_checkpoint_dir(&base)
+        .run(Box::new(NativeEngine::new()), &train)
+        .expect("retiring run");
+    assert_eq!(r1.retire_count(), 4);
+
+    // Run 2: the same column starts dormant and joins — warm, from the
+    // retirement snapshots of run 1.
+    let grow = GrowthPlan::trailing_columns(spec, 1, 300).unwrap();
+    let (r2, state) = ParallelDriver::new(spec, cfg(1200), 4)
+        .with_growth(grow)
+        .with_checkpoints(4)
+        .with_checkpoint_dir(&base)
+        .run(Box::new(NativeEngine::new()), &train)
+        .expect("regrowing run");
+    assert_eq!(r2.join_count(), 4, "{:?}", r2.faults);
+    assert_eq!(
+        r2.warm_join_count(),
+        4,
+        "every joiner warm-starts from the leave's final snapshot: {:?}",
+        r2.faults
+    );
+    assert!(state.rmse(&train).is_finite());
+    let _ = std::fs::remove_dir_all(&base);
+}

@@ -204,6 +204,13 @@ pub struct ExperimentConfig {
     /// Membership shrink (`[shrink]` table; `None` = nobody retires).
     /// Requires a gossip driver.
     pub shrink: Option<ShrinkConfig>,
+    /// Decentralized liveness layer (`[liveness]` table; `None` =
+    /// supervisor-orchestrated fault handling, the pre-liveness
+    /// behavior). Arms every agent's failure detector and switches the
+    /// gossip drivers to pulse-clocked dispatch with structure
+    /// deadlines and suspicion-based probation. Requires a gossip
+    /// driver.
+    pub liveness: Option<crate::gossip::LivenessConfig>,
     /// Per-block snapshot cadence independent of any fault plan (the
     /// effective cadence is the max of this and the `[faults]` value).
     pub checkpoint_every: u64,
@@ -220,7 +227,12 @@ impl ExperimentConfig {
 
     /// The transport configuration the drivers consume.
     pub fn net_config(&self) -> NetConfig {
-        NetConfig { kind: self.transport, workers: self.net_workers, sim: self.sim }
+        NetConfig {
+            kind: self.transport,
+            workers: self.net_workers,
+            sim: self.sim,
+            liveness: self.liveness,
+        }
     }
 
     /// Parse from TOML-subset text.
@@ -292,6 +304,8 @@ impl ExperimentConfig {
                     drop_prob: doc.f64_or("sim.drop_prob", d.drop_prob),
                     retry_after_us: doc.u64_or("sim.retry_after_us", d.retry_after_us),
                     max_retries: doc.u64_or("sim.max_retries", d.max_retries as u64) as u32,
+                    duplicate_prob: doc.f64_or("sim.duplicate_prob", d.duplicate_prob),
+                    reorder_prob: doc.f64_or("sim.reorder_prob", d.reorder_prob),
                     seed: doc.u64_or("sim.seed", d.seed),
                 }
             },
@@ -300,10 +314,16 @@ impl ExperimentConfig {
                 FaultConfig {
                     kills: doc.usize_or("faults.kills", d.kills),
                     partitions: doc.usize_or("faults.partitions", d.partitions),
+                    stalls: doc.usize_or("faults.stalls", d.stalls),
                     from_step: doc.u64_or("faults.from_step", d.from_step),
                     until_step: doc.u64_or("faults.until_step", d.until_step),
                     partition_duration_us: doc
                         .u64_or("faults.partition_duration_us", d.partition_duration_us),
+                    stall_factor: doc
+                        .u64_or("faults.stall_factor", d.stall_factor as u64)
+                        as u32,
+                    stall_duration_us: doc
+                        .u64_or("faults.stall_duration_us", d.stall_duration_us),
                     checkpoint_every: doc
                         .u64_or("faults.checkpoint_every", d.checkpoint_every),
                     seed: doc.u64_or("faults.seed", d.seed),
@@ -321,6 +341,25 @@ impl ExperimentConfig {
                 ShrinkConfig {
                     retire_step: doc.u64_or("shrink.retire_step", d.retire_step),
                     columns: doc.usize_or("shrink.columns", d.columns),
+                }
+            }),
+            liveness: doc.has_prefix("liveness.").then(|| {
+                let d = crate::gossip::LivenessConfig::default();
+                crate::gossip::LivenessConfig {
+                    pulse_interval_us: doc
+                        .u64_or("liveness.pulse_interval_us", d.pulse_interval_us),
+                    deadline_ticks: doc.u64_or("liveness.deadline_ticks", d.deadline_ticks),
+                    heartbeat_every: doc
+                        .u64_or("liveness.heartbeat_every", d.heartbeat_every),
+                    ewma_alpha: doc.f64_or("liveness.ewma_alpha", d.ewma_alpha),
+                    suspect_factor: doc
+                        .f64_or("liveness.suspect_factor", d.suspect_factor),
+                    dead_factor: doc.f64_or("liveness.dead_factor", d.dead_factor),
+                    probation_base: doc
+                        .u64_or("liveness.probation_base", d.probation_base),
+                    probation_max: doc.u64_or("liveness.probation_max", d.probation_max),
+                    driver_deadline_factor: doc
+                        .u64_or("liveness.driver_deadline_factor", d.driver_deadline_factor),
                 }
             }),
             checkpoint_every: doc.u64_or("checkpoint_every", 0),
@@ -392,24 +431,31 @@ impl ExperimentConfig {
         ));
         s.push_str(&format!(
             "\n[sim]\nlatency_us = {}\njitter_us = {}\ndrop_prob = {}\n\
-             retry_after_us = {}\nmax_retries = {}\nseed = {}\n",
+             retry_after_us = {}\nmax_retries = {}\nduplicate_prob = {}\n\
+             reorder_prob = {}\nseed = {}\n",
             self.sim.latency_us,
             self.sim.jitter_us,
             self.sim.drop_prob,
             self.sim.retry_after_us,
             self.sim.max_retries,
+            self.sim.duplicate_prob,
+            self.sim.reorder_prob,
             self.sim.seed
         ));
         if let Some(f) = &self.faults {
             s.push_str(&format!(
-                "\n[faults]\nkills = {}\npartitions = {}\nfrom_step = {}\n\
-                 until_step = {}\npartition_duration_us = {}\ncheckpoint_every = {}\n\
+                "\n[faults]\nkills = {}\npartitions = {}\nstalls = {}\n\
+                 from_step = {}\nuntil_step = {}\npartition_duration_us = {}\n\
+                 stall_factor = {}\nstall_duration_us = {}\ncheckpoint_every = {}\n\
                  seed = {}\n",
                 f.kills,
                 f.partitions,
+                f.stalls,
                 f.from_step,
                 f.until_step,
                 f.partition_duration_us,
+                f.stall_factor,
+                f.stall_duration_us,
                 f.checkpoint_every,
                 f.seed
             ));
@@ -424,6 +470,23 @@ impl ExperimentConfig {
             s.push_str(&format!(
                 "\n[shrink]\nretire_step = {}\ncolumns = {}\n",
                 sh.retire_step, sh.columns
+            ));
+        }
+        if let Some(l) = &self.liveness {
+            s.push_str(&format!(
+                "\n[liveness]\npulse_interval_us = {}\ndeadline_ticks = {}\n\
+                 heartbeat_every = {}\newma_alpha = {}\nsuspect_factor = {}\n\
+                 dead_factor = {}\nprobation_base = {}\nprobation_max = {}\n\
+                 driver_deadline_factor = {}\n",
+                l.pulse_interval_us,
+                l.deadline_ticks,
+                l.heartbeat_every,
+                l.ewma_alpha,
+                l.suspect_factor,
+                l.dead_factor,
+                l.probation_base,
+                l.probation_max,
+                l.driver_deadline_factor
             ));
         }
         Ok(s)
@@ -544,9 +607,12 @@ mod tests {
         cfg.faults = Some(FaultConfig {
             kills: 4,
             partitions: 1,
+            stalls: 2,
             from_step: 100,
             until_step: 900,
             partition_duration_us: 750,
+            stall_factor: 48,
+            stall_duration_us: 9_000,
             checkpoint_every: 16,
             seed: 0xBEEF,
         });
@@ -599,6 +665,8 @@ mod tests {
             drop_prob: 0.125,
             retry_after_us: 500,
             max_retries: 9,
+            duplicate_prob: 0.0625,
+            reorder_prob: 0.03125,
             seed: 77,
         };
         let text = cfg.to_toml().unwrap();
@@ -611,5 +679,44 @@ mod tests {
         assert_eq!(net.kind, TransportKind::SimMultiplex);
         assert_eq!(net.workers, 6);
         assert_eq!(net.sim.drop_prob, 0.125);
+        assert_eq!(net.sim.duplicate_prob, 0.0625);
+        assert_eq!(net.sim.reorder_prob, 0.03125);
+        assert!(net.liveness.is_none());
+    }
+
+    #[test]
+    fn liveness_table_roundtrip_and_absence() {
+        let mut cfg = presets::exp(1).unwrap();
+        assert!(cfg.liveness.is_none(), "presets are supervisor-orchestrated by default");
+        assert!(!cfg.to_toml().unwrap().contains("[liveness]"));
+        cfg.driver = DriverChoice::Parallel;
+        cfg.liveness = Some(crate::gossip::LivenessConfig {
+            pulse_interval_us: 250,
+            deadline_ticks: 24,
+            heartbeat_every: 4,
+            ewma_alpha: 0.25,
+            suspect_factor: 3.0,
+            dead_factor: 8.0,
+            probation_base: 16,
+            probation_max: 512,
+            driver_deadline_factor: 4,
+        });
+        let text = cfg.to_toml().unwrap();
+        assert!(text.contains("[liveness]"), "{text}");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.liveness, cfg.liveness);
+        assert_eq!(back.net_config().liveness, cfg.liveness);
+        // A partially specified table fills in defaults.
+        let partial = ExperimentConfig::from_toml(&format!(
+            "{}[liveness]\ndeadline_ticks = 13\n",
+            text.split("[liveness]").next().unwrap()
+        ))
+        .unwrap();
+        let l = partial.liveness.expect("present table parses to Some");
+        assert_eq!(l.deadline_ticks, 13);
+        assert_eq!(
+            l.pulse_interval_us,
+            crate::gossip::LivenessConfig::default().pulse_interval_us
+        );
     }
 }

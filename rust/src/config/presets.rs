@@ -70,6 +70,7 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
         faults: None,
         grow: None,
         shrink: None,
+        liveness: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
     })
@@ -110,6 +111,7 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
         faults: None,
         grow: None,
         shrink: None,
+        liveness: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
     }
@@ -157,14 +159,18 @@ pub fn churn() -> ExperimentConfig {
         faults: Some(FaultConfig {
             kills: 4,
             partitions: 2,
+            stalls: 0,
             from_step: 500,
             until_step: 3500,
             partition_duration_us: 1500,
+            stall_factor: FaultConfig::default().stall_factor,
+            stall_duration_us: FaultConfig::default().stall_duration_us,
             checkpoint_every: 8,
             seed: 0xC0A7,
         }),
         grow: None,
         shrink: None,
+        liveness: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
     }
@@ -212,6 +218,45 @@ pub fn shrink() -> ExperimentConfig {
     cfg.faults = None;
     cfg.shrink = Some(ShrinkConfig { retire_step: 4000, columns: 1 });
     cfg.checkpoint_every = 8;
+    cfg
+}
+
+/// The decentralized-liveness scenario (`gridmc bench-table liveness`,
+/// `BENCH_liveness.json`): the same 6×6 problem as [`churn`], but with
+/// the supervisor's fault orchestration *disabled* — agents detect and
+/// survive failures themselves via the [`crate::gossip::LivenessConfig`]
+/// layer. The link is hostile: duplicated and reordered frames at 5%
+/// each, two silent kills (no supervisor-driven abort), one short
+/// partition, and two stragglers slowed 10 000× for a full virtual
+/// second. Margin discipline keeps detection unambiguous: the
+/// partition (1.5 virtual ms) heals well inside one structure deadline
+/// (40 ticks × 500 µs = 20 ms), so it must *not* trigger expiries,
+/// while a straggler's stall dwarfs the deadline, so its structures
+/// *must* expire and re-enqueue against survivors.
+pub fn liveness() -> ExperimentConfig {
+    let mut cfg = churn();
+    cfg.name = "liveness".into();
+    cfg.sim = SimConfig {
+        latency_us: 20,
+        jitter_us: 10,
+        duplicate_prob: 0.05,
+        reorder_prob: 0.05,
+        seed: 61,
+        ..SimConfig::default()
+    };
+    cfg.faults = Some(FaultConfig {
+        kills: 2,
+        partitions: 1,
+        stalls: 2,
+        from_step: 500,
+        until_step: 3500,
+        partition_duration_us: 1500,
+        stall_factor: 10_000,
+        stall_duration_us: 1_000_000,
+        checkpoint_every: 8,
+        seed: 0x11FE,
+    });
+    cfg.liveness = Some(crate::gossip::LivenessConfig::default());
     cfg
 }
 
@@ -330,6 +375,29 @@ mod tests {
         let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
         assert_eq!(back.shrink, cfg.shrink);
         assert_eq!(back.checkpoint_every, cfg.checkpoint_every);
+    }
+
+    #[test]
+    fn liveness_preset_is_well_formed() {
+        let cfg = liveness();
+        let l = cfg.liveness.expect("liveness preset arms the detector");
+        let f = cfg.faults.expect("liveness preset has a fault plan");
+        assert!(f.stalls > 0, "stragglers are the scenario's point");
+        assert!(
+            f.partition_duration_us < l.deadline_ticks * l.pulse_interval_us,
+            "the partition must heal inside one structure deadline"
+        );
+        assert!(
+            f.stall_duration_us > 10 * l.deadline_ticks * l.pulse_interval_us,
+            "a stall must dwarf the structure deadline"
+        );
+        assert!(cfg.sim.duplicate_prob > 0.0 && cfg.sim.reorder_prob > 0.0);
+        assert!(f.checkpoint_every > 0, "silent kills need checkpoints to rejoin warm");
+        // Round-trips through TOML like every other preset.
+        let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.liveness, cfg.liveness);
+        assert_eq!(back.faults, cfg.faults);
+        assert_eq!(back.sim, cfg.sim);
     }
 
     #[test]

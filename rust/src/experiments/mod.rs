@@ -170,6 +170,17 @@ pub fn format_outcome(cfg: &ExperimentConfig, o: &Outcome) -> String {
             r.lost_updates()
         ));
     }
+    if let Some(l) = &r.liveness {
+        fault_line.push_str(&format!(
+            "\nliveness     {} silent kill(s), {} stall(s), {} expiry(ies) \
+             (mean detection {:.1} ticks), {} false suspicion(s)",
+            r.silent_kill_count(),
+            r.stall_count(),
+            l.expired_structures,
+            l.detection_lag_mean_ticks,
+            l.false_suspicions
+        ));
+    }
     if r.join_count() > 0 {
         fault_line.push_str(&format!(
             "\nmembership   {} block(s) joined mid-run ({} warm from checkpoints)",

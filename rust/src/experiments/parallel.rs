@@ -33,6 +33,10 @@ pub use super::scenarios::churn::{
 pub use super::scenarios::grow::{
     collect_grow, render_grow, run_grow, write_grow_json, GrowOutcome, GrowRun,
 };
+pub use super::scenarios::liveness::{
+    collect_liveness, render_liveness, run_liveness, write_liveness_json, LivenessOutcome,
+    LivenessRun,
+};
 pub use super::scenarios::shrink::{
     collect_shrink, render_shrink, run_shrink, write_shrink_json, ShrinkOutcome, ShrinkRun,
 };

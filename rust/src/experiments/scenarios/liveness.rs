@@ -1,0 +1,292 @@
+//! The decentralized liveness scenario (`gridmc bench-table liveness`,
+//! `BENCH_liveness.json`).
+//!
+//! Trains the [`presets::liveness`] problem twice on the same dataset —
+//! first fault-free with the liveness layer armed (the suspicion
+//! machinery must cost nothing visible: zero expiries, zero false
+//! suspicions), then under the preset's seeded plan of *silent* kills,
+//! straggler stalls and a healed partition, with supervisor
+//! orchestration disabled. The grid detects and survives everything
+//! itself: anchors expire wedged structures, the driver quarantines
+//! blamed blocks, retries land on survivors. `BENCH_liveness.json`
+//! records the detection-latency numbers, the false-suspicion count
+//! and the byte-stable executed-event trace (PERF.md §Liveness).
+
+use std::io::Write;
+
+use crate::config::presets;
+use crate::metrics::{bench_json_header, LivenessStats, RecoveryOverhead, TablePrinter};
+use crate::net::{fault::render_trace, FaultRecord};
+use crate::{Error, Result};
+
+/// One side of the liveness comparison (fault-free or faulted — both
+/// with the liveness layer armed).
+#[derive(Debug, Clone)]
+pub struct LivenessRun {
+    pub rmse: f64,
+    pub final_cost: f64,
+    pub iters: u64,
+    pub wall: std::time::Duration,
+}
+
+/// The liveness scenario's full result (`BENCH_liveness.json`).
+#[derive(Debug, Clone)]
+pub struct LivenessOutcome {
+    pub grid: (usize, usize),
+    pub clean: LivenessRun,
+    pub faulted: LivenessRun,
+    /// RMSE / wall overhead of the faulted leg over the clean one
+    /// (same gate as churn: the chaos harness accepts ≤ 1.05).
+    pub overhead: RecoveryOverhead,
+    /// The faulted leg's detection numbers.
+    pub stats: LivenessStats,
+    /// Silent kills executed (the `kills` field of `overhead` stays 0:
+    /// nothing was supervised).
+    pub silent_kills: usize,
+    /// Straggler stalls executed.
+    pub stalls: usize,
+    /// Executed fault + expiry trace, flushed in sorted batches so
+    /// [`render_trace`] of this field is byte-identical across reruns.
+    pub trace: Vec<FaultRecord>,
+}
+
+/// Train the liveness preset fault-free and faulted on the same data.
+pub fn collect_liveness() -> Result<LivenessOutcome> {
+    let mut cfg = presets::apply_iter_scale(presets::liveness());
+    if let Some(f) = cfg.faults.as_mut() {
+        // Only when GRIDMC_ITER_SCALE shrank the budget below the
+        // preset's fault window: pull the window back inside it so
+        // every scheduled event still fires.
+        if f.until_step >= cfg.solver.max_iters {
+            f.from_step = f.from_step.min(cfg.solver.max_iters / 8);
+            f.until_step = (cfg.solver.max_iters / 2).max(f.from_step + 1);
+        }
+    }
+    let mut clean_cfg = cfg.clone();
+    clean_cfg.name = "liveness-clean".into();
+    clean_cfg.faults = None;
+    let data = cfg.dataset.load()?;
+    let clean = crate::experiments::run_experiment_on(&clean_cfg, &data)?;
+    let faulted = crate::experiments::run_experiment_on(&cfg, &data)?;
+    let as_run = |o: &crate::experiments::Outcome| LivenessRun {
+        rmse: o.test_rmse,
+        final_cost: o.report.final_cost,
+        iters: o.report.iters,
+        wall: o.report.wall,
+    };
+    let clean_run = as_run(&clean);
+    let faulted_run = as_run(&faulted);
+    let overhead = RecoveryOverhead {
+        kills: faulted.report.kill_count(),
+        partitions: faulted.report.partition_count(),
+        lost_updates: faulted.report.lost_updates(),
+        clean_rmse: clean_run.rmse,
+        churned_rmse: faulted_run.rmse,
+        clean_wall: clean_run.wall,
+        churned_wall: faulted_run.wall,
+    };
+    let stats = faulted.report.liveness.ok_or_else(|| {
+        Error::Config("liveness preset ran without the liveness layer armed".into())
+    })?;
+    if let Some(clean_stats) = clean.report.liveness {
+        if clean_stats.false_suspicions > 0 {
+            log::warn!(
+                "fault-free leg recorded {} false suspicion(s) — deadlines too tight \
+                 for this machine?",
+                clean_stats.false_suspicions
+            );
+        }
+    }
+    Ok(LivenessOutcome {
+        grid: (cfg.grid.p, cfg.grid.q),
+        clean: clean_run,
+        faulted: faulted_run,
+        overhead,
+        stats,
+        silent_kills: faulted.report.silent_kill_count(),
+        stalls: faulted.report.stall_count(),
+        trace: faulted.report.faults.clone(),
+    })
+}
+
+/// Render the liveness comparison table plus the executed-event trace.
+pub fn render_liveness(o: &LivenessOutcome) -> String {
+    let mut t = TablePrinter::new(&["run", "test RMSE", "final cost", "iters", "wall"]);
+    for (label, r) in [("fault-free", &o.clean), ("faulted", &o.faulted)] {
+        t.row(&[
+            label.to_string(),
+            format!("{:.4}", r.rmse),
+            format!("{:.3e}", r.final_cost),
+            r.iters.to_string(),
+            format!("{:.2?}", r.wall),
+        ]);
+    }
+    format!(
+        "== decentralized liveness ({p}x{q} grid, {kills} silent kill(s), {stalls} \
+         stall(s), {exp} expiry(ies)) ==\n{table}\
+         rmse ratio (faulted/clean): {ratio:.4}   wall overhead: {wall:+.1}%\n\
+         detection: mean {mean:.1} ticks, max {max} ticks over {exp} expiry(ies); \
+         {fs} false suspicion(s); {q_now} block(s) still quarantined\n\
+         executed events:\n{trace}",
+        p = o.grid.0,
+        q = o.grid.1,
+        kills = o.silent_kills,
+        stalls = o.stalls,
+        exp = o.stats.expired_structures,
+        table = t.render(),
+        ratio = o.overhead.rmse_ratio(),
+        wall = o.overhead.wall_overhead() * 100.0,
+        mean = o.stats.detection_lag_mean_ticks,
+        max = o.stats.detection_lag_max_ticks,
+        fs = o.stats.false_suspicions,
+        q_now = o.stats.quarantined_blocks,
+        trace = render_trace(&o.trace),
+    )
+}
+
+/// Write `BENCH_liveness.json`: header, both runs, the overhead ratios,
+/// the detection-latency block and the event trace. Everything below
+/// the header is deterministic for the preset's seeds except the wall
+/// clocks and tick totals (the pulse clock is wall-paced); the
+/// `events` array in particular replays byte-for-byte (asserted by
+/// `tests/chaos.rs`).
+pub fn write_liveness_json(path: &str, o: &LivenessOutcome) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(bench_json_header("liveness").as_bytes())?;
+    super::write_grid_and_unit(&mut f, o.grid)?;
+    for (label, r) in [("clean", &o.clean), ("faulted", &o.faulted)] {
+        writeln!(
+            f,
+            "  \"{label}\": {{ \"rmse\": {:.6e}, \"final_cost\": {:.6e}, \
+             \"iters\": {}, \"wall_s\": {:.3} }},",
+            r.rmse,
+            r.final_cost,
+            r.iters,
+            r.wall.as_secs_f64()
+        )?;
+    }
+    writeln!(
+        f,
+        "  \"recovery\": {{ \"silent_kills\": {}, \"stalls\": {}, \"partitions\": {}, \
+         \"rmse_ratio\": {:.6}, \"wall_overhead\": {:.4} }},",
+        o.silent_kills,
+        o.stalls,
+        o.overhead.partitions,
+        o.overhead.rmse_ratio(),
+        o.overhead.wall_overhead()
+    )?;
+    writeln!(
+        f,
+        "  \"detection\": {{ \"pulse_ticks\": {}, \"expired_structures\": {}, \
+         \"lag_mean_ticks\": {:.3}, \"lag_max_ticks\": {}, \
+         \"false_suspicions\": {}, \"quarantined_blocks\": {} }},",
+        o.stats.pulse_ticks,
+        o.stats.expired_structures,
+        o.stats.detection_lag_mean_ticks,
+        o.stats.detection_lag_max_ticks,
+        o.stats.false_suspicions,
+        o.stats.quarantined_blocks
+    )?;
+    super::write_events_and_close(&mut f, &o.trace)
+}
+
+/// Full liveness harness: run both sides, write `BENCH_liveness.json`,
+/// render.
+pub fn run_liveness() -> Result<String> {
+    let outcome = collect_liveness()?;
+    let out = "BENCH_liveness.json";
+    let note = match write_liveness_json(out, &outcome) {
+        Ok(()) => format!("wrote {out} ({} events)\n", outcome.trace.len()),
+        Err(e) => format!("could not write {out}: {e}\n"),
+    };
+    Ok(format!("{}{note}", render_liveness(&outcome)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::BlockId;
+
+    fn fake_liveness() -> LivenessOutcome {
+        let run = |rmse: f64, wall_ms: u64| LivenessRun {
+            rmse,
+            final_cost: 1.0e-3,
+            iters: 4000,
+            wall: std::time::Duration::from_millis(wall_ms),
+        };
+        LivenessOutcome {
+            grid: (4, 4),
+            clean: run(0.10, 900),
+            faulted: run(0.103, 1080),
+            overhead: RecoveryOverhead {
+                kills: 0,
+                partitions: 1,
+                lost_updates: 0,
+                clean_rmse: 0.10,
+                churned_rmse: 0.103,
+                clean_wall: std::time::Duration::from_millis(900),
+                churned_wall: std::time::Duration::from_millis(1080),
+            },
+            stats: LivenessStats {
+                pulse_ticks: 820,
+                expired_structures: 3,
+                detection_lag_mean_ticks: 42.7,
+                detection_lag_max_ticks: 61,
+                false_suspicions: 0,
+                quarantined_blocks: 0,
+            },
+            silent_kills: 2,
+            stalls: 2,
+            trace: vec![
+                FaultRecord::SilentKill { step: 510, block: BlockId::new(1, 2) },
+                FaultRecord::Stall {
+                    step: 900,
+                    block: BlockId::new(2, 2),
+                    factor: 10_000,
+                    duration_us: 1_000_000,
+                },
+                FaultRecord::Expire {
+                    step: 902,
+                    anchor: BlockId::new(2, 1),
+                    victim: BlockId::new(2, 2),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn liveness_render_reports_detection() {
+        let s = render_liveness(&fake_liveness());
+        assert!(s.contains("fault-free"), "{s}");
+        assert!(s.contains("faulted"), "{s}");
+        assert!(s.contains("rmse ratio"), "{s}");
+        assert!(s.contains("false suspicion"), "{s}");
+        assert!(s.contains("\"event\":\"silent-kill\""), "{s}");
+        assert!(s.contains("\"event\":\"stall\""), "{s}");
+        assert!(s.contains("\"event\":\"expire\""), "{s}");
+    }
+
+    #[test]
+    fn liveness_json_is_balanced_and_complete() {
+        let dir = std::env::temp_dir().join("gridmc-liveness-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_liveness.json");
+        let path = path.to_str().unwrap();
+        write_liveness_json(path, &fake_liveness()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"bench\": \"liveness\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"clean\""));
+        assert!(text.contains("\"faulted\""));
+        assert!(text.contains("\"recovery\""));
+        assert!(text.contains("\"detection\""));
+        assert!(text.contains("\"false_suspicions\": 0"));
+        assert!(text.contains("\"event\":\"expire\""));
+        let opens = text.matches('{').count();
+        let closes = text.matches('}').count();
+        assert_eq!(opens, closes);
+        let obrackets = text.matches('[').count();
+        let cbrackets = text.matches(']').count();
+        assert_eq!(obrackets, cbrackets);
+    }
+}

@@ -1,7 +1,8 @@
 //! Per-scenario bench harnesses (`gridmc bench-table <scenario>`).
 //!
-//! Each elasticity scenario — churn recovery, membership growth,
-//! membership shrink — lives in its own file with the same shape:
+//! Each robustness scenario — churn recovery, membership growth,
+//! membership shrink, decentralized liveness — lives in its own file
+//! with the same shape:
 //! `collect_*` trains the preset's legs and returns a typed outcome,
 //! `render_*` prints the human table, `write_*_json` emits the
 //! machine-readable `BENCH_<scenario>.json` artifact (key sets and
@@ -13,6 +14,7 @@
 
 pub mod churn;
 pub mod grow;
+pub mod liveness;
 pub mod shrink;
 
 use std::io::Write;

@@ -82,12 +82,39 @@
 //! [`DriverMsg::Retired`]. A retired block looks exactly like a
 //! dormant one, so a later [`AgentMsg::Join`] can regrow it, warm from
 //! its own final snapshot.
+//!
+//! **Decentralized liveness** ([`super::liveness`], armed by
+//! [`BlockAgent::with_liveness`]): the agent keeps a local clock
+//! advanced by driver [`AgentMsg::Pulse`]s and an adaptive per-peer
+//! failure detector fed by every wire frame ([`AgentMsg::Sequenced`]
+//! carries the sender) and by idle-time [`AgentMsg::Heartbeat`]s it
+//! emits to its row/column peers. An anchor stuck in `Gather` or
+//! `Scatter` past the configured deadline picks the quiet member,
+//! grants one grace window unless its detector already says `Dead`,
+//! then *expires* the structure itself: a stalled gather is abandoned
+//! (nothing was applied), a stalled scatter is rolled back — own
+//! factors restored from the workspace, members sent
+//! [`AgentMsg::RevertFactors`] fire-and-forget — and
+//! [`DriverMsg::Expired`] reports the casualty with the blamed
+//! suspect. No supervisor is involved. Frames still in flight from an
+//! expired structure are *owed*: per-peer counters consume the late
+//! `Factors`/`PutAck` replies on arrival (per-edge FIFO makes the
+//! counts exact), so they can never be mistaken for replies of a newer
+//! structure. Adoption reverts are idempotent — a member applies a
+//! `RevertFactors` only when it comes from the anchor of its *most
+//! recent* adoption — and every wire frame is deduplicated by sequence
+//! number, so duplicated or replayed deliveries are harmless whether
+//! or not liveness is configured.
+
+use std::collections::HashMap;
 
 use crate::data::DenseMatrix;
 use crate::engine::{Engine, EngineWorkspace, StructureParams};
 use crate::gossip::CheckpointStore;
 use crate::grid::{BlockId, Structure};
 use crate::net::{AgentMsg, DriverMsg, Outbox, Outgoing};
+
+use super::liveness::{DedupWindow, LivenessConfig, LivenessTracker, PeerHealth};
 
 /// What the transport should do with the agent after a message.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,8 +136,10 @@ enum Phase {
         h: Option<(DenseMatrix, DenseMatrix)>,
         v: Option<(DenseMatrix, DenseMatrix)>,
     },
-    /// Anchoring: waiting for the members' `PutAck`s.
-    Scatter { structure: Structure, token: u64, pending: u8 },
+    /// Anchoring: waiting for the members' `PutAck`s. Acks are tracked
+    /// per member so a liveness expiry knows exactly which replies are
+    /// still in flight.
+    Scatter { structure: Structure, token: u64, acked_h: bool, acked_v: bool },
     /// Anchoring an abort: waiting for the members' revert `PutAck`s.
     Revert { token: u64, pending: u8 },
     /// Retiring: waiting for the heirs' hand-off `PutAck`s.
@@ -147,6 +176,38 @@ pub struct BlockAgent {
     /// the three pre-structure factor pairs, so an `Abort` racing the
     /// completion can still revert it.
     last_done: Option<(u64, Structure)>,
+    /// Grid geometry `(p, q)` for row/column heartbeat addressing
+    /// (set by [`Self::with_grid`]; heartbeats are skipped without it).
+    grid: Option<(usize, usize)>,
+    /// Decentralized liveness knobs. `None` (the default) keeps the
+    /// agent deadline-free — exactly the pre-liveness behavior.
+    liveness: Option<LivenessConfig>,
+    /// Per-peer adaptive arrival tracker, fed by every wire frame and
+    /// heartbeat while liveness is armed.
+    tracker: LivenessTracker,
+    /// Wire-sequence dedup window. Always consulted for
+    /// [`AgentMsg::Sequenced`] frames: duplicated deliveries must be
+    /// idempotent whether or not liveness is configured.
+    dedup: DedupWindow,
+    /// Local liveness clock: the maximum [`AgentMsg::Pulse`] tick seen.
+    tick: u64,
+    /// Tick at which the current `Gather`/`Scatter` phase began.
+    phase_started: u64,
+    /// One-shot grace: has the current phase's deadline already been
+    /// extended once?
+    deadline_extended: bool,
+    /// Anchor of the most recent `PutFactors` adoption — the
+    /// idempotency guard for `RevertFactors` (a revert from anyone
+    /// else is stale and must not clobber newer factors).
+    last_adopted_from: Option<BlockId>,
+    /// `Factors` replies still owed from expired gathers, per member.
+    /// Consumed (dropped) on arrival so a late reply cannot be
+    /// mistaken for a reply of a newer structure (per-edge FIFO makes
+    /// the counts exact).
+    owed_factors: HashMap<BlockId, u32>,
+    /// `PutAck`s still owed from fire-and-forget expiry reverts (and
+    /// from the expired structure's own outstanding scatter acks).
+    owed_revert_acks: HashMap<BlockId, u32>,
 }
 
 impl BlockAgent {
@@ -169,7 +230,33 @@ impl BlockAgent {
             active: true,
             doomed: None,
             last_done: None,
+            grid: None,
+            liveness: None,
+            tracker: LivenessTracker::new(),
+            dedup: DedupWindow::default(),
+            tick: 0,
+            phase_started: 0,
+            deadline_extended: false,
+            last_adopted_from: None,
+            owed_factors: HashMap::new(),
+            owed_revert_acks: HashMap::new(),
         }
+    }
+
+    /// Record the grid geometry, enabling row/column heartbeat
+    /// addressing (the transports call this at spawn).
+    pub fn with_grid(mut self, p: usize, q: usize) -> Self {
+        self.grid = Some((p, q));
+        self
+    }
+
+    /// Arm the decentralized failure detector: structure deadlines,
+    /// adaptive peer suspicion and idle-time heartbeats, all clocked by
+    /// driver [`AgentMsg::Pulse`]s. Without this the agent never
+    /// expires anything — the pre-liveness behavior.
+    pub fn with_liveness(mut self, cfg: LivenessConfig) -> Self {
+        self.liveness = Some(cfg);
+        self
     }
 
     /// Spawn this agent dormant: provisioned but logically outside the
@@ -250,6 +337,8 @@ impl BlockAgent {
                 // consumed its Done before dispatching us again) and the
                 // workspace is about to be overwritten.
                 self.last_done = None;
+                self.phase_started = self.tick;
+                self.deadline_extended = false;
                 out.push(Outgoing::Peer(
                     roles.horizontal,
                     AgentMsg::GetFactors { from: self.id },
@@ -267,6 +356,21 @@ impl BlockAgent {
                 ));
             }
             AgentMsg::Factors { from, u, w } => {
+                // A reply owed by an expired gather: consume it so it
+                // cannot leak into a newer structure's slots (per-edge
+                // FIFO guarantees it precedes any newer reply from the
+                // same member).
+                if let Some(n) = self.owed_factors.get_mut(&from) {
+                    *n -= 1;
+                    if *n == 0 {
+                        self.owed_factors.remove(&from);
+                    }
+                    log::debug!(
+                        "{}: dropping Factors owed by an expired gather from {from}",
+                        self.id
+                    );
+                    return AgentStatus::Running;
+                }
                 match std::mem::replace(&mut self.phase, Phase::Idle) {
                     Phase::Gather { structure, params, token, mut h, mut v } => {
                         let roles = structure.roles();
@@ -275,7 +379,12 @@ impl BlockAgent {
                         } else if from == roles.vertical {
                             v = Some((u, w));
                         } else {
-                            debug_assert!(false, "{}: Factors from non-member {from}", self.id);
+                            // Stale traffic from an unrelated, already-
+                            // abandoned exchange; tolerated, not applied.
+                            log::debug!(
+                                "{}: ignoring Factors from non-member {from}",
+                                self.id
+                            );
                         }
                         match (h, v) {
                             (Some(hf), Some(vf)) => {
@@ -288,7 +397,10 @@ impl BlockAgent {
                         }
                     }
                     other => {
-                        debug_assert!(false, "{}: Factors outside Gather", self.id);
+                        // Late reply to an exchange this agent no longer
+                        // remembers (e.g. its anchor role was wiped by a
+                        // crash). Dropping is safe: nothing was applied.
+                        log::debug!("{}: ignoring Factors outside Gather", self.id);
                         self.phase = other;
                     }
                 }
@@ -297,15 +409,26 @@ impl BlockAgent {
                 self.u = u;
                 self.w = w;
                 self.bump_version();
+                self.last_adopted_from = Some(from);
                 out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
             }
             AgentMsg::RevertFactors { from, u, w } => {
-                // The anchor is undoing an aborted structure: restore
-                // the pre-structure factors it sent us and take the
-                // adoption back off the version counter.
-                self.u = u;
-                self.w = w;
-                self.unbump_version();
+                // The anchor is undoing an aborted (or expired)
+                // structure: restore the pre-structure factors it sent
+                // us and take the adoption back off the version
+                // counter. Idempotency guard: only the anchor of the
+                // *most recent* adoption may revert — a stale or
+                // replayed revert must not clobber newer factors. The
+                // ack always goes out so the sender's bookkeeping
+                // balances either way.
+                if self.last_adopted_from == Some(from) {
+                    self.u = u;
+                    self.w = w;
+                    self.unbump_version();
+                    self.last_adopted_from = None;
+                } else {
+                    log::debug!("{}: ignoring stale RevertFactors from {from}", self.id);
+                }
                 out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
             }
             AgentMsg::HandOff { from, u, w } => {
@@ -317,15 +440,44 @@ impl BlockAgent {
                 absorbed |= absorb_midpoint(&mut self.w, &w);
                 if absorbed {
                     self.bump_version();
+                    // The merge superseded any earlier adoption; a
+                    // stale revert must not undo it.
+                    self.last_adopted_from = None;
                 } else {
                     log::warn!("{}: hand-off from {from} had no absorbable factor", self.id);
                 }
                 out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
             }
-            AgentMsg::PutAck { from: _ } => {
+            AgentMsg::PutAck { from } => {
+                // An ack owed by an expired structure (scatter ack or
+                // fire-and-forget revert ack): consume it so it cannot
+                // complete a newer structure's scatter (per-edge FIFO
+                // makes the count exact).
+                if let Some(n) = self.owed_revert_acks.get_mut(&from) {
+                    *n -= 1;
+                    if *n == 0 {
+                        self.owed_revert_acks.remove(&from);
+                    }
+                    log::debug!(
+                        "{}: consumed PutAck owed by an expired structure from {from}",
+                        self.id
+                    );
+                    return AgentStatus::Running;
+                }
                 match std::mem::replace(&mut self.phase, Phase::Idle) {
-                    Phase::Scatter { structure, token, pending } => {
-                        if pending <= 1 {
+                    Phase::Scatter { structure, token, mut acked_h, mut acked_v } => {
+                        let roles = structure.roles();
+                        if from == roles.horizontal {
+                            acked_h = true;
+                        } else if from == roles.vertical {
+                            acked_v = true;
+                        } else {
+                            log::debug!(
+                                "{}: ignoring PutAck from non-member {from}",
+                                self.id
+                            );
+                        }
+                        if acked_h && acked_v {
                             if self.doomed.take() == Some(token) {
                                 self.begin_revert(structure, token, out);
                             } else {
@@ -338,7 +490,7 @@ impl BlockAgent {
                             }
                         } else {
                             self.phase =
-                                Phase::Scatter { structure, token, pending: pending - 1 };
+                                Phase::Scatter { structure, token, acked_h, acked_v };
                         }
                     }
                     Phase::Revert { token, pending } => {
@@ -368,9 +520,12 @@ impl BlockAgent {
                         }
                     }
                     other => {
-                        debug_assert!(
-                            false,
-                            "{}: PutAck outside Scatter/Revert/Handoff",
+                        // A stray ack from an exchange this agent no
+                        // longer tracks (e.g. wiped by a crash between
+                        // scatter and ack). Content-free, safe to drop.
+                        log::debug!(
+                            "{}: ignoring PutAck from {from} outside \
+                             Scatter/Revert/Handoff",
                             self.id
                         );
                         self.phase = other;
@@ -466,6 +621,8 @@ impl BlockAgent {
                     }
                 }
                 self.active = true;
+                // A reborn block starts from a clean adoption history.
+                self.last_adopted_from = None;
                 out.push(Outgoing::Driver(DriverMsg::Joined {
                     from: self.id,
                     version: self.version,
@@ -569,6 +726,10 @@ impl BlockAgent {
                 self.ws = EngineWorkspace::new();
                 self.doomed = None;
                 self.last_done = None;
+                self.last_adopted_from = None;
+                self.deadline_extended = false;
+                self.owed_factors.clear();
+                self.owed_revert_acks.clear();
                 out.push(Outgoing::Driver(DriverMsg::Restarted {
                     from: self.id,
                     version: self.version,
@@ -585,6 +746,34 @@ impl BlockAgent {
                     w,
                 }));
                 return AgentStatus::Retired;
+            }
+            AgentMsg::Heartbeat { from } => {
+                // The arrival is the information: feed the detector.
+                if let Some(cfg) = self.liveness {
+                    self.tracker.observe(from, self.tick, cfg.ewma_alpha);
+                }
+            }
+            AgentMsg::Sequenced { seq, inner } => {
+                // Always deduplicate — duplicated deliveries must be
+                // idempotent whether or not liveness is armed.
+                if !self.dedup.admit(seq) {
+                    log::debug!(
+                        "{}: dropping duplicate wire frame seq {seq} ({})",
+                        self.id,
+                        inner.kind()
+                    );
+                    return AgentStatus::Running;
+                }
+                if let Some(cfg) = self.liveness {
+                    if let Some(src) = inner.source() {
+                        self.tracker.observe(src, self.tick, cfg.ewma_alpha);
+                    }
+                }
+                return self.on_msg(*inner, out);
+            }
+            AgentMsg::Pulse { tick } => {
+                self.tick = self.tick.max(tick);
+                self.on_pulse(out);
             }
         }
         AgentStatus::Running
@@ -632,7 +821,10 @@ impl BlockAgent {
                     roles.vertical,
                     AgentMsg::PutFactors { from: self.id, u: vu, w: vw },
                 ));
-                self.phase = Phase::Scatter { structure, token, pending: 2 };
+                self.phase_started = self.tick;
+                self.deadline_extended = false;
+                self.phase =
+                    Phase::Scatter { structure, token, acked_h: false, acked_v: false };
             }
             Err(e) => {
                 if self.doomed.take() == Some(token) {
@@ -685,6 +877,164 @@ impl BlockAgent {
             AgentMsg::RevertFactors { from: self.id, u: vu, w: vw },
         ));
         self.phase = Phase::Revert { token, pending: 2 };
+    }
+
+    /// One liveness clock tick: check the structure deadline while
+    /// anchoring, emit an idle-time heartbeat otherwise. No-op unless
+    /// [`Self::with_liveness`] armed the detector.
+    fn on_pulse(&mut self, out: &mut Outbox) {
+        let Some(cfg) = self.liveness else { return };
+        if !self.active {
+            return;
+        }
+        let now = self.tick;
+        if matches!(self.phase, Phase::Gather { .. } | Phase::Scatter { .. })
+            && now.saturating_sub(self.phase_started) > cfg.deadline_ticks
+        {
+            // Pick the member to blame: the one whose reply is missing,
+            // or — when either could be the laggard — the one heard
+            // from least recently (ties go to the horizontal member,
+            // keeping blame deterministic).
+            let suspect = match &self.phase {
+                Phase::Gather { structure, h, v, .. } => {
+                    let roles = structure.roles();
+                    match (h.is_some(), v.is_some()) {
+                        (false, true) => roles.horizontal,
+                        (true, false) => roles.vertical,
+                        _ => self
+                            .tracker
+                            .least_recently_heard(roles.horizontal, roles.vertical),
+                    }
+                }
+                Phase::Scatter { structure, acked_h, acked_v, .. } => {
+                    let roles = structure.roles();
+                    match (acked_h, acked_v) {
+                        (false, true) => roles.horizontal,
+                        (true, false) => roles.vertical,
+                        _ => self
+                            .tracker
+                            .least_recently_heard(roles.horizontal, roles.vertical),
+                    }
+                }
+                _ => unreachable!("guarded by the matches! above"),
+            };
+            // One-shot grace: a peer the detector has not yet written
+            // off earns a second deadline window (false suspicions are
+            // costlier than slow detections).
+            if !self.deadline_extended
+                && self.tracker.health(suspect, now, &cfg) != PeerHealth::Dead
+            {
+                self.deadline_extended = true;
+                self.phase_started = now;
+                log::debug!(
+                    "{}: deadline grace for suspect {suspect} (one extension)",
+                    self.id
+                );
+            } else {
+                self.expire(suspect, out);
+            }
+            return;
+        }
+        if matches!(self.phase, Phase::Idle)
+            && cfg.heartbeat_every > 0
+            && now > 0
+            && now % cfg.heartbeat_every == 0
+        {
+            self.heartbeat(out);
+        }
+    }
+
+    /// Give up on the in-flight structure: abandon a stalled gather
+    /// (nothing was applied), roll back a stalled scatter (own factors
+    /// restored from the workspace, members sent fire-and-forget
+    /// [`AgentMsg::RevertFactors`]), and report [`DriverMsg::Expired`]
+    /// blaming `suspect`. Replies still in flight are registered in
+    /// the owed counters so they are consumed on arrival.
+    fn expire(&mut self, suspect: BlockId, out: &mut Outbox) {
+        match std::mem::replace(&mut self.phase, Phase::Idle) {
+            Phase::Gather { structure, token, h, v, .. } => {
+                let roles = structure.roles();
+                if h.is_none() {
+                    *self.owed_factors.entry(roles.horizontal).or_insert(0) += 1;
+                }
+                if v.is_none() {
+                    *self.owed_factors.entry(roles.vertical).or_insert(0) += 1;
+                }
+                log::debug!(
+                    "{}: expired gather of token {token}, blaming {suspect}",
+                    self.id
+                );
+                out.push(Outgoing::Driver(DriverMsg::Expired {
+                    anchor: self.id,
+                    token,
+                    suspect,
+                }));
+            }
+            Phase::Scatter { structure, token, acked_h, acked_v } => {
+                let roles = structure.roles();
+                // The update was adopted locally (and possibly by a
+                // member): restore our own pre-structure factors and
+                // send each member its old pair. Fire-and-forget — a
+                // dead member cannot ack, so no `Revert` phase is
+                // entered; every ack that does arrive (outstanding
+                // scatter acks plus the revert acks) is consumed via
+                // the owed counter.
+                self.ws.swap_output(0, &mut self.u, &mut self.w);
+                self.unbump_version();
+                let (hu, hw) = {
+                    let (u, w) = self.ws.output(1);
+                    (u.clone(), w.clone())
+                };
+                let (vu, vw) = {
+                    let (u, w) = self.ws.output(2);
+                    (u.clone(), w.clone())
+                };
+                out.push(Outgoing::Peer(
+                    roles.horizontal,
+                    AgentMsg::RevertFactors { from: self.id, u: hu, w: hw },
+                ));
+                out.push(Outgoing::Peer(
+                    roles.vertical,
+                    AgentMsg::RevertFactors { from: self.id, u: vu, w: vw },
+                ));
+                *self.owed_revert_acks.entry(roles.horizontal).or_insert(0) +=
+                    1 + u32::from(!acked_h);
+                *self.owed_revert_acks.entry(roles.vertical).or_insert(0) +=
+                    1 + u32::from(!acked_v);
+                log::debug!(
+                    "{}: expired scatter of token {token}, blaming {suspect}",
+                    self.id
+                );
+                out.push(Outgoing::Driver(DriverMsg::Expired {
+                    anchor: self.id,
+                    token,
+                    suspect,
+                }));
+            }
+            other => self.phase = other,
+        }
+    }
+
+    /// Beacon to every row and column peer so an idle stretch still
+    /// feeds their arrival trackers. Requires [`Self::with_grid`].
+    fn heartbeat(&self, out: &mut Outbox) {
+        let Some((p, q)) = self.grid else { return };
+        for x in 0..q {
+            if x != self.id.j {
+                out.push(Outgoing::Peer(
+                    BlockId::new(self.id.i, x),
+                    AgentMsg::Heartbeat { from: self.id },
+                ));
+            }
+        }
+        for x in 0..p {
+            if x != self.id.i {
+                out.push(Outgoing::Peer(
+                    BlockId::new(x, self.id.j),
+                    AgentMsg::Heartbeat { from: self.id },
+                ));
+            }
+        }
     }
 }
 
@@ -1296,5 +1646,324 @@ mod tests {
         let (u2, w2) = run(true);
         assert_eq!(u1, u2);
         assert_eq!(w1, w2);
+    }
+
+    /// Heartbeats effectively off; deadline short enough to trip by
+    /// hand-delivered pulses.
+    fn test_liveness() -> crate::gossip::LivenessConfig {
+        crate::gossip::LivenessConfig {
+            deadline_ticks: 4,
+            heartbeat_every: u64::MAX,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gather_expiry_blames_withheld_member_then_consumes_stale_reply() {
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 21);
+        for a in agents.values_mut() {
+            a.liveness = Some(test_liveness());
+        }
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        let anchor_k = roles.anchor.index(2);
+
+        // Execute; deliver only the horizontal member's reply — the
+        // vertical one is withheld (a straggler).
+        let mut out = Vec::new();
+        agents
+            .get_mut(&anchor_k)
+            .unwrap()
+            .on_msg(AgentMsg::Execute { structure: s, params, token: 5 }, &mut out);
+        let mut withheld = Vec::new();
+        for o in out {
+            let Outgoing::Peer(to, m) = o else { panic!("driver msg in gather") };
+            let mut member_out = Vec::new();
+            agents.get_mut(&to.index(2)).unwrap().on_msg(m, &mut member_out);
+            for r in member_out {
+                let Outgoing::Peer(back, f) = r else { panic!() };
+                assert_eq!(back, roles.anchor);
+                if to == roles.horizontal {
+                    let mut sink = Vec::new();
+                    agents.get_mut(&anchor_k).unwrap().on_msg(f, &mut sink);
+                    assert!(sink.is_empty(), "half a gather must not complete");
+                } else {
+                    withheld.push(f);
+                }
+            }
+        }
+        assert_eq!(withheld.len(), 1);
+
+        // First over-deadline pulse grants the one-shot grace window…
+        let anchor = agents.get_mut(&anchor_k).unwrap();
+        let mut out = Vec::new();
+        anchor.on_msg(AgentMsg::Pulse { tick: 5 }, &mut out);
+        assert!(out.is_empty(), "first overrun earns grace, not expiry");
+        assert!(anchor.deadline_extended);
+        // …the second expires the structure, blaming the empty slot.
+        let mut out = Vec::new();
+        anchor.on_msg(AgentMsg::Pulse { tick: 10 }, &mut out);
+        assert!(
+            matches!(
+                out.as_slice(),
+                [Outgoing::Driver(DriverMsg::Expired { anchor, token: 5, suspect })]
+                    if *anchor == roles.anchor && *suspect == roles.vertical
+            ),
+            "expected Expired blaming the vertical member"
+        );
+        assert_eq!(anchor.owed_factors.get(&roles.vertical), Some(&1));
+
+        // The stale reply arrives late: consumed silently, not applied.
+        let mut out = Vec::new();
+        anchor.on_msg(withheld.pop().unwrap(), &mut out);
+        assert!(out.is_empty());
+        assert!(anchor.owed_factors.is_empty(), "owed counter balanced");
+        assert_eq!(anchor.version(), 0, "an expired gather applies nothing");
+
+        // The fabric still executes the same structure cleanly.
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 6 })],
+        );
+        assert!(matches!(driver.as_slice(), [DriverMsg::Done { token: 6, .. }]));
+    }
+
+    #[test]
+    fn scatter_expiry_reverts_all_three_blocks_bitwise() {
+        // The anchor adopted its update and sent PutFactors, but no ack
+        // ever arrives: expiry must roll the anchor back bitwise and
+        // fire-and-forget reverts that roll the members back too, with
+        // every late ack consumed by the owed counters.
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 22);
+        for a in agents.values_mut() {
+            a.liveness = Some(test_liveness());
+        }
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        let before: Vec<(DenseMatrix, DenseMatrix)> = roles
+            .blocks()
+            .iter()
+            .map(|id| {
+                let a = agents.get(&id.index(2)).unwrap();
+                (a.u.clone(), a.w.clone())
+            })
+            .collect();
+        let anchor_k = roles.anchor.index(2);
+
+        // Gather completes; the two PutFactors are withheld in flight.
+        let mut out = Vec::new();
+        agents
+            .get_mut(&anchor_k)
+            .unwrap()
+            .on_msg(AgentMsg::Execute { structure: s, params, token: 7 }, &mut out);
+        let mut puts: Vec<(BlockId, AgentMsg)> = Vec::new();
+        let mut inbox: Vec<(BlockId, AgentMsg)> = out
+            .into_iter()
+            .map(|o| match o {
+                Outgoing::Peer(to, m) => (to, m),
+                Outgoing::Driver(d) => panic!("unexpected {}", d.kind()),
+            })
+            .collect();
+        while let Some((to, msg)) = inbox.pop() {
+            if matches!(msg, AgentMsg::PutFactors { .. }) {
+                puts.push((to, msg));
+                continue;
+            }
+            let mut out = Vec::new();
+            agents.get_mut(&to.index(2)).unwrap().on_msg(msg, &mut out);
+            for o in out {
+                let Outgoing::Peer(to, m) = o else { panic!("driver msg mid-gather") };
+                inbox.push((to, m));
+            }
+        }
+        assert_eq!(puts.len(), 2, "scatter reached: both PutFactors in flight");
+        assert!(matches!(
+            agents.get(&anchor_k).unwrap().phase,
+            Phase::Scatter { acked_h: false, acked_v: false, .. }
+        ));
+
+        // Grace, then expiry: the anchor reverts itself and sends the
+        // members their pre-structure factors.
+        let anchor = agents.get_mut(&anchor_k).unwrap();
+        let mut out = Vec::new();
+        anchor.on_msg(AgentMsg::Pulse { tick: 5 }, &mut out);
+        assert!(out.is_empty());
+        let mut out = Vec::new();
+        anchor.on_msg(AgentMsg::Pulse { tick: 10 }, &mut out);
+        let mut reverts: Vec<(BlockId, AgentMsg)> = Vec::new();
+        let mut expired = 0;
+        for o in out {
+            match o {
+                Outgoing::Peer(to, m) => {
+                    assert!(matches!(m, AgentMsg::RevertFactors { .. }));
+                    reverts.push((to, m));
+                }
+                Outgoing::Driver(DriverMsg::Expired { token: 7, .. }) => expired += 1,
+                Outgoing::Driver(d) => panic!("unexpected {}", d.kind()),
+            }
+        }
+        assert_eq!((reverts.len(), expired), (2, 1));
+        let (a_u0, a_w0) = &before[0];
+        assert_eq!(&anchor.u, a_u0, "anchor reverts bitwise on expiry");
+        assert_eq!(&anchor.w, a_w0);
+        assert_eq!(anchor.version(), 0);
+        // 2 acks owed per member: the unacked scatter + the revert.
+        assert_eq!(anchor.owed_revert_acks.get(&roles.horizontal), Some(&2));
+        assert_eq!(anchor.owed_revert_acks.get(&roles.vertical), Some(&2));
+
+        // Per-edge FIFO: each member sees its stale PutFactors *before*
+        // the revert. Adopt, then roll back — and every ack that comes
+        // home is consumed by the owed counters.
+        let mut acks = Vec::new();
+        for member in [roles.horizontal, roles.vertical] {
+            let put = puts.iter().position(|(t, _)| *t == member).unwrap();
+            let rev = reverts.iter().position(|(t, _)| *t == member).unwrap();
+            for (to, m) in [puts.remove(put), reverts.remove(rev)] {
+                let mut out = Vec::new();
+                agents.get_mut(&to.index(2)).unwrap().on_msg(m, &mut out);
+                for o in out {
+                    let Outgoing::Peer(back, ack) = o else { panic!() };
+                    assert_eq!(back, roles.anchor);
+                    assert!(matches!(ack, AgentMsg::PutAck { .. }));
+                    acks.push(ack);
+                }
+            }
+        }
+        assert_eq!(acks.len(), 4);
+        for (id, (u0, w0)) in roles.blocks().iter().zip(&before).skip(1) {
+            let a = agents.get(&id.index(2)).unwrap();
+            assert_eq!(&a.u, u0, "member {id} rolled back bitwise");
+            assert_eq!(&a.w, w0);
+            assert_eq!(a.version(), 0);
+        }
+        let anchor = agents.get_mut(&anchor_k).unwrap();
+        for ack in acks {
+            let mut out = Vec::new();
+            anchor.on_msg(ack, &mut out);
+            assert!(out.is_empty(), "owed acks are consumed silently");
+        }
+        assert!(anchor.owed_revert_acks.is_empty(), "every owed ack came home");
+        assert!(matches!(anchor.phase, Phase::Idle));
+
+        // The fabric is intact: the structure executes cleanly again.
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 8 })],
+        );
+        assert!(matches!(driver.as_slice(), [DriverMsg::Done { token: 8, .. }]));
+    }
+
+    #[test]
+    fn sequenced_duplicates_are_dropped() {
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 23);
+        let id = BlockId::new(0, 1);
+        let agent = agents.get_mut(&id.index(2)).unwrap();
+        let frame = || AgentMsg::Sequenced {
+            seq: 41,
+            inner: Box::new(AgentMsg::GetFactors { from: BlockId::new(0, 0) }),
+        };
+        let mut out = Vec::new();
+        agent.on_msg(frame(), &mut out);
+        assert!(
+            matches!(out.as_slice(), [Outgoing::Peer(_, AgentMsg::Factors { .. })]),
+            "first delivery is served"
+        );
+        let mut out = Vec::new();
+        agent.on_msg(frame(), &mut out);
+        assert!(out.is_empty(), "replayed sequence number is dropped");
+        // A fresh sequence number passes again.
+        let mut out = Vec::new();
+        agent.on_msg(
+            AgentMsg::Sequenced {
+                seq: 42,
+                inner: Box::new(AgentMsg::GetFactors { from: BlockId::new(0, 0) }),
+            },
+            &mut out,
+        );
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn idle_heartbeats_follow_cadence_and_pause_when_busy() {
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 24);
+        let cfg = crate::gossip::LivenessConfig {
+            heartbeat_every: 2,
+            deadline_ticks: 1_000,
+            ..Default::default()
+        };
+        for a in agents.values_mut() {
+            a.liveness = Some(cfg);
+            a.grid = Some((2, 2));
+        }
+        let id = BlockId::new(0, 0);
+        let agent = agents.get_mut(&id.index(2)).unwrap();
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::Pulse { tick: 1 }, &mut out);
+        assert!(out.is_empty(), "off-cadence tick stays quiet");
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::Pulse { tick: 2 }, &mut out);
+        let mut beats: Vec<BlockId> = out
+            .iter()
+            .map(|o| match o {
+                Outgoing::Peer(to, AgentMsg::Heartbeat { from }) => {
+                    assert_eq!(*from, id);
+                    *to
+                }
+                other => panic!("expected heartbeat, got {other:?}"),
+            })
+            .collect();
+        beats.sort();
+        assert_eq!(
+            beats,
+            vec![BlockId::new(0, 1), BlockId::new(1, 0)],
+            "corner block beacons its row and column peer exactly once"
+        );
+        // Busy agents piggyback on gossip instead of heartbeating.
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::Execute { structure: s, params, token: 0 }, &mut out);
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::Pulse { tick: 4 }, &mut out);
+        assert!(out.is_empty(), "mid-structure ticks send no heartbeats");
+    }
+
+    #[test]
+    fn unmatched_revert_is_ignored_but_still_acked() {
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 25);
+        let id = BlockId::new(1, 0);
+        let anchor = BlockId::new(0, 0);
+        let agent = agents.get_mut(&id.index(2)).unwrap();
+        let (u0, w0) = (agent.u.clone(), agent.w.clone());
+        let bogus_u = DenseMatrix::from_fn(u0.rows(), u0.cols(), |_, _| 1.0e9);
+        let bogus_w = DenseMatrix::from_fn(w0.rows(), w0.cols(), |_, _| -1.0e9);
+        // No adoption happened on this edge: the revert must not apply…
+        let mut out = Vec::new();
+        agent.on_msg(
+            AgentMsg::RevertFactors { from: anchor, u: bogus_u, w: bogus_w },
+            &mut out,
+        );
+        assert_eq!(agent.u, u0, "stale revert must not clobber factors");
+        assert_eq!(agent.w, w0);
+        assert_eq!(agent.version(), 0);
+        // …but the ack still goes out so the anchor's counters balance.
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Peer(to, AgentMsg::PutAck { from })]
+                if *to == anchor && *from == id
+        ));
     }
 }

@@ -14,12 +14,13 @@
 //! determinism).
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use crate::data::CooMatrix;
 use crate::engine::Engine;
 use crate::grid::{BlockId, GridSpec, Structure};
 use crate::model::FactorState;
-use crate::net::{FaultEvent, FaultPlan, NetConfig};
+use crate::net::{DriverMsg, FaultEvent, FaultPlan, NetConfig};
 use crate::solver::{SolverConfig, SolverReport};
 use crate::{Error, Result};
 
@@ -138,6 +139,186 @@ impl AsyncDriver {
         self
     }
 
+    /// The liveness-mode training loop: the same barrier-free pipeline,
+    /// but nothing blocks forever. The refill skips structures on
+    /// probation, completions are awaited under the pulse clock (each
+    /// receive timeout is one tick, fanned to every live agent), and an
+    /// expired structure — anchor-side deadline, or the driver's own
+    /// token deadline when the anchor itself went quiet — frees its
+    /// blocks and returns to the front of the feed for a retry against
+    /// survivors.
+    fn dispatch_liveness(
+        &self,
+        session: &mut Session<'_>,
+        network: &mut GossipNetwork,
+    ) -> Result<u64> {
+        let cfg = session.liveness.expect("liveness dispatch without a config");
+        let pulse = Duration::from_micros(cfg.pulse_interval_us);
+        let driver_deadline = cfg.driver_deadline_ticks();
+        let max_iters = session.cfg.max_iters;
+        let spec = session.spec;
+        let mut busy = vec![false; spec.num_blocks()];
+        let mut inflight: HashMap<u64, (Structure, u64)> = HashMap::new();
+        let mut queue: Vec<Structure> = session.schedule.shuffled();
+        let mut dispatched = 0u64;
+        let mut completed = 0u64;
+        // Set when a pass could dispatch nothing with the pipeline
+        // empty: the next refill ignores probation. Steps are the
+        // probation clock, so a fully-quarantined feed could otherwise
+        // never make the progress that lapses its own windows.
+        let mut force = false;
+
+        'training: while completed < max_iters {
+            // Membership growth first — same front-loading surgery as
+            // the orchestrated loop (the joiner was schedule-excluded,
+            // so in-flight structures cannot touch it).
+            if session.members.join_due(completed) {
+                session.join_now(network, completed)?;
+                queue = session.schedule.shuffled();
+                let touching: Vec<Structure> = session
+                    .members
+                    .grown_blocks()
+                    .iter()
+                    .flat_map(|b| session.schedule.touching(*b))
+                    .collect();
+                let (mut front, back): (Vec<_>, Vec<_>) =
+                    queue.drain(..).partition(|s| touching.contains(s));
+                front.extend(back);
+                queue = front;
+            }
+            let retire_due = session.members.retire_due(completed);
+            let draining =
+                session.eval_due(completed) || retire_due || dispatched >= max_iters;
+            let mut refilled = 0usize;
+            if !draining {
+                let mut k = 0;
+                while inflight.len() < self.max_inflight && dispatched < max_iters {
+                    if k >= queue.len() {
+                        if queue.is_empty() {
+                            queue = session.schedule.shuffled();
+                            k = 0;
+                            continue;
+                        }
+                        // Everything left conflicts with an in-flight
+                        // block or sits on probation; wait.
+                        break;
+                    }
+                    let s = queue[k];
+                    let blocks = s.blocks();
+                    if blocks.iter().any(|b| busy[b.index(spec.q)])
+                        || (!force && !session.admissible(&s, completed))
+                    {
+                        k += 1;
+                        continue;
+                    }
+                    queue.remove(k);
+                    for b in blocks {
+                        busy[b.index(spec.q)] = true;
+                    }
+                    let params = session.params(&s, dispatched);
+                    let token = network.dispatch(s, params)?;
+                    inflight.insert(token, (s, session.tick));
+                    dispatched += 1;
+                    refilled += 1;
+                }
+            }
+            force = false;
+            // Silent fault injection after the refill: a kill due now
+            // lands on whatever is in flight — and stays wedged until
+            // the grid notices on its own.
+            session.fire_due_decentralized(network, completed)?;
+            if inflight.is_empty() {
+                // Quiesced: flush the expiry batch, then shrink or
+                // evaluate as due.
+                session.flush_expiries(network);
+                if retire_due {
+                    session.retire_now(network, completed)?;
+                    queue = session.schedule.shuffled();
+                    continue;
+                }
+                if session.eval_due(completed) && session.evaluate(network, completed)? {
+                    break 'training;
+                }
+                if refilled == 0 && !draining {
+                    // Nothing dispatchable: keep the pulse clock (and
+                    // the agents' own suspicion state) moving, and
+                    // override probation next pass.
+                    session.tick += 1;
+                    network.pulse(session.tick, |b| session.members.is_live(b))?;
+                    force = true;
+                }
+                continue;
+            }
+            match network.recv_msg_timeout(pulse)? {
+                Some(DriverMsg::Done { token, result, .. }) => {
+                    network.forget_inflight(token);
+                    if let Some((s, _)) = inflight.remove(&token) {
+                        result?;
+                        for b in s.blocks() {
+                            busy[b.index(spec.q)] = false;
+                        }
+                        session.note_success(&s);
+                        completed += 1;
+                    } else {
+                        // Raced a driver-deadline sweep; already
+                        // disowned.
+                        log::debug!("liveness: stale completion (token {token})");
+                    }
+                }
+                Some(DriverMsg::Expired { anchor, token, suspect }) => {
+                    network.forget_inflight(token);
+                    if let Some((s, t0)) = inflight.remove(&token) {
+                        for b in s.blocks() {
+                            busy[b.index(spec.q)] = false;
+                        }
+                        let lag = session.tick.saturating_sub(t0);
+                        session.note_expiry(completed, anchor, suspect, lag);
+                        dispatched -= 1;
+                        queue.insert(0, s);
+                    } else {
+                        log::debug!("liveness: stale expiry (token {token})");
+                    }
+                }
+                Some(other) => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} in the async liveness loop",
+                        other.kind()
+                    )))
+                }
+                None => {
+                    session.tick += 1;
+                    network.pulse(session.tick, |b| session.members.is_live(b))?;
+                    let overdue: Vec<u64> = inflight
+                        .iter()
+                        .filter(|(_, (_, t0))| {
+                            session.tick.saturating_sub(*t0) > driver_deadline
+                        })
+                        .map(|(t, _)| *t)
+                        .collect();
+                    for token in overdue {
+                        let (s, t0) = inflight.remove(&token).expect("collected above");
+                        network.forget_inflight(token);
+                        for b in s.blocks() {
+                            busy[b.index(spec.q)] = false;
+                        }
+                        // The anchor itself went quiet: it is both the
+                        // blamed party and the only address the token
+                        // had.
+                        let anchor = s.roles().anchor;
+                        let lag = session.tick.saturating_sub(t0);
+                        session.note_expiry(completed, anchor, anchor, lag);
+                        dispatched -= 1;
+                        queue.insert(0, s);
+                        log::debug!(
+                            "liveness: driver deadline expired token {token} at {anchor}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(completed)
+    }
+
     /// Train; returns the report and the final (culminated) state.
     pub fn run(
         &self,
@@ -184,6 +365,9 @@ impl DispatchPolicy for AsyncDriver {
     /// The barrier-free training loop: keep the pipeline full, quiesce
     /// only for evaluations and retirements.
     fn dispatch(&self, session: &mut Session<'_>, network: &mut GossipNetwork) -> Result<u64> {
+        if session.liveness.is_some() {
+            return self.dispatch_liveness(session, network);
+        }
         let max_iters = session.cfg.max_iters;
         let spec = session.spec;
         let mut busy = vec![false; spec.num_blocks()];
@@ -281,7 +465,7 @@ impl DispatchPolicy for AsyncDriver {
                         front.extend(back);
                         queue = front;
                     }
-                    event @ FaultEvent::Partition { .. } => {
+                    event @ (FaultEvent::Partition { .. } | FaultEvent::Stall { .. }) => {
                         fire_fault(network, event, completed)?;
                     }
                 }

@@ -36,16 +36,18 @@ use std::sync::Arc;
 use crate::data::CooMatrix;
 use crate::engine::{Engine, StructureParams};
 use crate::grid::{BlockId, BlockPartition, GridSpec, NormalizationCoeffs, Structure};
-use crate::metrics::{CostCurve, Timer};
+use crate::metrics::{CostCurve, LivenessStats, Timer};
 use crate::model::FactorState;
-use crate::net::{self, FaultEvent, FaultPlan, NetConfig};
+use crate::net::{self, FaultEvent, FaultPlan, FaultRecord, NetConfig};
 use crate::solver::{ConvergenceCriterion, ConvergenceVerdict, SolverConfig, SolverReport};
 use crate::{Error, Result};
 
 use super::elastic::{GrowthPlan, Membership, ShrinkPlan};
 use super::network::GossipNetwork;
-use super::supervisor::{check_fault_support, finish_faults, fire_due_faults};
-use super::{CheckpointStore, ScheduleBuilder};
+use super::supervisor::{
+    check_fault_support, finish_faults, fire_due_faults, fire_due_faults_decentralized,
+};
+use super::{CheckpointStore, LivenessConfig, ScheduleBuilder, SuspicionLedger};
 
 /// A gossip training driver: prepares an engine, trains over the agent
 /// network, and returns the report plus the culminated factors. Both
@@ -108,6 +110,26 @@ pub(crate) struct Session<'a> {
     pub(crate) curve: CostCurve,
     next_eval: u64,
     pub(crate) converged: bool,
+    /// `Some` arms the decentralized liveness layer: agents suspect
+    /// and expire on their own, the driver runs the pulse clock, and
+    /// every planned kill fires *silently* (no supervisor mitigation).
+    pub(crate) liveness: Option<LivenessConfig>,
+    /// Probation ledger over expiry-blamed blocks (liveness mode).
+    suspicion: SuspicionLedger,
+    /// The shared pulse clock (liveness mode): one tick per driver
+    /// receive timeout.
+    pub(crate) tick: u64,
+    /// Expiries observed since the last quiescent flush, as
+    /// `(step, anchor, victim)` — sorted before they enter the trace
+    /// so reruns produce byte-identical fault records regardless of
+    /// wall-clock arrival order.
+    pending_expiries: Vec<(u64, BlockId, BlockId)>,
+    /// Dispatch→expiry lags in pulse ticks (detection latency).
+    expiry_lags: Vec<u64>,
+    /// Expiries recorded while no fault had fired yet.
+    false_suspicions: u64,
+    /// Fault events executed so far (dates the false-suspicion count).
+    faults_fired: u64,
 }
 
 impl<'a> Session<'a> {
@@ -140,6 +162,13 @@ impl<'a> Session<'a> {
             curve: CostCurve::default(),
             next_eval: plan.cfg.eval_every,
             converged: false,
+            liveness: plan.net.liveness,
+            suspicion: SuspicionLedger::new(),
+            tick: 0,
+            pending_expiries: Vec::new(),
+            expiry_lags: Vec::new(),
+            false_suspicions: 0,
+            faults_fired: 0,
         };
         let c0 = session.members.total_cost(network, plan.cfg.lambda)?;
         session.curve.push(0, c0);
@@ -189,6 +218,81 @@ impl<'a> Session<'a> {
         fire_due_faults(network, &mut self.faults, step, &mut self.members)
     }
 
+    /// Fire every due fault event *without supervisor mitigation*:
+    /// kills are silent (the grid must notice on its own), partitions
+    /// and stalls inject as usual. Liveness-mode counterpart of
+    /// [`Self::fire_due`].
+    pub(crate) fn fire_due_decentralized(
+        &mut self,
+        network: &mut GossipNetwork,
+        step: u64,
+    ) -> Result<()> {
+        self.faults_fired +=
+            fire_due_faults_decentralized(network, &mut self.faults, step, &mut self.members)?;
+        Ok(())
+    }
+
+    /// May a structure be dispatched at `step` completed updates, given
+    /// the probation ledger? (Trivially yes in orchestrated mode — the
+    /// ledger only ever gains records from expiries.)
+    pub(crate) fn admissible(&self, s: &Structure, step: u64) -> bool {
+        s.blocks().iter().all(|b| self.suspicion.admissible(*b, step))
+    }
+
+    /// Record a clean completion: all three participants leave
+    /// probation (recovered peers are re-admitted on one success).
+    pub(crate) fn note_success(&mut self, s: &Structure) {
+        for b in s.blocks() {
+            self.suspicion.note_success(b);
+        }
+    }
+
+    /// Record a structure expiry blamed on `victim`: strike its
+    /// probation record, queue the trace record for the next quiescent
+    /// flush, and account the detection lag. An expiry before any
+    /// fault has fired is by definition a false suspicion.
+    pub(crate) fn note_expiry(&mut self, step: u64, anchor: BlockId, victim: BlockId, lag: u64) {
+        if let Some(cfg) = self.liveness {
+            self.suspicion.note_expiry(victim, step, &cfg);
+        }
+        self.pending_expiries.push((step, anchor, victim));
+        self.expiry_lags.push(lag);
+        if self.faults_fired == 0 {
+            self.false_suspicions += 1;
+        }
+    }
+
+    /// Flush queued expiries into the network's fault trace at a
+    /// quiescent point, sorted by `(step, anchor, victim)` so the
+    /// trace is byte-identical across reruns whatever order the
+    /// expiries raced in.
+    pub(crate) fn flush_expiries(&mut self, network: &mut GossipNetwork) {
+        if self.pending_expiries.is_empty() {
+            return;
+        }
+        self.pending_expiries.sort_unstable();
+        network.record_expiries(
+            self.pending_expiries
+                .drain(..)
+                .map(|(step, anchor, victim)| FaultRecord::Expire { step, anchor, victim }),
+        );
+    }
+
+    /// Liveness summary for the report; `None` in orchestrated mode.
+    pub(crate) fn liveness_stats(&self, step: u64) -> Option<LivenessStats> {
+        self.liveness.map(|_| {
+            let (mean, max) = LivenessStats::from_lags(&self.expiry_lags);
+            LivenessStats {
+                pulse_ticks: self.tick,
+                expired_structures: self.expiry_lags.len() as u64,
+                detection_lag_mean_ticks: mean,
+                detection_lag_max_ticks: max,
+                false_suspicions: self.false_suspicions,
+                quarantined_blocks: self.suspicion.quarantined(step).len() as u64,
+            }
+        })
+    }
+
     /// Join every dormant block and fire any kill that was deferred
     /// until its victim became a member. Safe on both policies even
     /// with structures in flight: a fresh joiner was schedule-excluded
@@ -196,7 +300,12 @@ impl<'a> Session<'a> {
     /// crash is abort-free.
     pub(crate) fn join_now(&mut self, network: &mut GossipNetwork, step: u64) -> Result<()> {
         for victim in self.members.join_all(network, &mut self.schedule, step)? {
-            network.crash(step, victim)?;
+            if self.liveness.is_some() {
+                network.silent_crash(step, victim)?;
+                self.faults_fired += 1;
+            } else {
+                network.crash(step, victim)?;
+            }
         }
         Ok(())
     }
@@ -227,7 +336,29 @@ impl<'a> Session<'a> {
             );
             self.retire_now(network, step)?;
         }
-        finish_faults(network, &mut self.faults, step, &mut self.members)?;
+        if self.liveness.is_some() {
+            // The decentralized mirror of `finish_faults`: a crash at
+            // the finish line still goes silent — there is nothing in
+            // flight to wedge, but the trace stays honest.
+            if self.faults.front().is_some_and(|e| e.step() <= step) {
+                log::warn!(
+                    "firing fault event(s) after the last training update; the \
+                     rollback is not re-gossiped into the final state"
+                );
+            }
+            self.fire_due_decentralized(network, step)?;
+            if let Some(e) = self.faults.front() {
+                log::debug!(
+                    "{} fault event(s) scheduled past the end of training (first \
+                     due at step {}); skipped",
+                    self.faults.len(),
+                    e.step()
+                );
+            }
+            self.flush_expiries(network);
+        } else {
+            finish_faults(network, &mut self.faults, step, &mut self.members)?;
+        }
         let final_cost = self.members.total_cost(network, self.cfg.lambda)?;
         if self.curve.last().map(|(it, _)| it) != Some(step) {
             self.curve.push(step, final_cost);
@@ -277,10 +408,11 @@ pub(crate) fn run_gossip_driver(
         .and_then(|mut session| {
             let iters = policy.dispatch(&mut session, &mut network)?;
             let final_cost = session.close(&mut network, iters)?;
-            Ok((session.curve, final_cost, iters, session.converged))
+            let liveness = session.liveness_stats(iters);
+            Ok((session.curve, final_cost, iters, session.converged, liveness))
         });
     match outcome {
-        Ok((curve, final_cost, iters, converged)) => {
+        Ok((curve, final_cost, iters, converged, liveness)) => {
             let faults = network.take_trace();
             let state = network.shutdown()?;
             Ok((
@@ -292,6 +424,7 @@ pub(crate) fn run_gossip_driver(
                     wall: timer.elapsed(),
                     engine: engine_name,
                     faults,
+                    liveness,
                 },
                 state,
             ))

@@ -11,15 +11,16 @@
 //! `tests/transport_equivalence.rs`), which also makes executed fault
 //! and membership traces byte-stable across reruns.
 
+use std::collections::HashMap;
 use std::time::Duration;
 
 use crate::data::CooMatrix;
 use crate::engine::{Engine, StructureParams};
-use crate::grid::GridSpec;
+use crate::grid::{GridSpec, Structure};
 use crate::model::FactorState;
-use crate::net::{FaultEvent, FaultPlan, NetConfig};
+use crate::net::{DriverMsg, FaultEvent, FaultPlan, NetConfig};
 use crate::solver::{SolverConfig, SolverReport};
-use crate::Result;
+use crate::{Error, Result};
 
 use super::super::elastic::{GrowthPlan, ShrinkPlan};
 use super::super::network::GossipNetwork;
@@ -112,6 +113,137 @@ impl ParallelDriver {
         self
     }
 
+    /// The liveness-mode training loop: the same conflict-free rounds,
+    /// but nothing blocks forever. Dispatch filters through the
+    /// probation ledger, completions are awaited under the pulse clock
+    /// (each receive timeout is one tick, fanned to every live agent),
+    /// and a structure the grid expires — anchor-side deadline, or the
+    /// driver's own token deadline when the anchor itself went quiet —
+    /// is simply not counted: the next epoch regenerates its round and
+    /// retries it against survivors.
+    fn dispatch_liveness(
+        &self,
+        session: &mut Session<'_>,
+        network: &mut GossipNetwork,
+    ) -> Result<u64> {
+        let cfg = session.liveness.expect("liveness dispatch without a config");
+        let pulse = Duration::from_micros(cfg.pulse_interval_us);
+        let driver_deadline = cfg.driver_deadline_ticks();
+        let max_iters = session.cfg.max_iters;
+        let mut iters = 0u64;
+        // Zero-progress epochs force-admit every structure: if the
+        // ledger ever quarantined the whole grid at once, nothing
+        // could complete and no probation window could lapse (steps
+        // are the probation clock) — overriding it beats livelocking.
+        let mut idle_epochs = 0u32;
+        'training: while iters < max_iters {
+            let epoch_start = iters;
+            'epoch: for round in session.schedule.epoch() {
+                if iters >= max_iters {
+                    break;
+                }
+                if session.members.join_due(iters) {
+                    session.join_now(network, iters)?;
+                    break 'epoch;
+                }
+                if session.members.retire_due(iters) {
+                    session.retire_now(network, iters)?;
+                    break 'epoch;
+                }
+                let take = round.len().min((max_iters - iters) as usize);
+                let round = &round[..take];
+                let force = idle_epochs >= 2;
+                for chunk in round.chunks(self.workers) {
+                    // Chunk barrier: quiescent — flush the expiry batch
+                    // into the trace and fire silent faults due by now.
+                    session.flush_expiries(network);
+                    session.fire_due_decentralized(network, iters)?;
+                    let mut outstanding: HashMap<u64, (Structure, u64)> = HashMap::new();
+                    for s in chunk {
+                        if !force && !session.admissible(s, iters) {
+                            log::debug!(
+                                "liveness: structure at {} skipped on probation (step {iters})",
+                                s.roles().anchor
+                            );
+                            continue;
+                        }
+                        let p = session.params(s, iters);
+                        let token = network.dispatch(*s, p)?;
+                        outstanding.insert(token, (*s, session.tick));
+                    }
+                    let mut completed = 0u64;
+                    while !outstanding.is_empty() {
+                        match network.recv_msg_timeout(pulse)? {
+                            Some(DriverMsg::Done { token, result, .. }) => {
+                                network.forget_inflight(token);
+                                if let Some((s, _)) = outstanding.remove(&token) {
+                                    result?;
+                                    session.note_success(&s);
+                                    completed += 1;
+                                } else {
+                                    // Raced a driver-deadline sweep;
+                                    // the work is already disowned.
+                                    log::debug!("liveness: stale completion (token {token})");
+                                }
+                            }
+                            Some(DriverMsg::Expired { anchor, token, suspect }) => {
+                                network.forget_inflight(token);
+                                if let Some((_, t0)) = outstanding.remove(&token) {
+                                    let lag = session.tick.saturating_sub(t0);
+                                    session.note_expiry(iters, anchor, suspect, lag);
+                                } else {
+                                    log::debug!("liveness: stale expiry (token {token})");
+                                }
+                            }
+                            Some(other) => {
+                                return Err(Error::Gossip(format!(
+                                    "protocol violation: {} while draining a liveness chunk",
+                                    other.kind()
+                                )))
+                            }
+                            None => {
+                                session.tick += 1;
+                                network.pulse(session.tick, |b| session.members.is_live(b))?;
+                                let overdue: Vec<u64> = outstanding
+                                    .iter()
+                                    .filter(|(_, (_, t0))| {
+                                        session.tick.saturating_sub(*t0) > driver_deadline
+                                    })
+                                    .map(|(t, _)| *t)
+                                    .collect();
+                                for token in overdue {
+                                    let (s, t0) =
+                                        outstanding.remove(&token).expect("collected above");
+                                    network.forget_inflight(token);
+                                    // The anchor itself went quiet: it
+                                    // is both the blamed party and the
+                                    // only address the token had.
+                                    let anchor = s.roles().anchor;
+                                    let lag = session.tick.saturating_sub(t0);
+                                    session.note_expiry(iters, anchor, anchor, lag);
+                                    log::debug!(
+                                        "liveness: driver deadline expired token {token} \
+                                         at {anchor}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    iters += completed;
+                }
+                if session.eval_due(iters) && session.evaluate(network, iters)? {
+                    break 'training;
+                }
+            }
+            if iters == epoch_start {
+                idle_epochs += 1;
+            } else {
+                idle_epochs = 0;
+            }
+        }
+        Ok(iters)
+    }
+
     /// Train; returns the report and the final (culminated) state.
     ///
     /// `engine` is prepared here, then shared immutably with all agents.
@@ -160,6 +292,9 @@ impl DispatchPolicy for ParallelDriver {
     /// The training loop proper: conflict-free rounds, a barrier per
     /// `workers`-sized chunk, membership changes at round boundaries.
     fn dispatch(&self, session: &mut Session<'_>, network: &mut GossipNetwork) -> Result<u64> {
+        if session.liveness.is_some() {
+            return self.dispatch_liveness(session, network);
+        }
         let max_iters = session.cfg.max_iters;
         let mut iters = 0u64;
         'training: while iters < max_iters {
@@ -216,6 +351,14 @@ impl DispatchPolicy for ParallelDriver {
                                     step,
                                     a,
                                     b,
+                                    Duration::from_micros(duration_us),
+                                )?;
+                            }
+                            FaultEvent::Stall { step, block, factor, duration_us } => {
+                                network.stall(
+                                    step,
+                                    block,
+                                    factor,
                                     Duration::from_micros(duration_us),
                                 )?;
                             }

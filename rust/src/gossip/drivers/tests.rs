@@ -466,6 +466,93 @@ fn grow_then_shrink_returns_to_the_original_geometry() {
     assert!(state.rmse(&train).is_finite());
 }
 
+// ---------------------------------------------------------------------
+// Decentralized liveness (pulse-clocked dispatch, silent faults).
+
+fn liveness_net(seed: u64) -> NetConfig {
+    NetConfig::sim(SimConfig { latency_us: 10, jitter_us: 5, seed, ..SimConfig::default() })
+        .with_liveness(crate::gossip::LivenessConfig::default())
+}
+
+#[test]
+fn parallel_liveness_survives_silent_kills() {
+    // Silent kills never wedge a gather (mailboxes are FIFO — even a
+    // restarted agent answers previously-queued frames), so the run
+    // must converge with zero expiries and a clean stats block.
+    let (spec, train, test) = problem();
+    let plan = FaultPlan::new().kill(300, BlockId::new(1, 1)).kill(900, BlockId::new(2, 3));
+    let driver = ParallelDriver::new(spec, cfg(), 4)
+        .with_net(liveness_net(7))
+        .with_faults(plan)
+        .with_checkpoints(4);
+    let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert_eq!(report.silent_kill_count(), 2, "{:?}", report.faults);
+    assert_eq!(report.kill_count(), 0, "no supervised kills in liveness mode");
+    let stats = report.liveness.expect("liveness mode reports stats");
+    assert_eq!(stats.false_suspicions, 0, "steady state must not suspect anyone");
+    assert!(
+        report.curve.orders_of_reduction() > 2.0,
+        "orders {}",
+        report.curve.orders_of_reduction()
+    );
+    assert!(state.rmse(&test) < 0.5);
+}
+
+#[test]
+fn async_liveness_expires_a_stalled_anchor_and_recovers() {
+    // A straggler 20000× slowdown wedges whatever it serves for far
+    // longer than the anchor/driver deadlines: the grid must expire the
+    // structure, quarantine the straggler, and keep training without
+    // it until the stall lapses.
+    let (spec, train, test) = problem();
+    let plan = FaultPlan::new().stall(
+        400,
+        BlockId::new(2, 2),
+        20_000,
+        std::time::Duration::from_millis(400),
+    );
+    let driver = AsyncDriver::new(spec, cfg(), 4)
+        .with_net(liveness_net(11))
+        .with_faults(plan)
+        .with_checkpoints(4);
+    let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert_eq!(report.stall_count(), 1, "{:?}", report.faults);
+    let stats = report.liveness.expect("liveness mode reports stats");
+    assert_eq!(stats.false_suspicions, 0, "expiries only after the stall fired");
+    assert!(stats.pulse_ticks > 0, "the pulse clock ran");
+    assert_eq!(
+        report.expire_count() as u64,
+        stats.expired_structures,
+        "trace and stats agree on expiries"
+    );
+    assert!(
+        stats.expired_structures >= 1,
+        "a 20000x straggler must wedge and expire something: {stats:?}"
+    );
+    assert!(report.iters > 1000, "training kept going around the straggler");
+    assert!(state.rmse(&test) < 0.6, "rmse {}", state.rmse(&test));
+}
+
+#[test]
+fn liveness_mode_without_faults_matches_stats_zero() {
+    // Arming liveness on a fault-free run must cost nothing visible:
+    // no expiries, no false suspicions, nobody quarantined.
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 600;
+    c.eval_every = 200;
+    let (report, _) = ParallelDriver::new(spec, c, 4)
+        .with_net(liveness_net(3))
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    let stats = report.liveness.expect("stats present whenever liveness is armed");
+    assert_eq!(stats.expired_structures, 0);
+    assert_eq!(stats.false_suspicions, 0);
+    assert_eq!(stats.quarantined_blocks, 0);
+    assert!(report.faults.is_empty());
+    assert!(report.final_cost.is_finite());
+}
+
 #[test]
 fn shrink_plan_validates_at_run_time() {
     let (spec, train, _) = problem();

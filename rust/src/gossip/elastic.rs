@@ -155,6 +155,13 @@ impl Membership {
         self.retired[b.index(self.q)]
     }
 
+    /// Is `b` currently part of the live membership (neither dormant
+    /// nor retired)? The liveness drivers pulse and schedule only live
+    /// blocks.
+    pub(crate) fn is_live(&self, b: BlockId) -> bool {
+        !self.is_dormant(b) && !self.is_retired(b)
+    }
+
     /// The blocks of the growth plan (the async driver front-loads
     /// their re-gossip sets after the join).
     pub(crate) fn grown_blocks(&self) -> &[BlockId] {

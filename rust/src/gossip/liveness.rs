@@ -1,0 +1,462 @@
+//! L0 of the gossip runtime: decentralized liveness — adaptive peer
+//! suspicion, duplicate suppression, and retry probation.
+//!
+//! **Layer contract.** This module owns the *local* failure-detection
+//! state every party keeps about its peers: the per-peer adaptive
+//! timeout ([`LivenessTracker`]), the sequence-number window that makes
+//! at-least-once delivery idempotent ([`DedupWindow`]), and the
+//! driver-side probation ledger that backs off suspect blocks
+//! ([`SuspicionLedger`]). It is pure bookkeeping over ticks and
+//! sequence numbers: it may not touch transports, agents, or drivers,
+//! and nothing here blocks or spawns.
+//!
+//! Everything is measured in *ticks* of the driver's pulse clock (see
+//! [`LivenessConfig::pulse_interval_us`]), not wall time, so the same
+//! seeded run produces the same suspicions on every machine.
+//!
+//! The suspicion rule is a simplified phi-accrual detector: instead of
+//! integrating a full inter-arrival distribution, each peer keeps an
+//! exponentially-weighted moving average of its inter-arrival gap and
+//! flags `Suspect` / `Dead` when the current silence exceeds a
+//! configured multiple of that average. Ratio thresholds keep the
+//! arithmetic integer-friendly and deterministic while preserving the
+//! property that matters: a chronically slow peer earns a long leash,
+//! a normally-chatty peer that goes quiet is suspected fast.
+
+use std::collections::HashMap;
+
+use crate::grid::BlockId;
+
+/// Tunables for the decentralized liveness layer. All intervals are in
+/// pulse ticks except [`Self::pulse_interval_us`], which defines the
+/// tick itself.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LivenessConfig {
+    /// Wall-clock length of one driver pulse tick, in microseconds.
+    /// This is the only wall-time knob: the driver sleeps this long in
+    /// `recv_timeout` before advancing its tick counter, and every
+    /// other field counts these ticks.
+    pub pulse_interval_us: u64,
+    /// Ticks an anchor waits mid-structure before declaring the
+    /// structure expired and blaming the quiet member.
+    pub deadline_ticks: u64,
+    /// An idle agent sends a heartbeat to its row/column peers every
+    /// this many ticks (busy agents piggyback liveness on gossip
+    /// frames instead).
+    pub heartbeat_every: u64,
+    /// EWMA smoothing factor for per-peer inter-arrival gaps,
+    /// in (0, 1]. Higher adapts faster, lower remembers longer.
+    pub ewma_alpha: f64,
+    /// A peer is `Suspect` once its silence exceeds this multiple of
+    /// its smoothed inter-arrival gap.
+    pub suspect_factor: f64,
+    /// A peer is `Dead` once its silence exceeds this multiple of its
+    /// smoothed inter-arrival gap. Must exceed `suspect_factor`.
+    pub dead_factor: f64,
+    /// First probation window (in completed-update steps) after a
+    /// block's first strike; doubles per consecutive strike.
+    pub probation_base: u64,
+    /// Probation windows stop doubling here.
+    pub probation_max: u64,
+    /// The driver abandons an outstanding token after
+    /// `deadline_ticks * driver_deadline_factor` ticks — a backstop
+    /// for the case where the *anchor itself* died and can no longer
+    /// report the expiry.
+    pub driver_deadline_factor: u64,
+}
+
+impl Default for LivenessConfig {
+    fn default() -> Self {
+        Self {
+            pulse_interval_us: 500,
+            deadline_ticks: 40,
+            heartbeat_every: 8,
+            ewma_alpha: 0.2,
+            suspect_factor: 4.0,
+            dead_factor: 10.0,
+            probation_base: 32,
+            probation_max: 1024,
+            driver_deadline_factor: 3,
+        }
+    }
+}
+
+impl LivenessConfig {
+    /// The driver-side token deadline: strictly longer than the
+    /// anchor-side structure deadline, so the anchor always gets first
+    /// say and the driver only steps in for a dead anchor.
+    pub fn driver_deadline_ticks(&self) -> u64 {
+        self.deadline_ticks.saturating_mul(self.driver_deadline_factor.max(1))
+    }
+}
+
+/// What a party locally believes about a peer. Purely local and
+/// monotone in silence: beliefs revert to `Alive` the instant the peer
+/// is heard again.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerHealth {
+    /// Heard from recently (or never expected yet).
+    Alive,
+    /// Quiet past `suspect_factor` × its usual gap.
+    Suspect,
+    /// Quiet past `dead_factor` × its usual gap.
+    Dead,
+}
+
+/// Per-peer arrival bookkeeping behind the health verdicts.
+#[derive(Debug, Clone, Copy)]
+struct PeerRecord {
+    /// Tick of the most recent frame or heartbeat from this peer.
+    last_heard: u64,
+    /// Smoothed inter-arrival gap, in ticks (never below 1).
+    ewma_gap: f64,
+}
+
+/// The adaptive failure detector one party keeps over its peers.
+///
+/// Feed it every liveness observation (`observe`) and query health
+/// against the current tick (`health`). A peer never heard from is
+/// `Alive` — suspicion requires evidence of a rhythm that stopped, so
+/// a freshly-joined grid starts from a clean slate instead of a storm
+/// of false suspicions.
+#[derive(Debug, Default)]
+pub struct LivenessTracker {
+    peers: HashMap<BlockId, PeerRecord>,
+}
+
+impl LivenessTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that `peer` was heard at `tick` (gossip frame or
+    /// heartbeat — the detector does not care which).
+    pub fn observe(&mut self, peer: BlockId, tick: u64, alpha: f64) {
+        match self.peers.get_mut(&peer) {
+            None => {
+                self.peers.insert(peer, PeerRecord { last_heard: tick, ewma_gap: 1.0 });
+            }
+            Some(rec) => {
+                let gap = tick.saturating_sub(rec.last_heard).max(1) as f64;
+                rec.ewma_gap = alpha * gap + (1.0 - alpha) * rec.ewma_gap;
+                rec.last_heard = tick;
+            }
+        }
+    }
+
+    /// The current belief about `peer` at tick `now`.
+    pub fn health(&self, peer: BlockId, now: u64, cfg: &LivenessConfig) -> PeerHealth {
+        let Some(rec) = self.peers.get(&peer) else {
+            return PeerHealth::Alive;
+        };
+        // The leash is the smoothed gap, but never shorter than the
+        // heartbeat period: an idle-but-alive peer is only obliged to
+        // speak that often.
+        let base = rec.ewma_gap.max(cfg.heartbeat_every as f64).max(1.0);
+        let silence = now.saturating_sub(rec.last_heard) as f64;
+        if silence > cfg.dead_factor * base {
+            PeerHealth::Dead
+        } else if silence > cfg.suspect_factor * base {
+            PeerHealth::Suspect
+        } else {
+            PeerHealth::Alive
+        }
+    }
+
+    /// Of two peers, the one heard from least recently — the natural
+    /// blame target when a structure stalls in a phase where either
+    /// could be the laggard. A never-heard peer counts as heard at
+    /// tick 0. Ties go to `a` (callers pass the horizontal peer first,
+    /// making blame deterministic).
+    pub fn least_recently_heard(&self, a: BlockId, b: BlockId) -> BlockId {
+        let heard = |p: BlockId| self.peers.get(&p).map(|r| r.last_heard).unwrap_or(0);
+        if heard(b) < heard(a) {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// Tick of the most recent observation of `peer`, if any.
+    pub fn last_heard(&self, peer: BlockId) -> Option<u64> {
+        self.peers.get(&peer).map(|r| r.last_heard)
+    }
+
+    /// Drop all state about `peer` (it retired or was reborn).
+    pub fn forget(&mut self, peer: BlockId) {
+        self.peers.remove(&peer);
+    }
+}
+
+/// Sliding window of recently-seen wire sequence numbers, making
+/// retransmission-prone links idempotent at the receiver.
+///
+/// Sequence numbers are globally unique per transport (one atomic
+/// counter stamps every frame), so one window per agent suffices —
+/// there is no per-edge ambiguity. The window holds the most recent
+/// `cap` admitted numbers; anything inside the window is a duplicate
+/// and rejected, anything else is admitted. A genuinely new frame
+/// older than the window's reach would be readmitted, but the sim
+/// link's duplicate copy trails the original by a bounded delay, so
+/// in practice the window only needs to span a few round-trips.
+#[derive(Debug)]
+pub struct DedupWindow {
+    cap: usize,
+    order: std::collections::VecDeque<u64>,
+    seen: std::collections::HashSet<u64>,
+}
+
+impl Default for DedupWindow {
+    fn default() -> Self {
+        Self::new(128)
+    }
+}
+
+impl DedupWindow {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            order: std::collections::VecDeque::with_capacity(cap.max(1)),
+            seen: std::collections::HashSet::with_capacity(cap.max(1)),
+        }
+    }
+
+    /// `true` if `seq` is new (admit the frame), `false` if it is a
+    /// duplicate (drop the frame).
+    pub fn admit(&mut self, seq: u64) -> bool {
+        if self.seen.contains(&seq) {
+            return false;
+        }
+        if self.order.len() == self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.seen.remove(&old);
+            }
+        }
+        self.order.push_back(seq);
+        self.seen.insert(seq);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+/// Driver-side probation ledger: blocks that caused structure expiries
+/// are quarantined for exponentially growing windows of completed
+/// updates, then probed again. One clean completion clears the record
+/// — recovery is cheap by design, because a false suspicion must not
+/// permanently shrink the grid.
+#[derive(Debug, Default)]
+pub struct SuspicionLedger {
+    records: HashMap<BlockId, Strikes>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Strikes {
+    strikes: u32,
+    probation_until: u64,
+}
+
+impl SuspicionLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a structure expiry blamed on `block` at completed-update
+    /// count `step`. The probation window doubles per consecutive
+    /// strike: `base`, `2·base`, … capped at `max`.
+    pub fn note_expiry(&mut self, block: BlockId, step: u64, cfg: &LivenessConfig) {
+        let rec = self
+            .records
+            .entry(block)
+            .or_insert(Strikes { strikes: 0, probation_until: 0 });
+        rec.strikes = rec.strikes.saturating_add(1);
+        let shift = (rec.strikes - 1).min(5);
+        let window = cfg
+            .probation_base
+            .saturating_mul(1u64 << shift)
+            .min(cfg.probation_max.max(cfg.probation_base));
+        rec.probation_until = step.saturating_add(window);
+    }
+
+    /// Record a clean completion involving `block`: all strikes are
+    /// forgiven and the block leaves probation immediately.
+    pub fn note_success(&mut self, block: BlockId) {
+        self.records.remove(&block);
+    }
+
+    /// May a structure touching `block` be dispatched at `step`?
+    /// Blocks never struck, and struck blocks whose probation window
+    /// has lapsed, are admissible (lapsed probation is the probe that
+    /// re-admits a recovered peer).
+    pub fn admissible(&self, block: BlockId, step: u64) -> bool {
+        match self.records.get(&block) {
+            None => true,
+            Some(rec) => step >= rec.probation_until,
+        }
+    }
+
+    /// Blocks currently under probation at `step`, for reporting.
+    pub fn quarantined(&self, step: u64) -> Vec<BlockId> {
+        let mut v: Vec<BlockId> = self
+            .records
+            .iter()
+            .filter(|(_, r)| step < r.probation_until)
+            .map(|(b, _)| *b)
+            .collect();
+        v.sort_by_key(|b| (b.i, b.j));
+        v
+    }
+
+    /// Total strikes recorded against `block` so far.
+    pub fn strikes(&self, block: BlockId) -> u32 {
+        self.records.get(&block).map(|r| r.strikes).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(i: usize, j: usize) -> BlockId {
+        BlockId::new(i, j)
+    }
+
+    #[test]
+    fn config_defaults_are_ordered_sanely() {
+        let cfg = LivenessConfig::default();
+        assert!(cfg.suspect_factor < cfg.dead_factor);
+        assert!(cfg.probation_base <= cfg.probation_max);
+        assert_eq!(cfg.driver_deadline_ticks(), cfg.deadline_ticks * 3);
+        // A zero factor never collapses the driver deadline below the
+        // anchor deadline.
+        let degenerate = LivenessConfig { driver_deadline_factor: 0, ..cfg };
+        assert_eq!(degenerate.driver_deadline_ticks(), degenerate.deadline_ticks);
+    }
+
+    #[test]
+    fn never_heard_peers_are_presumed_alive() {
+        let t = LivenessTracker::new();
+        let cfg = LivenessConfig::default();
+        assert_eq!(t.health(b(0, 0), 10_000, &cfg), PeerHealth::Alive);
+        assert_eq!(t.last_heard(b(0, 0)), None);
+    }
+
+    #[test]
+    fn silence_walks_alive_suspect_dead_and_recovers() {
+        let cfg = LivenessConfig::default();
+        let mut t = LivenessTracker::new();
+        let p = b(1, 2);
+        // A steady rhythm: one frame per tick for a while.
+        for tick in 0..20 {
+            t.observe(p, tick, cfg.ewma_alpha);
+        }
+        // ewma_gap ≈ 1, but the leash floor is heartbeat_every = 8, so
+        // suspicion starts past 4×8 = 32 ticks of silence and death
+        // past 10×8 = 80.
+        assert_eq!(t.health(p, 19 + 30, &cfg), PeerHealth::Alive);
+        assert_eq!(t.health(p, 19 + 40, &cfg), PeerHealth::Suspect);
+        assert_eq!(t.health(p, 19 + 100, &cfg), PeerHealth::Dead);
+        // One frame resurrects it instantly.
+        t.observe(p, 19 + 100, cfg.ewma_alpha);
+        assert_eq!(t.health(p, 19 + 101, &cfg), PeerHealth::Alive);
+    }
+
+    #[test]
+    fn slow_peers_earn_longer_leashes() {
+        let cfg = LivenessConfig::default();
+        let mut fast = LivenessTracker::new();
+        let mut slow = LivenessTracker::new();
+        let p = b(0, 1);
+        for k in 0..50u64 {
+            fast.observe(p, k * 2, cfg.ewma_alpha);
+            slow.observe(p, k * 40, cfg.ewma_alpha);
+        }
+        let (fast_end, slow_end) = (49 * 2, 49 * 40);
+        // 100 ticks of silence: far past the fast peer's leash
+        // (4 × max(2, 8) = 32) but within the slow peer's
+        // (4 × ≈40 = ≈160).
+        assert_eq!(fast.health(p, fast_end + 100, &cfg), PeerHealth::Dead);
+        assert_eq!(slow.health(p, slow_end + 100, &cfg), PeerHealth::Alive);
+        assert_eq!(slow.health(p, slow_end + 200, &cfg), PeerHealth::Suspect);
+    }
+
+    #[test]
+    fn blame_goes_to_the_least_recently_heard() {
+        let cfg = LivenessConfig::default();
+        let mut t = LivenessTracker::new();
+        let (h, v) = (b(0, 1), b(1, 0));
+        // Neither heard: tie goes to the first argument (horizontal).
+        assert_eq!(t.least_recently_heard(h, v), h);
+        t.observe(h, 10, cfg.ewma_alpha);
+        assert_eq!(t.least_recently_heard(h, v), v, "never-heard counts as tick 0");
+        t.observe(v, 30, cfg.ewma_alpha);
+        assert_eq!(t.least_recently_heard(h, v), h);
+        t.forget(h);
+        assert_eq!(t.least_recently_heard(h, v), h, "forgotten resets to tick 0");
+    }
+
+    #[test]
+    fn dedup_window_rejects_recent_duplicates_only() {
+        let mut w = DedupWindow::new(4);
+        assert!(w.is_empty());
+        for s in 0..4u64 {
+            assert!(w.admit(s), "fresh seq {s}");
+        }
+        assert_eq!(w.len(), 4);
+        for s in 0..4u64 {
+            assert!(!w.admit(s), "duplicate seq {s}");
+        }
+        // Admitting past the cap evicts the oldest entries...
+        assert!(w.admit(4));
+        assert!(w.admit(5));
+        // ...so very old numbers are (by design) admissible again,
+        assert!(w.admit(0));
+        // while everything still inside the window stays rejected.
+        assert!(!w.admit(3));
+        assert!(!w.admit(5));
+    }
+
+    #[test]
+    fn probation_doubles_per_strike_and_caps() {
+        let cfg = LivenessConfig {
+            probation_base: 10,
+            probation_max: 35,
+            ..LivenessConfig::default()
+        };
+        let mut ledger = SuspicionLedger::new();
+        let p = b(2, 3);
+        assert!(ledger.admissible(p, 0));
+        ledger.note_expiry(p, 100, &cfg);
+        assert_eq!(ledger.strikes(p), 1);
+        assert!(!ledger.admissible(p, 105), "strike 1: 10-step window");
+        assert!(ledger.admissible(p, 110));
+        ledger.note_expiry(p, 110, &cfg);
+        assert!(!ledger.admissible(p, 129), "strike 2: 20-step window");
+        assert!(ledger.admissible(p, 130));
+        ledger.note_expiry(p, 130, &cfg);
+        assert!(!ledger.admissible(p, 164), "strike 3: capped at 35");
+        assert!(ledger.admissible(p, 165));
+        assert_eq!(ledger.quarantined(140), vec![p]);
+        assert!(ledger.quarantined(200).is_empty());
+    }
+
+    #[test]
+    fn one_success_clears_all_strikes() {
+        let cfg = LivenessConfig::default();
+        let mut ledger = SuspicionLedger::new();
+        let p = b(0, 0);
+        for _ in 0..4 {
+            ledger.note_expiry(p, 50, &cfg);
+        }
+        assert!(ledger.strikes(p) == 4 && !ledger.admissible(p, 60));
+        ledger.note_success(p);
+        assert_eq!(ledger.strikes(p), 0);
+        assert!(ledger.admissible(p, 60), "forgiveness is immediate and total");
+    }
+}

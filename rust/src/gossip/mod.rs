@@ -16,7 +16,11 @@
 //! and live blocks retire gracefully mid-run ([`ShrinkPlan`] — drain,
 //! final snapshot to the durable sink, row/column factors handed to
 //! surviving heir blocks over the wire, schedule regenerated for the
-//! shrunk geometry). Executed actions land in a replayable
+//! shrunk geometry). With a [`LivenessConfig`] the grid also detects
+//! failures *itself* — heartbeats piggybacked on gossip, per-peer
+//! adaptive timeouts, anchor-side structure deadlines with
+//! decentralized abort, and probation-based degraded scheduling — with
+//! no supervisor fiat. Executed actions land in a replayable
 //! [`crate::net::FaultRecord`] trace on the
 //! [`crate::solver::SolverReport`].
 //!
@@ -26,6 +30,7 @@
 //! |---|---|---|---|
 //! | `agent` | L0: block state machines | engine, checkpoints | transports, policy |
 //! | `checkpoint` | L0: snapshot durability | codec framing, fs | agents, drivers |
+//! | `liveness` | L0: suspicion/dedup/probation bookkeeping | grid ids | transports, agents, drivers |
 //! | `scheduler` | L0: conflict-free schedules | grid enumeration | network, membership |
 //! | `network` | L1: transport-facing mechanisms | `crate::net`, agents | plans, membership |
 //! | `supervisor` | L2: crash/abort/partition/join/retire | network, membership | dispatch, schedules |
@@ -41,6 +46,7 @@ mod agent;
 mod checkpoint;
 mod drivers;
 mod elastic;
+mod liveness;
 mod network;
 mod scheduler;
 mod supervisor;
@@ -49,5 +55,6 @@ pub use agent::{AgentStatus, BlockAgent};
 pub use checkpoint::{Checkpoint, CheckpointSink, CheckpointStore, DiskSink, MemorySink};
 pub use drivers::{AsyncDriver, Driver, ParallelDriver};
 pub use elastic::{GrowthPlan, ShrinkPlan};
+pub use liveness::{DedupWindow, LivenessConfig, LivenessTracker, PeerHealth, SuspicionLedger};
 pub use network::GossipNetwork;
 pub use scheduler::{conflicts, ScheduleBuilder};

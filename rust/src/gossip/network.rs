@@ -107,6 +107,40 @@ impl GossipNetwork {
         self.transport.recv()
     }
 
+    /// Backlog-aware receive with a deadline: `Ok(None)` means the
+    /// timeout elapsed with nothing to deliver — the liveness drivers
+    /// treat that as one pulse tick.
+    pub(super) fn recv_msg_timeout(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Result<Option<DriverMsg>> {
+        if let Some(m) = self.backlog.pop_front() {
+            return Ok(Some(m));
+        }
+        self.transport.recv_timeout(timeout)
+    }
+
+    /// Advance every live agent's liveness clock to `tick`
+    /// ([`AgentMsg::Pulse`]): deadlines are checked and idle-time
+    /// heartbeats fire against this shared tick count. Dead mailboxes
+    /// are skipped (their owners are being restarted).
+    pub fn pulse(&mut self, tick: u64, live: impl Fn(BlockId) -> bool) -> Result<()> {
+        for id in self.spec.blocks().filter(|b| live(*b)) {
+            if let Err(e) = self.transport.send(id, AgentMsg::Pulse { tick }) {
+                log::debug!("pulse {tick}: {e}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a token from the in-flight set without a completion — the
+    /// bookkeeping half of an expiry (the anchor already rolled the
+    /// structure back, or the driver's token deadline gave up on a
+    /// dead anchor).
+    pub(super) fn forget_inflight(&mut self, token: u64) -> Option<Structure> {
+        self.inflight.remove(&token)
+    }
+
     /// Transport label (for reports).
     pub fn transport_name(&self) -> &'static str {
         self.transport.name()
@@ -195,10 +229,21 @@ impl GossipNetwork {
             self.transport.send(*id, AgentMsg::GetCost { lambda })?;
         }
         let mut per_block: Vec<Option<f64>> = vec![None; self.spec.num_blocks()];
-        for _ in 0..ids.len() {
+        // Stale completions/expiries from a token the driver deadline
+        // disowned (liveness mode) can surface here; they are parked —
+        // locally first, so re-polling the backlog cannot spin on them
+        // — and dropped by the dispatch loop later.
+        let mut parked: Vec<DriverMsg> = Vec::new();
+        let mut got = 0usize;
+        while got < ids.len() {
             match self.recv_msg()? {
                 DriverMsg::Cost { from, cost } => {
                     per_block[from.index(self.spec.q)] = Some(cost?);
+                    got += 1;
+                }
+                stale @ (DriverMsg::Done { .. } | DriverMsg::Expired { .. }) => {
+                    log::debug!("cost collection: parking stale {}", stale.kind());
+                    parked.push(stale);
                 }
                 other => {
                     return Err(Error::Gossip(format!(
@@ -208,6 +253,7 @@ impl GossipNetwork {
                 }
             }
         }
+        self.backlog.extend(parked);
         let mut acc = 0.0;
         for id in &ids {
             acc += per_block[id.index(self.spec.q)]

@@ -116,7 +116,9 @@ impl GossipNetwork {
                     self.trace.push(FaultRecord::Join { step, block, version, warm });
                     return Ok(());
                 }
-                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
+                parked @ (DriverMsg::Done { .. } | DriverMsg::Expired { .. }) => {
+                    self.backlog.push_back(parked)
+                }
                 other => {
                     return Err(Error::Gossip(format!(
                         "protocol violation: {} while awaiting the join of {block}",
@@ -155,7 +157,9 @@ impl GossipNetwork {
                     self.trace.push(FaultRecord::Retire { step, block, version, handoffs });
                     return Ok(());
                 }
-                done @ DriverMsg::Done { .. } => self.backlog.push_back(done),
+                parked @ (DriverMsg::Done { .. } | DriverMsg::Expired { .. }) => {
+                    self.backlog.push_back(parked)
+                }
                 other => {
                     return Err(Error::Gossip(format!(
                         "protocol violation: {} while awaiting the retirement of {block}",
@@ -185,6 +189,67 @@ impl GossipNetwork {
         Ok(())
     }
 
+    /// Turn `block` into a straggler: every sim-link frame to or from
+    /// it is delayed `factor`× for `duration` of the link's virtual
+    /// time (sim transports only). Nothing is announced to the grid —
+    /// under decentralized liveness its anchors must notice the
+    /// silence themselves and expire the structures it is wedging.
+    pub fn stall(
+        &mut self,
+        step: u64,
+        block: BlockId,
+        factor: u32,
+        duration: Duration,
+    ) -> Result<()> {
+        self.transport.inject_fault(LinkFault::Slowdown { block, factor, duration })?;
+        self.trace.push(FaultRecord::Stall {
+            step,
+            block,
+            factor,
+            duration_us: duration.as_micros() as u64,
+        });
+        Ok(())
+    }
+
+    /// Crash `block` with **no supervisor mitigation**: no abort of the
+    /// structure it may be serving, no redispatch, no announcement.
+    /// The agent itself restores from its checkpoint sink (cold when
+    /// uncheckpointed) and rejoins the gossip; everything in flight is
+    /// left for the decentralized liveness layer to detect and expire.
+    /// Synchronous only in the narrow sense that it waits for the
+    /// replacement agent to be live (the restart is instant relative
+    /// to the grid — the *detection* of lost work is what stays
+    /// decentralized). Completions and expiries racing the restart are
+    /// parked for the driver loop.
+    pub fn silent_crash(&mut self, step: u64, block: BlockId) -> Result<()> {
+        self.transport.send(block, AgentMsg::Crash)?;
+        loop {
+            match self.transport.recv()? {
+                DriverMsg::Restarted { from, .. } if from == block => {
+                    self.trace.push(FaultRecord::SilentKill { step, block });
+                    return Ok(());
+                }
+                parked @ (DriverMsg::Done { .. } | DriverMsg::Expired { .. }) => {
+                    self.backlog.push_back(parked)
+                }
+                other => {
+                    return Err(Error::Gossip(format!(
+                        "protocol violation: {} while awaiting the silent restart of \
+                         {block}",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Append anchor-expiry records a driver loop accumulated (and
+    /// sorted — determinism is the caller's contract) to the
+    /// replayable trace.
+    pub(crate) fn record_expiries(&mut self, records: impl Iterator<Item = FaultRecord>) {
+        self.trace.extend(records);
+    }
+
     /// Executed fault actions so far, in firing order.
     pub fn fault_trace(&self) -> &[FaultRecord] {
         &self.trace
@@ -196,12 +261,13 @@ impl GossipNetwork {
     }
 }
 
-/// Upfront supervision check shared by both drivers: partitions need a
-/// transport with simulated links.
+/// Upfront supervision check shared by both drivers: link-layer events
+/// (partitions, straggler stalls) need a transport with simulated
+/// links.
 pub(crate) fn check_fault_support(network: &GossipNetwork, plan: &FaultPlan) -> Result<()> {
-    if plan.has_partitions() && network.wire_stats().is_none() {
+    if plan.needs_sim() && network.wire_stats().is_none() {
         return Err(Error::Config(
-            "fault plans with link partitions require a sim transport \
+            "fault plans with link partitions or stalls require a sim transport \
              (transport = \"sim\" or \"sim-multiplex\")"
                 .into(),
         ));
@@ -218,6 +284,9 @@ pub(crate) fn fire_fault(network: &mut GossipNetwork, event: FaultEvent, step: u
         FaultEvent::Kill { block, .. } => network.crash(step, block).map(|_| ()),
         FaultEvent::Partition { a, b, duration_us, .. } => {
             network.partition(step, a, b, Duration::from_micros(duration_us))
+        }
+        FaultEvent::Stall { block, factor, duration_us, .. } => {
+            network.stall(step, block, factor, Duration::from_micros(duration_us))
         }
     }
 }
@@ -243,6 +312,40 @@ pub(crate) fn fire_due_faults(
         fire_fault(network, event, step)?;
     }
     Ok(())
+}
+
+/// Decentralized variant of [`fire_due_faults`]: kills fire *silently*
+/// (no abort, no redispatch — the liveness layer must detect the loss
+/// on its own), partitions and stalls inject as usual; the same
+/// defer/drop rules apply to kills aimed at dormant or retired blocks.
+/// Returns how many events fired, so the driver can date its
+/// false-suspicion counter.
+pub(crate) fn fire_due_faults_decentralized(
+    network: &mut GossipNetwork,
+    queue: &mut VecDeque<FaultEvent>,
+    step: u64,
+    members: &mut Membership,
+) -> Result<u64> {
+    let mut fired = 0u64;
+    while queue.front().is_some_and(|e| e.step() <= step) {
+        let event = queue.pop_front().expect("peeked");
+        match event {
+            FaultEvent::Kill { block, .. } => {
+                if !members.kill_admissible(block) {
+                    continue;
+                }
+                network.silent_crash(step, block)?;
+            }
+            FaultEvent::Partition { a, b, duration_us, .. } => {
+                network.partition(step, a, b, Duration::from_micros(duration_us))?;
+            }
+            FaultEvent::Stall { block, factor, duration_us, .. } => {
+                network.stall(step, block, factor, Duration::from_micros(duration_us))?;
+            }
+        }
+        fired += 1;
+    }
+    Ok(fired)
 }
 
 /// End-of-training sweep: fire events that came due during the final

@@ -4,7 +4,8 @@
 //! gridmc train --preset exp3 [--engine xla] [--driver parallel]
 //!              [--workers N] [--scale 0.1] [--out-csv curve.csv]
 //! gridmc train --config configs/my.toml
-//! gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|ablations> [--scale S]
+//! gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|ablations>
+//!                     [--scale S]
 //! gridmc gen-data --preset ml1m --out /tmp/ml1m.csv [--seed 7]
 //! gridmc inspect --preset exp4
 //! ```
@@ -25,9 +26,10 @@ const USAGE: &str = "\
 gridmc — two-dimensional gossip matrix completion (Bhutani & Mishra 2017)
 
 USAGE:
-  gridmc train --preset <exp1..exp6|churn|grow|shrink|table3-<ds>-<g>-<r>> [options]
+  gridmc train --preset <exp1..exp6|churn|grow|shrink|liveness|table3-<ds>-<g>-<r>> [options]
   gridmc train --config <file.toml> [options]
-  gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|ablations> [--scale S]
+  gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|ablations>
+                     [--scale S]
   gridmc gen-data --preset <ml1m|ml10m|ml20m|netflix> --out <path> [--seed N]
   gridmc inspect --preset <name>
 
@@ -92,6 +94,9 @@ fn resolve_preset(name: &str) -> Result<ExperimentConfig> {
     if name == "shrink" {
         return Ok(presets::shrink());
     }
+    if name == "liveness" {
+        return Ok(presets::liveness());
+    }
     if let Some(n) = name.strip_prefix("exp") {
         if let Ok(n) = n.parse::<usize>() {
             return presets::exp(n);
@@ -111,7 +116,8 @@ fn resolve_preset(name: &str) -> Result<ExperimentConfig> {
         }
     }
     Err(Error::Config(format!(
-        "unknown preset {name:?} (try exp1..exp6, churn, grow, shrink, or table3-ml1m-4-10)"
+        "unknown preset {name:?} (try exp1..exp6, churn, grow, shrink, liveness, \
+         or table3-ml1m-4-10)"
     )))
 }
 
@@ -189,11 +195,12 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "churn" => experiments::scenarios::churn::run_churn()?,
         "grow" => experiments::scenarios::grow::run_grow()?,
         "shrink" => experiments::scenarios::shrink::run_shrink()?,
+        "liveness" => experiments::scenarios::liveness::run_liveness()?,
         "ablations" => experiments::ablations::run()?,
         other => {
             return Err(Error::Config(format!(
                 "unknown table {other:?} \
-                 (table2|table3|fig2|parallel|churn|grow|shrink|ablations)"
+                 (table2|table3|fig2|parallel|churn|grow|shrink|liveness|ablations)"
             )))
         }
     };

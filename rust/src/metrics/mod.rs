@@ -114,6 +114,41 @@ impl RecoveryOverhead {
     }
 }
 
+/// Decentralized-liveness summary of a run — the headline numbers of
+/// `BENCH_liveness.json` (PERF.md §Liveness). Accumulated by the
+/// pulse-clocked driver loops; `None` on supervisor-orchestrated runs
+/// (where no suspicion machinery is armed).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LivenessStats {
+    /// Pulse ticks the driver's shared liveness clock advanced.
+    pub pulse_ticks: u64,
+    /// Structures the grid gave up on — anchor-side expiries plus
+    /// driver token-deadline sweeps together.
+    pub expired_structures: u64,
+    /// Mean ticks from dispatch to expiry over expired structures
+    /// (the detection latency; 0.0 when nothing expired).
+    pub detection_lag_mean_ticks: f64,
+    /// Worst-case detection latency, in ticks.
+    pub detection_lag_max_ticks: u64,
+    /// Expiries recorded while no fault had fired yet — steady-state
+    /// false suspicions. The acceptance scenario gates this at zero.
+    pub false_suspicions: u64,
+    /// Blocks still on probation when training ended.
+    pub quarantined_blocks: u64,
+}
+
+impl LivenessStats {
+    /// Fold raw dispatch→expiry lags (in ticks) into the lag fields.
+    pub fn from_lags(lags: &[u64]) -> (f64, u64) {
+        if lags.is_empty() {
+            return (0.0, 0);
+        }
+        let sum: u64 = lags.iter().sum();
+        let mean = sum as f64 / lags.len() as f64;
+        (mean, lags.iter().copied().max().unwrap_or(0))
+    }
+}
+
 /// One Table-3 cell: dataset × grid × rank → test RMSE.
 #[derive(Debug, Clone)]
 pub struct RmseReport {
@@ -344,6 +379,18 @@ mod tests {
         };
         assert_eq!(z.rmse_ratio(), 1.0);
         assert_eq!(z.wall_overhead(), 0.0);
+    }
+
+    #[test]
+    fn liveness_lag_folding() {
+        assert_eq!(LivenessStats::from_lags(&[]), (0.0, 0));
+        let (mean, max) = LivenessStats::from_lags(&[4, 8, 6]);
+        assert!((mean - 6.0).abs() < 1e-12);
+        assert_eq!(max, 8);
+        // A clean steady-state run summarizes to all-zeros.
+        let clean = LivenessStats { pulse_ticks: 512, ..LivenessStats::default() };
+        assert_eq!(clean.expired_structures, 0);
+        assert_eq!(clean.false_suspicions, 0);
     }
 
     #[test]

@@ -44,14 +44,17 @@ impl ChannelTransport {
     /// slice of `state`. `engine` must already be prepared;
     /// `checkpoints`, when set, makes every agent crash-recoverable.
     /// Blocks in `dormant` spawn inactive (see [`super::DormantSet`]).
+    /// `liveness`, when set, arms every agent's decentralized failure
+    /// detector.
     pub fn spawn(
         spec: GridSpec,
         engine: Arc<dyn Engine>,
         state: FactorState,
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
+        liveness: Option<crate::gossip::LivenessConfig>,
     ) -> Self {
-        Self::spawn_tapped(spec, engine, state, checkpoints, dormant, None)
+        Self::spawn_tapped(spec, engine, state, checkpoints, dormant, liveness, None)
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -62,6 +65,7 @@ impl ChannelTransport {
         mut state: FactorState,
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
+        liveness: Option<crate::gossip::LivenessConfig>,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
         let n = spec.num_blocks();
@@ -75,9 +79,14 @@ impl ChannelTransport {
         let peers = Arc::new(ChannelPeers { q: spec.q, txs });
         let (driver_tx, driver_rx) = mpsc::channel();
         let mut threads = Vec::with_capacity(n);
+        let wire_seq = Arc::new(std::sync::atomic::AtomicU64::new(0));
         for (id, rx) in spec.blocks().zip(rxs) {
             let (u, w) = state.take_block(id);
-            let mut agent = BlockAgent::new(id, u, w, engine.clone());
+            let mut agent =
+                BlockAgent::new(id, u, w, engine.clone()).with_grid(spec.p, spec.q);
+            if let Some(cfg) = liveness {
+                agent = agent.with_liveness(cfg);
+            }
             if dormant.contains(&id.index(spec.q)) {
                 agent = agent.dormant();
             }
@@ -88,6 +97,7 @@ impl ChannelTransport {
                 peers: peers.clone(),
                 driver: driver_tx.clone(),
                 tap: tap.clone(),
+                wire_seq: wire_seq.clone(),
             };
             threads.push(
                 thread::Builder::new()
@@ -123,6 +133,16 @@ impl Transport for ChannelTransport {
         self.driver_rx
             .recv()
             .map_err(|_| Error::Gossip("all agents disconnected".into()))
+    }
+
+    fn recv_timeout(&self, timeout: std::time::Duration) -> Result<Option<DriverMsg>> {
+        match self.driver_rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(Some(msg)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Gossip("all agents disconnected".into()))
+            }
+        }
     }
 
     fn injector(&self) -> Arc<dyn PeerSender> {

@@ -1,25 +1,31 @@
 //! Compact wire codec for the peer-to-peer gossip frames.
 //!
-//! Only the six messages that travel between block agents are
+//! Only the seven messages that travel between block agents are
 //! encodable — `GetFactors`, `Factors`, `PutFactors`, `RevertFactors`,
-//! `HandOff`, `PutAck`. The control plane (`Execute`, `GetCost`,
-//! `Abort`, `Join`, `Retire`, `Shutdown`) never crosses a link: the
-//! driver talks to agents in-process, exactly as the paper's leader
-//! never touches factor matrices during learning.
+//! `HandOff`, `PutAck`, `Heartbeat`. The control plane (`Execute`,
+//! `GetCost`, `Abort`, `Join`, `Retire`, `Shutdown`, `Pulse`) never
+//! crosses a link: the driver talks to agents in-process, exactly as
+//! the paper's leader never touches factor matrices during learning.
 //!
 //! Framing (all integers little-endian):
 //!
 //! ```text
-//! [tag u8] [from.i u32] [from.j u32]                  — every frame
-//! [rows u32] [cols u32] [rows·cols × f32]  × 2 (U, W) — factor-bearing frames
+//! [tag u8] [from.i u32] [from.j u32] [seq u64]         — every frame
+//! [rows u32] [cols u32] [rows·cols × f32]  × 2 (U, W)  — factor-bearing frames
 //! ```
+//!
+//! `seq` is the sender-side wire sequence number. The link delivers
+//! each decoded frame wrapped in [`AgentMsg::Sequenced`], and the agent
+//! deduplicates replays (duplication faults, retransmitting real
+//! transports) by that number — idempotent delivery without changing
+//! any payload layout.
 //!
 //! `HandOff` (a retiring block's parting factors) reuses the same
 //! two-matrix layout with one half framed as a 0×0 placeholder, so a
 //! retirement transmits each factor exactly once.
 //!
 //! A rank-5 100×100-block `Factors` frame is therefore
-//! `9 + 2·(8 + 4·100·5)` = 4 KiB — the number [`super::SimTransport`]'s
+//! `17 + 2·(8 + 4·100·5)` ≈ 4 KiB — the number [`super::SimTransport`]'s
 //! byte accounting reports per factor exchange
 //! ([`super::WireSnapshot`]). Round trips are bit-exact: `f32`s are
 //! moved as raw IEEE-754 bytes, never reformatted.
@@ -36,6 +42,10 @@ const TAG_PUT_FACTORS: u8 = 3;
 const TAG_PUT_ACK: u8 = 4;
 const TAG_REVERT_FACTORS: u8 = 5;
 const TAG_HAND_OFF: u8 = 6;
+const TAG_HEARTBEAT: u8 = 7;
+
+/// Bytes of the fixed frame header: tag, sender block, wire sequence.
+const HEADER_LEN: usize = 17;
 
 /// Matrices larger than this per side are rejected on decode (corrupt
 /// frame guard; real factor blocks are orders of magnitude smaller).
@@ -45,9 +55,11 @@ fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_block_id(buf: &mut Vec<u8>, id: BlockId) {
-    put_u32(buf, id.i as u32);
-    put_u32(buf, id.j as u32);
+fn put_header(buf: &mut Vec<u8>, tag: u8, from: BlockId, seq: u64) {
+    buf.push(tag);
+    put_u32(buf, from.i as u32);
+    put_u32(buf, from.j as u32);
+    buf.extend_from_slice(&seq.to_le_bytes());
 }
 
 fn put_matrix(buf: &mut Vec<u8>, m: &DenseMatrix) {
@@ -60,39 +72,37 @@ fn put_matrix(buf: &mut Vec<u8>, m: &DenseMatrix) {
 
 /// Encoded size of a factor-pair frame (header + two matrices).
 fn factors_len(u: &DenseMatrix, w: &DenseMatrix) -> usize {
-    9 + 2 * 8 + 4 * (u.as_slice().len() + w.as_slice().len())
+    HEADER_LEN + 2 * 8 + 4 * (u.as_slice().len() + w.as_slice().len())
 }
 
-/// Encode a peer-to-peer message. Control-plane messages are a
-/// [`Error::Gossip`] — they are never framed for the wire.
-pub fn encode(msg: &AgentMsg) -> Result<Vec<u8>> {
+/// Encode a peer-to-peer message under wire sequence number `seq`.
+/// Control-plane messages (and the link-side [`AgentMsg::Sequenced`]
+/// wrapper itself) are a [`Error::Gossip`] — they are never framed for
+/// the wire.
+pub fn encode(msg: &AgentMsg, seq: u64) -> Result<Vec<u8>> {
     match msg {
         AgentMsg::GetFactors { from } => {
-            let mut buf = Vec::with_capacity(9);
-            buf.push(TAG_GET_FACTORS);
-            put_block_id(&mut buf, *from);
+            let mut buf = Vec::with_capacity(HEADER_LEN);
+            put_header(&mut buf, TAG_GET_FACTORS, *from, seq);
             Ok(buf)
         }
         AgentMsg::Factors { from, u, w } => {
             let mut buf = Vec::with_capacity(factors_len(u, w));
-            buf.push(TAG_FACTORS);
-            put_block_id(&mut buf, *from);
+            put_header(&mut buf, TAG_FACTORS, *from, seq);
             put_matrix(&mut buf, u);
             put_matrix(&mut buf, w);
             Ok(buf)
         }
         AgentMsg::PutFactors { from, u, w } => {
             let mut buf = Vec::with_capacity(factors_len(u, w));
-            buf.push(TAG_PUT_FACTORS);
-            put_block_id(&mut buf, *from);
+            put_header(&mut buf, TAG_PUT_FACTORS, *from, seq);
             put_matrix(&mut buf, u);
             put_matrix(&mut buf, w);
             Ok(buf)
         }
         AgentMsg::RevertFactors { from, u, w } => {
             let mut buf = Vec::with_capacity(factors_len(u, w));
-            buf.push(TAG_REVERT_FACTORS);
-            put_block_id(&mut buf, *from);
+            put_header(&mut buf, TAG_REVERT_FACTORS, *from, seq);
             put_matrix(&mut buf, u);
             put_matrix(&mut buf, w);
             Ok(buf)
@@ -101,16 +111,19 @@ pub fn encode(msg: &AgentMsg) -> Result<Vec<u8>> {
             // A retiring block's parting frame: one half is a 0×0
             // placeholder, so the wire carries each factor exactly once.
             let mut buf = Vec::with_capacity(factors_len(u, w));
-            buf.push(TAG_HAND_OFF);
-            put_block_id(&mut buf, *from);
+            put_header(&mut buf, TAG_HAND_OFF, *from, seq);
             put_matrix(&mut buf, u);
             put_matrix(&mut buf, w);
             Ok(buf)
         }
         AgentMsg::PutAck { from } => {
-            let mut buf = Vec::with_capacity(9);
-            buf.push(TAG_PUT_ACK);
-            put_block_id(&mut buf, *from);
+            let mut buf = Vec::with_capacity(HEADER_LEN);
+            put_header(&mut buf, TAG_PUT_ACK, *from, seq);
+            Ok(buf)
+        }
+        AgentMsg::Heartbeat { from } => {
+            let mut buf = Vec::with_capacity(HEADER_LEN);
+            put_header(&mut buf, TAG_HEARTBEAT, *from, seq);
             Ok(buf)
         }
         other => Err(Error::Gossip(format!(
@@ -146,6 +159,16 @@ impl<'a> Cur<'a> {
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 
+    fn u64(&mut self) -> Result<u64> {
+        let end = self.k + 8;
+        let s = self
+            .b
+            .get(self.k..end)
+            .ok_or_else(|| Error::Gossip("codec: truncated frame".into()))?;
+        self.k = end;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
     fn block_id(&mut self) -> Result<BlockId> {
         let i = self.u32()? as usize;
         let j = self.u32()? as usize;
@@ -175,36 +198,40 @@ impl<'a> Cur<'a> {
     }
 }
 
-/// Decode a frame produced by [`encode`].
-pub fn decode(bytes: &[u8]) -> Result<AgentMsg> {
+/// Decode a frame produced by [`encode`], returning the message and its
+/// wire sequence number.
+pub fn decode(bytes: &[u8]) -> Result<(AgentMsg, u64)> {
     let mut cur = Cur { b: bytes, k: 0 };
     let tag = cur.u8()?;
     let from = cur.block_id()?;
-    match tag {
-        TAG_GET_FACTORS => Ok(AgentMsg::GetFactors { from }),
+    let seq = cur.u64()?;
+    let msg = match tag {
+        TAG_GET_FACTORS => AgentMsg::GetFactors { from },
         TAG_FACTORS => {
             let u = cur.matrix()?;
             let w = cur.matrix()?;
-            Ok(AgentMsg::Factors { from, u, w })
+            AgentMsg::Factors { from, u, w }
         }
         TAG_PUT_FACTORS => {
             let u = cur.matrix()?;
             let w = cur.matrix()?;
-            Ok(AgentMsg::PutFactors { from, u, w })
+            AgentMsg::PutFactors { from, u, w }
         }
         TAG_REVERT_FACTORS => {
             let u = cur.matrix()?;
             let w = cur.matrix()?;
-            Ok(AgentMsg::RevertFactors { from, u, w })
+            AgentMsg::RevertFactors { from, u, w }
         }
         TAG_HAND_OFF => {
             let u = cur.matrix()?;
             let w = cur.matrix()?;
-            Ok(AgentMsg::HandOff { from, u, w })
+            AgentMsg::HandOff { from, u, w }
         }
-        TAG_PUT_ACK => Ok(AgentMsg::PutAck { from }),
-        other => Err(Error::Gossip(format!("codec: unknown frame tag {other}"))),
-    }
+        TAG_PUT_ACK => AgentMsg::PutAck { from },
+        TAG_HEARTBEAT => AgentMsg::Heartbeat { from },
+        other => return Err(Error::Gossip(format!("codec: unknown frame tag {other}"))),
+    };
+    Ok((msg, seq))
 }
 
 #[cfg(test)]
@@ -222,15 +249,16 @@ mod tests {
         let u = mat(7, 3, 1.0);
         let w = mat(5, 3, -2.0);
         let msg = AgentMsg::Factors { from: BlockId::new(2, 4), u: u.clone(), w: w.clone() };
-        let bytes = encode(&msg).unwrap();
-        assert_eq!(bytes.len(), 9 + 16 + 4 * (21 + 15));
+        let bytes = encode(&msg, 0xDEAD_BEEF).unwrap();
+        assert_eq!(bytes.len(), 17 + 16 + 4 * (21 + 15));
         match decode(&bytes).unwrap() {
-            AgentMsg::Factors { from, u: du, w: dw } => {
+            (AgentMsg::Factors { from, u: du, w: dw }, seq) => {
                 assert_eq!(from, BlockId::new(2, 4));
+                assert_eq!(seq, 0xDEAD_BEEF);
                 assert_eq!(du, u);
                 assert_eq!(dw, w);
             }
-            other => panic!("wrong variant {}", other.kind()),
+            (other, _) => panic!("wrong variant {}", other.kind()),
         }
     }
 
@@ -243,11 +271,27 @@ mod tests {
             AgentMsg::RevertFactors { from: BlockId::new(2, 2), u, w },
             AgentMsg::GetFactors { from: BlockId::new(9, 9) },
             AgentMsg::PutAck { from: BlockId::new(1, 0) },
+            AgentMsg::Heartbeat { from: BlockId::new(3, 7) },
         ];
-        for msg in cases {
+        for (k, msg) in cases.into_iter().enumerate() {
             let kind = msg.kind();
-            let back = decode(&encode(&msg).unwrap()).unwrap();
+            let (back, seq) = decode(&encode(&msg, k as u64).unwrap()).unwrap();
             assert_eq!(back.kind(), kind);
+            assert_eq!(seq, k as u64, "wire sequence survives the roundtrip");
+        }
+    }
+
+    #[test]
+    fn heartbeat_is_header_only() {
+        let msg = AgentMsg::Heartbeat { from: BlockId::new(5, 2) };
+        let bytes = encode(&msg, u64::MAX).unwrap();
+        assert_eq!(bytes.len(), 17, "a heartbeat is a bare header");
+        match decode(&bytes).unwrap() {
+            (AgentMsg::Heartbeat { from }, seq) => {
+                assert_eq!(from, BlockId::new(5, 2));
+                assert_eq!(seq, u64::MAX);
+            }
+            (other, _) => panic!("wrong variant {}", other.kind()),
         }
     }
 
@@ -261,8 +305,8 @@ mod tests {
         )
         .unwrap();
         let msg = AgentMsg::Factors { from: BlockId::new(0, 0), u: u.clone(), w: u.clone() };
-        match decode(&encode(&msg).unwrap()).unwrap() {
-            AgentMsg::Factors { u: du, .. } => {
+        match decode(&encode(&msg, 1).unwrap()).unwrap() {
+            (AgentMsg::Factors { u: du, .. }, _) => {
                 for (a, b) in du.as_slice().iter().zip(u.as_slice()) {
                     assert_eq!(a.to_bits(), b.to_bits());
                 }
@@ -273,12 +317,19 @@ mod tests {
 
     #[test]
     fn control_plane_is_not_encodable() {
-        let err = encode(&AgentMsg::Shutdown).unwrap_err();
+        let err = encode(&AgentMsg::Shutdown, 0).unwrap_err();
         assert!(matches!(err, Error::Gossip(_)), "{err}");
-        let err = encode(&AgentMsg::GetCost { lambda: 1.0 }).unwrap_err();
+        let err = encode(&AgentMsg::GetCost { lambda: 1.0 }, 0).unwrap_err();
         assert!(format!("{err}").contains("GetCost"));
-        let err = encode(&AgentMsg::Retire { row_heir: None, col_heir: None }).unwrap_err();
+        let err = encode(&AgentMsg::Retire { row_heir: None, col_heir: None }, 0).unwrap_err();
         assert!(format!("{err}").contains("Retire"));
+        let err = encode(&AgentMsg::Pulse { tick: 3 }, 0).unwrap_err();
+        assert!(format!("{err}").contains("Pulse"));
+        // The link-side wrapper is itself not a wire frame: sequencing
+        // lives in the header, not in a nested payload.
+        let inner = Box::new(AgentMsg::PutAck { from: BlockId::new(0, 0) });
+        let err = encode(&AgentMsg::Sequenced { seq: 9, inner }, 0).unwrap_err();
+        assert!(format!("{err}").contains("Sequenced"));
     }
 
     #[test]
@@ -292,24 +343,25 @@ mod tests {
             u: u.clone(),
             w: empty.clone(),
         };
-        let bytes = encode(&row_frame).unwrap();
-        assert_eq!(bytes.len(), 9 + (8 + 4 * 18) + 8, "U payload + empty W header");
+        let bytes = encode(&row_frame, 42).unwrap();
+        assert_eq!(bytes.len(), 17 + (8 + 4 * 18) + 8, "U payload + empty W header");
         match decode(&bytes).unwrap() {
-            AgentMsg::HandOff { from, u: du, w: dw } => {
+            (AgentMsg::HandOff { from, u: du, w: dw }, seq) => {
                 assert_eq!(from, BlockId::new(1, 3));
+                assert_eq!(seq, 42);
                 assert_eq!(du, u);
                 assert_eq!((dw.rows(), dw.cols()), (0, 0));
             }
-            other => panic!("wrong variant {}", other.kind()),
+            (other, _) => panic!("wrong variant {}", other.kind()),
         }
         let w = mat(4, 3, -1.0);
         let col_frame = AgentMsg::HandOff { from: BlockId::new(2, 0), u: empty, w: w.clone() };
-        match decode(&encode(&col_frame).unwrap()).unwrap() {
-            AgentMsg::HandOff { u: du, w: dw, .. } => {
+        match decode(&encode(&col_frame, 43).unwrap()).unwrap() {
+            (AgentMsg::HandOff { u: du, w: dw, .. }, _) => {
                 assert_eq!((du.rows(), du.cols()), (0, 0));
                 assert_eq!(dw, w);
             }
-            other => panic!("wrong variant {}", other.kind()),
+            (other, _) => panic!("wrong variant {}", other.kind()),
         }
     }
 
@@ -320,8 +372,8 @@ mod tests {
             u: mat(4, 2, 0.0),
             w: mat(3, 2, 0.0),
         };
-        let bytes = encode(&msg).unwrap();
-        for cut in [0, 1, 8, 12, bytes.len() - 1] {
+        let bytes = encode(&msg, 7).unwrap();
+        for cut in [0, 1, 8, 12, 16, 20, bytes.len() - 1] {
             assert!(decode(&bytes[..cut]).is_err(), "cut {cut}");
         }
         let mut bad = bytes.clone();
@@ -329,7 +381,7 @@ mod tests {
         assert!(decode(&bad).is_err());
         let mut huge = bytes;
         // Overwrite the U row count with an implausible value.
-        huge[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        huge[17..21].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode(&huge).is_err());
     }
 }

@@ -15,10 +15,13 @@
 //! Execution is split across the stack: the *supervisor* (the gossip
 //! drivers through `GossipNetwork`) fires events at completed-update
 //! boundaries — crashes via the [`super::AgentMsg::Crash`] control
-//! message (any transport), partitions via
-//! [`super::Transport::inject_fault`] (sim transports only). Executed
-//! actions are recorded as [`FaultRecord`]s; [`render_trace`] turns a
-//! record list into the byte-stable JSON-lines trace that
+//! message (any transport), partitions and stalls via
+//! [`super::Transport::inject_fault`] (sim transports only). Under
+//! decentralized liveness runs the same plan fires *silently* — no
+//! abort, no redispatch — and the resulting [`FaultRecord::Expire`]
+//! entries are produced by the grid's own detection, not by the plan.
+//! Executed actions are recorded as [`FaultRecord`]s; [`render_trace`]
+//! turns a record list into the byte-stable JSON-lines trace that
 //! `BENCH_churn.json` embeds and `tests/chaos.rs` pins across reruns.
 
 use std::collections::VecDeque;
@@ -36,16 +39,24 @@ pub enum FaultEvent {
     Kill { step: u64, block: BlockId },
     /// Sever both directions of the grid link `a — b` once `step`
     /// updates have completed; the link heals after `duration_us` of
-    /// wall time (frames are held, never erased, so the three-party
-    /// protocol stalls but cannot wedge).
+    /// the sim link's *virtual* time (frames are held, never erased, so
+    /// the three-party protocol stalls but cannot wedge).
     Partition { step: u64, a: BlockId, b: BlockId, duration_us: u64 },
+    /// Turn `block` into a straggler once `step` updates have
+    /// completed: every link frame to or from it is delayed `factor`×
+    /// for `duration_us` of the sim link's virtual time (sim transports
+    /// only). The block keeps computing — only its wire slows down —
+    /// which is exactly the failure mode liveness layers misdiagnose.
+    Stall { step: u64, block: BlockId, factor: u32, duration_us: u64 },
 }
 
 impl FaultEvent {
     /// Completed-update count at which the event becomes due.
     pub fn step(&self) -> u64 {
         match self {
-            FaultEvent::Kill { step, .. } | FaultEvent::Partition { step, .. } => *step,
+            FaultEvent::Kill { step, .. }
+            | FaultEvent::Partition { step, .. }
+            | FaultEvent::Stall { step, .. } => *step,
         }
     }
 }
@@ -58,11 +69,19 @@ pub struct FaultConfig {
     pub kills: usize,
     /// Scheduled link partitions (sim transports only).
     pub partitions: usize,
+    /// Scheduled straggler slowdowns (sim transports only).
+    pub stalls: usize,
     /// Event steps are drawn uniformly from `[from_step, until_step)`.
     pub from_step: u64,
     pub until_step: u64,
-    /// How long a severed link stays down, wall-clock microseconds.
+    /// How long a severed link stays down, microseconds of the sim
+    /// link's virtual clock.
     pub partition_duration_us: u64,
+    /// Delay multiplier of a straggler slowdown.
+    pub stall_factor: u32,
+    /// How long a straggler stays slow, microseconds of the sim link's
+    /// virtual clock.
+    pub stall_duration_us: u64,
     /// Snapshot a block's factors every this many factor mutations
     /// (0 disables checkpointing — crashed agents rejoin cold).
     pub checkpoint_every: u64,
@@ -75,9 +94,12 @@ impl Default for FaultConfig {
         Self {
             kills: 2,
             partitions: 0,
+            stalls: 0,
             from_step: 1,
             until_step: 512,
             partition_duration_us: 2_000,
+            stall_factor: 64,
+            stall_duration_us: 4_000,
             checkpoint_every: 8,
             seed: 0x0FA17,
         }
@@ -116,12 +138,27 @@ impl FaultPlan {
         self
     }
 
+    /// Add a scheduled straggler slowdown (builder style).
+    pub fn stall(mut self, step: u64, block: BlockId, factor: u32, duration: Duration) -> Self {
+        self.events.push(FaultEvent::Stall {
+            step,
+            block,
+            factor,
+            duration_us: duration.as_micros() as u64,
+        });
+        self.events.sort_by_key(FaultEvent::step);
+        self
+    }
+
     /// Draw a plan from a seeded config: `kills` crash events over
-    /// uniformly random blocks, `partitions` severed grid links, all at
-    /// steps uniform in `[from_step, until_step)`.
+    /// uniformly random blocks, `partitions` severed grid links,
+    /// `stalls` straggler slowdowns, all at steps uniform in
+    /// `[from_step, until_step)`. Stalls are drawn after partitions, so
+    /// plans generated under an older config (zero stalls) replay
+    /// byte-identically.
     pub fn generate(spec: GridSpec, cfg: &FaultConfig) -> Self {
         let mut rng = Rng::seed_from_u64(cfg.seed);
-        if cfg.until_step <= cfg.from_step && cfg.kills + cfg.partitions > 0 {
+        if cfg.until_step <= cfg.from_step && cfg.kills + cfg.partitions + cfg.stalls > 0 {
             log::warn!(
                 "fault window [{}, {}) is empty or inverted; every event lands at \
                  step {}",
@@ -164,6 +201,16 @@ impl FaultPlan {
                 duration_us: cfg.partition_duration_us,
             });
         }
+        for _ in 0..cfg.stalls {
+            let s = step(&mut rng);
+            let block = BlockId::new(rng.gen_range(spec.p), rng.gen_range(spec.q));
+            events.push(FaultEvent::Stall {
+                step: s,
+                block,
+                factor: cfg.stall_factor,
+                duration_us: cfg.stall_duration_us,
+            });
+        }
         events.sort_by_key(FaultEvent::step);
         Self { events }
     }
@@ -189,21 +236,34 @@ impl FaultPlan {
             .any(|e| matches!(e, FaultEvent::Partition { .. }))
     }
 
+    /// Does the plan contain link-layer events (partitions, stalls)
+    /// that only a sim transport can execute?
+    pub fn needs_sim(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(e, FaultEvent::Partition { .. } | FaultEvent::Stall { .. })
+        })
+    }
+
     /// Consume-from-the-front view for the driver supervision loop.
     pub fn queue(&self) -> VecDeque<FaultEvent> {
         self.events.iter().copied().collect()
     }
 }
 
-/// A link-layer fault injected into a running sim transport. Severed
-/// links heal by expiry only — that keeps the executed fault trace a
-/// complete record of the run's link history.
+/// A link-layer fault injected into a running sim transport. Both
+/// variants heal by expiry of the link's *virtual* clock only — that
+/// keeps the executed fault trace a complete record of the run's link
+/// history, immune to host-load drift.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LinkFault {
     /// Sever both directions of `a — b`; the link heals (by expiry)
-    /// after `duration`. Frames attempting the link are held until the
-    /// heal instant, never erased.
+    /// after `duration` of virtual time. Frames attempting the link are
+    /// held until the heal instant, never erased.
     Partition { a: BlockId, b: BlockId, duration: Duration },
+    /// Multiply the per-hop delay of every frame to or from `block` by
+    /// `factor` for `duration` of virtual time — a straggler, not a
+    /// corpse: the block keeps computing behind a slow wire.
+    Slowdown { block: BlockId, factor: u32, duration: Duration },
 }
 
 /// One *executed* membership/fault action — the replayable churn
@@ -237,6 +297,21 @@ pub enum FaultRecord {
     /// then `handoffs` factor halves (row factors, column factors, or
     /// both) handed to surviving heir blocks over the wire.
     Retire { step: u64, block: BlockId, version: u64, handoffs: u8 },
+    /// An agent was crashed *silently* — no abort, no redispatch, no
+    /// announcement: the grid has to notice on its own (decentralized
+    /// liveness runs). Deliberately carries no restored-version /
+    /// lost-updates fields: how much work the victim had adopted at the
+    /// kill instant is wall-timing-dependent, and the trace must stay
+    /// byte-identical across reruns.
+    SilentKill { step: u64, block: BlockId },
+    /// A block became a straggler: link frames to/from it were delayed
+    /// `factor`× for `duration_us` of virtual time.
+    Stall { step: u64, block: BlockId, factor: u32, duration_us: u64 },
+    /// A structure expired: its anchor (or the driver's token deadline,
+    /// when the anchor itself was the casualty) gave up on `victim`
+    /// staying quiet past the liveness deadline and rolled the
+    /// structure back without supervisor involvement.
+    Expire { step: u64, anchor: BlockId, victim: BlockId },
 }
 
 impl FaultRecord {
@@ -246,7 +321,10 @@ impl FaultRecord {
             | FaultRecord::Abort { step, .. }
             | FaultRecord::Partition { step, .. }
             | FaultRecord::Join { step, .. }
-            | FaultRecord::Retire { step, .. } => *step,
+            | FaultRecord::Retire { step, .. }
+            | FaultRecord::SilentKill { step, .. }
+            | FaultRecord::Stall { step, .. }
+            | FaultRecord::Expire { step, .. } => *step,
         }
     }
 
@@ -278,6 +356,20 @@ impl FaultRecord {
                 "{{\"step\":{step},\"event\":\"retire\",\"block\":\"{},{}\",\
                  \"version\":{version},\"handoffs\":{handoffs}}}",
                 block.i, block.j
+            ),
+            FaultRecord::SilentKill { step, block } => format!(
+                "{{\"step\":{step},\"event\":\"silent-kill\",\"block\":\"{},{}\"}}",
+                block.i, block.j
+            ),
+            FaultRecord::Stall { step, block, factor, duration_us } => format!(
+                "{{\"step\":{step},\"event\":\"stall\",\"block\":\"{},{}\",\
+                 \"factor\":{factor},\"duration_us\":{duration_us}}}",
+                block.i, block.j
+            ),
+            FaultRecord::Expire { step, anchor, victim } => format!(
+                "{{\"step\":{step},\"event\":\"expire\",\"anchor\":\"{},{}\",\
+                 \"victim\":\"{},{}\"}}",
+                anchor.i, anchor.j, victim.i, victim.j
             ),
         }
     }
@@ -338,8 +430,50 @@ mod tests {
                     let dj = a.j.abs_diff(b.j);
                     assert_eq!(di + dj, 1, "{a} - {b} is not a grid edge");
                 }
+                FaultEvent::Stall { block, factor, .. } => {
+                    assert!(block.i < 4 && block.j < 4);
+                    assert!(factor > 0);
+                }
             }
         }
+    }
+
+    #[test]
+    fn stalls_extend_the_plan_without_perturbing_the_prefix_draws() {
+        let base = FaultConfig { kills: 3, partitions: 2, seed: 21, ..Default::default() };
+        let with_stalls = FaultConfig { stalls: 2, ..base };
+        let a = FaultPlan::generate(spec(), &base);
+        let b = FaultPlan::generate(spec(), &with_stalls);
+        assert_eq!(a.len(), 5);
+        assert_eq!(b.len(), 7);
+        assert!(!a.needs_sim() || a.has_partitions());
+        assert!(b.needs_sim());
+        // Kills and partitions are drawn before stalls, so the old
+        // events replay identically under the stall-extended config.
+        let kills_a: Vec<_> = a
+            .events()
+            .iter()
+            .filter(|e| !matches!(e, FaultEvent::Stall { .. }))
+            .collect();
+        let kills_b: Vec<_> = b
+            .events()
+            .iter()
+            .filter(|e| !matches!(e, FaultEvent::Stall { .. }))
+            .collect();
+        assert_eq!(kills_a, kills_b);
+    }
+
+    #[test]
+    fn stall_only_plans_need_sim_but_have_no_partitions() {
+        let plan = FaultPlan::new().stall(
+            10,
+            BlockId::new(1, 2),
+            64,
+            Duration::from_micros(4000),
+        );
+        assert!(plan.needs_sim());
+        assert!(!plan.has_partitions());
+        assert_eq!(plan.events()[0].step(), 10);
     }
 
     #[test]
@@ -407,9 +541,37 @@ mod tests {
     }
 
     #[test]
+    fn liveness_records_render_stable_json() {
+        let trace = [
+            FaultRecord::SilentKill { step: 70, block: BlockId::new(3, 1) },
+            FaultRecord::Stall {
+                step: 82,
+                block: BlockId::new(0, 2),
+                factor: 64,
+                duration_us: 4000,
+            },
+            FaultRecord::Expire {
+                step: 95,
+                anchor: BlockId::new(3, 0),
+                victim: BlockId::new(3, 1),
+            },
+        ];
+        assert_eq!(
+            render_trace(&trace),
+            "{\"step\":70,\"event\":\"silent-kill\",\"block\":\"3,1\"}\n\
+             {\"step\":82,\"event\":\"stall\",\"block\":\"0,2\",\
+             \"factor\":64,\"duration_us\":4000}\n\
+             {\"step\":95,\"event\":\"expire\",\"anchor\":\"3,0\",\"victim\":\"3,1\"}\n"
+        );
+        assert_eq!(trace[2].step(), 95);
+    }
+
+    #[test]
     fn config_default_checkpoints_on() {
         let d = FaultConfig::default();
         assert!(d.checkpoint_every > 0);
         assert_eq!(d.partitions, 0);
+        assert_eq!(d.stalls, 0, "stalls are opt-in");
+        assert!(d.stall_factor > 1);
     }
 }

@@ -51,9 +51,11 @@ use crate::model::FactorState;
 use crate::{Error, Result};
 
 /// Messages addressed to a block agent.
-/// `Execute`/`GetCost`/`Abort`/`Join`/`Retire`/`Crash`/`Shutdown` are
-/// driver→agent control plane; the rest are the peer-to-peer gossip
-/// protocol (the only messages that cross simulated links).
+/// `Execute`/`GetCost`/`Abort`/`Join`/`Retire`/`Crash`/`Shutdown`/
+/// `Pulse` are driver→agent control plane; the rest are the
+/// peer-to-peer gossip protocol (the only messages that cross
+/// simulated links, where they arrive wrapped in
+/// [`AgentMsg::Sequenced`]).
 #[derive(Debug)]
 pub enum AgentMsg {
     /// Driver → anchor: run one structure update.
@@ -119,6 +121,24 @@ pub enum AgentMsg {
     Crash,
     /// Driver → agent: stop and hand the factors back.
     Shutdown,
+    /// Peer → peer: an idle-time liveness beacon (wire tag 7, header
+    /// only). Carries no factors; its arrival *is* the information —
+    /// receivers feed it to their `LivenessTracker` so a quiet grid
+    /// still accumulates inter-arrival evidence about its neighbours.
+    Heartbeat { from: BlockId },
+    /// Driver → agent: a local clock tick (control plane, never framed
+    /// for the wire). Agents use pulses to advance their liveness
+    /// clock, check structure deadlines, and emit idle-time
+    /// [`AgentMsg::Heartbeat`]s. Drivers broadcast a pulse whenever
+    /// their completion wait times out, so a healthy fast network sees
+    /// almost none.
+    Pulse { tick: u64 },
+    /// Link → agent: a decoded wire frame tagged with its sender-side
+    /// sequence number. The agent drops `seq` values it has already
+    /// seen (duplicated deliveries) and otherwise processes `inner`,
+    /// observing the sender as alive. Never nested and never itself
+    /// encodable.
+    Sequenced { seq: u64, inner: Box<AgentMsg> },
 }
 
 impl AgentMsg {
@@ -138,6 +158,26 @@ impl AgentMsg {
             AgentMsg::Retire { .. } => "Retire",
             AgentMsg::Crash => "Crash",
             AgentMsg::Shutdown => "Shutdown",
+            AgentMsg::Heartbeat { .. } => "Heartbeat",
+            AgentMsg::Pulse { .. } => "Pulse",
+            AgentMsg::Sequenced { .. } => "Sequenced",
+        }
+    }
+
+    /// The peer that produced this frame, when it is peer-to-peer
+    /// traffic — liveness evidence for the receiver's tracker. Control
+    /// plane messages have no source peer.
+    pub fn source(&self) -> Option<BlockId> {
+        match self {
+            AgentMsg::GetFactors { from }
+            | AgentMsg::Factors { from, .. }
+            | AgentMsg::PutFactors { from, .. }
+            | AgentMsg::RevertFactors { from, .. }
+            | AgentMsg::HandOff { from, .. }
+            | AgentMsg::PutAck { from }
+            | AgentMsg::Heartbeat { from } => Some(*from),
+            AgentMsg::Sequenced { inner, .. } => inner.source(),
+            _ => None,
         }
     }
 }
@@ -166,6 +206,12 @@ pub enum DriverMsg {
     /// factors are a frozen copy; the agent stays addressable for the
     /// final collection).
     Retired { from: BlockId, version: u64, u: DenseMatrix, w: DenseMatrix },
+    /// A structure's anchor gave up on it: a member (`suspect`) stayed
+    /// quiet past the liveness deadline, so the anchor rolled the
+    /// structure back ([`AgentMsg::RevertFactors`] when factors had
+    /// already moved) and returned to idle. Decentralized counterpart
+    /// of [`DriverMsg::Aborted`] — no supervisor asked for it.
+    Expired { anchor: BlockId, token: u64, suspect: BlockId },
 }
 
 impl DriverMsg {
@@ -178,6 +224,7 @@ impl DriverMsg {
             DriverMsg::Aborted { .. } => "Aborted",
             DriverMsg::Joined { .. } => "Joined",
             DriverMsg::Retired { .. } => "Retired",
+            DriverMsg::Expired { .. } => "Expired",
         }
     }
 }
@@ -219,6 +266,11 @@ pub(crate) struct Router {
     pub(crate) peers: Arc<dyn PeerSender>,
     pub(crate) driver: mpsc::Sender<DriverMsg>,
     pub(crate) tap: Option<mpsc::Sender<LinkFrame>>,
+    /// Transport-wide wire sequence counter: every frame that goes to
+    /// the link tap is stamped with a unique number, so receivers can
+    /// deduplicate replayed deliveries. Shared across all worker
+    /// clones of the router.
+    pub(crate) wire_seq: Arc<std::sync::atomic::AtomicU64>,
 }
 
 impl Router {
@@ -229,7 +281,9 @@ impl Router {
             match o {
                 Outgoing::Peer(to, msg) => {
                     if let Some(tap) = &self.tap {
-                        match codec::encode(&msg) {
+                        let seq =
+                            self.wire_seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        match codec::encode(&msg, seq) {
                             Ok(bytes) => {
                                 if tap.send(LinkFrame { from, to, bytes }).is_err() {
                                     log::warn!("sim link down; frame {from}->{to} dropped");
@@ -293,6 +347,17 @@ pub trait Transport: Send {
     /// Blocking receive of the next driver-bound message.
     fn recv(&self) -> Result<DriverMsg>;
 
+    /// Receive the next driver-bound message, waiting at most
+    /// `timeout`: `Ok(None)` on timeout, `Err` when the network is
+    /// gone. Liveness-aware drivers pace their pulse broadcasts off
+    /// this. The default implementation blocks indefinitely (it never
+    /// returns `Ok(None)`), which is correct but pulse-free — every
+    /// in-tree transport overrides it.
+    fn recv_timeout(&self, timeout: std::time::Duration) -> Result<Option<DriverMsg>> {
+        let _ = timeout;
+        self.recv().map(Some)
+    }
+
     /// The transport's internal fan-in point — lets wrappers (the sim
     /// link) deliver frames into the network as if from the wire.
     fn injector(&self) -> Arc<dyn PeerSender>;
@@ -302,8 +367,9 @@ pub trait Transport: Send {
         None
     }
 
-    /// Inject a link-layer fault (a timed partition). Only transports
-    /// that simulate links can honor this; the rest refuse.
+    /// Inject a link-layer fault (a timed partition or a straggler
+    /// slowdown). Only transports that simulate links can honor this;
+    /// the rest refuse.
     fn inject_fault(&self, fault: LinkFault) -> Result<()> {
         Err(Error::Unsupported(format!(
             "{} transport has no simulated links to fault (got {fault:?}); \
@@ -327,11 +393,20 @@ pub struct NetConfig {
     pub workers: usize,
     /// Link conditions for the sim transports.
     pub sim: SimConfig,
+    /// Decentralized liveness knobs handed to every spawned agent.
+    /// `None` (the default) spawns deadline-free agents — the exact
+    /// pre-liveness behavior.
+    pub liveness: Option<crate::gossip::LivenessConfig>,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
-        Self { kind: TransportKind::Channel, workers: 0, sim: SimConfig::default() }
+        Self {
+            kind: TransportKind::Channel,
+            workers: 0,
+            sim: SimConfig::default(),
+            liveness: None,
+        }
     }
 }
 
@@ -353,7 +428,13 @@ impl NetConfig {
 
     /// Simulated links over multiplexed agents.
     pub fn sim_multiplex(workers: usize, sim: SimConfig) -> Self {
-        Self { kind: TransportKind::SimMultiplex, workers, sim }
+        Self { kind: TransportKind::SimMultiplex, workers, sim, ..Self::default() }
+    }
+
+    /// Enable decentralized liveness on every spawned agent.
+    pub fn with_liveness(mut self, cfg: crate::gossip::LivenessConfig) -> Self {
+        self.liveness = Some(cfg);
+        self
     }
 }
 
@@ -421,6 +502,7 @@ pub fn spawn(
             state,
             checkpoints,
             dormant,
+            net.liveness,
         )),
         TransportKind::Multiplex => Box::new(MultiplexTransport::spawn(
             spec,
@@ -429,6 +511,7 @@ pub fn spawn(
             net.workers,
             checkpoints,
             dormant,
+            net.liveness,
         )),
         TransportKind::Sim => Box::new(SimTransport::spawn_over_channel(
             spec,
@@ -437,6 +520,7 @@ pub fn spawn(
             checkpoints,
             dormant,
             net.sim,
+            net.liveness,
         )),
         TransportKind::SimMultiplex => Box::new(SimTransport::spawn_over_multiplex(
             spec,
@@ -446,6 +530,7 @@ pub fn spawn(
             checkpoints,
             dormant,
             net.sim,
+            net.liveness,
         )),
     }
 }
@@ -480,9 +565,34 @@ mod tests {
     fn msg_kinds_are_stable_labels() {
         assert_eq!(AgentMsg::Shutdown.kind(), "Shutdown");
         assert_eq!(AgentMsg::GetCost { lambda: 0.0 }.kind(), "GetCost");
+        assert_eq!(AgentMsg::Heartbeat { from: BlockId::new(0, 0) }.kind(), "Heartbeat");
+        assert_eq!(AgentMsg::Pulse { tick: 1 }.kind(), "Pulse");
         assert_eq!(
             DriverMsg::Cost { from: BlockId::new(0, 0), cost: Ok(0.0) }.kind(),
             "Cost"
         );
+        assert_eq!(
+            DriverMsg::Expired {
+                anchor: BlockId::new(0, 0),
+                token: 1,
+                suspect: BlockId::new(0, 1)
+            }
+            .kind(),
+            "Expired"
+        );
+    }
+
+    #[test]
+    fn source_sees_through_the_sequence_wrapper() {
+        let from = BlockId::new(2, 3);
+        assert_eq!(AgentMsg::Heartbeat { from }.source(), Some(from));
+        assert_eq!(AgentMsg::PutAck { from }.source(), Some(from));
+        assert_eq!(AgentMsg::Shutdown.source(), None);
+        assert_eq!(AgentMsg::Pulse { tick: 9 }.source(), None);
+        let wrapped = AgentMsg::Sequenced {
+            seq: 11,
+            inner: Box::new(AgentMsg::GetFactors { from }),
+        };
+        assert_eq!(wrapped.source(), Some(from));
     }
 }

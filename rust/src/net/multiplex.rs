@@ -72,6 +72,8 @@ impl MultiplexTransport {
     /// clamped to the block count). `engine` must already be prepared;
     /// `checkpoints`, when set, makes every agent crash-recoverable.
     /// Blocks in `dormant` spawn inactive (see [`super::DormantSet`]).
+    /// `liveness`, when set, arms every agent's decentralized failure
+    /// detector.
     pub fn spawn(
         spec: GridSpec,
         engine: Arc<dyn Engine>,
@@ -79,8 +81,9 @@ impl MultiplexTransport {
         workers: usize,
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
+        liveness: Option<crate::gossip::LivenessConfig>,
     ) -> Self {
-        Self::spawn_tapped(spec, engine, state, workers, checkpoints, dormant, None)
+        Self::spawn_tapped(spec, engine, state, workers, checkpoints, dormant, liveness, None)
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -92,6 +95,7 @@ impl MultiplexTransport {
         workers: usize,
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
+        liveness: Option<crate::gossip::LivenessConfig>,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
         let n = spec.num_blocks();
@@ -115,7 +119,11 @@ impl MultiplexTransport {
         for id in spec.blocks() {
             let k = id.index(spec.q);
             let (u, wm) = state.take_block(id);
-            let mut agent = BlockAgent::new(id, u, wm, engine.clone());
+            let mut agent =
+                BlockAgent::new(id, u, wm, engine.clone()).with_grid(spec.p, spec.q);
+            if let Some(cfg) = liveness {
+                agent = agent.with_liveness(cfg);
+            }
             if dormant.contains(&k) {
                 agent = agent.dormant();
             }
@@ -126,12 +134,14 @@ impl MultiplexTransport {
         }
 
         let q = spec.q;
+        let wire_seq = Arc::new(std::sync::atomic::AtomicU64::new(0));
         let mut threads = Vec::with_capacity(w);
         for (wi, (rx, mut agents)) in rxs.into_iter().zip(shards).enumerate() {
             let router = Router {
                 peers: peers.clone(),
                 driver: driver_tx.clone(),
                 tap: tap.clone(),
+                wire_seq: wire_seq.clone(),
             };
             threads.push(
                 thread::Builder::new()
@@ -184,6 +194,16 @@ impl Transport for MultiplexTransport {
         self.driver_rx
             .recv()
             .map_err(|_| Error::Gossip("all mux workers disconnected".into()))
+    }
+
+    fn recv_timeout(&self, timeout: std::time::Duration) -> Result<Option<DriverMsg>> {
+        match self.driver_rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(Some(msg)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Gossip("all mux workers disconnected".into()))
+            }
+        }
     }
 
     fn injector(&self) -> Arc<dyn PeerSender> {

@@ -1,16 +1,31 @@
-//! Simulated links: seeded latency, jitter and drop-with-retry over
-//! any inner transport.
+//! Simulated links: seeded latency, jitter, drop-with-retry,
+//! duplication, reordering and stragglers over any inner transport.
 //!
 //! [`SimTransport`] interposes a *link thread* between agents: the
 //! inner transport's workers divert every peer-to-peer message to the
 //! link (already [`codec`]-encoded, so bytes-on-the-wire are measured
 //! where they are produced), the link holds each frame for the
 //! configured per-hop latency ± jitter, may "drop" it (rescheduling a
-//! retransmission after `retry_after_us`, like a reliable transport
-//! over a lossy wire), and finally decodes and injects it into the
-//! destination agent's queue. Control-plane traffic (dispatch, cost,
-//! shutdown) bypasses the link — the simulated network is the *block*
-//! network, matching the paper's no-central-server learning path.
+//! retransmission with bounded exponential backoff, like a reliable
+//! transport over a lossy wire), may duplicate or reorder it
+//! ([`SimConfig::duplicate_prob`], [`SimConfig::reorder_prob`]), and
+//! finally decodes and injects it into the destination agent's queue,
+//! wrapped in [`AgentMsg::Sequenced`] so the agent can deduplicate
+//! replayed frames by wire sequence number. Control-plane traffic
+//! (dispatch, cost, shutdown, liveness pulses) bypasses the link — the
+//! simulated network is the *block* network, matching the paper's
+//! no-central-server learning path.
+//!
+//! **Virtual time.** The link keeps its own microsecond clock `vnow`.
+//! Every scheduling decision — jitter, drops, retry backoff, partition
+//! heal instants, straggler slowdowns — is taken in virtual time; the
+//! wall clock is only used to *pace* `vnow` while the admission channel
+//! is open (`recv_timeout` toward the next due instant), and the clock
+//! then jumps straight to that due instant. `vnow` advances only to
+//! instants the heap itself produced and never on admission, so the
+//! delivery schedule is a function of the seeded RNG streams and the
+//! admission history — not of host load. Once the channel closes, the
+//! remaining heap drains in virtual order with no sleeping at all.
 //!
 //! **Determinism.** Every link decision draws from a per-directed-edge
 //! RNG stream seeded by `seed ⊕ mix(edge)`. Under the round-barrier
@@ -24,22 +39,28 @@
 //! `max_retries` times, after which it is delivered regardless — the
 //! model is a lossy wire under a reliable link layer, not message
 //! erasure (which would wedge the three-party update protocol).
+//! Retransmission `k` waits `retry_after_us · 2^min(k,6)` of virtual
+//! time: bounded exponential backoff.
 //!
-//! **Link faults.** [`Transport::inject_fault`] feeds
-//! [`LinkFault::Partition`] into the link thread: a partitioned grid
-//! edge holds every delivery attempt (in both directions) until the
-//! partition's wall-clock heal instant, counted in
+//! **Link faults.** [`Transport::inject_fault`] feeds [`LinkFault`]s
+//! into the link thread. A [`LinkFault::Partition`] severs a grid
+//! edge: every delivery attempt (in both directions) is held until the
+//! partition's *virtual* heal instant, counted in
 //! [`WireSnapshot::partitioned`]. Held frames are delayed, never
 //! erased, and retry attempts while severed do not count against
 //! `max_retries` nor appear in `wire_bytes` — a severed wire transmits
-//! nothing. Partitions heal by expiry only, so the executed fault
-//! trace is a complete record of the run's link history.
+//! nothing. A [`LinkFault::Slowdown`] turns a block into a straggler:
+//! while it lasts, every frame to or from that block is admitted with
+//! its per-hop delay multiplied by the slowdown factor, counted in
+//! [`WireSnapshot::stalled`]. Both faults heal by virtual expiry only,
+//! so the executed fault trace is a complete record of the run's link
+//! history.
 
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::engine::Engine;
 use crate::grid::{BlockId, GridSpec};
@@ -63,10 +84,18 @@ pub struct SimConfig {
     pub jitter_us: u64,
     /// Probability that a delivery attempt is dropped (and retried).
     pub drop_prob: f64,
-    /// Retransmission timeout after a drop, microseconds.
+    /// Retransmission timeout after a drop, microseconds (base of the
+    /// bounded exponential backoff).
     pub retry_after_us: u64,
     /// Attempts after which a frame is delivered unconditionally.
     pub max_retries: u32,
+    /// Probability that an admitted frame is delivered twice. The copy
+    /// gets its own jitter draw; the receiving agent deduplicates by
+    /// wire sequence number.
+    pub duplicate_prob: f64,
+    /// Probability that an admitted frame is held back ~3 extra hop
+    /// latencies, letting later frames on the same edge overtake it.
+    pub reorder_prob: f64,
     /// Seed of the per-edge randomness streams.
     pub seed: u64,
 }
@@ -79,6 +108,8 @@ impl Default for SimConfig {
             drop_prob: 0.0,
             retry_after_us: 200,
             max_retries: 16,
+            duplicate_prob: 0.0,
+            reorder_prob: 0.0,
             seed: 0x1147,
         }
     }
@@ -101,6 +132,8 @@ pub struct WireStats {
     wire_bytes: AtomicU64,
     drops: AtomicU64,
     partitioned: AtomicU64,
+    duplicated: AtomicU64,
+    stalled: AtomicU64,
 }
 
 /// A point-in-time copy of [`WireStats`].
@@ -117,6 +150,10 @@ pub struct WireSnapshot {
     /// Delivery attempts held by a link partition (each one retried at
     /// the heal instant).
     pub partitioned: u64,
+    /// Frames delivered twice by the duplication fault.
+    pub duplicated: u64,
+    /// Frames admitted under an active straggler slowdown.
+    pub stalled: u64,
 }
 
 impl WireStats {
@@ -127,15 +164,18 @@ impl WireStats {
             wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
             drops: self.drops.load(Ordering::Relaxed),
             partitioned: self.partitioned.load(Ordering::Relaxed),
+            duplicated: self.duplicated.load(Ordering::Relaxed),
+            stalled: self.stalled.load(Ordering::Relaxed),
         }
     }
 }
 
-/// A frame scheduled on the link, ordered by due time then admission
-/// sequence (so simultaneous frames keep FIFO order — required for the
-/// zero-latency bit-identity guarantee).
+/// A frame scheduled on the link, ordered by virtual due instant then
+/// admission sequence (so simultaneous frames keep FIFO order —
+/// required for the zero-latency bit-identity guarantee).
 struct Pending {
-    due: Instant,
+    /// Virtual due instant, microseconds on the link clock.
+    due: u64,
     seq: u64,
     frame: LinkFrame,
     attempt: u32,
@@ -179,6 +219,7 @@ impl SimTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         cfg: SimConfig,
+        liveness: Option<crate::gossip::LivenessConfig>,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
         let inner = Box::new(ChannelTransport::spawn_tapped(
@@ -187,6 +228,7 @@ impl SimTransport {
             state,
             checkpoints,
             dormant,
+            liveness,
             Some(tx),
         ));
         Self::with_link(inner, rx, cfg, spec.q)
@@ -202,6 +244,7 @@ impl SimTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         cfg: SimConfig,
+        liveness: Option<crate::gossip::LivenessConfig>,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
         let inner = Box::new(MultiplexTransport::spawn_tapped(
@@ -211,6 +254,7 @@ impl SimTransport {
             workers,
             checkpoints,
             dormant,
+            liveness,
             Some(tx),
         ));
         Self::with_link(inner, rx, cfg, spec.q)
@@ -251,6 +295,10 @@ impl Transport for SimTransport {
 
     fn recv(&self) -> Result<DriverMsg> {
         self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<DriverMsg>> {
+        self.inner.recv_timeout(timeout)
     }
 
     fn injector(&self) -> Arc<dyn PeerSender> {
@@ -301,30 +349,89 @@ fn edge_rng<'a>(
         .or_insert_with(|| Rng::seed_from_u64(cfg.seed ^ key.wrapping_mul(0x9e3779b97f4a7c15)))
 }
 
-#[allow(clippy::too_many_arguments)]
-fn admit(
-    frame: LinkFrame,
-    heap: &mut BinaryHeap<Pending>,
-    rngs: &mut HashMap<u64, Rng>,
-    seq: &mut u64,
-    cfg: &SimConfig,
-    q: usize,
-    stats: &WireStats,
-) {
+/// Virtual-time retransmission wait before attempt `attempt + 1`:
+/// bounded exponential backoff on the configured base.
+fn retry_backoff_us(cfg: &SimConfig, attempt: u32) -> u64 {
+    cfg.retry_after_us.max(1) << attempt.min(6)
+}
+
+/// Mutable link-thread state: admission and delivery share the virtual
+/// clock, the RNG streams and the active fault tables.
+struct LinkState {
+    heap: BinaryHeap<Pending>,
+    rngs: HashMap<u64, Rng>,
+    /// Severed links: undirected edge key → virtual heal instant.
+    /// Entries expire lazily at delivery attempts.
+    partitions: HashMap<u64, u64>,
+    /// Straggler blocks: linear block index → (slowdown factor, virtual
+    /// instant the slowdown ends). Applied at admission.
+    slow: HashMap<usize, (u32, u64)>,
+    /// Virtual clock, microseconds. Advances only to heap due instants.
+    vnow: u64,
+    seq: u64,
+}
+
+impl LinkState {
+    fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            rngs: HashMap::new(),
+            partitions: HashMap::new(),
+            slow: HashMap::new(),
+            vnow: 0,
+            seq: 0,
+        }
+    }
+}
+
+fn admit(frame: LinkFrame, st: &mut LinkState, cfg: &SimConfig, q: usize, stats: &WireStats) {
     stats.messages.fetch_add(1, Ordering::Relaxed);
     stats
         .payload_bytes
         .fetch_add(frame.bytes.len() as u64, Ordering::Relaxed);
+    let slow_factor = [frame.from.index(q), frame.to.index(q)]
+        .into_iter()
+        .filter_map(|k| st.slow.get(&k).copied())
+        .filter(|&(_, until)| st.vnow < until)
+        .map(|(f, _)| f.max(1) as u64)
+        .max()
+        .unwrap_or(1);
     let key = edge_key(q, frame.from, frame.to);
-    let rng = edge_rng(rngs, cfg, key);
+    let rng = edge_rng(&mut st.rngs, cfg, key);
     let jitter = if cfg.jitter_us > 0 {
         (rng.f64() * cfg.jitter_us as f64) as u64
     } else {
         0
     };
-    let due = Instant::now() + Duration::from_micros(cfg.latency_us + jitter);
-    heap.push(Pending { due, seq: *seq, frame, attempt: 0 });
-    *seq += 1;
+    let mut delay = cfg.latency_us + jitter;
+    if slow_factor > 1 {
+        // Straggler hop: even a zero-latency link slows to a crawl.
+        delay = delay.max(1).saturating_mul(slow_factor);
+        stats.stalled.fetch_add(1, Ordering::Relaxed);
+    }
+    if cfg.reorder_prob > 0.0 && rng.f64() < cfg.reorder_prob {
+        // Hold the frame back ~3 extra hops so later admissions on the
+        // same edge overtake it.
+        delay += 3 * cfg.latency_us.max(1);
+    }
+    if cfg.duplicate_prob > 0.0 && rng.f64() < cfg.duplicate_prob {
+        let dup_jitter = if cfg.jitter_us > 0 {
+            (rng.f64() * cfg.jitter_us as f64) as u64
+        } else {
+            0
+        };
+        stats.duplicated.fetch_add(1, Ordering::Relaxed);
+        let copy = LinkFrame { from: frame.from, to: frame.to, bytes: frame.bytes.clone() };
+        st.heap.push(Pending {
+            due: st.vnow + cfg.latency_us.max(1) + dup_jitter,
+            seq: st.seq,
+            frame: copy,
+            attempt: 0,
+        });
+        st.seq += 1;
+    }
+    st.heap.push(Pending { due: st.vnow + delay, seq: st.seq, frame, attempt: 0 });
+    st.seq += 1;
 }
 
 fn link_loop(
@@ -335,36 +442,41 @@ fn link_loop(
     q: usize,
     stats: Arc<WireStats>,
 ) {
-    let mut heap: BinaryHeap<Pending> = BinaryHeap::new();
-    let mut rngs: HashMap<u64, Rng> = HashMap::new();
-    // Severed links: undirected edge key → heal instant. Entries expire
-    // lazily at delivery attempts.
-    let mut partitions: HashMap<u64, Instant> = HashMap::new();
-    let mut seq = 0u64;
+    let mut st = LinkState::new();
     let mut open = true;
-    while open || !heap.is_empty() {
-        // Apply injected faults first: a partition sent before a frame
+    while open || !st.heap.is_empty() {
+        // Apply injected faults first: a fault sent before a frame
         // (supervisor ordering) is always registered before that frame
-        // can become deliverable.
+        // can become deliverable. Durations run on the virtual clock
+        // from the current instant.
         while let Ok(f) = faults.try_recv() {
             match f {
                 LinkFault::Partition { a, b, duration } => {
-                    partitions.insert(undirected_key(q, a, b), Instant::now() + duration);
+                    st.partitions.insert(
+                        undirected_key(q, a, b),
+                        st.vnow + duration.as_micros() as u64,
+                    );
+                }
+                LinkFault::Slowdown { block, factor, duration } => {
+                    st.slow.insert(
+                        block.index(q),
+                        (factor.max(1), st.vnow + duration.as_micros() as u64),
+                    );
                 }
             }
         }
         // Deliver (or drop/hold-and-reschedule) everything due.
-        let now = Instant::now();
-        while heap.peek().is_some_and(|p| p.due <= now) {
-            let p = heap.pop().expect("peeked");
+        while st.heap.peek().is_some_and(|p| p.due <= st.vnow) {
+            let p = st.heap.pop().expect("peeked");
             let ukey = undirected_key(q, p.frame.from, p.frame.to);
-            if let Some(&until) = partitions.get(&ukey) {
-                if Instant::now() < until {
+            if let Some(&until) = st.partitions.get(&ukey) {
+                if st.vnow < until {
                     // Severed wire: nothing transmits. Hold the frame
-                    // until the heal instant; the attempt counter is
-                    // untouched so partitions can never force-deliver.
+                    // until the virtual heal instant; the attempt
+                    // counter is untouched so partitions can never
+                    // force-deliver.
                     stats.partitioned.fetch_add(1, Ordering::Relaxed);
-                    heap.push(Pending {
+                    st.heap.push(Pending {
                         due: until,
                         seq: p.seq,
                         frame: p.frame,
@@ -372,7 +484,7 @@ fn link_loop(
                     });
                     continue;
                 }
-                partitions.remove(&ukey);
+                st.partitions.remove(&ukey);
             }
             stats
                 .wire_bytes
@@ -380,11 +492,11 @@ fn link_loop(
             let key = edge_key(q, p.frame.from, p.frame.to);
             if cfg.drop_prob > 0.0
                 && p.attempt < cfg.max_retries
-                && edge_rng(&mut rngs, &cfg, key).f64() < cfg.drop_prob
+                && edge_rng(&mut st.rngs, &cfg, key).f64() < cfg.drop_prob
             {
                 stats.drops.fetch_add(1, Ordering::Relaxed);
-                heap.push(Pending {
-                    due: p.due + Duration::from_micros(cfg.retry_after_us.max(1)),
+                st.heap.push(Pending {
+                    due: p.due + retry_backoff_us(&cfg, p.attempt),
                     seq: p.seq,
                     frame: p.frame,
                     attempt: p.attempt + 1,
@@ -392,29 +504,36 @@ fn link_loop(
                 continue;
             }
             match codec::decode(&p.frame.bytes) {
-                Ok(msg) => {
-                    if let Err(e) = inject.send_to(p.frame.to, msg) {
+                Ok((msg, wire_seq)) => {
+                    // Wrapped so the agent can deduplicate replays of
+                    // this exact frame by wire sequence number.
+                    let wrapped =
+                        AgentMsg::Sequenced { seq: wire_seq, inner: Box::new(msg) };
+                    if let Err(e) = inject.send_to(p.frame.to, wrapped) {
                         log::warn!("sim link delivery to {}: {e}", p.frame.to);
                     }
                 }
                 Err(e) => log::warn!("sim link: {e}"),
             }
         }
-        // Wait for the next frame or the next due time.
-        if let Some(p) = heap.peek() {
-            let wait = p.due.saturating_duration_since(Instant::now());
+        // Wait for the next frame, or pace the virtual clock to the
+        // next due instant. Admissions never move the clock — only
+        // timing out toward a due instant does — so the schedule cannot
+        // drift under host load.
+        if let Some(next_due) = st.heap.peek().map(|p| p.due) {
             if open {
-                match rx.recv_timeout(wait) {
-                    Ok(f) => admit(f, &mut heap, &mut rngs, &mut seq, &cfg, q, &stats),
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                match rx.recv_timeout(Duration::from_micros(next_due - st.vnow)) {
+                    Ok(f) => admit(f, &mut st, &cfg, q, &stats),
+                    Err(mpsc::RecvTimeoutError::Timeout) => st.vnow = next_due,
                     Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
                 }
-            } else if !wait.is_zero() {
-                thread::sleep(wait);
+            } else {
+                // Draining: fast-forward, never sleep.
+                st.vnow = next_due;
             }
         } else {
             match rx.recv() {
-                Ok(f) => admit(f, &mut heap, &mut rngs, &mut seq, &cfg, q, &stats),
+                Ok(f) => admit(f, &mut st, &cfg, q, &stats),
                 Err(_) => open = false,
             }
         }
@@ -427,17 +546,16 @@ mod tests {
 
     #[test]
     fn pending_orders_by_due_then_seq() {
-        let t0 = Instant::now();
-        let mk = |due: Instant, seq: u64| Pending {
+        let mk = |due: u64, seq: u64| Pending {
             due,
             seq,
             frame: LinkFrame { from: BlockId::new(0, 0), to: BlockId::new(0, 1), bytes: vec![] },
             attempt: 0,
         };
         let mut heap = BinaryHeap::new();
-        heap.push(mk(t0 + Duration::from_micros(5), 2));
-        heap.push(mk(t0, 1));
-        heap.push(mk(t0, 0));
+        heap.push(mk(5, 2));
+        heap.push(mk(0, 1));
+        heap.push(mk(0, 0));
         assert_eq!(heap.pop().unwrap().seq, 0, "FIFO at equal due");
         assert_eq!(heap.pop().unwrap().seq, 1);
         assert_eq!(heap.pop().unwrap().seq, 2);
@@ -464,7 +582,23 @@ mod tests {
         assert_eq!(c.latency_us, 0);
         assert_eq!(c.jitter_us, 0);
         assert_eq!(c.drop_prob, 0.0);
+        assert_eq!(c.duplicate_prob, 0.0);
+        assert_eq!(c.reorder_prob, 0.0);
         assert_eq!(c.seed, 3);
+    }
+
+    #[test]
+    fn retry_backoff_is_bounded_exponential() {
+        let cfg = SimConfig { retry_after_us: 100, ..SimConfig::default() };
+        assert_eq!(retry_backoff_us(&cfg, 0), 100);
+        assert_eq!(retry_backoff_us(&cfg, 1), 200);
+        assert_eq!(retry_backoff_us(&cfg, 3), 800);
+        // Capped: attempt 6 and every later attempt wait the same.
+        assert_eq!(retry_backoff_us(&cfg, 6), 6400);
+        assert_eq!(retry_backoff_us(&cfg, 40), 6400);
+        // A zero base still makes progress.
+        let z = SimConfig { retry_after_us: 0, ..SimConfig::default() };
+        assert_eq!(retry_backoff_us(&z, 0), 1);
     }
 
     #[test]
@@ -475,12 +609,16 @@ mod tests {
         s.wire_bytes.fetch_add(140, Ordering::Relaxed);
         s.drops.fetch_add(2, Ordering::Relaxed);
         s.partitioned.fetch_add(5, Ordering::Relaxed);
+        s.duplicated.fetch_add(7, Ordering::Relaxed);
+        s.stalled.fetch_add(11, Ordering::Relaxed);
         let snap = s.snapshot();
         assert_eq!(snap.messages, 3);
         assert_eq!(snap.payload_bytes, 100);
         assert_eq!(snap.wire_bytes, 140);
         assert_eq!(snap.drops, 2);
         assert_eq!(snap.partitioned, 5);
+        assert_eq!(snap.duplicated, 7);
+        assert_eq!(snap.stalled, 11);
     }
 
     #[test]
@@ -492,5 +630,47 @@ mod tests {
             undirected_key(4, a, BlockId::new(0, 2)),
             "distinct links get distinct keys"
         );
+    }
+
+    #[test]
+    fn straggler_slowdown_delays_admission_in_virtual_time() {
+        let cfg = SimConfig { latency_us: 10, jitter_us: 0, ..SimConfig::default() };
+        let stats = WireStats::default();
+        let mut st = LinkState::new();
+        st.vnow = 100;
+        // Block (0,1) is a straggler ×8 until virtual instant 1000.
+        st.slow.insert(BlockId::new(0, 1).index(4), (8, 1000));
+        let frame = |to| LinkFrame { from: BlockId::new(0, 0), to, bytes: vec![1, 2, 3] };
+        admit(frame(BlockId::new(0, 2)), &mut st, &cfg, 4, &stats);
+        admit(frame(BlockId::new(0, 1)), &mut st, &cfg, 4, &stats);
+        let first = st.heap.pop().unwrap();
+        let second = st.heap.pop().unwrap();
+        assert_eq!(first.due, 110, "untouched hop keeps base latency");
+        assert_eq!(second.due, 180, "straggler hop is latency × factor");
+        assert_eq!(stats.snapshot().stalled, 1);
+        // Past the slowdown window the hop recovers.
+        st.vnow = 2000;
+        admit(frame(BlockId::new(0, 1)), &mut st, &cfg, 4, &stats);
+        assert_eq!(st.heap.pop().unwrap().due, 2010);
+        assert_eq!(stats.snapshot().stalled, 1, "expired slowdown stalls nothing");
+    }
+
+    #[test]
+    fn duplicate_admission_schedules_two_copies() {
+        let cfg = SimConfig {
+            latency_us: 10,
+            jitter_us: 0,
+            duplicate_prob: 1.0,
+            ..SimConfig::default()
+        };
+        let stats = WireStats::default();
+        let mut st = LinkState::new();
+        let frame =
+            LinkFrame { from: BlockId::new(0, 0), to: BlockId::new(0, 1), bytes: vec![9] };
+        admit(frame, &mut st, &cfg, 4, &stats);
+        assert_eq!(st.heap.len(), 2, "original + duplicate");
+        let snap = stats.snapshot();
+        assert_eq!(snap.messages, 1, "a duplicate is not a new offered message");
+        assert_eq!(snap.duplicated, 1);
     }
 }

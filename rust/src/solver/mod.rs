@@ -100,6 +100,9 @@ pub struct SolverReport {
     /// Executed fault actions (crash-restores, link partitions), in
     /// firing order — empty for fault-free runs and non-gossip drivers.
     pub faults: Vec<crate::net::FaultRecord>,
+    /// Liveness summary of a decentralized (pulse-clocked) run; `None`
+    /// when the supervisor orchestrated faults directly.
+    pub liveness: Option<crate::metrics::LivenessStats>,
 }
 
 impl SolverReport {
@@ -116,10 +119,17 @@ impl SolverReport {
             .iter()
             .map(|f| match f {
                 crate::net::FaultRecord::Kill { lost_updates, .. } => *lost_updates,
+                // Silent kills roll updates back too, but nobody
+                // observes the count (that is the point of "silent");
+                // expiries are complete-then-undo, so like aborts they
+                // lose no surviving work.
                 crate::net::FaultRecord::Abort { .. }
                 | crate::net::FaultRecord::Partition { .. }
                 | crate::net::FaultRecord::Join { .. }
-                | crate::net::FaultRecord::Retire { .. } => 0,
+                | crate::net::FaultRecord::Retire { .. }
+                | crate::net::FaultRecord::SilentKill { .. }
+                | crate::net::FaultRecord::Stall { .. }
+                | crate::net::FaultRecord::Expire { .. } => 0,
             })
             .sum()
     }
@@ -170,6 +180,32 @@ impl SolverReport {
         self.faults
             .iter()
             .filter(|f| matches!(f, crate::net::FaultRecord::Retire { .. }))
+            .count()
+    }
+
+    /// Crashes nobody announced — the liveness layer had to detect
+    /// these from silence alone.
+    pub fn silent_kill_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::SilentKill { .. }))
+            .count()
+    }
+
+    /// Executed per-edge slowdowns (stragglers).
+    pub fn stall_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::Stall { .. }))
+            .count()
+    }
+
+    /// Structures expired by the liveness layer (anchor deadline or
+    /// driver token deadline) and re-enqueued against survivors.
+    pub fn expire_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, crate::net::FaultRecord::Expire { .. }))
             .count()
     }
 

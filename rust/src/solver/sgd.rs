@@ -134,6 +134,7 @@ impl SequentialDriver {
             wall: timer.elapsed(),
             engine: engine.name().to_string(),
             faults: Vec::new(),
+            liveness: None,
         })
     }
 }

@@ -1,6 +1,6 @@
 //! Golden-schema tests for the machine-readable bench artifacts:
 //! `BENCH_churn.json`, `BENCH_grow.json`, `BENCH_shrink.json`,
-//! `BENCH_parallel_scaling.json`.
+//! `BENCH_liveness.json`, `BENCH_parallel_scaling.json`.
 //!
 //! These files are the repo's perf trajectory — downstream tooling
 //! diffs them across commits — so format drift must fail CI instead of
@@ -10,11 +10,12 @@
 //! and value types at every level.
 
 use gridmc::experiments::parallel::{
-    write_churn_json, write_grow_json, write_json, write_shrink_json, ChurnOutcome, ChurnRun,
-    GrowOutcome, GrowRun, ScalingPoint, ShrinkOutcome, ShrinkRun,
+    write_churn_json, write_grow_json, write_json, write_liveness_json, write_shrink_json,
+    ChurnOutcome, ChurnRun, GrowOutcome, GrowRun, LivenessOutcome, LivenessRun, ScalingPoint,
+    ShrinkOutcome, ShrinkRun,
 };
 use gridmc::grid::BlockId;
-use gridmc::metrics::{percentiles, RecoveryOverhead};
+use gridmc::metrics::{percentiles, LivenessStats, RecoveryOverhead};
 use gridmc::net::FaultRecord;
 
 use std::collections::BTreeMap;
@@ -239,6 +240,19 @@ fn assert_event_schema(e: &Json, ctx: &str) {
             assert!(obj["step"].is_num() && obj["version"].is_num());
             assert!(obj["handoffs"].is_num() && obj["block"].is_str());
         }
+        "silent-kill" => {
+            assert_keys(e, &["step", "event", "block"], ctx);
+            assert!(obj["step"].is_num() && obj["block"].is_str());
+        }
+        "stall" => {
+            assert_keys(e, &["step", "event", "block", "factor", "duration_us"], ctx);
+            assert!(obj["step"].is_num() && obj["factor"].is_num());
+            assert!(obj["duration_us"].is_num() && obj["block"].is_str());
+        }
+        "expire" => {
+            assert_keys(e, &["step", "event", "anchor", "victim"], ctx);
+            assert!(obj["step"].is_num() && obj["anchor"].is_str() && obj["victim"].is_str());
+        }
         other => panic!("{ctx}: unknown event kind {other:?}"),
     }
 }
@@ -454,6 +468,105 @@ fn shrink_json_schema_is_pinned() {
     assert_eq!(events.len(), 2);
     for (k, e) in events.iter().enumerate() {
         assert_event_schema(e, &format!("shrink.events[{k}]"));
+    }
+}
+
+#[test]
+fn liveness_json_schema_is_pinned() {
+    let run = |rmse: f64, wall_ms: u64| LivenessRun {
+        rmse,
+        final_cost: 1e-3,
+        iters: 4000,
+        wall: Duration::from_millis(wall_ms),
+    };
+    let outcome = LivenessOutcome {
+        grid: (4, 4),
+        clean: run(0.10, 900),
+        faulted: run(0.103, 1080),
+        overhead: RecoveryOverhead {
+            kills: 0,
+            partitions: 1,
+            lost_updates: 0,
+            clean_rmse: 0.10,
+            churned_rmse: 0.103,
+            clean_wall: Duration::from_millis(900),
+            churned_wall: Duration::from_millis(1080),
+        },
+        stats: LivenessStats {
+            pulse_ticks: 820,
+            expired_structures: 3,
+            detection_lag_mean_ticks: 42.7,
+            detection_lag_max_ticks: 61,
+            false_suspicions: 0,
+            quarantined_blocks: 0,
+        },
+        silent_kills: 2,
+        stalls: 2,
+        trace: vec![
+            FaultRecord::SilentKill { step: 510, block: BlockId::new(1, 2) },
+            FaultRecord::Stall {
+                step: 900,
+                block: BlockId::new(2, 2),
+                factor: 10_000,
+                duration_us: 1_000_000,
+            },
+            FaultRecord::Expire {
+                step: 902,
+                anchor: BlockId::new(2, 1),
+                victim: BlockId::new(2, 2),
+            },
+        ],
+    };
+    let path = temp_path("BENCH_liveness.json");
+    write_liveness_json(&path, &outcome).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap());
+    assert_keys(
+        &doc,
+        &[
+            "bench",
+            "git_rev",
+            "timestamp_unix",
+            "timestamp_utc",
+            "grid",
+            "unit",
+            "clean",
+            "faulted",
+            "recovery",
+            "detection",
+            "events",
+        ],
+        "liveness",
+    );
+    let top = doc.as_obj();
+    assert_header(top, "liveness");
+    assert_eq!(top["unit"], Json::Str("rmse".into()));
+    assert_keys(&top["grid"], &["p", "q", "agents"], "liveness.grid");
+    assert_run_keys(&top["clean"], &[], "liveness.clean");
+    assert_run_keys(&top["faulted"], &[], "liveness.faulted");
+    assert_keys(
+        &top["recovery"],
+        &["silent_kills", "stalls", "partitions", "rmse_ratio", "wall_overhead"],
+        "liveness.recovery",
+    );
+    assert_keys(
+        &top["detection"],
+        &[
+            "pulse_ticks",
+            "expired_structures",
+            "lag_mean_ticks",
+            "lag_max_ticks",
+            "false_suspicions",
+            "quarantined_blocks",
+        ],
+        "liveness.detection",
+    );
+    for (k, v) in top["detection"].as_obj() {
+        assert!(v.is_num(), "liveness.detection.{k} must be numeric");
+    }
+    let events = top["events"].as_arr();
+    assert_eq!(events.len(), 3);
+    for (k, e) in events.iter().enumerate() {
+        assert_event_schema(e, &format!("liveness.events[{k}]"));
     }
 }
 

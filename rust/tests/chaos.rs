@@ -23,7 +23,13 @@
 //! * the elastic acceptance scenario: mid-structure kills + a block
 //!   joining at a scheduled step, both recovering from the durable
 //!   `DiskSink`, within 5% of the fault-free RMSE and byte-identical
-//!   across reruns and transports.
+//!   across reruns and transports;
+//! * the decentralized liveness acceptance: silent kills, straggler
+//!   stalls, duplicated/reordered frames and a healed partition with
+//!   supervisor orchestration disabled — anchor deadlines and driver
+//!   quarantine detect everything, zero false suspicions, within 5% of
+//!   the fault-free twin, byte-identical parallel-driver traces;
+//! * no leaked threads across straggler/stall runs either.
 //!
 //! Tests serialize on a shared mutex: thread-count accounting and the
 //! 32-plan sweep would otherwise interfere with each other.
@@ -189,6 +195,7 @@ fn same_seeds_reproduce_byte_identical_traces() {
         partition_duration_us: 600,
         checkpoint_every: 4,
         seed: 0xC0A7,
+        ..Default::default()
     };
     let run = || {
         run_parallel(spec, &train, 1200, FaultPlan::generate(spec, &fcfg), 4)
@@ -230,6 +237,7 @@ fn thirty_two_fault_plans_all_recover() {
             partition_duration_us: 300,
             checkpoint_every: 1 + (i % 8),
             seed: base.wrapping_add(i * 7919),
+            ..Default::default()
         };
         let plan = FaultPlan::generate(spec, &fcfg);
         let kills = fcfg.kills;
@@ -525,6 +533,207 @@ fn elastic_acceptance_mid_structure_kills_plus_durable_join() {
         "elastic RMSE {rmse} vs fault-free {clean_rmse} (> 5% off)"
     );
     let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------------
+// Decentralized liveness acceptance: supervisor orchestration disabled.
+
+/// Noisy-wire sim stack with the liveness layer armed: latency,
+/// jitter, duplicated and reordered frames — the conditions the
+/// heartbeat/dedup machinery exists for.
+fn liveness_net(seed: u64) -> NetConfig {
+    NetConfig::sim(SimConfig {
+        latency_us: 10,
+        jitter_us: 5,
+        duplicate_prob: 0.10,
+        reorder_prob: 0.10,
+        seed,
+        ..SimConfig::default()
+    })
+    .with_liveness(gridmc::gossip::LivenessConfig::default())
+}
+
+/// The liveness plan: two silent kills (no supervisor fiat — the
+/// restarted agents lose un-checkpointed work and nobody tells the
+/// driver), a partition that heals on its own, and one hard straggler
+/// stall that must be expired by its anchor's deadline.
+fn liveness_plan() -> FaultPlan {
+    FaultPlan::new()
+        .kill(500, BlockId::new(1, 1))
+        .kill(900, BlockId::new(2, 3))
+        .partition(300, BlockId::new(0, 0), BlockId::new(0, 1), std::time::Duration::from_micros(1500))
+        .stall(1400, BlockId::new(2, 2), 20_000, std::time::Duration::from_millis(300))
+}
+
+/// Executed events minus the anchor-expiry records: the scheduled
+/// faults, which must replay byte-for-byte on any driver.
+fn fired_subset(report: &SolverReport) -> String {
+    let fired: Vec<FaultRecord> = report
+        .faults
+        .iter()
+        .filter(|f| !matches!(f, FaultRecord::Expire { .. }))
+        .cloned()
+        .collect();
+    render_trace(&fired)
+}
+
+/// The decentralized acceptance scenario on the round-barrier driver:
+/// silent kills, a straggler stall, duplicated/reordered frames and a
+/// healed partition — with supervisor orchestration disabled, the grid
+/// must detect everything itself (anchor deadlines + driver
+/// quarantine), converge within 5% of the fault-free liveness-armed
+/// twin, report zero false suspicions, and replay the full event trace
+/// (expiries included — the barrier quantizes their steps)
+/// byte-for-byte across reruns.
+#[test]
+fn decentralized_liveness_acceptance_parallel() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 4000;
+    let run = |plan: FaultPlan| {
+        ParallelDriver::new(spec, cfg(iters), 4)
+            .with_net(liveness_net(71))
+            .with_faults(plan)
+            .with_checkpoints(4)
+            .run(Box::new(NativeEngine::new()), &train)
+            .expect("decentralized run must not abort the driver")
+    };
+    let (clean_rep, clean_state) = run(FaultPlan::new());
+    let clean_stats = clean_rep.liveness.expect("liveness stats armed");
+    assert_eq!(clean_stats.false_suspicions, 0, "steady state must not suspect anyone");
+    assert_eq!(clean_stats.expired_structures, 0, "{:?}", clean_rep.faults);
+
+    let (ra, sa) = run(liveness_plan());
+    let (rb, sb) = run(liveness_plan());
+
+    assert_eq!(ra.silent_kill_count(), 2, "{:?}", ra.faults);
+    assert_eq!(ra.kill_count(), 0, "no supervised restores in decentralized mode");
+    assert_eq!(ra.stall_count(), 1, "{:?}", ra.faults);
+    assert_eq!(ra.partition_count(), 1, "{:?}", ra.faults);
+    let stats = ra.liveness.expect("liveness stats");
+    assert_eq!(stats.false_suspicions, 0, "every suspicion must trace to a real fault");
+    assert!(
+        stats.expired_structures >= 1,
+        "the stalled anchor must expire something: {:?}",
+        ra.faults
+    );
+    assert_eq!(
+        ra.expire_count() as u64,
+        stats.expired_structures,
+        "trace and stats must agree on expiries"
+    );
+
+    let trace = render_trace(&ra.faults);
+    assert!(!trace.is_empty());
+    assert_eq!(trace, render_trace(&rb.faults), "rerun trace differs");
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    for id in spec.blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "U of {id} differs across reruns");
+        assert_eq!(sa.w(id), sb.w(id), "W of {id} differs across reruns");
+    }
+
+    let clean_rmse = clean_state.rmse(&test);
+    let rmse = sa.rmse(&test);
+    assert!(rmse.is_finite() && clean_rmse.is_finite());
+    assert!(
+        rmse <= clean_rmse * 1.05,
+        "decentralized RMSE {rmse} vs fault-free {clean_rmse} (> 5% off)"
+    );
+    assert!(ra.curve.orders_of_reduction() > 2.0, "{:?}", ra.curve.points);
+}
+
+/// The same scenario on the barrier-free driver. The scheduled faults
+/// still replay byte-for-byte; anchor-expiry *steps* are quantized by
+/// the completed-update counter, which races in-flight completions in
+/// a barrier-free loop, so reruns pin the expiry count rather than the
+/// full trace bytes.
+#[test]
+fn decentralized_liveness_acceptance_async() {
+    let _g = serialize();
+    let (spec, train, test) = problem();
+    let iters = 3000;
+    let run = |plan: FaultPlan| {
+        AsyncDriver::new(spec, cfg(iters), 5)
+            .with_net(liveness_net(72))
+            .with_faults(plan)
+            .with_checkpoints(4)
+            .run(Box::new(NativeEngine::new()), &train)
+            .expect("decentralized async run must not abort the driver")
+    };
+    let (clean_rep, clean_state) = run(FaultPlan::new());
+    assert_eq!(clean_rep.liveness.unwrap().false_suspicions, 0);
+
+    let (ra, sa) = run(liveness_plan());
+    let (rb, _) = run(liveness_plan());
+
+    assert_eq!(ra.silent_kill_count(), 2, "{:?}", ra.faults);
+    assert_eq!(ra.stall_count(), 1, "{:?}", ra.faults);
+    let stats = ra.liveness.expect("liveness stats");
+    assert_eq!(stats.false_suspicions, 0, "{:?}", ra.faults);
+    assert!(stats.expired_structures >= 1, "{:?}", ra.faults);
+    assert_eq!(fired_subset(&ra), fired_subset(&rb), "scheduled faults must replay");
+    assert_eq!(
+        ra.silent_kill_count() + ra.stall_count() + ra.partition_count(),
+        rb.silent_kill_count() + rb.stall_count() + rb.partition_count(),
+    );
+
+    let clean_rmse = clean_state.rmse(&test);
+    let rmse = sa.rmse(&test);
+    assert!(rmse.is_finite() && clean_rmse.is_finite());
+    assert!(
+        rmse <= clean_rmse * 1.05,
+        "decentralized async RMSE {rmse} vs fault-free {clean_rmse} (> 5% off)"
+    );
+}
+
+/// Linux-only, the straggler edition of the thread-leak check: runs
+/// with silent kills and stalls (quarantine, expiry, probation
+/// re-admission) must still reap every agent/worker/link thread at
+/// shutdown — a stalled link or a quarantined block is not an excuse
+/// to leave a thread parked.
+#[test]
+fn no_leaked_threads_across_straggler_runs() {
+    let _g = serialize();
+    fn thread_count() -> Option<u64> {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        status
+            .lines()
+            .find(|l| l.starts_with("Threads:"))?
+            .split_whitespace()
+            .nth(1)?
+            .parse()
+            .ok()
+    }
+    let Some(before) = thread_count() else {
+        eprintln!("no /proc/self/status; skipping straggler thread-leak check");
+        return;
+    };
+    let (spec, train, _) = problem();
+    for k in 0..4u64 {
+        let plan = FaultPlan::new()
+            .kill(100, BlockId::new(1, 2))
+            .stall(200, BlockId::new(2, 1), 10_000, std::time::Duration::from_millis(150));
+        if k % 2 == 0 {
+            ParallelDriver::new(spec, cfg(600), 4)
+                .with_net(liveness_net(80 + k))
+                .with_faults(plan)
+                .with_checkpoints(2)
+                .run(Box::new(NativeEngine::new()), &train)
+                .expect("straggler run must not abort");
+        } else {
+            AsyncDriver::new(spec, cfg(600), 4)
+                .with_net(liveness_net(80 + k))
+                .with_faults(plan)
+                .with_checkpoints(2)
+                .run(Box::new(NativeEngine::new()), &train)
+                .expect("straggler async run must not abort");
+        }
+    }
+    let after = thread_count().expect("still on linux");
+    assert!(
+        after <= before + 2,
+        "thread count grew {before} -> {after}: straggler runs leaked threads"
+    );
 }
 
 /// Checkpointing off: a crash rejoins cold (zeroed factors) and the

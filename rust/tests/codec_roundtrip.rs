@@ -6,13 +6,17 @@
 //! a panic: every truncation of every frame kind must decode to `Err`,
 //! every byte-level corruption must decode to `Ok` (if the flip landed
 //! in payload) or `Err` — never abort. Roundtrips must be bit-exact,
-//! f32 payloads included.
+//! f32 payloads included, and the 17-byte header's wire sequence
+//! number (the idempotent-delivery handle) must survive every trip.
 
 use gridmc::data::DenseMatrix;
 use gridmc::grid::BlockId;
 use gridmc::net::codec::{decode, encode};
 use gridmc::net::AgentMsg;
 use gridmc::util::Rng;
+
+/// Bytes of the fixed frame header: tag u8 + BlockId 2×u32 + seq u64.
+const HEADER_LEN: usize = 17;
 
 fn mat_from_rng(rng: &mut Rng, rows: usize, cols: usize) -> DenseMatrix {
     DenseMatrix::from_fn(rows, cols, |_, _| rng.uniform_sym(3.0))
@@ -26,10 +30,11 @@ fn assert_same_matrix(a: &DenseMatrix, b: &DenseMatrix) {
 }
 
 /// Every frame kind round-trips over a sweep of shapes, zero-sized
-/// matrices included.
+/// matrices included, carrying its wire sequence number.
 #[test]
 fn all_frame_kinds_roundtrip_over_shape_sweep() {
     let mut rng = Rng::seed_from_u64(11);
+    let mut seq = 0u64;
     for (rows_u, rows_w) in [(0, 0), (1, 1), (1, 7), (13, 5), (40, 32)] {
         for cols in [0, 1, 3, 8] {
             let u = mat_from_rng(&mut rng, rows_u, cols);
@@ -38,15 +43,19 @@ fn all_frame_kinds_roundtrip_over_shape_sweep() {
             let cases = [
                 AgentMsg::GetFactors { from },
                 AgentMsg::PutAck { from },
+                AgentMsg::Heartbeat { from },
                 AgentMsg::Factors { from, u: u.clone(), w: w.clone() },
                 AgentMsg::PutFactors { from, u: u.clone(), w: w.clone() },
                 AgentMsg::RevertFactors { from, u: u.clone(), w: w.clone() },
+                AgentMsg::HandOff { from, u: u.clone(), w: w.clone() },
             ];
             for msg in cases {
+                seq = seq.wrapping_mul(6364136223846793005).wrapping_add(1);
                 let kind = msg.kind();
-                let bytes = encode(&msg).expect("peer frames encode");
-                let back = decode(&bytes).expect("encoded frames decode");
+                let bytes = encode(&msg, seq).expect("peer frames encode");
+                let (back, got_seq) = decode(&bytes).expect("encoded frames decode");
                 assert_eq!(back.kind(), kind);
+                assert_eq!(got_seq, seq, "wire sequence survives the roundtrip");
                 match (&msg, &back) {
                     (
                         AgentMsg::Factors { from: f1, u: u1, w: w1 },
@@ -59,6 +68,10 @@ fn all_frame_kinds_roundtrip_over_shape_sweep() {
                     | (
                         AgentMsg::RevertFactors { from: f1, u: u1, w: w1 },
                         AgentMsg::RevertFactors { from: f2, u: u2, w: w2 },
+                    )
+                    | (
+                        AgentMsg::HandOff { from: f1, u: u1, w: w1 },
+                        AgentMsg::HandOff { from: f2, u: u2, w: w2 },
                     ) => {
                         assert_eq!(f1, f2);
                         assert_same_matrix(u1, u2);
@@ -68,8 +81,14 @@ fn all_frame_kinds_roundtrip_over_shape_sweep() {
                         AgentMsg::GetFactors { from: f1 },
                         AgentMsg::GetFactors { from: f2 },
                     )
-                    | (AgentMsg::PutAck { from: f1 }, AgentMsg::PutAck { from: f2 }) => {
+                    | (AgentMsg::PutAck { from: f1 }, AgentMsg::PutAck { from: f2 })
+                    | (AgentMsg::Heartbeat { from: f1 }, AgentMsg::Heartbeat { from: f2 }) => {
                         assert_eq!(f1, f2);
+                        assert_eq!(
+                            bytes.len(),
+                            HEADER_LEN,
+                            "{kind} frames are a bare 17-byte header"
+                        );
                     }
                     other => panic!("variant changed in roundtrip: {other:?}"),
                 }
@@ -78,32 +97,35 @@ fn all_frame_kinds_roundtrip_over_shape_sweep() {
     }
 }
 
-/// 200 random factor frames round-trip bit-exactly.
+/// 200 random factor frames round-trip bit-exactly, sequence included.
 #[test]
 fn randomized_factors_roundtrip_bit_exact() {
     let mut rng = Rng::seed_from_u64(77);
-    for _ in 0..200 {
+    for k in 0..200u64 {
         let rows_u = 1 + rng.gen_range(40);
         let rows_w = 1 + rng.gen_range(40);
         let cols = 1 + rng.gen_range(8);
         let u = mat_from_rng(&mut rng, rows_u, cols);
         let w = mat_from_rng(&mut rng, rows_w, cols);
         let from = BlockId::new(rng.gen_range(32), rng.gen_range(32));
+        let seq = k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let bytes =
-            encode(&AgentMsg::Factors { from, u: u.clone(), w: w.clone() }).unwrap();
+            encode(&AgentMsg::Factors { from, u: u.clone(), w: w.clone() }, seq).unwrap();
         match decode(&bytes).unwrap() {
-            AgentMsg::Factors { from: f, u: du, w: dw } => {
+            (AgentMsg::Factors { from: f, u: du, w: dw }, got_seq) => {
                 assert_eq!(f, from);
+                assert_eq!(got_seq, seq);
                 assert_same_matrix(&u, &du);
                 assert_same_matrix(&w, &dw);
             }
-            other => panic!("wrong variant {}", other.kind()),
+            (other, _) => panic!("wrong variant {}", other.kind()),
         }
     }
 }
 
-/// Exhaustive truncation: every proper prefix of every frame kind is
-/// rejected with an error — never a panic, never a bogus `Ok`.
+/// Exhaustive truncation: every proper prefix of every frame kind —
+/// header-only heartbeats through full factor frames — is rejected
+/// with an error, never a panic, never a bogus `Ok`.
 #[test]
 fn every_truncation_is_rejected() {
     let mut rng = Rng::seed_from_u64(5);
@@ -113,12 +135,15 @@ fn every_truncation_is_rejected() {
     let cases = [
         AgentMsg::GetFactors { from },
         AgentMsg::PutAck { from },
+        AgentMsg::Heartbeat { from },
         AgentMsg::Factors { from, u: u.clone(), w: w.clone() },
         AgentMsg::PutFactors { from, u: u.clone(), w: w.clone() },
-        AgentMsg::RevertFactors { from, u, w },
+        AgentMsg::RevertFactors { from, u: u.clone(), w: w.clone() },
+        AgentMsg::HandOff { from, u, w },
     ];
     for msg in cases {
-        let bytes = encode(&msg).unwrap();
+        let bytes = encode(&msg, 0xFEED_F00D).unwrap();
+        assert!(bytes.len() >= HEADER_LEN);
         for cut in 0..bytes.len() {
             assert!(
                 decode(&bytes[..cut]).is_err(),
@@ -132,30 +157,39 @@ fn every_truncation_is_rejected() {
 }
 
 /// Randomized corruption: flipping any byte never panics the decoder.
-/// A flip in the f32 payload may still decode (that is data, not
-/// framing); anything else must surface as an error.
+/// A flip in the f32 payload (or the seq field — that is data, not
+/// framing) may still decode; anything else must surface as an error.
 #[test]
 fn random_corruptions_never_panic() {
     let mut rng = Rng::seed_from_u64(99);
     let u = mat_from_rng(&mut rng, 5, 2);
     let w = mat_from_rng(&mut rng, 7, 2);
     let bytes =
-        encode(&AgentMsg::Factors { from: BlockId::new(1, 1), u, w }).unwrap();
+        encode(&AgentMsg::Factors { from: BlockId::new(1, 1), u, w }, 31).unwrap();
     for _ in 0..500 {
         let mut bad = bytes.clone();
         let k = rng.gen_range(bad.len());
         let flip = 1 + rng.gen_range(255) as u8;
         bad[k] ^= flip;
         match decode(&bad) {
-            Ok(msg) => {
-                // Corruption in payload or a still-consistent header:
-                // must at least be one of the wire kinds (a tag-byte
-                // flip of a Factors frame can land on any of the
-                // factor-bearing tags, HandOff included — the payload
-                // layout is shared).
+            Ok((msg, _)) => {
+                // Corruption in payload, the seq field, or a
+                // still-consistent header: must at least be one of the
+                // wire kinds (a tag-byte flip of a Factors frame can
+                // land on any factor-bearing tag, HandOff included —
+                // the payload layout is shared — or, with a lucky
+                // length, a header-only kind).
                 assert!(
-                    ["GetFactors", "Factors", "PutFactors", "RevertFactors", "HandOff", "PutAck"]
-                        .contains(&msg.kind()),
+                    [
+                        "GetFactors",
+                        "Factors",
+                        "PutFactors",
+                        "RevertFactors",
+                        "HandOff",
+                        "PutAck",
+                        "Heartbeat"
+                    ]
+                    .contains(&msg.kind()),
                     "decoded a non-wire kind {}",
                     msg.kind()
                 );
@@ -165,22 +199,33 @@ fn random_corruptions_never_panic() {
     }
 }
 
-/// Exhaustive tag sweep: all 256 first bytes on a minimal frame body.
-/// Only the six wire tags may decode (the factor-bearing ones need a
-/// payload, so they error on a 9-byte frame); everything else errors.
+/// Exhaustive tag sweep: all 256 first bytes on a minimal
+/// header-only frame body. Only the seven wire tags may decode — the
+/// factor-bearing ones (2, 3, 5, 6) need a payload, so they error on a
+/// bare 17-byte frame; the header-only tags (1 GetFactors, 4 PutAck,
+/// 7 Heartbeat) must decode; everything else errors.
 #[test]
 fn exhaustive_tag_sweep() {
     for tag in 0u8..=255 {
-        let frame = [tag, 0, 0, 0, 0, 0, 0, 0, 0]; // tag + BlockId(0,0)
+        let mut frame = vec![tag];
+        frame.extend_from_slice(&[0u8; HEADER_LEN - 1]); // BlockId(0,0) + seq 0
         match decode(&frame) {
-            Ok(msg) => assert!(
-                matches!(msg, AgentMsg::GetFactors { .. } | AgentMsg::PutAck { .. }),
-                "tag {tag} decoded unexpectedly as {}",
-                msg.kind()
-            ),
+            Ok((msg, seq)) => {
+                assert!(
+                    matches!(
+                        msg,
+                        AgentMsg::GetFactors { .. }
+                            | AgentMsg::PutAck { .. }
+                            | AgentMsg::Heartbeat { .. }
+                    ),
+                    "tag {tag} decoded unexpectedly as {}",
+                    msg.kind()
+                );
+                assert_eq!(seq, 0);
+            }
             Err(_) => assert!(
-                tag != 1 && tag != 4,
-                "wire tag {tag} must decode on a 9-byte frame"
+                tag != 1 && tag != 4 && tag != 7,
+                "header-only wire tag {tag} must decode on a 17-byte frame"
             ),
         }
     }
@@ -188,22 +233,24 @@ fn exhaustive_tag_sweep() {
 
 /// Shape bombs: implausible row/col counts are rejected before any
 /// allocation, truncated payloads behind plausible shapes error out.
+/// The matrix shape words start right after the 17-byte header.
 #[test]
 fn shape_bombs_and_phantom_payloads_are_rejected() {
     let mut rng = Rng::seed_from_u64(3);
     let u = mat_from_rng(&mut rng, 3, 2);
     let w = mat_from_rng(&mut rng, 3, 2);
-    let bytes = encode(&AgentMsg::Factors { from: BlockId::new(0, 0), u, w }).unwrap();
+    let bytes =
+        encode(&AgentMsg::Factors { from: BlockId::new(0, 0), u, w }, 12).unwrap();
 
     // U's row count -> u32::MAX: implausible shape, must error.
     let mut bomb = bytes.clone();
-    bomb[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+    bomb[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&u32::MAX.to_le_bytes());
     assert!(decode(&bomb).is_err());
 
     // U's row count -> plausible-but-large with no payload behind it:
     // truncated-frame error, not a huge allocation or a panic.
     let mut phantom = bytes.clone();
-    phantom[9..13].copy_from_slice(&1_000u32.to_le_bytes());
+    phantom[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&1_000u32.to_le_bytes());
     assert!(decode(&phantom).is_err());
 
     // Trailing garbage after a complete frame is tolerated today (the
@@ -211,4 +258,23 @@ fn shape_bombs_and_phantom_payloads_are_rejected() {
     let mut padded = bytes;
     padded.extend_from_slice(&[0xAB; 7]);
     assert!(decode(&padded).is_ok());
+}
+
+/// The wire sequence number is pure header data: two encodings of the
+/// same message under different sequence numbers differ only in the
+/// seq bytes (9..17), and each decodes back to its own number.
+#[test]
+fn sequence_number_is_header_data_only() {
+    let mut rng = Rng::seed_from_u64(8);
+    let u = mat_from_rng(&mut rng, 4, 2);
+    let w = mat_from_rng(&mut rng, 2, 2);
+    let msg = AgentMsg::PutFactors { from: BlockId::new(3, 1), u, w };
+    let a = encode(&msg, 1).unwrap();
+    let b = encode(&msg, u64::MAX - 1).unwrap();
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a[..9], b[..9], "tag + sender must not depend on seq");
+    assert_ne!(a[9..HEADER_LEN], b[9..HEADER_LEN]);
+    assert_eq!(a[HEADER_LEN..], b[HEADER_LEN..], "payload must not depend on seq");
+    assert_eq!(decode(&a).unwrap().1, 1);
+    assert_eq!(decode(&b).unwrap().1, u64::MAX - 1);
 }

@@ -8,7 +8,9 @@
 //! * normalization counts conserve mass and match the sampler;
 //! * a small-γ structure update never increases the structure cost;
 //! * native sparse and dense modes agree on random instances;
-//! * schedule rounds are conflict-free and cover each epoch exactly.
+//! * schedule rounds are conflict-free and cover each epoch exactly;
+//! * every wire frame kind survives duplication, reordering and
+//!   stalled replay with exactly-once admission (`DedupWindow`).
 
 use gridmc::data::{CooMatrix, SyntheticConfig};
 use gridmc::engine::{Engine, NativeEngine, NativeMode, StructureParams};
@@ -577,6 +579,124 @@ fn prop_culmination_consensus_fixture() {
             let _ = test.push(i as u32, j as u32, v);
         }
         assert!(state.rmse(&test) < 1e-4, "case {case}: rmse {}", state.rmse(&test));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire-delivery properties: every peer frame kind, encoded under real
+// sequence numbers, survives duplication, reordering and stalling
+// (late replay) — the codec stays bit-exact and the agent-side
+// `DedupWindow` admits each sequence number exactly once. These are
+// the link-fault invariants the liveness layer leans on for
+// idempotent delivery.
+
+/// One instance of every wire frame kind, with payloads where due.
+fn every_wire_frame(rng: &mut Rng, from: gridmc::grid::BlockId) -> Vec<gridmc::net::AgentMsg> {
+    use gridmc::net::AgentMsg;
+    let u = random_dense(rng, 1 + rng.gen_range(6), 1 + rng.gen_range(4));
+    let w = random_dense(rng, 1 + rng.gen_range(6), 1 + rng.gen_range(4));
+    vec![
+        AgentMsg::GetFactors { from },
+        AgentMsg::Factors { from, u: u.clone(), w: w.clone() },
+        AgentMsg::PutFactors { from, u: u.clone(), w: w.clone() },
+        AgentMsg::RevertFactors { from, u: u.clone(), w: w.clone() },
+        AgentMsg::HandOff { from, u, w },
+        AgentMsg::PutAck { from },
+        AgentMsg::Heartbeat { from },
+    ]
+}
+
+fn shuffle<T>(rng: &mut Rng, v: &mut [T]) {
+    for k in (1..v.len()).rev() {
+        v.swap(k, rng.gen_range(k + 1));
+    }
+}
+
+#[test]
+fn prop_dedup_admits_every_frame_once_under_duplication_and_reorder() {
+    use gridmc::gossip::DedupWindow;
+    use gridmc::net::codec::{decode, encode};
+    for case in 0..25u64 {
+        let mut rng = case_rng(case ^ 0xD0_D0);
+        let from = gridmc::grid::BlockId::new(rng.gen_range(6), rng.gen_range(6));
+        // A stream of several epochs of every frame kind, each frame
+        // under a distinct wire sequence number.
+        let mut stream: Vec<(u64, Vec<u8>)> = Vec::new();
+        for _ in 0..1 + rng.gen_range(4) {
+            for msg in every_wire_frame(&mut rng, from) {
+                let seq = stream.len() as u64;
+                stream.push((seq, encode(&msg, seq).unwrap()));
+            }
+        }
+        let total = stream.len();
+        // The wire duplicates each frame 1..=3 times, then reorders the
+        // whole delivery arbitrarily (window cap >= stream length, so
+        // no admitted seq is ever evicted mid-test).
+        let mut deliveries: Vec<(u64, Vec<u8>)> = Vec::new();
+        for (seq, bytes) in &stream {
+            for _ in 0..1 + rng.gen_range(3) {
+                deliveries.push((*seq, bytes.clone()));
+            }
+        }
+        shuffle(&mut rng, &mut deliveries);
+        let mut window = DedupWindow::new(total);
+        let mut admitted = std::collections::HashSet::new();
+        for (want_seq, bytes) in &deliveries {
+            let (msg, seq) = decode(bytes).expect("duplicated frames still decode");
+            assert_eq!(seq, *want_seq, "case {case}: seq survives the wire");
+            assert_eq!(msg.kind(), decode(&stream[seq as usize].1).unwrap().0.kind());
+            if window.admit(seq) {
+                assert!(admitted.insert(seq), "case {case}: seq {seq} admitted twice");
+            }
+        }
+        assert_eq!(
+            admitted.len(),
+            total,
+            "case {case}: every distinct frame admitted exactly once"
+        );
+    }
+}
+
+#[test]
+fn prop_stalled_replays_are_rejected_within_the_window() {
+    use gridmc::gossip::DedupWindow;
+    // A stalled link releasing an old frame long after the original
+    // delivery: as long as fewer than `cap` fresh sequences have been
+    // admitted since, the replay must be rejected; once the window has
+    // rolled past it, eviction makes re-admission possible (bounded
+    // memory is the contract, not infinite history) — and a second
+    // admission of a factor frame is harmless by idempotence of
+    // `last_adopted_from` upstream.
+    for case in 0..25u64 {
+        let mut rng = case_rng(case ^ 0x57A1);
+        let cap = 4 + rng.gen_range(60);
+        let mut window = DedupWindow::new(cap);
+        let stalled = rng.gen_range(3) as u64;
+        for seq in 0..=stalled {
+            assert!(window.admit(seq), "case {case}: fresh seq {seq} admitted");
+        }
+        // Fresh traffic streams past the stalled frame; its replay is a
+        // duplicate exactly while it is among the last `cap` admissions.
+        let mut admitted_since = 0usize;
+        for seq in (stalled + 1)..(stalled + 2 + cap as u64) {
+            assert!(window.admit(seq), "case {case}: fresh seq {seq} admitted");
+            admitted_since += 1;
+            let replay_ok = window.admit(stalled);
+            if admitted_since < cap {
+                assert!(
+                    !replay_ok,
+                    "case {case}: stalled replay of {stalled} after {admitted_since} \
+                     fresh frames must be deduplicated (cap {cap})"
+                );
+            } else {
+                assert!(
+                    replay_ok,
+                    "case {case}: after {admitted_since} fresh frames (cap {cap}) the \
+                     stalled seq {stalled} has rolled out and readmits"
+                );
+                break;
+            }
+        }
     }
 }
 

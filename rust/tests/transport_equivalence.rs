@@ -159,6 +159,7 @@ fn sim_drop_retry_is_live_and_accounted() {
         retry_after_us: 60,
         max_retries: 32,
         seed: 99,
+        ..Default::default()
     };
 
     // Drive the network directly so the wire stats stay observable.

@@ -1,0 +1,64 @@
+#!/usr/bin/env sh
+# Pin-diff the top-level key set of freshly generated BENCH_*.json
+# artifacts against rust/bench-pins/<name>.keys.txt.
+#
+# The BENCH files are the repo's perf trajectory: downstream tooling
+# diffs them across commits, so a writer that silently gains, loses or
+# renames a top-level key corrupts the series even when
+# tests/bench_schema.rs (which pins the *fake-outcome* output) is
+# green. This script closes the other half of the loop — it checks the
+# keys of the *real* artifacts the bench smoke just produced.
+#
+#   tools/pin-bench.sh check rust/BENCH_churn.json [...]   # diff, exit 1 on drift
+#   tools/pin-bench.sh update rust/BENCH_churn.json [...]  # rewrite the pins
+#
+# Key extraction leans on the writers' fixed layout (asserted by
+# bench_schema.rs): every top-level key is printed at exactly two-space
+# indent, nested material at four or more. No JSON parser needed.
+
+set -eu
+
+mode="${1:?usage: pin-bench.sh <check|update> <BENCH_*.json>...}"
+shift
+[ "$#" -gt 0 ] || { echo "pin-bench.sh: no artifacts given" >&2; exit 2; }
+
+repo_root=$(CDPATH= cd -- "$(dirname -- "$0")/.." && pwd)
+pins_dir="$repo_root/rust/bench-pins"
+
+keys_of() {
+    # `  "key": ...` at exactly two spaces of indent.
+    sed -n 's/^  "\([a-zA-Z0-9_]*\)":.*/\1/p' "$1" | sort
+}
+
+status=0
+for artifact in "$@"; do
+    [ -f "$artifact" ] || { echo "pin-bench.sh: missing $artifact" >&2; status=1; continue; }
+    name=$(basename "$artifact" .json)
+    pin="$pins_dir/$name.keys.txt"
+    case "$mode" in
+        update)
+            keys_of "$artifact" > "$pin"
+            echo "pinned $(wc -l < "$pin" | tr -d ' ') key(s) -> $pin"
+            ;;
+        check)
+            if [ ! -f "$pin" ]; then
+                echo "pin-bench.sh: no pin for $name (run: tools/pin-bench.sh update $artifact)" >&2
+                status=1
+                continue
+            fi
+            if ! diff -u "$pin" /dev/stdin <<EOF
+$(keys_of "$artifact")
+EOF
+            then
+                echo "pin-bench.sh: $name top-level keys drifted from $pin" >&2
+                echo "  intentional? re-pin with: tools/pin-bench.sh update $artifact" >&2
+                status=1
+            fi
+            ;;
+        *)
+            echo "pin-bench.sh: unknown mode $mode (check|update)" >&2
+            exit 2
+            ;;
+    esac
+done
+exit $status

@@ -217,6 +217,10 @@ pub struct ExperimentConfig {
     /// Persist snapshots durably under this directory (enables warm
     /// joins across runs); in-memory when unset.
     pub checkpoint_dir: Option<String>,
+    /// Flight-recorder configuration (`[trace]` table; `None` = the
+    /// recorder defaults, i.e. armed with no export). Gossip drivers
+    /// only — the sequential driver has no agent network to trace.
+    pub trace: Option<crate::trace::TraceConfig>,
 }
 
 impl ExperimentConfig {
@@ -367,6 +371,18 @@ impl ExperimentConfig {
                 .get("checkpoint_dir")
                 .and_then(|v| v.as_str())
                 .map(String::from),
+            trace: doc.has_prefix("trace.").then(|| {
+                let d = crate::trace::TraceConfig::default();
+                crate::trace::TraceConfig {
+                    armed: doc.bool_or("trace.armed", d.armed),
+                    ring_capacity: doc.usize_or("trace.ring_capacity", d.ring_capacity),
+                    out: doc.get("trace.out").and_then(|v| v.as_str()).map(String::from),
+                    error_dump: doc
+                        .get("trace.error_dump")
+                        .and_then(|v| v.as_str())
+                        .map(String::from),
+                }
+            }),
         })
     }
 
@@ -488,6 +504,18 @@ impl ExperimentConfig {
                 l.probation_max,
                 l.driver_deadline_factor
             ));
+        }
+        if let Some(t) = &self.trace {
+            s.push_str(&format!(
+                "\n[trace]\narmed = {}\nring_capacity = {}\n",
+                t.armed, t.ring_capacity
+            ));
+            if let Some(out) = &t.out {
+                s.push_str(&format!("out = {}\n", quote(out)));
+            }
+            if let Some(dump) = &t.error_dump {
+                s.push_str(&format!("error_dump = {}\n", quote(dump)));
+            }
         }
         Ok(s)
     }
@@ -651,6 +679,39 @@ mod tests {
         let sh = partial.shrink.expect("present table parses to Some");
         assert_eq!(sh.columns, 2);
         assert_eq!(sh.retire_step, ShrinkConfig::default().retire_step);
+    }
+
+    #[test]
+    fn trace_table_roundtrip_and_absence() {
+        let mut cfg = presets::exp(1).unwrap();
+        assert!(cfg.trace.is_none(), "presets run the recorder defaults");
+        assert!(!cfg.to_toml().unwrap().contains("[trace]"));
+        cfg.driver = DriverChoice::Parallel;
+        cfg.trace = Some(crate::trace::TraceConfig {
+            armed: true,
+            ring_capacity: 512,
+            out: Some("out/trace.json".into()),
+            error_dump: Some("out/flight.jsonl".into()),
+        });
+        let text = cfg.to_toml().unwrap();
+        assert!(text.contains("[trace]"), "{text}");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.trace, cfg.trace);
+        // A partially specified table fills in defaults (and leaves the
+        // export paths unset).
+        let partial = ExperimentConfig::from_toml(&format!(
+            "{}[trace]\narmed = false\n",
+            text.split("[trace]").next().unwrap()
+        ))
+        .unwrap();
+        let t = partial.trace.expect("present table parses to Some");
+        assert!(!t.armed);
+        assert_eq!(
+            t.ring_capacity,
+            crate::trace::TraceConfig::default().ring_capacity
+        );
+        assert_eq!(t.out, None);
+        assert_eq!(t.error_dump, None);
     }
 
     #[test]

@@ -73,6 +73,7 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
         liveness: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
+        trace: None,
     })
 }
 
@@ -114,6 +115,7 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
         liveness: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
+        trace: None,
     }
     .scaled_for(users, items, g)
 }
@@ -173,6 +175,7 @@ pub fn churn() -> ExperimentConfig {
         liveness: None,
         checkpoint_every: 0,
         checkpoint_dir: None,
+        trace: None,
     }
 }
 

@@ -139,6 +139,9 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
                     if let Some(dir) = &cfg.checkpoint_dir {
                         d = d.with_checkpoint_dir(dir);
                     }
+                    if let Some(t) = &cfg.trace {
+                        d = d.with_trace(t.clone());
+                    }
                     Box::new(d) as Box<dyn Driver>
                 }};
             }

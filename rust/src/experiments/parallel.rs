@@ -40,6 +40,10 @@ pub use super::scenarios::liveness::{
 pub use super::scenarios::shrink::{
     collect_shrink, render_shrink, run_shrink, write_shrink_json, ShrinkOutcome, ShrinkRun,
 };
+pub use super::scenarios::trace_overhead::{
+    collect_trace_overhead, render_trace_overhead, run_trace_overhead,
+    write_trace_overhead_json, OverheadOutcome, OverheadRun,
+};
 
 /// Blocks per grid side: 8×8 = 64, 16×16 = 256, 32×32 = 1024 agents.
 pub const GRID_SIDES: [usize; 3] = [8, 16, 32];

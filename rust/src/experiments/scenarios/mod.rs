@@ -1,7 +1,8 @@
 //! Per-scenario bench harnesses (`gridmc bench-table <scenario>`).
 //!
 //! Each robustness scenario — churn recovery, membership growth,
-//! membership shrink, decentralized liveness — lives in its own file
+//! membership shrink, decentralized liveness, flight-recorder
+//! overhead — lives in its own file
 //! with the same shape:
 //! `collect_*` trains the preset's legs and returns a typed outcome,
 //! `render_*` prints the human table, `write_*_json` emits the
@@ -16,6 +17,7 @@ pub mod churn;
 pub mod grow;
 pub mod liveness;
 pub mod shrink;
+pub mod trace_overhead;
 
 use std::io::Write;
 

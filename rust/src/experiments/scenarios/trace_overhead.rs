@@ -1,0 +1,226 @@
+//! The recorder-overhead gate (`gridmc bench-table trace-overhead`,
+//! `BENCH_trace_overhead.json`).
+//!
+//! Trains the fault-free churn problem on the plain channel transport
+//! twice per repeat — flight recorder armed, then disarmed — and
+//! reports median/spread wall time for each leg. The `overhead`
+//! object's `wall_ratio` (armed median / disarmed median) is the
+//! number PERF.md §Observability quotes; `within_budget` gates it at
+//! ≤2% (`budget: 1.02`).
+
+use std::io::Write;
+
+use crate::config::presets;
+use crate::metrics::{bench_json_header, TablePrinter};
+use crate::trace::TraceConfig;
+use crate::Result;
+
+/// Wall-overhead budget for the armed recorder: 2%.
+pub const OVERHEAD_BUDGET: f64 = 1.02;
+
+/// Repeats per leg; the median de-noises scheduler jitter.
+const REPEATS: usize = 3;
+
+/// One leg of the comparison (recorder armed or disarmed).
+#[derive(Debug, Clone)]
+pub struct OverheadRun {
+    /// Sorted per-repeat wall times, seconds.
+    pub wall_s: Vec<f64>,
+    /// Events the recorder captured (0 for the disarmed leg).
+    pub events: u64,
+    /// Structure updates executed in the last repeat.
+    pub updates: u64,
+}
+
+impl OverheadRun {
+    pub fn median(&self) -> f64 {
+        self.wall_s[self.wall_s.len() / 2]
+    }
+    pub fn p10(&self) -> f64 {
+        self.wall_s[0]
+    }
+    pub fn p90(&self) -> f64 {
+        self.wall_s[self.wall_s.len() - 1]
+    }
+}
+
+/// The overhead gate's full result (`BENCH_trace_overhead.json`).
+#[derive(Debug, Clone)]
+pub struct OverheadOutcome {
+    pub grid: (usize, usize),
+    pub on: OverheadRun,
+    pub off: OverheadRun,
+}
+
+impl OverheadOutcome {
+    /// Armed median wall over disarmed median wall.
+    pub fn wall_ratio(&self) -> f64 {
+        self.on.median() / self.off.median().max(1e-12)
+    }
+    pub fn within_budget(&self) -> bool {
+        self.wall_ratio() <= OVERHEAD_BUDGET
+    }
+}
+
+/// The measured problem: the churn preset stripped of its fault plan,
+/// on the in-process channel transport — pure protocol traffic, so
+/// every recorded microsecond is recorder cost, not fault handling.
+fn overhead_cfg(armed: bool) -> crate::config::ExperimentConfig {
+    let mut cfg = presets::apply_iter_scale(presets::churn());
+    cfg.name = if armed { "trace-on".into() } else { "trace-off".into() };
+    cfg.faults = None;
+    cfg.transport = crate::net::TransportKind::Channel;
+    cfg.trace = Some(TraceConfig { armed, ..TraceConfig::default() });
+    cfg
+}
+
+/// Train both legs `REPEATS` times on one shared dataset.
+pub fn collect_trace_overhead() -> Result<OverheadOutcome> {
+    let data = overhead_cfg(true).dataset.load()?;
+    let mut leg = |armed: bool| -> Result<OverheadRun> {
+        let cfg = overhead_cfg(armed);
+        let mut wall_s = Vec::with_capacity(REPEATS);
+        let mut events = 0;
+        let mut updates = 0;
+        for _ in 0..REPEATS {
+            let o = crate::experiments::run_experiment_on(&cfg, &data)?;
+            wall_s.push(o.report.wall.as_secs_f64());
+            events = o.report.telemetry.as_ref().map_or(0, |t| t.events_recorded);
+            updates = o.report.iters;
+        }
+        wall_s.sort_by(f64::total_cmp);
+        Ok(OverheadRun { wall_s, events, updates })
+    };
+    let cfg = overhead_cfg(true);
+    Ok(OverheadOutcome {
+        grid: (cfg.grid.p, cfg.grid.q),
+        on: leg(true)?,
+        off: leg(false)?,
+    })
+}
+
+/// Render the overhead table plus the budget verdict.
+pub fn render_trace_overhead(o: &OverheadOutcome) -> String {
+    let mut t = TablePrinter::new(&["recorder", "wall median", "p10", "p90", "events", "updates"]);
+    for (label, r) in [("armed", &o.on), ("disarmed", &o.off)] {
+        t.row(&[
+            label.to_string(),
+            format!("{:.3}s", r.median()),
+            format!("{:.3}s", r.p10()),
+            format!("{:.3}s", r.p90()),
+            r.events.to_string(),
+            r.updates.to_string(),
+        ]);
+    }
+    format!(
+        "== flight-recorder overhead ({p}x{q} grid, {n} repeats/leg) ==\n{table}\
+         wall ratio (armed/disarmed): {ratio:.4}   budget: {budget:.2}   {verdict}\n",
+        p = o.grid.0,
+        q = o.grid.1,
+        n = REPEATS,
+        table = t.render(),
+        ratio = o.wall_ratio(),
+        budget = OVERHEAD_BUDGET,
+        verdict = if o.within_budget() { "WITHIN BUDGET" } else { "OVER BUDGET" },
+    )
+}
+
+/// Write `BENCH_trace_overhead.json`: header, grid, both legs, and the
+/// `overhead` verdict object (key set pinned by `tests/bench_schema.rs`
+/// and `bench-pins/BENCH_trace_overhead.keys.txt`).
+pub fn write_trace_overhead_json(path: &str, o: &OverheadOutcome) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(bench_json_header("trace_overhead").as_bytes())?;
+    writeln!(
+        f,
+        "  \"grid\": {{ \"p\": {}, \"q\": {}, \"agents\": {} }},",
+        o.grid.0,
+        o.grid.1,
+        o.grid.0 * o.grid.1
+    )?;
+    writeln!(f, "  \"unit\": \"wall_seconds\",")?;
+    for (label, r) in [("on", &o.on), ("off", &o.off)] {
+        writeln!(
+            f,
+            "  \"{label}\": {{ \"wall_s_median\": {:.4}, \"wall_s_p10\": {:.4}, \
+             \"wall_s_p90\": {:.4}, \"repeats\": {}, \"events\": {}, \"updates\": {} }},",
+            r.median(),
+            r.p10(),
+            r.p90(),
+            r.wall_s.len(),
+            r.events,
+            r.updates
+        )?;
+    }
+    writeln!(
+        f,
+        "  \"overhead\": {{ \"wall_ratio\": {:.4}, \"budget\": {:.2}, \"within_budget\": {} }}",
+        o.wall_ratio(),
+        OVERHEAD_BUDGET,
+        o.within_budget()
+    )?;
+    writeln!(f, "}}")
+}
+
+/// Full overhead harness: run both legs, write the artifact, render.
+pub fn run_trace_overhead() -> Result<String> {
+    let outcome = collect_trace_overhead()?;
+    let out = "BENCH_trace_overhead.json";
+    let note = match write_trace_overhead_json(out, &outcome) {
+        Ok(()) => format!("wrote {out} ({} events armed)\n", outcome.on.events),
+        Err(e) => format!("could not write {out}: {e}\n"),
+    };
+    Ok(format!("{}{note}", render_trace_overhead(&outcome)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_overhead() -> OverheadOutcome {
+        OverheadOutcome {
+            grid: (6, 6),
+            on: OverheadRun { wall_s: vec![1.00, 1.01, 1.05], events: 48_000, updates: 6000 },
+            off: OverheadRun { wall_s: vec![0.99, 1.00, 1.02], events: 0, updates: 6000 },
+        }
+    }
+
+    #[test]
+    fn ratio_and_budget_verdict() {
+        let o = fake_overhead();
+        assert!((o.wall_ratio() - 1.01).abs() < 1e-9);
+        assert!(o.within_budget());
+        let over = OverheadOutcome {
+            on: OverheadRun { wall_s: vec![1.10, 1.10, 1.10], ..o.on.clone() },
+            ..o
+        };
+        assert!(!over.within_budget());
+    }
+
+    #[test]
+    fn overhead_render_reports_verdict() {
+        let s = render_trace_overhead(&fake_overhead());
+        assert!(s.contains("armed"), "{s}");
+        assert!(s.contains("disarmed"), "{s}");
+        assert!(s.contains("WITHIN BUDGET"), "{s}");
+    }
+
+    #[test]
+    fn overhead_json_is_balanced_and_complete() {
+        let dir = std::env::temp_dir().join("gridmc-trace-overhead-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_trace_overhead.json");
+        let path = path.to_str().unwrap();
+        write_trace_overhead_json(path, &fake_overhead()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"bench\": \"trace_overhead\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"unit\": \"wall_seconds\""));
+        assert!(text.contains("\"on\""));
+        assert!(text.contains("\"off\""));
+        assert!(text.contains("\"within_budget\": true"));
+        assert!(text.contains("\"budget\": 1.02"));
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
+    }
+}

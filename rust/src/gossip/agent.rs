@@ -113,6 +113,7 @@ use crate::engine::{Engine, EngineWorkspace, StructureParams};
 use crate::gossip::CheckpointStore;
 use crate::grid::{BlockId, Structure};
 use crate::net::{AgentMsg, DriverMsg, Outbox, Outgoing};
+use crate::trace::{GradeTag, PhaseTag, Recorder};
 
 use super::liveness::{DedupWindow, LivenessConfig, LivenessTracker, PeerHealth};
 
@@ -208,6 +209,11 @@ pub struct BlockAgent {
     /// `PutAck`s still owed from fire-and-forget expiry reverts (and
     /// from the expired structure's own outstanding scatter acks).
     owed_revert_acks: HashMap<BlockId, u32>,
+    /// Flight recorder: phase transitions, checkpoint events, dedup
+    /// drops and liveness verdicts. Disarmed by default (every hook is
+    /// a single branch); transports install the run's recorder via
+    /// [`Self::with_recorder`].
+    recorder: std::sync::Arc<Recorder>,
 }
 
 impl BlockAgent {
@@ -240,6 +246,7 @@ impl BlockAgent {
             last_adopted_from: None,
             owed_factors: HashMap::new(),
             owed_revert_acks: HashMap::new(),
+            recorder: std::sync::Arc::new(Recorder::disabled()),
         }
     }
 
@@ -247,6 +254,14 @@ impl BlockAgent {
     /// addressing (the transports call this at spawn).
     pub fn with_grid(mut self, p: usize, q: usize) -> Self {
         self.grid = Some((p, q));
+        self
+    }
+
+    /// Install the run's flight recorder. Every hook degrades to a
+    /// single branch when the recorder is disarmed, so the transports
+    /// call this unconditionally at spawn.
+    pub fn with_recorder(mut self, recorder: std::sync::Arc<Recorder>) -> Self {
+        self.recorder = recorder;
         self
     }
 
@@ -274,6 +289,7 @@ impl BlockAgent {
     pub fn with_checkpoints(mut self, store: std::sync::Arc<CheckpointStore>) -> Self {
         if self.active {
             store.save(self.id, 0, &self.u, &self.w);
+            self.recorder.checkpoint_save(self.id, 0);
         }
         self.last_saved = 0;
         self.checkpoints = Some(store);
@@ -302,6 +318,7 @@ impl BlockAgent {
             if self.version - self.last_saved >= store.cadence() {
                 store.save(self.id, self.version, &self.u, &self.w);
                 self.last_saved = self.version;
+                self.recorder.checkpoint_save(self.id, self.version);
             }
         }
     }
@@ -317,6 +334,7 @@ impl BlockAgent {
             if self.last_saved > self.version {
                 store.save(self.id, self.version, &self.u, &self.w);
                 self.last_saved = self.version;
+                self.recorder.checkpoint_save(self.id, self.version);
             }
         }
     }
@@ -348,6 +366,7 @@ impl BlockAgent {
                     AgentMsg::GetFactors { from: self.id },
                 ));
                 self.phase = Phase::Gather { structure, params, token, h: None, v: None };
+                self.recorder.phase_enter(self.id, token, PhaseTag::Gather);
             }
             AgentMsg::GetFactors { from } => {
                 out.push(Outgoing::Peer(
@@ -482,6 +501,8 @@ impl BlockAgent {
                                 self.begin_revert(structure, token, out);
                             } else {
                                 self.last_done = Some((token, structure));
+                                self.recorder.update_done(self.id);
+                                self.recorder.phase_enter(self.id, token, PhaseTag::Idle);
                                 out.push(Outgoing::Driver(DriverMsg::Done {
                                     anchor: self.id,
                                     token,
@@ -495,6 +516,7 @@ impl BlockAgent {
                     }
                     Phase::Revert { token, pending } => {
                         if pending <= 1 {
+                            self.recorder.phase_enter(self.id, token, PhaseTag::Idle);
                             out.push(Outgoing::Driver(DriverMsg::Aborted {
                                 anchor: self.id,
                                 token,
@@ -610,6 +632,7 @@ impl BlockAgent {
                             self.w = cp.w;
                             self.version = cp.version;
                             self.last_saved = cp.version;
+                            self.recorder.checkpoint_restore(self.id, cp.version);
                             warm = true;
                         }
                         None => {
@@ -617,6 +640,7 @@ impl BlockAgent {
                             // them now so the block is restorable.
                             store.save(self.id, self.version, &self.u, &self.w);
                             self.last_saved = self.version;
+                            self.recorder.checkpoint_save(self.id, self.version);
                         }
                     }
                 }
@@ -650,6 +674,7 @@ impl BlockAgent {
                 if let Some(store) = &self.checkpoints {
                     store.save(self.id, self.version, &self.u, &self.w);
                     self.last_saved = self.version;
+                    self.recorder.checkpoint_save(self.id, self.version);
                 }
                 // The previous completion is no longer abortable once a
                 // retirement is in progress.
@@ -693,6 +718,9 @@ impl BlockAgent {
                     }));
                 } else {
                     self.phase = Phase::Handoff { pending };
+                    // No driver token exists for a retirement; the
+                    // version stamps the handoff's place in the run.
+                    self.recorder.phase_enter(self.id, self.version, PhaseTag::Handoff);
                 }
             }
             AgentMsg::Crash => {
@@ -730,6 +758,7 @@ impl BlockAgent {
                 self.deadline_extended = false;
                 self.owed_factors.clear();
                 self.owed_revert_acks.clear();
+                self.recorder.checkpoint_restore(self.id, self.version);
                 out.push(Outgoing::Driver(DriverMsg::Restarted {
                     from: self.id,
                     version: self.version,
@@ -762,7 +791,13 @@ impl BlockAgent {
                         self.id,
                         inner.kind()
                     );
+                    if let Some(src) = inner.source() {
+                        self.recorder.dedup_drop(self.id, src, seq);
+                    }
                     return AgentStatus::Running;
+                }
+                if let Some(src) = inner.source() {
+                    self.recorder.wire_recv(self.id, src, seq);
                 }
                 if let Some(cfg) = self.liveness {
                     if let Some(src) = inner.source() {
@@ -825,6 +860,7 @@ impl BlockAgent {
                 self.deadline_extended = false;
                 self.phase =
                     Phase::Scatter { structure, token, acked_h: false, acked_v: false };
+                self.recorder.phase_enter(self.id, token, PhaseTag::Scatter);
             }
             Err(e) => {
                 if self.doomed.take() == Some(token) {
@@ -845,6 +881,7 @@ impl BlockAgent {
                     }));
                 }
                 self.phase = Phase::Idle;
+                self.recorder.phase_enter(self.id, token, PhaseTag::Idle);
             }
         }
     }
@@ -877,6 +914,8 @@ impl BlockAgent {
             AgentMsg::RevertFactors { from: self.id, u: vu, w: vw },
         ));
         self.phase = Phase::Revert { token, pending: 2 };
+        self.recorder.abort(self.id);
+        self.recorder.phase_enter(self.id, token, PhaseTag::Revert);
     }
 
     /// One liveness clock tick: check the structure deadline while
@@ -926,11 +965,13 @@ impl BlockAgent {
             {
                 self.deadline_extended = true;
                 self.phase_started = now;
+                self.recorder.grade_change(self.id, suspect, GradeTag::Suspect);
                 log::debug!(
                     "{}: deadline grace for suspect {suspect} (one extension)",
                     self.id
                 );
             } else {
+                self.recorder.grade_change(self.id, suspect, GradeTag::Dead);
                 self.expire(suspect, out);
             }
             return;
@@ -964,6 +1005,7 @@ impl BlockAgent {
                     "{}: expired gather of token {token}, blaming {suspect}",
                     self.id
                 );
+                self.recorder.expire(self.id, token, suspect);
                 out.push(Outgoing::Driver(DriverMsg::Expired {
                     anchor: self.id,
                     token,
@@ -1005,6 +1047,7 @@ impl BlockAgent {
                     "{}: expired scatter of token {token}, blaming {suspect}",
                     self.id
                 );
+                self.recorder.expire(self.id, token, suspect);
                 out.push(Outgoing::Driver(DriverMsg::Expired {
                     anchor: self.id,
                     token,

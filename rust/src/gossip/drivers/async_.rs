@@ -70,6 +70,9 @@ pub struct AsyncDriver {
     /// Persist snapshots here instead of in memory (survives the
     /// process; enables warm joins across runs).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Flight-recorder + metrics configuration (armed by default; set
+    /// [`crate::trace::TraceConfig::out`] to export a Chrome trace).
+    pub trace: crate::trace::TraceConfig,
 }
 
 impl AsyncDriver {
@@ -84,6 +87,7 @@ impl AsyncDriver {
             shrink: ShrinkPlan::default(),
             checkpoint_every: 0,
             checkpoint_dir: None,
+            trace: crate::trace::TraceConfig::default(),
         }
     }
 
@@ -136,6 +140,13 @@ impl AsyncDriver {
     /// [`crate::gossip::DiskSink`]).
     pub fn with_checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
         self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Configure the flight recorder (ring sizing, Chrome-trace export
+    /// path, error-path JSONL dump; disarm for overhead baselines).
+    pub fn with_trace(mut self, trace: crate::trace::TraceConfig) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -253,6 +264,7 @@ impl AsyncDriver {
                 Some(DriverMsg::Done { token, result, .. }) => {
                     network.forget_inflight(token);
                     if let Some((s, _)) = inflight.remove(&token) {
+                        network.recorder.structure_end(token, result.is_ok());
                         result?;
                         for b in s.blocks() {
                             busy[b.index(spec.q)] = false;
@@ -268,12 +280,14 @@ impl AsyncDriver {
                 Some(DriverMsg::Expired { anchor, token, suspect }) => {
                     network.forget_inflight(token);
                     if let Some((s, t0)) = inflight.remove(&token) {
+                        network.recorder.structure_end(token, false);
                         for b in s.blocks() {
                             busy[b.index(spec.q)] = false;
                         }
                         let lag = session.tick.saturating_sub(t0);
                         session.note_expiry(completed, anchor, suspect, lag);
                         dispatched -= 1;
+                        network.recorder.retry(s.roles().anchor);
                         queue.insert(0, s);
                     } else {
                         log::debug!("liveness: stale expiry (token {token})");
@@ -298,6 +312,7 @@ impl AsyncDriver {
                     for token in overdue {
                         let (s, t0) = inflight.remove(&token).expect("collected above");
                         network.forget_inflight(token);
+                        network.recorder.structure_end(token, false);
                         for b in s.blocks() {
                             busy[b.index(spec.q)] = false;
                         }
@@ -308,6 +323,7 @@ impl AsyncDriver {
                         let lag = session.tick.saturating_sub(t0);
                         session.note_expiry(completed, anchor, anchor, lag);
                         dispatched -= 1;
+                        network.recorder.retry(s.roles().anchor);
                         queue.insert(0, s);
                         log::debug!(
                             "liveness: driver deadline expired token {token} at {anchor}"
@@ -336,6 +352,7 @@ impl AsyncDriver {
                 shrink: &self.shrink,
                 checkpoint_every: self.checkpoint_every,
                 checkpoint_dir: self.checkpoint_dir.as_deref(),
+                trace: &self.trace,
             },
             engine,
             train,
@@ -448,6 +465,7 @@ impl DispatchPolicy for AsyncDriver {
                                 busy[b.index(spec.q)] = false;
                             }
                             dispatched -= 1;
+                            network.recorder.retry(s.roles().anchor);
                             queue.insert(0, s);
                         }
                         // Neighbours re-gossip first: the restored

@@ -40,6 +40,7 @@ use crate::metrics::{CostCurve, LivenessStats, Timer};
 use crate::model::FactorState;
 use crate::net::{self, FaultEvent, FaultPlan, FaultRecord, NetConfig};
 use crate::solver::{ConvergenceCriterion, ConvergenceVerdict, SolverConfig, SolverReport};
+use crate::trace::{Recorder, TraceConfig};
 use crate::{Error, Result};
 
 use super::elastic::{GrowthPlan, Membership, ShrinkPlan};
@@ -92,6 +93,7 @@ pub(crate) struct RunPlan<'a> {
     pub shrink: &'a ShrinkPlan,
     pub checkpoint_every: u64,
     pub checkpoint_dir: Option<&'a std::path::Path>,
+    pub trace: &'a TraceConfig,
 }
 
 /// Per-run training state shared by every dispatch policy: the
@@ -401,8 +403,16 @@ pub(crate) fn run_gossip_driver(
     };
     let dormant: net::DormantSet =
         plan.grow.blocks.iter().map(|b| b.index(plan.spec.q)).collect();
-    let mut network =
-        GossipNetwork::spawn_elastic(plan.net, plan.spec, engine, state, checkpoints, &dormant);
+    let recorder = Arc::new(Recorder::new(plan.spec.p, plan.spec.q, plan.trace));
+    let mut network = GossipNetwork::spawn_elastic(
+        plan.net,
+        plan.spec,
+        engine,
+        state,
+        checkpoints,
+        &dormant,
+        recorder.clone(),
+    );
     let timer = Timer::start();
     let outcome = Session::open(&plan, policy.schedule_salt(), &mut network)
         .and_then(|mut session| {
@@ -415,6 +425,15 @@ pub(crate) fn run_gossip_driver(
         Ok((curve, final_cost, iters, converged, liveness)) => {
             let faults = network.take_trace();
             let state = network.shutdown()?;
+            // Merge the rings only after the agent threads have joined:
+            // every per-block ring is quiescent, so the timeline is
+            // complete and the snapshot consistent.
+            let telemetry = recorder.armed().then(|| recorder.snapshot());
+            if recorder.armed() {
+                if let Some(out) = &plan.trace.out {
+                    recorder.write_chrome_trace(std::path::Path::new(out))?;
+                }
+            }
             Ok((
                 SolverReport {
                     curve,
@@ -425,6 +444,7 @@ pub(crate) fn run_gossip_driver(
                     engine: engine_name,
                     faults,
                     liveness,
+                    telemetry,
                 },
                 state,
             ))
@@ -434,6 +454,15 @@ pub(crate) fn run_gossip_driver(
             // agents are non-blocking, so Shutdown reaches them even
             // mid-protocol and stale traffic is drained).
             let _ = network.shutdown();
+            // Flight-recorder dump: whatever the rings held when the
+            // run died, in merge order, for post-mortem debugging.
+            if recorder.armed() {
+                if let Some(dump) = &plan.trace.error_dump {
+                    if let Err(we) = recorder.write_jsonl(std::path::Path::new(dump)) {
+                        log::warn!("could not write flight-recorder dump {dump}: {we}");
+                    }
+                }
+            }
             Err(e)
         }
     }

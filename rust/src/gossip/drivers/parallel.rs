@@ -47,6 +47,9 @@ pub struct ParallelDriver {
     /// Persist snapshots here instead of in memory (survives the
     /// process; enables warm joins across runs).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Flight-recorder + metrics configuration (armed by default; set
+    /// [`crate::trace::TraceConfig::out`] to export a Chrome trace).
+    pub trace: crate::trace::TraceConfig,
 }
 
 impl ParallelDriver {
@@ -61,6 +64,7 @@ impl ParallelDriver {
             shrink: ShrinkPlan::default(),
             checkpoint_every: 0,
             checkpoint_dir: None,
+            trace: crate::trace::TraceConfig::default(),
         }
     }
 
@@ -110,6 +114,13 @@ impl ParallelDriver {
     /// [`crate::gossip::DiskSink`]).
     pub fn with_checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
         self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Configure the flight recorder (ring sizing, Chrome-trace export
+    /// path, error-path JSONL dump; disarm for overhead baselines).
+    pub fn with_trace(mut self, trace: crate::trace::TraceConfig) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -177,6 +188,7 @@ impl ParallelDriver {
                             Some(DriverMsg::Done { token, result, .. }) => {
                                 network.forget_inflight(token);
                                 if let Some((s, _)) = outstanding.remove(&token) {
+                                    network.recorder.structure_end(token, result.is_ok());
                                     result?;
                                     session.note_success(&s);
                                     completed += 1;
@@ -189,6 +201,7 @@ impl ParallelDriver {
                             Some(DriverMsg::Expired { anchor, token, suspect }) => {
                                 network.forget_inflight(token);
                                 if let Some((_, t0)) = outstanding.remove(&token) {
+                                    network.recorder.structure_end(token, false);
                                     let lag = session.tick.saturating_sub(t0);
                                     session.note_expiry(iters, anchor, suspect, lag);
                                 } else {
@@ -215,6 +228,7 @@ impl ParallelDriver {
                                     let (s, t0) =
                                         outstanding.remove(&token).expect("collected above");
                                     network.forget_inflight(token);
+                                    network.recorder.structure_end(token, false);
                                     // The anchor itself went quiet: it
                                     // is both the blamed party and the
                                     // only address the token had.
@@ -263,6 +277,7 @@ impl ParallelDriver {
                 shrink: &self.shrink,
                 checkpoint_every: self.checkpoint_every,
                 checkpoint_dir: self.checkpoint_dir.as_deref(),
+                trace: &self.trace,
             },
             engine,
             train,
@@ -343,6 +358,7 @@ impl DispatchPolicy for ParallelDriver {
                                         .iter()
                                         .position(|x| *x == s)
                                         .expect("aborted structure is from this chunk");
+                                    network.recorder.retry(s.roles().anchor);
                                     network.dispatch(s, chunk_p[k])?;
                                 }
                             }

@@ -41,6 +41,16 @@
 //! dispatch discipline is one file under `drivers/`, a new membership
 //! move (grow and shrink exist today) is a plan plus a membership
 //! transition, and nothing above L1 touches a transport.
+//!
+//! One arrow crosses the whole stack *sideways*: every layer reports
+//! into the [`crate::trace::Recorder`] (flight-recorder events +
+//! per-block metrics; PERF.md §Observability). That arrow is
+//! write-only — `trace` never calls back into gossip, agents, or
+//! transports, so it adds no layering cycle: agents record phase
+//! transitions and checkpoint traffic, `network` records structure
+//! dispatch, `supervisor` mirrors its fault actions, the transports
+//! record wire traffic, and `drivers` own the recorder's lifecycle
+//! (arm, snapshot into `SolverReport::telemetry`, export).
 
 mod agent;
 mod checkpoint;

@@ -21,6 +21,7 @@ use crate::engine::{Engine, StructureParams};
 use crate::grid::{BlockId, GridSpec, Structure};
 use crate::model::FactorState;
 use crate::net::{self, AgentMsg, DriverMsg, FaultRecord, NetConfig, Transport, WireSnapshot};
+use crate::trace::Recorder;
 use crate::{Error, Result};
 
 use super::CheckpointStore;
@@ -46,6 +47,10 @@ pub struct GossipNetwork {
     /// Executed fault/membership actions, in firing order (the
     /// replayable trace). Pushed by the supervisor layer.
     pub(super) trace: Vec<FaultRecord>,
+    /// The run's flight recorder; structure begin/end events land on
+    /// its driver control ring, everything agent-side goes through the
+    /// copy the transports hand each agent.
+    pub(super) recorder: Arc<Recorder>,
 }
 
 impl GossipNetwork {
@@ -74,12 +79,22 @@ impl GossipNetwork {
         state: FactorState,
         checkpoints: Option<Arc<CheckpointStore>>,
     ) -> Self {
-        Self::spawn_elastic(net, spec, engine, state, checkpoints, &net::DormantSet::new())
+        Self::spawn_elastic(
+            net,
+            spec,
+            engine,
+            state,
+            checkpoints,
+            &net::DormantSet::new(),
+            Arc::new(Recorder::disabled()),
+        )
     }
 
     /// Spawn with some blocks dormant (provisioned but outside the
     /// membership until the supervisor joins them — see
-    /// [`super::GrowthPlan`]).
+    /// [`super::GrowthPlan`]) and the run's flight `recorder`
+    /// ([`Recorder::disabled`] for untraced runs).
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn_elastic(
         net: &NetConfig,
         spec: GridSpec,
@@ -87,14 +102,24 @@ impl GossipNetwork {
         state: FactorState,
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &net::DormantSet,
+        recorder: Arc<Recorder>,
     ) -> Self {
         Self {
             spec,
-            transport: net::spawn(net, spec, engine, state, checkpoints, dormant),
+            transport: net::spawn(
+                net,
+                spec,
+                engine,
+                state,
+                checkpoints,
+                dormant,
+                recorder.clone(),
+            ),
             next_token: 0,
             backlog: VecDeque::new(),
             inflight: HashMap::new(),
             trace: Vec::new(),
+            recorder,
         }
     }
 
@@ -156,6 +181,7 @@ impl GossipNetwork {
     pub fn dispatch(&mut self, structure: Structure, params: StructureParams) -> Result<u64> {
         let token = self.next_token;
         self.next_token += 1;
+        self.recorder.structure_begin(token, structure.roles().anchor);
         self.transport.send(
             structure.roles().anchor,
             AgentMsg::Execute { structure, params, token },
@@ -170,6 +196,7 @@ impl GossipNetwork {
         match self.recv_msg()? {
             DriverMsg::Done { anchor, token, result } => {
                 self.inflight.remove(&token);
+                self.recorder.structure_end(token, result.is_ok());
                 result.map(|()| (anchor, token))
             }
             other => Err(Error::Gossip(format!(

@@ -22,6 +22,14 @@ use super::elastic::Membership;
 use super::network::GossipNetwork;
 
 impl GossipNetwork {
+    /// Append `record` to the replayable trace and mirror it onto the
+    /// flight recorder's control ring (one event source, two sinks —
+    /// the JSON fault trace and the Chrome/JSONL timeline).
+    fn push_record(&mut self, record: FaultRecord) {
+        self.recorder.fault(record);
+        self.trace.push(record);
+    }
+
     /// Abort the in-flight structure `s` (token `token`): ask its
     /// anchor to drain the protocol and undo the update, discard any
     /// completion that raced the abort, and record the abort against
@@ -38,7 +46,7 @@ impl GossipNetwork {
         loop {
             match self.transport.recv()? {
                 DriverMsg::Aborted { token: t, .. } if t == token => {
-                    self.trace.push(FaultRecord::Abort { step, anchor, victim });
+                    self.push_record(FaultRecord::Abort { step, anchor, victim });
                     return Ok(());
                 }
                 DriverMsg::Done { token: t, result, .. } if t == token => {
@@ -84,7 +92,7 @@ impl GossipNetwork {
         loop {
             match self.transport.recv()? {
                 DriverMsg::Restarted { from, version, lost } if from == block => {
-                    self.trace.push(FaultRecord::Kill {
+                    self.push_record(FaultRecord::Kill {
                         step,
                         block,
                         restored_version: version,
@@ -113,7 +121,7 @@ impl GossipNetwork {
         loop {
             match self.transport.recv()? {
                 DriverMsg::Joined { from, version, warm } if from == block => {
-                    self.trace.push(FaultRecord::Join { step, block, version, warm });
+                    self.push_record(FaultRecord::Join { step, block, version, warm });
                     return Ok(());
                 }
                 parked @ (DriverMsg::Done { .. } | DriverMsg::Expired { .. }) => {
@@ -154,7 +162,7 @@ impl GossipNetwork {
         loop {
             match self.transport.recv()? {
                 DriverMsg::Retired { from, version, .. } if from == block => {
-                    self.trace.push(FaultRecord::Retire { step, block, version, handoffs });
+                    self.push_record(FaultRecord::Retire { step, block, version, handoffs });
                     return Ok(());
                 }
                 parked @ (DriverMsg::Done { .. } | DriverMsg::Expired { .. }) => {
@@ -180,7 +188,7 @@ impl GossipNetwork {
         duration: Duration,
     ) -> Result<()> {
         self.transport.inject_fault(LinkFault::Partition { a, b, duration })?;
-        self.trace.push(FaultRecord::Partition {
+        self.push_record(FaultRecord::Partition {
             step,
             a,
             b,
@@ -202,7 +210,7 @@ impl GossipNetwork {
         duration: Duration,
     ) -> Result<()> {
         self.transport.inject_fault(LinkFault::Slowdown { block, factor, duration })?;
-        self.trace.push(FaultRecord::Stall {
+        self.push_record(FaultRecord::Stall {
             step,
             block,
             factor,
@@ -226,7 +234,7 @@ impl GossipNetwork {
         loop {
             match self.transport.recv()? {
                 DriverMsg::Restarted { from, .. } if from == block => {
-                    self.trace.push(FaultRecord::SilentKill { step, block });
+                    self.push_record(FaultRecord::SilentKill { step, block });
                     return Ok(());
                 }
                 parked @ (DriverMsg::Done { .. } | DriverMsg::Expired { .. }) => {
@@ -247,7 +255,9 @@ impl GossipNetwork {
     /// sorted — determinism is the caller's contract) to the
     /// replayable trace.
     pub(crate) fn record_expiries(&mut self, records: impl Iterator<Item = FaultRecord>) {
-        self.trace.extend(records);
+        for r in records {
+            self.push_record(r);
+        }
     }
 
     /// Executed fault actions so far, in firing order.

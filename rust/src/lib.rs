@@ -72,6 +72,7 @@ pub mod model;
 pub mod net;
 pub mod runtime;
 pub mod solver;
+pub mod trace;
 pub mod util;
 
 mod error;
@@ -101,5 +102,6 @@ pub mod prelude {
         baselines, ConvergenceCriterion, SequentialDriver, SolverConfig,
         SolverReport, StepSchedule,
     };
+    pub use crate::trace::{Recorder, TelemetrySnapshot, TraceConfig};
     pub use crate::{Error, Result};
 }

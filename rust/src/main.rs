@@ -3,9 +3,10 @@
 //! ```text
 //! gridmc train --preset exp3 [--engine xla] [--driver parallel]
 //!              [--workers N] [--scale 0.1] [--out-csv curve.csv]
+//!              [--trace trace.json]
 //! gridmc train --config configs/my.toml
-//! gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|ablations>
-//!                     [--scale S]
+//! gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|
+//!                     trace-overhead|ablations> [--scale S]
 //! gridmc gen-data --preset ml1m --out /tmp/ml1m.csv [--seed 7]
 //! gridmc inspect --preset exp4
 //! ```
@@ -28,8 +29,8 @@ gridmc — two-dimensional gossip matrix completion (Bhutani & Mishra 2017)
 USAGE:
   gridmc train --preset <exp1..exp6|churn|grow|shrink|liveness|table3-<ds>-<g>-<r>> [options]
   gridmc train --config <file.toml> [options]
-  gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|ablations>
-                     [--scale S]
+  gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|
+                      trace-overhead|ablations> [--scale S]
   gridmc gen-data --preset <ml1m|ml10m|ml20m|netflix> --out <path> [--seed N]
   gridmc inspect --preset <name>
 
@@ -42,6 +43,8 @@ TRAIN OPTIONS:
   --net-workers <N>                           multiplex worker threads (0 = auto)
   --scale <S>                                 scale max_iters/eval_every
   --out-csv <path>                            write the cost curve as CSV
+  --trace <path>                              write a Chrome trace (flight
+                                              recorder) at shutdown
 
 ENV:
   GRIDMC_LOG=info|debug       log level
@@ -167,9 +170,22 @@ fn cmd_train(args: &Args) -> Result<()> {
             .parse()
             .map_err(|_| Error::Config(format!("bad --net-workers {nw:?}")))?;
     }
+    if let Some(path) = args.get("trace") {
+        let mut t = cfg.trace.take().unwrap_or_default();
+        t.armed = true;
+        t.out = Some(path.to_string());
+        cfg.trace = Some(t);
+    }
     apply_scale(&mut cfg, args.get("scale"))?;
 
     let outcome = experiments::run_experiment(&cfg)?;
+    // Only the gossip drivers run the recorder; a sequential run with
+    // --trace writes nothing, so don't claim otherwise.
+    if outcome.report.telemetry.is_some() {
+        if let Some(path) = cfg.trace.as_ref().and_then(|t| t.out.as_deref()) {
+            println!("chrome trace -> {path}");
+        }
+    }
     println!("{}", experiments::format_outcome(&cfg, &outcome));
     if let Some(path) = args.get("out-csv") {
         let mut f = std::fs::File::create(path)?;
@@ -196,11 +212,13 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "grow" => experiments::scenarios::grow::run_grow()?,
         "shrink" => experiments::scenarios::shrink::run_shrink()?,
         "liveness" => experiments::scenarios::liveness::run_liveness()?,
+        "trace-overhead" => experiments::scenarios::trace_overhead::run_trace_overhead()?,
         "ablations" => experiments::ablations::run()?,
         other => {
             return Err(Error::Config(format!(
                 "unknown table {other:?} \
-                 (table2|table3|fig2|parallel|churn|grow|shrink|liveness|ablations)"
+                 (table2|table3|fig2|parallel|churn|grow|shrink|liveness|\
+                 trace-overhead|ablations)"
             )))
         }
     };

@@ -12,9 +12,10 @@ use crate::engine::Engine;
 use crate::gossip::{AgentStatus, BlockAgent, CheckpointStore};
 use crate::grid::{BlockId, GridSpec};
 use crate::model::FactorState;
+use crate::trace::Recorder;
 use crate::{Error, Result};
 
-use super::{AgentMsg, DeathWatch, DriverMsg, LinkFrame, PeerSender, Router, Transport};
+use super::{AgentMsg, DeathWatch, DriverMsg, LinkFrame, PeerSender, Router, SeqSpace, Transport};
 
 /// Per-agent mailboxes, addressable by block id.
 struct ChannelPeers {
@@ -45,7 +46,8 @@ impl ChannelTransport {
     /// `checkpoints`, when set, makes every agent crash-recoverable.
     /// Blocks in `dormant` spawn inactive (see [`super::DormantSet`]).
     /// `liveness`, when set, arms every agent's decentralized failure
-    /// detector.
+    /// detector. `recorder` is the run's flight recorder
+    /// ([`Recorder::disabled`] for untraced runs).
     pub fn spawn(
         spec: GridSpec,
         engine: Arc<dyn Engine>,
@@ -53,8 +55,9 @@ impl ChannelTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         liveness: Option<crate::gossip::LivenessConfig>,
+        recorder: Arc<Recorder>,
     ) -> Self {
-        Self::spawn_tapped(spec, engine, state, checkpoints, dormant, liveness, None)
+        Self::spawn_tapped(spec, engine, state, checkpoints, dormant, liveness, recorder, None)
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -66,6 +69,7 @@ impl ChannelTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         liveness: Option<crate::gossip::LivenessConfig>,
+        recorder: Arc<Recorder>,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
         let n = spec.num_blocks();
@@ -79,11 +83,12 @@ impl ChannelTransport {
         let peers = Arc::new(ChannelPeers { q: spec.q, txs });
         let (driver_tx, driver_rx) = mpsc::channel();
         let mut threads = Vec::with_capacity(n);
-        let wire_seq = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let seqs = Arc::new(SeqSpace::new(&spec));
         for (id, rx) in spec.blocks().zip(rxs) {
             let (u, w) = state.take_block(id);
-            let mut agent =
-                BlockAgent::new(id, u, w, engine.clone()).with_grid(spec.p, spec.q);
+            let mut agent = BlockAgent::new(id, u, w, engine.clone())
+                .with_grid(spec.p, spec.q)
+                .with_recorder(recorder.clone());
             if let Some(cfg) = liveness {
                 agent = agent.with_liveness(cfg);
             }
@@ -97,7 +102,8 @@ impl ChannelTransport {
                 peers: peers.clone(),
                 driver: driver_tx.clone(),
                 tap: tap.clone(),
-                wire_seq: wire_seq.clone(),
+                seqs: seqs.clone(),
+                recorder: recorder.clone(),
             };
             threads.push(
                 thread::Builder::new()
@@ -106,6 +112,7 @@ impl ChannelTransport {
                         let _death = DeathWatch { label: id, driver: router.driver.clone() };
                         let mut out = Vec::with_capacity(6);
                         while let Ok(msg) = rx.recv() {
+                            router.recorder.msg_recv(id);
                             let status = agent.on_msg(msg, &mut out);
                             router.flush(id, &mut out);
                             if status == AgentStatus::Retired {

@@ -40,6 +40,7 @@ pub use fault::{FaultConfig, FaultEvent, FaultPlan, FaultRecord, LinkFault};
 pub use multiplex::MultiplexTransport;
 pub use sim::{SimConfig, SimTransport, WireSnapshot, WireStats};
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -48,6 +49,7 @@ use crate::engine::{Engine, StructureParams};
 use crate::gossip::CheckpointStore;
 use crate::grid::{BlockId, GridSpec, Structure};
 use crate::model::FactorState;
+use crate::trace::Recorder;
 use crate::{Error, Result};
 
 /// Messages addressed to a block agent.
@@ -258,6 +260,46 @@ pub struct LinkFrame {
     pub bytes: Vec<u8>,
 }
 
+/// Deterministic wire sequencing: one monotone counter per *directed
+/// grid edge*, shared by every worker clone of a transport's
+/// [`Router`].
+///
+/// A single transport-wide counter is globally unique but not
+/// rerun-stable — which edge draws the next number depends on how
+/// worker threads race. Per-edge counters are both: the `n`-th frame
+/// on edge `A→B` always gets the same number (protocol traffic on one
+/// edge is causally ordered), and the edge endpoints are baked into
+/// the high bits so numbers never collide across edges. The dedup
+/// window only needs uniqueness; the flight recorder gets determinism
+/// for free.
+///
+/// Layout: `from_lin (12 bits) | to_lin (12 bits) | counter (40
+/// bits)` — grids up to 4096 blocks, 2^40 frames per edge.
+pub(crate) struct SeqSpace {
+    n: usize,
+    q: usize,
+    /// `n * n` per-edge counters (row-major by source) plus one
+    /// overflow slot for out-of-grid endpoints (unreachable with
+    /// spec-sized grids, but a stray id must not panic an agent).
+    ctr: Vec<AtomicU64>,
+}
+
+impl SeqSpace {
+    pub(crate) fn new(spec: &GridSpec) -> Self {
+        let n = spec.p * spec.q;
+        SeqSpace { n, q: spec.q, ctr: (0..n * n + 1).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// Draw the next sequence number for edge `from → to`.
+    pub(crate) fn next(&self, from: BlockId, to: BlockId) -> u64 {
+        let f = from.index(self.q);
+        let t = to.index(self.q);
+        let idx = if f < self.n && t < self.n { f * self.n + t } else { self.n * self.n };
+        let c = self.ctr[idx].fetch_add(1, Ordering::Relaxed);
+        ((f as u64 & 0xFFF) << 52) | ((t as u64 & 0xFFF) << 40) | (c & ((1 << 40) - 1))
+    }
+}
+
 /// How agent worker threads deliver an agent's outbox: peer messages go
 /// to the destination agent's queue (or to the simulated link tap when
 /// one is installed), driver messages to the driver channel.
@@ -266,11 +308,15 @@ pub(crate) struct Router {
     pub(crate) peers: Arc<dyn PeerSender>,
     pub(crate) driver: mpsc::Sender<DriverMsg>,
     pub(crate) tap: Option<mpsc::Sender<LinkFrame>>,
-    /// Transport-wide wire sequence counter: every frame that goes to
-    /// the link tap is stamped with a unique number, so receivers can
-    /// deduplicate replayed deliveries. Shared across all worker
+    /// Per-edge wire sequence counters: every frame that goes to the
+    /// link tap is stamped with a unique, rerun-deterministic number,
+    /// so receivers can deduplicate replayed deliveries and the flight
+    /// recorder can order sends canonically. Shared across all worker
     /// clones of the router.
-    pub(crate) wire_seq: Arc<std::sync::atomic::AtomicU64>,
+    pub(crate) seqs: Arc<SeqSpace>,
+    /// Flight recorder for wire-send events (disarmed recorders make
+    /// every hook a single branch).
+    pub(crate) recorder: Arc<Recorder>,
 }
 
 impl Router {
@@ -280,19 +326,26 @@ impl Router {
         for o in out.drain(..) {
             match o {
                 Outgoing::Peer(to, msg) => {
+                    let seq = self.seqs.next(from, to);
+                    let kind = msg.kind();
                     if let Some(tap) = &self.tap {
-                        let seq =
-                            self.wire_seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         match codec::encode(&msg, seq) {
                             Ok(bytes) => {
+                                self.recorder.wire_send(from, to, seq, bytes.len() as u32, kind);
                                 if tap.send(LinkFrame { from, to, bytes }).is_err() {
                                     log::warn!("sim link down; frame {from}->{to} dropped");
                                 }
                             }
                             Err(e) => log::warn!("codec: {e}"),
                         }
-                    } else if let Err(e) = self.peers.send_to(to, msg) {
-                        log::warn!("gossip link {from}->{to}: {e}");
+                    } else {
+                        // In-process delivery never serializes: record
+                        // the frame with its deterministic seq but no
+                        // byte count.
+                        self.recorder.wire_send(from, to, seq, 0, kind);
+                        if let Err(e) = self.peers.send_to(to, msg) {
+                            log::warn!("gossip link {from}->{to}: {e}");
+                        }
                     }
                 }
                 Outgoing::Driver(msg) => {
@@ -486,7 +539,8 @@ pub type DormantSet = std::collections::HashSet<usize>;
 /// its factors into the store (once at spawn, then at the store's
 /// cadence) so the supervisor can crash-and-restore it. Blocks listed
 /// in `dormant` (by linear index) spawn inactive and wait for
-/// [`AgentMsg::Join`].
+/// [`AgentMsg::Join`]. `recorder` is threaded into every router and
+/// agent ([`Recorder::disabled`] for untraced runs).
 pub fn spawn(
     net: &NetConfig,
     spec: GridSpec,
@@ -494,6 +548,7 @@ pub fn spawn(
     state: FactorState,
     checkpoints: Option<Arc<CheckpointStore>>,
     dormant: &DormantSet,
+    recorder: Arc<Recorder>,
 ) -> Box<dyn Transport> {
     match net.kind {
         TransportKind::Channel => Box::new(ChannelTransport::spawn(
@@ -503,6 +558,7 @@ pub fn spawn(
             checkpoints,
             dormant,
             net.liveness,
+            recorder,
         )),
         TransportKind::Multiplex => Box::new(MultiplexTransport::spawn(
             spec,
@@ -512,6 +568,7 @@ pub fn spawn(
             checkpoints,
             dormant,
             net.liveness,
+            recorder,
         )),
         TransportKind::Sim => Box::new(SimTransport::spawn_over_channel(
             spec,
@@ -521,6 +578,7 @@ pub fn spawn(
             dormant,
             net.sim,
             net.liveness,
+            recorder,
         )),
         TransportKind::SimMultiplex => Box::new(SimTransport::spawn_over_multiplex(
             spec,
@@ -531,6 +589,7 @@ pub fn spawn(
             dormant,
             net.sim,
             net.liveness,
+            recorder,
         )),
     }
 }

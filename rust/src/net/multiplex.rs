@@ -22,9 +22,10 @@ use crate::engine::Engine;
 use crate::gossip::{AgentStatus, BlockAgent, CheckpointStore};
 use crate::grid::{BlockId, GridSpec};
 use crate::model::FactorState;
+use crate::trace::Recorder;
 use crate::{Error, Result};
 
-use super::{AgentMsg, DeathWatch, DriverMsg, LinkFrame, PeerSender, Router, Transport};
+use super::{AgentMsg, DeathWatch, DriverMsg, LinkFrame, PeerSender, Router, SeqSpace, Transport};
 
 /// Auto worker count is capped here: message routing saturates well
 /// before the core count on big boxes, and the acceptance target is
@@ -37,6 +38,9 @@ struct MuxPeers {
     /// Block linear index → worker index.
     assign: Vec<usize>,
     txs: Vec<mpsc::Sender<(BlockId, AgentMsg)>>,
+    /// Queue-depth gauge: `std::sync::mpsc` queues expose no length,
+    /// so the recorder high-waters `enqueued − dequeued` instead.
+    recorder: Arc<Recorder>,
 }
 
 impl PeerSender for MuxPeers {
@@ -45,6 +49,7 @@ impl PeerSender for MuxPeers {
             .assign
             .get(to.index(self.q))
             .ok_or_else(|| Error::Gossip(format!("no agent {to}")))?;
+        self.recorder.mux_enqueue();
         self.txs[w]
             .send((to, msg))
             .map_err(|_| Error::Gossip(format!("worker {w} (agent {to}) queue closed")))
@@ -73,7 +78,8 @@ impl MultiplexTransport {
     /// `checkpoints`, when set, makes every agent crash-recoverable.
     /// Blocks in `dormant` spawn inactive (see [`super::DormantSet`]).
     /// `liveness`, when set, arms every agent's decentralized failure
-    /// detector.
+    /// detector. `recorder` is the run's flight recorder
+    /// ([`Recorder::disabled`] for untraced runs).
     pub fn spawn(
         spec: GridSpec,
         engine: Arc<dyn Engine>,
@@ -82,8 +88,11 @@ impl MultiplexTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         liveness: Option<crate::gossip::LivenessConfig>,
+        recorder: Arc<Recorder>,
     ) -> Self {
-        Self::spawn_tapped(spec, engine, state, workers, checkpoints, dormant, liveness, None)
+        Self::spawn_tapped(
+            spec, engine, state, workers, checkpoints, dormant, liveness, recorder, None,
+        )
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -96,6 +105,7 @@ impl MultiplexTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         liveness: Option<crate::gossip::LivenessConfig>,
+        recorder: Arc<Recorder>,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
         let n = spec.num_blocks();
@@ -110,7 +120,8 @@ impl MultiplexTransport {
             txs.push(tx);
             rxs.push(rx);
         }
-        let peers = Arc::new(MuxPeers { q: spec.q, assign, txs });
+        let peers =
+            Arc::new(MuxPeers { q: spec.q, assign, txs, recorder: recorder.clone() });
         let (driver_tx, driver_rx) = mpsc::channel();
 
         // Shard the agents: block k lives on worker k mod w.
@@ -119,8 +130,9 @@ impl MultiplexTransport {
         for id in spec.blocks() {
             let k = id.index(spec.q);
             let (u, wm) = state.take_block(id);
-            let mut agent =
-                BlockAgent::new(id, u, wm, engine.clone()).with_grid(spec.p, spec.q);
+            let mut agent = BlockAgent::new(id, u, wm, engine.clone())
+                .with_grid(spec.p, spec.q)
+                .with_recorder(recorder.clone());
             if let Some(cfg) = liveness {
                 agent = agent.with_liveness(cfg);
             }
@@ -134,14 +146,15 @@ impl MultiplexTransport {
         }
 
         let q = spec.q;
-        let wire_seq = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let seqs = Arc::new(SeqSpace::new(&spec));
         let mut threads = Vec::with_capacity(w);
         for (wi, (rx, mut agents)) in rxs.into_iter().zip(shards).enumerate() {
             let router = Router {
                 peers: peers.clone(),
                 driver: driver_tx.clone(),
                 tap: tap.clone(),
-                wire_seq: wire_seq.clone(),
+                seqs: seqs.clone(),
+                recorder: recorder.clone(),
             };
             threads.push(
                 thread::Builder::new()
@@ -156,11 +169,13 @@ impl MultiplexTransport {
                         let mut live = agents.len();
                         while live > 0 {
                             let Ok((to, msg)) = rx.recv() else { break };
+                            router.recorder.mux_dequeue();
                             let k = to.index(q);
                             let Some(agent) = agents.get_mut(&k) else {
                                 log::warn!("mux worker {wi}: message for unknown agent {to}");
                                 continue;
                             };
+                            router.recorder.msg_recv(to);
                             let status = agent.on_msg(msg, &mut out);
                             router.flush(to, &mut out);
                             if status == AgentStatus::Retired {

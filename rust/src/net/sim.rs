@@ -220,6 +220,7 @@ impl SimTransport {
         dormant: &super::DormantSet,
         cfg: SimConfig,
         liveness: Option<crate::gossip::LivenessConfig>,
+        recorder: Arc<crate::trace::Recorder>,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
         let inner = Box::new(ChannelTransport::spawn_tapped(
@@ -229,6 +230,7 @@ impl SimTransport {
             checkpoints,
             dormant,
             liveness,
+            recorder,
             Some(tx),
         ));
         Self::with_link(inner, rx, cfg, spec.q)
@@ -245,6 +247,7 @@ impl SimTransport {
         dormant: &super::DormantSet,
         cfg: SimConfig,
         liveness: Option<crate::gossip::LivenessConfig>,
+        recorder: Arc<crate::trace::Recorder>,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
         let inner = Box::new(MultiplexTransport::spawn_tapped(
@@ -255,6 +258,7 @@ impl SimTransport {
             checkpoints,
             dormant,
             liveness,
+            recorder,
             Some(tx),
         ));
         Self::with_link(inner, rx, cfg, spec.q)

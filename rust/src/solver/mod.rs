@@ -103,6 +103,9 @@ pub struct SolverReport {
     /// Liveness summary of a decentralized (pulse-clocked) run; `None`
     /// when the supervisor orchestrated faults directly.
     pub liveness: Option<crate::metrics::LivenessStats>,
+    /// Per-block metrics snapshot from the flight recorder; `None` when
+    /// the recorder is disarmed and for the non-gossip drivers.
+    pub telemetry: Option<crate::trace::TelemetrySnapshot>,
 }
 
 impl SolverReport {

@@ -135,6 +135,7 @@ impl SequentialDriver {
             engine: engine.name().to_string(),
             faults: Vec::new(),
             liveness: None,
+            telemetry: None,
         })
     }
 }

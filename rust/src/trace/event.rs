@@ -1,0 +1,283 @@
+//! Structured flight-recorder events and their canonical ordering.
+//!
+//! An event's identity is purely *logical*: structure tokens, protocol
+//! phases, per-edge wire sequence numbers, checkpoint versions. No
+//! wall-clock value ever enters an event, which is what lets a trace
+//! replay byte-for-byte across reruns (PERF.md §Observability). The
+//! canonical export order ([`EventKind::sort_key`]) is likewise built
+//! only from those logical fields, so the racy *arrival* interleaving
+//! of a multi-threaded run (two `Factors` replies racing into an
+//! anchor's mailbox, `Done`s of one chunk completing in any order)
+//! never leaks into the exported bytes.
+
+use crate::grid::BlockId;
+use crate::net::FaultRecord;
+
+/// Agent protocol phase, as recorded by [`EventKind::PhaseEnter`].
+/// Mirrors the agent's internal state machine; the discriminant is the
+/// protocol rank used for canonical ordering within one structure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PhaseTag {
+    /// Anchoring: waiting for the members' `Factors` replies.
+    Gather = 1,
+    /// Anchoring: waiting for the members' `PutAck`s.
+    Scatter = 2,
+    /// Anchoring an abort: waiting for revert acks.
+    Revert = 3,
+    /// Retiring: waiting for the heirs' hand-off acks.
+    Handoff = 4,
+    /// Back to idle (structure completed at this anchor).
+    Idle = 5,
+}
+
+impl PhaseTag {
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseTag::Gather => "gather",
+            PhaseTag::Scatter => "scatter",
+            PhaseTag::Revert => "revert",
+            PhaseTag::Handoff => "handoff",
+            PhaseTag::Idle => "idle",
+        }
+    }
+
+    /// Decode the `repr(u8)` discriminant (used by the phase-timing
+    /// metrics, which store the previous phase in an atomic).
+    pub(crate) fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            1 => Some(PhaseTag::Gather),
+            2 => Some(PhaseTag::Scatter),
+            3 => Some(PhaseTag::Revert),
+            4 => Some(PhaseTag::Handoff),
+            5 => Some(PhaseTag::Idle),
+            _ => None,
+        }
+    }
+}
+
+/// Peer liveness grade, as recorded by [`EventKind::GradeChange`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum GradeTag {
+    Alive = 0,
+    Suspect = 1,
+    Dead = 2,
+}
+
+impl GradeTag {
+    pub fn name(self) -> &'static str {
+        match self {
+            GradeTag::Alive => "alive",
+            GradeTag::Suspect => "suspect",
+            GradeTag::Dead => "dead",
+        }
+    }
+}
+
+/// One structured flight-recorder event. All variants are `Copy` and
+/// heap-free: recording one is a couple of word writes into a
+/// preallocated ring slot, never an allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Driver dispatched structure `token` to `anchor` (control track).
+    StructureBegin { token: u64, anchor: BlockId },
+    /// Driver consumed the structure's completion (control track).
+    StructureEnd { token: u64, ok: bool },
+    /// The agent's protocol state machine moved to `phase` for `token`.
+    PhaseEnter { token: u64, phase: PhaseTag },
+    /// A wire frame left this block for `to`. `bytes` is the encoded
+    /// frame size on the sim tap and `0` on the in-process transports
+    /// (which never serialize). `msg` is the protocol message kind.
+    WireSend { to: BlockId, seq: u64, bytes: u32, msg: &'static str },
+    /// A sequenced wire frame from `from` was admitted by this block.
+    WireRecv { from: BlockId, seq: u64 },
+    /// A duplicated wire frame from `from` was dropped by the dedup
+    /// window.
+    DedupDrop { from: BlockId, seq: u64 },
+    /// This block snapshotted its factors at `version`.
+    CheckpointSave { version: u64 },
+    /// This block restored its factors from snapshot `version`.
+    CheckpointRestore { version: u64 },
+    /// This anchor's failure detector regraded `peer` (liveness runs
+    /// only; excluded from the byte-stability guarantee).
+    GradeChange { peer: BlockId, grade: GradeTag },
+    /// This anchor expired its in-flight structure, blaming `victim`
+    /// (liveness runs only).
+    Expire { token: u64, victim: BlockId },
+    /// A supervisor-executed fault/membership action (control track) —
+    /// mirrors the [`FaultRecord`] pushed onto the run's fault trace.
+    Fault(FaultRecord),
+}
+
+/// Pack a block id into one sortable word.
+fn pack(b: BlockId) -> u64 {
+    ((b.i as u64) << 32) | b.j as u64
+}
+
+impl EventKind {
+    /// Canonical per-track export key. Built only from deterministic
+    /// logical fields — never from arrival order — so sorting a ring by
+    /// `(sort_key, lts)` yields the same sequence on every same-seed
+    /// rerun of an orchestrated run. `lts` (ring arrival order) only
+    /// breaks ties between causally ordered events of one block, where
+    /// program order is itself deterministic.
+    pub fn sort_key(&self) -> (u8, u64, u64, u64) {
+        match *self {
+            EventKind::StructureBegin { token, .. } => (0, token, 0, 0),
+            EventKind::PhaseEnter { token, phase } => (0, token, phase as u64, 0),
+            EventKind::Expire { token, victim } => (0, token, 8, pack(victim)),
+            EventKind::StructureEnd { token, .. } => (0, token, 9, 0),
+            EventKind::WireSend { seq, .. } => (1, seq, 0, 0),
+            EventKind::WireRecv { from, seq } => (2, pack(from), seq, 0),
+            EventKind::DedupDrop { from, seq } => (3, pack(from), seq, 0),
+            EventKind::CheckpointSave { version } => (4, version, 0, 0),
+            EventKind::CheckpointRestore { version } => (4, version, 1, 0),
+            EventKind::GradeChange { peer, grade } => (5, pack(peer), grade as u64, 0),
+            EventKind::Fault(r) => (6, r.step(), 0, 0),
+        }
+    }
+
+    /// Event name for the Chrome trace / JSONL exports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::StructureBegin { .. } => "structure",
+            EventKind::StructureEnd { .. } => "structure-end",
+            EventKind::PhaseEnter { .. } => "phase",
+            EventKind::WireSend { .. } => "send",
+            EventKind::WireRecv { .. } => "recv",
+            EventKind::DedupDrop { .. } => "dedup-drop",
+            EventKind::CheckpointSave { .. } => "checkpoint",
+            EventKind::CheckpointRestore { .. } => "restore",
+            EventKind::GradeChange { .. } => "grade",
+            EventKind::Expire { .. } => "expire",
+            EventKind::Fault(_) => "fault",
+        }
+    }
+
+    /// Canonical JSON `args` object (stable field order, no whitespace
+    /// variation — the unit of the byte-identical exports).
+    pub fn args_json(&self) -> String {
+        match *self {
+            EventKind::StructureBegin { token, anchor } => {
+                format!("{{\"token\":{token},\"anchor\":\"{},{}\"}}", anchor.i, anchor.j)
+            }
+            EventKind::StructureEnd { token, ok } => {
+                format!("{{\"token\":{token},\"ok\":{ok}}}")
+            }
+            EventKind::PhaseEnter { token, phase } => {
+                format!("{{\"token\":{token},\"phase\":\"{}\"}}", phase.name())
+            }
+            EventKind::WireSend { to, seq, bytes, msg } => format!(
+                "{{\"to\":\"{},{}\",\"seq\":{seq},\"bytes\":{bytes},\"msg\":\"{msg}\"}}",
+                to.i, to.j
+            ),
+            EventKind::WireRecv { from, seq } => {
+                format!("{{\"from\":\"{},{}\",\"seq\":{seq}}}", from.i, from.j)
+            }
+            EventKind::DedupDrop { from, seq } => {
+                format!("{{\"from\":\"{},{}\",\"seq\":{seq}}}", from.i, from.j)
+            }
+            EventKind::CheckpointSave { version } => format!("{{\"version\":{version}}}"),
+            EventKind::CheckpointRestore { version } => {
+                format!("{{\"version\":{version}}}")
+            }
+            EventKind::GradeChange { peer, grade } => format!(
+                "{{\"peer\":\"{},{}\",\"grade\":\"{}\"}}",
+                peer.i,
+                peer.j,
+                grade.name()
+            ),
+            EventKind::Expire { token, victim } => format!(
+                "{{\"token\":{token},\"victim\":\"{},{}\"}}",
+                victim.i, victim.j
+            ),
+            EventKind::Fault(r) => r.json(),
+        }
+    }
+}
+
+/// One recorded event: the logical payload plus the ring's arrival
+/// counter. `lts` exists for wraparound accounting and as the
+/// last-resort sort tiebreak between causally ordered same-key events;
+/// it is never exported (arrival counters are not rerun-stable).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub lts: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_keys_follow_protocol_order() {
+        let token = 7;
+        let begin = EventKind::StructureBegin { token, anchor: BlockId::new(0, 0) };
+        let gather = EventKind::PhaseEnter { token, phase: PhaseTag::Gather };
+        let scatter = EventKind::PhaseEnter { token, phase: PhaseTag::Scatter };
+        let idle = EventKind::PhaseEnter { token, phase: PhaseTag::Idle };
+        let end = EventKind::StructureEnd { token, ok: true };
+        let mut keys = [begin, gather, scatter, idle, end].map(|k| k.sort_key());
+        let sorted = keys;
+        keys.sort();
+        assert_eq!(keys, sorted, "protocol order is already canonical order");
+        // A later token sorts after every event of an earlier one.
+        let later = EventKind::StructureBegin { token: 8, anchor: BlockId::new(0, 0) };
+        assert!(later.sort_key() > end.sort_key());
+    }
+
+    #[test]
+    fn wire_events_sort_by_edge_then_seq() {
+        let a = EventKind::WireSend { to: BlockId::new(0, 1), seq: 5, bytes: 0, msg: "Factors" };
+        let b = EventKind::WireSend { to: BlockId::new(0, 1), seq: 6, bytes: 0, msg: "PutAck" };
+        assert!(a.sort_key() < b.sort_key());
+        let r1 = EventKind::WireRecv { from: BlockId::new(0, 1), seq: 9 };
+        let r2 = EventKind::WireRecv { from: BlockId::new(1, 0), seq: 2 };
+        assert!(r1.sort_key() < r2.sort_key(), "edge dominates seq across edges");
+    }
+
+    #[test]
+    fn args_json_is_stable_and_balanced() {
+        let events = [
+            EventKind::StructureBegin { token: 3, anchor: BlockId::new(1, 2) },
+            EventKind::StructureEnd { token: 3, ok: true },
+            EventKind::PhaseEnter { token: 3, phase: PhaseTag::Scatter },
+            EventKind::WireSend { to: BlockId::new(2, 2), seq: 41, bytes: 512, msg: "Factors" },
+            EventKind::WireRecv { from: BlockId::new(2, 2), seq: 41 },
+            EventKind::DedupDrop { from: BlockId::new(2, 2), seq: 41 },
+            EventKind::CheckpointSave { version: 8 },
+            EventKind::CheckpointRestore { version: 8 },
+            EventKind::GradeChange { peer: BlockId::new(0, 1), grade: GradeTag::Suspect },
+            EventKind::Expire { token: 3, victim: BlockId::new(2, 2) },
+            EventKind::Fault(FaultRecord::SilentKill { step: 70, block: BlockId::new(3, 1) }),
+        ];
+        for e in events {
+            let s = e.args_json();
+            assert_eq!(s, e.args_json(), "rendering is pure");
+            assert_eq!(s.matches('{').count(), s.matches('}').count(), "{s}");
+            assert!(s.starts_with('{') && s.ends_with('}'), "{s}");
+            assert!(!e.name().is_empty());
+        }
+        assert_eq!(
+            events[3].args_json(),
+            "{\"to\":\"2,2\",\"seq\":41,\"bytes\":512,\"msg\":\"Factors\"}"
+        );
+    }
+
+    #[test]
+    fn phase_tag_roundtrips_through_u8() {
+        for p in [
+            PhaseTag::Gather,
+            PhaseTag::Scatter,
+            PhaseTag::Revert,
+            PhaseTag::Handoff,
+            PhaseTag::Idle,
+        ] {
+            assert_eq!(PhaseTag::from_u8(p as u8), Some(p));
+        }
+        assert_eq!(PhaseTag::from_u8(0), None);
+        assert_eq!(PhaseTag::from_u8(99), None);
+    }
+}

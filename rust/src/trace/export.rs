@@ -1,0 +1,195 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto-viewable) and a
+//! JSONL flight-recorder dump.
+//!
+//! Both renderers are pure functions of the *canonically sorted* ring
+//! contents. Every timestamp they emit is deterministic logical time
+//! (the event's index in its track's canonical order, scaled by a
+//! constant) — wall-clock never appears, so the same seed and config
+//! produce byte-identical files across reruns (pinned by
+//! `tests/trace_determinism.rs`).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::event::{EventKind, TraceEvent};
+use crate::grid::BlockId;
+
+/// Logical microseconds between consecutive events of one track: pure
+/// presentation spacing so Perfetto renders distinguishable instants.
+const TICK_US: u64 = 10;
+
+/// Duration of a structure's "X" span on the driver track.
+const SPAN_US: u64 = 8;
+
+fn push_meta(out: &mut String, tid: usize, kind: &str, name: &str) {
+    let _ = writeln!(
+        out,
+        "{{\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"name\":\"{kind}\",\"args\":{{\"name\":\"{name}\"}}}},"
+    );
+}
+
+fn push_event(out: &mut String, tid: usize, index: usize, kind: &EventKind) {
+    let ts = index as u64 * TICK_US;
+    let name = kind.name();
+    let args = kind.args_json();
+    match kind {
+        EventKind::StructureBegin { .. } => {
+            let _ = writeln!(
+                out,
+                "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"ts\":{ts},\"dur\":{SPAN_US},\"name\":\"{name}\",\"args\":{args}}},"
+            );
+        }
+        _ => {
+            let _ = writeln!(
+                out,
+                "{{\"ph\":\"i\",\"pid\":0,\"tid\":{tid},\"ts\":{ts},\"s\":\"t\",\"name\":\"{name}\",\"args\":{args}}},"
+            );
+        }
+    }
+}
+
+/// Render the merged timeline as Chrome trace-event JSON: one metadata
+/// block naming the tracks (driver = tid 0, block `i,j` = tid 1+lin),
+/// then every track's events in canonical order.
+///
+/// Open the file at <https://ui.perfetto.dev> (or `chrome://tracing`)
+/// to browse it; see PERF.md §Observability.
+pub fn render_chrome_trace(control: &[TraceEvent], blocks: &[(BlockId, Vec<TraceEvent>)]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    push_meta(&mut out, 0, "process_name", "gridmc");
+    push_meta(&mut out, 0, "thread_name", "driver");
+    for (tid0, (id, _)) in blocks.iter().enumerate() {
+        push_meta(&mut out, tid0 + 1, "thread_name", &format!("block {},{}", id.i, id.j));
+    }
+    for (index, event) in control.iter().enumerate() {
+        push_event(&mut out, 0, index, &event.kind);
+    }
+    for (tid0, (_, events)) in blocks.iter().enumerate() {
+        for (index, event) in events.iter().enumerate() {
+            push_event(&mut out, tid0 + 1, index, &event.kind);
+        }
+    }
+    // Drop the trailing ",\n" of the last entry (the metadata block
+    // guarantees at least one line exists).
+    out.truncate(out.len() - 2);
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Render the merged timeline as JSONL: one event per line, canonical
+/// order, driver track first. This is the error-path flight-recorder
+/// dump format (grep-friendly, no trailing-comma bookkeeping).
+pub fn render_jsonl(control: &[TraceEvent], blocks: &[(BlockId, Vec<TraceEvent>)]) -> String {
+    let mut out = String::new();
+    for (index, event) in control.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "{{\"track\":\"driver\",\"n\":{index},\"name\":\"{}\",\"args\":{}}}",
+            event.kind.name(),
+            event.kind.args_json()
+        );
+    }
+    for (id, events) in blocks {
+        for (index, event) in events.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "{{\"track\":\"{},{}\",\"n\":{index},\"name\":\"{}\",\"args\":{}}}",
+                id.i,
+                id.j,
+                event.kind.name(),
+                event.kind.args_json()
+            );
+        }
+    }
+    out
+}
+
+/// Write `contents` to `path`, creating parent directories as needed.
+pub fn write_text(path: &Path, contents: &str) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
+    }
+    fs::write(path, contents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::PhaseTag;
+    use crate::trace::ring::EventRing;
+
+    fn sample() -> (Vec<TraceEvent>, Vec<(BlockId, Vec<TraceEvent>)>) {
+        let mut control = EventRing::new(16);
+        control.push(EventKind::StructureBegin { token: 0, anchor: BlockId::new(0, 0) });
+        control.push(EventKind::StructureEnd { token: 0, ok: true });
+        let mut ring = EventRing::new(16);
+        ring.push(EventKind::PhaseEnter { token: 0, phase: PhaseTag::Gather });
+        ring.push(EventKind::WireSend { to: BlockId::new(0, 1), seq: 3, bytes: 256, msg: "GetFactors" });
+        ring.push(EventKind::PhaseEnter { token: 0, phase: PhaseTag::Idle });
+        (control.sorted(), vec![(BlockId::new(0, 0), ring.sorted())])
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_determinism() {
+        let (control, blocks) = sample();
+        let a = render_chrome_trace(&control, &blocks);
+        let b = render_chrome_trace(&control, &blocks);
+        assert_eq!(a, b, "rendering is pure");
+        assert!(a.starts_with("{\"traceEvents\":[\n"));
+        assert!(a.ends_with("\n]}\n"));
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+        assert!(a.contains("\"name\":\"thread_name\",\"args\":{\"name\":\"driver\"}"));
+        assert!(a.contains("\"name\":\"thread_name\",\"args\":{\"name\":\"block 0,0\"}"));
+        assert!(a.contains("\"ph\":\"X\""), "structures are spans");
+        // Every event line is one of the three phases we emit.
+        for line in a.lines().skip(1) {
+            if line == "]}" {
+                continue;
+            }
+            assert!(
+                line.starts_with("{\"ph\":\"M\"")
+                    || line.starts_with("{\"ph\":\"X\"")
+                    || line.starts_with("{\"ph\":\"i\""),
+                "{line}"
+            );
+        }
+        // No dangling comma before the closing bracket.
+        assert!(!a.contains(",\n]}"));
+    }
+
+    #[test]
+    fn chrome_timestamps_are_logical_ticks() {
+        let (control, blocks) = sample();
+        let out = render_chrome_trace(&control, &blocks);
+        assert!(out.contains("\"tid\":0,\"ts\":0,\"dur\":8"), "first control event at t=0");
+        assert!(out.contains("\"tid\":1,\"ts\":10,"), "second block event at one tick");
+    }
+
+    #[test]
+    fn jsonl_lines_are_self_contained() {
+        let (control, blocks) = sample();
+        let out = render_jsonl(&control, &blocks);
+        assert_eq!(out, render_jsonl(&control, &blocks));
+        assert_eq!(out.lines().count(), 5);
+        for line in out.lines() {
+            assert!(line.starts_with("{\"track\":\""), "{line}");
+            assert!(line.ends_with('}'), "{line}");
+            assert_eq!(line.matches('{').count(), line.matches('}').count(), "{line}");
+        }
+        assert!(out.lines().next().unwrap().contains("\"track\":\"driver\""));
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid() {
+        let out = render_chrome_trace(&[], &[]);
+        assert!(out.starts_with("{\"traceEvents\":[\n"));
+        assert!(out.ends_with("\n]}\n"));
+        assert!(out.contains("process_name"));
+        assert_eq!(render_jsonl(&[], &[]), "");
+    }
+}

@@ -1,0 +1,450 @@
+//! Flight recorder + per-block metrics registry for the gossip
+//! runtime.
+//!
+//! # Design
+//!
+//! Every grid block owns a fixed-capacity [`EventRing`] written only
+//! by its hosting thread; the driver owns one more (the *control*
+//! ring) for structure dispatch/completion and supervisor fault
+//! actions. Recording is always-on by default and bounded: a push is a
+//! couple of word writes into a preallocated slot behind an
+//! uncontended mutex (single writer per ring), and once a ring is full
+//! it overwrites its oldest entry — the recorder keeps the newest
+//! `ring_capacity` events per track and never allocates in steady
+//! state (`tests/alloc_counting.rs`).
+//!
+//! Event identity is purely logical — structure tokens, protocol
+//! phases, per-edge wire sequence numbers, checkpoint versions — and
+//! the export order is a canonical sort on those fields
+//! ([`EventKind::sort_key`]), so the Chrome-trace and JSONL exports of
+//! an orchestrated run are byte-identical across same-seed reruns even
+//! though threads race (`tests/trace_determinism.rs`). Liveness-mode
+//! events ([`EventKind::GradeChange`], [`EventKind::Expire`]) depend
+//! on wall-clock pacing and are recorded best-effort outside that
+//! guarantee.
+//!
+//! The [`MetricsRegistry`] rides the same hooks: monotonic per-block
+//! counters (updates, aborts, retries, dedup drops, wire msgs/bytes,
+//! checkpoint saves/restores), time-in-phase gauges, per-peer-edge
+//! byte totals, a fixed-bucket wire-size histogram and the
+//! `MultiplexTransport` queue high-water mark. Drivers snapshot it
+//! into `SolverReport::telemetry` at shutdown; `BENCH_trace_overhead`
+//! gates the whole layer at ≤2% wall overhead versus a disarmed
+//! recorder.
+
+mod event;
+mod export;
+mod registry;
+mod ring;
+
+pub use event::{EventKind, GradeTag, PhaseTag, TraceEvent};
+pub use export::{render_chrome_trace, render_jsonl};
+pub use registry::{
+    BlockTelemetry, HistogramSnapshot, MetricsRegistry, TelemetrySnapshot, WIRE_SIZE_BUCKETS,
+};
+pub use ring::EventRing;
+
+use std::io;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::grid::BlockId;
+use crate::net::FaultRecord;
+
+/// Flight-recorder configuration (the `[trace]` table of an
+/// experiment TOML; `--trace out.json` on the CLI sets `out`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Record events and metrics. The recorder is cheap enough to stay
+    /// on by default; disarm only to measure its own overhead.
+    pub armed: bool,
+    /// Slots per ring (one ring per block + the control ring). Sizing
+    /// it to the run keeps exports complete — wraparound drops the
+    /// *oldest* events and voids byte-stability of the exports.
+    pub ring_capacity: usize,
+    /// Write the merged Chrome trace-event JSON here at shutdown.
+    pub out: Option<String>,
+    /// Write a JSONL flight-recorder dump here when the run errors
+    /// (defaults to `gridmc-flight.jsonl` next to nothing in
+    /// particular — the driver picks the path).
+    pub error_dump: Option<String>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { armed: true, ring_capacity: 4096, out: None, error_dump: None }
+    }
+}
+
+/// The per-run flight recorder: one event ring per block plus the
+/// driver's control ring, and the metrics registry. Shared as an
+/// `Arc` across the driver, supervisor, transports and agents; every
+/// hook is `&self` and early-returns when disarmed.
+#[derive(Debug)]
+pub struct Recorder {
+    armed: bool,
+    p: usize,
+    q: usize,
+    /// Wall-clock epoch for the *metrics* gauges only (time-in-phase).
+    /// Events never observe it.
+    epoch: Instant,
+    control: Mutex<EventRing>,
+    rings: Vec<Mutex<EventRing>>,
+    metrics: MetricsRegistry,
+}
+
+impl Recorder {
+    /// Build a recorder for a `p`×`q` grid. Size the grid to the
+    /// *maximal* membership (initial plus planned joins) — events from
+    /// blocks outside it are silently skipped.
+    pub fn new(p: usize, q: usize, cfg: &TraceConfig) -> Self {
+        let cap = cfg.ring_capacity.max(1);
+        Recorder {
+            armed: cfg.armed,
+            p,
+            q,
+            epoch: Instant::now(),
+            control: Mutex::new(EventRing::new(cap)),
+            rings: (0..p * q).map(|_| Mutex::new(EventRing::new(cap))).collect(),
+            metrics: MetricsRegistry::new(p, q),
+        }
+    }
+
+    /// A permanently disarmed recorder for entry points that predate
+    /// tracing. Every hook is a single branch.
+    pub fn disabled() -> Self {
+        Recorder {
+            armed: false,
+            p: 0,
+            q: 0,
+            epoch: Instant::now(),
+            control: Mutex::new(EventRing::new(1)),
+            rings: Vec::new(),
+            metrics: MetricsRegistry::new(0, 0),
+        }
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    fn lin(&self, block: BlockId) -> Option<usize> {
+        (block.i < self.p && block.j < self.q).then_some(block.i * self.q + block.j)
+    }
+
+    fn push(&self, lin: usize, kind: EventKind) {
+        self.rings[lin].lock().unwrap().push(kind);
+    }
+
+    fn push_control(&self, kind: EventKind) {
+        self.control.lock().unwrap().push(kind);
+    }
+
+    // ---- control-track hooks (driver / supervisor thread) ----------
+
+    /// Driver dispatched structure `token` anchored at `anchor`.
+    pub fn structure_begin(&self, token: u64, anchor: BlockId) {
+        if !self.armed {
+            return;
+        }
+        self.push_control(EventKind::StructureBegin { token, anchor });
+    }
+
+    /// Driver consumed structure `token`'s completion.
+    pub fn structure_end(&self, token: u64, ok: bool) {
+        if !self.armed {
+            return;
+        }
+        self.push_control(EventKind::StructureEnd { token, ok });
+    }
+
+    /// Supervisor executed a fault/membership action; mirrors the
+    /// [`FaultRecord`] it appends to the run's fault trace.
+    pub fn fault(&self, record: FaultRecord) {
+        if !self.armed {
+            return;
+        }
+        self.push_control(EventKind::Fault(record));
+    }
+
+    // ---- per-block hooks (the block's hosting thread) --------------
+
+    /// The block's protocol state machine entered `phase` for `token`.
+    pub fn phase_enter(&self, block: BlockId, token: u64, phase: PhaseTag) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            let now_us = self.epoch.elapsed().as_micros() as u64;
+            self.metrics.note_phase(lin, phase, now_us);
+            self.push(lin, EventKind::PhaseEnter { token, phase });
+        }
+    }
+
+    /// The block anchored a structure to completion.
+    pub fn update_done(&self, block: BlockId) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_update(lin);
+        }
+    }
+
+    /// The block started reverting a structure it anchored.
+    pub fn abort(&self, block: BlockId) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_abort(lin);
+        }
+    }
+
+    /// The block re-sent a frame after a liveness retry.
+    pub fn retry(&self, block: BlockId) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_retry(lin);
+        }
+    }
+
+    /// A frame left `from` for `to`. `bytes` is the encoded size on
+    /// the sim tap and `0` on in-process transports; `seq` is the
+    /// deterministic per-edge wire sequence number.
+    pub fn wire_send(&self, from: BlockId, to: BlockId, seq: u64, bytes: u32, msg: &'static str) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(from) {
+            self.metrics.note_send(lin, to, bytes);
+            self.push(lin, EventKind::WireSend { to, seq, bytes, msg });
+        }
+    }
+
+    /// A sequenced frame from `from` was admitted by `block`.
+    pub fn wire_recv(&self, block: BlockId, from: BlockId, seq: u64) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.push(lin, EventKind::WireRecv { from, seq });
+        }
+    }
+
+    /// Any inbound message reached `block`'s mailbox (metric only —
+    /// in-process transports carry no sequence numbers to record).
+    pub fn msg_recv(&self, block: BlockId) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_recv(lin);
+        }
+    }
+
+    /// `block`'s dedup window rejected a duplicated frame.
+    pub fn dedup_drop(&self, block: BlockId, from: BlockId, seq: u64) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_dedup_drop(lin);
+            self.push(lin, EventKind::DedupDrop { from, seq });
+        }
+    }
+
+    /// `block` snapshotted its factors at `version`.
+    pub fn checkpoint_save(&self, block: BlockId, version: u64) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_checkpoint_save(lin);
+            self.push(lin, EventKind::CheckpointSave { version });
+        }
+    }
+
+    /// `block` restored its factors from snapshot `version`.
+    pub fn checkpoint_restore(&self, block: BlockId, version: u64) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_checkpoint_restore(lin);
+            self.push(lin, EventKind::CheckpointRestore { version });
+        }
+    }
+
+    /// `block`'s failure detector regraded `peer` (liveness runs).
+    pub fn grade_change(&self, block: BlockId, peer: BlockId, grade: GradeTag) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.push(lin, EventKind::GradeChange { peer, grade });
+        }
+    }
+
+    /// `block` expired its in-flight structure, blaming `victim`
+    /// (liveness runs).
+    pub fn expire(&self, block: BlockId, token: u64, victim: BlockId) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_expire(lin);
+            self.push(lin, EventKind::Expire { token, victim });
+        }
+    }
+
+    // ---- transport gauges ------------------------------------------
+
+    /// A frame entered a `MultiplexTransport` worker queue.
+    pub fn mux_enqueue(&self) {
+        if !self.armed {
+            return;
+        }
+        self.metrics.note_mux_enqueue();
+    }
+
+    /// A `MultiplexTransport` worker drained one frame.
+    pub fn mux_dequeue(&self) {
+        if !self.armed {
+            return;
+        }
+        self.metrics.note_mux_dequeue();
+    }
+
+    // ---- collection ------------------------------------------------
+
+    /// Snapshot the metrics registry plus ring accounting.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let mut snap = self.metrics.snapshot();
+        let control = self.control.lock().unwrap();
+        snap.events_recorded = control.total();
+        snap.events_dropped = control.dropped();
+        drop(control);
+        for ring in &self.rings {
+            let ring = ring.lock().unwrap();
+            snap.events_recorded += ring.total();
+            snap.events_dropped += ring.dropped();
+        }
+        snap
+    }
+
+    fn collect(&self) -> (Vec<TraceEvent>, Vec<(BlockId, Vec<TraceEvent>)>) {
+        let q = self.q.max(1);
+        let control = self.control.lock().unwrap().sorted();
+        let blocks = self
+            .rings
+            .iter()
+            .enumerate()
+            .map(|(lin, ring)| {
+                (BlockId::new(lin / q, lin % q), ring.lock().unwrap().sorted())
+            })
+            .collect();
+        (control, blocks)
+    }
+
+    /// Merge all rings into Chrome trace-event JSON (canonical order).
+    pub fn chrome_trace(&self) -> String {
+        let (control, blocks) = self.collect();
+        render_chrome_trace(&control, &blocks)
+    }
+
+    /// Merge all rings into a JSONL flight-recorder dump.
+    pub fn jsonl(&self) -> String {
+        let (control, blocks) = self.collect();
+        render_jsonl(&control, &blocks)
+    }
+
+    /// Write the Chrome trace to `path`.
+    pub fn write_chrome_trace(&self, path: &Path) -> io::Result<()> {
+        export::write_text(path, &self.chrome_trace())
+    }
+
+    /// Write the JSONL dump to `path`.
+    pub fn write_jsonl(&self, path: &Path) -> io::Result<()> {
+        export::write_text(path, &self.jsonl())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_recorder_records_nothing() {
+        let rec = Recorder::disabled();
+        assert!(!rec.armed());
+        rec.structure_begin(1, BlockId::new(0, 0));
+        rec.phase_enter(BlockId::new(0, 0), 1, PhaseTag::Gather);
+        rec.wire_send(BlockId::new(0, 0), BlockId::new(0, 1), 7, 64, "Factors");
+        rec.mux_enqueue();
+        let snap = rec.snapshot();
+        assert_eq!(snap.events_recorded, 0);
+        assert!(snap.blocks.is_empty());
+        assert_eq!(snap.mux_queue_highwater, 0);
+        // Exports stay valid (empty) rather than panicking.
+        assert!(rec.chrome_trace().starts_with("{\"traceEvents\":[\n"));
+        assert_eq!(rec.jsonl(), "");
+    }
+
+    #[test]
+    fn hooks_land_in_the_right_ring_and_counters() {
+        let rec = Recorder::new(2, 2, &TraceConfig::default());
+        let a = BlockId::new(0, 1);
+        let b = BlockId::new(1, 0);
+        rec.structure_begin(3, a);
+        rec.phase_enter(a, 3, PhaseTag::Gather);
+        rec.wire_send(a, b, 42, 256, "GetFactors");
+        rec.wire_recv(b, a, 42);
+        rec.msg_recv(b);
+        rec.checkpoint_save(b, 8);
+        rec.update_done(a);
+        rec.structure_end(3, true);
+        let snap = rec.snapshot();
+        assert_eq!(snap.events_recorded, 7, "2 control + 5 block events");
+        assert_eq!(snap.events_dropped, 0);
+        assert_eq!(snap.blocks[1].updates, 1);
+        assert_eq!(snap.blocks[1].msgs_sent, 1);
+        assert_eq!(snap.blocks[1].bytes_sent, 256);
+        assert_eq!(snap.blocks[2].msgs_recv, 1);
+        assert_eq!(snap.blocks[2].checkpoint_saves, 1);
+        let jsonl = rec.jsonl();
+        assert!(jsonl.contains("\"track\":\"driver\""));
+        assert!(jsonl.contains("\"track\":\"0,1\""));
+        assert!(jsonl.contains("\"track\":\"1,0\""));
+    }
+
+    #[test]
+    fn out_of_grid_blocks_are_skipped_not_panicked() {
+        let rec = Recorder::new(1, 1, &TraceConfig::default());
+        let ghost = BlockId::new(5, 5);
+        rec.phase_enter(ghost, 1, PhaseTag::Gather);
+        rec.wire_send(ghost, BlockId::new(0, 0), 1, 10, "Factors");
+        rec.checkpoint_save(ghost, 1);
+        assert_eq!(rec.snapshot().events_recorded, 0);
+    }
+
+    #[test]
+    fn ring_capacity_bounds_every_track() {
+        let cfg = TraceConfig { ring_capacity: 2, ..TraceConfig::default() };
+        let rec = Recorder::new(1, 1, &cfg);
+        let b = BlockId::new(0, 0);
+        for v in 0..5 {
+            rec.checkpoint_save(b, v);
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.events_recorded, 5);
+        assert_eq!(snap.events_dropped, 3);
+        let jsonl = rec.jsonl();
+        assert_eq!(jsonl.lines().count(), 2, "newest two survive");
+        assert!(jsonl.contains("\"version\":3"));
+        assert!(jsonl.contains("\"version\":4"));
+    }
+}

@@ -1,0 +1,380 @@
+//! Per-block metrics registry: monotonic counters, phase-time gauges
+//! and a fixed-bucket wire-size histogram, all lock-free on the hot
+//! path (one atomic RMW per update; the per-edge byte map takes an
+//! uncontended per-block mutex and allocates only on the first frame
+//! of a new edge).
+//!
+//! Unlike flight-recorder events, metrics *may* observe wall-clock
+//! time (time-in-phase gauges) — they feed `SolverReport::telemetry`
+//! and the overhead bench, not the byte-stable trace exports.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+
+use super::event::PhaseTag;
+use crate::grid::BlockId;
+
+/// Upper bounds (inclusive) of the wire-frame-size histogram buckets,
+/// in bytes. The final implicit bucket is unbounded.
+pub const WIRE_SIZE_BUCKETS: [u64; 7] = [64, 256, 1024, 4096, 16_384, 65_536, 262_144];
+
+#[derive(Debug, Default)]
+struct EdgeStat {
+    msgs: u64,
+    bytes: u64,
+}
+
+/// Counters owned by one block. Written only through the recorder
+/// hooks on the block's hosting thread; read at snapshot time.
+#[derive(Debug)]
+struct BlockMetrics {
+    updates: AtomicU64,
+    aborts: AtomicU64,
+    expires: AtomicU64,
+    retries: AtomicU64,
+    msgs_sent: AtomicU64,
+    bytes_sent: AtomicU64,
+    msgs_recv: AtomicU64,
+    dedup_drops: AtomicU64,
+    checkpoint_saves: AtomicU64,
+    checkpoint_restores: AtomicU64,
+    gather_us: AtomicU64,
+    scatter_us: AtomicU64,
+    /// `PhaseTag as u8` of the phase the block is currently in
+    /// (0 = never entered any phase).
+    last_phase: AtomicU8,
+    /// Microseconds since the recorder epoch at the last transition.
+    phase_since_us: AtomicU64,
+    /// Per-destination (msgs, bytes) for this block's outbound edges.
+    edges: Mutex<BTreeMap<(usize, usize), EdgeStat>>,
+}
+
+impl BlockMetrics {
+    fn new() -> Self {
+        BlockMetrics {
+            updates: AtomicU64::new(0),
+            aborts: AtomicU64::new(0),
+            expires: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            msgs_sent: AtomicU64::new(0),
+            bytes_sent: AtomicU64::new(0),
+            msgs_recv: AtomicU64::new(0),
+            dedup_drops: AtomicU64::new(0),
+            checkpoint_saves: AtomicU64::new(0),
+            checkpoint_restores: AtomicU64::new(0),
+            gather_us: AtomicU64::new(0),
+            scatter_us: AtomicU64::new(0),
+            last_phase: AtomicU8::new(0),
+            phase_since_us: AtomicU64::new(0),
+            edges: Mutex::new(BTreeMap::new()),
+        }
+    }
+}
+
+/// The registry behind [`crate::trace::Recorder`]: one
+/// [`BlockMetrics`] per grid block plus run-global gauges.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    blocks: Vec<BlockMetrics>,
+    q: usize,
+    /// Wire-frame size histogram, `WIRE_SIZE_BUCKETS.len() + 1`
+    /// counters (last one is the overflow bucket).
+    wire_hist: Vec<AtomicU64>,
+    mux_enqueued: AtomicU64,
+    mux_dequeued: AtomicU64,
+    mux_highwater: AtomicU64,
+}
+
+impl MetricsRegistry {
+    pub fn new(p: usize, q: usize) -> Self {
+        MetricsRegistry {
+            blocks: (0..p * q).map(|_| BlockMetrics::new()).collect(),
+            q,
+            wire_hist: (0..WIRE_SIZE_BUCKETS.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            mux_enqueued: AtomicU64::new(0),
+            mux_dequeued: AtomicU64::new(0),
+            mux_highwater: AtomicU64::new(0),
+        }
+    }
+
+    pub(super) fn note_update(&self, lin: usize) {
+        self.blocks[lin].updates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_abort(&self, lin: usize) {
+        self.blocks[lin].aborts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_expire(&self, lin: usize) {
+        self.blocks[lin].expires.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_retry(&self, lin: usize) {
+        self.blocks[lin].retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_send(&self, lin: usize, to: BlockId, bytes: u32) {
+        let m = &self.blocks[lin];
+        m.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        m.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+        let mut edges = m.edges.lock().unwrap();
+        let stat = edges.entry((to.i, to.j)).or_default();
+        stat.msgs += 1;
+        stat.bytes += bytes as u64;
+        if bytes > 0 {
+            let idx = WIRE_SIZE_BUCKETS
+                .iter()
+                .position(|&hi| bytes as u64 <= hi)
+                .unwrap_or(WIRE_SIZE_BUCKETS.len());
+            self.wire_hist[idx].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub(super) fn note_recv(&self, lin: usize) {
+        self.blocks[lin].msgs_recv.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_dedup_drop(&self, lin: usize) {
+        self.blocks[lin].dedup_drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_checkpoint_save(&self, lin: usize) {
+        self.blocks[lin].checkpoint_saves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_checkpoint_restore(&self, lin: usize) {
+        self.blocks[lin].checkpoint_restores.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Close the previous phase interval and open a new one.
+    /// `now_us` is microseconds since the recorder epoch.
+    pub(super) fn note_phase(&self, lin: usize, phase: PhaseTag, now_us: u64) {
+        let m = &self.blocks[lin];
+        let prev = m.last_phase.swap(phase as u8, Ordering::Relaxed);
+        let since = m.phase_since_us.swap(now_us, Ordering::Relaxed);
+        let spent = now_us.saturating_sub(since);
+        match PhaseTag::from_u8(prev) {
+            Some(PhaseTag::Gather) => {
+                m.gather_us.fetch_add(spent, Ordering::Relaxed);
+            }
+            Some(PhaseTag::Scatter) => {
+                m.scatter_us.fetch_add(spent, Ordering::Relaxed);
+            }
+            // Idle/Revert/Handoff intervals and the pre-first-phase
+            // stretch are not charged to an update phase.
+            _ => {}
+        }
+    }
+
+    pub(super) fn note_mux_enqueue(&self) {
+        let enq = self.mux_enqueued.fetch_add(1, Ordering::Relaxed) + 1;
+        let deq = self.mux_dequeued.load(Ordering::Relaxed);
+        self.mux_highwater.fetch_max(enq.saturating_sub(deq), Ordering::Relaxed);
+    }
+
+    pub(super) fn note_mux_dequeue(&self) {
+        self.mux_dequeued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Read every counter into an owned snapshot.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let q = self.q.max(1);
+        let blocks = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(lin, m)| {
+                let peer_bytes = m
+                    .edges
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(&(i, j), stat)| (BlockId::new(i, j), stat.msgs, stat.bytes))
+                    .collect();
+                BlockTelemetry {
+                    block: BlockId::new(lin / q, lin % q),
+                    updates: m.updates.load(Ordering::Relaxed),
+                    aborts: m.aborts.load(Ordering::Relaxed),
+                    expires: m.expires.load(Ordering::Relaxed),
+                    retries: m.retries.load(Ordering::Relaxed),
+                    msgs_sent: m.msgs_sent.load(Ordering::Relaxed),
+                    bytes_sent: m.bytes_sent.load(Ordering::Relaxed),
+                    msgs_recv: m.msgs_recv.load(Ordering::Relaxed),
+                    dedup_drops: m.dedup_drops.load(Ordering::Relaxed),
+                    checkpoint_saves: m.checkpoint_saves.load(Ordering::Relaxed),
+                    checkpoint_restores: m.checkpoint_restores.load(Ordering::Relaxed),
+                    gather_us: m.gather_us.load(Ordering::Relaxed),
+                    scatter_us: m.scatter_us.load(Ordering::Relaxed),
+                    peer_bytes,
+                }
+            })
+            .collect();
+        let wire_frame_bytes = HistogramSnapshot {
+            buckets: self
+                .wire_hist
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let hi = WIRE_SIZE_BUCKETS.get(i).copied().unwrap_or(u64::MAX);
+                    (hi, c.load(Ordering::Relaxed))
+                })
+                .collect(),
+        };
+        TelemetrySnapshot {
+            blocks,
+            events_recorded: 0,
+            events_dropped: 0,
+            wire_frame_bytes,
+            mux_queue_highwater: self.mux_highwater.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Owned, heap-allocated copy of the registry at shutdown. Attached to
+/// `SolverReport::telemetry` by the gossip drivers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub blocks: Vec<BlockTelemetry>,
+    /// Lifetime flight-recorder events across all rings.
+    pub events_recorded: u64,
+    /// Events lost to ring wraparound (0 means the exports saw the
+    /// complete run).
+    pub events_dropped: u64,
+    /// Encoded wire-frame sizes (sim tap only; in-process transports
+    /// never serialize).
+    pub wire_frame_bytes: HistogramSnapshot,
+    /// High-water mark of `enqueued - dequeued` across the
+    /// `MultiplexTransport` worker queues.
+    pub mux_queue_highwater: u64,
+}
+
+impl TelemetrySnapshot {
+    /// Total completed (anchored) structure updates across all blocks.
+    pub fn total_updates(&self) -> u64 {
+        self.blocks.iter().map(|b| b.updates).sum()
+    }
+
+    /// Total bytes that crossed the (simulated) wire.
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.bytes_sent).sum()
+    }
+}
+
+/// One block's counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockTelemetry {
+    pub block: BlockId,
+    /// Structures this block anchored to completion.
+    pub updates: u64,
+    /// Structures this block anchored that were aborted/reverted.
+    pub aborts: u64,
+    /// Structures this block anchored that expired via the failure
+    /// detector.
+    pub expires: u64,
+    /// Wire frames this block re-sent after a liveness retry.
+    pub retries: u64,
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub msgs_recv: u64,
+    /// Duplicated frames rejected by the dedup window.
+    pub dedup_drops: u64,
+    pub checkpoint_saves: u64,
+    pub checkpoint_restores: u64,
+    /// Wall microseconds spent in `Gather` while anchoring.
+    pub gather_us: u64,
+    /// Wall microseconds spent in `Scatter` while anchoring.
+    pub scatter_us: u64,
+    /// Outbound (peer, msgs, bytes) rows, sorted by peer id.
+    pub peer_bytes: Vec<(BlockId, u64, u64)>,
+}
+
+/// Fixed-bucket histogram snapshot: `(upper_bound, count)` rows; the
+/// final row's bound is `u64::MAX` (overflow bucket).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<(u64, u64)>,
+}
+
+impl HistogramSnapshot {
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().map(|&(_, c)| c).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let reg = MetricsRegistry::new(2, 3);
+        reg.note_update(0);
+        reg.note_update(0);
+        reg.note_abort(5);
+        reg.note_send(0, BlockId::new(0, 1), 512);
+        reg.note_send(0, BlockId::new(0, 1), 128);
+        reg.note_send(0, BlockId::new(1, 0), 0);
+        reg.note_recv(4);
+        reg.note_dedup_drop(4);
+        reg.note_checkpoint_save(2);
+        reg.note_checkpoint_restore(2);
+        let snap = reg.snapshot();
+        assert_eq!(snap.blocks.len(), 6);
+        assert_eq!(snap.blocks[0].block, BlockId::new(0, 0));
+        assert_eq!(snap.blocks[5].block, BlockId::new(1, 2));
+        assert_eq!(snap.blocks[0].updates, 2);
+        assert_eq!(snap.blocks[5].aborts, 1);
+        assert_eq!(snap.blocks[0].msgs_sent, 3);
+        assert_eq!(snap.blocks[0].bytes_sent, 640);
+        assert_eq!(snap.blocks[4].msgs_recv, 1);
+        assert_eq!(snap.blocks[4].dedup_drops, 1);
+        assert_eq!(snap.blocks[2].checkpoint_saves, 1);
+        assert_eq!(snap.blocks[2].checkpoint_restores, 1);
+        assert_eq!(snap.total_updates(), 2);
+        assert_eq!(snap.total_wire_bytes(), 640);
+        // Per-edge rows are sorted by destination.
+        assert_eq!(
+            snap.blocks[0].peer_bytes,
+            vec![(BlockId::new(0, 1), 2, 640), (BlockId::new(1, 0), 1, 0)]
+        );
+        // Zero-byte (in-process) sends do not enter the histogram.
+        assert_eq!(snap.wire_frame_bytes.total(), 2);
+        // 128 and 512 both land in the <=1024 buckets.
+        assert_eq!(snap.wire_frame_bytes.buckets[1], (256, 1));
+        assert_eq!(snap.wire_frame_bytes.buckets[2], (1024, 1));
+    }
+
+    #[test]
+    fn phase_gauge_charges_gather_and_scatter() {
+        let reg = MetricsRegistry::new(1, 1);
+        reg.note_phase(0, PhaseTag::Gather, 100);
+        reg.note_phase(0, PhaseTag::Scatter, 350); // 250us of gather
+        reg.note_phase(0, PhaseTag::Idle, 400); // 50us of scatter
+        reg.note_phase(0, PhaseTag::Gather, 1000); // idle not charged
+        let snap = reg.snapshot();
+        assert_eq!(snap.blocks[0].gather_us, 250);
+        assert_eq!(snap.blocks[0].scatter_us, 50);
+    }
+
+    #[test]
+    fn mux_highwater_tracks_queue_depth() {
+        let reg = MetricsRegistry::new(1, 1);
+        reg.note_mux_enqueue();
+        reg.note_mux_enqueue();
+        reg.note_mux_enqueue();
+        reg.note_mux_dequeue();
+        reg.note_mux_enqueue();
+        let snap = reg.snapshot();
+        assert_eq!(snap.mux_queue_highwater, 3);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_is_unbounded() {
+        let reg = MetricsRegistry::new(1, 1);
+        reg.note_send(0, BlockId::new(0, 0), 1 << 20);
+        let snap = reg.snapshot();
+        let last = *snap.wire_frame_bytes.buckets.last().unwrap();
+        assert_eq!(last, (u64::MAX, 1));
+    }
+}

@@ -1,0 +1,159 @@
+//! Fixed-capacity event ring: the bounded-overhead storage behind the
+//! flight recorder.
+//!
+//! One ring per block plus one control ring, each written by exactly
+//! one thread (the block's hosting worker, or the driver). All slots
+//! are preallocated at construction; once full the ring overwrites its
+//! oldest slot, so the recorder keeps the *newest* `capacity` events
+//! and a steady-state push is two word writes — never an allocation
+//! (pinned by `tests/alloc_counting.rs`).
+
+use super::event::{EventKind, TraceEvent};
+
+/// A bounded ring of [`TraceEvent`]s that keeps the newest entries.
+#[derive(Debug)]
+pub struct EventRing {
+    slots: Vec<TraceEvent>,
+    cap: usize,
+    /// Oldest retained slot once the ring has wrapped (next overwrite
+    /// target). Always `0` before the first wraparound.
+    head: usize,
+    /// Lifetime push count; doubles as the per-ring logical timestamp
+    /// (`lts`) source.
+    total: u64,
+}
+
+impl EventRing {
+    /// Preallocate a ring of `capacity` slots (clamped to at least 1).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        EventRing { slots: Vec::with_capacity(cap), cap, head: 0, total: 0 }
+    }
+
+    /// Record one event. Overwrites the oldest entry once full.
+    pub fn push(&mut self, kind: EventKind) {
+        let event = TraceEvent { kind, lts: self.total };
+        self.total += 1;
+        if self.slots.len() < self.cap {
+            // Still in the preallocated region: `push` cannot realloc
+            // because `len < cap == initial capacity`.
+            self.slots.push(event);
+        } else {
+            self.slots[self.head] = event;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Number of retained events.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Lifetime number of events pushed (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Events lost to wraparound.
+    pub fn dropped(&self) -> u64 {
+        self.total - self.slots.len() as u64
+    }
+
+    /// Retained events in arrival order, oldest first.
+    pub fn iter_in_order(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.slots[self.head..].iter().chain(self.slots[..self.head].iter())
+    }
+
+    /// Retained events in the canonical export order: logical sort key
+    /// first, per-ring arrival order (`lts`) as the tiebreak for
+    /// causally ordered same-key events.
+    pub fn sorted(&self) -> Vec<TraceEvent> {
+        let mut events: Vec<TraceEvent> = self.iter_in_order().copied().collect();
+        events.sort_by_key(|e| (e.kind.sort_key(), e.lts));
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn save(version: u64) -> EventKind {
+        EventKind::CheckpointSave { version }
+    }
+
+    #[test]
+    fn keeps_newest_after_wraparound() {
+        let mut ring = EventRing::new(4);
+        for v in 0..10 {
+            ring.push(save(v));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.total(), 10);
+        assert_eq!(ring.dropped(), 6);
+        let versions: Vec<u64> = ring
+            .iter_in_order()
+            .map(|e| match e.kind {
+                EventKind::CheckpointSave { version } => version,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(versions, vec![6, 7, 8, 9], "oldest evicted, newest kept, order intact");
+    }
+
+    #[test]
+    fn partial_fill_iterates_in_push_order() {
+        let mut ring = EventRing::new(8);
+        for v in 0..3 {
+            ring.push(save(v));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 0);
+        let lts: Vec<u64> = ring.iter_in_order().map(|e| e.lts).collect();
+        assert_eq!(lts, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sorted_orders_by_logical_key_not_arrival() {
+        let mut ring = EventRing::new(8);
+        // Arrive out of logical order (as racing mailboxes would).
+        ring.push(EventKind::CheckpointSave { version: 16 });
+        ring.push(EventKind::CheckpointSave { version: 8 });
+        ring.push(EventKind::CheckpointRestore { version: 8 });
+        let sorted = ring.sorted();
+        let keys: Vec<u64> = sorted
+            .iter()
+            .map(|e| match e.kind {
+                EventKind::CheckpointSave { version } => version * 2,
+                EventKind::CheckpointRestore { version } => version * 2 + 1,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(keys, vec![16, 17, 32], "save@8, restore@8, save@16");
+    }
+
+    #[test]
+    fn lts_breaks_ties_in_arrival_order() {
+        let mut ring = EventRing::new(8);
+        // Same logical key twice (re-save after a revert): arrival
+        // order must be preserved.
+        ring.push(save(8));
+        ring.push(save(8));
+        let sorted = ring.sorted();
+        assert_eq!(sorted[0].lts, 0);
+        assert_eq!(sorted[1].lts, 1);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut ring = EventRing::new(0);
+        ring.push(save(1));
+        ring.push(save(2));
+        assert_eq!(ring.len(), 1);
+        assert_eq!(ring.total(), 2);
+    }
+}

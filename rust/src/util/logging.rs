@@ -2,7 +2,8 @@
 //!
 //! Prints `LEVEL target: message` lines to stderr with a relative
 //! timestamp. Level comes from `GRIDMC_LOG` (error|warn|info|debug|
-//! trace) or the explicit argument.
+//! trace) or the explicit argument; unrecognized values fall back to
+//! the default with a warning rather than silently.
 
 use std::time::Instant;
 
@@ -22,9 +23,10 @@ impl log::Log for StderrLogger {
         }
         let t = self.start.elapsed();
         eprintln!(
-            "{:>8.3}s {:>5} {}",
+            "{:>8.3}s {:>5} {}: {}",
             t.as_secs_f64(),
             record.level(),
+            record.target(),
             record.args()
         );
     }
@@ -32,17 +34,32 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
-/// Install the logger once; later calls are no-ops. `default` is used
-/// unless `GRIDMC_LOG` overrides it.
-pub fn init(default: &str) {
-    let level = std::env::var("GRIDMC_LOG").unwrap_or_else(|_| default.to_string());
-    let filter = match level.to_ascii_lowercase().as_str() {
+/// `"warn"` → `Some(Warn)`, `"bogus"` → `None`. Case-insensitive.
+fn parse_level(s: &str) -> Option<log::LevelFilter> {
+    Some(match s.to_ascii_lowercase().as_str() {
         "off" => log::LevelFilter::Off,
         "error" => log::LevelFilter::Error,
         "warn" => log::LevelFilter::Warn,
+        "info" => log::LevelFilter::Info,
         "debug" => log::LevelFilter::Debug,
         "trace" => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
+        _ => return None,
+    })
+}
+
+/// Install the logger once; later calls are no-ops. `default` is used
+/// unless `GRIDMC_LOG` overrides it.
+pub fn init(default: &str) {
+    let fallback = parse_level(default).unwrap_or(log::LevelFilter::Info);
+    let filter = match std::env::var("GRIDMC_LOG") {
+        Ok(v) => parse_level(&v).unwrap_or_else(|| {
+            eprintln!(
+                "warning: unrecognized GRIDMC_LOG={v:?} \
+                 (expected off|error|warn|info|debug|trace); using {fallback}"
+            );
+            fallback
+        }),
+        Err(_) => fallback,
     };
     let logger = Box::new(StderrLogger { start: Instant::now(), max_level: filter });
     if log::set_boxed_logger(logger).is_ok() {
@@ -52,10 +69,24 @@ pub fn init(default: &str) {
 
 #[cfg(test)]
 mod tests {
+    use super::parse_level;
+
     #[test]
     fn init_is_idempotent() {
         super::init("info");
         super::init("debug"); // second call must not panic
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn level_parsing_covers_every_documented_value() {
+        assert_eq!(parse_level("off"), Some(log::LevelFilter::Off));
+        assert_eq!(parse_level("error"), Some(log::LevelFilter::Error));
+        assert_eq!(parse_level("WARN"), Some(log::LevelFilter::Warn));
+        assert_eq!(parse_level("info"), Some(log::LevelFilter::Info));
+        assert_eq!(parse_level("Debug"), Some(log::LevelFilter::Debug));
+        assert_eq!(parse_level("trace"), Some(log::LevelFilter::Trace));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level(""), None);
     }
 }

@@ -10,6 +10,11 @@
 //! The geometry stays below the engine's parallel-gradient threshold:
 //! the scoped-thread fan-out path spawns threads and is exempt from the
 //! guarantee by design.
+//!
+//! The flight recorder makes the same promise (trace/ring.rs): every
+//! ring slot is preallocated, so a steady-state hook — after each
+//! outbound edge's first frame has created its byte-map entry — is a
+//! counter bump plus a slot overwrite, never an allocation.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -65,6 +70,43 @@ fn counting_allocator_detects_allocations() {
     let v: Vec<u64> = std::hint::black_box((0u64..100).collect());
     assert!(allocs_on_this_thread() > before, "counter did not move");
     drop(v);
+}
+
+#[test]
+fn recorder_hooks_steady_state_are_zero_alloc() {
+    use gridmc::grid::BlockId;
+    use gridmc::trace::{PhaseTag, Recorder, TraceConfig};
+
+    let rec = Recorder::new(2, 2, &TraceConfig::default());
+    let a = BlockId::new(0, 0);
+    let b = BlockId::new(0, 1);
+
+    // Warmup: the first frame on an edge creates its entry in the
+    // per-block byte map (the one allowed allocation); everything the
+    // rings need was preallocated at construction.
+    rec.wire_send(a, b, 0, 128, "GetFactors");
+
+    let before = allocs_on_this_thread();
+    for k in 0..2_000u64 {
+        rec.structure_begin(k, a);
+        rec.phase_enter(a, k, PhaseTag::Gather);
+        rec.wire_send(a, b, k + 1, 128, "GetFactors");
+        rec.wire_recv(b, a, k + 1);
+        rec.msg_recv(b);
+        rec.dedup_drop(b, a, k + 1);
+        rec.checkpoint_save(a, k);
+        rec.update_done(a);
+        rec.phase_enter(a, k, PhaseTag::Idle);
+        rec.mux_enqueue();
+        rec.mux_dequeue();
+        rec.structure_end(k, true);
+    }
+    let delta = allocs_on_this_thread() - before;
+    assert_eq!(delta, 0, "{delta} heap allocations on the steady-state recorder path");
+    // The rings wrapped (24k pushes into 4096-slot rings) without ever
+    // allocating — the wraparound path reuses slots in place.
+    let snap = rec.snapshot();
+    assert!(snap.events_dropped > 0, "test did not exercise wraparound");
 }
 
 #[test]

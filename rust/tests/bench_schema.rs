@@ -1,6 +1,7 @@
 //! Golden-schema tests for the machine-readable bench artifacts:
 //! `BENCH_churn.json`, `BENCH_grow.json`, `BENCH_shrink.json`,
-//! `BENCH_liveness.json`, `BENCH_parallel_scaling.json`.
+//! `BENCH_liveness.json`, `BENCH_parallel_scaling.json`,
+//! `BENCH_trace_overhead.json`.
 //!
 //! These files are the repo's perf trajectory — downstream tooling
 //! diffs them across commits — so format drift must fail CI instead of
@@ -11,8 +12,8 @@
 
 use gridmc::experiments::parallel::{
     write_churn_json, write_grow_json, write_json, write_liveness_json, write_shrink_json,
-    ChurnOutcome, ChurnRun, GrowOutcome, GrowRun, LivenessOutcome, LivenessRun, ScalingPoint,
-    ShrinkOutcome, ShrinkRun,
+    write_trace_overhead_json, ChurnOutcome, ChurnRun, GrowOutcome, GrowRun, LivenessOutcome,
+    LivenessRun, OverheadOutcome, OverheadRun, ScalingPoint, ShrinkOutcome, ShrinkRun,
 };
 use gridmc::grid::BlockId;
 use gridmc::metrics::{percentiles, LivenessStats, RecoveryOverhead};
@@ -568,6 +569,56 @@ fn liveness_json_schema_is_pinned() {
     for (k, e) in events.iter().enumerate() {
         assert_event_schema(e, &format!("liveness.events[{k}]"));
     }
+}
+
+#[test]
+fn trace_overhead_json_schema_is_pinned() {
+    let outcome = OverheadOutcome {
+        grid: (6, 6),
+        on: OverheadRun { wall_s: vec![1.00, 1.01, 1.05], events: 48_000, updates: 6000 },
+        off: OverheadRun { wall_s: vec![0.99, 1.00, 1.02], events: 0, updates: 6000 },
+    };
+    let path = temp_path("BENCH_trace_overhead.json");
+    write_trace_overhead_json(&path, &outcome).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap());
+    assert_keys(
+        &doc,
+        &[
+            "bench",
+            "git_rev",
+            "timestamp_unix",
+            "timestamp_utc",
+            "grid",
+            "unit",
+            "on",
+            "off",
+            "overhead",
+        ],
+        "trace_overhead",
+    );
+    let top = doc.as_obj();
+    assert_header(top, "trace_overhead");
+    assert_eq!(top["unit"], Json::Str("wall_seconds".into()));
+    assert_keys(&top["grid"], &["p", "q", "agents"], "trace_overhead.grid");
+    for leg in ["on", "off"] {
+        assert_keys(
+            &top[leg],
+            &["wall_s_median", "wall_s_p10", "wall_s_p90", "repeats", "events", "updates"],
+            &format!("trace_overhead.{leg}"),
+        );
+        for (k, v) in top[leg].as_obj() {
+            assert!(v.is_num(), "trace_overhead.{leg}.{k} must be numeric");
+        }
+    }
+    assert_keys(
+        &top["overhead"],
+        &["wall_ratio", "budget", "within_budget"],
+        "trace_overhead.overhead",
+    );
+    let overhead = top["overhead"].as_obj();
+    assert!(overhead["wall_ratio"].is_num());
+    assert_eq!(overhead["budget"], Json::Num(1.02));
+    assert!(matches!(overhead["within_budget"], Json::Bool(_)));
 }
 
 #[test]

@@ -1,0 +1,62 @@
+#!/usr/bin/env sh
+# Validate the shape of a Chrome trace-event JSON artifact produced by
+# the flight recorder (rust/src/trace/export.rs).
+#
+#   tools/check-trace.sh trace.json [...]   # exit 1 on malformed file
+#
+# The exporter's layout is deliberately line-oriented (asserted by its
+# unit tests): a fixed prefix line, one event object per line — each
+# of phase "M" (track metadata), "X" (structure span) or "i" (instant)
+# with a trailing comma except on the last — and a fixed closing line.
+# That lets CI sanity-check real artifacts without a JSON parser, the
+# same trick tools/pin-bench.sh plays on the BENCH writers.
+
+set -eu
+
+[ "$#" -gt 0 ] || { echo "usage: check-trace.sh <trace.json>..." >&2; exit 2; }
+
+status=0
+for trace in "$@"; do
+    if [ ! -f "$trace" ]; then
+        echo "check-trace.sh: missing $trace" >&2
+        status=1
+        continue
+    fi
+    if [ "$(head -n 1 "$trace")" != '{"traceEvents":[' ]; then
+        echo "check-trace.sh: $trace: bad prefix line" >&2
+        status=1
+        continue
+    fi
+    if [ "$(tail -n 1 "$trace")" != ']}' ]; then
+        echo "check-trace.sh: $trace: bad closing line" >&2
+        status=1
+        continue
+    fi
+    # Every interior line is an event object of a known phase.
+    if bad=$(sed '1d;$d' "$trace" | grep -vc '^{"ph":"[MXi]",.*},\{0,1\}$') \
+        && [ "$bad" -ne 0 ]; then
+        echo "check-trace.sh: $trace: $bad malformed event line(s):" >&2
+        sed '1d;$d' "$trace" | grep -v '^{"ph":"[MXi]",.*},\{0,1\}$' | head -5 >&2
+        status=1
+        continue
+    fi
+    # The required track metadata must be present, and the last event
+    # line must not carry a dangling comma.
+    if ! grep -q '"name":"process_name","args":{"name":"gridmc"}' "$trace"; then
+        echo "check-trace.sh: $trace: missing process_name metadata" >&2
+        status=1
+        continue
+    fi
+    if ! grep -q '"name":"thread_name","args":{"name":"driver"}' "$trace"; then
+        echo "check-trace.sh: $trace: missing driver track metadata" >&2
+        status=1
+        continue
+    fi
+    last_event=$(sed '1d;$d' "$trace" | tail -n 1)
+    case "$last_event" in
+        *,) echo "check-trace.sh: $trace: dangling comma before ]}" >&2; status=1; continue ;;
+    esac
+    events=$(sed '1d;$d' "$trace" | grep -c '^{"ph":"[Xi]"') || events=0
+    echo "check-trace.sh: $trace ok ($events event(s))"
+done
+exit $status

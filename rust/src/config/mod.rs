@@ -61,6 +61,9 @@ pub enum DriverChoice {
     Parallel,
     /// Barrier-free NOMAD-style dispatch over the agent network.
     Async,
+    /// The async pipeline with a residual-weighted epoch feed
+    /// (structures touching hot blocks gossip roughly twice per epoch).
+    Priority,
 }
 
 impl DriverChoice {
@@ -69,6 +72,7 @@ impl DriverChoice {
             DriverChoice::Sequential => "sequential",
             DriverChoice::Parallel => "parallel",
             DriverChoice::Async => "async",
+            DriverChoice::Priority => "priority",
         }
     }
 
@@ -77,6 +81,7 @@ impl DriverChoice {
             "sequential" => Ok(DriverChoice::Sequential),
             "parallel" => Ok(DriverChoice::Parallel),
             "async" => Ok(DriverChoice::Async),
+            "priority" => Ok(DriverChoice::Priority),
             other => Err(Error::Config(format!("unknown driver {other:?}"))),
         }
     }
@@ -194,6 +199,11 @@ pub struct ExperimentConfig {
     pub net_workers: usize,
     /// Link conditions for the sim transports.
     pub sim: SimConfig,
+    /// Wire-efficiency levers (`[wire]` table; `None` = every lever
+    /// off: plain full-frame gossip, bit-identical to the pre-wire
+    /// protocol). Delta frames and the suppression threshold need a
+    /// gossip driver; they compose with every fault/membership plan.
+    pub wire: Option<crate::net::WireConfig>,
     /// Seeded fault plan for churn runs (`[faults]` table; `None` =
     /// fault-free, no checkpointing). Requires a gossip driver, and a
     /// sim transport when `partitions > 0`.
@@ -236,6 +246,7 @@ impl ExperimentConfig {
             workers: self.net_workers,
             sim: self.sim,
             liveness: self.liveness,
+            wire: self.wire.unwrap_or_default(),
         }
     }
 
@@ -312,6 +323,18 @@ impl ExperimentConfig {
                     reorder_prob: doc.f64_or("sim.reorder_prob", d.reorder_prob),
                     seed: doc.u64_or("sim.seed", d.seed),
                 }
+            },
+            wire: if doc.has_prefix("wire.") {
+                let d = crate::net::WireConfig::default();
+                Some(crate::net::WireConfig {
+                    delta: doc.bool_or("wire.delta", d.delta),
+                    compress: crate::net::Compression::parse(
+                        &doc.str_or("wire.compress", d.compress.as_str()),
+                    )?,
+                    threshold: doc.f64_or("wire.threshold", d.threshold),
+                })
+            } else {
+                None
             },
             faults: doc.has_prefix("faults.").then(|| {
                 let d = FaultConfig::default();
@@ -458,6 +481,14 @@ impl ExperimentConfig {
             self.sim.reorder_prob,
             self.sim.seed
         ));
+        if let Some(w) = &self.wire {
+            s.push_str(&format!(
+                "\n[wire]\ndelta = {}\ncompress = {}\nthreshold = {}\n",
+                w.delta,
+                quote(w.compress.as_str()),
+                w.threshold
+            ));
+        }
         if let Some(f) = &self.faults {
             s.push_str(&format!(
                 "\n[faults]\nkills = {}\npartitions = {}\nstalls = {}\n\
@@ -622,7 +653,46 @@ mod tests {
         assert!(EngineChoice::parse("gpu").is_err());
         assert_eq!(DriverChoice::parse("parallel").unwrap(), DriverChoice::Parallel);
         assert_eq!(DriverChoice::parse("async").unwrap(), DriverChoice::Async);
+        assert_eq!(DriverChoice::parse("priority").unwrap(), DriverChoice::Priority);
+        assert_eq!(DriverChoice::Priority.as_str(), "priority");
         assert!(DriverChoice::parse("warp").is_err());
+    }
+
+    #[test]
+    fn wire_table_roundtrip_and_absence() {
+        let mut cfg = presets::exp(1).unwrap();
+        assert!(cfg.wire.is_none(), "presets speak the plain protocol by default");
+        assert!(!cfg.to_toml().unwrap().contains("[wire]"));
+        assert_eq!(cfg.net_config().wire, crate::net::WireConfig::default());
+        cfg.driver = DriverChoice::Async;
+        cfg.wire = Some(crate::net::WireConfig {
+            delta: true,
+            compress: crate::net::Compression::F16,
+            threshold: 0.05,
+        });
+        let text = cfg.to_toml().unwrap();
+        assert!(text.contains("[wire]"), "{text}");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.wire, cfg.wire);
+        assert_eq!(back.net_config().wire, cfg.wire.unwrap());
+        // A partially specified table fills in defaults.
+        let partial = ExperimentConfig::from_toml(&format!(
+            "{}[wire]\ndelta = true\n",
+            text.split("[wire]").next().unwrap()
+        ))
+        .unwrap();
+        let w = partial.wire.expect("present table parses to Some");
+        assert!(w.delta);
+        assert_eq!(w.compress, crate::net::Compression::F32);
+        assert_eq!(w.threshold, 0.0);
+        assert!(w.lossless(), "a delta-only table stays lossless");
+        // An unknown encoding is a config error, not a silent default.
+        let err = ExperimentConfig::from_toml(&format!(
+            "{}[wire]\ncompress = \"f8\"\n",
+            text.split("[wire]").next().unwrap()
+        ))
+        .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
     }
 
     #[test]

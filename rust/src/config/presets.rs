@@ -67,6 +67,7 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
         transport: TransportKind::Channel,
         net_workers: 0,
         sim: SimConfig::default(),
+        wire: None,
         faults: None,
         grow: None,
         shrink: None,
@@ -109,6 +110,7 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
         transport: TransportKind::Channel,
         net_workers: 0,
         sim: SimConfig::default(),
+        wire: None,
         faults: None,
         grow: None,
         shrink: None,
@@ -158,6 +160,7 @@ pub fn churn() -> ExperimentConfig {
         transport: TransportKind::Sim,
         net_workers: 0,
         sim: SimConfig::zero_latency(61),
+        wire: None,
         faults: Some(FaultConfig {
             kills: 4,
             partitions: 2,
@@ -260,6 +263,22 @@ pub fn liveness() -> ExperimentConfig {
         seed: 0x11FE,
     });
     cfg.liveness = Some(crate::gossip::LivenessConfig::default());
+    cfg
+}
+
+/// The wire-efficiency scenario (`gridmc bench-table wire`,
+/// `BENCH_wire.json`): the same 6×6 problem as [`churn`], fault-free,
+/// over the byte-accounted zero-latency sim link, re-run once per
+/// lever combination — full-f32 baseline, delta, f16, delta+f16 with a
+/// suppression threshold, delta+int8, and priority-scheduled delta+f16
+/// — to chart bytes per update against final RMSE. The preset itself
+/// pins the *baseline* leg (`wire = None`, every lever off); the bench
+/// harness toggles `cfg.wire` and `cfg.driver` per leg.
+pub fn wire() -> ExperimentConfig {
+    let mut cfg = churn();
+    cfg.name = "wire".into();
+    cfg.faults = None;
+    cfg.sim = SimConfig::zero_latency(61);
     cfg
 }
 
@@ -400,6 +419,19 @@ mod tests {
         let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
         assert_eq!(back.liveness, cfg.liveness);
         assert_eq!(back.faults, cfg.faults);
+        assert_eq!(back.sim, cfg.sim);
+    }
+
+    #[test]
+    fn wire_preset_is_well_formed() {
+        let cfg = wire();
+        assert!(cfg.wire.is_none(), "the preset pins the plain-protocol baseline leg");
+        assert!(cfg.faults.is_none(), "the scenario isolates wire levers from churn");
+        assert_eq!(cfg.transport, TransportKind::Sim, "byte accounting needs the sim tap");
+        assert_eq!(cfg.sim.drop_prob, 0.0, "lossless link: byte deltas are lever-only");
+        // Round-trips through TOML like every other preset.
+        let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.wire, cfg.wire);
         assert_eq!(back.sim, cfg.sim);
     }
 

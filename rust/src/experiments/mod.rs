@@ -27,7 +27,7 @@ pub mod table3;
 use crate::config::{DriverChoice, EngineChoice, ExperimentConfig};
 use crate::data::SplitDataset;
 use crate::engine::{Engine, NativeEngine, NativeMode, XlaEngine};
-use crate::gossip::{AsyncDriver, Driver, GrowthPlan, ParallelDriver, ShrinkPlan};
+use crate::gossip::{AsyncDriver, Driver, GrowthPlan, ParallelDriver, PriorityDriver, ShrinkPlan};
 use crate::grid::GridSpec;
 use crate::model::FactorState;
 use crate::net::FaultPlan;
@@ -121,11 +121,11 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
             let driver = SequentialDriver::new(spec, cfg.solver.clone());
             driver.run(engine.as_mut(), &data.train)?
         }
-        // The two gossip disciplines share every configuration knob and
+        // The gossip disciplines share every configuration knob and
         // train behind the shared `Driver` trait; the macro keeps the
         // builder chain in exactly one place so a new knob cannot be
-        // wired into one driver but not the other.
-        DriverChoice::Parallel | DriverChoice::Async => {
+        // wired into one driver but not the others.
+        DriverChoice::Parallel | DriverChoice::Async | DriverChoice::Priority => {
             macro_rules! configured {
                 ($new:expr) => {{
                     let mut d = $new
@@ -148,6 +148,9 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
             let driver: Box<dyn Driver> = match cfg.driver {
                 DriverChoice::Parallel => {
                     configured!(ParallelDriver::new(spec, cfg.solver.clone(), cfg.workers))
+                }
+                DriverChoice::Priority => {
+                    configured!(PriorityDriver::new(spec, cfg.solver.clone(), cfg.workers))
                 }
                 _ => configured!(AsyncDriver::new(spec, cfg.solver.clone(), cfg.workers)),
             };
@@ -321,6 +324,33 @@ mod tests {
         let o = run_experiment(&cfg).unwrap();
         assert!(o.report.final_cost < o.report.curve.initial().unwrap());
         assert_eq!(o.report.engine, "native-sparse");
+    }
+
+    #[test]
+    fn priority_driver_choice_works_with_wire_levers() {
+        let mut cfg = presets::exp(1).unwrap();
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 40;
+            s.n = 40;
+            s.rank = 3;
+            s.train_fraction = 0.5;
+        }
+        cfg.grid.p = 3;
+        cfg.grid.q = 3;
+        cfg.grid.rank = 3;
+        cfg.driver = DriverChoice::Priority;
+        cfg.workers = 2;
+        cfg.wire = Some(crate::net::WireConfig {
+            delta: true,
+            compress: crate::net::Compression::F16,
+            threshold: 0.0,
+        });
+        cfg.solver.max_iters = 1000;
+        cfg.solver.eval_every = 250;
+        cfg.solver.rho = 10.0;
+        cfg.solver.schedule = crate::solver::StepSchedule { a: 2e-2, b: 1e-5 };
+        let o = run_experiment(&cfg).unwrap();
+        assert!(o.report.final_cost < o.report.curve.initial().unwrap());
     }
 
     #[test]

@@ -44,6 +44,9 @@ pub use super::scenarios::trace_overhead::{
     collect_trace_overhead, render_trace_overhead, run_trace_overhead,
     write_trace_overhead_json, OverheadOutcome, OverheadRun,
 };
+pub use super::scenarios::wire::{
+    collect_wire, render_wire, run_wire, write_wire_json, WireLeg, WireOutcome,
+};
 
 /// Blocks per grid side: 8×8 = 64, 16×16 = 256, 32×32 = 1024 agents.
 pub const GRID_SIDES: [usize; 3] = [8, 16, 32];

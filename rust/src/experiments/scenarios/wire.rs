@@ -1,0 +1,347 @@
+//! The wire-efficiency scenario (`gridmc bench-table wire`,
+//! `BENCH_wire.json`).
+//!
+//! Trains the [`presets::wire`] problem once per wire lever on the same
+//! dataset over the simulated transport (the only one that serializes,
+//! so its byte tap is the ground truth): the full-frame f32 baseline,
+//! delta frames alone (lossless), f16 rows alone, the headline
+//! delta + f16 + send-threshold combination, delta + int8, and that
+//! same headline combination under the [`crate::gossip::PriorityDriver`].
+//! Each leg reports bytes/update from the flight recorder's per-block
+//! `bytes_sent` counters next to its test RMSE, so the artifact is the
+//! cost/accuracy frontier of the wire layer (PERF.md §Wire). The gate:
+//! `delta_f16` must cut bytes/update by ≥ [`WIRE_TARGET_REDUCTION`]×
+//! while staying within [`WIRE_RMSE_BUDGET`]× of the baseline RMSE.
+
+use std::io::Write;
+
+use crate::config::{presets, DriverChoice};
+use crate::metrics::{bench_json_header, TablePrinter};
+use crate::net::{Compression, WireConfig};
+use crate::{Error, Result};
+
+/// The headline lever (`delta_f16`) must shrink bytes/update by at
+/// least this factor vs the full-frame f32 baseline.
+pub const WIRE_TARGET_REDUCTION: f64 = 3.0;
+/// …while its test RMSE stays within this ratio of the baseline's.
+pub const WIRE_RMSE_BUDGET: f64 = 1.01;
+/// The lever the gate is measured on.
+pub const WIRE_GATE_LEG: &str = "delta_f16";
+
+/// One wire lever's measurement.
+#[derive(Debug, Clone)]
+pub struct WireLeg {
+    /// Lever label (`full_f32`, `delta`, …, `priority_delta_f16`).
+    pub label: &'static str,
+    /// Driver the leg ran under (`parallel` or `priority`).
+    pub driver: &'static str,
+    pub rmse: f64,
+    pub final_cost: f64,
+    pub iters: u64,
+    /// Completed structure updates (telemetry, all blocks).
+    pub updates: u64,
+    /// Bytes that crossed the simulated wire (telemetry, all blocks).
+    pub wire_bytes: u64,
+    /// Full-frame fallbacks after a delta-baseline miss.
+    pub delta_fallbacks: u64,
+    /// Error-feedback / baseline resets (restore, handoff, expiry…).
+    pub quant_resets: u64,
+    pub wall: std::time::Duration,
+}
+
+impl WireLeg {
+    /// The leg's cost axis: wire bytes per completed structure update.
+    pub fn bytes_per_update(&self) -> f64 {
+        self.wire_bytes as f64 / self.updates.max(1) as f64
+    }
+}
+
+/// The wire scenario's full result (`BENCH_wire.json`).
+#[derive(Debug, Clone)]
+pub struct WireOutcome {
+    pub grid: (usize, usize),
+    /// One leg per lever, baseline first.
+    pub legs: Vec<WireLeg>,
+}
+
+impl WireOutcome {
+    fn leg(&self, label: &str) -> Option<&WireLeg> {
+        self.legs.iter().find(|l| l.label == label)
+    }
+
+    /// Bytes/update reduction of `label` vs the `full_f32` baseline
+    /// (> 1 means the lever saved bytes).
+    pub fn reduction(&self, label: &str) -> f64 {
+        match (self.leg("full_f32"), self.leg(label)) {
+            (Some(base), Some(leg)) => {
+                base.bytes_per_update() / leg.bytes_per_update().max(1e-12)
+            }
+            _ => f64::NAN,
+        }
+    }
+
+    /// RMSE of `label` relative to the `full_f32` baseline (1.0 = no
+    /// accuracy cost).
+    pub fn rmse_ratio(&self, label: &str) -> f64 {
+        match (self.leg("full_f32"), self.leg(label)) {
+            (Some(base), Some(leg)) => leg.rmse / base.rmse.max(1e-12),
+            _ => f64::NAN,
+        }
+    }
+
+    /// Whether the headline lever clears both gate thresholds.
+    pub fn gate_passes(&self) -> bool {
+        self.reduction(WIRE_GATE_LEG) >= WIRE_TARGET_REDUCTION
+            && self.rmse_ratio(WIRE_GATE_LEG) <= WIRE_RMSE_BUDGET
+    }
+}
+
+/// The lever matrix, baseline first. Kept as data so the collect loop,
+/// the table and the JSON writer can never drift apart.
+fn leg_specs() -> [(&'static str, DriverChoice, Option<WireConfig>); 6] {
+    let w = |delta: bool, compress: Compression, threshold: f64| {
+        Some(WireConfig { delta, compress, threshold })
+    };
+    [
+        ("full_f32", DriverChoice::Parallel, None),
+        ("delta", DriverChoice::Parallel, w(true, Compression::F32, 0.0)),
+        ("f16", DriverChoice::Parallel, w(false, Compression::F16, 0.0)),
+        ("delta_f16", DriverChoice::Parallel, w(true, Compression::F16, 0.05)),
+        ("delta_int8", DriverChoice::Parallel, w(true, Compression::Int8, 0.0)),
+        ("priority_delta_f16", DriverChoice::Priority, w(true, Compression::F16, 0.05)),
+    ]
+}
+
+/// Train every lever on the same dataset and collect the frontier.
+pub fn collect_wire() -> Result<WireOutcome> {
+    let base = presets::apply_iter_scale(presets::wire());
+    let data = base.dataset.load()?;
+    let mut legs = Vec::new();
+    for (label, driver, wire) in leg_specs() {
+        let mut cfg = base.clone();
+        cfg.name = format!("wire-{label}");
+        cfg.driver = driver;
+        cfg.wire = wire;
+        let o = crate::experiments::run_experiment_on(&cfg, &data)?;
+        let t = o.report.telemetry.as_ref().ok_or_else(|| {
+            Error::Config(
+                "the wire bench needs the flight recorder armed for byte accounting \
+                 (trace.armed = false?)"
+                    .into(),
+            )
+        })?;
+        log::info!("wire leg {label} done ({} updates)", t.total_updates());
+        legs.push(WireLeg {
+            label,
+            driver: driver.as_str(),
+            rmse: o.test_rmse,
+            final_cost: o.report.final_cost,
+            iters: o.report.iters,
+            updates: t.total_updates(),
+            wire_bytes: t.total_wire_bytes(),
+            delta_fallbacks: t.blocks.iter().map(|b| b.delta_fallbacks).sum(),
+            quant_resets: t.blocks.iter().map(|b| b.quant_resets).sum(),
+            wall: o.report.wall,
+        });
+    }
+    let outcome = WireOutcome { grid: (base.grid.p, base.grid.q), legs };
+    if !outcome.gate_passes() {
+        log::warn!(
+            "wire gate missed: {WIRE_GATE_LEG} reduction {:.2}x (target {WIRE_TARGET_REDUCTION}x), \
+             rmse ratio {:.4} (budget {WIRE_RMSE_BUDGET})",
+            outcome.reduction(WIRE_GATE_LEG),
+            outcome.rmse_ratio(WIRE_GATE_LEG)
+        );
+    }
+    Ok(outcome)
+}
+
+/// Render the cost/accuracy frontier table plus the gate verdict.
+pub fn render_wire(o: &WireOutcome) -> String {
+    let mut t = TablePrinter::new(&[
+        "lever",
+        "driver",
+        "bytes/update",
+        "reduction",
+        "test RMSE",
+        "rmse ratio",
+        "fallbacks",
+        "resets",
+        "wall",
+    ]);
+    for leg in &o.legs {
+        t.row(&[
+            leg.label.to_string(),
+            leg.driver.to_string(),
+            format!("{:.0}", leg.bytes_per_update()),
+            format!("{:.2}x", o.reduction(leg.label)),
+            format!("{:.4}", leg.rmse),
+            format!("{:.4}", o.rmse_ratio(leg.label)),
+            leg.delta_fallbacks.to_string(),
+            leg.quant_resets.to_string(),
+            format!("{:.2?}", leg.wall),
+        ]);
+    }
+    format!(
+        "== wire efficiency ({p}x{q} grid, {n} lever(s)) ==\n{table}\
+         gate ({leg}): reduction {red:.2}x vs target {target}x, rmse ratio {ratio:.4} \
+         vs budget {budget} — {verdict}\n",
+        p = o.grid.0,
+        q = o.grid.1,
+        n = o.legs.len(),
+        table = t.render(),
+        leg = WIRE_GATE_LEG,
+        red = o.reduction(WIRE_GATE_LEG),
+        target = WIRE_TARGET_REDUCTION,
+        ratio = o.rmse_ratio(WIRE_GATE_LEG),
+        budget = WIRE_RMSE_BUDGET,
+        verdict = if o.gate_passes() { "PASS" } else { "MISS" },
+    )
+}
+
+/// Write `BENCH_wire.json`: header, grid, one object per lever and the
+/// gate verdict. Deterministic for the preset's seeds except the wall
+/// clocks and the header timestamps.
+pub fn write_wire_json(path: &str, o: &WireOutcome) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(bench_json_header("wire").as_bytes())?;
+    writeln!(
+        f,
+        "  \"grid\": {{ \"p\": {}, \"q\": {}, \"agents\": {} }},",
+        o.grid.0,
+        o.grid.1,
+        o.grid.0 * o.grid.1
+    )?;
+    writeln!(f, "  \"unit\": \"bytes_per_update\",")?;
+    writeln!(f, "  \"legs\": {{")?;
+    for (k, leg) in o.legs.iter().enumerate() {
+        let comma = if k + 1 == o.legs.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    \"{}\": {{ \"driver\": \"{}\", \"rmse\": {:.6e}, \"final_cost\": {:.6e}, \
+             \"iters\": {}, \"updates\": {}, \"wire_bytes\": {}, \
+             \"bytes_per_update\": {:.3}, \"reduction\": {:.4}, \"rmse_ratio\": {:.6}, \
+             \"delta_fallbacks\": {}, \"quant_resets\": {}, \"wall_s\": {:.3} }}{comma}",
+            leg.label,
+            leg.driver,
+            leg.rmse,
+            leg.final_cost,
+            leg.iters,
+            leg.updates,
+            leg.wire_bytes,
+            leg.bytes_per_update(),
+            o.reduction(leg.label),
+            o.rmse_ratio(leg.label),
+            leg.delta_fallbacks,
+            leg.quant_resets,
+            leg.wall.as_secs_f64()
+        )?;
+    }
+    writeln!(f, "  }},")?;
+    writeln!(
+        f,
+        "  \"gate\": {{ \"lever\": \"{WIRE_GATE_LEG}\", \
+         \"target_reduction\": {WIRE_TARGET_REDUCTION}, \"reduction\": {:.4}, \
+         \"rmse_budget\": {WIRE_RMSE_BUDGET}, \"rmse_ratio\": {:.6}, \"pass\": {} }}",
+        o.reduction(WIRE_GATE_LEG),
+        o.rmse_ratio(WIRE_GATE_LEG),
+        o.gate_passes()
+    )?;
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
+/// Full wire harness: measure every lever, write `BENCH_wire.json`,
+/// render.
+pub fn run_wire() -> Result<String> {
+    let outcome = collect_wire()?;
+    let out = "BENCH_wire.json";
+    let note = match write_wire_json(out, &outcome) {
+        Ok(()) => format!("wrote {out} ({} legs)\n", outcome.legs.len()),
+        Err(e) => format!("could not write {out}: {e}\n"),
+    };
+    Ok(format!("{}{note}", render_wire(&outcome)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_wire() -> WireOutcome {
+        let leg = |label, driver, rmse, wire_bytes, fallbacks| WireLeg {
+            label,
+            driver,
+            rmse,
+            final_cost: 1.0e-3,
+            iters: 4000,
+            updates: 4000,
+            wire_bytes,
+            delta_fallbacks: fallbacks,
+            quant_resets: 0,
+            wall: std::time::Duration::from_millis(900),
+        };
+        WireOutcome {
+            grid: (4, 4),
+            legs: vec![
+                leg("full_f32", "parallel", 0.100, 40_000_000, 0),
+                leg("delta", "parallel", 0.100, 22_000_000, 3),
+                leg("f16", "parallel", 0.1004, 20_000_000, 0),
+                leg("delta_f16", "parallel", 0.1006, 9_000_000, 3),
+                leg("delta_int8", "parallel", 0.1009, 7_000_000, 3),
+                leg("priority_delta_f16", "priority", 0.1005, 9_500_000, 3),
+            ],
+        }
+    }
+
+    #[test]
+    fn gate_math_uses_the_baseline() {
+        let o = fake_wire();
+        assert!((o.reduction("full_f32") - 1.0).abs() < 1e-12);
+        assert!(o.reduction("delta_f16") > 4.0);
+        assert!(o.rmse_ratio("delta_f16") < 1.01);
+        assert!(o.gate_passes());
+        assert!(o.reduction("no_such_leg").is_nan());
+    }
+
+    #[test]
+    fn gate_fails_on_either_axis() {
+        let mut o = fake_wire();
+        o.legs[3].wire_bytes = 20_000_000; // only 2x: reduction axis fails
+        assert!(!o.gate_passes());
+        let mut o = fake_wire();
+        o.legs[3].rmse = 0.12; // 1.2x: accuracy axis fails
+        assert!(!o.gate_passes());
+    }
+
+    #[test]
+    fn wire_render_reports_every_lever_and_the_gate() {
+        let s = render_wire(&fake_wire());
+        assert!(s.contains("full_f32"), "{s}");
+        assert!(s.contains("delta_f16"), "{s}");
+        assert!(s.contains("delta_int8"), "{s}");
+        assert!(s.contains("priority_delta_f16"), "{s}");
+        assert!(s.contains("gate (delta_f16)"), "{s}");
+        assert!(s.contains("PASS"), "{s}");
+    }
+
+    #[test]
+    fn wire_json_is_balanced_and_complete() {
+        let dir = std::env::temp_dir().join("gridmc-wire-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_wire.json");
+        let path = path.to_str().unwrap();
+        write_wire_json(path, &fake_wire()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"bench\": \"wire\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"unit\": \"bytes_per_update\""));
+        assert!(text.contains("\"legs\": {"));
+        assert!(text.contains("\"full_f32\""));
+        assert!(text.contains("\"priority_delta_f16\""));
+        assert!(text.contains("\"gate\": {"));
+        assert!(text.contains("\"pass\": true"));
+        let opens = text.matches('{').count();
+        let closes = text.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+}

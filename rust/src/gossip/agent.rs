@@ -105,6 +105,19 @@
 //! recent* adoption — and every wire frame is deduplicated by sequence
 //! number, so duplicated or replayed deliveries are harmless whether
 //! or not liveness is configured.
+//!
+//! **Wire efficiency** ([`crate::net::wire`], armed by
+//! [`BlockAgent::with_wire`]): with any `[wire]` lever on, the factor
+//! exchanges switch to delta frames — `Execute` sends
+//! [`AgentMsg::GetDelta`] advertising the anchor's baseline epoch, the
+//! member answers [`AgentMsg::DeltaFactors`] with only the rows that
+//! changed (or a full frame on any baseline miss), and the scatter
+//! travels as a checksum-guarded [`AgentMsg::DeltaPut`]. Every event
+//! that mutates factors out of band (crash, join, retirement hand-off,
+//! revert, scatter expiry) drops the agent's baselines and
+//! error-feedback accumulators, so a stale delta can never apply: a
+//! guard miss degrades to a full-frame resync (gather) or a skipped
+//! adoption (put), both traced as `delta-fallback` events.
 
 use std::collections::HashMap;
 
@@ -112,7 +125,7 @@ use crate::data::DenseMatrix;
 use crate::engine::{Engine, EngineWorkspace, StructureParams};
 use crate::gossip::CheckpointStore;
 use crate::grid::{BlockId, Structure};
-use crate::net::{AgentMsg, DriverMsg, Outbox, Outgoing};
+use crate::net::{AgentMsg, DriverMsg, Outbox, Outgoing, WireConfig, WireState};
 use crate::trace::{GradeTag, PhaseTag, Recorder};
 
 use super::liveness::{DedupWindow, LivenessConfig, LivenessTracker, PeerHealth};
@@ -214,6 +227,11 @@ pub struct BlockAgent {
     /// a single branch); transports install the run's recorder via
     /// [`Self::with_recorder`].
     recorder: std::sync::Arc<Recorder>,
+    /// Wire-efficiency state — per-edge delta baselines and
+    /// error-feedback accumulators — present iff any `[wire]` lever is
+    /// armed ([`Self::with_wire`]). `None` keeps the agent on the
+    /// plain full-frame protocol.
+    wire: Option<WireState>,
 }
 
 impl BlockAgent {
@@ -247,6 +265,7 @@ impl BlockAgent {
             owed_factors: HashMap::new(),
             owed_revert_acks: HashMap::new(),
             recorder: std::sync::Arc::new(Recorder::disabled()),
+            wire: None,
         }
     }
 
@@ -271,6 +290,16 @@ impl BlockAgent {
     /// expires anything — the pre-liveness behavior.
     pub fn with_liveness(mut self, cfg: LivenessConfig) -> Self {
         self.liveness = Some(cfg);
+        self
+    }
+
+    /// Arm the wire-efficiency layer: factor exchanges switch to delta
+    /// frames (and/or compressed rows) per `cfg`. The transports call
+    /// this when any `[wire]` lever is on; without it the agent speaks
+    /// the plain full-frame protocol, bit-identical to the pre-wire
+    /// runtime.
+    pub fn with_wire(mut self, cfg: WireConfig) -> Self {
+        self.wire = Some(WireState::new(cfg, self.id));
         self
     }
 
@@ -357,14 +386,10 @@ impl BlockAgent {
                 self.last_done = None;
                 self.phase_started = self.tick;
                 self.deadline_extended = false;
-                out.push(Outgoing::Peer(
-                    roles.horizontal,
-                    AgentMsg::GetFactors { from: self.id },
-                ));
-                out.push(Outgoing::Peer(
-                    roles.vertical,
-                    AgentMsg::GetFactors { from: self.id },
-                ));
+                let h_req = self.factor_request(roles.horizontal);
+                let v_req = self.factor_request(roles.vertical);
+                out.push(Outgoing::Peer(roles.horizontal, h_req));
+                out.push(Outgoing::Peer(roles.vertical, v_req));
                 self.phase = Phase::Gather { structure, params, token, h: None, v: None };
                 self.recorder.phase_enter(self.id, token, PhaseTag::Gather);
             }
@@ -373,6 +398,102 @@ impl BlockAgent {
                     from,
                     AgentMsg::Factors { from: self.id, u: self.u.clone(), w: self.w.clone() },
                 ));
+            }
+            AgentMsg::GetDelta { from, have } => {
+                // Wire-layer gather request: answer with a delta frame
+                // against the baseline epoch the anchor advertised, or a
+                // full frame on any miss. An agent without wire state
+                // (mismatched configs) degrades to a plain reply — full
+                // factors always work.
+                let Some(ws) = &mut self.wire else {
+                    out.push(Outgoing::Peer(
+                        from,
+                        AgentMsg::Factors {
+                            from: self.id,
+                            u: self.u.clone(),
+                            w: self.w.clone(),
+                        },
+                    ));
+                    return AgentStatus::Running;
+                };
+                let (frame, note) = ws.make_gather(from, have, &self.u, &self.w);
+                if note.fallback {
+                    self.recorder.delta_fallback(self.id, from, true);
+                }
+                out.push(Outgoing::Peer(from, AgentMsg::DeltaFactors { from: self.id, frame }));
+            }
+            AgentMsg::DeltaFactors { from, frame } => {
+                // Reconstruct against the edge baseline FIRST — even a
+                // reply owed by an expired gather must advance the shared
+                // cache, or the two ends desync and every later exchange
+                // pays a full-frame fallback.
+                let recon = self.wire.as_mut().and_then(|ws| ws.recv_gather(from, &frame));
+                if let Some(n) = self.owed_factors.get_mut(&from) {
+                    *n -= 1;
+                    if *n == 0 {
+                        self.owed_factors.remove(&from);
+                    }
+                    log::debug!(
+                        "{}: dropping DeltaFactors owed by an expired gather from {from}",
+                        self.id
+                    );
+                    return AgentStatus::Running;
+                }
+                let Some((u, w)) = recon else {
+                    // Baseline miss or malformed frame: the cache was
+                    // cleared. If this reply was solicited by the current
+                    // gather, re-request a full frame (have = 0 cannot
+                    // miss) and keep waiting; anything else is stale
+                    // traffic and is dropped — nothing was applied.
+                    self.recorder.delta_fallback(self.id, from, true);
+                    let solicited = match &self.phase {
+                        Phase::Gather { structure, h, v, .. } => {
+                            let roles = structure.roles();
+                            (from == roles.horizontal && h.is_none())
+                                || (from == roles.vertical && v.is_none())
+                        }
+                        _ => false,
+                    };
+                    if solicited {
+                        out.push(Outgoing::Peer(
+                            from,
+                            AgentMsg::GetDelta { from: self.id, have: 0 },
+                        ));
+                    } else {
+                        log::debug!(
+                            "{}: dropping unmatched DeltaFactors from {from}",
+                            self.id
+                        );
+                    }
+                    return AgentStatus::Running;
+                };
+                // From here on this is exactly a Factors reply.
+                return self.on_msg(AgentMsg::Factors { from, u, w }, out);
+            }
+            AgentMsg::DeltaPut { from, frame } => {
+                // Wire-layer scatter: adopt the reconstructed factors if
+                // the checksum guard holds; otherwise skip the adoption
+                // entirely — a desynced baseline (crash, reset, stale
+                // frame) makes this update a dropped one for this block,
+                // and the cleared cache resyncs on the next gather. The
+                // ack goes out either way so the anchor's bookkeeping
+                // balances.
+                match self.wire.as_mut().and_then(|ws| ws.recv_put(from, &frame)) {
+                    Some((u, w)) => {
+                        self.u = u;
+                        self.w = w;
+                        self.bump_version();
+                        self.last_adopted_from = Some(from);
+                    }
+                    None => {
+                        self.recorder.delta_fallback(self.id, from, false);
+                        log::debug!(
+                            "{}: skipped DeltaPut from {from} (baseline miss)",
+                            self.id
+                        );
+                    }
+                }
+                out.push(Outgoing::Peer(from, AgentMsg::PutAck { from: self.id }));
             }
             AgentMsg::Factors { from, u, w } => {
                 // A reply owed by an expired gather: consume it so it
@@ -445,6 +566,9 @@ impl BlockAgent {
                     self.w = w;
                     self.unbump_version();
                     self.last_adopted_from = None;
+                    // The revert replaced our factors out of band
+                    // relative to every wire baseline.
+                    self.wire_reset();
                 } else {
                     log::debug!("{}: ignoring stale RevertFactors from {from}", self.id);
                 }
@@ -462,6 +586,9 @@ impl BlockAgent {
                     // The merge superseded any earlier adoption; a
                     // stale revert must not undo it.
                     self.last_adopted_from = None;
+                    // The midpoint merge mutated our factors outside
+                    // any wire exchange: baselines are void.
+                    self.wire_reset();
                 } else {
                     log::warn!("{}: hand-off from {from} had no absorbable factor", self.id);
                 }
@@ -645,8 +772,11 @@ impl BlockAgent {
                     }
                 }
                 self.active = true;
-                // A reborn block starts from a clean adoption history.
+                // A reborn block starts from a clean adoption history —
+                // and from clean wire baselines: whatever the peers
+                // cached refers to a block that no longer exists.
                 self.last_adopted_from = None;
+                self.wire_reset();
                 out.push(Outgoing::Driver(DriverMsg::Joined {
                     from: self.id,
                     version: self.version,
@@ -679,6 +809,9 @@ impl BlockAgent {
                 // The previous completion is no longer abortable once a
                 // retirement is in progress.
                 self.last_done = None;
+                // A retiring block's exchanges are over; stale baselines
+                // must not survive into a later rejoin.
+                self.wire_reset();
                 // Hand each factor off exactly once: row factors to the
                 // row heir, column factors to the column heir; the half
                 // a frame does not carry travels as a 0×0 placeholder.
@@ -758,6 +891,17 @@ impl BlockAgent {
                 self.deadline_extended = false;
                 self.owed_factors.clear();
                 self.owed_revert_acks.clear();
+                // Baselines, error feedback and the epoch counter die
+                // with the process — the wipe is what makes restarted
+                // epoch numbers safe to reuse.
+                if let Some(ws) = &mut self.wire {
+                    let cfg = *ws.cfg();
+                    let n = ws.reset();
+                    *ws = WireState::new(cfg, self.id);
+                    if n > 0 {
+                        self.recorder.quant_reset(self.id, n);
+                    }
+                }
                 self.recorder.checkpoint_restore(self.id, self.version);
                 out.push(Outgoing::Driver(DriverMsg::Restarted {
                     from: self.id,
@@ -814,6 +958,45 @@ impl BlockAgent {
         AgentStatus::Running
     }
 
+    /// The gather request for `peer`: plain `GetFactors`, or — with the
+    /// wire layer armed — `GetDelta` advertising the baseline epoch
+    /// this anchor holds for `peer`'s factors.
+    fn factor_request(&self, peer: BlockId) -> AgentMsg {
+        match &self.wire {
+            Some(ws) => AgentMsg::GetDelta { from: self.id, have: ws.advertise(peer) },
+            None => AgentMsg::GetFactors { from: self.id },
+        }
+    }
+
+    /// The scatter message carrying `peer`'s new factors: plain
+    /// `PutFactors`, or a checksum-guarded `DeltaPut` under the wire
+    /// layer.
+    fn put_message(&mut self, peer: BlockId, u: DenseMatrix, w: DenseMatrix) -> AgentMsg {
+        match &mut self.wire {
+            Some(ws) => {
+                let (frame, note) = ws.make_put(peer, &u, &w);
+                if note.fallback {
+                    self.recorder.delta_fallback(self.id, peer, false);
+                }
+                AgentMsg::DeltaPut { from: self.id, frame }
+            }
+            None => AgentMsg::PutFactors { from: self.id, u, w },
+        }
+    }
+
+    /// Drop every wire baseline and error-feedback accumulator: this
+    /// agent's factors (or a peer's agreed view of them) changed out of
+    /// band, so any delta built on the old baselines must be refused.
+    /// Traced as a quantization-reset event when anything was dropped.
+    fn wire_reset(&mut self) {
+        if let Some(ws) = &mut self.wire {
+            let n = ws.reset();
+            if n > 0 {
+                self.recorder.quant_reset(self.id, n);
+            }
+        }
+    }
+
     /// Both members answered: run the engine update, adopt our own new
     /// factors, and scatter the members' updates.
     fn finish_gather(
@@ -848,14 +1031,10 @@ impl BlockAgent {
                 let (mut vu, mut vw) = (vu, vw);
                 self.ws.swap_output(1, &mut hu, &mut hw);
                 self.ws.swap_output(2, &mut vu, &mut vw);
-                out.push(Outgoing::Peer(
-                    roles.horizontal,
-                    AgentMsg::PutFactors { from: self.id, u: hu, w: hw },
-                ));
-                out.push(Outgoing::Peer(
-                    roles.vertical,
-                    AgentMsg::PutFactors { from: self.id, u: vu, w: vw },
-                ));
+                let h_put = self.put_message(roles.horizontal, hu, hw);
+                let v_put = self.put_message(roles.vertical, vu, vw);
+                out.push(Outgoing::Peer(roles.horizontal, h_put));
+                out.push(Outgoing::Peer(roles.vertical, v_put));
                 self.phase_started = self.tick;
                 self.deadline_extended = false;
                 self.phase =
@@ -914,6 +1093,9 @@ impl BlockAgent {
             AgentMsg::RevertFactors { from: self.id, u: vu, w: vw },
         ));
         self.phase = Phase::Revert { token, pending: 2 };
+        // Our own factors just rolled back and both members are about
+        // to: every baseline on this agent is void.
+        self.wire_reset();
         self.recorder.abort(self.id);
         self.recorder.phase_enter(self.id, token, PhaseTag::Revert);
     }
@@ -1043,6 +1225,8 @@ impl BlockAgent {
                     1 + u32::from(!acked_h);
                 *self.owed_revert_acks.entry(roles.vertical).or_insert(0) +=
                     1 + u32::from(!acked_v);
+                // Rolled back out of band: wire baselines are void.
+                self.wire_reset();
                 log::debug!(
                     "{}: expired scatter of token {token}, blaming {suspect}",
                     self.id
@@ -2003,6 +2187,134 @@ mod tests {
         assert_eq!(agent.w, w0);
         assert_eq!(agent.version(), 0);
         // …but the ack still goes out so the anchor's counters balance.
+        assert!(matches!(
+            out.as_slice(),
+            [Outgoing::Peer(to, AgentMsg::PutAck { from })]
+                if *to == anchor && *from == id
+        ));
+    }
+
+    fn wire_all(
+        agents: &mut std::collections::HashMap<usize, BlockAgent>,
+        cfg: crate::net::WireConfig,
+    ) {
+        let keys: Vec<usize> = agents.keys().copied().collect();
+        for k in keys {
+            let a = agents.remove(&k).unwrap();
+            agents.insert(k, a.with_wire(cfg));
+        }
+    }
+
+    #[test]
+    fn lossless_wire_protocol_matches_plain_protocol_bitwise() {
+        // Delta frames with f32 rows and no threshold must leave every
+        // block bit-identical to the plain full-frame protocol — the
+        // transport_equivalence guarantee extended to the wire layer.
+        let (spec, train) = problem();
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        let run = |wired: bool| {
+            let (_, mut agents) = network(spec, &train, 51);
+            if wired {
+                wire_all(
+                    &mut agents,
+                    crate::net::WireConfig { delta: true, ..Default::default() },
+                );
+            }
+            // Three rounds: the first full-frames everywhere, the later
+            // ones exchange genuine deltas.
+            for token in 0..3 {
+                let driver = pump(
+                    &mut agents,
+                    2,
+                    vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token })],
+                );
+                assert_eq!(driver.len(), 1);
+                assert!(matches!(driver[0], DriverMsg::Done { .. }));
+            }
+            roles
+                .blocks()
+                .iter()
+                .map(|id| {
+                    let a = agents.get(&id.index(2)).unwrap();
+                    (a.u.clone(), a.w.clone(), a.version())
+                })
+                .collect::<Vec<_>>()
+        };
+        let plain = run(false);
+        let wired = run(true);
+        for (id, (p, w)) in roles.blocks().iter().zip(plain.iter().zip(&wired)) {
+            assert_eq!(p.0, w.0, "block {id} U bit-identical under lossless wire");
+            assert_eq!(p.1, w.1, "block {id} W bit-identical under lossless wire");
+            assert_eq!(p.2, w.2, "block {id} version identical");
+        }
+    }
+
+    #[test]
+    fn wire_agents_exchange_deltas_and_crash_wipes_baselines() {
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 52);
+        wire_all(&mut agents, crate::net::WireConfig { delta: true, ..Default::default() });
+        let s = Structure::upper(0, 0);
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(2, 2);
+        let params = StructureParams::build(10.0, 1e-9, 1e-3, &coeffs, &roles);
+        // First round establishes baselines on every touched edge.
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 0 })],
+        );
+        assert_eq!(driver.len(), 1);
+        let anchor = agents.get_mut(&roles.anchor.index(2)).unwrap();
+        assert!(anchor.wire.as_ref().unwrap().live_edges() > 0);
+        // The next gather advertises those baselines.
+        let req = anchor.factor_request(roles.horizontal);
+        assert!(
+            matches!(req, AgentMsg::GetDelta { have, .. } if have != 0),
+            "second-round request must advertise a baseline: {req:?}"
+        );
+        // A crash wipes them: the next request degrades to a full
+        // (have = 0) exchange, and the fabric still completes.
+        let mut out = Vec::new();
+        anchor.on_msg(AgentMsg::Crash, &mut out);
+        assert_eq!(anchor.wire.as_ref().unwrap().live_edges(), 0);
+        let req = anchor.factor_request(roles.horizontal);
+        assert!(matches!(req, AgentMsg::GetDelta { have: 0, .. }));
+        let driver = pump(
+            &mut agents,
+            2,
+            vec![(roles.anchor, AgentMsg::Execute { structure: s, params, token: 1 })],
+        );
+        assert_eq!(driver.len(), 1);
+        assert!(matches!(driver[0], DriverMsg::Done { .. }));
+    }
+
+    #[test]
+    fn stale_delta_put_is_skipped_but_acked() {
+        // A DeltaPut whose checksum guard misses (no shared baseline)
+        // must not clobber the member's factors — and must still ack.
+        let (spec, train) = problem();
+        let (_, mut agents) = network(spec, &train, 53);
+        wire_all(&mut agents, crate::net::WireConfig { delta: true, ..Default::default() });
+        let id = BlockId::new(1, 0);
+        let anchor = BlockId::new(0, 0);
+        let agent = agents.get_mut(&id.index(2)).unwrap();
+        let (u0, w0) = (agent.u.clone(), agent.w.clone());
+        // Forge a delta frame against a baseline this member never had.
+        let mut forger = crate::net::WireState::new(
+            crate::net::WireConfig { delta: true, ..Default::default() },
+            anchor,
+        );
+        let (mut frame, _) = forger.make_put(id, &u0, &w0);
+        frame.base = 0x1234_5678; // non-zero ⇒ delta, guard must miss
+        let mut out = Vec::new();
+        agent.on_msg(AgentMsg::DeltaPut { from: anchor, frame }, &mut out);
+        assert_eq!(agent.u, u0, "guard miss must not touch factors");
+        assert_eq!(agent.w, w0);
+        assert_eq!(agent.version(), 0, "skipped adoption is not a mutation");
         assert!(matches!(
             out.as_slice(),
             [Outgoing::Peer(to, AgentMsg::PutAck { from })]

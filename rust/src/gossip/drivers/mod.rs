@@ -13,7 +13,12 @@
 //!   and worker counts);
 //! * [`AsyncDriver`] ([`async_`]) — NOMAD-style barrier-free dispatch
 //!   over per-block in-flight flags (statistically reproducible;
-//!   `max_inflight = 1` restores bit determinism).
+//!   `max_inflight = 1` restores bit determinism);
+//! * [`PriorityDriver`] ([`priority`]) — the async pipeline with a
+//!   residual-weighted epoch feed: structures touching hot
+//!   (high-residual) blocks gossip roughly twice per epoch, with heat
+//!   read from the [`crate::trace::MetricsRegistry`] gauge the cost
+//!   collection feeds.
 //!
 //! Drivers may call the network mechanisms ([`super::network`]), the
 //! supervision verbs and fault-queue helpers ([`super::supervisor`])
@@ -26,9 +31,11 @@
 
 pub(crate) mod async_;
 pub(crate) mod parallel;
+pub(crate) mod priority;
 
 pub use async_::AsyncDriver;
 pub use parallel::ParallelDriver;
+pub use priority::PriorityDriver;
 
 use std::collections::VecDeque;
 use std::sync::Arc;

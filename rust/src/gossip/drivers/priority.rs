@@ -1,0 +1,342 @@
+//! The residual-weighted dispatch policy (priority gossip).
+//!
+//! **Layer contract.** This file owns only the heat-weighted epoch
+//! refill and the same in-flight-flag bookkeeping as the async driver;
+//! supervision, membership changes and evaluation go through the
+//! shared [`Session`] helpers. The heat source is the
+//! [`crate::trace::MetricsRegistry`] per-block residual gauge, fed by
+//! the network's cost collection at every quiescent evaluation — the
+//! sideways trace arrow read back by a scheduler for the first time,
+//! still without any trace→gossip call cycle (the registry is a plain
+//! shared read).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::data::CooMatrix;
+use crate::engine::Engine;
+use crate::grid::{BlockId, GridSpec, Structure};
+use crate::model::FactorState;
+use crate::net::{FaultEvent, FaultPlan, NetConfig};
+use crate::solver::{SolverConfig, SolverReport};
+use crate::{Error, Result};
+
+use super::super::elastic::{GrowthPlan, ShrinkPlan};
+use super::super::network::GossipNetwork;
+use super::super::supervisor::fire_fault;
+use super::{run_gossip_driver, DispatchPolicy, Driver, RunPlan, Session};
+
+/// Residual-weighted gossip driver (priority dispatch).
+///
+/// Identical to the [`super::AsyncDriver`] pipeline — up to
+/// `max_inflight` structures in flight over per-block busy flags —
+/// except for the epoch feed: every epoch still covers each live
+/// structure exactly once (no structure can starve), and then appends
+/// a second pass over the structures touching *hot* blocks, so
+/// high-residual regions of the grid gossip roughly twice as often as
+/// converged ones.
+///
+/// A block is hot when its residual gauge sits strictly above the
+/// upper quartile of the live grid's gauges. The gauge is fed by the
+/// network's cost collection at each quiescent evaluation, so heat is
+/// exactly the per-block cost contribution of the last convergence
+/// check. Before the first evaluation — or with the flight recorder
+/// disarmed, which freezes the gauge at zero — every gauge ties at
+/// the quartile, nothing is strictly above it, and the feed degrades
+/// to a plain uniform epoch.
+///
+/// **Determinism.** The gauge readings are themselves deterministic
+/// (block-ordered f64 sums), so like the async driver this policy is
+/// statistically reproducible at `max_inflight > 1` and bit-exact at
+/// `max_inflight = 1`.
+#[derive(Debug, Clone)]
+pub struct PriorityDriver {
+    spec: GridSpec,
+    cfg: SolverConfig,
+    /// Maximum structures in flight at once.
+    pub max_inflight: usize,
+    /// Which transport stack carries the gossip (default: multiplexed
+    /// workers — the pairing built for large grids).
+    pub net: NetConfig,
+    /// Scheduled crashes/partitions to supervise (default: none).
+    pub faults: FaultPlan,
+    /// Scheduled membership growth (default: every block live).
+    pub grow: GrowthPlan,
+    /// Scheduled membership shrink (default: nobody retires).
+    pub shrink: ShrinkPlan,
+    /// Per-block snapshot cadence in factor mutations (0 = off).
+    pub checkpoint_every: u64,
+    /// Persist snapshots here instead of in memory (survives the
+    /// process; enables warm joins across runs).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Flight-recorder + metrics configuration. Armed by default —
+    /// disarming also freezes the residual gauge this policy
+    /// prioritizes by.
+    pub trace: crate::trace::TraceConfig,
+}
+
+impl PriorityDriver {
+    pub fn new(spec: GridSpec, cfg: SolverConfig, max_inflight: usize) -> Self {
+        Self {
+            spec,
+            cfg,
+            max_inflight: max_inflight.max(1),
+            net: NetConfig::multiplex(0),
+            faults: FaultPlan::default(),
+            grow: GrowthPlan::default(),
+            shrink: ShrinkPlan::default(),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            trace: crate::trace::TraceConfig::default(),
+        }
+    }
+
+    /// Select the transport stack.
+    pub fn with_net(mut self, net: NetConfig) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Supervise a fault plan during training (same semantics as
+    /// [`super::AsyncDriver::with_faults`]: busy kill victims abort
+    /// their structure, which rejoins the front of the feed).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Grow the membership mid-run (same semantics as
+    /// [`super::AsyncDriver::with_growth`]).
+    pub fn with_growth(mut self, grow: GrowthPlan) -> Self {
+        self.grow = grow;
+        self
+    }
+
+    /// Shrink the membership mid-run (same semantics as
+    /// [`super::AsyncDriver::with_shrink`]).
+    pub fn with_shrink(mut self, shrink: ShrinkPlan) -> Self {
+        self.shrink = shrink;
+        self
+    }
+
+    /// Checkpoint every block's factors at this mutation cadence (0
+    /// disables; crashes then restore cold).
+    pub fn with_checkpoints(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Persist checkpoints durably under `dir` (see
+    /// [`crate::gossip::DiskSink`]).
+    pub fn with_checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Configure the flight recorder. Note that disarming it also
+    /// freezes the residual gauge, degrading this policy to uniform
+    /// epochs.
+    pub fn with_trace(mut self, trace: crate::trace::TraceConfig) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// One epoch of the priority feed: a full shuffled pass over every
+    /// live structure, then the hot blocks' touching structures again.
+    fn heated_epoch(
+        &self,
+        session: &mut Session<'_>,
+        network: &GossipNetwork,
+    ) -> Vec<Structure> {
+        let mut queue = session.schedule.shuffled();
+        let spec = session.spec;
+        let metrics = network.recorder.metrics();
+        let live: Vec<(BlockId, f64)> = spec
+            .blocks()
+            .filter(|b| session.members.is_live(*b))
+            .map(|b| (b, metrics.block_heat(b.index(spec.q)).1))
+            .collect();
+        let mut gauges: Vec<f64> = live.iter().map(|&(_, r)| r).collect();
+        gauges.sort_unstable_by(f64::total_cmp);
+        let Some(&quartile) = gauges.get(3 * gauges.len().saturating_sub(1) / 4) else {
+            return queue;
+        };
+        // Strictly above the quartile: an all-tied gauge (pre-first-eval
+        // zeros, or a fully converged grid) heats nothing.
+        let mut seen: HashSet<Structure> = HashSet::new();
+        for &(b, r) in &live {
+            if r > quartile {
+                for s in session.schedule.touching(b) {
+                    if seen.insert(s) {
+                        queue.push(s);
+                    }
+                }
+            }
+        }
+        queue
+    }
+
+    /// Train; returns the report and the final (culminated) state.
+    pub fn run(
+        &self,
+        engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        run_gossip_driver(
+            self,
+            RunPlan {
+                spec: self.spec,
+                cfg: &self.cfg,
+                net: &self.net,
+                faults: &self.faults,
+                grow: &self.grow,
+                shrink: &self.shrink,
+                checkpoint_every: self.checkpoint_every,
+                checkpoint_dir: self.checkpoint_dir.as_deref(),
+                trace: &self.trace,
+            },
+            engine,
+            train,
+        )
+    }
+}
+
+impl Driver for PriorityDriver {
+    fn label(&self) -> &'static str {
+        "priority"
+    }
+
+    fn run(
+        &self,
+        engine: Box<dyn Engine>,
+        train: &CooMatrix,
+    ) -> Result<(SolverReport, FactorState)> {
+        PriorityDriver::run(self, engine, train)
+    }
+}
+
+impl DispatchPolicy for PriorityDriver {
+    fn schedule_salt(&self) -> u64 {
+        0xbea7
+    }
+
+    /// The async training loop with the heated feed. See
+    /// [`super::AsyncDriver::dispatch`] for the bookkeeping invariants;
+    /// only the three `queue` regeneration sites differ.
+    fn dispatch(&self, session: &mut Session<'_>, network: &mut GossipNetwork) -> Result<u64> {
+        if session.liveness.is_some() {
+            return Err(Error::Config(
+                "the priority driver does not run the decentralized liveness \
+                 layer; use driver = \"async\" with [liveness]"
+                    .into(),
+            ));
+        }
+        let max_iters = session.cfg.max_iters;
+        let spec = session.spec;
+        let mut busy = vec![false; spec.num_blocks()];
+        let mut inflight: HashMap<u64, [BlockId; 3]> = HashMap::new();
+        let mut queue: Vec<Structure> = self.heated_epoch(session, network);
+        let mut dispatched = 0u64;
+        let mut completed = 0u64;
+
+        'training: while completed < max_iters {
+            if session.members.join_due(completed) {
+                session.join_now(network, completed)?;
+                queue = self.heated_epoch(session, network);
+                let touching: Vec<Structure> = session
+                    .members
+                    .grown_blocks()
+                    .iter()
+                    .flat_map(|b| session.schedule.touching(*b))
+                    .collect();
+                let (mut front, back): (Vec<_>, Vec<_>) =
+                    queue.drain(..).partition(|s| touching.contains(s));
+                front.extend(back);
+                queue = front;
+            }
+            let retire_due = session.members.retire_due(completed);
+            let draining =
+                session.eval_due(completed) || retire_due || dispatched >= max_iters;
+            if !draining {
+                let mut k = 0;
+                while inflight.len() < self.max_inflight && dispatched < max_iters {
+                    if k >= queue.len() {
+                        if queue.is_empty() {
+                            queue = self.heated_epoch(session, network);
+                            k = 0;
+                            continue;
+                        }
+                        // Everything left in this epoch conflicts with an
+                        // in-flight block; wait for a completion.
+                        break;
+                    }
+                    let s = queue[k];
+                    let blocks = s.blocks();
+                    if blocks.iter().any(|b| busy[b.index(spec.q)]) {
+                        k += 1;
+                        continue;
+                    }
+                    queue.remove(k);
+                    for b in blocks {
+                        busy[b.index(spec.q)] = true;
+                    }
+                    let params = session.params(&s, dispatched);
+                    let token = network.dispatch(s, params)?;
+                    inflight.insert(token, blocks);
+                    dispatched += 1;
+                }
+            }
+            // Fault supervision after the refill, exactly as in the
+            // async loop: abort busy kill victims, front-load re-gossip.
+            while session.faults.front().is_some_and(|e| e.step() <= completed) {
+                match session.faults.pop_front().expect("peeked") {
+                    FaultEvent::Kill { block, .. } => {
+                        if !session.members.kill_admissible(block) {
+                            continue;
+                        }
+                        if let Some((token, s)) = network.crash(completed, block)? {
+                            let removed = inflight.remove(&token);
+                            debug_assert!(removed.is_some(), "aborted token was in flight");
+                            for b in s.blocks() {
+                                busy[b.index(spec.q)] = false;
+                            }
+                            dispatched -= 1;
+                            network.recorder.retry(s.roles().anchor);
+                            queue.insert(0, s);
+                        }
+                        let touching = session.schedule.touching(block);
+                        let (mut front, back): (Vec<_>, Vec<_>) =
+                            queue.drain(..).partition(|s| touching.contains(s));
+                        if front.is_empty() {
+                            front = touching;
+                        }
+                        front.extend(back);
+                        queue = front;
+                    }
+                    event @ (FaultEvent::Partition { .. } | FaultEvent::Stall { .. }) => {
+                        fire_fault(network, event, completed)?;
+                    }
+                }
+            }
+            if inflight.is_empty() {
+                if retire_due {
+                    session.retire_now(network, completed)?;
+                    queue = self.heated_epoch(session, network);
+                    continue;
+                }
+                if session.eval_due(completed) && session.evaluate(network, completed)? {
+                    break 'training;
+                }
+                continue;
+            }
+            let (_, token) = network.await_done()?;
+            let blocks = inflight
+                .remove(&token)
+                .ok_or_else(|| Error::Gossip(format!("unknown completion token {token}")))?;
+            for b in blocks {
+                busy[b.index(spec.q)] = false;
+            }
+            completed += 1;
+        }
+        Ok(completed)
+    }
+}

@@ -6,7 +6,9 @@ use std::sync::Arc;
 
 use crate::data::{CooMatrix, SyntheticConfig};
 use crate::engine::{Engine, NativeEngine};
-use crate::gossip::{AsyncDriver, Driver, GossipNetwork, GrowthPlan, ParallelDriver, ShrinkPlan};
+use crate::gossip::{
+    AsyncDriver, Driver, GossipNetwork, GrowthPlan, ParallelDriver, PriorityDriver, ShrinkPlan,
+};
 use crate::grid::{BlockId, BlockPartition, GridSpec};
 use crate::model::FactorState;
 use crate::net::{FaultPlan, FaultRecord, NetConfig, SimConfig};
@@ -551,6 +553,88 @@ fn liveness_mode_without_faults_matches_stats_zero() {
     assert_eq!(stats.quarantined_blocks, 0);
     assert!(report.faults.is_empty());
     assert!(report.final_cost.is_finite());
+}
+
+// ---------------------------------------------------------------------
+// Priority dispatch (residual-weighted feed).
+
+#[test]
+fn priority_driver_reduces_cost_and_still_covers_everything() {
+    let (spec, train, test) = problem();
+    let driver = PriorityDriver::new(spec, cfg(), 4);
+    assert_eq!(Driver::label(&driver), "priority");
+    let (report, state) = driver.run(Box::new(NativeEngine::new()), &train).unwrap();
+    assert!(
+        report.curve.orders_of_reduction() > 2.0,
+        "orders {}",
+        report.curve.orders_of_reduction()
+    );
+    let rmse = state.rmse(&test);
+    assert!(rmse < 0.5, "rmse {rmse}");
+    // The heated feed still covers the grid: every block completed
+    // updates (nothing starves while hot regions get extra passes).
+    let telemetry = report.telemetry.expect("recorder armed by default");
+    for b in &telemetry.blocks {
+        assert!(b.updates > 0, "block {} starved by the priority feed", b.block);
+    }
+    // The residual gauge was fed by the cost collections.
+    assert!(
+        telemetry.blocks.iter().any(|b| b.residual > 0.0),
+        "no residual gauge was ever fed"
+    );
+}
+
+#[test]
+fn priority_single_inflight_is_deterministic() {
+    // Heat readings are block-ordered deterministic sums, so the
+    // serialized feed must replay bit-for-bit like the async driver's.
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 600;
+    c.eval_every = 200;
+    let run = || {
+        PriorityDriver::new(spec, c.clone(), 1)
+            .run(Box::new(NativeEngine::new()), &train)
+            .unwrap()
+    };
+    let (ra, sa) = run();
+    let (rb, sb) = run();
+    assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    let id = BlockId::new(2, 1);
+    assert_eq!(sa.u(id), sb.u(id));
+    assert_eq!(sa.w(id), sb.w(id));
+}
+
+#[test]
+fn priority_driver_supervises_kills_and_retires() {
+    // The full elasticity surface rides along: kills restore and a
+    // trailing column retires, all under the heated feed.
+    let (spec, train, _) = problem();
+    let mut c = cfg();
+    c.max_iters = 1200;
+    c.eval_every = 400;
+    let plan = FaultPlan::new().kill(300, BlockId::new(0, 1));
+    let shrink = ShrinkPlan::trailing_columns(spec, 1, 800).unwrap();
+    let (report, _) = PriorityDriver::new(spec, c, 4)
+        .with_faults(plan)
+        .with_shrink(shrink)
+        .with_checkpoints(4)
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap();
+    assert_eq!(report.kill_count(), 1, "{:?}", report.faults);
+    assert_eq!(report.retire_count(), 4, "{:?}", report.faults);
+    assert_eq!(report.iters, 1200);
+    assert!(report.final_cost.is_finite());
+}
+
+#[test]
+fn priority_driver_rejects_liveness_mode() {
+    let (spec, train, _) = problem();
+    let err = PriorityDriver::new(spec, cfg(), 4)
+        .with_net(liveness_net(1))
+        .run(Box::new(NativeEngine::new()), &train)
+        .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
 }
 
 #[test]

@@ -5,11 +5,13 @@
 //! over a pluggable [`crate::net`] transport — thread-per-block
 //! channels, multiplexed workers for `p·q ≫ cores` grids, or simulated
 //! lossy links — wired so each agent only ever messages its grid
-//! neighbours. Two drivers train through the network behind one
+//! neighbours. Three drivers train through the network behind one
 //! [`Driver`] trait: the round-barrier [`ParallelDriver`]
-//! (deterministic, bit-identical across transports and worker counts)
-//! and the NOMAD-style [`AsyncDriver`] (barrier-free, statistically
-//! reproducible, bit-deterministic at `max_inflight = 1`). Both
+//! (deterministic, bit-identical across transports and worker counts),
+//! the NOMAD-style [`AsyncDriver`] (barrier-free, statistically
+//! reproducible, bit-deterministic at `max_inflight = 1`), and the
+//! [`PriorityDriver`] (the async pipeline with a residual-weighted
+//! feed that gossips hot blocks roughly twice per epoch). All
 //! supervise scheduled faults ([`crate::net::FaultPlan`]: crashes with
 //! checkpoint restore, mid-structure aborts, link partitions) and
 //! *elastic membership*: dormant blocks join mid-run ([`GrowthPlan`])
@@ -28,7 +30,7 @@
 //!
 //! | module | layer | may call | may not touch |
 //! |---|---|---|---|
-//! | `agent` | L0: block state machines | engine, checkpoints | transports, policy |
+//! | `agent` | L0: block state machines | engine, checkpoints, wire codec (`crate::net::WireState` delta/quantized frames) | transports, policy |
 //! | `checkpoint` | L0: snapshot durability | codec framing, fs | agents, drivers |
 //! | `liveness` | L0: suspicion/dedup/probation bookkeeping | grid ids | transports, agents, drivers |
 //! | `scheduler` | L0: conflict-free schedules | grid enumeration | network, membership |
@@ -47,10 +49,14 @@
 //! per-block metrics; PERF.md §Observability). That arrow is
 //! write-only — `trace` never calls back into gossip, agents, or
 //! transports, so it adds no layering cycle: agents record phase
-//! transitions and checkpoint traffic, `network` records structure
-//! dispatch, `supervisor` mirrors its fault actions, the transports
-//! record wire traffic, and `drivers` own the recorder's lifecycle
-//! (arm, snapshot into `SolverReport::telemetry`, export).
+//! transitions, checkpoint traffic and wire-layer fallbacks/resets,
+//! `network` records structure dispatch and feeds the per-block
+//! residual gauge at each cost collection, `supervisor` mirrors its
+//! fault actions, the transports record wire traffic, and `drivers`
+//! own the recorder's lifecycle (arm, snapshot into
+//! `SolverReport::telemetry`, export). The [`PriorityDriver`] *reads*
+//! the metrics registry back as its heat source — a plain shared read,
+//! so `trace` still never calls into gossip.
 
 mod agent;
 mod checkpoint;
@@ -63,7 +69,7 @@ mod supervisor;
 
 pub use agent::{AgentStatus, BlockAgent};
 pub use checkpoint::{Checkpoint, CheckpointSink, CheckpointStore, DiskSink, MemorySink};
-pub use drivers::{AsyncDriver, Driver, ParallelDriver};
+pub use drivers::{AsyncDriver, Driver, ParallelDriver, PriorityDriver};
 pub use elastic::{GrowthPlan, ShrinkPlan};
 pub use liveness::{DedupWindow, LivenessConfig, LivenessTracker, PeerHealth, SuspicionLedger};
 pub use network::GossipNetwork;

@@ -251,6 +251,14 @@ impl GossipNetwork {
         lambda: f32,
         active: impl Fn(BlockId) -> bool,
     ) -> Result<f64> {
+        // The quiescence precondition, pinned: a structure still in
+        // flight could mutate factors between two blocks' replies,
+        // making the "total" a mix of two model states.
+        debug_assert!(
+            self.inflight.is_empty(),
+            "total_cost requires quiescence: {} structure(s) still in flight",
+            self.inflight.len()
+        );
         let ids: Vec<BlockId> = self.spec.blocks().filter(|b| active(*b)).collect();
         for id in &ids {
             self.transport.send(*id, AgentMsg::GetCost { lambda })?;
@@ -283,8 +291,12 @@ impl GossipNetwork {
         self.backlog.extend(parked);
         let mut acc = 0.0;
         for id in &ids {
-            acc += per_block[id.index(self.spec.q)]
+            let cost = per_block[id.index(self.spec.q)]
                 .ok_or_else(|| Error::Gossip("missing cost reply".into()))?;
+            // Feed the per-block residual gauge: the priority driver's
+            // heat source, refreshed at every quiescent evaluation.
+            self.recorder.note_block_residual(*id, cost);
+            acc += cost;
         }
         Ok(acc)
     }

@@ -6,7 +6,7 @@
 //!              [--trace trace.json]
 //! gridmc train --config configs/my.toml
 //! gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|
-//!                     trace-overhead|ablations> [--scale S]
+//!                     trace-overhead|wire|ablations> [--scale S]
 //! gridmc gen-data --preset ml1m --out /tmp/ml1m.csv [--seed 7]
 //! gridmc inspect --preset exp4
 //! ```
@@ -27,16 +27,17 @@ const USAGE: &str = "\
 gridmc — two-dimensional gossip matrix completion (Bhutani & Mishra 2017)
 
 USAGE:
-  gridmc train --preset <exp1..exp6|churn|grow|shrink|liveness|table3-<ds>-<g>-<r>> [options]
+  gridmc train --preset <exp1..exp6|churn|grow|shrink|liveness|wire|table3-<ds>-<g>-<r>> [options]
   gridmc train --config <file.toml> [options]
   gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|
-                      trace-overhead|ablations> [--scale S]
+                      trace-overhead|wire|ablations> [--scale S]
   gridmc gen-data --preset <ml1m|ml10m|ml20m|netflix> --out <path> [--seed N]
   gridmc inspect --preset <name>
 
 TRAIN OPTIONS:
   --engine <xla|native-sparse|native-dense>   override engine
-  --driver <sequential|parallel|async>        override driver
+  --driver <sequential|parallel|async|priority>
+                                              override driver
   --workers <N>                               in-flight structures
   --transport <channel|multiplex|sim|sim-multiplex>
                                               gossip transport (net/)
@@ -99,6 +100,9 @@ fn resolve_preset(name: &str) -> Result<ExperimentConfig> {
     }
     if name == "liveness" {
         return Ok(presets::liveness());
+    }
+    if name == "wire" {
+        return Ok(presets::wire());
     }
     if let Some(n) = name.strip_prefix("exp") {
         if let Ok(n) = n.parse::<usize>() {
@@ -213,12 +217,13 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "shrink" => experiments::scenarios::shrink::run_shrink()?,
         "liveness" => experiments::scenarios::liveness::run_liveness()?,
         "trace-overhead" => experiments::scenarios::trace_overhead::run_trace_overhead()?,
+        "wire" => experiments::scenarios::wire::run_wire()?,
         "ablations" => experiments::ablations::run()?,
         other => {
             return Err(Error::Config(format!(
                 "unknown table {other:?} \
                  (table2|table3|fig2|parallel|churn|grow|shrink|liveness|\
-                 trace-overhead|ablations)"
+                 trace-overhead|wire|ablations)"
             )))
         }
     };

@@ -55,9 +55,12 @@ impl ChannelTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         liveness: Option<crate::gossip::LivenessConfig>,
+        wire: super::WireConfig,
         recorder: Arc<Recorder>,
     ) -> Self {
-        Self::spawn_tapped(spec, engine, state, checkpoints, dormant, liveness, recorder, None)
+        Self::spawn_tapped(
+            spec, engine, state, checkpoints, dormant, liveness, wire, recorder, None,
+        )
     }
 
     /// As [`Self::spawn`], but with peer-to-peer traffic diverted to
@@ -69,6 +72,7 @@ impl ChannelTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         liveness: Option<crate::gossip::LivenessConfig>,
+        wire: super::WireConfig,
         recorder: Arc<Recorder>,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
@@ -91,6 +95,9 @@ impl ChannelTransport {
                 .with_recorder(recorder.clone());
             if let Some(cfg) = liveness {
                 agent = agent.with_liveness(cfg);
+            }
+            if wire.enabled() {
+                agent = agent.with_wire(wire);
             }
             if dormant.contains(&id.index(spec.q)) {
                 agent = agent.dormant();

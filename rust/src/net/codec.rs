@@ -1,18 +1,28 @@
 //! Compact wire codec for the peer-to-peer gossip frames.
 //!
-//! Only the seven messages that travel between block agents are
+//! Only the ten messages that travel between block agents are
 //! encodable — `GetFactors`, `Factors`, `PutFactors`, `RevertFactors`,
-//! `HandOff`, `PutAck`, `Heartbeat`. The control plane (`Execute`,
-//! `GetCost`, `Abort`, `Join`, `Retire`, `Shutdown`, `Pulse`) never
-//! crosses a link: the driver talks to agents in-process, exactly as
-//! the paper's leader never touches factor matrices during learning.
+//! `HandOff`, `PutAck`, `Heartbeat`, and the wire-efficiency trio
+//! `GetDelta` / `DeltaFactors` / `DeltaPut`. The control plane
+//! (`Execute`, `GetCost`, `Abort`, `Join`, `Retire`, `Shutdown`,
+//! `Pulse`) never crosses a link: the driver talks to agents
+//! in-process, exactly as the paper's leader never touches factor
+//! matrices during learning.
 //!
 //! Framing (all integers little-endian):
 //!
 //! ```text
 //! [tag u8] [from.i u32] [from.j u32] [seq u64]         — every frame
 //! [rows u32] [cols u32] [rows·cols × f32]  × 2 (U, W)  — factor-bearing frames
+//! [have u64]                                           — GetDelta
+//! [base u64] [next u64] [enc u8] + 2 × row patch       — DeltaFactors / DeltaPut
+//! [rows u32] [cols u32] [nidx u32] [idx × u32] [rows′ × row bytes]  — row patch
 //! ```
+//!
+//! A row patch carries `nidx` changed rows (`rows′ = nidx`) against the
+//! per-edge baseline, or — when the frame is full (`base == 0`) — every
+//! row in order with `nidx == 0` (`rows′ = rows`). Row payload width
+//! follows the frame's `enc` byte ([`super::wire::Compression`]).
 //!
 //! `seq` is the sender-side wire sequence number. The link delivers
 //! each decoded frame wrapped in [`AgentMsg::Sequenced`], and the agent
@@ -34,6 +44,7 @@ use crate::data::DenseMatrix;
 use crate::grid::BlockId;
 use crate::{Error, Result};
 
+use super::wire::{Compression, DeltaFrame, RowPatch};
 use super::AgentMsg;
 
 const TAG_GET_FACTORS: u8 = 1;
@@ -43,6 +54,9 @@ const TAG_PUT_ACK: u8 = 4;
 const TAG_REVERT_FACTORS: u8 = 5;
 const TAG_HAND_OFF: u8 = 6;
 const TAG_HEARTBEAT: u8 = 7;
+const TAG_GET_DELTA: u8 = 8;
+const TAG_DELTA_FACTORS: u8 = 9;
+const TAG_DELTA_PUT: u8 = 10;
 
 /// Bytes of the fixed frame header: tag, sender block, wire sequence.
 const HEADER_LEN: usize = 17;
@@ -73,6 +87,33 @@ fn put_matrix(buf: &mut Vec<u8>, m: &DenseMatrix) {
 /// Encoded size of a factor-pair frame (header + two matrices).
 fn factors_len(u: &DenseMatrix, w: &DenseMatrix) -> usize {
     HEADER_LEN + 2 * 8 + 4 * (u.as_slice().len() + w.as_slice().len())
+}
+
+fn put_patch(buf: &mut Vec<u8>, p: &RowPatch) {
+    put_u32(buf, p.rows);
+    put_u32(buf, p.cols);
+    put_u32(buf, p.idx.len() as u32);
+    for &r in &p.idx {
+        put_u32(buf, r);
+    }
+    buf.extend_from_slice(&p.data);
+}
+
+fn patch_len(p: &RowPatch) -> usize {
+    12 + 4 * p.idx.len() + p.data.len()
+}
+
+/// Encoded size of a delta frame (header + base/next/enc + two patches).
+fn delta_len(f: &DeltaFrame) -> usize {
+    HEADER_LEN + 8 + 8 + 1 + patch_len(&f.u) + patch_len(&f.w)
+}
+
+fn put_delta(buf: &mut Vec<u8>, f: &DeltaFrame) {
+    buf.extend_from_slice(&f.base.to_le_bytes());
+    buf.extend_from_slice(&f.next.to_le_bytes());
+    buf.push(f.enc);
+    put_patch(buf, &f.u);
+    put_patch(buf, &f.w);
 }
 
 /// Encode a peer-to-peer message under wire sequence number `seq`.
@@ -126,6 +167,24 @@ pub fn encode(msg: &AgentMsg, seq: u64) -> Result<Vec<u8>> {
             put_header(&mut buf, TAG_HEARTBEAT, *from, seq);
             Ok(buf)
         }
+        AgentMsg::GetDelta { from, have } => {
+            let mut buf = Vec::with_capacity(HEADER_LEN + 8);
+            put_header(&mut buf, TAG_GET_DELTA, *from, seq);
+            buf.extend_from_slice(&have.to_le_bytes());
+            Ok(buf)
+        }
+        AgentMsg::DeltaFactors { from, frame } => {
+            let mut buf = Vec::with_capacity(delta_len(frame));
+            put_header(&mut buf, TAG_DELTA_FACTORS, *from, seq);
+            put_delta(&mut buf, frame);
+            Ok(buf)
+        }
+        AgentMsg::DeltaPut { from, frame } => {
+            let mut buf = Vec::with_capacity(delta_len(frame));
+            put_header(&mut buf, TAG_DELTA_PUT, *from, seq);
+            put_delta(&mut buf, frame);
+            Ok(buf)
+        }
         other => Err(Error::Gossip(format!(
             "codec: {} is control-plane, not a wire frame",
             other.kind()
@@ -175,6 +234,20 @@ impl<'a> Cur<'a> {
         Ok(BlockId::new(i, j))
     }
 
+    /// Bounds-checked read of exactly `n` payload bytes. The length is
+    /// validated against the remaining frame *before* any allocation,
+    /// so a shape-bomb header can never trigger an absurd reservation.
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .k
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| Error::Gossip("codec: truncated frame".into()))?;
+        let s = &self.b[self.k..end];
+        self.k = end;
+        Ok(s)
+    }
+
     fn matrix(&mut self) -> Result<DenseMatrix> {
         let rows = self.u32()?;
         let cols = self.u32()?;
@@ -183,18 +256,70 @@ impl<'a> Cur<'a> {
                 "codec: implausible matrix shape {rows}x{cols}"
             )));
         }
-        let n = rows as usize * cols as usize;
-        let end = self.k + 4 * n;
-        let s = self
-            .b
-            .get(self.k..end)
-            .ok_or_else(|| Error::Gossip("codec: truncated frame".into()))?;
-        self.k = end;
+        let n = (rows as usize)
+            .checked_mul(cols as usize)
+            .and_then(|n| n.checked_mul(4).map(|_| n))
+            .ok_or_else(|| {
+                Error::Gossip(format!("codec: matrix shape {rows}x{cols} overflows"))
+            })?;
+        let s = self.bytes(4 * n)?;
         let mut data = Vec::with_capacity(n);
         for c in s.chunks_exact(4) {
             data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
         DenseMatrix::from_vec(rows as usize, cols as usize, data)
+    }
+
+    /// One row patch of a delta frame. `full` (frame `base == 0`)
+    /// switches the payload row count from `nidx` to `rows`; indices
+    /// must be strictly ascending and in range. All lengths are
+    /// validated against the remaining frame before allocating.
+    fn row_patch(&mut self, enc: Compression, full: bool) -> Result<RowPatch> {
+        let rows = self.u32()?;
+        let cols = self.u32()?;
+        if rows > MAX_SIDE || cols > MAX_SIDE {
+            return Err(Error::Gossip(format!(
+                "codec: implausible patch shape {rows}x{cols}"
+            )));
+        }
+        let nidx = self.u32()? as usize;
+        if full && nidx != 0 {
+            return Err(Error::Gossip("codec: full frame carries row indices".into()));
+        }
+        if nidx > rows as usize {
+            return Err(Error::Gossip(format!(
+                "codec: patch lists {nidx} rows of {rows}"
+            )));
+        }
+        let idx_bytes = self.bytes(4 * nidx)?;
+        let mut idx = Vec::with_capacity(nidx);
+        for c in idx_bytes.chunks_exact(4) {
+            let r = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            if r >= rows || idx.last().is_some_and(|&prev| prev >= r) {
+                return Err(Error::Gossip(format!("codec: bad patch row index {r}")));
+            }
+            idx.push(r);
+        }
+        let carried = if full { rows as usize } else { nidx };
+        let need = carried
+            .checked_mul(enc.row_bytes(cols as usize))
+            .ok_or_else(|| {
+                Error::Gossip(format!("codec: patch payload {rows}x{cols} overflows"))
+            })?;
+        let data = self.bytes(need)?.to_vec();
+        Ok(RowPatch { rows, cols, idx, data })
+    }
+
+    fn delta_frame(&mut self) -> Result<DeltaFrame> {
+        let base = self.u64()?;
+        let next = self.u64()?;
+        let enc_tag = self.u8()?;
+        let enc = Compression::from_tag(enc_tag)
+            .ok_or_else(|| Error::Gossip(format!("codec: unknown encoding {enc_tag}")))?;
+        let full = base == 0;
+        let u = self.row_patch(enc, full)?;
+        let w = self.row_patch(enc, full)?;
+        Ok(DeltaFrame { base, next, enc: enc_tag, u, w })
     }
 }
 
@@ -229,6 +354,12 @@ pub fn decode(bytes: &[u8]) -> Result<(AgentMsg, u64)> {
         }
         TAG_PUT_ACK => AgentMsg::PutAck { from },
         TAG_HEARTBEAT => AgentMsg::Heartbeat { from },
+        TAG_GET_DELTA => {
+            let have = cur.u64()?;
+            AgentMsg::GetDelta { from, have }
+        }
+        TAG_DELTA_FACTORS => AgentMsg::DeltaFactors { from, frame: cur.delta_frame()? },
+        TAG_DELTA_PUT => AgentMsg::DeltaPut { from, frame: cur.delta_frame()? },
         other => return Err(Error::Gossip(format!("codec: unknown frame tag {other}"))),
     };
     Ok((msg, seq))
@@ -363,6 +494,126 @@ mod tests {
             }
             (other, _) => panic!("wrong variant {}", other.kind()),
         }
+    }
+
+    #[test]
+    fn get_delta_roundtrips_and_is_header_plus_epoch() {
+        let msg = AgentMsg::GetDelta { from: BlockId::new(3, 1), have: 0xABCD_0001 };
+        let bytes = encode(&msg, 77).unwrap();
+        assert_eq!(bytes.len(), 17 + 8, "header + advertised epoch");
+        match decode(&bytes).unwrap() {
+            (AgentMsg::GetDelta { from, have }, seq) => {
+                assert_eq!(from, BlockId::new(3, 1));
+                assert_eq!(have, 0xABCD_0001);
+                assert_eq!(seq, 77);
+            }
+            (other, _) => panic!("wrong variant {}", other.kind()),
+        }
+    }
+
+    fn full_patch(rows: u32, cols: u32, enc: Compression, salt: f32) -> RowPatch {
+        let m = mat(rows as usize, cols as usize, salt);
+        let mut data = Vec::new();
+        for r in 0..rows as usize {
+            super::super::wire::encode_row(enc, m.row(r), &mut data);
+        }
+        RowPatch { rows, cols, idx: Vec::new(), data }
+    }
+
+    #[test]
+    fn delta_frames_roundtrip_bit_exact_across_encodings() {
+        for enc in [Compression::F32, Compression::F16, Compression::Int8] {
+            // Full frame: base 0, empty idx, every row present.
+            let full = DeltaFrame {
+                base: 0,
+                next: 9,
+                enc: enc.tag(),
+                u: full_patch(4, 3, enc, 1.0),
+                w: full_patch(2, 3, enc, -1.0),
+            };
+            let bytes = encode(&AgentMsg::DeltaFactors { from: BlockId::new(0, 2), frame: full.clone() }, 5).unwrap();
+            // header + base/next/enc + two patch headers + payloads.
+            assert_eq!(
+                bytes.len(),
+                17 + 17 + (12 + full.u.data.len()) + (12 + full.w.data.len())
+            );
+            match decode(&bytes).unwrap() {
+                (AgentMsg::DeltaFactors { from, frame }, seq) => {
+                    assert_eq!(from, BlockId::new(0, 2));
+                    assert_eq!(seq, 5);
+                    assert_eq!(frame, full);
+                }
+                (other, _) => panic!("wrong variant {}", other.kind()),
+            }
+            // Delta frame: two changed rows, ascending idx.
+            let mut data = Vec::new();
+            let m = mat(6, 3, 0.5);
+            super::super::wire::encode_row(enc, m.row(1), &mut data);
+            super::super::wire::encode_row(enc, m.row(4), &mut data);
+            let delta = DeltaFrame {
+                base: 0x1_0000_0007,
+                next: 0x1_0000_0008,
+                enc: enc.tag(),
+                u: RowPatch { rows: 6, cols: 3, idx: vec![1, 4], data },
+                w: RowPatch { rows: 4, cols: 3, idx: Vec::new(), data: Vec::new() },
+            };
+            match decode(&encode(&AgentMsg::DeltaPut { from: BlockId::new(1, 1), frame: delta.clone() }, 6).unwrap()).unwrap() {
+                (AgentMsg::DeltaPut { frame, .. }, _) => assert_eq!(frame, delta),
+                (other, _) => panic!("wrong variant {}", other.kind()),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_delta_frames_are_rejected() {
+        let enc = Compression::F32;
+        let ok = DeltaFrame {
+            base: 3,
+            next: 4,
+            enc: enc.tag(),
+            u: RowPatch {
+                rows: 4,
+                cols: 2,
+                idx: vec![0, 2],
+                data: vec![0u8; 2 * enc.row_bytes(2)],
+            },
+            w: RowPatch { rows: 4, cols: 2, idx: Vec::new(), data: Vec::new() },
+        };
+        let from = BlockId::new(0, 0);
+        let good = encode(&AgentMsg::DeltaPut { from, frame: ok.clone() }, 1).unwrap();
+        assert!(decode(&good).is_ok());
+        // Unknown encoding byte.
+        let mut bad = good.clone();
+        bad[17 + 16] = 9;
+        assert!(decode(&bad).is_err(), "unknown enc");
+        // Out-of-range row index.
+        let mut f = ok.clone();
+        f.u.idx = vec![0, 7];
+        let bytes = encode(&AgentMsg::DeltaPut { from, frame: f }, 1).unwrap();
+        assert!(decode(&bytes).is_err(), "idx ≥ rows");
+        // Non-ascending indices.
+        let mut f = ok.clone();
+        f.u.idx = vec![2, 2];
+        let bytes = encode(&AgentMsg::DeltaPut { from, frame: f }, 1).unwrap();
+        assert!(decode(&bytes).is_err(), "duplicate idx");
+        // Full frame (base == 0) must not carry indices.
+        let mut f = ok.clone();
+        f.base = 0;
+        let bytes = encode(&AgentMsg::DeltaPut { from, frame: f }, 1).unwrap();
+        assert!(decode(&bytes).is_err(), "full frame with idx");
+        // A full frame claiming huge dimensions with no payload: the
+        // length check fires before any allocation.
+        let empty = DeltaFrame {
+            base: 0,
+            next: 1,
+            enc: enc.tag(),
+            u: RowPatch { rows: 0, cols: 0, idx: Vec::new(), data: Vec::new() },
+            w: RowPatch { rows: 0, cols: 0, idx: Vec::new(), data: Vec::new() },
+        };
+        let mut bytes = encode(&AgentMsg::DeltaFactors { from, frame: empty }, 1).unwrap();
+        bytes[17 + 17..17 + 21].copy_from_slice(&(MAX_SIDE - 1).to_le_bytes());
+        bytes[17 + 21..17 + 25].copy_from_slice(&(MAX_SIDE - 1).to_le_bytes());
+        assert!(decode(&bytes).is_err(), "phantom patch payload");
     }
 
     #[test]

@@ -30,6 +30,7 @@
 
 pub mod codec;
 pub mod fault;
+pub mod wire;
 
 mod channel;
 mod multiplex;
@@ -39,6 +40,7 @@ pub use channel::ChannelTransport;
 pub use fault::{FaultConfig, FaultEvent, FaultPlan, FaultRecord, LinkFault};
 pub use multiplex::MultiplexTransport;
 pub use sim::{SimConfig, SimTransport, WireSnapshot, WireStats};
+pub use wire::{Compression, DeltaFrame, RowPatch, WireConfig, WireState};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -87,6 +89,23 @@ pub enum AgentMsg {
     HandOff { from: BlockId, u: DenseMatrix, w: DenseMatrix },
     /// Member → anchor: adoption (or revert, or hand-off) acknowledged.
     PutAck { from: BlockId },
+    /// Anchor → member: ask for the current factors as a delta frame.
+    /// `have` advertises the epoch of the anchor's per-edge baseline
+    /// cache (0 = none — reply with a full frame). The wire-efficiency
+    /// replacement for [`AgentMsg::GetFactors`], used whenever
+    /// [`wire::WireConfig::enabled`] holds.
+    GetDelta { from: BlockId, have: u64 },
+    /// Peer → peer: delta-encoded factors reply to a `GetDelta`
+    /// (replaces [`AgentMsg::Factors`] under the wire-efficiency
+    /// layer). The receiver reconstructs against its per-edge baseline
+    /// cache; a baseline miss triggers a full-frame resync.
+    DeltaFactors { from: BlockId, frame: wire::DeltaFrame },
+    /// Anchor → member: delta-encoded factor adoption (replaces
+    /// [`AgentMsg::PutFactors`] under the wire-efficiency layer),
+    /// guarded by a checksum of the shared per-edge baseline. A guard
+    /// miss skips the adoption (the member still acks; the next gather
+    /// resyncs full-frame).
+    DeltaPut { from: BlockId, frame: wire::DeltaFrame },
     /// Driver → agent: report this block's cost term.
     GetCost { lambda: f32 },
     /// Driver → anchor: abort the structure identified by `token`. The
@@ -154,6 +173,9 @@ impl AgentMsg {
             AgentMsg::RevertFactors { .. } => "RevertFactors",
             AgentMsg::HandOff { .. } => "HandOff",
             AgentMsg::PutAck { .. } => "PutAck",
+            AgentMsg::GetDelta { .. } => "GetDelta",
+            AgentMsg::DeltaFactors { .. } => "DeltaFactors",
+            AgentMsg::DeltaPut { .. } => "DeltaPut",
             AgentMsg::GetCost { .. } => "GetCost",
             AgentMsg::Abort { .. } => "Abort",
             AgentMsg::Join => "Join",
@@ -177,6 +199,9 @@ impl AgentMsg {
             | AgentMsg::RevertFactors { from, .. }
             | AgentMsg::HandOff { from, .. }
             | AgentMsg::PutAck { from }
+            | AgentMsg::GetDelta { from, .. }
+            | AgentMsg::DeltaFactors { from, .. }
+            | AgentMsg::DeltaPut { from, .. }
             | AgentMsg::Heartbeat { from } => Some(*from),
             AgentMsg::Sequenced { inner, .. } => inner.source(),
             _ => None,
@@ -450,6 +475,10 @@ pub struct NetConfig {
     /// `None` (the default) spawns deadline-free agents — the exact
     /// pre-liveness behavior.
     pub liveness: Option<crate::gossip::LivenessConfig>,
+    /// Wire-efficiency levers (delta frames, payload compression)
+    /// handed to every spawned agent. The default leaves every lever
+    /// off — the exact pre-wire-layer protocol.
+    pub wire: WireConfig,
 }
 
 impl Default for NetConfig {
@@ -459,6 +488,7 @@ impl Default for NetConfig {
             workers: 0,
             sim: SimConfig::default(),
             liveness: None,
+            wire: WireConfig::default(),
         }
     }
 }
@@ -487,6 +517,12 @@ impl NetConfig {
     /// Enable decentralized liveness on every spawned agent.
     pub fn with_liveness(mut self, cfg: crate::gossip::LivenessConfig) -> Self {
         self.liveness = Some(cfg);
+        self
+    }
+
+    /// Arm the wire-efficiency levers on every spawned agent.
+    pub fn with_wire(mut self, cfg: WireConfig) -> Self {
+        self.wire = cfg;
         self
     }
 }
@@ -558,6 +594,7 @@ pub fn spawn(
             checkpoints,
             dormant,
             net.liveness,
+            net.wire,
             recorder,
         )),
         TransportKind::Multiplex => Box::new(MultiplexTransport::spawn(
@@ -568,6 +605,7 @@ pub fn spawn(
             checkpoints,
             dormant,
             net.liveness,
+            net.wire,
             recorder,
         )),
         TransportKind::Sim => Box::new(SimTransport::spawn_over_channel(
@@ -578,6 +616,7 @@ pub fn spawn(
             dormant,
             net.sim,
             net.liveness,
+            net.wire,
             recorder,
         )),
         TransportKind::SimMultiplex => Box::new(SimTransport::spawn_over_multiplex(
@@ -589,6 +628,7 @@ pub fn spawn(
             dormant,
             net.sim,
             net.liveness,
+            net.wire,
             recorder,
         )),
     }

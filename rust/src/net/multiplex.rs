@@ -88,10 +88,11 @@ impl MultiplexTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         liveness: Option<crate::gossip::LivenessConfig>,
+        wire: super::WireConfig,
         recorder: Arc<Recorder>,
     ) -> Self {
         Self::spawn_tapped(
-            spec, engine, state, workers, checkpoints, dormant, liveness, recorder, None,
+            spec, engine, state, workers, checkpoints, dormant, liveness, wire, recorder, None,
         )
     }
 
@@ -105,6 +106,7 @@ impl MultiplexTransport {
         checkpoints: Option<Arc<CheckpointStore>>,
         dormant: &super::DormantSet,
         liveness: Option<crate::gossip::LivenessConfig>,
+        wire: super::WireConfig,
         recorder: Arc<Recorder>,
         tap: Option<mpsc::Sender<LinkFrame>>,
     ) -> Self {
@@ -135,6 +137,9 @@ impl MultiplexTransport {
                 .with_recorder(recorder.clone());
             if let Some(cfg) = liveness {
                 agent = agent.with_liveness(cfg);
+            }
+            if wire.enabled() {
+                agent = agent.with_wire(wire);
             }
             if dormant.contains(&k) {
                 agent = agent.dormant();

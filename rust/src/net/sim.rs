@@ -141,7 +141,9 @@ pub struct WireStats {
 pub struct WireSnapshot {
     /// Frames offered to the link.
     pub messages: u64,
-    /// Bytes offered (each frame counted once).
+    /// Bytes offered: each frame counted once, at its first *actual*
+    /// transmission. Attempts held by a severed link transmit nothing
+    /// and count nowhere, so `payload_bytes ≤ wire_bytes` always.
     pub payload_bytes: u64,
     /// Bytes transmitted, including retransmissions.
     pub wire_bytes: u64,
@@ -179,6 +181,11 @@ struct Pending {
     seq: u64,
     frame: LinkFrame,
     attempt: u32,
+    /// Whether this frame still owes its one-time `payload_bytes`
+    /// charge, taken at its first actual transmission (a severed link
+    /// transmits nothing, so a partition-held frame keeps owing).
+    /// Duplicate copies never charge — they are not new payload.
+    charge: bool,
 }
 
 impl PartialEq for Pending {
@@ -220,6 +227,7 @@ impl SimTransport {
         dormant: &super::DormantSet,
         cfg: SimConfig,
         liveness: Option<crate::gossip::LivenessConfig>,
+        wire: super::WireConfig,
         recorder: Arc<crate::trace::Recorder>,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
@@ -230,6 +238,7 @@ impl SimTransport {
             checkpoints,
             dormant,
             liveness,
+            wire,
             recorder,
             Some(tx),
         ));
@@ -247,6 +256,7 @@ impl SimTransport {
         dormant: &super::DormantSet,
         cfg: SimConfig,
         liveness: Option<crate::gossip::LivenessConfig>,
+        wire: super::WireConfig,
         recorder: Arc<crate::trace::Recorder>,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
@@ -258,6 +268,7 @@ impl SimTransport {
             checkpoints,
             dormant,
             liveness,
+            wire,
             recorder,
             Some(tx),
         ));
@@ -390,9 +401,11 @@ impl LinkState {
 
 fn admit(frame: LinkFrame, st: &mut LinkState, cfg: &SimConfig, q: usize, stats: &WireStats) {
     stats.messages.fetch_add(1, Ordering::Relaxed);
-    stats
-        .payload_bytes
-        .fetch_add(frame.bytes.len() as u64, Ordering::Relaxed);
+    // `payload_bytes` is NOT charged here: a frame admitted into a
+    // severed link transmits nothing until the partition heals, and the
+    // documented semantics are "severed attempts don't count". The
+    // charge is taken at the frame's first actual transmission instead
+    // (see `link_loop`), flagged by `Pending::charge`.
     let slow_factor = [frame.from.index(q), frame.to.index(q)]
         .into_iter()
         .filter_map(|k| st.slow.get(&k).copied())
@@ -431,10 +444,11 @@ fn admit(frame: LinkFrame, st: &mut LinkState, cfg: &SimConfig, q: usize, stats:
             seq: st.seq,
             frame: copy,
             attempt: 0,
+            charge: false,
         });
         st.seq += 1;
     }
-    st.heap.push(Pending { due: st.vnow + delay, seq: st.seq, frame, attempt: 0 });
+    st.heap.push(Pending { due: st.vnow + delay, seq: st.seq, frame, attempt: 0, charge: true });
     st.seq += 1;
 }
 
@@ -485,10 +499,20 @@ fn link_loop(
                         seq: p.seq,
                         frame: p.frame,
                         attempt: p.attempt,
+                        charge: p.charge,
                     });
                     continue;
                 }
                 st.partitions.remove(&ukey);
+            }
+            // Past the partition gate: this attempt really transmits.
+            // The frame's one-time payload charge lands with its first
+            // transmission, keeping `payload_bytes ≤ wire_bytes` and
+            // excluding severed attempts from both counters.
+            if p.charge {
+                stats
+                    .payload_bytes
+                    .fetch_add(p.frame.bytes.len() as u64, Ordering::Relaxed);
             }
             stats
                 .wire_bytes
@@ -504,6 +528,7 @@ fn link_loop(
                     seq: p.seq,
                     frame: p.frame,
                     attempt: p.attempt + 1,
+                    charge: false,
                 });
                 continue;
             }
@@ -555,6 +580,7 @@ mod tests {
             seq,
             frame: LinkFrame { from: BlockId::new(0, 0), to: BlockId::new(0, 1), bytes: vec![] },
             attempt: 0,
+            charge: true,
         };
         let mut heap = BinaryHeap::new();
         heap.push(mk(5, 2));
@@ -676,5 +702,12 @@ mod tests {
         let snap = stats.snapshot();
         assert_eq!(snap.messages, 1, "a duplicate is not a new offered message");
         assert_eq!(snap.duplicated, 1);
+        assert_eq!(
+            snap.payload_bytes, 0,
+            "payload is charged at first transmission, not admission"
+        );
+        // Exactly one of the two scheduled copies owes the charge.
+        let charges = st.heap.drain().filter(|p| p.charge).count();
+        assert_eq!(charges, 1);
     }
 }

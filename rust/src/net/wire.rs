@@ -1,0 +1,1077 @@
+//! Wire-efficiency layer: delta frames, lossy payload compression with
+//! error feedback, and the per-agent bookkeeping that drives both.
+//!
+//! The gossip protocol's factor exchanges dominate bytes-on-the-wire,
+//! and they tolerate two orthogonal reductions (PERF.md §Wire):
+//!
+//! * **Delta frames** — each agent caches, per peer edge, the exact
+//!   reconstruction of the last factor frame both ends agreed on. A
+//!   later exchange then carries only the rows that changed against
+//!   that baseline ([`DeltaFrame`]); whenever the baseline is lost
+//!   (crash-restore, join, retire hand-off, revert, expiry, a dropped
+//!   frame) the sender falls back to a self-describing full frame
+//!   (`base == 0`) that resynchronizes both caches.
+//! * **Lossy compression** — rows encode as f16 or row-scaled int8
+//!   ([`Compression`]); the quantization residual of every sent row is
+//!   folded into a per-edge error-feedback accumulator and added to
+//!   the *next* frame, so suppression and rounding stay unbiased over
+//!   time. With `threshold > 0` near-unchanged rows are suppressed
+//!   entirely (their full residual accrues in the accumulator).
+//!
+//! Correctness leans on one invariant: both ends of an edge cache the
+//! *post-encoding reconstruction*, never the sender's true factors, so
+//! a delta applied to the receiver's cache is bit-identical to the
+//! sender's view no matter how many rows were quantized or suppressed
+//! along the way. Gather-direction deltas are guarded by a
+//! receiver-advertised epoch; scatter-direction deltas by an FNV-1a
+//! checksum of the baseline. Every guard miss degrades to a full
+//! frame — never to a wedge, never to silent corruption.
+//!
+//! Because *either* endpoint of a grid edge can anchor a structure
+//! that uses the other as member, one edge carries exchanges about
+//! **both** blocks' factors. The caches are therefore split per
+//! direction of content: [`WireState`] keeps a `mine` half (the agreed
+//! reconstruction of this agent's own factors, used when it serves
+//! gathers and receives puts as a member) and a `theirs` half (the
+//! agreed reconstruction of the peer's factors, used when this agent
+//! anchors) for every peer. Guards never cross halves, so the two
+//! roles cannot corrupt each other.
+//!
+//! With the lossless configuration (`delta` on, `f32`, threshold 0)
+//! the reconstruction is bit-identical to full-frame exchange
+//! (`tests/property_tests.rs`).
+
+use std::collections::HashMap;
+
+use crate::data::DenseMatrix;
+use crate::grid::BlockId;
+use crate::{Error, Result};
+
+/// Payload encoding for factor rows on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Compression {
+    /// Bit-exact f32 little-endian rows (the lossless default).
+    #[default]
+    F32,
+    /// IEEE 754 binary16 rows (half the bytes, ~3 decimal digits).
+    F16,
+    /// Row-scaled int8: a per-row f32 scale plus one signed byte per
+    /// entry (quarter the bytes).
+    Int8,
+}
+
+impl Compression {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Compression::F32 => "f32",
+            Compression::F16 => "f16",
+            Compression::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Compression::F32),
+            "f16" => Ok(Compression::F16),
+            "int8" => Ok(Compression::Int8),
+            other => Err(Error::Config(format!("unknown wire.compress {other:?}"))),
+        }
+    }
+
+    /// Wire tag of this encoding (the `enc` byte of a [`DeltaFrame`]).
+    pub fn tag(self) -> u8 {
+        match self {
+            Compression::F32 => 0,
+            Compression::F16 => 1,
+            Compression::Int8 => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        match tag {
+            0 => Some(Compression::F32),
+            1 => Some(Compression::F16),
+            2 => Some(Compression::Int8),
+            _ => None,
+        }
+    }
+
+    /// Encoded bytes of one `cols`-wide row.
+    pub fn row_bytes(self, cols: usize) -> usize {
+        match self {
+            Compression::F32 => 4 * cols,
+            Compression::F16 => 2 * cols,
+            Compression::Int8 => 4 + cols,
+        }
+    }
+}
+
+/// The `[wire]` table of an experiment config: which wire-efficiency
+/// levers are armed. All levers default off, so the transports stay
+/// bit-identical to the pre-wire-layer protocol unless asked.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct WireConfig {
+    /// Send row deltas against the per-edge baseline caches instead of
+    /// full factor matrices whenever both ends still hold the baseline.
+    pub delta: bool,
+    /// Row payload encoding.
+    pub compress: Compression,
+    /// Suppress a row entirely when no entry moved more than
+    /// `threshold` × the row's baseline scale (max-abs); the suppressed
+    /// change accrues in the error-feedback accumulator. `0.0` = only
+    /// bitwise-unchanged rows are skipped. Only meaningful with
+    /// `delta` (full frames always carry every row).
+    pub threshold: f64,
+}
+
+impl WireConfig {
+    /// Any lever armed? When false the agents speak the plain
+    /// full-frame protocol and this module is never consulted.
+    pub fn enabled(&self) -> bool {
+        self.delta || self.compress != Compression::F32 || self.threshold > 0.0
+    }
+
+    /// Lossless levers only? (Delta with f32 rows and no suppression
+    /// threshold reconstructs bit-identically.)
+    pub fn lossless(&self) -> bool {
+        self.compress == Compression::F32 && self.threshold == 0.0
+    }
+}
+
+/// One compressed factor-matrix patch: the changed rows of a
+/// `rows × cols` matrix. A *full* patch (every row, in order) leaves
+/// `idx` empty and is self-describing; a *delta* patch lists the
+/// changed row indices in ascending order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowPatch {
+    pub rows: u32,
+    pub cols: u32,
+    /// Ascending changed-row indices; empty for a full patch.
+    pub idx: Vec<u32>,
+    /// Encoded row payloads: `idx.len()` rows for a delta, `rows` rows
+    /// for a full patch, each `Compression::row_bytes(cols)` wide.
+    pub data: Vec<u8>,
+}
+
+/// One factor exchange under the wire-efficiency layer: both halves of
+/// the block's factors as row patches against a shared baseline.
+///
+/// `base == 0` marks a full frame (both patches full, no baseline
+/// needed). Otherwise `base` is the baseline guard: the *epoch* of the
+/// shared edge cache for gather-direction frames, the FNV-1a *checksum*
+/// of the cache for scatter-direction frames. `next` is the epoch both
+/// ends stamp on their updated caches when the frame lands.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaFrame {
+    pub base: u64,
+    pub next: u64,
+    pub enc: u8,
+    pub u: RowPatch,
+    pub w: RowPatch,
+}
+
+// ---------------------------------------------------------------------
+// Row codecs.
+
+/// f32 → IEEE 754 binary16 bit pattern, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN-ness with a quiet payload bit).
+        return sign | 0x7c00 | u16::from(mant != 0) << 9;
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // Normal half.
+        let m = mant >> 13;
+        let rest = mant & 0x1fff;
+        let mut h = u32::from(sign) | (((unbiased + 15) as u32) << 10) | m;
+        if rest > 0x1000 || (rest == 0x1000 && m & 1 == 1) {
+            h += 1; // carry into the exponent is the correct rounding
+        }
+        return h as u16;
+    }
+    if unbiased >= -24 {
+        // Subnormal half.
+        let m = mant | 0x0080_0000; // implicit leading bit
+        let shift = (-1 - unbiased) as u32; // 13 at -14 scale: 2^-15 ⇒ bit 10
+        let kept = m >> shift;
+        let rest = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = u32::from(sign) | kept;
+        if rest > halfway || (rest == halfway && kept & 1 == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    sign // underflows to ±0
+}
+
+/// IEEE 754 binary16 bit pattern → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = (u32::from(h) & 0x8000) << 16;
+    let exp = u32::from(h >> 10) & 0x1f;
+    let mant = u32::from(h) & 0x3ff;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal half: renormalize into an f32 normal.
+            let mut e = 113u32; // f32 exponent of 2^-14
+            let mut m = mant << 13;
+            while m & 0x0080_0000 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | (m & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode one row, appending `enc.row_bytes(row.len())` bytes.
+pub fn encode_row(enc: Compression, row: &[f32], out: &mut Vec<u8>) {
+    match enc {
+        Compression::F32 => {
+            for &v in row {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Compression::F16 => {
+            for &v in row {
+                out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+            }
+        }
+        Compression::Int8 => {
+            let max_abs = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+            out.extend_from_slice(&scale.to_le_bytes());
+            for &v in row {
+                let q = if scale > 0.0 {
+                    (v / scale).round().clamp(-127.0, 127.0) as i8
+                } else {
+                    0
+                };
+                out.push(q as u8);
+            }
+        }
+    }
+}
+
+/// Decode one row of `cols` entries from `bytes`
+/// (`enc.row_bytes(cols)` of them) into `out`.
+pub fn decode_row(enc: Compression, bytes: &[u8], out: &mut [f32]) {
+    let cols = out.len();
+    debug_assert_eq!(bytes.len(), enc.row_bytes(cols));
+    match enc {
+        Compression::F32 => {
+            for (k, v) in out.iter_mut().enumerate() {
+                *v = f32::from_le_bytes(bytes[4 * k..4 * k + 4].try_into().unwrap());
+            }
+        }
+        Compression::F16 => {
+            for (k, v) in out.iter_mut().enumerate() {
+                let h = u16::from_le_bytes(bytes[2 * k..2 * k + 2].try_into().unwrap());
+                *v = f16_bits_to_f32(h);
+            }
+        }
+        Compression::Int8 => {
+            let scale = f32::from_le_bytes(bytes[..4].try_into().unwrap());
+            for (k, v) in out.iter_mut().enumerate() {
+                *v = bytes[4 + k] as i8 as f32 * scale;
+            }
+        }
+    }
+}
+
+/// FNV-1a 64 over both matrices' dimensions and raw f32 bit patterns —
+/// the scatter-direction baseline guard. Never returns 0 (the full-
+/// frame sentinel); a genuine 0 digest is remapped to 1.
+pub fn checksum(u: &DenseMatrix, w: &DenseMatrix) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    for m in [u, w] {
+        eat(&(m.rows() as u32).to_le_bytes());
+        eat(&(m.cols() as u32).to_le_bytes());
+        for &v in m.as_slice() {
+            eat(&v.to_bits().to_le_bytes());
+        }
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-agent wire state.
+
+/// One direction-of-content cache on one edge: the last reconstruction
+/// of a block's factors both ends agreed on, plus the sending side's
+/// error-feedback accumulator.
+#[derive(Debug, Clone)]
+struct Half {
+    epoch: u64,
+    u: DenseMatrix,
+    w: DenseMatrix,
+    /// Residual (true target − sent reconstruction) the sending side
+    /// still owes; allocated lazily on the first lossy send.
+    ef: Option<(DenseMatrix, DenseMatrix)>,
+}
+
+/// What a frame build reports alongside the frame itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameNote {
+    /// Deltas were configured but this frame fell back to full (no
+    /// baseline, or the advertised guard missed the cache).
+    pub fallback: bool,
+}
+
+/// Per-agent wire-efficiency state: per-peer baseline caches plus a
+/// monotonic epoch counter. Epochs are stamped
+/// `(agent tag << 40) | counter` where the tag packs the agent's grid
+/// coordinates, so values stamped by different agents can never collide
+/// numerically — and a counter reset (crash-restore) always rides with
+/// a full cache wipe, so a stale epoch can never alias a fresh one.
+#[derive(Debug)]
+pub struct WireState {
+    cfg: WireConfig,
+    tag: u64,
+    counter: u64,
+    /// Agreed reconstruction of THIS agent's own factors, per peer —
+    /// the member-role half (serves gathers, receives puts).
+    mine: HashMap<BlockId, Half>,
+    /// Agreed reconstruction of each PEER's factors — the anchor-role
+    /// half (receives gather replies, builds puts).
+    theirs: HashMap<BlockId, Half>,
+}
+
+impl WireState {
+    pub fn new(cfg: WireConfig, id: BlockId) -> Self {
+        let tag = (((id.i as u64) & 0xfff) << 12) | ((id.j as u64) & 0xfff);
+        WireState { cfg, tag, counter: 0, mine: HashMap::new(), theirs: HashMap::new() }
+    }
+
+    pub fn cfg(&self) -> &WireConfig {
+        &self.cfg
+    }
+
+    fn next_epoch(&mut self) -> u64 {
+        self.counter += 1;
+        (self.tag << 40) | (self.counter & ((1 << 40) - 1))
+    }
+
+    /// The epoch to advertise in a `GetDelta` request for `peer`'s
+    /// factors: the `theirs` cache's epoch, or 0 when there is none (or
+    /// deltas are off) — the member then replies with a full frame.
+    pub fn advertise(&self, peer: BlockId) -> u64 {
+        if !self.cfg.delta {
+            return 0;
+        }
+        self.theirs.get(&peer).map_or(0, |h| h.epoch)
+    }
+
+    /// Build the gather-direction frame carrying this agent's OWN
+    /// factors toward `peer`, who advertised baseline epoch `have`.
+    /// Sends a delta iff deltas are on and `have` matches the `mine`
+    /// cache; otherwise a full frame that resynchronizes both caches.
+    pub fn make_gather(
+        &mut self,
+        peer: BlockId,
+        have: u64,
+        u: &DenseMatrix,
+        w: &DenseMatrix,
+    ) -> (DeltaFrame, FrameNote) {
+        let delta_ok = self.cfg.delta
+            && have != 0
+            && self.mine.get(&peer).is_some_and(|h| h.epoch == have);
+        let base = if delta_ok { have } else { 0 };
+        let note = FrameNote { fallback: self.cfg.delta && !delta_ok };
+        let next = self.next_epoch();
+        let frame = build(&self.cfg, self.mine.entry(peer).or_insert_with(empty_half), base, next, u, w);
+        (frame, note)
+    }
+
+    /// Build the scatter-direction frame carrying `peer`'s NEW factors
+    /// back to it. Deltas against the `theirs` cache (the agreed
+    /// reconstruction of `peer`'s factors from the gather), guarded by
+    /// its checksum; full frame when no usable cache exists.
+    pub fn make_put(
+        &mut self,
+        peer: BlockId,
+        u: &DenseMatrix,
+        w: &DenseMatrix,
+    ) -> (DeltaFrame, FrameNote) {
+        let base = if self.cfg.delta {
+            self.theirs
+                .get(&peer)
+                .filter(|h| {
+                    (h.u.rows(), h.u.cols()) == (u.rows(), u.cols())
+                        && (h.w.rows(), h.w.cols()) == (w.rows(), w.cols())
+                })
+                .map_or(0, |h| checksum(&h.u, &h.w))
+        } else {
+            0
+        };
+        let note = FrameNote { fallback: self.cfg.delta && base == 0 };
+        let next = self.next_epoch();
+        let frame =
+            build(&self.cfg, self.theirs.entry(peer).or_insert_with(empty_half), base, next, u, w);
+        (frame, note)
+    }
+
+    /// Reconstruct an incoming gather reply: `peer`'s factors, against
+    /// the `theirs` cache. Returns `None` when the epoch guard misses
+    /// or the patch is malformed — the cache is then cleared so the
+    /// next exchange goes full-frame. On success the cache advances to
+    /// `frame.next`.
+    pub fn recv_gather(
+        &mut self,
+        peer: BlockId,
+        frame: &DeltaFrame,
+    ) -> Option<(DenseMatrix, DenseMatrix)> {
+        Self::recv_into(&mut self.theirs, peer, frame, false)
+    }
+
+    /// Reconstruct an incoming put: this agent's OWN new factors,
+    /// against the `mine` cache (guarded by its checksum). `None` on a
+    /// guard miss or malformed patch (cache cleared — the adoption is
+    /// skipped and the next gather resyncs). On success the cache
+    /// advances and this agent's gather-direction error feedback toward
+    /// `peer` is voided — the factors it referred to no longer exist.
+    pub fn recv_put(
+        &mut self,
+        peer: BlockId,
+        frame: &DeltaFrame,
+    ) -> Option<(DenseMatrix, DenseMatrix)> {
+        Self::recv_into(&mut self.mine, peer, frame, true)
+    }
+
+    fn recv_into(
+        side: &mut HashMap<BlockId, Half>,
+        peer: BlockId,
+        frame: &DeltaFrame,
+        put: bool,
+    ) -> Option<(DenseMatrix, DenseMatrix)> {
+        let Some(enc) = Compression::from_tag(frame.enc) else {
+            side.remove(&peer);
+            return None;
+        };
+        let full = frame.base == 0;
+        if !full {
+            let guard_ok = side.get(&peer).is_some_and(|h| {
+                if put {
+                    checksum(&h.u, &h.w) == frame.base
+                } else {
+                    h.epoch == frame.base
+                }
+            });
+            if !guard_ok {
+                side.remove(&peer);
+                return None;
+            }
+        }
+        let half = side.get(&peer);
+        let u = apply_patch(enc, full, &frame.u, half.map(|h| &h.u));
+        let w = apply_patch(enc, full, &frame.w, half.map(|h| &h.w));
+        let (u, w) = match (u, w) {
+            (Some(u), Some(w)) => (u, w),
+            _ => {
+                // Malformed patch: drop the cache so the protocol
+                // self-heals with a full frame.
+                side.remove(&peer);
+                return None;
+            }
+        };
+        let half = side.entry(peer).or_insert_with(empty_half);
+        half.epoch = frame.next;
+        half.u = u.clone();
+        half.w = w.clone();
+        if put {
+            half.ef = None;
+        }
+        Some((u, w))
+    }
+
+    /// Drop every baseline and error-feedback accumulator: the agent's
+    /// factors were replaced out-of-band (crash-restore, join,
+    /// hand-off absorb, revert) or its in-flight exchange died (expiry,
+    /// retirement). Returns the number of cache halves cleared, for the
+    /// quantization-reset trace event.
+    pub fn reset(&mut self) -> u32 {
+        let n = (self.mine.len() + self.theirs.len()) as u32;
+        self.mine.clear();
+        self.theirs.clear();
+        n
+    }
+
+    /// Cache halves currently holding a baseline (test/telemetry aid).
+    pub fn live_edges(&self) -> usize {
+        self.mine.len() + self.theirs.len()
+    }
+}
+
+fn empty_half() -> Half {
+    Half { epoch: 0, u: DenseMatrix::zeros(0, 0), w: DenseMatrix::zeros(0, 0), ef: None }
+}
+
+/// Encode `u`/`w` against `half` (delta iff `base != 0`), folding
+/// quantization/suppression residuals into the half's error-feedback
+/// accumulator, and advance the half to the post-encoding
+/// reconstruction at epoch `next`.
+fn build(
+    cfg: &WireConfig,
+    half: &mut Half,
+    base: u64,
+    next: u64,
+    u: &DenseMatrix,
+    w: &DenseMatrix,
+) -> DeltaFrame {
+    let enc = cfg.compress;
+    let lossy = enc != Compression::F32 || cfg.threshold > 0.0;
+    if lossy && half.ef.is_none() {
+        half.ef = Some((
+            DenseMatrix::zeros(u.rows(), u.cols()),
+            DenseMatrix::zeros(w.rows(), w.cols()),
+        ));
+    }
+    if let Some((ef_u, ef_w)) = &mut half.ef {
+        if (ef_u.rows(), ef_u.cols()) != (u.rows(), u.cols()) {
+            *ef_u = DenseMatrix::zeros(u.rows(), u.cols());
+        }
+        if (ef_w.rows(), ef_w.cols()) != (w.rows(), w.cols()) {
+            *ef_w = DenseMatrix::zeros(w.rows(), w.cols());
+        }
+    }
+    let full = base == 0;
+    let (ef_u, ef_w) = match &mut half.ef {
+        Some((a, b)) => (Some(a), Some(b)),
+        None => (None, None),
+    };
+    let pu = build_patch(enc, cfg.threshold, full, u, &mut half.u, ef_u);
+    let pw = build_patch(enc, cfg.threshold, full, w, &mut half.w, ef_w);
+    half.epoch = next;
+    DeltaFrame { base, next, enc: enc.tag(), u: pu, w: pw }
+}
+
+fn build_patch(
+    enc: Compression,
+    threshold: f64,
+    full: bool,
+    cur: &DenseMatrix,
+    cache: &mut DenseMatrix,
+    mut ef: Option<&mut DenseMatrix>,
+) -> RowPatch {
+    let (rows, cols) = (cur.rows(), cur.cols());
+    let mut patch =
+        RowPatch { rows: rows as u32, cols: cols as u32, idx: Vec::new(), data: Vec::new() };
+    let mut recon = if full || (cache.rows(), cache.cols()) != (rows, cols) {
+        DenseMatrix::zeros(rows, cols)
+    } else {
+        cache.clone()
+    };
+    let mut target = vec![0.0f32; cols];
+    let mut val = vec![0.0f32; cols];
+    let mut row_bytes = Vec::with_capacity(enc.row_bytes(cols));
+    for r in 0..rows {
+        target.copy_from_slice(cur.row(r));
+        if let Some(ef) = ef.as_deref() {
+            for (t, &e) in target.iter_mut().zip(ef.row(r)) {
+                *t += e;
+            }
+        }
+        row_bytes.clear();
+        encode_row(enc, &target, &mut row_bytes);
+        decode_row(enc, &row_bytes, &mut val);
+        let send = if full {
+            true
+        } else {
+            let baseline = recon.row(r);
+            let identical = val.iter().zip(baseline).all(|(a, b)| a.to_bits() == b.to_bits());
+            let within = threshold > 0.0 && {
+                let scale = baseline.iter().fold(0.0f32, |a, &v| a.max(v.abs())) as f64;
+                let moved = target
+                    .iter()
+                    .zip(baseline)
+                    .fold(0.0f64, |a, (&t, &b)| a.max((f64::from(t) - f64::from(b)).abs()));
+                moved <= threshold * scale
+            };
+            !(identical || within)
+        };
+        if send {
+            if !full {
+                patch.idx.push(r as u32);
+            }
+            patch.data.extend_from_slice(&row_bytes);
+            recon.row_mut(r).copy_from_slice(&val);
+            if let Some(ef) = ef.as_deref_mut() {
+                for ((e, &t), &v) in ef.row_mut(r).iter_mut().zip(&target).zip(&val) {
+                    *e = t - v;
+                }
+            }
+        } else if let Some(ef) = ef.as_deref_mut() {
+            // Suppressed: the whole move stays owed.
+            for ((e, &t), &b) in ef.row_mut(r).iter_mut().zip(&target).zip(recon.row(r)) {
+                *e = t - b;
+            }
+        }
+    }
+    *cache = recon;
+    patch
+}
+
+/// Decode one patch against an optional cache half. `None` on any
+/// structural mismatch (the caller clears the cache and skips the
+/// frame).
+fn apply_patch(
+    enc: Compression,
+    full: bool,
+    patch: &RowPatch,
+    cache: Option<&DenseMatrix>,
+) -> Option<DenseMatrix> {
+    let (rows, cols) = (patch.rows as usize, patch.cols as usize);
+    let rb = enc.row_bytes(cols);
+    let carried = if full { rows } else { patch.idx.len() };
+    if (full && !patch.idx.is_empty()) || patch.data.len() != carried * rb {
+        return None;
+    }
+    let mut out = if full {
+        DenseMatrix::zeros(rows, cols)
+    } else {
+        let cache = cache?;
+        if (cache.rows(), cache.cols()) != (rows, cols) {
+            return None;
+        }
+        cache.clone()
+    };
+    if full {
+        for r in 0..rows {
+            decode_row(enc, &patch.data[r * rb..(r + 1) * rb], out.row_mut(r));
+        }
+    } else {
+        for (k, &r) in patch.idx.iter().enumerate() {
+            let r = r as usize;
+            if r >= rows {
+                return None;
+            }
+            decode_row(enc, &patch.data[k * rb..(k + 1) * rb], out.row_mut(r));
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mat(rng: &mut Rng, rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix::from_fn(rows, cols, |_, _| rng.uniform_sym(2.0))
+    }
+
+    fn assert_bits(a: &DenseMatrix, b: &DenseMatrix) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn f16_conversion_matches_reference_points() {
+        let cases: &[(f32, u16)] = &[
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),        // max finite half
+            (65536.0, 0x7c00),        // overflow → inf
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+            (6.103_515_6e-5, 0x0400), // min normal half
+            (5.960_464_5e-8, 0x0001), // min subnormal half
+            (1e-10, 0x0000),          // underflow → zero
+        ];
+        for &(x, h) in cases {
+            assert_eq!(f32_to_f16_bits(x), h, "f32_to_f16({x})");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Round-to-nearest-even at the halfway point: 1 + 2^-11 is
+        // exactly between 1.0 and the next half; even mantissa wins.
+        assert_eq!(f32_to_f16_bits(1.000_488_3), 0x3c00);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_half_precision_values() {
+        // Every finite half value decodes to f32 and re-encodes to the
+        // same bit pattern.
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/NaN handled separately
+            }
+            let x = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(x), h, "half bits {h:#06x} ({x})");
+        }
+    }
+
+    #[test]
+    fn row_codecs_roundtrip_and_bound_error() {
+        let mut rng = Rng::seed_from_u64(4);
+        for cols in [1usize, 3, 8, 17] {
+            let row: Vec<f32> = (0..cols).map(|_| rng.uniform_sym(3.0)).collect();
+            for enc in [Compression::F32, Compression::F16, Compression::Int8] {
+                let mut bytes = Vec::new();
+                encode_row(enc, &row, &mut bytes);
+                assert_eq!(bytes.len(), enc.row_bytes(cols));
+                let mut back = vec![0.0f32; cols];
+                decode_row(enc, &bytes, &mut back);
+                let max_abs = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let tol = match enc {
+                    Compression::F32 => 0.0,
+                    Compression::F16 => max_abs * 1e-3,
+                    Compression::Int8 => max_abs / 127.0,
+                };
+                for (a, b) in row.iter().zip(&back) {
+                    assert!((a - b).abs() <= tol, "{enc:?}: {a} vs {b} (tol {tol})");
+                }
+                // Decoded values re-encode to the same bytes: the
+                // reconstruction is a fixed point, which is what keeps
+                // both ends' caches in lockstep.
+                let mut bytes2 = Vec::new();
+                encode_row(enc, &back, &mut bytes2);
+                let mut back2 = vec![0.0f32; cols];
+                decode_row(enc, &bytes2, &mut back2);
+                for (a, b) in back.iter().zip(&back2) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{enc:?} fixed point");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_row_and_scale_survive() {
+        let row = [0.0f32; 5];
+        let mut bytes = Vec::new();
+        encode_row(Compression::Int8, &row, &mut bytes);
+        let mut back = [1.0f32; 5];
+        decode_row(Compression::Int8, &bytes, &mut back);
+        assert!(back.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn checksum_never_zero_and_detects_single_bit_changes() {
+        let mut rng = Rng::seed_from_u64(9);
+        let u = mat(&mut rng, 4, 3);
+        let w = mat(&mut rng, 5, 3);
+        let c = checksum(&u, &w);
+        assert_ne!(c, 0);
+        assert_eq!(c, checksum(&u, &w), "pure");
+        let mut u2 = u.clone();
+        u2.set(2, 1, u2.get(2, 1) + 1e-7);
+        assert_ne!(checksum(&u2, &w), c);
+        // Dimensions participate: a 0×0/0×0 pair differs from 0×3.
+        assert_ne!(
+            checksum(&DenseMatrix::zeros(0, 0), &DenseMatrix::zeros(0, 0)),
+            checksum(&DenseMatrix::zeros(0, 3), &DenseMatrix::zeros(0, 0))
+        );
+    }
+
+    fn lossless_cfg() -> WireConfig {
+        WireConfig { delta: true, compress: Compression::F32, threshold: 0.0 }
+    }
+
+    #[test]
+    fn config_enabled_and_lossless_flags() {
+        assert!(!WireConfig::default().enabled());
+        assert!(WireConfig::default().lossless());
+        assert!(lossless_cfg().enabled() && lossless_cfg().lossless());
+        let f16 = WireConfig { compress: Compression::F16, ..WireConfig::default() };
+        assert!(f16.enabled() && !f16.lossless());
+        let th = WireConfig { delta: true, threshold: 0.1, ..WireConfig::default() };
+        assert!(th.enabled() && !th.lossless());
+    }
+
+    /// One gather leg: the member sends its factors to the anchor;
+    /// returns what the anchor reconstructed.
+    fn gather(
+        member: &mut WireState,
+        anchor: &mut WireState,
+        m_id: BlockId,
+        a_id: BlockId,
+        u: &DenseMatrix,
+        w: &DenseMatrix,
+    ) -> (DenseMatrix, DenseMatrix) {
+        let have = anchor.advertise(m_id);
+        let (frame, _) = member.make_gather(a_id, have, u, w);
+        anchor.recv_gather(m_id, &frame).expect("gather frame applies")
+    }
+
+    #[test]
+    fn lossless_delta_reconstruction_is_bit_identical() {
+        let mut rng = Rng::seed_from_u64(21);
+        let (m_id, a_id) = (BlockId::new(0, 1), BlockId::new(0, 0));
+        let mut member = WireState::new(lossless_cfg(), m_id);
+        let mut anchor = WireState::new(lossless_cfg(), a_id);
+        let mut u = mat(&mut rng, 6, 3);
+        let mut w = mat(&mut rng, 4, 3);
+        for round in 0..5 {
+            let (ru, rw) = gather(&mut member, &mut anchor, m_id, a_id, &u, &w);
+            assert_bits(&ru, &u);
+            assert_bits(&rw, &w);
+            // Perturb a couple of rows; later frames are genuine deltas.
+            u.row_mut(round % 6)[0] += 0.25;
+            w.row_mut(round % 4)[1] -= 0.5;
+        }
+        // After the first full frame, only changed rows travel.
+        let have = anchor.advertise(m_id);
+        let (frame, note) = member.make_gather(a_id, have, &u, &w);
+        assert_ne!(frame.base, 0, "baseline established");
+        assert!(!note.fallback);
+        assert_eq!(frame.u.idx.len(), 1, "{:?}", frame.u.idx);
+        assert_eq!(frame.w.idx.len(), 1, "{:?}", frame.w.idx);
+    }
+
+    #[test]
+    fn unchanged_factors_send_empty_deltas() {
+        let mut rng = Rng::seed_from_u64(33);
+        let (m_id, a_id) = (BlockId::new(1, 0), BlockId::new(0, 0));
+        let mut member = WireState::new(lossless_cfg(), m_id);
+        let mut anchor = WireState::new(lossless_cfg(), a_id);
+        let u = mat(&mut rng, 5, 2);
+        let w = mat(&mut rng, 5, 2);
+        gather(&mut member, &mut anchor, m_id, a_id, &u, &w);
+        let have = anchor.advertise(m_id);
+        let (frame, _) = member.make_gather(a_id, have, &u, &w);
+        assert_ne!(frame.base, 0);
+        assert!(frame.u.idx.is_empty() && frame.u.data.is_empty());
+        assert!(frame.w.idx.is_empty() && frame.w.data.is_empty());
+        let (ru, rw) = anchor.recv_gather(m_id, &frame).unwrap();
+        assert_bits(&ru, &u);
+        assert_bits(&rw, &w);
+    }
+
+    #[test]
+    fn epoch_mismatch_falls_back_to_full_and_resyncs() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (m_id, a_id) = (BlockId::new(0, 1), BlockId::new(0, 0));
+        let mut member = WireState::new(lossless_cfg(), m_id);
+        let mut anchor = WireState::new(lossless_cfg(), a_id);
+        let u = mat(&mut rng, 4, 2);
+        let w = mat(&mut rng, 3, 2);
+        gather(&mut member, &mut anchor, m_id, a_id, &u, &w);
+        // The member "loses" a frame: it builds (and caches) a frame
+        // the anchor never sees.
+        let have = anchor.advertise(m_id);
+        let _ = member.make_gather(a_id, have, &u, &w);
+        // The next request advertises the anchor's now-stale epoch; the
+        // member's cache moved on, so it must send full.
+        let have = anchor.advertise(m_id);
+        let (frame, note) = member.make_gather(a_id, have, &u, &w);
+        assert_eq!(frame.base, 0, "stale epoch ⇒ full frame");
+        assert!(note.fallback);
+        let (ru, rw) = anchor.recv_gather(m_id, &frame).unwrap();
+        assert_bits(&ru, &u);
+        assert_bits(&rw, &w);
+        // Resynced: the next frame deltas again.
+        let have = anchor.advertise(m_id);
+        let (frame, note) = member.make_gather(a_id, have, &u, &w);
+        assert_ne!(frame.base, 0);
+        assert!(!note.fallback);
+    }
+
+    #[test]
+    fn receiver_guard_miss_clears_cache_and_reports_none() {
+        let mut rng = Rng::seed_from_u64(6);
+        let (m_id, a_id) = (BlockId::new(0, 1), BlockId::new(0, 0));
+        let mut member = WireState::new(lossless_cfg(), m_id);
+        let mut anchor = WireState::new(lossless_cfg(), a_id);
+        let u = mat(&mut rng, 4, 2);
+        let w = mat(&mut rng, 3, 2);
+        gather(&mut member, &mut anchor, m_id, a_id, &u, &w);
+        // Forge a delta against an epoch the anchor never saw.
+        let (mut frame, _) = member.make_gather(a_id, anchor.advertise(m_id), &u, &w);
+        frame.base = 0xDEAD;
+        assert!(anchor.recv_gather(m_id, &frame).is_none());
+        assert_eq!(anchor.advertise(m_id), 0, "cache cleared after the miss");
+    }
+
+    #[test]
+    fn put_cycle_checksum_guard_and_ef_clear() {
+        let mut rng = Rng::seed_from_u64(7);
+        let (m_id, a_id) = (BlockId::new(1, 0), BlockId::new(0, 0));
+        let cfg = WireConfig { delta: true, compress: Compression::F16, threshold: 0.0 };
+        let mut member = WireState::new(cfg, m_id);
+        let mut anchor = WireState::new(cfg, a_id);
+        let u = mat(&mut rng, 5, 3);
+        let w = mat(&mut rng, 4, 3);
+        // Gather: the anchor now holds the f16 reconstruction of (u, w).
+        let (gu, gw) = gather(&mut member, &mut anchor, m_id, a_id, &u, &w);
+        // Scatter: the anchor sends back updated factors as a delta
+        // against that shared reconstruction.
+        let mut nu = gu.clone();
+        nu.row_mut(2)[0] += 1.0;
+        let (frame, note) = anchor.make_put(m_id, &nu, &gw);
+        assert!(!note.fallback);
+        assert_ne!(frame.base, 0, "checksum-guarded delta");
+        let (au, aw) = member.recv_put(a_id, &frame).expect("checksum matches");
+        // Both ends now agree on the put reconstruction: an identical
+        // follow-up put deltas down to empty patches.
+        let (frame2, _) = anchor.make_put(m_id, &au, &aw);
+        assert!(frame2.u.idx.is_empty() && frame2.w.idx.is_empty());
+        // A put against a desynced cache misses the checksum and is
+        // skipped.
+        member.reset();
+        let (frame3, note3) = anchor.make_put(m_id, &au, &aw);
+        assert_ne!(frame3.base, 0);
+        assert!(!note3.fallback);
+        assert!(member.recv_put(a_id, &frame3).is_none());
+    }
+
+    #[test]
+    fn roles_on_one_edge_do_not_share_caches() {
+        let mut rng = Rng::seed_from_u64(14);
+        let (a, b) = (BlockId::new(0, 0), BlockId::new(0, 1));
+        let mut wa = WireState::new(lossless_cfg(), a);
+        let mut wb = WireState::new(lossless_cfg(), b);
+        let (au, aw) = (mat(&mut rng, 3, 2), mat(&mut rng, 4, 2));
+        let (bu, bw) = (mat(&mut rng, 3, 2), mat(&mut rng, 4, 2));
+        // a anchors with member b, AND b anchors with member a, on the
+        // same edge — the caches must not interfere.
+        let (rb_u, rb_w) = gather(&mut wb, &mut wa, b, a, &bu, &bw);
+        let (ra_u, ra_w) = gather(&mut wa, &mut wb, a, b, &au, &aw);
+        assert_bits(&rb_u, &bu);
+        assert_bits(&rb_w, &bw);
+        assert_bits(&ra_u, &au);
+        assert_bits(&ra_w, &aw);
+        // Both directions delta independently.
+        let (f1, n1) = wb.make_gather(a, wa.advertise(b), &bu, &bw);
+        let (f2, n2) = wa.make_gather(b, wb.advertise(a), &au, &aw);
+        assert_ne!(f1.base, 0);
+        assert_ne!(f2.base, 0);
+        assert!(!n1.fallback && !n2.fallback);
+        assert!(wa.recv_gather(b, &f1).is_some());
+        assert!(wb.recv_gather(a, &f2).is_some());
+    }
+
+    #[test]
+    fn error_feedback_folds_residual_into_next_frame() {
+        let (m_id, a_id) = (BlockId::new(0, 1), BlockId::new(0, 0));
+        let cfg = WireConfig { delta: true, compress: Compression::F16, threshold: 0.0 };
+        let mut member = WireState::new(cfg, m_id);
+        let mut anchor = WireState::new(cfg, a_id);
+        // A value with a large f16 rounding error, repeatedly sent:
+        // without EF the receiver would sit at the rounded value
+        // forever; with EF the *average* converges toward the truth.
+        let truth = 1.0009765f32; // halfway-ish between two halves
+        let u = DenseMatrix::from_fn(1, 1, |_, _| truth);
+        let w = DenseMatrix::zeros(1, 1);
+        let mut got = Vec::new();
+        for _ in 0..8 {
+            let (ru, _) = gather(&mut member, &mut anchor, m_id, a_id, &u, &w);
+            got.push(ru.get(0, 0));
+        }
+        let mean = got.iter().map(|&v| f64::from(v)).sum::<f64>() / got.len() as f64;
+        assert!(
+            (mean - f64::from(truth)).abs() < 2e-4,
+            "EF keeps the time-average near truth: mean {mean} vs {truth} ({got:?})"
+        );
+        // At least two distinct reconstructions: the residual really
+        // alternated the rounding direction.
+        assert!(got.iter().any(|v| v.to_bits() != got[0].to_bits()), "{got:?}");
+    }
+
+    #[test]
+    fn threshold_suppression_accrues_and_eventually_flushes() {
+        let (m_id, a_id) = (BlockId::new(0, 1), BlockId::new(0, 0));
+        let cfg = WireConfig { delta: true, compress: Compression::F32, threshold: 0.05 };
+        let mut member = WireState::new(cfg, m_id);
+        let mut anchor = WireState::new(cfg, a_id);
+        let mut u = DenseMatrix::from_fn(2, 2, |_, _| 1.0);
+        let w = DenseMatrix::zeros(1, 2);
+        gather(&mut member, &mut anchor, m_id, a_id, &u, &w);
+        // Nudge below threshold: suppressed (empty delta), residual owed.
+        u.row_mut(0)[0] = 1.01;
+        let (frame, _) = member.make_gather(a_id, anchor.advertise(m_id), &u, &w);
+        assert!(frame.u.idx.is_empty(), "1% move under a 5% threshold is suppressed");
+        anchor.recv_gather(m_id, &frame).unwrap();
+        // Keep nudging: accumulated drift crosses the threshold and the
+        // row flushes with the full owed correction.
+        let mut flushed = false;
+        for _ in 0..12 {
+            u.row_mut(0)[0] += 0.01;
+            let (frame, _) = member.make_gather(a_id, anchor.advertise(m_id), &u, &w);
+            let (ru, _) = anchor.recv_gather(m_id, &frame).unwrap();
+            if !frame.u.idx.is_empty() {
+                flushed = true;
+                assert_eq!(
+                    ru.get(0, 0).to_bits(),
+                    u.get(0, 0).to_bits(),
+                    "flush carries the whole accumulated move (f32 rows)"
+                );
+                break;
+            }
+        }
+        assert!(flushed, "drift must eventually cross the threshold");
+    }
+
+    #[test]
+    fn reset_counts_halves_and_forces_full_frames() {
+        let mut rng = Rng::seed_from_u64(12);
+        let (m_id, a_id) = (BlockId::new(0, 1), BlockId::new(0, 0));
+        let mut member = WireState::new(lossless_cfg(), m_id);
+        let mut anchor = WireState::new(lossless_cfg(), a_id);
+        let u = mat(&mut rng, 3, 2);
+        let w = mat(&mut rng, 3, 2);
+        gather(&mut member, &mut anchor, m_id, a_id, &u, &w);
+        assert_eq!(member.live_edges(), 1);
+        assert_eq!(member.reset(), 1);
+        assert_eq!(member.reset(), 0);
+        let (frame, note) = member.make_gather(a_id, anchor.advertise(m_id), &u, &w);
+        assert_eq!(frame.base, 0, "post-reset frames are full");
+        assert!(note.fallback);
+    }
+
+    #[test]
+    fn crash_epoch_reuse_cannot_alias_a_stale_baseline() {
+        let mut rng = Rng::seed_from_u64(13);
+        let (m_id, a_id) = (BlockId::new(0, 1), BlockId::new(0, 0));
+        let mut member = WireState::new(lossless_cfg(), m_id);
+        let mut anchor = WireState::new(lossless_cfg(), a_id);
+        let u1 = mat(&mut rng, 3, 2);
+        let w1 = mat(&mut rng, 3, 2);
+        gather(&mut member, &mut anchor, m_id, a_id, &u1, &w1);
+        let stale = anchor.advertise(m_id);
+        // Member crash-restores: state wiped, counter restarts.
+        member = WireState::new(lossless_cfg(), m_id);
+        let u2 = mat(&mut rng, 3, 2);
+        let w2 = mat(&mut rng, 3, 2);
+        // The anchor still advertises the stale epoch; the restarted
+        // member has no cache, so it must go full — and the cache wipe
+        // rode along with the counter reset, so the stale number cannot
+        // alias a live baseline.
+        let (frame, _) = member.make_gather(a_id, stale, &u2, &w2);
+        assert_eq!(frame.base, 0);
+        let (ru, rw) = anchor.recv_gather(m_id, &frame).unwrap();
+        assert_bits(&ru, &u2);
+        assert_bits(&rw, &w2);
+    }
+}

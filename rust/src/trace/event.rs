@@ -108,6 +108,16 @@ pub enum EventKind {
     /// A supervisor-executed fault/membership action (control track) —
     /// mirrors the [`FaultRecord`] pushed onto the run's fault trace.
     Fault(FaultRecord),
+    /// A wire-layer delta exchange with `peer` fell back to a full
+    /// frame (build-side baseline miss) or refused a frame
+    /// (receive-side guard miss). `gather` distinguishes the
+    /// gather-direction fallback from the scatter (put) one.
+    DeltaFallback { peer: BlockId, gather: bool },
+    /// This block dropped `edges` wire baseline/error-feedback cache
+    /// halves — its factors changed out of band (crash, join, revert,
+    /// hand-off, expiry), so pending quantization residual was
+    /// discarded with them.
+    QuantReset { edges: u32 },
 }
 
 /// Pack a block id into one sortable word.
@@ -135,6 +145,10 @@ impl EventKind {
             EventKind::CheckpointRestore { version } => (4, version, 1, 0),
             EventKind::GradeChange { peer, grade } => (5, pack(peer), grade as u64, 0),
             EventKind::Fault(r) => (6, r.step(), 0, 0),
+            EventKind::DeltaFallback { peer, gather } => {
+                (7, pack(peer), u64::from(!gather), 0)
+            }
+            EventKind::QuantReset { edges } => (8, u64::from(edges), 0, 0),
         }
     }
 
@@ -152,6 +166,8 @@ impl EventKind {
             EventKind::GradeChange { .. } => "grade",
             EventKind::Expire { .. } => "expire",
             EventKind::Fault(_) => "fault",
+            EventKind::DeltaFallback { .. } => "delta-fallback",
+            EventKind::QuantReset { .. } => "quant-reset",
         }
     }
 
@@ -193,6 +209,13 @@ impl EventKind {
                 victim.i, victim.j
             ),
             EventKind::Fault(r) => r.json(),
+            EventKind::DeltaFallback { peer, gather } => format!(
+                "{{\"peer\":\"{},{}\",\"dir\":\"{}\"}}",
+                peer.i,
+                peer.j,
+                if gather { "gather" } else { "put" }
+            ),
+            EventKind::QuantReset { edges } => format!("{{\"edges\":{edges}}}"),
         }
     }
 }
@@ -252,6 +275,9 @@ mod tests {
             EventKind::GradeChange { peer: BlockId::new(0, 1), grade: GradeTag::Suspect },
             EventKind::Expire { token: 3, victim: BlockId::new(2, 2) },
             EventKind::Fault(FaultRecord::SilentKill { step: 70, block: BlockId::new(3, 1) }),
+            EventKind::DeltaFallback { peer: BlockId::new(0, 2), gather: true },
+            EventKind::DeltaFallback { peer: BlockId::new(0, 2), gather: false },
+            EventKind::QuantReset { edges: 3 },
         ];
         for e in events {
             let s = e.args_json();

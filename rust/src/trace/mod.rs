@@ -301,6 +301,49 @@ impl Recorder {
         }
     }
 
+    /// `block`'s delta exchange with `peer` fell back to (or refused
+    /// everything but) a full frame. `gather` distinguishes the
+    /// gather-direction fallback from the scatter (put) one.
+    pub fn delta_fallback(&self, block: BlockId, peer: BlockId, gather: bool) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_delta_fallback(lin);
+            self.push(lin, EventKind::DeltaFallback { peer, gather });
+        }
+    }
+
+    /// `block` dropped `edges` wire baseline cache halves (its factors
+    /// changed out of band), discarding any pending quantization
+    /// residual with them.
+    pub fn quant_reset(&self, block: BlockId, edges: u32) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_quant_reset(lin);
+            self.push(lin, EventKind::QuantReset { edges });
+        }
+    }
+
+    /// Latest per-block residual contribution (driver-side gauge for
+    /// priority scheduling; metric only, no event).
+    pub fn note_block_residual(&self, block: BlockId, residual: f64) {
+        if !self.armed {
+            return;
+        }
+        if let Some(lin) = self.lin(block) {
+            self.metrics.note_residual(lin, residual);
+        }
+    }
+
+    /// Read the metrics registry directly (the priority driver's heat
+    /// source — cheaper than a full snapshot every epoch).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
     // ---- transport gauges ------------------------------------------
 
     /// A frame entered a `MultiplexTransport` worker queue.

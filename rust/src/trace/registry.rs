@@ -41,6 +41,12 @@ struct BlockMetrics {
     checkpoint_restores: AtomicU64,
     gather_us: AtomicU64,
     scatter_us: AtomicU64,
+    delta_fallbacks: AtomicU64,
+    quant_resets: AtomicU64,
+    /// Latest residual gauge for this block (f64 bits; 0 = never fed).
+    /// Written by the driver's cost collection, read by the priority
+    /// scheduler as block heat.
+    residual: AtomicU64,
     /// `PhaseTag as u8` of the phase the block is currently in
     /// (0 = never entered any phase).
     last_phase: AtomicU8,
@@ -65,6 +71,9 @@ impl BlockMetrics {
             checkpoint_restores: AtomicU64::new(0),
             gather_us: AtomicU64::new(0),
             scatter_us: AtomicU64::new(0),
+            delta_fallbacks: AtomicU64::new(0),
+            quant_resets: AtomicU64::new(0),
+            residual: AtomicU64::new(0),
             last_phase: AtomicU8::new(0),
             phase_since_us: AtomicU64::new(0),
             edges: Mutex::new(BTreeMap::new()),
@@ -147,6 +156,34 @@ impl MetricsRegistry {
         self.blocks[lin].checkpoint_restores.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub(super) fn note_delta_fallback(&self, lin: usize) {
+        self.blocks[lin].delta_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_quant_reset(&self, lin: usize) {
+        self.blocks[lin].quant_resets.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_residual(&self, lin: usize, residual: f64) {
+        self.blocks[lin].residual.store(residual.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Blocks this registry tracks (`p * q` at construction).
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Scheduling heat of one block for the priority driver: completed
+    /// updates so far and the latest residual gauge (0.0 when the
+    /// gauge was never fed).
+    pub fn block_heat(&self, lin: usize) -> (u64, f64) {
+        let m = &self.blocks[lin];
+        (
+            m.updates.load(Ordering::Relaxed),
+            f64::from_bits(m.residual.load(Ordering::Relaxed)),
+        )
+    }
+
     /// Close the previous phase interval and open a new one.
     /// `now_us` is microseconds since the recorder epoch.
     pub(super) fn note_phase(&self, lin: usize, phase: PhaseTag, now_us: u64) {
@@ -206,6 +243,9 @@ impl MetricsRegistry {
                     checkpoint_restores: m.checkpoint_restores.load(Ordering::Relaxed),
                     gather_us: m.gather_us.load(Ordering::Relaxed),
                     scatter_us: m.scatter_us.load(Ordering::Relaxed),
+                    delta_fallbacks: m.delta_fallbacks.load(Ordering::Relaxed),
+                    quant_resets: m.quant_resets.load(Ordering::Relaxed),
+                    residual: f64::from_bits(m.residual.load(Ordering::Relaxed)),
                     peer_bytes,
                 }
             })
@@ -285,6 +325,15 @@ pub struct BlockTelemetry {
     pub gather_us: u64,
     /// Wall microseconds spent in `Scatter` while anchoring.
     pub scatter_us: u64,
+    /// Wire-layer delta exchanges that fell back to (or refused all
+    /// but) a full frame.
+    pub delta_fallbacks: u64,
+    /// Wire baseline/error-feedback wipes (factors changed out of
+    /// band).
+    pub quant_resets: u64,
+    /// Latest residual gauge fed by the driver's cost collection
+    /// (0.0 when never fed).
+    pub residual: f64,
     /// Outbound (peer, msgs, bytes) rows, sorted by peer id.
     pub peer_bytes: Vec<(BlockId, u64, u64)>,
 }
@@ -343,6 +392,26 @@ mod tests {
         // 128 and 512 both land in the <=1024 buckets.
         assert_eq!(snap.wire_frame_bytes.buckets[1], (256, 1));
         assert_eq!(snap.wire_frame_bytes.buckets[2], (1024, 1));
+    }
+
+    #[test]
+    fn wire_layer_counters_and_heat_gauge() {
+        let reg = MetricsRegistry::new(2, 2);
+        reg.note_delta_fallback(1);
+        reg.note_delta_fallback(1);
+        reg.note_quant_reset(3);
+        reg.note_residual(1, 0.25);
+        reg.note_update(1);
+        assert_eq!(reg.num_blocks(), 4);
+        assert_eq!(reg.block_heat(1), (1, 0.25));
+        assert_eq!(reg.block_heat(0), (0, 0.0), "unfed gauge reads zero");
+        let snap = reg.snapshot();
+        assert_eq!(snap.blocks[1].delta_fallbacks, 2);
+        assert_eq!(snap.blocks[3].quant_resets, 1);
+        assert_eq!(snap.blocks[1].residual, 0.25);
+        // The gauge is last-write-wins, not cumulative.
+        reg.note_residual(1, 0.125);
+        assert_eq!(reg.block_heat(1).1, 0.125);
     }
 
     #[test]

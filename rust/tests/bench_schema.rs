@@ -1,7 +1,7 @@
 //! Golden-schema tests for the machine-readable bench artifacts:
 //! `BENCH_churn.json`, `BENCH_grow.json`, `BENCH_shrink.json`,
 //! `BENCH_liveness.json`, `BENCH_parallel_scaling.json`,
-//! `BENCH_trace_overhead.json`.
+//! `BENCH_trace_overhead.json`, `BENCH_wire.json`.
 //!
 //! These files are the repo's perf trajectory — downstream tooling
 //! diffs them across commits — so format drift must fail CI instead of
@@ -12,8 +12,9 @@
 
 use gridmc::experiments::parallel::{
     write_churn_json, write_grow_json, write_json, write_liveness_json, write_shrink_json,
-    write_trace_overhead_json, ChurnOutcome, ChurnRun, GrowOutcome, GrowRun, LivenessOutcome,
-    LivenessRun, OverheadOutcome, OverheadRun, ScalingPoint, ShrinkOutcome, ShrinkRun,
+    write_trace_overhead_json, write_wire_json, ChurnOutcome, ChurnRun, GrowOutcome, GrowRun,
+    LivenessOutcome, LivenessRun, OverheadOutcome, OverheadRun, ScalingPoint, ShrinkOutcome,
+    ShrinkRun, WireLeg, WireOutcome,
 };
 use gridmc::grid::BlockId;
 use gridmc::metrics::{percentiles, LivenessStats, RecoveryOverhead};
@@ -619,6 +620,100 @@ fn trace_overhead_json_schema_is_pinned() {
     assert!(overhead["wall_ratio"].is_num());
     assert_eq!(overhead["budget"], Json::Num(1.02));
     assert!(matches!(overhead["within_budget"], Json::Bool(_)));
+}
+
+#[test]
+fn wire_json_schema_is_pinned() {
+    let leg = |label, driver, rmse, wire_bytes| WireLeg {
+        label,
+        driver,
+        rmse,
+        final_cost: 1e-3,
+        iters: 4000,
+        updates: 4000,
+        wire_bytes,
+        delta_fallbacks: 2,
+        quant_resets: 1,
+        wall: Duration::from_millis(900),
+    };
+    let outcome = WireOutcome {
+        grid: (6, 6),
+        legs: vec![
+            leg("full_f32", "parallel", 0.100, 40_000_000),
+            leg("delta", "parallel", 0.100, 22_000_000),
+            leg("f16", "parallel", 0.1004, 20_000_000),
+            leg("delta_f16", "parallel", 0.1006, 9_000_000),
+            leg("delta_int8", "parallel", 0.1009, 7_000_000),
+            leg("priority_delta_f16", "priority", 0.1005, 9_500_000),
+        ],
+    };
+    let path = temp_path("BENCH_wire.json");
+    write_wire_json(&path, &outcome).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap());
+    assert_keys(
+        &doc,
+        &[
+            "bench",
+            "git_rev",
+            "timestamp_unix",
+            "timestamp_utc",
+            "grid",
+            "unit",
+            "legs",
+            "gate",
+        ],
+        "wire",
+    );
+    let top = doc.as_obj();
+    assert_header(top, "wire");
+    assert_eq!(top["unit"], Json::Str("bytes_per_update".into()));
+    assert_keys(&top["grid"], &["p", "q", "agents"], "wire.grid");
+    let legs = top["legs"].as_obj();
+    assert_eq!(legs.len(), 6);
+    for name in
+        ["full_f32", "delta", "f16", "delta_f16", "delta_int8", "priority_delta_f16"]
+    {
+        assert!(legs.contains_key(name), "wire.legs missing {name}");
+    }
+    for (name, l) in legs {
+        assert_keys(
+            l,
+            &[
+                "driver",
+                "rmse",
+                "final_cost",
+                "iters",
+                "updates",
+                "wire_bytes",
+                "bytes_per_update",
+                "reduction",
+                "rmse_ratio",
+                "delta_fallbacks",
+                "quant_resets",
+                "wall_s",
+            ],
+            &format!("wire.legs[{name}]"),
+        );
+        let obj = l.as_obj();
+        for (k, v) in obj {
+            if k == "driver" {
+                assert!(v.is_str(), "wire.legs[{name}].driver must be a string");
+            } else {
+                assert!(v.is_num(), "wire.legs[{name}].{k} must be numeric");
+            }
+        }
+    }
+    assert_keys(
+        &top["gate"],
+        &["lever", "target_reduction", "reduction", "rmse_budget", "rmse_ratio", "pass"],
+        "wire.gate",
+    );
+    let gate = top["gate"].as_obj();
+    assert_eq!(gate["lever"], Json::Str("delta_f16".into()));
+    assert_eq!(gate["target_reduction"], Json::Num(3.0));
+    assert_eq!(gate["rmse_budget"], Json::Num(1.01));
+    assert!(gate["reduction"].is_num() && gate["rmse_ratio"].is_num());
+    assert!(matches!(gate["pass"], Json::Bool(true)));
 }
 
 #[test]

@@ -12,11 +12,25 @@
 use gridmc::data::DenseMatrix;
 use gridmc::grid::BlockId;
 use gridmc::net::codec::{decode, encode};
-use gridmc::net::AgentMsg;
+use gridmc::net::{AgentMsg, Compression, DeltaFrame, RowPatch};
 use gridmc::util::Rng;
 
 /// Bytes of the fixed frame header: tag u8 + BlockId 2×u32 + seq u64.
 const HEADER_LEN: usize = 17;
+
+/// A well-formed row patch: full (`idx` empty, `rows` encoded rows)
+/// when `idx` is `None`, delta (`idx.len()` rows of payload — possibly
+/// zero) otherwise.
+fn patch(enc: Compression, rows: u32, cols: u32, idx: Option<Vec<u32>>, fill: u8) -> RowPatch {
+    let (idx, carried) = match idx {
+        None => (Vec::new(), rows as usize),
+        Some(v) => {
+            let n = v.len();
+            (v, n)
+        }
+    };
+    RowPatch { rows, cols, idx, data: vec![fill; carried * enc.row_bytes(cols as usize)] }
+}
 
 fn mat_from_rng(rng: &mut Rng, rows: usize, cols: usize) -> DenseMatrix {
     DenseMatrix::from_fn(rows, cols, |_, _| rng.uniform_sym(3.0))
@@ -140,6 +154,27 @@ fn every_truncation_is_rejected() {
         AgentMsg::PutFactors { from, u: u.clone(), w: w.clone() },
         AgentMsg::RevertFactors { from, u: u.clone(), w: w.clone() },
         AgentMsg::HandOff { from, u, w },
+        AgentMsg::GetDelta { from, have: 0xABCD },
+        AgentMsg::DeltaFactors {
+            from,
+            frame: DeltaFrame {
+                base: 0,
+                next: 42,
+                enc: Compression::F32.tag(),
+                u: patch(Compression::F32, 6, 3, None, 0x3F),
+                w: patch(Compression::F32, 4, 3, None, 0x3E),
+            },
+        },
+        AgentMsg::DeltaPut {
+            from,
+            frame: DeltaFrame {
+                base: 7,
+                next: 8,
+                enc: Compression::Int8.tag(),
+                u: patch(Compression::Int8, 6, 3, Some(vec![1, 4]), 0x11),
+                w: patch(Compression::Int8, 4, 3, Some(vec![0]), 0x22),
+            },
+        },
     ];
     for msg in cases {
         let bytes = encode(&msg, 0xFEED_F00D).unwrap();
@@ -187,7 +222,10 @@ fn random_corruptions_never_panic() {
                         "RevertFactors",
                         "HandOff",
                         "PutAck",
-                        "Heartbeat"
+                        "Heartbeat",
+                        "GetDelta",
+                        "DeltaFactors",
+                        "DeltaPut"
                     ]
                     .contains(&msg.kind()),
                     "decoded a non-wire kind {}",
@@ -200,10 +238,11 @@ fn random_corruptions_never_panic() {
 }
 
 /// Exhaustive tag sweep: all 256 first bytes on a minimal
-/// header-only frame body. Only the seven wire tags may decode — the
-/// factor-bearing ones (2, 3, 5, 6) need a payload, so they error on a
-/// bare 17-byte frame; the header-only tags (1 GetFactors, 4 PutAck,
-/// 7 Heartbeat) must decode; everything else errors.
+/// header-only frame body. Only the ten wire tags may decode — the
+/// payload-bearing ones (2, 3, 5, 6 factors; 8 GetDelta's `have`;
+/// 9, 10 delta frames) error on a bare 17-byte frame; the header-only
+/// tags (1 GetFactors, 4 PutAck, 7 Heartbeat) must decode; everything
+/// else errors.
 #[test]
 fn exhaustive_tag_sweep() {
     for tag in 0u8..=255 {
@@ -226,6 +265,35 @@ fn exhaustive_tag_sweep() {
             Err(_) => assert!(
                 tag != 1 && tag != 4 && tag != 7,
                 "header-only wire tag {tag} must decode on a 17-byte frame"
+            ),
+        }
+    }
+}
+
+/// The same sweep with eight zero bytes of payload: now tag 8
+/// (GetDelta) must also decode — `have` is the zero epoch — while the
+/// header-only tags still decode (trailing bytes after a complete
+/// frame are tolerated, pinned above) and the delta-frame tags still
+/// error (eight bytes is not even a `[base][next][enc]` preamble).
+#[test]
+fn exhaustive_tag_sweep_with_have_payload() {
+    for tag in 0u8..=255 {
+        let mut frame = vec![tag];
+        frame.extend_from_slice(&[0u8; HEADER_LEN - 1 + 8]);
+        match decode(&frame) {
+            Ok((msg, _)) => {
+                match msg {
+                    AgentMsg::GetDelta { have, .. } => assert_eq!(have, 0),
+                    AgentMsg::GetFactors { .. }
+                    | AgentMsg::PutAck { .. }
+                    | AgentMsg::Heartbeat { .. } => {}
+                    other => panic!("tag {tag} decoded unexpectedly as {}", other.kind()),
+                }
+                assert!(tag == 1 || tag == 4 || tag == 7 || tag == 8);
+            }
+            Err(_) => assert!(
+                tag != 1 && tag != 4 && tag != 7 && tag != 8,
+                "wire tag {tag} must decode on a 25-byte frame"
             ),
         }
     }
@@ -258,6 +326,108 @@ fn shape_bombs_and_phantom_payloads_are_rejected() {
     let mut padded = bytes;
     padded.extend_from_slice(&[0xAB; 7]);
     assert!(decode(&padded).is_ok());
+}
+
+/// Delta-frame shape bombs: every length and index field of a row
+/// patch is validated before allocation, and the frame-kind invariants
+/// (`base == 0` ⇔ no row indices, known encoding byte) are enforced.
+/// Patch layout after the 17-byte header: `[base u64][next u64]
+/// [enc u8]` then per patch `[rows u32][cols u32][nidx u32][idx…]`.
+#[test]
+fn delta_frame_shape_bombs_are_rejected() {
+    let from = BlockId::new(1, 2);
+    let delta = AgentMsg::DeltaPut {
+        from,
+        frame: DeltaFrame {
+            base: 9,
+            next: 10,
+            enc: Compression::F32.tag(),
+            u: patch(Compression::F32, 6, 3, Some(vec![1, 4]), 0x10),
+            w: patch(Compression::F32, 4, 3, Some(vec![0, 2]), 0x20),
+        },
+    };
+    let bytes = encode(&delta, 77).unwrap();
+    assert!(decode(&bytes).is_ok());
+    let u_rows = HEADER_LEN + 17; // base(8) + next(8) + enc(1)
+    let u_nidx = u_rows + 8;
+    let u_idx = u_nidx + 4;
+
+    // U patch rows -> u32::MAX: implausible shape, before allocation.
+    let mut bomb = bytes.clone();
+    bomb[u_rows..u_rows + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode(&bomb).is_err());
+
+    // nidx claims more changed rows than the patch has rows.
+    let mut bomb = bytes.clone();
+    bomb[u_nidx..u_nidx + 4].copy_from_slice(&1_000u32.to_le_bytes());
+    assert!(decode(&bomb).is_err());
+
+    // First index out of range / non-ascending pair (5 then 4).
+    let mut bomb = bytes.clone();
+    bomb[u_idx..u_idx + 4].copy_from_slice(&9u32.to_le_bytes());
+    assert!(decode(&bomb).is_err());
+    let mut bomb = bytes.clone();
+    bomb[u_idx..u_idx + 4].copy_from_slice(&5u32.to_le_bytes());
+    assert!(decode(&bomb).is_err());
+
+    // Unknown encoding byte.
+    let mut bomb = bytes.clone();
+    bomb[HEADER_LEN + 16] = 9;
+    assert!(decode(&bomb).is_err());
+
+    // A full frame (base == 0) must not carry row indices: zero the
+    // base in place — the nonzero nidx is now a protocol violation.
+    let mut bomb = bytes;
+    bomb[HEADER_LEN..HEADER_LEN + 8].copy_from_slice(&0u64.to_le_bytes());
+    assert!(decode(&bomb).is_err());
+}
+
+/// Delta frames round-trip exactly — every encoding, full and delta
+/// patches, `GetDelta` epochs included. The payload bytes are opaque
+/// to the codec (the wire layer owns their meaning), so equality is
+/// byte-level.
+#[test]
+fn delta_frames_roundtrip_over_encodings() {
+    let from = BlockId::new(2, 3);
+    for (have, seq) in [(0u64, 1u64), (u64::MAX, 7), (0x0102_0304, 99)] {
+        let bytes = encode(&AgentMsg::GetDelta { from, have }, seq).unwrap();
+        assert_eq!(bytes.len(), HEADER_LEN + 8);
+        match decode(&bytes).unwrap() {
+            (AgentMsg::GetDelta { from: f, have: h }, s) => {
+                assert_eq!((f, h, s), (from, have, seq));
+            }
+            (other, _) => panic!("wrong variant {}", other.kind()),
+        }
+    }
+    for enc in [Compression::F32, Compression::F16, Compression::Int8] {
+        for (base, idx_u, idx_w) in [
+            (0u64, None, None),                             // full resync
+            (3, Some(vec![0u32, 1, 5]), Some(vec![2u32])),  // sparse delta
+            (4, Some(vec![]), Some(vec![])),                // nothing changed
+        ] {
+            let frame = DeltaFrame {
+                base,
+                next: base + 1,
+                enc: enc.tag(),
+                u: patch(enc, 6, 3, idx_u, 0xA1),
+                w: patch(enc, 4, 3, idx_w, 0xB2),
+            };
+            for msg in [
+                AgentMsg::DeltaFactors { from, frame: frame.clone() },
+                AgentMsg::DeltaPut { from, frame: frame.clone() },
+            ] {
+                let kind = msg.kind();
+                let (back, seq) = decode(&encode(&msg, 13).unwrap()).unwrap();
+                assert_eq!(seq, 13);
+                assert_eq!(back.kind(), kind);
+                match back {
+                    AgentMsg::DeltaFactors { frame: f, .. }
+                    | AgentMsg::DeltaPut { frame: f, .. } => assert_eq!(f, frame),
+                    other => panic!("wrong variant {}", other.kind()),
+                }
+            }
+        }
+    }
 }
 
 /// The wire sequence number is pure header data: two encodings of the

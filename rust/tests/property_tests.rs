@@ -590,11 +590,29 @@ fn prop_culmination_consensus_fixture() {
 // the link-fault invariants the liveness layer leans on for
 // idempotent delivery.
 
-/// One instance of every wire frame kind, with payloads where due.
+/// One instance of every wire frame kind, with payloads where due —
+/// the wire-efficiency kinds (`GetDelta`, `DeltaFactors`, `DeltaPut`)
+/// included, under a random encoding.
 fn every_wire_frame(rng: &mut Rng, from: gridmc::grid::BlockId) -> Vec<gridmc::net::AgentMsg> {
-    use gridmc::net::AgentMsg;
+    use gridmc::net::{AgentMsg, Compression, DeltaFrame, RowPatch};
     let u = random_dense(rng, 1 + rng.gen_range(6), 1 + rng.gen_range(4));
     let w = random_dense(rng, 1 + rng.gen_range(6), 1 + rng.gen_range(4));
+    let enc = Compression::from_tag(rng.gen_range(3) as u8).unwrap();
+    let full_patch = |m: &gridmc::data::DenseMatrix, rng: &mut Rng| RowPatch {
+        rows: m.rows() as u32,
+        cols: m.cols() as u32,
+        idx: Vec::new(),
+        data: (0..m.rows() * enc.row_bytes(m.cols()))
+            .map(|_| rng.gen_range(256) as u8)
+            .collect(),
+    };
+    let frame = DeltaFrame {
+        base: 0,
+        next: 1 + rng.gen_range(1 << 20) as u64,
+        enc: enc.tag(),
+        u: full_patch(&u, rng),
+        w: full_patch(&w, rng),
+    };
     vec![
         AgentMsg::GetFactors { from },
         AgentMsg::Factors { from, u: u.clone(), w: w.clone() },
@@ -603,6 +621,9 @@ fn every_wire_frame(rng: &mut Rng, from: gridmc::grid::BlockId) -> Vec<gridmc::n
         AgentMsg::HandOff { from, u, w },
         AgentMsg::PutAck { from },
         AgentMsg::Heartbeat { from },
+        AgentMsg::GetDelta { from, have: rng.gen_range(1 << 30) as u64 },
+        AgentMsg::DeltaFactors { from, frame: frame.clone() },
+        AgentMsg::DeltaPut { from, frame },
     ]
 }
 
@@ -695,6 +716,181 @@ fn prop_stalled_replays_are_rejected_within_the_window() {
                      stalled seq {stalled} has rolled out and readmits"
                 );
                 break;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lossless_delta_protocol_survives_drops_and_duplicates() {
+    // A member/anchor pair speaking the delta protocol over a link
+    // that drops ~30% of frames and duplicates the rest (duplicates
+    // filtered by `DedupWindow`, as in the agents): every frame that
+    // *is* admitted must reconstruct the sender's current factors
+    // bit-exactly under the lossless levers, and every drop must
+    // self-heal into a full-frame resync on the next exchange —
+    // never a wedge, never a wrong matrix.
+    use gridmc::gossip::DedupWindow;
+    use gridmc::net::codec::{decode, encode};
+    use gridmc::net::{AgentMsg, Compression, WireConfig, WireState};
+    for case in 0..15u64 {
+        let mut rng = case_rng(case ^ 0xDE17A);
+        let cfg = WireConfig { delta: true, compress: Compression::F32, threshold: 0.0 };
+        let member_id = gridmc::grid::BlockId::new(0, 1);
+        let anchor_id = gridmc::grid::BlockId::new(0, 0);
+        let mut member = WireState::new(cfg, member_id);
+        let mut anchor = WireState::new(cfg, anchor_id);
+        let mut u = random_dense(&mut rng, 5 + rng.gen_range(4), 3);
+        let mut w = random_dense(&mut rng, 5 + rng.gen_range(4), 3);
+        let mut window = DedupWindow::new(256);
+        let mut seq = 0u64;
+        let (mut deltas, mut fulls, mut healed) = (0u32, 0u32, 0u32);
+        let mut anchor_stale = false; // a gather frame was dropped
+        for _ in 0..40 {
+            // A few rows of the member's factors move between gathers.
+            for _ in 0..1 + rng.gen_range(3) {
+                let r = rng.gen_range(u.rows());
+                for v in u.row_mut(r) {
+                    *v += rng.normal_f32(0.05);
+                }
+            }
+            let have = anchor.advertise(member_id);
+            let (frame, note) = member.make_gather(anchor_id, have, &u, &w);
+            if frame.base == 0 {
+                fulls += 1;
+                if anchor_stale {
+                    healed += 1;
+                    anchor_stale = false;
+                }
+            } else {
+                assert!(!note.fallback, "case {case}: a delta frame is not a fallback");
+                deltas += 1;
+            }
+            seq += 1;
+            let bytes =
+                encode(&AgentMsg::DeltaFactors { from: member_id, frame }, seq).unwrap();
+            if rng.bool(0.3) {
+                anchor_stale = true; // dropped: the anchor never sees it
+                continue;
+            }
+            // Delivered 1..=3 times; the window admits exactly one copy.
+            let mut applied = 0;
+            for _ in 0..1 + rng.gen_range(3) {
+                let (msg, got_seq) = decode(&bytes).unwrap();
+                if !window.admit(got_seq) {
+                    continue;
+                }
+                applied += 1;
+                let AgentMsg::DeltaFactors { frame, .. } = msg else {
+                    panic!("case {case}: wrong kind")
+                };
+                let (ru, rw) = anchor
+                    .recv_gather(member_id, &frame)
+                    .expect("case: an in-sync frame reconstructs");
+                assert_eq!(ru, u, "case {case}: U reconstruction must be bit-exact");
+                assert_eq!(rw, w, "case {case}: W reconstruction must be bit-exact");
+            }
+            assert_eq!(applied, 1, "case {case}: dedup admits exactly one copy");
+            // Scatter direction: the anchor puts updated factors back.
+            for _ in 0..1 + rng.gen_range(2) {
+                let r = rng.gen_range(w.rows());
+                for v in w.row_mut(r) {
+                    *v += rng.normal_f32(0.05);
+                }
+            }
+            let (put, _) = anchor.make_put(member_id, &u, &w);
+            if rng.bool(0.2) {
+                // Dropped put: the member's `mine` cache is now behind
+                // the anchor's `theirs` cache; the next gather must
+                // fall back to a full frame (checked via `healed`).
+                anchor_stale = true;
+                continue;
+            }
+            seq += 1;
+            let bytes = encode(&AgentMsg::DeltaPut { from: anchor_id, frame: put }, seq).unwrap();
+            let (msg, got_seq) = decode(&bytes).unwrap();
+            assert!(window.admit(got_seq));
+            let AgentMsg::DeltaPut { frame, .. } = msg else {
+                panic!("case {case}: wrong kind")
+            };
+            if let Some((ru, rw)) = member.recv_put(anchor_id, &frame) {
+                assert_eq!(ru, u, "case {case}: put U must be bit-exact");
+                assert_eq!(rw, w, "case {case}: put W must be bit-exact");
+            } else {
+                // Guard miss after earlier losses: adoption skipped,
+                // the caches self-heal on the next gather.
+                anchor_stale = true;
+            }
+        }
+        assert!(fulls > 0, "case {case}: the first exchange is always full");
+        assert!(
+            deltas > 0,
+            "case {case}: a mostly-healthy link must get delta frames through"
+        );
+        assert!(
+            healed > 0,
+            "case {case}: drops must heal via full-frame resync (fulls {fulls}, deltas {deltas})"
+        );
+        assert!(member.live_edges() > 0 && anchor.live_edges() > 0);
+    }
+}
+
+#[test]
+fn prop_wire_reset_clears_error_feedback_and_baselines() {
+    // The lifecycle reset (crash-restore, retirement, hand-off absorb,
+    // expiry) must leave the wire state indistinguishable from a fresh
+    // one, error-feedback accumulators included: after `reset()` the
+    // next frame of a lossy config is a full-frame fallback whose
+    // payload is byte-identical to what a brand-new state would send —
+    // no pre-reset residual may leak into post-restore traffic.
+    use gridmc::net::{Compression, WireConfig, WireState};
+    for case in 0..15u64 {
+        let mut rng = case_rng(case ^ 0xEFEF);
+        let cfg = WireConfig {
+            delta: true,
+            compress: if rng.bool(0.5) { Compression::F16 } else { Compression::Int8 },
+            threshold: 0.02,
+        };
+        let me = gridmc::grid::BlockId::new(1, 1);
+        let peer = gridmc::grid::BlockId::new(1, 2);
+        let mut ws = WireState::new(cfg, me);
+        let mut u = random_dense(&mut rng, 6, 3);
+        let mut w = random_dense(&mut rng, 4, 3);
+        // Lossy exchanges accumulate error feedback in both directions.
+        let mut have = 0u64;
+        for _ in 0..5 {
+            let (frame, _) = ws.make_gather(peer, have, &u, &w);
+            have = frame.next;
+            let (put, _) = ws.make_put(peer, &w, &u);
+            assert!(put.next > frame.next, "epochs are monotonic");
+            for v in u.row_mut(rng.gen_range(u.rows())) {
+                *v += rng.normal_f32(0.1);
+            }
+        }
+        assert!(ws.live_edges() > 0, "case {case}: exchanges left baselines behind");
+        assert!(ws.advertise(peer) != 0, "case {case}: a `theirs` baseline exists");
+
+        let cleared = ws.reset();
+        assert!(cleared > 0, "case {case}: reset reports the cleared halves");
+        assert_eq!(ws.live_edges(), 0, "case {case}: no baseline survives a reset");
+        assert_eq!(ws.advertise(peer), 0, "case {case}: post-reset gathers ask full");
+
+        // Same inputs through the reset state and a factory-fresh one:
+        // the payloads must match byte for byte (epoch stamps continue
+        // from the old counter, deliberately — only payload state may
+        // not leak).
+        let mut fresh = WireState::new(cfg, me);
+        for _ in 0..3 {
+            let (a, note_a) = ws.make_gather(peer, 0, &u, &w);
+            let (b, note_b) = fresh.make_gather(peer, 0, &u, &w);
+            assert_eq!(note_a, note_b, "case {case}");
+            assert_eq!(a.base, 0, "case {case}: post-reset frames are full");
+            assert_eq!(a.base, b.base, "case {case}");
+            assert_eq!(a.enc, b.enc, "case {case}");
+            assert_eq!(a.u, b.u, "case {case}: U payload must match a fresh state");
+            assert_eq!(a.w, b.w, "case {case}: W payload must match a fresh state");
+            for v in w.row_mut(rng.gen_range(w.rows())) {
+                *v += rng.normal_f32(0.1);
             }
         }
     }

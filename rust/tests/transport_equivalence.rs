@@ -199,6 +199,14 @@ fn sim_drop_retry_is_live_and_accounted() {
         stats.wire_bytes > stats.payload_bytes,
         "retransmissions must show up on the wire: {stats:?}"
     );
+    // The accounting invariant behind that: `payload_bytes` charges
+    // each admitted frame exactly once (dropped-before-delivery copies
+    // and retransmissions land only in `wire_bytes`), so it can never
+    // exceed the wire total and is nonzero whenever frames moved.
+    assert!(
+        stats.payload_bytes > 0 && stats.payload_bytes <= stats.wire_bytes,
+        "payload accounting must stay within the wire total: {stats:?}"
+    );
 }
 
 /// Zero-latency sim accounting sanity: frames counted, none dropped.
@@ -210,6 +218,36 @@ fn sim_zero_latency_accounts_without_drops() {
     assert!(state.rmse(&test).is_finite());
     // Accounting is asserted through the driver-free path above; here we
     // only need the run to hold together end to end.
+}
+
+/// The lossless wire levers (delta frames, f32 rows, send threshold 0)
+/// are pure compression: a row either ships bit-exact or provably did
+/// not change, so the trained state stays bit-identical to the bare
+/// channel transport with the wire layer disabled — on every
+/// transport the levers run on.
+#[test]
+fn lossless_wire_levers_stay_bit_identical() {
+    use gridmc::net::{Compression, WireConfig};
+    let (spec, train, _) = problem();
+    let iters = 1000;
+    let (r_plain, s_plain) = run_parallel(spec, &train, iters, NetConfig::channel());
+    let lossless = WireConfig { delta: true, compress: Compression::F32, threshold: 0.0 };
+    assert!(lossless.enabled() && lossless.lossless());
+    for (label, mut net) in [
+        ("channel", NetConfig::channel()),
+        ("multiplex", NetConfig::multiplex(3)),
+        ("sim", NetConfig::sim(SimConfig::zero_latency(5))),
+    ] {
+        net.wire = lossless;
+        let (r_wire, s_wire) = run_parallel(spec, &train, iters, net);
+        assert_eq!(r_plain.iters, r_wire.iters, "{label}");
+        assert_eq!(
+            r_plain.final_cost.to_bits(),
+            r_wire.final_cost.to_bits(),
+            "{label}: lossless wire changed the cost"
+        );
+        assert_states_bit_identical(&s_plain, &s_wire, label);
+    }
 }
 
 /// A zero-fault `FaultPlan` plus active checkpointing is pure

@@ -199,6 +199,11 @@ pub struct ExperimentConfig {
     pub net_workers: usize,
     /// Link conditions for the sim transports.
     pub sim: SimConfig,
+    /// Socket knobs for the multi-process transports (`[socket]`
+    /// table; `None` = in-process only). Required when `transport` is
+    /// `tcp` or `udp`: names the process count, the driver's
+    /// control-plane address, and the local data-plane bind address.
+    pub socket: Option<crate::net::SocketConfig>,
     /// Wire-efficiency levers (`[wire]` table; `None` = every lever
     /// off: plain full-frame gossip, bit-identical to the pre-wire
     /// protocol). Delta frames and the suppression threshold need a
@@ -247,6 +252,7 @@ impl ExperimentConfig {
             sim: self.sim,
             liveness: self.liveness,
             wire: self.wire.unwrap_or_default(),
+            socket: self.socket,
         }
     }
 
@@ -323,6 +329,21 @@ impl ExperimentConfig {
                     reorder_prob: doc.f64_or("sim.reorder_prob", d.reorder_prob),
                     seed: doc.u64_or("sim.seed", d.seed),
                 }
+            },
+            socket: if doc.has_prefix("socket.") {
+                let d = crate::net::SocketConfig::default();
+                Some(crate::net::SocketConfig {
+                    procs: doc.usize_or("socket.procs", d.procs),
+                    driver: parse_addr(&doc.str_or("socket.driver", &d.driver.to_string()))?,
+                    bind: parse_addr(&doc.str_or("socket.bind", &d.bind.to_string()))?,
+                    handshake_ms: doc.u64_or("socket.handshake_ms", d.handshake_ms),
+                    retransmit_us: doc.u64_or("socket.retransmit_us", d.retransmit_us),
+                    max_retransmits: doc
+                        .u64_or("socket.max_retransmits", d.max_retransmits as u64)
+                        as u32,
+                })
+            } else {
+                None
             },
             wire: if doc.has_prefix("wire.") {
                 let d = crate::net::WireConfig::default();
@@ -481,6 +502,18 @@ impl ExperimentConfig {
             self.sim.reorder_prob,
             self.sim.seed
         ));
+        if let Some(k) = &self.socket {
+            s.push_str(&format!(
+                "\n[socket]\nprocs = {}\ndriver = {}\nbind = {}\n\
+                 handshake_ms = {}\nretransmit_us = {}\nmax_retransmits = {}\n",
+                k.procs,
+                quote(&k.driver.to_string()),
+                quote(&k.bind.to_string()),
+                k.handshake_ms,
+                k.retransmit_us,
+                k.max_retransmits
+            ));
+        }
         if let Some(w) = &self.wire {
             s.push_str(&format!(
                 "\n[wire]\ndelta = {}\ncompress = {}\nthreshold = {}\n",
@@ -555,6 +588,12 @@ impl ExperimentConfig {
     pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
         Self::from_toml(&std::fs::read_to_string(path)?)
     }
+}
+
+/// Parse a `host:port` socket address out of a `[socket]` table value.
+fn parse_addr(s: &str) -> Result<std::net::SocketAddr> {
+    s.parse()
+        .map_err(|e| Error::Config(format!("bad socket address {s:?}: {e}")))
 }
 
 #[cfg(test)]
@@ -690,6 +729,44 @@ mod tests {
         let err = ExperimentConfig::from_toml(&format!(
             "{}[wire]\ncompress = \"f8\"\n",
             text.split("[wire]").next().unwrap()
+        ))
+        .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn socket_table_roundtrip_and_absence() {
+        let mut cfg = presets::exp(1).unwrap();
+        assert!(cfg.socket.is_none(), "presets stay in-process by default");
+        assert!(!cfg.to_toml().unwrap().contains("[socket]"));
+        assert!(cfg.net_config().socket.is_none());
+        cfg.transport = TransportKind::Tcp;
+        cfg.socket = Some(crate::net::SocketConfig {
+            procs: 3,
+            driver: "127.0.0.1:7901".parse().unwrap(),
+            bind: "127.0.0.1:0".parse().unwrap(),
+            handshake_ms: 2_500,
+            retransmit_us: 15_000,
+            max_retransmits: 9,
+        });
+        let text = cfg.to_toml().unwrap();
+        assert!(text.contains("[socket]"), "{text}");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.socket, cfg.socket);
+        assert_eq!(back.net_config().socket, cfg.socket);
+        // A partially specified table fills in defaults.
+        let partial = ExperimentConfig::from_toml(&format!(
+            "{}[socket]\nprocs = 4\n",
+            text.split("[socket]").next().unwrap()
+        ))
+        .unwrap();
+        let k = partial.socket.expect("present table parses to Some");
+        assert_eq!(k.procs, 4);
+        assert_eq!(k.driver, crate::net::SocketConfig::default().driver);
+        // A malformed address is a config error, not a silent default.
+        let err = ExperimentConfig::from_toml(&format!(
+            "{}[socket]\ndriver = \"not-an-address\"\n",
+            text.split("[socket]").next().unwrap()
         ))
         .unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err}");

@@ -67,6 +67,7 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
         transport: TransportKind::Channel,
         net_workers: 0,
         sim: SimConfig::default(),
+        socket: None,
         wire: None,
         faults: None,
         grow: None,
@@ -110,6 +111,7 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
         transport: TransportKind::Channel,
         net_workers: 0,
         sim: SimConfig::default(),
+        socket: None,
         wire: None,
         faults: None,
         grow: None,
@@ -160,6 +162,7 @@ pub fn churn() -> ExperimentConfig {
         transport: TransportKind::Sim,
         net_workers: 0,
         sim: SimConfig::zero_latency(61),
+        socket: None,
         wire: None,
         faults: Some(FaultConfig {
             kills: 4,
@@ -279,6 +282,26 @@ pub fn wire() -> ExperimentConfig {
     cfg.name = "wire".into();
     cfg.faults = None;
     cfg.sim = SimConfig::zero_latency(61);
+    cfg
+}
+
+/// The real-socket scenario (`gridmc bench-table socket`,
+/// `BENCH_socket.json`): the same 6×6 problem as [`churn`], fault-free,
+/// run three times — once per transport stack. The channel leg is the
+/// in-process oracle; the TCP leg spreads the same grid over real OS
+/// processes (`gridmc serve-block` children) and must reproduce the
+/// oracle's factors *bit-for-bit*; the UDP leg rides best-effort
+/// datagrams with ack-driven retransmit and is held to a statistical
+/// RMSE gate instead. The preset itself pins the oracle leg
+/// (`transport = channel`); the bench harness toggles `cfg.transport`
+/// and fills in the ephemeral control/data addresses per leg.
+pub fn socket() -> ExperimentConfig {
+    let mut cfg = churn();
+    cfg.name = "socket".into();
+    cfg.transport = TransportKind::Channel;
+    cfg.sim = SimConfig::default();
+    cfg.faults = None;
+    cfg.socket = Some(crate::net::SocketConfig::default());
     cfg
 }
 
@@ -433,6 +456,21 @@ mod tests {
         let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
         assert_eq!(back.wire, cfg.wire);
         assert_eq!(back.sim, cfg.sim);
+    }
+
+    #[test]
+    fn socket_preset_is_well_formed() {
+        let cfg = socket();
+        assert_eq!(cfg.transport, TransportKind::Channel, "the preset pins the oracle leg");
+        assert_eq!(cfg.driver, DriverChoice::Parallel, "bit-identity needs the barrier");
+        assert!(cfg.faults.is_none(), "the scenario isolates transports from churn");
+        let k = cfg.socket.expect("socket preset carries a [socket] table");
+        assert!(k.procs >= 2, "a socket run needs at least one serve-block child");
+        assert!(k.procs <= cfg.grid.p * cfg.grid.q, "every process must own a block");
+        // Round-trips through TOML like every other preset.
+        let back = ExperimentConfig::from_toml(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.socket, cfg.socket);
+        assert_eq!(back.transport, cfg.transport);
     }
 
     #[test]

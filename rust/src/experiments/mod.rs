@@ -21,6 +21,7 @@ pub mod ablations;
 pub mod fig2;
 pub mod parallel;
 pub mod scenarios;
+pub mod serve;
 pub mod table2;
 pub mod table3;
 

@@ -44,6 +44,10 @@ pub use super::scenarios::trace_overhead::{
     collect_trace_overhead, render_trace_overhead, run_trace_overhead,
     write_trace_overhead_json, OverheadOutcome, OverheadRun,
 };
+pub use super::scenarios::socket::{
+    collect_socket, compare_states, render_socket, run_socket, write_socket_json, SocketLeg,
+    SocketOutcome,
+};
 pub use super::scenarios::wire::{
     collect_wire, render_wire, run_wire, write_wire_json, WireLeg, WireOutcome,
 };

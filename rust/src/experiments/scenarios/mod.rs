@@ -2,7 +2,8 @@
 //!
 //! Each robustness scenario — churn recovery, membership growth,
 //! membership shrink, decentralized liveness, flight-recorder
-//! overhead, wire efficiency — lives in its own file
+//! overhead, wire efficiency, real-socket transports — lives in its
+//! own file
 //! with the same shape:
 //! `collect_*` trains the preset's legs and returns a typed outcome,
 //! `render_*` prints the human table, `write_*_json` emits the
@@ -17,6 +18,7 @@ pub mod churn;
 pub mod grow;
 pub mod liveness;
 pub mod shrink;
+pub mod socket;
 pub mod trace_overhead;
 pub mod wire;
 

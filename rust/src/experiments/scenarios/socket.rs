@@ -1,0 +1,435 @@
+//! The real-socket scenario (`gridmc bench-table socket`,
+//! `BENCH_socket.json`).
+//!
+//! Trains the [`presets::socket`] problem three times on the same
+//! dataset — once per transport stack. The `channel` leg is the
+//! in-process oracle. The `tcp` leg spreads the same grid over
+//! [`SOCKET_PROCS`] real OS processes (this process is rank 0, the
+//! rest are spawned `gridmc serve-block` children) and must reproduce
+//! the oracle's final factors *bit-for-bit* — same seeds, same
+//! schedule, per-edge ordered delivery. The `udp` leg rides
+//! best-effort datagrams with ack-driven retransmit; duplicates and
+//! late drops make it statistically (not bitwise) equivalent, so it is
+//! held to the [`SOCKET_UDP_RMSE_BUDGET`] gate instead. The artifact
+//! is the oracle-vs-socket equivalence record (PERF.md §Sockets).
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::config::{presets, ExperimentConfig};
+use crate::metrics::{bench_json_header, TablePrinter};
+use crate::model::FactorState;
+use crate::net::TransportKind;
+use crate::{Error, Result};
+
+use super::write_grid_and_unit;
+
+/// Processes per socket leg: rank 0 (the driver, this process) plus
+/// two `serve-block` children.
+pub const SOCKET_PROCS: usize = 3;
+/// The UDP leg's test RMSE may exceed the oracle's by at most this
+/// ratio (≤ 5% — retransmit losses perturb, they must not derail).
+pub const SOCKET_UDP_RMSE_BUDGET: f64 = 1.05;
+/// How long the driver waits for spawned children to exit after a leg.
+const CHILD_REAP_BUDGET: Duration = Duration::from_secs(20);
+
+/// One transport leg's measurement.
+#[derive(Debug, Clone)]
+pub struct SocketLeg {
+    /// Transport label (`channel`, `tcp`, `udp`).
+    pub label: &'static str,
+    pub rmse: f64,
+    pub final_cost: f64,
+    pub iters: u64,
+    /// Every factor f32 equals the oracle's bit pattern (trivially true
+    /// for the oracle itself).
+    pub bit_identical: bool,
+    /// Largest elementwise |factor − oracle factor|.
+    pub max_factor_delta: f64,
+    pub wall: Duration,
+}
+
+/// The socket scenario's full result (`BENCH_socket.json`).
+#[derive(Debug, Clone)]
+pub struct SocketOutcome {
+    pub grid: (usize, usize),
+    /// Processes per socket leg (driver + children).
+    pub procs: usize,
+    /// One leg per transport, oracle first.
+    pub legs: Vec<SocketLeg>,
+}
+
+impl SocketOutcome {
+    fn leg(&self, label: &str) -> Option<&SocketLeg> {
+        self.legs.iter().find(|l| l.label == label)
+    }
+
+    /// RMSE of `label` relative to the `channel` oracle (1.0 = no
+    /// accuracy cost).
+    pub fn rmse_ratio(&self, label: &str) -> f64 {
+        match (self.leg("channel"), self.leg(label)) {
+            (Some(base), Some(leg)) => leg.rmse / base.rmse.max(1e-12),
+            _ => f64::NAN,
+        }
+    }
+
+    /// The scenario's two-sided gate: TCP must be bit-identical to the
+    /// oracle, UDP must stay inside the RMSE budget.
+    pub fn gate_passes(&self) -> bool {
+        self.leg("tcp").is_some_and(|l| l.bit_identical)
+            && self
+                .leg("udp")
+                .is_some_and(|_| self.rmse_ratio("udp") <= SOCKET_UDP_RMSE_BUDGET)
+    }
+}
+
+/// Elementwise factor comparison against the oracle: (all bit
+/// patterns equal, largest absolute difference).
+pub fn compare_states(oracle: &FactorState, other: &FactorState) -> (bool, f64) {
+    let mut identical = true;
+    let mut max_delta = 0.0f64;
+    for id in oracle.spec().blocks() {
+        for (a, b) in [(oracle.u(id), other.u(id)), (oracle.w(id), other.w(id))] {
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                if x.to_bits() != y.to_bits() {
+                    identical = false;
+                }
+                max_delta = max_delta.max((f64::from(*x) - f64::from(*y)).abs());
+            }
+        }
+    }
+    (identical, max_delta)
+}
+
+/// The `gridmc` binary that hosts `serve-block` children: an explicit
+/// `GRIDMC_BIN` override, else this very executable — the bench runs
+/// through `gridmc bench-table socket`, so rank 0 *is* the launcher.
+fn serve_binary() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("GRIDMC_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe()
+        .map_err(|e| Error::Config(format!("cannot locate the gridmc binary: {e}")))?;
+    let stem = exe.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+    if stem != "gridmc" {
+        return Err(Error::Config(format!(
+            "the socket bench spawns `gridmc serve-block` children but is running as \
+             {stem:?}; invoke it through the gridmc binary or set GRIDMC_BIN"
+        )));
+    }
+    Ok(exe)
+}
+
+/// Reserve a free loopback port for the control plane. The listener is
+/// dropped before the driver rebinds it — a tiny race, standard for
+/// ephemeral-port test harnesses.
+fn free_loopback_addr() -> Result<SocketAddr> {
+    let l = TcpListener::bind("127.0.0.1:0")?;
+    Ok(l.local_addr()?)
+}
+
+/// Kill-or-wait every child. `failed` kills immediately (the run
+/// already broke); otherwise children get [`CHILD_REAP_BUDGET`] to see
+/// the control EOF and exit on their own.
+fn reap_children(mut children: Vec<Child>, failed: bool) {
+    let deadline = Instant::now() + CHILD_REAP_BUDGET;
+    for child in children.iter_mut() {
+        if failed {
+            let _ = child.kill();
+        }
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                _ => {
+                    log::warn!("serve-block child did not exit; killing it");
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Run one socket leg: write the leg's config, spawn the serve-block
+/// children, drive rank 0 through the normal experiment path, reap.
+fn run_socket_leg(
+    base: &ExperimentConfig,
+    data: &crate::data::SplitDataset,
+    kind: TransportKind,
+) -> Result<crate::experiments::Outcome> {
+    let label = kind.as_str();
+    let mut cfg = base.clone();
+    cfg.name = format!("socket-{label}");
+    cfg.transport = kind;
+    let mut sock = cfg.socket.unwrap_or_default();
+    sock.procs = SOCKET_PROCS;
+    sock.driver = free_loopback_addr()?;
+    cfg.socket = Some(sock);
+
+    let dir = std::env::temp_dir().join(format!("gridmc-socket-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{label}.toml"));
+    std::fs::write(&path, cfg.to_toml()?)?;
+
+    let bin = serve_binary()?;
+    let mut children = Vec::new();
+    for rank in 1..sock.procs {
+        let child = Command::new(&bin)
+            .arg("serve-block")
+            .arg("--config")
+            .arg(&path)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .stdout(Stdio::null())
+            .spawn()
+            .map_err(|e| Error::Config(format!("spawn serve-block rank {rank}: {e}")))?;
+        children.push(child);
+    }
+    let result = crate::experiments::run_experiment_on(&cfg, data);
+    reap_children(children, result.is_err());
+    result
+}
+
+/// Train every transport on the same dataset and collect the record.
+pub fn collect_socket() -> Result<SocketOutcome> {
+    let base = presets::apply_iter_scale(presets::socket());
+    let data = base.dataset.load()?;
+
+    let mut oracle_cfg = base.clone();
+    oracle_cfg.name = "socket-channel".into();
+    oracle_cfg.transport = TransportKind::Channel;
+    let oracle = crate::experiments::run_experiment_on(&oracle_cfg, &data)?;
+
+    let mut legs = vec![SocketLeg {
+        label: "channel",
+        rmse: oracle.test_rmse,
+        final_cost: oracle.report.final_cost,
+        iters: oracle.report.iters,
+        bit_identical: true,
+        max_factor_delta: 0.0,
+        wall: oracle.report.wall,
+    }];
+    for kind in [TransportKind::Tcp, TransportKind::Udp] {
+        let o = run_socket_leg(&base, &data, kind)?;
+        let (bit_identical, max_factor_delta) = compare_states(&oracle.state, &o.state);
+        log::info!(
+            "socket leg {} done (bit-identical: {bit_identical}, max delta {max_factor_delta:.3e})",
+            kind.as_str()
+        );
+        legs.push(SocketLeg {
+            label: kind.as_str(),
+            rmse: o.test_rmse,
+            final_cost: o.report.final_cost,
+            iters: o.report.iters,
+            bit_identical,
+            max_factor_delta,
+            wall: o.report.wall,
+        });
+    }
+    let outcome = SocketOutcome { grid: (base.grid.p, base.grid.q), procs: SOCKET_PROCS, legs };
+    if !outcome.gate_passes() {
+        log::warn!(
+            "socket gate missed: tcp bit-identical {}, udp rmse ratio {:.4} \
+             (budget {SOCKET_UDP_RMSE_BUDGET})",
+            outcome.leg("tcp").map(|l| l.bit_identical).unwrap_or(false),
+            outcome.rmse_ratio("udp")
+        );
+    }
+    Ok(outcome)
+}
+
+/// Render the equivalence table plus the gate verdict.
+pub fn render_socket(o: &SocketOutcome) -> String {
+    let mut t = TablePrinter::new(&[
+        "transport",
+        "test RMSE",
+        "rmse ratio",
+        "bit-identical",
+        "max delta",
+        "iters",
+        "wall",
+    ]);
+    for leg in &o.legs {
+        t.row(&[
+            leg.label.to_string(),
+            format!("{:.4}", leg.rmse),
+            format!("{:.4}", o.rmse_ratio(leg.label)),
+            leg.bit_identical.to_string(),
+            format!("{:.3e}", leg.max_factor_delta),
+            leg.iters.to_string(),
+            format!("{:.2?}", leg.wall),
+        ]);
+    }
+    format!(
+        "== socket transports ({p}x{q} grid over {procs} processes) ==\n{table}\
+         gate: tcp bit-identical {tcp}, udp rmse ratio {ratio:.4} vs budget {budget} \
+         — {verdict}\n",
+        p = o.grid.0,
+        q = o.grid.1,
+        procs = o.procs,
+        table = t.render(),
+        tcp = o.leg("tcp").map(|l| l.bit_identical).unwrap_or(false),
+        ratio = o.rmse_ratio("udp"),
+        budget = SOCKET_UDP_RMSE_BUDGET,
+        verdict = if o.gate_passes() { "PASS" } else { "MISS" },
+    )
+}
+
+/// Write `BENCH_socket.json`: header, grid, process count, one object
+/// per transport leg and the gate verdict.
+pub fn write_socket_json(path: &str, o: &SocketOutcome) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(bench_json_header("socket").as_bytes())?;
+    write_grid_and_unit(&mut f, o.grid)?;
+    writeln!(f, "  \"procs\": {},", o.procs)?;
+    writeln!(f, "  \"legs\": {{")?;
+    for (k, leg) in o.legs.iter().enumerate() {
+        let comma = if k + 1 == o.legs.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    \"{}\": {{ \"rmse\": {:.6e}, \"final_cost\": {:.6e}, \"iters\": {}, \
+             \"rmse_ratio\": {:.6}, \"bit_identical\": {}, \"max_factor_delta\": {:.6e}, \
+             \"wall_s\": {:.3} }}{comma}",
+            leg.label,
+            leg.rmse,
+            leg.final_cost,
+            leg.iters,
+            o.rmse_ratio(leg.label),
+            leg.bit_identical,
+            leg.max_factor_delta,
+            leg.wall.as_secs_f64()
+        )?;
+    }
+    writeln!(f, "  }},")?;
+    writeln!(
+        f,
+        "  \"gate\": {{ \"tcp_bit_identical\": {}, \
+         \"udp_rmse_budget\": {SOCKET_UDP_RMSE_BUDGET}, \"udp_rmse_ratio\": {:.6}, \
+         \"pass\": {} }}",
+        o.leg("tcp").map(|l| l.bit_identical).unwrap_or(false),
+        o.rmse_ratio("udp"),
+        o.gate_passes()
+    )?;
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
+/// Full socket harness: run every transport, write `BENCH_socket.json`,
+/// render.
+pub fn run_socket() -> Result<String> {
+    let outcome = collect_socket()?;
+    let out = "BENCH_socket.json";
+    let note = match write_socket_json(out, &outcome) {
+        Ok(()) => format!("wrote {out} ({} legs)\n", outcome.legs.len()),
+        Err(e) => format!("could not write {out}: {e}\n"),
+    };
+    Ok(format!("{}{note}", render_socket(&outcome)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_socket() -> SocketOutcome {
+        let leg = |label, rmse, bit_identical, max_factor_delta| SocketLeg {
+            label,
+            rmse,
+            final_cost: 1.0e-3,
+            iters: 6000,
+            bit_identical,
+            max_factor_delta,
+            wall: Duration::from_millis(900),
+        };
+        SocketOutcome {
+            grid: (6, 6),
+            procs: SOCKET_PROCS,
+            legs: vec![
+                leg("channel", 0.100, true, 0.0),
+                leg("tcp", 0.100, true, 0.0),
+                leg("udp", 0.103, false, 2.4e-2),
+            ],
+        }
+    }
+
+    #[test]
+    fn gate_needs_tcp_bits_and_udp_budget() {
+        let o = fake_socket();
+        assert!((o.rmse_ratio("channel") - 1.0).abs() < 1e-12);
+        assert!(o.rmse_ratio("udp") < SOCKET_UDP_RMSE_BUDGET);
+        assert!(o.gate_passes());
+        assert!(o.rmse_ratio("no_such_leg").is_nan());
+
+        let mut o = fake_socket();
+        o.legs[1].bit_identical = false; // a single flipped bit fails TCP
+        assert!(!o.gate_passes());
+        let mut o = fake_socket();
+        o.legs[2].rmse = 0.12; // 20% off: UDP budget fails
+        assert!(!o.gate_passes());
+    }
+
+    #[test]
+    fn compare_states_spots_a_single_bit() {
+        let spec = crate::grid::GridSpec::new(8, 8, 2, 2, 2);
+        let a = FactorState::init_random(spec, 9);
+        let mut b = FactorState::init_random(spec, 9);
+        assert_eq!(compare_states(&a, &b), (true, 0.0));
+        let id = crate::grid::BlockId::new(1, 1);
+        let mut u = b.u(id).clone();
+        let bumped = u.as_slice()[0] + 0.25;
+        u.set(0, 0, bumped);
+        b.set_u(id, u);
+        let (identical, delta) = compare_states(&a, &b);
+        assert!(!identical);
+        assert!((delta - 0.25).abs() < 1e-6, "{delta}");
+    }
+
+    #[test]
+    fn socket_render_reports_every_leg_and_the_gate() {
+        let s = render_socket(&fake_socket());
+        assert!(s.contains("channel"), "{s}");
+        assert!(s.contains("tcp"), "{s}");
+        assert!(s.contains("udp"), "{s}");
+        assert!(s.contains("gate: tcp bit-identical true"), "{s}");
+        assert!(s.contains("PASS"), "{s}");
+    }
+
+    #[test]
+    fn socket_json_is_balanced_and_complete() {
+        let dir = std::env::temp_dir().join("gridmc-socket-bench-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_socket.json");
+        let path = path.to_str().unwrap();
+        write_socket_json(path, &fake_socket()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"bench\": \"socket\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"unit\": \"rmse\""));
+        assert!(text.contains("\"procs\": 3"));
+        assert!(text.contains("\"legs\": {"));
+        assert!(text.contains("\"channel\""));
+        assert!(text.contains("\"bit_identical\": true"));
+        assert!(text.contains("\"gate\": {"));
+        assert!(text.contains("\"pass\": true"));
+        let opens = text.matches('{').count();
+        let closes = text.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn serve_binary_rejects_non_gridmc_hosts() {
+        // Unit tests run inside the test binary, which cannot host
+        // serve-block children without an explicit override.
+        if std::env::var("GRIDMC_BIN").is_ok() {
+            return;
+        }
+        let err = serve_binary().unwrap_err();
+        assert!(err.to_string().contains("GRIDMC_BIN"), "{err}");
+    }
+}

@@ -1,0 +1,124 @@
+//! The `gridmc serve-block` entry point: rebuild the driver's exact
+//! spawn environment inside a child process, then host one band of
+//! agents over the socket transport ([`crate::net::socket`]).
+//!
+//! Bit-identity with the in-process oracle rests on every process
+//! deriving the *same* starting point from the shared experiment
+//! config: the same dataset (seeded generation or file load), the same
+//! grid spec, the same prepared engine, and the same
+//! [`FactorState::init_random`] seed. This helper replicates, step for
+//! step, the prep sequence of the gossip drivers' `run_gossip_driver`
+//! (partition → engine prepare → seeded factors → checkpoint store →
+//! dormant set → recorder), so a child's block `(i, j)` starts from
+//! exactly the factors the oracle's block `(i, j)` would.
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::SplitDataset;
+use crate::engine::Engine;
+use crate::gossip::{CheckpointStore, GrowthPlan};
+use crate::grid::BlockPartition;
+use crate::model::FactorState;
+use crate::net::{self, socket};
+use crate::trace::Recorder;
+use crate::{Error, Result};
+
+use super::build_engine;
+
+/// Host rank `rank`'s band of agents for the experiment described by
+/// `cfg`. Blocks until the driver process closes the control
+/// connection (end of run). `cfg.transport` must be `tcp` or `udp` and
+/// `cfg.socket` must name the driver's control address.
+pub fn serve_block(cfg: &ExperimentConfig, rank: usize) -> Result<()> {
+    let socket_cfg = cfg.socket.ok_or_else(|| {
+        Error::Config("serve-block needs a [socket] table naming the driver address".into())
+    })?;
+    let data: SplitDataset = cfg.dataset.load()?;
+    let spec = cfg.grid_spec(data.m, data.n);
+    spec.validate()?;
+
+    // Mirror run_gossip_driver's prep exactly — same order, same seeds.
+    let partition = BlockPartition::new(spec, &data.train)?;
+    let mut engine = build_engine(cfg.engine, &spec)?;
+    engine.prepare(&partition)?;
+    let engine: Arc<dyn Engine> = Arc::from(engine);
+    let state = FactorState::init_random(spec, cfg.solver.seed);
+    let cadence = cfg
+        .faults
+        .as_ref()
+        .map(|f| f.checkpoint_every)
+        .unwrap_or(0)
+        .max(cfg.checkpoint_every);
+    let checkpoints = if cadence > 0 {
+        Some(match &cfg.checkpoint_dir {
+            Some(dir) => CheckpointStore::durable(cadence, dir)?,
+            None => CheckpointStore::in_memory(spec, cadence),
+        })
+    } else {
+        None
+    };
+    let growth = cfg
+        .grow
+        .as_ref()
+        .map(|g| GrowthPlan::trailing_columns(spec, g.columns, g.join_step))
+        .transpose()?
+        .unwrap_or_default();
+    let dormant: net::DormantSet = growth.blocks.iter().map(|b| b.index(spec.q)).collect();
+    let trace = cfg.trace.clone().unwrap_or_default();
+    let recorder = Arc::new(Recorder::new(spec.p, spec.q, &trace));
+
+    socket::serve_block(
+        cfg.transport,
+        socket_cfg,
+        rank,
+        spec,
+        engine,
+        state,
+        checkpoints,
+        &dormant,
+        cfg.liveness,
+        cfg.wire.unwrap_or_default(),
+        recorder,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn serve_block_requires_a_socket_table() {
+        let mut cfg = presets::socket();
+        cfg.transport = crate::net::TransportKind::Tcp;
+        cfg.socket = None;
+        let err = serve_block(&cfg, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn serve_block_rejects_in_process_transports() {
+        // The channel stack has no serve-block role to play; the
+        // mistake should surface before any socket is bound.
+        let mut cfg = presets::socket();
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 48;
+            s.n = 48;
+        }
+        let err = serve_block(&cfg, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn serve_block_rejects_rank_zero() {
+        let mut cfg = presets::socket();
+        cfg.transport = crate::net::TransportKind::Tcp;
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 48;
+            s.n = 48;
+        }
+        let err = serve_block(&cfg, 0).unwrap_err();
+        assert!(err.to_string().contains("rank 0"), "{err}");
+    }
+}

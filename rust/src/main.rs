@@ -5,8 +5,9 @@
 //!              [--workers N] [--scale 0.1] [--out-csv curve.csv]
 //!              [--trace trace.json]
 //! gridmc train --config configs/my.toml
+//! gridmc serve-block --config configs/my.toml --rank 1
 //! gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|
-//!                     trace-overhead|wire|ablations> [--scale S]
+//!                     trace-overhead|wire|socket|ablations> [--scale S]
 //! gridmc gen-data --preset ml1m --out /tmp/ml1m.csv [--seed 7]
 //! gridmc inspect --preset exp4
 //! ```
@@ -27,10 +28,12 @@ const USAGE: &str = "\
 gridmc — two-dimensional gossip matrix completion (Bhutani & Mishra 2017)
 
 USAGE:
-  gridmc train --preset <exp1..exp6|churn|grow|shrink|liveness|wire|table3-<ds>-<g>-<r>> [options]
+  gridmc train --preset <exp1..exp6|churn|grow|shrink|liveness|wire|socket|table3-<ds>-<g>-<r>> [options]
   gridmc train --config <file.toml> [options]
+  gridmc serve-block --config <file.toml> --rank <N>   host one band of a
+                      multi-process tcp/udp grid (rank 0 is the driver)
   gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|
-                      trace-overhead|wire|ablations> [--scale S]
+                      trace-overhead|wire|socket|ablations> [--scale S]
   gridmc gen-data --preset <ml1m|ml10m|ml20m|netflix> --out <path> [--seed N]
   gridmc inspect --preset <name>
 
@@ -39,8 +42,9 @@ TRAIN OPTIONS:
   --driver <sequential|parallel|async|priority>
                                               override driver
   --workers <N>                               in-flight structures
-  --transport <channel|multiplex|sim|sim-multiplex>
-                                              gossip transport (net/)
+  --transport <channel|multiplex|sim|sim-multiplex|tcp|udp>
+                                              gossip transport (net/; tcp/udp
+                                              need a [socket] config table)
   --net-workers <N>                           multiplex worker threads (0 = auto)
   --scale <S>                                 scale max_iters/eval_every
   --out-csv <path>                            write the cost curve as CSV
@@ -104,6 +108,9 @@ fn resolve_preset(name: &str) -> Result<ExperimentConfig> {
     if name == "wire" {
         return Ok(presets::wire());
     }
+    if name == "socket" {
+        return Ok(presets::socket());
+    }
     if let Some(n) = name.strip_prefix("exp") {
         if let Ok(n) = n.parse::<usize>() {
             return presets::exp(n);
@@ -124,7 +131,7 @@ fn resolve_preset(name: &str) -> Result<ExperimentConfig> {
     }
     Err(Error::Config(format!(
         "unknown preset {name:?} (try exp1..exp6, churn, grow, shrink, liveness, \
-         or table3-ml1m-4-10)"
+         wire, socket, or table3-ml1m-4-10)"
     )))
 }
 
@@ -218,17 +225,34 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "liveness" => experiments::scenarios::liveness::run_liveness()?,
         "trace-overhead" => experiments::scenarios::trace_overhead::run_trace_overhead()?,
         "wire" => experiments::scenarios::wire::run_wire()?,
+        "socket" => experiments::scenarios::socket::run_socket()?,
         "ablations" => experiments::ablations::run()?,
         other => {
             return Err(Error::Config(format!(
                 "unknown table {other:?} \
                  (table2|table3|fig2|parallel|churn|grow|shrink|liveness|\
-                 trace-overhead|wire|ablations)"
+                 trace-overhead|wire|socket|ablations)"
             )))
         }
     };
     print!("{out}");
     Ok(())
+}
+
+fn cmd_serve_block(args: &Args) -> Result<()> {
+    let mut cfg = match (args.get("preset"), args.get("config")) {
+        (Some(p), None) => resolve_preset(p)?,
+        (None, Some(path)) => ExperimentConfig::from_file(path)?,
+        _ => return Err(Error::Config("pass exactly one of --preset / --config".into())),
+    };
+    if let Some(t) = args.get("transport") {
+        cfg.transport = TransportKind::parse(t)?;
+    }
+    let rank: usize = args
+        .require("rank")?
+        .parse()
+        .map_err(|_| Error::Config("bad --rank (expected a process rank >= 1)".into()))?;
+    experiments::serve::serve_block(&cfg, rank)
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -282,6 +306,7 @@ fn main() {
     };
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
+        "serve-block" => cmd_serve_block(&args),
         "bench-table" => cmd_bench_table(&args),
         "gen-data" => cmd_gen_data(&args),
         "inspect" => cmd_inspect(&args),

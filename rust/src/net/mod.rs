@@ -20,6 +20,12 @@
 //!   drop-with-retry) and accounts real bytes-on-the-wire through the
 //!   [`codec`] framing. Experiments can study gossip under realistic
 //!   networks without leaving the process.
+//! * [`TcpTransport`] / [`UdpTransport`] — the same grid spread over
+//!   real OS processes ([`socket`]): rank 0 drives and hosts a band of
+//!   agents, `gridmc serve-block` children host the rest, and peer
+//!   gossip crosses real sockets through the unchanged [`codec`]
+//!   framing. The sim stack is their oracle — same schedule, same
+//!   factors, real sockets.
 //!
 //! The driver side of the contract is [`Transport`]: address agents by
 //! [`BlockId`], receive [`DriverMsg`] completions. The agent side is
@@ -30,6 +36,7 @@
 
 pub mod codec;
 pub mod fault;
+pub mod socket;
 pub mod wire;
 
 mod channel;
@@ -40,6 +47,7 @@ pub use channel::ChannelTransport;
 pub use fault::{FaultConfig, FaultEvent, FaultPlan, FaultRecord, LinkFault};
 pub use multiplex::MultiplexTransport;
 pub use sim::{SimConfig, SimTransport, WireSnapshot, WireStats};
+pub use socket::{SocketConfig, TcpTransport, UdpTransport};
 pub use wire::{Compression, DeltaFrame, RowPatch, WireConfig, WireState};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -479,6 +487,10 @@ pub struct NetConfig {
     /// handed to every spawned agent. The default leaves every lever
     /// off — the exact pre-wire-layer protocol.
     pub wire: WireConfig,
+    /// Socket knobs for the multi-process transports. Required when
+    /// `kind` is [`TransportKind::Tcp`] or [`TransportKind::Udp`];
+    /// ignored by the in-process stacks.
+    pub socket: Option<SocketConfig>,
 }
 
 impl Default for NetConfig {
@@ -489,6 +501,7 @@ impl Default for NetConfig {
             sim: SimConfig::default(),
             liveness: None,
             wire: WireConfig::default(),
+            socket: None,
         }
     }
 }
@@ -525,9 +538,15 @@ impl NetConfig {
         self.wire = cfg;
         self
     }
+
+    /// Configure the multi-process socket transports.
+    pub fn with_socket(mut self, cfg: SocketConfig) -> Self {
+        self.socket = Some(cfg);
+        self
+    }
 }
 
-/// The four spawnable transport stacks.
+/// The spawnable transport stacks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TransportKind {
     /// One OS thread + mailbox per block agent.
@@ -539,6 +558,10 @@ pub enum TransportKind {
     Sim,
     /// [`SimTransport`] over [`MultiplexTransport`].
     SimMultiplex,
+    /// [`TcpTransport`]: multi-process bands over TCP streams.
+    Tcp,
+    /// [`UdpTransport`]: multi-process bands over UDP datagrams.
+    Udp,
 }
 
 impl TransportKind {
@@ -548,6 +571,8 @@ impl TransportKind {
             TransportKind::Multiplex => "multiplex",
             TransportKind::Sim => "sim",
             TransportKind::SimMultiplex => "sim-multiplex",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Udp => "udp",
         }
     }
 
@@ -557,6 +582,8 @@ impl TransportKind {
             "multiplex" => Ok(TransportKind::Multiplex),
             "sim" => Ok(TransportKind::Sim),
             "sim-multiplex" => Ok(TransportKind::SimMultiplex),
+            "tcp" => Ok(TransportKind::Tcp),
+            "udp" => Ok(TransportKind::Udp),
             other => Err(Error::Config(format!("unknown transport {other:?}"))),
         }
     }
@@ -631,6 +658,9 @@ pub fn spawn(
             net.wire,
             recorder,
         )),
+        TransportKind::Tcp | TransportKind::Udp => {
+            socket::spawn_socket(net, spec, engine, state, checkpoints, dormant, recorder)
+        }
     }
 }
 
@@ -645,10 +675,12 @@ mod tests {
             TransportKind::Multiplex,
             TransportKind::Sim,
             TransportKind::SimMultiplex,
+            TransportKind::Tcp,
+            TransportKind::Udp,
         ] {
             assert_eq!(TransportKind::parse(k.as_str()).unwrap(), k);
         }
-        assert!(TransportKind::parse("udp").is_err());
+        assert!(TransportKind::parse("quic").is_err());
     }
 
     #[test]

@@ -1,0 +1,628 @@
+//! Control-plane codec for the socket transports.
+//!
+//! The gossip wire codec ([`super::super::codec`]) deliberately frames
+//! only the ten peer-to-peer messages — in-process transports keep the
+//! driver's control plane as direct mailbox sends. Once a band of
+//! agents lives in another process, the control plane needs its own
+//! encoding: the driver's verbs travel *down* the per-child control
+//! TCP connection, and [`DriverMsg`] completions travel back *up* it.
+//!
+//! Tags start at 64 so a control payload can never be confused with a
+//! data-plane envelope (1–2) or a codec frame (1–10 behind the
+//! envelope):
+//!
+//! ```text
+//! [64] rank u32, gossip addr          — Hello      (child → driver)
+//! [65] n u32, n × gossip addr         — Welcome    (driver → child)
+//! [66] to.i u32, to.j u32, sub u8 …   — ToAgent    (driver → child)
+//! [67] sub u8 …                       — FromAgent  (child → driver)
+//! ```
+//!
+//! Strings (addresses, error text) travel as `[len u16 LE][utf8]`.
+//! Floats travel as raw IEEE-754 bit patterns, so a structure's
+//! [`StructureParams`] reach a remote anchor bit-exactly — the
+//! foundation of the TCP bit-identity gate in
+//! `tests/socket_loopback.rs`. Matrix payloads (a retiring block's
+//! parting factors) reuse the codec's `[rows][cols][f32 …]` layout and
+//! its `MAX_SIDE` guard before allocation.
+
+use std::net::SocketAddr;
+
+use crate::data::DenseMatrix;
+use crate::grid::{BlockId, Structure, StructureKind};
+use crate::{Error, Result};
+
+use super::super::{AgentMsg, DriverMsg};
+use crate::engine::StructureParams;
+
+const TAG_HELLO: u8 = 64;
+const TAG_WELCOME: u8 = 65;
+const TAG_TO_AGENT: u8 = 66;
+const TAG_FROM_AGENT: u8 = 67;
+
+const SUB_EXECUTE: u8 = 1;
+const SUB_GET_COST: u8 = 2;
+const SUB_ABORT: u8 = 3;
+const SUB_JOIN: u8 = 4;
+const SUB_RETIRE: u8 = 5;
+const SUB_CRASH: u8 = 6;
+const SUB_SHUTDOWN: u8 = 7;
+const SUB_PULSE: u8 = 8;
+
+const SUB_DONE: u8 = 1;
+const SUB_COST: u8 = 2;
+const SUB_RESTARTED: u8 = 3;
+const SUB_ABORTED: u8 = 4;
+const SUB_JOINED: u8 = 5;
+const SUB_RETIRED: u8 = 6;
+const SUB_EXPIRED: u8 = 7;
+
+/// Same corrupt-frame guard as the gossip codec: reject absurd matrix
+/// sides before allocating for them.
+const MAX_SIDE: u32 = 1 << 24;
+
+/// A decoded control-plane payload.
+#[derive(Debug)]
+pub enum CtrlMsg {
+    /// Child announces itself: its rank and its data-plane address.
+    Hello { rank: u32, gossip: SocketAddr },
+    /// Driver's reply: every rank's data-plane address, index = rank.
+    Welcome { addrs: Vec<SocketAddr> },
+    /// Driver verb for a block the child hosts.
+    ToAgent { to: BlockId, msg: AgentMsg },
+    /// Completion from a block the child hosts.
+    FromAgent(DriverMsg),
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_block(buf: &mut Vec<u8>, b: BlockId) {
+    put_u32(buf, b.i as u32);
+    put_u32(buf, b.j as u32);
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let len = bytes.len().min(u16::MAX as usize);
+    buf.extend_from_slice(&(len as u16).to_le_bytes());
+    buf.extend_from_slice(&bytes[..len]);
+}
+
+fn put_addr(buf: &mut Vec<u8>, a: &SocketAddr) {
+    put_str(buf, &a.to_string());
+}
+
+fn put_matrix(buf: &mut Vec<u8>, m: &DenseMatrix) {
+    put_u32(buf, m.rows() as u32);
+    put_u32(buf, m.cols() as u32);
+    for v in m.as_slice() {
+        put_f32(buf, *v);
+    }
+}
+
+fn put_opt_block(buf: &mut Vec<u8>, b: &Option<BlockId>) {
+    match b {
+        Some(b) => {
+            buf.push(1);
+            put_block(buf, *b);
+        }
+        None => buf.push(0),
+    }
+}
+
+fn put_result_unit(buf: &mut Vec<u8>, r: &Result<()>) {
+    match r {
+        Ok(()) => buf.push(1),
+        Err(e) => {
+            buf.push(0);
+            put_str(buf, &e.to_string());
+        }
+    }
+}
+
+/// Bounds-checked little-endian cursor (mirror of the codec's).
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Gossip("truncated control frame".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn block(&mut self) -> Result<BlockId> {
+        let i = self.u32()? as usize;
+        let j = self.u32()? as usize;
+        Ok(BlockId::new(i, j))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Gossip("non-utf8 string in control frame".into()))
+    }
+
+    fn addr(&mut self) -> Result<SocketAddr> {
+        let s = self.str()?;
+        s.parse().map_err(|_| Error::Gossip(format!("bad socket address in control frame: {s}")))
+    }
+
+    fn matrix(&mut self) -> Result<DenseMatrix> {
+        let rows = self.u32()?;
+        let cols = self.u32()?;
+        if rows > MAX_SIDE || cols > MAX_SIDE {
+            return Err(Error::Gossip(format!("control frame matrix {rows}x{cols} too large")));
+        }
+        let n = rows as usize * cols as usize;
+        let bytes = self.take(4 * n)?;
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        DenseMatrix::from_vec(rows as usize, cols as usize, data)
+    }
+
+    fn opt_block(&mut self) -> Result<Option<BlockId>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.block()?)),
+            f => Err(Error::Gossip(format!("bad option flag {f} in control frame"))),
+        }
+    }
+
+    fn result_unit(&mut self) -> Result<crate::Result<()>> {
+        match self.u8()? {
+            1 => Ok(Ok(())),
+            0 => Ok(Err(Error::Gossip(self.str()?))),
+            f => Err(Error::Gossip(format!("bad result flag {f} in control frame"))),
+        }
+    }
+
+    fn done(&mut self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Gossip("trailing bytes after control frame".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Encode a child's Hello.
+pub fn encode_hello(rank: u32, gossip: &SocketAddr) -> Vec<u8> {
+    let mut buf = vec![TAG_HELLO];
+    put_u32(&mut buf, rank);
+    put_addr(&mut buf, gossip);
+    buf
+}
+
+/// Encode the driver's Welcome (data-plane address per rank).
+pub fn encode_welcome(addrs: &[SocketAddr]) -> Vec<u8> {
+    let mut buf = vec![TAG_WELCOME];
+    put_u32(&mut buf, addrs.len() as u32);
+    for a in addrs {
+        put_addr(&mut buf, a);
+    }
+    buf
+}
+
+/// Encode a driver→agent control verb for a remote block.
+///
+/// Only the control plane is accepted; peer-to-peer gossip crosses the
+/// data plane through the gossip codec, never the control connection.
+pub fn encode_to_agent(to: BlockId, msg: &AgentMsg) -> Result<Vec<u8>> {
+    let mut buf = vec![TAG_TO_AGENT];
+    put_block(&mut buf, to);
+    match msg {
+        AgentMsg::Execute { structure, params, token } => {
+            buf.push(SUB_EXECUTE);
+            buf.push(match structure.kind {
+                StructureKind::Upper => 0,
+                StructureKind::Lower => 1,
+            });
+            put_block(&mut buf, structure.pivot);
+            put_u64(&mut buf, *token);
+            for v in [
+                params.rho,
+                params.lam,
+                params.gamma,
+                params.cf[0],
+                params.cf[1],
+                params.cf[2],
+                params.cu,
+                params.cw,
+            ] {
+                put_f32(&mut buf, v);
+            }
+        }
+        AgentMsg::GetCost { lambda } => {
+            buf.push(SUB_GET_COST);
+            put_f32(&mut buf, *lambda);
+        }
+        AgentMsg::Abort { token } => {
+            buf.push(SUB_ABORT);
+            put_u64(&mut buf, *token);
+        }
+        AgentMsg::Join => buf.push(SUB_JOIN),
+        AgentMsg::Retire { row_heir, col_heir } => {
+            buf.push(SUB_RETIRE);
+            put_opt_block(&mut buf, row_heir);
+            put_opt_block(&mut buf, col_heir);
+        }
+        AgentMsg::Crash => buf.push(SUB_CRASH),
+        AgentMsg::Shutdown => buf.push(SUB_SHUTDOWN),
+        AgentMsg::Pulse { tick } => {
+            buf.push(SUB_PULSE);
+            put_u64(&mut buf, *tick);
+        }
+        other => {
+            return Err(Error::Gossip(format!(
+                "{} is peer gossip, not control plane; it crosses the data socket",
+                other.kind()
+            )))
+        }
+    }
+    Ok(buf)
+}
+
+/// Encode an agent→driver completion from a remote block.
+pub fn encode_from_agent(msg: &DriverMsg) -> Vec<u8> {
+    let mut buf = vec![TAG_FROM_AGENT];
+    match msg {
+        DriverMsg::Done { anchor, token, result } => {
+            buf.push(SUB_DONE);
+            put_block(&mut buf, *anchor);
+            put_u64(&mut buf, *token);
+            put_result_unit(&mut buf, result);
+        }
+        DriverMsg::Cost { from, cost } => {
+            buf.push(SUB_COST);
+            put_block(&mut buf, *from);
+            match cost {
+                Ok(c) => {
+                    buf.push(1);
+                    buf.extend_from_slice(&c.to_le_bytes());
+                }
+                Err(e) => {
+                    buf.push(0);
+                    put_str(&mut buf, &e.to_string());
+                }
+            }
+        }
+        DriverMsg::Restarted { from, version, lost } => {
+            buf.push(SUB_RESTARTED);
+            put_block(&mut buf, *from);
+            put_u64(&mut buf, *version);
+            put_u64(&mut buf, *lost);
+        }
+        DriverMsg::Aborted { anchor, token } => {
+            buf.push(SUB_ABORTED);
+            put_block(&mut buf, *anchor);
+            put_u64(&mut buf, *token);
+        }
+        DriverMsg::Joined { from, version, warm } => {
+            buf.push(SUB_JOINED);
+            put_block(&mut buf, *from);
+            put_u64(&mut buf, *version);
+            buf.push(u8::from(*warm));
+        }
+        DriverMsg::Retired { from, version, u, w } => {
+            buf.push(SUB_RETIRED);
+            put_block(&mut buf, *from);
+            put_u64(&mut buf, *version);
+            put_matrix(&mut buf, u);
+            put_matrix(&mut buf, w);
+        }
+        DriverMsg::Expired { anchor, token, suspect } => {
+            buf.push(SUB_EXPIRED);
+            put_block(&mut buf, *anchor);
+            put_u64(&mut buf, *token);
+            put_block(&mut buf, *suspect);
+        }
+    }
+    buf
+}
+
+/// Decode any control-plane payload.
+pub fn decode(payload: &[u8]) -> Result<CtrlMsg> {
+    let mut cur = Cur::new(payload);
+    let tag = cur.u8()?;
+    let msg = match tag {
+        TAG_HELLO => {
+            let rank = cur.u32()?;
+            let gossip = cur.addr()?;
+            CtrlMsg::Hello { rank, gossip }
+        }
+        TAG_WELCOME => {
+            let n = cur.u32()? as usize;
+            if n > 4096 {
+                return Err(Error::Gossip(format!("welcome names {n} ranks; cap is 4096")));
+            }
+            let mut addrs = Vec::with_capacity(n);
+            for _ in 0..n {
+                addrs.push(cur.addr()?);
+            }
+            CtrlMsg::Welcome { addrs }
+        }
+        TAG_TO_AGENT => {
+            let to = cur.block()?;
+            let sub = cur.u8()?;
+            let msg = match sub {
+                SUB_EXECUTE => {
+                    let kind = match cur.u8()? {
+                        0 => StructureKind::Upper,
+                        1 => StructureKind::Lower,
+                        k => {
+                            return Err(Error::Gossip(format!("bad structure kind {k} in Execute")))
+                        }
+                    };
+                    let pivot = cur.block()?;
+                    let token = cur.u64()?;
+                    let mut f = [0f32; 8];
+                    for v in f.iter_mut() {
+                        *v = cur.f32()?;
+                    }
+                    AgentMsg::Execute {
+                        structure: Structure { kind, pivot },
+                        params: StructureParams {
+                            rho: f[0],
+                            lam: f[1],
+                            gamma: f[2],
+                            cf: [f[3], f[4], f[5]],
+                            cu: f[6],
+                            cw: f[7],
+                        },
+                        token,
+                    }
+                }
+                SUB_GET_COST => AgentMsg::GetCost { lambda: cur.f32()? },
+                SUB_ABORT => AgentMsg::Abort { token: cur.u64()? },
+                SUB_JOIN => AgentMsg::Join,
+                SUB_RETIRE => {
+                    AgentMsg::Retire { row_heir: cur.opt_block()?, col_heir: cur.opt_block()? }
+                }
+                SUB_CRASH => AgentMsg::Crash,
+                SUB_SHUTDOWN => AgentMsg::Shutdown,
+                SUB_PULSE => AgentMsg::Pulse { tick: cur.u64()? },
+                s => return Err(Error::Gossip(format!("unknown ToAgent sub-tag {s}"))),
+            };
+            CtrlMsg::ToAgent { to, msg }
+        }
+        TAG_FROM_AGENT => {
+            let sub = cur.u8()?;
+            let msg = match sub {
+                SUB_DONE => DriverMsg::Done {
+                    anchor: cur.block()?,
+                    token: cur.u64()?,
+                    result: cur.result_unit()?,
+                },
+                SUB_COST => {
+                    let from = cur.block()?;
+                    let cost = match cur.u8()? {
+                        1 => Ok(cur.f64()?),
+                        0 => Err(Error::Gossip(cur.str()?)),
+                        f => return Err(Error::Gossip(format!("bad cost flag {f}"))),
+                    };
+                    DriverMsg::Cost { from, cost }
+                }
+                SUB_RESTARTED => DriverMsg::Restarted {
+                    from: cur.block()?,
+                    version: cur.u64()?,
+                    lost: cur.u64()?,
+                },
+                SUB_ABORTED => DriverMsg::Aborted { anchor: cur.block()?, token: cur.u64()? },
+                SUB_JOINED => DriverMsg::Joined {
+                    from: cur.block()?,
+                    version: cur.u64()?,
+                    warm: cur.u8()? != 0,
+                },
+                SUB_RETIRED => DriverMsg::Retired {
+                    from: cur.block()?,
+                    version: cur.u64()?,
+                    u: cur.matrix()?,
+                    w: cur.matrix()?,
+                },
+                SUB_EXPIRED => DriverMsg::Expired {
+                    anchor: cur.block()?,
+                    token: cur.u64()?,
+                    suspect: cur.block()?,
+                },
+                s => return Err(Error::Gossip(format!("unknown FromAgent sub-tag {s}"))),
+            };
+            CtrlMsg::FromAgent(msg)
+        }
+        t => return Err(Error::Gossip(format!("unknown control tag {t}"))),
+    };
+    cur.done()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(payload: Vec<u8>) -> CtrlMsg {
+        decode(&payload).expect("decode")
+    }
+
+    #[test]
+    fn hello_welcome_roundtrip() {
+        let a: SocketAddr = "127.0.0.1:4100".parse().unwrap();
+        match roundtrip(encode_hello(3, &a)) {
+            CtrlMsg::Hello { rank, gossip } => {
+                assert_eq!(rank, 3);
+                assert_eq!(gossip, a);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+        let b: SocketAddr = "127.0.0.1:4101".parse().unwrap();
+        match roundtrip(encode_welcome(&[a, b])) {
+            CtrlMsg::Welcome { addrs } => assert_eq!(addrs, vec![a, b]),
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn execute_params_are_bit_exact() {
+        let params = StructureParams {
+            rho: 10.0,
+            lam: 1e-9,
+            gamma: 0.5f32.to_bits() as f32 / 3.0, // an awkward value
+            cf: [0.1, 0.2, f32::MIN_POSITIVE],
+            cu: -0.0,
+            cw: f32::MAX,
+        };
+        let msg = AgentMsg::Execute { structure: Structure::upper(1, 2), params, token: 99 };
+        let to = BlockId::new(1, 2);
+        match roundtrip(encode_to_agent(to, &msg).unwrap()) {
+            CtrlMsg::ToAgent { to: t, msg: AgentMsg::Execute { structure, params: p, token } } => {
+                assert_eq!(t, to);
+                assert_eq!(structure.kind, StructureKind::Upper);
+                assert_eq!(structure.pivot, BlockId::new(1, 2));
+                assert_eq!(token, 99);
+                assert_eq!(p.rho.to_bits(), params.rho.to_bits());
+                assert_eq!(p.lam.to_bits(), params.lam.to_bits());
+                assert_eq!(p.gamma.to_bits(), params.gamma.to_bits());
+                for k in 0..3 {
+                    assert_eq!(p.cf[k].to_bits(), params.cf[k].to_bits());
+                }
+                assert_eq!(p.cu.to_bits(), params.cu.to_bits());
+                assert_eq!(p.cw.to_bits(), params.cw.to_bits());
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_control_verb_roundtrips() {
+        let to = BlockId::new(0, 1);
+        let verbs = vec![
+            AgentMsg::GetCost { lambda: 1e-9 },
+            AgentMsg::Abort { token: 7 },
+            AgentMsg::Join,
+            AgentMsg::Retire { row_heir: Some(BlockId::new(2, 1)), col_heir: None },
+            AgentMsg::Crash,
+            AgentMsg::Shutdown,
+            AgentMsg::Pulse { tick: 123 },
+        ];
+        for v in verbs {
+            let kind = v.kind();
+            match roundtrip(encode_to_agent(to, &v).unwrap()) {
+                CtrlMsg::ToAgent { to: t, msg } => {
+                    assert_eq!(t, to);
+                    assert_eq!(msg.kind(), kind);
+                }
+                other => panic!("wrong decode: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn peer_gossip_rejected_on_control_plane() {
+        let err = encode_to_agent(BlockId::new(0, 0), &AgentMsg::Heartbeat {
+            from: BlockId::new(0, 1),
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn completions_roundtrip() {
+        let msgs = vec![
+            DriverMsg::Done { anchor: BlockId::new(0, 0), token: 1, result: Ok(()) },
+            DriverMsg::Done {
+                anchor: BlockId::new(1, 1),
+                token: 2,
+                result: Err(Error::Gossip("anchor lost".into())),
+            },
+            DriverMsg::Cost { from: BlockId::new(0, 1), cost: Ok(0.125) },
+            DriverMsg::Cost {
+                from: BlockId::new(0, 1),
+                cost: Err(Error::Gossip("crashed".into())),
+            },
+            DriverMsg::Restarted { from: BlockId::new(2, 0), version: 3, lost: 4 },
+            DriverMsg::Aborted { anchor: BlockId::new(1, 0), token: 9 },
+            DriverMsg::Joined { from: BlockId::new(0, 2), version: 1, warm: true },
+            DriverMsg::Expired {
+                anchor: BlockId::new(0, 0),
+                token: 5,
+                suspect: BlockId::new(1, 0),
+            },
+        ];
+        for m in msgs {
+            let kind = m.kind();
+            match roundtrip(encode_from_agent(&m)) {
+                CtrlMsg::FromAgent(d) => assert_eq!(d.kind(), kind),
+                other => panic!("wrong decode: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn retired_matrices_are_bit_exact() {
+        let u = DenseMatrix::from_vec(2, 3, vec![1.0, -0.0, 3.5, f32::MIN_POSITIVE, 5.0, 6.0])
+            .unwrap();
+        let w = DenseMatrix::from_vec(1, 2, vec![7.0, 8.0]).unwrap();
+        let msg = DriverMsg::Retired { from: BlockId::new(1, 2), version: 11, u, w };
+        match roundtrip(encode_from_agent(&msg)) {
+            CtrlMsg::FromAgent(DriverMsg::Retired { from, version, u, w }) => {
+                assert_eq!(from, BlockId::new(1, 2));
+                assert_eq!(version, 11);
+                assert_eq!(u.rows(), 2);
+                assert_eq!(u.as_slice()[1].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(w.as_slice(), &[7.0, 8.0]);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_unknown_frames_error() {
+        let good = encode_from_agent(&DriverMsg::Aborted { anchor: BlockId::new(0, 0), token: 1 });
+        for cut in 0..good.len() {
+            assert!(decode(&good[..cut]).is_err(), "prefix of len {cut} must not decode");
+        }
+        assert!(decode(&[200]).is_err());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode(&trailing).is_err());
+    }
+}

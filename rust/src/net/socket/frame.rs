@@ -1,0 +1,201 @@
+//! Byte framing for the socket transports.
+//!
+//! TCP is a byte stream, so every payload travels length-prefixed:
+//!
+//! ```text
+//! [len u32 LE] [payload × len]
+//! ```
+//!
+//! [`StreamDecoder`] reassembles payloads from arbitrary read
+//! boundaries — a frame split across any prefix, even one byte at a
+//! time, decodes identically (pinned by `tests/codec_roundtrip.rs`).
+//! A length prefix larger than [`MAX_FRAME`] is rejected *before* any
+//! allocation, so a corrupt or hostile prefix cannot balloon memory
+//! (the stream-level analogue of the codec's `MAX_SIDE` guard).
+//!
+//! On the data plane the payload itself is an envelope around a
+//! [`super::super::codec`] frame. The codec deliberately does not name
+//! the *destination* block (in-process transports route by mailbox),
+//! and `decode` tolerates trailing bytes, so the envelope must be a
+//! prefix — never a suffix — stripped before the codec sees the frame:
+//!
+//! ```text
+//! [DATA u8 = 1] [to.i u32] [to.j u32] [seq u64] [codec frame]
+//! [ACK  u8 = 2] [seq u64]
+//! ```
+//!
+//! `seq` duplicates the codec header's wire sequence so a UDP receiver
+//! can acknowledge a datagram without decoding it. TCP never sends
+//! acks; UDP acks every DATA payload it receives (including
+//! duplicates, which the agent-side dedup window absorbs).
+
+use crate::{Error, Result};
+
+/// Hard ceiling on a single framed payload. A rank-64 1024×1024 block
+/// factor pair is ~32 MiB; 256 MiB leaves an order of magnitude of
+/// headroom while still refusing pathological prefixes instantly.
+pub const MAX_FRAME: usize = 1 << 28;
+
+/// Data-plane envelope discriminant: gossip frame for a block.
+pub const PAYLOAD_DATA: u8 = 1;
+/// Data-plane envelope discriminant: UDP delivery acknowledgement.
+pub const PAYLOAD_ACK: u8 = 2;
+
+/// Bytes of the DATA envelope prefix: discriminant, destination, seq.
+pub const DATA_PREFIX_LEN: usize = 17;
+
+/// Length-prefix a payload for a TCP stream.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Incremental reassembler for length-prefixed frames.
+///
+/// Feed raw socket bytes with [`push`](Self::push); drain complete
+/// payloads with [`next_frame`](Self::next_frame). The decoder holds
+/// at most one partial frame plus whatever the kernel handed over in
+/// the last read, and validates every length prefix against
+/// [`MAX_FRAME`] before reserving a byte for the body.
+#[derive(Debug, Default)]
+pub struct StreamDecoder {
+    buf: Vec<u8>,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append bytes read from the stream.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Buffered bytes not yet drained as a complete frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Next complete payload, `Ok(None)` if more bytes are needed.
+    ///
+    /// Errors on an oversized length prefix; the connection is then
+    /// unrecoverable (framing is lost) and must be dropped.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > MAX_FRAME {
+            return Err(Error::Gossip(format!(
+                "stream frame length {len} exceeds cap {MAX_FRAME}; dropping connection"
+            )));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let payload = self.buf[4..4 + len].to_vec();
+        self.buf.drain(..4 + len);
+        Ok(Some(payload))
+    }
+}
+
+/// Wrap an encoded codec frame in a DATA envelope for `to`.
+pub fn data_envelope(to: crate::grid::BlockId, seq: u64, codec_frame: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(DATA_PREFIX_LEN + codec_frame.len());
+    out.push(PAYLOAD_DATA);
+    out.extend_from_slice(&(to.i as u32).to_le_bytes());
+    out.extend_from_slice(&(to.j as u32).to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(codec_frame);
+    out
+}
+
+/// Split a DATA envelope into `(to, seq, codec frame)`.
+pub fn parse_data_envelope(payload: &[u8]) -> Result<(crate::grid::BlockId, u64, &[u8])> {
+    if payload.len() < DATA_PREFIX_LEN || payload[0] != PAYLOAD_DATA {
+        return Err(Error::Gossip("malformed DATA envelope".into()));
+    }
+    let i = u32::from_le_bytes(payload[1..5].try_into().unwrap()) as usize;
+    let j = u32::from_le_bytes(payload[5..9].try_into().unwrap()) as usize;
+    let seq = u64::from_le_bytes(payload[9..17].try_into().unwrap());
+    Ok((crate::grid::BlockId::new(i, j), seq, &payload[DATA_PREFIX_LEN..]))
+}
+
+/// Build a UDP acknowledgement for wire sequence `seq`.
+pub fn ack_envelope(seq: u64) -> [u8; 9] {
+    let mut out = [0u8; 9];
+    out[0] = PAYLOAD_ACK;
+    out[1..9].copy_from_slice(&seq.to_le_bytes());
+    out
+}
+
+/// Parse a UDP acknowledgement back to its wire sequence.
+pub fn parse_ack(payload: &[u8]) -> Result<u64> {
+    if payload.len() != 9 || payload[0] != PAYLOAD_ACK {
+        return Err(Error::Gossip("malformed ACK envelope".into()));
+    }
+    Ok(u64::from_le_bytes(payload[1..9].try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::BlockId;
+
+    #[test]
+    fn frame_roundtrip_single_push() {
+        let payload = b"gossip".to_vec();
+        let mut dec = StreamDecoder::new();
+        dec.push(&frame(&payload));
+        assert_eq!(dec.next_frame().unwrap(), Some(payload));
+        assert_eq!(dec.next_frame().unwrap(), None);
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn two_frames_in_one_push() {
+        let a = vec![1u8; 5];
+        let b = vec![2u8; 9];
+        let mut bytes = frame(&a);
+        bytes.extend_from_slice(&frame(&b));
+        let mut dec = StreamDecoder::new();
+        dec.push(&bytes);
+        assert_eq!(dec.next_frame().unwrap(), Some(a));
+        assert_eq!(dec.next_frame().unwrap(), Some(b));
+        assert_eq!(dec.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn empty_payload_is_a_valid_frame() {
+        let mut dec = StreamDecoder::new();
+        dec.push(&frame(&[]));
+        assert_eq!(dec.next_frame().unwrap(), Some(Vec::new()));
+    }
+
+    #[test]
+    fn oversized_length_rejected_without_body() {
+        let mut dec = StreamDecoder::new();
+        dec.push(&((MAX_FRAME as u32 + 1).to_le_bytes()));
+        assert!(dec.next_frame().is_err());
+    }
+
+    #[test]
+    fn data_envelope_roundtrip() {
+        let inner = vec![7u8, 1, 2, 3];
+        let env = data_envelope(BlockId::new(3, 5), 42, &inner);
+        let (to, seq, body) = parse_data_envelope(&env).unwrap();
+        assert_eq!(to, BlockId::new(3, 5));
+        assert_eq!(seq, 42);
+        assert_eq!(body, &inner[..]);
+    }
+
+    #[test]
+    fn ack_roundtrip_and_rejects() {
+        assert_eq!(parse_ack(&ack_envelope(u64::MAX)).unwrap(), u64::MAX);
+        assert!(parse_ack(&[PAYLOAD_ACK, 0]).is_err());
+        assert!(parse_data_envelope(&ack_envelope(1)).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! The `gridmc serve-block` child: host one band of agents and bridge
+//! them to the driver process.
+//!
+//! Lifecycle:
+//!
+//! 1. Bind the data plane (ephemeral port), dial the driver's control
+//!    address — retrying until the handshake budget runs out, so
+//!    children may start before the driver.
+//! 2. `Hello` (rank + data-plane address) up, `Welcome` (the full
+//!    rank → address map) down. Now every process can route.
+//! 3. Spawn the band exactly as `ChannelTransport` would; a forwarder
+//!    thread encodes every [`super::super::DriverMsg`] completion up
+//!    the control stream, and the main loop decodes driver verbs down
+//!    it into local mailboxes.
+//! 4. Exit on control EOF: the driver closing the stream (its
+//!    transport `join`) *is* the shutdown signal. Any agents still
+//!    running get [`super::super::AgentMsg::Shutdown`] so their
+//!    threads wind down; then the plane stops and the process returns.
+//!    A crashed driver looks identical (EOF), so children never
+//!    outlive the run.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::engine::Engine;
+use crate::gossip::{CheckpointStore, LivenessConfig};
+use crate::grid::GridSpec;
+use crate::model::FactorState;
+use crate::trace::Recorder;
+use crate::{Error, Result};
+
+use super::super::{AgentMsg, DormantSet, TransportKind, WireConfig};
+use super::plane::Plane;
+use super::{
+    band_mailboxes, ctrl, frame, read_one_frame, spawn_band, validate, write_frame, Proto,
+    SeqSpace, SocketConfig, SocketPeers,
+};
+
+/// Run one band of agents to completion. Blocks until the driver
+/// closes the control connection (normal end of run) or the handshake
+/// fails. `rank` must be in `1..cfg.procs` — rank 0 is the driver.
+///
+/// The caller must hand over the *same* spec, engine preparation, and
+/// seeded `state` the driver built from the shared experiment config;
+/// identical per-process initialization is what makes the TCP stack
+/// bit-identical to the in-process reference.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_block(
+    kind: TransportKind,
+    cfg: SocketConfig,
+    rank: usize,
+    spec: GridSpec,
+    engine: Arc<dyn Engine>,
+    mut state: FactorState,
+    checkpoints: Option<Arc<CheckpointStore>>,
+    dormant: &DormantSet,
+    liveness: Option<LivenessConfig>,
+    wire: WireConfig,
+    recorder: Arc<Recorder>,
+) -> Result<()> {
+    let proto = Proto::of_kind(kind)?;
+    let n = spec.num_blocks();
+    validate(&cfg, n)?;
+    if rank == 0 || rank >= cfg.procs {
+        return Err(Error::Config(format!(
+            "serve-block hosts ranks 1..{}; rank 0 is the driver (got {rank})",
+            cfg.procs
+        )));
+    }
+
+    let plane = Arc::new(Plane::bind(proto, cfg.bind, &cfg)?);
+
+    // Dial the driver; it may not be up yet.
+    let deadline = Instant::now() + Duration::from_millis(cfg.handshake_ms);
+    let mut ctrl_stream = loop {
+        match TcpStream::connect(cfg.driver) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::Gossip(format!(
+                        "rank {rank}: driver {} never answered: {e}",
+                        cfg.driver
+                    )));
+                }
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    let _ = ctrl_stream.set_nodelay(true);
+    write_frame(&mut ctrl_stream, &ctrl::encode_hello(rank as u32, &plane.local_addr()))
+        .map_err(|e| Error::Gossip(format!("rank {rank}: hello send: {e}")))?;
+    let remaining =
+        deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
+    ctrl_stream.set_read_timeout(Some(remaining))?;
+    let payload = read_one_frame(&mut ctrl_stream)?
+        .ok_or_else(|| Error::Gossip(format!("rank {rank}: driver closed during handshake")))?;
+    let addrs = match ctrl::decode(&payload)? {
+        ctrl::CtrlMsg::Welcome { addrs } => addrs,
+        other => {
+            return Err(Error::Gossip(format!("rank {rank}: expected Welcome, got {other:?}")))
+        }
+    };
+    if addrs.len() != cfg.procs {
+        return Err(Error::Gossip(format!(
+            "rank {rank}: welcome names {} ranks, config says {}",
+            addrs.len(),
+            cfg.procs
+        )));
+    }
+    ctrl_stream.set_read_timeout(None)?;
+    plane.set_peers(&addrs);
+    log::info!(
+        "rank {rank}: joined a {}-process {}x{} grid over {}",
+        cfg.procs,
+        spec.p,
+        spec.q,
+        proto.name()
+    );
+
+    // Host the band.
+    let (local, rxs) = band_mailboxes(spec, cfg.procs, rank);
+    let owned: Vec<_> = rxs.iter().map(|(id, _)| *id).collect();
+    let peers = Arc::new(SocketPeers {
+        q: spec.q,
+        nblocks: n,
+        procs: cfg.procs,
+        rank,
+        local,
+        seqs: SeqSpace::new(&spec),
+        plane: plane.clone(),
+    });
+    let (driver_tx, driver_rx) = mpsc::channel();
+    let mut threads = plane.start(peers.clone());
+    threads.extend(spawn_band(
+        spec,
+        engine,
+        &mut state,
+        checkpoints,
+        dormant,
+        liveness,
+        wire,
+        recorder,
+        peers.clone(),
+        driver_tx,
+        rxs,
+    ));
+
+    // Forward completions up the control stream until the band winds
+    // down (every sender dropped) or the stream breaks.
+    let writer = Mutex::new(ctrl_stream.try_clone()?);
+    let forwarder = thread::Builder::new()
+        .name("gridmc-ctrl-up".into())
+        .spawn(move || {
+            while let Ok(d) = driver_rx.recv() {
+                let payload = ctrl::encode_from_agent(&d);
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut w, &payload).is_err() {
+                    // Driver gone; stop forwarding. Agents drain into
+                    // the closed channel's error path harmlessly.
+                    break;
+                }
+            }
+        })
+        .expect("spawn completion forwarder");
+
+    // Main loop: driver verbs → local mailboxes, until EOF.
+    let mut dec = frame::StreamDecoder::new();
+    let mut buf = [0u8; 16 * 1024];
+    'read: loop {
+        loop {
+            match dec.next_frame() {
+                Ok(Some(p)) => match ctrl::decode(&p) {
+                    Ok(ctrl::CtrlMsg::ToAgent { to, msg }) => {
+                        if let Err(e) = peers.deliver_local(to, msg) {
+                            log::debug!("rank {rank}: {e}");
+                        }
+                    }
+                    Ok(other) => log::warn!("rank {rank}: unexpected control frame {other:?}"),
+                    Err(e) => log::warn!("rank {rank}: control decode: {e}"),
+                },
+                Ok(None) => break,
+                Err(e) => {
+                    log::warn!("rank {rank}: control framing lost: {e}");
+                    break 'read;
+                }
+            }
+        }
+        match ctrl_stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(m) => dec.push(&buf[..m]),
+            Err(e) => {
+                log::debug!("rank {rank}: control read: {e}");
+                break;
+            }
+        }
+    }
+
+    // EOF: normally every agent has already retired (the driver joins
+    // only after collecting Retired). If the driver died mid-run,
+    // Shutdown still lands — agents are non-blocking — so the band
+    // can't wedge the process.
+    for id in owned {
+        let _ = peers.deliver_local(id, AgentMsg::Shutdown);
+    }
+    drop(peers);
+    plane.shutdown();
+    for t in threads {
+        let _ = t.join();
+    }
+    let _ = forwarder.join();
+    log::info!("rank {rank}: control link closed; band wound down");
+    Ok(())
+}

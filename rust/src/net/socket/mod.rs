@@ -1,0 +1,800 @@
+//! Real-socket transports: a grid spread over multiple OS processes.
+//!
+//! The in-process stacks ([`super::ChannelTransport`],
+//! [`super::MultiplexTransport`], [`super::SimTransport`]) keep every
+//! block agent inside one address space — the gossip never crosses a
+//! real network. This module makes the paper's "decentralized, no
+//! central server" claim literal: the grid's blocks are split into
+//! contiguous *bands* of linear block indices, one band per process
+//! ([`owner_rank`]), and every peer-to-peer frame between bands
+//! crosses a real socket through the unchanged gossip codec
+//! ([`super::codec`]).
+//!
+//! Topology: rank 0 is the driver process — it hosts its own band
+//! in-process *and* runs the training loop. Ranks `1..procs` are
+//! `gridmc serve-block` children, each hosting a band. Two planes
+//! connect them:
+//!
+//! * **Control plane** — one TCP connection per child, dialed at the
+//!   driver's well-known address ([`SocketConfig::driver`]). Children
+//!   introduce themselves (`Hello`: rank + data-plane address), the
+//!   driver replies with the full peer map (`Welcome`), and from then
+//!   on driver verbs (`Execute`, `GetCost`, `Pulse`, `Shutdown`, …)
+//!   flow down while [`super::DriverMsg`] completions flow back up
+//!   ([`ctrl`]).
+//! * **Data plane** — peer gossip between blocks, one socket per
+//!   process: length-prefixed codec frames over reconnecting TCP
+//!   streams, or per-frame datagrams with ack-driven retransmit over
+//!   UDP ([`frame`]).
+//!
+//! Delivery semantics match the sim transport: every remote frame
+//! arrives wrapped in [`super::AgentMsg::Sequenced`], so the agent
+//! dedup window absorbs UDP retransmits and the protocol above is
+//! byte-for-byte the in-process one. With TCP's per-edge ordering and
+//! identically seeded factor initialization in every process, a
+//! multi-process run is *bit-identical* to the single-process
+//! `ChannelTransport` reference — pinned by `tests/socket_loopback.rs`.
+//!
+//! There is no new failure protocol: a dropped connection or an
+//! unacked datagram is just a *quiet peer*. The liveness layer's
+//! heartbeats (codec tag 7) and phi-accrual deadlines become the real
+//! failure detector, exactly as they are under simulated loss.
+
+pub mod ctrl;
+pub mod frame;
+
+mod host;
+mod plane;
+
+pub use host::serve_block;
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::engine::Engine;
+use crate::gossip::{AgentStatus, BlockAgent, CheckpointStore, LivenessConfig};
+use crate::grid::{BlockId, GridSpec};
+use crate::model::FactorState;
+use crate::trace::Recorder;
+use crate::{Error, Result};
+
+use super::{
+    codec, AgentMsg, DeathWatch, DormantSet, DriverMsg, NetConfig, PeerSender, Router, SeqSpace,
+    Transport, TransportKind, WireConfig,
+};
+use plane::Plane;
+
+/// Knobs for the socket transports. Lives in [`NetConfig::socket`] and
+/// the `[socket]` table of an experiment TOML. `Copy` like the rest of
+/// the net config: addresses are real `SocketAddr`s, not strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SocketConfig {
+    /// Total processes (driver + children). Block `lin` lives on rank
+    /// `lin * procs / nblocks` — contiguous bands, every rank
+    /// non-empty whenever `2 ≤ procs ≤ nblocks`.
+    pub procs: usize,
+    /// The driver's well-known control-plane address; children dial it.
+    pub driver: SocketAddr,
+    /// Local data-plane bind address (port 0 = ephemeral; the real
+    /// port travels in the handshake).
+    pub bind: SocketAddr,
+    /// Handshake budget: the driver waits this long for every child's
+    /// Hello, children retry dialing the driver for this long.
+    pub handshake_ms: u64,
+    /// UDP retransmit timeout per unacked datagram.
+    pub retransmit_us: u64,
+    /// UDP retransmit cap; past it the frame is dropped (quiet peer).
+    pub max_retransmits: u32,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        Self {
+            procs: 2,
+            driver: SocketAddr::from(([127, 0, 0, 1], 7700)),
+            bind: SocketAddr::from(([127, 0, 0, 1], 0)),
+            handshake_ms: 10_000,
+            retransmit_us: 20_000,
+            max_retransmits: 50,
+        }
+    }
+}
+
+/// Which rank hosts linear block `lin`: contiguous bands of the
+/// row-major block order, balanced to within one block.
+pub fn owner_rank(lin: usize, nblocks: usize, procs: usize) -> usize {
+    debug_assert!(lin < nblocks && procs > 0);
+    lin * procs / nblocks
+}
+
+/// The two socket protocols.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Proto {
+    Tcp,
+    Udp,
+}
+
+impl Proto {
+    fn name(self) -> &'static str {
+        match self {
+            Proto::Tcp => "tcp",
+            Proto::Udp => "udp",
+        }
+    }
+
+    fn of_kind(kind: TransportKind) -> Result<Self> {
+        match kind {
+            TransportKind::Tcp => Ok(Proto::Tcp),
+            TransportKind::Udp => Ok(Proto::Udp),
+            other => Err(Error::Config(format!(
+                "transport {:?} is in-process; serve-block needs tcp or udp",
+                other.as_str()
+            ))),
+        }
+    }
+}
+
+/// Validate a socket run's geometry.
+fn validate(cfg: &SocketConfig, nblocks: usize) -> Result<()> {
+    if cfg.procs < 2 {
+        return Err(Error::Config(format!(
+            "socket transport needs at least 2 processes, got procs = {}",
+            cfg.procs
+        )));
+    }
+    if cfg.procs > nblocks {
+        return Err(Error::Config(format!(
+            "procs = {} exceeds the {nblocks} blocks of the grid; every rank needs a band",
+            cfg.procs
+        )));
+    }
+    Ok(())
+}
+
+/// This process's routing table: local mailboxes for the band it
+/// hosts, the data plane for everyone else's.
+///
+/// Remote sends draw a fresh per-edge sequence number from this
+/// process's own [`SeqSpace`] — deterministic because protocol traffic
+/// on a directed edge is causally ordered, unique across processes
+/// because the edge endpoints are baked into the high bits and each
+/// edge's source band is owned by exactly one process.
+pub(crate) struct SocketPeers {
+    q: usize,
+    nblocks: usize,
+    procs: usize,
+    rank: usize,
+    local: Vec<Option<mpsc::Sender<AgentMsg>>>,
+    seqs: SeqSpace,
+    plane: Arc<Plane>,
+}
+
+impl SocketPeers {
+    /// Deliver straight into a hosted mailbox (driver control verbs;
+    /// wire frames go through [`Self::deliver_wire`]).
+    pub(crate) fn deliver_local(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+        match self.local.get(to.index(self.q)).and_then(|t| t.as_ref()) {
+            Some(tx) => tx
+                .send(msg)
+                .map_err(|_| Error::Gossip(format!("agent {to} mailbox closed"))),
+            None => Err(Error::Gossip(format!("block {to} is not hosted by rank {}", self.rank))),
+        }
+    }
+
+    /// Deliver a frame that arrived off the wire, wrapped for the
+    /// agent-side dedup window (same shape as the sim link).
+    pub(crate) fn deliver_wire(&self, to: BlockId, seq: u64, inner: AgentMsg) -> Result<()> {
+        self.deliver_local(to, AgentMsg::Sequenced { seq, inner: Box::new(inner) })
+    }
+}
+
+impl PeerSender for SocketPeers {
+    fn send_to(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+        let lin = to.index(self.q);
+        if lin >= self.nblocks {
+            return Err(Error::Gossip(format!("no agent {to}")));
+        }
+        let rank = owner_rank(lin, self.nblocks, self.procs);
+        if rank == self.rank {
+            return self.deliver_local(to, msg);
+        }
+        let from = msg
+            .source()
+            .ok_or_else(|| Error::Gossip(format!("{} has no source block", msg.kind())))?;
+        let seq = self.seqs.next(from, to);
+        let bytes = codec::encode(&msg, seq)?;
+        let env = frame::data_envelope(to, seq, &bytes);
+        self.plane.send_data(rank, seq, &env)
+    }
+}
+
+/// Create mailboxes for the band `rank` hosts. Returns the full
+/// linear-indexed sender table (None off-band) and the per-block
+/// receivers to hand to [`spawn_band`].
+type Mailboxes = (Vec<Option<mpsc::Sender<AgentMsg>>>, Vec<(BlockId, mpsc::Receiver<AgentMsg>)>);
+
+fn band_mailboxes(spec: GridSpec, procs: usize, rank: usize) -> Mailboxes {
+    let n = spec.num_blocks();
+    let mut local: Vec<Option<mpsc::Sender<AgentMsg>>> = (0..n).map(|_| None).collect();
+    let mut rxs = Vec::new();
+    for id in spec.blocks() {
+        let lin = id.index(spec.q);
+        if owner_rank(lin, n, procs) == rank {
+            let (tx, rx) = mpsc::channel();
+            local[lin] = Some(tx);
+            rxs.push((id, rx));
+        }
+    }
+    (local, rxs)
+}
+
+/// Spawn one agent thread per hosted block — the exact
+/// [`super::ChannelTransport`] worker loop, routed over the socket
+/// peer table instead of an all-local one.
+#[allow(clippy::too_many_arguments)]
+fn spawn_band(
+    spec: GridSpec,
+    engine: Arc<dyn Engine>,
+    state: &mut FactorState,
+    checkpoints: Option<Arc<CheckpointStore>>,
+    dormant: &DormantSet,
+    liveness: Option<LivenessConfig>,
+    wire: WireConfig,
+    recorder: Arc<Recorder>,
+    peers: Arc<SocketPeers>,
+    driver_tx: mpsc::Sender<DriverMsg>,
+    rxs: Vec<(BlockId, mpsc::Receiver<AgentMsg>)>,
+) -> Vec<thread::JoinHandle<()>> {
+    let seqs = Arc::new(SeqSpace::new(&spec));
+    let mut threads = Vec::with_capacity(rxs.len());
+    for (id, rx) in rxs {
+        let (u, w) = state.take_block(id);
+        let mut agent = BlockAgent::new(id, u, w, engine.clone())
+            .with_grid(spec.p, spec.q)
+            .with_recorder(recorder.clone());
+        if let Some(cfg) = liveness {
+            agent = agent.with_liveness(cfg);
+        }
+        if wire.enabled() {
+            agent = agent.with_wire(wire);
+        }
+        if dormant.contains(&id.index(spec.q)) {
+            agent = agent.dormant();
+        }
+        if let Some(store) = &checkpoints {
+            agent = agent.with_checkpoints(store.clone());
+        }
+        let router = Router {
+            peers: peers.clone(),
+            driver: driver_tx.clone(),
+            tap: None,
+            seqs: seqs.clone(),
+            recorder: recorder.clone(),
+        };
+        threads.push(
+            thread::Builder::new()
+                .name(format!("gridmc-agent-{}-{}", id.i, id.j))
+                .spawn(move || {
+                    let _death = DeathWatch { label: id, driver: router.driver.clone() };
+                    let mut out = Vec::with_capacity(6);
+                    while let Ok(msg) = rx.recv() {
+                        router.recorder.msg_recv(id);
+                        let status = agent.on_msg(msg, &mut out);
+                        router.flush(id, &mut out);
+                        if status == AgentStatus::Retired {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn agent thread"),
+        );
+    }
+    threads
+}
+
+/// Read exactly one length-prefixed frame from a blocking stream.
+/// `Ok(None)` means clean EOF before a frame started.
+pub(crate) fn read_one_frame(s: &mut TcpStream) -> Result<Option<Vec<u8>>> {
+    let mut dec = frame::StreamDecoder::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        if let Some(p) = dec.next_frame()? {
+            return Ok(Some(p));
+        }
+        let n = s.read(&mut buf)?;
+        if n == 0 {
+            if dec.pending() > 0 {
+                return Err(Error::Gossip("connection closed mid-frame".into()));
+            }
+            return Ok(None);
+        }
+        dec.push(&buf[..n]);
+    }
+}
+
+/// Frame and write a control payload.
+fn write_frame(s: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    s.write_all(&frame::frame(payload))
+}
+
+/// The driver's control-plane handle to one child.
+struct CtrlPeer {
+    writer: Mutex<TcpStream>,
+    /// Clone of the same socket, used to force-close it at join time
+    /// (unblocks the reader thread and EOFs the child).
+    clone: TcpStream,
+    /// Flipped when the child's connection breaks: sends fail fast and
+    /// the driver's shutdown collection skips its blocks.
+    dead: Arc<AtomicBool>,
+}
+
+/// Shared guts of [`TcpTransport`] and [`UdpTransport`]: rank 0's band
+/// of in-process agents, the data plane, and one control connection
+/// per child.
+struct SocketCore {
+    spec: GridSpec,
+    procs: usize,
+    peers: Arc<SocketPeers>,
+    driver_rx: mpsc::Receiver<DriverMsg>,
+    ctrl: Vec<Option<CtrlPeer>>,
+    plane: Arc<Plane>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl SocketCore {
+    #[allow(clippy::too_many_arguments)]
+    fn spawn(
+        proto: Proto,
+        cfg: SocketConfig,
+        spec: GridSpec,
+        engine: Arc<dyn Engine>,
+        mut state: FactorState,
+        checkpoints: Option<Arc<CheckpointStore>>,
+        dormant: &DormantSet,
+        liveness: Option<LivenessConfig>,
+        wire: WireConfig,
+        recorder: Arc<Recorder>,
+    ) -> Result<Self> {
+        let n = spec.num_blocks();
+        validate(&cfg, n)?;
+        let plane = Arc::new(Plane::bind(proto, cfg.bind, &cfg)?);
+        let listener = TcpListener::bind(cfg.driver)
+            .map_err(|e| Error::Gossip(format!("bind control listener {}: {e}", cfg.driver)))?;
+        listener.set_nonblocking(true)?;
+
+        // Collect every child's Hello under the handshake deadline.
+        let deadline = Instant::now() + Duration::from_millis(cfg.handshake_ms);
+        let mut joined: Vec<Option<(TcpStream, SocketAddr)>> =
+            (0..cfg.procs).map(|_| None).collect();
+        let mut have = 1; // rank 0 is this process
+        while have < cfg.procs {
+            let now = Instant::now();
+            if now >= deadline {
+                let missing: Vec<usize> =
+                    (1..cfg.procs).filter(|&r| joined[r].is_none()).collect();
+                return Err(Error::Gossip(format!(
+                    "socket handshake timed out after {} ms; missing rank(s) {missing:?}",
+                    cfg.handshake_ms
+                )));
+            }
+            match listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false)?;
+                    let _ = s.set_nodelay(true);
+                    s.set_read_timeout(Some(deadline - now))?;
+                    let payload = match read_one_frame(&mut s) {
+                        Ok(Some(p)) => p,
+                        Ok(None) => continue, // probe connection; dropped
+                        Err(e) => {
+                            log::warn!("handshake read: {e}");
+                            continue;
+                        }
+                    };
+                    match ctrl::decode(&payload)? {
+                        ctrl::CtrlMsg::Hello { rank, gossip } => {
+                            let rank = rank as usize;
+                            if rank == 0 || rank >= cfg.procs {
+                                return Err(Error::Gossip(format!(
+                                    "hello from out-of-range rank {rank} (procs = {})",
+                                    cfg.procs
+                                )));
+                            }
+                            if joined[rank].is_some() {
+                                return Err(Error::Gossip(format!(
+                                    "duplicate hello from rank {rank}"
+                                )));
+                            }
+                            s.set_read_timeout(None)?;
+                            joined[rank] = Some((s, gossip));
+                            have += 1;
+                        }
+                        other => {
+                            return Err(Error::Gossip(format!(
+                                "expected Hello during handshake, got {other:?}"
+                            )))
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::Gossip(format!("control accept: {e}"))),
+            }
+        }
+
+        // Broadcast the peer map; rank 0's data plane leads the table.
+        let mut addrs = vec![plane.local_addr()];
+        for slot in joined.iter().skip(1) {
+            addrs.push(slot.as_ref().expect("handshake complete").1);
+        }
+        let welcome = ctrl::encode_welcome(&addrs);
+        for slot in joined.iter_mut().skip(1) {
+            let (s, _) = slot.as_mut().expect("handshake complete");
+            write_frame(s, &welcome)
+                .map_err(|e| Error::Gossip(format!("welcome send failed: {e}")))?;
+        }
+        plane.set_peers(&addrs);
+
+        // Rank 0's own band, hosted exactly like ChannelTransport.
+        let (local, rxs) = band_mailboxes(spec, cfg.procs, 0);
+        let peers = Arc::new(SocketPeers {
+            q: spec.q,
+            nblocks: n,
+            procs: cfg.procs,
+            rank: 0,
+            local,
+            seqs: SeqSpace::new(&spec),
+            plane: plane.clone(),
+        });
+        let (driver_tx, driver_rx) = mpsc::channel();
+        let mut threads = plane.start(peers.clone());
+        threads.extend(spawn_band(
+            spec,
+            engine,
+            &mut state,
+            checkpoints,
+            dormant,
+            liveness,
+            wire,
+            recorder,
+            peers.clone(),
+            driver_tx.clone(),
+            rxs,
+        ));
+
+        // One reader thread per child: completions fan into driver_rx.
+        let mut ctrl_peers: Vec<Option<CtrlPeer>> = vec![None];
+        for (rank, slot) in joined.into_iter().enumerate().skip(1) {
+            let (s, _) = slot.expect("handshake complete");
+            let clone = s.try_clone()?;
+            let reader = s.try_clone()?;
+            let dead = Arc::new(AtomicBool::new(false));
+            let dtx = driver_tx.clone();
+            let flag = dead.clone();
+            threads.push(
+                thread::Builder::new()
+                    .name(format!("gridmc-ctrl-{rank}"))
+                    .spawn(move || ctrl_reader(reader, rank, dtx, flag))
+                    .expect("spawn ctrl reader"),
+            );
+            ctrl_peers.push(Some(CtrlPeer { writer: Mutex::new(s), clone, dead }));
+        }
+        drop(driver_tx);
+        Ok(Self { spec, procs: cfg.procs, peers, driver_rx, ctrl: ctrl_peers, plane, threads })
+    }
+
+    fn send(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+        let lin = to.index(self.spec.q);
+        if lin >= self.spec.num_blocks() {
+            return Err(Error::Gossip(format!("no agent {to}")));
+        }
+        let rank = owner_rank(lin, self.spec.num_blocks(), self.procs);
+        if rank == 0 {
+            return self.peers.deliver_local(to, msg);
+        }
+        let peer = self.ctrl[rank].as_ref().expect("child rank has a control peer");
+        if peer.dead.load(Ordering::Relaxed) {
+            return Err(Error::Gossip(format!(
+                "control link to rank {rank} is down; {to} unreachable"
+            )));
+        }
+        let payload = ctrl::encode_to_agent(to, &msg)?;
+        let mut w = peer.writer.lock().unwrap();
+        if let Err(e) = write_frame(&mut w, &payload) {
+            peer.dead.store(true, Ordering::Relaxed);
+            return Err(Error::Gossip(format!("control send to rank {rank}: {e}")));
+        }
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<DriverMsg> {
+        self.driver_rx
+            .recv()
+            .map_err(|_| Error::Gossip("all agents disconnected".into()))
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<DriverMsg>> {
+        match self.driver_rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(Some(msg)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Gossip("all agents disconnected".into()))
+            }
+        }
+    }
+
+    fn join(self) {
+        let Self { ctrl, plane, threads, .. } = self;
+        // Closing the control links EOFs every child, which shuts its
+        // band down and exits; it also unblocks our reader threads.
+        for peer in ctrl.into_iter().flatten() {
+            let _ = peer.clone.shutdown(Shutdown::Both);
+        }
+        plane.shutdown();
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Drain one child's completions into the driver mailbox. On EOF or
+/// error the rank is marked dead: its blocks become quiet peers.
+fn ctrl_reader(
+    mut s: TcpStream,
+    rank: usize,
+    driver_tx: mpsc::Sender<DriverMsg>,
+    dead: Arc<AtomicBool>,
+) {
+    let mut dec = frame::StreamDecoder::new();
+    let mut buf = [0u8; 16 * 1024];
+    'read: loop {
+        loop {
+            match dec.next_frame() {
+                Ok(Some(p)) => match ctrl::decode(&p) {
+                    Ok(ctrl::CtrlMsg::FromAgent(d)) => {
+                        if driver_tx.send(d).is_err() {
+                            break 'read;
+                        }
+                    }
+                    Ok(other) => log::warn!("rank {rank} sent non-completion {other:?}"),
+                    Err(e) => log::warn!("rank {rank} control decode: {e}"),
+                },
+                Ok(None) => break,
+                Err(e) => {
+                    log::warn!("rank {rank} control stream: {e}");
+                    break 'read;
+                }
+            }
+        }
+        match s.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => dec.push(&buf[..n]),
+            Err(_) => break,
+        }
+    }
+    dead.store(true, Ordering::Relaxed);
+    log::warn!("control link to rank {rank} closed; its blocks are now quiet peers");
+}
+
+/// Multi-process grid over reconnecting TCP streams. Reliable in-order
+/// per-edge delivery: the bit-identity transport.
+pub struct TcpTransport(SocketCore);
+
+/// Multi-process grid over UDP datagrams with ack-driven retransmit.
+/// At-least-once delivery with bounded effort; converges statistically
+/// (the dedup window absorbs duplicates, liveness absorbs drops).
+pub struct UdpTransport(SocketCore);
+
+macro_rules! socket_transport {
+    ($ty:ident, $proto:expr, $name:literal) => {
+        impl $ty {
+            /// Spawn rank 0: bind the planes, run the handshake with
+            /// every `serve-block` child, then host the driver's own
+            /// band. Fails (rather than hanging) if a bind is refused
+            /// or a child never dials in.
+            #[allow(clippy::too_many_arguments)]
+            pub fn spawn(
+                cfg: SocketConfig,
+                spec: GridSpec,
+                engine: Arc<dyn Engine>,
+                state: FactorState,
+                checkpoints: Option<Arc<CheckpointStore>>,
+                dormant: &DormantSet,
+                liveness: Option<LivenessConfig>,
+                wire: WireConfig,
+                recorder: Arc<Recorder>,
+            ) -> Result<Self> {
+                SocketCore::spawn(
+                    $proto,
+                    cfg,
+                    spec,
+                    engine,
+                    state,
+                    checkpoints,
+                    dormant,
+                    liveness,
+                    wire,
+                    recorder,
+                )
+                .map(Self)
+            }
+        }
+
+        impl Transport for $ty {
+            fn name(&self) -> &'static str {
+                $name
+            }
+
+            fn send(&self, to: BlockId, msg: AgentMsg) -> Result<()> {
+                self.0.send(to, msg)
+            }
+
+            fn recv(&self) -> Result<DriverMsg> {
+                self.0.recv()
+            }
+
+            fn recv_timeout(&self, timeout: Duration) -> Result<Option<DriverMsg>> {
+                self.0.recv_timeout(timeout)
+            }
+
+            fn injector(&self) -> Arc<dyn PeerSender> {
+                self.0.peers.clone()
+            }
+
+            fn join(self: Box<Self>) {
+                self.0.join()
+            }
+        }
+    };
+}
+
+socket_transport!(TcpTransport, Proto::Tcp, "tcp");
+socket_transport!(UdpTransport, Proto::Udp, "udp");
+
+/// A transport that failed to come up. [`super::spawn`] is infallible
+/// by contract, so bind/handshake errors are stashed here and surface
+/// at the driver's first send or receive.
+pub(crate) struct PoisonedTransport {
+    name: &'static str,
+    err: String,
+}
+
+impl PoisonedTransport {
+    pub(crate) fn new(name: &'static str, err: String) -> Self {
+        log::error!("{name} transport failed to spawn: {err}");
+        Self { name, err }
+    }
+
+    fn gossip_err(&self) -> Error {
+        Error::Gossip(self.err.clone())
+    }
+}
+
+struct NoPeers {
+    err: String,
+}
+
+impl PeerSender for NoPeers {
+    fn send_to(&self, _to: BlockId, _msg: AgentMsg) -> Result<()> {
+        Err(Error::Gossip(self.err.clone()))
+    }
+}
+
+impl Transport for PoisonedTransport {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn send(&self, _to: BlockId, _msg: AgentMsg) -> Result<()> {
+        Err(self.gossip_err())
+    }
+
+    fn recv(&self) -> Result<DriverMsg> {
+        Err(self.gossip_err())
+    }
+
+    fn recv_timeout(&self, _timeout: Duration) -> Result<Option<DriverMsg>> {
+        Err(self.gossip_err())
+    }
+
+    fn injector(&self) -> Arc<dyn PeerSender> {
+        Arc::new(NoPeers { err: self.err.clone() })
+    }
+
+    fn join(self: Box<Self>) {}
+}
+
+/// [`super::spawn`]'s socket arm: spawn the configured socket
+/// transport, degrading to a [`PoisonedTransport`] on failure so the
+/// infallible spawn contract holds.
+pub(crate) fn spawn_socket(
+    net: &NetConfig,
+    spec: GridSpec,
+    engine: Arc<dyn Engine>,
+    state: FactorState,
+    checkpoints: Option<Arc<CheckpointStore>>,
+    dormant: &DormantSet,
+    recorder: Arc<Recorder>,
+) -> Box<dyn Transport> {
+    let proto = match Proto::of_kind(net.kind) {
+        Ok(p) => p,
+        Err(e) => return Box::new(PoisonedTransport::new("socket", e.to_string())),
+    };
+    let cfg = match net.socket {
+        Some(c) => c,
+        None => {
+            return Box::new(PoisonedTransport::new(
+                proto.name(),
+                format!("{} transport requires a [socket] config table", proto.name()),
+            ))
+        }
+    };
+    let spawned = SocketCore::spawn(
+        proto,
+        cfg,
+        spec,
+        engine,
+        state,
+        checkpoints,
+        dormant,
+        net.liveness,
+        net.wire,
+        recorder,
+    );
+    match spawned {
+        Ok(core) => match proto {
+            Proto::Tcp => Box::new(TcpTransport(core)),
+            Proto::Udp => Box::new(UdpTransport(core)),
+        },
+        Err(e) => Box::new(PoisonedTransport::new(proto.name(), e.to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_are_contiguous_and_cover_every_rank() {
+        for (nblocks, procs) in [(16, 2), (16, 3), (16, 4), (36, 5), (4, 4), (9, 2)] {
+            let owners: Vec<usize> = (0..nblocks).map(|l| owner_rank(l, nblocks, procs)).collect();
+            assert!(owners.windows(2).all(|w| w[0] <= w[1]), "bands must be monotone");
+            assert_eq!(owners[0], 0);
+            assert_eq!(*owners.last().unwrap(), procs - 1);
+            for r in 0..procs {
+                assert!(owners.contains(&r), "rank {r} owns no block ({nblocks}/{procs})");
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_validation_rejects_bad_procs() {
+        let cfg = |procs| SocketConfig { procs, ..SocketConfig::default() };
+        assert!(validate(&cfg(1), 16).is_err());
+        assert!(validate(&cfg(17), 16).is_err());
+        assert!(validate(&cfg(16), 16).is_ok());
+        assert!(validate(&cfg(3), 16).is_ok());
+    }
+
+    #[test]
+    fn poisoned_transport_surfaces_its_error() {
+        let t = PoisonedTransport::new("tcp", "bind refused".into());
+        let err = t.send(BlockId::new(0, 0), AgentMsg::Shutdown).unwrap_err();
+        assert!(err.to_string().contains("bind refused"));
+        assert!(t.recv().is_err());
+        assert!(t.injector().send_to(BlockId::new(0, 0), AgentMsg::Shutdown).is_err());
+        Box::new(t).join(); // must not hang or panic
+    }
+
+    #[test]
+    fn proto_of_kind_rejects_in_process_stacks() {
+        assert!(Proto::of_kind(TransportKind::Tcp).is_ok());
+        assert!(Proto::of_kind(TransportKind::Udp).is_ok());
+        assert!(Proto::of_kind(TransportKind::Channel).is_err());
+        assert!(Proto::of_kind(TransportKind::Sim).is_err());
+    }
+}

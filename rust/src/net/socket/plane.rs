@@ -1,0 +1,473 @@
+//! Data planes: how gossip frames actually cross the wire.
+//!
+//! One plane per process carries every peer-to-peer frame between the
+//! blocks this process hosts and the blocks everyone else hosts. Both
+//! planes deliver decoded frames through [`SocketPeers::deliver_wire`],
+//! which wraps them in [`AgentMsg::Sequenced`] — exactly what the sim
+//! transport's link thread does — so the agent-side dedup window
+//! absorbs duplicates and the protocol above never changes.
+//!
+//! * [`TcpPlane`] — one listener plus one lazily-connected outbound
+//!   stream per peer rank, length-prefixed frames
+//!   ([`frame::StreamDecoder`] reassembles across read boundaries).
+//!   A broken stream gets one immediate reconnect, then a cooldown:
+//!   further sends fail fast and the peer is simply *quiet* until the
+//!   liveness layer notices. TCP's per-connection ordering gives
+//!   reliable in-order delivery per directed edge — the property the
+//!   bit-identity oracle leans on.
+//! * [`UdpPlane`] — a single socket, one datagram per frame, plus a
+//!   stop-and-repeat retransmit loop: every DATA datagram is acked by
+//!   the receiver (duplicates included — dedup is the agent's job) and
+//!   unacked datagrams are resent each RTO until a cap, after which
+//!   the frame is dropped with a warning. Delivery is thus
+//!   at-least-once with bounded effort; drop-tolerance comes from the
+//!   same retry protocol the sim transport's lossy links exercise.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, UdpSocket};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+use super::super::codec;
+use super::frame;
+use super::{SocketConfig, SocketPeers};
+
+/// Practical single-datagram ceiling (IPv4 UDP tops out at ~65,507
+/// bytes; stay under it with headroom for the envelope). Larger frames
+/// are refused at send time — use TCP, or arm the wire-efficiency
+/// delta levers to shrink payloads.
+pub(crate) const MAX_DATAGRAM: usize = 60_000;
+
+/// Interval between reconnect attempts to a rank whose stream broke.
+const RECONNECT_COOLDOWN: Duration = Duration::from_millis(500);
+
+/// Cap on a single outbound connect attempt (loopback resolves
+/// instantly; a dead host must not stall an agent thread).
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// A process's data plane: bound socket(s) plus per-rank peer state.
+pub(crate) enum Plane {
+    Tcp(TcpPlane),
+    Udp(UdpPlane),
+}
+
+impl Plane {
+    /// Bind the local socket for `proto`. Peer addresses arrive later
+    /// (after the control-plane handshake) via [`Plane::set_peers`].
+    pub(crate) fn bind(proto: super::Proto, bind: SocketAddr, cfg: &SocketConfig) -> Result<Self> {
+        match proto {
+            super::Proto::Tcp => Ok(Plane::Tcp(TcpPlane::bind(bind, cfg.procs)?)),
+            super::Proto::Udp => Ok(Plane::Udp(UdpPlane::bind(bind, cfg)?)),
+        }
+    }
+
+    /// The bound local address (advertised in Hello / Welcome).
+    pub(crate) fn local_addr(&self) -> SocketAddr {
+        match self {
+            Plane::Tcp(p) => p.local,
+            Plane::Udp(p) => p.local,
+        }
+    }
+
+    /// Install the handshake's rank → address map.
+    pub(crate) fn set_peers(&self, addrs: &[SocketAddr]) {
+        let slots = match self {
+            Plane::Tcp(p) => &p.addrs,
+            Plane::Udp(p) => &p.addrs,
+        };
+        for (slot, addr) in slots.iter().zip(addrs) {
+            *slot.lock().unwrap() = Some(*addr);
+        }
+    }
+
+    /// Ship one enveloped frame to a peer rank.
+    pub(crate) fn send_data(&self, rank: usize, seq: u64, payload: &[u8]) -> Result<()> {
+        match self {
+            Plane::Tcp(p) => p.send(rank, payload),
+            Plane::Udp(p) => p.send(rank, seq, payload),
+        }
+    }
+
+    /// Start the receive machinery; returns the threads to reap after
+    /// [`Plane::shutdown`].
+    pub(crate) fn start(self: &Arc<Self>, peers: Arc<SocketPeers>) -> Vec<thread::JoinHandle<()>> {
+        match &**self {
+            Plane::Tcp(_) => TcpPlane::start(self.clone(), peers),
+            Plane::Udp(_) => UdpPlane::start(self.clone(), peers),
+        }
+    }
+
+    /// Stop the receive machinery and unblock every plane thread.
+    pub(crate) fn shutdown(&self) {
+        match self {
+            Plane::Tcp(p) => p.shutdown(),
+            Plane::Udp(p) => p.stop.store(true, Ordering::Relaxed),
+        }
+    }
+
+    fn stopped(&self) -> bool {
+        match self {
+            Plane::Tcp(p) => p.stop.load(Ordering::Relaxed),
+            Plane::Udp(p) => p.stop.load(Ordering::Relaxed),
+        }
+    }
+
+    fn tcp(&self) -> &TcpPlane {
+        match self {
+            Plane::Tcp(p) => p,
+            Plane::Udp(_) => unreachable!("tcp accessor on udp plane"),
+        }
+    }
+
+    fn udp(&self) -> &UdpPlane {
+        match self {
+            Plane::Udp(p) => p,
+            Plane::Tcp(_) => unreachable!("udp accessor on tcp plane"),
+        }
+    }
+}
+
+/// Decode a DATA envelope and hand the frame to the hosted agent.
+fn deliver_data(payload: &[u8], peers: &SocketPeers) {
+    match frame::parse_data_envelope(payload) {
+        Ok((to, seq, body)) => match codec::decode(body) {
+            Ok((msg, _)) => {
+                if let Err(e) = peers.deliver_wire(to, seq, msg) {
+                    // Normal during teardown (mailboxes close before
+                    // the last in-flight frames drain).
+                    log::debug!("wire delivery to {to}: {e}");
+                }
+            }
+            Err(e) => log::warn!("undecodable gossip frame for {to}: {e}"),
+        },
+        Err(e) => log::warn!("bad data envelope: {e}"),
+    }
+}
+
+/// Outbound stream to one peer rank, with reconnect bookkeeping.
+#[derive(Default)]
+struct OutSlot {
+    conn: Option<TcpStream>,
+    retry_after: Option<Instant>,
+}
+
+/// Listener + per-rank outbound streams, length-prefixed framing.
+pub(crate) struct TcpPlane {
+    listener: TcpListener,
+    local: SocketAddr,
+    addrs: Vec<Mutex<Option<SocketAddr>>>,
+    conns: Vec<Mutex<OutSlot>>,
+    /// Clones of accepted inbound streams, kept so `shutdown` can
+    /// force blocked readers to return.
+    accepted: Mutex<Vec<TcpStream>>,
+    readers: Mutex<Vec<thread::JoinHandle<()>>>,
+    stop: AtomicBool,
+}
+
+impl TcpPlane {
+    fn bind(bind: SocketAddr, procs: usize) -> Result<Self> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| Error::Gossip(format!("bind gossip listener {bind}: {e}")))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        Ok(Self {
+            listener,
+            local,
+            addrs: (0..procs).map(|_| Mutex::new(None)).collect(),
+            conns: (0..procs).map(|_| Mutex::new(OutSlot::default())).collect(),
+            accepted: Mutex::new(Vec::new()),
+            readers: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+        })
+    }
+
+    fn connect(&self, rank: usize) -> Result<TcpStream> {
+        let addr = self.addrs[rank]
+            .lock()
+            .unwrap()
+            .ok_or_else(|| Error::Gossip(format!("no gossip address for rank {rank}")))?;
+        let s = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)
+            .map_err(|e| Error::Gossip(format!("connect gossip rank {rank} ({addr}): {e}")))?;
+        let _ = s.set_nodelay(true);
+        Ok(s)
+    }
+
+    /// Whole-frame write under the per-rank lock; one immediate
+    /// reconnect on a broken stream, then a cooldown so a dead peer
+    /// costs a fast error instead of a blocking connect per send.
+    fn send(&self, rank: usize, payload: &[u8]) -> Result<()> {
+        let framed = frame::frame(payload);
+        let mut slot = self.conns[rank].lock().unwrap();
+        let mut last_err = None;
+        for _ in 0..2 {
+            if slot.conn.is_none() {
+                if let Some(t) = slot.retry_after {
+                    if Instant::now() < t {
+                        return Err(Error::Gossip(format!(
+                            "rank {rank} unreachable (reconnect cooldown)"
+                        )));
+                    }
+                }
+                match self.connect(rank) {
+                    Ok(s) => {
+                        slot.conn = Some(s);
+                        slot.retry_after = None;
+                    }
+                    Err(e) => {
+                        slot.retry_after = Some(Instant::now() + RECONNECT_COOLDOWN);
+                        return Err(e);
+                    }
+                }
+            }
+            match slot.conn.as_mut().unwrap().write_all(&framed) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    slot.conn = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        slot.retry_after = Some(Instant::now() + RECONNECT_COOLDOWN);
+        Err(Error::Gossip(format!(
+            "tcp send to rank {rank} failed after reconnect: {}",
+            last_err.expect("loop ran")
+        )))
+    }
+
+    fn start(plane: Arc<Plane>, peers: Arc<SocketPeers>) -> Vec<thread::JoinHandle<()>> {
+        let accept = thread::Builder::new()
+            .name("gridmc-sock-accept".into())
+            .spawn(move || {
+                while !plane.stopped() {
+                    match plane.tcp().listener.accept() {
+                        Ok((s, _)) => {
+                            let _ = s.set_nodelay(true);
+                            if let Ok(clone) = s.try_clone() {
+                                plane.tcp().accepted.lock().unwrap().push(clone);
+                            }
+                            let plane2 = plane.clone();
+                            let peers2 = peers.clone();
+                            let h = thread::Builder::new()
+                                .name("gridmc-sock-read".into())
+                                .spawn(move || read_stream(s, plane2, peers2))
+                                .expect("spawn stream reader");
+                            plane.tcp().readers.lock().unwrap().push(h);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            if !plane.stopped() {
+                                log::warn!("gossip accept: {e}");
+                            }
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+        vec![accept]
+    }
+
+    fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for s in self.accepted.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for slot in &self.conns {
+            if let Some(s) = slot.lock().unwrap().conn.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        let handles: Vec<_> = self.readers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Drain one inbound stream until EOF, error, or plane shutdown.
+fn read_stream(mut s: TcpStream, plane: Arc<Plane>, peers: Arc<SocketPeers>) {
+    let mut dec = frame::StreamDecoder::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        if plane.stopped() {
+            return;
+        }
+        match s.read(&mut buf) {
+            Ok(0) => return,
+            Ok(n) => {
+                dec.push(&buf[..n]);
+                loop {
+                    match dec.next_frame() {
+                        Ok(Some(p)) => deliver_data(&p, &peers),
+                        Ok(None) => break,
+                        Err(e) => {
+                            // Framing is lost; the peer will reconnect.
+                            log::warn!("gossip stream: {e}");
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                if !plane.stopped() {
+                    log::debug!("gossip stream closed: {e}");
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// An unacknowledged datagram awaiting retransmit.
+struct Pending {
+    rank: usize,
+    payload: Vec<u8>,
+    last: Instant,
+    tries: u32,
+}
+
+/// One socket, per-frame datagrams, ack-driven retransmit.
+pub(crate) struct UdpPlane {
+    sock: UdpSocket,
+    local: SocketAddr,
+    addrs: Vec<Mutex<Option<SocketAddr>>>,
+    pending: Mutex<BTreeMap<u64, Pending>>,
+    rto: Duration,
+    max_tries: u32,
+    stop: AtomicBool,
+}
+
+impl UdpPlane {
+    fn bind(bind: SocketAddr, cfg: &SocketConfig) -> Result<Self> {
+        let sock = UdpSocket::bind(bind)
+            .map_err(|e| Error::Gossip(format!("bind gossip socket {bind}: {e}")))?;
+        let local = sock.local_addr()?;
+        Ok(Self {
+            sock,
+            local,
+            addrs: (0..cfg.procs).map(|_| Mutex::new(None)).collect(),
+            pending: Mutex::new(BTreeMap::new()),
+            rto: Duration::from_micros(cfg.retransmit_us),
+            max_tries: cfg.max_retransmits,
+            stop: AtomicBool::new(false),
+        })
+    }
+
+    fn addr_of(&self, rank: usize) -> Result<SocketAddr> {
+        self.addrs[rank]
+            .lock()
+            .unwrap()
+            .ok_or_else(|| Error::Gossip(format!("no gossip address for rank {rank}")))
+    }
+
+    fn send(&self, rank: usize, seq: u64, payload: &[u8]) -> Result<()> {
+        if payload.len() > MAX_DATAGRAM {
+            return Err(Error::Gossip(format!(
+                "frame of {} bytes exceeds the {MAX_DATAGRAM}-byte datagram cap; \
+                 use tcp or enable wire delta/compression levers",
+                payload.len()
+            )));
+        }
+        let addr = self.addr_of(rank)?;
+        self.pending.lock().unwrap().insert(
+            seq,
+            Pending { rank, payload: payload.to_vec(), last: Instant::now(), tries: 0 },
+        );
+        self.sock
+            .send_to(payload, addr)
+            .map_err(|e| Error::Gossip(format!("udp send to rank {rank}: {e}")))?;
+        Ok(())
+    }
+
+    fn start(plane: Arc<Plane>, peers: Arc<SocketPeers>) -> Vec<thread::JoinHandle<()>> {
+        let reader = {
+            let plane = plane.clone();
+            thread::Builder::new()
+                .name("gridmc-sock-udp-read".into())
+                .spawn(move || {
+                    let udp = plane.udp();
+                    let sock = udp.sock.try_clone().expect("clone udp socket");
+                    let _ = sock.set_read_timeout(Some(Duration::from_millis(50)));
+                    let mut buf = vec![0u8; 65_536];
+                    while !plane.stopped() {
+                        match sock.recv_from(&mut buf) {
+                            Ok((n, src)) => {
+                                let p = &buf[..n];
+                                match p.first() {
+                                    Some(&frame::PAYLOAD_DATA) => {
+                                        // Ack first — duplicates included;
+                                        // the sender keeps retransmitting
+                                        // until one ack lands.
+                                        if let Ok((_, seq, _)) = frame::parse_data_envelope(p) {
+                                            let _ = sock.send_to(&frame::ack_envelope(seq), src);
+                                        }
+                                        deliver_data(p, &peers);
+                                    }
+                                    Some(&frame::PAYLOAD_ACK) => {
+                                        if let Ok(seq) = frame::parse_ack(p) {
+                                            udp.pending.lock().unwrap().remove(&seq);
+                                        }
+                                    }
+                                    _ => log::warn!("unknown datagram discriminant"),
+                                }
+                            }
+                            Err(e)
+                                if e.kind() == std::io::ErrorKind::WouldBlock
+                                    || e.kind() == std::io::ErrorKind::TimedOut =>
+                            {
+                                continue
+                            }
+                            Err(e) => {
+                                if !plane.stopped() {
+                                    log::warn!("udp recv: {e}");
+                                }
+                                return;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn udp reader")
+        };
+        let resender = thread::Builder::new()
+            .name("gridmc-sock-udp-rto".into())
+            .spawn(move || {
+                while !plane.stopped() {
+                    thread::sleep(Duration::from_millis(5));
+                    let udp = plane.udp();
+                    let now = Instant::now();
+                    let mut pending = udp.pending.lock().unwrap();
+                    let mut dead = Vec::new();
+                    for (&seq, p) in pending.iter_mut() {
+                        if now.duration_since(p.last) < udp.rto {
+                            continue;
+                        }
+                        if p.tries >= udp.max_tries {
+                            dead.push(seq);
+                            continue;
+                        }
+                        if let Ok(addr) = udp.addr_of(p.rank) {
+                            let _ = udp.sock.send_to(&p.payload, addr);
+                        }
+                        p.last = now;
+                        p.tries += 1;
+                    }
+                    for seq in dead {
+                        pending.remove(&seq);
+                        log::warn!(
+                            "udp frame seq {seq} unacked after {} sends; dropping (quiet peer)",
+                            udp.max_tries + 1
+                        );
+                    }
+                }
+            })
+            .expect("spawn udp retransmitter");
+        vec![reader, resender]
+    }
+}

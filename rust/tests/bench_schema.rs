@@ -1,7 +1,8 @@
 //! Golden-schema tests for the machine-readable bench artifacts:
 //! `BENCH_churn.json`, `BENCH_grow.json`, `BENCH_shrink.json`,
 //! `BENCH_liveness.json`, `BENCH_parallel_scaling.json`,
-//! `BENCH_trace_overhead.json`, `BENCH_wire.json`.
+//! `BENCH_trace_overhead.json`, `BENCH_wire.json`,
+//! `BENCH_socket.json`.
 //!
 //! These files are the repo's perf trajectory — downstream tooling
 //! diffs them across commits — so format drift must fail CI instead of
@@ -12,9 +13,9 @@
 
 use gridmc::experiments::parallel::{
     write_churn_json, write_grow_json, write_json, write_liveness_json, write_shrink_json,
-    write_trace_overhead_json, write_wire_json, ChurnOutcome, ChurnRun, GrowOutcome, GrowRun,
-    LivenessOutcome, LivenessRun, OverheadOutcome, OverheadRun, ScalingPoint, ShrinkOutcome,
-    ShrinkRun, WireLeg, WireOutcome,
+    write_socket_json, write_trace_overhead_json, write_wire_json, ChurnOutcome, ChurnRun,
+    GrowOutcome, GrowRun, LivenessOutcome, LivenessRun, OverheadOutcome, OverheadRun,
+    ScalingPoint, ShrinkOutcome, ShrinkRun, SocketLeg, SocketOutcome, WireLeg, WireOutcome,
 };
 use gridmc::grid::BlockId;
 use gridmc::metrics::{percentiles, LivenessStats, RecoveryOverhead};
@@ -713,6 +714,91 @@ fn wire_json_schema_is_pinned() {
     assert_eq!(gate["target_reduction"], Json::Num(3.0));
     assert_eq!(gate["rmse_budget"], Json::Num(1.01));
     assert!(gate["reduction"].is_num() && gate["rmse_ratio"].is_num());
+    assert!(matches!(gate["pass"], Json::Bool(true)));
+}
+
+#[test]
+fn socket_json_schema_is_pinned() {
+    let leg = |label, rmse, bit_identical, max_factor_delta| SocketLeg {
+        label,
+        rmse,
+        final_cost: 1.0e-3,
+        iters: 6000,
+        bit_identical,
+        max_factor_delta,
+        wall: Duration::from_millis(900),
+    };
+    let outcome = SocketOutcome {
+        grid: (6, 6),
+        procs: 3,
+        legs: vec![
+            leg("channel", 0.100, true, 0.0),
+            leg("tcp", 0.100, true, 0.0),
+            leg("udp", 0.103, false, 2.4e-2),
+        ],
+    };
+    let path = temp_path("BENCH_socket.json");
+    write_socket_json(&path, &outcome).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap());
+    assert_keys(
+        &doc,
+        &[
+            "bench",
+            "git_rev",
+            "timestamp_unix",
+            "timestamp_utc",
+            "grid",
+            "unit",
+            "procs",
+            "legs",
+            "gate",
+        ],
+        "socket",
+    );
+    let top = doc.as_obj();
+    assert_header(top, "socket");
+    assert_eq!(top["unit"], Json::Str("rmse".into()));
+    assert_keys(&top["grid"], &["p", "q", "agents"], "socket.grid");
+    assert_eq!(top["procs"], Json::Num(3.0));
+    let legs = top["legs"].as_obj();
+    assert_eq!(legs.len(), 3);
+    for name in ["channel", "tcp", "udp"] {
+        assert!(legs.contains_key(name), "socket.legs missing {name}");
+    }
+    for (name, l) in legs {
+        assert_keys(
+            l,
+            &[
+                "rmse",
+                "final_cost",
+                "iters",
+                "rmse_ratio",
+                "bit_identical",
+                "max_factor_delta",
+                "wall_s",
+            ],
+            &format!("socket.legs[{name}]"),
+        );
+        for (k, v) in l.as_obj() {
+            if k == "bit_identical" {
+                assert!(
+                    matches!(v, Json::Bool(_)),
+                    "socket.legs[{name}].bit_identical must be a bool"
+                );
+            } else {
+                assert!(v.is_num(), "socket.legs[{name}].{k} must be numeric");
+            }
+        }
+    }
+    assert_keys(
+        &top["gate"],
+        &["tcp_bit_identical", "udp_rmse_budget", "udp_rmse_ratio", "pass"],
+        "socket.gate",
+    );
+    let gate = top["gate"].as_obj();
+    assert!(matches!(gate["tcp_bit_identical"], Json::Bool(true)));
+    assert_eq!(gate["udp_rmse_budget"], Json::Num(1.05));
+    assert!(gate["udp_rmse_ratio"].is_num());
     assert!(matches!(gate["pass"], Json::Bool(true)));
 }
 

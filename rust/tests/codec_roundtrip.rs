@@ -8,10 +8,20 @@
 //! in payload) or `Err` — never abort. Roundtrips must be bit-exact,
 //! f32 payloads included, and the 17-byte header's wire sequence
 //! number (the idempotent-delivery handle) must survive every trip.
+//!
+//! The socket transports add one layer below the codec — the
+//! length-prefixed stream framing of `net/socket/frame.rs` — so this
+//! file also pins its contracts: reassembly from *every* split point
+//! of a multi-frame byte stream (TCP reads tear anywhere, torn length
+//! prefixes included), and the oversized-length bomb rejected from the
+//! prefix alone, before any body allocation.
 
 use gridmc::data::DenseMatrix;
 use gridmc::grid::BlockId;
 use gridmc::net::codec::{decode, encode};
+use gridmc::net::socket::frame::{
+    ack_envelope, data_envelope, frame, parse_ack, parse_data_envelope, StreamDecoder, MAX_FRAME,
+};
 use gridmc::net::{AgentMsg, Compression, DeltaFrame, RowPatch};
 use gridmc::util::Rng;
 
@@ -447,4 +457,133 @@ fn sequence_number_is_header_data_only() {
     assert_eq!(a[HEADER_LEN..], b[HEADER_LEN..], "payload must not depend on seq");
     assert_eq!(decode(&a).unwrap().1, 1);
     assert_eq!(decode(&b).unwrap().1, u64::MAX - 1);
+}
+
+/// A realistic three-payload TCP stream for the framing tests: a DATA
+/// envelope around a real factor frame, an empty payload, and a bare
+/// ACK envelope. Returns the payloads and their concatenated framed
+/// byte stream.
+fn framed_stream() -> (Vec<Vec<u8>>, Vec<u8>) {
+    let mut rng = Rng::seed_from_u64(21);
+    let u = mat_from_rng(&mut rng, 5, 3);
+    let w = mat_from_rng(&mut rng, 4, 3);
+    let msg = AgentMsg::Factors { from: BlockId::new(2, 4), u, w };
+    let codec_bytes = encode(&msg, 0xDEAD_BEEF).unwrap();
+    let env = data_envelope(BlockId::new(1, 3), 0xDEAD_BEEF, &codec_bytes);
+    let payloads = vec![env, Vec::new(), ack_envelope(7).to_vec()];
+    let mut stream = Vec::new();
+    for p in &payloads {
+        stream.extend_from_slice(&frame(p));
+    }
+    (payloads, stream)
+}
+
+/// TCP reads tear anywhere — inside a body, on a frame boundary, or
+/// through the 4-byte length prefix itself. Splitting the stream at
+/// *every* byte offset must reassemble the identical payload sequence:
+/// exactly the fully-contained frames drain after the first push, the
+/// rest after the second, nothing pending at the end. The recovered
+/// DATA envelope still parses and codec-decodes to the original frame.
+#[test]
+fn stream_framing_reassembles_from_every_split_point() {
+    let (payloads, stream) = framed_stream();
+    let mut ends = Vec::new();
+    let mut acc = 0usize;
+    for p in &payloads {
+        acc += 4 + p.len();
+        ends.push(acc);
+    }
+    for cut in 0..=stream.len() {
+        let mut dec = StreamDecoder::new();
+        dec.push(&stream[..cut]);
+        let mut got = Vec::new();
+        while let Some(p) = dec.next_frame().unwrap() {
+            got.push(p);
+        }
+        let contained = ends.iter().filter(|&&e| e <= cut).count();
+        assert_eq!(got.len(), contained, "split at {cut}: early or late frame");
+        dec.push(&stream[cut..]);
+        while let Some(p) = dec.next_frame().unwrap() {
+            got.push(p);
+        }
+        assert_eq!(got, payloads, "split at {cut}");
+        assert_eq!(dec.pending(), 0, "split at {cut}: bytes left behind");
+    }
+    let (to, seq, body) = parse_data_envelope(&payloads[0]).unwrap();
+    assert_eq!((to, seq), (BlockId::new(1, 3), 0xDEAD_BEEF));
+    let (back, got_seq) = decode(body).unwrap();
+    assert_eq!(back.kind(), "Factors");
+    assert_eq!(got_seq, 0xDEAD_BEEF, "envelope seq mirrors the codec header");
+    assert_eq!(parse_ack(&payloads[2]).unwrap(), 7);
+}
+
+/// The pathological read pattern: one byte per `push`, draining after
+/// every byte. Each frame must surface exactly when its final byte
+/// arrives — never a byte early (phantom frame) or late (stuck frame).
+#[test]
+fn stream_framing_survives_byte_at_a_time_delivery() {
+    let (payloads, stream) = framed_stream();
+    let mut ends = Vec::new();
+    let mut acc = 0usize;
+    for p in &payloads {
+        acc += 4 + p.len();
+        ends.push(acc);
+    }
+    let mut dec = StreamDecoder::new();
+    let mut got = Vec::new();
+    for (k, byte) in stream.iter().enumerate() {
+        dec.push(std::slice::from_ref(byte));
+        while let Some(p) = dec.next_frame().unwrap() {
+            got.push(p);
+        }
+        let expected = ends.iter().filter(|&&e| e <= k + 1).count();
+        assert_eq!(got.len(), expected, "after byte {k}");
+    }
+    assert_eq!(got, payloads);
+    assert_eq!(dec.pending(), 0);
+}
+
+/// A torn length prefix (1–3 of its 4 bytes) is not an error — the
+/// decoder waits, reports the bytes as pending, and emits the frame
+/// once the remainder lands.
+#[test]
+fn torn_length_prefix_waits_without_error() {
+    let payload = vec![0x5A; 33];
+    let bytes = frame(&payload);
+    for cut in 1..4 {
+        let mut dec = StreamDecoder::new();
+        dec.push(&bytes[..cut]);
+        assert_eq!(dec.next_frame().unwrap(), None, "torn prefix at {cut} must wait");
+        assert_eq!(dec.pending(), cut);
+        dec.push(&bytes[cut..]);
+        assert_eq!(dec.next_frame().unwrap(), Some(payload.clone()));
+        assert_eq!(dec.pending(), 0);
+    }
+}
+
+/// A length prefix beyond `MAX_FRAME` is rejected from the four prefix
+/// bytes alone — before a single body byte arrives, so a corrupt or
+/// hostile prefix cannot reserve memory. The cap itself is inclusive
+/// (`MAX_FRAME` exactly just waits for its body), and a bomb buried
+/// behind a valid frame still lets the good frame drain first.
+#[test]
+fn oversized_length_bomb_is_rejected_from_the_prefix_alone() {
+    for len in [MAX_FRAME as u32 + 1, u32::MAX] {
+        let mut dec = StreamDecoder::new();
+        dec.push(&len.to_le_bytes());
+        let err = dec.next_frame().expect_err("oversized prefix must error");
+        assert!(format!("{err:?}").contains("exceeds cap"), "unexpected error: {err:?}");
+    }
+    // Exactly at the cap: legal, still waiting on the (huge) body.
+    let mut dec = StreamDecoder::new();
+    dec.push(&(MAX_FRAME as u32).to_le_bytes());
+    assert_eq!(dec.next_frame().unwrap(), None);
+    assert_eq!(dec.pending(), 4);
+    // Bomb after a valid frame: good payload first, then the error.
+    let good = vec![9u8; 12];
+    let mut dec = StreamDecoder::new();
+    dec.push(&frame(&good));
+    dec.push(&u32::MAX.to_le_bytes());
+    assert_eq!(dec.next_frame().unwrap(), Some(good));
+    assert!(dec.next_frame().is_err(), "buried bomb must still be rejected");
 }

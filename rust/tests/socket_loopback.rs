@@ -1,0 +1,311 @@
+//! Multi-process loopback acceptance for the socket transports
+//! (`net/socket/`).
+//!
+//! Each test spawns real `gridmc serve-block` child processes on
+//! 127.0.0.1 — the same binary Cargo built for this test run — and
+//! drives rank 0 in-process, exactly as `gridmc bench-table socket`
+//! does. Pinned contracts:
+//!
+//! * **TCP = oracle, bitwise.** A grid spread over three OS processes
+//!   trains to *bit-identical* factors, cost and iteration count vs the
+//!   single-process `ChannelTransport` reference: per-edge ordered
+//!   delivery + identically seeded per-process initialization leave the
+//!   math nothing to diverge on.
+//! * **UDP = oracle, statistically.** Ack-driven retransmit over
+//!   datagrams may perturb ordering, so the UDP run is held to a ≤ 5%
+//!   test-RMSE budget instead of bit equality.
+//! * **SIGKILL is just a quiet peer.** Killing one child mid-run must
+//!   surface through the decentralized liveness layer as a structure
+//!   expiry ([`gridmc::net::DriverMsg::Expired`]), the surviving bands
+//!   must keep converging, and shutdown must report the unreaped band
+//!   instead of hanging.
+//!
+//! Tests serialize on a shared mutex: each one binds ports and spawns
+//! children, and interleaving two handshakes would race the spawn
+//! budget on slow CI machines.
+
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use gridmc::config::{presets, DatasetConfig, ExperimentConfig};
+use gridmc::data::SplitDataset;
+use gridmc::engine::{Engine, NativeEngine, StructureParams};
+use gridmc::experiments::scenarios::socket::compare_states;
+use gridmc::experiments::{run_experiment_on, Outcome};
+use gridmc::gossip::{GossipNetwork, LivenessConfig, ScheduleBuilder};
+use gridmc::grid::{BlockId, BlockPartition, NormalizationCoeffs, Structure};
+use gridmc::model::FactorState;
+use gridmc::net::socket::owner_rank;
+use gridmc::net::TransportKind;
+
+static SEQ: Mutex<()> = Mutex::new(());
+
+fn serialize() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the file.
+    SEQ.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Driver + two serve-block children, like the socket bench scenario.
+const PROCS: usize = 3;
+/// How long children get to exit on their own after the control EOF.
+const REAP_BUDGET: Duration = Duration::from_secs(20);
+
+/// The socket preset shrunk to test size: 96×96 over the same 6×6
+/// grid — 16×16-cell blocks — and a budget small enough for three
+/// full legs per test binary run.
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = presets::socket();
+    if let DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+        s.m = 96;
+        s.n = 96;
+    }
+    cfg.solver.max_iters = 600;
+    cfg.solver.eval_every = 200;
+    let mut sock = cfg.socket.expect("socket preset carries a [socket] table");
+    sock.procs = PROCS;
+    cfg.socket = Some(sock);
+    cfg
+}
+
+/// Reserve a free loopback port for one leg's control plane.
+fn free_loopback_addr() -> SocketAddr {
+    let l = TcpListener::bind("127.0.0.1:0").expect("bind an ephemeral loopback port");
+    l.local_addr().expect("ephemeral port has an address")
+}
+
+/// Write the leg's config where the children can load it.
+fn write_cfg(cfg: &ExperimentConfig, label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gridmc-socket-loopback-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp config dir");
+    let path = dir.join(format!("{label}.toml"));
+    std::fs::write(&path, cfg.to_toml().expect("serialize config")).expect("write config");
+    path
+}
+
+/// Spawn ranks `1..PROCS` of the grid as real child processes hosting
+/// the exact binary Cargo built for this test run.
+fn spawn_children(config: &std::path::Path) -> Vec<Child> {
+    (1..PROCS)
+        .map(|rank| {
+            Command::new(env!("CARGO_BIN_EXE_gridmc"))
+                .arg("serve-block")
+                .arg("--config")
+                .arg(config)
+                .arg("--rank")
+                .arg(rank.to_string())
+                .stdout(Stdio::null())
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawn serve-block rank {rank}: {e}"))
+        })
+        .collect()
+}
+
+/// Kill-or-wait every child; `failed` kills immediately.
+fn reap(mut children: Vec<Child>, failed: bool) {
+    let deadline = Instant::now() + REAP_BUDGET;
+    for child in children.iter_mut() {
+        if failed {
+            let _ = child.kill();
+        }
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                _ => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One socket leg: fresh control port, config on disk, children up,
+/// rank 0 driven through the standard experiment path, children down.
+fn run_leg(base: &ExperimentConfig, data: &SplitDataset, kind: TransportKind) -> Outcome {
+    let mut cfg = base.clone();
+    cfg.name = format!("loopback-{}", kind.as_str());
+    cfg.transport = kind;
+    let mut sock = cfg.socket.expect("base config carries a [socket] table");
+    sock.driver = free_loopback_addr();
+    cfg.socket = Some(sock);
+    let path = write_cfg(&cfg, kind.as_str());
+    let children = spawn_children(&path);
+    let result = run_experiment_on(&cfg, data);
+    reap(children, result.is_err());
+    result.unwrap_or_else(|e| panic!("{} loopback leg failed: {e}", kind.as_str()))
+}
+
+/// The tentpole acceptance: a 6×6 grid spread over three OS processes
+/// on TCP reproduces the in-process `ChannelTransport` oracle
+/// bit-for-bit — same iteration count, same final cost bits, every
+/// factor f32 of every block identical.
+#[test]
+fn tcp_loopback_is_bit_identical_to_channel_oracle() {
+    let _g = serialize();
+    let base = base_cfg();
+    let data = base.dataset.load().expect("generate the shared dataset");
+
+    let mut oracle_cfg = base.clone();
+    oracle_cfg.name = "loopback-channel".into();
+    oracle_cfg.transport = TransportKind::Channel;
+    let oracle = run_experiment_on(&oracle_cfg, &data).expect("channel oracle leg");
+
+    let tcp = run_leg(&base, &data, TransportKind::Tcp);
+
+    assert_eq!(oracle.report.iters, tcp.report.iters, "iteration counts diverged");
+    assert_eq!(
+        oracle.report.final_cost.to_bits(),
+        tcp.report.final_cost.to_bits(),
+        "final cost diverged: oracle {} vs tcp {}",
+        oracle.report.final_cost,
+        tcp.report.final_cost
+    );
+    let (identical, max_delta) = compare_states(&oracle.state, &tcp.state);
+    assert!(
+        identical && max_delta == 0.0,
+        "tcp factors must match the oracle bit-for-bit (max |delta| = {max_delta:.3e})"
+    );
+    assert!(tcp.test_rmse.is_finite());
+}
+
+/// UDP delivery is at-least-once with bounded retransmit effort, so the
+/// trained model is held to a statistical gate: within 5% of the
+/// oracle's test RMSE, and still a real model (finite, converging).
+#[test]
+fn udp_loopback_stays_within_rmse_budget() {
+    let _g = serialize();
+    let base = base_cfg();
+    let data = base.dataset.load().expect("generate the shared dataset");
+
+    let mut oracle_cfg = base.clone();
+    oracle_cfg.name = "loopback-channel".into();
+    oracle_cfg.transport = TransportKind::Channel;
+    let oracle = run_experiment_on(&oracle_cfg, &data).expect("channel oracle leg");
+
+    let udp = run_leg(&base, &data, TransportKind::Udp);
+
+    assert!(oracle.test_rmse.is_finite() && udp.test_rmse.is_finite());
+    let ratio = udp.test_rmse / oracle.test_rmse.max(1e-12);
+    assert!(
+        ratio <= 1.05,
+        "udp test RMSE {:.4} vs oracle {:.4} (ratio {ratio:.4} > 1.05)",
+        udp.test_rmse,
+        oracle.test_rmse
+    );
+    assert!(
+        udp.report.final_cost < udp.report.curve.initial().unwrap(),
+        "udp leg must still converge: {:?}",
+        udp.report.curve.points
+    );
+}
+
+/// The failure-model acceptance: SIGKILL one child mid-run. There is
+/// no connection-failure protocol to exercise — the dead band simply
+/// goes quiet, and the armed liveness layer must (a) expire a structure
+/// that touches it, blaming the casualty via [`DriverMsg::Expired`]
+/// surfacing at the driver, (b) keep the surviving two bands training
+/// and converging, and (c) report the unreaped band at shutdown rather
+/// than hanging on it.
+///
+/// [`DriverMsg::Expired`]: gridmc::net::DriverMsg::Expired
+#[test]
+fn sigkill_one_child_expires_structures_and_survivors_converge() {
+    let _g = serialize();
+    let mut cfg = base_cfg();
+    cfg.name = "loopback-chaos".into();
+    cfg.transport = TransportKind::Tcp;
+    cfg.liveness = Some(LivenessConfig::default());
+    let mut sock = cfg.socket.expect("base config carries a [socket] table");
+    sock.driver = free_loopback_addr();
+    cfg.socket = Some(sock);
+
+    let data = cfg.dataset.load().expect("generate the dataset");
+    let spec = cfg.grid_spec(data.m, data.n);
+    let nblocks = spec.num_blocks();
+    let path = write_cfg(&cfg, "chaos");
+    let mut children = spawn_children(&path);
+
+    // Drive rank 0 by hand, mirroring serve-block's prep: the children
+    // derive the identical environment from the same config file.
+    let partition = BlockPartition::new(spec, &data.train).expect("partition");
+    let mut engine = NativeEngine::new();
+    engine.prepare(&partition).expect("prepare engine");
+    let engine: Arc<dyn Engine> = Arc::new(engine);
+    let state = FactorState::init_random(spec, cfg.solver.seed);
+    let mut network = GossipNetwork::spawn_with(&cfg.net_config(), spec, engine, state);
+
+    let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+    let params = |s: &Structure| StructureParams::build(10.0, 1e-9, 5e-3, &coeffs, &s.roles());
+    let mut schedule = ScheduleBuilder::new(spec, 17);
+
+    // Warm-up: two full-grid epochs across all three processes.
+    for _ in 0..2 {
+        for round in schedule.epoch() {
+            let ps: Vec<StructureParams> = round.iter().map(&params).collect();
+            network.execute_batch(&round, &ps).expect("warm-up epoch");
+        }
+    }
+
+    // SIGKILL the highest rank: its contiguous band of trailing block
+    // rows drops off the grid with no goodbye of any kind.
+    let live = |b: BlockId| owner_rank(b.index(spec.q), nblocks, PROCS) < PROCS - 1;
+    let victim = children.last_mut().expect("spawned children");
+    victim.kill().expect("SIGKILL the child");
+    victim.wait().expect("reap the killed child");
+
+    // (b) Survivors keep converging: four epochs restricted to
+    // structures whose three members all live on surviving ranks.
+    let c_mid = network.total_cost_over(1e-9, live).expect("survivor cost after the kill");
+    for _ in 0..4 {
+        for round in schedule.epoch() {
+            let survivors: Vec<Structure> = round
+                .into_iter()
+                .filter(|s| s.roles().blocks().iter().all(|b| live(*b)))
+                .collect();
+            if survivors.is_empty() {
+                continue;
+            }
+            let ps: Vec<StructureParams> = survivors.iter().map(&params).collect();
+            network.execute_batch(&survivors, &ps).expect("survivor epoch");
+        }
+    }
+    let c_end = network.total_cost_over(1e-9, live).expect("survivor cost after training");
+    assert!(
+        c_end < c_mid,
+        "surviving bands must keep converging: cost {c_mid} -> {c_end}"
+    );
+
+    // (a) A structure reaching into the dead band expires: the live
+    // anchor's deadline fires after enough pulse ticks and the blame
+    // surfaces at the driver as a DriverMsg::Expired.
+    let s = Structure::upper(spec.p - 3, 0);
+    let roles = s.roles();
+    assert!(
+        live(roles.anchor) && live(roles.horizontal) && !live(roles.vertical),
+        "expiry structure must pair a live anchor with a dead member"
+    );
+    network.dispatch(s, params(&s)).expect("dispatch into the dead band");
+    // Default deadline is 40 ticks plus one grace extension; 400 ticks
+    // is several times that, so the expiry is parked in the driver
+    // mailbox well before the blocking receive below.
+    for tick in 1..=400u64 {
+        network.pulse(tick, |_| true).expect("pulse is best-effort");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let err = network.await_done().expect_err("the structure must expire, not complete");
+    assert!(err.to_string().contains("Expired"), "unexpected completion error: {err}");
+
+    // (c) Teardown stays honest: the dead band cannot hand its factors
+    // back, so shutdown reports a partial reap instead of hanging.
+    let err = network.shutdown().expect_err("shutdown cannot reap the killed band");
+    assert!(err.to_string().contains("reaped"), "unexpected shutdown error: {err}");
+
+    reap(children, false);
+}

@@ -3,28 +3,42 @@
 //!
 //! Times one structure update (the inner loop of Algorithm 1) per
 //! engine/mode at the paper's Exp#3 block shape (100×100, rank 5), plus
-//! the cost evaluation and the XLA end-to-end dispatch. Reports median /
-//! p10 / p90 over many iterations after a warmup, and writes the same
-//! stats machine-readably to `BENCH_engine_microbench.json` (git rev +
-//! timestamp included) so perf PRs are comparable over time. These are
-//! the numbers the perf pass in PERF.md iterates on.
+//! the cost evaluation and the XLA end-to-end dispatch. Each native leg
+//! runs twice — once on the auto-dispatched SIMD path and once pinned
+//! to the scalar oracle (`-scalar` suffix) — so the vectorization win
+//! is a first-class number, not a diff across commits. A rank-16 dense
+//! pair (`structure_update_r16/*`) feeds the `simd_gate`: full-register
+//! AVX2 territory, where the kernels must clear ≥ 2× over scalar. The
+//! `storage_gate` trains one table3 preset cell twice — f32 vs bf16
+//! factor storage — and records the converged-RMSE ratio against the
+//! 1% budget. Reports median / p10 / p90 over many iterations after a
+//! warmup, and writes the same stats machine-readably to
+//! `BENCH_engine_microbench.json` (git rev + timestamp included) so
+//! perf PRs are comparable over time. These are the numbers the perf
+//! pass in PERF.md iterates on.
 //!
 //! The `structure_update/*` rows measure the workspace hot path the
 //! drivers actually run (`structure_update_into`); the
 //! `structure_update_alloc/*` rows keep the allocating convenience path
 //! visible so the zero-allocation win stays measured.
 //!
+//! Honors `GRIDMC_ITER_SCALE` (CI smoke runs at 0.05). Gates are
+//! *recorded*, never fatal — the pin-diff in CI is what surfaces a
+//! regression, with the JSON as evidence.
+//!
 //! Run: `cargo bench --bench engine_microbench`
 
 use std::time::Instant;
 
-use gridmc::data::SyntheticConfig;
+use gridmc::config::presets;
+use gridmc::data::{RatingsPreset, SyntheticConfig};
 use gridmc::engine::{
     Engine, EngineWorkspace, NativeEngine, NativeMode, StructureParams, XlaEngine,
 };
 use gridmc::grid::{BlockPartition, GridSpec, NormalizationCoeffs, Structure, StructureRoles};
 use gridmc::metrics::{bench_json_header, percentiles, Percentiles as Stats};
-use gridmc::model::FactorState;
+use gridmc::model::{FactorState, FactorStorage};
+use gridmc::simd::SimdPolicy;
 
 /// Time `f` `iters` times (after `warmup` runs); print + return stats
 /// (microseconds).
@@ -89,10 +103,32 @@ fn run_update_alloc(engine: &dyn Engine, fx: &Fixture) {
     std::hint::black_box(&out);
 }
 
+/// The rank-16 dense scalar-vs-SIMD comparison the acceptance bar
+/// reads: full-register territory for the AVX2 kernels.
+struct SimdGate {
+    path: String,
+    scalar_median_us: f64,
+    simd_median_us: f64,
+    speedup: f64,
+    target: f64,
+}
+
+/// f32-vs-bf16 factor storage on one table3 preset cell: same budget,
+/// same seed, converged-RMSE ratio against the 1% budget.
+struct StorageGate {
+    preset: String,
+    iters: u64,
+    rmse_f32: f64,
+    rmse_bf16: f64,
+    budget: f64,
+}
+
 fn write_json(
     path: &str,
     spec: &GridSpec,
     results: &[(String, Stats)],
+    simd_gate: &SimdGate,
+    storage_gate: Option<&StorageGate>,
 ) -> std::io::Result<()> {
     use std::io::Write;
     let (mb, nb) = spec.block_shape();
@@ -113,45 +149,116 @@ fn write_json(
             s.median, s.p10, s.p90, s.n
         )?;
     }
-    writeln!(f, "  }}")?;
+    writeln!(f, "  }},")?;
+    writeln!(
+        f,
+        "  \"simd_gate\": {{ \"kernel\": \"structure_update_r16/native-dense\", \
+         \"path\": \"{}\", \"scalar_median_us\": {:.3}, \"simd_median_us\": {:.3}, \
+         \"speedup\": {:.3}, \"target\": {}, \"pass\": {} }}{}",
+        simd_gate.path,
+        simd_gate.scalar_median_us,
+        simd_gate.simd_median_us,
+        simd_gate.speedup,
+        simd_gate.target,
+        simd_gate.speedup >= simd_gate.target,
+        if storage_gate.is_some() { "," } else { "" }
+    )?;
+    if let Some(g) = storage_gate {
+        let ratio = if g.rmse_f32 > 0.0 { g.rmse_bf16 / g.rmse_f32 } else { f64::NAN };
+        writeln!(
+            f,
+            "  \"storage_gate\": {{ \"preset\": \"{}\", \"iters\": {}, \
+             \"rmse_f32\": {:.6}, \"rmse_bf16\": {:.6}, \"rmse_ratio\": {:.6}, \
+             \"budget\": {}, \"pass\": {} }}",
+            g.preset,
+            g.iters,
+            g.rmse_f32,
+            g.rmse_bf16,
+            ratio,
+            g.budget,
+            ratio <= g.budget
+        )?;
+    }
     writeln!(f, "}}")?;
     Ok(())
+}
+
+/// One table3 storage-gate leg: sequential driver, shared dataset.
+fn storage_leg(
+    cfg: &gridmc::config::ExperimentConfig,
+    data: &gridmc::data::SplitDataset,
+    storage: FactorStorage,
+) -> (u64, f64) {
+    let mut cfg = cfg.clone();
+    cfg.storage = storage;
+    let t0 = Instant::now();
+    let o = gridmc::experiments::run_experiment_on(&cfg, data).unwrap();
+    println!(
+        "storage_gate/{:<37} rmse {:.4}   ({} iters, {:.1}s)",
+        storage.as_str(),
+        o.test_rmse,
+        o.report.iters,
+        t0.elapsed().as_secs_f64()
+    );
+    (o.report.iters, o.test_rmse)
 }
 
 fn main() {
     // Exp#3 geometry: 500×500 over 5×5 → 100×100 blocks, rank 5.
     let spec = GridSpec::new(500, 500, 5, 5, 5);
     let (part, fx) = fixture(spec);
+    let scale = presets::iter_scale();
+    let it = |n: usize| ((n as f64 * scale) as usize).max(10);
     println!("== engine_microbench: structure update @ 100x100 r5 (Exp#3 geometry) ==");
 
     let mut results: Vec<(String, Stats)> = Vec::new();
     let record = |results: &mut Vec<(String, Stats)>, name: &str, s: Stats| {
         results.push((name.to_string(), s));
     };
+    // Pinning `scalar` cannot fail on any host; `Auto` never errors.
+    let with_path = |mode: NativeMode, policy: SimdPolicy| {
+        NativeEngine::with_mode(mode).with_simd(policy).unwrap()
+    };
 
-    let mut sparse = NativeEngine::with_mode(NativeMode::Sparse);
+    let mut sparse = with_path(NativeMode::Sparse, SimdPolicy::Auto);
     sparse.prepare(&part).unwrap();
+    let simd_path = sparse.simd_path().as_str().to_string();
+    println!("   (auto-dispatched simd path: {simd_path})");
     let mut ws = EngineWorkspace::new();
-    let s = bench("structure_update/native-sparse", 20, 300, || {
+    let s = bench("structure_update/native-sparse", 20, it(300), || {
         run_update_into(&sparse, &fx, &mut ws)
     });
     record(&mut results, "structure_update/native-sparse", s);
-    let s = bench("structure_update_alloc/native-sparse", 20, 300, || {
+    let s = bench("structure_update_alloc/native-sparse", 20, it(300), || {
         run_update_alloc(&sparse, &fx)
     });
     record(&mut results, "structure_update_alloc/native-sparse", s);
+    let mut sparse_scalar = with_path(NativeMode::Sparse, SimdPolicy::Scalar);
+    sparse_scalar.prepare(&part).unwrap();
+    let mut ws_ss = EngineWorkspace::new();
+    let s = bench("structure_update/native-sparse-scalar", 20, it(300), || {
+        run_update_into(&sparse_scalar, &fx, &mut ws_ss)
+    });
+    record(&mut results, "structure_update/native-sparse-scalar", s);
 
-    let mut dense = NativeEngine::with_mode(NativeMode::Dense);
+    let mut dense = with_path(NativeMode::Dense, SimdPolicy::Auto);
     dense.prepare(&part).unwrap();
     let mut ws_d = EngineWorkspace::new();
-    let s = bench("structure_update/native-dense", 20, 300, || {
+    let s = bench("structure_update/native-dense", 20, it(300), || {
         run_update_into(&dense, &fx, &mut ws_d)
     });
     record(&mut results, "structure_update/native-dense", s);
-    let s = bench("structure_update_alloc/native-dense", 20, 300, || {
+    let s = bench("structure_update_alloc/native-dense", 20, it(300), || {
         run_update_alloc(&dense, &fx)
     });
     record(&mut results, "structure_update_alloc/native-dense", s);
+    let mut dense_scalar = with_path(NativeMode::Dense, SimdPolicy::Scalar);
+    dense_scalar.prepare(&part).unwrap();
+    let mut ws_ds = EngineWorkspace::new();
+    let s = bench("structure_update/native-dense-scalar", 20, it(300), || {
+        run_update_into(&dense_scalar, &fx, &mut ws_ds)
+    });
+    record(&mut results, "structure_update/native-dense-scalar", s);
 
     if std::path::Path::new("artifacts/manifest.tsv").exists() {
         match XlaEngine::from_default_artifacts(&spec) {
@@ -159,13 +266,13 @@ fn main() {
                 xla.prepare(&part).unwrap();
                 // One identifier for stdout AND the JSON trajectory —
                 // PERF.md treats kernel names as stable keys.
-                let s = bench("structure_update/xla-pjrt", 10, 150, || {
+                let s = bench("structure_update/xla-pjrt", 10, it(150), || {
                     run_update_alloc(&xla, &fx)
                 });
                 record(&mut results, "structure_update/xla-pjrt", s);
 
                 let id = gridmc::grid::BlockId::new(0, 0);
-                let s = bench("block_cost/xla-pjrt", 10, 150, || {
+                let s = bench("block_cost/xla-pjrt", 10, it(150), || {
                     let c = xla
                         .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
                         .unwrap();
@@ -180,14 +287,14 @@ fn main() {
     }
 
     let id = gridmc::grid::BlockId::new(0, 0);
-    let s = bench("block_cost/native-sparse", 20, 300, || {
+    let s = bench("block_cost/native-sparse", 20, it(300), || {
         let c = sparse
             .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
             .unwrap();
         std::hint::black_box(c);
     });
     record(&mut results, "block_cost/native-sparse", s);
-    let s = bench("block_cost/native-dense", 20, 300, || {
+    let s = bench("block_cost/native-dense", 20, it(300), || {
         let c = dense
             .block_cost(id, fx.state.u(id), fx.state.w(id), 1e-9)
             .unwrap();
@@ -195,8 +302,84 @@ fn main() {
     });
     record(&mut results, "block_cost/native-dense", s);
 
+    // Rank-16: the full-register AVX2 shape the acceptance bar reads.
+    println!("\n== engine_microbench: structure update @ 100x100 r16 (simd gate) ==");
+    let spec16 = GridSpec::new(500, 500, 5, 5, 16);
+    let (part16, fx16) = fixture(spec16);
+    let mut d16 = with_path(NativeMode::Dense, SimdPolicy::Auto);
+    d16.prepare(&part16).unwrap();
+    let mut ws16 = EngineWorkspace::new();
+    let simd16 = bench("structure_update_r16/native-dense-simd", 20, it(300), || {
+        run_update_into(&d16, &fx16, &mut ws16)
+    });
+    record(&mut results, "structure_update_r16/native-dense-simd", simd16);
+    let mut d16s = with_path(NativeMode::Dense, SimdPolicy::Scalar);
+    d16s.prepare(&part16).unwrap();
+    let mut ws16s = EngineWorkspace::new();
+    let scalar16 = bench("structure_update_r16/native-dense-scalar", 20, it(300), || {
+        run_update_into(&d16s, &fx16, &mut ws16s)
+    });
+    record(&mut results, "structure_update_r16/native-dense-scalar", scalar16);
+    let mut s16 = with_path(NativeMode::Sparse, SimdPolicy::Auto);
+    s16.prepare(&part16).unwrap();
+    let mut wss16 = EngineWorkspace::new();
+    let s = bench("structure_update_r16/native-sparse-simd", 20, it(300), || {
+        run_update_into(&s16, &fx16, &mut wss16)
+    });
+    record(&mut results, "structure_update_r16/native-sparse-simd", s);
+    let mut s16s = with_path(NativeMode::Sparse, SimdPolicy::Scalar);
+    s16s.prepare(&part16).unwrap();
+    let mut wss16s = EngineWorkspace::new();
+    let s = bench("structure_update_r16/native-sparse-scalar", 20, it(300), || {
+        run_update_into(&s16s, &fx16, &mut wss16s)
+    });
+    record(&mut results, "structure_update_r16/native-sparse-scalar", s);
+
+    let speedup = scalar16.median / simd16.median.max(1e-9);
+    let simd_gate = SimdGate {
+        path: d16.simd_path().as_str().to_string(),
+        scalar_median_us: scalar16.median,
+        simd_median_us: simd16.median,
+        speedup,
+        target: 2.0,
+    };
+    println!(
+        "simd_gate: r16 dense {path} {speedup:.2}x over scalar (target 2.0x, {verdict})",
+        path = simd_gate.path,
+        verdict = if speedup >= simd_gate.target { "pass" } else { "MISS" },
+    );
+
+    // Storage gate: one table3 cell, f32 vs bf16 factors, same budget.
+    // A tenth of the (already GRIDMC_ITER_SCALE-scaled) preset budget
+    // keeps the bench minutes-not-hours; both legs share it, so the
+    // RMSE ratio is a fair converged-quality comparison.
+    println!("\n== engine_microbench: storage gate (table3 ml1m 3x3 r10, f32 vs bf16) ==");
+    let storage_gate = if std::env::var("GRIDMC_SKIP_STORAGE_GATE").as_deref() == Ok("1") {
+        eprintln!("skipping storage gate: GRIDMC_SKIP_STORAGE_GATE=1");
+        None
+    } else {
+        let mut cfg = presets::apply_iter_scale(presets::table3(RatingsPreset::Ml1m, 3, 10));
+        cfg.solver.max_iters = (cfg.solver.max_iters / 10).max(2_000);
+        cfg.solver.eval_every = (cfg.solver.max_iters / 5).max(1);
+        let data = cfg.dataset.load().unwrap();
+        let (iters, rmse_f32) = storage_leg(&cfg, &data, FactorStorage::F32);
+        let (_, rmse_bf16) = storage_leg(&cfg, &data, FactorStorage::Bf16);
+        println!(
+            "storage_gate: bf16/f32 rmse ratio {:.4} (budget 1.01, {})",
+            rmse_bf16 / rmse_f32,
+            if rmse_bf16 / rmse_f32 <= 1.01 { "pass" } else { "MISS" }
+        );
+        Some(StorageGate {
+            preset: cfg.name.clone(),
+            iters,
+            rmse_f32,
+            rmse_bf16,
+            budget: 1.01,
+        })
+    };
+
     let out = "BENCH_engine_microbench.json";
-    match write_json(out, &spec, &results) {
+    match write_json(out, &spec, &results, &simd_gate, storage_gate.as_ref()) {
         Ok(()) => println!("\nwrote {out} ({} kernels)", results.len()),
         Err(e) => eprintln!("could not write {out}: {e}"),
     }

@@ -13,7 +13,9 @@ pub mod presets;
 
 use crate::data::{RatingsConfig, SplitDataset, SyntheticConfig};
 use crate::grid::GridSpec;
+use crate::model::FactorStorage;
 use crate::net::{FaultConfig, NetConfig, SimConfig, TransportKind};
+use crate::simd::SimdPolicy;
 use crate::solver::{SolverConfig, StepSchedule};
 use crate::{Error, Result};
 
@@ -189,6 +191,15 @@ pub struct ExperimentConfig {
     pub grid: GridConfig,
     pub solver: SolverConfig,
     pub engine: EngineChoice,
+    /// Factor storage precision (`[engine] storage = "f32"|"bf16"|"f16"`).
+    /// Half modes keep all compute in f32 and store iterates packed;
+    /// the sequential driver honors them, gossip drivers warn and run
+    /// f32 (the wire already has its own compression levers).
+    pub storage: FactorStorage,
+    /// Kernel SIMD path (`[engine] simd = "auto"|"scalar"|"portable"|"avx2"`).
+    /// All paths are bit-identical; `scalar` exists to pin the oracle
+    /// in equivalence tests, `avx2` to fail fast on unsupported hosts.
+    pub simd: SimdPolicy,
     pub driver: DriverChoice,
     /// Structures in flight at once (parallel driver chunk size / async
     /// driver `max_inflight`).
@@ -313,6 +324,11 @@ impl ExperimentConfig {
                 normalize: doc.bool_or("solver.normalize", true),
             },
             engine: EngineChoice::parse(&doc.str_or("engine", "native-sparse"))?,
+            // `engine` the scalar key picks the backend; the `[engine]`
+            // table holds its knobs (the flat dotted-key parser keeps
+            // both addressable).
+            storage: FactorStorage::parse(&doc.str_or("engine.storage", "f32"))?,
+            simd: SimdPolicy::parse(&doc.str_or("engine.simd", "auto"))?,
             driver: DriverChoice::parse(&doc.str_or("driver", "sequential"))?,
             workers: doc.usize_or("workers", 4),
             transport: TransportKind::parse(&doc.str_or("transport", "channel"))?,
@@ -445,6 +461,13 @@ impl ExperimentConfig {
         }
         if let Some(dir) = &self.checkpoint_dir {
             s.push_str(&format!("checkpoint_dir = {}\n", quote(dir)));
+        }
+        if self.storage != FactorStorage::default() || self.simd != SimdPolicy::default() {
+            s.push_str(&format!(
+                "\n[engine]\nstorage = {}\nsimd = {}\n",
+                quote(self.storage.as_str()),
+                quote(self.simd.as_str())
+            ));
         }
         s.push_str("\n[dataset]\n");
         match &self.dataset {
@@ -859,6 +882,40 @@ mod tests {
         );
         assert_eq!(t.out, None);
         assert_eq!(t.error_dump, None);
+    }
+
+    #[test]
+    fn engine_table_roundtrip_and_absence() {
+        let mut cfg = presets::exp(1).unwrap();
+        assert_eq!(cfg.storage, FactorStorage::F32, "presets store f32 by default");
+        assert_eq!(cfg.simd, SimdPolicy::Auto, "presets auto-dispatch by default");
+        assert!(!cfg.to_toml().unwrap().contains("[engine]"), "default knobs stay implicit");
+        cfg.storage = FactorStorage::Bf16;
+        cfg.simd = SimdPolicy::Portable;
+        let text = cfg.to_toml().unwrap();
+        assert!(text.contains("[engine]"), "{text}");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.storage, FactorStorage::Bf16);
+        assert_eq!(back.simd, SimdPolicy::Portable);
+        // The backend scalar and the knob table coexist (flat dotted keys).
+        assert_eq!(back.engine, cfg.engine);
+        // A partially specified table fills in defaults.
+        let partial = ExperimentConfig::from_toml(&format!(
+            "{}[engine]\nstorage = \"f16\"\n",
+            text.split("[engine]").next().unwrap()
+        ))
+        .unwrap();
+        assert_eq!(partial.storage, FactorStorage::F16);
+        assert_eq!(partial.simd, SimdPolicy::Auto);
+        // Unknown spellings are config errors, not silent defaults.
+        for bad in ["[engine]\nstorage = \"f64\"\n", "[engine]\nsimd = \"sse9\"\n"] {
+            let err = ExperimentConfig::from_toml(&format!(
+                "{}{bad}",
+                text.split("[engine]").next().unwrap()
+            ))
+            .unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{err}");
+        }
     }
 
     #[test]

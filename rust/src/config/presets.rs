@@ -62,6 +62,8 @@ pub fn exp(n: usize) -> Result<ExperimentConfig> {
             normalize: true,
         },
         engine: EngineChoice::NativeSparse,
+        storage: Default::default(),
+        simd: Default::default(),
         driver: DriverChoice::Sequential,
         workers: 4,
         transport: TransportKind::Channel,
@@ -106,6 +108,8 @@ pub fn table3(dataset: RatingsPreset, g: usize, rank: usize) -> ExperimentConfig
             normalize: true,
         },
         engine: EngineChoice::NativeSparse,
+        storage: Default::default(),
+        simd: Default::default(),
         driver: DriverChoice::Sequential,
         workers: 4,
         transport: TransportKind::Channel,
@@ -157,6 +161,8 @@ pub fn churn() -> ExperimentConfig {
             normalize: true,
         },
         engine: EngineChoice::NativeSparse,
+        storage: Default::default(),
+        simd: Default::default(),
         driver: DriverChoice::Parallel,
         workers: 8,
         transport: TransportKind::Sim,

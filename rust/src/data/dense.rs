@@ -10,6 +10,7 @@
 //! caller-owned buffers, so the engine hot path allocates nothing in
 //! steady state (PERF.md).
 
+use crate::simd;
 use crate::{Error, Result};
 
 /// Largest inner dimension for which the matmul kernels use a
@@ -321,12 +322,30 @@ impl DenseMatrix {
 // in the `DenseMatrix` wrappers. The fixed-rank variants pin the inner
 // dimension at compile time: `&[f32; R]` row views keep the whole
 // reduction in registers and let LLVM fully unroll + vectorize.
+//
+// Fixed-rank reductions use the canonical `simd::tree16` order, and
+// the full-register ranks R ∈ {8, 16} auto-dispatch to an AVX2 tile
+// at runtime. Both paths are bit-identical (the AVX2 horizontal sum
+// *is* tree16 — see src/simd.rs), so unlike the gradient kernels
+// there is no policy knob here: results cannot depend on the host.
 
 /// `out = A·Bᵀ`, inner dim fixed at `R`. `a: m×R`, `b: n×R`,
 /// `out: m×n`; every output element is stored (no pre-zero needed).
-/// Output columns are processed in 4-wide micro-tiles: four independent
-/// dot products share the `A`-row registers.
+/// Runtime-dispatches the AVX2 tile at the full-register ranks.
 fn gemm_nt_fixed<const R: usize>(a: &[f32], b: &[f32], out: &mut [f32], n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if (R == 8 || R == 16) && simd::avx2_available() {
+        // SAFETY: guarded by runtime AVX2 detection on this branch.
+        unsafe { gemm_nt_avx2::<R>(a, b, out, n) };
+        return;
+    }
+    gemm_nt_lanes::<R>(a, b, out, n);
+}
+
+/// Portable fixed-rank `A·Bᵀ` tile. Output columns are processed in
+/// 4-wide micro-tiles: four independent tree-order dot products share
+/// the `A`-row registers.
+fn gemm_nt_lanes<const R: usize>(a: &[f32], b: &[f32], out: &mut [f32], n: usize) {
     for (orow, arow) in out.chunks_exact_mut(n).zip(a.chunks_exact(R)) {
         let ar: &[f32; R] = arow.try_into().expect("A row of length R");
         let mut oc = orow.chunks_exact_mut(4);
@@ -336,11 +355,7 @@ fn gemm_nt_fixed<const R: usize>(a: &[f32], b: &[f32], out: &mut [f32], n: usize
             for (t, slot) in acc.iter_mut().enumerate() {
                 let br: &[f32; R] =
                     bg[t * R..(t + 1) * R].try_into().expect("B row of length R");
-                let mut s = 0.0f32;
-                for l in 0..R {
-                    s += ar[l] * br[l];
-                }
-                *slot = s;
+                *slot = simd::dot_tree(ar, br);
             }
             og.copy_from_slice(&acc);
         }
@@ -350,11 +365,36 @@ fn gemm_nt_fixed<const R: usize>(a: &[f32], b: &[f32], out: &mut [f32], n: usize
             .zip(bc.remainder().chunks_exact(R))
         {
             let br: &[f32; R] = br.try_into().expect("B row of length R");
-            let mut s = 0.0f32;
-            for l in 0..R {
-                s += ar[l] * br[l];
-            }
-            *o = s;
+            *o = simd::dot_tree(ar, br);
+        }
+    }
+}
+
+/// AVX2 `A·Bᵀ` tile for R ∈ {8, 16}: one or two `__m256` per row,
+/// predictions reduced through `simd::x86::hsum16` (bit-identical to
+/// [`gemm_nt_lanes`] — zero-padded tree, mul+add only, no FMA).
+///
+/// # Safety
+/// Requires AVX2; `a.len() % R == 0`, `b.len() == n * R`,
+/// `out.len() == (a.len() / R) * n` (guaranteed by the wrapper).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_nt_avx2<const R: usize>(a: &[f32], b: &[f32], out: &mut [f32], n: usize) {
+    use crate::simd::x86::hsum16;
+    use std::arch::x86_64::*;
+    debug_assert!(R == 8 || R == 16);
+    let two = R == 16;
+    let m = a.len() / R;
+    for i in 0..m {
+        let ap = a.as_ptr().add(i * R);
+        let a0 = _mm256_loadu_ps(ap);
+        let a1 = if two { _mm256_loadu_ps(ap.add(8)) } else { _mm256_setzero_ps() };
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let bp = b.as_ptr().add(j * R);
+            let b0 = _mm256_loadu_ps(bp);
+            let b1 = if two { _mm256_loadu_ps(bp.add(8)) } else { _mm256_setzero_ps() };
+            *o = hsum16(_mm256_mul_ps(a0, b0), _mm256_mul_ps(a1, b1));
         }
     }
 }
@@ -375,7 +415,9 @@ fn gemm_nt_dyn(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize) {
 
 /// `out += A·B` over pre-zeroed `out`. Four `k`-panels are jammed so
 /// each output row is read/written once per panel instead of once per
-/// rank-1 update.
+/// rank-1 update. The inner `j` loop is element-wise (no cross-lane
+/// reduction), so the auto-vectorizer lowers it to full-width vector
+/// IR without reassociating the `k`-sum — no explicit twin needed.
 fn gemm_nn_jammed(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
@@ -409,7 +451,8 @@ fn gemm_nn_jammed(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: 
 
 /// `out += Aᵀ·B` over pre-zeroed `out` (`a: k×m`, `b: k×n`). Jams four
 /// outer-product rows per pass; zero coefficients (masked residuals)
-/// skip whole panels.
+/// skip whole panels. Element-wise inner loop — see
+/// [`gemm_nn_jammed`] on why no explicit SIMD twin exists.
 fn gemm_tn_jammed(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
     let mut l = 0;
     while l + 4 <= k {
@@ -527,6 +570,26 @@ mod tests {
         assert_eq!(out, m(2, 2, &[19., 22., 43., 50.]));
         a.matmul_tn_into(&c, &mut out).unwrap();
         assert_eq!(out, m(2, 2, &[26., 30., 38., 44.]));
+    }
+
+    #[test]
+    fn gemm_nt_paths_bit_identical() {
+        // At the AVX2 ranks, the public entry point (which dispatches
+        // to the intrinsic tile when the host has AVX2) must equal the
+        // portable lane tile bit-for-bit. On non-AVX2 hosts both sides
+        // run the lane tile and the assert is trivially true.
+        for k in [8usize, 16] {
+            let a = DenseMatrix::from_fn(7, k, |i, l| ((i * 13 + l * 5) % 17) as f32 * 0.37 - 2.0);
+            let b = DenseMatrix::from_fn(9, k, |j, l| ((j * 11 + l * 3) % 19) as f32 * 0.29 - 2.5);
+            let got = a.matmul_nt(&b).unwrap();
+            let mut want = DenseMatrix::zeros(7, 9);
+            if k == 8 {
+                gemm_nt_lanes::<8>(a.as_slice(), b.as_slice(), want.as_mut_slice(), 9);
+            } else {
+                gemm_nt_lanes::<16>(a.as_slice(), b.as_slice(), want.as_mut_slice(), 9);
+            }
+            assert_eq!(got, want, "k={k}");
+        }
     }
 
     #[test]

@@ -17,17 +17,22 @@
 //!   (DESIGN.md §7 records why this preserves the Table-3 trends).
 //! * [`loader`] — parser for real MovieLens files, used automatically
 //!   when `GRIDMC_DATA_DIR` points at them.
+//! * [`shard`] — out-of-core per-block shard files with an mmap-backed
+//!   [`CsrView`] (`gridmc shard-data` writes them), for datasets that
+//!   exceed RAM.
 
 mod dense;
 pub mod loader;
 mod ratings;
+pub mod shard;
 mod sparse;
 mod synthetic;
 
 pub use dense::DenseMatrix;
 pub use loader::{load_movielens, MovieLensFormat};
 pub use ratings::{RatingsConfig, RatingsPreset};
-pub use sparse::{CooMatrix, CscView, CsrMatrix};
+pub use shard::{MmapCsr, ShardedDataset};
+pub use sparse::{CooMatrix, CscView, CsrMatrix, CsrView};
 pub use synthetic::{SyntheticConfig, SyntheticDataset};
 
 pub(crate) use dense::{dispatch_rank, MAX_FIXED_RANK};

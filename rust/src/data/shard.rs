@@ -1,0 +1,669 @@
+//! Out-of-core sharded datasets: per-block CSR shard files + an
+//! mmap-backed [`CsrView`].
+//!
+//! The grid decomposition makes out-of-core natural: each block owns a
+//! disjoint rectangle of observations, so the dataset shards into one
+//! file per block and a block's gradient passes only ever touch its own
+//! file. [`ShardedDataset::write`] partitions a [`SplitDataset`] and
+//! writes the shards (the `gridmc shard-data` CLI wraps it);
+//! [`MmapCsr::open`] maps one back as a [`CsrView`] the sparse kernels
+//! consume directly — pages fault in on demand, so the training working
+//! set is the factors plus whatever observation pages the current
+//! structure touches, not the whole dataset.
+//!
+//! ## Shard file format (`GMCSHRD1`, little-endian)
+//!
+//! ```text
+//! offset  size          field
+//! 0       8             magic b"GMCSHRD1" (version baked into magic)
+//! 8       4             rows  (u32)
+//! 12      4             cols  (u32)
+//! 16      8             nnz   (u64)
+//! 24      4*(rows+1)    indptr  (u32 each, indptr[0]=0, monotone)
+//! …       4*nnz         indices (u32 each, < cols, ascending per row)
+//! …       4*nnz         values  (f32 bits)
+//! end-8   8             FNV-1a-64 checksum of all preceding bytes
+//! ```
+//!
+//! Every section offset is 4-byte aligned by construction (24 is, and
+//! each section is a multiple of 4 long), so the mapped bytes reinterpret
+//! as `&[u32]`/`&[f32]` without copies. [`MmapCsr::open`] validates the
+//! whole file eagerly — length arithmetic, checksum, `indptr` monotonicity
+//! and index bounds — so a truncated or bit-flipped shard is a clean
+//! [`Error::Data`] at open time, and the unsafe slice reinterpretation
+//! afterwards can rely on validated invariants (never UB, never a panic
+//! deep inside a kernel). The validation pass streams the file once;
+//! the pages it warms are reclaimable, so the out-of-core property is
+//! preserved for datasets beyond RAM.
+//!
+//! The CSC companion the two-pass sparse kernel needs is *always*
+//! in-RAM ([`CscView::build`] over the mapped view, 8 bytes per
+//! observation): out-of-core applies to the CSR indices/values, which
+//! dominate at ratings scale. PERF.md §Kernels has the layout and the
+//! measured numbers.
+//!
+//! On non-Unix hosts (or if `mmap` itself fails) the loader falls back
+//! to a buffered read into owned, properly-aligned vectors — same
+//! validation, same view API, no out-of-core property.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::grid::{BlockId, BlockPartition, GridSpec};
+use crate::{Error, Result};
+
+use super::sparse::{CooMatrix, CsrView};
+use super::SplitDataset;
+
+const MAGIC: &[u8; 8] = b"GMCSHRD1";
+const HEADER_LEN: u64 = 24;
+const CHECKSUM_LEN: u64 = 8;
+/// Manifest file name inside a shard directory.
+const META_NAME: &str = "shards.meta";
+/// Held-out test split, stored as one full-matrix shard.
+const TEST_NAME: &str = "test.gmcshard";
+
+/// Streaming FNV-1a 64-bit (the same cheap, dependency-free integrity
+/// hash the durable checkpoint sink uses).
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        self.0 = h;
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Sink that tees written bytes into the checksum.
+struct HashingWriter<W: Write> {
+    inner: W,
+    fnv: Fnv64,
+}
+
+impl<W: Write> HashingWriter<W> {
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.fnv.update(bytes);
+        self.inner.write_all(bytes)?;
+        Ok(())
+    }
+}
+
+/// Write one CSR block as a shard file (atomic: temp file + rename, the
+/// durable-checkpoint discipline — a crash mid-write never leaves a
+/// half shard under the final name).
+pub fn write_shard<C: CsrView + ?Sized>(path: &Path, csr: &C) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let file = File::create(&tmp)?;
+        let mut w = HashingWriter { inner: BufWriter::new(file), fnv: Fnv64::new() };
+        w.put(MAGIC)?;
+        w.put(&(csr.rows() as u32).to_le_bytes())?;
+        w.put(&(csr.cols() as u32).to_le_bytes())?;
+        w.put(&(csr.nnz() as u64).to_le_bytes())?;
+        // indptr
+        let mut acc = 0u32;
+        w.put(&0u32.to_le_bytes())?;
+        for i in 0..csr.rows() {
+            acc += csr.row(i).0.len() as u32;
+            w.put(&acc.to_le_bytes())?;
+        }
+        // indices, then values (section-major so each reinterprets as
+        // one homogeneous slice when mapped).
+        for i in 0..csr.rows() {
+            for &j in csr.row(i).0 {
+                w.put(&j.to_le_bytes())?;
+            }
+        }
+        for i in 0..csr.rows() {
+            for &v in csr.row(i).1 {
+                w.put(&v.to_le_bytes())?;
+            }
+        }
+        let sum = w.fnv.finish();
+        w.inner.write_all(&sum.to_le_bytes())?;
+        w.inner.flush()?;
+        w.inner.get_ref().sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(unix)]
+mod sys {
+    //! Minimal raw bindings for read-only private mappings. The vendor
+    //! set has no `libc` crate; `std` already links the platform C
+    //! runtime on Unix, so declaring the two symbols directly is enough.
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// The bytes behind an [`MmapCsr`].
+enum Backing {
+    /// Read-only private mapping (Unix). Dropped with `munmap`.
+    #[cfg(unix)]
+    Map { ptr: std::ptr::NonNull<u8>, len: usize },
+    /// Owned aligned copies (non-Unix hosts, or mmap failure).
+    Owned { indptr: Vec<u32>, indices: Vec<u32>, values: Vec<f32> },
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE and MmapCsr exposes no
+// mutation — shared references across threads only ever read immutable
+// memory (the scoped-thread gradient fan-out relies on this).
+unsafe impl Send for Backing {}
+unsafe impl Sync for Backing {}
+
+impl Drop for Backing {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Map { ptr, len } = self {
+            // SAFETY: (ptr, len) came from a successful mmap and is
+            // unmapped exactly once, here.
+            unsafe {
+                sys::munmap(ptr.as_ptr().cast(), *len);
+            }
+        }
+    }
+}
+
+/// A CSR block whose index/value arrays live in a memory-mapped shard
+/// file. Implements [`CsrView`], so the sparse gradient kernels run on
+/// it unchanged (and bit-identically — same entries, same order).
+pub struct MmapCsr {
+    backing: Backing,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+}
+
+impl MmapCsr {
+    /// Map and validate a shard file. Truncation, bit corruption,
+    /// non-monotone `indptr` or out-of-range indices are all clean
+    /// [`Error::Data`]s here; after `open` succeeds every accessor is
+    /// infallible.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path).map_err(|e| {
+            Error::Data(format!("shard {}: {e}", path.display()))
+        })?;
+        let file_len = file.metadata()?.len();
+        if file_len < HEADER_LEN + CHECKSUM_LEN {
+            return Err(Error::Data(format!(
+                "shard {}: truncated ({file_len} bytes < {} header+checksum)",
+                path.display(),
+                HEADER_LEN + CHECKSUM_LEN
+            )));
+        }
+
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let len = file_len as usize;
+            // SAFETY: fd is a valid open file, len > 0 (checked above);
+            // a failed map returns MAP_FAILED which we reject.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as usize != usize::MAX {
+                let ptr = std::ptr::NonNull::new(ptr.cast::<u8>()).ok_or_else(|| {
+                    Error::Data(format!("shard {}: mmap returned null", path.display()))
+                })?;
+                let backing = Backing::Map { ptr, len };
+                // SAFETY: the mapping is len bytes long and lives until
+                // `backing` drops; validation only reads.
+                let bytes = unsafe { std::slice::from_raw_parts(ptr.as_ptr(), len) };
+                let (rows, cols, nnz) = validate(path, bytes)?;
+                return Ok(MmapCsr { backing, rows, cols, nnz });
+            }
+            log::warn!(
+                "shard {}: mmap failed, falling back to buffered read",
+                path.display()
+            );
+        }
+
+        Self::open_owned_from(path, file, file_len)
+    }
+
+    /// Buffered-read fallback: same file format, same validation, owned
+    /// aligned storage (no out-of-core property).
+    fn open_owned_from(path: &Path, mut file: File, file_len: u64) -> Result<Self> {
+        let mut bytes = Vec::with_capacity(file_len as usize);
+        file.read_to_end(&mut bytes)?;
+        let (rows, cols, nnz) = validate(path, &bytes)?;
+        let indptr_off = HEADER_LEN as usize;
+        let indices_off = indptr_off + 4 * (rows + 1);
+        let values_off = indices_off + 4 * nnz;
+        let u32s = |off: usize, n: usize| -> Vec<u32> {
+            bytes[off..off + 4 * n]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                .collect()
+        };
+        let values = bytes[values_off..values_off + 4 * nnz]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+            .collect();
+        Ok(MmapCsr {
+            backing: Backing::Owned {
+                indptr: u32s(indptr_off, rows + 1),
+                indices: u32s(indices_off, nnz),
+                values,
+            },
+            rows,
+            cols,
+            nnz,
+        })
+    }
+
+    fn indptr(&self) -> &[u32] {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Map { ptr, .. } => {
+                // SAFETY: offset 24 is 4-aligned from a page-aligned
+                // base, length was validated at open, mapping outlives
+                // the returned borrow (tied to &self).
+                unsafe {
+                    std::slice::from_raw_parts(
+                        ptr.as_ptr().add(HEADER_LEN as usize).cast::<u32>(),
+                        self.rows + 1,
+                    )
+                }
+            }
+            Backing::Owned { indptr, .. } => indptr,
+        }
+    }
+
+    fn indices(&self) -> &[u32] {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Map { ptr, .. } => {
+                let off = HEADER_LEN as usize + 4 * (self.rows + 1);
+                // SAFETY: as in `indptr` — validated length, 4-aligned
+                // offset, borrow tied to the mapping's owner.
+                unsafe {
+                    std::slice::from_raw_parts(ptr.as_ptr().add(off).cast::<u32>(), self.nnz)
+                }
+            }
+            Backing::Owned { indices, .. } => indices,
+        }
+    }
+
+    fn values(&self) -> &[f32] {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Map { ptr, .. } => {
+                let off = HEADER_LEN as usize + 4 * (self.rows + 1) + 4 * self.nnz;
+                // SAFETY: as in `indptr`.
+                unsafe {
+                    std::slice::from_raw_parts(ptr.as_ptr().add(off).cast::<f32>(), self.nnz)
+                }
+            }
+            Backing::Owned { values, .. } => values,
+        }
+    }
+
+    /// True when the observations actually live in a file mapping (vs
+    /// the owned-copy fallback).
+    pub fn is_mapped(&self) -> bool {
+        #[cfg(unix)]
+        {
+            matches!(self.backing, Backing::Map { .. })
+        }
+        #[cfg(not(unix))]
+        {
+            false
+        }
+    }
+
+    /// Materialize as a [`CooMatrix`] (used for the held-out test split,
+    /// which is small and consumed entry-wise by RMSE evaluation).
+    pub fn to_coo(&self) -> Result<CooMatrix> {
+        let mut coo = CooMatrix::new(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = CsrView::row(self, i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                coo.push(i as u32, j, v)?;
+            }
+        }
+        Ok(coo)
+    }
+}
+
+impl CsrView for MmapCsr {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let ip = self.indptr();
+        let lo = ip[i] as usize;
+        let hi = ip[i + 1] as usize;
+        (&self.indices()[lo..hi], &self.values()[lo..hi])
+    }
+}
+
+/// Full structural validation of shard bytes. Returns `(rows, cols, nnz)`.
+fn validate(path: &Path, bytes: &[u8]) -> Result<(usize, usize, usize)> {
+    let bad = |what: String| Error::Data(format!("shard {}: {what}", path.display()));
+    if &bytes[..8] != MAGIC {
+        return Err(bad(format!(
+            "bad magic {:?} (want {:?})",
+            &bytes[..8.min(bytes.len())],
+            MAGIC
+        )));
+    }
+    let rows = u32::from_le_bytes(bytes[8..12].try_into().expect("header")) as usize;
+    let cols = u32::from_le_bytes(bytes[12..16].try_into().expect("header")) as usize;
+    let nnz64 = u64::from_le_bytes(bytes[16..24].try_into().expect("header"));
+    let expect = HEADER_LEN
+        .checked_add(4 * (rows as u64 + 1))
+        .and_then(|v| v.checked_add(8u64.checked_mul(nnz64)?))
+        .and_then(|v| v.checked_add(CHECKSUM_LEN))
+        .ok_or_else(|| bad(format!("size overflow (rows={rows} nnz={nnz64})")))?;
+    if bytes.len() as u64 != expect {
+        return Err(bad(format!(
+            "length {} != {expect} implied by header (rows={rows} nnz={nnz64}) — truncated or corrupt",
+            bytes.len()
+        )));
+    }
+    let nnz = nnz64 as usize;
+    let payload = &bytes[..bytes.len() - CHECKSUM_LEN as usize];
+    let mut fnv = Fnv64::new();
+    fnv.update(payload);
+    let want = u64::from_le_bytes(
+        bytes[bytes.len() - 8..].try_into().expect("checksum tail"),
+    );
+    if fnv.finish() != want {
+        return Err(bad(format!(
+            "checksum mismatch (stored {want:#018x}, computed {:#018x})",
+            fnv.finish()
+        )));
+    }
+    // indptr: starts at 0, monotone, ends at nnz.
+    let ip_bytes = &bytes[HEADER_LEN as usize..HEADER_LEN as usize + 4 * (rows + 1)];
+    let mut prev = 0u32;
+    for (i, c) in ip_bytes.chunks_exact(4).enumerate() {
+        let v = u32::from_le_bytes(c.try_into().expect("4-byte chunk"));
+        if i == 0 && v != 0 {
+            return Err(bad(format!("indptr[0] = {v}, want 0")));
+        }
+        if v < prev {
+            return Err(bad(format!("indptr not monotone at row {i} ({prev} -> {v})")));
+        }
+        prev = v;
+    }
+    if prev as usize != nnz {
+        return Err(bad(format!("indptr[rows] = {prev} != nnz {nnz}")));
+    }
+    // Column indices in range — the kernels index W rows by these.
+    let idx_off = HEADER_LEN as usize + 4 * (rows + 1);
+    for (t, c) in bytes[idx_off..idx_off + 4 * nnz].chunks_exact(4).enumerate() {
+        let j = u32::from_le_bytes(c.try_into().expect("4-byte chunk")) as usize;
+        if j >= cols {
+            return Err(bad(format!("entry {t}: column {j} out of {cols}")));
+        }
+    }
+    Ok((rows, cols, nnz))
+}
+
+/// A directory of per-block shards plus the held-out test split,
+/// produced by [`ShardedDataset::write`] / `gridmc shard-data`.
+pub struct ShardedDataset {
+    pub m: usize,
+    pub n: usize,
+    pub p: usize,
+    pub q: usize,
+    /// Row-major `p × q` shard paths.
+    shard_paths: Vec<PathBuf>,
+    /// Held-out entries (loaded eagerly — small, consumed entry-wise).
+    pub test: CooMatrix,
+    /// Provenance from the manifest.
+    pub name: String,
+}
+
+impl ShardedDataset {
+    /// Partition `data` on `spec`'s grid and write one shard per block
+    /// plus the test split and a manifest into `dir`.
+    pub fn write(dir: &Path, spec: &GridSpec, data: &SplitDataset) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let partition = BlockPartition::new(*spec, &data.train)?;
+        let mut meta = String::new();
+        meta.push_str("gridmc-shards 1\n");
+        meta.push_str(&format!("name {}\n", data.name.replace(char::is_whitespace, "_")));
+        meta.push_str(&format!("m {}\nn {}\np {}\nq {}\n", data.m, data.n, spec.p, spec.q));
+        for id in spec.blocks() {
+            let file = shard_file_name(id);
+            write_shard(&dir.join(&file), &partition.csr_block(id))?;
+            meta.push_str(&format!("shard {} {} {file}\n", id.i, id.j));
+        }
+        write_shard(&dir.join(TEST_NAME), &data.test.to_csr())?;
+        meta.push_str(&format!("test {TEST_NAME}\n"));
+        std::fs::write(dir.join(META_NAME), meta)?;
+        Ok(())
+    }
+
+    /// Open a shard directory: parse the manifest, check every shard
+    /// file exists, and load the test split. Block shards themselves
+    /// are only mapped when [`Self::open_block`] is called.
+    pub fn open(dir: &Path) -> Result<ShardedDataset> {
+        let meta_path = dir.join(META_NAME);
+        let meta = std::fs::read_to_string(&meta_path).map_err(|e| {
+            Error::Data(format!("shard manifest {}: {e}", meta_path.display()))
+        })?;
+        let bad = |what: String| Error::Data(format!("shard manifest {}: {what}", meta_path.display()));
+        let mut lines = meta.lines();
+        if lines.next() != Some("gridmc-shards 1") {
+            return Err(bad("bad or missing version line".into()));
+        }
+        let (mut m, mut n, mut p, mut q) = (0usize, 0usize, 0usize, 0usize);
+        let mut name = String::new();
+        let mut shards: Vec<(usize, usize, String)> = Vec::new();
+        let mut test_file: Option<String> = None;
+        for line in lines {
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("name") => name = parts.next().unwrap_or("").to_string(),
+                Some(k @ ("m" | "n" | "p" | "q")) => {
+                    let v: usize = parts
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| bad(format!("bad {k} line: {line:?}")))?;
+                    match k {
+                        "m" => m = v,
+                        "n" => n = v,
+                        "p" => p = v,
+                        _ => q = v,
+                    }
+                }
+                Some("shard") => {
+                    let i: usize = parts
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| bad(format!("bad shard line: {line:?}")))?;
+                    let j: usize = parts
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| bad(format!("bad shard line: {line:?}")))?;
+                    let f = parts
+                        .next()
+                        .ok_or_else(|| bad(format!("bad shard line: {line:?}")))?;
+                    shards.push((i, j, f.to_string()));
+                }
+                Some("test") => {
+                    test_file = parts.next().map(|s| s.to_string());
+                }
+                Some(other) => return Err(bad(format!("unknown key {other:?}"))),
+                None => {}
+            }
+        }
+        if m == 0 || n == 0 || p == 0 || q == 0 {
+            return Err(bad(format!("incomplete geometry m={m} n={n} p={p} q={q}")));
+        }
+        if shards.len() != p * q {
+            return Err(bad(format!("{} shard lines for a {p}x{q} grid", shards.len())));
+        }
+        let mut shard_paths = vec![PathBuf::new(); p * q];
+        for (i, j, f) in shards {
+            if i >= p || j >= q {
+                return Err(bad(format!("shard ({i},{j}) outside {p}x{q}")));
+            }
+            let path = dir.join(&f);
+            if !path.is_file() {
+                return Err(Error::Data(format!("missing shard file {}", path.display())));
+            }
+            shard_paths[i * q + j] = path;
+        }
+        if shard_paths.iter().any(|sp| sp.as_os_str().is_empty()) {
+            return Err(bad("duplicate or missing shard entries".into()));
+        }
+        let test_file = test_file.ok_or_else(|| bad("missing test line".into()))?;
+        let test = MmapCsr::open(&dir.join(&test_file))?.to_coo()?;
+        Ok(ShardedDataset { m, n, p, q, shard_paths, test, name })
+    }
+
+    /// Map one block's shard (validating it) as a [`CsrView`].
+    pub fn open_block(&self, id: BlockId) -> Result<MmapCsr> {
+        MmapCsr::open(&self.shard_paths[id.i * self.q + id.j])
+    }
+}
+
+fn shard_file_name(id: BlockId) -> String {
+    format!("block_{}_{}.gmcshard", id.i, id.j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("gridmc-shard-tests")
+            .join(format!("{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_csr() -> super::super::CsrMatrix {
+        CooMatrix::from_triples(
+            4,
+            5,
+            [
+                (0u32, 1u32, 1.5f32),
+                (0, 4, -2.0),
+                (2, 0, 3.25),
+                (2, 2, 0.5),
+                (2, 3, -0.125),
+                (3, 4, 7.0),
+            ],
+        )
+        .unwrap()
+        .to_csr()
+    }
+
+    #[test]
+    fn shard_roundtrips_bit_exactly() {
+        let dir = tmp_dir("roundtrip");
+        let csr = sample_csr();
+        let path = dir.join("b.gmcshard");
+        write_shard(&path, &csr).unwrap();
+        let view = MmapCsr::open(&path).unwrap();
+        assert_eq!(CsrView::rows(&view), 4);
+        assert_eq!(CsrView::cols(&view), 5);
+        assert_eq!(CsrView::nnz(&view), 6);
+        for i in 0..4 {
+            assert_eq!(CsrView::row(&view, i), csr.row(i), "row {i}");
+        }
+        #[cfg(unix)]
+        assert!(view.is_mapped());
+    }
+
+    #[test]
+    fn empty_block_shard_roundtrips() {
+        let dir = tmp_dir("empty");
+        let csr = CooMatrix::new(3, 2).to_csr();
+        let path = dir.join("empty.gmcshard");
+        write_shard(&path, &csr).unwrap();
+        let view = MmapCsr::open(&path).unwrap();
+        assert_eq!(CsrView::nnz(&view), 0);
+        assert_eq!(CsrView::row(&view, 1), (&[][..], &[][..]));
+    }
+
+    #[test]
+    fn sharded_dataset_roundtrip() {
+        let dir = tmp_dir("dataset");
+        let data = SyntheticConfig {
+            m: 30,
+            n: 24,
+            rank: 3,
+            train_fraction: 0.4,
+            test_fraction: 0.2,
+            noise_std: 0.0,
+            seed: 9,
+        }
+        .generate();
+        let spec = GridSpec::new(30, 24, 3, 2, 3);
+        ShardedDataset::write(&dir, &spec, &data.data).unwrap();
+        let ds = ShardedDataset::open(&dir).unwrap();
+        assert_eq!((ds.m, ds.n, ds.p, ds.q), (30, 24, 3, 2));
+        assert_eq!(ds.test.nnz(), data.data.test.nnz());
+        // Every block shard holds exactly the partition's entries.
+        let partition = BlockPartition::new(spec, &data.data.train).unwrap();
+        for id in spec.blocks() {
+            let want = partition.csr_block(id);
+            let got = ds.open_block(id).unwrap();
+            assert_eq!(CsrView::nnz(&got), want.nnz(), "block {id}");
+            for i in 0..want.rows() {
+                assert_eq!(CsrView::row(&got, i), want.row(i), "block {id} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        let err = ShardedDataset::open(Path::new("/nonexistent/gridmc-shards")).unwrap_err();
+        assert!(format!("{err}").contains("shard manifest"));
+    }
+}

@@ -141,6 +141,51 @@ impl CooMatrix {
     }
 }
 
+/// Read access to a CSR-shaped matrix — the seam between the sparse
+/// gradient kernels and their storage backing. Two implementations:
+/// the owned in-memory [`CsrMatrix`], and the out-of-core
+/// [`MmapCsr`](super::MmapCsr) whose index/value arrays live in a
+/// memory-mapped shard file. Kernels are generic over this trait
+/// (monomorphized per backing — no virtual dispatch in the hot loop).
+pub trait CsrView {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn nnz(&self) -> usize;
+    /// `(col_indices, values)` of row `i`.
+    fn row(&self, i: usize) -> (&[u32], &[f32]);
+
+    /// Σ v² over all stored entries (the rank-0 degenerate cost).
+    fn sq_sum(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..self.rows() {
+            let (_, vals) = self.row(i);
+            for &v in vals {
+                acc += (v as f64) * (v as f64);
+            }
+        }
+        acc
+    }
+}
+
+impl CsrView for CsrMatrix {
+    fn rows(&self) -> usize {
+        CsrMatrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        CsrMatrix::cols(self)
+    }
+
+    fn nnz(&self) -> usize {
+        CsrMatrix::nnz(self)
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        CsrMatrix::row(self, i)
+    }
+}
+
 /// Compressed-sparse-row matrix.
 #[derive(Debug, Clone)]
 pub struct CsrMatrix {
@@ -187,29 +232,7 @@ impl CsrMatrix {
     /// float-addition sequence per output row as the legacy row-major
     /// scatter — results are bit-identical.
     pub fn to_csc(&self) -> CscView {
-        let nnz = self.nnz();
-        let mut colptr = vec![0u32; self.cols + 1];
-        for &j in &self.indices {
-            colptr[j as usize + 1] += 1;
-        }
-        for j in 0..self.cols {
-            colptr[j + 1] += colptr[j];
-        }
-        let mut next: Vec<u32> = colptr[..self.cols].to_vec();
-        let mut rowidx = vec![0u32; nnz];
-        let mut csr_to_csc = vec![0u32; nnz];
-        let mut t = 0usize;
-        for i in 0..self.rows {
-            let (cols, _) = self.row(i);
-            for &j in cols {
-                let pos = next[j as usize];
-                next[j as usize] += 1;
-                rowidx[pos as usize] = i as u32;
-                csr_to_csc[t] = pos;
-                t += 1;
-            }
-        }
-        CscView { cols: self.cols, colptr, rowidx, csr_to_csc }
+        CscView::build(self)
     }
 }
 
@@ -232,6 +255,40 @@ pub struct CscView {
 }
 
 impl CscView {
+    /// Build the column-major companion of any [`CsrView`] backing —
+    /// the same single implementation serves in-memory and mmap'd CSR
+    /// (the CSC index is always in RAM; only values/indices of the CSR
+    /// itself can live out-of-core).
+    pub fn build<C: CsrView + ?Sized>(csr: &C) -> CscView {
+        let nnz = csr.nnz();
+        let ncols = csr.cols();
+        let mut colptr = vec![0u32; ncols + 1];
+        for i in 0..csr.rows() {
+            let (cols, _) = csr.row(i);
+            for &j in cols {
+                colptr[j as usize + 1] += 1;
+            }
+        }
+        for j in 0..ncols {
+            colptr[j + 1] += colptr[j];
+        }
+        let mut next: Vec<u32> = colptr[..ncols].to_vec();
+        let mut rowidx = vec![0u32; nnz];
+        let mut csr_to_csc = vec![0u32; nnz];
+        let mut t = 0usize;
+        for i in 0..csr.rows() {
+            let (cols, _) = csr.row(i);
+            for &j in cols {
+                let pos = next[j as usize];
+                next[j as usize] += 1;
+                rowidx[pos as usize] = i as u32;
+                csr_to_csc[t] = pos;
+                t += 1;
+            }
+        }
+        CscView { cols: ncols, colptr, rowidx, csr_to_csc }
+    }
+
     pub fn cols(&self) -> usize {
         self.cols
     }

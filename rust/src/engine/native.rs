@@ -22,9 +22,29 @@
 //! monomorphized per rank (`rank ≤ 16`), and the update epilogue writes
 //! output buffers in place. Kernel design rationale and measured
 //! numbers live in PERF.md.
+//!
+//! Every gradient kernel exists on three SIMD paths — scalar reference
+//! loops, portable 16-wide lane arrays the auto-vectorizer lowers to
+//! vector IR, and runtime-dispatched AVX2 intrinsics — selected by
+//! [`crate::simd::SimdPolicy`] ([`NativeEngine::with_simd`]). All
+//! three are **bit-identical**: rank reductions share the canonical
+//! [`crate::simd::tree16`] order and element-wise updates never
+//! reassociate (the contract lives in `src/simd.rs`; the dispatch
+//! matrix and measured numbers in PERF.md §Kernels).
+//!
+//! Sparse blocks can also be served out-of-core:
+//! [`NativeEngine::prepare_sharded`] mmaps per-block `.gmcshard` files
+//! ([`crate::data::ShardedDataset`]) behind the same
+//! [`CsrView`](crate::data::CsrView) seam the in-RAM kernels use, so
+//! the gradient code is identical — monomorphized per backing, no
+//! dynamic dispatch.
 
-use crate::data::{dispatch_rank, CscView, CsrMatrix, DenseMatrix, MAX_FIXED_RANK};
+use crate::data::{
+    dispatch_rank, CscView, CsrMatrix, CsrView, DenseMatrix, MmapCsr, ShardedDataset,
+    MAX_FIXED_RANK,
+};
 use crate::grid::{BlockId, BlockPartition, StructureRoles};
+use crate::simd::{self, SimdPath, SimdPolicy};
 use crate::{Error, Result};
 
 use super::{Engine, EngineWorkspace, StructureFactors, StructureParams, UpdatedFactors};
@@ -49,6 +69,11 @@ pub enum NativeMode {
 enum BlockData {
     Dense { x: DenseMatrix, mask: DenseMatrix },
     Sparse { csr: CsrMatrix, csc: CscView },
+    /// Out-of-core sparse block: CSR arrays live in an mmap'd
+    /// `.gmcshard` file; only the CSC companion (8 bytes/observation)
+    /// is resident. Kernel code is shared with `Sparse` through the
+    /// [`CsrView`] seam.
+    SparseMmap { csr: MmapCsr, csc: CscView },
 }
 
 /// Pure-Rust [`Engine`].
@@ -57,6 +82,10 @@ pub struct NativeEngine {
     q: usize,
     blocks: Vec<BlockData>,
     par_threshold: usize,
+    /// Requested kernel path (kept for introspection/report labels).
+    simd: SimdPolicy,
+    /// Host-resolved kernel path every gradient call dispatches on.
+    path: SimdPath,
 }
 
 impl NativeEngine {
@@ -71,6 +100,10 @@ impl NativeEngine {
             q: 0,
             blocks: Vec::new(),
             par_threshold: DEFAULT_PAR_GRADS_THRESHOLD,
+            simd: SimdPolicy::Auto,
+            path: SimdPolicy::Auto
+                .resolve()
+                .expect("SimdPolicy::Auto resolution is infallible"),
         }
     }
 
@@ -82,6 +115,50 @@ impl NativeEngine {
     pub fn with_parallel_threshold(mut self, threshold: usize) -> Self {
         self.par_threshold = threshold;
         self
+    }
+
+    /// Select the kernel implementation ([`SimdPolicy::Auto`] is the
+    /// construction default). Resolution is eager so an explicit
+    /// `Avx2` request on a host without AVX2 fails here, loudly,
+    /// instead of silently changing kernels mid-experiment.
+    pub fn with_simd(mut self, policy: SimdPolicy) -> Result<Self> {
+        self.path = policy.resolve()?;
+        self.simd = policy;
+        Ok(self)
+    }
+
+    /// The policy this engine was configured with (pre-resolution).
+    pub fn simd_policy(&self) -> SimdPolicy {
+        self.simd
+    }
+
+    /// The resolved kernel path this engine dispatches on.
+    pub fn simd_path(&self) -> SimdPath {
+        self.path
+    }
+
+    /// Prepare from on-disk per-block shards instead of an in-memory
+    /// partition: each block's CSR arrays stay memory-mapped (paged in
+    /// on demand by the OS), and only the CSC companion view is
+    /// materialized in RAM. Sparse mode only — dense mode would defeat
+    /// the point by materializing `mb × nb` blocks anyway.
+    pub fn prepare_sharded(&mut self, ds: &ShardedDataset) -> Result<()> {
+        if self.mode != NativeMode::Sparse {
+            return Err(Error::Unsupported(
+                "prepare_sharded: out-of-core shards require NativeMode::Sparse".into(),
+            ));
+        }
+        self.q = ds.q;
+        let mut blocks = Vec::with_capacity(ds.p * ds.q);
+        for i in 0..ds.p {
+            for j in 0..ds.q {
+                let csr = ds.open_block(BlockId::new(i, j))?;
+                let csc = CscView::build(&csr);
+                blocks.push(BlockData::SparseMmap { csr, csc });
+            }
+        }
+        self.blocks = blocks;
+        Ok(())
     }
 
     fn block(&self, id: BlockId) -> Result<&BlockData> {
@@ -96,6 +173,7 @@ impl NativeEngine {
         match self.blocks.get(id.index(self.q)) {
             Some(BlockData::Dense { x, .. }) => x.rows() * x.cols(),
             Some(BlockData::Sparse { csr, .. }) => csr.nnz(),
+            Some(BlockData::SparseMmap { csr, .. }) => CsrView::nnz(csr),
             None => 0,
         }
     }
@@ -149,7 +227,8 @@ impl NativeEngine {
                 } else if rank <= MAX_FIXED_RANK {
                     dispatch_rank!(
                         rank,
-                        dense_grads_fixed(
+                        dense_grads_path(
+                            self.path,
                             x.as_slice(),
                             mask.as_slice(),
                             u.as_slice(),
@@ -173,55 +252,78 @@ impl NativeEngine {
                 }
             }
             BlockData::Sparse { csr, csc } => {
-                if csr.rows() > u.rows() || csr.cols() > w.rows() {
-                    return Err(Error::Shape(format!(
-                        "masked_grads: block {id} csr {}x{} exceeds factors {}x{}",
-                        csr.rows(),
-                        csr.cols(),
-                        u.rows(),
-                        w.rows()
-                    )));
-                }
-                if rank == 0 {
-                    // See the dense arm: zero gradients, true cost.
-                    gu.fill(0.0);
-                    gw.fill(0.0);
-                    csr.iter()
-                        .map(|(_, _, v)| (v as f64) * (v as f64))
-                        .sum()
-                } else if rank <= MAX_FIXED_RANK {
-                    // Residual cache sized to this block's nnz; Vec
-                    // capacity only ever grows, so after one pass over
-                    // the blocks this never allocates again.
-                    if ge.len() != csr.nnz() {
-                        ge.resize(csr.nnz(), 0.0);
-                    }
-                    dispatch_rank!(
-                        rank,
-                        sparse_grads_fixed(
-                            csr,
-                            csc,
-                            u.as_slice(),
-                            w.as_slice(),
-                            gu.as_mut_slice(),
-                            gw.as_mut_slice(),
-                            ge.as_mut_slice(),
-                        )
-                    )
-                } else {
-                    sparse_grads_dyn(
-                        csr,
-                        u.as_slice(),
-                        w.as_slice(),
-                        gu.as_mut_slice(),
-                        gw.as_mut_slice(),
-                        rank,
-                    )
-                }
+                sparse_arm(self.path, id, csr, csc, u, w, gu, gw, ge, rank)?
+            }
+            BlockData::SparseMmap { csr, csc } => {
+                sparse_arm(self.path, id, csr, csc, u, w, gu, gw, ge, rank)?
             }
         };
         Ok(f)
     }
+}
+
+/// The sparse arm of [`NativeEngine::grads_into_slot`], generic over
+/// the CSR backing (in-RAM [`CsrMatrix`] or out-of-core [`MmapCsr`])
+/// so each gets its own monomorphized kernels.
+#[allow(clippy::too_many_arguments)]
+fn sparse_arm<C: CsrView + ?Sized>(
+    path: SimdPath,
+    id: BlockId,
+    csr: &C,
+    csc: &CscView,
+    u: &DenseMatrix,
+    w: &DenseMatrix,
+    gu: &mut DenseMatrix,
+    gw: &mut DenseMatrix,
+    ge: &mut Vec<f32>,
+    rank: usize,
+) -> Result<f64> {
+    if csr.rows() > u.rows() || csr.cols() > w.rows() {
+        return Err(Error::Shape(format!(
+            "masked_grads: block {id} csr {}x{} exceeds factors {}x{}",
+            csr.rows(),
+            csr.cols(),
+            u.rows(),
+            w.rows()
+        )));
+    }
+    if rank == 0 {
+        // See the dense arm: zero gradients, true cost.
+        gu.fill(0.0);
+        gw.fill(0.0);
+        return Ok(csr.sq_sum());
+    }
+    let f = if rank <= MAX_FIXED_RANK {
+        // Residual cache sized to this block's nnz; Vec capacity only
+        // ever grows, so after one pass over the blocks this never
+        // allocates again.
+        if ge.len() != csr.nnz() {
+            ge.resize(csr.nnz(), 0.0);
+        }
+        dispatch_rank!(
+            rank,
+            sparse_grads_path(
+                path,
+                csr,
+                csc,
+                u.as_slice(),
+                w.as_slice(),
+                gu.as_mut_slice(),
+                gw.as_mut_slice(),
+                ge.as_mut_slice(),
+            )
+        )
+    } else {
+        sparse_grads_dyn(
+            csr,
+            u.as_slice(),
+            w.as_slice(),
+            gu.as_mut_slice(),
+            gw.as_mut_slice(),
+            rank,
+        )
+    };
+    Ok(f)
 }
 
 impl Default for NativeEngine {
@@ -325,12 +427,13 @@ impl Engine for NativeEngine {
         let (ua, uh) = (factors[0].0, factors[1].0);
         let (wa, wv) = (factors[0].1, factors[2].1);
 
-        fused_into(&mut out[0].0, factors[0].0, &g0.0, params.cf[0], gamma, lam, step_u, Some((ua, uh)));
-        fused_into(&mut out[0].1, factors[0].1, &g0.1, params.cf[0], gamma, lam, step_w, Some((wa, wv)));
-        fused_into(&mut out[1].0, factors[1].0, &g1.0, params.cf[1], gamma, lam, -step_u, Some((ua, uh)));
-        fused_into(&mut out[1].1, factors[1].1, &g1.1, params.cf[1], gamma, lam, 0.0, None);
-        fused_into(&mut out[2].0, factors[2].0, &g2.0, params.cf[2], gamma, lam, 0.0, None);
-        fused_into(&mut out[2].1, factors[2].1, &g2.1, params.cf[2], gamma, lam, -step_w, Some((wa, wv)));
+        let sp = self.path;
+        fused_into(sp, &mut out[0].0, factors[0].0, &g0.0, params.cf[0], gamma, lam, step_u, Some((ua, uh)));
+        fused_into(sp, &mut out[0].1, factors[0].1, &g0.1, params.cf[0], gamma, lam, step_w, Some((wa, wv)));
+        fused_into(sp, &mut out[1].0, factors[1].0, &g1.0, params.cf[1], gamma, lam, -step_u, Some((ua, uh)));
+        fused_into(sp, &mut out[1].1, factors[1].1, &g1.1, params.cf[1], gamma, lam, 0.0, None);
+        fused_into(sp, &mut out[2].0, factors[2].0, &g2.0, params.cf[2], gamma, lam, 0.0, None);
+        fused_into(sp, &mut out[2].1, factors[2].1, &g2.1, params.cf[2], gamma, lam, -step_w, Some((wa, wv)));
         Ok(())
     }
 
@@ -376,29 +479,14 @@ impl Engine for NativeEngine {
                     let xr = x.row(i);
                     let mr = mask.row(i);
                     for j in 0..x.cols() {
-                        let e = mr[j] * (xr[j] - dot(urow, &w.row(j)[..rank]));
+                        let e = mr[j] * (xr[j] - dot_rank(urow, &w.row(j)[..rank]));
                         acc += (e as f64) * (e as f64);
                     }
                 }
                 acc
             }
-            BlockData::Sparse { csr, .. } => {
-                let mut acc = 0.0f64;
-                for i in 0..csr.rows() {
-                    let (cols, vals) = csr.row(i);
-                    if cols.is_empty() {
-                        continue;
-                    }
-                    let urow = &u.row(i)[..rank];
-                    for (&j, &v) in cols.iter().zip(vals) {
-                        // Same elided-bounds-check zip dot as the
-                        // gradient kernels (PERF.md).
-                        let e = v - dot(urow, &w.row(j as usize)[..rank]);
-                        acc += (e as f64) * (e as f64);
-                    }
-                }
-                acc
-            }
+            BlockData::Sparse { csr, .. } => sparse_cost(csr, u, w, rank),
+            BlockData::SparseMmap { csr, .. } => sparse_cost(csr, u, w, rank),
         };
         Ok(f + lam as f64 * (u.frob_sq() + w.frob_sq()))
     }
@@ -408,19 +496,78 @@ impl Engine for NativeEngine {
     }
 }
 
-/// Rank-length dot with iterator zips (bounds checks elide; summation
-/// order matches the indexed loops it replaced).
+/// Rank-length dot product with a fixed 4-way reduction tree.
+///
+/// **Reduction-order contract.** Products are accumulated into four
+/// lane-striped partial sums (`acc[l] += a[4k+l]·b[4k+l]`), the ≤ 3
+/// remainder products fold sequentially into a tail sum, and the
+/// result is `((acc[0]+acc[2]) + (acc[1]+acc[3])) + tail`. The order
+/// is deterministic and identical on every SIMD path — but it is *not*
+/// the 16-lane tree of [`crate::simd::dot_tree`] the fixed-rank
+/// gradient kernels use. `dot` serves the dynamic-rank fallbacks
+/// (rank > [`MAX_FIXED_RANK`]), where it pairs with the same order in
+/// the kernels; cross-order comparisons (e.g. against a sequential
+/// reference) agree only within `|dot − ref| ≲ n·ε·Σ|aᵢbᵢ|`, the
+/// usual f32 reassociation radius.
 #[inline(always)]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    let mut acc = [0.0f32; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (qa, qb) in (&mut ca).zip(&mut cb) {
+        for l in 0..4 {
+            acc[l] += qa[l] * qb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[2]) + (acc[1] + acc[3])) + tail
+}
+
+/// Entry-point dot for the cost paths: the canonical 16-lane tree in
+/// the fixed-rank regime — bit parity with the gradient kernels'
+/// data-fit term on every SIMD path (`masked_grads_into_f_matches_
+/// block_cost` pins `f == block_cost(λ=0)` exactly) — and [`dot`]
+/// beyond it, pairing with the dynamic-rank kernels.
+#[inline(always)]
+fn dot_rank(a: &[f32], b: &[f32]) -> f32 {
+    if a.len() <= MAX_FIXED_RANK {
+        simd::dot_tree_dyn16(a, b)
+    } else {
+        dot(a, b)
+    }
+}
+
+/// Sparse data-fit cost, generic over the CSR backing. Same traversal
+/// order as the gradient kernels' pass 1, so the f64 accumulation —
+/// and therefore the reported cost — is bit-identical to the `f` the
+/// kernels return.
+fn sparse_cost<C: CsrView + ?Sized>(csr: &C, u: &DenseMatrix, w: &DenseMatrix, rank: usize) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..csr.rows() {
+        let (cols, vals) = csr.row(i);
+        if cols.is_empty() {
+            continue;
+        }
+        let urow = &u.row(i)[..rank];
+        for (&j, &v) in cols.iter().zip(vals) {
+            let e = v - dot_rank(urow, &w.row(j as usize)[..rank]);
+            acc += (e as f64) * (e as f64);
+        }
+    }
+    acc
 }
 
 /// `out ← coef_p·p + coef_g·g − step·(a − b)` in one pass over
-/// caller-owned storage; `diff = None` drops the consensus term. Same
-/// float expression and order as the legacy allocating closure, so
-/// results are bit-identical.
+/// caller-owned storage; `diff = None` drops the consensus term. Pure
+/// element-wise map, so every SIMD path produces bit-identical output
+/// (rule 1 of the contract in `src/simd.rs`): scalar and portable
+/// share one auto-vectorized loop, AVX2 runs explicit lanes.
 #[allow(clippy::too_many_arguments)]
 fn fused_into(
+    path: SimdPath,
     out: &mut DenseMatrix,
     p: &DenseMatrix,
     g: &DenseMatrix,
@@ -438,22 +585,55 @@ fn fused_into(
     let gs = g.as_slice();
     debug_assert_eq!(ps.len(), gs.len());
     match diff {
-        None => {
-            for ((o, &pv), &gv) in os.iter_mut().zip(ps).zip(gs) {
-                *o = coef_p * pv + coef_g * gv;
-            }
-        }
+        None => combine(path, os, ps, gs, coef_p, coef_g),
         Some((a, b)) => {
             let az = a.as_slice();
             let bz = b.as_slice();
             debug_assert_eq!(ps.len(), az.len());
             debug_assert_eq!(ps.len(), bz.len());
-            for (((o, &pv), &gv), (&av, &bv)) in
-                os.iter_mut().zip(ps).zip(gs).zip(az.iter().zip(bz))
-            {
-                *o = coef_p * pv + coef_g * gv - step * (av - bv);
-            }
+            combine_diff(path, os, ps, gs, az, bz, coef_p, coef_g, step);
         }
+    }
+}
+
+/// `os[k] = cp·ps[k] + cg·gs[k]` element-wise.
+fn combine(path: SimdPath, os: &mut [f32], ps: &[f32], gs: &[f32], cp: f32, cg: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if path == SimdPath::Avx2 {
+        // SAFETY: `SimdPath::Avx2` is only constructed after runtime
+        // AVX2 detection (`SimdPolicy::resolve`).
+        unsafe { avx2::combine_avx2(os, ps, gs, cp, cg) };
+        return;
+    }
+    let _ = path;
+    for ((o, &pv), &gv) in os.iter_mut().zip(ps).zip(gs) {
+        *o = cp * pv + cg * gv;
+    }
+}
+
+/// `os[k] = cp·ps[k] + cg·gs[k] − step·(az[k] − bz[k])` element-wise.
+#[allow(clippy::too_many_arguments)]
+fn combine_diff(
+    path: SimdPath,
+    os: &mut [f32],
+    ps: &[f32],
+    gs: &[f32],
+    az: &[f32],
+    bz: &[f32],
+    cp: f32,
+    cg: f32,
+    step: f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if path == SimdPath::Avx2 {
+        // SAFETY: `SimdPath::Avx2` is only constructed after runtime
+        // AVX2 detection (`SimdPolicy::resolve`).
+        unsafe { avx2::combine_diff_avx2(os, ps, gs, az, bz, cp, cg, step) };
+        return;
+    }
+    let _ = path;
+    for (((o, &pv), &gv), (&av, &bv)) in os.iter_mut().zip(ps).zip(gs).zip(az.iter().zip(bz)) {
+        *o = cp * pv + cg * gv - step * (av - bv);
     }
 }
 
@@ -464,11 +644,142 @@ fn fused_into(
 // fully unroll. Dynamic variants cover rank > MAX_FIXED_RANK with the
 // legacy memory-accumulating loops. All kernels write every output
 // element (or zero-fill first), so buffers may arrive dirty.
+//
+// Each fixed-rank kernel has three implementations dispatched by
+// `SimdPath` through `dense_grads_path` / `sparse_grads_path`:
+//
+//   Scalar   — the reference loops below (any rank 1..=16).
+//   Portable — 16-wide zero-padded lane arrays (any rank 1..=16); no
+//              intrinsics, the auto-vectorizer lowers the lane loops.
+//   Avx2     — `core::arch::x86_64` intrinsics for the full-register
+//              ranks R ∈ {8, 16} (no masked loads); other ranks fall
+//              through to Portable.
+//
+// All three are bit-identical: every rank reduction is the canonical
+// `simd::tree16` order and everything else is element-wise. No FMA in
+// the intrinsics — mul+add only — or the identity would break.
 
-/// Fused dense kernel: one row-major pass computes the masked residual
-/// `e = M ⊙ (X − U Wᵀ)` element-wise (never materialized), the cost
-/// `f = Σ e²`, `G_U = −2 e W` (register tile per row) and
-/// `G_W = −2 eᵀ U` (rows stay L1-resident across the sweep).
+/// Per-path dispatch for the fixed-rank dense kernel.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn dense_grads_path<const R: usize>(
+    path: SimdPath,
+    x: &[f32],
+    mask: &[f32],
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    nb: usize,
+) -> f64 {
+    match path {
+        SimdPath::Scalar => dense_grads_fixed::<R>(x, mask, u, w, gu, gw, nb),
+        SimdPath::Portable => dense_grads_portable::<R>(x, mask, u, w, gu, gw, nb),
+        SimdPath::Avx2 => dense_grads_avx2_or::<R>(x, mask, u, w, gu, gw, nb),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn dense_grads_avx2_or<const R: usize>(
+    x: &[f32],
+    mask: &[f32],
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    nb: usize,
+) -> f64 {
+    if R == 8 || R == 16 {
+        // SAFETY: `SimdPath::Avx2` is only constructed after runtime
+        // AVX2 detection (`SimdPolicy::resolve`).
+        unsafe { avx2::dense_grads_avx2::<R>(x, mask, u, w, gu, gw, nb) }
+    } else {
+        dense_grads_portable::<R>(x, mask, u, w, gu, gw, nb)
+    }
+}
+
+/// `SimdPath::Avx2` is unconstructible off x86_64; this stub keeps the
+/// match exhaustive on other targets.
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn dense_grads_avx2_or<const R: usize>(
+    x: &[f32],
+    mask: &[f32],
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    nb: usize,
+) -> f64 {
+    dense_grads_portable::<R>(x, mask, u, w, gu, gw, nb)
+}
+
+/// Per-path dispatch for the fixed-rank sparse kernel.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn sparse_grads_path<const R: usize, C: CsrView + ?Sized>(
+    path: SimdPath,
+    csr: &C,
+    csc: &CscView,
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    ge: &mut [f32],
+) -> f64 {
+    match path {
+        SimdPath::Scalar => sparse_grads_fixed::<R, C>(csr, csc, u, w, gu, gw, ge),
+        SimdPath::Portable => sparse_grads_portable::<R, C>(csr, csc, u, w, gu, gw, ge),
+        SimdPath::Avx2 => sparse_grads_avx2_or::<R, C>(csr, csc, u, w, gu, gw, ge),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn sparse_grads_avx2_or<const R: usize, C: CsrView + ?Sized>(
+    csr: &C,
+    csc: &CscView,
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    ge: &mut [f32],
+) -> f64 {
+    if R == 8 || R == 16 {
+        // SAFETY: `SimdPath::Avx2` is only constructed after runtime
+        // AVX2 detection (`SimdPolicy::resolve`).
+        unsafe { avx2::sparse_grads_avx2::<R, C>(csr, csc, u, w, gu, gw, ge) }
+    } else {
+        sparse_grads_portable::<R, C>(csr, csc, u, w, gu, gw, ge)
+    }
+}
+
+/// See the dense stub: keeps the match exhaustive off x86_64.
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn sparse_grads_avx2_or<const R: usize, C: CsrView + ?Sized>(
+    csr: &C,
+    csc: &CscView,
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    ge: &mut [f32],
+) -> f64 {
+    sparse_grads_portable::<R, C>(csr, csc, u, w, gu, gw, ge)
+}
+
+/// Fused dense kernel, scalar path: one row-major pass computes the
+/// masked residual `e = M ⊙ (X − U Wᵀ)` element-wise (never
+/// materialized), the cost `f = Σ e²`, `G_U = −2 e W` (register tile
+/// per row) and `G_W = −2 eᵀ U` (rows stay L1-resident across the
+/// sweep). The prediction reduction is the canonical
+/// [`simd::dot_tree`] order, so portable/AVX2 output is bit-identical.
 fn dense_grads_fixed<const R: usize>(
     x: &[f32],
     mask: &[f32],
@@ -496,10 +807,7 @@ fn dense_grads_fixed<const R: usize>(
             .zip(w.chunks_exact(R).zip(gw.chunks_exact_mut(R)))
         {
             let wr: &[f32; R] = wr.try_into().expect("W row of length R");
-            let mut pred = 0.0f32;
-            for l in 0..R {
-                pred += ur[l] * wr[l];
-            }
+            let pred = simd::dot_tree(ur, wr);
             let e = mv * (xv - pred);
             f += (e as f64) * (e as f64);
             let ge = -2.0 * e;
@@ -557,7 +865,8 @@ fn dense_grads_dyn(
     f
 }
 
-/// Two-pass sparse kernel.
+/// Two-pass sparse kernel, scalar path — generic over the CSR backing
+/// (in-RAM [`CsrMatrix`] or mmap'd [`MmapCsr`], monomorphized).
 ///
 /// Pass 1 walks the CSR row-major: per-row `G_U` register tile, cost
 /// accumulation, and the per-observation residual gradients scattered
@@ -567,8 +876,10 @@ fn dense_grads_dyn(
 /// random read-modify-write traffic dominated the old profile. Within
 /// each column the CSC preserves CSR (ascending-row) order, so the
 /// accumulation sequence — and therefore every f32 — is unchanged.
-fn sparse_grads_fixed<const R: usize>(
-    csr: &CsrMatrix,
+/// Predictions reduce in the canonical [`simd::dot_tree`] order, so
+/// portable/AVX2 output is bit-identical.
+fn sparse_grads_fixed<const R: usize, C: CsrView + ?Sized>(
+    csr: &C,
     csc: &CscView,
     u: &[f32],
     w: &[f32],
@@ -597,10 +908,7 @@ fn sparse_grads_fixed<const R: usize>(
             let j = j as usize;
             let wr: &[f32; R] =
                 w[j * R..(j + 1) * R].try_into().expect("W row of length R");
-            let mut pred = 0.0f32;
-            for l in 0..R {
-                pred += ur[l] * wr[l];
-            }
+            let pred = simd::dot_tree(ur, wr);
             let e = v - pred;
             f += (e as f64) * (e as f64);
             let g = -2.0 * e;
@@ -639,9 +947,10 @@ fn sparse_grads_fixed<const R: usize>(
 }
 
 /// Dynamic-rank sparse fallback (rank > MAX_FIXED_RANK): legacy
-/// single-pass with the `G_W` row scatter.
-fn sparse_grads_dyn(
-    csr: &CsrMatrix,
+/// single-pass with the `G_W` row scatter. Scalar on every SIMD path
+/// (the fixed-rank regime is where the paper's experiments live).
+fn sparse_grads_dyn<C: CsrView + ?Sized>(
+    csr: &C,
     u: &[f32],
     w: &[f32],
     gu: &mut [f32],
@@ -680,6 +989,369 @@ fn sparse_grads_dyn(
     f
 }
 
+/// Portable-lane dense kernel: same float semantics as
+/// [`dense_grads_fixed`] — tree16 predictions, element-wise lane
+/// updates — written over 16-wide zero-padded arrays so the
+/// auto-vectorizer lowers the lane loops to full-width vector IR
+/// without intrinsics. Zero padding is exact: lanes ≥ R contribute
+/// `±0.0` products and `+0.0` stays `+0.0` under accumulation, and
+/// only lanes `< R` are ever copied out.
+fn dense_grads_portable<const R: usize>(
+    x: &[f32],
+    mask: &[f32],
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    nb: usize,
+) -> f64 {
+    debug_assert!(R <= 16);
+    for v in gw.iter_mut() {
+        *v = 0.0;
+    }
+    let mut f = 0.0f64;
+    for (((xr, mr), ur), gur) in x
+        .chunks_exact(nb)
+        .zip(mask.chunks_exact(nb))
+        .zip(u.chunks_exact(R))
+        .zip(gu.chunks_exact_mut(R))
+    {
+        let mut ul = [0.0f32; 16];
+        ul[..R].copy_from_slice(ur);
+        let mut acc = [0.0f32; 16];
+        for ((&xv, &mv), (wr, gwr)) in xr
+            .iter()
+            .zip(mr)
+            .zip(w.chunks_exact(R).zip(gw.chunks_exact_mut(R)))
+        {
+            let mut wl = [0.0f32; 16];
+            wl[..R].copy_from_slice(wr);
+            let mut prod = [0.0f32; 16];
+            for l in 0..16 {
+                prod[l] = ul[l] * wl[l];
+            }
+            let pred = simd::tree16(&prod);
+            let e = mv * (xv - pred);
+            f += (e as f64) * (e as f64);
+            let g = -2.0 * e;
+            for l in 0..16 {
+                acc[l] += g * wl[l];
+            }
+            // G_W rows are R-strided in memory — only R lanes exist.
+            for l in 0..R {
+                gwr[l] += g * ul[l];
+            }
+        }
+        gur.copy_from_slice(&acc[..R]);
+    }
+    f
+}
+
+/// Portable-lane sparse kernel: same structure and float semantics as
+/// [`sparse_grads_fixed`], over 16-wide zero-padded lane arrays (see
+/// [`dense_grads_portable`] for why padding is exact).
+fn sparse_grads_portable<const R: usize, C: CsrView + ?Sized>(
+    csr: &C,
+    csc: &CscView,
+    u: &[f32],
+    w: &[f32],
+    gu: &mut [f32],
+    gw: &mut [f32],
+    ge: &mut [f32],
+) -> f64 {
+    debug_assert!(R <= 16);
+    debug_assert_eq!(ge.len(), csr.nnz());
+    for v in gu.iter_mut() {
+        *v = 0.0;
+    }
+    for v in gw.iter_mut() {
+        *v = 0.0;
+    }
+    let scatter = csc.scatter_map();
+    let mut f = 0.0f64;
+    let mut t = 0usize;
+    for i in 0..csr.rows() {
+        let (cols, vals) = csr.row(i);
+        if cols.is_empty() {
+            continue;
+        }
+        let mut ul = [0.0f32; 16];
+        ul[..R].copy_from_slice(&u[i * R..(i + 1) * R]);
+        let mut acc = [0.0f32; 16];
+        for (&j, &v) in cols.iter().zip(vals) {
+            let j = j as usize;
+            let mut wl = [0.0f32; 16];
+            wl[..R].copy_from_slice(&w[j * R..(j + 1) * R]);
+            let mut prod = [0.0f32; 16];
+            for l in 0..16 {
+                prod[l] = ul[l] * wl[l];
+            }
+            let pred = simd::tree16(&prod);
+            let e = v - pred;
+            f += (e as f64) * (e as f64);
+            let g = -2.0 * e;
+            ge[scatter[t] as usize] = g;
+            t += 1;
+            for l in 0..16 {
+                acc[l] += g * wl[l];
+            }
+        }
+        gu[i * R..(i + 1) * R].copy_from_slice(&acc[..R]);
+    }
+    let rows_of = csc.row_indices();
+    for j in 0..csc.cols() {
+        let range = csc.col_range(j);
+        if range.is_empty() {
+            continue;
+        }
+        let mut acc = [0.0f32; 16];
+        for (&i, &g) in rows_of[range.clone()].iter().zip(&ge[range.clone()]) {
+            let i = i as usize;
+            let mut ul = [0.0f32; 16];
+            ul[..R].copy_from_slice(&u[i * R..(i + 1) * R]);
+            for l in 0..16 {
+                acc[l] += g * ul[l];
+            }
+        }
+        gw[j * R..(j + 1) * R].copy_from_slice(&acc[..R]);
+    }
+    f
+}
+
+/// Explicit AVX2 kernels, runtime-dispatched (`SimdPath::Avx2` exists
+/// only after `is_x86_feature_detected!("avx2")` succeeded).
+///
+/// Restricted to the full-register ranks R ∈ {8, 16} — one or two
+/// `__m256` per factor row, unaligned loads/stores, no masked tails.
+/// Bit-identity with the scalar path holds because:
+///
+/// * every prediction is `hsum(lo·wl, hi·wh)`, whose add sequence is
+///   exactly [`simd::tree16`] (pinned by `tree16_matches_avx2_hsum`);
+/// * accumulator updates are element-wise `add(acc, mul(g, w))` in the
+///   scalar loop's order;
+/// * no FMA — `mul` + `add` only, preserving the intermediate
+///   rounding.
+///
+/// `unsafe` here carries two obligations: callers guarantee AVX2 (the
+/// dispatchers' SAFETY comments) and in-bounds row pointers (shape
+/// checks in `grads_into_slot`/`sparse_arm` run first).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{CscView, CsrView};
+    use crate::simd::x86::hsum16 as hsum;
+    use std::arch::x86_64::*;
+
+    /// AVX2 twin of `dense_grads_fixed`, R ∈ {8, 16}.
+    ///
+    /// # Safety
+    /// Requires AVX2; slice lengths must satisfy the same shape
+    /// invariants as the scalar kernel (checked by the caller).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dense_grads_avx2<const R: usize>(
+        x: &[f32],
+        mask: &[f32],
+        u: &[f32],
+        w: &[f32],
+        gu: &mut [f32],
+        gw: &mut [f32],
+        nb: usize,
+    ) -> f64 {
+        debug_assert!(R == 8 || R == 16);
+        let two = R == 16;
+        for v in gw.iter_mut() {
+            *v = 0.0;
+        }
+        let mut f = 0.0f64;
+        let mb = if nb == 0 { 0 } else { x.len() / nb };
+        for i in 0..mb {
+            let xr = &x[i * nb..(i + 1) * nb];
+            let mr = &mask[i * nb..(i + 1) * nb];
+            let up = u.as_ptr().add(i * R);
+            let u0 = _mm256_loadu_ps(up);
+            let u1 = if two { _mm256_loadu_ps(up.add(8)) } else { _mm256_setzero_ps() };
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            for j in 0..nb {
+                let wp = w.as_ptr().add(j * R);
+                let w0 = _mm256_loadu_ps(wp);
+                let w1 = if two { _mm256_loadu_ps(wp.add(8)) } else { _mm256_setzero_ps() };
+                let pred = hsum(_mm256_mul_ps(u0, w0), _mm256_mul_ps(u1, w1));
+                let e = mr[j] * (xr[j] - pred);
+                f += (e as f64) * (e as f64);
+                let g = -2.0 * e;
+                let gv = _mm256_set1_ps(g);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(gv, w0));
+                let gwp = gw.as_mut_ptr().add(j * R);
+                _mm256_storeu_ps(
+                    gwp,
+                    _mm256_add_ps(_mm256_loadu_ps(gwp), _mm256_mul_ps(gv, u0)),
+                );
+                if two {
+                    a1 = _mm256_add_ps(a1, _mm256_mul_ps(gv, w1));
+                    _mm256_storeu_ps(
+                        gwp.add(8),
+                        _mm256_add_ps(_mm256_loadu_ps(gwp.add(8)), _mm256_mul_ps(gv, u1)),
+                    );
+                }
+            }
+            let gup = gu.as_mut_ptr().add(i * R);
+            _mm256_storeu_ps(gup, a0);
+            if two {
+                _mm256_storeu_ps(gup.add(8), a1);
+            }
+        }
+        f
+    }
+
+    /// AVX2 twin of `sparse_grads_fixed`, R ∈ {8, 16}.
+    ///
+    /// # Safety
+    /// Requires AVX2; `csr`/`csc`/slice shapes must satisfy the same
+    /// invariants as the scalar kernel (checked by the caller).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sparse_grads_avx2<const R: usize, C: CsrView + ?Sized>(
+        csr: &C,
+        csc: &CscView,
+        u: &[f32],
+        w: &[f32],
+        gu: &mut [f32],
+        gw: &mut [f32],
+        ge: &mut [f32],
+    ) -> f64 {
+        debug_assert!(R == 8 || R == 16);
+        debug_assert_eq!(ge.len(), csr.nnz());
+        let two = R == 16;
+        for v in gu.iter_mut() {
+            *v = 0.0;
+        }
+        for v in gw.iter_mut() {
+            *v = 0.0;
+        }
+        let scatter = csc.scatter_map();
+        let mut f = 0.0f64;
+        let mut t = 0usize;
+        for i in 0..csr.rows() {
+            let (cols, vals) = csr.row(i);
+            if cols.is_empty() {
+                continue;
+            }
+            let up = u.as_ptr().add(i * R);
+            let u0 = _mm256_loadu_ps(up);
+            let u1 = if two { _mm256_loadu_ps(up.add(8)) } else { _mm256_setzero_ps() };
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            for (&j, &v) in cols.iter().zip(vals) {
+                let wp = w.as_ptr().add(j as usize * R);
+                let w0 = _mm256_loadu_ps(wp);
+                let w1 = if two { _mm256_loadu_ps(wp.add(8)) } else { _mm256_setzero_ps() };
+                let pred = hsum(_mm256_mul_ps(u0, w0), _mm256_mul_ps(u1, w1));
+                let e = v - pred;
+                f += (e as f64) * (e as f64);
+                let g = -2.0 * e;
+                ge[scatter[t] as usize] = g;
+                t += 1;
+                let gv = _mm256_set1_ps(g);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(gv, w0));
+                if two {
+                    a1 = _mm256_add_ps(a1, _mm256_mul_ps(gv, w1));
+                }
+            }
+            let gup = gu.as_mut_ptr().add(i * R);
+            _mm256_storeu_ps(gup, a0);
+            if two {
+                _mm256_storeu_ps(gup.add(8), a1);
+            }
+        }
+        let rows_of = csc.row_indices();
+        for j in 0..csc.cols() {
+            let range = csc.col_range(j);
+            if range.is_empty() {
+                continue;
+            }
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            for (&i, &g) in rows_of[range.clone()].iter().zip(&ge[range.clone()]) {
+                let up = u.as_ptr().add(i as usize * R);
+                let gv = _mm256_set1_ps(g);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(gv, _mm256_loadu_ps(up)));
+                if two {
+                    a1 = _mm256_add_ps(a1, _mm256_mul_ps(gv, _mm256_loadu_ps(up.add(8))));
+                }
+            }
+            let gwp = gw.as_mut_ptr().add(j * R);
+            _mm256_storeu_ps(gwp, a0);
+            if two {
+                _mm256_storeu_ps(gwp.add(8), a1);
+            }
+        }
+        f
+    }
+
+    /// AVX2 twin of the `combine` epilogue (element-wise, any length).
+    ///
+    /// # Safety
+    /// Requires AVX2; `os`, `ps`, `gs` must share a length.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn combine_avx2(os: &mut [f32], ps: &[f32], gs: &[f32], cp: f32, cg: f32) {
+        let n = os.len();
+        let cpv = _mm256_set1_ps(cp);
+        let cgv = _mm256_set1_ps(cg);
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let pv = _mm256_loadu_ps(ps.as_ptr().add(k));
+            let gv = _mm256_loadu_ps(gs.as_ptr().add(k));
+            _mm256_storeu_ps(
+                os.as_mut_ptr().add(k),
+                _mm256_add_ps(_mm256_mul_ps(cpv, pv), _mm256_mul_ps(cgv, gv)),
+            );
+            k += 8;
+        }
+        while k < n {
+            os[k] = cp * ps[k] + cg * gs[k];
+            k += 1;
+        }
+    }
+
+    /// AVX2 twin of the `combine_diff` epilogue.
+    ///
+    /// # Safety
+    /// Requires AVX2; all five slices must share a length.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn combine_diff_avx2(
+        os: &mut [f32],
+        ps: &[f32],
+        gs: &[f32],
+        az: &[f32],
+        bz: &[f32],
+        cp: f32,
+        cg: f32,
+        step: f32,
+    ) {
+        let n = os.len();
+        let cpv = _mm256_set1_ps(cp);
+        let cgv = _mm256_set1_ps(cg);
+        let sv = _mm256_set1_ps(step);
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let pv = _mm256_loadu_ps(ps.as_ptr().add(k));
+            let gv = _mm256_loadu_ps(gs.as_ptr().add(k));
+            let av = _mm256_loadu_ps(az.as_ptr().add(k));
+            let bv = _mm256_loadu_ps(bz.as_ptr().add(k));
+            let t = _mm256_add_ps(_mm256_mul_ps(cpv, pv), _mm256_mul_ps(cgv, gv));
+            _mm256_storeu_ps(
+                os.as_mut_ptr().add(k),
+                _mm256_sub_ps(t, _mm256_mul_ps(sv, _mm256_sub_ps(av, bv))),
+            );
+            k += 8;
+        }
+        while k < n {
+            os[k] = cp * ps[k] + cg * gs[k] - step * (az[k] - bz[k]);
+            k += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -687,8 +1359,11 @@ mod tests {
     use crate::grid::{GridSpec, NormalizationCoeffs, Structure};
     use crate::model::FactorState;
 
-    fn setup(mode: NativeMode) -> (GridSpec, BlockPartition, NativeEngine, FactorState) {
-        let spec = GridSpec::new(24, 20, 2, 2, 3);
+    fn setup_rank(
+        mode: NativeMode,
+        rank: usize,
+    ) -> (GridSpec, BlockPartition, NativeEngine, FactorState) {
+        let spec = GridSpec::new(24, 20, 2, 2, rank);
         let data = SyntheticConfig {
             m: 24,
             n: 20,
@@ -702,6 +1377,10 @@ mod tests {
         eng.prepare(&part).unwrap();
         let state = FactorState::init_random(spec, 11);
         (spec, part, eng, state)
+    }
+
+    fn setup(mode: NativeMode) -> (GridSpec, BlockPartition, NativeEngine, FactorState) {
+        setup_rank(mode, 3)
     }
 
     fn params() -> StructureParams {
@@ -902,5 +1581,86 @@ mod tests {
         let eng = NativeEngine::new();
         let u = DenseMatrix::zeros(2, 2);
         assert!(eng.block_cost(BlockId::new(0, 0), &u, &u, 0.0).is_err());
+    }
+
+    #[test]
+    fn simd_paths_bit_identical_to_scalar() {
+        // The crux of the SIMD contract: portable (and, when the host
+        // has it, AVX2) structure updates and block costs equal the
+        // scalar oracle bit-for-bit — across ranks that hit the
+        // portable generic (3), the one-register AVX2 kernel (8) and
+        // the two-register AVX2 kernel (16).
+        let mut policies = vec![SimdPolicy::Portable];
+        if simd::avx2_available() {
+            policies.push(SimdPolicy::Avx2);
+        }
+        for mode in [NativeMode::Sparse, NativeMode::Dense] {
+            for rank in [3usize, 8, 16] {
+                let (_, part, _, state) = setup_rank(mode, rank);
+                let mut oracle = NativeEngine::with_mode(mode)
+                    .with_simd(SimdPolicy::Scalar)
+                    .unwrap();
+                oracle.prepare(&part).unwrap();
+                for &pol in &policies {
+                    let mut eng = NativeEngine::with_mode(mode).with_simd(pol).unwrap();
+                    eng.prepare(&part).unwrap();
+                    for s in [Structure::upper(0, 0), Structure::lower(1, 1)] {
+                        let roles = s.roles();
+                        let f = factors_of(&state, &roles);
+                        let a = oracle.structure_update(&roles, f, &params()).unwrap();
+                        let b = eng.structure_update(&roles, f, &params()).unwrap();
+                        for k in 0..3 {
+                            assert_eq!(a[k].0, b[k].0, "{mode:?} r{rank} {pol:?} {s} blk {k} U");
+                            assert_eq!(a[k].1, b[k].1, "{mode:?} r{rank} {pol:?} {s} blk {k} W");
+                        }
+                        let ca = oracle
+                            .block_cost(roles.anchor, f[0].0, f[0].1, 1e-6)
+                            .unwrap();
+                        let cb = eng.block_cost(roles.anchor, f[0].0, f[0].1, 1e-6).unwrap();
+                        assert_eq!(ca.to_bits(), cb.to_bits(), "{mode:?} r{rank} {pol:?} cost");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn with_simd_avx2_matches_host_support() {
+        let r = NativeEngine::new().with_simd(SimdPolicy::Avx2);
+        if simd::avx2_available() {
+            assert_eq!(r.unwrap().simd_path(), SimdPath::Avx2);
+        } else {
+            assert!(r.is_err());
+        }
+    }
+
+    #[test]
+    fn default_path_is_vectorized() {
+        // Auto never resolves to the scalar oracle.
+        assert_ne!(NativeEngine::new().simd_path(), SimdPath::Scalar);
+    }
+
+    #[test]
+    fn grads_f_matches_block_cost_on_every_path() {
+        // f == block_cost(λ=0) must hold bit-exactly per path, because
+        // the cost path reuses the kernels' canonical dot order.
+        let mut policies = vec![SimdPolicy::Scalar, SimdPolicy::Portable];
+        if simd::avx2_available() {
+            policies.push(SimdPolicy::Avx2);
+        }
+        for mode in [NativeMode::Sparse, NativeMode::Dense] {
+            for &pol in &policies {
+                let (_, part, _, state) = setup_rank(mode, 8);
+                let mut eng = NativeEngine::with_mode(mode).with_simd(pol).unwrap();
+                eng.prepare(&part).unwrap();
+                let id = BlockId::new(0, 1);
+                let mut ws = EngineWorkspace::new();
+                let f = eng
+                    .masked_grads_into(id, state.u(id), state.w(id), 0, &mut ws)
+                    .unwrap();
+                let c = eng.block_cost(id, state.u(id), state.w(id), 0.0).unwrap();
+                assert_eq!(f.to_bits(), c.to_bits(), "{mode:?} {pol:?}");
+            }
+        }
     }
 }

@@ -30,8 +30,9 @@ use crate::data::SplitDataset;
 use crate::engine::{Engine, NativeEngine, NativeMode, XlaEngine};
 use crate::gossip::{AsyncDriver, Driver, GrowthPlan, ParallelDriver, PriorityDriver, ShrinkPlan};
 use crate::grid::GridSpec;
-use crate::model::FactorState;
+use crate::model::{FactorState, FactorStorage};
 use crate::net::FaultPlan;
+use crate::simd::SimdPolicy;
 use crate::solver::{SequentialDriver, SolverReport};
 use crate::{Error, Result};
 
@@ -48,16 +49,36 @@ pub struct Outcome {
 /// Build the configured engine; [`EngineChoice::Xla`] falls back to the
 /// native sparse engine (with a warning) when the manifest lacks the
 /// block shape — unless `GRIDMC_STRICT_ENGINE=1`.
-pub fn build_engine(choice: EngineChoice, spec: &GridSpec) -> Result<Box<dyn Engine>> {
+///
+/// `simd` pins the native kernels' dispatch path (`[engine] simd`);
+/// requesting `avx2` on a host without it is a config error, surfaced
+/// here at build time rather than mid-run.
+pub fn build_engine(
+    choice: EngineChoice,
+    spec: &GridSpec,
+    simd: SimdPolicy,
+) -> Result<Box<dyn Engine>> {
     match choice {
-        EngineChoice::NativeSparse => Ok(Box::new(NativeEngine::with_mode(NativeMode::Sparse))),
-        EngineChoice::NativeDense => Ok(Box::new(NativeEngine::with_mode(NativeMode::Dense))),
+        EngineChoice::NativeSparse => {
+            Ok(Box::new(NativeEngine::with_mode(NativeMode::Sparse).with_simd(simd)?))
+        }
+        EngineChoice::NativeDense => {
+            Ok(Box::new(NativeEngine::with_mode(NativeMode::Dense).with_simd(simd)?))
+        }
         EngineChoice::Xla => match XlaEngine::from_default_artifacts(spec) {
-            Ok(e) => Ok(Box::new(e)),
+            Ok(e) => {
+                if simd != SimdPolicy::Auto {
+                    log::warn!(
+                        "[engine] simd = \"{}\" is a native-kernel knob; the XLA engine ignores it",
+                        simd.as_str()
+                    );
+                }
+                Ok(Box::new(e))
+            }
             Err(err) if std::env::var("GRIDMC_STRICT_ENGINE").as_deref() == Ok("1") => Err(err),
             Err(err) => {
                 log::warn!("xla engine unavailable ({err}); falling back to native-sparse");
-                Ok(Box::new(NativeEngine::new()))
+                Ok(Box::new(NativeEngine::new().with_simd(simd)?))
             }
         },
     }
@@ -116,17 +137,35 @@ pub fn run_experiment_on(cfg: &ExperimentConfig, data: &SplitDataset) -> Result<
         .map(|s| ShrinkPlan::trailing_columns(spec, s.columns, s.retire_step))
         .transpose()?
         .unwrap_or_default();
-    let mut engine = build_engine(cfg.engine, &spec)?;
+    let mut engine = build_engine(cfg.engine, &spec, cfg.simd)?;
+    // `GRIDMC_STORAGE` overrides the config knob — it is how CI reruns
+    // tier-1 under bf16 without forking every config.
+    let storage = match std::env::var("GRIDMC_STORAGE") {
+        Ok(v) => FactorStorage::parse(&v)?,
+        Err(_) => cfg.storage,
+    };
     let (report, state) = match cfg.driver {
         DriverChoice::Sequential => {
             let driver = SequentialDriver::new(spec, cfg.solver.clone());
-            driver.run(engine.as_mut(), &data.train)?
+            if storage.is_half() {
+                driver.run_half(engine.as_mut(), &data.train, storage)?
+            } else {
+                driver.run(engine.as_mut(), &data.train)?
+            }
         }
         // The gossip disciplines share every configuration knob and
         // train behind the shared `Driver` trait; the macro keeps the
         // builder chain in exactly one place so a new knob cannot be
         // wired into one driver but not the others.
         DriverChoice::Parallel | DriverChoice::Async | DriverChoice::Priority => {
+            if storage.is_half() {
+                log::warn!(
+                    "[engine] storage = \"{}\" is honored by the sequential driver only; \
+                     gossip drivers run f32 factors (use [wire] compression for wire \
+                     savings)",
+                    storage.as_str()
+                );
+            }
             macro_rules! configured {
                 ($new:expr) => {{
                     let mut d = $new
@@ -426,7 +465,34 @@ mod tests {
         if std::env::var("GRIDMC_STRICT_ENGINE").is_ok() {
             return;
         }
-        let e = build_engine(EngineChoice::Xla, &spec).unwrap();
+        let e = build_engine(EngineChoice::Xla, &spec, SimdPolicy::Auto).unwrap();
         assert!(e.name().starts_with("native"));
+    }
+
+    #[test]
+    fn bf16_storage_end_to_end_via_config() {
+        let mut cfg = presets::exp(1).unwrap();
+        if let crate::config::DatasetConfig::Synthetic(ref mut s) = cfg.dataset {
+            s.m = 40;
+            s.n = 40;
+            s.rank = 3;
+            s.train_fraction = 0.5;
+        }
+        cfg.grid.p = 2;
+        cfg.grid.q = 2;
+        cfg.grid.rank = 3;
+        cfg.storage = FactorStorage::Bf16;
+        cfg.simd = SimdPolicy::Portable;
+        cfg.solver.max_iters = 2000;
+        cfg.solver.eval_every = 500;
+        cfg.solver.rho = 10.0;
+        cfg.solver.schedule = crate::solver::StepSchedule { a: 2e-2, b: 1e-5 };
+        let o = run_experiment(&cfg).unwrap();
+        o.ensure_finite().unwrap();
+        assert!(
+            o.report.curve.orders_of_reduction() > 1.0,
+            "bf16 run still converges: {} orders",
+            o.report.curve.orders_of_reduction()
+        );
     }
 }

@@ -40,7 +40,7 @@ pub fn serve_block(cfg: &ExperimentConfig, rank: usize) -> Result<()> {
 
     // Mirror run_gossip_driver's prep exactly — same order, same seeds.
     let partition = BlockPartition::new(spec, &data.train)?;
-    let mut engine = build_engine(cfg.engine, &spec)?;
+    let mut engine = build_engine(cfg.engine, &spec, cfg.simd)?;
     engine.prepare(&partition)?;
     let engine: Arc<dyn Engine> = Arc::from(engine);
     let state = FactorState::init_random(spec, cfg.solver.seed);

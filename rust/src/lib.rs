@@ -71,6 +71,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod runtime;
+pub mod simd;
 pub mod solver;
 pub mod trace;
 pub mod util;

@@ -19,9 +19,11 @@
 //! the offline build has no clap.)
 
 use gridmc::config::{presets, DriverChoice, EngineChoice, ExperimentConfig};
-use gridmc::data::RatingsPreset;
+use gridmc::data::{RatingsPreset, ShardedDataset};
 use gridmc::experiments;
+use gridmc::model::FactorStorage;
 use gridmc::net::TransportKind;
+use gridmc::simd::SimdPolicy;
 use gridmc::{Error, Result};
 
 const USAGE: &str = "\
@@ -35,10 +37,15 @@ USAGE:
   gridmc bench-table <table2|table3|fig2|parallel|churn|grow|shrink|liveness|
                       trace-overhead|wire|socket|ablations> [--scale S]
   gridmc gen-data --preset <ml1m|ml10m|ml20m|netflix> --out <path> [--seed N]
+  gridmc shard-data --preset <name> --out <dir>        write per-block shard
+                      files + manifest for out-of-core (mmap) training
   gridmc inspect --preset <name>
 
 TRAIN OPTIONS:
   --engine <xla|native-sparse|native-dense>   override engine
+  --simd <auto|scalar|portable|avx2>          pin the native kernel path
+  --storage <f32|bf16|f16>                    factor storage precision
+                                              (sequential driver only)
   --driver <sequential|parallel|async|priority>
                                               override driver
   --workers <N>                               in-flight structures
@@ -165,6 +172,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(e) = args.get("engine") {
         cfg.engine = EngineChoice::parse(e)?;
     }
+    if let Some(s) = args.get("simd") {
+        cfg.simd = SimdPolicy::parse(s)?;
+    }
+    if let Some(s) = args.get("storage") {
+        cfg.storage = FactorStorage::parse(s)?;
+    }
     if let Some(d) = args.get("driver") {
         cfg.driver = DriverChoice::parse(d)?;
     }
@@ -283,6 +296,30 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_shard_data(args: &Args) -> Result<()> {
+    let cfg = match (args.get("preset"), args.get("config")) {
+        (Some(p), None) => resolve_preset(p)?,
+        (None, Some(path)) => ExperimentConfig::from_file(path)?,
+        _ => return Err(Error::Config("pass exactly one of --preset / --config".into())),
+    };
+    let out = std::path::Path::new(args.require("out")?);
+    let data = cfg.dataset.load()?;
+    let spec = cfg.grid_spec(data.m, data.n);
+    spec.validate()?;
+    ShardedDataset::write(out, &spec, &data)?;
+    let ds = ShardedDataset::open(out)?;
+    println!(
+        "wrote {} block shard(s) + test shard ({}x{} over a {}x{} grid) -> {}",
+        ds.p * ds.q,
+        ds.m,
+        ds.n,
+        ds.p,
+        ds.q,
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let cfg = resolve_preset(args.require("preset")?)?;
     println!("{}", cfg.to_toml()?);
@@ -309,6 +346,7 @@ fn main() {
         "serve-block" => cmd_serve_block(&args),
         "bench-table" => cmd_bench_table(&args),
         "gen-data" => cmd_gen_data(&args),
+        "shard-data" => cmd_shard_data(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

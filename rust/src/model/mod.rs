@@ -8,6 +8,10 @@
 //! row's (column's) converged replicas, which coincide at consensus and
 //! average out residual disagreement otherwise.
 
+pub mod half;
+
+pub use half::{FactorStorage, HalfFactorState, HalfMatrix};
+
 use crate::data::{CooMatrix, DenseMatrix};
 use crate::engine::StructureFactors;
 use crate::util::Rng;

@@ -239,6 +239,27 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
+/// f32 → bfloat16 bit pattern, round-to-nearest-even.
+///
+/// bf16 is the f32 format truncated to its top 16 bits (1 sign, 8
+/// exponent, 7 mantissa): same dynamic range as f32, ~2–3 decimal
+/// digits of precision. RNE is the standard `bits + 0x7fff + lsb`
+/// trick; NaNs are quieted (payload bit 6 forced) so rounding can
+/// never turn a NaN into ±inf.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bfloat16 bit pattern → f32 (exact: bf16 values are a subset of f32).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits(u32::from(h) << 16)
+}
+
 /// Encode one row, appending `enc.row_bytes(row.len())` bytes.
 pub fn encode_row(enc: Compression, row: &[f32], out: &mut Vec<u8>) {
     match enc {
@@ -717,6 +738,60 @@ mod tests {
         // Round-to-nearest-even at the halfway point: 1 + 2^-11 is
         // exactly between 1.0 and the next half; even mantissa wins.
         assert_eq!(f32_to_f16_bits(1.000_488_3), 0x3c00);
+    }
+
+    #[test]
+    fn bf16_conversion_matches_reference_points() {
+        // bf16 is the top half of the f32 pattern; these constants are
+        // hand-derived from the f32 bit layouts.
+        let cases: &[(f32, u16)] = &[
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3f80),
+            (-2.0, 0xc000),
+            (f32::INFINITY, 0x7f80),
+            (f32::NEG_INFINITY, 0xff80),
+            // 1 + 2^-8: halfway between 1.0 (0x3f80) and the next bf16
+            // (0x3f81); RNE picks the even mantissa → 0x3f80.
+            (1.00390625, 0x3f80),
+            // 1 + 3·2^-9: above halfway → rounds up to 0x3f81.
+            (1.005859375, 0x3f81),
+            // f32::MAX overflows the bf16 grid → +inf (standard RNE).
+            (f32::MAX, 0x7f80),
+        ];
+        for &(x, want) in cases {
+            assert_eq!(f32_to_bf16_bits(x), want, "encode {x}");
+        }
+        // NaN stays NaN and is quieted, never rounded to inf.
+        let n = f32_to_bf16_bits(f32::NAN);
+        assert!(bf16_bits_to_f32(n).is_nan());
+        assert_eq!(n & 0x0040, 0x0040);
+        let sig = f32::from_bits(0x7f80_0001); // signalling-ish payload
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(sig)).is_nan());
+    }
+
+    #[test]
+    fn bf16_roundtrip_is_exact_for_bf16_values() {
+        // Every non-NaN bf16 value decodes to f32 and re-encodes to
+        // the same bit pattern (bf16 ⊂ f32, RNE fixes exact values).
+        for h in 0u16..=0xffff {
+            let x = bf16_bits_to_f32(h);
+            if x.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_bf16_bits(x), h, "bf16 bits {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_relative_error_is_bounded() {
+        // 8 mantissa bits (incl. implicit) ⇒ RNE error ≤ 2^-8 relative.
+        let mut rng = Rng::seed_from_u64(17);
+        for _ in 0..2000 {
+            let x = rng.normal_f32(1.0) * 100.0;
+            let y = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            assert!((y - x).abs() <= x.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE);
+        }
     }
 
     #[test]

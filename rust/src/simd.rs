@@ -1,0 +1,338 @@
+//! SIMD policy and the canonical reduction-order contract.
+//!
+//! The fixed-rank gradient kernels ([`crate::engine::NativeEngine`])
+//! and the fixed-rank GEMM micro-tiles ([`crate::data::DenseMatrix`])
+//! exist in three implementations:
+//!
+//! | path       | code shape                                   | arch      |
+//! |------------|----------------------------------------------|-----------|
+//! | `Scalar`   | plain indexed loops (the reference oracle)   | any       |
+//! | `Portable` | 16-wide zero-padded lane arrays the compiler | any       |
+//! |            | auto-vectorizes (no intrinsics)              |           |
+//! | `Avx2`     | `core::arch::x86_64` intrinsics, runtime-    | `x86_64`  |
+//! |            | dispatched behind `is_x86_feature_detected!` | with AVX2 |
+//!
+//! All three are **bit-identical** on the same inputs, which is what
+//! lets the transport-equivalence and property suites pin SIMD output
+//! against the scalar oracle with `assert_eq!` instead of tolerances.
+//! The identity holds because every path commits to the same two rules:
+//!
+//! 1. **Element-wise lane ops preserve order.** `acc[l] += g * w[l]`
+//!    touches each lane independently; vectorizing across `l` cannot
+//!    reassociate anything.
+//! 2. **Rank reductions use one canonical tree.** Every rank-`R` dot
+//!    product (`R ≤ 16`) zero-pads its element-wise products to 16
+//!    lanes and folds them with [`tree16`] — the exact sequence an AVX2
+//!    horizontal sum performs (8+8 halves, 4+4 128-bit halves, 2+2
+//!    shuffle, final scalar add). The scalar and portable paths run
+//!    the same tree in scalar code; zero padding is exact under IEEE
+//!    addition (up to `-0.0 + 0.0 = +0.0` normalization, which no
+//!    kernel output distinguishes).
+//!
+//! `std::simd` stays out: it is nightly-only and this crate builds on
+//! stable (CI pins `dtolnay/rust-toolchain@stable`), so "portable
+//! lanes" are fixed-width arrays the auto-vectorizer lowers to vector
+//! IR, and the explicit path is hand-written AVX2. No FMA anywhere:
+//! fused multiply-add skips the intermediate rounding and would break
+//! the bit contract, so the intrinsics use `mul` + `add` only.
+//!
+//! The dispatch matrix (which rank hits which kernel) and measured
+//! numbers live in PERF.md §Kernels.
+
+use crate::{Error, Result};
+
+/// Requested kernel implementation for the native engine
+/// (`[engine] simd = ...` in config, [`crate::engine::NativeEngine::with_simd`]
+/// in code).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdPolicy {
+    /// Pick the fastest path the host supports (AVX2 when detected,
+    /// portable lanes otherwise). The default.
+    #[default]
+    Auto,
+    /// Force the plain-loop reference kernels (the bit-identity
+    /// oracle).
+    Scalar,
+    /// Force the array-lane kernels, no intrinsics.
+    Portable,
+    /// Force the AVX2 intrinsic kernels; resolving errors on hosts
+    /// without AVX2 instead of silently falling back.
+    Avx2,
+}
+
+impl SimdPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::Scalar => "scalar",
+            SimdPolicy::Portable => "portable",
+            SimdPolicy::Avx2 => "avx2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(SimdPolicy::Auto),
+            "scalar" => Ok(SimdPolicy::Scalar),
+            "portable" => Ok(SimdPolicy::Portable),
+            "avx2" => Ok(SimdPolicy::Avx2),
+            other => Err(Error::Config(format!(
+                "unknown simd policy {other:?} (want auto|scalar|portable|avx2)"
+            ))),
+        }
+    }
+
+    /// Resolve the request against the host. `Auto` never fails;
+    /// `Avx2` fails loudly on hosts without the feature so a pinned
+    /// bit-identity run cannot silently change kernels.
+    pub fn resolve(&self) -> Result<SimdPath> {
+        match self {
+            SimdPolicy::Auto => Ok(if avx2_available() {
+                SimdPath::Avx2
+            } else {
+                SimdPath::Portable
+            }),
+            SimdPolicy::Scalar => Ok(SimdPath::Scalar),
+            SimdPolicy::Portable => Ok(SimdPath::Portable),
+            SimdPolicy::Avx2 => {
+                if avx2_available() {
+                    Ok(SimdPath::Avx2)
+                } else {
+                    Err(Error::Config(
+                        "simd = \"avx2\" requested but the host CPU has no AVX2".into(),
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// A resolved kernel path (the host-checked outcome of
+/// [`SimdPolicy::resolve`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdPath {
+    Scalar,
+    Portable,
+    /// Only ever constructed after `is_x86_feature_detected!("avx2")`
+    /// succeeded — kernel call sites rely on this invariant for their
+    /// `unsafe` blocks.
+    Avx2,
+}
+
+impl SimdPath {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Portable => "portable",
+            SimdPath::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Runtime AVX2 detection (cached by the macro's own CPUID cache).
+#[inline]
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The canonical 16-lane reduction tree.
+///
+/// Folds 16 addends exactly the way a two-register AVX2 horizontal sum
+/// does, so scalar, portable and intrinsic kernels agree bit-for-bit:
+///
+/// ```text
+/// s[l] = p[l] + p[l+8]          (l = 0..8)   — register halves
+/// t[l] = s[l] + s[l+4]          (l = 0..4)   — 128-bit halves
+/// dot  = (t[0] + t[2]) + (t[1] + t[3])       — shuffle + final add
+/// ```
+#[inline(always)]
+pub fn tree16(p: &[f32; 16]) -> f32 {
+    let mut s = [0.0f32; 8];
+    for l in 0..8 {
+        s[l] = p[l] + p[l + 8];
+    }
+    let mut t = [0.0f32; 4];
+    for l in 0..4 {
+        t[l] = s[l] + s[l + 4];
+    }
+    (t[0] + t[2]) + (t[1] + t[3])
+}
+
+/// Rank-`R` dot product under the canonical reduction order: products
+/// are zero-padded to 16 lanes and folded with [`tree16`]. `R ≤ 16` is
+/// a contract of the fixed-rank kernels (`MAX_FIXED_RANK`).
+#[inline(always)]
+pub fn dot_tree<const R: usize>(a: &[f32; R], b: &[f32; R]) -> f32 {
+    debug_assert!(R <= 16);
+    let mut p = [0.0f32; 16];
+    for l in 0..R {
+        p[l] = a[l] * b[l];
+    }
+    tree16(&p)
+}
+
+/// [`dot_tree`] over unsized rank-`R` slices (callers that already
+/// hold `&[f32]` rows; length mismatch truncates to the shorter, which
+/// never happens on kernel-shaped inputs and is debug-asserted).
+#[inline(always)]
+pub fn dot_tree_dyn16(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(a.len() <= 16);
+    let mut p = [0.0f32; 16];
+    for (l, (&x, &y)) in a.iter().zip(b).enumerate() {
+        p[l] = x * y;
+    }
+    tree16(&p)
+}
+
+/// AVX2 helpers shared by the kernel modules
+/// ([`crate::engine::NativeEngine`]'s gradient kernels and the GEMM
+/// micro-tiles in `data/dense.rs`).
+#[cfg(target_arch = "x86_64")]
+pub mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of two 8-lane registers (16 addends) in the
+    /// canonical [`tree16`](super::tree16) order — the
+    /// `tree16_matches_avx2_hsum` test pins the bit identity.
+    ///
+    /// # Safety
+    ///
+    /// Requires AVX2 (callers dispatch behind
+    /// `is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    pub unsafe fn hsum16(lo: __m256, hi: __m256) -> f32 {
+        let s = _mm256_add_ps(lo, hi);
+        let t = _mm_add_ps(_mm256_castps256_ps128(s), _mm256_extractf128_ps(s, 1));
+        let u = _mm_add_ps(t, _mm_movehl_ps(t, t));
+        _mm_cvtss_f32(_mm_add_ss(u, _mm_shuffle_ps(u, u, 0x1)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            SimdPolicy::Auto,
+            SimdPolicy::Scalar,
+            SimdPolicy::Portable,
+            SimdPolicy::Avx2,
+        ] {
+            assert_eq!(SimdPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(SimdPolicy::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn resolve_auto_and_scalar_never_fail() {
+        assert!(SimdPolicy::Auto.resolve().is_ok());
+        assert_eq!(SimdPolicy::Scalar.resolve().unwrap(), SimdPath::Scalar);
+        assert_eq!(
+            SimdPolicy::Portable.resolve().unwrap(),
+            SimdPath::Portable
+        );
+    }
+
+    #[test]
+    fn resolve_avx2_matches_detection() {
+        match SimdPolicy::Avx2.resolve() {
+            Ok(p) => {
+                assert!(avx2_available());
+                assert_eq!(p, SimdPath::Avx2);
+            }
+            Err(_) => assert!(!avx2_available()),
+        }
+    }
+
+    #[test]
+    fn tree16_sums_exactly_on_representable_inputs() {
+        // Powers of two: every partial sum is exact, so the tree must
+        // equal the sequential sum exactly.
+        let mut p = [0.0f32; 16];
+        for (l, v) in p.iter_mut().enumerate() {
+            *v = (1u32 << l) as f32;
+        }
+        assert_eq!(tree16(&p), 65535.0);
+    }
+
+    #[test]
+    fn dot_tree_matches_explicit_tree_order() {
+        // Adversarial magnitudes where summation order matters: the
+        // tree result must equal a hand-evaluated tree, not the
+        // sequential fold.
+        let a: [f32; 16] = [
+            1e8, 1.0, -1e8, 1.0, 3.0, -7.0, 11.0, 0.5, 2.5e7, -2.5e7, 1.0, 1.0, 0.25, 0.125,
+            9.0, -3.0,
+        ];
+        let b: [f32; 16] = [1.0; 16];
+        let mut p = [0.0f32; 16];
+        for l in 0..16 {
+            p[l] = a[l] * b[l];
+        }
+        let mut s = [0.0f32; 8];
+        for l in 0..8 {
+            s[l] = p[l] + p[l + 8];
+        }
+        let mut t = [0.0f32; 4];
+        for l in 0..4 {
+            t[l] = s[l] + s[l + 4];
+        }
+        let want = (t[0] + t[2]) + (t[1] + t[3]);
+        assert_eq!(dot_tree(&a, &b), want);
+        assert_eq!(dot_tree_dyn16(&a, &b), want);
+    }
+
+    #[test]
+    fn dot_tree_zero_padding_is_exact() {
+        // A rank-5 dot through the 16-lane tree equals the same five
+        // products padded by hand: padding with zeros adds nothing.
+        let a = [1.5f32, -2.25, 3.0, 0.125, 10.0];
+        let b = [4.0f32, 8.0, -0.5, 2.0, 0.25];
+        let mut p = [0.0f32; 16];
+        for l in 0..5 {
+            p[l] = a[l] * b[l];
+        }
+        assert_eq!(dot_tree(&a, &b), tree16(&p));
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn tree16_matches_avx2_hsum() {
+        if !avx2_available() {
+            return;
+        }
+        // The contract's whole point: the scalar tree reproduces the
+        // intrinsic horizontal sum (the shared `x86::hsum16` every
+        // AVX2 kernel reduces through) bit-for-bit.
+        #[target_feature(enable = "avx2")]
+        unsafe fn hsum(p: &[f32; 16]) -> f32 {
+            use std::arch::x86_64::*;
+            let lo = _mm256_loadu_ps(p.as_ptr());
+            let hi = _mm256_loadu_ps(p.as_ptr().add(8));
+            x86::hsum16(lo, hi)
+        }
+        let mut rngish = 0x9E3779B97F4A7C15u64;
+        for case in 0..200 {
+            let mut p = [0.0f32; 16];
+            for v in p.iter_mut() {
+                rngish = rngish.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let mag = ((rngish >> 40) as i32 % 40) - 20;
+                let frac = ((rngish >> 16) & 0xffff) as f32 / 65536.0 - 0.5;
+                *v = frac * (mag as f32).exp2();
+            }
+            let got = unsafe { hsum(&p) };
+            assert_eq!(got.to_bits(), tree16(&p).to_bits(), "case {case}: {p:?}");
+        }
+    }
+}

@@ -15,11 +15,11 @@
 //! [`NativeEngine`](crate::engine::NativeEngine) or the AOT
 //! [`XlaEngine`](crate::engine::XlaEngine).
 
-use crate::data::CooMatrix;
+use crate::data::{CooMatrix, DenseMatrix};
 use crate::engine::{Engine, EngineWorkspace, StructureParams};
 use crate::grid::{BlockPartition, GridSpec, NormalizationCoeffs, StructureSampler};
 use crate::metrics::{CostCurve, Timer};
-use crate::model::FactorState;
+use crate::model::{FactorState, FactorStorage, HalfFactorState};
 use crate::solver::convergence::{ConvergenceCriterion, Verdict};
 use crate::solver::{total_cost, SolverConfig, SolverReport};
 use crate::{Error, Result};
@@ -51,6 +51,23 @@ impl SequentialDriver {
         Ok((report, state))
     }
 
+    /// Run from a fresh random init against an engine whose block data
+    /// was already loaded by the caller — the entry point for
+    /// out-of-core shards, where
+    /// [`NativeEngine::prepare_sharded`](crate::engine::NativeEngine::prepare_sharded)
+    /// mmaps per-block files instead of partitioning an in-memory COO.
+    /// The iteration sequence is identical to [`run`](Self::run) given
+    /// the same seed, so a sharded solve over the same data is
+    /// bit-identical to the in-memory one.
+    pub fn run_prepared(
+        &self,
+        engine: &mut dyn Engine,
+    ) -> Result<(SolverReport, FactorState)> {
+        let mut state = FactorState::init_random(self.spec, self.cfg.seed);
+        let report = self.run_loop(engine, &mut state)?;
+        Ok((report, state))
+    }
+
     /// Run continuing from existing factor state (warm start / tests).
     pub fn run_with_state(
         &self,
@@ -58,10 +75,18 @@ impl SequentialDriver {
         train: &CooMatrix,
         state: &mut FactorState,
     ) -> Result<SolverReport> {
-        self.spec.validate()?;
         let partition = BlockPartition::new(self.spec, train)?;
         engine.prepare(&partition)?;
+        self.run_loop(engine, state)
+    }
 
+    /// The main iteration loop; assumes `engine.prepare*` already ran.
+    fn run_loop(
+        &self,
+        engine: &mut dyn Engine,
+        state: &mut FactorState,
+    ) -> Result<SolverReport> {
+        self.spec.validate()?;
         let coeffs = NormalizationCoeffs::new(self.spec.p, self.spec.q);
         let mut sampler = StructureSampler::new(self.spec.p, self.spec.q, self.cfg.seed ^ 0x5eed);
         let mut criterion =
@@ -137,6 +162,127 @@ impl SequentialDriver {
             liveness: None,
             telemetry: None,
         })
+    }
+
+    /// Run with half-precision factor storage (`[engine] storage =
+    /// "bf16"|"f16"`).
+    ///
+    /// The packed [`HalfFactorState`] is *authoritative*: each
+    /// iteration decodes only the three member blocks into f32 staging
+    /// matrices, runs the unchanged SIMD kernels there, and re-encodes
+    /// the results — so quantization noise enters exactly once per
+    /// block update and resident factor memory is halved. Cost
+    /// evaluations decode the packed state, so the convergence
+    /// criterion sees what the run would actually return.
+    ///
+    /// `kind = F32` falls through to [`run`](Self::run) (bit-identical
+    /// to a normal run).
+    pub fn run_half(
+        &self,
+        engine: &mut dyn Engine,
+        train: &CooMatrix,
+        kind: FactorStorage,
+    ) -> Result<(SolverReport, FactorState)> {
+        if !kind.is_half() {
+            return self.run(engine, train);
+        }
+        self.spec.validate()?;
+        let partition = BlockPartition::new(self.spec, train)?;
+        engine.prepare(&partition)?;
+
+        let init = FactorState::init_random(self.spec, self.cfg.seed);
+        let mut half = HalfFactorState::from_state(&init, kind);
+        // Full-grid f32 view used only for cost evaluation; refreshed
+        // from the packed state before each use (reuses the init
+        // allocation).
+        let mut eval = init;
+        let decode_all = |half: &HalfFactorState, eval: &mut FactorState| {
+            for id in half.spec().blocks() {
+                let (u, w) = eval.block_mut(id);
+                half.decode_block_into(id, u, w);
+            }
+        };
+
+        let (mb, nb) = self.spec.block_shape();
+        let r = self.spec.rank;
+        let mut su: [DenseMatrix; 3] = std::array::from_fn(|_| DenseMatrix::zeros(mb, r));
+        let mut sw: [DenseMatrix; 3] = std::array::from_fn(|_| DenseMatrix::zeros(nb, r));
+
+        let coeffs = NormalizationCoeffs::new(self.spec.p, self.spec.q);
+        let mut sampler = StructureSampler::new(self.spec.p, self.spec.q, self.cfg.seed ^ 0x5eed);
+        let mut criterion =
+            ConvergenceCriterion::new(self.cfg.abs_tol, self.cfg.rel_tol, self.cfg.patience);
+        let mut curve = CostCurve::default();
+        let timer = Timer::start();
+
+        let c0 = total_cost(engine, &eval, self.cfg.lambda)?;
+        curve.push(0, c0);
+        log::info!("initial cost {c0:.3e} (storage {})", kind.as_str());
+
+        let mut converged = false;
+        let mut iters = 0u64;
+        let mut ws = EngineWorkspace::new();
+        'outer: for t in 0..self.cfg.max_iters {
+            let structure = sampler.sample();
+            let roles = structure.roles();
+            let gamma = self.cfg.schedule.gamma(t);
+            let params = if self.cfg.normalize {
+                StructureParams::build(self.cfg.rho, self.cfg.lambda, gamma, &coeffs, &roles)
+            } else {
+                StructureParams::unnormalized(self.cfg.rho, self.cfg.lambda, gamma)
+            };
+
+            let ids = [roles.anchor, roles.horizontal, roles.vertical];
+            for k in 0..3 {
+                half.decode_block_into(ids[k], &mut su[k], &mut sw[k]);
+            }
+            engine.structure_update_into(
+                &roles,
+                [(&su[0], &sw[0]), (&su[1], &sw[1]), (&su[2], &sw[2])],
+                &params,
+                &mut ws,
+            )?;
+            for k in 0..3 {
+                ws.swap_output(k, &mut su[k], &mut sw[k]);
+                half.encode_block_from(ids[k], &su[k], &sw[k]);
+            }
+            iters = t + 1;
+
+            if iters % self.cfg.eval_every == 0 {
+                decode_all(&half, &mut eval);
+                let cost = total_cost(engine, &eval, self.cfg.lambda)?;
+                curve.push(iters, cost);
+                log::debug!("iter {iters}: cost {cost:.3e}");
+                match criterion.update(cost) {
+                    Verdict::Continue => {}
+                    Verdict::Converged => {
+                        converged = true;
+                        break 'outer;
+                    }
+                    Verdict::Diverged => {
+                        return Err(Error::Diverged { iter: iters, cost });
+                    }
+                }
+            }
+        }
+
+        decode_all(&half, &mut eval);
+        let final_cost = total_cost(engine, &eval, self.cfg.lambda)?;
+        if curve.last().map(|(it, _)| it) != Some(iters) {
+            curve.push(iters, final_cost);
+        }
+        let report = SolverReport {
+            curve,
+            final_cost,
+            iters,
+            converged,
+            wall: timer.elapsed(),
+            engine: engine.name().to_string(),
+            faults: Vec::new(),
+            liveness: None,
+            telemetry: None,
+        };
+        Ok((report, eval))
     }
 }
 
@@ -248,6 +394,67 @@ mod tests {
             matches!(err, Err(Error::Diverged { .. })),
             "expected divergence, got {err:?}"
         );
+    }
+
+    #[test]
+    fn run_prepared_matches_run_bit_exactly() {
+        // Same seed + same prepared data ⇒ identical iterate sequence.
+        let (spec, data) = tiny_problem();
+        let cfg = SolverConfig { max_iters: 400, eval_every: 200, ..fast_cfg() };
+        let driver = SequentialDriver::new(spec, cfg);
+        let mut e1 = NativeEngine::new();
+        let (ra, sa) = driver.run(&mut e1, &data.data.train).unwrap();
+        let mut e2 = NativeEngine::new();
+        let partition = BlockPartition::new(spec, &data.data.train).unwrap();
+        e2.prepare(&partition).unwrap();
+        let (rb, sb) = driver.run_prepared(&mut e2).unwrap();
+        assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+        assert_eq!(
+            sa.u(crate::grid::BlockId::new(1, 1)),
+            sb.u(crate::grid::BlockId::new(1, 1))
+        );
+    }
+
+    #[test]
+    fn run_half_f32_falls_through_to_run() {
+        let (spec, data) = tiny_problem();
+        let cfg = SolverConfig { max_iters: 300, eval_every: 150, ..fast_cfg() };
+        let driver = SequentialDriver::new(spec, cfg);
+        let mut e1 = NativeEngine::new();
+        let (ra, _) = driver.run(&mut e1, &data.data.train).unwrap();
+        let mut e2 = NativeEngine::new();
+        let (rb, _) = driver
+            .run_half(&mut e2, &data.data.train, crate::model::FactorStorage::F32)
+            .unwrap();
+        assert_eq!(ra.final_cost.to_bits(), rb.final_cost.to_bits());
+    }
+
+    #[test]
+    fn run_half_bf16_converges_close_to_f32() {
+        let (spec, data) = tiny_problem();
+        let driver = SequentialDriver::new(spec, fast_cfg());
+        let mut e1 = NativeEngine::new();
+        let (_, full) = driver.run(&mut e1, &data.data.train).unwrap();
+        let rmse_f32 = full.rmse(&data.data.test);
+        for kind in [crate::model::FactorStorage::Bf16, crate::model::FactorStorage::F16] {
+            let mut e2 = NativeEngine::new();
+            let (report, state) =
+                driver.run_half(&mut e2, &data.data.train, kind).unwrap();
+            let rmse_half = state.rmse(&data.data.test);
+            // Quantization noise perturbs the SGD path; the endpoint
+            // quality must stay in the same regime (the 1%-of-f32 claim
+            // is measured at ratings scale in the bench gate — tiny
+            // problems are noisier, hence the looser bound here).
+            assert!(
+                rmse_half < rmse_f32 * 1.5 + 0.05,
+                "{kind:?}: rmse {rmse_f32} -> {rmse_half}"
+            );
+            assert!(
+                report.curve.orders_of_reduction() > 1.5,
+                "{kind:?}: only {} orders",
+                report.curve.orders_of_reduction()
+            );
+        }
     }
 
     #[test]

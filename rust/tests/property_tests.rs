@@ -896,6 +896,128 @@ fn prop_wire_reset_clears_error_feedback_and_baselines() {
     }
 }
 
+// ---------------------------------------------------------------------
+// SIMD-path properties: every resolvable lane path must produce the
+// same bits as the scalar oracle — not "close", *identical* — across
+// random shapes and the full rank sweep (fixed-rank lanes at r ≤ 16,
+// the dynamic kernels above). The canonical tree16 reduction order is
+// what makes this a provable contract rather than a tolerance.
+
+/// The rank sweep: both AVX2 full-register shapes (8, 16), odd
+/// zero-padded lane counts, rank 1, and past-the-seam dynamic ranks.
+const RANK_SWEEP: [usize; 9] = [1, 3, 5, 7, 8, 11, 13, 16, 20];
+
+#[test]
+fn prop_simd_paths_bit_identical_to_scalar_across_shapes_and_ranks() {
+    use gridmc::simd::SimdPolicy;
+    for case in 0..RANK_SWEEP.len() as u64 {
+        let mut rng = case_rng(case ^ 0x51D0);
+        let rank = RANK_SWEEP[case as usize];
+        let p = 2 + rng.gen_range(2); // 2..=3
+        let q = 2 + rng.gen_range(2);
+        let mb = 4 + rng.gen_range(9);
+        let nb = 4 + rng.gen_range(9);
+        let spec = GridSpec::new(
+            p * mb - rng.gen_range(3.min(mb)),
+            q * nb - rng.gen_range(3.min(nb)),
+            p,
+            q,
+            rank,
+        );
+        let coo = random_coo(&mut rng, spec.m, spec.n, 0.3);
+        let part = BlockPartition::new(spec, &coo).unwrap();
+        let state = FactorState::init_random(spec, case ^ 0xF00D);
+        let all = Structure::enumerate(spec.p, spec.q);
+        let s = all[rng.gen_range(all.len())];
+        let roles = s.roles();
+        let coeffs = NormalizationCoeffs::new(spec.p, spec.q);
+        let params = StructureParams::build(1e2, 1e-6, 1e-4, &coeffs, &roles);
+
+        for mode in [NativeMode::Sparse, NativeMode::Dense] {
+            let mut scalar = NativeEngine::with_mode(mode)
+                .with_simd(SimdPolicy::Scalar)
+                .unwrap();
+            scalar.prepare(&part).unwrap();
+            let f = state.structure_factors(&roles);
+            let oracle = scalar.structure_update(&roles, f, &params).unwrap();
+            let oracle_cost = scalar
+                .block_cost(roles.anchor, state.u(roles.anchor), state.w(roles.anchor), 1e-6)
+                .unwrap();
+
+            // Portable always resolves; Avx2 only on hosts that have it
+            // (resolve() errors elsewhere — that is the policy contract,
+            // not a skip-silently fallback).
+            let mut candidates = vec![SimdPolicy::Portable, SimdPolicy::Auto];
+            if NativeEngine::new().with_simd(SimdPolicy::Avx2).is_ok() {
+                candidates.push(SimdPolicy::Avx2);
+            }
+            for policy in candidates {
+                let mut eng = NativeEngine::with_mode(mode).with_simd(policy).unwrap();
+                eng.prepare(&part).unwrap();
+                let f = state.structure_factors(&roles);
+                let got = eng.structure_update(&roles, f, &params).unwrap();
+                for k in 0..3 {
+                    assert_eq!(
+                        got[k].0, oracle[k].0,
+                        "case {case} r{rank} {mode:?} {policy:?} block {k} U bits"
+                    );
+                    assert_eq!(
+                        got[k].1, oracle[k].1,
+                        "case {case} r{rank} {mode:?} {policy:?} block {k} W bits"
+                    );
+                }
+                let cost = eng
+                    .block_cost(roles.anchor, state.u(roles.anchor), state.w(roles.anchor), 1e-6)
+                    .unwrap();
+                assert_eq!(
+                    cost.to_bits(),
+                    oracle_cost.to_bits(),
+                    "case {case} r{rank} {mode:?} {policy:?} block_cost bits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_half_storage_roundtrip_relative_error_bounded() {
+    // Packed half-precision factors must stay within the format's
+    // mantissa bound after one encode/decode trip, for random shapes
+    // and value scales: f16 keeps 11 significand bits (≤ 2⁻¹¹ ≈
+    // 4.9e-4 ≤ 1e-3 relative), bf16 keeps 8 (≤ 2⁻⁸ ≈ 3.9e-3).
+    use gridmc::model::{FactorStorage, HalfMatrix};
+    for case in 0..20u64 {
+        let mut rng = case_rng(case ^ 0x4A1F);
+        let rows = 1 + rng.gen_range(40);
+        let cols = 1 + rng.gen_range(16);
+        // f16 overflows past ±65504; keep scales inside its range (the
+        // factor entries of a converged model are O(1) anyway).
+        let scale = [0.01, 1.0, 100.0][rng.gen_range(3)];
+        let src = gridmc::data::DenseMatrix::from_fn(rows, cols, |_, _| {
+            rng.normal_f32(1.0) * scale
+        });
+        for (kind, rel) in [(FactorStorage::Bf16, 1.0 / 256.0), (FactorStorage::F16, 1e-3)] {
+            let mut packed = HalfMatrix::zeros(rows, cols, kind);
+            packed.encode_from(&src);
+            let mut back = gridmc::data::DenseMatrix::zeros(rows, cols);
+            packed.decode_into(&mut back);
+            for (a, b) in src.as_slice().iter().zip(back.as_slice()) {
+                assert!(
+                    (a - b).abs() <= a.abs() * rel + f32::MIN_POSITIVE,
+                    "case {case} {kind:?} {rows}x{cols}: {a} -> {b}"
+                );
+            }
+            // A second trip through the codec is the identity: packed
+            // values are exactly representable.
+            let mut again = HalfMatrix::zeros(rows, cols, kind);
+            again.encode_from(&back);
+            let mut twice = gridmc::data::DenseMatrix::zeros(rows, cols);
+            again.decode_into(&mut twice);
+            assert_eq!(back, twice, "case {case} {kind:?}: idempotent re-encode");
+        }
+    }
+}
+
 #[test]
 fn prop_centering_preserves_rmse_semantics() {
     // RMSE of factors against centered data == RMSE of (pred + μ)

@@ -1,0 +1,266 @@
+//! Out-of-core loader integration tests: the mmap shard path must be
+//! (a) bit-identical to the in-memory pipeline end to end, and (b)
+//! *loudly* wrong on corrupt bytes — every malformed shard is a clean
+//! [`Error::Data`] at open time, never UB, never a silently wrong
+//! solve. The corruption cases below patch real shard bytes (with the
+//! checksum recomputed where the test targets a *structural* check, so
+//! the deeper validator is what rejects the file, not the checksum).
+
+use std::path::{Path, PathBuf};
+
+use gridmc::data::{MmapCsr, ShardedDataset, SyntheticConfig};
+use gridmc::engine::{NativeEngine, NativeMode};
+use gridmc::grid::{BlockId, BlockPartition, GridSpec};
+use gridmc::solver::{SequentialDriver, SolverConfig, StepSchedule};
+use gridmc::Error;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("gridmc-shard-loader-tests")
+        .join(format!("{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fixture(m: usize, n: usize, seed: u64) -> gridmc::data::SplitDataset {
+    SyntheticConfig {
+        m,
+        n,
+        rank: 3,
+        train_fraction: 0.5,
+        test_fraction: 0.2,
+        noise_std: 0.0,
+        seed,
+    }
+    .generate()
+    .data
+}
+
+/// Streaming FNV-1a 64 (the shard checksum), reimplemented here so the
+/// structural-corruption tests can *re-seal* a patched file and prove
+/// the deep validator — not the checksum — is what rejects it.
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn reseal(bytes: &mut [u8]) {
+    let n = bytes.len();
+    let sum = fnv64(&bytes[..n - 8]);
+    bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+}
+
+fn write_shards(tag: &str) -> (PathBuf, GridSpec, gridmc::data::SplitDataset) {
+    let dir = tmp_dir(tag);
+    let data = fixture(40, 36, 11);
+    let spec = GridSpec::new(40, 36, 2, 3, 3);
+    ShardedDataset::write(&dir, &spec, &data).unwrap();
+    (dir, spec, data)
+}
+
+fn corrupt<F: FnOnce(&mut Vec<u8>)>(path: &Path, f: F) {
+    let mut bytes = std::fs::read(path).unwrap();
+    f(&mut bytes);
+    std::fs::write(path, bytes).unwrap();
+}
+
+fn expect_data_err(res: gridmc::Result<MmapCsr>, needle: &str, what: &str) {
+    match res {
+        Err(Error::Data(msg)) => {
+            assert!(msg.contains(needle), "{what}: message {msg:?} lacks {needle:?}")
+        }
+        Err(other) => panic!("{what}: wrong error kind {other}"),
+        Ok(_) => panic!("{what}: corrupt shard opened cleanly"),
+    }
+}
+
+#[test]
+fn sharded_roundtrip_preserves_every_block() {
+    let (dir, spec, data) = write_shards("roundtrip");
+    let ds = ShardedDataset::open(&dir).unwrap();
+    assert_eq!((ds.m, ds.n, ds.p, ds.q), (40, 36, 2, 3));
+    let part = BlockPartition::new(spec, &data.train).unwrap();
+    for id in spec.blocks() {
+        let mapped = ds.open_block(id).unwrap();
+        assert!(mapped.is_mapped(), "{id}: zero-copy mapping expected");
+        // Both iterate row-major with sorted columns, so entry streams
+        // must match exactly, values included.
+        let want: Vec<_> = part.csr_block(id).iter().collect();
+        let got: Vec<_> = mapped.to_coo().unwrap().iter().collect();
+        assert_eq!(got, want, "{id}: mmap block must equal the in-memory block");
+    }
+    // The held-out split survives the trip too.
+    let mut raw: Vec<_> = data.test.iter().collect();
+    raw.sort_by_key(|&(i, j, _)| (i, j));
+    let mut back: Vec<_> = ds.test.iter().collect();
+    back.sort_by_key(|&(i, j, _)| (i, j));
+    assert_eq!(raw, back);
+}
+
+#[test]
+fn sharded_solve_is_bit_identical_to_in_memory() {
+    let (dir, spec, data) = write_shards("bitident");
+    let cfg = SolverConfig {
+        rho: 10.0,
+        schedule: StepSchedule { a: 2e-2, b: 1e-5 },
+        max_iters: 1500,
+        eval_every: 500,
+        abs_tol: 0.0,
+        rel_tol: 0.0,
+        ..Default::default()
+    };
+    let driver = SequentialDriver::new(spec, cfg);
+
+    let mut in_mem = NativeEngine::with_mode(NativeMode::Sparse);
+    let (ra, sa) = driver.run(&mut in_mem, &data.train).unwrap();
+
+    let ds = ShardedDataset::open(&dir).unwrap();
+    let mut mmapped = NativeEngine::with_mode(NativeMode::Sparse);
+    mmapped.prepare_sharded(&ds).unwrap();
+    let (rb, sb) = driver.run_prepared(&mut mmapped).unwrap();
+
+    assert_eq!(
+        ra.final_cost.to_bits(),
+        rb.final_cost.to_bits(),
+        "final cost must match to the bit"
+    );
+    assert_eq!(ra.iters, rb.iters);
+    for id in spec.blocks() {
+        assert_eq!(sa.u(id), sb.u(id), "{id} U");
+        assert_eq!(sa.w(id), sb.w(id), "{id} W");
+    }
+}
+
+#[test]
+fn prepare_sharded_rejects_dense_mode() {
+    let (dir, _, _) = write_shards("dense-mode");
+    let ds = ShardedDataset::open(&dir).unwrap();
+    let mut dense = NativeEngine::with_mode(NativeMode::Dense);
+    let err = dense.prepare_sharded(&ds).unwrap_err();
+    assert!(matches!(err, Error::Unsupported(_)), "{err}");
+}
+
+#[test]
+fn truncated_shard_is_a_clean_error() {
+    let (dir, _, _) = write_shards("truncate");
+    let shard = dir.join("block_0_0.gmcshard");
+    corrupt(&shard, |b| {
+        b.truncate(b.len() - 5);
+    });
+    expect_data_err(MmapCsr::open(&shard), "truncated or corrupt", "truncation");
+    // Header-shorter-than-minimum truncation too (no slice panic).
+    corrupt(&shard, |b| b.truncate(10));
+    assert!(matches!(MmapCsr::open(&shard), Err(Error::Data(_))), "tiny file");
+}
+
+#[test]
+fn bit_flip_fails_the_checksum() {
+    let (dir, _, _) = write_shards("bitflip");
+    let shard = dir.join("block_1_2.gmcshard");
+    corrupt(&shard, |b| {
+        let mid = b.len() / 2;
+        b[mid] ^= 0x40;
+    });
+    expect_data_err(MmapCsr::open(&shard), "checksum mismatch", "bit flip");
+}
+
+#[test]
+fn bad_magic_is_rejected_before_anything_else() {
+    let (dir, _, _) = write_shards("magic");
+    let shard = dir.join("block_0_1.gmcshard");
+    corrupt(&shard, |b| {
+        b[0..8].copy_from_slice(b"NOTSHARD");
+        reseal(b); // valid checksum: the magic check itself must fire
+    });
+    expect_data_err(MmapCsr::open(&shard), "bad magic", "magic");
+}
+
+#[test]
+fn non_monotone_indptr_is_rejected_despite_valid_checksum() {
+    let (dir, _, _) = write_shards("indptr");
+    let shard = dir.join("block_0_0.gmcshard");
+    corrupt(&shard, |b| {
+        // indptr starts at byte 24; make entry 1 huge so entry 2 drops.
+        b[28..32].copy_from_slice(&u32::MAX.to_le_bytes());
+        reseal(b);
+    });
+    expect_data_err(MmapCsr::open(&shard), "monotone", "indptr");
+}
+
+#[test]
+fn out_of_range_column_is_rejected_despite_valid_checksum() {
+    let (dir, spec, _) = write_shards("colrange");
+    let shard = dir.join("block_0_0.gmcshard");
+    let bytes = std::fs::read(&shard).unwrap();
+    let rows = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let nnz = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    assert!(nnz > 0, "fixture block must not be empty");
+    let idx_off = 24 + 4 * (rows + 1);
+    corrupt(&shard, |b| {
+        // First column index -> one past the block width.
+        let width = spec.block_shape().1 as u32;
+        b[idx_off..idx_off + 4].copy_from_slice(&width.to_le_bytes());
+        reseal(b);
+    });
+    expect_data_err(MmapCsr::open(&shard), "out of", "column range");
+}
+
+#[test]
+fn nnz_header_lie_is_caught_by_the_length_check() {
+    let (dir, _, _) = write_shards("nnz-lie");
+    let shard = dir.join("block_1_0.gmcshard");
+    corrupt(&shard, |b| {
+        // Claim one fewer entry than the payload carries; the implied
+        // length no longer matches the file, whatever the checksum says.
+        let nnz = u64::from_le_bytes(b[16..24].try_into().unwrap());
+        b[16..24].copy_from_slice(&(nnz - 1).to_le_bytes());
+        reseal(b);
+    });
+    expect_data_err(MmapCsr::open(&shard), "implied by header", "nnz lie");
+}
+
+#[test]
+fn manifest_corruption_is_a_clean_error() {
+    let (dir, _, _) = write_shards("manifest");
+    let meta = dir.join("shards.meta");
+
+    // Missing shard file.
+    std::fs::remove_file(dir.join("block_0_2.gmcshard")).unwrap();
+    let err = ShardedDataset::open(&dir).unwrap_err();
+    assert!(
+        matches!(&err, Error::Data(m) if m.contains("missing shard file")),
+        "{err}"
+    );
+
+    // Bad version line.
+    let good = std::fs::read_to_string(&meta).unwrap();
+    std::fs::write(&meta, good.replacen("gridmc-shards 1", "gridmc-shards 9", 1)).unwrap();
+    let err = ShardedDataset::open(&dir).unwrap_err();
+    assert!(matches!(&err, Error::Data(m) if m.contains("version")), "{err}");
+
+    // Manifest gone entirely.
+    std::fs::remove_file(&meta).unwrap();
+    assert!(matches!(ShardedDataset::open(&dir), Err(Error::Data(_))));
+}
+
+#[test]
+fn engine_errors_cleanly_when_a_shard_rots_after_manifest_open() {
+    // The manifest open only checks existence; the per-block validation
+    // happens at map time. A shard corrupted between the two must fail
+    // prepare_sharded, not poison the kernels.
+    let (dir, _, _) = write_shards("late-rot");
+    let ds = ShardedDataset::open(&dir).unwrap();
+    corrupt(&dir.join("block_1_1.gmcshard"), |b| {
+        let mid = b.len() / 2;
+        b[mid] ^= 0x01;
+    });
+    let mut eng = NativeEngine::with_mode(NativeMode::Sparse);
+    let err = eng.prepare_sharded(&ds).unwrap_err();
+    assert!(matches!(&err, Error::Data(m) if m.contains("checksum")), "{err}");
+    let _ = ds.open_block(BlockId::new(0, 0)).unwrap(); // healthy blocks still map
+}
